@@ -1,0 +1,75 @@
+//! Quickstart: the FlashCommunication V2 codec + collectives in 60 lines.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! 1. Quantize an activation tensor at several bit widths (bit splitting),
+//! 2. run a real quantized AllReduce across 8 in-process ranks,
+//! 3. show the accuracy/volume trade-off and the spike-reserving rescue.
+
+use flashcomm::comm::{fabric, twostep};
+use flashcomm::quant::Codec;
+use flashcomm::topo::{presets, Topology};
+use flashcomm::util::stats::sqnr_db;
+use flashcomm::util::Prng;
+
+fn main() -> anyhow::Result<()> {
+    // Heavy-tailed "activation-like" data (what TP AllReduce carries).
+    let mut rng = Prng::new(42);
+    let mut x = vec![0f32; 1 << 16];
+    rng.fill_activations(&mut x, 1.0);
+
+    println!("--- codec roundtrip: 64K activations ---");
+    println!("{:<14} {:>10} {:>8} {:>9}", "codec", "wire", "ratio", "SQNR dB");
+    for spec in ["bf16", "int8", "int6", "int5", "int4@32", "int3@32", "int2@32", "int2-sr@32",
+                 "int2-sr@32!"] {
+        let codec = Codec::parse(spec)?;
+        let wire = codec.encode(&x);
+        let mut back = vec![0f32; x.len()];
+        Codec::decode(&wire, &mut back)?;
+        println!(
+            "{:<14} {:>10} {:>7.1}% {:>9.2}",
+            spec,
+            wire.len(),
+            100.0 * wire.len() as f64 / (2 * x.len()) as f64,
+            sqnr_db(&x, &back)
+        );
+    }
+
+    println!("\n--- quantized two-step AllReduce across 8 ranks ---");
+    let topo = Topology::new(presets::h800(), 8);
+    for spec in ["bf16", "int8", "int5", "int2@32", "int2-sr@32"] {
+        let codec = Codec::parse(spec)?;
+        let inputs: Vec<Vec<f32>> = (0..8)
+            .map(|r| {
+                let mut rng = Prng::new(100 + r);
+                let mut v = vec![0f32; 8192];
+                rng.fill_activations(&mut v, 1.0);
+                v
+            })
+            .collect();
+        let mut expected = vec![0f32; 8192];
+        for v in &inputs {
+            for (e, a) in expected.iter_mut().zip(v) {
+                *e += a;
+            }
+        }
+        let inputs = &inputs;
+        let (results, counters) = fabric::run_ranks(&topo, |h| {
+            let mut data = inputs[h.rank].clone();
+            twostep::allreduce(&h, &mut data, &codec);
+            data
+        });
+        println!(
+            "{:<12} SQNR {:>7.2} dB   wire {:>9} bytes   all ranks agree: {}",
+            spec,
+            sqnr_db(&expected, &results[0]),
+            counters.total_bytes(),
+            results.iter().all(|r| r == &results[0]),
+        );
+    }
+    println!("\nnote how INT2 collapses but INT2+SpikeReserving stays usable —");
+    println!("that is the paper's core accuracy claim (Table 3), on real bytes.");
+    Ok(())
+}

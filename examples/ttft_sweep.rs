@@ -1,0 +1,42 @@
+//! TTFT sweep (Fig. 2) over prompt lengths and devices.
+//!
+//! ```sh
+//! cargo run --release --example ttft_sweep -- [batch]
+//! ```
+//!
+//! Shows where communication quantization pays: the comm share of TTFT on
+//! each device, and the crossover where the QDQ tax eats the volume win.
+
+use flashcomm::coordinator::ttft::{algo_for, ttft_s, PrefillWorkload};
+use flashcomm::quant::Codec;
+use flashcomm::topo::{presets, Topology};
+
+fn main() -> anyhow::Result<()> {
+    let batch: usize =
+        std::env::args().nth(1).map(|s| s.parse()).transpose()?.unwrap_or(1);
+    let specs = ["bf16", "int8", "int5", "int4@32", "int2-sr@32"];
+    for prompt in [256usize, 1024, 4096] {
+        println!("=== prompt {prompt}, batch {batch}, TP=8, Llama-3-8B-class ===");
+        print!("{:>6}", "GPU");
+        for s in specs {
+            print!(" {:>16}", s);
+        }
+        println!();
+        for dev in presets::all() {
+            let name = dev.name;
+            let topo = Topology::new(dev, 8);
+            let wl = PrefillWorkload { prompt_len: prompt, batch, ..Default::default() };
+            let base = ttft_s(&topo, &wl, &Codec::Bf16, algo_for(&topo, &Codec::Bf16));
+            print!("{name:>6}");
+            for s in specs {
+                let codec = if s == "bf16" { Codec::Bf16 } else { Codec::parse(s)? };
+                let t = ttft_s(&topo, &wl, &codec, algo_for(&topo, &codec));
+                print!(" {:>9.1}ms {:>4.2}x", t * 1e3, base / t);
+            }
+            println!();
+        }
+        println!();
+    }
+    println!("shape (paper Fig. 2): L40 gains most (hier+PP), H800/A100 moderate, H20 ~none");
+    Ok(())
+}

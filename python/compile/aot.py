@@ -1,0 +1,242 @@
+"""AOT compiler: lowers every L1/L2 artifact to HLO *text* and writes the
+runtime data files (init weights, corpus, manifest).
+
+HLO text — NOT `.serialize()` — is the interchange format: the image's
+xla_extension 0.5.1 rejects jax>=0.5 serialized protos (64-bit instruction
+ids); the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/load_hlo and README gotchas.
+
+Run via `make artifacts` (no-op if outputs are newer than inputs):
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import corpus as corpus_mod
+from . import model as M
+
+WEIGHTS_MAGIC = 0xF1A5
+EVAL_BATCH = 4
+TRAIN_BATCH = 4
+CAPACITY = 128  # fixed-capacity expert batch (tokens/rank/expert, padded)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_to_file(fn, example_args, path: str) -> None:
+    specs = [
+        jax.ShapeDtypeStruct(np.shape(a), np.asarray(a).dtype) for a in example_args
+    ]
+    text = to_hlo_text(jax.jit(fn).lower(*specs))
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text) // 1024} KiB)")
+
+
+def write_weights(path: str, params: dict) -> None:
+    """Binary tensor bundle shared with rust model/weights.rs:
+
+    u32 magic | u32 version | u32 n_tensors
+    per tensor: u32 name_len | name | u8 ndim | u32 dims[] | f32 data[] (LE)
+    """
+    with open(path, "wb") as f:
+        f.write(struct.pack("<III", WEIGHTS_MAGIC, 1, len(params)))
+        for name, value in params.items():
+            v = np.ascontiguousarray(value, dtype="<f4")
+            nb = name.encode()
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<B", v.ndim))
+            for d in v.shape:
+                f.write(struct.pack("<I", d))
+            f.write(v.tobytes())
+
+
+def read_weights(path: str) -> dict:
+    """Inverse of write_weights (used by tests)."""
+    out = {}
+    with open(path, "rb") as f:
+        magic, version, n = struct.unpack("<III", f.read(12))
+        assert magic == WEIGHTS_MAGIC and version == 1
+        for _ in range(n):
+            (name_len,) = struct.unpack("<I", f.read(4))
+            name = f.read(name_len).decode()
+            (ndim,) = struct.unpack("<B", f.read(1))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim))
+            count = int(np.prod(dims)) if ndim else 1
+            out[name] = np.frombuffer(f.read(4 * count), dtype="<f4").reshape(dims)
+    return out
+
+
+def lower_qdq_kernels(out_dir: str, manifest: list) -> None:
+    """Standalone L1 QDQ kernels — the rust codec cross-validates against
+    these exact lowered graphs (runtime integration tests)."""
+    from .kernels.quant import rtn_qdq
+    from .kernels.spike import spike_qdq
+
+    shape = (4096,)
+    x = np.zeros(shape, np.float32)
+    for bits, gs in [(8, 128), (5, 128), (4, 32), (2, 32)]:
+        name = f"qdq_rtn_b{bits}_gs{gs}"
+        lower_to_file(
+            lambda v, b=bits, g=gs: (rtn_qdq(v, bits=b, group_size=g),),
+            [x],
+            os.path.join(out_dir, f"{name}.hlo.txt"),
+        )
+        manifest.append(f"artifact {name} kind=qdq n=4096 bits={bits} gs={gs} scheme=rtn")
+    for bits, gs in [(2, 32), (3, 32)]:
+        name = f"qdq_spike_b{bits}_gs{gs}"
+        lower_to_file(
+            lambda v, b=bits, g=gs: (spike_qdq(v, bits=b, group_size=g),),
+            [x],
+            os.path.join(out_dir, f"{name}.hlo.txt"),
+        )
+        manifest.append(f"artifact {name} kind=qdq n=4096 bits={bits} gs={gs} scheme=spike")
+
+
+def flat_args_placeholder(cfg, params):
+    return [params[n] for n, _ in cfg.param_specs()]
+
+
+def lower_config(cfg: M.ModelConfig, tp: int, out_dir: str, manifest: list) -> None:
+    print(f"config {cfg.name}: {cfg.n_params()} params, tp={tp}")
+    params = M.init_params(cfg, seed=42)
+    write_weights(os.path.join(out_dir, f"{cfg.name}_init_weights.bin"), params)
+
+    b, s, d = EVAL_BATCH, cfg.seq_len, cfg.d_model
+    tokens = np.zeros((b, s), np.int32)
+    targets = np.zeros((b, s), np.int32)
+    h = np.zeros((b, s, d), np.float32)
+
+    def art(name):
+        return os.path.join(out_dir, f"{cfg.name}_{name}.hlo.txt")
+
+    # --- TP inference pieces ---
+    lower_to_file(lambda t, e: (M.embed(t, e),), [tokens, params["embed"]], art("embed"))
+    dh = d // tp
+    heads_shard = cfg.n_heads // tp
+    wq_s = np.zeros((d, dh), np.float32)
+    wo_s = np.zeros((dh, d), np.float32)
+    g1 = np.zeros((d,), np.float32)
+    lower_to_file(
+        lambda hh, g, bb, q, k, v, o: (
+            M.attn_part(hh, g, bb, q, k, v, o, n_heads_shard=heads_shard),
+        ),
+        [h, g1, g1, wq_s, wq_s, wq_s, wo_s],
+        art(f"attn_part_tp{tp}"),
+    )
+    w1_s = np.zeros((d, cfg.d_ff // tp), np.float32)
+    w2_s = np.zeros((cfg.d_ff // tp, d), np.float32)
+    lower_to_file(
+        lambda hh, g, bb, w1, w2: (M.mlp_part(hh, g, bb, w1, w2),),
+        [h, g1, g1, w1_s, w2_s],
+        art(f"mlp_part_tp{tp}"),
+    )
+    lower_to_file(
+        lambda hh, g, bb, e, t: M.head_nll(hh, g, bb, e, t),
+        [h, g1, g1, params["embed"], targets],
+        art("head_nll"),
+    )
+    lower_to_file(
+        lambda hh, g, bb, e, t: M.head_acc(hh, g, bb, e, t),
+        [h, g1, g1, params["embed"], targets],
+        art("head_acc"),
+    )
+    manifest.append(
+        f"config {cfg.name} vocab={cfg.vocab} d_model={cfg.d_model} "
+        f"n_layers={cfg.n_layers} n_heads={cfg.n_heads} d_ff={cfg.d_ff} "
+        f"seq_len={cfg.seq_len} n_experts={cfg.n_experts} d_expert={cfg.d_expert} "
+        f"moe_every={cfg.moe_every} tp={tp} eval_batch={EVAL_BATCH} "
+        f"train_batch={TRAIN_BATCH} capacity={CAPACITY} n_params={cfg.n_params()}"
+    )
+    for piece in ["embed", f"attn_part_tp{tp}", f"mlp_part_tp{tp}", "head_nll", "head_acc"]:
+        manifest.append(f"artifact {cfg.name}_{piece} kind=piece config={cfg.name}")
+
+    # --- MoE pieces ---
+    if cfg.n_experts > 0:
+        lower_to_file(
+            lambda hh, g, bb, r: M.router_logits(hh, g, bb, r),
+            [h, g1, g1, np.zeros((d, cfg.n_experts), np.float32)],
+            art("router"),
+        )
+        xc_ = np.zeros((CAPACITY, d), np.float32)
+        lower_to_file(
+            lambda x, w1, w2: (M.expert_mlp(x, w1, w2),),
+            [xc_, np.zeros((d, cfg.d_expert), np.float32),
+             np.zeros((cfg.d_expert, d), np.float32)],
+            art("expert"),
+        )
+        manifest.append(f"artifact {cfg.name}_router kind=piece config={cfg.name}")
+        manifest.append(f"artifact {cfg.name}_expert kind=piece config={cfg.name}")
+
+    # --- clean whole-graph eval (trainer's held-out perplexity) ---
+    lower_to_file(M.make_eval_nll(cfg), flat_args_placeholder(cfg, params) + [tokens, targets],
+                  art("eval_nll"))
+    manifest.append(f"artifact {cfg.name}_eval_nll kind=eval config={cfg.name}")
+
+    # --- training graphs ---
+    tt = np.zeros((TRAIN_BATCH, s), np.int32)
+    flat = [params[n] for n, _ in cfg.param_specs()]
+    lower_to_file(M.make_grad_step(cfg), flat + [tt, tt], art("grad_step"))
+    zeros = [np.zeros_like(p) for p in flat]
+    step = np.zeros((), np.float32)
+    lower_to_file(
+        M.make_adamw_update(cfg), [step] + flat + zeros + zeros + zeros, art("adamw")
+    )
+    manifest.append(f"artifact {cfg.name}_grad_step kind=train config={cfg.name}")
+    manifest.append(f"artifact {cfg.name}_adamw kind=train config={cfg.name}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--configs", default="tiny,moe-tiny",
+                    help="comma-separated: tiny,small,100m,moe-tiny")
+    ap.add_argument("--tp", type=int, default=4)
+    ap.add_argument("--corpus-tokens", type=int, default=600_000)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest: list = ["# flashcomm artifact manifest (generated by compile.aot)"]
+    lower_qdq_kernels(args.out_dir, manifest)
+
+    vocabs = set()
+    for name in args.configs.split(","):
+        cfg = M.CONFIGS[name.strip()]
+        lower_config(cfg, args.tp, args.out_dir, manifest)
+        vocabs.add(cfg.vocab)
+
+    for vocab in sorted(vocabs):
+        path = os.path.join(args.out_dir, f"corpus_v{vocab}.bin")
+        tokens = corpus_mod.generate_tokens(vocab, args.corpus_tokens)
+        corpus_mod.write_corpus(path, tokens, vocab)
+        manifest.append(f"corpus vocab={vocab} file=corpus_v{vocab}.bin "
+                        f"tokens={len(tokens)}")
+        # Part-of-speech pool ranges: the rust Table 7 harness groups
+        # prediction accuracy by these (the synthetic "downstream tasks").
+        for pos, (start, n) in corpus_mod.vocab_layout(vocab).items():
+            manifest.append(f"pool {pos} vocab={vocab} start={start} n={n}")
+        print(f"  wrote {path} ({len(tokens)} tokens)")
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"manifest: {len(manifest) - 1} entries")
+
+
+if __name__ == "__main__":
+    main()

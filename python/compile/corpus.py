@@ -1,0 +1,142 @@
+"""Deterministic synthetic corpus + tokenizer vocabulary.
+
+The paper evaluates C4 perplexity on pretrained LLMs; neither the corpus nor
+the checkpoints are available here (see DESIGN.md §2). This module
+synthesizes a pseudo-English corpus with the statistical structure a small
+LM can learn — Zipfian word frequencies, sentence templates with
+agreement-like constraints, topic locality — so that perplexity *degradation
+under communication quantization* is measurable and ordered, which is the
+reproduced quantity.
+
+The corpus is fully determined by SEED: every `make artifacts` run and every
+rust-side consumer sees identical tokens.
+"""
+
+import struct
+
+import numpy as np
+
+SEED = 0xF1A5C011
+MAGIC = 0xC0A9
+PAD, BOS, EOS = 0, 1, 2
+N_SPECIAL = 3
+
+# Template grammar: S -> NP VP [CONJ NP VP] '.' with topic-conditioned
+# vocabulary pools. Words are abstract ids; surface strings never matter.
+_POOL_SIZES = {
+    "det": 8,
+    "adj": 96,
+    "noun": 384,
+    "verb": 256,
+    "adv": 64,
+    "prep": 16,
+    "conj": 8,
+    "punct": 4,
+}
+
+
+def vocab_layout(vocab_size: int):
+    """Assign contiguous id ranges per part-of-speech pool.
+
+    The pools are scaled to fill `vocab_size - N_SPECIAL` ids.
+    """
+    total = sum(_POOL_SIZES.values())
+    avail = vocab_size - N_SPECIAL
+    layout = {}
+    cursor = N_SPECIAL
+    for i, (pos, base) in enumerate(_POOL_SIZES.items()):
+        n = max(2, base * avail // total)
+        if i == len(_POOL_SIZES) - 1:
+            n = vocab_size - cursor  # absorb rounding
+        layout[pos] = (cursor, n)
+        cursor += n
+    assert cursor == vocab_size, (cursor, vocab_size)
+    return layout
+
+
+def _zipf_draw(rng: np.random.Generator, n: int, a: float = 1.3) -> int:
+    """Zipf-distributed index in [0, n)."""
+    # Bounded inverse-CDF draw (numpy's zipf is unbounded).
+    u = rng.random()
+    t = 1.0 - a
+    h = (n ** t - 1.0) / t
+    x = (1.0 + u * h * t) ** (1.0 / t) - 1.0
+    return min(int(x), n - 1)
+
+
+def generate_tokens(vocab_size: int, n_tokens: int, seed: int = SEED) -> np.ndarray:
+    """Generate `n_tokens` of template-grammar text as uint16 ids."""
+    assert vocab_size <= 65536
+    rng = np.random.default_rng(seed)
+    layout = vocab_layout(vocab_size)
+
+    def draw(pos: str, topic: int) -> int:
+        start, n = layout[pos]
+        if pos in ("noun", "verb", "adj"):
+            # Topic locality: each topic prefers a contiguous half-pool.
+            half = n // 2
+            off = (topic * 97) % max(1, n - half)
+            return start + off + _zipf_draw(rng, half)
+        return start + _zipf_draw(rng, n)
+
+    out = np.empty(n_tokens, dtype=np.uint16)
+    i = 0
+    topic = 0
+    out[i] = BOS
+    i += 1
+    while i < n_tokens:
+        if rng.random() < 0.05:
+            topic = int(rng.integers(0, 16))
+        # NP: det [adj] noun
+        sentence = [draw("det", topic)]
+        if rng.random() < 0.5:
+            sentence.append(draw("adj", topic))
+        subj = draw("noun", topic)
+        sentence.append(subj)
+        # VP: verb [adv] [prep NP]
+        # Agreement-like constraint: verb pool offset depends on the subject,
+        # giving the model a learnable conditional structure.
+        vstart, vn = layout["verb"]
+        half = vn // 2
+        voff = (subj % 7) * max(1, (vn - half) // 7)
+        sentence.append(vstart + voff + _zipf_draw(rng, half))
+        if rng.random() < 0.3:
+            sentence.append(draw("adv", topic))
+        if rng.random() < 0.4:
+            sentence.append(draw("prep", topic))
+            sentence.append(draw("det", topic))
+            sentence.append(draw("noun", topic))
+        pstart, _ = layout["punct"]
+        sentence.append(pstart)
+        if rng.random() < 0.02:
+            sentence.append(EOS)
+            sentence.append(BOS)
+        take = min(len(sentence), n_tokens - i)
+        out[i : i + take] = sentence[:take]
+        i += take
+    return out
+
+
+def write_corpus(path: str, tokens: np.ndarray, vocab_size: int) -> None:
+    """Binary corpus format shared with rust (model/corpus.rs):
+
+    u16 magic | u16 version | u32 vocab_size | u64 n_tokens | u16 tokens[]
+    (little-endian).
+    """
+    with open(path, "wb") as f:
+        f.write(struct.pack("<HHIQ", MAGIC, 1, vocab_size, len(tokens)))
+        f.write(tokens.astype("<u2").tobytes())
+
+
+def read_corpus(path: str):
+    with open(path, "rb") as f:
+        magic, version, vocab, n = struct.unpack("<HHIQ", f.read(16))
+        assert magic == MAGIC and version == 1
+        tokens = np.frombuffer(f.read(2 * n), dtype="<u2")
+    return tokens, vocab
+
+
+def train_eval_split(tokens: np.ndarray, eval_fraction: float = 0.05):
+    """Deterministic head/tail split (eval = final fraction)."""
+    n_eval = max(1, int(len(tokens) * eval_fraction))
+    return tokens[:-n_eval], tokens[-n_eval:]

@@ -1,0 +1,72 @@
+"""L1 Pallas kernel: fused group-wise RTN quantize-dequantize.
+
+This is the compute hot-spot of the paper's fused communication kernel
+(§Experiments: one 4096-value chunk per CUDA block, 48 SMs). TPU adaptation
+(DESIGN.md §Hardware-Adaptation): one grid step processes a
+`(block_rows, row_len)` tile resident in VMEM; the per-group min/max
+reduction, scale/zero computation (BF16-rounded, exactly the wire metadata
+precision) and the quantize+dequantize all happen in a single pass over the
+tile — one HBM read, one HBM write, like the fused CUDA kernel.
+
+Must run with `interpret=True` on CPU: real TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows (groups-of-`group_size` runs) per VMEM tile. 64 rows x 128 lanes x 4B
+# = 32 KiB in, well under VMEM; sized so the f32 tile + metadata fit with
+# double-buffering room.
+BLOCK_ROWS = 64
+
+
+def _rtn_tile_kernel(x_ref, o_ref, *, bits: int, group_size: int):
+    """One VMEM tile: rows of `row_len` split into groups of `group_size`."""
+    x = x_ref[...]  # (rows, row_len) f32, one HBM->VMEM read
+    rows, row_len = x.shape
+    g = x.reshape(rows * (row_len // group_size), group_size)
+    qmax = float(2**bits - 1)
+    # Per-group reduction on the VPU (lane-aligned for gs in {32, 128}).
+    mn = jnp.min(g, axis=-1, keepdims=True)
+    mx = jnp.max(g, axis=-1, keepdims=True)
+    rng = mx - mn
+    scale = jnp.where(rng > 0, rng / qmax, 1.0)
+    # Wire metadata is BF16: round scale/zero exactly like the rust codec.
+    scale = scale.astype(jnp.bfloat16).astype(jnp.float32)
+    zero = mn.astype(jnp.bfloat16).astype(jnp.float32)
+    q = jnp.clip(jnp.floor((g - zero) / scale + 0.5), 0.0, qmax)
+    o_ref[...] = (q * scale + zero).reshape(rows, row_len)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "group_size"))
+def rtn_qdq(x, bits: int, group_size: int):
+    """Fused RTN QDQ over the last axis of `x` (any leading shape).
+
+    Equivalent to `ref.rtn_qdq`; the Pallas grid walks row-tiles.
+    """
+    orig_shape = x.shape
+    row_len = orig_shape[-1]
+    assert row_len % group_size == 0, f"{row_len} % {group_size}"
+    rows = x.size // row_len
+    xr = x.reshape(rows, row_len)
+    block_rows = min(BLOCK_ROWS, rows)
+    # Pad rows to a multiple of the tile height.
+    pad = (-rows) % block_rows
+    if pad:
+        xr = jnp.pad(xr, ((0, pad), (0, 0)))
+    grid = (xr.shape[0] // block_rows,)
+    out = pl.pallas_call(
+        functools.partial(_rtn_tile_kernel, bits=bits, group_size=group_size),
+        out_shape=jax.ShapeDtypeStruct(xr.shape, jnp.float32),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, row_len), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, row_len), lambda i: (i, 0)),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(xr.astype(jnp.float32))
+    if pad:
+        out = out[:rows]
+    return out.reshape(orig_shape)

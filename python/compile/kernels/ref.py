@@ -1,0 +1,120 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These are the correctness references: pytest/hypothesis asserts the Pallas
+kernels (quant.py, spike.py) match these (allclose), and the rust codec is
+cross-validated against the lowered HLO of these functions.
+
+All QDQ functions are *fused quantize-dequantize*: they return what a tensor
+looks like after crossing the quantized wire — the exact transformation the
+communication path applies (Fig. 5).
+"""
+
+import jax.numpy as jnp
+
+
+def to_bf16(x):
+    """Round f32 to bf16 precision and widen back (wire metadata precision)."""
+    return x.astype(jnp.bfloat16).astype(jnp.float32)
+
+
+def _grouped(x, group_size):
+    n = x.shape[-1]
+    assert n % group_size == 0, f"length {n} not divisible by group {group_size}"
+    return x.reshape(*x.shape[:-1], n // group_size, group_size)
+
+
+def rtn_qdq(x, bits: int, group_size: int):
+    """Group-wise asymmetric RTN quantize-dequantize (paper baseline).
+
+    scale/zero travel in BF16, matching rust quant::rtn.
+    """
+    g = _grouped(x, group_size)
+    qmax = float(2**bits - 1)
+    mn = jnp.min(g, axis=-1, keepdims=True)
+    mx = jnp.max(g, axis=-1, keepdims=True)
+    rng = mx - mn
+    scale = to_bf16(jnp.where(rng > 0, rng / qmax, 1.0))
+    zero = to_bf16(mn)
+    q = jnp.clip(jnp.floor((g - zero) / scale + 0.5), 0.0, qmax)
+    return (q * scale + zero).reshape(x.shape)
+
+
+def spike_qdq(x, bits: int, group_size: int):
+    """Spike-reserving QDQ: min & max of each group survive at BF16; the
+    rest is RTN-quantized in the shrunken [2nd-min, 2nd-max] range."""
+    g = _grouped(x, group_size)
+    qmax = float(2**bits - 1)
+    sorted_g = jnp.sort(g, axis=-1)
+    mn, mx = sorted_g[..., :1], sorted_g[..., -1:]
+    mn2, mx2 = sorted_g[..., 1:2], sorted_g[..., -2:-1]
+    rng = mx2 - mn2
+    scale = to_bf16(jnp.where(rng > 0, rng / qmax, 1.0))
+    zero = to_bf16(mn2)
+    q = jnp.clip(jnp.floor((g - zero) / scale + 0.5), 0.0, qmax)
+    deq = q * scale + zero
+    # Restore the first occurrence of min / max at bf16 precision.
+    is_min = g == mn
+    first_min = is_min & (jnp.cumsum(is_min, axis=-1) == 1)
+    is_max = g == mx
+    first_max = is_max & (jnp.cumsum(is_max, axis=-1) == 1)
+    deq = jnp.where(first_max, to_bf16(mx), deq)
+    deq = jnp.where(first_min, to_bf16(mn), deq)
+    return deq.reshape(x.shape)
+
+
+def _fwht(g, group_size):
+    """Normalized fast Walsh-Hadamard transform over the last axis."""
+    shape = g.shape
+    v = g
+    step = 1
+    while step < group_size:
+        v = v.reshape(*shape[:-1], group_size // (2 * step), 2, step)
+        a = v[..., 0, :]
+        b = v[..., 1, :]
+        v = jnp.concatenate([a + b, a - b], axis=-1).reshape(shape)
+        step *= 2
+    return v / jnp.sqrt(float(group_size))
+
+
+def hadamard_qdq(x, bits: int, group_size: int):
+    """Hadamard-rotated RTN baseline (Table 3)."""
+    assert group_size & (group_size - 1) == 0, "power-of-two groups"
+    g = _grouped(x, group_size)
+    h = _fwht(g, group_size)
+    deq = rtn_qdq(h.reshape(x.shape), bits, group_size)
+    # Inverse = same transform (orthonormal involution).
+    g2 = _grouped(deq, group_size)
+    return _fwht(g2, group_size).reshape(x.shape)
+
+
+def logfmt_qdq(x, bits: int, group_size: int):
+    """LogFMT baseline: sign + log-domain linear quantization (Table 3)."""
+    g = _grouped(x, group_size)
+    mag = jnp.abs(g)
+    nz = mag > 1e-30
+    levels = 2 ** (bits - 1) - 1  # magnitude codes 1..levels; 0 = zero
+    loge = jnp.log2(jnp.where(nz, mag, 1.0))
+    emin = to_bf16(jnp.min(jnp.where(nz, loge, jnp.inf), axis=-1, keepdims=True))
+    emax = to_bf16(jnp.max(jnp.where(nz, loge, -jnp.inf), axis=-1, keepdims=True))
+    all_zero = ~jnp.any(nz, axis=-1, keepdims=True)
+    emin = jnp.where(all_zero, 0.0, emin)
+    emax = jnp.where(all_zero, 0.0, emax)
+    span = jnp.maximum(emax - emin, 1e-6)
+    if levels > 1:
+        q = jnp.round((loge - emin) / span * (levels - 1))
+        q = jnp.clip(q, 0, levels - 1)
+        e = emin + q * span / (levels - 1)
+    else:
+        e = jnp.broadcast_to(emin, loge.shape)
+    deq = jnp.where(nz, jnp.sign(g) * jnp.exp2(e), 0.0)
+    return deq.reshape(x.shape)
+
+
+def qdq_by_name(name: str):
+    """Scheme registry used by tests, model.py and aot.py."""
+    return {
+        "rtn": rtn_qdq,
+        "spike": spike_qdq,
+        "hadamard": hadamard_qdq,
+        "logfmt": logfmt_qdq,
+    }[name]

@@ -1,0 +1,82 @@
+"""L1 Pallas kernel: fused spike-reserving quantize-dequantize (Fig. 5).
+
+Same tile structure as quant.py, plus the spike machinery: per group the
+kernel finds min/max (the spikes), re-reduces over the remaining elements
+for the shrunken range, quantizes everything, and scatters the spikes back
+at BF16 precision — all in one pass over the VMEM tile. The argmin/argmax
+"first occurrence" tie-break matches the rust codec and ref.py exactly.
+
+interpret=True — see quant.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .quant import BLOCK_ROWS
+
+
+def _bf16(v):
+    return v.astype(jnp.bfloat16).astype(jnp.float32)
+
+
+def _spike_tile_kernel(x_ref, o_ref, *, bits: int, group_size: int):
+    x = x_ref[...]
+    rows, row_len = x.shape
+    g = x.reshape(rows * (row_len // group_size), group_size)
+    qmax = float(2**bits - 1)
+
+    # Spikes: first-occurrence min and max per group.
+    mn = jnp.min(g, axis=-1, keepdims=True)
+    mx = jnp.max(g, axis=-1, keepdims=True)
+    is_min = g == mn
+    first_min = is_min & (jnp.cumsum(is_min.astype(jnp.int32), axis=-1) == 1)
+    is_max = g == mx
+    first_max = is_max & (jnp.cumsum(is_max.astype(jnp.int32), axis=-1) == 1)
+    spike = first_min | first_max
+
+    # Shrunken range over the non-spike body.
+    big = jnp.float32(3.4e38)
+    mn2 = jnp.min(jnp.where(spike, big, g), axis=-1, keepdims=True)
+    mx2 = jnp.max(jnp.where(spike, -big, g), axis=-1, keepdims=True)
+    empty = mn2 > mx2  # group of <= 2 distinct elements: all spikes
+    mn2 = jnp.where(empty, 0.0, mn2)
+    mx2 = jnp.where(empty, 0.0, mx2)
+
+    rng = mx2 - mn2
+    scale = _bf16(jnp.where(rng > 0, rng / qmax, 1.0))
+    zero = _bf16(mn2)
+    q = jnp.clip(jnp.floor((g - zero) / scale + 0.5), 0.0, qmax)
+    deq = q * scale + zero
+    # Restore spikes at BF16 (the metadata precision of Fig. 5c).
+    deq = jnp.where(first_max, _bf16(mx), deq)
+    deq = jnp.where(first_min, _bf16(mn), deq)
+    o_ref[...] = deq.reshape(rows, row_len)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "group_size"))
+def spike_qdq(x, bits: int, group_size: int):
+    """Fused spike-reserving QDQ over the last axis (any leading shape)."""
+    orig_shape = x.shape
+    row_len = orig_shape[-1]
+    assert row_len % group_size == 0, f"{row_len} % {group_size}"
+    rows = x.size // row_len
+    xr = x.reshape(rows, row_len)
+    block_rows = min(BLOCK_ROWS, rows)
+    pad = (-rows) % block_rows
+    if pad:
+        xr = jnp.pad(xr, ((0, pad), (0, 0)))
+    grid = (xr.shape[0] // block_rows,)
+    out = pl.pallas_call(
+        functools.partial(_spike_tile_kernel, bits=bits, group_size=group_size),
+        out_shape=jax.ShapeDtypeStruct(xr.shape, jnp.float32),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, row_len), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, row_len), lambda i: (i, 0)),
+        interpret=True,
+    )(xr.astype(jnp.float32))
+    if pad:
+        out = out[:rows]
+    return out.reshape(orig_shape)

@@ -1,0 +1,374 @@
+"""L2: the JAX model — a TP-sharded decoder-only transformer plus a
+mixture-of-experts variant, written as *pieces* that end exactly where the
+paper's communication happens.
+
+Tensor-parallel layout (Megatron-style):
+  - attention: wq/wk/wv column-parallel (head blocks), wo row-parallel
+    => `attn_part` returns a PARTIAL output that needs an AllReduce.
+  - MLP: w1 column-parallel, w2 row-parallel
+    => `mlp_part` returns a PARTIAL output that needs an AllReduce.
+
+The rust coordinator (L3) executes one `attn_part`/`mlp_part` HLO per shard
+and runs the real quantized collective between pieces; residual adds are
+cheap element-wise ops done in rust. `qdq_eval_model` additionally bakes the
+L1 Pallas QDQ kernels into a single-process eval graph (used for kernel
+integration tests and the in-graph accuracy path).
+
+Training uses whole-graph `grad_step` (fwd+bwd) and `adamw_update`; the DP
+trainer in rust AllReduces the gradients between the two.
+"""
+
+import dataclasses
+import functools
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "tiny"
+    vocab: int = 2048
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 8
+    d_ff: int = 1024
+    seq_len: int = 128
+    # MoE (0 experts = dense).
+    n_experts: int = 0
+    d_expert: int = 512
+    moe_every: int = 2  # MoE replaces the MLP every k-th layer
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def is_moe_layer(self, layer: int) -> bool:
+        return self.n_experts > 0 and layer % self.moe_every == 1
+
+    def param_specs(self):
+        """Ordered (name, shape) list — the flat parameter layout shared
+        with rust (model/weights.rs reads the same order)."""
+        d, f, v = self.d_model, self.d_ff, self.vocab
+        specs = [("embed", (v, d))]
+        for l in range(self.n_layers):
+            specs += [
+                (f"l{l}.ln1_g", (d,)),
+                (f"l{l}.ln1_b", (d,)),
+                (f"l{l}.wq", (d, d)),
+                (f"l{l}.wk", (d, d)),
+                (f"l{l}.wv", (d, d)),
+                (f"l{l}.wo", (d, d)),
+                (f"l{l}.ln2_g", (d,)),
+                (f"l{l}.ln2_b", (d,)),
+            ]
+            if self.is_moe_layer(l):
+                specs += [
+                    (f"l{l}.router", (d, self.n_experts)),
+                    (f"l{l}.we1", (self.n_experts, d, self.d_expert)),
+                    (f"l{l}.we2", (self.n_experts, self.d_expert, d)),
+                ]
+            else:
+                specs += [(f"l{l}.w1", (d, f)), (f"l{l}.w2", (f, d))]
+        specs += [("lnf_g", (d,)), ("lnf_b", (d,))]
+        return specs
+
+    def n_params(self) -> int:
+        return sum(int(np.prod(s)) for _, s in self.param_specs())
+
+
+CONFIGS: Dict[str, ModelConfig] = {
+    "tiny": ModelConfig(),
+    "small": ModelConfig(
+        name="small", vocab=4096, d_model=384, n_layers=6, n_heads=8, d_ff=1536
+    ),
+    "100m": ModelConfig(
+        name="100m", vocab=8192, d_model=768, n_layers=12, n_heads=12, d_ff=3072,
+        seq_len=256,
+    ),
+    "moe-tiny": ModelConfig(
+        name="moe-tiny", vocab=2048, d_model=256, n_layers=4, n_heads=8, d_ff=1024,
+        n_experts=8, d_expert=512,
+    ),
+}
+
+
+def init_params(cfg: ModelConfig, seed: int = 0):
+    """Deterministic scaled-normal init, returned as an ordered dict."""
+    rng = np.random.default_rng(seed)
+    params = {}
+    for name, shape in cfg.param_specs():
+        if name.endswith("_g"):
+            params[name] = np.ones(shape, np.float32)
+        elif name.endswith("_b"):
+            params[name] = np.zeros(shape, np.float32)
+        else:
+            fan_in = shape[0] if len(shape) == 1 else int(np.prod(shape[:-1]))
+            std = 0.02 if name == "embed" else 1.0 / np.sqrt(max(1, fan_in))
+            params[name] = (rng.standard_normal(shape) * std).astype(np.float32)
+    return params
+
+
+def layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _causal_attention(q, k, v):
+    """q,k,v: [B,S,H,hd] -> [B,S,H,hd]."""
+    s = q.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k) * scale
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+# ---------------------------------------------------------------------------
+# TP pieces (one HLO per piece; weights are inputs, shared across shards).
+# ---------------------------------------------------------------------------
+
+def embed(tokens, emb):
+    """tokens [B,S] i32, emb [V,D] -> h [B,S,D]."""
+    return jnp.take(emb, tokens, axis=0)
+
+
+def attn_part(h, ln_g, ln_b, wq, wk, wv, wo, *, n_heads_shard: int):
+    """One TP shard of the attention block.
+
+    h [B,S,D]; wq/wk/wv [D, Dh]; wo [Dh, D] with Dh = D/tp.
+    Returns the PARTIAL pre-residual output [B,S,D] (needs AllReduce).
+    """
+    b, s, _ = h.shape
+    x = layer_norm(h, ln_g, ln_b)
+    q = (x @ wq).reshape(b, s, n_heads_shard, -1)
+    k = (x @ wk).reshape(b, s, n_heads_shard, -1)
+    v = (x @ wv).reshape(b, s, n_heads_shard, -1)
+    o = _causal_attention(q, k, v).reshape(b, s, -1)
+    return o @ wo
+
+
+def mlp_part(h, ln_g, ln_b, w1, w2):
+    """One TP shard of the MLP: w1 [D, F/tp], w2 [F/tp, D].
+
+    Returns the PARTIAL pre-residual output (needs AllReduce).
+    """
+    x = layer_norm(h, ln_g, ln_b)
+    return jax.nn.gelu(x @ w1) @ w2
+
+
+def head_nll(h, lnf_g, lnf_b, emb, targets):
+    """Final piece: per-token negative log-likelihood [B,S] + mean loss.
+
+    Output-embedding tied to the input embedding.
+    """
+    x = layer_norm(h, lnf_g, lnf_b)
+    logits = x @ emb.T
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return nll, jnp.mean(nll)
+
+
+def head_acc(h, lnf_g, lnf_b, emb, targets):
+    """Final piece for the downstream-accuracy suite (Table 7): returns
+    (per-token top-1 correctness [B,S], predicted ids [B,S]) as f32 — the
+    ids let the rust harness score pool-match (syntactic) tasks too."""
+    x = layer_norm(h, lnf_g, lnf_b)
+    logits = x @ emb.T
+    pred = jnp.argmax(logits, axis=-1)
+    return (pred == targets).astype(jnp.float32), pred.astype(jnp.float32)
+
+
+def router_logits(h, ln_g, ln_b, router):
+    """MoE router piece: returns (expert logits [B,S,E], normalized h).
+
+    The normalized activations are the All2All *dispatch volume* — exactly
+    what the paper quantizes (DeepSeek-V3 style) — so the rust EP engine
+    gets both routing decisions and the payload from one piece."""
+    x = layer_norm(h, ln_g, ln_b)
+    return x @ router, x
+
+
+def expert_mlp(x, w1, w2):
+    """One expert on a fixed-capacity token batch [C,D]."""
+    return jax.nn.gelu(x @ w1) @ w2
+
+
+# ---------------------------------------------------------------------------
+# Whole-graph forward (training / single-process eval).
+# ---------------------------------------------------------------------------
+
+def _moe_ffn_dense(x, router, we1, we2, n_experts):
+    """Dense (one-hot) top-1 MoE used for training: every expert sees every
+    token, masked by the routing decision. Mathematically identical to
+    dispatch/combine EP, without ragged shapes."""
+    logits = x @ router  # [B,S,E]
+    gates = jax.nn.softmax(logits, axis=-1)
+    top = jnp.argmax(gates, axis=-1)  # [B,S]
+    onehot = jax.nn.one_hot(top, n_experts, dtype=x.dtype)  # [B,S,E]
+    gate_val = jnp.sum(gates * onehot, axis=-1, keepdims=True)  # [B,S,1]
+    expert_out = jnp.einsum(
+        "bsd,edf->bsef", x, we1
+    )
+    expert_out = jax.nn.gelu(expert_out)
+    expert_out = jnp.einsum("bsef,efd->bsed", expert_out, we2)
+    mixed = jnp.einsum("bsed,bse->bsd", expert_out, onehot)
+    # Load-balancing auxiliary loss (Switch-style).
+    density = jnp.mean(onehot, axis=(0, 1))
+    density_proxy = jnp.mean(gates, axis=(0, 1))
+    aux = jnp.sum(density * density_proxy) * n_experts
+    return mixed * gate_val, aux
+
+
+def forward(cfg: ModelConfig, params: Dict[str, jax.Array], tokens,
+            qdq: Optional[Callable] = None, moe_qdq: Optional[Callable] = None):
+    """Full forward pass -> h before the head.
+
+    `qdq(x)` is applied to each partial output before the residual add —
+    simulating the TP AllReduce quantization exactly where the wire sits.
+    `moe_qdq(x)` is applied to the MoE FFN input (the All2All dispatch
+    volume, DeepSeek-V3 style: dispatch only).
+    """
+    h = embed(tokens, params["embed"])
+    for l in range(cfg.n_layers):
+        p = lambda k: params[f"l{l}.{k}"]  # noqa: E731
+        a = attn_part(
+            h, p("ln1_g"), p("ln1_b"), p("wq"), p("wk"), p("wv"), p("wo"),
+            n_heads_shard=cfg.n_heads,
+        )
+        if qdq is not None:
+            a = qdq(a)
+        h = h + a
+        if cfg.is_moe_layer(l):
+            x = layer_norm(h, p("ln2_g"), p("ln2_b"))
+            if moe_qdq is not None:
+                x = moe_qdq(x)  # quantized dispatch volume
+            m, _aux = _moe_ffn_dense(x, p("router"), p("we1"), p("we2"), cfg.n_experts)
+        else:
+            m = mlp_part(h, p("ln2_g"), p("ln2_b"), p("w1"), p("w2"))
+            if qdq is not None:
+                m = qdq(m)
+        h = h + m
+    return h
+
+
+def loss_fn(cfg: ModelConfig, params, tokens, targets):
+    h = forward(cfg, params, tokens)
+    _, loss = head_nll(h, params["lnf_g"], params["lnf_b"], params["embed"], targets)
+    if cfg.n_experts > 0:
+        # Recompute aux losses (cheap at these sizes) for load balancing.
+        aux = 0.0
+        hh = embed(tokens, params["embed"])
+        for l in range(cfg.n_layers):
+            p = lambda k: params[f"l{l}.{k}"]  # noqa: E731
+            a = attn_part(hh, p("ln1_g"), p("ln1_b"), p("wq"), p("wk"), p("wv"),
+                          p("wo"), n_heads_shard=cfg.n_heads)
+            hh = hh + a
+            if cfg.is_moe_layer(l):
+                x = layer_norm(hh, p("ln2_g"), p("ln2_b"))
+                m, a_l = _moe_ffn_dense(x, p("router"), p("we1"), p("we2"), cfg.n_experts)
+                aux = aux + a_l
+            else:
+                m = mlp_part(hh, p("ln2_g"), p("ln2_b"), p("w1"), p("w2"))
+            hh = hh + m
+        loss = loss + 0.01 * aux
+    return loss
+
+
+def make_grad_step(cfg: ModelConfig):
+    """grad_step(params..., tokens, targets) -> (loss, grads...).
+
+    Positional flat signature so the rust runtime can feed Literals.
+    """
+    names = [n for n, _ in cfg.param_specs()]
+
+    def grad_step(*args):
+        ps = dict(zip(names, args[: len(names)]))
+        tokens, targets = args[len(names)], args[len(names) + 1]
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, tokens, targets)
+        )(ps)
+        return (loss,) + tuple(grads[n] for n in names)
+
+    return grad_step
+
+
+def make_adamw_update(cfg: ModelConfig, lr=3e-4, b1=0.9, b2=0.95, eps=1e-8,
+                      wd=0.01):
+    """adamw(step, params..., grads..., m..., v...) -> (params', m', v')."""
+    names = [n for n, _ in cfg.param_specs()]
+    k = len(names)
+
+    def update(*args):
+        step = args[0]
+        ps, gs, ms, vs = (args[1:1 + k], args[1 + k:1 + 2 * k],
+                          args[1 + 2 * k:1 + 3 * k], args[1 + 3 * k:1 + 4 * k])
+        t = step.astype(jnp.float32) + 1.0
+        outs_p, outs_m, outs_v = [], [], []
+        for name, p, g, m, v in zip(names, ps, gs, ms, vs):
+            m2 = b1 * m + (1 - b1) * g
+            v2 = b2 * v + (1 - b2) * g * g
+            mhat = m2 / (1 - b1 ** t)
+            vhat = v2 / (1 - b2 ** t)
+            decay = 0.0 if name.endswith(("_g", "_b")) else wd
+            p2 = p - lr * (mhat / (jnp.sqrt(vhat) + eps) + decay * p)
+            outs_p.append(p2)
+            outs_m.append(m2)
+            outs_v.append(v2)
+        return tuple(outs_p) + tuple(outs_m) + tuple(outs_v)
+
+    return update
+
+
+def make_eval_nll(cfg: ModelConfig, scheme: Optional[str] = None,
+                  bits: int = 8, group_size: int = 128,
+                  target: str = "allreduce", use_pallas: bool = False):
+    """eval_nll(params..., tokens, targets) -> (sum_nll, count).
+
+    `scheme` in {None, 'rtn', 'spike', 'hadamard', 'logfmt'} applies QDQ at
+    the TP AllReduce boundary (`target='allreduce'`) or at the MoE dispatch
+    (`target='dispatch'`). `use_pallas=True` routes RTN/spike through the L1
+    Pallas kernels instead of the jnp reference (identical numerics —
+    asserted by tests)."""
+    from .kernels import ref as ref_k
+
+    names = [n for n, _ in cfg.param_specs()]
+    qdq = None
+    if scheme is not None:
+        if use_pallas and scheme == "rtn":
+            from .kernels.quant import rtn_qdq as fn
+        elif use_pallas and scheme == "spike":
+            from .kernels.spike import spike_qdq as fn
+        else:
+            fn = ref_k.qdq_by_name(scheme)
+        qdq = functools.partial(fn, bits=bits, group_size=group_size)
+
+    def eval_nll(*args):
+        ps = dict(zip(names, args[: len(names)]))
+        tokens, targets = args[len(names)], args[len(names) + 1]
+        ar_qdq = qdq if target == "allreduce" else None
+        moe_qdq = qdq if target == "dispatch" else None
+        h = forward(cfg, ps, tokens, qdq=ar_qdq, moe_qdq=moe_qdq)
+        nll, _ = head_nll(h, ps["lnf_g"], ps["lnf_b"], ps["embed"], targets)
+        return jnp.sum(nll), jnp.float32(nll.size)
+
+    return eval_nll
+
+
+def shard_param(name: str, value: np.ndarray, tp: int, shard: int) -> np.ndarray:
+    """TP weight slicing, mirrored by rust model/weights.rs.
+
+    Column-parallel (wq/wk/wv/w1): split last axis. Row-parallel (wo/w2):
+    split first axis. Everything else is replicated."""
+    base = name.split(".")[-1]
+    if base in ("wq", "wk", "wv", "w1"):
+        cols = value.shape[-1] // tp
+        return value[..., shard * cols:(shard + 1) * cols]
+    if base in ("wo", "w2"):
+        rows = value.shape[0] // tp
+        return value[shard * rows:(shard + 1) * rows]
+    return value

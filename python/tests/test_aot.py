@@ -1,0 +1,58 @@
+"""AOT pipeline tests: weights format round-trip, HLO text lowering."""
+
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_weights_roundtrip():
+    cfg = M.CONFIGS["tiny"]
+    params = M.init_params(cfg, seed=0)
+    with tempfile.TemporaryDirectory() as d:
+        p = os.path.join(d, "w.bin")
+        aot.write_weights(p, params)
+        back = aot.read_weights(p)
+        assert list(back.keys()) == list(params.keys())
+        for k in params:
+            np.testing.assert_array_equal(back[k], params[k])
+
+
+def test_lower_produces_parseable_hlo_text():
+    import jax.numpy as jnp
+    with tempfile.TemporaryDirectory() as d:
+        p = os.path.join(d, "f.hlo.txt")
+        aot.lower_to_file(lambda x: (x * 2.0 + 1.0,), [np.zeros((4,), np.float32)], p)
+        text = open(p).read()
+        assert text.startswith("HloModule"), text[:80]
+        assert "ENTRY" in text
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.txt")),
+                    reason="run `make artifacts` first")
+def test_built_artifacts_manifest_consistent():
+    lines = open(os.path.join(ART, "manifest.txt")).read().strip().splitlines()
+    arts = [l.split()[1] for l in lines if l.startswith("artifact ")]
+    assert len(arts) >= 15
+    for a in arts:
+        path = os.path.join(ART, f"{a}.hlo.txt")
+        assert os.path.exists(path), a
+        head = open(path).read(32)
+        assert head.startswith("HloModule"), (a, head)
+    cfgs = [l for l in lines if l.startswith("config ")]
+    assert any("tiny" in c for c in cfgs)
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "corpus_v2048.bin")),
+                    reason="run `make artifacts` first")
+def test_built_corpus_loads():
+    from compile import corpus as C
+    toks, vocab = C.read_corpus(os.path.join(ART, "corpus_v2048.bin"))
+    assert vocab == 2048
+    assert len(toks) == 600_000
+    assert toks.max() < 2048

@@ -1,0 +1,63 @@
+"""Corpus generator tests: determinism, structure, format round-trip."""
+
+import os
+import tempfile
+
+import numpy as np
+
+from compile import corpus as C
+
+
+def test_deterministic():
+    a = C.generate_tokens(2048, 10_000)
+    b = C.generate_tokens(2048, 10_000)
+    np.testing.assert_array_equal(a, b)
+    c = C.generate_tokens(2048, 10_000, seed=1)
+    assert not np.array_equal(a, c)
+
+
+def test_tokens_in_vocab():
+    t = C.generate_tokens(1024, 20_000)
+    assert t.min() >= 0 and t.max() < 1024
+    assert t.dtype == np.uint16
+
+
+def test_zipfian_head():
+    t = C.generate_tokens(2048, 100_000)
+    counts = np.bincount(t, minlength=2048)[C.N_SPECIAL:]
+    counts.sort()
+    top = counts[-50:].sum()
+    assert top > 0.25 * counts.sum(), "frequency head too flat"
+    assert (counts > 0).sum() > 500, "vocabulary coverage too small"
+
+
+def test_structure_is_learnable():
+    # Bigram entropy must sit well below unigram entropy: the grammar has
+    # learnable conditional structure (what the LM trains on).
+    t = C.generate_tokens(2048, 200_000).astype(np.int64)
+    uni = np.bincount(t, minlength=2048).astype(float)
+    pu = uni / uni.sum()
+    hu = -(pu[pu > 0] * np.log(pu[pu > 0])).sum()
+    pairs = t[:-1] * 2048 + t[1:]
+    bi = np.bincount(pairs, minlength=2048 * 2048).astype(float)
+    pb = bi / bi.sum()
+    hb = -(pb[pb > 0] * np.log(pb[pb > 0])).sum()
+    cond = hb - hu  # H(next | prev)
+    assert cond < hu - 0.5, (hu, cond)
+
+
+def test_format_roundtrip():
+    t = C.generate_tokens(512, 5_000)
+    with tempfile.TemporaryDirectory() as d:
+        p = os.path.join(d, "c.bin")
+        C.write_corpus(p, t, 512)
+        back, vocab = C.read_corpus(p)
+        assert vocab == 512
+        np.testing.assert_array_equal(back, t)
+
+
+def test_split():
+    t = C.generate_tokens(512, 10_000)
+    train, ev = C.train_eval_split(t, 0.1)
+    assert len(train) + len(ev) == len(t)
+    assert len(ev) == 1000

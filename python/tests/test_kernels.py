@@ -1,0 +1,132 @@
+"""L1 kernel correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, bit widths and group sizes; assert_allclose
+against ref.py is the core correctness signal for the kernel layer.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.quant import rtn_qdq
+from compile.kernels.spike import spike_qdq
+
+BITS = st.sampled_from([2, 3, 4, 5, 6, 8])
+GS = st.sampled_from([32, 128])
+
+
+def activations(rng: np.random.Generator, shape) -> np.ndarray:
+    """Heavy-tailed activation-like data with rare massive outliers."""
+    x = rng.standard_t(4, size=shape).astype(np.float32)
+    mask = rng.random(shape) < 1e-3
+    x = np.where(mask, np.float32(40.0) * np.sign(x), x)
+    return x
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    bits=BITS,
+    gs=GS,
+    rows=st.integers(1, 70),
+    groups_per_row=st.integers(1, 4),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_pallas_rtn_matches_ref(bits, gs, rows, groups_per_row, seed):
+    rng = np.random.default_rng(seed)
+    x = activations(rng, (rows, groups_per_row * gs))
+    got = rtn_qdq(jnp.asarray(x), bits=bits, group_size=gs)
+    want = ref.rtn_qdq(jnp.asarray(x), bits, gs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=1e-6)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    bits=st.sampled_from([2, 3, 4]),
+    gs=GS,
+    rows=st.integers(1, 70),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_pallas_spike_matches_ref(bits, gs, rows, seed):
+    rng = np.random.default_rng(seed)
+    x = activations(rng, (rows, gs))
+    got = spike_qdq(jnp.asarray(x), bits=bits, group_size=gs)
+    want = ref.spike_qdq(jnp.asarray(x), bits, gs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(bits=BITS, seed=st.integers(0, 2**32 - 1))
+def test_rtn_error_bounded_by_half_step(bits, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((8, 128)).astype(np.float32)
+    y = np.asarray(rtn_qdq(jnp.asarray(x), bits=bits, group_size=32))
+    for r in range(8):
+        for g in range(4):
+            grp = x[r, g * 32:(g + 1) * 32]
+            step = (grp.max() - grp.min()) / (2**bits - 1)
+            bound = 0.5 * step + np.abs(grp).max() / 128.0 + 1e-6
+            err = np.abs(y[r, g * 32:(g + 1) * 32] - grp).max()
+            assert err <= bound, (bits, r, g, err, bound)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**32 - 1))
+def test_spike_preserves_extrema(seed):
+    rng = np.random.default_rng(seed)
+    x = activations(rng, (16, 32))
+    y = np.asarray(spike_qdq(jnp.asarray(x), bits=2, group_size=32))
+    for r in range(16):
+        for (f, g) in [(np.min, "min"), (np.max, "max")]:
+            want = f(x[r])
+            got = f(y[r])
+            assert abs(got - want) <= abs(want) / 128.0 + 1e-6, (g, r, want, got)
+
+
+def test_spike_shrinks_range_fig4():
+    rng = np.random.default_rng(7)
+    x = activations(rng, (64, 32))
+    rtn = np.asarray(rtn_qdq(jnp.asarray(x), bits=2, group_size=32))
+    sr = np.asarray(spike_qdq(jnp.asarray(x), bits=2, group_size=32))
+    assert np.mean((sr - x) ** 2) < 0.6 * np.mean((rtn - x) ** 2)
+
+
+def test_scheme_ordering_at_int2():
+    """Table 3's ordering on heavy-tailed data: SR best, LogFMT collapses."""
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(activations(rng, (256, 128)))
+    mse = {
+        name: float(jnp.mean((ref.qdq_by_name(name)(x, 2, 32) - x) ** 2))
+        for name in ["rtn", "spike", "hadamard", "logfmt"]
+    }
+    assert mse["spike"] < mse["rtn"], mse
+    assert mse["spike"] < mse["hadamard"], mse
+    assert mse["logfmt"] > mse["spike"] * 2, mse
+
+
+def test_monotone_in_bits():
+    rng = np.random.default_rng(13)
+    x = jnp.asarray(rng.standard_normal((64, 128)).astype(np.float32))
+    prev = np.inf
+    for bits in [2, 3, 4, 5, 6, 8]:
+        m = float(jnp.mean((rtn_qdq(x, bits=bits, group_size=128) - x) ** 2))
+        assert m < prev, (bits, m, prev)
+        prev = m
+
+
+def test_constant_and_zero_groups():
+    x = jnp.concatenate([jnp.full((1, 32), 5.0), jnp.zeros((1, 32))], axis=0)
+    for f in (rtn_qdq, spike_qdq):
+        y = np.asarray(f(x, bits=2, group_size=32))
+        np.testing.assert_allclose(y[0], 5.0, atol=0.05)
+        np.testing.assert_allclose(y[1], 0.0, atol=1e-6)
+
+
+def test_odd_leading_shapes():
+    rng = np.random.default_rng(17)
+    x = jnp.asarray(rng.standard_normal((3, 5, 128)).astype(np.float32))
+    y = rtn_qdq(x, bits=4, group_size=32)
+    assert y.shape == x.shape
+    w = ref.rtn_qdq(x, 4, 32)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(w), atol=1e-6)

@@ -1,0 +1,92 @@
+//! Collective benchmarks: functional throughput of the in-process fabric
+//! (QDQ + packing + channel transfer on one core) for every algorithm, and
+//! the simulated Table 9 / Table 10 algorithmic bandwidths.
+//!
+//! `cargo bench --bench bench_collectives`
+//!
+//! The fabric numbers measure OUR hot path (the wall time is dominated by
+//! the codec since the "links" are memcpy); the simulated numbers are the
+//! paper-comparable bandwidths (see DESIGN.md §2).
+
+use flashcomm::comm::{self, fabric};
+use flashcomm::quant::Codec;
+use flashcomm::sim::{self, Algo};
+use flashcomm::topo::{presets, Topology};
+use flashcomm::util::timer::{bench, fmt_bytes};
+use flashcomm::util::Prng;
+
+fn main() {
+    let n: usize = 1 << 20; // 1M f32 = 4 MiB per rank
+    fabric_bench(n);
+    println!();
+    sim_tables();
+}
+
+fn fabric_bench(n: usize) {
+    println!("== in-process fabric AllReduce, 8 ranks x {} ==", fmt_bytes(4 * n));
+    println!("{:<22} {:>10} {:>14} {:>12}", "algo+codec", "ms", "payload GB/s", "wire bytes");
+    let h800 = Topology::new(presets::h800(), 8);
+    let l40 = Topology::new(presets::l40(), 8);
+    let cases: Vec<(&str, &Topology, Algo, &str)> = vec![
+        ("ring bf16 (NCCL)", &h800, Algo::Ring, "bf16"),
+        ("two-step bf16", &h800, Algo::TwoStep, "bf16"),
+        ("two-step int8", &h800, Algo::TwoStep, "int8"),
+        ("two-step int5", &h800, Algo::TwoStep, "int5"),
+        ("two-step int2-sr", &h800, Algo::TwoStep, "int2-sr@32"),
+        ("hier int8", &l40, Algo::Hier, "int8"),
+        ("hier-pp int8", &l40, Algo::HierPipelined, "int8"),
+    ];
+    for (label, topo, algo, spec) in cases {
+        let codec = Codec::parse(spec).unwrap();
+        let inputs: Vec<Vec<f32>> = (0..topo.n_gpus)
+            .map(|r| {
+                let mut rng = Prng::new(r as u64);
+                let mut v = vec![0f32; n];
+                rng.fill_activations(&mut v, 1.0);
+                v
+            })
+            .collect();
+        let inputs = &inputs;
+        let mut wire_bytes = 0u64;
+        let m = bench(1, 3, || {
+            let (_, counters) = fabric::run_ranks(topo, |h| {
+                let mut data = inputs[h.rank].clone();
+                match algo {
+                    Algo::Ring => comm::ring::allreduce(&h, &mut data, &codec),
+                    Algo::TwoStep => comm::twostep::allreduce(&h, &mut data, &codec),
+                    Algo::Hier => comm::hier::allreduce(&h, &mut data, &codec),
+                    Algo::HierPipelined => comm::pipeline::allreduce(&h, &mut data, &codec),
+                }
+            });
+            wire_bytes = counters.total_bytes();
+        });
+        println!(
+            "{:<22} {:>10.2} {:>14.3} {:>12}",
+            label,
+            m.secs() * 1e3,
+            (4 * n * topo.n_gpus) as f64 / m.secs() / 1e9,
+            wire_bytes
+        );
+    }
+}
+
+fn sim_tables() {
+    println!("== simulated algorithmic bandwidth (Tables 9 & 10 anchors) ==");
+    let m = 64.0 * 1024.0 * 1024.0;
+    for (label, algo) in [("two-step", Algo::TwoStep), ("hier", Algo::Hier), ("hier-pp", Algo::HierPipelined)] {
+        let topo = Topology::new(presets::l40(), 8);
+        let t = sim::allreduce_time(&topo, algo, &Codec::parse("int4@32").unwrap(), m);
+        println!("L40 {label:<9} int4: {:>7.2} GB/s", sim::algbw_gbps(m, &t));
+    }
+    for dev in [presets::a100(), presets::h800(), presets::h20()] {
+        let name = dev.name;
+        let topo = Topology::new(dev, 8);
+        let ar = sim::allreduce_time(&topo, Algo::TwoStep, &Codec::parse("int4@32").unwrap(), m);
+        let a2a = sim::all2all::all2all_time(&topo, &Codec::parse("int4@32").unwrap(), m);
+        println!(
+            "{name} int4: allreduce {:>7.2} GB/s, all2all {:>7.2} GB/s",
+            sim::algbw_gbps(m, &ar),
+            sim::all2all::algbw_gbps(m, &a2a)
+        );
+    }
+}

@@ -1,0 +1,62 @@
+//! Engine benchmarks: TP inference step latency and DP training step time
+//! per wire codec — the end-to-end hot path (PJRT compute + rust QDQ +
+//! collective). Requires `make artifacts`.
+//!
+//! `cargo bench --bench bench_engine`
+
+use flashcomm::coordinator::{CollectiveStyle, TpEngine, TrainOptions, Trainer};
+use flashcomm::model::{Corpus, ModelConfig, Sampler, Weights};
+use flashcomm::quant::Codec;
+use flashcomm::runtime::{default_artifacts_dir, Runtime};
+use flashcomm::sim::Algo;
+use flashcomm::util::timer::bench;
+
+fn main() {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping engine bench: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::open(&dir).unwrap();
+    let cfg = ModelConfig::from_record(rt.manifest.config("tiny").unwrap()).unwrap();
+    let weights = Weights::load(dir.join("tiny_init_weights.bin")).unwrap();
+    let corpus = Corpus::load(dir.join(format!("corpus_v{}.bin", cfg.vocab))).unwrap();
+    let (train, eval) = corpus.split();
+    let batch = &flashcomm::model::Sampler::eval_batches(eval, cfg.eval_batch, cfg.seq_len)[0];
+    let tokens = (cfg.eval_batch * cfg.seq_len) as f64;
+
+    println!("== TP inference step (batch {} x seq {}) ==", cfg.eval_batch, cfg.seq_len);
+    println!("{:<14} {:>10} {:>12}", "codec", "ms/step", "tok/s");
+    let mut engine =
+        TpEngine::new(rt, cfg.clone(), &weights, Codec::Bf16, CollectiveStyle::TwoStep).unwrap();
+    for spec in ["bf16", "int8", "int5", "int2-sr@32"] {
+        let codec = if spec == "bf16" { Codec::Bf16 } else { Codec::parse(spec).unwrap() };
+        engine.set_codec(codec, CollectiveStyle::TwoStep);
+        engine.eval_nll(batch).unwrap(); // warm the executable cache
+        let m = bench(1, 3, || {
+            engine.eval_nll(batch).unwrap();
+        });
+        println!("{:<14} {:>10.2} {:>12.0}", spec, m.secs() * 1e3, tokens / m.secs());
+    }
+
+    println!("\n== DP training step (dp=2, grads through the fabric) ==");
+    println!("{:<14} {:>10}", "grad codec", "s/step");
+    for spec in ["bf16", "int8", "int2-sr@32!"] {
+        let rt = Runtime::open(&dir).unwrap();
+        let mut trainer = Trainer::new(rt, cfg.clone(), &weights).unwrap();
+        let mut sampler = Sampler::new(train, 3);
+        let opts = TrainOptions {
+            steps: 1,
+            dp: 2,
+            codec: Codec::parse(spec).unwrap(),
+            algo: Algo::TwoStep,
+            log_every: 0,
+            ..Default::default()
+        };
+        trainer.train_step(&mut sampler, &opts).unwrap(); // warm compile
+        let m = bench(0, 3, || {
+            trainer.train_step(&mut sampler, &opts).unwrap();
+        });
+        println!("{:<14} {:>10.3}", spec, m.secs());
+    }
+}

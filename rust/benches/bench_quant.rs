@@ -1,0 +1,57 @@
+//! Codec hot-path throughput: encode / decode / decode-sum per scheme.
+//!
+//! `cargo bench --bench bench_quant [-- <bytes>]`
+//!
+//! This is the paper's fused-kernel cost, measured on our hot path; the
+//! relative costs here justify the `sim::cost` pass counts, and the
+//! absolute GB/s is the §Perf deliverable (before/after in EXPERIMENTS.md).
+
+use flashcomm::quant::{Codec, CodecBuffers};
+use flashcomm::util::timer::{bench, fmt_bytes};
+use flashcomm::util::Prng;
+
+fn main() {
+    let n: usize = std::env::args()
+        .skip_while(|a| a != "--")
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1 << 22); // 4M f32 = 16 MiB
+    let mut rng = Prng::new(1);
+    let mut data = vec![0f32; n];
+    rng.fill_activations(&mut data, 1.0);
+    let in_bytes = 4 * n;
+
+    println!("codec throughput over {} of activations (single core)", fmt_bytes(in_bytes));
+    println!(
+        "{:<14} {:>11} {:>11} {:>11} {:>9}",
+        "codec", "enc GB/s", "dec GB/s", "dec+sum", "wire%"
+    );
+    for spec in [
+        "bf16", "int8", "int6", "int5", "int4@32", "int3@32", "int2@32", "int2-sr@32",
+        "int2-sr@32!", "int4-had@32", "int3-log@32",
+    ] {
+        let codec = Codec::parse(spec).unwrap();
+        let mut bufs = CodecBuffers::default();
+        let mut wire = Vec::with_capacity(codec.wire_len(n));
+        let enc = bench(1, 5, || {
+            wire.clear();
+            codec.encode_with(&data, &mut bufs, &mut wire);
+        });
+        let mut out = vec![0f32; n];
+        let dec = bench(1, 5, || {
+            Codec::decode_with(&wire, &mut bufs, &mut out).unwrap();
+        });
+        let mut acc = vec![0f32; n];
+        let ds = bench(1, 5, || {
+            Codec::decode_sum_with(&wire, &mut bufs, &mut acc).unwrap();
+        });
+        println!(
+            "{:<14} {:>11.3} {:>11.3} {:>11.3} {:>8.1}%",
+            spec,
+            enc.gbps(in_bytes),
+            dec.gbps(in_bytes),
+            ds.gbps(in_bytes),
+            100.0 * wire.len() as f64 / (2 * n) as f64,
+        );
+    }
+}

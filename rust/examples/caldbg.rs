@@ -1,0 +1,44 @@
+// debug calibration
+use flashcomm::quant::Codec;
+use flashcomm::sim::{self, Algo};
+use flashcomm::topo::{presets, Topology};
+
+fn main() {
+    let m = 64.0 * 1024.0 * 1024.0;
+    let specs = ["bf16","int8","int6","int5","int4@32","int3@32","int2-sr@32"];
+    for dev in presets::all() {
+        let topo = Topology::new(dev.clone(), 8);
+        print!("{:>6}", dev.name);
+        for s in specs {
+            let c = Codec::parse(s).unwrap();
+            let algo = if dev.is_numa() { Algo::TwoStep } else { Algo::TwoStep };
+            let c2 = if s == "bf16" { Codec::Bf16 } else { c };
+            let algo = if s == "bf16" { Algo::Ring } else { algo };
+            let t = sim::allreduce_time(&topo, algo, &c2, m);
+            print!(" {:>7.2}", sim::algbw_gbps(m, &t));
+        }
+        println!();
+        if dev.is_numa() {
+            for algo in [Algo::Hier, Algo::HierPipelined] {
+                print!("{:>6}", if algo==Algo::Hier {"hier"} else {"hpp"});
+                for s in specs.iter().skip(1) {
+                    let c = Codec::parse(s).unwrap();
+                    let t = sim::allreduce_time(&topo, algo, &c, m);
+                    print!(" {:>7.2}", sim::algbw_gbps(m, &t));
+                }
+                println!();
+            }
+        }
+    }
+    println!("--- all2all h800/h20/a100 ---");
+    for dev in [presets::a100(), presets::h800(), presets::h20()] {
+        let topo = Topology::new(dev.clone(), 8);
+        print!("{:>6}", dev.name);
+        for s in specs {
+            let c = Codec::parse(s).unwrap();
+            let t = flashcomm::sim::all2all::all2all_time(&topo, &c, m);
+            print!(" {:>7.2}", flashcomm::sim::all2all::algbw_gbps(m, &t));
+        }
+        println!();
+    }
+}

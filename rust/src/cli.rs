@@ -1,0 +1,107 @@
+//! Minimal CLI argument parser (no clap in the offline vendor set).
+//!
+//! Grammar: `flashcomm <command> [positional...] [--flag value] [--switch]`.
+//! A flag is a `--name` followed by a value unless it is a known boolean
+//! switch or the next token is another flag.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    pub flags: HashMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                let is_flag_next = it.peek().map(|n| n.starts_with("--")).unwrap_or(true);
+                let value =
+                    if is_flag_next { "true".to_string() } else { it.next().unwrap() };
+                args.flags.insert(name.to_string(), value);
+            } else if args.command.is_empty() {
+                args.command = tok;
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn flag_or(&self, name: &str, default: &str) -> String {
+        self.flag(name).unwrap_or(default).to_string()
+    }
+
+    pub fn flag_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name} {v}")),
+        }
+    }
+
+    pub fn flag_bool(&self, name: &str) -> bool {
+        matches!(self.flag(name), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn pos(&self, i: usize) -> Result<&str> {
+        self.positional
+            .get(i)
+            .map(|s| s.as_str())
+            .with_context(|| format!("missing positional argument {i}"))
+    }
+
+    pub fn require(&self, name: &str) -> Result<&str> {
+        match self.flag(name) {
+            Some(v) => Ok(v),
+            None => bail!("missing required flag --{name}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn command_positionals_flags() {
+        let a = parse("table 9 --size 64M --quick --codec int5");
+        assert_eq!(a.command, "table");
+        assert_eq!(a.pos(0).unwrap(), "9");
+        assert_eq!(a.flag("size"), Some("64M"));
+        assert!(a.flag_bool("quick"));
+        assert_eq!(a.flag("codec"), Some("int5"));
+        assert!(a.pos(1).is_err());
+    }
+
+    #[test]
+    fn trailing_switch_is_boolean() {
+        let a = parse("train --steps 100 --verbose");
+        assert_eq!(a.flag_usize("steps", 0).unwrap(), 100);
+        assert!(a.flag_bool("verbose"));
+        assert!(!a.flag_bool("missing"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("eval");
+        assert_eq!(a.flag_or("config", "tiny"), "tiny");
+        assert_eq!(a.flag_usize("steps", 7).unwrap(), 7);
+        assert!(a.require("codec").is_err());
+    }
+}

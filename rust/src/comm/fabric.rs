@@ -1,0 +1,201 @@
+//! In-process communication fabric.
+//!
+//! Stands in for the GPU interconnect: N ranks run as threads, exchanging
+//! byte payloads over per-pair channels. The collectives built on top move
+//! *real encoded bytes* through it — quantize → bit-split pack → transfer →
+//! unpack → dequantize → reduce — so functional behaviour (numerics, wire
+//! format, QDQ placement) is exactly the paper's; only the physical
+//! transport differs (see DESIGN.md §2). Per-link-class byte counters let
+//! tests verify the Table 5 volume accounting against the closed forms.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+use crate::topo::Topology;
+
+/// Byte counters, split by link class (Table 5 columns).
+#[derive(Debug, Default)]
+pub struct ByteCounters {
+    /// All bytes that crossed any link.
+    pub total: AtomicU64,
+    /// Bytes that crossed the NUMA bridge (src and dst in different groups).
+    pub cross_numa: AtomicU64,
+    /// Number of point-to-point messages.
+    pub messages: AtomicU64,
+}
+
+impl ByteCounters {
+    pub fn total_bytes(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    pub fn cross_numa_bytes(&self) -> u64 {
+        self.cross_numa.load(Ordering::Relaxed)
+    }
+
+    pub fn message_count(&self) -> u64 {
+        self.messages.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        self.total.store(0, Ordering::Relaxed);
+        self.cross_numa.store(0, Ordering::Relaxed);
+        self.messages.store(0, Ordering::Relaxed);
+    }
+}
+
+/// One rank's endpoint into the fabric.
+pub struct RankHandle {
+    pub rank: usize,
+    pub n: usize,
+    topo: Topology,
+    tx: Vec<Sender<Vec<u8>>>,
+    rx: Vec<Receiver<Vec<u8>>>,
+    counters: Arc<ByteCounters>,
+}
+
+impl RankHandle {
+    /// Send a payload to `dst` (non-blocking; channels are unbounded).
+    pub fn send(&self, dst: usize, bytes: Vec<u8>) {
+        assert_ne!(dst, self.rank, "self-send is a local copy, not a transfer");
+        self.counters.total.fetch_add(bytes.len() as u64, Ordering::Relaxed);
+        self.counters.messages.fetch_add(1, Ordering::Relaxed);
+        if self.topo.numa_groups > 1 && self.topo.group_of(self.rank) != self.topo.group_of(dst) {
+            self.counters.cross_numa.fetch_add(bytes.len() as u64, Ordering::Relaxed);
+        }
+        self.tx[dst].send(bytes).expect("peer hung up");
+    }
+
+    /// Block until a payload from `src` arrives.
+    pub fn recv(&self, src: usize) -> Vec<u8> {
+        assert_ne!(src, self.rank);
+        self.rx[src].recv().expect("peer hung up")
+    }
+
+    /// The node topology this fabric models.
+    pub fn topo(&self) -> &Topology {
+        &self.topo
+    }
+
+    /// Shared byte counters (same instance across all ranks).
+    pub fn counters(&self) -> &ByteCounters {
+        &self.counters
+    }
+}
+
+/// Build a fabric over `topo` and run `f` once per rank, each on its own
+/// thread. Returns the per-rank results in rank order, plus the counters.
+pub fn run_ranks<R, F>(topo: &Topology, f: F) -> (Vec<R>, Arc<ByteCounters>)
+where
+    R: Send,
+    F: Fn(RankHandle) -> R + Sync,
+{
+    let n = topo.n_gpus;
+    let counters = Arc::new(ByteCounters::default());
+    // chan[s][d]: sender for s->d kept by s; receiver kept by d.
+    let mut senders: Vec<Vec<Option<Sender<Vec<u8>>>>> = (0..n).map(|_| Vec::new()).collect();
+    let mut receivers: Vec<Vec<Option<Receiver<Vec<u8>>>>> =
+        (0..n).map(|_| (0..n).map(|_| None).collect()).collect();
+    for s in 0..n {
+        for d in 0..n {
+            let (tx, rx) = channel();
+            senders[s].push(Some(tx));
+            receivers[d][s] = Some(rx);
+        }
+    }
+    let mut handles = Vec::with_capacity(n);
+    for (rank, rxs) in receivers.into_iter().enumerate() {
+        let tx: Vec<Sender<Vec<u8>>> =
+            (0..n).map(|d| senders[rank][d].take().unwrap()).collect();
+        let rx: Vec<Receiver<Vec<u8>>> = rxs
+            .into_iter()
+            .enumerate()
+            .map(|(s, r)| r.unwrap_or_else(|| panic!("missing channel {s}->{rank}")))
+            .collect();
+        handles.push(RankHandle {
+            rank,
+            n,
+            topo: topo.clone(),
+            tx,
+            rx,
+            counters: counters.clone(),
+        });
+    }
+    let results = std::thread::scope(|scope| {
+        let mut joins = Vec::with_capacity(n);
+        for h in handles {
+            let f = &f;
+            joins.push(scope.spawn(move || f(h)));
+        }
+        joins.into_iter().map(|j| j.join().expect("rank panicked")).collect::<Vec<R>>()
+    });
+    (results, counters)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topo::{presets, Topology};
+
+    fn l40x8() -> Topology {
+        Topology::new(presets::l40(), 8)
+    }
+
+    #[test]
+    fn pairwise_exchange_delivers() {
+        let topo = Topology::new(presets::h800(), 4);
+        let (results, _) = run_ranks(&topo, |h| {
+            // Everyone sends its rank byte to everyone.
+            for d in 0..h.n {
+                if d != h.rank {
+                    h.send(d, vec![h.rank as u8]);
+                }
+            }
+            let mut got = Vec::new();
+            for s in 0..h.n {
+                if s != h.rank {
+                    got.push(h.recv(s)[0]);
+                }
+            }
+            got
+        });
+        assert_eq!(results[0], vec![1, 2, 3]);
+        assert_eq!(results[3], vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn counters_track_total_and_cross_numa() {
+        let topo = l40x8();
+        let (_, counters) = run_ranks(&topo, |h| {
+            // One 100-byte message to the bridge peer (cross) and one to an
+            // intra-group neighbour.
+            let peer = h.topo().bridge_peer(h.rank);
+            h.send(peer, vec![0u8; 100]);
+            let _ = h.recv(peer);
+            let g = h.topo().group_members(h.rank);
+            let neighbour = if h.rank + 1 < g.end { h.rank + 1 } else { g.start };
+            h.send(neighbour, vec![0u8; 10]);
+            let _ = h.recv(if h.rank > g.start { h.rank - 1 } else { g.end - 1 });
+        });
+        assert_eq!(counters.total_bytes(), 8 * 110);
+        assert_eq!(counters.cross_numa_bytes(), 8 * 100);
+        assert_eq!(counters.message_count(), 16);
+    }
+
+    #[test]
+    fn messages_from_same_peer_arrive_in_order() {
+        let topo = Topology::new(presets::h800(), 2);
+        let (results, _) = run_ranks(&topo, |h| {
+            if h.rank == 0 {
+                for i in 0..100u8 {
+                    h.send(1, vec![i]);
+                }
+                Vec::new()
+            } else {
+                (0..100).map(|_| h.recv(0)[0]).collect::<Vec<u8>>()
+            }
+        });
+        assert_eq!(results[1], (0..100).collect::<Vec<u8>>());
+    }
+}

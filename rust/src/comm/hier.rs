@@ -1,0 +1,165 @@
+//! Hierarchical two-step AllReduce for NUMA nodes (Figs. 6–7).
+//!
+//! Three stages, each quantized with the fused codec:
+//!
+//! 1. **Partial reduce-scatter inside each NUMA group** — rank `g·s + j`
+//!    collects and reduces chunk `j` from its group peers over PCIe.
+//! 2. **Cross-NUMA reduction** — each rank exchanges its partial chunk with
+//!    its bridge peer (`rank ± s`) and reduces, so both sides hold the full
+//!    sum of their chunk. Only M/s per rank crosses the bridge — the 3×
+//!    cross-NUMA saving of Table 5.
+//! 3. **Partial all-gather inside each NUMA group** — the reduced chunks
+//!    circulate over PCIe again.
+//!
+//! Ranks in the two groups see identical results because the stage-2
+//! exchange is symmetric and stage-3 redistributes the same payloads.
+
+use super::{chunk_range, encode};
+use crate::comm::fabric::RankHandle;
+use crate::quant::{Codec, CodecBuffers};
+
+/// In-place hierarchical AllReduce. Requires a 2-NUMA-group topology.
+pub fn allreduce(h: &RankHandle, data: &mut [f32], codec: &Codec) {
+    let topo = h.topo().clone();
+    assert_eq!(topo.numa_groups, 2, "hierarchical AllReduce needs 2 NUMA groups");
+    let s = topo.group_size();
+    let group = topo.group_members(h.rank);
+    let j = h.rank - group.start; // index within the group
+    let mut bufs = CodecBuffers::default();
+
+    // Stage 1 — partial reduce-scatter within the NUMA group.
+    for peer_j in 0..s {
+        let peer = group.start + peer_j;
+        if peer != h.rank {
+            let r = chunk_range(data.len(), s, peer_j);
+            h.send(peer, encode(codec, &data[r], &mut bufs));
+        }
+    }
+    let own = chunk_range(data.len(), s, j);
+    let mut acc: Vec<f32> = data[own.clone()].to_vec();
+    for peer_j in 0..s {
+        let peer = group.start + peer_j;
+        if peer != h.rank {
+            let wire = h.recv(peer);
+            Codec::decode_sum_with(&wire, &mut bufs, &mut acc).expect("hier RS decode");
+        }
+    }
+
+    // Stage 2 — cross-NUMA reduction with the bridge peer. Both sides sum
+    // the *decoded* images of both partials in group order, so the two
+    // groups end bit-identical despite the lossy wire.
+    let peer = topo.bridge_peer(h.rank);
+    let wire_mine = encode(codec, &acc, &mut bufs);
+    h.send(peer, wire_mine.clone());
+    let wire_peer = h.recv(peer);
+    let (first, second) =
+        if h.rank < peer { (&wire_mine, &wire_peer) } else { (&wire_peer, &wire_mine) };
+    acc.iter_mut().for_each(|x| *x = 0.0);
+    Codec::decode_sum_with(first, &mut bufs, &mut acc).expect("hier bridge decode");
+    Codec::decode_sum_with(second, &mut bufs, &mut acc).expect("hier bridge decode");
+
+    // Stage 3 — partial all-gather within the NUMA group.
+    let wire = encode(codec, &acc, &mut bufs);
+    for peer_j in 0..s {
+        let p = group.start + peer_j;
+        if p != h.rank {
+            h.send(p, wire.clone());
+        }
+    }
+    Codec::decode_with(&wire, &mut bufs, &mut data[own]).expect("self decode");
+    for peer_j in 0..s {
+        let p = group.start + peer_j;
+        if p != h.rank {
+            let wire = h.recv(p);
+            let r = chunk_range(data.len(), s, peer_j);
+            Codec::decode_with(&wire, &mut bufs, &mut data[r]).expect("hier AG decode");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::fabric::run_ranks;
+    use crate::comm::testutil::harness;
+    use crate::quant::Codec;
+    use crate::topo::{presets, Topology};
+    use crate::util::stats::sqnr_db;
+
+    #[test]
+    fn matches_serial_sum() {
+        let topo = Topology::new(presets::l40(), 8);
+        for (spec, min_db) in [("bf16", 35.0), ("int8", 26.0), ("int5", 14.0), ("int2-sr@32", 5.0)]
+        {
+            let codec = Codec::parse(spec).unwrap();
+            let (results, expected) = harness(&topo, 3000, &codec, allreduce);
+            for r in &results {
+                assert_eq!(r, &results[0], "{spec}: all 8 ranks (both groups) agree");
+            }
+            let s = sqnr_db(&expected, &results[0]);
+            assert!(s > min_db, "{spec}: SQNR {s} dB");
+        }
+    }
+
+    #[test]
+    fn agrees_with_twostep_quality() {
+        // Hier has 3 QDQ rounds vs two-step's 2: a small, bounded quality
+        // cost (the price of the 4x cross-NUMA volume saving).
+        let topo = Topology::new(presets::l40(), 8);
+        let codec = Codec::parse("int4@32").unwrap();
+        let (hier_r, expected) = harness(&topo, 8192, &codec, allreduce);
+        let (two_r, _) = harness(&topo, 8192, &codec, super::super::twostep::allreduce);
+        let hier_s = sqnr_db(&expected, &hier_r[0]);
+        let two_s = sqnr_db(&expected, &two_r[0]);
+        assert!(hier_s > two_s - 4.5, "hier {hier_s} dB vs two-step {two_s} dB");
+        assert!(hier_s < two_s + 1.0, "hier cannot beat two-step");
+    }
+
+    #[test]
+    fn cross_numa_volume_is_2m_measured() {
+        // The fabric measures the *physical* floor: M/s per rank in each
+        // bridge direction = 2M total. Table 5's "M" counts the reduction
+        // direction only (the paper's accounting) — see sim::volume.
+        let topo = Topology::new(presets::l40(), 8);
+        let len = 4096usize;
+        let inputs: Vec<f32> = (0..len).map(|i| i as f32 * 0.5).collect();
+        let ir = &inputs;
+        let (_, counters) = run_ranks(&topo, |h| {
+            let mut data = ir.clone();
+            allreduce(&h, &mut data, &Codec::Bf16);
+        });
+        let m = 2.0 * len as f64;
+        let cross = counters.cross_numa_bytes() as f64;
+        assert!((cross / (2.0 * m) - 1.0).abs() < 0.05, "cross {cross} vs 2M {}", 2.0 * m);
+        // 4x less than two-step's measured 8M (4M per direction).
+        let total = counters.total_bytes() as f64;
+        assert!((total / (14.0 * m) - 1.0).abs() < 0.05, "total {total}");
+    }
+
+    #[test]
+    fn cross_numa_far_below_twostep() {
+        let topo = Topology::new(presets::l40(), 8);
+        let len = 4096usize;
+        let run = |f: &(dyn Fn(&RankHandle, &mut [f32], &Codec) + Sync)| {
+            let inputs: Vec<f32> = (0..len).map(|i| i as f32).collect();
+            let ir = &inputs;
+            let (_, c) = run_ranks(&topo, |h| {
+                let mut data = ir.clone();
+                f(&h, &mut data, &Codec::Bf16);
+            });
+            c.cross_numa_bytes() as f64
+        };
+        let two = run(&super::super::twostep::allreduce);
+        let hier = run(&allreduce);
+        // Table 5: 4M vs M per direction — a 4x saving either way you count.
+        assert!((two / hier - 4.0).abs() < 0.2, "two-step {two} vs hier {hier}");
+    }
+
+    #[test]
+    fn works_on_4_gpus() {
+        let topo = Topology::new(presets::l40(), 4); // 2 groups of 2
+        let (results, expected) = harness(&topo, 513, &Codec::parse("int8").unwrap(), allreduce);
+        let s = sqnr_db(&expected, &results[0]);
+        assert!(s > 24.0, "SQNR {s}");
+    }
+}

@@ -1,0 +1,175 @@
+//! Pipelined hierarchical AllReduce (Fig. 8).
+//!
+//! The payload is split into micro-chunks; each flows through the three
+//! hierarchical stages (intra RS → cross-NUMA reduce → intra AG) with the
+//! sends of later micro-chunks issued before earlier ones finish — the
+//! software-pipelining structure that lets PCIe and NUMA-bridge traffic
+//! overlap on real hardware. In this in-process fabric the overlap has no
+//! wall-clock meaning (timing lives in [`crate::sim`]); what this module
+//! establishes is *functional equivalence*: the chunked, reordered schedule
+//! produces exactly the same bytes and numerics as the serial execution.
+
+use super::{chunk_range, encode, hier};
+use crate::comm::fabric::RankHandle;
+use crate::quant::{Codec, CodecBuffers};
+
+/// Default micro-chunk count (the sim's Fig. 8 sweep peaks around 8).
+pub const DEFAULT_CHUNKS: usize = 8;
+
+/// In-place pipelined hierarchical AllReduce with `chunks` micro-chunks.
+pub fn allreduce_chunked(h: &RankHandle, data: &mut [f32], codec: &Codec, chunks: usize) {
+    let topo = h.topo().clone();
+    assert_eq!(topo.numa_groups, 2, "pipelined hier needs 2 NUMA groups");
+    let s = topo.group_size();
+    let group = topo.group_members(h.rank);
+    let j = h.rank - group.start;
+    let mut bufs = CodecBuffers::default();
+    let k = chunks.max(1);
+
+    // Phase A: issue ALL intra-RS sends for every micro-chunk up front —
+    // this is what fills the PCIe bus while the bridge works (Fig. 8).
+    for c in 0..k {
+        let mr = chunk_range(data.len(), k, c);
+        let micro = &data[mr.clone()];
+        for peer_j in 0..s {
+            let peer = group.start + peer_j;
+            if peer != h.rank {
+                let r = chunk_range(micro.len(), s, peer_j);
+                h.send(peer, encode(codec, &micro[r], &mut bufs));
+            }
+        }
+    }
+
+    // Phase B: per micro-chunk: reduce own sub-chunk, run the bridge
+    // exchange, then all-gather — chunk c's bridge work happens while
+    // chunk c+1's RS payloads are already in flight.
+    let mut reduced: Vec<Vec<f32>> = Vec::with_capacity(k);
+    for c in 0..k {
+        let mr = chunk_range(data.len(), k, c);
+        let micro = &data[mr.clone()];
+        let own = chunk_range(micro.len(), s, j);
+        let mut acc: Vec<f32> = micro[own].to_vec();
+        for peer_j in 0..s {
+            let peer = group.start + peer_j;
+            if peer != h.rank {
+                let wire = h.recv(peer);
+                Codec::decode_sum_with(&wire, &mut bufs, &mut acc).expect("pp RS decode");
+            }
+        }
+        // Bridge exchange for this micro-chunk (symmetric QDQ in group
+        // order — see hier.rs — so both NUMA groups stay bit-identical).
+        let peer = topo.bridge_peer(h.rank);
+        let wire_mine = encode(codec, &acc, &mut bufs);
+        h.send(peer, wire_mine.clone());
+        let wire_peer = h.recv(peer);
+        let (first, second) =
+            if h.rank < peer { (&wire_mine, &wire_peer) } else { (&wire_peer, &wire_mine) };
+        acc.iter_mut().for_each(|x| *x = 0.0);
+        Codec::decode_sum_with(first, &mut bufs, &mut acc).expect("pp bridge decode");
+        Codec::decode_sum_with(second, &mut bufs, &mut acc).expect("pp bridge decode");
+        reduced.push(acc);
+    }
+
+    // Phase C: all-gather every micro-chunk's reduced sub-chunk.
+    for (c, acc) in reduced.iter().enumerate() {
+        let wire = encode(codec, acc, &mut bufs);
+        for peer_j in 0..s {
+            let p = group.start + peer_j;
+            if p != h.rank {
+                h.send(p, wire.clone());
+            }
+        }
+        let mr = chunk_range(data.len(), k, c);
+        let own = chunk_range(mr.len(), s, j);
+        let own_abs = mr.start + own.start..mr.start + own.end;
+        Codec::decode_with(&wire, &mut bufs, &mut data[own_abs]).expect("pp self decode");
+    }
+    for c in 0..k {
+        let mr = chunk_range(data.len(), k, c);
+        for peer_j in 0..s {
+            let p = group.start + peer_j;
+            if p != h.rank {
+                let wire = h.recv(p);
+                let r = chunk_range(mr.len(), s, peer_j);
+                let abs = mr.start + r.start..mr.start + r.end;
+                Codec::decode_with(&wire, &mut bufs, &mut data[abs]).expect("pp AG decode");
+            }
+        }
+    }
+}
+
+/// Pipelined hierarchical AllReduce with the default micro-chunk count.
+pub fn allreduce(h: &RankHandle, data: &mut [f32], codec: &Codec) {
+    allreduce_chunked(h, data, codec, DEFAULT_CHUNKS);
+}
+
+/// Reference: serial hierarchical execution of the same chunking (used by
+/// the equivalence test and the Fig. 8 "serial" bar).
+pub fn allreduce_serial_chunked(h: &RankHandle, data: &mut [f32], codec: &Codec, chunks: usize) {
+    let k = chunks.max(1);
+    for c in 0..k {
+        let mr = chunk_range(data.len(), k, c);
+        let mut micro = data[mr.clone()].to_vec();
+        hier::allreduce(h, &mut micro, codec);
+        data[mr].copy_from_slice(&micro);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::testutil::harness;
+    use crate::quant::Codec;
+    use crate::topo::{presets, Topology};
+    use crate::util::stats::sqnr_db;
+
+    #[test]
+    fn matches_serial_hier_bit_exactly() {
+        // Pipelining must not change the numerics at all.
+        let topo = Topology::new(presets::l40(), 8);
+        for spec in ["bf16", "int8", "int4@32", "int2-sr@32!"] {
+            let codec = Codec::parse(spec).unwrap();
+            let (pp, _) =
+                harness(&topo, 4096, &codec, |h, d, c| allreduce_chunked(h, d, c, 8));
+            let (serial, _) =
+                harness(&topo, 4096, &codec, |h, d, c| allreduce_serial_chunked(h, d, c, 8));
+            assert_eq!(pp[0], serial[0], "{spec}: pipelined != serial");
+        }
+    }
+
+    #[test]
+    fn correct_for_any_chunk_count() {
+        let topo = Topology::new(presets::l40(), 8);
+        let codec = Codec::parse("int5").unwrap();
+        for k in [1usize, 2, 3, 8, 16] {
+            let (results, expected) =
+                harness(&topo, 2500, &codec, |h, d, c| allreduce_chunked(h, d, c, k));
+            for r in &results {
+                assert_eq!(r, &results[0], "k={k}");
+            }
+            let s = sqnr_db(&expected, &results[0]);
+            assert!(s > 14.0, "k={k}: SQNR {s}");
+        }
+    }
+
+    #[test]
+    fn micro_chunking_grouping_overhead_is_bounded() {
+        // Finer chunks mean more (smaller) quantization groups on the wire;
+        // wire volume must not grow by more than the per-chunk meta bound.
+        let topo = Topology::new(presets::l40(), 8);
+        let codec = Codec::parse("int4@32").unwrap();
+        let len = 8192usize;
+        let measure = |k: usize| {
+            let inputs: Vec<f32> = (0..len).map(|i| (i as f32).sin()).collect();
+            let ir = &inputs;
+            let (_, c) = crate::comm::fabric::run_ranks(&topo, |h| {
+                let mut d = ir.clone();
+                allreduce_chunked(&h, &mut d, &codec, k);
+            });
+            c.total_bytes()
+        };
+        let v1 = measure(1) as f64;
+        let v16 = measure(16) as f64;
+        assert!(v16 / v1 < 1.30, "chunking overhead {}", v16 / v1);
+    }
+}

@@ -1,0 +1,126 @@
+//! Ring AllReduce — the NCCL baseline.
+//!
+//! Classic 2(N−1)-step ring: N−1 reduce-scatter hops, N−1 all-gather hops.
+//! The paper runs this in BF16 only; passing a quantizing codec is kept as
+//! an *ablation* that demonstrates why the paper's two-step exists — each
+//! hop re-quantizes the partial sum, so quantization error compounds N−1
+//! times (see `quantized_ring_error_compounds` below).
+
+use super::{chunk_range, encode};
+use crate::comm::fabric::RankHandle;
+use crate::quant::{Codec, CodecBuffers};
+
+/// In-place ring AllReduce of `data` across all ranks.
+///
+/// Every rank ends with (a wire-precision image of) the element-wise sum.
+pub fn allreduce(h: &RankHandle, data: &mut [f32], codec: &Codec) {
+    let n = h.n;
+    if n == 1 {
+        return;
+    }
+    let mut bufs = CodecBuffers::default();
+    let next = (h.rank + 1) % n;
+    let prev = (h.rank + n - 1) % n;
+    let mut scratch = vec![0f32; chunk_range(data.len(), n, 0).len()];
+
+    // Reduce-scatter: after N-1 hops, rank owns the full sum of chunk
+    // (rank + 1) % n.
+    for step in 0..n - 1 {
+        let send_c = (h.rank + n - step) % n;
+        let recv_c = (h.rank + n - step - 1) % n;
+        let sr = chunk_range(data.len(), n, send_c);
+        h.send(next, encode(codec, &data[sr], &mut bufs));
+        let wire = h.recv(prev);
+        let rr = chunk_range(data.len(), n, recv_c);
+        scratch.resize(rr.len(), 0.0);
+        scratch.copy_from_slice(&data[rr.clone()]);
+        Codec::decode_sum_with(&wire, &mut bufs, &mut scratch).expect("ring RS decode");
+        data[rr].copy_from_slice(&scratch);
+    }
+
+    // All-gather: circulate the reduced chunks. The owned chunk also takes
+    // one QDQ so every rank ends bit-identical.
+    let own = (h.rank + 1) % n;
+    {
+        let or = chunk_range(data.len(), n, own);
+        let wire = encode(codec, &data[or.clone()], &mut bufs);
+        let mut tmp = vec![0f32; or.len()];
+        Codec::decode_with(&wire, &mut bufs, &mut tmp).expect("self QDQ");
+        data[or].copy_from_slice(&tmp);
+    }
+    for step in 0..n - 1 {
+        let send_c = (h.rank + 1 + n - step) % n;
+        let recv_c = (h.rank + n - step) % n;
+        let sr = chunk_range(data.len(), n, send_c);
+        h.send(next, encode(codec, &data[sr], &mut bufs));
+        let wire = h.recv(prev);
+        let rr = chunk_range(data.len(), n, recv_c);
+        scratch.resize(rr.len(), 0.0);
+        Codec::decode_with(&wire, &mut bufs, &mut scratch).expect("ring AG decode");
+        data[rr].copy_from_slice(&scratch);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::fabric::run_ranks;
+    use crate::comm::testutil::harness;
+    use crate::quant::Codec;
+    use crate::topo::{presets, Topology};
+    use crate::util::stats::sqnr_db;
+
+    #[test]
+    fn bf16_ring_matches_serial_sum() {
+        let topo = Topology::new(presets::h800(), 8);
+        let (results, expected) = harness(&topo, 1000, &Codec::Bf16, allreduce);
+        for r in &results {
+            assert_eq!(r, &results[0], "all ranks must agree bitwise");
+        }
+        let s = sqnr_db(&expected, &results[0]);
+        assert!(s > 35.0, "bf16 ring SQNR {s} dB");
+    }
+
+    #[test]
+    fn works_for_odd_sizes_and_small_n() {
+        for n in [2usize, 3, 5] {
+            let topo = Topology::new(presets::h800(), n);
+            let (results, expected) = harness(&topo, 97, &Codec::Bf16, allreduce);
+            let s = sqnr_db(&expected, &results[0]);
+            assert!(s > 30.0, "n={n} SQNR {s}");
+        }
+    }
+
+    #[test]
+    fn quantized_ring_error_compounds() {
+        // The ablation: INT8 on the ring loses badly to INT8 on the
+        // two-step because every hop re-quantizes the partial sum.
+        let topo = Topology::new(presets::h800(), 8);
+        let codec = Codec::parse("int8").unwrap();
+        let (ring_r, expected) = harness(&topo, 4096, &codec, allreduce);
+        let (two_r, _) = harness(&topo, 4096, &codec, super::super::twostep::allreduce);
+        let ring_s = sqnr_db(&expected, &ring_r[0]);
+        let two_s = sqnr_db(&expected, &two_r[0]);
+        assert!(
+            two_s > ring_s + 3.0,
+            "two-step {two_s} dB must beat quantized ring {ring_s} dB"
+        );
+    }
+
+    #[test]
+    fn table5_ring_volume() {
+        // NCCL row of Table 5: total 2(N-1)M = 14M.
+        let topo = Topology::new(presets::l40(), 8);
+        let len = 4096usize;
+        let m = (Codec::Bf16.wire_len(len / 8)) as f64 * 8.0; // per-GPU wire bytes
+        let inputs: Vec<f32> = vec![1.0; len];
+        let ir = &inputs;
+        let (_, counters) = run_ranks(&topo, |h| {
+            let mut data = ir.clone();
+            allreduce(&h, &mut data, &Codec::Bf16);
+        });
+        let total = counters.total_bytes() as f64;
+        // 8 ranks each send 14 chunks of ~M/8 wire bytes.
+        assert!((total / (14.0 * m) - 1.0).abs() < 0.05, "total {total} vs 14M {}", 14.0 * m);
+    }
+}

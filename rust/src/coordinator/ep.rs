@@ -1,0 +1,272 @@
+//! Expert-parallel MoE engine with quantized dispatch (Tables 2, 8).
+//!
+//! For MoE layers the engine mirrors a real EP serving stack: the router
+//! piece produces expert logits + the normalized activations, rust makes
+//! the top-1 routing decision, groups tokens per expert under a fixed
+//! capacity (tokens over capacity fall back to the residual path, exactly
+//! like capacity-factor MoE serving), sends the *dispatch volume through
+//! the wire codec* (DeepSeek-V3 quantizes dispatch only), runs the expert
+//! HLO on the padded batch, and combines at BF16.
+//!
+//! Attention and the dense-FFN layers reuse the TP boundary machinery.
+
+use anyhow::{ensure, Result};
+
+use crate::coordinator::tp::{allreduce_partials, CollectiveStyle};
+use crate::model::{shard_param, Batch, ModelConfig, Weights};
+use crate::quant::{Codec, CodecBuffers};
+use crate::runtime::{tokens_literal, Runtime, Tensor};
+
+/// The EP engine (dense layers run TP; MoE layers run quantized dispatch).
+pub struct MoeEngine {
+    pub rt: Runtime,
+    pub cfg: ModelConfig,
+    /// Wire codec for the TP AllReduce boundaries (attention / dense MLP).
+    pub ar_codec: Codec,
+    /// Wire codec for the MoE dispatch volume.
+    pub dispatch_codec: Codec,
+    embed: xla::Literal,
+    head: Vec<xla::Literal>,
+    attn: Vec<Vec<Vec<xla::Literal>>>,  // [layer][shard]
+    mlp: Vec<Vec<Vec<xla::Literal>>>,   // [layer][shard] (dense layers)
+    router: Vec<Vec<xla::Literal>>,     // [layer] (ln2_g, ln2_b, router)
+    experts: Vec<Vec<(xla::Literal, xla::Literal)>>, // [layer][expert] (w1, w2)
+    bufs: CodecBuffers,
+    /// Tokens dropped to the residual path by the capacity limit (stat).
+    pub dropped_tokens: usize,
+    /// Total dispatch wire bytes (what the All2All would carry).
+    pub dispatch_wire_bytes: u64,
+}
+
+impl MoeEngine {
+    pub fn new(
+        rt: Runtime,
+        cfg: ModelConfig,
+        weights: &Weights,
+        ar_codec: Codec,
+        dispatch_codec: Codec,
+    ) -> Result<MoeEngine> {
+        ensure!(cfg.n_experts > 0, "config {} has no experts", cfg.name);
+        let tp = cfg.tp;
+        let embed = weights.get("embed")?.to_literal()?;
+        let head = vec![
+            weights.get("lnf_g")?.to_literal()?,
+            weights.get("lnf_b")?.to_literal()?,
+            weights.get("embed")?.to_literal()?,
+        ];
+        let mut attn = Vec::new();
+        let mut mlp = Vec::new();
+        let mut router = Vec::new();
+        let mut experts = Vec::new();
+        for l in 0..cfg.n_layers {
+            let get = |b: &str| weights.get(&format!("l{l}.{b}"));
+            let mut a_sh = Vec::new();
+            for k in 0..tp {
+                let mut args = vec![get("ln1_g")?.to_literal()?, get("ln1_b")?.to_literal()?];
+                for w in ["wq", "wk", "wv", "wo"] {
+                    let name = format!("l{l}.{w}");
+                    args.push(shard_param(&name, weights.get(&name)?, tp, k).to_literal()?);
+                }
+                a_sh.push(args);
+            }
+            attn.push(a_sh);
+            if cfg.is_moe_layer(l) {
+                mlp.push(Vec::new());
+                router.push(vec![
+                    get("ln2_g")?.to_literal()?,
+                    get("ln2_b")?.to_literal()?,
+                    get("router")?.to_literal()?,
+                ]);
+                let we1 = get("we1")?;
+                let we2 = get("we2")?;
+                let (e, d, f) = (cfg.n_experts, cfg.d_model, cfg.d_expert);
+                ensure!(we1.shape == vec![e, d, f], "we1 shape {:?}", we1.shape);
+                let mut per_expert = Vec::with_capacity(e);
+                for x in 0..e {
+                    let w1 = Tensor::new(vec![d, f], we1.data[x * d * f..(x + 1) * d * f].to_vec());
+                    let w2 = Tensor::new(vec![f, d], we2.data[x * d * f..(x + 1) * d * f].to_vec());
+                    per_expert.push((w1.to_literal()?, w2.to_literal()?));
+                }
+                experts.push(per_expert);
+            } else {
+                let mut m_sh = Vec::new();
+                for k in 0..tp {
+                    let mut args =
+                        vec![get("ln2_g")?.to_literal()?, get("ln2_b")?.to_literal()?];
+                    for w in ["w1", "w2"] {
+                        let name = format!("l{l}.{w}");
+                        args.push(shard_param(&name, weights.get(&name)?, tp, k).to_literal()?);
+                    }
+                    m_sh.push(args);
+                }
+                mlp.push(m_sh);
+                router.push(Vec::new());
+                experts.push(Vec::new());
+            }
+        }
+        Ok(MoeEngine {
+            rt,
+            cfg,
+            ar_codec,
+            dispatch_codec,
+            embed,
+            head,
+            attn,
+            mlp,
+            router,
+            experts,
+            bufs: CodecBuffers::default(),
+            dropped_tokens: 0,
+            dispatch_wire_bytes: 0,
+        })
+    }
+
+    fn tp_boundary(&mut self, piece: &str, h: &Tensor, shards: usize, layer: usize, is_mlp: bool) -> Result<Tensor> {
+        let h_lit = h.to_literal()?;
+        let mut partials = Vec::with_capacity(shards);
+        for k in 0..shards {
+            let shard_args =
+                if is_mlp { &self.mlp[layer][k] } else { &self.attn[layer][k] };
+            let mut args: Vec<xla::Literal> = vec![h_lit.clone()];
+            args.extend(shard_args.iter().cloned());
+            let out = self.rt.execute_t(piece, &args)?;
+            partials.push(out.into_iter().next().unwrap().data);
+        }
+        let reduced = allreduce_partials(
+            &mut partials,
+            &self.ar_codec,
+            CollectiveStyle::TwoStep,
+            &mut self.bufs,
+        );
+        let mut out = h.clone();
+        for (o, r) in out.data.iter_mut().zip(&reduced) {
+            *o += *r;
+        }
+        Ok(out)
+    }
+
+    /// The MoE FFN: route -> quantized dispatch -> expert HLO -> combine.
+    fn moe_layer(&mut self, h: &Tensor, layer: usize) -> Result<Tensor> {
+        let cfg = self.cfg.clone();
+        let d = cfg.d_model;
+        let e = cfg.n_experts;
+        let cap = cfg.capacity;
+        // Router piece: logits [B,S,E] + normalized activations [B,S,D].
+        let mut args = vec![h.to_literal()?];
+        args.extend(self.router[layer].iter().cloned());
+        let out = self.rt.execute_t(&cfg.art("router"), &args)?;
+        let (logits, xnorm) = (&out[0], &out[1]);
+        let n_tokens = h.len() / d;
+
+        // Top-1 routing + softmax gate, host-side (the router's job).
+        let mut assignment = vec![0usize; n_tokens];
+        let mut gate = vec![0f32; n_tokens];
+        for t in 0..n_tokens {
+            let row = &logits.data[t * e..(t + 1) * e];
+            let (mut best, mut best_v) = (0, f32::NEG_INFINITY);
+            let mut denom = 0f32;
+            let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            for (i, &v) in row.iter().enumerate() {
+                denom += (v - max).exp();
+                if v > best_v {
+                    best_v = v;
+                    best = i;
+                }
+            }
+            assignment[t] = best;
+            gate[t] = (best_v - max).exp() / denom;
+        }
+
+        // Group tokens per expert under the capacity limit.
+        let mut groups: Vec<Vec<usize>> = vec![Vec::new(); e];
+        for (t, &x) in assignment.iter().enumerate() {
+            if groups[x].len() < cap {
+                groups[x].push(t);
+            } else {
+                self.dropped_tokens += 1;
+            }
+        }
+
+        // Dispatch: quantize each expert's token batch (the All2All wire),
+        // run the expert on the padded capacity batch, combine at BF16.
+        let mut mixed = vec![0f32; h.len()];
+        for (x, toks) in groups.iter().enumerate() {
+            if toks.is_empty() {
+                continue;
+            }
+            let mut payload = vec![0f32; toks.len() * d];
+            for (row, &t) in toks.iter().enumerate() {
+                payload[row * d..(row + 1) * d]
+                    .copy_from_slice(&xnorm.data[t * d..(t + 1) * d]);
+            }
+            self.dispatch_wire_bytes += self.dispatch_codec.wire_len(payload.len()) as u64;
+            self.dispatch_codec.qdq(&mut payload, &mut self.bufs); // the wire
+            let mut padded = vec![0f32; cap * d];
+            padded[..payload.len()].copy_from_slice(&payload);
+            let (w1, w2) = &self.experts[layer][x];
+            let xin = Tensor::new(vec![cap, d], padded);
+            let out = self
+                .rt
+                .execute_t(&cfg.art("expert"), &[xin.to_literal()?, w1.clone(), w2.clone()])?;
+            let mut y = out.into_iter().next().unwrap().data;
+            // Combine direction stays BF16 (dispatch-only quantization).
+            Codec::Bf16.qdq(&mut y[..toks.len() * d], &mut self.bufs);
+            for (row, &t) in toks.iter().enumerate() {
+                let g = gate[t];
+                for i in 0..d {
+                    mixed[t * d + i] = g * y[row * d + i];
+                }
+            }
+        }
+        let mut out = h.clone();
+        for (o, m) in out.data.iter_mut().zip(&mixed) {
+            *o += *m;
+        }
+        Ok(out)
+    }
+
+    /// Full forward to the pre-head hidden state.
+    pub fn forward_h(&mut self, batch: &Batch) -> Result<Tensor> {
+        let cfg = self.cfg.clone();
+        let toks = tokens_literal(&batch.tokens, &[batch.batch, batch.seq])?;
+        let mut h = self
+            .rt
+            .execute_t(&cfg.art("embed"), &[toks, self.embed.clone()])?
+            .into_iter()
+            .next()
+            .unwrap();
+        let attn_piece = cfg.art(&format!("attn_part_tp{}", cfg.tp));
+        let mlp_piece = cfg.art(&format!("mlp_part_tp{}", cfg.tp));
+        for l in 0..cfg.n_layers {
+            h = self.tp_boundary(&attn_piece, &h, cfg.tp, l, false)?;
+            if cfg.is_moe_layer(l) {
+                h = self.moe_layer(&h, l)?;
+            } else {
+                h = self.tp_boundary(&mlp_piece, &h, cfg.tp, l, true)?;
+            }
+        }
+        Ok(h)
+    }
+
+    /// Perplexity over eval batches (same head as the TP engine).
+    pub fn perplexity(&mut self, batches: &[Batch]) -> Result<f64> {
+        let cfg = self.cfg.clone();
+        let mut sum = 0f64;
+        let mut count = 0usize;
+        for b in batches {
+            let h = self.forward_h(b)?;
+            let tgts = tokens_literal(&b.targets, &[b.batch, b.seq])?;
+            let mut args = vec![h.to_literal()?];
+            args.extend(self.head.iter().cloned());
+            args.push(tgts);
+            let out = self.rt.execute_t(&cfg.art("head_nll"), &args)?;
+            sum += out[0].data.iter().map(|&x| x as f64).sum::<f64>();
+            count += out[0].len();
+        }
+        Ok((sum / count as f64).exp())
+    }
+
+    pub fn set_dispatch_codec(&mut self, codec: Codec) {
+        self.dispatch_codec = codec;
+    }
+}

@@ -1,0 +1,14 @@
+//! L3 coordination: the request-path orchestration the paper's system
+//! needs — a TP inference engine with quantized AllReduce between HLO
+//! pieces, a DP trainer with quantized gradient collectives, an EP
+//! dispatcher with quantized All2All dispatch, and the TTFT model.
+
+pub mod ep;
+pub mod pretrain;
+pub mod tp;
+pub mod trainer;
+pub mod ttft;
+
+pub use ep::MoeEngine;
+pub use tp::{allreduce_partials, CollectiveStyle, TpEngine};
+pub use trainer::{StepRecord, TrainOptions, Trainer};

@@ -1,0 +1,64 @@
+//! Shared "get me a trained model" helper.
+//!
+//! The paper's accuracy tables evaluate *pretrained* checkpoints; here the
+//! checkpoint comes from our own rust trainer (DESIGN.md §2). This helper
+//! trains the named config on its corpus for `steps` optimizer steps and
+//! caches the result under `checkpoints/`, so the accuracy harnesses and
+//! integration tests share one model instead of retraining.
+
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::trainer::{TrainOptions, Trainer};
+use crate::model::{Corpus, ModelConfig, Sampler, Weights};
+use crate::quant::Codec;
+use crate::runtime::{default_artifacts_dir, Runtime};
+use crate::sim::Algo;
+
+/// Directory for rust-side checkpoints (created on demand).
+pub fn checkpoints_dir() -> PathBuf {
+    let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("checkpoints");
+    std::fs::create_dir_all(&d).ok();
+    d
+}
+
+/// Load the cached checkpoint for `(config, steps)` or train it now with
+/// BF16 gradient collectives. Returns (config, weights, final train loss).
+pub fn ensure_trained(config: &str, steps: usize) -> Result<(ModelConfig, Weights, f32)> {
+    let rt = Runtime::open(default_artifacts_dir())?;
+    let cfg = ModelConfig::from_record(rt.manifest.config(config)?)?;
+    let path = checkpoints_dir().join(format!("{config}_s{steps}.bin"));
+    if path.exists() {
+        let w = Weights::load(&path)?;
+        return Ok((cfg, w, f32::NAN));
+    }
+    let init = Weights::load(default_artifacts_dir().join(format!("{config}_init_weights.bin")))
+        .context("init weights; run `make artifacts`")?;
+    let corpus =
+        Corpus::load(default_artifacts_dir().join(format!("corpus_v{}.bin", cfg.vocab)))?;
+    let (train, _) = corpus.split();
+    let mut sampler = Sampler::new(train, 0xF1A5);
+    let mut trainer = Trainer::new(rt, cfg.clone(), &init)?;
+    let opts = TrainOptions {
+        steps,
+        dp: 2,
+        codec: Codec::Bf16,
+        algo: Algo::TwoStep,
+        log_every: 20,
+        ..Default::default()
+    };
+    eprintln!("[pretrain] training {config} for {steps} steps (cached at {path:?})");
+    let recs = trainer.train(&mut sampler, &[], &opts)?;
+    let loss = recs.last().map(|r| r.loss).unwrap_or(f32::NAN);
+    let w = trainer.export_weights()?;
+    w.save(&path)?;
+    Ok((cfg, w, loss))
+}
+
+/// Default pretraining depth for the accuracy harnesses: enough for the
+/// model to have real structure (loss well below ln V) while staying
+/// tractable on one CPU core.
+pub const ACCURACY_STEPS: usize = 120;
+/// Cheaper depth used by the integration tests.
+pub const TEST_STEPS: usize = 40;

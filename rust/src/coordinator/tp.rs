@@ -1,0 +1,305 @@
+//! Tensor-parallel inference engine.
+//!
+//! Executes the per-shard HLO pieces (`attn_part`, `mlp_part`) and runs the
+//! paper's quantized AllReduce on the partial outputs between pieces —
+//! the real wire transformation (quantize → sum → re-quantize), applied to
+//! the actual activation bytes. Residual adds happen host-side in rust,
+//! exactly where a serving engine would fuse them.
+
+use anyhow::{ensure, Result};
+
+use crate::model::{shard_param, Batch, ModelConfig, Weights};
+use crate::quant::{Codec, CodecBuffers};
+use crate::runtime::{tokens_literal, Runtime, Tensor};
+
+/// How the AllReduce chains its QDQ steps (the accuracy-relevant part of
+/// the collective choice; timing lives in `sim`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CollectiveStyle {
+    /// Flash-Comm two-step: Q each partial, sum, Q the result (2 QDQs).
+    TwoStep,
+    /// Hierarchical: Q partials per NUMA group, Q the group sums across the
+    /// bridge, Q the total for the all-gather (3 QDQs).
+    Hier,
+}
+
+/// Apply the collective's QDQ chain to per-shard partial sums, in place on
+/// the first buffer. Mirrors `comm::twostep` / `comm::hier` numerics.
+pub fn allreduce_partials(
+    partials: &mut [Vec<f32>],
+    codec: &Codec,
+    style: CollectiveStyle,
+    bufs: &mut CodecBuffers,
+) -> Vec<f32> {
+    let n = partials.len();
+    let len = partials[0].len();
+    match style {
+        CollectiveStyle::TwoStep => {
+            let mut acc = vec![0f32; len];
+            for p in partials.iter_mut() {
+                codec.qdq(p, bufs);
+                for (a, x) in acc.iter_mut().zip(p.iter()) {
+                    *a += *x;
+                }
+            }
+            codec.qdq(&mut acc, bufs);
+            acc
+        }
+        CollectiveStyle::Hier => {
+            let half = n.div_ceil(2);
+            let mut total = vec![0f32; len];
+            for group in [0..half, half..n] {
+                if group.is_empty() {
+                    continue;
+                }
+                let mut acc = vec![0f32; len];
+                for p in partials[group].iter_mut() {
+                    codec.qdq(p, bufs);
+                    for (a, x) in acc.iter_mut().zip(p.iter()) {
+                        *a += *x;
+                    }
+                }
+                codec.qdq(&mut acc, bufs); // bridge hop
+                for (t, x) in total.iter_mut().zip(&acc) {
+                    *t += *x;
+                }
+            }
+            codec.qdq(&mut total, bufs); // all-gather hop
+            total
+        }
+    }
+}
+
+/// Per-layer, per-shard weight literals, prepared once.
+struct LayerShards {
+    /// [shard] -> (ln1_g, ln1_b, wq, wk, wv, wo)
+    attn: Vec<Vec<xla::Literal>>,
+    /// [shard] -> (ln2_g, ln2_b, w1, w2); empty for MoE layers.
+    mlp: Vec<Vec<xla::Literal>>,
+}
+
+/// The TP engine: owns the runtime and the sharded weights.
+pub struct TpEngine {
+    pub rt: Runtime,
+    pub cfg: ModelConfig,
+    pub codec: Codec,
+    pub style: CollectiveStyle,
+    embed: xla::Literal,
+    head: Vec<xla::Literal>, // lnf_g, lnf_b, embed (tied)
+    layers: Vec<LayerShards>,
+    bufs: CodecBuffers,
+    /// If set, `last_partial` captures the raw (pre-QDQ) partial sum of
+    /// this layer's MLP AllReduce — the Fig. 4 distribution.
+    pub capture_layer: Option<usize>,
+    pub last_partial: Vec<f32>,
+}
+
+impl TpEngine {
+    /// Build from full weights, slicing TP shards per the python layout.
+    pub fn new(
+        rt: Runtime,
+        cfg: ModelConfig,
+        weights: &Weights,
+        codec: Codec,
+        style: CollectiveStyle,
+    ) -> Result<TpEngine> {
+        ensure!(cfg.n_heads % cfg.tp == 0, "heads {} % tp {}", cfg.n_heads, cfg.tp);
+        let tp = cfg.tp;
+        let embed = weights.get("embed")?.to_literal()?;
+        let head = vec![
+            weights.get("lnf_g")?.to_literal()?,
+            weights.get("lnf_b")?.to_literal()?,
+            weights.get("embed")?.to_literal()?,
+        ];
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for l in 0..cfg.n_layers {
+            let g = |b: &str| -> Result<Tensor> { Ok(weights.get(&format!("l{l}.{b}"))?.clone()) };
+            let mut attn = Vec::with_capacity(tp);
+            for k in 0..tp {
+                let mut args = Vec::new();
+                args.push(g("ln1_g")?.to_literal()?);
+                args.push(g("ln1_b")?.to_literal()?);
+                for w in ["wq", "wk", "wv", "wo"] {
+                    let name = format!("l{l}.{w}");
+                    let sh = shard_param(&name, weights.get(&name)?, tp, k);
+                    args.push(sh.to_literal()?);
+                }
+                attn.push(args);
+            }
+            let mut mlp = Vec::new();
+            if !cfg.is_moe_layer(l) {
+                for k in 0..tp {
+                    let mut args = Vec::new();
+                    args.push(g("ln2_g")?.to_literal()?);
+                    args.push(g("ln2_b")?.to_literal()?);
+                    for w in ["w1", "w2"] {
+                        let name = format!("l{l}.{w}");
+                        let sh = shard_param(&name, weights.get(&name)?, tp, k);
+                        args.push(sh.to_literal()?);
+                    }
+                    mlp.push(args);
+                }
+            }
+            layers.push(LayerShards { attn, mlp });
+        }
+        Ok(TpEngine {
+            rt,
+            cfg,
+            codec,
+            style,
+            embed,
+            head,
+            layers,
+            bufs: CodecBuffers::default(),
+            capture_layer: None,
+            last_partial: Vec::new(),
+        })
+    }
+
+    /// Execute one boundary: run `piece` per shard, AllReduce the partials,
+    /// residual-add into `h`.
+    fn boundary(
+        &mut self,
+        piece: &str,
+        h: &Tensor,
+        layer: usize,
+        is_mlp: bool,
+    ) -> Result<Tensor> {
+        let tp = self.cfg.tp;
+        let h_lit = h.to_literal()?;
+        let mut partials: Vec<Vec<f32>> = Vec::with_capacity(tp);
+        for k in 0..tp {
+            let shard_args = if is_mlp {
+                &self.layers[layer].mlp[k]
+            } else {
+                &self.layers[layer].attn[k]
+            };
+            let mut args: Vec<xla::Literal> = vec![h_lit.clone()];
+            args.extend(shard_args.iter().cloned());
+            let out = self.rt.execute_t(piece, &args)?;
+            partials.push(out.into_iter().next().unwrap().data);
+        }
+        if is_mlp && self.capture_layer == Some(layer) {
+            // Fig. 4: the raw communicated volume (sum of shard partials).
+            let mut raw = vec![0f32; partials[0].len()];
+            for p in &partials {
+                for (r, x) in raw.iter_mut().zip(p) {
+                    *r += *x;
+                }
+            }
+            self.last_partial = raw;
+        }
+        let reduced = allreduce_partials(&mut partials, &self.codec, self.style, &mut self.bufs);
+        let mut out = h.clone();
+        for (o, r) in out.data.iter_mut().zip(&reduced) {
+            *o += *r;
+        }
+        Ok(out)
+    }
+
+    /// Full forward to the pre-head hidden state.
+    pub fn forward_h(&mut self, batch: &Batch) -> Result<Tensor> {
+        let cfg = self.cfg.clone();
+        ensure!(
+            batch.batch == cfg.eval_batch && batch.seq == cfg.seq_len,
+            "batch {}x{} doesn't match lowered shapes {}x{}",
+            batch.batch,
+            batch.seq,
+            cfg.eval_batch,
+            cfg.seq_len
+        );
+        let toks = tokens_literal(&batch.tokens, &[batch.batch, batch.seq])?;
+        let embed_name = cfg.art("embed");
+        let mut h = self
+            .rt
+            .execute_t(&embed_name, &[toks, self.embed.clone()])?
+            .into_iter()
+            .next()
+            .unwrap();
+        let attn_piece = cfg.art(&format!("attn_part_tp{}", cfg.tp));
+        let mlp_piece = cfg.art(&format!("mlp_part_tp{}", cfg.tp));
+        for l in 0..cfg.n_layers {
+            h = self.boundary(&attn_piece, &h, l, false)?;
+            ensure!(!cfg.is_moe_layer(l), "TP engine is dense-only; use MoeEngine");
+            h = self.boundary(&mlp_piece, &h, l, true)?;
+        }
+        Ok(h)
+    }
+
+    /// Mean next-token NLL over a batch (communication-quantized model).
+    pub fn eval_nll(&mut self, batch: &Batch) -> Result<(f64, usize)> {
+        let h = self.forward_h(batch)?;
+        let tgts = tokens_literal(&batch.targets, &[batch.batch, batch.seq])?;
+        let name = self.cfg.art("head_nll");
+        let mut args = vec![h.to_literal()?];
+        args.extend(self.head.iter().cloned());
+        args.push(tgts);
+        let out = self.rt.execute_t(&name, &args)?;
+        let nll = &out[0];
+        Ok((nll.data.iter().map(|&x| x as f64).sum(), nll.len()))
+    }
+
+    /// Perplexity over a set of eval batches.
+    pub fn perplexity(&mut self, batches: &[Batch]) -> Result<f64> {
+        let mut sum = 0.0;
+        let mut count = 0usize;
+        for b in batches {
+            let (s, c) = self.eval_nll(b)?;
+            sum += s;
+            count += c;
+        }
+        Ok((sum / count as f64).exp())
+    }
+
+    /// Swap the codec (for sweep harnesses) without resharding weights.
+    pub fn set_codec(&mut self, codec: Codec, style: CollectiveStyle) {
+        self.codec = codec;
+        self.style = style;
+    }
+
+    /// The head-piece weight literals (lnf_g, lnf_b, tied embedding) — used
+    /// by harnesses that run alternative head artifacts (e.g. `head_acc`).
+    pub fn head_literals(&self) -> Vec<xla::Literal> {
+        self.head.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allreduce_partials_twostep_matches_manual() {
+        let mut rng = crate::util::Prng::new(5);
+        let mut parts: Vec<Vec<f32>> = (0..4)
+            .map(|_| {
+                let mut v = vec![0f32; 256];
+                rng.fill_normal(&mut v, 0.0, 1.0);
+                v
+            })
+            .collect();
+        let exact: Vec<f32> =
+            (0..256).map(|i| parts.iter().map(|p| p[i]).sum::<f32>()).collect();
+        let mut bufs = CodecBuffers::default();
+        let codec = Codec::parse("int8@32").unwrap();
+        let out =
+            allreduce_partials(&mut parts.clone(), &codec, CollectiveStyle::TwoStep, &mut bufs);
+        let s = crate::util::stats::sqnr_db(&exact, &out);
+        assert!(s > 25.0, "SQNR {s}");
+        // Hier applies one extra QDQ: slightly worse, still close.
+        let out_h = allreduce_partials(&mut parts, &codec, CollectiveStyle::Hier, &mut bufs);
+        let sh = crate::util::stats::sqnr_db(&exact, &out_h);
+        assert!(sh > 20.0 && sh <= s + 1.0, "hier {sh} vs two-step {s}");
+    }
+
+    #[test]
+    fn bf16_passthrough_is_near_exact() {
+        let mut parts = vec![vec![1.5f32; 64], vec![-0.25f32; 64]];
+        let mut bufs = CodecBuffers::default();
+        let out =
+            allreduce_partials(&mut parts, &Codec::Bf16, CollectiveStyle::TwoStep, &mut bufs);
+        for &x in &out {
+            assert!((x - 1.25).abs() < 0.01, "{x}");
+        }
+    }
+}

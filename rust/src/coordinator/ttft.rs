@@ -1,0 +1,111 @@
+//! Time-to-first-token model (Fig. 2).
+//!
+//! TTFT for a TP=N prefill is compute + communication:
+//!   - compute: `2 · P · T / N` FLOPs per device over the device's usable
+//!     BF16 throughput (CUDA-core figure from Table 6 scaled by an MFU
+//!     factor — prefill GEMMs on these parts run well under peak),
+//!   - communication: 2 AllReduces per layer of the `B·S·D` BF16 hidden
+//!     state, timed by the calibrated simulator with the chosen codec and
+//!     algorithm (hier+PP on the PCIe box, two-step on NVLink).
+//!
+//! Reproduced quantity: the *relative* TTFT across precisions per device
+//! (the paper's 2.28x on L40, ~1.2-1.3x on A100/H800, ~1x on H20).
+
+use crate::quant::Codec;
+use crate::sim::{self, Algo};
+use crate::topo::Topology;
+
+/// Workload: a dense LLM prefill (defaults ≈ Llama-3-8B, TP=8).
+#[derive(Debug, Clone)]
+pub struct PrefillWorkload {
+    pub n_params: f64,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub batch: usize,
+    pub prompt_len: usize,
+}
+
+impl Default for PrefillWorkload {
+    fn default() -> Self {
+        // Llama-3-8B: 32 layers, d=4096.
+        PrefillWorkload {
+            n_params: 8.03e9,
+            n_layers: 32,
+            d_model: 4096,
+            batch: 1,
+            prompt_len: 1024,
+        }
+    }
+}
+
+/// Model FLOPs utilization a prefill realizes on the tensor cores.
+const PREFILL_MFU: f64 = 0.40;
+
+/// TTFT (seconds) for a workload on a topology with a given codec.
+pub fn ttft_s(topo: &Topology, wl: &PrefillWorkload, codec: &Codec, algo: Algo) -> f64 {
+    let tokens = (wl.batch * wl.prompt_len) as f64;
+    let flops = 2.0 * wl.n_params * tokens / topo.n_gpus as f64;
+    let compute = flops / (topo.spec.tensor_bf16_tflops * 1e12 * PREFILL_MFU);
+    // Two AllReduces per layer over the bf16 hidden state.
+    let m_bytes = tokens * wl.d_model as f64 * 2.0;
+    let per_ar = sim::allreduce_time(topo, algo, codec, m_bytes).total();
+    compute + 2.0 * wl.n_layers as f64 * per_ar
+}
+
+/// The algorithm Fig. 2 uses per device class: hier+PP on PCIe, two-step
+/// on NVLink (ring for the BF16/NCCL baseline).
+pub fn algo_for(topo: &Topology, codec: &Codec) -> Algo {
+    if matches!(codec, Codec::Bf16) {
+        Algo::Ring
+    } else if topo.spec.is_numa() {
+        Algo::HierPipelined
+    } else {
+        Algo::TwoStep
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topo::presets;
+
+    fn speedup(spec: crate::topo::GpuSpec, codec: &str) -> f64 {
+        let topo = Topology::new(spec, 8);
+        let wl = PrefillWorkload::default();
+        let base = ttft_s(&topo, &wl, &Codec::Bf16, algo_for(&topo, &Codec::Bf16));
+        let c = Codec::parse(codec).unwrap();
+        let t = ttft_s(&topo, &wl, &c, algo_for(&topo, &c));
+        base / t
+    }
+
+    #[test]
+    fn l40_gains_most_fig2() {
+        // Paper: 2.28x TTFT gain on L40 with low-bit + hier + PP.
+        let s = speedup(presets::l40(), "int4@32");
+        assert!((1.6..=3.2).contains(&s), "L40 speedup {s}");
+    }
+
+    #[test]
+    fn nvlink_gains_modest() {
+        let a100 = speedup(presets::a100(), "int5");
+        let h800 = speedup(presets::h800(), "int5");
+        assert!((1.02..=1.6).contains(&a100), "A100 {a100}");
+        assert!((1.02..=1.7).contains(&h800), "H800 {h800}");
+    }
+
+    #[test]
+    fn h20_no_benefit_fig2() {
+        // Paper: "we don't find any benefit using low-bit on H20".
+        let s = speedup(presets::h20(), "int4@32");
+        assert!(s < 1.15, "H20 speedup {s} should be ~none");
+    }
+
+    #[test]
+    fn compute_dominates_on_strong_gpus() {
+        let topo = Topology::new(presets::h800(), 8);
+        let wl = PrefillWorkload::default();
+        let t = ttft_s(&topo, &wl, &Codec::Bf16, Algo::Ring);
+        // 8B model, 1k tokens, 8 GPUs: sub-second prefill.
+        assert!(t > 0.01 && t < 2.0, "H800 TTFT {t}");
+    }
+}

@@ -1,0 +1,232 @@
+//! Figure regenerators (paper Figs. 1, 2, 4, 5, 8). ASCII renderings —
+//! the series/values are what matters for the shape comparison.
+
+use anyhow::Result;
+
+use super::{f2, print_table};
+use crate::cli::Args;
+use crate::coordinator::pretrain::{ensure_trained, ACCURACY_STEPS, TEST_STEPS};
+use crate::coordinator::ttft::{algo_for, ttft_s, PrefillWorkload};
+use crate::coordinator::{CollectiveStyle, TpEngine};
+use crate::model::{Corpus, Sampler};
+use crate::quant::Codec;
+use crate::runtime::{default_artifacts_dir, Runtime};
+use crate::sim;
+use crate::topo::{presets, Topology};
+use crate::util::stats::{ascii_histogram, DistSummary};
+
+/// Fig. 1: perplexity across bit widths for the quantization schemes.
+pub fn figure1(args: &Args) -> Result<()> {
+    let steps = if args.flag_bool("quick") { TEST_STEPS } else { ACCURACY_STEPS };
+    let (cfg, weights, _) = ensure_trained("tiny", steps)?;
+    let corpus =
+        Corpus::load(default_artifacts_dir().join(format!("corpus_v{}.bin", cfg.vocab)))?;
+    let (_, eval) = corpus.split();
+    let n = args.flag_usize("batches", if args.flag_bool("quick") { 2 } else { 4 })?;
+    let batches: Vec<_> =
+        Sampler::eval_batches(eval, cfg.eval_batch, cfg.seq_len).into_iter().take(n).collect();
+    let rt = Runtime::open(default_artifacts_dir())?;
+    let mut engine =
+        TpEngine::new(rt, cfg, &weights, Codec::Bf16, CollectiveStyle::TwoStep)?;
+    let baseline = engine.perplexity(&batches)?;
+
+    let schemes: &[(&str, &str)] = &[
+        ("RTN gs128", "int{b}@128"),
+        ("RTN gs32", "int{b}@32"),
+        ("SpikeReserve gs32", "int{b}-sr@32"),
+        ("Hadamard gs32", "int{b}-had@32"),
+        ("LogFMT gs32", "int{b}-log@32"),
+    ];
+    let bits = [8usize, 6, 5, 4, 3, 2];
+    let mut rows = Vec::new();
+    for (label, fmt) in schemes {
+        let mut row = vec![label.to_string()];
+        for b in bits {
+            let spec = fmt.replace("{b}", &b.to_string());
+            engine.set_codec(Codec::parse(&spec)?, CollectiveStyle::TwoStep);
+            let ppl = engine.perplexity(&batches)?;
+            eprintln!("  [fig1] {spec}: {ppl:.3}");
+            row.push(f2(ppl));
+        }
+        rows.push(row);
+    }
+    print_table(
+        &format!("Figure 1: perplexity vs comm bitwidth (BF16 baseline {})", f2(baseline)),
+        &["scheme", "INT8", "INT6", "INT5", "INT4", "INT3", "INT2"],
+        &rows,
+    );
+    println!("shape check (paper Fig.1): SR flattest to 2-bit; RTN ok to 3; others collapse");
+    Ok(())
+}
+
+/// Fig. 2: TTFT across devices and precisions (TP=8 prefill).
+pub fn figure2(args: &Args) -> Result<()> {
+    let wl = PrefillWorkload {
+        prompt_len: args.flag_usize("prompt", 1024)?,
+        batch: args.flag_usize("batch", 1)?,
+        ..Default::default()
+    };
+    let specs = ["bf16", "int8", "int6", "int5", "int4@32", "int2-sr@32"];
+    let mut rows = Vec::new();
+    for dev in presets::all() {
+        let name = dev.name;
+        let topo = Topology::new(dev, 8);
+        let base = ttft_s(&topo, &wl, &Codec::Bf16, algo_for(&topo, &Codec::Bf16));
+        let mut row = vec![name.to_string()];
+        for s in specs {
+            let codec = if s == "bf16" { Codec::Bf16 } else { Codec::parse(s)? };
+            let t = ttft_s(&topo, &wl, &codec, algo_for(&topo, &codec));
+            row.push(format!("{:.1}ms ({:.2}x)", t * 1e3, base / t));
+        }
+        rows.push(row);
+    }
+    print_table(
+        &format!(
+            "Figure 2: Llama-3-8B-class TTFT, TP=8, prompt {} (model; see DESIGN §2)",
+            wl.prompt_len
+        ),
+        &["GPU", "BF16", "INT8", "INT6", "INT5", "INT4", "INT2_SR"],
+        &rows,
+    );
+    println!("paper: 2.28x best on L40, 1.24x A100, 1.3x H800, ~1x H20");
+    Ok(())
+}
+
+/// Fig. 4: activation distribution before/after spike removal.
+pub fn figure4(args: &Args) -> Result<()> {
+    let steps = if args.flag_bool("quick") { TEST_STEPS } else { ACCURACY_STEPS };
+    let (cfg, weights, _) = ensure_trained("tiny", steps)?;
+    let corpus =
+        Corpus::load(default_artifacts_dir().join(format!("corpus_v{}.bin", cfg.vocab)))?;
+    let (_, eval) = corpus.split();
+    let batch = &Sampler::eval_batches(eval, cfg.eval_batch, cfg.seq_len)[0];
+    let rt = Runtime::open(default_artifacts_dir())?;
+    let last = cfg.n_layers - 1;
+    let mut engine =
+        TpEngine::new(rt, cfg, &weights, Codec::Bf16, CollectiveStyle::TwoStep)?;
+    engine.capture_layer = Some(last);
+    engine.forward_h(batch)?;
+    let acts = engine.last_partial.clone();
+    anyhow::ensure!(!acts.is_empty(), "no activations captured");
+
+    // Remove per-group (gs=32) min/max — exactly what spike reserving does.
+    let mut body = Vec::with_capacity(acts.len());
+    for g in acts.chunks(32) {
+        let mn = g.iter().cloned().fold(f32::INFINITY, f32::min);
+        let mx = g.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let (mut took_min, mut took_max) = (false, false);
+        for &x in g {
+            if !took_min && x == mn {
+                took_min = true;
+            } else if !took_max && x == mx {
+                took_max = true;
+            } else {
+                body.push(x);
+            }
+        }
+    }
+    let before = DistSummary::of(&acts);
+    let after = DistSummary::of(&body);
+    println!("== Figure 4: last-layer MLP partial-sum distribution (the AllReduce volume) ==");
+    println!("before spike removal:  range {:>9.3}  std {:>7.3}  kurtosis {:>7.2}",
+             before.range(), before.std, before.kurtosis);
+    println!("{}", ascii_histogram(&acts, 15, 48));
+    println!("after removing per-group (gs=32) min/max spikes:");
+    println!("                       range {:>9.3}  std {:>7.3}  kurtosis {:>7.2}",
+             after.range(), after.std, after.kurtosis);
+    println!("{}", ascii_histogram(&body, 15, 48));
+    println!(
+        "shape check: range shrinks {:.1}x (paper: 'numerical range substantially narrowed')",
+        before.range() / after.range()
+    );
+    // Reference: the same operation on heavy-tailed activations with
+    // massive outliers (the regime of the paper's Llama-3-8B down_proj —
+    // our 4M-param model's activations are benign by comparison).
+    let mut rng = crate::util::Prng::new(4);
+    let mut heavy = vec![0f32; 1 << 15];
+    rng.fill_activations(&mut heavy, 1.0);
+    let hb = DistSummary::of(&heavy);
+    let mut hbody = Vec::new();
+    for g in heavy.chunks(32) {
+        let mn = g.iter().cloned().fold(f32::INFINITY, f32::min);
+        let mx = g.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let (mut tm, mut tx) = (false, false);
+        for &x in g {
+            if !tm && x == mn { tm = true; } else if !tx && x == mx { tx = true; }
+            else { hbody.push(x); }
+        }
+    }
+    let ha = DistSummary::of(&hbody);
+    println!(
+        "reference (heavy-tailed synthetic, massive-outlier regime): {:.1}x shrink, \
+         kurtosis {:.1} -> {:.1}",
+        hb.range() / ha.range(), hb.kurtosis, ha.kurtosis
+    );
+    Ok(())
+}
+
+/// Fig. 5: the INT2+SR wire layout for one group.
+pub fn figure5() -> Result<()> {
+    let mut rng = crate::util::Prng::new(2024);
+    let mut data = vec![0f32; 32];
+    rng.fill_normal(&mut data, 0.0, 1.0);
+    data[5] = -8.5; // min spike
+    data[19] = 12.25; // max spike
+    let codec = Codec::parse("int2-sr@32!")?;
+    let wire = codec.encode(&data);
+    let s = codec.sections(32);
+    println!("== Figure 5: spike reserving wire layout, one group of 32, INT2 ==");
+    println!("input: 32 f32 values with spikes at [5]=-8.5 (min) and [19]=12.25 (max)");
+    println!("wire ({} bytes total):", wire.len());
+    let mut off = 0;
+    for (label, len) in [
+        ("header", s.header),
+        ("quantized 2-bit codes (bit-split plane)", s.quantized),
+        ("scale_int(i8) + zero-point(i8)", s.scale_zero),
+        ("spikes: min,max (bf16) + min_idx,max_idx (u8)", s.spikes),
+    ] {
+        let bytes: Vec<String> =
+            wire[off..off + len].iter().map(|b| format!("{b:02x}")).collect();
+        println!("  [{off:>3}..{:>3}] {label:<45} {}", off + len, bytes.join(" "));
+        off += len;
+    }
+    let mut out = vec![0f32; 32];
+    Codec::decode(&wire, &mut out)?;
+    println!("decoded spikes: out[5] = {} out[19] = {}", out[5], out[19]);
+    println!("(indices stored as u8, scale via Eq.1 scale_int = floor(log2(scale)*10))");
+    Ok(())
+}
+
+/// Fig. 8: serial vs pipelined hierarchical execution timeline.
+pub fn figure8(args: &Args) -> Result<()> {
+    let m = super::tables::parse_size(&args.flag_or("size", "64M"))?;
+    let codec = Codec::parse(&args.flag_or("codec", "int5"))?;
+    let topo = Topology::new(presets::l40(), 8);
+    let chunks = args.flag_usize("chunks", 8)?;
+    let tasks = sim::allreduce::hier_pipeline_tasks(&topo, &codec, m, chunks);
+    let sched = sim::events::schedule(&tasks, 3);
+    let serial = sim::events::serial_makespan(&tasks);
+    println!("== Figure 8: hierarchical AllReduce, serial vs pipelined ({} chunks) ==", chunks);
+    println!("resources: R/A = intra-NUMA PCIe (RS/AG), X = NUMA bridge, q/d = comm SMs");
+    println!("{}", sim::events::render_timeline(&tasks, &sched, &["PCIe", "bridge", "SMs"], 72));
+    println!("serial makespan:    {:.3} ms", serial * 1e3);
+    println!("pipelined makespan: {:.3} ms  ({:.1}% time saving)",
+             sched.makespan * 1e3, (1.0 - sched.makespan / serial) * 100.0);
+    for (r, b) in sched.bubbles.iter().enumerate() {
+        println!("  bubbles on {}: {:.3} ms", ["PCIe", "bridge", "SMs"][r], b * 1e3);
+    }
+    println!("\nchunk-count sweep (algorithmic bandwidth, GB/s):");
+    let mut rows = Vec::new();
+    for k in [1usize, 2, 4, 8, 16, 32] {
+        let tasks = sim::allreduce::hier_pipeline_tasks(&topo, &codec, m, k);
+        let sched = sim::events::schedule(&tasks, 3);
+        rows.push(vec![
+            k.to_string(),
+            f2(m / sched.makespan / 1e9),
+            f2((1.0 - sched.makespan / sim::events::serial_makespan(&tasks)) * 100.0),
+        ]);
+    }
+    print_table("", &["chunks", "algbw GB/s", "saving %"], &rows);
+    println!("paper: 'measured to have up to 20% time saving'");
+    Ok(())
+}

@@ -1,0 +1,118 @@
+//! Experiment harness: regenerates every table and figure of the paper's
+//! evaluation section (see DESIGN.md §5 for the index). Each entry prints
+//! our measured/simulated values next to the paper's reference numbers —
+//! the acceptance criterion is *shape* (ordering, approximate factors,
+//! crossovers), not absolute equality, since the substrate is a simulator
+//! and the models are our own trained checkpoints.
+
+pub mod figures;
+pub mod tables;
+
+use anyhow::{bail, Result};
+
+use crate::cli::Args;
+
+/// Dispatch `flashcomm table <n>`.
+pub fn run_table(args: &Args) -> Result<()> {
+    match args.pos(0)? {
+        "1" => tables::table1(args),
+        "2" => tables::table2(args),
+        "3" => tables::table3(args),
+        "4" => tables::table4(),
+        "5" => tables::table5(),
+        "6" => tables::table6(),
+        "7" => tables::table7(args),
+        "8" => tables::table8(args),
+        "9" => tables::table9(args),
+        "10" => tables::table10(args),
+        "all" => {
+            for t in ["4", "5", "6", "9", "10", "1", "2", "3", "7", "8"] {
+                let mut a = args.clone();
+                a.positional = vec![t.to_string()];
+                run_table(&a)?;
+                println!();
+            }
+            Ok(())
+        }
+        other => bail!("unknown table '{other}' (1-10 or all)"),
+    }
+}
+
+/// Dispatch `flashcomm figure <n>`.
+pub fn run_figure(args: &Args) -> Result<()> {
+    match args.pos(0)? {
+        "1" => figures::figure1(args),
+        "2" => figures::figure2(args),
+        "4" => figures::figure4(args),
+        "5" => figures::figure5(),
+        "8" => figures::figure8(args),
+        "all" => {
+            for f in ["5", "8", "2", "4", "1"] {
+                let mut a = args.clone();
+                a.positional = vec![f.to_string()];
+                run_figure(&a)?;
+                println!();
+            }
+            Ok(())
+        }
+        other => bail!("unknown figure '{other}' (1, 2, 4, 5, 8 or all)"),
+    }
+}
+
+/// Fixed-width table printer shared by all harnesses.
+pub fn print_table(title: &str, headers: &[&str], rows: &[Vec<String>]) {
+    println!("== {title} ==");
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let line = |cells: &[String]| {
+        let mut s = String::new();
+        for (i, c) in cells.iter().enumerate() {
+            s.push_str(&format!("{:>w$}  ", c, w = widths.get(i).copied().unwrap_or(8)));
+        }
+        s
+    };
+    println!("{}", line(&headers.iter().map(|s| s.to_string()).collect::<Vec<_>>()));
+    println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+    for row in rows {
+        println!("{}", line(row));
+    }
+}
+
+/// Format helper: f64 with sensible precision.
+pub fn f2(x: f64) -> String {
+    if !x.is_finite() {
+        return "-".into();
+    }
+    if x.abs() >= 1000.0 {
+        format!("{:.0}", x)
+    } else {
+        format!("{:.2}", x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_printer_does_not_panic() {
+        print_table(
+            "demo",
+            &["a", "b"],
+            &[vec!["1".into(), "2".into()], vec!["333".into(), "4".into()]],
+        );
+    }
+
+    #[test]
+    fn f2_formats() {
+        assert_eq!(f2(9.666), "9.67");
+        assert_eq!(f2(1234.6), "1235");
+        assert_eq!(f2(f64::INFINITY), "-");
+    }
+}

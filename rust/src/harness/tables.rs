@@ -1,0 +1,446 @@
+//! Table regenerators (paper Tables 1–10). See DESIGN.md §5.
+
+use anyhow::{Context, Result};
+
+use super::{f2, print_table};
+use crate::cli::Args;
+use crate::coordinator::pretrain::{ensure_trained, ACCURACY_STEPS, TEST_STEPS};
+use crate::coordinator::{CollectiveStyle, MoeEngine, TpEngine};
+use crate::model::{Batch, Corpus, Sampler};
+use crate::quant::Codec;
+use crate::runtime::{default_artifacts_dir, tokens_literal, Runtime};
+use crate::sim::{self, Algo};
+use crate::topo::{presets, Topology};
+
+fn steps_for(args: &Args) -> usize {
+    if args.flag_bool("quick") {
+        TEST_STEPS
+    } else {
+        args.flag_usize("steps", ACCURACY_STEPS).unwrap_or(ACCURACY_STEPS)
+    }
+}
+
+fn eval_batches_for(args: &Args, cfg: &crate::model::ModelConfig) -> Result<Vec<Batch>> {
+    let corpus =
+        Corpus::load(default_artifacts_dir().join(format!("corpus_v{}.bin", cfg.vocab)))?;
+    let (_, eval) = corpus.split();
+    let n = args.flag_usize("batches", if args.flag_bool("quick") { 2 } else { 6 })?;
+    Ok(Sampler::eval_batches(eval, cfg.eval_batch, cfg.seq_len).into_iter().take(n).collect())
+}
+
+/// Shared dense perplexity sweep over codecs.
+fn dense_ppl(args: &Args, specs: &[&str]) -> Result<Vec<(String, f64)>> {
+    let (cfg, weights, _) = ensure_trained("tiny", steps_for(args))?;
+    let batches = eval_batches_for(args, &cfg)?;
+    let rt = Runtime::open(default_artifacts_dir())?;
+    let mut engine =
+        TpEngine::new(rt, cfg, &weights, Codec::Bf16, CollectiveStyle::TwoStep)?;
+    let mut out = Vec::new();
+    for spec in specs {
+        let codec =
+            if *spec == "bf16" { Codec::Bf16 } else { Codec::parse(spec)? };
+        engine.set_codec(codec, CollectiveStyle::TwoStep);
+        let ppl = engine.perplexity(&batches)?;
+        eprintln!("  [tp-eval] {spec}: ppl {ppl:.3}");
+        out.push((spec.to_string(), ppl));
+    }
+    Ok(out)
+}
+
+/// Shared MoE dispatch perplexity sweep.
+fn moe_ppl(args: &Args, specs: &[&str]) -> Result<Vec<(String, f64)>> {
+    let (cfg, weights, _) = ensure_trained("moe-tiny", steps_for(args))?;
+    let batches = eval_batches_for(args, &cfg)?;
+    let rt = Runtime::open(default_artifacts_dir())?;
+    let mut engine = MoeEngine::new(rt, cfg, &weights, Codec::Bf16, Codec::Bf16)?;
+    let mut out = Vec::new();
+    for spec in specs {
+        let codec =
+            if *spec == "bf16" { Codec::Bf16 } else { Codec::parse(spec)? };
+        engine.set_dispatch_codec(codec);
+        let ppl = engine.perplexity(&batches)?;
+        eprintln!("  [moe-eval] {spec}: ppl {ppl:.3}");
+        out.push((spec.to_string(), ppl));
+    }
+    Ok(out)
+}
+
+/// Table 1: dense perplexity vs AllReduce RTN bitwidth (gs 128).
+pub fn table1(args: &Args) -> Result<()> {
+    let specs =
+        ["bf16", "int8@128", "int6@128", "int5@128", "int4@128", "int3@128", "int2@128"];
+    let ours = dense_ppl(args, &specs)?;
+    let mut rows = vec![];
+    let mut row = vec!["ours (tiny, trained here)".to_string()];
+    row.extend(ours.iter().map(|(_, p)| f2(*p)));
+    rows.push(row);
+    for (name, vals) in [
+        ("paper Llama-3-8B", ["8.88", "8.89", "8.94", "9.07", "9.67", "13.72", "7e5"]),
+        ("paper Llama-3-70B", ["6.74", "6.74", "6.75", "6.81", "7.05", "8.40", "1e2"]),
+        ("paper Qwen-3-8B", ["13.3", "13.30", "13.33", "13.42", "13.81", "16.04", "3e2"]),
+    ] {
+        rows.push(std::iter::once(name.to_string()).chain(vals.iter().map(|s| s.to_string())).collect());
+    }
+    print_table(
+        "Table 1: C4-style perplexity vs AllReduce RTN bits (gs=128)",
+        &["model", "BF16", "INT8", "INT6", "INT5", "INT4", "INT3", "INT2"],
+        &rows,
+    );
+    println!("shape check: INT8≈INT6≈INT5 ≲ INT4 < INT3 << INT2 (collapse)");
+    Ok(())
+}
+
+/// Table 2: MoE perplexity vs All2All dispatch RTN bitwidth (gs 128).
+pub fn table2(args: &Args) -> Result<()> {
+    let specs =
+        ["bf16", "int8@128", "int6@128", "int5@128", "int4@128", "int3@128", "int2@128"];
+    let ours = moe_ppl(args, &specs)?;
+    let mut rows = vec![];
+    let mut row = vec!["ours (moe-tiny, trained here)".to_string()];
+    row.extend(ours.iter().map(|(_, p)| f2(*p)));
+    rows.push(row);
+    rows.push(vec![
+        "paper Qwen3-30B-A3B".into(),
+        "9.65".into(), "9.65".into(), "9.66".into(), "9.7".into(), "9.88".into(),
+        "10.61".into(), "19.71".into(),
+    ]);
+    rows.push(vec![
+        "paper Qwen1.5-MoE-A2.7B".into(),
+        "9.3".into(), "9.3".into(), "9.31".into(), "9.35".into(), "9.5".into(),
+        "10.62".into(), "30.54".into(),
+    ]);
+    print_table(
+        "Table 2: MoE perplexity vs All2All dispatch RTN bits (gs=128)",
+        &["model", "BF16", "INT8", "INT6", "INT5", "INT4", "INT3", "INT2"],
+        &rows,
+    );
+    println!("shape check: graceful degradation; All2All INT2 does NOT collapse like AllReduce");
+    Ok(())
+}
+
+/// Table 3: RTN vs Hadamard vs LogFMT vs SpikeReserving at gs 32.
+pub fn table3(args: &Args) -> Result<()> {
+    let mut rows = Vec::new();
+    for (label, fmt) in [
+        ("RTN", "int{b}@32"),
+        ("Hadamard", "int{b}-had@32"),
+        ("LogFMT", "int{b}-log@32"),
+        ("SpikeReserving", "int{b}-sr@32"),
+    ] {
+        let specs: Vec<String> =
+            [4, 3, 2].iter().map(|b| fmt.replace("{b}", &b.to_string())).collect();
+        let refs: Vec<&str> = specs.iter().map(|s| s.as_str()).collect();
+        let ours = dense_ppl(args, &refs)?;
+        let mut row = vec![label.to_string()];
+        row.extend(ours.iter().map(|(_, p)| f2(*p)));
+        rows.push(row);
+    }
+    print_table(
+        "Table 3: dense ppl by method, gs=32 (ours, trained tiny)",
+        &["method", "INT4", "INT3", "INT2"],
+        &rows,
+    );
+    println!("paper (Llama-3-8B): RTN 9.2/10.54/40.59  Hadamard 9.18/10.47/91.23");
+    println!("                    LogFMT 9.3/11.53/1e3  SpikeReserving 9.01/9.57/14.39");
+    println!("shape check: SR best at every width; Hadamard/LogFMT collapse at INT2");
+    Ok(())
+}
+
+/// Table 4: spike-reserving memory footprint, BF16 vs integer metadata.
+pub fn table4() -> Result<()> {
+    let n = 4096;
+    let mut rows = Vec::new();
+    for (label, spec) in [("scale (bf16 meta)", "int2-sr@32"), ("scale_int (Eq.1)", "int2-sr@32!")] {
+        let codec = Codec::parse(spec)?;
+        let s = codec.sections(n);
+        rows.push(vec![
+            label.to_string(),
+            (2 * n).to_string(),
+            s.quantized.to_string(),
+            s.scale_zero.to_string(),
+            s.spikes.to_string(),
+            s.meta().to_string(),
+            (s.total() - crate::quant::wire::HEADER_LEN).to_string(),
+        ]);
+    }
+    print_table(
+        "Table 4: INT2+SR footprint for 4096 BF16 values (bytes, header excl.)",
+        &["scheme", "data", "quantized", "scale&zero", "spikes", "meta", "total"],
+        &rows,
+    );
+    println!("paper: 2560 total with bf16 meta, 2048 with integer scales+indices (-20%)");
+    Ok(())
+}
+
+/// Table 5: AllReduce volume accounting.
+pub fn table5() -> Result<()> {
+    let rows: Vec<Vec<String>> = [Algo::Ring, Algo::TwoStep, Algo::Hier]
+        .iter()
+        .map(|&a| {
+            vec![
+                a.name().to_string(),
+                format!("{}M", sim::volume::total_volume(a, 8, 1.0)),
+                format!("{}M", sim::volume::cross_numa_volume(a, 8, 2, 1.0)),
+            ]
+        })
+        .collect();
+    print_table(
+        "Table 5: volume per AllReduce (N=8, 2 NUMA groups, M per GPU)",
+        &["method", "total", "cross-NUMA"],
+        &rows,
+    );
+    println!("paper: NCCL 14M / 7M/4 (=1.75M);  Two-step 14M / 4M;  Hier 14M / M");
+    Ok(())
+}
+
+/// Table 6: device constants.
+pub fn table6() -> Result<()> {
+    let rows: Vec<Vec<String>> = presets::all()
+        .iter()
+        .map(|s| {
+            vec![
+                s.name.to_string(),
+                s.sms.to_string(),
+                if s.is_numa() { "PCIe".into() } else { "NVLINK".into() },
+                format!("{}", s.nominal_bw_gbps),
+                format!("{}", s.bf16_tflops),
+                s.comm_sms.to_string(),
+            ]
+        })
+        .collect();
+    print_table(
+        "Table 6: GPU interconnect + CUDA-core BF16 compute (paper constants)",
+        &["GPU", "SM", "interconnect", "BW (GB/s)", "BF16 (TFlops)", "comm SMs"],
+        &rows,
+    );
+    Ok(())
+}
+
+/// Table 7: downstream accuracy by synthetic task suite.
+pub fn table7(args: &Args) -> Result<()> {
+    let (cfg, weights, _) = ensure_trained("tiny", steps_for(args))?;
+    let batches = eval_batches_for(args, &cfg)?;
+    let rt = Runtime::open(default_artifacts_dir())?;
+    // Task definitions: per-POS-pool prediction accuracy (manifest pools).
+    let pools: Vec<(String, usize, usize)> = rt
+        .manifest
+        .pools
+        .iter()
+        .filter(|p| p.get("vocab") == Some(cfg.vocab.to_string().as_str()))
+        .filter(|p| ["noun", "verb", "adj", "prep"].contains(&p.name.as_str()))
+        .map(|p| {
+            Ok((p.name.clone(), p.get_usize("start")?, p.get_usize("n")?))
+        })
+        .collect::<Result<_>>()?;
+    anyhow::ensure!(pools.len() == 4, "expected 4 task pools, got {}", pools.len());
+
+    let mut engine =
+        TpEngine::new(rt, cfg.clone(), &weights, Codec::Bf16, CollectiveStyle::TwoStep)?;
+    let specs = [
+        "bf16", "int8@128", "int6@128", "int5@128", "int4@128", "int3@32", "int3-sr@32",
+        "int2@32", "int2-sr@32",
+    ];
+    let mut rows = Vec::new();
+    for spec in specs {
+        let codec = if spec == "bf16" { Codec::Bf16 } else { Codec::parse(spec)? };
+        engine.set_codec(codec, CollectiveStyle::TwoStep);
+        // Tasks: per-pool *pool-match* accuracy (the prediction lands in
+        // the target's part-of-speech pool — the syntactic structure the
+        // model has learned and quantization noise erodes), plus overall
+        // exact top-1 accuracy.
+        let mut hits = vec![0f64; pools.len() + 1];
+        let mut totals = vec![0f64; pools.len() + 1];
+        for b in &batches {
+            let h = engine.forward_h(b)?;
+            let tgts = tokens_literal(&b.targets, &[b.batch, b.seq])?;
+            let name = cfg.art("head_acc");
+            let mut lits = vec![h.to_literal()?];
+            lits.extend(engine_head(&engine));
+            lits.push(tgts);
+            let out = engine.rt.execute_t(&name, &lits)?;
+            let correct = &out[0].data;
+            let preds = &out[1].data;
+            for (i, &t) in b.targets.iter().enumerate() {
+                let (t, pred) = (t as usize, preds[i] as usize);
+                for (p, (_, start, n)) in pools.iter().enumerate() {
+                    if t >= *start && t < start + n {
+                        totals[p] += 1.0;
+                        if pred >= *start && pred < start + n {
+                            hits[p] += 1.0;
+                        }
+                    }
+                }
+                hits[pools.len()] += correct[i] as f64;
+                totals[pools.len()] += 1.0;
+            }
+        }
+        let name = codec_label(spec);
+        let mut row = vec![name];
+        let mut sum = 0.0;
+        for p in 0..pools.len() {
+            let acc = 100.0 * hits[p] / totals[p].max(1.0);
+            sum += acc;
+            row.push(f2(acc));
+        }
+        let overall = 100.0 * hits[pools.len()] / totals[pools.len()].max(1.0);
+        row.push(f2(overall));
+        row.push(f2((sum + overall) / (pools.len() + 1) as f64));
+        eprintln!("  [acc-eval] {spec} done");
+        rows.push(row);
+    }
+    print_table(
+        "Table 7: downstream accuracy (%) on the synthetic task suite",
+        &["Comm BitW", "NOUN*", "VERB*", "ADJ*", "PREP*", "EXACT", "Avg"],
+        &rows,
+    );
+    println!("(*pool-match accuracy; EXACT = top-1. Stands in for PIQA/ARC/HS/WG — DESIGN §2)");
+    println!("shape check: INT6/5≈INT8; SR gives a large boost at INT3/INT2");
+    Ok(())
+}
+
+fn engine_head(e: &TpEngine) -> Vec<xla::Literal> {
+    e.head_literals()
+}
+
+fn codec_label(spec: &str) -> String {
+    if spec == "bf16" {
+        "FP16/BF16".into()
+    } else {
+        Codec::parse(spec).map(|c| {
+            let gs = c.group_size();
+            format!("{} gs{gs}", c.name())
+        }).unwrap_or_else(|_| spec.into())
+    }
+}
+
+/// Table 8: MoE dispatch ppl, RTN vs SR, gs128 vs gs32.
+pub fn table8(args: &Args) -> Result<()> {
+    let rtn128 = moe_ppl(args, &["bf16", "int8@128", "int5@128", "int3@128", "int2@128"])?;
+    let sr128 = moe_ppl(args, &["int3-sr@128", "int2-sr@128"])?;
+    let g32 = moe_ppl(args, &["int4@32", "int3@32", "int2@32", "int3-sr@32", "int2-sr@32"])?;
+    let g = |v: &[(String, f64)], i: usize| f2(v[i].1);
+    let rows = vec![
+        vec!["RTN gs128".to_string(), g(&rtn128, 1), g(&rtn128, 2), g(&rtn128, 3), g(&rtn128, 4)],
+        vec!["SR gs128".to_string(), "-".into(), "-".into(), g(&sr128, 0), g(&sr128, 1)],
+        vec!["RTN gs32".to_string(), "-".into(), g(&g32, 0), g(&g32, 1), g(&g32, 2)],
+        vec!["SR gs32".to_string(), "-".into(), "-".into(), g(&g32, 3), g(&g32, 4)],
+    ];
+    print_table(
+        &format!(
+            "Table 8: MoE dispatch ppl, RTN vs SpikeReserving (BF16 baseline {})",
+            f2(rtn128[0].1)
+        ),
+        &["method", "INT8/4*", "INT5/3*", "INT3", "INT2"],
+        &rows,
+    );
+    println!("(columns marked * hold INT4/INT3 for the gs32 rows, matching the paper's layout)");
+    println!("paper Qwen3-30B-A3B: RTN INT2 19.71 -> SR 11.55; gs32 RTN INT2 11.67");
+    println!("shape check: SR < RTN at low bits; finer gs32 recovers most of the loss");
+    Ok(())
+}
+
+/// Table 9: AllReduce algorithmic bandwidth (simulator; see DESIGN §2).
+pub fn table9(args: &Args) -> Result<()> {
+    let m = parse_size(&args.flag_or("size", "64M"))?;
+    let specs =
+        ["bf16", "int8", "int6", "int5", "int4@32", "int3@32", "int2-sr@32"];
+    let headers =
+        ["device/algo", "BF16(NCCL)", "INT8", "INT6", "INT5", "INT4", "INT3", "INT2_SR"];
+    let mut rows = Vec::new();
+    let mut push_row = |label: String, topo: &Topology, algo: Algo| {
+        let mut row = vec![label];
+        for (i, s) in specs.iter().enumerate() {
+            let codec = if i == 0 { Codec::Bf16 } else { Codec::parse(s).unwrap() };
+            let a = if i == 0 { Algo::Ring } else { algo };
+            if a == Algo::Ring && i != 0 {
+                row.push("-".into());
+                continue;
+            }
+            let t = sim::allreduce_time(topo, a, &codec, m);
+            row.push(f2(sim::algbw_gbps(m, &t)));
+        }
+        rows.push(row);
+    };
+    let l40 = Topology::new(presets::l40(), 8);
+    push_row("L40 (Two-step)".into(), &l40, Algo::TwoStep);
+    push_row("L40 (Hier)".into(), &l40, Algo::Hier);
+    push_row("L40 (HierPP)".into(), &l40, Algo::HierPipelined);
+    for spec in [presets::a100(), presets::h800(), presets::h20()] {
+        let name = spec.name;
+        let topo = Topology::new(spec, 8);
+        push_row(name.into(), &topo, Algo::TwoStep);
+    }
+    print_table(
+        &format!("Table 9: AllReduce algorithmic bandwidth (GB/s), {} per GPU", args.flag_or("size", "64M")),
+        &headers,
+        &rows,
+    );
+    println!("paper: L40 10.43/9.17..16.19 | Hier ..28.8 | HierPP ..33.39 | A100 89->153 |");
+    println!("       H800 94->187 | H20 209->260 (INT2_SR 202 — loses)");
+    println!("shape check: hier>two-step on L40; HierPP best (max ~3.2x NCCL); INT2_SR");
+    println!("             never optimal on NVLink; H20 gains least");
+    Ok(())
+}
+
+/// Table 10: All2All dispatch algorithmic bandwidth.
+pub fn table10(args: &Args) -> Result<()> {
+    let m = parse_size(&args.flag_or("size", "64M"))?;
+    let specs = ["bf16", "int8", "int6", "int5", "int4@32", "int3@32", "int2-sr@32"];
+    let mut rows = Vec::new();
+    for spec in [presets::a100(), presets::h800(), presets::h20()] {
+        let name = spec.name;
+        let topo = Topology::new(spec, 8);
+        let mut row = vec![name.to_string()];
+        for s in specs {
+            let codec = if s == "bf16" { Codec::Bf16 } else { Codec::parse(s)? };
+            let t = sim::all2all::all2all_time(&topo, &codec, m);
+            row.push(f2(sim::all2all::algbw_gbps(m, &t)));
+        }
+        rows.push(row);
+    }
+    print_table(
+        "Table 10: All2All dispatch algorithmic bandwidth (GB/s)",
+        &["GPU", "BF16", "INT8", "INT6", "INT5", "INT4", "INT3", "INT2_SR"],
+        &rows,
+    );
+    println!("paper (H800 row): 169.76 | 230.51 | 276.82 | 300.20 | 341.87 | 290.50 | 249.53");
+    println!("shape check: INT4 best (~2x H800, ~1.3x A100); no benefit on H20");
+    Ok(())
+}
+
+/// Parse `64M`, `1G`, `4096` into bytes.
+pub fn parse_size(s: &str) -> Result<f64> {
+    let s = s.trim();
+    let (num, mult) = match s.chars().last() {
+        Some('K') | Some('k') => (&s[..s.len() - 1], 1024.0),
+        Some('M') | Some('m') => (&s[..s.len() - 1], 1024.0 * 1024.0),
+        Some('G') | Some('g') => (&s[..s.len() - 1], 1024.0 * 1024.0 * 1024.0),
+        _ => (s, 1.0),
+    };
+    let v: f64 = num.parse().with_context(|| format!("bad size '{s}'"))?;
+    Ok(v * mult)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_sizes() {
+        assert_eq!(parse_size("4096").unwrap(), 4096.0);
+        assert_eq!(parse_size("64M").unwrap(), 64.0 * 1024.0 * 1024.0);
+        assert_eq!(parse_size("1G").unwrap(), 1073741824.0);
+        assert!(parse_size("x").is_err());
+    }
+
+    #[test]
+    fn sim_tables_run_without_artifacts() {
+        // Tables 4, 5, 6, 9, 10 depend only on the simulator/codec.
+        table4().unwrap();
+        table5().unwrap();
+        table6().unwrap();
+        let args = crate::cli::Args::parse(["table".to_string(), "9".to_string()]).unwrap();
+        table9(&args).unwrap();
+        table10(&args).unwrap();
+    }
+}

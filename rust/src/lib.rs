@@ -1,0 +1,30 @@
+//! # FlashCommunication V2 — reproduction
+//!
+//! A three-layer Rust + JAX + Pallas implementation of *FlashCommunication
+//! V2: Bit Splitting and Spike Reserving for Any Bit Communication*
+//! (Li et al., 2025).
+//!
+//! - [`quant`] — any-bit quantization: RTN, bit splitting, spike reserving,
+//!   Hadamard/LogFMT baselines, wire format.
+//! - [`comm`] — collectives (ring, two-step, hierarchical, pipelined
+//!   hierarchical AllReduce; All2All) over an in-process fabric.
+//! - [`topo`] / [`sim`] — device topology presets (Table 6) and the link
+//!   simulator producing algorithmic-bandwidth estimates (Tables 5, 9, 10).
+//! - [`runtime`] — PJRT CPU client wrapper loading AOT HLO artifacts.
+//! - [`model`] — weights/tokenizer/corpus/checkpoint handling.
+//! - [`coordinator`] — TP inference engine, DP trainer, EP dispatcher, TTFT
+//!   model: the request-path orchestration, Python-free.
+//!
+//! See DESIGN.md for the full system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured record.
+
+pub mod cli;
+pub mod comm;
+pub mod coordinator;
+pub mod harness;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod sim;
+pub mod topo;
+pub mod util;

@@ -1,0 +1,203 @@
+//! `flashcomm` — the FlashCommunication V2 coordinator CLI.
+//!
+//! ```text
+//! flashcomm table <1..10|all> [--quick] [--steps N] [--batches N] [--size 64M]
+//! flashcomm figure <1|2|4|5|8|all> [--quick] [--codec spec] [--chunks K]
+//! flashcomm train   [--config tiny] [--steps N] [--dp N] [--codec spec]
+//!                   [--algo ring|twostep|hier|hierpp] [--out ckpt.bin]
+//! flashcomm eval    [--config tiny] [--ckpt path] [--codec spec]
+//!                   [--style twostep|hier] [--batches N]
+//! flashcomm ttft    [--prompt N] [--batch N]
+//! flashcomm info
+//! ```
+//!
+//! Codec spec grammar: `bf16 | int<bits>[-rtn|-sr|-had|-log][@<gs>][!]`
+//! (`!` = integer Eq.1 metadata), e.g. `int5`, `int2-sr@32`, `int2-sr@32!`.
+
+use anyhow::{bail, Context, Result};
+
+use flashcomm::cli::Args;
+use flashcomm::coordinator::{CollectiveStyle, TpEngine, TrainOptions, Trainer};
+use flashcomm::harness;
+use flashcomm::model::{Corpus, ModelConfig, Sampler, Weights};
+use flashcomm::quant::Codec;
+use flashcomm::runtime::{default_artifacts_dir, Runtime};
+use flashcomm::sim::Algo;
+
+fn main() {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.command.as_str() {
+        "table" => harness::run_table(args),
+        "figure" => harness::run_figure(args),
+        "train" => cmd_train(args),
+        "eval" => cmd_eval(args),
+        "ttft" => {
+            let mut a = args.clone();
+            a.positional = vec!["2".into()];
+            harness::run_figure(&a)
+        }
+        "info" => cmd_info(),
+        "" | "help" | "--help" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try `flashcomm help`)"),
+    }
+}
+
+const HELP: &str = "\
+flashcomm — FlashCommunication V2 (bit splitting + spike reserving) reproduction
+
+commands:
+  table <1..10|all>   regenerate a paper table (see DESIGN.md §5)
+  figure <1|2|4|5|8>  regenerate a paper figure
+  train               DP-train a model with quantized gradient AllReduce
+  eval                TP-inference perplexity under a wire codec
+  ttft                Fig.2 TTFT sweep
+  info                artifacts / manifest / device presets
+
+common flags: --quick (small sweep), --steps N, --batches N, --codec SPEC
+codec SPEC: bf16 | int<b>[-sr|-had|-log][@gs][!]   e.g. int2-sr@32!
+";
+
+fn parse_algo(s: &str) -> Result<Algo> {
+    Ok(match s {
+        "ring" => Algo::Ring,
+        "twostep" => Algo::TwoStep,
+        "hier" => Algo::Hier,
+        "hierpp" => Algo::HierPipelined,
+        other => bail!("unknown algo '{other}'"),
+    })
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let config = args.flag_or("config", "tiny");
+    let rt = Runtime::open(default_artifacts_dir())?;
+    let cfg = ModelConfig::from_record(rt.manifest.config(&config)?)?;
+    let init = match args.flag("ckpt") {
+        Some(p) => Weights::load(p)?,
+        None => Weights::load(
+            default_artifacts_dir().join(format!("{config}_init_weights.bin")),
+        )?,
+    };
+    let corpus =
+        Corpus::load(default_artifacts_dir().join(format!("corpus_v{}.bin", cfg.vocab)))?;
+    let (train, eval) = corpus.split();
+    let mut sampler = Sampler::new(train, args.flag_usize("seed", 7)? as u64);
+    let eval_batches = Sampler::eval_batches(eval, cfg.eval_batch, cfg.seq_len);
+    let opts = TrainOptions {
+        steps: args.flag_usize("steps", 200)?,
+        dp: args.flag_usize("dp", 4)?,
+        codec: Codec::parse(&args.flag_or("codec", "bf16"))?,
+        algo: parse_algo(&args.flag_or("algo", "twostep"))?,
+        log_every: args.flag_usize("log-every", 10)?,
+        eval_every: args.flag_usize("eval-every", 50)?,
+        eval_batches: args.flag_usize("eval-batches", 8)?,
+        seed: args.flag_usize("seed", 7)? as u64,
+    };
+    println!(
+        "training {config} ({} params) for {} steps, dp={}, grads over {} [{}]",
+        cfg.n_params,
+        opts.steps,
+        opts.dp,
+        opts.codec.name(),
+        args.flag_or("algo", "twostep"),
+    );
+    let mut trainer = Trainer::new(rt, cfg, &init)?;
+    let t0 = std::time::Instant::now();
+    let recs = trainer.train(&mut sampler, &eval_batches, &opts)?;
+    let total = t0.elapsed().as_secs_f64();
+    let final_ppl = trainer.eval_ppl(&eval_batches[..eval_batches.len().min(8)])?;
+    println!(
+        "done: {} steps in {:.1}s ({:.2}s/step), final loss {:.4}, eval ppl {:.3}",
+        recs.len(),
+        total,
+        total / recs.len() as f64,
+        recs.last().map(|r| r.loss).unwrap_or(f32::NAN),
+        final_ppl
+    );
+    if let Some(out) = args.flag("out") {
+        trainer.export_weights()?.save(out).with_context(|| format!("saving {out}"))?;
+        println!("checkpoint saved to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let config = args.flag_or("config", "tiny");
+    let rt = Runtime::open(default_artifacts_dir())?;
+    let cfg = ModelConfig::from_record(rt.manifest.config(&config)?)?;
+    let weights = match args.flag("ckpt") {
+        Some(p) => Weights::load(p)?,
+        None => {
+            let (_, w, _) = flashcomm::coordinator::pretrain::ensure_trained(
+                &config,
+                flashcomm::coordinator::pretrain::ACCURACY_STEPS,
+            )?;
+            w
+        }
+    };
+    let corpus =
+        Corpus::load(default_artifacts_dir().join(format!("corpus_v{}.bin", cfg.vocab)))?;
+    let (_, eval) = corpus.split();
+    let n = args.flag_usize("batches", 6)?;
+    let batches: Vec<_> =
+        Sampler::eval_batches(eval, cfg.eval_batch, cfg.seq_len).into_iter().take(n).collect();
+    let codec = Codec::parse(&args.flag_or("codec", "bf16"))?;
+    let style = match args.flag_or("style", "twostep").as_str() {
+        "hier" => CollectiveStyle::Hier,
+        _ => CollectiveStyle::TwoStep,
+    };
+    let mut engine = TpEngine::new(rt, cfg, &weights, codec, style)?;
+    let t0 = std::time::Instant::now();
+    let ppl = engine.perplexity(&batches)?;
+    println!(
+        "{config} perplexity under {} ({:?}): {:.4}   [{} batches, {:.2}s]",
+        codec.name(),
+        style,
+        ppl,
+        batches.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    let rt = Runtime::open(default_artifacts_dir())?;
+    println!("artifacts: {:?}", rt.dir());
+    println!("configs:");
+    for c in &rt.manifest.configs {
+        println!(
+            "  {} — {} params, vocab {}, tp {}",
+            c.name,
+            c.get("n_params").unwrap_or("?"),
+            c.get("vocab").unwrap_or("?"),
+            c.get("tp").unwrap_or("?")
+        );
+    }
+    println!("artifacts ({}):", rt.manifest.artifacts.len());
+    for a in &rt.manifest.artifacts {
+        println!("  {}", a.name);
+    }
+    println!("device presets (Table 6):");
+    for s in flashcomm::topo::presets::all() {
+        println!(
+            "  {:>5}: {} SMs, {} GB/s nominal, {} TFLOPs bf16 (CUDA), comm SMs {}",
+            s.name, s.sms, s.nominal_bw_gbps, s.bf16_tflops, s.comm_sms
+        );
+    }
+    Ok(())
+}

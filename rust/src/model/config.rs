@@ -1,0 +1,123 @@
+//! Model configuration, mirrored from `python/compile/model.py` via the
+//! artifact manifest (single source of truth is the python side; rust reads
+//! what was actually lowered).
+
+use anyhow::Result;
+
+use crate::runtime::manifest::Record;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub n_experts: usize,
+    pub d_expert: usize,
+    pub moe_every: usize,
+    /// TP width the shard pieces were lowered for.
+    pub tp: usize,
+    pub eval_batch: usize,
+    pub train_batch: usize,
+    /// Fixed expert capacity (tokens per expert batch) for EP inference.
+    pub capacity: usize,
+    pub n_params: usize,
+}
+
+impl ModelConfig {
+    pub fn from_record(rec: &Record) -> Result<ModelConfig> {
+        Ok(ModelConfig {
+            name: rec.name.clone(),
+            vocab: rec.get_usize("vocab")?,
+            d_model: rec.get_usize("d_model")?,
+            n_layers: rec.get_usize("n_layers")?,
+            n_heads: rec.get_usize("n_heads")?,
+            d_ff: rec.get_usize("d_ff")?,
+            seq_len: rec.get_usize("seq_len")?,
+            n_experts: rec.get_usize("n_experts")?,
+            d_expert: rec.get_usize("d_expert")?,
+            moe_every: rec.get_usize("moe_every")?,
+            tp: rec.get_usize("tp")?,
+            eval_batch: rec.get_usize("eval_batch")?,
+            train_batch: rec.get_usize("train_batch")?,
+            capacity: rec.get_usize("capacity")?,
+            n_params: rec.get_usize("n_params")?,
+        })
+    }
+
+    /// Is layer `l`'s FFN a mixture of experts? (mirror of python)
+    pub fn is_moe_layer(&self, l: usize) -> bool {
+        self.n_experts > 0 && l % self.moe_every == 1
+    }
+
+    /// Ordered parameter names — must match python `param_specs()`.
+    pub fn param_names(&self) -> Vec<String> {
+        let mut names = vec!["embed".to_string()];
+        for l in 0..self.n_layers {
+            for base in ["ln1_g", "ln1_b", "wq", "wk", "wv", "wo", "ln2_g", "ln2_b"] {
+                names.push(format!("l{l}.{base}"));
+            }
+            if self.is_moe_layer(l) {
+                for base in ["router", "we1", "we2"] {
+                    names.push(format!("l{l}.{base}"));
+                }
+            } else {
+                names.push(format!("l{l}.w1"));
+                names.push(format!("l{l}.w2"));
+            }
+        }
+        names.push("lnf_g".to_string());
+        names.push("lnf_b".to_string());
+        names
+    }
+
+    /// Artifact name helper.
+    pub fn art(&self, piece: &str) -> String {
+        format!("{}_{piece}", self.name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+
+    fn tiny() -> ModelConfig {
+        let m = Manifest::parse(
+            "config tiny vocab=2048 d_model=256 n_layers=4 n_heads=8 d_ff=1024 \
+             seq_len=128 n_experts=0 d_expert=512 moe_every=2 tp=4 eval_batch=4 \
+             train_batch=4 capacity=128 n_params=3674624",
+        )
+        .unwrap();
+        ModelConfig::from_record(m.config("tiny").unwrap()).unwrap()
+    }
+
+    #[test]
+    fn param_names_match_python_layout() {
+        let cfg = tiny();
+        let names = cfg.param_names();
+        // 1 embed + 4 layers x 10 + 2 final = 43 (matches python specs).
+        assert_eq!(names.len(), 43);
+        assert_eq!(names[0], "embed");
+        assert_eq!(names[1], "l0.ln1_g");
+        assert_eq!(names[9], "l0.w1");
+        assert_eq!(names[names.len() - 1], "lnf_b");
+    }
+
+    #[test]
+    fn moe_layers_alternate() {
+        let mut cfg = tiny();
+        cfg.n_experts = 8;
+        assert!(!cfg.is_moe_layer(0));
+        assert!(cfg.is_moe_layer(1));
+        assert!(!cfg.is_moe_layer(2));
+        assert!(cfg.is_moe_layer(3));
+        let names = cfg.param_names();
+        assert!(names.contains(&"l1.router".to_string()));
+        assert!(names.contains(&"l0.w1".to_string()));
+        assert!(!names.contains(&"l1.w1".to_string()));
+    }
+}

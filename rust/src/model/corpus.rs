@@ -1,0 +1,160 @@
+//! Corpus loader + deterministic batch sampler.
+//!
+//! Reads the binary token stream written by `python/compile/corpus.py`
+//! (u16 magic | u16 version | u32 vocab | u64 n | u16 tokens[], LE) and
+//! serves next-token-prediction batches. Train/eval split matches the
+//! python side: eval = final 5 %.
+
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::Prng;
+
+pub const MAGIC: u16 = 0xC0A9;
+
+/// A token stream with its vocabulary size.
+#[derive(Debug, Clone)]
+pub struct Corpus {
+    pub vocab: usize,
+    pub tokens: Vec<u16>,
+}
+
+/// One next-token batch: `tokens[b][s]` predicts `targets[b][s]`.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub tokens: Vec<i32>,
+    pub targets: Vec<i32>,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+impl Corpus {
+    pub fn load(path: impl AsRef<Path>) -> Result<Corpus> {
+        let mut f = std::fs::File::open(path.as_ref())
+            .with_context(|| format!("opening corpus {:?}", path.as_ref()))?;
+        let mut hdr = [0u8; 16];
+        f.read_exact(&mut hdr)?;
+        let magic = u16::from_le_bytes([hdr[0], hdr[1]]);
+        let version = u16::from_le_bytes([hdr[2], hdr[3]]);
+        let vocab = u32::from_le_bytes(hdr[4..8].try_into().unwrap()) as usize;
+        let n = u64::from_le_bytes(hdr[8..16].try_into().unwrap()) as usize;
+        if magic != MAGIC || version != 1 {
+            bail!("bad corpus header (magic {magic:#x}, version {version})");
+        }
+        let mut bytes = vec![0u8; 2 * n];
+        f.read_exact(&mut bytes)?;
+        let tokens: Vec<u16> =
+            bytes.chunks_exact(2).map(|c| u16::from_le_bytes([c[0], c[1]])).collect();
+        if let Some(&t) = tokens.iter().find(|&&t| t as usize >= vocab) {
+            bail!("token {t} out of vocab {vocab}");
+        }
+        Ok(Corpus { vocab, tokens })
+    }
+
+    /// (train, eval) views: eval is the final 5 % (mirror of python).
+    pub fn split(&self) -> (&[u16], &[u16]) {
+        let n_eval = (self.tokens.len() / 20).max(1);
+        self.tokens.split_at(self.tokens.len() - n_eval)
+    }
+}
+
+/// Deterministic random-window batch sampler over a token slice.
+pub struct Sampler<'a> {
+    data: &'a [u16],
+    rng: Prng,
+}
+
+impl<'a> Sampler<'a> {
+    pub fn new(data: &'a [u16], seed: u64) -> Self {
+        Sampler { data, rng: Prng::new(seed) }
+    }
+
+    /// Draw a `(batch, seq)` next-token batch from random windows.
+    pub fn next_batch(&mut self, batch: usize, seq: usize) -> Batch {
+        assert!(self.data.len() > seq + 1, "corpus shorter than sequence length");
+        let mut tokens = Vec::with_capacity(batch * seq);
+        let mut targets = Vec::with_capacity(batch * seq);
+        for _ in 0..batch {
+            let start = self.rng.below(self.data.len() - seq - 1);
+            for i in 0..seq {
+                tokens.push(self.data[start + i] as i32);
+                targets.push(self.data[start + i + 1] as i32);
+            }
+        }
+        Batch { tokens, targets, batch, seq }
+    }
+
+    /// Sequential (deterministic) eval batches covering the slice once.
+    pub fn eval_batches(data: &'a [u16], batch: usize, seq: usize) -> Vec<Batch> {
+        let window = batch * seq;
+        let mut out = Vec::new();
+        let mut pos = 0;
+        while pos + window + 1 <= data.len() {
+            let mut tokens = Vec::with_capacity(window);
+            let mut targets = Vec::with_capacity(window);
+            for i in 0..window {
+                tokens.push(data[pos + i] as i32);
+                targets.push(data[pos + i + 1] as i32);
+            }
+            out.push(Batch { tokens, targets, batch, seq });
+            pos += window;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_corpus(n: usize, vocab: usize) -> Corpus {
+        let tokens = (0..n).map(|i| (i % vocab) as u16).collect();
+        Corpus { vocab, tokens }
+    }
+
+    #[test]
+    fn loads_built_corpus_if_present() {
+        let p = crate::runtime::default_artifacts_dir().join("corpus_v2048.bin");
+        if !p.exists() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let c = Corpus::load(p).unwrap();
+        assert_eq!(c.vocab, 2048);
+        assert_eq!(c.tokens.len(), 600_000);
+        let (train, eval) = c.split();
+        assert_eq!(eval.len(), 30_000);
+        assert_eq!(train.len() + eval.len(), 600_000);
+    }
+
+    #[test]
+    fn sampler_is_deterministic_and_shifted() {
+        let c = fake_corpus(10_000, 97);
+        let (train, _) = c.split();
+        let mut s1 = Sampler::new(train, 7);
+        let mut s2 = Sampler::new(train, 7);
+        let (a, b) = (s1.next_batch(2, 16), s2.next_batch(2, 16));
+        assert_eq!(a.tokens, b.tokens);
+        // Targets are tokens shifted by one.
+        for i in 0..a.tokens.len() - 1 {
+            if (i + 1) % 16 != 0 {
+                assert_eq!(a.targets[i], a.tokens[i + 1]);
+            }
+        }
+        let c2 = Sampler::new(train, 8).next_batch(2, 16);
+        assert_ne!(a.tokens, c2.tokens, "different seed, different batch");
+    }
+
+    #[test]
+    fn eval_batches_cover_sequentially() {
+        let c = fake_corpus(1000, 13);
+        let (_, eval) = c.split();
+        let batches = Sampler::eval_batches(eval, 1, 8);
+        assert!(!batches.is_empty());
+        assert_eq!(batches[0].tokens.len(), 8);
+        // First eval token is where the split starts.
+        assert_eq!(batches[0].tokens[0], eval[0] as i32);
+    }
+}

@@ -1,0 +1,11 @@
+//! Model hosting: configuration (mirrored from the manifest), the weight
+//! store with TP sharding, and the corpus/batch machinery. Everything the
+//! coordinator needs to own a model without Python.
+
+pub mod config;
+pub mod corpus;
+pub mod weights;
+
+pub use config::ModelConfig;
+pub use corpus::{Batch, Corpus, Sampler};
+pub use weights::{shard_param, Weights};

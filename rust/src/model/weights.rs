@@ -1,0 +1,214 @@
+//! Weight store: reads/writes the binary tensor bundle shared with
+//! `python/compile/aot.py` (init weights) and used for rust-side
+//! checkpoints, plus the TP sharding rules mirrored from python.
+//!
+//! Format (little-endian):
+//! `u32 magic | u32 version | u32 n_tensors`, then per tensor
+//! `u32 name_len | name | u8 ndim | u32 dims[] | f32 data[]`.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::Tensor;
+
+pub const MAGIC: u32 = 0xF1A5;
+
+/// An ordered named-tensor bundle (order = python `param_specs()` order).
+#[derive(Debug, Clone, Default)]
+pub struct Weights {
+    pub names: Vec<String>,
+    pub tensors: HashMap<String, Tensor>,
+}
+
+impl Weights {
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors.get(name).with_context(|| format!("missing tensor '{name}'"))
+    }
+
+    pub fn insert(&mut self, name: impl Into<String>, t: Tensor) {
+        let name = name.into();
+        if !self.tensors.contains_key(&name) {
+            self.names.push(name.clone());
+        }
+        self.tensors.insert(name, t);
+    }
+
+    /// Tensors in insertion order (the flat HLO argument order).
+    pub fn ordered(&self) -> Vec<&Tensor> {
+        self.names.iter().map(|n| &self.tensors[n]).collect()
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.names.iter().map(|n| self.tensors[n].len()).sum()
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Weights> {
+        let mut f = std::fs::File::open(path.as_ref())
+            .with_context(|| format!("opening {:?}", path.as_ref()))?;
+        let mut hdr = [0u8; 12];
+        f.read_exact(&mut hdr)?;
+        let magic = u32::from_le_bytes(hdr[0..4].try_into().unwrap());
+        let version = u32::from_le_bytes(hdr[4..8].try_into().unwrap());
+        let n = u32::from_le_bytes(hdr[8..12].try_into().unwrap());
+        if magic != MAGIC || version != 1 {
+            bail!("bad weights header: magic {magic:#x} version {version}");
+        }
+        let mut w = Weights::default();
+        for _ in 0..n {
+            let mut b4 = [0u8; 4];
+            f.read_exact(&mut b4)?;
+            let name_len = u32::from_le_bytes(b4) as usize;
+            if name_len > 4096 {
+                bail!("implausible name length {name_len}");
+            }
+            let mut name = vec![0u8; name_len];
+            f.read_exact(&mut name)?;
+            let name = String::from_utf8(name).context("tensor name not utf8")?;
+            let mut b1 = [0u8; 1];
+            f.read_exact(&mut b1)?;
+            let ndim = b1[0] as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                f.read_exact(&mut b4)?;
+                shape.push(u32::from_le_bytes(b4) as usize);
+            }
+            let count: usize = if ndim == 0 { 1 } else { shape.iter().product() };
+            let mut bytes = vec![0u8; count * 4];
+            f.read_exact(&mut bytes)?;
+            let data: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            w.insert(name, Tensor::new(shape, data));
+        }
+        Ok(w)
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut f = std::fs::File::create(path.as_ref())
+            .with_context(|| format!("creating {:?}", path.as_ref()))?;
+        f.write_all(&MAGIC.to_le_bytes())?;
+        f.write_all(&1u32.to_le_bytes())?;
+        f.write_all(&(self.names.len() as u32).to_le_bytes())?;
+        for name in &self.names {
+            let t = &self.tensors[name];
+            f.write_all(&(name.len() as u32).to_le_bytes())?;
+            f.write_all(name.as_bytes())?;
+            f.write_all(&[t.shape.len() as u8])?;
+            for &d in &t.shape {
+                f.write_all(&(d as u32).to_le_bytes())?;
+            }
+            let bytes: &[u8] = unsafe {
+                std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4)
+            };
+            f.write_all(bytes)?;
+        }
+        Ok(())
+    }
+}
+
+/// TP weight slicing — the mirror of python `shard_param`:
+/// column-parallel (`wq/wk/wv/w1`) split the last axis; row-parallel
+/// (`wo/w2`) split the first; everything else is replicated.
+pub fn shard_param(name: &str, t: &Tensor, tp: usize, shard: usize) -> Tensor {
+    assert!(shard < tp);
+    let base = name.rsplit('.').next().unwrap();
+    match base {
+        "wq" | "wk" | "wv" | "w1" => {
+            let (rows, cols) = (t.shape[0], t.shape[1]);
+            assert_eq!(cols % tp, 0, "{name}: cols {cols} % tp {tp}");
+            let w = cols / tp;
+            let mut data = Vec::with_capacity(rows * w);
+            for r in 0..rows {
+                let row = &t.data[r * cols..(r + 1) * cols];
+                data.extend_from_slice(&row[shard * w..(shard + 1) * w]);
+            }
+            Tensor::new(vec![rows, w], data)
+        }
+        "wo" | "w2" => {
+            let (rows, cols) = (t.shape[0], t.shape[1]);
+            assert_eq!(rows % tp, 0, "{name}: rows {rows} % tp {tp}");
+            let h = rows / tp;
+            let data = t.data[shard * h * cols..(shard + 1) * h * cols].to_vec();
+            Tensor::new(vec![h, cols], data)
+        }
+        _ => t.clone(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Weights {
+        let mut w = Weights::default();
+        w.insert("embed", Tensor::new(vec![4, 2], (0..8).map(|i| i as f32).collect()));
+        w.insert("l0.wq", Tensor::new(vec![2, 4], (0..8).map(|i| i as f32 * 0.5).collect()));
+        w.insert("l0.wo", Tensor::new(vec![4, 2], (0..8).map(|i| -(i as f32)).collect()));
+        w.insert("lnf_g", Tensor::new(vec![2], vec![1.0, 1.0]));
+        w
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let w = toy();
+        let dir = std::env::temp_dir().join(format!("fcw_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("w.bin");
+        w.save(&p).unwrap();
+        let back = Weights::load(&p).unwrap();
+        assert_eq!(back.names, w.names);
+        for n in &w.names {
+            assert_eq!(back.tensors[n], w.tensors[n], "{n}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn loads_python_init_weights_if_built() {
+        let p = crate::runtime::default_artifacts_dir().join("tiny_init_weights.bin");
+        if !p.exists() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let w = Weights::load(p).unwrap();
+        assert_eq!(w.names[0], "embed");
+        assert_eq!(w.tensors["embed"].shape, vec![2048, 256]);
+        assert_eq!(w.n_params(), 3674624);
+        // LayerNorm gains come in as ones.
+        assert!(w.tensors["l0.ln1_g"].data.iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn column_shard_splits_last_axis() {
+        let w = toy();
+        let full = w.get("l0.wq").unwrap();
+        let s0 = shard_param("l0.wq", full, 2, 0);
+        let s1 = shard_param("l0.wq", full, 2, 1);
+        assert_eq!(s0.shape, vec![2, 2]);
+        // Row 0 of full is [0, .5, 1, 1.5]: shard0 gets [0, .5].
+        assert_eq!(s0.data, vec![0.0, 0.5, 2.0, 2.5]);
+        assert_eq!(s1.data, vec![1.0, 1.5, 3.0, 3.5]);
+    }
+
+    #[test]
+    fn row_shard_splits_first_axis() {
+        let w = toy();
+        let full = w.get("l0.wo").unwrap();
+        let s1 = shard_param("l0.wo", full, 2, 1);
+        assert_eq!(s1.shape, vec![2, 2]);
+        assert_eq!(s1.data, vec![-4.0, -5.0, -6.0, -7.0]);
+    }
+
+    #[test]
+    fn replicated_params_pass_through() {
+        let w = toy();
+        let full = w.get("lnf_g").unwrap();
+        assert_eq!(&shard_param("lnf_g", full, 4, 3), full);
+        let emb = w.get("embed").unwrap();
+        assert_eq!(&shard_param("embed", emb, 4, 0), emb);
+    }
+}

@@ -1,0 +1,275 @@
+//! Bit splitting (paper §Bit Splitting, Fig. 3): decompose an irregular bit
+//! width into regular planes — 4-bit and 2-bit units plus a standalone
+//! extra bit — so every plane packs word-aligned:
+//!
+//! ```text
+//!   8 = 4+4     7 = 4+2+1     6 = 4+2     5 = 4+1
+//!   4 = 4       3 = 2+1       2 = 2       1 = 1
+//! ```
+//!
+//! Planes are assigned from the LSB up (an INT5 code `q` stores `q & 0xF`
+//! in the 4-bit plane and `q >> 4` in the 1-bit plane, matching Fig. 3's
+//! "first 4 bits and an extra singular bit"). All values of one plane are
+//! stored contiguously ("all 4-bit parts are saved together, so are the
+//! extra bits"), each plane padded to a byte boundary.
+//!
+//! The packers use the "fast packing" strategy of Flash Communication V1:
+//! branch-free u64 gathers of 8 codes at a time.
+
+/// Plane widths (in bits, LSB-first) for each supported width.
+pub fn planes_for(bits: u8) -> &'static [u8] {
+    match bits {
+        1 => &[1],
+        2 => &[2],
+        3 => &[2, 1],
+        4 => &[4],
+        5 => &[4, 1],
+        6 => &[4, 2],
+        7 => &[4, 2, 1],
+        8 => &[4, 4],
+        _ => panic!("unsupported bit width {bits}"),
+    }
+}
+
+/// Bytes one plane of width `w` needs for `n` values.
+#[inline]
+pub fn plane_len(w: u8, n: usize) -> usize {
+    match w {
+        4 => n.div_ceil(2),
+        2 => n.div_ceil(4),
+        1 => n.div_ceil(8),
+        _ => unreachable!("plane width {w}"),
+    }
+}
+
+/// Total packed length for `n` codes of `bits` width (sum over planes).
+pub fn packed_len(bits: u8, n: usize) -> usize {
+    planes_for(bits).iter().map(|&w| plane_len(w, n)).sum()
+}
+
+#[inline(always)]
+fn load8(codes: &[u8], i: usize) -> u64 {
+    // Load up to 8 codes starting at i as a little-endian u64 (tail-safe).
+    let rem = codes.len() - i;
+    if rem >= 8 {
+        u64::from_le_bytes(codes[i..i + 8].try_into().unwrap())
+    } else {
+        let mut b = [0u8; 8];
+        b[..rem].copy_from_slice(&codes[i..]);
+        u64::from_le_bytes(b)
+    }
+}
+
+/// Pack one plane: extract `w` bits at `shift` from each code.
+fn pack_plane(codes: &[u8], w: u8, shift: u8, out: &mut Vec<u8>) {
+    let n = codes.len();
+    match w {
+        4 => {
+            // 2 codes/byte: out = lo | hi<<4.
+            let mut i = 0;
+            while i + 8 <= n {
+                let v = (load8(codes, i) >> shift) & 0x0F0F_0F0F_0F0F_0F0F;
+                // Fold adjacent nibble pairs: byte k = nib(2k) | nib(2k+1)<<4.
+                let folded = (v | (v >> 4)) & 0x00FF_00FF_00FF_00FF;
+                let b = folded | (folded >> 8);
+                out.push(b as u8);
+                out.push((b >> 16) as u8);
+                out.push((b >> 32) as u8);
+                out.push((b >> 48) as u8);
+                i += 8;
+            }
+            while i < n {
+                let lo = (codes[i] >> shift) & 0xF;
+                let hi = if i + 1 < n { (codes[i + 1] >> shift) & 0xF } else { 0 };
+                out.push(lo | (hi << 4));
+                i += 2;
+            }
+        }
+        2 => {
+            // 4 codes/byte.
+            let mut i = 0;
+            while i + 8 <= n {
+                let v = (load8(codes, i) >> shift) & 0x0303_0303_0303_0303;
+                let p1 = (v | (v >> 6)) & 0x000F_000F_000F_000F; // pairs per u16
+                let b = p1 | (p1 >> 12); // byte per u32
+                out.push(b as u8);
+                out.push((b >> 32) as u8);
+                i += 8;
+            }
+            while i < n {
+                let mut byte = 0u8;
+                for k in 0..4 {
+                    if i + k < n {
+                        byte |= ((codes[i + k] >> shift) & 0x3) << (2 * k);
+                    }
+                }
+                out.push(byte);
+                i += 4;
+            }
+        }
+        1 => {
+            // 8 codes/byte.
+            let mut i = 0;
+            while i < n {
+                let v = (load8(codes, i) >> shift) & 0x0101_0101_0101_0101;
+                // Gather the 8 lsbs into one byte (bit i of the result is
+                // the lsb of byte i — the classic 0x0102…80 multiply).
+                let byte = (v.wrapping_mul(0x0102_0408_1020_4080) >> 56) as u8;
+                let valid = (n - i).min(8);
+                out.push(byte & (0xFFu16 >> (8 - valid)) as u8);
+                i += 8;
+            }
+        }
+        _ => unreachable!(),
+    }
+}
+
+/// Unpack one plane, OR-ing `w` bits at `shift` into each code slot.
+fn unpack_plane(bytes: &[u8], w: u8, shift: u8, codes: &mut [u8]) {
+    let n = codes.len();
+    match w {
+        4 => {
+            for (i, c) in codes.iter_mut().enumerate() {
+                let b = bytes[i / 2];
+                let nib = if i % 2 == 0 { b & 0xF } else { b >> 4 };
+                *c |= nib << shift;
+            }
+        }
+        2 => {
+            for (i, c) in codes.iter_mut().enumerate() {
+                let b = bytes[i / 4];
+                *c |= ((b >> (2 * (i % 4))) & 0x3) << shift;
+            }
+        }
+        1 => {
+            for (i, c) in codes.iter_mut().enumerate() {
+                let b = bytes[i / 8];
+                *c |= ((b >> (i % 8)) & 0x1) << shift;
+            }
+        }
+        _ => unreachable!(),
+    }
+    let _ = n;
+}
+
+/// Pack `codes` (each < 2^bits) into bit-split planes appended to `out`.
+pub fn pack(codes: &[u8], bits: u8, out: &mut Vec<u8>) {
+    out.reserve(packed_len(bits, codes.len()));
+    let mut shift = 0u8;
+    for &w in planes_for(bits) {
+        pack_plane(codes, w, shift, out);
+        shift += w;
+    }
+}
+
+/// Unpack `n` codes of width `bits` from `bytes` (must be `packed_len` long).
+pub fn unpack(bytes: &[u8], bits: u8, n: usize, codes: &mut Vec<u8>) {
+    assert_eq!(bytes.len(), packed_len(bits, n), "packed buffer length mismatch");
+    codes.clear();
+    codes.resize(n, 0);
+    let mut shift = 0u8;
+    let mut off = 0usize;
+    for &w in planes_for(bits) {
+        let len = plane_len(w, n);
+        unpack_plane(&bytes[off..off + len], w, shift, codes);
+        off += len;
+        shift += w;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::cases;
+    use crate::util::Prng;
+
+    #[test]
+    fn plane_decomposition_sums_to_bits() {
+        for bits in 1..=8u8 {
+            let total: u8 = planes_for(bits).iter().sum();
+            assert_eq!(total, bits, "planes for {bits}");
+        }
+    }
+
+    #[test]
+    fn packed_len_matches_paper_int5() {
+        // Fig. 3: INT5 over 4096 values = 2048 B (4-bit) + 512 B (1-bit).
+        assert_eq!(packed_len(5, 4096), 2048 + 512);
+        // INT2 over 4096 = 1024 B (Table 4 "Quantized" column).
+        assert_eq!(packed_len(2, 4096), 1024);
+    }
+
+    #[test]
+    fn compression_ratio_is_bits_over_8() {
+        for bits in 1..=8u8 {
+            let n = 4096;
+            let expect = (bits as usize * n).div_ceil(8);
+            assert_eq!(packed_len(bits, n), expect, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_exhaustive_small() {
+        // Every code value, every bit width, every small length.
+        for bits in 1..=8u8 {
+            let qmax = 1u16 << bits;
+            for n in 1..=33usize {
+                let codes: Vec<u8> = (0..n).map(|i| (i as u16 % qmax) as u8).collect();
+                let mut packed = Vec::new();
+                pack(&codes, bits, &mut packed);
+                assert_eq!(packed.len(), packed_len(bits, n));
+                let mut back = Vec::new();
+                unpack(&packed, bits, n, &mut back);
+                assert_eq!(codes, back, "bits={bits} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_property_random() {
+        cases(200, 200, |rng| {
+            let bits = 1 + rng.below(8) as u8;
+            let n = 1 + rng.below(5000);
+            let mask = ((1u16 << bits) - 1) as u8;
+            let codes: Vec<u8> = (0..n).map(|_| (rng.next_u32() as u8) & mask).collect();
+            let mut packed = Vec::new();
+            pack(&codes, bits, &mut packed);
+            let mut back = Vec::new();
+            unpack(&packed, bits, n, &mut back);
+            assert_eq!(codes, back, "bits={bits} n={n}");
+        });
+    }
+
+    #[test]
+    fn planes_are_contiguous_per_fig3() {
+        // For INT5, flipping a value's high bit must only change the 1-bit
+        // plane region (after the 4-bit plane region).
+        let n = 64;
+        let a = vec![0u8; n];
+        let mut b = vec![0u8; n];
+        b[10] = 0b10000; // only bit 4 set
+        let (mut pa, mut pb) = (Vec::new(), Vec::new());
+        pack(&a, 5, &mut pa);
+        pack(&b, 5, &mut pb);
+        let four_bit_region = plane_len(4, n);
+        assert_eq!(pa[..four_bit_region], pb[..four_bit_region], "4-bit plane must not change");
+        assert_ne!(pa[four_bit_region..], pb[four_bit_region..], "1-bit plane must change");
+    }
+
+    #[test]
+    fn fast_path_matches_scalar_tail_path() {
+        // Lengths straddling the 8-wide fast path boundary.
+        let mut rng = Prng::new(77);
+        for bits in [2u8, 4, 5, 7] {
+            let mask = ((1u16 << bits) - 1) as u8;
+            for n in [7usize, 8, 9, 15, 16, 17, 23, 64, 65] {
+                let codes: Vec<u8> = (0..n).map(|_| (rng.next_u32() as u8) & mask).collect();
+                let mut packed = Vec::new();
+                pack(&codes, bits, &mut packed);
+                let mut back = Vec::new();
+                unpack(&packed, bits, n, &mut back);
+                assert_eq!(codes, back, "bits={bits} n={n}");
+            }
+        }
+    }
+}

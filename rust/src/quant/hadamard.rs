@@ -1,0 +1,175 @@
+//! Hadamard-transform quantization baseline (Table 3; QuaRot-style).
+//!
+//! Each group is rotated by a normalized Walsh–Hadamard transform before
+//! RTN quantization and rotated back after dequantization. The rotation
+//! spreads outliers across the group (flattening the distribution), which
+//! helps at INT4 but — as the paper observes — *hurts* at INT2 because the
+//! inverse transform re-accumulates the per-element quantization errors.
+//!
+//! Group sizes must be powers of two (32 and 128 both are).
+
+use super::rtn::{self, GroupMeta};
+
+/// In-place normalized fast Walsh–Hadamard transform (orthonormal: applying
+/// it twice is the identity).
+pub fn fwht_normalized(xs: &mut [f32]) {
+    let n = xs.len();
+    assert!(n.is_power_of_two(), "FWHT needs a power-of-two length, got {n}");
+    let mut h = 1;
+    while h < n {
+        for chunk in xs.chunks_mut(h * 2) {
+            let (a, b) = chunk.split_at_mut(h);
+            for (x, y) in a.iter_mut().zip(b.iter_mut()) {
+                let (u, v) = (*x, *y);
+                *x = u + v;
+                *y = u - v;
+            }
+        }
+        h *= 2;
+    }
+    let norm = 1.0 / (n as f32).sqrt();
+    for x in xs.iter_mut() {
+        *x *= norm;
+    }
+}
+
+/// Quantize a tensor with per-group Hadamard rotation + RTN.
+///
+/// The tail group (if `data.len() % group_size != 0`) falls back to plain
+/// RTN since it is not a power of two.
+pub fn quantize(
+    data: &[f32],
+    bits: u8,
+    group_size: usize,
+    codes: &mut Vec<u8>,
+    metas: &mut Vec<GroupMeta>,
+) {
+    assert!(group_size.is_power_of_two());
+    codes.clear();
+    codes.resize(data.len(), 0);
+    metas.clear();
+    let mut scratch = vec![0f32; group_size];
+    for (xs, cs) in data.chunks(group_size).zip(codes.chunks_mut(group_size)) {
+        if xs.len() == group_size {
+            scratch.copy_from_slice(xs);
+            fwht_normalized(&mut scratch);
+            metas.push(rtn::quantize_group(&scratch, bits, cs));
+        } else {
+            metas.push(rtn::quantize_group(xs, bits, cs));
+        }
+    }
+}
+
+/// Dequantize + inverse rotation.
+pub fn dequantize(codes: &[u8], metas: &[GroupMeta], group_size: usize, out: &mut [f32]) {
+    assert_eq!(codes.len(), out.len());
+    for ((cs, &meta), xs) in codes.chunks(group_size).zip(metas).zip(out.chunks_mut(group_size)) {
+        rtn::dequantize_group(cs, meta, xs);
+        if xs.len() == group_size {
+            fwht_normalized(xs); // orthonormal: same transform inverts
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::sqnr_db;
+    use crate::util::Prng;
+
+    fn roundtrip(data: &[f32], bits: u8, gs: usize) -> Vec<f32> {
+        let (mut codes, mut metas) = (Vec::new(), Vec::new());
+        quantize(data, bits, gs, &mut codes, &mut metas);
+        let mut out = vec![0f32; data.len()];
+        dequantize(&codes, &metas, gs, &mut out);
+        out
+    }
+
+    fn rtn_roundtrip(data: &[f32], bits: u8, gs: usize) -> Vec<f32> {
+        let (mut codes, mut metas) = (Vec::new(), Vec::new());
+        rtn::quantize(data, bits, gs, &mut codes, &mut metas);
+        let mut out = vec![0f32; data.len()];
+        rtn::dequantize(&codes, &metas, gs, &mut out);
+        out
+    }
+
+    #[test]
+    fn fwht_is_involutive() {
+        let mut rng = Prng::new(31);
+        let mut xs = vec![0f32; 128];
+        rng.fill_normal(&mut xs, 0.0, 3.0);
+        let orig = xs.clone();
+        fwht_normalized(&mut xs);
+        fwht_normalized(&mut xs);
+        for (a, b) in orig.iter().zip(&xs) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn fwht_preserves_energy() {
+        let mut rng = Prng::new(32);
+        let mut xs = vec![0f32; 32];
+        rng.fill_normal(&mut xs, 1.0, 2.0);
+        let e0: f32 = xs.iter().map(|x| x * x).sum();
+        fwht_normalized(&mut xs);
+        let e1: f32 = xs.iter().map(|x| x * x).sum();
+        assert!((e0 - e1).abs() / e0 < 1e-5);
+    }
+
+    #[test]
+    fn fwht_flattens_a_spike() {
+        // A single outlier spreads to amplitude outlier/sqrt(n) everywhere.
+        let mut xs = vec![0f32; 32];
+        xs[5] = 32.0;
+        fwht_normalized(&mut xs);
+        for &x in &xs {
+            assert!((x.abs() - 32.0 / (32f32).sqrt()).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn int4_roundtrip_reasonable() {
+        let mut rng = Prng::new(33);
+        let mut data = vec![0f32; 4096];
+        rng.fill_activations(&mut data, 1.0);
+        let s = sqnr_db(&data, &roundtrip(&data, 4, 32));
+        assert!(s > 10.0, "INT4 Hadamard SQNR {s}");
+    }
+
+    #[test]
+    fn collapses_relative_to_sr_at_int2() {
+        // The paper's Table 3 ordering at INT2: SR >> RTN >= Hadamard-ish.
+        // At minimum, Hadamard must not beat spike reserving at INT2.
+        let mut rng = Prng::new(34);
+        let mut data = vec![0f32; 1 << 14];
+        rng.fill_activations(&mut data, 1.0);
+        let had = sqnr_db(&data, &roundtrip(&data, 2, 32));
+        let (mut c, mut m, mut s) = (Vec::new(), Vec::new(), Vec::new());
+        super::super::spike::quantize(
+            &data,
+            2,
+            32,
+            super::super::spike::ScaleMode::Bf16,
+            &mut c,
+            &mut m,
+            &mut s,
+        );
+        let mut sr = vec![0f32; data.len()];
+        super::super::spike::dequantize(&c, &m, &s, 32, &mut sr);
+        let srq = sqnr_db(&data, &sr);
+        assert!(srq > had, "SR {srq} dB must beat Hadamard {had} dB at INT2");
+    }
+
+    #[test]
+    fn tail_group_falls_back_to_rtn() {
+        let mut rng = Prng::new(35);
+        let mut data = vec![0f32; 100]; // 3 full groups of 32 + tail of 4
+        rng.fill_normal(&mut data, 0.0, 1.0);
+        let out = roundtrip(&data, 8, 32);
+        let plain = rtn_roundtrip(&data[96..], 8, 32);
+        for (a, b) in out[96..].iter().zip(&plain) {
+            assert!((a - b).abs() < 1e-6, "tail must match plain RTN");
+        }
+    }
+}

@@ -1,0 +1,188 @@
+//! LogFMT quantization baseline (Table 3; DeepSeek-V3 insights paper).
+//!
+//! Values are quantized in the log domain: one sign bit plus `bits - 1`
+//! magnitude bits that linearly quantize `log2|x|` over the group's
+//! exponent range. Magnitude code 0 is reserved for exact zero / underflow.
+//! Dequantization exponentiates, which — as the paper notes — *amplifies*
+//! quantization error multiplicatively, collapsing at INT2 (where a single
+//! magnitude bit remains).
+//!
+//! Per-group metadata: `emin`, `emax` (log2 range endpoints) as BF16.
+
+use crate::util::bf16::bf16_round;
+
+/// Per-group log-domain metadata.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LogMeta {
+    /// log2 of the smallest retained magnitude.
+    pub emin: f32,
+    /// log2 of the largest magnitude.
+    pub emax: f32,
+}
+
+/// Smallest magnitude treated as nonzero (below it values snap to 0).
+pub const MIN_MAG: f32 = 1e-30;
+
+/// Number of magnitude levels for a bit width (code 0 reserved for zero).
+#[inline]
+fn mag_levels(bits: u8) -> u32 {
+    debug_assert!((2..=8).contains(&bits));
+    (1u32 << (bits - 1)) - 1
+}
+
+/// Quantize one group. Codes are `sign << (bits-1) | mag` with mag in
+/// [0, 2^(bits-1) - 1].
+pub fn quantize_group(xs: &[f32], bits: u8, codes: &mut [u8]) -> LogMeta {
+    debug_assert_eq!(xs.len(), codes.len());
+    let mut emin = f32::INFINITY;
+    let mut emax = f32::NEG_INFINITY;
+    for &x in xs {
+        let m = x.abs();
+        if m > MIN_MAG {
+            let e = m.log2();
+            emin = emin.min(e);
+            emax = emax.max(e);
+        }
+    }
+    if !emin.is_finite() {
+        // All zeros.
+        for c in codes.iter_mut() {
+            *c = 0;
+        }
+        return LogMeta { emin: 0.0, emax: 0.0 };
+    }
+    let meta = LogMeta { emin: bf16_round(emin), emax: bf16_round(emax) };
+    let levels = mag_levels(bits);
+    let span = (meta.emax - meta.emin).max(1e-6);
+    // Codes 1..=levels linearly span [emin, emax] in log space.
+    let inv = if levels > 1 { (levels - 1) as f32 / span } else { 0.0 };
+    let sign_bit = 1u8 << (bits - 1);
+    for (c, &x) in codes.iter_mut().zip(xs) {
+        let m = x.abs();
+        if m <= MIN_MAG {
+            *c = 0;
+            continue;
+        }
+        let q = ((m.log2() - meta.emin) * inv).round();
+        let mag = 1 + (q.max(0.0) as u32).min(levels - 1) as u8;
+        *c = if x < 0.0 { mag | sign_bit } else { mag };
+    }
+    meta
+}
+
+/// Dequantize one group.
+pub fn dequantize_group(codes: &[u8], meta: LogMeta, bits: u8, out: &mut [f32]) {
+    debug_assert_eq!(codes.len(), out.len());
+    let levels = mag_levels(bits);
+    let span = (meta.emax - meta.emin).max(1e-6);
+    let step = if levels > 1 { span / (levels - 1) as f32 } else { 0.0 };
+    let sign_bit = 1u8 << (bits - 1);
+    let mag_mask = sign_bit - 1;
+    for (x, &c) in out.iter_mut().zip(codes) {
+        let mag = c & mag_mask;
+        if mag == 0 {
+            *x = 0.0;
+            continue;
+        }
+        let e = meta.emin + (mag - 1) as f32 * step; // code 1 -> emin
+        let v = e.exp2();
+        *x = if c & sign_bit != 0 { -v } else { v };
+    }
+}
+
+/// Full-tensor quantize.
+pub fn quantize(
+    data: &[f32],
+    bits: u8,
+    group_size: usize,
+    codes: &mut Vec<u8>,
+    metas: &mut Vec<LogMeta>,
+) {
+    codes.clear();
+    codes.resize(data.len(), 0);
+    metas.clear();
+    for (xs, cs) in data.chunks(group_size).zip(codes.chunks_mut(group_size)) {
+        metas.push(quantize_group(xs, bits, cs));
+    }
+}
+
+/// Full-tensor dequantize.
+pub fn dequantize(codes: &[u8], metas: &[LogMeta], bits: u8, group_size: usize, out: &mut [f32]) {
+    assert_eq!(codes.len(), out.len());
+    for ((cs, &meta), xs) in codes.chunks(group_size).zip(metas).zip(out.chunks_mut(group_size)) {
+        dequantize_group(cs, meta, bits, xs);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::sqnr_db;
+    use crate::util::Prng;
+
+    fn roundtrip(data: &[f32], bits: u8, gs: usize) -> Vec<f32> {
+        let (mut codes, mut metas) = (Vec::new(), Vec::new());
+        quantize(data, bits, gs, &mut codes, &mut metas);
+        let mut out = vec![0f32; data.len()];
+        dequantize(&codes, &metas, bits, gs, &mut out);
+        out
+    }
+
+    #[test]
+    fn zeros_and_signs_roundtrip() {
+        let data = vec![0.0f32, -1.0, 1.0, -4.0, 4.0, 0.0, 0.25, -0.25];
+        let out = roundtrip(&data, 8, 8);
+        for (a, b) in data.iter().zip(&out) {
+            assert_eq!(a.signum() * (a.abs() > 0.0) as i32 as f32,
+                       b.signum() * (b.abs() > 0.0) as i32 as f32,
+                       "sign/zero mismatch {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn powers_of_two_near_exact_at_int8() {
+        let data: Vec<f32> = (0..32).map(|i| 2f32.powi(i % 8 - 4)).collect();
+        let out = roundtrip(&data, 8, 32);
+        for (a, b) in data.iter().zip(&out) {
+            assert!(((a - b) / a).abs() < 0.02, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn relative_error_bounded_at_high_bits() {
+        let mut rng = Prng::new(41);
+        let data: Vec<f32> =
+            (0..4096).map(|_| rng.normal_f32(0.0, 1.0)).filter(|x| x.abs() > 1e-3).collect();
+        let out = roundtrip(&data, 8, 128);
+        for (a, b) in data.iter().zip(&out) {
+            // 127 levels over the group's log range: generous bound.
+            assert!(((a - b) / a).abs() < 0.25, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn collapses_at_int2() {
+        // One magnitude bit: everything snaps to a single magnitude per sign.
+        let mut rng = Prng::new(42);
+        let mut data = vec![0f32; 8192];
+        rng.fill_activations(&mut data, 1.0);
+        let s2 = sqnr_db(&data, &roundtrip(&data, 2, 32));
+        let s4 = sqnr_db(&data, &roundtrip(&data, 4, 32));
+        assert!(s4 > s2 + 6.0, "INT4 {s4} dB must be far above INT2 {s2} dB");
+        // And INT2 LogFMT must be clearly bad in absolute terms (collapse).
+        assert!(s2 < 8.0, "INT2 LogFMT should collapse, got {s2} dB");
+    }
+
+    #[test]
+    fn codes_fit_bit_width() {
+        let mut rng = Prng::new(43);
+        let mut data = vec![0f32; 1024];
+        rng.fill_normal(&mut data, 0.0, 5.0);
+        for bits in 2..=8u8 {
+            let (mut codes, mut metas) = (Vec::new(), Vec::new());
+            quantize(&data, bits, 32, &mut codes, &mut metas);
+            let max = (1u16 << bits) - 1;
+            assert!(codes.iter().all(|&c| (c as u16) <= max), "bits={bits}");
+        }
+    }
+}

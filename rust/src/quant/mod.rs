@@ -1,0 +1,17 @@
+//! The paper's compression stack: any-bit group quantization with bit
+//! splitting (Fig. 3), spike reserving (Fig. 5), the Hadamard / LogFMT
+//! baselines it is compared against (Table 3), and the self-describing wire
+//! format that carries the payloads through the collectives.
+
+pub mod bitsplit;
+pub mod hadamard;
+pub mod logfmt;
+pub mod rtn;
+pub mod scheme;
+pub mod spike;
+pub mod wire;
+
+pub use rtn::GroupMeta;
+pub use scheme::{Codec, CodecBuffers};
+pub use spike::{ScaleMode, SpikeMeta};
+pub use wire::SectionSizes;

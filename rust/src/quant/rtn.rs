@@ -1,0 +1,288 @@
+//! Group-wise asymmetric Round-To-Nearest (RTN) quantization — the baseline
+//! scheme of the paper (Tables 1, 2) and the inner primitive reused by spike
+//! reserving, Hadamard and LogFMT.
+//!
+//! Per group of `group_size` values: `scale = (max - min) / (2^bits - 1)`,
+//! `zero = min`, `q = clamp(round((x - zero) / scale), 0, 2^bits - 1)`.
+//! Scale and zero travel on the wire as BF16 (the paper's metadata format),
+//! so quantization is performed against the *wire-rounded* scale/zero — the
+//! encoder and decoder then agree bit-exactly.
+
+use crate::util::bf16::bf16_round;
+
+/// Per-group dequantization metadata.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GroupMeta {
+    /// Quantization step (wire precision).
+    pub scale: f32,
+    /// Asymmetric offset = group minimum (wire precision).
+    pub zero: f32,
+}
+
+impl GroupMeta {
+    pub const IDENTITY: GroupMeta = GroupMeta { scale: 1.0, zero: 0.0 };
+}
+
+/// Number of groups covering `n` values at `group_size` (tail group included).
+#[inline]
+pub fn num_groups(n: usize, group_size: usize) -> usize {
+    n.div_ceil(group_size)
+}
+
+/// Largest representable code for a bit width.
+#[inline(always)]
+pub fn qmax(bits: u8) -> u32 {
+    debug_assert!((1..=8).contains(&bits));
+    (1u32 << bits) - 1
+}
+
+/// Compute wire-precision meta for one group given its (min, max).
+///
+/// The range is computed in f64 and clamped so extreme inputs (±f32::MAX)
+/// cannot overflow the scale to infinity and poison the dequant with NaNs.
+#[inline]
+pub fn meta_from_minmax(min: f32, max: f32, bits: u8) -> GroupMeta {
+    let range = (max as f64 - min as f64).min(f32::MAX as f64 / 2.0) as f32;
+    let scale = if range > 0.0 { range / qmax(bits) as f32 } else { 1.0 };
+    GroupMeta { scale: bf16_round(scale), zero: bf16_round(min) }
+}
+
+/// Quantize one group into `codes` (one code per input, values < 2^bits).
+///
+/// Returns the group meta. `codes` must be the same length as `xs`.
+pub fn quantize_group(xs: &[f32], bits: u8, codes: &mut [u8]) -> GroupMeta {
+    debug_assert_eq!(xs.len(), codes.len());
+    debug_assert!(xs.iter().all(|x| x.is_finite()), "RTN requires finite inputs");
+    if xs.is_empty() {
+        return GroupMeta::IDENTITY;
+    }
+    let (min, max) = minmax(xs);
+    let meta = meta_from_minmax(min, max, bits);
+    quantize_group_with_meta(xs, bits, meta, codes);
+    meta
+}
+
+/// Quantize against an externally chosen meta (used by spike reserving,
+/// which shrinks the range before calling this).
+///
+/// Hot path (§Perf): rust's saturating float→int cast replaces the
+/// floor/max/min chain — one fma-able multiply-add, one min, one cast.
+#[inline]
+pub fn quantize_group_with_meta(xs: &[f32], bits: u8, meta: GroupMeta, codes: &mut [u8]) {
+    let inv = 1.0 / meta.scale;
+    let qm = qmax(bits) as f32;
+    for (c, &x) in codes.iter_mut().zip(xs) {
+        // `as u8` saturates (negatives -> 0), and truncation == floor for
+        // the non-negative in-range values; min() caps the top.
+        *c = ((x - meta.zero) * inv + 0.5).min(qm) as u8;
+    }
+}
+
+/// Min/max of a slice without NaN-handling branches (auto-vectorizable).
+#[inline]
+pub(crate) fn minmax(xs: &[f32]) -> (f32, f32) {
+    let mut mn = f32::INFINITY;
+    let mut mx = f32::NEG_INFINITY;
+    for &x in xs {
+        mn = if x < mn { x } else { mn };
+        mx = if x > mx { x } else { mx };
+    }
+    (mn, mx)
+}
+
+/// Dequantize one group: `x̂ = q * scale + zero`.
+#[inline]
+pub fn dequantize_group(codes: &[u8], meta: GroupMeta, out: &mut [f32]) {
+    debug_assert_eq!(codes.len(), out.len());
+    for (x, &c) in out.iter_mut().zip(codes) {
+        *x = c as f32 * meta.scale + meta.zero;
+    }
+}
+
+/// Dequantize-and-accumulate (the reduce step of a quantized collective).
+#[inline]
+pub fn dequantize_group_acc(codes: &[u8], meta: GroupMeta, acc: &mut [f32]) {
+    debug_assert_eq!(codes.len(), acc.len());
+    for (x, &c) in acc.iter_mut().zip(codes) {
+        *x += c as f32 * meta.scale + meta.zero;
+    }
+}
+
+/// Quantize a full tensor group-by-group.
+///
+/// `codes` is resized to `data.len()`; `metas` to the group count.
+pub fn quantize(
+    data: &[f32],
+    bits: u8,
+    group_size: usize,
+    codes: &mut Vec<u8>,
+    metas: &mut Vec<GroupMeta>,
+) {
+    assert!(group_size > 0);
+    codes.clear();
+    codes.resize(data.len(), 0);
+    metas.clear();
+    metas.reserve(num_groups(data.len(), group_size));
+    for (xs, cs) in data.chunks(group_size).zip(codes.chunks_mut(group_size)) {
+        metas.push(quantize_group(xs, bits, cs));
+    }
+}
+
+/// Dequantize a full tensor group-by-group into `out` (same length as codes).
+pub fn dequantize(codes: &[u8], metas: &[GroupMeta], group_size: usize, out: &mut [f32]) {
+    assert_eq!(codes.len(), out.len());
+    assert_eq!(metas.len(), num_groups(codes.len(), group_size));
+    for ((cs, &meta), xs) in
+        codes.chunks(group_size).zip(metas).zip(out.chunks_mut(group_size))
+    {
+        dequantize_group(cs, meta, xs);
+    }
+}
+
+/// Worst-case absolute reconstruction error for a group quantized with
+/// `meta`: half a step, plus the bf16 rounding of scale (over the range)
+/// and of zero. Used by property tests.
+pub fn error_bound(meta: GroupMeta, _bits: u8, min: f32, max: f32) -> f32 {
+    let step = meta.scale;
+    // bf16 relative error <= 2^-8 on scale (amplified by qmax) and zero.
+    let bf16_eps = 1.0 / 256.0;
+    0.5 * step + bf16_eps * (max - min).abs() + bf16_eps * min.abs() + 1e-6
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{arb_tensor, cases};
+    use crate::util::stats::sqnr_db;
+
+    fn roundtrip(data: &[f32], bits: u8, gs: usize) -> Vec<f32> {
+        let mut codes = Vec::new();
+        let mut metas = Vec::new();
+        quantize(data, bits, gs, &mut codes, &mut metas);
+        let mut out = vec![0f32; data.len()];
+        dequantize(&codes, &metas, gs, &mut out);
+        out
+    }
+
+    #[test]
+    fn exact_for_constant_group() {
+        let data = vec![3.5f32; 64];
+        let out = roundtrip(&data, 4, 32);
+        for &x in &out {
+            assert_eq!(x, 3.5);
+        }
+    }
+
+    #[test]
+    fn zeros_stay_zero() {
+        let data = vec![0f32; 100];
+        assert!(roundtrip(&data, 2, 32).iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn int8_on_linear_ramp_is_tight() {
+        let data: Vec<f32> = (0..128).map(|i| i as f32 / 127.0).collect();
+        let out = roundtrip(&data, 8, 128);
+        for (a, b) in data.iter().zip(&out) {
+            assert!((a - b).abs() < 0.01, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn endpoints_are_representable() {
+        // min and max of each group must reconstruct within bf16 meta error.
+        let data = vec![-7.0f32, 1.0, 2.0, 13.0];
+        let out = roundtrip(&data, 2, 4);
+        assert!((out[0] + 7.0).abs() < 0.1, "min endpoint {}", out[0]);
+        assert!((out[3] - 13.0).abs() < 0.1, "max endpoint {}", out[3]);
+    }
+
+    #[test]
+    fn sqnr_improves_with_bits() {
+        let mut rng = crate::util::Prng::new(11);
+        let mut data = vec![0f32; 4096];
+        rng.fill_normal(&mut data, 0.0, 1.0);
+        let mut prev = -100.0;
+        for bits in [2u8, 3, 4, 5, 6, 8] {
+            let s = sqnr_db(&data, &roundtrip(&data, bits, 128));
+            assert!(s > prev + 3.0, "bits={bits}: {s} !> {prev}+3");
+            prev = s;
+        }
+    }
+
+    #[test]
+    fn finer_groups_help_on_heavy_tails() {
+        let mut rng = crate::util::Prng::new(12);
+        let mut data = vec![0f32; 8192];
+        rng.fill_activations(&mut data, 1.0);
+        let s128 = sqnr_db(&data, &roundtrip(&data, 3, 128));
+        let s32 = sqnr_db(&data, &roundtrip(&data, 3, 32));
+        assert!(s32 > s128, "gs32 {s32} should beat gs128 {s128}");
+    }
+
+    #[test]
+    fn tail_group_handled() {
+        let data: Vec<f32> = (0..37).map(|i| i as f32).collect();
+        let out = roundtrip(&data, 8, 32);
+        assert_eq!(out.len(), 37);
+        for (a, b) in data.iter().zip(&out) {
+            assert!((a - b).abs() < 0.3);
+        }
+    }
+
+    #[test]
+    fn property_error_bounded_all_bits() {
+        cases(100, 128, |rng| {
+            let data = arb_tensor(rng, 600);
+            let bits = [2u8, 3, 4, 5, 6, 7, 8][rng.below(7)];
+            let gs = [32usize, 128][rng.below(2)];
+            let out = roundtrip(&data, bits, gs);
+            for (g, (xs, rec)) in data.chunks(gs).zip(out.chunks(gs)).enumerate() {
+                let min = xs.iter().cloned().fold(f32::INFINITY, f32::min);
+                let max = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let meta = meta_from_minmax(min, max, bits);
+                let bound = error_bound(meta, bits, min, max);
+                for (a, b) in xs.iter().zip(rec) {
+                    assert!(
+                        (a - b).abs() <= bound,
+                        "group {g} bits {bits} gs {gs}: |{a} - {b}| > {bound}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn codes_respect_bit_width() {
+        cases(101, 64, |rng| {
+            let data = arb_tensor(rng, 300);
+            let bits = [2u8, 3, 5, 7][rng.below(4)];
+            let mut codes = Vec::new();
+            let mut metas = Vec::new();
+            quantize(&data, bits, 32, &mut codes, &mut metas);
+            for &c in &codes {
+                assert!((c as u32) <= qmax(bits));
+            }
+        });
+    }
+
+    #[test]
+    fn dequant_acc_equals_dequant_plus_add() {
+        let mut rng = crate::util::Prng::new(13);
+        let mut data = vec![0f32; 256];
+        rng.fill_normal(&mut data, 0.0, 2.0);
+        let mut codes = Vec::new();
+        let mut metas = Vec::new();
+        quantize(&data, 4, 32, &mut codes, &mut metas);
+        let mut plain = vec![0f32; 256];
+        dequantize(&codes, &metas, 32, &mut plain);
+        let mut acc = vec![1.0f32; 256];
+        for (cs, &m) in codes.chunks(32).zip(&metas) {
+            let off = (cs.as_ptr() as usize - codes.as_ptr() as usize) / std::mem::size_of::<u8>();
+            dequantize_group_acc(cs, m, &mut acc[off..off + cs.len()]);
+        }
+        for i in 0..256 {
+            assert!((acc[i] - (1.0 + plain[i])).abs() < 1e-6);
+        }
+    }
+}

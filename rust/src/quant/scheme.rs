@@ -1,0 +1,653 @@
+//! The unified codec: one type that every collective and engine component
+//! uses to turn activations/gradients into wire payloads and back.
+//!
+//! A [`Codec`] pairs a quantization scheme (BF16 passthrough, RTN, spike
+//! reserving, Hadamard, LogFMT) with its parameters (bits, group size,
+//! metadata mode) and produces self-describing payloads in the
+//! [`wire`](super::wire) format. Decoding dispatches on the wire header, so
+//! a rank can decode any payload the fabric delivers.
+
+use anyhow::{bail, ensure, Result};
+
+use super::bitsplit;
+use super::hadamard;
+use super::logfmt::{self, LogMeta};
+use super::rtn::{self, GroupMeta};
+use super::spike::{self, ScaleMode, SpikeMeta};
+use super::wire::{self, Header, SectionSizes, WireScheme, HEADER_LEN};
+use crate::util::bf16::{self, Bf16};
+
+/// A fully parameterized quantization scheme.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Codec {
+    /// No quantization: BF16 on the wire (the paper's NCCL baseline volume).
+    Bf16,
+    /// Group-wise asymmetric round-to-nearest.
+    Rtn { bits: u8, group_size: u16, scale_mode: ScaleMode },
+    /// RTN over the spike-shrunken range, spikes reserved exactly.
+    Spike { bits: u8, group_size: u16, scale_mode: ScaleMode },
+    /// Hadamard-rotated RTN baseline.
+    Hadamard { bits: u8, group_size: u16 },
+    /// Log-domain quantization baseline.
+    LogFmt { bits: u8, group_size: u16 },
+}
+
+/// Reusable scratch to keep the hot path allocation-free.
+#[derive(Default)]
+pub struct CodecBuffers {
+    codes: Vec<u8>,
+    metas: Vec<GroupMeta>,
+    spikes: Vec<SpikeMeta>,
+    logmetas: Vec<LogMeta>,
+    scratch: Vec<f32>,
+}
+
+impl Codec {
+    /// Parse shorthand like `bf16`, `int8`, `int5`, `int2-sr`, `int4-had`,
+    /// `int3-log`, with optional `@gs` suffix (`int2-sr@32`) and `!` for
+    /// integer metadata (`int2-sr@32!`).
+    pub fn parse(s: &str) -> Result<Codec> {
+        let s = s.trim().to_ascii_lowercase();
+        if s == "bf16" || s == "fp16" {
+            return Ok(Codec::Bf16);
+        }
+        let (body, gs) = match s.split_once('@') {
+            Some((b, g)) => (b.to_string(), g.to_string()),
+            None => (s.clone(), String::new()),
+        };
+        let intlog = gs.ends_with('!') || body.ends_with('!');
+        let gs = gs.trim_end_matches('!');
+        let body = body.trim_end_matches('!');
+        let (bits_part, kind) = match body.split_once('-') {
+            Some((b, k)) => (b, k),
+            None => (body, "rtn"),
+        };
+        ensure!(bits_part.starts_with("int"), "unrecognized codec '{s}'");
+        let bits: u8 = bits_part[3..].parse()?;
+        ensure!((1..=8).contains(&bits), "bits out of range in '{s}'");
+        let default_gs: u16 = if bits <= 4 { 32 } else { 128 };
+        let group_size: u16 = if gs.is_empty() { default_gs } else { gs.parse()? };
+        let scale_mode = if intlog { ScaleMode::IntLog } else { ScaleMode::Bf16 };
+        Ok(match kind {
+            "rtn" => Codec::Rtn { bits, group_size, scale_mode },
+            "sr" => Codec::Spike { bits, group_size, scale_mode },
+            "had" => Codec::Hadamard { bits, group_size },
+            "log" => Codec::LogFmt { bits, group_size },
+            other => bail!("unknown scheme '{other}' in '{s}'"),
+        })
+    }
+
+    /// Paper-style display name (`INT2_SR`, `INT5`, `BF16`, …).
+    pub fn name(&self) -> String {
+        match *self {
+            Codec::Bf16 => "BF16".into(),
+            Codec::Rtn { bits, .. } => format!("INT{bits}"),
+            Codec::Spike { bits, .. } => format!("INT{bits}_SR"),
+            Codec::Hadamard { bits, .. } => format!("INT{bits}_HAD"),
+            Codec::LogFmt { bits, .. } => format!("INT{bits}_LOG"),
+        }
+    }
+
+    pub fn bits(&self) -> u8 {
+        match *self {
+            Codec::Bf16 => 16,
+            Codec::Rtn { bits, .. }
+            | Codec::Spike { bits, .. }
+            | Codec::Hadamard { bits, .. }
+            | Codec::LogFmt { bits, .. } => bits,
+        }
+    }
+
+    pub fn group_size(&self) -> usize {
+        match *self {
+            Codec::Bf16 => 0,
+            Codec::Rtn { group_size, .. }
+            | Codec::Spike { group_size, .. }
+            | Codec::Hadamard { group_size, .. }
+            | Codec::LogFmt { group_size, .. } => group_size as usize,
+        }
+    }
+
+    fn header(&self, n: usize) -> Header {
+        let mode = |m: ScaleMode| if m == ScaleMode::IntLog { 1u8 } else { 0 };
+        let (scheme, bits, scale_mode, group_size) = match *self {
+            Codec::Bf16 => (WireScheme::Bf16, 16, 0, 0),
+            Codec::Rtn { bits, group_size, scale_mode } => {
+                (WireScheme::Rtn, bits, mode(scale_mode), group_size)
+            }
+            Codec::Spike { bits, group_size, scale_mode } => {
+                (WireScheme::SpikeReserve, bits, mode(scale_mode), group_size)
+            }
+            Codec::Hadamard { bits, group_size } => (WireScheme::Hadamard, bits, 0, group_size),
+            Codec::LogFmt { bits, group_size } => (WireScheme::LogFmt, bits, 0, group_size),
+        };
+        Header { scheme, bits, scale_mode, group_size, n: n as u32 }
+    }
+
+    /// Section byte sizes for a payload of `n` values (Table 4).
+    pub fn sections(&self, n: usize) -> SectionSizes {
+        let header = HEADER_LEN;
+        match *self {
+            Codec::Bf16 => {
+                SectionSizes { header, quantized: 2 * n, scale_zero: 0, spikes: 0 }
+            }
+            Codec::Rtn { bits, group_size, scale_mode }
+            | Codec::Spike { bits, group_size, scale_mode } => {
+                let g = rtn::num_groups(n, group_size as usize);
+                let mode = if scale_mode == ScaleMode::IntLog { 1 } else { 0 };
+                let spikes = if matches!(self, Codec::Spike { .. }) {
+                    g * wire::spike_bytes_per_group(mode)
+                } else {
+                    0
+                };
+                SectionSizes {
+                    header,
+                    quantized: bitsplit::packed_len(bits, n),
+                    scale_zero: g * wire::scale_zero_bytes_per_group(mode),
+                    spikes,
+                }
+            }
+            Codec::Hadamard { bits, group_size } => {
+                let g = rtn::num_groups(n, group_size as usize);
+                SectionSizes {
+                    header,
+                    quantized: bitsplit::packed_len(bits, n),
+                    scale_zero: g * wire::scale_zero_bytes_per_group(0),
+                    spikes: 0,
+                }
+            }
+            Codec::LogFmt { bits, group_size } => {
+                let g = rtn::num_groups(n, group_size as usize);
+                SectionSizes {
+                    header,
+                    quantized: bitsplit::packed_len(bits, n),
+                    scale_zero: g * 4, // emin/emax bf16
+                    spikes: 0,
+                }
+            }
+        }
+    }
+
+    /// Total wire bytes for `n` values.
+    pub fn wire_len(&self, n: usize) -> usize {
+        self.sections(n).total()
+    }
+
+    /// Wire volume as a fraction of the BF16 baseline (2 bytes/value).
+    pub fn compression_ratio(&self, n: usize) -> f64 {
+        self.wire_len(n) as f64 / (2.0 * n as f64)
+    }
+
+    /// Encode `data` into `out` (appended), reusing `bufs` for scratch.
+    pub fn encode_with(&self, data: &[f32], bufs: &mut CodecBuffers, out: &mut Vec<u8>) {
+        let n = data.len();
+        let start = out.len();
+        self.header(n).write(out);
+        match *self {
+            Codec::Bf16 => bf16::encode_slice(data, out),
+            Codec::Rtn { bits, group_size, scale_mode } => {
+                quantize_rtn_mode(data, bits, group_size as usize, scale_mode, bufs);
+                bitsplit::pack(&bufs.codes, bits, out);
+                write_group_metas(&bufs.metas, scale_mode, out);
+            }
+            Codec::Spike { bits, group_size, scale_mode } => {
+                spike::quantize(
+                    data,
+                    bits,
+                    group_size as usize,
+                    scale_mode,
+                    &mut bufs.codes,
+                    &mut bufs.metas,
+                    &mut bufs.spikes,
+                );
+                bitsplit::pack(&bufs.codes, bits, out);
+                write_group_metas(&bufs.metas, scale_mode, out);
+                write_spikes(&bufs.spikes, scale_mode, out);
+            }
+            Codec::Hadamard { bits, group_size } => {
+                hadamard::quantize(data, bits, group_size as usize, &mut bufs.codes, &mut bufs.metas);
+                bitsplit::pack(&bufs.codes, bits, out);
+                write_group_metas(&bufs.metas, ScaleMode::Bf16, out);
+            }
+            Codec::LogFmt { bits, group_size } => {
+                logfmt::quantize(data, bits, group_size as usize, &mut bufs.codes, &mut bufs.logmetas);
+                bitsplit::pack(&bufs.codes, bits, out);
+                for m in &bufs.logmetas {
+                    out.extend_from_slice(&Bf16::from_f32(m.emin).0.to_le_bytes());
+                }
+                for m in &bufs.logmetas {
+                    out.extend_from_slice(&Bf16::from_f32(m.emax).0.to_le_bytes());
+                }
+            }
+        }
+        debug_assert_eq!(out.len() - start, self.wire_len(n), "wire_len mismatch for {self:?}");
+    }
+
+    /// Convenience: encode into a fresh Vec.
+    pub fn encode(&self, data: &[f32]) -> Vec<u8> {
+        let mut bufs = CodecBuffers::default();
+        let mut out = Vec::with_capacity(self.wire_len(data.len()));
+        self.encode_with(data, &mut bufs, &mut out);
+        out
+    }
+
+    /// Decode a payload into `out` (length must equal the payload's `n`).
+    pub fn decode_with(wire_bytes: &[u8], bufs: &mut CodecBuffers, out: &mut [f32]) -> Result<()> {
+        let h = Header::parse(wire_bytes)?;
+        let n = h.n as usize;
+        ensure!(out.len() == n, "decode output length {} != payload n {}", out.len(), n);
+        let codec = codec_from_header(&h)?;
+        ensure!(
+            wire_bytes.len() == codec.wire_len(n),
+            "payload length {} != expected {}",
+            wire_bytes.len(),
+            codec.wire_len(n)
+        );
+        let body = &wire_bytes[HEADER_LEN..];
+        match codec {
+            Codec::Bf16 => bf16::decode_slice(body, out),
+            Codec::Rtn { bits, group_size, scale_mode } => {
+                let gs = group_size as usize;
+                let g = rtn::num_groups(n, gs);
+                let qlen = bitsplit::packed_len(bits, n);
+                bitsplit::unpack(&body[..qlen], bits, n, &mut bufs.codes);
+                read_group_metas(&body[qlen..], g, scale_mode, &mut bufs.metas)?;
+                rtn::dequantize(&bufs.codes, &bufs.metas, gs, out);
+            }
+            Codec::Spike { bits, group_size, scale_mode } => {
+                let gs = group_size as usize;
+                let g = rtn::num_groups(n, gs);
+                let qlen = bitsplit::packed_len(bits, n);
+                bitsplit::unpack(&body[..qlen], bits, n, &mut bufs.codes);
+                let mode = if scale_mode == ScaleMode::IntLog { 1 } else { 0 };
+                let sz = g * wire::scale_zero_bytes_per_group(mode);
+                read_group_metas(&body[qlen..qlen + sz], g, scale_mode, &mut bufs.metas)?;
+                read_spikes(&body[qlen + sz..], g, scale_mode, &mut bufs.spikes)?;
+                spike::dequantize(&bufs.codes, &bufs.metas, &bufs.spikes, gs, out);
+            }
+            Codec::Hadamard { bits, group_size } => {
+                let gs = group_size as usize;
+                let g = rtn::num_groups(n, gs);
+                let qlen = bitsplit::packed_len(bits, n);
+                bitsplit::unpack(&body[..qlen], bits, n, &mut bufs.codes);
+                read_group_metas(&body[qlen..], g, ScaleMode::Bf16, &mut bufs.metas)?;
+                hadamard::dequantize(&bufs.codes, &bufs.metas, gs, out);
+            }
+            Codec::LogFmt { bits, group_size } => {
+                let gs = group_size as usize;
+                let g = rtn::num_groups(n, gs);
+                let qlen = bitsplit::packed_len(bits, n);
+                bitsplit::unpack(&body[..qlen], bits, n, &mut bufs.codes);
+                let meta = &body[qlen..];
+                ensure!(meta.len() == 4 * g, "logfmt meta length");
+                bufs.logmetas.clear();
+                for i in 0..g {
+                    let emin = Bf16(u16::from_le_bytes([meta[2 * i], meta[2 * i + 1]])).to_f32();
+                    let j = 2 * g + 2 * i;
+                    let emax = Bf16(u16::from_le_bytes([meta[j], meta[j + 1]])).to_f32();
+                    bufs.logmetas.push(LogMeta { emin, emax });
+                }
+                logfmt::dequantize(&bufs.codes, &bufs.logmetas, bits, gs, out);
+            }
+        }
+        Ok(())
+    }
+
+    /// Convenience decode.
+    pub fn decode(wire_bytes: &[u8], out: &mut [f32]) -> Result<()> {
+        let mut bufs = CodecBuffers::default();
+        Self::decode_with(wire_bytes, &mut bufs, out)
+    }
+
+    /// Decode and accumulate into `acc` (the reduce step of a collective).
+    ///
+    /// §Perf: the RTN path (what the collectives move) is fused — unpack
+    /// once, then dequantize-accumulate per group in a single pass, with
+    /// no scratch buffer or extra memory traffic. Other schemes fall back
+    /// to decode-then-add.
+    pub fn decode_sum_with(
+        wire_bytes: &[u8],
+        bufs: &mut CodecBuffers,
+        acc: &mut [f32],
+    ) -> Result<()> {
+        let h = Header::parse(wire_bytes)?;
+        let n = h.n as usize;
+        ensure!(acc.len() == n, "decode_sum output length {} != payload n {}", acc.len(), n);
+        if h.scheme == WireScheme::Rtn {
+            let codec = codec_from_header(&h)?;
+            ensure!(
+                wire_bytes.len() == codec.wire_len(n),
+                "payload length {} != expected {}",
+                wire_bytes.len(),
+                codec.wire_len(n)
+            );
+            let (bits, gs, scale_mode) = match codec {
+                Codec::Rtn { bits, group_size, scale_mode } => {
+                    (bits, group_size as usize, scale_mode)
+                }
+                _ => unreachable!(),
+            };
+            let body = &wire_bytes[HEADER_LEN..];
+            let g = rtn::num_groups(n, gs);
+            let qlen = bitsplit::packed_len(bits, n);
+            bitsplit::unpack(&body[..qlen], bits, n, &mut bufs.codes);
+            read_group_metas(&body[qlen..], g, scale_mode, &mut bufs.metas)?;
+            for ((cs, &meta), xs) in
+                bufs.codes.chunks(gs).zip(bufs.metas.iter()).zip(acc.chunks_mut(gs))
+            {
+                rtn::dequantize_group_acc(cs, meta, xs);
+            }
+            return Ok(());
+        }
+        bufs.scratch.clear();
+        bufs.scratch.resize(acc.len(), 0.0);
+        let mut scratch = std::mem::take(&mut bufs.scratch);
+        let r = Self::decode_with(wire_bytes, bufs, &mut scratch);
+        for (a, s) in acc.iter_mut().zip(&scratch) {
+            *a += *s;
+        }
+        bufs.scratch = scratch;
+        r
+    }
+
+    /// Quantize-dequantize in place: what the tensor "experiences" crossing
+    /// the wire. Used by accuracy experiments and the TP engine.
+    pub fn qdq(&self, data: &mut [f32], bufs: &mut CodecBuffers) {
+        if matches!(self, Codec::Bf16) {
+            for x in data.iter_mut() {
+                *x = crate::util::bf16::bf16_round(*x);
+            }
+            return;
+        }
+        let mut out = Vec::with_capacity(self.wire_len(data.len()));
+        self.encode_with(data, bufs, &mut out);
+        Self::decode_with(&out, bufs, data).expect("own payload must decode");
+    }
+}
+
+/// Reconstruct the codec described by a wire header.
+pub fn codec_from_header(h: &Header) -> Result<Codec> {
+    let scale_mode = if h.scale_mode == 1 { ScaleMode::IntLog } else { ScaleMode::Bf16 };
+    Ok(match h.scheme {
+        WireScheme::Bf16 => Codec::Bf16,
+        WireScheme::Rtn => Codec::Rtn { bits: h.bits, group_size: h.group_size, scale_mode },
+        WireScheme::SpikeReserve => {
+            Codec::Spike { bits: h.bits, group_size: h.group_size, scale_mode }
+        }
+        WireScheme::Hadamard => Codec::Hadamard { bits: h.bits, group_size: h.group_size },
+        WireScheme::LogFmt => Codec::LogFmt { bits: h.bits, group_size: h.group_size },
+    })
+}
+
+/// RTN with the metadata rounded to the requested wire mode.
+fn quantize_rtn_mode(
+    data: &[f32],
+    bits: u8,
+    gs: usize,
+    mode: ScaleMode,
+    bufs: &mut CodecBuffers,
+) {
+    match mode {
+        ScaleMode::Bf16 => rtn::quantize(data, bits, gs, &mut bufs.codes, &mut bufs.metas),
+        ScaleMode::IntLog => {
+            bufs.codes.clear();
+            bufs.codes.resize(data.len(), 0);
+            bufs.metas.clear();
+            for (xs, cs) in data.chunks(gs).zip(bufs.codes.chunks_mut(gs)) {
+                let mut mn = f32::INFINITY;
+                let mut mx = f32::NEG_INFINITY;
+                for &x in xs {
+                    mn = mn.min(x);
+                    mx = mx.max(x);
+                }
+                let meta =
+                    spike::meta_through_wire(rtn::meta_from_minmax(mn, mx, bits), mode);
+                rtn::quantize_group_with_meta(xs, bits, meta, cs);
+                bufs.metas.push(meta);
+            }
+        }
+    }
+}
+
+/// Serialize group metas: scales contiguous, then zeros (vectorized access).
+fn write_group_metas(metas: &[GroupMeta], mode: ScaleMode, out: &mut Vec<u8>) {
+    match mode {
+        ScaleMode::Bf16 => {
+            for m in metas {
+                out.extend_from_slice(&Bf16::from_f32(m.scale).0.to_le_bytes());
+            }
+            for m in metas {
+                out.extend_from_slice(&Bf16::from_f32(m.zero).0.to_le_bytes());
+            }
+        }
+        ScaleMode::IntLog => {
+            for m in metas {
+                out.push(spike::scale_to_int(m.scale) as u8);
+            }
+            for m in metas {
+                // zero-point: zero = -zp * scale (see spike.rs docs).
+                let zp = (-m.zero / m.scale).round().max(-128.0).min(127.0) as i8;
+                out.push(zp as u8);
+            }
+        }
+    }
+}
+
+fn read_group_metas(
+    bytes: &[u8],
+    g: usize,
+    mode: ScaleMode,
+    metas: &mut Vec<GroupMeta>,
+) -> Result<()> {
+    metas.clear();
+    match mode {
+        ScaleMode::Bf16 => {
+            ensure!(bytes.len() >= 4 * g, "scale/zero section too short");
+            for i in 0..g {
+                let scale = Bf16(u16::from_le_bytes([bytes[2 * i], bytes[2 * i + 1]])).to_f32();
+                let j = 2 * g + 2 * i;
+                let zero = Bf16(u16::from_le_bytes([bytes[j], bytes[j + 1]])).to_f32();
+                metas.push(GroupMeta { scale, zero });
+            }
+        }
+        ScaleMode::IntLog => {
+            ensure!(bytes.len() >= 2 * g, "int scale/zero section too short");
+            for i in 0..g {
+                let scale = spike::scale_from_int(bytes[i] as i8);
+                let zp = bytes[g + i] as i8;
+                metas.push(GroupMeta { scale, zero: -(zp as f32) * scale });
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Serialize spikes: min values, max values, then the two index arrays.
+fn write_spikes(spikes: &[SpikeMeta], mode: ScaleMode, out: &mut Vec<u8>) {
+    for s in spikes {
+        out.extend_from_slice(&Bf16::from_f32(s.min_val).0.to_le_bytes());
+    }
+    for s in spikes {
+        out.extend_from_slice(&Bf16::from_f32(s.max_val).0.to_le_bytes());
+    }
+    match mode {
+        ScaleMode::Bf16 => {
+            for s in spikes {
+                out.extend_from_slice(&Bf16::from_f32(s.min_idx as f32).0.to_le_bytes());
+            }
+            for s in spikes {
+                out.extend_from_slice(&Bf16::from_f32(s.max_idx as f32).0.to_le_bytes());
+            }
+        }
+        ScaleMode::IntLog => {
+            for s in spikes {
+                out.push(s.min_idx as u8);
+            }
+            for s in spikes {
+                out.push(s.max_idx as u8);
+            }
+        }
+    }
+}
+
+fn read_spikes(bytes: &[u8], g: usize, mode: ScaleMode, spikes: &mut Vec<SpikeMeta>) -> Result<()> {
+    spikes.clear();
+    let need = g * wire::spike_bytes_per_group(if mode == ScaleMode::IntLog { 1 } else { 0 });
+    ensure!(bytes.len() >= need, "spike section too short: {} < {need}", bytes.len());
+    let rd16 = |o: usize| Bf16(u16::from_le_bytes([bytes[o], bytes[o + 1]])).to_f32();
+    for i in 0..g {
+        let min_val = rd16(2 * i);
+        let max_val = rd16(2 * g + 2 * i);
+        let (min_idx, max_idx) = match mode {
+            ScaleMode::Bf16 => (rd16(4 * g + 2 * i) as u16, rd16(6 * g + 2 * i) as u16),
+            ScaleMode::IntLog => (bytes[4 * g + i] as u16, bytes[5 * g + i] as u16),
+        };
+        spikes.push(SpikeMeta { min_val, max_val, min_idx, max_idx });
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{arb_tensor, cases};
+    use crate::util::stats::sqnr_db;
+    use crate::util::Prng;
+
+    const ALL: &[&str] = &[
+        "bf16", "int8", "int6", "int5", "int4", "int3", "int2", "int2-sr@32", "int3-sr@32",
+        "int2-sr@32!", "int4-had@32", "int3-log@32", "int5@128!",
+    ];
+
+    #[test]
+    fn parse_and_name() {
+        assert_eq!(Codec::parse("bf16").unwrap(), Codec::Bf16);
+        assert_eq!(
+            Codec::parse("int5").unwrap(),
+            Codec::Rtn { bits: 5, group_size: 128, scale_mode: ScaleMode::Bf16 }
+        );
+        assert_eq!(
+            Codec::parse("int2-sr@32!").unwrap(),
+            Codec::Spike { bits: 2, group_size: 32, scale_mode: ScaleMode::IntLog }
+        );
+        assert_eq!(Codec::parse("int2-sr@32").unwrap().name(), "INT2_SR");
+        assert!(Codec::parse("int9").is_err());
+        assert!(Codec::parse("float7").is_err());
+    }
+
+    #[test]
+    fn wire_len_matches_encode_for_all_schemes() {
+        let mut rng = Prng::new(51);
+        for spec in ALL {
+            let c = Codec::parse(spec).unwrap();
+            for n in [1usize, 31, 32, 100, 4096] {
+                let mut data = vec![0f32; n];
+                rng.fill_activations(&mut data, 1.0);
+                let wire = c.encode(&data);
+                assert_eq!(wire.len(), c.wire_len(n), "{spec} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_all_schemes_bounded_error() {
+        cases(500, 60, |rng| {
+            let data = arb_tensor(rng, 700);
+            for spec in ALL {
+                let c = Codec::parse(spec).unwrap();
+                let wire = c.encode(&data);
+                let mut out = vec![0f32; data.len()];
+                Codec::decode(&wire, &mut out).unwrap();
+                // Universal sanity: outputs finite, and BF16 mode is tight.
+                assert!(out.iter().all(|x| x.is_finite()), "{spec}");
+                if *spec == "bf16" {
+                    for (a, b) in data.iter().zip(&out) {
+                        assert!((a - b).abs() <= a.abs() / 256.0 + 1e-30);
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn table4_int2_sr_totals() {
+        // 4096 BF16 values = 8192 bytes raw. Paper Table 4: 2560 (bf16 meta)
+        // and 2048 (integer meta), excluding our 16-byte header.
+        let bf = Codec::parse("int2-sr@32").unwrap().sections(4096);
+        assert_eq!(bf.quantized, 1024);
+        assert_eq!(bf.scale_zero, 512);
+        assert_eq!(bf.spikes, 1024);
+        assert_eq!(bf.total() - HEADER_LEN, 2560);
+        let il = Codec::parse("int2-sr@32!").unwrap().sections(4096);
+        assert_eq!(il.scale_zero, 256);
+        assert_eq!(il.spikes, 768);
+        assert_eq!(il.total() - HEADER_LEN, 2048);
+    }
+
+    #[test]
+    fn compression_ratio_ordering() {
+        let n = 1 << 20;
+        let mut prev = f64::INFINITY;
+        for spec in ["bf16", "int8", "int6", "int5", "int4", "int3", "int2"] {
+            let r = Codec::parse(spec).unwrap().compression_ratio(n);
+            assert!(r < prev, "{spec} ratio {r} !< {prev}");
+            prev = r;
+        }
+        // INT5 reduces >30% versus INT8 wire (paper's motivation).
+        let r8 = Codec::parse("int8").unwrap().wire_len(n) as f64;
+        let r5 = Codec::parse("int5").unwrap().wire_len(n) as f64;
+        assert!(r5 / r8 < 0.70, "INT5/INT8 = {}", r5 / r8);
+    }
+
+    #[test]
+    fn decode_sum_accumulates() {
+        let mut rng = Prng::new(52);
+        let mut a = vec![0f32; 512];
+        let mut b = vec![0f32; 512];
+        rng.fill_normal(&mut a, 0.0, 1.0);
+        rng.fill_normal(&mut b, 0.0, 1.0);
+        let c = Codec::parse("int8").unwrap();
+        let (wa, wb) = (c.encode(&a), c.encode(&b));
+        let mut bufs = CodecBuffers::default();
+        let mut acc = vec![0f32; 512];
+        Codec::decode_sum_with(&wa, &mut bufs, &mut acc).unwrap();
+        Codec::decode_sum_with(&wb, &mut bufs, &mut acc).unwrap();
+        for i in 0..512 {
+            assert!((acc[i] - (a[i] + b[i])).abs() < 0.1, "i={i}");
+        }
+    }
+
+    #[test]
+    fn qdq_fidelity_ordering_on_activations() {
+        // SQNR must degrade monotonically with bits, and SR at INT2 must
+        // beat RTN at INT2 (the paper's central accuracy claim).
+        let mut rng = Prng::new(53);
+        let mut data = vec![0f32; 1 << 15];
+        rng.fill_activations(&mut data, 1.0);
+        let mut bufs = CodecBuffers::default();
+        let q = |spec: &str, bufs: &mut CodecBuffers| {
+            let mut d = data.clone();
+            Codec::parse(spec).unwrap().qdq(&mut d, bufs);
+            sqnr_db(&data, &d)
+        };
+        let s8 = q("int8@32", &mut bufs);
+        let s5 = q("int5@32", &mut bufs);
+        let s4 = q("int4@32", &mut bufs);
+        let s2 = q("int2@32", &mut bufs);
+        let s2sr = q("int2-sr@32", &mut bufs);
+        assert!(s8 > s5 && s5 > s4 && s4 > s2, "{s8} {s5} {s4} {s2}");
+        assert!(s2sr > s2 + 6.0, "SR {s2sr} vs RTN {s2}");
+    }
+
+    #[test]
+    fn decoder_rejects_truncated_payloads() {
+        let c = Codec::parse("int4@32").unwrap();
+        let data = vec![1.0f32; 64];
+        let wire = c.encode(&data);
+        let mut out = vec![0f32; 64];
+        for cut in [0usize, 5, HEADER_LEN, wire.len() - 1] {
+            assert!(Codec::decode(&wire[..cut], &mut out).is_err(), "cut={cut}");
+        }
+        assert!(Codec::decode(&wire, &mut vec![0f32; 63]).is_err(), "wrong n");
+    }
+}

@@ -1,0 +1,349 @@
+//! Spike Reserving (paper §Spike Reserving, Fig. 5): per quantization group,
+//! the minimum and maximum ("spikes") are stored exactly in float precision
+//! together with their positions; the remaining values are RTN-quantized in
+//! the *shrunken* range [second-min, second-max]. After dequantization the
+//! spikes are restored to their original places.
+//!
+//! Two metadata encodings (Table 4):
+//! - [`ScaleMode::Bf16`]: scale, zero, spike values and spike indices all in
+//!   BF16 — 4 + 8 bytes per group.
+//! - [`ScaleMode::IntLog`]: Eq. 1 `scale_int = floor(log2(scale) · θ)` (θ=10)
+//!   in i8, an i8 integer zero-point, BF16 spike values and u8 spike
+//!   indices — 2 + 6 bytes per group (~20 % smaller overall).
+//!
+//! The integer zero-point is our resolution of the paper's underspecified
+//! "zeros as integers": `zp = round(-zero / scale)` stored in i8, giving
+//! `zero ≈ -zp · scale` with error ≤ scale/2 whenever the group straddles
+//! zero (always true for the post-norm activations being communicated), and
+//! saturating gracefully otherwise. See DESIGN.md §6.
+
+use super::rtn::{self, GroupMeta};
+use crate::util::bf16::bf16_round;
+
+/// Eq. 1 upscaling factor θ.
+pub const THETA: f32 = 10.0;
+
+/// Metadata precision for scales/zeros/indices.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ScaleMode {
+    /// BF16 scale & zero, BF16 spike values & indices.
+    Bf16,
+    /// i8 log-scale (Eq. 1), i8 zero-point, BF16 spikes, u8 indices.
+    IntLog,
+}
+
+/// Per-group spike record.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpikeMeta {
+    pub min_val: f32,
+    pub max_val: f32,
+    pub min_idx: u16,
+    pub max_idx: u16,
+}
+
+/// Encode a scale via Eq. 1 and decode it back (lossy, factor ≤ 2^(1/θ)).
+#[inline]
+pub fn scale_to_int(scale: f32) -> i8 {
+    debug_assert!(scale > 0.0);
+    let code = (scale.log2() * THETA).floor();
+    code.max(i8::MIN as f32).min(i8::MAX as f32) as i8
+}
+
+#[inline]
+pub fn scale_from_int(code: i8) -> f32 {
+    // §Perf: 256-entry LUT instead of a powf per group on the decode path.
+    static LUT: once_cell::sync::Lazy<[f32; 256]> = once_cell::sync::Lazy::new(|| {
+        let mut t = [0f32; 256];
+        for (i, slot) in t.iter_mut().enumerate() {
+            *slot = (2.0f32).powf((i as i64 - 128) as f32 / THETA);
+        }
+        t
+    });
+    LUT[(code as i16 + 128) as usize]
+}
+
+/// Round a group meta to what the IntLog wire actually carries.
+pub fn meta_through_intlog(meta: GroupMeta) -> GroupMeta {
+    let scale = scale_from_int(scale_to_int(meta.scale));
+    let zp = (-meta.zero / scale).round().max(i8::MIN as f32).min(i8::MAX as f32) as i8;
+    GroupMeta { scale, zero: -(zp as f32) * scale }
+}
+
+/// Round a group meta to the chosen wire precision.
+pub fn meta_through_wire(meta: GroupMeta, mode: ScaleMode) -> GroupMeta {
+    match mode {
+        ScaleMode::Bf16 => GroupMeta { scale: bf16_round(meta.scale), zero: bf16_round(meta.zero) },
+        ScaleMode::IntLog => meta_through_intlog(meta),
+    }
+}
+
+/// Quantize one group with spike reserving.
+///
+/// `codes` receives one code per element (spike positions hold clamped
+/// filler — they are overwritten on decode). Returns the (wire-precision)
+/// group meta for the shrunken range plus the spike record.
+pub fn quantize_group(
+    xs: &[f32],
+    bits: u8,
+    mode: ScaleMode,
+    codes: &mut [u8],
+) -> (GroupMeta, SpikeMeta) {
+    debug_assert_eq!(xs.len(), codes.len());
+    debug_assert!(!xs.is_empty() && xs.len() <= u16::MAX as usize + 1);
+
+    // Pass 1: locate the spikes (first occurrence of min and max).
+    let (mut min_i, mut max_i) = (0usize, 0usize);
+    for (i, &x) in xs.iter().enumerate() {
+        debug_assert!(x.is_finite());
+        if x < xs[min_i] {
+            min_i = i;
+        }
+        if x > xs[max_i] {
+            max_i = i;
+        }
+    }
+    let spikes = SpikeMeta {
+        min_val: bf16_round(xs[min_i]),
+        max_val: bf16_round(xs[max_i]),
+        min_idx: min_i as u16,
+        max_idx: max_i as u16,
+    };
+
+    // Pass 2: shrunken range over the remaining elements.
+    let mut min2 = f32::INFINITY;
+    let mut max2 = f32::NEG_INFINITY;
+    for (i, &x) in xs.iter().enumerate() {
+        if i != min_i && i != max_i {
+            min2 = min2.min(x);
+            max2 = max2.max(x);
+        }
+    }
+    if !min2.is_finite() {
+        // Group of <= 2 elements: everything is a spike; codes are unused.
+        min2 = 0.0;
+        max2 = 0.0;
+    }
+
+    let meta = meta_through_wire(rtn::meta_from_minmax(min2, max2, bits), mode);
+    rtn::quantize_group_with_meta(xs, bits, meta, codes);
+    (meta, spikes)
+}
+
+/// Dequantize one group and restore its spikes.
+///
+/// Index bounds are checked (not trusted): a corrupted or adversarial
+/// payload must not crash the receiving rank — see the fuzz test in
+/// `tests/robustness.rs`.
+pub fn dequantize_group(codes: &[u8], meta: GroupMeta, spikes: &SpikeMeta, out: &mut [f32]) {
+    rtn::dequantize_group(codes, meta, out);
+    if let Some(slot) = out.get_mut(spikes.min_idx as usize) {
+        *slot = spikes.min_val;
+    }
+    if let Some(slot) = out.get_mut(spikes.max_idx as usize) {
+        *slot = spikes.max_val;
+    }
+}
+
+/// Quantize a full tensor with spike reserving.
+pub fn quantize(
+    data: &[f32],
+    bits: u8,
+    group_size: usize,
+    mode: ScaleMode,
+    codes: &mut Vec<u8>,
+    metas: &mut Vec<GroupMeta>,
+    spikes: &mut Vec<SpikeMeta>,
+) {
+    assert!(group_size > 1, "spike reserving needs groups of >= 2");
+    codes.clear();
+    codes.resize(data.len(), 0);
+    metas.clear();
+    spikes.clear();
+    for (xs, cs) in data.chunks(group_size).zip(codes.chunks_mut(group_size)) {
+        let (m, s) = quantize_group(xs, bits, mode, cs);
+        metas.push(m);
+        spikes.push(s);
+    }
+}
+
+/// Dequantize a full tensor with spike restoration.
+pub fn dequantize(
+    codes: &[u8],
+    metas: &[GroupMeta],
+    spikes: &[SpikeMeta],
+    group_size: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(codes.len(), out.len());
+    for (g, (cs, xs)) in codes.chunks(group_size).zip(out.chunks_mut(group_size)).enumerate() {
+        dequantize_group(cs, metas[g], &spikes[g], xs);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{arb_tensor, cases};
+    use crate::util::stats::{sqnr_db, DistSummary};
+    use crate::util::Prng;
+
+    fn roundtrip(data: &[f32], bits: u8, gs: usize, mode: ScaleMode) -> Vec<f32> {
+        let (mut codes, mut metas, mut spikes) = (Vec::new(), Vec::new(), Vec::new());
+        quantize(data, bits, gs, mode, &mut codes, &mut metas, &mut spikes);
+        let mut out = vec![0f32; data.len()];
+        dequantize(&codes, &metas, &spikes, gs, &mut out);
+        out
+    }
+
+    fn rtn_roundtrip(data: &[f32], bits: u8, gs: usize) -> Vec<f32> {
+        let (mut codes, mut metas) = (Vec::new(), Vec::new());
+        rtn::quantize(data, bits, gs, &mut codes, &mut metas);
+        let mut out = vec![0f32; data.len()];
+        rtn::dequantize(&codes, &metas, gs, &mut out);
+        out
+    }
+
+    #[test]
+    fn spikes_reconstruct_to_bf16_exactly() {
+        let mut data = vec![0.5f32; 32];
+        data[7] = -100.0;
+        data[21] = 250.0;
+        let out = roundtrip(&data, 2, 32, ScaleMode::Bf16);
+        assert_eq!(out[7], -100.0);
+        assert_eq!(out[21], 250.0);
+        // The body, freed of spikes, quantizes the constant 0.5 exactly.
+        for (i, &x) in out.iter().enumerate() {
+            if i != 7 && i != 21 {
+                assert!((x - 0.5).abs() < 1e-3, "body[{i}]={x}");
+            }
+        }
+    }
+
+    #[test]
+    fn shrinks_dynamic_range_fig4() {
+        // The paper's Fig. 4: removing spikes narrows the distribution.
+        let mut rng = Prng::new(21);
+        let mut data = vec![0f32; 4096];
+        rng.fill_activations(&mut data, 1.0);
+        let before = DistSummary::of(&data).range();
+        let mut shrunk = Vec::new();
+        for g in data.chunks(32) {
+            let (mut codes, _) = (vec![0u8; g.len()], ());
+            let (_, s) = quantize_group(g, 2, ScaleMode::Bf16, &mut codes);
+            for (i, &x) in g.iter().enumerate() {
+                if i != s.min_idx as usize && i != s.max_idx as usize {
+                    shrunk.push(x);
+                }
+            }
+        }
+        let after = DistSummary::of(&shrunk).range();
+        assert!(after < before * 0.5, "range {before} -> {after}");
+    }
+
+    #[test]
+    fn sr_beats_rtn_at_int2_on_activations() {
+        // The core claim (Table 3): at INT2/gs32 on heavy-tailed data, SR
+        // reconstructs much better than plain RTN.
+        let mut rng = Prng::new(22);
+        let mut data = vec![0f32; 1 << 15];
+        rng.fill_activations(&mut data, 1.0);
+        let rtn_s = sqnr_db(&data, &rtn_roundtrip(&data, 2, 32));
+        let sr_s = sqnr_db(&data, &roundtrip(&data, 2, 32, ScaleMode::Bf16));
+        assert!(sr_s > rtn_s + 6.0, "SR {sr_s} dB should beat RTN {rtn_s} dB by >6 dB");
+    }
+
+    #[test]
+    fn intlog_close_to_bf16_mode() {
+        let mut rng = Prng::new(23);
+        let mut data = vec![0f32; 8192];
+        rng.fill_activations(&mut data, 0.5);
+        let b = sqnr_db(&data, &roundtrip(&data, 2, 32, ScaleMode::Bf16));
+        let i = sqnr_db(&data, &roundtrip(&data, 2, 32, ScaleMode::IntLog));
+        assert!(i > b - 3.0, "IntLog {i} dB within 3 dB of Bf16 {b} dB");
+    }
+
+    #[test]
+    fn eq1_scale_codec() {
+        for &s in &[1e-3f32, 0.01, 0.1, 0.5, 1.0, 3.7, 100.0] {
+            let rec = scale_from_int(scale_to_int(s));
+            // floor() always rounds the scale down, by at most 2^(1/θ).
+            assert!(rec <= s * 1.0001 && rec >= s / 2f32.powf(1.0 / THETA) * 0.999, "{s} -> {rec}");
+        }
+    }
+
+    #[test]
+    fn degenerate_groups() {
+        // len 1: the single value is both spikes.
+        let out = roundtrip(&[42.0f32], 2, 32, ScaleMode::Bf16);
+        assert_eq!(out[0], 42.0);
+        // len 2: both values are spikes, exact.
+        let out = roundtrip(&[-3.0f32, 9.0], 2, 32, ScaleMode::Bf16);
+        assert_eq!(out, vec![-3.0, 9.0]);
+        // constant group.
+        let out = roundtrip(&[5.0f32; 32], 2, 32, ScaleMode::IntLog);
+        for &x in &out {
+            assert!((x - 5.0).abs() < 0.05, "{x}");
+        }
+        // all zeros.
+        let out = roundtrip(&[0f32; 64], 2, 32, ScaleMode::IntLog);
+        assert!(out.iter().all(|&x| x.abs() < 1e-6));
+    }
+
+    #[test]
+    fn property_error_bounded_by_shrunken_range() {
+        cases(300, 128, |rng| {
+            let data = arb_tensor(rng, 400);
+            let bits = [2u8, 3, 4][rng.below(3)];
+            let gs = 32;
+            let out = roundtrip(&data, bits, gs, ScaleMode::Bf16);
+            for (xs, rec) in data.chunks(gs).zip(out.chunks(gs)) {
+                // Bound: half-step of the shrunken range + bf16 meta error.
+                let mut v: Vec<f32> = xs.to_vec();
+                v.sort_by(f32::total_cmp);
+                let (min2, max2) = if v.len() > 2 {
+                    (v[1], v[v.len() - 2])
+                } else {
+                    (0.0, 0.0)
+                };
+                let meta = rtn::meta_from_minmax(min2, max2, bits);
+                let bound = rtn::error_bound(meta, bits, min2, max2)
+                    + (min2.abs() + max2.abs()) / 128.0; // extra bf16 slack
+                for (a, b) in xs.iter().zip(rec) {
+                    let tol = bound.max(a.abs() / 128.0); // spikes: bf16-exact
+                    assert!((a - b).abs() <= tol, "|{a}-{b}| > {tol} (bits {bits})");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn intlog_zero_point_saturates_gracefully() {
+        // Groups far from zero exceed the i8 zero-point range; the decoded
+        // body shifts but stays finite and within 128 steps of the truth.
+        let data: Vec<f32> = (0..32).map(|i| 1000.0 + i as f32 * 0.01).collect();
+        let out = roundtrip(&data, 4, 32, ScaleMode::IntLog);
+        assert!(out.iter().all(|x| x.is_finite()));
+        // Spikes still land exactly (bf16) even when the body saturates.
+        let mx = data.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        assert!(out.iter().any(|&x| (x - mx).abs() <= mx / 128.0));
+    }
+
+    #[test]
+    fn property_spike_positions_exact() {
+        cases(301, 64, |rng| {
+            let data = arb_tensor(rng, 256);
+            let out = roundtrip(&data, 2, 32, ScaleMode::Bf16);
+            for (xs, rec) in data.chunks(32).zip(out.chunks(32)) {
+                let mn = xs.iter().cloned().fold(f32::INFINITY, f32::min);
+                let mx = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                // Min and max of every group survive at bf16 precision
+                // (plus bf16 slack on the body's scale/zero metadata).
+                let slack = (mx - mn) / 200.0 + 1e-6;
+                let rmn = rec.iter().cloned().fold(f32::INFINITY, f32::min);
+                let rmx = rec.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                assert!((rmn - mn).abs() <= mn.abs() / 128.0 + slack, "min {mn} vs {rmn}");
+                assert!((rmx - mx).abs() <= mx.abs() / 128.0 + slack, "max {mx} vs {rmx}");
+            }
+        });
+    }
+}

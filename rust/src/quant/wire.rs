@@ -1,0 +1,191 @@
+//! Self-describing wire format for quantized communication payloads
+//! (Fig. 5c memory layout, Table 4 footprint accounting).
+//!
+//! ```text
+//! ┌──────────────── header, 16 B ────────────────┐
+//! │ magic u16 | ver u8 | scheme u8 | bits u8     │
+//! │ scale_mode u8 | group_size u16 | n u32 | rsv │
+//! ├──────────── quantized data planes ───────────┤   bit-split planes,
+//! │ plane(4b) … plane(2b) … plane(1b) …          │   each byte-padded
+//! ├──────────────── scales & zeros ──────────────┤   bf16×2 or i8×2 / group
+//! ├──────────────── spikes (SR only) ────────────┤   {min,max,idx,idx}
+//! └───────────────────────────────────────────────┘
+//! ```
+//!
+//! Everything little-endian. The header makes payloads self-describing so a
+//! receiving rank can decode without out-of-band agreement (and so tests can
+//! fuzz the decoder against corrupted headers).
+
+use anyhow::{bail, Result};
+
+pub const MAGIC: u16 = 0xFC02;
+pub const VERSION: u8 = 1;
+pub const HEADER_LEN: usize = 16;
+
+/// Scheme discriminants on the wire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum WireScheme {
+    Bf16 = 0,
+    Rtn = 1,
+    SpikeReserve = 2,
+    Hadamard = 3,
+    LogFmt = 4,
+}
+
+impl WireScheme {
+    pub fn from_u8(v: u8) -> Result<Self> {
+        Ok(match v {
+            0 => WireScheme::Bf16,
+            1 => WireScheme::Rtn,
+            2 => WireScheme::SpikeReserve,
+            3 => WireScheme::Hadamard,
+            4 => WireScheme::LogFmt,
+            _ => bail!("unknown wire scheme {v}"),
+        })
+    }
+}
+
+/// Parsed wire header.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Header {
+    pub scheme: WireScheme,
+    pub bits: u8,
+    /// 0 = bf16 metadata, 1 = integer (Eq. 1) metadata.
+    pub scale_mode: u8,
+    pub group_size: u16,
+    pub n: u32,
+}
+
+impl Header {
+    pub fn write(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&MAGIC.to_le_bytes());
+        out.push(VERSION);
+        out.push(self.scheme as u8);
+        out.push(self.bits);
+        out.push(self.scale_mode);
+        out.extend_from_slice(&self.group_size.to_le_bytes());
+        out.extend_from_slice(&self.n.to_le_bytes());
+        out.extend_from_slice(&[0u8; 4]); // reserved
+        debug_assert_eq!(out.len() % HEADER_LEN, 0);
+    }
+
+    pub fn parse(wire: &[u8]) -> Result<Header> {
+        if wire.len() < HEADER_LEN {
+            bail!("wire too short for header: {} bytes", wire.len());
+        }
+        let magic = u16::from_le_bytes([wire[0], wire[1]]);
+        if magic != MAGIC {
+            bail!("bad magic {magic:#x}");
+        }
+        if wire[2] != VERSION {
+            bail!("unsupported version {}", wire[2]);
+        }
+        let h = Header {
+            scheme: WireScheme::from_u8(wire[3])?,
+            bits: wire[4],
+            scale_mode: wire[5],
+            group_size: u16::from_le_bytes([wire[6], wire[7]]),
+            n: u32::from_le_bytes([wire[8], wire[9], wire[10], wire[11]]),
+        };
+        if h.scheme != WireScheme::Bf16 {
+            if !(1..=8).contains(&h.bits) {
+                bail!("bad bits {}", h.bits);
+            }
+            if h.group_size == 0 {
+                bail!("zero group size");
+            }
+        }
+        Ok(h)
+    }
+}
+
+/// Per-section byte accounting for a payload (Table 4 rows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct SectionSizes {
+    pub header: usize,
+    /// Bit-split quantized planes (or raw bf16 data for passthrough).
+    pub quantized: usize,
+    pub scale_zero: usize,
+    pub spikes: usize,
+}
+
+impl SectionSizes {
+    pub fn total(&self) -> usize {
+        self.header + self.quantized + self.scale_zero + self.spikes
+    }
+
+    /// Metadata (everything but the quantized planes), the paper's "Meta".
+    pub fn meta(&self) -> usize {
+        self.scale_zero + self.spikes
+    }
+}
+
+/// Scale/zero bytes per group for a metadata mode.
+pub fn scale_zero_bytes_per_group(scale_mode: u8) -> usize {
+    match scale_mode {
+        0 => 4, // bf16 scale + bf16 zero
+        _ => 2, // i8 scale_int + i8 zero-point (Eq. 1)
+    }
+}
+
+/// Spike bytes per group for a metadata mode.
+pub fn spike_bytes_per_group(scale_mode: u8) -> usize {
+    match scale_mode {
+        0 => 8, // bf16 min,max + bf16 min_idx,max_idx
+        _ => 6, // bf16 min,max + u8 min_idx,max_idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn header_roundtrip() {
+        let h = Header {
+            scheme: WireScheme::SpikeReserve,
+            bits: 2,
+            scale_mode: 1,
+            group_size: 32,
+            n: 4096,
+        };
+        let mut buf = Vec::new();
+        h.write(&mut buf);
+        assert_eq!(buf.len(), HEADER_LEN);
+        assert_eq!(Header::parse(&buf).unwrap(), h);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Header::parse(&[]).is_err());
+        assert!(Header::parse(&[0u8; 16]).is_err()); // bad magic
+        let h = Header { scheme: WireScheme::Rtn, bits: 9, scale_mode: 0, group_size: 32, n: 1 };
+        let mut buf = Vec::new();
+        h.write(&mut buf);
+        assert!(Header::parse(&buf).is_err(), "bits=9 must be rejected");
+    }
+
+    #[test]
+    fn rejects_version_and_scheme_mismatch() {
+        let h = Header { scheme: WireScheme::Rtn, bits: 4, scale_mode: 0, group_size: 32, n: 8 };
+        let mut buf = Vec::new();
+        h.write(&mut buf);
+        let mut v = buf.clone();
+        v[2] = 9; // version
+        assert!(Header::parse(&v).is_err());
+        let mut s = buf.clone();
+        s[3] = 42; // scheme
+        assert!(Header::parse(&s).is_err());
+    }
+
+    #[test]
+    fn table4_per_group_budgets() {
+        // 128 groups of 32 over 4096 values (Table 4).
+        let groups = 128;
+        assert_eq!(groups * scale_zero_bytes_per_group(0), 512);
+        assert_eq!(groups * scale_zero_bytes_per_group(1), 256);
+        assert_eq!(groups * spike_bytes_per_group(0), 1024);
+        assert_eq!(groups * spike_bytes_per_group(1), 768);
+    }
+}

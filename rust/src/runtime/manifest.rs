@@ -1,0 +1,145 @@
+//! Parser for `artifacts/manifest.txt` — the line-based contract between
+//! `python/compile/aot.py` and the rust runtime (no serde in the offline
+//! vendor set, so the format is deliberately trivial):
+//!
+//! ```text
+//! # comment
+//! config tiny vocab=2048 d_model=256 ... n_params=3674624
+//! artifact tiny_embed kind=piece config=tiny
+//! corpus vocab=2048 file=corpus_v2048.bin tokens=600000
+//! ```
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// One `key=value` record.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Record {
+    pub name: String,
+    pub fields: HashMap<String, String>,
+}
+
+impl Record {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.fields.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<usize> {
+        self.get(key)
+            .with_context(|| format!("missing field {key} in {}", self.name))?
+            .parse()
+            .with_context(|| format!("field {key} in {}", self.name))
+    }
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub configs: Vec<Record>,
+    pub artifacts: Vec<Record>,
+    pub corpora: Vec<Record>,
+    /// Part-of-speech vocabulary pools (Table 7 task definitions).
+    pub pools: Vec<Record>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut m = Manifest::default();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let kind = parts.next().unwrap();
+            let mut rec = Record::default();
+            let mut rest: Vec<&str> = parts.collect();
+            if kind != "corpus" {
+                if rest.is_empty() {
+                    bail!("line {}: missing name", lineno + 1);
+                }
+                rec.name = rest.remove(0).to_string();
+            }
+            for kv in rest {
+                match kv.split_once('=') {
+                    Some((k, v)) => {
+                        rec.fields.insert(k.to_string(), v.to_string());
+                    }
+                    None => bail!("line {}: bad field '{kv}'", lineno + 1),
+                }
+            }
+            match kind {
+                "config" => m.configs.push(rec),
+                "artifact" => m.artifacts.push(rec),
+                "corpus" => m.corpora.push(rec),
+                "pool" => m.pools.push(rec),
+                other => bail!("line {}: unknown record kind '{other}'", lineno + 1),
+            }
+        }
+        Ok(m)
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {:?}", path.as_ref()))?;
+        Manifest::parse(&text)
+    }
+
+    pub fn config(&self, name: &str) -> Result<&Record> {
+        self.configs
+            .iter()
+            .find(|c| c.name == name)
+            .with_context(|| format!("config '{name}' not in manifest"))
+    }
+
+    pub fn corpus_for_vocab(&self, vocab: usize) -> Option<&Record> {
+        self.corpora.iter().find(|c| c.get("vocab") == Some(vocab.to_string().as_str()))
+    }
+
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.artifacts.iter().any(|a| a.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# comment line
+config tiny vocab=2048 d_model=256 n_params=3674624
+artifact tiny_embed kind=piece config=tiny
+artifact qdq_rtn_b8_gs128 kind=qdq n=4096 bits=8 gs=128 scheme=rtn
+corpus vocab=2048 file=corpus_v2048.bin tokens=600000
+";
+
+    #[test]
+    fn parses_all_record_kinds() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.configs.len(), 1);
+        assert_eq!(m.artifacts.len(), 2);
+        assert_eq!(m.corpora.len(), 1);
+        let c = m.config("tiny").unwrap();
+        assert_eq!(c.get_usize("vocab").unwrap(), 2048);
+        assert_eq!(c.get_usize("n_params").unwrap(), 3674624);
+        assert!(m.has_artifact("tiny_embed"));
+        assert!(!m.has_artifact("missing"));
+        assert_eq!(m.corpus_for_vocab(2048).unwrap().get("file").unwrap(), "corpus_v2048.bin");
+        assert!(m.corpus_for_vocab(4096).is_none());
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(Manifest::parse("bogus tiny a=1").is_err());
+        assert!(Manifest::parse("config tiny novalue").is_err());
+        assert!(Manifest::parse("config").is_err());
+    }
+
+    #[test]
+    fn missing_config_is_error() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.config("100m").is_err());
+    }
+}

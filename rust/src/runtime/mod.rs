@@ -1,0 +1,219 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!
+//! Python never runs on this path — after `make artifacts` the rust binary
+//! is self-contained. HLO *text* is the interchange format (xla_extension
+//! 0.5.1 rejects jax≥0.5 serialized protos; the text parser reassigns
+//! instruction ids — see /opt/xla-example/README.md).
+
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+pub use manifest::Manifest;
+
+/// A host-side f32 tensor (the coordinator's working representation).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Lower to an XLA literal (f32).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let bytes: &[u8] = unsafe {
+            std::slice::from_raw_parts(self.data.as_ptr() as *const u8, self.data.len() * 4)
+        };
+        Ok(xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32,
+            &self.shape,
+            bytes,
+        )?)
+    }
+
+    /// Read back from an f32 literal.
+    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<f32>()?;
+        Ok(Tensor::new(dims, data))
+    }
+}
+
+/// Build an S32 literal from token ids (model inputs).
+pub fn tokens_literal(tokens: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    assert_eq!(tokens.len(), shape.iter().product::<usize>());
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(tokens.as_ptr() as *const u8, tokens.len() * 4) };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, shape, bytes)?)
+}
+
+/// The PJRT runtime: client + compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    pub manifest: Manifest,
+}
+
+impl Runtime {
+    /// Open the artifacts directory (must contain manifest.txt).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.txt"))
+            .with_context(|| format!("loading manifest from {dir:?}; run `make artifacts`"))?;
+        let client = xla::PjRtClient::cpu()?;
+        log::info!("PJRT client: {} ({} devices)", client.platform_name(), client.device_count());
+        Ok(Runtime { client, dir, cache: HashMap::new(), manifest })
+    }
+
+    /// Open ./artifacts relative to the repo root (the default layout).
+    pub fn open_default() -> Result<Runtime> {
+        Runtime::open(default_artifacts_dir())
+    }
+
+    /// Compile (or fetch from cache) an artifact by name, e.g.
+    /// `tiny_grad_step`.
+    pub fn load(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let path = self.dir.join(format!("{name}.hlo.txt"));
+            let t0 = std::time::Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).with_context(|| format!("compiling {name}"))?;
+            log::info!("compiled {name} in {:?}", t0.elapsed());
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Execute an artifact; returns the flattened output tuple as literals.
+    ///
+    /// All artifacts are lowered with `return_tuple=True`, so the single
+    /// output buffer is a tuple literal we explode here.
+    pub fn execute(&mut self, name: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.load(name)?;
+        let result = exe.execute::<xla::Literal>(args)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        Ok(tuple.to_tuple()?)
+    }
+
+    /// Execute and convert every output to a host [`Tensor`].
+    pub fn execute_t(&mut self, name: &str, args: &[xla::Literal]) -> Result<Vec<Tensor>> {
+        self.execute(name, args)?.iter().map(Tensor::from_literal).collect()
+    }
+
+    /// Artifacts directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+}
+
+/// `<repo>/artifacts` (works from `cargo test`/`run` and the binary).
+pub fn default_artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let d = default_artifacts_dir();
+        d.join("manifest.txt").exists().then_some(d)
+    }
+
+    #[test]
+    fn tensor_roundtrip_through_literal() {
+        let t = Tensor::new(vec![2, 3], vec![1.0, -2.0, 3.5, 0.0, 1e6, -1e-6]);
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn scalar_and_zeros() {
+        let s = Tensor::scalar(4.25);
+        let back = Tensor::from_literal(&s.to_literal().unwrap()).unwrap();
+        assert_eq!(back.data, vec![4.25]);
+        assert!(back.shape.is_empty());
+        assert_eq!(Tensor::zeros(&[3, 4]).len(), 12);
+    }
+
+    #[test]
+    fn qdq_artifact_matches_rust_codec() {
+        // Cross-layer integration: the lowered L1 Pallas RTN kernel and the
+        // rust wire codec must implement the same transformation.
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        };
+        let mut rt = Runtime::open(dir).unwrap();
+        let mut rng = crate::util::Prng::new(99);
+        let mut x = vec![0f32; 4096];
+        rng.fill_activations(&mut x, 1.0);
+        for (art, spec) in [
+            ("qdq_rtn_b8_gs128", "int8@128"),
+            ("qdq_rtn_b4_gs32", "int4@32"),
+            ("qdq_rtn_b2_gs32", "int2@32"),
+            ("qdq_spike_b2_gs32", "int2-sr@32"),
+        ] {
+            let input = Tensor::new(vec![4096], x.clone());
+            let out = rt.execute_t(art, &[input.to_literal().unwrap()]).unwrap();
+            let pallas = &out[0].data;
+            let mut rust = x.clone();
+            let codec = crate::quant::Codec::parse(spec).unwrap();
+            let mut bufs = crate::quant::CodecBuffers::default();
+            codec.qdq(&mut rust, &mut bufs);
+            let mut max_err = 0f32;
+            let mut worst = 0usize;
+            for (i, (a, b)) in pallas.iter().zip(rust.iter()).enumerate() {
+                if (a - b).abs() > max_err {
+                    max_err = (a - b).abs();
+                    worst = i;
+                }
+            }
+            assert!(
+                max_err < 2e-3,
+                "{art} vs {spec}: max err {max_err} at {worst} (pallas {} rust {})",
+                pallas[worst],
+                rust[worst]
+            );
+        }
+    }
+
+    #[test]
+    fn execute_reports_missing_artifact() {
+        let Some(dir) = artifacts_dir() else {
+            return;
+        };
+        let mut rt = Runtime::open(dir).unwrap();
+        assert!(rt.execute("no_such_artifact", &[]).is_err());
+    }
+}

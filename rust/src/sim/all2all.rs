@@ -1,0 +1,99 @@
+//! All2All (expert-parallel dispatch) timing model (Table 10).
+//!
+//! Following DeepSeek-V3 (and the paper), only the *dispatch* direction is
+//! quantized; the combine direction stays BF16. Each GPU scatters M/N bytes
+//! to each of the other N-1 ranks. There is no reduction, so QDQ is a
+//! single encode on the sender and a single decode on the receiver.
+
+use super::cost::{codec_cost, pass_time};
+use crate::quant::Codec;
+use crate::topo::{Interconnect, Topology};
+
+use super::allreduce::TimeBreakdown;
+
+/// Time one quantized-dispatch All2All of `m_bytes` (BF16 bytes per GPU).
+pub fn all2all_time(topo: &Topology, codec: &Codec, m_bytes: f64) -> TimeBreakdown {
+    let n = topo.n_gpus as f64;
+    let elems = m_bytes / 2.0;
+    let ratio = codec.compression_ratio(elems as usize);
+    let spec = &topo.spec;
+    let cost = codec_cost(codec);
+    let outbound = (n - 1.0) / n * m_bytes * ratio;
+    let transfer = match spec.interconnect {
+        Interconnect::NvLink { .. } => outbound / (spec.intra_bw() * spec.a2a_eff),
+        Interconnect::PcieNuma { .. } => {
+            // Half the destinations are across the bridge.
+            let s = topo.group_size() as f64;
+            let cross = n * (s / n) * m_bytes * ratio; // s/N of each GPU's M
+            (cross / spec.bridge_bw().unwrap()).max(outbound / spec.intra_bw())
+        }
+    };
+    let enc = elems * cost.encode_passes;
+    let dec = elems * (n - 1.0) / n * cost.decode_passes;
+    let qdq =
+        if matches!(codec, Codec::Bf16) { 0.0 } else { pass_time(spec, 1.0, enc + dec) };
+    TimeBreakdown { transfer_s: transfer, qdq_s: qdq, latency_s: spec.stage_latency_s }
+}
+
+/// Algorithmic bandwidth for the dispatch (GB/s).
+pub fn algbw_gbps(m_bytes: f64, t: &TimeBreakdown) -> f64 {
+    m_bytes / t.total() / 1e9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topo::{presets, Topology};
+
+    fn c(s: &str) -> Codec {
+        Codec::parse(s).unwrap()
+    }
+
+    const M: f64 = 64.0 * 1024.0 * 1024.0;
+
+    #[test]
+    fn h800_int4_best_and_near_2x() {
+        // Table 10: on H800, INT4 is the best bitwidth at ~2.01x BF16.
+        let topo = Topology::new(presets::h800(), 8);
+        let bf = algbw_gbps(M, &all2all_time(&topo, &Codec::Bf16, M));
+        let mut best = ("bf16", bf);
+        for s in ["int8", "int6", "int5", "int4@32", "int3@32", "int2-sr@32"] {
+            let bw = algbw_gbps(M, &all2all_time(&topo, &c(s), M));
+            if bw > best.1 {
+                best = (s, bw);
+            }
+        }
+        assert_eq!(best.0, "int4@32", "best scheme");
+        let speedup = best.1 / bf;
+        assert!((1.5..=2.5).contains(&speedup), "H800 INT4 speedup {speedup}");
+    }
+
+    #[test]
+    fn h20_sees_no_benefit() {
+        // Table 10 / paper: "no benefit in the high-bandwidth system as H20".
+        let topo = Topology::new(presets::h20(), 8);
+        let bf = algbw_gbps(M, &all2all_time(&topo, &Codec::Bf16, M));
+        for s in ["int2-sr@32", "int3@32"] {
+            let bw = algbw_gbps(M, &all2all_time(&topo, &c(s), M));
+            assert!(bw < bf * 1.35, "{s}: {bw} vs bf16 {bf} should show little gain");
+        }
+        let int2 = algbw_gbps(M, &all2all_time(&topo, &c("int2-sr@32"), M));
+        let int4 = algbw_gbps(M, &all2all_time(&topo, &c("int4@32"), M));
+        assert!(int2 < int4, "INT2_SR must lose to INT4 on H20");
+    }
+
+    #[test]
+    fn no_reduce_passes_charged() {
+        // All2All has no reduction: its QDQ must be cheaper than the same
+        // codec's two-step AllReduce QDQ.
+        let topo = Topology::new(presets::a100(), 8);
+        let a2a = all2all_time(&topo, &c("int8"), M);
+        let ar = super::super::allreduce::allreduce_time(
+            &topo,
+            super::super::volume::Algo::TwoStep,
+            &c("int8"),
+            M,
+        );
+        assert!(a2a.qdq_s < ar.qdq_s);
+    }
+}

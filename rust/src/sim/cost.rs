@@ -1,0 +1,128 @@
+//! QDQ cost model: how long quantize/dequantize takes on a device.
+//!
+//! The paper's fused kernel burns `comm_sms` SMs on compression (48 of
+//! them, all 78 on H20) — this tax is why INT2 stops winning on
+//! high-bandwidth/low-compute devices (Table 9, H20 column). We model the
+//! kernel as a number of *element passes* (one pass = touch every element
+//! once) per codec, with per-device pass rates calibrated in
+//! `topo::presets`.
+//!
+//! Pass counts are relative costs mirroring the measured Rust hot path
+//! (`cargo bench quant`): RTN encode is a min/max pass plus a quantize
+//! pass plus per-plane packing; spike reserving adds an argmin/argmax +
+//! second-extrema pass; Hadamard adds log2(gs) butterfly passes each way;
+//! LogFMT pays for log/exp transcendentals.
+
+use crate::quant::{scheme::Codec, spike::ScaleMode};
+use crate::topo::GpuSpec;
+
+/// Element passes for one encode / decode / fused reduce of a codec.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CodecCost {
+    pub encode_passes: f64,
+    pub decode_passes: f64,
+    /// Extra passes for a fused dequantize-accumulate (reduce) step.
+    pub reduce_passes: f64,
+}
+
+/// Packing cost per bit plane (a byte-shuffle pass is far cheaper than an
+/// arithmetic pass over f32s).
+const PACK_PASS_PER_PLANE: f64 = 0.6;
+
+/// Cost model for a codec.
+pub fn codec_cost(codec: &Codec) -> CodecCost {
+    match *codec {
+        Codec::Bf16 => CodecCost { encode_passes: 0.25, decode_passes: 0.25, reduce_passes: 0.5 },
+        Codec::Rtn { bits, scale_mode, .. } => {
+            let planes = crate::quant::bitsplit::planes_for(bits).len() as f64;
+            let meta = if scale_mode == ScaleMode::IntLog { 0.1 } else { 0.0 };
+            CodecCost {
+                encode_passes: 2.0 + PACK_PASS_PER_PLANE * planes + meta,
+                decode_passes: 1.0 + PACK_PASS_PER_PLANE * planes + meta,
+                reduce_passes: 0.5,
+            }
+        }
+        Codec::Spike { bits, scale_mode, .. } => {
+            let planes = crate::quant::bitsplit::planes_for(bits).len() as f64;
+            let meta = if scale_mode == ScaleMode::IntLog { 0.1 } else { 0.0 };
+            CodecCost {
+                // + argmin/argmax pass, shrunken-range re-scan, and the
+                // spike scatter/gather + index metadata handling that the
+                // paper pays vectorized warps for (Table 9: INT2_SR trails
+                // INT3 on every NVLink device).
+                encode_passes: 4.5 + PACK_PASS_PER_PLANE * planes + meta,
+                decode_passes: 2.5 + PACK_PASS_PER_PLANE * planes + meta,
+                reduce_passes: 0.5,
+            }
+        }
+        Codec::Hadamard { bits, group_size } => {
+            let planes = crate::quant::bitsplit::planes_for(bits).len() as f64;
+            let fwht = (group_size as f64).log2() * 0.5;
+            CodecCost {
+                encode_passes: 2.0 + fwht + PACK_PASS_PER_PLANE * planes,
+                decode_passes: 1.0 + fwht + PACK_PASS_PER_PLANE * planes,
+                reduce_passes: 0.5,
+            }
+        }
+        Codec::LogFmt { bits, .. } => {
+            let planes = crate::quant::bitsplit::planes_for(bits).len() as f64;
+            // log2/exp2 transcendentals dominate (CUDA Math API footnote).
+            CodecCost {
+                encode_passes: 4.0 + PACK_PASS_PER_PLANE * planes,
+                decode_passes: 3.0 + PACK_PASS_PER_PLANE * planes,
+                reduce_passes: 0.5,
+            }
+        }
+    }
+}
+
+/// Time (s) for `passes` element-passes over `elems` elements on `spec`.
+pub fn pass_time(spec: &GpuSpec, elems: f64, passes: f64) -> f64 {
+    elems * passes / spec.qdq_pass_rate
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topo::presets;
+
+    fn c(spec: &str) -> Codec {
+        Codec::parse(spec).unwrap()
+    }
+
+    #[test]
+    fn sr_costs_more_than_rtn() {
+        let rtn = codec_cost(&c("int2@32"));
+        let sr = codec_cost(&c("int2-sr@32"));
+        assert!(sr.encode_passes > rtn.encode_passes);
+    }
+
+    #[test]
+    fn baselines_cost_more_than_rtn() {
+        let rtn = codec_cost(&c("int4@32"));
+        assert!(codec_cost(&c("int4-had@32")).encode_passes > rtn.encode_passes);
+        assert!(codec_cost(&c("int4-log@32")).encode_passes > rtn.encode_passes);
+    }
+
+    #[test]
+    fn more_planes_cost_more() {
+        // INT7 = 3 planes vs INT4 = 1 plane.
+        assert!(
+            codec_cost(&c("int7")).encode_passes > codec_cost(&c("int4")).encode_passes
+        );
+    }
+
+    #[test]
+    fn bf16_passthrough_is_cheapest() {
+        let bf = codec_cost(&Codec::Bf16);
+        assert!(bf.encode_passes < codec_cost(&c("int8")).encode_passes);
+    }
+
+    #[test]
+    fn pass_time_scales() {
+        let spec = presets::h800();
+        let t1 = pass_time(&spec, 1e6, 2.0);
+        let t2 = pass_time(&spec, 2e6, 2.0);
+        assert!((t2 / t1 - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,17 @@
+//! Link-level performance simulator.
+//!
+//! The paper's bandwidth tables are *algorithmic bandwidth* measurements —
+//! payload ÷ wall time — on hardware we do not have. This module predicts
+//! them from first principles: per-stage link volumes (× codec wire ratio)
+//! over calibrated effective bandwidths, plus a QDQ compute tax, with an
+//! event-driven scheduler for the pipelined hierarchical variant. See
+//! DESIGN.md §2 for why this substitution preserves the paper's shape.
+
+pub mod all2all;
+pub mod allreduce;
+pub mod cost;
+pub mod events;
+pub mod volume;
+
+pub use allreduce::{algbw_gbps, allreduce_time, TimeBreakdown};
+pub use volume::Algo;

@@ -1,0 +1,103 @@
+//! Closed-form communication-volume accounting (Table 5).
+//!
+//! Volumes follow the paper's own accounting for an N-GPU node with two
+//! NUMA groups, M bytes of payload per GPU:
+//!
+//! | Method                | total  | cross-NUMA |
+//! |-----------------------|--------|------------|
+//! | NCCL (ring)           | 14 M   | 7M/4       |
+//! | Two-step              | 14 M   | 4 M        |
+//! | Hierarchical two-step | 14 M   | M          |
+//!
+//! (Table 5 numbers are for N = 8; the formulas below generalize.)
+
+/// AllReduce algorithm families the paper compares.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Algo {
+    /// NCCL-style ring (reduce-scatter + all-gather around a ring).
+    Ring,
+    /// Flash Communication V1 one-shot two-step (RS + AG, all-to-all style).
+    TwoStep,
+    /// Hierarchical two-step: intra-NUMA RS → cross-NUMA reduce → intra AG.
+    Hier,
+    /// Hierarchical two-step with micro-chunk pipeline parallelism (Fig. 8).
+    HierPipelined,
+}
+
+impl Algo {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algo::Ring => "NCCL",
+            Algo::TwoStep => "Two-step",
+            Algo::Hier => "Hierarchical Two-step",
+            Algo::HierPipelined => "Hierarchical Two-step + PP",
+        }
+    }
+}
+
+/// Total bytes moved across all links for an AllReduce of `m` bytes/GPU.
+pub fn total_volume(algo: Algo, n: usize, m: f64) -> f64 {
+    let nf = n as f64;
+    match algo {
+        // Ring: 2(N-1) steps of M/N per GPU, N GPUs => 2(N-1)M.
+        Algo::Ring => 2.0 * (nf - 1.0) * m,
+        // One-shot RS: each GPU sends (N-1)/N·M; AG the same => 2(N-1)M.
+        Algo::TwoStep => 2.0 * (nf - 1.0) * m,
+        // Intra RS (s-1)/s·M·N + cross M + intra AG — same total 2(N-1)M
+        // under the paper's accounting.
+        Algo::Hier | Algo::HierPipelined => 2.0 * (nf - 1.0) * m,
+    }
+}
+
+/// Bytes crossing the NUMA bridge (the paper's Volume_CrossNUMA column),
+/// for `groups` NUMA groups (Table 5 uses 2 groups of N/2).
+pub fn cross_numa_volume(algo: Algo, n: usize, groups: usize, m: f64) -> f64 {
+    assert!(groups == 2, "the paper's node has two NUMA groups");
+    let nf = n as f64;
+    let s = nf / groups as f64; // ranks per group
+    match algo {
+        // The ring crosses the boundary on 2(N-1)/N·M worth of traffic for
+        // one boundary edge pair — the paper counts 7M/4 at N=8.
+        Algo::Ring => 2.0 * (nf - 1.0) / nf * m,
+        // Every (rank, peer) pair in different groups exchanges M/N in RS
+        // and again in AG: 2 · s · s · 2 · M/N = N·M/2 (= 4M at N=8).
+        Algo::TwoStep => nf * m / 2.0,
+        // Only the s bridge pairs move their M/s partial chunk (= M).
+        Algo::Hier | Algo::HierPipelined => s * (m / s),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table5_exact() {
+        let m = 1.0;
+        let n = 8;
+        for algo in [Algo::Ring, Algo::TwoStep, Algo::Hier] {
+            assert_eq!(total_volume(algo, n, m), 14.0, "{}", algo.name());
+        }
+        assert!((cross_numa_volume(Algo::Ring, n, 2, m) - 7.0 / 4.0).abs() < 1e-12);
+        assert_eq!(cross_numa_volume(Algo::TwoStep, n, 2, m), 4.0);
+        assert_eq!(cross_numa_volume(Algo::Hier, n, 2, m), 1.0);
+    }
+
+    #[test]
+    fn hier_saves_3x_cross_numa() {
+        // "saving 3 times cross-NUMA communication volume" vs two-step.
+        let two = cross_numa_volume(Algo::TwoStep, 8, 2, 1.0);
+        let hier = cross_numa_volume(Algo::Hier, 8, 2, 1.0);
+        assert_eq!(two - hier, 3.0);
+    }
+
+    #[test]
+    fn volumes_scale_linearly_in_m() {
+        for algo in [Algo::Ring, Algo::TwoStep, Algo::Hier] {
+            assert_eq!(
+                cross_numa_volume(algo, 8, 2, 2.0),
+                2.0 * cross_numa_volume(algo, 8, 2, 1.0)
+            );
+        }
+    }
+}

@@ -1,0 +1,188 @@
+//! Device and node topology model.
+//!
+//! [`GpuSpec`] captures the Table 6 device parameters (SM count,
+//! interconnect class, bandwidth, CUDA-core BF16 compute) plus the
+//! calibration constants that turn nominal link bandwidth into the
+//! *effective* bandwidth collective traffic actually achieves (protocol
+//! overhead, small-message inefficiency — the gap between 400 GB/s NVLink
+//! and the ~90 GB/s NCCL BF16 algorithmic bandwidth the paper measures).
+//!
+//! [`Topology`] describes one node: `n_gpus` devices, optionally split into
+//! NUMA groups bridged by a slower shared link (the L40 case, Figs. 6–7).
+
+pub mod presets;
+
+/// Physical interconnect of a node.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Interconnect {
+    /// PCIe within NUMA groups; groups joined by NUMA bridges (L40/L20).
+    PcieNuma {
+        /// Effective per-GPU PCIe bandwidth within a group (GB/s).
+        pcie_gbps: f64,
+        /// Effective NUMA-bridge bandwidth shared by a group pair (GB/s).
+        bridge_gbps: f64,
+    },
+    /// All-to-all NVLink (A100/H800/H20).
+    NvLink {
+        /// Effective per-GPU NVLink bandwidth (GB/s).
+        gbps: f64,
+    },
+}
+
+/// One device model (Table 6 row + calibration).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    /// Total streaming multiprocessors.
+    pub sms: u32,
+    /// SMs the fused QDQ kernel occupies (48 except H20: all 78).
+    pub comm_sms: u32,
+    /// Nominal interconnect bandwidth from Table 6 (GB/s).
+    pub nominal_bw_gbps: f64,
+    /// CUDA-core BF16 throughput (TFLOP/s) — what QDQ runs on.
+    pub bf16_tflops: f64,
+    /// Tensor-core dense BF16 throughput (TFLOP/s) — what prefill GEMMs
+    /// run on (used by the TTFT model, not by the QDQ cost model).
+    pub tensor_bf16_tflops: f64,
+    /// Effective link model after protocol/calibration derating.
+    pub interconnect: Interconnect,
+    /// Per-hop launch/sync latency (s) for one collective stage.
+    pub stage_latency_s: f64,
+    /// Ring-protocol efficiency relative to the one-shot effective link
+    /// bandwidth (NCCL's 2(N-1)-step ring realizes less of the fabric than
+    /// a one-shot exchange; calibrated from the BF16 anchors).
+    pub ring_eff: f64,
+    /// All2All efficiency relative to the one-shot effective bandwidth.
+    pub a2a_eff: f64,
+    /// QDQ throughput at full comm-SM occupancy, in "element-passes" per
+    /// second (one pass = read+process one bf16 element once). Derived
+    /// from `bf16_tflops × comm_sms/sms × KAPPA` — see presets.rs.
+    pub qdq_pass_rate: f64,
+}
+
+impl GpuSpec {
+    /// Effective bandwidth of the flat interconnect (NVLink) or intra-group
+    /// PCIe for NUMA systems, in bytes/s.
+    pub fn intra_bw(&self) -> f64 {
+        match self.interconnect {
+            Interconnect::PcieNuma { pcie_gbps, .. } => pcie_gbps * 1e9,
+            Interconnect::NvLink { gbps } => gbps * 1e9,
+        }
+    }
+
+    /// Effective cross-NUMA bridge bandwidth in bytes/s (None on NVLink).
+    pub fn bridge_bw(&self) -> Option<f64> {
+        match self.interconnect {
+            Interconnect::PcieNuma { bridge_gbps, .. } => Some(bridge_gbps * 1e9),
+            Interconnect::NvLink { .. } => None,
+        }
+    }
+
+    pub fn is_numa(&self) -> bool {
+        matches!(self.interconnect, Interconnect::PcieNuma { .. })
+    }
+}
+
+/// A single-node multi-GPU topology.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Topology {
+    pub spec: GpuSpec,
+    pub n_gpus: usize,
+    /// Number of NUMA groups (1 for NVLink systems).
+    pub numa_groups: usize,
+}
+
+impl Topology {
+    pub fn new(spec: GpuSpec, n_gpus: usize) -> Self {
+        let numa_groups = if spec.is_numa() { 2 } else { 1 };
+        assert!(n_gpus >= 2 && n_gpus % numa_groups == 0, "n_gpus {n_gpus} not divisible");
+        Topology { spec, n_gpus, numa_groups }
+    }
+
+    /// Ranks per NUMA group.
+    pub fn group_size(&self) -> usize {
+        self.n_gpus / self.numa_groups
+    }
+
+    /// NUMA group of a rank.
+    pub fn group_of(&self, rank: usize) -> usize {
+        rank / self.group_size()
+    }
+
+    /// The rank in the other group paired with `rank` for cross-NUMA
+    /// point-to-point reduction (Fig. 7: GPU i <-> GPU i + group_size).
+    pub fn bridge_peer(&self, rank: usize) -> usize {
+        debug_assert_eq!(self.numa_groups, 2);
+        (rank + self.group_size()) % self.n_gpus
+    }
+
+    /// All ranks in the same group as `rank`.
+    pub fn group_members(&self, rank: usize) -> std::ops::Range<usize> {
+        let g = self.group_of(rank);
+        let s = self.group_size();
+        g * s..(g + 1) * s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::presets::*;
+    use super::*;
+
+    #[test]
+    fn table6_constants() {
+        // The paper's Table 6, verbatim.
+        let rows = [
+            (l40(), 142u32, 64.0, 90.5, 48u32),
+            (a100(), 108, 400.0, 19.5, 48),
+            (h800(), 132, 400.0, 67.0, 48),
+            (h20(), 78, 900.0, 44.0, 78),
+        ];
+        for (spec, sms, bw, tflops, comm_sms) in rows {
+            assert_eq!(spec.sms, sms, "{}", spec.name);
+            assert_eq!(spec.nominal_bw_gbps, bw, "{}", spec.name);
+            assert_eq!(spec.bf16_tflops, tflops, "{}", spec.name);
+            assert_eq!(spec.comm_sms, comm_sms, "{}", spec.name);
+        }
+    }
+
+    #[test]
+    fn l40_is_numa_others_flat() {
+        assert!(l40().is_numa());
+        for s in [a100(), h800(), h20()] {
+            assert!(!s.is_numa(), "{}", s.name);
+            assert!(s.bridge_bw().is_none());
+        }
+    }
+
+    #[test]
+    fn numa_grouping() {
+        let t = Topology::new(l40(), 8);
+        assert_eq!(t.numa_groups, 2);
+        assert_eq!(t.group_size(), 4);
+        assert_eq!(t.group_of(3), 0);
+        assert_eq!(t.group_of(4), 1);
+        assert_eq!(t.bridge_peer(1), 5);
+        assert_eq!(t.bridge_peer(5), 1);
+        assert_eq!(t.group_members(6), 4..8);
+    }
+
+    #[test]
+    fn nvlink_single_group() {
+        let t = Topology::new(h800(), 8);
+        assert_eq!(t.numa_groups, 1);
+        assert_eq!(t.group_size(), 8);
+        assert_eq!(t.group_of(7), 0);
+    }
+
+    #[test]
+    fn effective_bw_below_nominal() {
+        for s in [l40(), a100(), h800(), h20()] {
+            assert!(
+                s.intra_bw() < s.nominal_bw_gbps * 1e9,
+                "{}: effective must be derated below nominal",
+                s.name
+            );
+        }
+    }
+}

@@ -1,0 +1,132 @@
+//! Table 6 device presets with calibration.
+//!
+//! Two kinds of numbers live here:
+//!
+//! 1. **Paper constants** (Table 6): SM counts, nominal bandwidth,
+//!    CUDA-core BF16 TFLOP/s, comm-kernel SM budget (48, except H20 = 78).
+//! 2. **Calibration constants**: effective link bandwidths and QDQ pass
+//!    rates, fitted so the simulator reproduces the paper's *measured*
+//!    anchor points (Table 9 BF16-NCCL and INT8 columns). These play the
+//!    role of the protocol-efficiency and kernel-throughput factors the
+//!    authors measured implicitly on their testbed; every other cell of
+//!    Tables 9/10 is then *predicted* by the model, which is what we
+//!    compare for shape.
+//!
+//! Calibration anchors (Table 9):
+//!   L40 ring BF16 ≈ 10.43 GB/s  → bridge ≈ 18–19 GB/s effective
+//!   A100/H800/H20 ring BF16 ≈ 89.15 / 94.18 / 209.14
+//!       → effective NVLink ≈ 1.75 × those (ring moves 2(N−1)/N ≈ 1.75 M
+//!         over the busiest link)
+//!   INT8 two-step columns → per-device QDQ pass rates.
+
+use super::{GpuSpec, Interconnect};
+
+/// QDQ pass rate model: `rate = kappa × bf16_tflops × comm_sms / sms`,
+/// in element-passes per second. κ is fitted per device family (see above).
+fn qdq_rate(tflops: f64, comm_sms: u32, sms: u32, kappa: f64) -> f64 {
+    kappa * tflops * 1e12 * comm_sms as f64 / sms as f64
+}
+
+/// NVIDIA L40: PCIe node, 2 NUMA groups of 4, no NVLink.
+pub fn l40() -> GpuSpec {
+    GpuSpec {
+        name: "L40",
+        sms: 142,
+        comm_sms: 48,
+        nominal_bw_gbps: 64.0,
+        bf16_tflops: 90.5,
+        tensor_bf16_tflops: 181.0,
+        interconnect: Interconnect::PcieNuma { pcie_gbps: 19.0, bridge_gbps: 18.9 },
+        stage_latency_s: 15e-6,
+        ring_eff: 1.0,
+        a2a_eff: 1.0,
+        qdq_pass_rate: qdq_rate(90.5, 48, 142, 0.049), // ≈1.5e12 passes/s
+    }
+}
+
+/// NVIDIA A100: NVLink-8. Low CUDA-core BF16 throughput → heavier QDQ tax.
+pub fn a100() -> GpuSpec {
+    GpuSpec {
+        name: "A100",
+        sms: 108,
+        comm_sms: 48,
+        nominal_bw_gbps: 400.0,
+        bf16_tflops: 19.5,
+        tensor_bf16_tflops: 312.0,
+        interconnect: Interconnect::NvLink { gbps: 230.0 },
+        stage_latency_s: 2e-6,
+        ring_eff: 0.704, // ring BF16 anchor 89.15 GB/s
+        a2a_eff: 0.65,
+        qdq_pass_rate: qdq_rate(19.5, 48, 108, 0.104), // ≈0.9e12
+    }
+}
+
+/// NVIDIA H800: NVLink-8, strong CUDA cores → biggest quantization gains.
+pub fn h800() -> GpuSpec {
+    GpuSpec {
+        name: "H800",
+        sms: 132,
+        comm_sms: 48,
+        nominal_bw_gbps: 400.0,
+        bf16_tflops: 67.0,
+        tensor_bf16_tflops: 989.0,
+        interconnect: Interconnect::NvLink { gbps: 212.0 },
+        stage_latency_s: 2e-6,
+        ring_eff: 0.81, // ring BF16 anchor 94.18 GB/s
+        a2a_eff: 0.70,
+        qdq_pass_rate: qdq_rate(67.0, 48, 132, 0.049), // ≈1.2e12
+    }
+}
+
+/// NVIDIA H20: NVLink-18 (900 GB/s) but weak compute — the regime where
+/// quantization stops paying (paper: least gain, INT2_SR loses).
+pub fn h20() -> GpuSpec {
+    GpuSpec {
+        name: "H20",
+        sms: 78,
+        comm_sms: 78, // the paper uses all SMs on H20
+        nominal_bw_gbps: 900.0,
+        bf16_tflops: 44.0,
+        tensor_bf16_tflops: 148.0,
+        interconnect: Interconnect::NvLink { gbps: 450.0 },
+        stage_latency_s: 2e-6,
+        ring_eff: 0.89, // ring BF16 anchor 209.14 GB/s
+        a2a_eff: 0.77,
+        qdq_pass_rate: qdq_rate(44.0, 78, 78, 0.024), // ≈1.05e12
+    }
+}
+
+/// All presets, in the paper's Table 6 order.
+pub fn all() -> Vec<GpuSpec> {
+    vec![l40(), a100(), h800(), h20()]
+}
+
+/// Look up a preset by (case-insensitive) name.
+pub fn by_name(name: &str) -> Option<GpuSpec> {
+    all().into_iter().find(|s| s.name.eq_ignore_ascii_case(name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(by_name("h800").unwrap().name, "H800");
+        assert_eq!(by_name("L40").unwrap().name, "L40");
+        assert!(by_name("B200").is_none());
+    }
+
+    #[test]
+    fn h20_uses_all_sms() {
+        let s = h20();
+        assert_eq!(s.comm_sms, s.sms);
+    }
+
+    #[test]
+    fn qdq_rates_ordered_by_cuda_capacity_within_family() {
+        // H800 must out-rate A100 (the paper's explanation for its larger
+        // speedup), both at 48 comm SMs.
+        assert!(h800().qdq_pass_rate > a100().qdq_pass_rate);
+    }
+}

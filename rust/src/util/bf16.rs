@@ -1,0 +1,136 @@
+//! Minimal bfloat16 codec.
+//!
+//! The paper's wire format carries activations, scales and zeros in BF16.
+//! The offline vendor set has no `half` crate, so we implement the codec by
+//! hand: bf16 is simply the upper 16 bits of an IEEE-754 f32, with
+//! round-to-nearest-even on the truncated mantissa.
+
+/// A bfloat16 value stored as its raw 16-bit pattern.
+#[derive(Clone, Copy, PartialEq, Eq, Default)]
+#[repr(transparent)]
+pub struct Bf16(pub u16);
+
+impl Bf16 {
+    pub const ZERO: Bf16 = Bf16(0);
+    /// Size in bytes on the wire.
+    pub const WIRE_BYTES: usize = 2;
+
+    /// Convert from f32 with round-to-nearest-even.
+    #[inline(always)]
+    pub fn from_f32(x: f32) -> Self {
+        let bits = x.to_bits();
+        // NaN must stay NaN: force a quiet NaN pattern and keep the sign.
+        if x.is_nan() {
+            return Bf16(((bits >> 16) as u16) | 0x0040);
+        }
+        // Round to nearest even: add 0x7FFF + lsb of the kept part.
+        let lsb = (bits >> 16) & 1;
+        let rounded = bits.wrapping_add(0x7FFF + lsb);
+        Bf16((rounded >> 16) as u16)
+    }
+
+    /// Exact widening back to f32.
+    #[inline(always)]
+    pub fn to_f32(self) -> f32 {
+        f32::from_bits((self.0 as u32) << 16)
+    }
+}
+
+impl core::fmt::Debug for Bf16 {
+    fn fmt(&self, f: &mut core::fmt::Formatter<'_>) -> core::fmt::Result {
+        write!(f, "{}bf16", self.to_f32())
+    }
+}
+
+impl From<f32> for Bf16 {
+    fn from(x: f32) -> Self {
+        Bf16::from_f32(x)
+    }
+}
+
+impl From<Bf16> for f32 {
+    fn from(x: Bf16) -> f32 {
+        x.to_f32()
+    }
+}
+
+/// Round-trip an f32 through bf16 precision (what the wire does to a value).
+#[inline(always)]
+pub fn bf16_round(x: f32) -> f32 {
+    Bf16::from_f32(x).to_f32()
+}
+
+/// Encode a slice of f32 into little-endian bf16 wire bytes.
+pub fn encode_slice(src: &[f32], out: &mut Vec<u8>) {
+    out.reserve(src.len() * 2);
+    for &x in src {
+        out.extend_from_slice(&Bf16::from_f32(x).0.to_le_bytes());
+    }
+}
+
+/// Decode little-endian bf16 wire bytes into f32.
+///
+/// Panics if `bytes.len() != 2 * dst.len()`.
+pub fn decode_slice(bytes: &[u8], dst: &mut [f32]) {
+    assert_eq!(bytes.len(), dst.len() * 2, "bf16 wire length mismatch");
+    for (i, d) in dst.iter_mut().enumerate() {
+        let raw = u16::from_le_bytes([bytes[2 * i], bytes[2 * i + 1]]);
+        *d = Bf16(raw).to_f32();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_values_roundtrip() {
+        for &x in &[0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 256.0, -65280.0] {
+            assert_eq!(Bf16::from_f32(x).to_f32(), x, "{x} should be exact in bf16");
+        }
+    }
+
+    #[test]
+    fn rounding_is_nearest_even() {
+        // 1.0 + 2^-9 is exactly halfway between bf16(1.0) and the next bf16;
+        // nearest-even rounds down to 1.0.
+        let x = f32::from_bits(0x3F80_8000);
+        assert_eq!(Bf16::from_f32(x).to_f32(), 1.0);
+        // Just above the halfway point rounds up.
+        let y = f32::from_bits(0x3F80_8001);
+        assert!(Bf16::from_f32(y).to_f32() > 1.0);
+    }
+
+    #[test]
+    fn relative_error_bounded() {
+        // bf16 has 8 mantissa bits: relative error <= 2^-8 with RNE.
+        let mut rng = crate::util::prng::Prng::new(7);
+        for _ in 0..10_000 {
+            let x = (rng.next_f32() - 0.5) * 2e4;
+            let r = bf16_round(x);
+            if x != 0.0 {
+                assert!(((r - x) / x).abs() <= 1.0 / 256.0, "x={x} r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn special_values() {
+        assert!(Bf16::from_f32(f32::NAN).to_f32().is_nan());
+        assert_eq!(Bf16::from_f32(f32::INFINITY).to_f32(), f32::INFINITY);
+        assert_eq!(Bf16::from_f32(f32::NEG_INFINITY).to_f32(), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn slice_roundtrip() {
+        let src = vec![1.5f32, -2.25, 1000.0, 3.1];
+        let mut wire = Vec::new();
+        encode_slice(&src, &mut wire);
+        assert_eq!(wire.len(), 8);
+        let mut back = vec![0f32; 4];
+        decode_slice(&wire, &mut back);
+        for (a, b) in src.iter().zip(&back) {
+            assert!((a - b).abs() / a.abs() <= 1.0 / 256.0);
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! Shared substrate: bf16 codec, deterministic PRNG, statistics, timing and
+//! a minimal property-testing harness. Everything here is dependency-free
+//! (the offline vendor set only carries the `xla` closure).
+
+pub mod bf16;
+pub mod prng;
+pub mod proptest;
+pub mod stats;
+pub mod timer;
+
+pub use bf16::Bf16;
+pub use prng::Prng;

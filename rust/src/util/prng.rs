@@ -1,0 +1,243 @@
+//! Deterministic PRNG for tests, property sweeps and synthetic workloads.
+//!
+//! xoshiro256** core with Box–Muller normals and a Student-t sampler used to
+//! synthesize heavy-tailed "activation-like" tensors (the distributions the
+//! paper's spike reserving targets — Fig. 4). No external `rand` crate is
+//! available offline, so this is self-contained and reproducible by seed.
+
+/// Deterministic xoshiro256** generator.
+#[derive(Clone, Debug)]
+pub struct Prng {
+    s: [u64; 4],
+    /// Cached second normal from Box–Muller.
+    spare_normal: Option<f64>,
+}
+
+impl Prng {
+    /// Seed via SplitMix64 so any u64 (including 0) gives a good state.
+    pub fn new(seed: u64) -> Self {
+        let mut x = seed.wrapping_add(0x9E3779B97F4A7C15);
+        let mut next = || {
+            x = x.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = x;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        Prng { s: [next(), next(), next(), next()], spare_normal: None }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        self.next_f64() as f32
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_f64() * n as f64) as usize % n
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn range_f32(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.next_f32()
+    }
+
+    /// Standard normal via Box–Muller (cached pair).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        loop {
+            let u1 = self.next_f64();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.next_f64();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let (s, c) = (2.0 * std::f64::consts::PI * u2).sin_cos();
+            self.spare_normal = Some(r * s);
+            return r * c;
+        }
+    }
+
+    /// Normal with given mean / std.
+    pub fn normal_f32(&mut self, mean: f32, std: f32) -> f32 {
+        mean + std * self.normal() as f32
+    }
+
+    /// Student-t with `dof` degrees of freedom — heavy-tailed, the shape of
+    /// post-GELU transformer activations the paper quantizes (spiky tails).
+    pub fn student_t(&mut self, dof: f64) -> f64 {
+        // t = N / sqrt(ChiSq(k)/k); ChiSq(k) as sum of k squared normals is
+        // fine for the small dof we use (2..8).
+        let n = self.normal();
+        let k = dof.max(1.0) as usize;
+        let mut chi = 0.0;
+        for _ in 0..k {
+            let z = self.normal();
+            chi += z * z;
+        }
+        n / (chi / dof).sqrt()
+    }
+
+    /// Fill a buffer with standard normals.
+    pub fn fill_normal(&mut self, out: &mut [f32], mean: f32, std: f32) {
+        for v in out.iter_mut() {
+            *v = self.normal_f32(mean, std);
+        }
+    }
+
+    /// Fill with an "activation-like" heavy-tailed distribution: Student-t
+    /// body plus rare massive outliers (Sun et al. 2024a, "massive
+    /// activations"), matching the paper's Fig. 4 profile.
+    pub fn fill_activations(&mut self, out: &mut [f32], scale: f32) {
+        for v in out.iter_mut() {
+            let body = self.student_t(4.0) as f32 * scale;
+            // ~0.1% massive outliers at 20-60x the body scale.
+            if self.next_f64() < 1e-3 {
+                let sign = if self.next_u64() & 1 == 0 { 1.0 } else { -1.0 };
+                *v = sign * scale * (20.0 + 40.0 * self.next_f32());
+            } else {
+                *v = body;
+            }
+        }
+    }
+
+    /// Zipf-distributed integer in [0, n) with exponent `s` (corpus synthesis).
+    pub fn zipf(&mut self, n: usize, s: f64) -> usize {
+        // Inverse-CDF on a precomputed-free approximation: rejection-free
+        // bounded harmonic walk is overkill; n here is small (vocab-sized),
+        // so a direct CDF walk with cached normalizer would be O(n). Use the
+        // standard approximation via inverse transform of the continuous
+        // bounded Pareto, clamped to the support.
+        let u = self.next_f64().max(1e-12);
+        if (s - 1.0).abs() < 1e-9 {
+            let h = (n as f64).ln();
+            return ((u * h).exp() - 1.0).min((n - 1) as f64) as usize;
+        }
+        let t = 1.0 - s;
+        let h = ((n as f64).powf(t) - 1.0) / t;
+        let x = (1.0 + u * h * t).powf(1.0 / t) - 1.0;
+        (x.min((n - 1) as f64)) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_by_seed() {
+        let mut a = Prng::new(42);
+        let mut b = Prng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Prng::new(43);
+        assert_ne!(Prng::new(42).next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn uniform_mean_and_range() {
+        let mut rng = Prng::new(1);
+        let mut sum = 0.0;
+        for _ in 0..100_000 {
+            let x = rng.next_f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        assert!((sum / 1e5 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Prng::new(2);
+        let n = 100_000;
+        let (mut m, mut v) = (0.0, 0.0);
+        for _ in 0..n {
+            let z = rng.normal();
+            m += z;
+            v += z * z;
+        }
+        m /= n as f64;
+        v /= n as f64;
+        assert!(m.abs() < 0.02, "mean {m}");
+        assert!((v - 1.0).abs() < 0.05, "var {v}");
+    }
+
+    #[test]
+    fn student_t_is_heavier_tailed_than_normal() {
+        let mut rng = Prng::new(3);
+        let n = 200_000;
+        let mut extreme_t = 0usize;
+        let mut extreme_n = 0usize;
+        for _ in 0..n {
+            if rng.student_t(3.0).abs() > 4.0 {
+                extreme_t += 1;
+            }
+            if rng.normal().abs() > 4.0 {
+                extreme_n += 1;
+            }
+        }
+        assert!(extreme_t > 10 * (extreme_n + 1), "t tails {extreme_t} vs normal {extreme_n}");
+    }
+
+    #[test]
+    fn activations_contain_outliers() {
+        let mut rng = Prng::new(4);
+        let mut buf = vec![0f32; 1 << 16];
+        rng.fill_activations(&mut buf, 1.0);
+        let max = buf.iter().fold(0f32, |a, &b| a.max(b.abs()));
+        assert!(max > 15.0, "expected massive outliers, max={max}");
+    }
+
+    #[test]
+    fn zipf_in_range_and_skewed() {
+        let mut rng = Prng::new(5);
+        let mut counts = vec![0usize; 100];
+        for _ in 0..100_000 {
+            let k = rng.zipf(100, 1.1);
+            assert!(k < 100);
+            counts[k] += 1;
+        }
+        assert!(counts[0] > counts[50].max(1) * 5, "head {} tail {}", counts[0], counts[50]);
+    }
+
+    #[test]
+    fn below_covers_support() {
+        let mut rng = Prng::new(6);
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            seen[rng.below(7)] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

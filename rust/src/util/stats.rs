@@ -1,0 +1,162 @@
+//! Error / distribution statistics used by the accuracy experiments
+//! (Tables 1–3, Fig. 4) and by tests asserting quantization quality.
+
+/// Mean squared error between two equal-length slices.
+pub fn mse(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    let mut acc = 0.0f64;
+    for (x, y) in a.iter().zip(b) {
+        let d = (*x - *y) as f64;
+        acc += d * d;
+    }
+    acc / a.len() as f64
+}
+
+/// Maximum absolute error.
+pub fn max_abs_err(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| ((*x - *y) as f64).abs()).fold(0.0, f64::max)
+}
+
+/// Signal-to-quantization-noise ratio in dB: 10 log10(E[x^2] / E[(x-x̂)^2]).
+/// Returns +inf for a perfect reconstruction.
+pub fn sqnr_db(original: &[f32], reconstructed: &[f32]) -> f64 {
+    let signal: f64 =
+        original.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>() / original.len() as f64;
+    let noise = mse(original, reconstructed);
+    if noise == 0.0 {
+        return f64::INFINITY;
+    }
+    10.0 * (signal / noise).log10()
+}
+
+/// Summary of a distribution (Fig. 4-style before/after comparison).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DistSummary {
+    pub n: usize,
+    pub min: f64,
+    pub max: f64,
+    pub mean: f64,
+    pub std: f64,
+    /// Excess kurtosis — large for spiky/heavy-tailed data.
+    pub kurtosis: f64,
+}
+
+impl DistSummary {
+    pub fn of(xs: &[f32]) -> Self {
+        let n = xs.len();
+        assert!(n > 0, "empty distribution");
+        let mut min = f64::INFINITY;
+        let mut max = f64::NEG_INFINITY;
+        let mut mean = 0.0;
+        for &x in xs {
+            let x = x as f64;
+            min = min.min(x);
+            max = max.max(x);
+            mean += x;
+        }
+        mean /= n as f64;
+        let (mut m2, mut m4) = (0.0, 0.0);
+        for &x in xs {
+            let d = x as f64 - mean;
+            let d2 = d * d;
+            m2 += d2;
+            m4 += d2 * d2;
+        }
+        m2 /= n as f64;
+        m4 /= n as f64;
+        let kurtosis = if m2 > 0.0 { m4 / (m2 * m2) - 3.0 } else { 0.0 };
+        DistSummary { n, min, max, mean, std: m2.sqrt(), kurtosis }
+    }
+
+    /// Dynamic range (max - min) — the quantity spike reserving shrinks.
+    pub fn range(&self) -> f64 {
+        self.max - self.min
+    }
+}
+
+/// Fixed-width ASCII histogram used by `flashcomm figure 4`.
+pub fn ascii_histogram(xs: &[f32], bins: usize, width: usize) -> String {
+    assert!(bins >= 2);
+    let s = DistSummary::of(xs);
+    let lo = s.min;
+    let hi = if s.max > s.min { s.max } else { s.min + 1.0 };
+    let mut counts = vec![0usize; bins];
+    for &x in xs {
+        let t = ((x as f64 - lo) / (hi - lo) * bins as f64) as usize;
+        counts[t.min(bins - 1)] += 1;
+    }
+    let peak = *counts.iter().max().unwrap() as f64;
+    let mut out = String::new();
+    for (i, &c) in counts.iter().enumerate() {
+        let left = lo + (hi - lo) * i as f64 / bins as f64;
+        // Log-scaled bar so rare outlier bins stay visible.
+        let bar = if c == 0 {
+            0
+        } else {
+            (((c as f64).ln() + 1.0) / (peak.ln() + 1.0) * width as f64).ceil() as usize
+        };
+        out.push_str(&format!("{left:>10.3} | {:<width$} {c}\n", "#".repeat(bar.min(width))));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    #[test]
+    fn mse_zero_for_identical() {
+        let a = vec![1.0f32, -2.0, 3.0];
+        assert_eq!(mse(&a, &a), 0.0);
+        assert_eq!(sqnr_db(&a, &a), f64::INFINITY);
+    }
+
+    #[test]
+    fn mse_known_value() {
+        let a = vec![0.0f32, 0.0];
+        let b = vec![1.0f32, -1.0];
+        assert_eq!(mse(&a, &b), 1.0);
+        assert_eq!(max_abs_err(&a, &b), 1.0);
+    }
+
+    #[test]
+    fn sqnr_orders_precision() {
+        // A finer perturbation must yield a higher SQNR.
+        let mut rng = Prng::new(9);
+        let x: Vec<f32> = (0..4096).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let coarse: Vec<f32> = x.iter().map(|v| v + 0.1).collect();
+        let fine: Vec<f32> = x.iter().map(|v| v + 0.01).collect();
+        assert!(sqnr_db(&x, &fine) > sqnr_db(&x, &coarse) + 15.0);
+    }
+
+    #[test]
+    fn summary_of_uniform() {
+        let xs: Vec<f32> = (0..10_001).map(|i| i as f32 / 10_000.0).collect();
+        let s = DistSummary::of(&xs);
+        assert!((s.mean - 0.5).abs() < 1e-3);
+        assert!((s.min - 0.0).abs() < 1e-6 && (s.max - 1.0).abs() < 1e-6);
+        // Uniform excess kurtosis is -1.2.
+        assert!((s.kurtosis + 1.2).abs() < 0.05, "kurtosis {}", s.kurtosis);
+    }
+
+    #[test]
+    fn heavy_tails_have_positive_kurtosis() {
+        let mut rng = Prng::new(10);
+        let mut xs = vec![0f32; 1 << 15];
+        rng.fill_activations(&mut xs, 1.0);
+        let s = DistSummary::of(&xs);
+        assert!(s.kurtosis > 2.0, "kurtosis {}", s.kurtosis);
+    }
+
+    #[test]
+    fn histogram_renders() {
+        let xs = vec![0.0f32, 0.1, 0.2, 0.9, 1.0];
+        let h = ascii_histogram(&xs, 4, 20);
+        assert_eq!(h.lines().count(), 4);
+    }
+}

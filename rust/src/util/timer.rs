@@ -1,0 +1,107 @@
+//! Measurement helpers for the custom bench harness (criterion is not in
+//! the offline vendor set). Median-of-runs wall timing with warmup, plus
+//! human-readable byte/throughput formatting shared by benches and the CLI.
+
+use std::time::{Duration, Instant};
+
+/// Result of a timed measurement.
+#[derive(Debug, Clone, Copy)]
+pub struct Measurement {
+    pub median: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    pub iters: usize,
+}
+
+impl Measurement {
+    pub fn secs(&self) -> f64 {
+        self.median.as_secs_f64()
+    }
+
+    /// Throughput in GB/s for `bytes` processed per iteration.
+    pub fn gbps(&self, bytes: usize) -> f64 {
+        bytes as f64 / self.secs() / 1e9
+    }
+}
+
+/// Time `f` with `warmup` throwaway runs then `iters` measured runs,
+/// reporting the median (robust to scheduler noise on a shared core).
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Measurement {
+    assert!(iters >= 1);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    samples.sort();
+    Measurement {
+        median: samples[samples.len() / 2],
+        min: samples[0],
+        max: *samples.last().unwrap(),
+        iters,
+    }
+}
+
+/// Auto-scale a duration for display.
+pub fn fmt_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.3} us", s * 1e6)
+    }
+}
+
+/// Auto-scale a byte count for display.
+pub fn fmt_bytes(b: usize) -> String {
+    const KB: f64 = 1024.0;
+    let b = b as f64;
+    if b >= KB * KB * KB {
+        format!("{:.2} GiB", b / (KB * KB * KB))
+    } else if b >= KB * KB {
+        format!("{:.2} MiB", b / (KB * KB))
+    } else if b >= KB {
+        format!("{:.2} KiB", b / KB)
+    } else {
+        format!("{b} B")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_ordered_stats() {
+        let m = bench(1, 5, || {
+            std::hint::black_box((0..1000u64).sum::<u64>());
+        });
+        assert!(m.min <= m.median && m.median <= m.max);
+        assert_eq!(m.iters, 5);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let m = Measurement {
+            median: Duration::from_secs(1),
+            min: Duration::from_secs(1),
+            max: Duration::from_secs(1),
+            iters: 1,
+        };
+        assert!((m.gbps(2_000_000_000) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert!(fmt_duration(Duration::from_micros(12)).contains("us"));
+        assert!(fmt_duration(Duration::from_millis(12)).contains("ms"));
+    }
+}

@@ -1,0 +1,178 @@
+//! End-to-end integration: PJRT artifacts + coordinator engines + real
+//! quantized collectives, composed exactly as the examples use them.
+//!
+//! These tests need `make artifacts` to have run; they skip (with a note)
+//! otherwise so `cargo test` stays green on a fresh checkout.
+
+use flashcomm::coordinator::{CollectiveStyle, MoeEngine, TpEngine, TrainOptions, Trainer};
+use flashcomm::model::{Corpus, ModelConfig, Sampler, Weights};
+use flashcomm::quant::Codec;
+use flashcomm::runtime::{default_artifacts_dir, Runtime};
+use flashcomm::sim::Algo;
+
+fn open_runtime() -> Option<Runtime> {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping integration test: run `make artifacts`");
+        return None;
+    }
+    Some(Runtime::open(dir).unwrap())
+}
+
+fn load_cfg(rt: &Runtime, name: &str) -> ModelConfig {
+    ModelConfig::from_record(rt.manifest.config(name).unwrap()).unwrap()
+}
+
+fn load_corpus(cfg: &ModelConfig) -> Corpus {
+    Corpus::load(default_artifacts_dir().join(format!("corpus_v{}.bin", cfg.vocab))).unwrap()
+}
+
+#[test]
+fn tp_engine_quantization_ordering() {
+    let Some(rt) = open_runtime() else { return };
+    // Quantization error only shows on a model with structure: use the
+    // cached short-trained checkpoint (trains once, then reused).
+    let (cfg, weights, _) =
+        flashcomm::coordinator::pretrain::ensure_trained("tiny",
+            flashcomm::coordinator::pretrain::TEST_STEPS).unwrap();
+    let corpus = load_corpus(&cfg);
+    let (_, eval) = corpus.split();
+    let batches = Sampler::eval_batches(eval, cfg.eval_batch, cfg.seq_len);
+    let batch = &batches[0];
+
+    let mut engine =
+        TpEngine::new(rt, cfg, &weights, Codec::Bf16, CollectiveStyle::TwoStep).unwrap();
+    let nll = |e: &mut TpEngine, spec: &str| {
+        e.set_codec(Codec::parse(spec).unwrap(), CollectiveStyle::TwoStep);
+        let (s, c) = e.eval_nll(batch).unwrap();
+        s / c as f64
+    };
+    let bf16 = nll(&mut engine, "bf16");
+    let int8 = nll(&mut engine, "int8");
+    let int2 = nll(&mut engine, "int2@32");
+    let int2sr = nll(&mut engine, "int2-sr@32");
+    assert!(bf16.is_finite() && bf16 > 0.0);
+    // Table 1 shape on the real engine: INT8 ~ clean, INT2 worse, SR helps.
+    assert!((int8 - bf16).abs() < 0.1 * bf16 + 0.05, "bf16 {bf16} int8 {int8}");
+    assert!(int2 > int8, "int8 {int8} int2 {int2}");
+    assert!(int2sr < int2, "int2 {int2} int2_sr {int2sr}");
+}
+
+#[test]
+fn tp_engine_hier_close_to_twostep() {
+    let Some(rt) = open_runtime() else { return };
+    let cfg = load_cfg(&rt, "tiny");
+    let weights =
+        Weights::load(default_artifacts_dir().join("tiny_init_weights.bin")).unwrap();
+    let corpus = load_corpus(&cfg);
+    let (_, eval) = corpus.split();
+    let batch = &Sampler::eval_batches(eval, cfg.eval_batch, cfg.seq_len)[0];
+    let codec = Codec::parse("int5").unwrap();
+    let mut e = TpEngine::new(rt, cfg, &weights, codec, CollectiveStyle::TwoStep).unwrap();
+    let (s2, c) = e.eval_nll(batch).unwrap();
+    e.set_codec(codec, CollectiveStyle::Hier);
+    let (s3, _) = e.eval_nll(batch).unwrap();
+    let (a, b) = (s2 / c as f64, s3 / c as f64);
+    assert!((a - b).abs() < 0.05 * a + 0.02, "two-step {a} vs hier {b}");
+}
+
+#[test]
+fn trainer_reduces_loss_with_quantized_grads() {
+    let Some(rt) = open_runtime() else { return };
+    let cfg = load_cfg(&rt, "tiny");
+    let weights =
+        Weights::load(default_artifacts_dir().join("tiny_init_weights.bin")).unwrap();
+    let corpus = load_corpus(&cfg);
+    let (train, _) = corpus.split();
+    let mut sampler = Sampler::new(train, 42);
+    let mut trainer = Trainer::new(rt, cfg, &weights).unwrap();
+    let opts = TrainOptions {
+        steps: 8,
+        dp: 2,
+        codec: Codec::parse("int8").unwrap(),
+        algo: Algo::TwoStep,
+        log_every: 0,
+        ..Default::default()
+    };
+    let recs = trainer.train(&mut sampler, &[], &opts).unwrap();
+    assert_eq!(recs.len(), 8);
+    let first = recs[0].loss;
+    let last = recs.last().unwrap().loss;
+    assert!(last < first - 0.3, "loss {first} -> {last} after 8 steps");
+    assert!(recs.iter().all(|r| r.loss.is_finite()));
+    assert!(recs[0].grad_wire_bytes > 0);
+    // Checkpoint round-trip.
+    let w = trainer.export_weights().unwrap();
+    assert_eq!(w.n_params(), 3_674_624);
+}
+
+#[test]
+fn quantized_grads_track_bf16_training() {
+    // INT8 gradient AllReduce must track BF16 closely over a few steps
+    // (ZeRO++-style claim), and hierarchical must match two-step.
+    let Some(rt) = open_runtime() else { return };
+    let cfg = load_cfg(&rt, "tiny");
+    let weights =
+        Weights::load(default_artifacts_dir().join("tiny_init_weights.bin")).unwrap();
+    let corpus = load_corpus(&cfg);
+    let (train, _) = corpus.split();
+
+    let run = |spec: &str, algo: Algo| {
+        let rt = Runtime::open(default_artifacts_dir()).unwrap();
+        let mut sampler = Sampler::new(train, 11);
+        let mut trainer = Trainer::new(rt, cfg.clone(), &weights).unwrap();
+        let opts = TrainOptions {
+            steps: 5,
+            dp: 2,
+            codec: Codec::parse(spec).unwrap(),
+            algo,
+            log_every: 0,
+            ..Default::default()
+        };
+        trainer.train(&mut sampler, &[], &opts).unwrap().last().unwrap().loss
+    };
+    let bf16 = run("bf16", Algo::TwoStep);
+    let int8 = run("int8", Algo::TwoStep);
+    let hier = run("int8", Algo::Hier);
+    assert!((int8 - bf16).abs() < 0.15, "bf16 {bf16} vs int8 {int8}");
+    assert!((hier - int8).abs() < 0.15, "two-step {int8} vs hier {hier}");
+}
+
+#[test]
+fn moe_engine_dispatch_quantization_ordering() {
+    let Some(rt) = open_runtime() else { return };
+    let (cfg, weights, _) =
+        flashcomm::coordinator::pretrain::ensure_trained("moe-tiny",
+            flashcomm::coordinator::pretrain::TEST_STEPS).unwrap();
+    let corpus = load_corpus(&cfg);
+    let (_, eval) = corpus.split();
+    let batches: Vec<_> =
+        Sampler::eval_batches(eval, cfg.eval_batch, cfg.seq_len).into_iter().take(1).collect();
+    let mut engine =
+        MoeEngine::new(rt, cfg, &weights, Codec::Bf16, Codec::Bf16).unwrap();
+    let mut ppl = |spec: &str, e: &mut MoeEngine| {
+        e.set_dispatch_codec(Codec::parse(spec).unwrap());
+        e.perplexity(&batches).unwrap()
+    };
+    // Dispatch-only quantization perturbs just the expert path; at this
+    // model scale the ppl deltas sit at the noise floor (see Table 8 note
+    // in EXPERIMENTS.md — the payload-level SQNR ordering is asserted with
+    // margin in comm::all2all tests). What IS guaranteed here:
+    //   1. quantized dispatch is *safe*: ppl within a tight band of bf16,
+    //   2. the wire actually carries fewer bytes at lower widths,
+    //   3. QDQ is demonstrably active (ppl not bit-identical to bf16).
+    let bf16 = ppl("bf16", &mut engine);
+    let w_bf16 = engine.dispatch_wire_bytes;
+    let int8 = ppl("int8", &mut engine);
+    let w_int8 = engine.dispatch_wire_bytes - w_bf16;
+    let int2 = ppl("int2@32", &mut engine);
+    let w_int2 = engine.dispatch_wire_bytes - w_bf16 - w_int8;
+    let int2sr = ppl("int2-sr@32", &mut engine);
+    assert!(bf16.is_finite() && int8.is_finite() && int2.is_finite() && int2sr.is_finite());
+    assert!((int8 - bf16).abs() < 0.005 * bf16, "INT8 dispatch ~lossless: {bf16} vs {int8}");
+    assert!((int2 - bf16).abs() < 0.03 * bf16, "INT2 dispatch bounded: {bf16} vs {int2}");
+    assert!((int2sr - bf16).abs() < 0.03 * bf16, "SR bounded: {bf16} vs {int2sr}");
+    assert!(int2 != bf16 && int8 != bf16, "QDQ must be active");
+    assert!(w_int2 * 2 < w_int8, "INT2 wire {w_int2} must be far below INT8 {w_int8}");
+    assert!(w_bf16 > 0);
+}

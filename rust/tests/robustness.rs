@@ -1,0 +1,153 @@
+//! Robustness and failure-injection tests: corrupted payloads, degenerate
+//! sizes, format stability. None of these need artifacts.
+
+use flashcomm::comm::{fabric, hier, pipeline, ring, twostep};
+use flashcomm::quant::{Codec, CodecBuffers};
+use flashcomm::topo::{presets, Topology};
+use flashcomm::util::proptest::cases;
+use flashcomm::util::Prng;
+
+/// The decoder must never panic on corrupted bytes: either a clean error
+/// or a (garbage) decode, but no UB/panic/overrun.
+#[test]
+fn decoder_survives_fuzzed_corruption() {
+    cases(9001, 300, |rng| {
+        let n = 1 + rng.below(2000);
+        let mut data = vec![0f32; n];
+        rng.fill_normal(&mut data, 0.0, 3.0);
+        let specs = ["int8", "int5", "int4@32", "int2-sr@32", "int2-sr@32!", "int3-log@32"];
+        let codec = Codec::parse(specs[rng.below(specs.len())]).unwrap();
+        let mut wire = codec.encode(&data);
+        // Corrupt 1-8 random bytes anywhere (including the header).
+        for _ in 0..1 + rng.below(8) {
+            let i = rng.below(wire.len());
+            wire[i] ^= rng.next_u32() as u8;
+        }
+        let mut out = vec![0f32; n];
+        let _ = Codec::decode(&wire, &mut out); // must simply not panic
+    });
+}
+
+/// Truncation at every prefix length must be a clean error (never panic).
+#[test]
+fn decoder_survives_all_truncations() {
+    let data: Vec<f32> = (0..257).map(|i| (i as f32).sin()).collect();
+    let codec = Codec::parse("int2-sr@32!").unwrap();
+    let wire = codec.encode(&data);
+    let mut out = vec![0f32; 257];
+    for cut in 0..wire.len() {
+        assert!(Codec::decode(&wire[..cut], &mut out).is_err(), "cut {cut} should error");
+    }
+}
+
+/// Wire-format golden stability: the exact bytes for a fixed input must
+/// never change silently (cross-version compatibility of the fabric).
+#[test]
+fn wire_format_golden() {
+    let data: Vec<f32> = (0..64).map(|i| ((i * 37) % 64) as f32 / 8.0 - 4.0).collect();
+    let golden: &[(&str, usize, u64)] = &[
+        // (codec, wire_len, FNV-1a hash of the payload)
+        ("int8", 84, 0xdf323d3d3d0578a5),
+        ("int5", 60, 0x16d61d9fd3f839f0),
+        ("int2-sr@32", 56, 0x9dcc3f14729cde04),
+        ("int2-sr@32!", 48, 0x31600c2bcf19f3b0),
+    ];
+    for (spec, want_len, want_hash) in golden {
+        let wire = Codec::parse(spec).unwrap().encode(&data);
+        let mut h: u64 = 0xcbf29ce484222325;
+        for &b in &wire {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        assert_eq!(wire.len(), *want_len, "{spec}: wire length changed");
+        assert_eq!(h, *want_hash, "{spec}: wire bytes changed (hash {h:#x})");
+    }
+}
+
+/// Collectives on awkward sizes: shorter than the rank count, exactly one
+/// element, prime lengths.
+#[test]
+fn collectives_handle_degenerate_lengths() {
+    let topo = Topology::new(presets::h800(), 8);
+    let l40 = Topology::new(presets::l40(), 8);
+    for len in [1usize, 3, 7, 8, 9, 63] {
+        for which in 0..4 {
+            let inputs: Vec<Vec<f32>> =
+                (0..8).map(|r| vec![r as f32 + 1.0; len]).collect();
+            let expected: f32 = (1..=8).map(|x| x as f32).sum();
+            let inputs = &inputs;
+            let t = if which >= 2 { &l40 } else { &topo };
+            let (results, _) = fabric::run_ranks(t, |h| {
+                let mut d = inputs[h.rank].clone();
+                match which {
+                    0 => ring::allreduce(&h, &mut d, &Codec::Bf16),
+                    1 => twostep::allreduce(&h, &mut d, &Codec::Bf16),
+                    2 => hier::allreduce(&h, &mut d, &Codec::Bf16),
+                    _ => pipeline::allreduce_chunked(&h, &mut d, &Codec::Bf16, 4),
+                }
+                d
+            });
+            for r in &results {
+                for &x in r.iter() {
+                    assert!((x - expected).abs() < 0.5, "len {len} which {which}: {x}");
+                }
+            }
+        }
+    }
+}
+
+/// Quantized collectives with a group size larger than the chunk: the
+/// codec must still roundtrip (tail-group handling through the stack).
+#[test]
+fn quantized_collective_with_tiny_chunks() {
+    let topo = Topology::new(presets::h800(), 8);
+    let codec = Codec::parse("int8@128").unwrap(); // chunks of 2 elements
+    let inputs: Vec<Vec<f32>> = (0..8)
+        .map(|r| {
+            let mut rng = Prng::new(50 + r as u64);
+            let mut v = vec![0f32; 17];
+            rng.fill_normal(&mut v, 0.0, 1.0);
+            v
+        })
+        .collect();
+    let mut expected = vec![0f32; 17];
+    for v in &inputs {
+        for (e, x) in expected.iter_mut().zip(v) {
+            *e += x;
+        }
+    }
+    let inputs = &inputs;
+    let (results, _) = fabric::run_ranks(&topo, |h| {
+        let mut d = inputs[h.rank].clone();
+        twostep::allreduce(&h, &mut d, &codec);
+        d
+    });
+    for (a, b) in results[0].iter().zip(&expected) {
+        assert!((a - b).abs() < 0.5, "{a} vs {b}");
+    }
+}
+
+/// Extreme-but-bf16-representable inputs must round-trip finite (values
+/// beyond bf16's max, like f32::MAX, legitimately saturate to inf on a
+/// bf16 wire — same as the BF16 passthrough itself).
+#[test]
+fn encode_clamps_extremes() {
+    let data = vec![1e38f32, f32::MIN_POSITIVE, -1e38, 1e-38, 0.0, 1.0];
+    for spec in ["int8", "int2@32", "int2-sr@32"] {
+        let codec = Codec::parse(spec).unwrap();
+        let wire = codec.encode(&data);
+        let mut out = vec![0f32; 6];
+        Codec::decode(&wire, &mut out).unwrap();
+        assert!(out.iter().all(|x| x.is_finite()), "{spec}: {out:?}");
+    }
+}
+
+/// decode_sum must leave the accumulator untouched on header errors.
+#[test]
+fn decode_sum_error_leaves_accumulator() {
+    let mut bufs = CodecBuffers::default();
+    let mut acc = vec![1.0f32; 8];
+    let garbage = vec![0u8; 40];
+    assert!(Codec::decode_sum_with(&garbage, &mut bufs, &mut acc).is_err());
+    assert!(acc.iter().all(|&x| x == 1.0));
+}
