@@ -12,12 +12,15 @@ use flashcomm::comm::{self, fabric};
 use flashcomm::quant::Codec;
 use flashcomm::sim::{self, Algo};
 use flashcomm::topo::{presets, Topology};
+use flashcomm::transport::{tcp, Transport, FRAME_HEADER_LEN};
 use flashcomm::util::timer::{bench, fmt_bytes};
 use flashcomm::util::Prng;
 
 fn main() {
     let n: usize = 1 << 20; // 1M f32 = 4 MiB per rank
     fabric_bench(n);
+    println!();
+    transport_sweep();
     println!();
     sim_tables();
 }
@@ -51,12 +54,7 @@ fn fabric_bench(n: usize) {
         let m = bench(1, 3, || {
             let (_, counters) = fabric::run_ranks(topo, |h| {
                 let mut data = inputs[h.rank].clone();
-                match algo {
-                    Algo::Ring => comm::ring::allreduce(&h, &mut data, &codec),
-                    Algo::TwoStep => comm::twostep::allreduce(&h, &mut data, &codec),
-                    Algo::Hier => comm::hier::allreduce(&h, &mut data, &codec),
-                    Algo::HierPipelined => comm::pipeline::allreduce(&h, &mut data, &codec),
-                }
+                comm::allreduce_with(algo, &h, &mut data, &codec);
             });
             wire_bytes = counters.total_bytes();
         });
@@ -67,6 +65,104 @@ fn fabric_bench(n: usize) {
             (4 * n * topo.n_gpus) as f64 / m.secs() / 1e9,
             wire_bytes
         );
+    }
+}
+
+/// InProc vs TCP-loopback backend sweep under the same collective, wire
+/// codec, and inputs. Emits `BENCH_transport.json` next to Cargo.toml so
+/// the perf trajectory of the transport layer has a recorded baseline.
+///
+/// The TCP numbers include mesh bootstrap (rendezvous + full-mesh socket
+/// setup happens inside the timed closure, ~one-off per job in real use),
+/// recorded as `includes_bootstrap` in the JSON.
+fn transport_sweep() {
+    let ranks = 8usize;
+    let elems = 1 << 18; // 1 MiB of f32 per rank keeps the TCP runs quick
+    let topo = Topology::new(presets::h800(), ranks);
+    println!(
+        "== transport backend sweep: two-step AllReduce, {} ranks x {} ==",
+        ranks,
+        fmt_bytes(4 * elems)
+    );
+    println!(
+        "{:<8} {:<12} {:>10} {:>14} {:>14} {:>10}",
+        "backend", "codec", "ms", "payload GB/s", "wire bytes", "msgs"
+    );
+    let inputs: Vec<Vec<f32>> = (0..ranks)
+        .map(|r| {
+            let mut rng = Prng::new(300 + r as u64);
+            let mut v = vec![0f32; elems];
+            rng.fill_activations(&mut v, 1.0);
+            v
+        })
+        .collect();
+    let inputs = &inputs;
+    // One rank's work, generic over the backend (closures can't be).
+    fn per_rank<T: Transport>(h: &fabric::RankHandle<T>, inputs: &[Vec<f32>], codec: &Codec) {
+        let mut d = inputs[h.rank].clone();
+        comm::twostep::allreduce(h, &mut d, codec);
+    }
+    let mut records = Vec::new();
+    for backend in ["inproc", "tcp"] {
+        for spec in ["bf16", "int4@32", "int2-sr@32"] {
+            let codec = Codec::parse(spec).unwrap();
+            let mut payload_bytes = 0u64;
+            let mut wire_bytes = 0u64;
+            let mut messages = 0u64;
+            let m = bench(1, 3, || {
+                let (_, counters) = match backend {
+                    "inproc" => {
+                        fabric::run_ranks(&topo, |h| per_rank(&h, inputs, &codec))
+                    }
+                    _ => fabric::run_ranks_with(
+                        tcp::local_mesh(ranks).expect("tcp mesh bootstrap"),
+                        &topo,
+                        |h| per_rank(&h, inputs, &codec),
+                    ),
+                };
+                // Counters are read after every rank joined, so the
+                // snapshot is at rest; wire bytes = payload + one frame
+                // header per message (exact on both backends).
+                let snap = counters.snapshot();
+                payload_bytes = snap.total;
+                messages = snap.messages;
+                wire_bytes = snap.total + snap.messages * FRAME_HEADER_LEN as u64;
+            });
+            let gbps = (4 * elems * ranks) as f64 / m.secs() / 1e9;
+            println!(
+                "{:<8} {:<12} {:>10.2} {:>14.3} {:>14} {:>10}",
+                backend,
+                spec,
+                m.secs() * 1e3,
+                gbps,
+                wire_bytes,
+                messages
+            );
+            records.push(format!(
+                concat!(
+                    "  {{\"backend\": \"{}\", \"algo\": \"twostep\", \"codec\": \"{}\", ",
+                    "\"ranks\": {}, \"elems_per_rank\": {}, \"wall_ms\": {:.3}, ",
+                    "\"payload_algbw_gbps\": {:.3}, \"payload_bytes\": {}, ",
+                    "\"wire_bytes\": {}, \"messages\": {}, \"includes_bootstrap\": {}}}"
+                ),
+                backend,
+                spec,
+                ranks,
+                elems,
+                m.secs() * 1e3,
+                gbps,
+                payload_bytes,
+                wire_bytes,
+                messages,
+                backend == "tcp"
+            ));
+        }
+    }
+    let json = format!("[\n{}\n]\n", records.join(",\n"));
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_transport.json");
+    match std::fs::write(path, json) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
     }
 }
 

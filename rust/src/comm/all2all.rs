@@ -9,13 +9,14 @@
 use super::encode;
 use crate::comm::fabric::RankHandle;
 use crate::quant::{Codec, CodecBuffers};
+use crate::transport::Transport;
 
 /// Exchange `sends[d]` with every rank `d`, quantizing with `codec`.
 ///
 /// Returns `recv[s]` = the decoded payload rank `s` sent us. The self
 /// payload (`sends[rank]`) takes the same QDQ so expert computation sees
 /// wire precision regardless of token placement.
-pub fn all2all(h: &RankHandle, sends: &[Vec<f32>], codec: &Codec) -> Vec<Vec<f32>> {
+pub fn all2all<T: Transport>(h: &RankHandle<T>, sends: &[Vec<f32>], codec: &Codec) -> Vec<Vec<f32>> {
     assert_eq!(sends.len(), h.n, "one payload per destination rank");
     let mut bufs = CodecBuffers::default();
     // Lengths are exchanged in-band: the wire header carries n.
@@ -43,8 +44,8 @@ pub fn all2all(h: &RankHandle, sends: &[Vec<f32>], codec: &Codec) -> Vec<Vec<f32
 /// to experts, get them back. Returns what each rank's tokens look like
 /// after the full EP round trip with identity experts — used by tests to
 /// isolate pure communication error.
-pub fn dispatch_combine_identity(
-    h: &RankHandle,
+pub fn dispatch_combine_identity<T: Transport>(
+    h: &RankHandle<T>,
     sends: &[Vec<f32>],
     dispatch_codec: &Codec,
 ) -> Vec<Vec<f32>> {

@@ -1,7 +1,9 @@
-//! In-process communication fabric.
+//! The communication fabric: rank endpoints over a pluggable transport.
 //!
-//! Stands in for the GPU interconnect: N ranks run as threads, exchanging
-//! byte payloads over per-pair channels. The collectives built on top move
+//! Stands in for the GPU interconnect: N ranks exchange byte payloads over
+//! a [`Transport`] backend — mpsc channels for in-process thread ranks
+//! ([`run_ranks`]), real sockets for multi-process ranks (the `worker`
+//! CLI / [`crate::transport::tcp`]). The collectives built on top move
 //! *real encoded bytes* through it — quantize → bit-split pack → transfer →
 //! unpack → dequantize → reduce — so functional behaviour (numerics, wire
 //! format, QDQ placement) is exactly the paper's; only the physical
@@ -9,12 +11,14 @@
 //! tests verify the Table 5 volume accounting against the closed forms.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 
 use crate::topo::Topology;
+use crate::transport::{inproc, InProcTransport, Transport};
 
-/// Byte counters, split by link class (Table 5 columns).
+/// Byte counters, split by link class (Table 5 columns). Counts *payload*
+/// bytes (the collective's semantic volume); per-frame transport overhead
+/// is visible through [`Transport::stats`] instead.
 #[derive(Debug, Default)]
 pub struct ByteCounters {
     /// All bytes that crossed any link.
@@ -23,6 +27,14 @@ pub struct ByteCounters {
     pub cross_numa: AtomicU64,
     /// Number of point-to-point messages.
     pub messages: AtomicU64,
+}
+
+/// A point-in-time copy of [`ByteCounters`], coherent when taken at rest.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CountersSnapshot {
+    pub total: u64,
+    pub cross_numa: u64,
+    pub messages: u64,
 }
 
 impl ByteCounters {
@@ -38,6 +50,28 @@ impl ByteCounters {
         self.messages.load(Ordering::Relaxed)
     }
 
+    /// Copy all three counters at once.
+    ///
+    /// The three loads are individually relaxed — the copy is mutually
+    /// consistent only when no collective is in flight (e.g. after
+    /// [`run_ranks`] returned). Tests should compare snapshots taken at
+    /// rest instead of reading individual counters around live traffic.
+    pub fn snapshot(&self) -> CountersSnapshot {
+        CountersSnapshot {
+            total: self.total_bytes(),
+            cross_numa: self.cross_numa_bytes(),
+            messages: self.message_count(),
+        }
+    }
+
+    /// Reset all counters to zero.
+    ///
+    /// This is three independent relaxed stores, **not** an atomic
+    /// snapshot-and-clear: a `send` racing with `reset` can land between
+    /// the stores and leave the counters mutually inconsistent (e.g.
+    /// `messages` incremented but its bytes wiped). Only call while no
+    /// collective is in flight — between [`run_ranks`] invocations — and
+    /// read totals via [`ByteCounters::snapshot`] after ranks have joined.
     pub fn reset(&self) {
         self.total.store(0, Ordering::Relaxed);
         self.cross_numa.store(0, Ordering::Relaxed);
@@ -45,18 +79,36 @@ impl ByteCounters {
     }
 }
 
-/// One rank's endpoint into the fabric.
-pub struct RankHandle {
+/// One rank's endpoint into the fabric: a connected transport plus the
+/// node topology and shared byte accounting. Generic over the backend;
+/// defaults to the in-process mesh so existing signatures keep reading
+/// `&RankHandle`.
+pub struct RankHandle<T: Transport = InProcTransport> {
     pub rank: usize,
     pub n: usize,
     topo: Topology,
-    tx: Vec<Sender<Vec<u8>>>,
-    rx: Vec<Receiver<Vec<u8>>>,
+    transport: T,
     counters: Arc<ByteCounters>,
 }
 
-impl RankHandle {
-    /// Send a payload to `dst` (non-blocking; channels are unbounded).
+impl<T: Transport> RankHandle<T> {
+    /// Wrap a connected transport endpoint. `topo` must describe the same
+    /// world size the transport was bootstrapped with; `counters` is shared
+    /// across every handle of the same logical job (one per process for
+    /// multi-process transports).
+    pub fn new(transport: T, topo: Topology, counters: Arc<ByteCounters>) -> RankHandle<T> {
+        assert_eq!(
+            topo.n_gpus,
+            transport.n(),
+            "topology is {} ranks but the transport mesh has {}",
+            topo.n_gpus,
+            transport.n()
+        );
+        RankHandle { rank: transport.rank(), n: transport.n(), topo, transport, counters }
+    }
+
+    /// Send a payload to `dst` (non-blocking with respect to the peer's
+    /// progress; see [`Transport`]).
     pub fn send(&self, dst: usize, bytes: Vec<u8>) {
         assert_ne!(dst, self.rank, "self-send is a local copy, not a transfer");
         self.counters.total.fetch_add(bytes.len() as u64, Ordering::Relaxed);
@@ -64,13 +116,15 @@ impl RankHandle {
         if self.topo.numa_groups > 1 && self.topo.group_of(self.rank) != self.topo.group_of(dst) {
             self.counters.cross_numa.fetch_add(bytes.len() as u64, Ordering::Relaxed);
         }
-        self.tx[dst].send(bytes).expect("peer hung up");
+        self.transport.send(dst, bytes).expect("transport send failed");
     }
 
-    /// Block until a payload from `src` arrives.
+    /// Block until a payload from `src` arrives. Panics if the transport
+    /// reports a fault (corruption, version mismatch, sequence desync,
+    /// disconnect) — a collective cannot continue past a broken link.
     pub fn recv(&self, src: usize) -> Vec<u8> {
         assert_ne!(src, self.rank);
-        self.rx[src].recv().expect("peer hung up")
+        self.transport.recv(src).expect("transport recv failed")
     }
 
     /// The node topology this fabric models.
@@ -78,52 +132,50 @@ impl RankHandle {
         &self.topo
     }
 
-    /// Shared byte counters (same instance across all ranks).
+    /// Shared byte counters (same instance across all ranks of this job).
     pub fn counters(&self) -> &ByteCounters {
         &self.counters
     }
+
+    /// The underlying transport endpoint (e.g. for [`Transport::stats`]).
+    pub fn transport(&self) -> &T {
+        &self.transport
+    }
 }
 
-/// Build a fabric over `topo` and run `f` once per rank, each on its own
-/// thread. Returns the per-rank results in rank order, plus the counters.
+/// Build an in-process fabric over `topo` and run `f` once per rank, each
+/// on its own thread. Returns the per-rank results in rank order, plus the
+/// counters.
 pub fn run_ranks<R, F>(topo: &Topology, f: F) -> (Vec<R>, Arc<ByteCounters>)
 where
     R: Send,
-    F: Fn(RankHandle) -> R + Sync,
+    F: Fn(RankHandle<InProcTransport>) -> R + Sync,
 {
-    let n = topo.n_gpus;
+    run_ranks_with(inproc::mesh(topo.n_gpus), topo, f)
+}
+
+/// Run `f` once per rank over pre-connected transport endpoints (endpoint
+/// `i` must be rank `i`), each on its own thread. This is how alternative
+/// backends (e.g. [`crate::transport::tcp::local_mesh`]) drive the same
+/// collectives the in-process fabric runs.
+pub fn run_ranks_with<T, R, F>(endpoints: Vec<T>, topo: &Topology, f: F) -> (Vec<R>, Arc<ByteCounters>)
+where
+    T: Transport,
+    R: Send,
+    F: Fn(RankHandle<T>) -> R + Sync,
+{
+    assert_eq!(endpoints.len(), topo.n_gpus, "one endpoint per rank");
     let counters = Arc::new(ByteCounters::default());
-    // chan[s][d]: sender for s->d kept by s; receiver kept by d.
-    let mut senders: Vec<Vec<Option<Sender<Vec<u8>>>>> = (0..n).map(|_| Vec::new()).collect();
-    let mut receivers: Vec<Vec<Option<Receiver<Vec<u8>>>>> =
-        (0..n).map(|_| (0..n).map(|_| None).collect()).collect();
-    for s in 0..n {
-        for d in 0..n {
-            let (tx, rx) = channel();
-            senders[s].push(Some(tx));
-            receivers[d][s] = Some(rx);
-        }
-    }
-    let mut handles = Vec::with_capacity(n);
-    for (rank, rxs) in receivers.into_iter().enumerate() {
-        let tx: Vec<Sender<Vec<u8>>> =
-            (0..n).map(|d| senders[rank][d].take().unwrap()).collect();
-        let rx: Vec<Receiver<Vec<u8>>> = rxs
-            .into_iter()
-            .enumerate()
-            .map(|(s, r)| r.unwrap_or_else(|| panic!("missing channel {s}->{rank}")))
-            .collect();
-        handles.push(RankHandle {
-            rank,
-            n,
-            topo: topo.clone(),
-            tx,
-            rx,
-            counters: counters.clone(),
-        });
-    }
+    let handles: Vec<RankHandle<T>> = endpoints
+        .into_iter()
+        .enumerate()
+        .map(|(i, t)| {
+            assert_eq!(t.rank(), i, "endpoint {i} reports rank {}", t.rank());
+            RankHandle::new(t, topo.clone(), counters.clone())
+        })
+        .collect();
     let results = std::thread::scope(|scope| {
-        let mut joins = Vec::with_capacity(n);
+        let mut joins = Vec::with_capacity(handles.len());
         for h in handles {
             let f = &f;
             joins.push(scope.spawn(move || f(h)));
@@ -178,9 +230,10 @@ mod tests {
             h.send(neighbour, vec![0u8; 10]);
             let _ = h.recv(if h.rank > g.start { h.rank - 1 } else { g.end - 1 });
         });
-        assert_eq!(counters.total_bytes(), 8 * 110);
-        assert_eq!(counters.cross_numa_bytes(), 8 * 100);
-        assert_eq!(counters.message_count(), 16);
+        let snap = counters.snapshot();
+        assert_eq!(snap.total, 8 * 110);
+        assert_eq!(snap.cross_numa, 8 * 100);
+        assert_eq!(snap.messages, 16);
     }
 
     #[test]
@@ -197,5 +250,41 @@ mod tests {
             }
         });
         assert_eq!(results[1], (0..100).collect::<Vec<u8>>());
+    }
+
+    #[test]
+    fn snapshot_and_reset_between_runs() {
+        let topo = Topology::new(presets::h800(), 2);
+        let (_, counters) = run_ranks(&topo, |h| {
+            if h.rank == 0 {
+                h.send(1, vec![0u8; 64]);
+            } else {
+                let _ = h.recv(0);
+            }
+        });
+        // At rest, snapshot is coherent and reset clears everything.
+        let snap = counters.snapshot();
+        assert_eq!(snap, CountersSnapshot { total: 64, cross_numa: 0, messages: 1 });
+        counters.reset();
+        assert_eq!(counters.snapshot(), CountersSnapshot::default());
+    }
+
+    #[test]
+    fn transport_stats_include_frame_overhead() {
+        use crate::transport::FRAME_HEADER_LEN;
+        let topo = Topology::new(presets::h800(), 2);
+        let (stats, counters) = run_ranks(&topo, |h| {
+            if h.rank == 0 {
+                h.send(1, vec![0u8; 100]);
+            } else {
+                let _ = h.recv(0);
+            }
+            h.transport().stats()
+        });
+        // InProc stats are mesh-shared; payload accounting matches the
+        // comm-layer counters, wire accounting adds one frame header.
+        assert_eq!(stats[0], stats[1]);
+        assert_eq!(stats[0].payload_bytes, counters.total_bytes());
+        assert_eq!(stats[0].wire_bytes, counters.total_bytes() + FRAME_HEADER_LEN as u64);
     }
 }

@@ -17,9 +17,10 @@
 use super::{chunk_range, encode};
 use crate::comm::fabric::RankHandle;
 use crate::quant::{Codec, CodecBuffers};
+use crate::transport::Transport;
 
 /// In-place hierarchical AllReduce. Requires a 2-NUMA-group topology.
-pub fn allreduce(h: &RankHandle, data: &mut [f32], codec: &Codec) {
+pub fn allreduce<T: Transport>(h: &RankHandle<T>, data: &mut [f32], codec: &Codec) {
     let topo = h.topo().clone();
     assert_eq!(topo.numa_groups, 2, "hierarchical AllReduce needs 2 NUMA groups");
     let s = topo.group_size();

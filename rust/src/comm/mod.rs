@@ -1,8 +1,12 @@
-//! Quantized collectives over the in-process fabric.
+//! Quantized collectives over the pluggable transport fabric.
 //!
 //! Every algorithm moves real encoded payloads ([`crate::quant::Codec`]
-//! wire format) between rank threads: quantize → bit-split pack → transfer
-//! → unpack → dequantize → reduce. This is the functional half of the
+//! wire format) between ranks: quantize → bit-split pack → transfer →
+//! unpack → dequantize → reduce. Each collective is generic over the
+//! [`crate::transport::Transport`] backend, so the same code runs over
+//! thread ranks (in-process mpsc mesh, [`fabric::run_ranks`]) and over OS
+//! processes on real sockets (`flashcomm worker`); the results are
+//! bit-identical across backends. This is the functional half of the
 //! reproduction (numerics, wire format, QDQ placement); the timing half
 //! lives in [`crate::sim`].
 //!
@@ -21,7 +25,26 @@ pub mod pipeline;
 pub mod ring;
 pub mod twostep;
 
+use crate::comm::fabric::RankHandle;
 use crate::quant::{Codec, CodecBuffers};
+use crate::sim::Algo;
+use crate::transport::Transport;
+
+/// Run the `algo`-selected AllReduce in place — the one dispatch point
+/// shared by the trainer and the `worker` CLI.
+pub fn allreduce_with<T: Transport>(
+    algo: Algo,
+    h: &RankHandle<T>,
+    data: &mut [f32],
+    codec: &Codec,
+) {
+    match algo {
+        Algo::Ring => ring::allreduce(h, data, codec),
+        Algo::TwoStep => twostep::allreduce(h, data, codec),
+        Algo::Hier => hier::allreduce(h, data, codec),
+        Algo::HierPipelined => pipeline::allreduce(h, data, codec),
+    }
+}
 
 /// Balanced contiguous partition: the `i`-th of `parts` chunks of `len`.
 pub fn chunk_range(len: usize, parts: usize, i: usize) -> std::ops::Range<usize> {

@@ -12,12 +12,18 @@
 use super::{chunk_range, encode, hier};
 use crate::comm::fabric::RankHandle;
 use crate::quant::{Codec, CodecBuffers};
+use crate::transport::Transport;
 
 /// Default micro-chunk count (the sim's Fig. 8 sweep peaks around 8).
 pub const DEFAULT_CHUNKS: usize = 8;
 
 /// In-place pipelined hierarchical AllReduce with `chunks` micro-chunks.
-pub fn allreduce_chunked(h: &RankHandle, data: &mut [f32], codec: &Codec, chunks: usize) {
+pub fn allreduce_chunked<T: Transport>(
+    h: &RankHandle<T>,
+    data: &mut [f32],
+    codec: &Codec,
+    chunks: usize,
+) {
     let topo = h.topo().clone();
     assert_eq!(topo.numa_groups, 2, "pipelined hier needs 2 NUMA groups");
     let s = topo.group_size();
@@ -99,13 +105,18 @@ pub fn allreduce_chunked(h: &RankHandle, data: &mut [f32], codec: &Codec, chunks
 }
 
 /// Pipelined hierarchical AllReduce with the default micro-chunk count.
-pub fn allreduce(h: &RankHandle, data: &mut [f32], codec: &Codec) {
+pub fn allreduce<T: Transport>(h: &RankHandle<T>, data: &mut [f32], codec: &Codec) {
     allreduce_chunked(h, data, codec, DEFAULT_CHUNKS);
 }
 
 /// Reference: serial hierarchical execution of the same chunking (used by
 /// the equivalence test and the Fig. 8 "serial" bar).
-pub fn allreduce_serial_chunked(h: &RankHandle, data: &mut [f32], codec: &Codec, chunks: usize) {
+pub fn allreduce_serial_chunked<T: Transport>(
+    h: &RankHandle<T>,
+    data: &mut [f32],
+    codec: &Codec,
+    chunks: usize,
+) {
     let k = chunks.max(1);
     for c in 0..k {
         let mr = chunk_range(data.len(), k, c);

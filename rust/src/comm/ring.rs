@@ -9,11 +9,12 @@
 use super::{chunk_range, encode};
 use crate::comm::fabric::RankHandle;
 use crate::quant::{Codec, CodecBuffers};
+use crate::transport::Transport;
 
 /// In-place ring AllReduce of `data` across all ranks.
 ///
 /// Every rank ends with (a wire-precision image of) the element-wise sum.
-pub fn allreduce(h: &RankHandle, data: &mut [f32], codec: &Codec) {
+pub fn allreduce<T: Transport>(h: &RankHandle<T>, data: &mut [f32], codec: &Codec) {
     let n = h.n;
     if n == 1 {
         return;

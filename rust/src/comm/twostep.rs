@@ -9,9 +9,10 @@
 use super::{chunk_range, encode};
 use crate::comm::fabric::RankHandle;
 use crate::quant::{Codec, CodecBuffers};
+use crate::transport::Transport;
 
 /// In-place two-step AllReduce of `data` across all ranks.
-pub fn allreduce(h: &RankHandle, data: &mut [f32], codec: &Codec) {
+pub fn allreduce<T: Transport>(h: &RankHandle<T>, data: &mut [f32], codec: &Codec) {
     let n = h.n;
     if n == 1 {
         return;

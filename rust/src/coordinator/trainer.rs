@@ -125,12 +125,7 @@ impl Trainer {
         let algo = opts.algo;
         let (mut results, counters) = fabric::run_ranks(&topo, |h| {
             let mut data = inputs[h.rank].clone();
-            match algo {
-                Algo::Ring => comm::ring::allreduce(&h, &mut data, &codec),
-                Algo::TwoStep => comm::twostep::allreduce(&h, &mut data, &codec),
-                Algo::Hier => comm::hier::allreduce(&h, &mut data, &codec),
-                Algo::HierPipelined => comm::pipeline::allreduce(&h, &mut data, &codec),
-            }
+            comm::allreduce_with(algo, &h, &mut data, &codec);
             data
         });
         let mut reduced = results.swap_remove(0);

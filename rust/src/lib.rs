@@ -6,8 +6,11 @@
 //!
 //! - [`quant`] — any-bit quantization: RTN, bit splitting, spike reserving,
 //!   Hadamard/LogFMT baselines, wire format.
+//! - [`transport`] — pluggable point-to-point fabric with a versioned,
+//!   CRC-guarded frame protocol: in-process mpsc mesh, multi-process TCP
+//!   (rendezvous bootstrap), single-rank loopback.
 //! - [`comm`] — collectives (ring, two-step, hierarchical, pipelined
-//!   hierarchical AllReduce; All2All) over an in-process fabric.
+//!   hierarchical AllReduce; All2All), generic over the transport.
 //! - [`topo`] / [`sim`] — device topology presets (Table 6) and the link
 //!   simulator producing algorithmic-bandwidth estimates (Tables 5, 9, 10).
 //! - [`runtime`] — PJRT CPU client wrapper loading AOT HLO artifacts.
@@ -27,4 +30,5 @@ pub mod quant;
 pub mod runtime;
 pub mod sim;
 pub mod topo;
+pub mod transport;
 pub mod util;

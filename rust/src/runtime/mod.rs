@@ -88,7 +88,6 @@ impl Runtime {
         let manifest = Manifest::load(dir.join("manifest.txt"))
             .with_context(|| format!("loading manifest from {dir:?}; run `make artifacts`"))?;
         let client = xla::PjRtClient::cpu()?;
-        log::info!("PJRT client: {} ({} devices)", client.platform_name(), client.device_count());
         Ok(Runtime { client, dir, cache: HashMap::new(), manifest })
     }
 
@@ -102,12 +101,10 @@ impl Runtime {
     pub fn load(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
         if !self.cache.contains_key(name) {
             let path = self.dir.join(format!("{name}.hlo.txt"));
-            let t0 = std::time::Instant::now();
             let proto = xla::HloModuleProto::from_text_file(&path)
                 .with_context(|| format!("parsing {path:?}"))?;
             let comp = xla::XlaComputation::from_proto(&proto);
             let exe = self.client.compile(&comp).with_context(|| format!("compiling {name}"))?;
-            log::info!("compiled {name} in {:?}", t0.elapsed());
             self.cache.insert(name.to_string(), exe);
         }
         Ok(&self.cache[name])

@@ -1,0 +1,292 @@
+//! Versioned frame codec shared by every transport backend.
+//!
+//! Each point-to-point payload travels inside one frame:
+//!
+//! ```text
+//! ┌───────────────────── header, 28 B ─────────────────────┐
+//! │ magic u32 | ver u8 | flags u8 | src u16 | dst u16      │
+//! │ rsv u16   | seq u32 | len u32 | crc32(payload) u32     │
+//! │ crc32(header bytes 0..24) u32                          │
+//! ├───────────────────── payload ──────────────────────────┤
+//! │ len bytes (a `quant::wire` payload for the collectives)│
+//! └────────────────────────────────────────────────────────┘
+//! ```
+//!
+//! Everything little-endian. The frame exists so that transport faults fail
+//! loudly instead of silently desyncing a collective: a corrupted payload is
+//! caught by the payload CRC, a corrupted header by the header CRC (so a
+//! flipped `len` bit is an immediate error, not a forever-blocked read of
+//! bytes that never come), a cross-version peer by the version byte, and a
+//! lost or reordered message by the per-link sequence number (checked by
+//! the backends). This is the same versioned-framing discipline as the
+//! quant wire header ([`crate::quant::wire`]), one layer down: that header
+//! describes *what* the bytes mean, this one guards *that they arrived
+//! intact*.
+
+use anyhow::{ensure, Result};
+
+/// Frame magic ("FCT2" on the wire, little-endian).
+pub const FRAME_MAGIC: u32 = u32::from_le_bytes(*b"FCT2");
+/// Transport protocol version. Bump on any layout change; peers reject
+/// mismatches during [`parse`](FrameHeader::parse).
+pub const FRAME_VERSION: u8 = 1;
+/// Fixed header length in bytes (24 B of fields + 4 B header CRC).
+pub const FRAME_HEADER_LEN: usize = 28;
+/// Upper bound on a single frame's payload (sanity check before the
+/// receiver trusts `len` enough to allocate).
+pub const MAX_PAYLOAD: u32 = 1 << 30;
+
+/// Parsed frame header.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FrameHeader {
+    /// Sending rank.
+    pub src: u16,
+    /// Destination rank.
+    pub dst: u16,
+    /// Per-(src→dst)-link sequence number, starting at 0.
+    pub seq: u32,
+    /// Payload length in bytes.
+    pub len: u32,
+    /// CRC32 (IEEE) of the payload.
+    pub crc: u32,
+}
+
+const fn crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc_table();
+
+/// CRC32 (IEEE 802.3 polynomial, reflected), table-driven.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+impl FrameHeader {
+    /// Serialize to the fixed wire layout (including the header CRC).
+    pub fn to_bytes(&self) -> [u8; FRAME_HEADER_LEN] {
+        let mut hdr = [0u8; FRAME_HEADER_LEN];
+        hdr[0..4].copy_from_slice(&FRAME_MAGIC.to_le_bytes());
+        hdr[4] = FRAME_VERSION;
+        hdr[5] = 0; // flags (reserved)
+        hdr[6..8].copy_from_slice(&self.src.to_le_bytes());
+        hdr[8..10].copy_from_slice(&self.dst.to_le_bytes());
+        // bytes 10..12 reserved / alignment
+        hdr[12..16].copy_from_slice(&self.seq.to_le_bytes());
+        hdr[16..20].copy_from_slice(&self.len.to_le_bytes());
+        hdr[20..24].copy_from_slice(&self.crc.to_le_bytes());
+        let hcrc = crc32(&hdr[..24]);
+        hdr[24..28].copy_from_slice(&hcrc.to_le_bytes());
+        hdr
+    }
+
+    /// Serialize the fixed header into `out`.
+    pub fn write(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_bytes());
+    }
+
+    /// Parse and validate the fixed header (magic, version, header CRC,
+    /// length bound). The header CRC makes a corrupted `len` an immediate
+    /// error rather than a blocked read; the payload CRC is checked
+    /// separately once the payload is in hand.
+    pub fn parse(buf: &[u8]) -> Result<FrameHeader> {
+        ensure!(
+            buf.len() >= FRAME_HEADER_LEN,
+            "frame truncated: {} bytes < {FRAME_HEADER_LEN}-byte header",
+            buf.len()
+        );
+        let magic = u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]);
+        ensure!(magic == FRAME_MAGIC, "bad frame magic {magic:#010x} (expected {FRAME_MAGIC:#010x})");
+        ensure!(
+            buf[4] == FRAME_VERSION,
+            "frame protocol version {} unsupported (this build speaks {FRAME_VERSION})",
+            buf[4]
+        );
+        let hcrc = u32::from_le_bytes([buf[24], buf[25], buf[26], buf[27]]);
+        let got = crc32(&buf[..24]);
+        ensure!(
+            got == hcrc,
+            "frame header CRC mismatch: computed {got:#010x}, header says {hcrc:#010x} \
+             (corrupt header rejected)"
+        );
+        let hdr = FrameHeader {
+            src: u16::from_le_bytes([buf[6], buf[7]]),
+            dst: u16::from_le_bytes([buf[8], buf[9]]),
+            seq: u32::from_le_bytes([buf[12], buf[13], buf[14], buf[15]]),
+            len: u32::from_le_bytes([buf[16], buf[17], buf[18], buf[19]]),
+            crc: u32::from_le_bytes([buf[20], buf[21], buf[22], buf[23]]),
+        };
+        ensure!(hdr.len <= MAX_PAYLOAD, "frame payload length {} exceeds {MAX_PAYLOAD}", hdr.len);
+        Ok(hdr)
+    }
+
+    /// Verify `payload` against this header's length and CRC.
+    pub fn check_payload(&self, payload: &[u8]) -> Result<()> {
+        ensure!(
+            payload.len() == self.len as usize,
+            "frame length mismatch: header says {} payload bytes, got {}",
+            self.len,
+            payload.len()
+        );
+        let got = crc32(payload);
+        ensure!(
+            got == self.crc,
+            "frame CRC mismatch from rank {}: computed {got:#010x}, header says {:#010x} \
+             (corrupt payload rejected)",
+            self.src,
+            self.crc
+        );
+        Ok(())
+    }
+}
+
+/// Encode one complete frame (header + payload) into a single buffer.
+pub fn encode(src: u16, dst: u16, seq: u32, payload: &[u8]) -> Vec<u8> {
+    assert!(payload.len() as u64 <= MAX_PAYLOAD as u64, "payload {} too large", payload.len());
+    let hdr = FrameHeader { src, dst, seq, len: payload.len() as u32, crc: crc32(payload) };
+    let mut out = Vec::with_capacity(FRAME_HEADER_LEN + payload.len());
+    hdr.write(&mut out);
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Decode a complete frame buffer: validate the header, the exact length,
+/// and the payload CRC. On success the buffer is shrunk in place to the
+/// bare payload (the header is removed with a memmove of the payload —
+/// no reallocation, but not free either; the TCP reader avoids even that
+/// by reading header and payload separately).
+pub fn decode(mut framed: Vec<u8>) -> Result<(FrameHeader, Vec<u8>)> {
+    let hdr = FrameHeader::parse(&framed)?;
+    hdr.check_payload(&framed[FRAME_HEADER_LEN..])?;
+    framed.drain(..FRAME_HEADER_LEN);
+    Ok((hdr, framed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<u8> {
+        encode(3, 5, 42, b"flashcomm payload bytes")
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        // The canonical IEEE CRC32 check value.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn roundtrip() {
+        let framed = sample();
+        assert_eq!(framed.len(), FRAME_HEADER_LEN + 23);
+        let (hdr, payload) = decode(framed).unwrap();
+        assert_eq!(payload, b"flashcomm payload bytes");
+        assert_eq!(
+            hdr,
+            FrameHeader { src: 3, dst: 5, seq: 42, len: 23, crc: crc32(b"flashcomm payload bytes") }
+        );
+    }
+
+    #[test]
+    fn empty_payload_roundtrip() {
+        let (hdr, payload) = decode(encode(0, 1, 0, b"")).unwrap();
+        assert_eq!(hdr.len, 0);
+        assert!(payload.is_empty());
+    }
+
+    #[test]
+    fn every_truncation_is_a_clean_error() {
+        let framed = sample();
+        for cut in 0..framed.len() {
+            assert!(decode(framed[..cut].to_vec()).is_err(), "cut {cut} must error");
+        }
+    }
+
+    #[test]
+    fn payload_corruption_is_a_crc_error() {
+        let framed = sample();
+        for i in FRAME_HEADER_LEN..framed.len() {
+            let mut bad = framed.clone();
+            bad[i] ^= 0x01;
+            let err = decode(bad).unwrap_err();
+            assert!(err.to_string().contains("CRC"), "byte {i}: {err}");
+        }
+    }
+
+    #[test]
+    fn crc_field_corruption_is_a_crc_error() {
+        let mut bad = sample();
+        bad[20] ^= 0xFF; // payload-crc field itself (caught by the header CRC)
+        assert!(decode(bad).unwrap_err().to_string().contains("CRC"));
+    }
+
+    #[test]
+    fn header_field_corruption_is_caught_by_header_crc() {
+        // src, dst, seq, len, payload-crc: a single flipped bit in any of
+        // them must error immediately — in particular a corrupted `len`
+        // must never make a reader wait for bytes that don't exist.
+        for i in [6usize, 8, 12, 16, 19, 20] {
+            let mut bad = sample();
+            bad[i] ^= 0x04;
+            let err = decode(bad).unwrap_err();
+            assert!(err.to_string().contains("header CRC"), "byte {i}: {err}");
+        }
+    }
+
+    #[test]
+    fn version_mismatch_rejected() {
+        let mut bad = sample();
+        bad[4] = FRAME_VERSION + 1;
+        let err = decode(bad).unwrap_err();
+        assert!(err.to_string().contains("version"), "{err}");
+    }
+
+    #[test]
+    fn magic_mismatch_rejected() {
+        let mut bad = sample();
+        bad[0] ^= 0xFF;
+        assert!(decode(bad).unwrap_err().to_string().contains("magic"));
+    }
+
+    #[test]
+    fn length_mismatch_rejected() {
+        // Header says more bytes than present (a short write / split read).
+        let framed = sample();
+        let trimmed = framed[..framed.len() - 3].to_vec();
+        assert!(decode(trimmed).unwrap_err().to_string().contains("length mismatch"));
+
+        // Trailing garbage after the declared payload is also rejected.
+        let mut long = sample();
+        long.extend_from_slice(b"xx");
+        assert!(decode(long).unwrap_err().to_string().contains("length mismatch"));
+    }
+
+    #[test]
+    fn absurd_length_rejected_before_allocation() {
+        // Even a header whose CRC *checks out* (a hostile or buggy peer,
+        // not line noise) must not make the receiver allocate gigabytes.
+        let mut framed = sample();
+        framed[16..20].copy_from_slice(&u32::MAX.to_le_bytes());
+        let hcrc = crc32(&framed[..24]);
+        framed[24..28].copy_from_slice(&hcrc.to_le_bytes());
+        assert!(FrameHeader::parse(&framed).unwrap_err().to_string().contains("exceeds"));
+    }
+}

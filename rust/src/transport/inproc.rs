@@ -1,0 +1,192 @@
+//! In-process transport: ranks are threads, links are mpsc channels.
+//!
+//! This absorbs the original `comm::fabric` channel mesh behind the
+//! [`Transport`] trait. Payloads still travel framed ([`super::frame`]) so
+//! the backend exercises exactly the wire discipline the TCP backend does —
+//! magic/version/route/sequence/CRC are all built and verified per message.
+//! The frame travels as a `(header bytes, payload)` pair rather than one
+//! concatenated buffer, so the owned payload moves through the channel
+//! without being copied.
+
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+use anyhow::{anyhow, ensure, Result};
+
+use super::{frame, Transport, TransportCounters, TransportStats};
+
+/// A frame in flight: serialized header + untouched payload.
+type Framed = ([u8; frame::FRAME_HEADER_LEN], Vec<u8>);
+
+/// One rank's endpoint into an in-process mesh built by [`mesh`].
+pub struct InProcTransport {
+    rank: usize,
+    n: usize,
+    /// tx[d]: sender for the rank→d link (unused at d == rank).
+    tx: Vec<Sender<Framed>>,
+    /// rx[s]: receiver for the s→rank link (unused at s == rank).
+    rx: Vec<Receiver<Framed>>,
+    send_seq: Vec<AtomicU32>,
+    recv_seq: Vec<AtomicU32>,
+    counters: Arc<TransportCounters>,
+}
+
+/// Build a fully connected `n`-rank in-process mesh. Endpoint `i` is rank
+/// `i`; all endpoints share one [`TransportCounters`] instance.
+pub fn mesh(n: usize) -> Vec<InProcTransport> {
+    assert!(n >= 1, "mesh needs at least one rank");
+    assert!(n <= u16::MAX as usize, "rank ids must fit the frame header");
+    let counters = Arc::new(TransportCounters::default());
+    // chan[s][d]: sender kept by s, receiver kept by d (self links unused).
+    let mut senders: Vec<Vec<Option<Sender<Framed>>>> = (0..n).map(|_| Vec::new()).collect();
+    let mut receivers: Vec<Vec<Option<Receiver<Framed>>>> =
+        (0..n).map(|_| (0..n).map(|_| None).collect()).collect();
+    for s in 0..n {
+        for d in 0..n {
+            let (tx, rx) = channel();
+            senders[s].push(Some(tx));
+            receivers[d][s] = Some(rx);
+        }
+    }
+    receivers
+        .into_iter()
+        .enumerate()
+        .map(|(rank, rxs)| InProcTransport {
+            rank,
+            n,
+            tx: (0..n).map(|d| senders[rank][d].take().unwrap()).collect(),
+            rx: rxs
+                .into_iter()
+                .enumerate()
+                .map(|(s, r)| r.unwrap_or_else(|| panic!("missing channel {s}->{rank}")))
+                .collect(),
+            send_seq: (0..n).map(|_| AtomicU32::new(0)).collect(),
+            recv_seq: (0..n).map(|_| AtomicU32::new(0)).collect(),
+            counters: counters.clone(),
+        })
+        .collect()
+}
+
+impl Transport for InProcTransport {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn send(&self, dst: usize, payload: Vec<u8>) -> Result<()> {
+        ensure!(dst < self.n, "dst rank {dst} out of range (n = {})", self.n);
+        ensure!(dst != self.rank, "self-send is a local copy, not a transfer");
+        ensure!(payload.len() as u64 <= frame::MAX_PAYLOAD as u64, "payload too large");
+        let seq = self.send_seq[dst].fetch_add(1, Ordering::Relaxed);
+        self.counters.record_send(payload.len());
+        let hdr = frame::FrameHeader {
+            src: self.rank as u16,
+            dst: dst as u16,
+            seq,
+            len: payload.len() as u32,
+            crc: frame::crc32(&payload),
+        };
+        self.tx[dst].send((hdr.to_bytes(), payload)).map_err(|_| anyhow!("rank {dst} hung up"))?;
+        Ok(())
+    }
+
+    fn recv(&self, src: usize) -> Result<Vec<u8>> {
+        ensure!(src < self.n, "src rank {src} out of range (n = {})", self.n);
+        ensure!(src != self.rank, "self-recv is a local copy, not a transfer");
+        let (hbuf, payload) =
+            self.rx[src].recv().map_err(|_| anyhow!("rank {src} hung up"))?;
+        let hdr = frame::FrameHeader::parse(&hbuf)?;
+        hdr.check_payload(&payload)?;
+        ensure!(
+            hdr.src as usize == src && hdr.dst as usize == self.rank,
+            "misrouted frame: {}→{} delivered on the {src}→{} link",
+            hdr.src,
+            hdr.dst,
+            self.rank
+        );
+        let expect = self.recv_seq[src].fetch_add(1, Ordering::Relaxed);
+        ensure!(
+            hdr.seq == expect,
+            "sequence desync from rank {src}: got {}, expected {expect}",
+            hdr.seq
+        );
+        Ok(payload)
+    }
+
+    fn stats(&self) -> TransportStats {
+        self.counters.snapshot()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::FRAME_HEADER_LEN;
+
+    #[test]
+    fn pairwise_exchange_delivers() {
+        let mut endpoints = mesh(4);
+        let results: Vec<Vec<u8>> = std::thread::scope(|scope| {
+            let joins: Vec<_> = endpoints
+                .drain(..)
+                .map(|t| {
+                    scope.spawn(move || {
+                        for d in 0..t.n() {
+                            if d != t.rank() {
+                                t.send(d, vec![t.rank() as u8]).unwrap();
+                            }
+                        }
+                        (0..t.n())
+                            .filter(|&s| s != t.rank())
+                            .map(|s| t.recv(s).unwrap()[0])
+                            .collect::<Vec<u8>>()
+                    })
+                })
+                .collect();
+            joins.into_iter().map(|j| j.join().unwrap()).collect()
+        });
+        assert_eq!(results[0], vec![1, 2, 3]);
+        assert_eq!(results[3], vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn messages_arrive_in_order_with_shared_stats() {
+        let mut e = mesh(2);
+        let t1 = e.pop().unwrap();
+        let t0 = e.pop().unwrap();
+        for i in 0..100u8 {
+            t0.send(1, vec![i; 3]).unwrap();
+        }
+        for i in 0..100u8 {
+            assert_eq!(t1.recv(0).unwrap(), vec![i; 3]);
+        }
+        // Counters are mesh-shared: both endpoints see the same totals.
+        assert_eq!(t0.stats(), t1.stats());
+        assert_eq!(t0.stats().messages, 100);
+        assert_eq!(t0.stats().payload_bytes, 300);
+        assert_eq!(t0.stats().wire_bytes, 300 + 100 * FRAME_HEADER_LEN as u64);
+    }
+
+    #[test]
+    fn self_and_out_of_range_links_rejected() {
+        let mut e = mesh(2);
+        let t0 = e.remove(0);
+        assert!(t0.send(0, vec![1]).is_err());
+        assert!(t0.send(2, vec![1]).is_err());
+        assert!(t0.recv(0).is_err());
+        assert!(t0.recv(9).is_err());
+    }
+
+    #[test]
+    fn empty_payload_roundtrips() {
+        let mut e = mesh(2);
+        let t1 = e.pop().unwrap();
+        let t0 = e.pop().unwrap();
+        t0.send(1, Vec::new()).unwrap();
+        assert!(t1.recv(0).unwrap().is_empty());
+    }
+}

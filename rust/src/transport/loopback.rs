@@ -1,0 +1,105 @@
+//! Single-rank loopback transport: a self-queue test stub.
+//!
+//! Unlike the mesh backends, loopback permits rank-0→rank-0 transfers so
+//! the framing path (encode → queue → decode/verify) can be exercised
+//! without a peer, and `recv` on an empty queue errors instead of blocking
+//! (there is no peer to wait for — a documented divergence from the trait
+//! contract). It is deliberately *not* wireable into the comm fabric:
+//! `Topology` starts at 2 GPUs and `RankHandle` forbids self-links, so
+//! this backend's one job is exercising `Transport` plumbing in tests.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{bail, ensure, Result};
+
+use super::{frame, Transport, TransportCounters, TransportStats};
+
+/// A one-rank transport whose only link is itself.
+#[derive(Default)]
+pub struct Loopback {
+    queue: Mutex<VecDeque<Vec<u8>>>,
+    send_seq: AtomicU32,
+    recv_seq: AtomicU32,
+    counters: TransportCounters,
+}
+
+impl Loopback {
+    pub fn new() -> Loopback {
+        Loopback::default()
+    }
+}
+
+impl Transport for Loopback {
+    fn rank(&self) -> usize {
+        0
+    }
+
+    fn n(&self) -> usize {
+        1
+    }
+
+    fn send(&self, dst: usize, payload: Vec<u8>) -> Result<()> {
+        ensure!(dst == 0, "loopback has a single rank; dst {dst} does not exist");
+        let seq = self.send_seq.fetch_add(1, Ordering::Relaxed);
+        self.counters.record_send(payload.len());
+        let framed = frame::encode(0, 0, seq, &payload);
+        self.queue.lock().expect("loopback queue poisoned").push_back(framed);
+        Ok(())
+    }
+
+    fn recv(&self, src: usize) -> Result<Vec<u8>> {
+        ensure!(src == 0, "loopback has a single rank; src {src} does not exist");
+        let Some(framed) = self.queue.lock().expect("loopback queue poisoned").pop_front() else {
+            bail!("loopback queue empty: nothing was sent");
+        };
+        let (hdr, payload) = frame::decode(framed)?;
+        let expect = self.recv_seq.fetch_add(1, Ordering::Relaxed);
+        ensure!(
+            hdr.seq == expect,
+            "sequence desync on loopback: got {}, expected {expect}",
+            hdr.seq
+        );
+        Ok(payload)
+    }
+
+    fn stats(&self) -> TransportStats {
+        self.counters.snapshot()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frames_roundtrip_through_the_self_queue() {
+        let t = Loopback::new();
+        t.send(0, b"alpha".to_vec()).unwrap();
+        t.send(0, b"beta".to_vec()).unwrap();
+        assert_eq!(t.recv(0).unwrap(), b"alpha");
+        assert_eq!(t.recv(0).unwrap(), b"beta");
+        assert!(t.recv(0).is_err(), "empty queue must error, not block");
+        assert_eq!(t.stats().messages, 2);
+        assert_eq!(t.stats().payload_bytes, 9);
+    }
+
+    #[test]
+    fn nonexistent_ranks_rejected() {
+        let t = Loopback::new();
+        assert!(t.send(1, Vec::new()).is_err());
+        assert!(t.recv(1).is_err());
+    }
+
+    #[test]
+    fn corruption_in_the_queue_is_caught_on_recv() {
+        let t = Loopback::new();
+        t.send(0, b"payload".to_vec()).unwrap();
+        if let Some(b) = t.queue.lock().unwrap()[0].last_mut() {
+            *b ^= 0x20;
+        }
+        let err = t.recv(0).unwrap_err();
+        assert!(err.to_string().contains("CRC"), "{err}");
+    }
+}

@@ -1,0 +1,120 @@
+//! Pluggable point-to-point transport under the collectives.
+//!
+//! [`Transport`] is the seam between the collective algorithms
+//! ([`crate::comm`]) and the bytes' physical journey. Every payload travels
+//! inside a versioned, CRC-guarded frame ([`frame`]) regardless of backend,
+//! so corruption, truncation, reordering, and cross-version peers fail
+//! loudly instead of silently desyncing a collective.
+//!
+//! | backend                    | ranks are…            | used for                          |
+//! |----------------------------|-----------------------|-----------------------------------|
+//! | [`inproc::InProcTransport`]| threads, mpsc mesh    | tests, benches, single-node runs  |
+//! | [`tcp::TcpTransport`]      | OS processes, sockets | `flashcomm worker`, multi-process |
+//! | [`loopback::Loopback`]     | one rank, self-queue  | frame-path unit tests             |
+//!
+//! Backends deliver *bit-identical* payloads for the same collective and
+//! codec (asserted in `tests/transport.rs`), so numerics results transfer
+//! between them; only latency/throughput differ. See `DESIGN.md` §4 for the
+//! frame layout, the TCP rendezvous handshake, and the backend matrix.
+
+pub mod frame;
+pub mod inproc;
+pub mod loopback;
+pub mod tcp;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::Result;
+
+pub use frame::{FrameHeader, FRAME_HEADER_LEN, FRAME_VERSION};
+pub use inproc::InProcTransport;
+pub use loopback::Loopback;
+pub use tcp::TcpTransport;
+
+/// A connected point-to-point endpoint: rank `rank()` of a `n()`-rank mesh.
+///
+/// Semantics every backend guarantees (and the collectives rely on):
+///
+/// - `send` is non-blocking with respect to the peer's progress (frames are
+///   drained off the link by the receiving side independently of when the
+///   peer calls `recv`), so one-shot exchange patterns cannot deadlock;
+/// - messages on one (src→dst) link arrive in send order, enforced by the
+///   frame sequence number;
+/// - `recv` returns the *payload* exactly as passed to `send` — framing is
+///   invisible to callers — or an error if the link saw corruption, a
+///   version mismatch, a sequence gap, or a disconnect. (One documented
+///   divergence: the single-rank [`loopback::Loopback`] errors on an empty
+///   queue instead of blocking — there is no peer to wait for.)
+pub trait Transport: Send {
+    /// This endpoint's rank in `0..n()`.
+    fn rank(&self) -> usize;
+
+    /// World size of the mesh this endpoint belongs to.
+    fn n(&self) -> usize;
+
+    /// Send `payload` to rank `dst` (framed on the wire; see [`frame`]).
+    fn send(&self, dst: usize, payload: Vec<u8>) -> Result<()>;
+
+    /// Block until the next payload from rank `src` arrives and passes
+    /// frame verification.
+    fn recv(&self, src: usize) -> Result<Vec<u8>>;
+
+    /// Counters for traffic sent through this endpoint's scope: the whole
+    /// mesh for [`InProcTransport`] (shared process-wide), this endpoint
+    /// for [`TcpTransport`] (each process only sees its own sends).
+    fn stats(&self) -> TransportStats;
+}
+
+/// Send-side counters each backend embeds. Individually relaxed-atomic;
+/// read a coherent set via [`TransportCounters::snapshot`] only while no
+/// transfer is in flight.
+#[derive(Debug, Default)]
+pub struct TransportCounters {
+    payload_bytes: AtomicU64,
+    wire_bytes: AtomicU64,
+    messages: AtomicU64,
+}
+
+impl TransportCounters {
+    /// Record one sent payload (wire bytes = payload + frame header).
+    pub fn record_send(&self, payload_len: usize) {
+        self.payload_bytes.fetch_add(payload_len as u64, Ordering::Relaxed);
+        self.wire_bytes.fetch_add((payload_len + FRAME_HEADER_LEN) as u64, Ordering::Relaxed);
+        self.messages.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> TransportStats {
+        TransportStats {
+            payload_bytes: self.payload_bytes.load(Ordering::Relaxed),
+            wire_bytes: self.wire_bytes.load(Ordering::Relaxed),
+            messages: self.messages.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A point-in-time copy of a backend's counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TransportStats {
+    /// Application payload bytes sent (what the collectives account).
+    pub payload_bytes: u64,
+    /// Bytes actually put on the link, including frame headers.
+    pub wire_bytes: u64,
+    /// Point-to-point messages sent.
+    pub messages: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_payload_and_framing() {
+        let c = TransportCounters::default();
+        c.record_send(100);
+        c.record_send(0);
+        let s = c.snapshot();
+        assert_eq!(s.payload_bytes, 100);
+        assert_eq!(s.wire_bytes, 100 + 2 * FRAME_HEADER_LEN as u64);
+        assert_eq!(s.messages, 2);
+    }
+}
