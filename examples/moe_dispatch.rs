@@ -5,7 +5,7 @@
 //! ```
 //!
 //! Demonstrates the full EP round trip the MoE engine models, but with the
-//! *actual thread-fabric All2All* (comm::all2all) carrying the tokens:
+//! *actual thread-fabric All2All* (`Communicator::all2all`) carrying the tokens:
 //!
 //! 1. rust router: top-1 expert per token from the `router` HLO piece,
 //! 2. tokens grouped per destination rank (1 expert per rank, EP=8),
@@ -17,7 +17,7 @@
 //! MoE engine's computation (within wire precision), and reports dispatch
 //! volumes per codec.
 
-use flashcomm::comm::{all2all, fabric};
+use flashcomm::comm::{fabric, Communicator};
 use flashcomm::coordinator::pretrain::{ensure_trained, TEST_STEPS};
 use flashcomm::model::{Corpus, Sampler};
 use flashcomm::quant::Codec;
@@ -95,7 +95,9 @@ fn main() -> anyhow::Result<()> {
     let run = |codec: Codec| {
         let sends = &sends;
         let (results, counters) = fabric::run_ranks(&topo, move |hnd| {
-            let received = all2all::all2all(&hnd, &sends[hnd.rank], &codec);
+            let mut comm = Communicator::from_handle(hnd);
+            let received =
+                comm.all2all(&sends[comm.rank()], &codec).expect("dispatch all2all failed");
             // Expert rank: concatenate everything it received (its expert's
             // token batch) — returned for verification.
             received.concat()

@@ -8,7 +8,7 @@
 //! 2. run a real quantized AllReduce across 8 in-process ranks,
 //! 3. show the accuracy/volume trade-off and the spike-reserving rescue.
 
-use flashcomm::comm::{fabric, twostep};
+use flashcomm::comm::{fabric, Algo, AlgoPolicy, Communicator};
 use flashcomm::quant::Codec;
 use flashcomm::topo::{presets, Topology};
 use flashcomm::util::stats::sqnr_db;
@@ -57,8 +57,10 @@ fn main() -> anyhow::Result<()> {
         }
         let inputs = &inputs;
         let (results, counters) = fabric::run_ranks(&topo, |h| {
-            let mut data = inputs[h.rank].clone();
-            twostep::allreduce(&h, &mut data, &codec);
+            let mut comm = Communicator::from_handle(h);
+            let mut data = inputs[comm.rank()].clone();
+            comm.allreduce(&mut data, &codec, AlgoPolicy::Fixed(Algo::TwoStep))
+                .expect("collective failed");
             data
         });
         println!(

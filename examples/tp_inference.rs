@@ -10,8 +10,9 @@
 //! pieces — comparing the two-step and hierarchical QDQ chains, plus wire
 //! volume per token.
 
+use flashcomm::comm::{Algo, AlgoPolicy};
 use flashcomm::coordinator::pretrain::{ensure_trained, ACCURACY_STEPS};
-use flashcomm::coordinator::{CollectiveStyle, TpEngine};
+use flashcomm::coordinator::TpEngine;
 use flashcomm::model::{Corpus, Sampler, Weights};
 use flashcomm::quant::Codec;
 use flashcomm::runtime::{default_artifacts_dir, Runtime};
@@ -40,8 +41,13 @@ fn main() -> anyhow::Result<()> {
         .collect();
 
     let rt = Runtime::open(default_artifacts_dir())?;
-    let mut engine =
-        TpEngine::new(rt, cfg.clone(), &weights, Codec::Bf16, CollectiveStyle::TwoStep)?;
+    let mut engine = TpEngine::new(
+        rt,
+        cfg.clone(),
+        &weights,
+        Codec::Bf16,
+        AlgoPolicy::Fixed(Algo::TwoStep),
+    )?;
 
     let tokens_per_batch = cfg.eval_batch * cfg.seq_len;
     // Per-token AllReduce volume: 2 boundaries x n_layers x d_model floats.
@@ -60,9 +66,9 @@ fn main() -> anyhow::Result<()> {
     for spec in ["bf16", "int8", "int6", "int5", "int4@32", "int3@32", "int3-sr@32",
                  "int2@32", "int2-sr@32", "int2-sr@32!"] {
         let codec = Codec::parse(spec)?;
-        engine.set_codec(codec, CollectiveStyle::TwoStep);
+        engine.set_codec(codec, AlgoPolicy::Fixed(Algo::TwoStep))?;
         let two = engine.perplexity(&batches)?;
-        engine.set_codec(codec, CollectiveStyle::Hier);
+        engine.set_codec(codec, AlgoPolicy::Fixed(Algo::Hier))?;
         let hier = engine.perplexity(&batches)?;
         let wire = codec.wire_len(floats_per_token);
         println!("{spec:<14} {two:>12.3} {hier:>12.3} {wire:>14}");

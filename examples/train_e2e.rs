@@ -16,12 +16,12 @@
 //! with a TP-engine perplexity sweep across wire codecs on the trained
 //! checkpoint — Tables 1/3 in miniature.
 
+use flashcomm::comm::{Algo, AlgoPolicy};
 use flashcomm::coordinator::pretrain::checkpoints_dir;
-use flashcomm::coordinator::{CollectiveStyle, TpEngine, TrainOptions, Trainer};
+use flashcomm::coordinator::{TpEngine, TrainOptions, Trainer};
 use flashcomm::model::{Corpus, ModelConfig, Sampler, Weights};
 use flashcomm::quant::Codec;
 use flashcomm::runtime::{default_artifacts_dir, Runtime};
-use flashcomm::sim::Algo;
 
 fn main() -> anyhow::Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -49,7 +49,7 @@ fn main() -> anyhow::Result<()> {
         steps,
         dp,
         codec,
-        algo: Algo::TwoStep,
+        algo: AlgoPolicy::Fixed(Algo::TwoStep),
         log_every: 10,
         eval_every: 50,
         eval_batches: 8,
@@ -76,13 +76,18 @@ fn main() -> anyhow::Result<()> {
 
     println!("\n=== TP inference on the trained model across wire codecs ===");
     let rt = Runtime::open(default_artifacts_dir())?;
-    let mut engine =
-        TpEngine::new(rt, cfg.clone(), &weights, Codec::Bf16, CollectiveStyle::TwoStep)?;
+    let mut engine = TpEngine::new(
+        rt,
+        cfg.clone(),
+        &weights,
+        Codec::Bf16,
+        AlgoPolicy::Fixed(Algo::TwoStep),
+    )?;
     let batches = &eval_batches[..4.min(eval_batches.len())];
     println!("{:<14} {:>10}", "wire codec", "ppl");
     for spec in ["bf16", "int8", "int6", "int5", "int4@32", "int3@32", "int3-sr@32",
                  "int2@32", "int2-sr@32"] {
-        engine.set_codec(Codec::parse(spec)?, CollectiveStyle::TwoStep);
+        engine.set_codec(Codec::parse(spec)?, AlgoPolicy::Fixed(Algo::TwoStep))?;
         println!("{:<14} {:>10.3}", spec, engine.perplexity(batches)?);
     }
     println!("\n(loss curve + this sweep are recorded in EXPERIMENTS.md)");

@@ -26,11 +26,11 @@ fn main() -> anyhow::Result<()> {
             let name = dev.name;
             let topo = Topology::new(dev, 8);
             let wl = PrefillWorkload { prompt_len: prompt, batch, ..Default::default() };
-            let base = ttft_s(&topo, &wl, &Codec::Bf16, algo_for(&topo, &Codec::Bf16));
+            let base = ttft_s(&topo, &wl, &Codec::Bf16, algo_for(&topo, &wl, &Codec::Bf16));
             print!("{name:>6}");
             for s in specs {
                 let codec = if s == "bf16" { Codec::Bf16 } else { Codec::parse(s)? };
-                let t = ttft_s(&topo, &wl, &codec, algo_for(&topo, &codec));
+                let t = ttft_s(&topo, &wl, &codec, algo_for(&topo, &wl, &codec));
                 print!(" {:>9.1}ms {:>4.2}x", t * 1e3, base / t);
             }
             println!();

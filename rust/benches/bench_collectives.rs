@@ -2,27 +2,78 @@
 //! (QDQ + packing + channel transfer on one core) for every algorithm, and
 //! the simulated Table 9 / Table 10 algorithmic bandwidths.
 //!
-//! `cargo bench --bench bench_collectives`
+//! ```sh
+//! cargo bench --bench bench_collectives [-- --algo auto|ring|twostep|hier|hierpp]
+//! ```
+//!
+//! With `--algo`, the fabric section sweeps that one policy across codecs
+//! (pass `auto` to watch the cost model's per-size choice); the scratch
+//! line demonstrates the warm Communicator hot path is allocation-free.
 //!
 //! The fabric numbers measure OUR hot path (the wall time is dominated by
 //! the codec since the "links" are memcpy); the simulated numbers are the
 //! paper-comparable bandwidths (see DESIGN.md §2).
 
-use flashcomm::comm::{self, fabric};
+use flashcomm::cli::Args;
+use flashcomm::comm::{fabric, Algo, AlgoPolicy, Communicator, LocalGroup};
 use flashcomm::quant::Codec;
-use flashcomm::sim::{self, Algo};
+use flashcomm::sim;
 use flashcomm::topo::{presets, Topology};
 use flashcomm::transport::{tcp, Transport, FRAME_HEADER_LEN};
 use flashcomm::util::timer::{bench, fmt_bytes};
 use flashcomm::util::Prng;
 
 fn main() {
+    let args = Args::parse(std::env::args().skip(1)).unwrap_or_default();
+    let policy: Option<AlgoPolicy> =
+        args.flag("algo").map(|s| s.parse().expect("--algo ring|twostep|hier|hierpp|auto"));
     let n: usize = 1 << 20; // 1M f32 = 4 MiB per rank
-    fabric_bench(n);
+    match policy {
+        Some(p) => policy_sweep(n, p),
+        None => fabric_bench(n),
+    }
+    println!();
+    scratch_reuse_probe();
     println!();
     transport_sweep();
     println!();
     sim_tables();
+}
+
+fn rank_inputs(n_ranks: usize, elems: usize, seed: u64) -> Vec<Vec<f32>> {
+    (0..n_ranks)
+        .map(|r| {
+            let mut rng = Prng::new(seed + r as u64);
+            let mut v = vec![0f32; elems];
+            rng.fill_activations(&mut v, 1.0);
+            v
+        })
+        .collect()
+}
+
+fn run_case(label: &str, topo: &Topology, policy: AlgoPolicy, spec: &str, elems: usize) {
+    let codec = Codec::parse(spec).unwrap();
+    let inputs = rank_inputs(topo.n_gpus, elems, 7);
+    let inputs = &inputs;
+    let mut wire_bytes = 0u64;
+    let mut used = None;
+    let m = bench(1, 3, || {
+        let (algos, counters) = fabric::run_ranks(topo, |h| {
+            let mut c = Communicator::from_handle(h);
+            let mut data = inputs[c.rank()].clone();
+            c.allreduce(&mut data, &codec, policy).unwrap()
+        });
+        used = Some(algos[0]);
+        wire_bytes = counters.total_bytes();
+    });
+    println!(
+        "{:<22} {:>10.2} {:>14.3} {:>12}  [{}]",
+        label,
+        m.secs() * 1e3,
+        (4 * elems * topo.n_gpus) as f64 / m.secs() / 1e9,
+        wire_bytes,
+        used.map(|a| a.token()).unwrap_or("?"),
+    );
 }
 
 fn fabric_bench(n: usize) {
@@ -30,42 +81,65 @@ fn fabric_bench(n: usize) {
     println!("{:<22} {:>10} {:>14} {:>12}", "algo+codec", "ms", "payload GB/s", "wire bytes");
     let h800 = Topology::new(presets::h800(), 8);
     let l40 = Topology::new(presets::l40(), 8);
-    let cases: Vec<(&str, &Topology, Algo, &str)> = vec![
-        ("ring bf16 (NCCL)", &h800, Algo::Ring, "bf16"),
-        ("two-step bf16", &h800, Algo::TwoStep, "bf16"),
-        ("two-step int8", &h800, Algo::TwoStep, "int8"),
-        ("two-step int5", &h800, Algo::TwoStep, "int5"),
-        ("two-step int2-sr", &h800, Algo::TwoStep, "int2-sr@32"),
-        ("hier int8", &l40, Algo::Hier, "int8"),
-        ("hier-pp int8", &l40, Algo::HierPipelined, "int8"),
+    let fixed = AlgoPolicy::Fixed;
+    let cases: Vec<(&str, &Topology, AlgoPolicy, &str)> = vec![
+        ("ring bf16 (NCCL)", &h800, fixed(Algo::Ring), "bf16"),
+        ("two-step bf16", &h800, fixed(Algo::TwoStep), "bf16"),
+        ("two-step int8", &h800, fixed(Algo::TwoStep), "int8"),
+        ("two-step int5", &h800, fixed(Algo::TwoStep), "int5"),
+        ("two-step int2-sr", &h800, fixed(Algo::TwoStep), "int2-sr@32"),
+        ("hier int8", &l40, fixed(Algo::Hier), "int8"),
+        ("hier-pp int8", &l40, fixed(Algo::HierPipelined), "int8"),
+        ("auto int8 (L40)", &l40, AlgoPolicy::Auto, "int8"),
+        ("auto int4 (H800)", &h800, AlgoPolicy::Auto, "int4@32"),
     ];
-    for (label, topo, algo, spec) in cases {
-        let codec = Codec::parse(spec).unwrap();
-        let inputs: Vec<Vec<f32>> = (0..topo.n_gpus)
-            .map(|r| {
-                let mut rng = Prng::new(r as u64);
-                let mut v = vec![0f32; n];
-                rng.fill_activations(&mut v, 1.0);
-                v
-            })
-            .collect();
-        let inputs = &inputs;
-        let mut wire_bytes = 0u64;
-        let m = bench(1, 3, || {
-            let (_, counters) = fabric::run_ranks(topo, |h| {
-                let mut data = inputs[h.rank].clone();
-                comm::allreduce_with(algo, &h, &mut data, &codec);
-            });
-            wire_bytes = counters.total_bytes();
-        });
-        println!(
-            "{:<22} {:>10.2} {:>14.3} {:>12}",
-            label,
-            m.secs() * 1e3,
-            (4 * n * topo.n_gpus) as f64 / m.secs() / 1e9,
-            wire_bytes
-        );
+    for (label, topo, policy, spec) in cases {
+        run_case(label, topo, policy, spec, n);
     }
+}
+
+/// `--algo X`: one policy across the codec sweep, on both node shapes.
+fn policy_sweep(n: usize, policy: AlgoPolicy) {
+    println!(
+        "== in-process fabric AllReduce, --algo {policy}, 8 ranks x {} ==",
+        fmt_bytes(4 * n)
+    );
+    println!("{:<22} {:>10} {:>14} {:>12}", "topo+codec", "ms", "payload GB/s", "wire bytes");
+    let h800 = Topology::new(presets::h800(), 8);
+    let l40 = Topology::new(presets::l40(), 8);
+    for spec in ["bf16", "int8", "int5", "int4@32", "int2-sr@32"] {
+        // The hierarchical family needs the NUMA node; run each policy on
+        // the node shapes that admit it.
+        let hier_only = matches!(
+            policy,
+            AlgoPolicy::Fixed(Algo::Hier) | AlgoPolicy::Fixed(Algo::HierPipelined)
+        );
+        if !hier_only {
+            run_case(&format!("H800 {spec}"), &h800, policy, spec, n);
+        }
+        run_case(&format!("L40 {spec}"), &l40, policy, spec, n);
+    }
+}
+
+/// The allocation-free-after-warmup claim, observed live: total owned
+/// scratch across a persistent rank group must not grow past call 1.
+fn scratch_reuse_probe() {
+    let mut group = LocalGroup::for_policy(8, AlgoPolicy::Auto).unwrap();
+    let codec = Codec::parse("int2-sr@32!").unwrap();
+    let elems = 1 << 18;
+    let mut data = rank_inputs(8, elems, 11);
+    group.allreduce(&mut data, &codec).unwrap();
+    let warm = group.scratch_bytes();
+    let mut grew = false;
+    for _ in 0..4 {
+        let mut data = rank_inputs(8, elems, 11);
+        group.allreduce(&mut data, &codec).unwrap();
+        grew |= group.scratch_bytes() != warm;
+    }
+    println!(
+        "== scratch reuse: {} owned bytes after warmup, stable across 4 more calls: {} ==",
+        warm, !grew
+    );
 }
 
 /// InProc vs TCP-loopback backend sweep under the same collective, wire
@@ -88,19 +162,13 @@ fn transport_sweep() {
         "{:<8} {:<12} {:>10} {:>14} {:>14} {:>10}",
         "backend", "codec", "ms", "payload GB/s", "wire bytes", "msgs"
     );
-    let inputs: Vec<Vec<f32>> = (0..ranks)
-        .map(|r| {
-            let mut rng = Prng::new(300 + r as u64);
-            let mut v = vec![0f32; elems];
-            rng.fill_activations(&mut v, 1.0);
-            v
-        })
-        .collect();
+    let inputs = rank_inputs(ranks, elems, 300);
     let inputs = &inputs;
     // One rank's work, generic over the backend (closures can't be).
-    fn per_rank<T: Transport>(h: &fabric::RankHandle<T>, inputs: &[Vec<f32>], codec: &Codec) {
-        let mut d = inputs[h.rank].clone();
-        comm::twostep::allreduce(h, &mut d, codec);
+    fn per_rank<T: Transport>(h: fabric::RankHandle<T>, inputs: &[Vec<f32>], codec: &Codec) {
+        let mut c = Communicator::from_handle(h);
+        let mut d = inputs[c.rank()].clone();
+        c.allreduce(&mut d, codec, AlgoPolicy::Fixed(Algo::TwoStep)).unwrap();
     }
     let mut records = Vec::new();
     for backend in ["inproc", "tcp"] {
@@ -112,12 +180,12 @@ fn transport_sweep() {
             let m = bench(1, 3, || {
                 let (_, counters) = match backend {
                     "inproc" => {
-                        fabric::run_ranks(&topo, |h| per_rank(&h, inputs, &codec))
+                        fabric::run_ranks(&topo, |h| per_rank(h, inputs, &codec))
                     }
                     _ => fabric::run_ranks_with(
                         tcp::local_mesh(ranks).expect("tcp mesh bootstrap"),
                         &topo,
-                        |h| per_rank(&h, inputs, &codec),
+                        |h| per_rank(h, inputs, &codec),
                     ),
                 };
                 // Counters are read after every rank joined, so the
@@ -169,7 +237,11 @@ fn transport_sweep() {
 fn sim_tables() {
     println!("== simulated algorithmic bandwidth (Tables 9 & 10 anchors) ==");
     let m = 64.0 * 1024.0 * 1024.0;
-    for (label, algo) in [("two-step", Algo::TwoStep), ("hier", Algo::Hier), ("hier-pp", Algo::HierPipelined)] {
+    for (label, algo) in [
+        ("two-step", Algo::TwoStep),
+        ("hier", Algo::Hier),
+        ("hier-pp", Algo::HierPipelined),
+    ] {
         let topo = Topology::new(presets::l40(), 8);
         let t = sim::allreduce_time(&topo, algo, &Codec::parse("int4@32").unwrap(), m);
         println!("L40 {label:<9} int4: {:>7.2} GB/s", sim::algbw_gbps(m, &t));

@@ -2,16 +2,22 @@
 //! per wire codec — the end-to-end hot path (PJRT compute + rust QDQ +
 //! collective). Requires `make artifacts`.
 //!
-//! `cargo bench --bench bench_engine`
+//! `cargo bench --bench bench_engine [-- --algo twostep|hier|auto]`
 
-use flashcomm::coordinator::{CollectiveStyle, TpEngine, TrainOptions, Trainer};
+use flashcomm::cli::Args;
+use flashcomm::comm::AlgoPolicy;
+use flashcomm::coordinator::{TpEngine, TrainOptions, Trainer};
 use flashcomm::model::{Corpus, ModelConfig, Sampler, Weights};
 use flashcomm::quant::Codec;
 use flashcomm::runtime::{default_artifacts_dir, Runtime};
-use flashcomm::sim::Algo;
 use flashcomm::util::timer::bench;
 
 fn main() {
+    let args = Args::parse(std::env::args().skip(1)).unwrap_or_default();
+    let policy: AlgoPolicy = args
+        .flag_or("algo", "twostep")
+        .parse()
+        .expect("--algo ring|twostep|hier|hierpp|auto");
     let dir = default_artifacts_dir();
     if !dir.join("manifest.txt").exists() {
         eprintln!("skipping engine bench: run `make artifacts` first");
@@ -25,13 +31,16 @@ fn main() {
     let batch = &flashcomm::model::Sampler::eval_batches(eval, cfg.eval_batch, cfg.seq_len)[0];
     let tokens = (cfg.eval_batch * cfg.seq_len) as f64;
 
-    println!("== TP inference step (batch {} x seq {}) ==", cfg.eval_batch, cfg.seq_len);
+    println!(
+        "== TP inference step (batch {} x seq {}, --algo {policy}) ==",
+        cfg.eval_batch, cfg.seq_len
+    );
     println!("{:<14} {:>10} {:>12}", "codec", "ms/step", "tok/s");
     let mut engine =
-        TpEngine::new(rt, cfg.clone(), &weights, Codec::Bf16, CollectiveStyle::TwoStep).unwrap();
+        TpEngine::new(rt, cfg.clone(), &weights, Codec::Bf16, policy).unwrap();
     for spec in ["bf16", "int8", "int5", "int2-sr@32"] {
         let codec = if spec == "bf16" { Codec::Bf16 } else { Codec::parse(spec).unwrap() };
-        engine.set_codec(codec, CollectiveStyle::TwoStep);
+        engine.set_codec(codec, policy).unwrap();
         engine.eval_nll(batch).unwrap(); // warm the executable cache
         let m = bench(1, 3, || {
             engine.eval_nll(batch).unwrap();
@@ -49,7 +58,7 @@ fn main() {
             steps: 1,
             dp: 2,
             codec: Codec::parse(spec).unwrap(),
-            algo: Algo::TwoStep,
+            algo: policy,
             log_every: 0,
             ..Default::default()
         };

@@ -5,9 +5,15 @@
 //! direction (expert outputs coming back) stays BF16. Each rank provides
 //! one payload per destination; the primitive returns one decoded payload
 //! per source.
+//!
+//! Payload lengths are exchanged in-band (the wire header carries `n`), so
+//! the decode path *validates the header against the delivered frame
+//! before allocating*: a corrupted header claiming 4 billion elements is a
+//! clean `CommError::Header`, not a multi-gigabyte allocation.
 
-use super::encode;
-use crate::comm::fabric::RankHandle;
+use super::{communicator::Communicator, encode, error::CommError};
+use crate::quant::scheme::codec_from_header;
+use crate::quant::wire::Header;
 use crate::quant::{Codec, CodecBuffers};
 use crate::transport::Transport;
 
@@ -16,42 +22,76 @@ use crate::transport::Transport;
 /// Returns `recv[s]` = the decoded payload rank `s` sent us. The self
 /// payload (`sends[rank]`) takes the same QDQ so expert computation sees
 /// wire precision regardless of token placement.
-pub fn all2all<T: Transport>(h: &RankHandle<T>, sends: &[Vec<f32>], codec: &Codec) -> Vec<Vec<f32>> {
-    assert_eq!(sends.len(), h.n, "one payload per destination rank");
-    let mut bufs = CodecBuffers::default();
-    // Lengths are exchanged in-band: the wire header carries n.
+pub(crate) fn all2all<T: Transport>(
+    c: &mut Communicator<T>,
+    sends: &[Vec<f32>],
+    codec: &Codec,
+) -> Result<Vec<Vec<f32>>, CommError> {
+    let Communicator { handle: h, bufs, .. } = c;
+    if sends.len() != h.n {
+        return Err(CommError::shape(format!(
+            "{} payloads for a {}-rank all2all (one per destination)",
+            sends.len(),
+            h.n
+        )));
+    }
     for (dst, payload) in sends.iter().enumerate() {
         if dst != h.rank {
-            h.send(dst, encode(codec, payload, &mut bufs));
+            h.send(dst, encode(codec, payload, bufs))?;
         }
     }
     let mut out = Vec::with_capacity(h.n);
     for src in 0..h.n {
         let wire = if src == h.rank {
-            encode(codec, &sends[src], &mut bufs)
+            encode(codec, &sends[src], bufs)
         } else {
-            h.recv(src)
+            h.recv(src)?
         };
-        let n = crate::quant::wire::Header::parse(&wire).expect("a2a header").n as usize;
-        let mut buf = vec![0f32; n];
-        Codec::decode_with(&wire, &mut bufs, &mut buf).expect("a2a decode");
-        out.push(buf);
+        out.push(decode_validated(src, &wire, bufs)?);
     }
-    out
+    Ok(out)
+}
+
+/// Decode one self-describing payload, validating the header's element
+/// count against the frame's actual length *before* sizing the output —
+/// the guard that turns a corrupted length field into a clean error
+/// instead of an unbounded `vec![0f32; n]`.
+fn decode_validated(
+    src: usize,
+    wire: &[u8],
+    bufs: &mut CodecBuffers,
+) -> Result<Vec<f32>, CommError> {
+    let header = Header::parse(wire).map_err(|e| CommError::decode(src, e))?;
+    let n = header.n as usize;
+    let claimed = codec_from_header(&header).map_err(|e| CommError::decode(src, e))?;
+    let expect = claimed.wire_len(n);
+    if expect != wire.len() {
+        return Err(CommError::header(
+            src,
+            format!(
+                "header claims {n} elements ({expect} wire bytes) but the frame carries {} bytes",
+                wire.len()
+            ),
+        ));
+    }
+    let mut buf = vec![0f32; n];
+    Codec::decode_with(wire, bufs, &mut buf).map_err(|e| CommError::decode(src, e))?;
+    Ok(buf)
 }
 
 /// Dispatch (quantized) + combine (BF16) round trip: scatter token slices
 /// to experts, get them back. Returns what each rank's tokens look like
 /// after the full EP round trip with identity experts — used by tests to
 /// isolate pure communication error.
-pub fn dispatch_combine_identity<T: Transport>(
-    h: &RankHandle<T>,
+#[cfg(test)]
+pub(crate) fn dispatch_combine_identity<T: Transport>(
+    c: &mut Communicator<T>,
     sends: &[Vec<f32>],
     dispatch_codec: &Codec,
-) -> Vec<Vec<f32>> {
-    let received = all2all(h, sends, dispatch_codec);
+) -> Result<Vec<Vec<f32>>, CommError> {
+    let received = all2all(c, sends, dispatch_codec)?;
     // Identity "expert": send straight back, combine in BF16.
-    all2all(h, &received, &Codec::Bf16)
+    all2all(c, &received, &Codec::Bf16)
 }
 
 #[cfg(test)]
@@ -78,8 +118,10 @@ mod tests {
     fn bf16_all2all_routes_correctly() {
         let topo = Topology::new(presets::h800(), 4);
         let (results, _) = run_ranks(&topo, |h| {
-            let sends = payloads(h.rank, h.n, 64);
-            (sends.clone(), all2all(&h, &sends, &Codec::Bf16))
+            let mut c = Communicator::from_handle(h);
+            let sends = payloads(c.rank(), c.n(), 64);
+            let got = all2all(&mut c, &sends, &Codec::Bf16).unwrap();
+            (sends, got)
         });
         for (dst, (_, got)) in results.iter().enumerate() {
             for (src, (sent, _)) in results.iter().enumerate() {
@@ -98,9 +140,10 @@ mod tests {
         // MoE routing is never balanced: different sizes per destination.
         let topo = Topology::new(presets::h800(), 4);
         let (results, _) = run_ranks(&topo, |h| {
+            let mut c = Communicator::from_handle(h);
             let sends: Vec<Vec<f32>> =
-                (0..h.n).map(|d| vec![h.rank as f32; (h.rank + 1) * (d + 1)]).collect();
-            all2all(&h, &sends, &Codec::parse("int8").unwrap())
+                (0..c.n()).map(|d| vec![c.rank() as f32; (c.rank() + 1) * (d + 1)]).collect();
+            all2all(&mut c, &sends, &Codec::parse("int8").unwrap()).unwrap()
         });
         for (dst, got) in results.iter().enumerate() {
             for (src, payload) in got.iter().enumerate() {
@@ -116,8 +159,10 @@ mod tests {
         for spec in ["int8", "int5", "int3@32", "int2@32"] {
             let codec = Codec::parse(spec).unwrap();
             let (results, _) = run_ranks(&topo, |h| {
-                let sends = payloads(h.rank, h.n, 2048);
-                (sends.clone(), dispatch_combine_identity(&h, &sends, &codec))
+                let mut c = Communicator::from_handle(h);
+                let sends = payloads(c.rank(), c.n(), 2048);
+                let got = dispatch_combine_identity(&mut c, &sends, &codec).unwrap();
+                (sends, got)
             });
             // Round-trip error on rank 0's own tokens.
             let (sent, got) = &results[0];
@@ -135,8 +180,10 @@ mod tests {
         let q = |spec: &str| {
             let codec = Codec::parse(spec).unwrap();
             let (results, _) = run_ranks(&topo, |h| {
-                let sends = payloads(h.rank, h.n, 4096);
-                (sends.clone(), dispatch_combine_identity(&h, &sends, &codec))
+                let mut c = Communicator::from_handle(h);
+                let sends = payloads(c.rank(), c.n(), 4096);
+                let got = dispatch_combine_identity(&mut c, &sends, &codec).unwrap();
+                (sends, got)
             });
             let (sent, got) = &results[0];
             let flat_s: Vec<f32> = sent.iter().flatten().cloned().collect();
@@ -154,13 +201,57 @@ mod tests {
         let vol = |spec: &str| {
             let codec = Codec::parse(spec).unwrap();
             let (_, counters) = run_ranks(&topo, |h| {
-                let sends = payloads(h.rank, h.n, 1024);
-                all2all(&h, &sends, &codec);
+                let mut c = Communicator::from_handle(h);
+                let sends = payloads(c.rank(), c.n(), 1024);
+                all2all(&mut c, &sends, &codec).unwrap();
             });
             counters.total_bytes() as f64
         };
         let bf = vol("bf16");
         let i4 = vol("int4@32");
         assert!((0.25..0.40).contains(&(i4 / bf)), "int4/bf16 wire ratio {}", i4 / bf);
+    }
+
+    #[test]
+    fn wrong_payload_count_is_a_shape_error() {
+        let topo = Topology::new(presets::h800(), 4);
+        let (errs, _) = run_ranks(&topo, |h| {
+            let mut c = Communicator::from_handle(h);
+            let sends = payloads(c.rank(), 3, 8); // 3 payloads for 4 ranks
+            all2all(&mut c, &sends, &Codec::Bf16).unwrap_err().to_string()
+        });
+        assert!(errs[0].contains("payloads"), "{}", errs[0]);
+    }
+
+    #[test]
+    fn inflated_header_count_is_rejected_before_allocation() {
+        // A corrupted wire header claiming u32::MAX elements must be caught
+        // by the frame-length cross-check, not drive a 16 GB allocation.
+        let codec = Codec::parse("int8").unwrap();
+        let mut wire = codec.encode(&vec![1.0f32; 256]);
+        // n lives at header bytes 8..12 (little-endian).
+        wire[8..12].copy_from_slice(&u32::MAX.to_le_bytes());
+        let mut bufs = CodecBuffers::default();
+        let err = decode_validated(3, &wire, &mut bufs).unwrap_err();
+        match &err {
+            CommError::Header { peer, detail } => {
+                assert_eq!(*peer, 3);
+                assert!(detail.contains("4294967295"), "{detail}");
+            }
+            other => panic!("expected Header error, got {other}"),
+        }
+
+        // A *shrunken* count is equally inconsistent with the frame.
+        let mut wire = codec.encode(&vec![1.0f32; 256]);
+        wire[8..12].copy_from_slice(&8u32.to_le_bytes());
+        assert!(matches!(
+            decode_validated(0, &wire, &mut bufs).unwrap_err(),
+            CommError::Header { .. }
+        ));
+
+        // An intact payload still decodes.
+        let wire = codec.encode(&vec![1.0f32; 256]);
+        let out = decode_validated(0, &wire, &mut bufs).unwrap();
+        assert_eq!(out.len(), 256);
     }
 }

@@ -1,0 +1,571 @@
+//! [`Communicator`] — the NCCL-style front door to the collective layer —
+//! and [`LocalGroup`], the in-process rank group that drives the same code
+//! path for TP shards, DP replicas, and EP dispatch living in one process.
+//!
+//! A communicator owns, per rank:
+//!
+//! - the connected transport endpoint (via [`RankHandle`]),
+//! - the node [`Topology`] and the job-shared [`ByteCounters`],
+//! - persistent codec scratch ([`CodecBuffers`] plus f32 staging buffers),
+//!   so repeated collectives are allocation-free after warmup: the first
+//!   call sizes the scratch, later calls of the same shape reuse it
+//!   (observable via [`Communicator::scratch_bytes`]). The per-message
+//!   wire `Vec<u8>` handed to [`Transport::send`] is the one unavoidable
+//!   allocation — the transport takes ownership of the payload.
+//!
+//! # Lifecycle
+//!
+//! ```text
+//! bootstrap transport  ─►  Communicator::new(transport, topo, counters)
+//!        │                        │ collectives: allreduce / reduce_scatter /
+//!        │                        │ all_gather / broadcast / all2all
+//!        ▼                        ▼ every method → Result<_, CommError>
+//!   (drop ends membership; counters/topology outlive via Arc/Clone)
+//! ```
+//!
+//! Algorithm choice is per call through an [`AlgoPolicy`]; `Auto` asks the
+//! calibrated cost model which algorithm is fastest for this (topology,
+//! codec, payload size) — deterministically, so every rank of a job picks
+//! the same algorithm without coordination.
+
+use std::mem::size_of;
+use std::sync::Arc;
+
+use crate::comm::{
+    all2all,
+    error::CommError,
+    fabric::{ByteCounters, RankHandle},
+    hier, pipeline, ring, twostep, Algo, AlgoPolicy,
+};
+use crate::quant::{Codec, CodecBuffers};
+use crate::topo::{presets, Topology};
+use crate::transport::{inproc, InProcTransport, Transport};
+
+/// One rank's handle to the collective layer. See the module docs.
+pub struct Communicator<T: Transport = InProcTransport> {
+    pub(crate) handle: RankHandle<T>,
+    /// Codec scratch (codes / metas / spikes), reused across calls.
+    pub(crate) bufs: CodecBuffers,
+    /// f32 staging chunk (ring hops, all-gather self-QDQ).
+    pub(crate) scratch: Vec<f32>,
+    /// f32 accumulation chunk (one-shot reduce-scatter, hier stages).
+    pub(crate) acc: Vec<f32>,
+    /// Per-micro-chunk reduced partials (pipelined hierarchical).
+    pub(crate) reduced: Vec<Vec<f32>>,
+    /// Memoized `Auto` resolution: the cost model (which builds a pipeline
+    /// DAG for the hier-pp candidate) is a pure function of
+    /// (topology, codec, size), so repeated same-shape calls skip it and
+    /// the hot path stays allocation-free after warmup.
+    auto_cache: Option<(Codec, usize, Algo)>,
+}
+
+impl<T: Transport> Communicator<T> {
+    /// Wrap a connected transport endpoint. `topo` must describe the same
+    /// world size the transport was bootstrapped with; `counters` is shared
+    /// across every communicator of the same logical job (one per process
+    /// for multi-process transports).
+    pub fn new(
+        transport: T,
+        topo: Topology,
+        counters: Arc<ByteCounters>,
+    ) -> Result<Communicator<T>, CommError> {
+        if topo.n_gpus != transport.n() {
+            return Err(CommError::shape(format!(
+                "topology is {} ranks but the transport mesh has {}",
+                topo.n_gpus,
+                transport.n()
+            )));
+        }
+        Ok(Communicator::from_handle(RankHandle::new(transport, topo, counters)))
+    }
+
+    /// Wrap an existing fabric endpoint (e.g. one handed out by
+    /// [`run_ranks`](crate::comm::fabric::run_ranks)).
+    pub fn from_handle(handle: RankHandle<T>) -> Communicator<T> {
+        Communicator {
+            handle,
+            bufs: CodecBuffers::default(),
+            scratch: Vec::new(),
+            acc: Vec::new(),
+            reduced: Vec::new(),
+            auto_cache: None,
+        }
+    }
+
+    /// This rank's index in `0..n()`.
+    pub fn rank(&self) -> usize {
+        self.handle.rank
+    }
+
+    /// World size of the job.
+    pub fn n(&self) -> usize {
+        self.handle.n
+    }
+
+    /// The node topology this communicator models.
+    pub fn topo(&self) -> &Topology {
+        self.handle.topo()
+    }
+
+    /// Shared byte counters (same instance across all ranks of this job).
+    pub fn counters(&self) -> &ByteCounters {
+        self.handle.counters()
+    }
+
+    /// The underlying transport endpoint (e.g. for
+    /// [`Transport::stats`](crate::transport::Transport::stats)).
+    pub fn transport(&self) -> &T {
+        self.handle.transport()
+    }
+
+    /// The raw fabric endpoint (point-to-point send/recv).
+    pub fn handle(&self) -> &RankHandle<T> {
+        &self.handle
+    }
+
+    /// In-place AllReduce of `data` across all ranks: every rank ends with
+    /// a bit-identical wire-precision image of the element-wise sum.
+    /// Returns the algorithm the policy resolved to.
+    pub fn allreduce(
+        &mut self,
+        data: &mut [f32],
+        codec: &Codec,
+        policy: AlgoPolicy,
+    ) -> Result<Algo, CommError> {
+        let algo = match (policy, self.auto_cache) {
+            (AlgoPolicy::Fixed(a), _) => a,
+            (AlgoPolicy::Auto, Some((c, len, a))) if c == *codec && len == data.len() => a,
+            (AlgoPolicy::Auto, _) => {
+                let a = policy.resolve(self.topo(), codec, data.len());
+                self.auto_cache = Some((*codec, data.len(), a));
+                a
+            }
+        };
+        match algo {
+            Algo::Ring => ring::allreduce(self, data, codec)?,
+            Algo::TwoStep => twostep::allreduce(self, data, codec)?,
+            Algo::Hier => hier::allreduce(self, data, codec)?,
+            Algo::HierPipelined => pipeline::allreduce(self, data, codec)?,
+        }
+        Ok(algo)
+    }
+
+    /// Pipelined hierarchical AllReduce with an explicit micro-chunk count
+    /// (the Fig. 8 knob; [`Algo::HierPipelined`] uses the default).
+    pub fn allreduce_chunked(
+        &mut self,
+        data: &mut [f32],
+        codec: &Codec,
+        chunks: usize,
+    ) -> Result<(), CommError> {
+        pipeline::allreduce_chunked(self, data, codec, chunks)
+    }
+
+    /// One-shot reduce-scatter: after the call, `data[range]` (the returned
+    /// range — this rank's balanced chunk) holds the sum of every rank's
+    /// values for that chunk; the rest of `data` is untouched.
+    pub fn reduce_scatter(
+        &mut self,
+        data: &mut [f32],
+        codec: &Codec,
+    ) -> Result<std::ops::Range<usize>, CommError> {
+        twostep::reduce_scatter(self, data, codec)
+    }
+
+    /// One-shot all-gather of each rank's owned chunk (the complement of
+    /// [`reduce_scatter`](Communicator::reduce_scatter)): every rank ends
+    /// with the full, bit-identical vector. The own chunk takes one QDQ so
+    /// ranks agree bitwise.
+    pub fn all_gather(&mut self, data: &mut [f32], codec: &Codec) -> Result<(), CommError> {
+        twostep::all_gather(self, data, codec)
+    }
+
+    /// Broadcast `root`'s `data` to every rank through the wire codec.
+    /// All ranks (including the root, via a self-QDQ) end bit-identical.
+    pub fn broadcast(
+        &mut self,
+        data: &mut [f32],
+        root: usize,
+        codec: &Codec,
+    ) -> Result<(), CommError> {
+        twostep::broadcast(self, data, root, codec)
+    }
+
+    /// Exchange `sends[d]` with every rank `d`, quantizing with `codec`.
+    /// Returns `recv[s]` — the decoded payload rank `s` sent us. Payload
+    /// sizes may differ per destination (MoE routing is never balanced);
+    /// the self payload takes the same QDQ as remote ones.
+    pub fn all2all(
+        &mut self,
+        sends: &[Vec<f32>],
+        codec: &Codec,
+    ) -> Result<Vec<Vec<f32>>, CommError> {
+        all2all::all2all(self, sends, codec)
+    }
+
+    /// Bytes of owned scratch currently held (codec buffers + f32 staging).
+    /// Stable across repeated same-shape collectives after the first call —
+    /// the hot path reuses rather than reallocates (asserted in tests).
+    pub fn scratch_bytes(&self) -> usize {
+        self.bufs.capacity_bytes()
+            + 4 * (self.scratch.capacity() + self.acc.capacity())
+            + self.reduced.capacity() * size_of::<Vec<f32>>()
+            + self.reduced.iter().map(|v| 4 * v.capacity()).sum::<usize>()
+    }
+}
+
+/// The device preset an in-process rank group (TP shards, DP replicas)
+/// models for a given policy: the NUMA (L40) node when the policy wants —
+/// or may want — the hierarchical algorithms and the rank count supports
+/// two equal groups, the flat NVLink (H800) node otherwise.
+pub fn preset_topo(n: usize, policy: AlgoPolicy) -> Result<Topology, CommError> {
+    if n < 2 {
+        return Err(CommError::shape(format!("a rank group needs at least 2 ranks, got {n}")));
+    }
+    let two_groups_ok = n % 2 == 0;
+    let numa = match policy {
+        AlgoPolicy::Fixed(a @ (Algo::Hier | Algo::HierPipelined)) => {
+            if !two_groups_ok {
+                return Err(CommError::topology(
+                    a,
+                    format!("needs an even rank count for 2 NUMA groups, got {n}"),
+                ));
+            }
+            true
+        }
+        AlgoPolicy::Auto => two_groups_ok,
+        AlgoPolicy::Fixed(_) => false,
+    };
+    Ok(if numa {
+        Topology::new(presets::l40(), n)
+    } else {
+        Topology::new(presets::h800(), n)
+    })
+}
+
+/// An in-process rank group: `n` communicators over a private mpsc mesh,
+/// one OS thread per rank per collective call. This is how single-process
+/// engines (TP inference, the DP trainer, EP boundaries) run their partial
+/// sums through the *same* Communicator code path — and therefore the same
+/// QDQ chain — as the multi-process fabric, instead of a hand-rolled
+/// second implementation.
+///
+/// The [`AlgoPolicy`] is fixed at construction: the group's preset
+/// topology is chosen *for* that policy, so letting callers pass a
+/// different one per call could silently strand `Auto` on a topology
+/// that cannot host the hierarchical family. Build a new group to change
+/// policy.
+pub struct LocalGroup {
+    comms: Vec<Communicator<InProcTransport>>,
+    policy: AlgoPolicy,
+}
+
+impl LocalGroup {
+    /// Build a group over an explicit topology, running `policy`.
+    pub fn new(topo: &Topology, policy: AlgoPolicy) -> Result<LocalGroup, CommError> {
+        let counters = Arc::new(ByteCounters::default());
+        let comms = inproc::mesh(topo.n_gpus)
+            .into_iter()
+            .map(|t| Communicator::new(t, topo.clone(), counters.clone()))
+            .collect::<Result<Vec<_>, CommError>>()?;
+        Ok(LocalGroup { comms, policy })
+    }
+
+    /// Build a group of `n` ranks over the [`preset_topo`] for `policy`.
+    pub fn for_policy(n: usize, policy: AlgoPolicy) -> Result<LocalGroup, CommError> {
+        LocalGroup::new(&preset_topo(n, policy)?, policy)
+    }
+
+    pub fn n(&self) -> usize {
+        self.comms.len()
+    }
+
+    pub fn topo(&self) -> &Topology {
+        self.comms[0].topo()
+    }
+
+    /// The policy this group was built for.
+    pub fn policy(&self) -> AlgoPolicy {
+        self.policy
+    }
+
+    /// The group-shared byte counters (payload volume accounting).
+    pub fn counters(&self) -> &ByteCounters {
+        self.comms[0].counters()
+    }
+
+    /// AllReduce `per_rank[r]` as rank `r`'s contribution, in place: after
+    /// the call every entry holds the same wire-precision sum. One scoped
+    /// OS thread per rank; scratch stays warm across calls.
+    pub fn allreduce(
+        &mut self,
+        per_rank: &mut [Vec<f32>],
+        codec: &Codec,
+    ) -> Result<Algo, CommError> {
+        if per_rank.len() != self.comms.len() {
+            return Err(CommError::shape(format!(
+                "{} payloads for a {}-rank group",
+                per_rank.len(),
+                self.comms.len()
+            )));
+        }
+        let len0 = per_rank[0].len();
+        if per_rank.iter().any(|v| v.len() != len0) {
+            return Err(CommError::shape("per-rank payload lengths differ".to_string()));
+        }
+        let policy = self.policy;
+        let results: Vec<Result<Algo, CommError>> = std::thread::scope(|scope| {
+            let joins: Vec<_> = self
+                .comms
+                .iter_mut()
+                .zip(per_rank.iter_mut())
+                .map(|(c, d)| scope.spawn(move || c.allreduce(d, codec, policy)))
+                .collect();
+            joins.into_iter().map(|j| j.join().expect("rank panicked")).collect()
+        });
+        let mut algo = None;
+        for r in results {
+            algo = Some(r?);
+        }
+        Ok(algo.expect("group has at least 2 ranks"))
+    }
+
+    /// Total owned scratch across the group's communicators.
+    pub fn scratch_bytes(&self) -> usize {
+        self.comms.iter().map(Communicator::scratch_bytes).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::fabric::run_ranks;
+    use crate::util::stats::sqnr_db;
+    use crate::util::Prng;
+
+    fn codec(s: &str) -> Codec {
+        Codec::parse(s).unwrap()
+    }
+
+    fn per_rank_data(n: usize, len: usize) -> Vec<Vec<f32>> {
+        (0..n)
+            .map(|r| {
+                let mut rng = Prng::new(7100 + r as u64);
+                let mut v = vec![0f32; len];
+                rng.fill_activations(&mut v, 1.0);
+                v
+            })
+            .collect()
+    }
+
+    const MB: usize = 1024 * 1024;
+
+    #[test]
+    fn auto_picks_hier_above_crossover_on_l40() {
+        // Acceptance pin: above the cost-model crossover the NUMA node runs
+        // the hierarchical family; far below it, the one-shot two-step.
+        let topo = Topology::new(presets::l40(), 8);
+        let c = codec("int4@32");
+        let large = AlgoPolicy::Auto.resolve(&topo, &c, 32 * MB); // 64 MiB payload
+        assert!(
+            matches!(large, Algo::Hier | Algo::HierPipelined),
+            "L40 large: {large:?}"
+        );
+        let small = AlgoPolicy::Auto.resolve(&topo, &c, 8 * 1024); // 16 KiB payload
+        assert_eq!(small, Algo::TwoStep, "L40 small");
+    }
+
+    #[test]
+    fn auto_stays_one_shot_on_h800() {
+        // No NUMA bridge on NVLink nodes: the hierarchical family is never
+        // admissible; the quantized ring never is (error compounds).
+        let topo = Topology::new(presets::h800(), 8);
+        let c = codec("int4@32");
+        for elems in [4 * 1024usize, 32 * MB] {
+            assert_eq!(AlgoPolicy::Auto.resolve(&topo, &c, elems), Algo::TwoStep);
+        }
+    }
+
+    #[test]
+    fn auto_bf16_regimes_on_l40() {
+        // BF16 keeps the ring admissible (no error compounding without a
+        // lossy codec). Large payloads: the two-step is dominated by its 4M
+        // cross-NUMA volume, leaving the ring or the pipelined hierarchy.
+        // Small payloads: the ring's 2(N−1) launch latencies lose to the
+        // two-step's 2.
+        let topo = Topology::new(presets::l40(), 8);
+        let large = AlgoPolicy::Auto.resolve(&topo, &Codec::Bf16, 32 * MB);
+        assert!(matches!(large, Algo::Ring | Algo::HierPipelined), "L40 bf16 large: {large:?}");
+        let small = AlgoPolicy::Auto.resolve(&topo, &Codec::Bf16, 8 * 1024);
+        assert_eq!(small, Algo::TwoStep, "L40 bf16 small");
+    }
+
+    #[test]
+    fn auto_is_deterministic() {
+        let l40 = Topology::new(presets::l40(), 8);
+        let h800 = Topology::new(presets::h800(), 8);
+        for c in ["bf16", "int8", "int4@32", "int2-sr@32!"] {
+            let c = codec(c);
+            for elems in [1usize, 4096, 500_000, 32 * MB] {
+                for topo in [&l40, &h800] {
+                    let first = AlgoPolicy::Auto.resolve(topo, &c, elems);
+                    for _ in 0..20 {
+                        assert_eq!(
+                            AlgoPolicy::Auto.resolve(topo, &c, elems),
+                            first,
+                            "(topology, codec, size) must map to one algorithm"
+                        );
+                    }
+                    // A fresh, identical topology resolves identically.
+                    assert_eq!(AlgoPolicy::Auto.resolve(&topo.clone(), &c, elems), first);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn local_group_matches_fabric_collective_bitwise() {
+        // The unified QDQ path: a LocalGroup allreduce must be bit-identical
+        // to the same collective over run_ranks handles.
+        let topo = Topology::new(presets::l40(), 4);
+        let c = codec("int2-sr@32!");
+        let data = per_rank_data(4, 1536);
+
+        let mut group = LocalGroup::new(&topo, AlgoPolicy::Fixed(Algo::Hier)).unwrap();
+        let mut mine = data.clone();
+        group.allreduce(&mut mine, &c).unwrap();
+
+        let dref = &data;
+        let (fabric_r, _) = run_ranks(&topo, |h| {
+            let mut comm = Communicator::from_handle(h);
+            let mut d = dref[comm.rank()].clone();
+            comm.allreduce(&mut d, &c, AlgoPolicy::Fixed(Algo::Hier)).unwrap();
+            d
+        });
+        for r in 0..4 {
+            let a: Vec<u32> = mine[r].iter().map(|x| x.to_bits()).collect();
+            let b: Vec<u32> = fabric_r[r].iter().map(|x| x.to_bits()).collect();
+            assert_eq!(a, b, "rank {r}");
+        }
+    }
+
+    #[test]
+    fn hot_path_is_allocation_free_after_warmup() {
+        // Acceptance pin: repeated allreduce calls reuse owned scratch — the
+        // scratch byte counter must not grow after the first call.
+        for policy in [
+            AlgoPolicy::Fixed(Algo::TwoStep),
+            AlgoPolicy::Fixed(Algo::Ring),
+            AlgoPolicy::Fixed(Algo::Hier),
+            AlgoPolicy::Fixed(Algo::HierPipelined),
+        ] {
+            let mut group = LocalGroup::for_policy(4, policy).unwrap();
+            let c = codec("int2-sr@32!");
+            let mut data = per_rank_data(4, 4096);
+            group.allreduce(&mut data, &c).unwrap();
+            let warm = group.scratch_bytes();
+            assert!(warm > 0, "{policy}: warmup must size the scratch");
+            for _ in 0..4 {
+                let mut data = per_rank_data(4, 4096);
+                group.allreduce(&mut data, &c).unwrap();
+                assert_eq!(
+                    group.scratch_bytes(),
+                    warm,
+                    "{policy}: hot path must reuse scratch, not grow it"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fixed_hier_errors_cleanly_on_flat_topology() {
+        let topo = Topology::new(presets::h800(), 4);
+        let mut group = LocalGroup::new(&topo, AlgoPolicy::Fixed(Algo::Hier)).unwrap();
+        let mut data = per_rank_data(4, 64);
+        let err = group.allreduce(&mut data, &Codec::Bf16).unwrap_err();
+        assert!(matches!(err, CommError::Topology { algo: Algo::Hier, .. }), "{err}");
+    }
+
+    #[test]
+    fn preset_topo_shapes() {
+        assert!(preset_topo(1, AlgoPolicy::Auto).is_err());
+        assert!(preset_topo(3, AlgoPolicy::Fixed(Algo::Hier)).is_err());
+        assert!(preset_topo(3, AlgoPolicy::Auto).unwrap().spec.name == "H800");
+        assert!(preset_topo(4, AlgoPolicy::Auto).unwrap().spec.is_numa());
+        assert!(preset_topo(4, AlgoPolicy::Fixed(Algo::TwoStep)).unwrap().spec.name == "H800");
+        assert!(preset_topo(6, AlgoPolicy::Fixed(Algo::HierPipelined)).unwrap().spec.is_numa());
+    }
+
+    #[test]
+    fn group_shape_errors() {
+        let mut group = LocalGroup::for_policy(4, AlgoPolicy::Auto).unwrap();
+        let mut three = per_rank_data(3, 64);
+        let e = group.allreduce(&mut three, &Codec::Bf16).unwrap_err();
+        assert!(matches!(e, CommError::Shape { .. }), "{e}");
+        let mut ragged = per_rank_data(4, 64);
+        ragged[2].pop();
+        let e = group.allreduce(&mut ragged, &Codec::Bf16).unwrap_err();
+        assert!(matches!(e, CommError::Shape { .. }), "{e}");
+    }
+
+    #[test]
+    fn reduce_scatter_all_gather_compose_to_twostep() {
+        // The two-step IS reduce_scatter ∘ all_gather — composing the public
+        // primitives must be bit-identical to Fixed(TwoStep).
+        let topo = Topology::new(presets::h800(), 4);
+        let c = codec("int4@32");
+        let data = per_rank_data(4, 1000);
+        let dref = &data;
+        let (composed, _) = run_ranks(&topo, |h| {
+            let mut comm = Communicator::from_handle(h);
+            let mut d = dref[comm.rank()].clone();
+            let own = comm.reduce_scatter(&mut d, &c).unwrap();
+            assert_eq!(own, crate::comm::chunk_range(1000, 4, comm.rank()));
+            comm.all_gather(&mut d, &c).unwrap();
+            d
+        });
+        let (direct, _) = run_ranks(&topo, |h| {
+            let mut comm = Communicator::from_handle(h);
+            let mut d = dref[comm.rank()].clone();
+            comm.allreduce(&mut d, &c, AlgoPolicy::Fixed(Algo::TwoStep)).unwrap();
+            d
+        });
+        for r in 0..4 {
+            let a: Vec<u32> = composed[r].iter().map(|x| x.to_bits()).collect();
+            let b: Vec<u32> = direct[r].iter().map(|x| x.to_bits()).collect();
+            assert_eq!(a, b, "rank {r}");
+        }
+    }
+
+    #[test]
+    fn broadcast_delivers_wire_precision_bit_identically() {
+        let topo = Topology::new(presets::h800(), 4);
+        let c = codec("int5");
+        let mut rng = Prng::new(99);
+        let mut payload = vec![0f32; 777];
+        rng.fill_activations(&mut payload, 1.0);
+        let pref = &payload;
+        let (results, _) = run_ranks(&topo, |h| {
+            let mut comm = Communicator::from_handle(h);
+            let mut d = if comm.rank() == 2 { pref.clone() } else { vec![0f32; 777] };
+            comm.broadcast(&mut d, 2, &c).unwrap();
+            d
+        });
+        for r in &results {
+            assert_eq!(
+                r.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                results[0].iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "all ranks agree bitwise (root self-QDQs)"
+            );
+        }
+        let s = sqnr_db(&payload, &results[0]);
+        assert!(s > 14.0, "broadcast wire quality {s} dB");
+        // Bad root is a clean shape error.
+        let (errs, _) = run_ranks(&topo, |h| {
+            let mut comm = Communicator::from_handle(h);
+            let mut d = vec![0f32; 8];
+            comm.broadcast(&mut d, 9, &c).unwrap_err().to_string()
+        });
+        assert!(errs[0].contains("root"), "{}", errs[0]);
+    }
+}

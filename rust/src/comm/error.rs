@@ -1,0 +1,144 @@
+//! The collective layer's error taxonomy.
+//!
+//! Every [`Communicator`](super::Communicator) method returns
+//! `Result<_, CommError>` instead of panicking: a broken link, a corrupted
+//! payload, or an algorithm/topology mismatch surfaces as a typed error the
+//! caller can report or retry around, and the variant says *which layer*
+//! failed:
+//!
+//! | variant      | layer                | typical cause                          |
+//! |--------------|----------------------|----------------------------------------|
+//! | [`Send`]     | transport            | peer disconnected mid-collective       |
+//! | [`Recv`]     | transport / frame    | CRC failure, version or seq mismatch   |
+//! | [`Decode`]   | quant wire format    | truncated or corrupted payload body    |
+//! | [`Header`]   | quant wire format    | self-describing header contradicts the |
+//! |              |                      | delivered frame (e.g. inflated `n`)    |
+//! | [`Topology`] | algorithm selection  | hierarchical algo on a non-NUMA node   |
+//! | [`Shape`]    | caller arguments     | wrong payload count / rank out of range|
+//!
+//! [`Send`]: CommError::Send
+//! [`Recv`]: CommError::Recv
+//! [`Decode`]: CommError::Decode
+//! [`Header`]: CommError::Header
+//! [`Topology`]: CommError::Topology
+//! [`Shape`]: CommError::Shape
+
+use std::fmt;
+
+use super::Algo;
+
+/// Why a collective could not complete. See the module docs for the
+/// layer-by-layer taxonomy.
+#[derive(Debug)]
+pub enum CommError {
+    /// The transport failed to hand a payload to `peer`.
+    Send { peer: usize, source: anyhow::Error },
+    /// The transport failed to produce the next payload from `peer`
+    /// (frame corruption, version mismatch, sequence desync, disconnect).
+    Recv { peer: usize, source: anyhow::Error },
+    /// A delivered payload failed quant-wire decoding.
+    Decode { peer: usize, source: anyhow::Error },
+    /// A payload's self-describing header contradicts the delivered frame.
+    Header { peer: usize, detail: String },
+    /// The selected algorithm cannot run on this topology.
+    Topology { algo: Algo, detail: String },
+    /// Caller-side argument error (payload count, rank range, length).
+    Shape { detail: String },
+}
+
+impl CommError {
+    pub(crate) fn send(peer: usize, source: anyhow::Error) -> CommError {
+        CommError::Send { peer, source }
+    }
+
+    pub(crate) fn recv(peer: usize, source: anyhow::Error) -> CommError {
+        CommError::Recv { peer, source }
+    }
+
+    pub(crate) fn decode(peer: usize, source: anyhow::Error) -> CommError {
+        CommError::Decode { peer, source }
+    }
+
+    pub(crate) fn header(peer: usize, detail: impl Into<String>) -> CommError {
+        CommError::Header { peer, detail: detail.into() }
+    }
+
+    pub(crate) fn topology(algo: Algo, detail: impl Into<String>) -> CommError {
+        CommError::Topology { algo, detail: detail.into() }
+    }
+
+    pub(crate) fn shape(detail: impl Into<String>) -> CommError {
+        CommError::Shape { detail: detail.into() }
+    }
+
+    /// The peer rank the failure is attributed to, if any.
+    pub fn peer(&self) -> Option<usize> {
+        match self {
+            CommError::Send { peer, .. }
+            | CommError::Recv { peer, .. }
+            | CommError::Decode { peer, .. }
+            | CommError::Header { peer, .. } => Some(*peer),
+            CommError::Topology { .. } | CommError::Shape { .. } => None,
+        }
+    }
+}
+
+impl fmt::Display for CommError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CommError::Send { peer, source } => {
+                write!(f, "send to rank {peer} failed: {source}")
+            }
+            CommError::Recv { peer, source } => {
+                write!(f, "recv from rank {peer} failed: {source}")
+            }
+            CommError::Decode { peer, source } => {
+                write!(f, "payload from rank {peer} failed to decode: {source}")
+            }
+            CommError::Header { peer, detail } => {
+                write!(f, "payload from rank {peer} has an inconsistent header: {detail}")
+            }
+            CommError::Topology { algo, detail } => {
+                write!(f, "{} cannot run on this topology: {detail}", algo.name())
+            }
+            CommError::Shape { detail } => write!(f, "invalid collective arguments: {detail}"),
+        }
+    }
+}
+
+impl std::error::Error for CommError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            CommError::Send { source, .. }
+            | CommError::Recv { source, .. }
+            | CommError::Decode { source, .. } => Some(source.as_ref()),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_names_the_layer_and_peer() {
+        let e = CommError::recv(3, anyhow::anyhow!("CRC mismatch"));
+        let s = e.to_string();
+        assert!(s.contains("rank 3") && s.contains("CRC"), "{s}");
+        assert_eq!(e.peer(), Some(3));
+
+        let t = CommError::topology(Algo::Hier, "1 NUMA group".into());
+        assert!(t.to_string().contains("Hierarchical"), "{t}");
+        assert_eq!(t.peer(), None);
+    }
+
+    #[test]
+    fn converts_into_anyhow() {
+        fn takes_anyhow() -> anyhow::Result<()> {
+            Err(CommError::shape("bad"))?
+        }
+        let e = takes_anyhow().unwrap_err();
+        assert!(e.to_string().contains("invalid collective arguments"));
+    }
+}

@@ -13,6 +13,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
+use crate::comm::error::CommError;
 use crate::topo::Topology;
 use crate::transport::{inproc, InProcTransport, Transport};
 
@@ -108,23 +109,25 @@ impl<T: Transport> RankHandle<T> {
     }
 
     /// Send a payload to `dst` (non-blocking with respect to the peer's
-    /// progress; see [`Transport`]).
-    pub fn send(&self, dst: usize, bytes: Vec<u8>) {
+    /// progress; see [`Transport`]). A transport fault surfaces as
+    /// [`CommError::Send`] — no panic.
+    pub fn send(&self, dst: usize, bytes: Vec<u8>) -> Result<(), CommError> {
         assert_ne!(dst, self.rank, "self-send is a local copy, not a transfer");
         self.counters.total.fetch_add(bytes.len() as u64, Ordering::Relaxed);
         self.counters.messages.fetch_add(1, Ordering::Relaxed);
         if self.topo.numa_groups > 1 && self.topo.group_of(self.rank) != self.topo.group_of(dst) {
             self.counters.cross_numa.fetch_add(bytes.len() as u64, Ordering::Relaxed);
         }
-        self.transport.send(dst, bytes).expect("transport send failed");
+        self.transport.send(dst, bytes).map_err(|e| CommError::send(dst, e))
     }
 
-    /// Block until a payload from `src` arrives. Panics if the transport
-    /// reports a fault (corruption, version mismatch, sequence desync,
-    /// disconnect) — a collective cannot continue past a broken link.
-    pub fn recv(&self, src: usize) -> Vec<u8> {
+    /// Block until a payload from `src` arrives. A transport fault
+    /// (corruption, version mismatch, sequence desync, disconnect) surfaces
+    /// as [`CommError::Recv`] — a collective cannot continue past a broken
+    /// link, but the caller decides how loudly to fail.
+    pub fn recv(&self, src: usize) -> Result<Vec<u8>, CommError> {
         assert_ne!(src, self.rank);
-        self.transport.recv(src).expect("transport recv failed")
+        self.transport.recv(src).map_err(|e| CommError::recv(src, e))
     }
 
     /// The node topology this fabric models.
@@ -201,13 +204,13 @@ mod tests {
             // Everyone sends its rank byte to everyone.
             for d in 0..h.n {
                 if d != h.rank {
-                    h.send(d, vec![h.rank as u8]);
+                    h.send(d, vec![h.rank as u8]).unwrap();
                 }
             }
             let mut got = Vec::new();
             for s in 0..h.n {
                 if s != h.rank {
-                    got.push(h.recv(s)[0]);
+                    got.push(h.recv(s).unwrap()[0]);
                 }
             }
             got
@@ -223,12 +226,12 @@ mod tests {
             // One 100-byte message to the bridge peer (cross) and one to an
             // intra-group neighbour.
             let peer = h.topo().bridge_peer(h.rank);
-            h.send(peer, vec![0u8; 100]);
-            let _ = h.recv(peer);
+            h.send(peer, vec![0u8; 100]).unwrap();
+            let _ = h.recv(peer).unwrap();
             let g = h.topo().group_members(h.rank);
             let neighbour = if h.rank + 1 < g.end { h.rank + 1 } else { g.start };
-            h.send(neighbour, vec![0u8; 10]);
-            let _ = h.recv(if h.rank > g.start { h.rank - 1 } else { g.end - 1 });
+            h.send(neighbour, vec![0u8; 10]).unwrap();
+            let _ = h.recv(if h.rank > g.start { h.rank - 1 } else { g.end - 1 }).unwrap();
         });
         let snap = counters.snapshot();
         assert_eq!(snap.total, 8 * 110);
@@ -242,11 +245,11 @@ mod tests {
         let (results, _) = run_ranks(&topo, |h| {
             if h.rank == 0 {
                 for i in 0..100u8 {
-                    h.send(1, vec![i]);
+                    h.send(1, vec![i]).unwrap();
                 }
                 Vec::new()
             } else {
-                (0..100).map(|_| h.recv(0)[0]).collect::<Vec<u8>>()
+                (0..100).map(|_| h.recv(0).unwrap()[0]).collect::<Vec<u8>>()
             }
         });
         assert_eq!(results[1], (0..100).collect::<Vec<u8>>());
@@ -257,9 +260,9 @@ mod tests {
         let topo = Topology::new(presets::h800(), 2);
         let (_, counters) = run_ranks(&topo, |h| {
             if h.rank == 0 {
-                h.send(1, vec![0u8; 64]);
+                h.send(1, vec![0u8; 64]).unwrap();
             } else {
-                let _ = h.recv(0);
+                let _ = h.recv(0).unwrap();
             }
         });
         // At rest, snapshot is coherent and reset clears everything.
@@ -275,9 +278,9 @@ mod tests {
         let topo = Topology::new(presets::h800(), 2);
         let (stats, counters) = run_ranks(&topo, |h| {
             if h.rank == 0 {
-                h.send(1, vec![0u8; 100]);
+                h.send(1, vec![0u8; 100]).unwrap();
             } else {
-                let _ = h.recv(0);
+                let _ = h.recv(0).unwrap();
             }
             h.transport().stats()
         });

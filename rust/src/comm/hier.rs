@@ -13,36 +13,47 @@
 //!
 //! Ranks in the two groups see identical results because the stage-2
 //! exchange is symmetric and stage-3 redistributes the same payloads.
+//! A topology without exactly two NUMA groups is a `CommError::Topology`,
+//! not a panic — `AlgoPolicy::Auto` never routes here on flat nodes.
 
-use super::{chunk_range, encode};
-use crate::comm::fabric::RankHandle;
-use crate::quant::{Codec, CodecBuffers};
+use super::{chunk_range, communicator::Communicator, encode, error::CommError, Algo};
+use crate::quant::Codec;
 use crate::transport::Transport;
 
 /// In-place hierarchical AllReduce. Requires a 2-NUMA-group topology.
-pub fn allreduce<T: Transport>(h: &RankHandle<T>, data: &mut [f32], codec: &Codec) {
+pub(crate) fn allreduce<T: Transport>(
+    c: &mut Communicator<T>,
+    data: &mut [f32],
+    codec: &Codec,
+) -> Result<(), CommError> {
+    let Communicator { handle: h, bufs, acc, .. } = c;
     let topo = h.topo().clone();
-    assert_eq!(topo.numa_groups, 2, "hierarchical AllReduce needs 2 NUMA groups");
+    if topo.numa_groups != 2 {
+        return Err(CommError::topology(
+            Algo::Hier,
+            format!("needs 2 NUMA groups, topology has {}", topo.numa_groups),
+        ));
+    }
     let s = topo.group_size();
     let group = topo.group_members(h.rank);
     let j = h.rank - group.start; // index within the group
-    let mut bufs = CodecBuffers::default();
 
     // Stage 1 — partial reduce-scatter within the NUMA group.
     for peer_j in 0..s {
         let peer = group.start + peer_j;
         if peer != h.rank {
             let r = chunk_range(data.len(), s, peer_j);
-            h.send(peer, encode(codec, &data[r], &mut bufs));
+            h.send(peer, encode(codec, &data[r], bufs))?;
         }
     }
     let own = chunk_range(data.len(), s, j);
-    let mut acc: Vec<f32> = data[own.clone()].to_vec();
+    acc.clear();
+    acc.extend_from_slice(&data[own.clone()]);
     for peer_j in 0..s {
         let peer = group.start + peer_j;
         if peer != h.rank {
-            let wire = h.recv(peer);
-            Codec::decode_sum_with(&wire, &mut bufs, &mut acc).expect("hier RS decode");
+            let wire = h.recv(peer)?;
+            Codec::decode_sum_with(&wire, bufs, acc).map_err(|e| CommError::decode(peer, e))?;
         }
     }
 
@@ -50,32 +61,39 @@ pub fn allreduce<T: Transport>(h: &RankHandle<T>, data: &mut [f32], codec: &Code
     // the *decoded* images of both partials in group order, so the two
     // groups end bit-identical despite the lossy wire.
     let peer = topo.bridge_peer(h.rank);
-    let wire_mine = encode(codec, &acc, &mut bufs);
-    h.send(peer, wire_mine.clone());
-    let wire_peer = h.recv(peer);
-    let (first, second) =
-        if h.rank < peer { (&wire_mine, &wire_peer) } else { (&wire_peer, &wire_mine) };
+    let wire_mine = encode(codec, acc, bufs);
+    h.send(peer, wire_mine.clone())?;
+    let wire_peer = h.recv(peer)?;
+    // Blame decode failures on the payload's actual source: one of the two
+    // is this rank's own re-encoding, not the bridge peer's.
+    let (first, f_src, second, s_src) = if h.rank < peer {
+        (&wire_mine, h.rank, &wire_peer, peer)
+    } else {
+        (&wire_peer, peer, &wire_mine, h.rank)
+    };
     acc.iter_mut().for_each(|x| *x = 0.0);
-    Codec::decode_sum_with(first, &mut bufs, &mut acc).expect("hier bridge decode");
-    Codec::decode_sum_with(second, &mut bufs, &mut acc).expect("hier bridge decode");
+    Codec::decode_sum_with(first, bufs, acc).map_err(|e| CommError::decode(f_src, e))?;
+    Codec::decode_sum_with(second, bufs, acc).map_err(|e| CommError::decode(s_src, e))?;
 
     // Stage 3 — partial all-gather within the NUMA group.
-    let wire = encode(codec, &acc, &mut bufs);
+    let wire = encode(codec, acc, bufs);
     for peer_j in 0..s {
         let p = group.start + peer_j;
         if p != h.rank {
-            h.send(p, wire.clone());
+            h.send(p, wire.clone())?;
         }
     }
-    Codec::decode_with(&wire, &mut bufs, &mut data[own]).expect("self decode");
+    Codec::decode_with(&wire, bufs, &mut data[own]).map_err(|e| CommError::decode(h.rank, e))?;
     for peer_j in 0..s {
         let p = group.start + peer_j;
         if p != h.rank {
-            let wire = h.recv(p);
+            let wire = h.recv(p)?;
             let r = chunk_range(data.len(), s, peer_j);
-            Codec::decode_with(&wire, &mut bufs, &mut data[r]).expect("hier AG decode");
+            Codec::decode_with(&wire, bufs, &mut data[r])
+                .map_err(|e| CommError::decode(p, e))?;
         }
     }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -126,8 +144,9 @@ mod tests {
         let inputs: Vec<f32> = (0..len).map(|i| i as f32 * 0.5).collect();
         let ir = &inputs;
         let (_, counters) = run_ranks(&topo, |h| {
+            let mut c = Communicator::from_handle(h);
             let mut data = ir.clone();
-            allreduce(&h, &mut data, &Codec::Bf16);
+            allreduce(&mut c, &mut data, &Codec::Bf16).unwrap();
         });
         let m = 2.0 * len as f64;
         let cross = counters.cross_numa_bytes() as f64;
@@ -141,17 +160,23 @@ mod tests {
     fn cross_numa_far_below_twostep() {
         let topo = Topology::new(presets::l40(), 8);
         let len = 4096usize;
-        let run = |f: &(dyn Fn(&RankHandle, &mut [f32], &Codec) + Sync)| {
+        type AlgoFn = fn(
+            &mut Communicator,
+            &mut [f32],
+            &Codec,
+        ) -> Result<(), CommError>;
+        let run = |f: AlgoFn| {
             let inputs: Vec<f32> = (0..len).map(|i| i as f32).collect();
             let ir = &inputs;
             let (_, c) = run_ranks(&topo, |h| {
+                let mut comm = Communicator::from_handle(h);
                 let mut data = ir.clone();
-                f(&h, &mut data, &Codec::Bf16);
+                f(&mut comm, &mut data, &Codec::Bf16).unwrap();
             });
             c.cross_numa_bytes() as f64
         };
-        let two = run(&super::super::twostep::allreduce);
-        let hier = run(&allreduce);
+        let two = run(super::super::twostep::allreduce);
+        let hier = run(allreduce);
         // Table 5: 4M vs M per direction — a 4x saving either way you count.
         assert!((two / hier - 4.0).abs() < 0.2, "two-step {two} vs hier {hier}");
     }
@@ -162,5 +187,16 @@ mod tests {
         let (results, expected) = harness(&topo, 513, &Codec::parse("int8").unwrap(), allreduce);
         let s = sqnr_db(&expected, &results[0]);
         assert!(s > 24.0, "SQNR {s}");
+    }
+
+    #[test]
+    fn flat_topology_is_a_clean_error() {
+        let topo = Topology::new(presets::h800(), 4);
+        let (errs, _) = run_ranks(&topo, |h| {
+            let mut c = Communicator::from_handle(h);
+            let mut data = vec![1.0f32; 64];
+            allreduce(&mut c, &mut data, &Codec::Bf16).unwrap_err().to_string()
+        });
+        assert!(errs[0].contains("NUMA"), "{}", errs[0]);
     }
 }

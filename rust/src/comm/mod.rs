@@ -1,8 +1,14 @@
 //! Quantized collectives over the pluggable transport fabric.
 //!
+//! The front door is [`Communicator`]: one NCCL-style handle per rank that
+//! owns the rank's transport endpoint, the node [`Topology`], the shared
+//! byte counters, and persistent codec scratch, and exposes the collectives
+//! as fallible methods — `allreduce`, `reduce_scatter`, `all_gather`,
+//! `broadcast`, `all2all` — all returning `Result<_, `[`CommError`]`>`.
+//!
 //! Every algorithm moves real encoded payloads ([`crate::quant::Codec`]
 //! wire format) between ranks: quantize → bit-split pack → transfer →
-//! unpack → dequantize → reduce. Each collective is generic over the
+//! unpack → dequantize → reduce. The communicator is generic over the
 //! [`crate::transport::Transport`] backend, so the same code runs over
 //! thread ranks (in-process mpsc mesh, [`fabric::run_ranks`]) and over OS
 //! processes on real sockets (`flashcomm worker`); the results are
@@ -10,39 +16,159 @@
 //! reproduction (numerics, wire format, QDQ placement); the timing half
 //! lives in [`crate::sim`].
 //!
-//! | paper concept                  | implementation            |
-//! |--------------------------------|---------------------------|
-//! | NCCL ring AllReduce            | [`ring::allreduce`]       |
-//! | Flash-Comm V1 two-step         | [`twostep::allreduce`]    |
-//! | hierarchical two-step (Fig. 6) | [`hier::allreduce`]       |
-//! | + pipeline parallelism (Fig. 8)| [`pipeline::allreduce`]   |
-//! | EP dispatch All2All            | [`all2all::all2all`]      |
+//! Which AllReduce algorithm runs is an [`AlgoPolicy`]: pin one with
+//! `Fixed(`[`Algo`]`)`, or let `Auto` consult the calibrated cost model
+//! ([`crate::sim::allreduce_time`]) per call — hierarchical wins above the
+//! crossover payload size on NUMA nodes, the one-shot two-step below it
+//! (see DESIGN.md §7 for the crossover table).
+//!
+//! | paper concept                  | implementation                     |
+//! |--------------------------------|------------------------------------|
+//! | NCCL ring AllReduce            | [`Algo::Ring`]                     |
+//! | Flash-Comm V1 two-step         | [`Algo::TwoStep`]                  |
+//! | hierarchical two-step (Fig. 6) | [`Algo::Hier`]                     |
+//! | + pipeline parallelism (Fig. 8)| [`Algo::HierPipelined`]            |
+//! | EP dispatch All2All            | [`Communicator::all2all`]          |
 
-pub mod all2all;
+pub mod communicator;
+pub mod error;
 pub mod fabric;
-pub mod hier;
-pub mod pipeline;
-pub mod ring;
-pub mod twostep;
 
-use crate::comm::fabric::RankHandle;
+pub(crate) mod all2all;
+pub(crate) mod hier;
+pub(crate) mod pipeline;
+pub(crate) mod ring;
+pub(crate) mod twostep;
+
+use std::str::FromStr;
+
+pub use communicator::{preset_topo, Communicator, LocalGroup};
+pub use error::CommError;
+
 use crate::quant::{Codec, CodecBuffers};
-use crate::sim::Algo;
-use crate::transport::Transport;
+use crate::topo::Topology;
 
-/// Run the `algo`-selected AllReduce in place — the one dispatch point
-/// shared by the trainer and the `worker` CLI.
-pub fn allreduce_with<T: Transport>(
-    algo: Algo,
-    h: &RankHandle<T>,
-    data: &mut [f32],
-    codec: &Codec,
-) {
-    match algo {
-        Algo::Ring => ring::allreduce(h, data, codec),
-        Algo::TwoStep => twostep::allreduce(h, data, codec),
-        Algo::Hier => hier::allreduce(h, data, codec),
-        Algo::HierPipelined => pipeline::allreduce(h, data, codec),
+/// AllReduce algorithm families the paper compares. This is the type's
+/// home; [`crate::sim::volume`] re-exports it for the timing model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Algo {
+    /// NCCL-style ring (reduce-scatter + all-gather around a ring).
+    Ring,
+    /// Flash Communication V1 one-shot two-step (RS + AG, all-to-all style).
+    TwoStep,
+    /// Hierarchical two-step: intra-NUMA RS → cross-NUMA reduce → intra AG.
+    Hier,
+    /// Hierarchical two-step with micro-chunk pipeline parallelism (Fig. 8).
+    HierPipelined,
+}
+
+impl Algo {
+    /// Paper-style display name (table rows).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algo::Ring => "NCCL",
+            Algo::TwoStep => "Two-step",
+            Algo::Hier => "Hierarchical Two-step",
+            Algo::HierPipelined => "Hierarchical Two-step + PP",
+        }
+    }
+
+    /// CLI token (what `--algo` takes; the inverse of [`FromStr`]).
+    pub fn token(&self) -> &'static str {
+        match self {
+            Algo::Ring => "ring",
+            Algo::TwoStep => "twostep",
+            Algo::Hier => "hier",
+            Algo::HierPipelined => "hierpp",
+        }
+    }
+}
+
+impl std::fmt::Display for Algo {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.token())
+    }
+}
+
+impl FromStr for Algo {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<Algo> {
+        Ok(match s.trim().to_ascii_lowercase().as_str() {
+            "ring" | "nccl" => Algo::Ring,
+            "twostep" | "two-step" => Algo::TwoStep,
+            "hier" => Algo::Hier,
+            "hierpp" | "hier-pp" => Algo::HierPipelined,
+            other => anyhow::bail!(
+                "unknown algo '{other}' (expected ring|twostep|hier|hierpp|auto)"
+            ),
+        })
+    }
+}
+
+/// How a [`Communicator`] picks the AllReduce algorithm for a call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AlgoPolicy {
+    /// Always run this algorithm (error if the topology cannot host it).
+    Fixed(Algo),
+    /// Consult the calibrated cost model per call: time every algorithm
+    /// admissible on the topology for this (codec, payload size) and take
+    /// the fastest. Deterministic — a pure function of (topology, codec,
+    /// size). A quantized ring is never admissible (its quantization error
+    /// compounds over N−1 hops; the paper runs the ring in BF16 only), and
+    /// the hierarchical algorithms require a 2-NUMA-group topology.
+    Auto,
+}
+
+impl AlgoPolicy {
+    /// The algorithm this policy runs for `elems` f32 values on `topo`.
+    pub fn resolve(&self, topo: &Topology, codec: &Codec, elems: usize) -> Algo {
+        match *self {
+            AlgoPolicy::Fixed(a) => a,
+            AlgoPolicy::Auto => {
+                let m_bytes = 2.0 * elems as f64; // sim convention: BF16 payload bytes
+                let mut candidates = Vec::with_capacity(4);
+                if matches!(codec, Codec::Bf16) {
+                    candidates.push(Algo::Ring);
+                }
+                candidates.push(Algo::TwoStep);
+                if topo.spec.is_numa() && topo.numa_groups == 2 {
+                    candidates.push(Algo::Hier);
+                    candidates.push(Algo::HierPipelined);
+                }
+                let mut best = candidates[0];
+                let mut best_t = f64::INFINITY;
+                for a in candidates {
+                    let t = crate::sim::allreduce_time(topo, a, codec, m_bytes).total();
+                    if t < best_t {
+                        best_t = t;
+                        best = a;
+                    }
+                }
+                best
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for AlgoPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AlgoPolicy::Fixed(a) => f.write_str(a.token()),
+            AlgoPolicy::Auto => f.write_str("auto"),
+        }
+    }
+}
+
+impl FromStr for AlgoPolicy {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<AlgoPolicy> {
+        if s.trim().eq_ignore_ascii_case("auto") {
+            Ok(AlgoPolicy::Auto)
+        } else {
+            Ok(AlgoPolicy::Fixed(s.parse()?))
+        }
     }
 }
 
@@ -65,9 +191,12 @@ pub(crate) fn encode(codec: &Codec, data: &[f32], bufs: &mut CodecBuffers) -> Ve
 
 #[cfg(test)]
 pub(crate) mod testutil {
-    use crate::comm::fabric::{run_ranks, RankHandle};
+    use crate::comm::error::CommError;
+    use crate::comm::fabric::run_ranks;
+    use crate::comm::Communicator;
     use crate::quant::Codec;
     use crate::topo::Topology;
+    use crate::transport::InProcTransport;
     use crate::util::Prng;
 
     /// Run an allreduce over heavy-tailed per-rank data; return the
@@ -76,7 +205,8 @@ pub(crate) mod testutil {
         topo: &Topology,
         len: usize,
         codec: &Codec,
-        f: impl Fn(&RankHandle, &mut [f32], &Codec) + Sync,
+        f: impl Fn(&mut Communicator<InProcTransport>, &mut [f32], &Codec) -> Result<(), CommError>
+            + Sync,
     ) -> (Vec<Vec<f32>>, Vec<f32>) {
         let n = topo.n_gpus;
         let inputs: Vec<Vec<f32>> = (0..n)
@@ -95,8 +225,9 @@ pub(crate) mod testutil {
         }
         let inputs_ref = &inputs;
         let (results, _) = run_ranks(topo, |h| {
-            let mut data = inputs_ref[h.rank].clone();
-            f(&h, &mut data, codec);
+            let mut comm = Communicator::from_handle(h);
+            let mut data = inputs_ref[comm.rank()].clone();
+            f(&mut comm, &mut data, codec).expect("collective failed");
             data
         });
         (results, expected)
@@ -128,5 +259,28 @@ mod tests {
             let r = chunk_range(100, 8, i);
             assert!(r.len() == 12 || r.len() == 13);
         }
+    }
+
+    #[test]
+    fn algo_parses_and_roundtrips() {
+        for a in [Algo::Ring, Algo::TwoStep, Algo::Hier, Algo::HierPipelined] {
+            assert_eq!(a.token().parse::<Algo>().unwrap(), a);
+        }
+        assert_eq!("NCCL".parse::<Algo>().unwrap(), Algo::Ring);
+        assert_eq!("hier-pp".parse::<Algo>().unwrap(), Algo::HierPipelined);
+        assert!("allgatherify".parse::<Algo>().is_err());
+    }
+
+    #[test]
+    fn policy_parses_auto_and_fixed() {
+        assert_eq!("auto".parse::<AlgoPolicy>().unwrap(), AlgoPolicy::Auto);
+        assert_eq!("AUTO".parse::<AlgoPolicy>().unwrap(), AlgoPolicy::Auto);
+        assert_eq!(
+            "twostep".parse::<AlgoPolicy>().unwrap(),
+            AlgoPolicy::Fixed(Algo::TwoStep)
+        );
+        assert!("fastest".parse::<AlgoPolicy>().is_err());
+        assert_eq!(AlgoPolicy::Auto.to_string(), "auto");
+        assert_eq!(AlgoPolicy::Fixed(Algo::Hier).to_string(), "hier");
     }
 }

@@ -9,121 +9,144 @@
 //! establishes is *functional equivalence*: the chunked, reordered schedule
 //! produces exactly the same bytes and numerics as the serial execution.
 
-use super::{chunk_range, encode, hier};
-use crate::comm::fabric::RankHandle;
-use crate::quant::{Codec, CodecBuffers};
+use super::{chunk_range, communicator::Communicator, encode, error::CommError, hier, Algo};
+use crate::quant::Codec;
 use crate::transport::Transport;
 
 /// Default micro-chunk count (the sim's Fig. 8 sweep peaks around 8).
 pub const DEFAULT_CHUNKS: usize = 8;
 
 /// In-place pipelined hierarchical AllReduce with `chunks` micro-chunks.
-pub fn allreduce_chunked<T: Transport>(
-    h: &RankHandle<T>,
+pub(crate) fn allreduce_chunked<T: Transport>(
+    c: &mut Communicator<T>,
     data: &mut [f32],
     codec: &Codec,
     chunks: usize,
-) {
+) -> Result<(), CommError> {
+    let Communicator { handle: h, bufs, reduced, .. } = c;
     let topo = h.topo().clone();
-    assert_eq!(topo.numa_groups, 2, "pipelined hier needs 2 NUMA groups");
+    if topo.numa_groups != 2 {
+        return Err(CommError::topology(
+            Algo::HierPipelined,
+            format!("needs 2 NUMA groups, topology has {}", topo.numa_groups),
+        ));
+    }
     let s = topo.group_size();
     let group = topo.group_members(h.rank);
     let j = h.rank - group.start;
-    let mut bufs = CodecBuffers::default();
     let k = chunks.max(1);
 
     // Phase A: issue ALL intra-RS sends for every micro-chunk up front —
     // this is what fills the PCIe bus while the bridge works (Fig. 8).
-    for c in 0..k {
-        let mr = chunk_range(data.len(), k, c);
+    for chunk in 0..k {
+        let mr = chunk_range(data.len(), k, chunk);
         let micro = &data[mr.clone()];
         for peer_j in 0..s {
             let peer = group.start + peer_j;
             if peer != h.rank {
                 let r = chunk_range(micro.len(), s, peer_j);
-                h.send(peer, encode(codec, &micro[r], &mut bufs));
+                h.send(peer, encode(codec, &micro[r], bufs))?;
             }
         }
     }
 
     // Phase B: per micro-chunk: reduce own sub-chunk, run the bridge
     // exchange, then all-gather — chunk c's bridge work happens while
-    // chunk c+1's RS payloads are already in flight.
-    let mut reduced: Vec<Vec<f32>> = Vec::with_capacity(k);
-    for c in 0..k {
-        let mr = chunk_range(data.len(), k, c);
+    // chunk c+1's RS payloads are already in flight. The per-chunk
+    // accumulators live in the communicator and are reused across calls.
+    if reduced.len() < k {
+        reduced.resize_with(k, Vec::new);
+    }
+    for chunk in 0..k {
+        let mr = chunk_range(data.len(), k, chunk);
         let micro = &data[mr.clone()];
         let own = chunk_range(micro.len(), s, j);
-        let mut acc: Vec<f32> = micro[own].to_vec();
+        let acc = &mut reduced[chunk];
+        acc.clear();
+        acc.extend_from_slice(&micro[own]);
         for peer_j in 0..s {
             let peer = group.start + peer_j;
             if peer != h.rank {
-                let wire = h.recv(peer);
-                Codec::decode_sum_with(&wire, &mut bufs, &mut acc).expect("pp RS decode");
+                let wire = h.recv(peer)?;
+                Codec::decode_sum_with(&wire, bufs, acc)
+                    .map_err(|e| CommError::decode(peer, e))?;
             }
         }
         // Bridge exchange for this micro-chunk (symmetric QDQ in group
         // order — see hier.rs — so both NUMA groups stay bit-identical).
         let peer = topo.bridge_peer(h.rank);
-        let wire_mine = encode(codec, &acc, &mut bufs);
-        h.send(peer, wire_mine.clone());
-        let wire_peer = h.recv(peer);
-        let (first, second) =
-            if h.rank < peer { (&wire_mine, &wire_peer) } else { (&wire_peer, &wire_mine) };
+        let wire_mine = encode(codec, acc, bufs);
+        h.send(peer, wire_mine.clone())?;
+        let wire_peer = h.recv(peer)?;
+        // Decode failures name the payload's actual source (see hier.rs).
+        let (first, f_src, second, s_src) = if h.rank < peer {
+            (&wire_mine, h.rank, &wire_peer, peer)
+        } else {
+            (&wire_peer, peer, &wire_mine, h.rank)
+        };
         acc.iter_mut().for_each(|x| *x = 0.0);
-        Codec::decode_sum_with(first, &mut bufs, &mut acc).expect("pp bridge decode");
-        Codec::decode_sum_with(second, &mut bufs, &mut acc).expect("pp bridge decode");
-        reduced.push(acc);
+        Codec::decode_sum_with(first, bufs, acc).map_err(|e| CommError::decode(f_src, e))?;
+        Codec::decode_sum_with(second, bufs, acc)
+            .map_err(|e| CommError::decode(s_src, e))?;
     }
 
     // Phase C: all-gather every micro-chunk's reduced sub-chunk.
-    for (c, acc) in reduced.iter().enumerate() {
-        let wire = encode(codec, acc, &mut bufs);
+    for (chunk, acc) in reduced.iter().take(k).enumerate() {
+        let wire = encode(codec, acc, bufs);
         for peer_j in 0..s {
             let p = group.start + peer_j;
             if p != h.rank {
-                h.send(p, wire.clone());
+                h.send(p, wire.clone())?;
             }
         }
-        let mr = chunk_range(data.len(), k, c);
+        let mr = chunk_range(data.len(), k, chunk);
         let own = chunk_range(mr.len(), s, j);
         let own_abs = mr.start + own.start..mr.start + own.end;
-        Codec::decode_with(&wire, &mut bufs, &mut data[own_abs]).expect("pp self decode");
+        Codec::decode_with(&wire, bufs, &mut data[own_abs])
+            .map_err(|e| CommError::decode(h.rank, e))?;
     }
-    for c in 0..k {
-        let mr = chunk_range(data.len(), k, c);
+    for chunk in 0..k {
+        let mr = chunk_range(data.len(), k, chunk);
         for peer_j in 0..s {
             let p = group.start + peer_j;
             if p != h.rank {
-                let wire = h.recv(p);
+                let wire = h.recv(p)?;
                 let r = chunk_range(mr.len(), s, peer_j);
                 let abs = mr.start + r.start..mr.start + r.end;
-                Codec::decode_with(&wire, &mut bufs, &mut data[abs]).expect("pp AG decode");
+                Codec::decode_with(&wire, bufs, &mut data[abs])
+                    .map_err(|e| CommError::decode(p, e))?;
             }
         }
     }
+    Ok(())
 }
 
 /// Pipelined hierarchical AllReduce with the default micro-chunk count.
-pub fn allreduce<T: Transport>(h: &RankHandle<T>, data: &mut [f32], codec: &Codec) {
-    allreduce_chunked(h, data, codec, DEFAULT_CHUNKS);
+pub(crate) fn allreduce<T: Transport>(
+    c: &mut Communicator<T>,
+    data: &mut [f32],
+    codec: &Codec,
+) -> Result<(), CommError> {
+    allreduce_chunked(c, data, codec, DEFAULT_CHUNKS)
 }
 
 /// Reference: serial hierarchical execution of the same chunking (used by
 /// the equivalence test and the Fig. 8 "serial" bar).
-pub fn allreduce_serial_chunked<T: Transport>(
-    h: &RankHandle<T>,
+#[cfg(test)]
+pub(crate) fn allreduce_serial_chunked<T: Transport>(
+    c: &mut Communicator<T>,
     data: &mut [f32],
     codec: &Codec,
     chunks: usize,
-) {
+) -> Result<(), CommError> {
     let k = chunks.max(1);
-    for c in 0..k {
-        let mr = chunk_range(data.len(), k, c);
+    for chunk in 0..k {
+        let mr = chunk_range(data.len(), k, chunk);
         let mut micro = data[mr.clone()].to_vec();
-        hier::allreduce(h, &mut micro, codec);
+        hier::allreduce(c, &mut micro, codec)?;
         data[mr].copy_from_slice(&micro);
     }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -141,9 +164,9 @@ mod tests {
         for spec in ["bf16", "int8", "int4@32", "int2-sr@32!"] {
             let codec = Codec::parse(spec).unwrap();
             let (pp, _) =
-                harness(&topo, 4096, &codec, |h, d, c| allreduce_chunked(h, d, c, 8));
+                harness(&topo, 4096, &codec, |c, d, k| allreduce_chunked(c, d, k, 8));
             let (serial, _) =
-                harness(&topo, 4096, &codec, |h, d, c| allreduce_serial_chunked(h, d, c, 8));
+                harness(&topo, 4096, &codec, |c, d, k| allreduce_serial_chunked(c, d, k, 8));
             assert_eq!(pp[0], serial[0], "{spec}: pipelined != serial");
         }
     }
@@ -154,7 +177,7 @@ mod tests {
         let codec = Codec::parse("int5").unwrap();
         for k in [1usize, 2, 3, 8, 16] {
             let (results, expected) =
-                harness(&topo, 2500, &codec, |h, d, c| allreduce_chunked(h, d, c, k));
+                harness(&topo, 2500, &codec, |c, d, cd| allreduce_chunked(c, d, cd, k));
             for r in &results {
                 assert_eq!(r, &results[0], "k={k}");
             }
@@ -174,8 +197,9 @@ mod tests {
             let inputs: Vec<f32> = (0..len).map(|i| (i as f32).sin()).collect();
             let ir = &inputs;
             let (_, c) = crate::comm::fabric::run_ranks(&topo, |h| {
+                let mut comm = Communicator::from_handle(h);
                 let mut d = ir.clone();
-                allreduce_chunked(&h, &mut d, &codec, k);
+                allreduce_chunked(&mut comm, &mut d, &codec, k).unwrap();
             });
             c.total_bytes()
         };

@@ -1,28 +1,31 @@
 //! Ring AllReduce — the NCCL baseline.
 //!
 //! Classic 2(N−1)-step ring: N−1 reduce-scatter hops, N−1 all-gather hops.
-//! The paper runs this in BF16 only; passing a quantizing codec is kept as
-//! an *ablation* that demonstrates why the paper's two-step exists — each
+//! The paper runs this in BF16 only; a quantizing codec is kept as an
+//! *ablation* that demonstrates why the paper's two-step exists — each
 //! hop re-quantizes the partial sum, so quantization error compounds N−1
-//! times (see `quantized_ring_error_compounds` below).
+//! times (see `quantized_ring_error_compounds` below). For the same reason
+//! `AlgoPolicy::Auto` never selects the ring for a lossy codec.
 
-use super::{chunk_range, encode};
-use crate::comm::fabric::RankHandle;
-use crate::quant::{Codec, CodecBuffers};
+use super::{chunk_range, communicator::Communicator, encode, error::CommError};
+use crate::quant::Codec;
 use crate::transport::Transport;
 
 /// In-place ring AllReduce of `data` across all ranks.
 ///
 /// Every rank ends with (a wire-precision image of) the element-wise sum.
-pub fn allreduce<T: Transport>(h: &RankHandle<T>, data: &mut [f32], codec: &Codec) {
+pub(crate) fn allreduce<T: Transport>(
+    c: &mut Communicator<T>,
+    data: &mut [f32],
+    codec: &Codec,
+) -> Result<(), CommError> {
+    let Communicator { handle: h, bufs, scratch, .. } = c;
     let n = h.n;
     if n == 1 {
-        return;
+        return Ok(());
     }
-    let mut bufs = CodecBuffers::default();
     let next = (h.rank + 1) % n;
     let prev = (h.rank + n - 1) % n;
-    let mut scratch = vec![0f32; chunk_range(data.len(), n, 0).len()];
 
     // Reduce-scatter: after N-1 hops, rank owns the full sum of chunk
     // (rank + 1) % n.
@@ -30,13 +33,13 @@ pub fn allreduce<T: Transport>(h: &RankHandle<T>, data: &mut [f32], codec: &Code
         let send_c = (h.rank + n - step) % n;
         let recv_c = (h.rank + n - step - 1) % n;
         let sr = chunk_range(data.len(), n, send_c);
-        h.send(next, encode(codec, &data[sr], &mut bufs));
-        let wire = h.recv(prev);
+        h.send(next, encode(codec, &data[sr], bufs))?;
+        let wire = h.recv(prev)?;
         let rr = chunk_range(data.len(), n, recv_c);
         scratch.resize(rr.len(), 0.0);
         scratch.copy_from_slice(&data[rr.clone()]);
-        Codec::decode_sum_with(&wire, &mut bufs, &mut scratch).expect("ring RS decode");
-        data[rr].copy_from_slice(&scratch);
+        Codec::decode_sum_with(&wire, bufs, scratch).map_err(|e| CommError::decode(prev, e))?;
+        data[rr].copy_from_slice(scratch);
     }
 
     // All-gather: circulate the reduced chunks. The owned chunk also takes
@@ -44,22 +47,23 @@ pub fn allreduce<T: Transport>(h: &RankHandle<T>, data: &mut [f32], codec: &Code
     let own = (h.rank + 1) % n;
     {
         let or = chunk_range(data.len(), n, own);
-        let wire = encode(codec, &data[or.clone()], &mut bufs);
-        let mut tmp = vec![0f32; or.len()];
-        Codec::decode_with(&wire, &mut bufs, &mut tmp).expect("self QDQ");
-        data[or].copy_from_slice(&tmp);
+        let wire = encode(codec, &data[or.clone()], bufs);
+        scratch.resize(or.len(), 0.0);
+        Codec::decode_with(&wire, bufs, scratch).map_err(|e| CommError::decode(h.rank, e))?;
+        data[or].copy_from_slice(scratch);
     }
     for step in 0..n - 1 {
         let send_c = (h.rank + 1 + n - step) % n;
         let recv_c = (h.rank + n - step) % n;
         let sr = chunk_range(data.len(), n, send_c);
-        h.send(next, encode(codec, &data[sr], &mut bufs));
-        let wire = h.recv(prev);
+        h.send(next, encode(codec, &data[sr], bufs))?;
+        let wire = h.recv(prev)?;
         let rr = chunk_range(data.len(), n, recv_c);
         scratch.resize(rr.len(), 0.0);
-        Codec::decode_with(&wire, &mut bufs, &mut scratch).expect("ring AG decode");
-        data[rr].copy_from_slice(&scratch);
+        Codec::decode_with(&wire, bufs, scratch).map_err(|e| CommError::decode(prev, e))?;
+        data[rr].copy_from_slice(scratch);
     }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -117,8 +121,9 @@ mod tests {
         let inputs: Vec<f32> = vec![1.0; len];
         let ir = &inputs;
         let (_, counters) = run_ranks(&topo, |h| {
+            let mut c = Communicator::from_handle(h);
             let mut data = ir.clone();
-            allreduce(&h, &mut data, &Codec::Bf16);
+            allreduce(&mut c, &mut data, &Codec::Bf16).unwrap();
         });
         let total = counters.total_bytes() as f64;
         // 8 ranks each send 14 chunks of ~M/8 wire bytes.

@@ -1,56 +1,121 @@
-//! Flash Communication V1 two-step AllReduce with fused quantization.
+//! One-shot collectives: Flash Communication V1 two-step AllReduce with
+//! fused quantization, and the primitives it composes from.
 //!
-//! One-shot reduce-scatter (every rank sends chunk *c* directly to rank
-//! *c*), local dequantize-reduce, then one-shot all-gather of the reduced
-//! chunks. Exactly two QDQ rounds regardless of N — the property that makes
-//! aggressive quantization usable at all (vs. the ring's N−1 compounding
-//! rounds).
+//! The two-step is literally [`reduce_scatter`] ∘ [`all_gather`]: a
+//! one-shot reduce-scatter (every rank sends chunk *c* directly to rank
+//! *c*), local dequantize-reduce, then a one-shot all-gather of the
+//! reduced chunks. Exactly two QDQ rounds regardless of N — the property
+//! that makes aggressive quantization usable at all (vs. the ring's N−1
+//! compounding rounds). [`broadcast`] is the root-sourced one-shot,
+//! exposed for weight/state distribution through the same wire codec.
 
-use super::{chunk_range, encode};
-use crate::comm::fabric::RankHandle;
-use crate::quant::{Codec, CodecBuffers};
+use super::{chunk_range, communicator::Communicator, encode, error::CommError};
+use crate::quant::Codec;
 use crate::transport::Transport;
 
 /// In-place two-step AllReduce of `data` across all ranks.
-pub fn allreduce<T: Transport>(h: &RankHandle<T>, data: &mut [f32], codec: &Codec) {
-    let n = h.n;
-    if n == 1 {
-        return;
-    }
-    let mut bufs = CodecBuffers::default();
+pub(crate) fn allreduce<T: Transport>(
+    c: &mut Communicator<T>,
+    data: &mut [f32],
+    codec: &Codec,
+) -> Result<(), CommError> {
+    reduce_scatter(c, data, codec)?;
+    all_gather(c, data, codec)
+}
 
-    // Step 1 — one-shot reduce-scatter: chunk c goes to rank c.
+/// One-shot reduce-scatter: chunk `r` of `data` goes to rank `r`; this
+/// rank's chunk (the returned range) ends holding the reduced sum — own
+/// contribution at full precision plus the decoded wire images of every
+/// peer's, accumulated in rank order. The rest of `data` is untouched.
+pub(crate) fn reduce_scatter<T: Transport>(
+    c: &mut Communicator<T>,
+    data: &mut [f32],
+    codec: &Codec,
+) -> Result<std::ops::Range<usize>, CommError> {
+    let Communicator { handle: h, bufs, acc, .. } = c;
+    let n = h.n;
+    let own = chunk_range(data.len(), n, h.rank);
+    if n == 1 {
+        return Ok(own);
+    }
     for dst in 0..n {
         if dst != h.rank {
             let r = chunk_range(data.len(), n, dst);
-            h.send(dst, encode(codec, &data[r], &mut bufs));
+            h.send(dst, encode(codec, &data[r], bufs))?;
         }
+    }
+    acc.clear();
+    acc.extend_from_slice(&data[own.clone()]);
+    for src in 0..n {
+        if src != h.rank {
+            let wire = h.recv(src)?;
+            Codec::decode_sum_with(&wire, bufs, acc).map_err(|e| CommError::decode(src, e))?;
+        }
+    }
+    data[own.clone()].copy_from_slice(acc);
+    Ok(own)
+}
+
+/// One-shot all-gather of every rank's owned chunk. The own chunk takes
+/// the same QDQ as the copies on the wire so all ranks end bit-identical.
+pub(crate) fn all_gather<T: Transport>(
+    c: &mut Communicator<T>,
+    data: &mut [f32],
+    codec: &Codec,
+) -> Result<(), CommError> {
+    let Communicator { handle: h, bufs, .. } = c;
+    let n = h.n;
+    if n == 1 {
+        return Ok(());
     }
     let own = chunk_range(data.len(), n, h.rank);
-    let mut acc: Vec<f32> = data[own.clone()].to_vec();
-    for src in 0..n {
-        if src != h.rank {
-            let wire = h.recv(src);
-            Codec::decode_sum_with(&wire, &mut bufs, &mut acc).expect("RS decode");
-        }
-    }
-
-    // Step 2 — one-shot all-gather of the reduced chunk (own chunk takes
-    // the same QDQ so all ranks end bit-identical).
-    let wire = encode(codec, &acc, &mut bufs);
+    let wire = encode(codec, &data[own.clone()], bufs);
     for dst in 0..n {
         if dst != h.rank {
-            h.send(dst, wire.clone());
+            h.send(dst, wire.clone())?;
         }
     }
-    Codec::decode_with(&wire, &mut bufs, &mut data[own]).expect("self decode");
+    Codec::decode_with(&wire, bufs, &mut data[own]).map_err(|e| CommError::decode(h.rank, e))?;
     for src in 0..n {
         if src != h.rank {
-            let wire = h.recv(src);
+            let wire = h.recv(src)?;
             let r = chunk_range(data.len(), n, src);
-            Codec::decode_with(&wire, &mut bufs, &mut data[r]).expect("AG decode");
+            Codec::decode_with(&wire, bufs, &mut data[r])
+                .map_err(|e| CommError::decode(src, e))?;
         }
     }
+    Ok(())
+}
+
+/// Broadcast `root`'s `data` through the wire codec. Every rank — the root
+/// included, via a self-QDQ — ends with the same wire-precision image.
+pub(crate) fn broadcast<T: Transport>(
+    c: &mut Communicator<T>,
+    data: &mut [f32],
+    root: usize,
+    codec: &Codec,
+) -> Result<(), CommError> {
+    let Communicator { handle: h, bufs, .. } = c;
+    let n = h.n;
+    if root >= n {
+        return Err(CommError::shape(format!("broadcast root {root} out of range 0..{n}")));
+    }
+    if n == 1 {
+        return Ok(());
+    }
+    if h.rank == root {
+        let wire = encode(codec, data, bufs);
+        for dst in 0..n {
+            if dst != root {
+                h.send(dst, wire.clone())?;
+            }
+        }
+        Codec::decode_with(&wire, bufs, data).map_err(|e| CommError::decode(root, e))?;
+    } else {
+        let wire = h.recv(root)?;
+        Codec::decode_with(&wire, bufs, data).map_err(|e| CommError::decode(root, e))?;
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -105,8 +170,9 @@ mod tests {
         let inputs: Vec<f32> = (0..len).map(|i| i as f32).collect();
         let ir = &inputs;
         let (_, counters) = run_ranks(&topo, |h| {
+            let mut c = Communicator::from_handle(h);
             let mut data = ir.clone();
-            allreduce(&h, &mut data, &Codec::Bf16);
+            allreduce(&mut c, &mut data, &Codec::Bf16).unwrap();
         });
         let m = 2.0 * len as f64; // bf16 bytes per GPU (headers add ~0.4%)
         let total = counters.total_bytes() as f64;
@@ -123,8 +189,9 @@ mod tests {
             let inputs: Vec<f32> = (0..len).map(|i| (i % 97) as f32).collect();
             let ir = &inputs;
             let (_, counters) = run_ranks(&topo, |h| {
+                let mut c = Communicator::from_handle(h);
                 let mut data = ir.clone();
-                allreduce(&h, &mut data, codec);
+                allreduce(&mut c, &mut data, codec).unwrap();
             });
             counters.total_bytes() as f64
         };
@@ -135,5 +202,29 @@ mod tests {
         assert!((0.28..0.40).contains(&(int5 / bf)), "int5/bf16 {}", int5 / bf);
         assert!((0.18..0.33).contains(&(int2 / bf)), "int2sr/bf16 {}", int2 / bf);
         assert!(int2 < int5);
+    }
+
+    #[test]
+    fn reduce_scatter_leaves_other_chunks_untouched() {
+        let topo = Topology::new(presets::h800(), 4);
+        let len = 100usize;
+        let inputs: Vec<Vec<f32>> = (0..4).map(|r| vec![r as f32 + 1.0; len]).collect();
+        let ir = &inputs;
+        let (results, _) = run_ranks(&topo, |h| {
+            let mut c = Communicator::from_handle(h);
+            let mut data = ir[c.rank()].clone();
+            let own = reduce_scatter(&mut c, &mut data, &Codec::Bf16).unwrap();
+            (own, data)
+        });
+        for (r, (own, data)) in results.iter().enumerate() {
+            assert_eq!(*own, chunk_range(len, 4, r));
+            for (i, &x) in data.iter().enumerate() {
+                if own.contains(&i) {
+                    assert!((x - 10.0).abs() < 0.1, "rank {r} elem {i}: reduced {x}");
+                } else {
+                    assert_eq!(x, r as f32 + 1.0, "rank {r} elem {i}: must stay local");
+                }
+            }
+        }
     }
 }

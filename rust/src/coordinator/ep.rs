@@ -8,11 +8,15 @@
 //! the wire codec* (DeepSeek-V3 quantizes dispatch only), runs the expert
 //! HLO on the padded batch, and combines at BF16.
 //!
-//! Attention and the dense-FFN layers reuse the TP boundary machinery.
+//! Attention and the dense-FFN layers reuse the TP boundary machinery —
+//! the same [`LocalGroup`] of Communicators the TP engine drives, so the
+//! boundary QDQ chain has exactly one implementation; the dispatch wire
+//! applies the codec's canonical QDQ transform to the routed token batch.
 
 use anyhow::{ensure, Result};
 
-use crate::coordinator::tp::{allreduce_partials, CollectiveStyle};
+use crate::comm::{Algo, AlgoPolicy, LocalGroup};
+use crate::coordinator::tp::tp_group;
 use crate::model::{shard_param, Batch, ModelConfig, Weights};
 use crate::quant::{Codec, CodecBuffers};
 use crate::runtime::{tokens_literal, Runtime, Tensor};
@@ -25,6 +29,9 @@ pub struct MoeEngine {
     pub ar_codec: Codec,
     /// Wire codec for the MoE dispatch volume.
     pub dispatch_codec: Codec,
+    /// TP rank group for the boundary AllReduce (two-step policy; `None`
+    /// when `tp == 1` and nothing crosses a wire).
+    group: Option<LocalGroup>,
     embed: xla::Literal,
     head: Vec<xla::Literal>,
     attn: Vec<Vec<Vec<xla::Literal>>>,  // [layer][shard]
@@ -48,6 +55,7 @@ impl MoeEngine {
     ) -> Result<MoeEngine> {
         ensure!(cfg.n_experts > 0, "config {} has no experts", cfg.name);
         let tp = cfg.tp;
+        let group = tp_group(tp, AlgoPolicy::Fixed(Algo::TwoStep))?;
         let embed = weights.get("embed")?.to_literal()?;
         let head = vec![
             weights.get("lnf_g")?.to_literal()?,
@@ -109,6 +117,7 @@ impl MoeEngine {
             cfg,
             ar_codec,
             dispatch_codec,
+            group,
             embed,
             head,
             attn,
@@ -132,12 +141,13 @@ impl MoeEngine {
             let out = self.rt.execute_t(piece, &args)?;
             partials.push(out.into_iter().next().unwrap().data);
         }
-        let reduced = allreduce_partials(
-            &mut partials,
-            &self.ar_codec,
-            CollectiveStyle::TwoStep,
-            &mut self.bufs,
-        );
+        let reduced = match &mut self.group {
+            Some(group) => {
+                group.allreduce(&mut partials, &self.ar_codec)?;
+                std::mem::take(&mut partials[0])
+            }
+            None => partials.pop().unwrap(),
+        };
         let mut out = h.clone();
         for (o, r) in out.data.iter_mut().zip(&reduced) {
             *o += *r;

@@ -2,6 +2,10 @@
 //! needs — a TP inference engine with quantized AllReduce between HLO
 //! pieces, a DP trainer with quantized gradient collectives, an EP
 //! dispatcher with quantized All2All dispatch, and the TTFT model.
+//!
+//! Every engine's collective traffic goes through the one
+//! [`crate::comm::Communicator`] implementation (via
+//! [`crate::comm::LocalGroup`]) — there is no engine-private QDQ chain.
 
 pub mod ep;
 pub mod pretrain;
@@ -10,5 +14,5 @@ pub mod trainer;
 pub mod ttft;
 
 pub use ep::MoeEngine;
-pub use tp::{allreduce_partials, CollectiveStyle, TpEngine};
+pub use tp::TpEngine;
 pub use trainer::{StepRecord, TrainOptions, Trainer};

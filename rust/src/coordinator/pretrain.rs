@@ -10,11 +10,11 @@ use std::path::PathBuf;
 
 use anyhow::{Context, Result};
 
+use crate::comm::{Algo, AlgoPolicy};
 use crate::coordinator::trainer::{TrainOptions, Trainer};
 use crate::model::{Corpus, ModelConfig, Sampler, Weights};
 use crate::quant::Codec;
 use crate::runtime::{default_artifacts_dir, Runtime};
-use crate::sim::Algo;
 
 /// Directory for rust-side checkpoints (created on demand).
 pub fn checkpoints_dir() -> PathBuf {
@@ -44,7 +44,7 @@ pub fn ensure_trained(config: &str, steps: usize) -> Result<(ModelConfig, Weight
         steps,
         dp: 2,
         codec: Codec::Bf16,
-        algo: Algo::TwoStep,
+        algo: AlgoPolicy::Fixed(Algo::TwoStep),
         log_every: 20,
         ..Default::default()
     };

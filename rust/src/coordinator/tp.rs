@@ -5,70 +5,23 @@
 //! the real wire transformation (quantize → sum → re-quantize), applied to
 //! the actual activation bytes. Residual adds happen host-side in rust,
 //! exactly where a serving engine would fuse them.
+//!
+//! The AllReduce is the *same* [`Communicator`](crate::comm::Communicator)
+//! code path the fabric collectives use: the engine owns a
+//! [`LocalGroup`] — one communicator per TP shard over an in-process
+//! mesh — so there is exactly one QDQ-chain implementation in the system
+//! (SDP4Bit's lesson: QDQ placement is where accuracy is won or lost).
+//! Which algorithm chains the QDQs is an [`AlgoPolicy`]: fixed, or `Auto`
+//! against the cost model. With `tp = 1` nothing crosses a wire and the
+//! boundary is a plain residual add, matching the collectives' `n == 1`
+//! no-op convention.
 
 use anyhow::{ensure, Result};
 
+use crate::comm::{AlgoPolicy, LocalGroup};
 use crate::model::{shard_param, Batch, ModelConfig, Weights};
-use crate::quant::{Codec, CodecBuffers};
+use crate::quant::Codec;
 use crate::runtime::{tokens_literal, Runtime, Tensor};
-
-/// How the AllReduce chains its QDQ steps (the accuracy-relevant part of
-/// the collective choice; timing lives in `sim`).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum CollectiveStyle {
-    /// Flash-Comm two-step: Q each partial, sum, Q the result (2 QDQs).
-    TwoStep,
-    /// Hierarchical: Q partials per NUMA group, Q the group sums across the
-    /// bridge, Q the total for the all-gather (3 QDQs).
-    Hier,
-}
-
-/// Apply the collective's QDQ chain to per-shard partial sums, in place on
-/// the first buffer. Mirrors `comm::twostep` / `comm::hier` numerics.
-pub fn allreduce_partials(
-    partials: &mut [Vec<f32>],
-    codec: &Codec,
-    style: CollectiveStyle,
-    bufs: &mut CodecBuffers,
-) -> Vec<f32> {
-    let n = partials.len();
-    let len = partials[0].len();
-    match style {
-        CollectiveStyle::TwoStep => {
-            let mut acc = vec![0f32; len];
-            for p in partials.iter_mut() {
-                codec.qdq(p, bufs);
-                for (a, x) in acc.iter_mut().zip(p.iter()) {
-                    *a += *x;
-                }
-            }
-            codec.qdq(&mut acc, bufs);
-            acc
-        }
-        CollectiveStyle::Hier => {
-            let half = n.div_ceil(2);
-            let mut total = vec![0f32; len];
-            for group in [0..half, half..n] {
-                if group.is_empty() {
-                    continue;
-                }
-                let mut acc = vec![0f32; len];
-                for p in partials[group].iter_mut() {
-                    codec.qdq(p, bufs);
-                    for (a, x) in acc.iter_mut().zip(p.iter()) {
-                        *a += *x;
-                    }
-                }
-                codec.qdq(&mut acc, bufs); // bridge hop
-                for (t, x) in total.iter_mut().zip(&acc) {
-                    *t += *x;
-                }
-            }
-            codec.qdq(&mut total, bufs); // all-gather hop
-            total
-        }
-    }
-}
 
 /// Per-layer, per-shard weight literals, prepared once.
 struct LayerShards {
@@ -78,16 +31,23 @@ struct LayerShards {
     mlp: Vec<Vec<xla::Literal>>,
 }
 
-/// The TP engine: owns the runtime and the sharded weights.
+/// Build the TP rank group for a policy, or `None` for the wire-free
+/// single-shard case.
+pub(crate) fn tp_group(tp: usize, policy: AlgoPolicy) -> Result<Option<LocalGroup>> {
+    Ok(if tp >= 2 { Some(LocalGroup::for_policy(tp, policy)?) } else { None })
+}
+
+/// The TP engine: owns the runtime, the sharded weights, and the rank
+/// group whose Communicators carry every boundary AllReduce.
 pub struct TpEngine {
     pub rt: Runtime,
     pub cfg: ModelConfig,
     pub codec: Codec,
-    pub style: CollectiveStyle,
+    policy: AlgoPolicy,
+    group: Option<LocalGroup>,
     embed: xla::Literal,
     head: Vec<xla::Literal>, // lnf_g, lnf_b, embed (tied)
     layers: Vec<LayerShards>,
-    bufs: CodecBuffers,
     /// If set, `last_partial` captures the raw (pre-QDQ) partial sum of
     /// this layer's MLP AllReduce — the Fig. 4 distribution.
     pub capture_layer: Option<usize>,
@@ -101,10 +61,11 @@ impl TpEngine {
         cfg: ModelConfig,
         weights: &Weights,
         codec: Codec,
-        style: CollectiveStyle,
+        policy: AlgoPolicy,
     ) -> Result<TpEngine> {
         ensure!(cfg.n_heads % cfg.tp == 0, "heads {} % tp {}", cfg.n_heads, cfg.tp);
         let tp = cfg.tp;
+        let group = tp_group(tp, policy)?;
         let embed = weights.get("embed")?.to_literal()?;
         let head = vec![
             weights.get("lnf_g")?.to_literal()?,
@@ -146,18 +107,18 @@ impl TpEngine {
             rt,
             cfg,
             codec,
-            style,
+            policy,
+            group,
             embed,
             head,
             layers,
-            bufs: CodecBuffers::default(),
             capture_layer: None,
             last_partial: Vec::new(),
         })
     }
 
-    /// Execute one boundary: run `piece` per shard, AllReduce the partials,
-    /// residual-add into `h`.
+    /// Execute one boundary: run `piece` per shard, AllReduce the partials
+    /// through the Communicator group, residual-add into `h`.
     fn boundary(
         &mut self,
         piece: &str,
@@ -189,7 +150,13 @@ impl TpEngine {
             }
             self.last_partial = raw;
         }
-        let reduced = allreduce_partials(&mut partials, &self.codec, self.style, &mut self.bufs);
+        let reduced = match &mut self.group {
+            Some(group) => {
+                group.allreduce(&mut partials, &self.codec)?;
+                std::mem::take(&mut partials[0])
+            }
+            None => partials.pop().unwrap(),
+        };
         let mut out = h.clone();
         for (o, r) in out.data.iter_mut().zip(&reduced) {
             *o += *r;
@@ -251,10 +218,22 @@ impl TpEngine {
         Ok((sum / count as f64).exp())
     }
 
-    /// Swap the codec (for sweep harnesses) without resharding weights.
-    pub fn set_codec(&mut self, codec: Codec, style: CollectiveStyle) {
+    /// Swap the codec / algorithm policy (for sweep harnesses) without
+    /// resharding weights. Rebuilds the rank group only when the policy's
+    /// preset topology changes; on a failed rebuild the engine keeps its
+    /// previous (consistent) policy + group.
+    pub fn set_codec(&mut self, codec: Codec, policy: AlgoPolicy) -> Result<()> {
         self.codec = codec;
-        self.style = style;
+        if policy != self.policy {
+            self.group = tp_group(self.cfg.tp, policy)?;
+            self.policy = policy;
+        }
+        Ok(())
+    }
+
+    /// The active algorithm policy.
+    pub fn policy(&self) -> AlgoPolicy {
+        self.policy
     }
 
     /// The head-piece weight literals (lnf_g, lnf_b, tied embedding) — used
@@ -267,39 +246,130 @@ impl TpEngine {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::comm::Algo;
+    use crate::quant::CodecBuffers;
+    use crate::util::stats::sqnr_db;
 
-    #[test]
-    fn allreduce_partials_twostep_matches_manual() {
+    /// The QDQ chain `coordinator::tp::allreduce_partials` applied before
+    /// the Communicator unification — kept verbatim as the golden
+    /// reference: QDQ every partial, sum, QDQ the result (two-step), with
+    /// a per-half bridge QDQ for the hierarchical chain.
+    fn prerefactor_chain(partials: &[Vec<f32>], codec: &Codec, hier: bool) -> Vec<f32> {
+        let mut bufs = CodecBuffers::default();
+        let n = partials.len();
+        let len = partials[0].len();
+        if !hier {
+            let mut acc = vec![0f32; len];
+            for p in partials {
+                let mut p = p.clone();
+                codec.qdq(&mut p, &mut bufs);
+                for (a, x) in acc.iter_mut().zip(&p) {
+                    *a += *x;
+                }
+            }
+            codec.qdq(&mut acc, &mut bufs);
+            acc
+        } else {
+            let half = n.div_ceil(2);
+            let mut total = vec![0f32; len];
+            for group in [0..half, half..n] {
+                if group.is_empty() {
+                    continue;
+                }
+                let mut acc = vec![0f32; len];
+                for p in &partials[group] {
+                    let mut p = p.clone();
+                    codec.qdq(&mut p, &mut bufs);
+                    for (a, x) in acc.iter_mut().zip(&p) {
+                        *a += *x;
+                    }
+                }
+                codec.qdq(&mut acc, &mut bufs); // bridge hop
+                for (t, x) in total.iter_mut().zip(&acc) {
+                    *t += *x;
+                }
+            }
+            codec.qdq(&mut total, &mut bufs); // all-gather hop
+            total
+        }
+    }
+
+    fn partials(n: usize, len: usize) -> Vec<Vec<f32>> {
         let mut rng = crate::util::Prng::new(5);
-        let mut parts: Vec<Vec<f32>> = (0..4)
+        (0..n)
             .map(|_| {
-                let mut v = vec![0f32; 256];
+                let mut v = vec![0f32; len];
                 rng.fill_normal(&mut v, 0.0, 1.0);
                 v
             })
-            .collect();
-        let exact: Vec<f32> =
-            (0..256).map(|i| parts.iter().map(|p| p[i]).sum::<f32>()).collect();
-        let mut bufs = CodecBuffers::default();
-        let codec = Codec::parse("int8@32").unwrap();
-        let out =
-            allreduce_partials(&mut parts.clone(), &codec, CollectiveStyle::TwoStep, &mut bufs);
-        let s = crate::util::stats::sqnr_db(&exact, &out);
-        assert!(s > 25.0, "SQNR {s}");
-        // Hier applies one extra QDQ: slightly worse, still close.
-        let out_h = allreduce_partials(&mut parts, &codec, CollectiveStyle::Hier, &mut bufs);
-        let sh = crate::util::stats::sqnr_db(&exact, &out_h);
-        assert!(sh > 20.0 && sh <= s + 1.0, "hier {sh} vs two-step {s}");
+            .collect()
     }
 
     #[test]
-    fn bf16_passthrough_is_near_exact() {
+    fn unified_twostep_matches_prerefactor_golden() {
+        // Acceptance pin: the Communicator-driven TP boundary reproduces
+        // the pre-refactor QDQ-chain numerics. len = tp·gs·k keeps the
+        // quantization groups chunk-aligned, so the only difference from
+        // the old whole-vector chain is that the real collective keeps the
+        // receiving rank's own chunk at full precision pre-sum — a
+        // quantization-noise-sized term. Agreement must sit far above the
+        // codec's own error floor.
+        let parts = partials(4, 256);
+        let exact: Vec<f32> = (0..256).map(|i| parts.iter().map(|p| p[i]).sum::<f32>()).collect();
+        let codec = Codec::parse("int8@32").unwrap();
+
+        let mut group = tp_group(4, AlgoPolicy::Fixed(Algo::TwoStep)).unwrap().unwrap();
+        let mut mine = parts.clone();
+        group.allreduce(&mut mine, &codec).unwrap();
+
+        let s = sqnr_db(&exact, &mine[0]);
+        assert!(s > 25.0, "accuracy vs exact sum: SQNR {s} dB");
+        let golden = prerefactor_chain(&parts, &codec, false);
+        let agree = sqnr_db(&golden, &mine[0]);
+        assert!(agree > 20.0, "vs pre-refactor golden chain: {agree} dB");
+    }
+
+    #[test]
+    fn unified_hier_matches_prerefactor_golden() {
+        let parts = partials(4, 256);
+        let exact: Vec<f32> = (0..256).map(|i| parts.iter().map(|p| p[i]).sum::<f32>()).collect();
+        let codec = Codec::parse("int8@32").unwrap();
+
+        let mut group = tp_group(4, AlgoPolicy::Fixed(Algo::Hier)).unwrap().unwrap();
+        let mut mine = parts.clone();
+        group.allreduce(&mut mine, &codec).unwrap();
+
+        let s = sqnr_db(&exact, &mine[0]);
+        assert!(s > 20.0, "hier accuracy vs exact sum: SQNR {s} dB");
+        let golden = prerefactor_chain(&parts, &codec, true);
+        let agree = sqnr_db(&golden, &mine[0]);
+        assert!(agree > 18.0, "vs pre-refactor hier golden chain: {agree} dB");
+        // Hier applies one extra QDQ: slightly worse than two-step, close.
+        let mut two = tp_group(4, AlgoPolicy::Fixed(Algo::TwoStep)).unwrap().unwrap();
+        let mut mine2 = parts.clone();
+        two.allreduce(&mut mine2, &codec).unwrap();
+        let s2 = sqnr_db(&exact, &mine2[0]);
+        assert!(s > s2 - 6.0 && s <= s2 + 1.5, "hier {s} vs two-step {s2}");
+    }
+
+    #[test]
+    fn bf16_partials_golden_exact_value() {
+        // Hard golden pin (identical pre- and post-refactor): BF16 partials
+        // 1.5 and −0.25 reduce to exactly 1.25 on every rank — every
+        // intermediate is bf16-representable.
         let mut parts = vec![vec![1.5f32; 64], vec![-0.25f32; 64]];
-        let mut bufs = CodecBuffers::default();
-        let out =
-            allreduce_partials(&mut parts, &Codec::Bf16, CollectiveStyle::TwoStep, &mut bufs);
-        for &x in &out {
-            assert!((x - 1.25).abs() < 0.01, "{x}");
+        let mut group = tp_group(2, AlgoPolicy::Fixed(Algo::TwoStep)).unwrap().unwrap();
+        group.allreduce(&mut parts, &Codec::Bf16).unwrap();
+        for rank in &parts {
+            for &x in rank {
+                assert_eq!(x.to_bits(), 1.25f32.to_bits(), "{x}");
+            }
         }
+    }
+
+    #[test]
+    fn single_shard_group_is_none() {
+        assert!(tp_group(1, AlgoPolicy::Auto).unwrap().is_none());
+        assert!(tp_group(2, AlgoPolicy::Auto).unwrap().is_some());
     }
 }

@@ -1,23 +1,23 @@
 //! Data-parallel trainer with quantized gradient AllReduce.
 //!
 //! Each DP rank executes the whole-graph `grad_step` HLO on its own
-//! micro-batch; the gradients then travel through the *real* collective
-//! (comm::twostep / hier / pipelined over the thread fabric) with the
+//! micro-batch; the gradients then travel through the *real* collective —
+//! a [`LocalGroup`] of Communicators over the thread fabric — with the
 //! configured wire codec, exactly like ZeRO++-style quantized gradient
 //! averaging; finally one `adamw` HLO execution updates the (replicated)
 //! parameters. Because the collectives are bit-deterministic across ranks,
-//! a single parameter copy is faithful DP semantics.
+//! a single parameter copy is faithful DP semantics. The rank group (and
+//! its codec scratch) persists across optimizer steps, so the per-step
+//! gradient AllReduce is allocation-free after the first step.
 
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::comm::{self, fabric};
+use crate::comm::{Algo, AlgoPolicy, LocalGroup};
 use crate::model::{Batch, ModelConfig, Sampler, Weights};
 use crate::quant::Codec;
 use crate::runtime::{tokens_literal, Runtime, Tensor};
-use crate::sim::Algo;
-use crate::topo::{presets, Topology};
 
 /// Trainer options.
 #[derive(Debug, Clone)]
@@ -25,7 +25,9 @@ pub struct TrainOptions {
     pub steps: usize,
     pub dp: usize,
     pub codec: Codec,
-    pub algo: Algo,
+    /// Gradient AllReduce algorithm: a fixed [`Algo`] or `Auto` against
+    /// the cost model (`--algo auto` on the CLI).
+    pub algo: AlgoPolicy,
     pub seed: u64,
     pub log_every: usize,
     pub eval_every: usize,
@@ -38,7 +40,7 @@ impl Default for TrainOptions {
             steps: 200,
             dp: 4,
             codec: Codec::Bf16,
-            algo: Algo::TwoStep,
+            algo: AlgoPolicy::Fixed(Algo::TwoStep),
             seed: 7,
             log_every: 10,
             eval_every: 0,
@@ -58,7 +60,8 @@ pub struct StepRecord {
     pub eval_ppl: Option<f64>,
 }
 
-/// The DP trainer. Owns the runtime and the replicated parameter state.
+/// The DP trainer. Owns the runtime, the replicated parameter state, and
+/// the DP rank group whose Communicators carry the gradient AllReduce.
 pub struct Trainer {
     pub rt: Runtime,
     pub cfg: ModelConfig,
@@ -68,6 +71,9 @@ pub struct Trainer {
     m: Vec<xla::Literal>,
     v: Vec<xla::Literal>,
     step: usize,
+    /// Persistent DP rank group, keyed by the (dp, policy) it was built
+    /// for; rebuilt lazily when the options change between calls.
+    group: Option<((usize, AlgoPolicy), LocalGroup)>,
 }
 
 impl Trainer {
@@ -84,7 +90,7 @@ impl Trainer {
             m.push(Tensor::zeros(&t.shape).to_literal()?);
             v.push(Tensor::zeros(&t.shape).to_literal()?);
         }
-        Ok(Trainer { rt, cfg, names, shapes, params, m, v, step: 0 })
+        Ok(Trainer { rt, cfg, names, shapes, params, m, v, step: 0, group: None })
     }
 
     /// Flatten per-tensor grads into one contiguous f32 buffer (the
@@ -110,30 +116,30 @@ impl Trainer {
         Ok(lits)
     }
 
-    /// Run the quantized gradient AllReduce over the thread fabric.
+    /// Run the quantized gradient AllReduce through the persistent DP rank
+    /// group (dp = 1 short-circuits: nothing crosses a wire).
     fn allreduce_grads(
-        &self,
-        per_rank: Vec<Vec<f32>>,
+        &mut self,
+        mut per_rank: Vec<Vec<f32>>,
         opts: &TrainOptions,
     ) -> Result<(Vec<f32>, u64)> {
-        let topo = match opts.algo {
-            Algo::Hier | Algo::HierPipelined => Topology::new(presets::l40(), opts.dp),
-            _ => Topology::new(presets::h800(), opts.dp),
-        };
-        let inputs = &per_rank;
-        let codec = opts.codec;
-        let algo = opts.algo;
-        let (mut results, counters) = fabric::run_ranks(&topo, |h| {
-            let mut data = inputs[h.rank].clone();
-            comm::allreduce_with(algo, &h, &mut data, &codec);
-            data
-        });
-        let mut reduced = results.swap_remove(0);
+        if opts.dp == 1 {
+            return Ok((per_rank.swap_remove(0), 0));
+        }
+        let key = (opts.dp, opts.algo);
+        if self.group.as_ref().map(|(k, _)| *k != key).unwrap_or(true) {
+            self.group = Some((key, LocalGroup::for_policy(opts.dp, opts.algo)?));
+        }
+        let (_, group) = self.group.as_mut().unwrap();
+        let before = group.counters().total_bytes();
+        group.allreduce(&mut per_rank, &opts.codec)?;
+        let wire = group.counters().total_bytes() - before;
+        let mut reduced = per_rank.swap_remove(0);
         let scale = 1.0 / opts.dp as f32;
         for x in reduced.iter_mut() {
             *x *= scale;
         }
-        Ok((reduced, counters.total_bytes()))
+        Ok((reduced, wire))
     }
 
     /// One optimizer step over `dp` micro-batches. Returns the record.

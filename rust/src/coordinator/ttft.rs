@@ -11,8 +11,9 @@
 //! Reproduced quantity: the *relative* TTFT across precisions per device
 //! (the paper's 2.28x on L40, ~1.2-1.3x on A100/H800, ~1x on H20).
 
+use crate::comm::{Algo, AlgoPolicy};
 use crate::quant::Codec;
-use crate::sim::{self, Algo};
+use crate::sim;
 use crate::topo::Topology;
 
 /// Workload: a dense LLM prefill (defaults ≈ Llama-3-8B, TP=8).
@@ -52,16 +53,17 @@ pub fn ttft_s(topo: &Topology, wl: &PrefillWorkload, codec: &Codec, algo: Algo) 
     compute + 2.0 * wl.n_layers as f64 * per_ar
 }
 
-/// The algorithm Fig. 2 uses per device class: hier+PP on PCIe, two-step
-/// on NVLink (ring for the BF16/NCCL baseline).
-pub fn algo_for(topo: &Topology, codec: &Codec) -> Algo {
+/// The algorithm Fig. 2 runs for a workload: the BF16 baseline is always
+/// NCCL's ring (that is the paper's comparison point); quantized codecs
+/// go through [`AlgoPolicy::Auto`], which at prefill payload sizes picks
+/// the hierarchical family on PCIe/NUMA boxes and the two-step on NVLink —
+/// the same per-device choice the paper makes by hand.
+pub fn algo_for(topo: &Topology, wl: &PrefillWorkload, codec: &Codec) -> Algo {
     if matches!(codec, Codec::Bf16) {
-        Algo::Ring
-    } else if topo.spec.is_numa() {
-        Algo::HierPipelined
-    } else {
-        Algo::TwoStep
+        return Algo::Ring;
     }
+    let elems = wl.batch * wl.prompt_len * wl.d_model;
+    AlgoPolicy::Auto.resolve(topo, codec, elems)
 }
 
 #[cfg(test)]
@@ -72,9 +74,9 @@ mod tests {
     fn speedup(spec: crate::topo::GpuSpec, codec: &str) -> f64 {
         let topo = Topology::new(spec, 8);
         let wl = PrefillWorkload::default();
-        let base = ttft_s(&topo, &wl, &Codec::Bf16, algo_for(&topo, &Codec::Bf16));
+        let base = ttft_s(&topo, &wl, &Codec::Bf16, algo_for(&topo, &wl, &Codec::Bf16));
         let c = Codec::parse(codec).unwrap();
-        let t = ttft_s(&topo, &wl, &c, algo_for(&topo, &c));
+        let t = ttft_s(&topo, &wl, &c, algo_for(&topo, &wl, &c));
         base / t
     }
 

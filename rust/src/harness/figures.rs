@@ -5,15 +5,19 @@ use anyhow::Result;
 
 use super::{f2, print_table};
 use crate::cli::Args;
+use crate::comm::{Algo, AlgoPolicy};
 use crate::coordinator::pretrain::{ensure_trained, ACCURACY_STEPS, TEST_STEPS};
 use crate::coordinator::ttft::{algo_for, ttft_s, PrefillWorkload};
-use crate::coordinator::{CollectiveStyle, TpEngine};
+use crate::coordinator::TpEngine;
 use crate::model::{Corpus, Sampler};
 use crate::quant::Codec;
 use crate::runtime::{default_artifacts_dir, Runtime};
 use crate::sim;
 use crate::topo::{presets, Topology};
 use crate::util::stats::{ascii_histogram, DistSummary};
+
+/// The fixed two-step policy the accuracy figures evaluate under.
+const TWOSTEP: AlgoPolicy = AlgoPolicy::Fixed(Algo::TwoStep);
 
 /// Fig. 1: perplexity across bit widths for the quantization schemes.
 pub fn figure1(args: &Args) -> Result<()> {
@@ -26,8 +30,7 @@ pub fn figure1(args: &Args) -> Result<()> {
     let batches: Vec<_> =
         Sampler::eval_batches(eval, cfg.eval_batch, cfg.seq_len).into_iter().take(n).collect();
     let rt = Runtime::open(default_artifacts_dir())?;
-    let mut engine =
-        TpEngine::new(rt, cfg, &weights, Codec::Bf16, CollectiveStyle::TwoStep)?;
+    let mut engine = TpEngine::new(rt, cfg, &weights, Codec::Bf16, TWOSTEP)?;
     let baseline = engine.perplexity(&batches)?;
 
     let schemes: &[(&str, &str)] = &[
@@ -43,7 +46,7 @@ pub fn figure1(args: &Args) -> Result<()> {
         let mut row = vec![label.to_string()];
         for b in bits {
             let spec = fmt.replace("{b}", &b.to_string());
-            engine.set_codec(Codec::parse(&spec)?, CollectiveStyle::TwoStep);
+            engine.set_codec(Codec::parse(&spec)?, TWOSTEP)?;
             let ppl = engine.perplexity(&batches)?;
             eprintln!("  [fig1] {spec}: {ppl:.3}");
             row.push(f2(ppl));
@@ -71,11 +74,11 @@ pub fn figure2(args: &Args) -> Result<()> {
     for dev in presets::all() {
         let name = dev.name;
         let topo = Topology::new(dev, 8);
-        let base = ttft_s(&topo, &wl, &Codec::Bf16, algo_for(&topo, &Codec::Bf16));
+        let base = ttft_s(&topo, &wl, &Codec::Bf16, algo_for(&topo, &wl, &Codec::Bf16));
         let mut row = vec![name.to_string()];
         for s in specs {
             let codec = if s == "bf16" { Codec::Bf16 } else { Codec::parse(s)? };
-            let t = ttft_s(&topo, &wl, &codec, algo_for(&topo, &codec));
+            let t = ttft_s(&topo, &wl, &codec, algo_for(&topo, &wl, &codec));
             row.push(format!("{:.1}ms ({:.2}x)", t * 1e3, base / t));
         }
         rows.push(row);
@@ -102,8 +105,7 @@ pub fn figure4(args: &Args) -> Result<()> {
     let batch = &Sampler::eval_batches(eval, cfg.eval_batch, cfg.seq_len)[0];
     let rt = Runtime::open(default_artifacts_dir())?;
     let last = cfg.n_layers - 1;
-    let mut engine =
-        TpEngine::new(rt, cfg, &weights, Codec::Bf16, CollectiveStyle::TwoStep)?;
+    let mut engine = TpEngine::new(rt, cfg, &weights, Codec::Bf16, TWOSTEP)?;
     engine.capture_layer = Some(last);
     engine.forward_h(batch)?;
     let acts = engine.last_partial.clone();

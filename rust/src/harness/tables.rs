@@ -4,13 +4,18 @@ use anyhow::{Context, Result};
 
 use super::{f2, print_table};
 use crate::cli::Args;
+use crate::comm::{Algo, AlgoPolicy};
 use crate::coordinator::pretrain::{ensure_trained, ACCURACY_STEPS, TEST_STEPS};
-use crate::coordinator::{CollectiveStyle, MoeEngine, TpEngine};
+use crate::coordinator::{MoeEngine, TpEngine};
 use crate::model::{Batch, Corpus, Sampler};
 use crate::quant::Codec;
 use crate::runtime::{default_artifacts_dir, tokens_literal, Runtime};
-use crate::sim::{self, Algo};
+use crate::sim;
 use crate::topo::{presets, Topology};
+
+/// The fixed two-step policy the accuracy tables evaluate under (the
+/// paper's default QDQ chain).
+const TWOSTEP: AlgoPolicy = AlgoPolicy::Fixed(Algo::TwoStep);
 
 fn steps_for(args: &Args) -> usize {
     if args.flag_bool("quick") {
@@ -33,13 +38,12 @@ fn dense_ppl(args: &Args, specs: &[&str]) -> Result<Vec<(String, f64)>> {
     let (cfg, weights, _) = ensure_trained("tiny", steps_for(args))?;
     let batches = eval_batches_for(args, &cfg)?;
     let rt = Runtime::open(default_artifacts_dir())?;
-    let mut engine =
-        TpEngine::new(rt, cfg, &weights, Codec::Bf16, CollectiveStyle::TwoStep)?;
+    let mut engine = TpEngine::new(rt, cfg, &weights, Codec::Bf16, TWOSTEP)?;
     let mut out = Vec::new();
     for spec in specs {
         let codec =
             if *spec == "bf16" { Codec::Bf16 } else { Codec::parse(spec)? };
-        engine.set_codec(codec, CollectiveStyle::TwoStep);
+        engine.set_codec(codec, TWOSTEP)?;
         let ppl = engine.perplexity(&batches)?;
         eprintln!("  [tp-eval] {spec}: ppl {ppl:.3}");
         out.push((spec.to_string(), ppl));
@@ -234,8 +238,7 @@ pub fn table7(args: &Args) -> Result<()> {
         .collect::<Result<_>>()?;
     anyhow::ensure!(pools.len() == 4, "expected 4 task pools, got {}", pools.len());
 
-    let mut engine =
-        TpEngine::new(rt, cfg.clone(), &weights, Codec::Bf16, CollectiveStyle::TwoStep)?;
+    let mut engine = TpEngine::new(rt, cfg.clone(), &weights, Codec::Bf16, TWOSTEP)?;
     let specs = [
         "bf16", "int8@128", "int6@128", "int5@128", "int4@128", "int3@32", "int3-sr@32",
         "int2@32", "int2-sr@32",
@@ -243,7 +246,7 @@ pub fn table7(args: &Args) -> Result<()> {
     let mut rows = Vec::new();
     for spec in specs {
         let codec = if spec == "bf16" { Codec::Bf16 } else { Codec::parse(spec)? };
-        engine.set_codec(codec, CollectiveStyle::TwoStep);
+        engine.set_codec(codec, TWOSTEP)?;
         // Tasks: per-pool *pool-match* accuracy (the prediction lands in
         // the target's part-of-speech pool — the syntactic structure the
         // model has learned and quantization noise erodes), plus overall
@@ -347,34 +350,51 @@ pub fn table9(args: &Args) -> Result<()> {
     let headers =
         ["device/algo", "BF16(NCCL)", "INT8", "INT6", "INT5", "INT4", "INT3", "INT2_SR"];
     let mut rows = Vec::new();
-    let mut push_row = |label: String, topo: &Topology, algo: Algo| {
+    fn push_row(
+        rows: &mut Vec<Vec<String>>,
+        specs: &[&str],
+        m: f64,
+        label: String,
+        topo: &Topology,
+        algo: Option<Algo>,
+    ) {
         let mut row = vec![label];
         for (i, s) in specs.iter().enumerate() {
             let codec = if i == 0 { Codec::Bf16 } else { Codec::parse(s).unwrap() };
-            let a = if i == 0 { Algo::Ring } else { algo };
-            if a == Algo::Ring && i != 0 {
+            let a = match algo {
+                // Column 0 is definitionally the NCCL baseline — every row
+                // (the Auto row included) pins it to the ring. The other
+                // cells of the Auto row report what the policy resolves.
+                _ if i == 0 => Algo::Ring,
+                None => AlgoPolicy::Auto.resolve(topo, &codec, (m / 2.0) as usize),
+                Some(a) => a,
+            };
+            if algo.is_some() && a == Algo::Ring && i != 0 {
                 row.push("-".into());
                 continue;
             }
             let t = sim::allreduce_time(topo, a, &codec, m);
-            row.push(f2(sim::algbw_gbps(m, &t)));
+            let bw = f2(sim::algbw_gbps(m, &t));
+            row.push(if algo.is_none() { format!("{bw} [{a}]") } else { bw });
         }
         rows.push(row);
-    };
+    }
     let l40 = Topology::new(presets::l40(), 8);
-    push_row("L40 (Two-step)".into(), &l40, Algo::TwoStep);
-    push_row("L40 (Hier)".into(), &l40, Algo::Hier);
-    push_row("L40 (HierPP)".into(), &l40, Algo::HierPipelined);
+    push_row(&mut rows, &specs, m, "L40 (Two-step)".into(), &l40, Some(Algo::TwoStep));
+    push_row(&mut rows, &specs, m, "L40 (Hier)".into(), &l40, Some(Algo::Hier));
+    push_row(&mut rows, &specs, m, "L40 (HierPP)".into(), &l40, Some(Algo::HierPipelined));
+    push_row(&mut rows, &specs, m, "L40 (--algo auto)".into(), &l40, None);
     for spec in [presets::a100(), presets::h800(), presets::h20()] {
         let name = spec.name;
         let topo = Topology::new(spec, 8);
-        push_row(name.into(), &topo, Algo::TwoStep);
+        push_row(&mut rows, &specs, m, name.into(), &topo, Some(Algo::TwoStep));
     }
     print_table(
         &format!("Table 9: AllReduce algorithmic bandwidth (GB/s), {} per GPU", args.flag_or("size", "64M")),
         &headers,
         &rows,
     );
+    println!("([algo] cells: what AlgoPolicy::Auto resolves to at this size)");
     println!("paper: L40 10.43/9.17..16.19 | Hier ..28.8 | HierPP ..33.39 | A100 89->153 |");
     println!("       H800 94->187 | H20 209->260 (INT2_SR 202 — loses)");
     println!("shape check: hier>two-step on L40; HierPP best (max ~3.2x NCCL); INT2_SR");

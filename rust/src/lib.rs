@@ -9,10 +9,15 @@
 //! - [`transport`] — pluggable point-to-point fabric with a versioned,
 //!   CRC-guarded frame protocol: in-process mpsc mesh, multi-process TCP
 //!   (rendezvous bootstrap), single-rank loopback.
-//! - [`comm`] — collectives (ring, two-step, hierarchical, pipelined
-//!   hierarchical AllReduce; All2All), generic over the transport.
+//! - [`comm`] — the collective layer behind one front door,
+//!   [`comm::Communicator`]: fallible `allreduce` / `reduce_scatter` /
+//!   `all_gather` / `broadcast` / `all2all` methods (typed
+//!   [`comm::CommError`]), per-call algorithm selection via
+//!   [`comm::AlgoPolicy`] (`Auto` consults the cost model), persistent
+//!   scratch, generic over the transport.
 //! - [`topo`] / [`sim`] — device topology presets (Table 6) and the link
-//!   simulator producing algorithmic-bandwidth estimates (Tables 5, 9, 10).
+//!   simulator producing algorithmic-bandwidth estimates (Tables 5, 9, 10)
+//!   that also powers `AlgoPolicy::Auto`.
 //! - [`runtime`] — PJRT CPU client wrapper loading AOT HLO artifacts.
 //! - [`model`] — weights/tokenizer/corpus/checkpoint handling.
 //! - [`coordinator`] — TP inference engine, DP trainer, EP dispatcher, TTFT

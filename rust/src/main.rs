@@ -4,31 +4,30 @@
 //! flashcomm table <1..10|all> [--quick] [--steps N] [--batches N] [--size 64M]
 //! flashcomm figure <1|2|4|5|8|all> [--quick] [--codec spec] [--chunks K]
 //! flashcomm train   [--config tiny] [--steps N] [--dp N] [--codec spec]
-//!                   [--algo ring|twostep|hier|hierpp] [--out ckpt.bin]
+//!                   [--algo ring|twostep|hier|hierpp|auto] [--out ckpt.bin]
 //! flashcomm eval    [--config tiny] [--ckpt path] [--codec spec]
-//!                   [--style twostep|hier] [--batches N]
+//!                   [--algo twostep|hier|auto] [--batches N]
 //! flashcomm ttft    [--prompt N] [--batch N]
-//! flashcomm worker  [--world N] [--algo hier] [--codecs int4@32,int2-sr@32]
+//! flashcomm worker  [--world N] [--algo hier|auto] [--codecs int4@32,int2-sr@32]
 //!                   [--len N] [--root host:port] [--rank R]
 //! flashcomm info
 //! ```
 //!
 //! Codec spec grammar: `bf16 | int<bits>[-rtn|-sr|-had|-log][@<gs>][!]`
 //! (`!` = integer Eq.1 metadata), e.g. `int5`, `int2-sr@32`, `int2-sr@32!`.
+//! `--algo auto` lets the cost model pick the algorithm per payload size.
 
 use std::sync::Arc;
 
 use anyhow::{bail, ensure, Context, Result};
 
 use flashcomm::cli::Args;
-use flashcomm::comm::{self, fabric};
-use flashcomm::coordinator::{CollectiveStyle, TpEngine, TrainOptions, Trainer};
+use flashcomm::comm::{fabric, preset_topo, AlgoPolicy, Communicator};
+use flashcomm::coordinator::{TpEngine, TrainOptions, Trainer};
 use flashcomm::harness;
 use flashcomm::model::{Corpus, ModelConfig, Sampler, Weights};
 use flashcomm::quant::Codec;
 use flashcomm::runtime::{default_artifacts_dir, Runtime};
-use flashcomm::sim::Algo;
-use flashcomm::topo::{presets, Topology};
 use flashcomm::transport::{frame, TcpTransport, Transport};
 use flashcomm::util::Prng;
 
@@ -83,17 +82,9 @@ commands:
 
 common flags: --quick (small sweep), --steps N, --batches N, --codec SPEC
 codec SPEC: bf16 | int<b>[-sr|-had|-log][@gs][!]   e.g. int2-sr@32!
+algo: --algo ring|twostep|hier|hierpp|auto — `auto` consults the cost
+      model per payload (hier above the crossover size, two-step below)
 ";
-
-fn parse_algo(s: &str) -> Result<Algo> {
-    Ok(match s {
-        "ring" => Algo::Ring,
-        "twostep" => Algo::TwoStep,
-        "hier" => Algo::Hier,
-        "hierpp" => Algo::HierPipelined,
-        other => bail!("unknown algo '{other}'"),
-    })
-}
 
 fn cmd_train(args: &Args) -> Result<()> {
     let config = args.flag_or("config", "tiny");
@@ -114,7 +105,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         steps: args.flag_usize("steps", 200)?,
         dp: args.flag_usize("dp", 4)?,
         codec: Codec::parse(&args.flag_or("codec", "bf16"))?,
-        algo: parse_algo(&args.flag_or("algo", "twostep"))?,
+        algo: args.flag_or("algo", "twostep").parse()?,
         log_every: args.flag_usize("log-every", 10)?,
         eval_every: args.flag_usize("eval-every", 50)?,
         eval_batches: args.flag_usize("eval-batches", 8)?,
@@ -169,17 +160,16 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let batches: Vec<_> =
         Sampler::eval_batches(eval, cfg.eval_batch, cfg.seq_len).into_iter().take(n).collect();
     let codec = Codec::parse(&args.flag_or("codec", "bf16"))?;
-    let style = match args.flag_or("style", "twostep").as_str() {
-        "hier" => CollectiveStyle::Hier,
-        _ => CollectiveStyle::TwoStep,
-    };
-    let mut engine = TpEngine::new(rt, cfg, &weights, codec, style)?;
+    if let Some(style) = args.flag("style") {
+        bail!("--style was replaced by --algo (try `--algo {style}`, or `--algo auto`)");
+    }
+    let policy: AlgoPolicy = args.flag_or("algo", "twostep").parse()?;
+    let mut engine = TpEngine::new(rt, cfg, &weights, codec, policy)?;
     let t0 = std::time::Instant::now();
     let ppl = engine.perplexity(&batches)?;
     println!(
-        "{config} perplexity under {} ({:?}): {:.4}   [{} batches, {:.2}s]",
+        "{config} perplexity under {} (--algo {policy}): {:.4}   [{} batches, {:.2}s]",
         codec.name(),
-        style,
         ppl,
         batches.len(),
         t0.elapsed().as_secs_f64()
@@ -200,11 +190,11 @@ fn cmd_worker(args: &Args) -> Result<()> {
     ensure!(world >= 2, "worker demo needs at least 2 ranks (got --world {world})");
     let len = args.flag_usize("len", 4096)?;
     let algo = args.flag_or("algo", "hier");
-    // Validate once here rather than panicking in every spawned process:
-    // the hierarchical algorithms need two equal NUMA groups.
-    if matches!(parse_algo(&algo)?, Algo::Hier | Algo::HierPipelined) {
-        ensure!(world % 2 == 0, "--algo {algo} needs an even --world (got {world})");
-    }
+    // Validate once here rather than erroring in every spawned process:
+    // the hierarchical algorithms need two equal NUMA groups, and the
+    // preset lookup enforces that per policy.
+    let policy: AlgoPolicy = algo.parse()?;
+    preset_topo(world, policy)?;
     let codecs = args.flag_or("codecs", "int4@32,int2-sr@32");
     match args.flag("rank") {
         Some(r) => {
@@ -275,14 +265,12 @@ fn worker_rank(
     codecs: &str,
     root: &str,
 ) -> Result<()> {
-    let algo = parse_algo(algo_str)?;
-    let topo = match algo {
-        Algo::Hier | Algo::HierPipelined => Topology::new(presets::l40(), world),
-        _ => Topology::new(presets::h800(), world),
-    };
+    let policy: AlgoPolicy = algo_str.parse()?;
+    let topo = preset_topo(world, policy)?;
     let tcp = TcpTransport::bootstrap(rank, world, root)
         .with_context(|| format!("rank {rank} bootstrapping the TCP mesh at {root}"))?;
-    let h = fabric::RankHandle::new(tcp, topo.clone(), Arc::new(fabric::ByteCounters::default()));
+    let mut comm =
+        Communicator::new(tcp, topo.clone(), Arc::new(fabric::ByteCounters::default()))?;
 
     // Deterministic heavy-tailed inputs, identical in every process (and in
     // the in-process reference below).
@@ -300,13 +288,18 @@ fn worker_rank(
 
         // The real thing: this process is one rank of the TCP mesh.
         let mut mine = inputs[rank].clone();
-        comm::allreduce_with(algo, &h, &mut mine, &codec);
+        let used = comm.allreduce(&mut mine, &codec, policy)?;
 
-        // Reference: the same collective over the in-process backend.
+        // Reference: the same collective over the in-process backend. The
+        // policy resolves per (topology, codec, size), so both backends
+        // pick the same algorithm without coordination.
         let inputs_ref = &inputs;
         let (reference, _) = fabric::run_ranks(&topo, |rh| {
-            let mut d = inputs_ref[rh.rank].clone();
-            comm::allreduce_with(algo, &rh, &mut d, &codec);
+            let mut c = Communicator::from_handle(rh);
+            let mut d = inputs_ref[c.rank()].clone();
+            let ref_used =
+                c.allreduce(&mut d, &codec, policy).expect("in-process reference failed");
+            assert_eq!(ref_used, used, "backends resolved different algorithms");
             d
         });
         let expect = &reference[rank];
@@ -318,12 +311,12 @@ fn worker_rank(
             );
         }
         println!(
-            "[rank {rank}] {spec} {algo_str} AllReduce over TCP == InProc bit-for-bit \
-             ({len} elems)"
+            "[rank {rank}] {spec} {used} AllReduce (--algo {algo_str}) over TCP == InProc \
+             bit-for-bit ({len} elems)"
         );
     }
 
-    let stats = h.transport().stats();
+    let stats = comm.transport().stats();
     println!(
         "[rank {rank}] sent {} messages, {} payload B, {} wire B ({} B framing)",
         stats.messages,

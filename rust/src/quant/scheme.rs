@@ -42,6 +42,19 @@ pub struct CodecBuffers {
     scratch: Vec<f32>,
 }
 
+impl CodecBuffers {
+    /// Bytes of owned capacity across all scratch buffers. Used by the
+    /// collective layer to assert the hot path reuses (rather than regrows)
+    /// its scratch after warmup.
+    pub fn capacity_bytes(&self) -> usize {
+        self.codes.capacity()
+            + self.metas.capacity() * std::mem::size_of::<GroupMeta>()
+            + self.spikes.capacity() * std::mem::size_of::<SpikeMeta>()
+            + self.logmetas.capacity() * std::mem::size_of::<LogMeta>()
+            + self.scratch.capacity() * 4
+    }
+}
+
 impl Codec {
     /// Parse shorthand like `bf16`, `int8`, `int5`, `int2-sr`, `int4-had`,
     /// `int3-log`, with optional `@gs` suffix (`int2-sr@32`) and `!` for

@@ -14,4 +14,6 @@ pub mod events;
 pub mod volume;
 
 pub use allreduce::{algbw_gbps, allreduce_time, TimeBreakdown};
+/// Re-export of [`crate::comm::Algo`] — the enum's home is the collective
+/// layer; the simulator prices its algorithms.
 pub use volume::Algo;

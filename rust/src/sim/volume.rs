@@ -11,29 +11,10 @@
 //!
 //! (Table 5 numbers are for N = 8; the formulas below generalize.)
 
-/// AllReduce algorithm families the paper compares.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub enum Algo {
-    /// NCCL-style ring (reduce-scatter + all-gather around a ring).
-    Ring,
-    /// Flash Communication V1 one-shot two-step (RS + AG, all-to-all style).
-    TwoStep,
-    /// Hierarchical two-step: intra-NUMA RS → cross-NUMA reduce → intra AG.
-    Hier,
-    /// Hierarchical two-step with micro-chunk pipeline parallelism (Fig. 8).
-    HierPipelined,
-}
-
-impl Algo {
-    pub fn name(&self) -> &'static str {
-        match self {
-            Algo::Ring => "NCCL",
-            Algo::TwoStep => "Two-step",
-            Algo::Hier => "Hierarchical Two-step",
-            Algo::HierPipelined => "Hierarchical Two-step + PP",
-        }
-    }
-}
+/// The algorithm enum lives with the collectives ([`crate::comm::Algo`]);
+/// this re-export keeps the timing model's historical `sim::volume::Algo`
+/// path working.
+pub use crate::comm::Algo;
 
 /// Total bytes moved across all links for an AllReduce of `m` bytes/GPU.
 pub fn total_volume(algo: Algo, n: usize, m: f64) -> f64 {

@@ -1,0 +1,137 @@
+//! Collective-API property tests (no artifacts needed): every algorithm ×
+//! codec combination, driven through the public `Communicator` front door,
+//! must (1) leave all ranks bit-identical and (2) land within the codec's
+//! error bound of the exact serial sum — with the ring's quantized variant
+//! allowed its documented N−1 error compounding. Plus policy determinism
+//! end-to-end.
+
+use flashcomm::comm::{fabric, Algo, AlgoPolicy, Communicator};
+use flashcomm::quant::Codec;
+use flashcomm::topo::{presets, Topology};
+use flashcomm::util::proptest::cases;
+use flashcomm::util::Prng;
+
+/// Relative L2 error of `got` vs `exact`.
+fn rel_l2(exact: &[f32], got: &[f32]) -> f64 {
+    let mut num = 0f64;
+    let mut den = 0f64;
+    for (e, g) in exact.iter().zip(got) {
+        num += ((e - g) as f64).powi(2);
+        den += (*e as f64).powi(2);
+    }
+    (num / den.max(1e-30)).sqrt()
+}
+
+/// Error bound for one collective, per (algorithm family, codec). One-shot
+/// algorithms see each contribution quantized once plus one re-quantization
+/// of the sum; the ring compounds one QDQ per hop (N−1 of them), so its
+/// quantized bounds are deliberately loose — that compounding is exactly
+/// why Auto never picks a quantized ring.
+fn error_bound(algo: Algo, spec: &str) -> f64 {
+    let one_shot = match spec {
+        "bf16" => 0.02,
+        "int8" => 0.10,
+        "int4@32" => 0.35,
+        "int2-sr@32!" => 0.80,
+        other => panic!("no bound for {other}"),
+    };
+    match algo {
+        Algo::Ring if spec != "bf16" => (3.0 * one_shot).min(1.6),
+        _ => one_shot,
+    }
+}
+
+#[test]
+fn prop_every_algo_codec_bit_identical_and_bounded() {
+    // 4-rank topologies: flat NVLink for ring/two-step, 2×2 NUMA for the
+    // hierarchical family. Lengths are random multiples of 128 so every
+    // chunk split stays group-aligned and the bound is meaningful.
+    let h800 = Topology::new(presets::h800(), 4);
+    let l40 = Topology::new(presets::l40(), 4);
+    cases(0xC0DE, 8, |rng| {
+        let len = 128 * (2 + rng.below(16));
+        let inputs: Vec<Vec<f32>> = (0..4)
+            .map(|r| {
+                let mut prng = Prng::new(rng.next_u64() ^ (r as u64) << 32);
+                let mut v = vec![0f32; len];
+                prng.fill_activations(&mut v, 1.0);
+                v
+            })
+            .collect();
+        let mut exact = vec![0f32; len];
+        for v in &inputs {
+            for (e, x) in exact.iter_mut().zip(v) {
+                *e += *x;
+            }
+        }
+        for algo in [Algo::Ring, Algo::TwoStep, Algo::Hier, Algo::HierPipelined] {
+            let topo = match algo {
+                Algo::Hier | Algo::HierPipelined => &l40,
+                _ => &h800,
+            };
+            for spec in ["bf16", "int8", "int4@32", "int2-sr@32!"] {
+                let codec = Codec::parse(spec).unwrap();
+                let inputs_ref = &inputs;
+                let (results, _) = fabric::run_ranks(topo, |h| {
+                    let mut c = Communicator::from_handle(h);
+                    let mut d = inputs_ref[c.rank()].clone();
+                    c.allreduce(&mut d, &codec, AlgoPolicy::Fixed(algo)).unwrap();
+                    d
+                });
+                let bits0: Vec<u32> = results[0].iter().map(|x| x.to_bits()).collect();
+                for (r, res) in results.iter().enumerate() {
+                    let bits: Vec<u32> = res.iter().map(|x| x.to_bits()).collect();
+                    assert_eq!(bits, bits0, "{algo:?}/{spec} len {len}: rank {r} diverges");
+                }
+                assert!(
+                    results[0].iter().all(|x| x.is_finite()),
+                    "{algo:?}/{spec}: non-finite output"
+                );
+                let err = rel_l2(&exact, &results[0]);
+                let bound = error_bound(algo, spec);
+                assert!(
+                    err < bound,
+                    "{algo:?}/{spec} len {len}: rel L2 {err:.4} exceeds bound {bound}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn auto_policy_end_to_end_is_deterministic_and_correct() {
+    // Repeated Auto runs over the same (topology, codec, size) resolve to
+    // the same algorithm and the same bits.
+    let topo = Topology::new(presets::l40(), 4);
+    let codec = Codec::parse("int4@32").unwrap();
+    let inputs: Vec<Vec<f32>> = (0..4)
+        .map(|r| {
+            let mut rng = Prng::new(42 + r as u64);
+            let mut v = vec![0f32; 4096];
+            rng.fill_activations(&mut v, 1.0);
+            v
+        })
+        .collect();
+    let inputs_ref = &inputs;
+    let mut first: Option<(Algo, Vec<u32>)> = None;
+    for _ in 0..3 {
+        let (results, _) = fabric::run_ranks(&topo, |h| {
+            let mut c = Communicator::from_handle(h);
+            let mut d = inputs_ref[c.rank()].clone();
+            let used = c.allreduce(&mut d, &codec, AlgoPolicy::Auto).unwrap();
+            (used, d)
+        });
+        let algo = results[0].0;
+        let bits: Vec<u32> = results[0].1.iter().map(|x| x.to_bits()).collect();
+        for (used, _) in &results {
+            assert_eq!(*used, algo, "ranks resolved different algorithms");
+        }
+        match &first {
+            None => first = Some((algo, bits)),
+            Some((a, b)) => {
+                assert_eq!(*a, algo, "Auto resolved differently across runs");
+                assert_eq!(*b, bits, "Auto produced different bits across runs");
+            }
+        }
+    }
+}

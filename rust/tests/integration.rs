@@ -4,11 +4,13 @@
 //! These tests need `make artifacts` to have run; they skip (with a note)
 //! otherwise so `cargo test` stays green on a fresh checkout.
 
-use flashcomm::coordinator::{CollectiveStyle, MoeEngine, TpEngine, TrainOptions, Trainer};
+use flashcomm::comm::{Algo, AlgoPolicy};
+use flashcomm::coordinator::{MoeEngine, TpEngine, TrainOptions, Trainer};
 use flashcomm::model::{Corpus, ModelConfig, Sampler, Weights};
 use flashcomm::quant::Codec;
 use flashcomm::runtime::{default_artifacts_dir, Runtime};
-use flashcomm::sim::Algo;
+
+const TWOSTEP: AlgoPolicy = AlgoPolicy::Fixed(Algo::TwoStep);
 
 fn open_runtime() -> Option<Runtime> {
     let dir = default_artifacts_dir();
@@ -40,10 +42,9 @@ fn tp_engine_quantization_ordering() {
     let batches = Sampler::eval_batches(eval, cfg.eval_batch, cfg.seq_len);
     let batch = &batches[0];
 
-    let mut engine =
-        TpEngine::new(rt, cfg, &weights, Codec::Bf16, CollectiveStyle::TwoStep).unwrap();
+    let mut engine = TpEngine::new(rt, cfg, &weights, Codec::Bf16, TWOSTEP).unwrap();
     let nll = |e: &mut TpEngine, spec: &str| {
-        e.set_codec(Codec::parse(spec).unwrap(), CollectiveStyle::TwoStep);
+        e.set_codec(Codec::parse(spec).unwrap(), TWOSTEP).unwrap();
         let (s, c) = e.eval_nll(batch).unwrap();
         s / c as f64
     };
@@ -68,9 +69,9 @@ fn tp_engine_hier_close_to_twostep() {
     let (_, eval) = corpus.split();
     let batch = &Sampler::eval_batches(eval, cfg.eval_batch, cfg.seq_len)[0];
     let codec = Codec::parse("int5").unwrap();
-    let mut e = TpEngine::new(rt, cfg, &weights, codec, CollectiveStyle::TwoStep).unwrap();
+    let mut e = TpEngine::new(rt, cfg, &weights, codec, TWOSTEP).unwrap();
     let (s2, c) = e.eval_nll(batch).unwrap();
-    e.set_codec(codec, CollectiveStyle::Hier);
+    e.set_codec(codec, AlgoPolicy::Fixed(Algo::Hier)).unwrap();
     let (s3, _) = e.eval_nll(batch).unwrap();
     let (a, b) = (s2 / c as f64, s3 / c as f64);
     assert!((a - b).abs() < 0.05 * a + 0.02, "two-step {a} vs hier {b}");
@@ -90,7 +91,7 @@ fn trainer_reduces_loss_with_quantized_grads() {
         steps: 8,
         dp: 2,
         codec: Codec::parse("int8").unwrap(),
-        algo: Algo::TwoStep,
+        algo: TWOSTEP,
         log_every: 0,
         ..Default::default()
     };
@@ -117,7 +118,7 @@ fn quantized_grads_track_bf16_training() {
     let corpus = load_corpus(&cfg);
     let (train, _) = corpus.split();
 
-    let run = |spec: &str, algo: Algo| {
+    let run = |spec: &str, algo: AlgoPolicy| {
         let rt = Runtime::open(default_artifacts_dir()).unwrap();
         let mut sampler = Sampler::new(train, 11);
         let mut trainer = Trainer::new(rt, cfg.clone(), &weights).unwrap();
@@ -131,9 +132,9 @@ fn quantized_grads_track_bf16_training() {
         };
         trainer.train(&mut sampler, &[], &opts).unwrap().last().unwrap().loss
     };
-    let bf16 = run("bf16", Algo::TwoStep);
-    let int8 = run("int8", Algo::TwoStep);
-    let hier = run("int8", Algo::Hier);
+    let bf16 = run("bf16", TWOSTEP);
+    let int8 = run("int8", TWOSTEP);
+    let hier = run("int8", AlgoPolicy::Fixed(Algo::Hier));
     assert!((int8 - bf16).abs() < 0.15, "bf16 {bf16} vs int8 {int8}");
     assert!((hier - int8).abs() < 0.15, "two-step {int8} vs hier {hier}");
 }

@@ -1,7 +1,7 @@
 //! Robustness and failure-injection tests: corrupted payloads, degenerate
 //! sizes, format stability. None of these need artifacts.
 
-use flashcomm::comm::{fabric, hier, pipeline, ring, twostep};
+use flashcomm::comm::{fabric, Algo, AlgoPolicy, Communicator};
 use flashcomm::quant::{Codec, CodecBuffers};
 use flashcomm::topo::{presets, Topology};
 use flashcomm::util::proptest::cases;
@@ -78,13 +78,24 @@ fn collectives_handle_degenerate_lengths() {
             let inputs = &inputs;
             let t = if which >= 2 { &l40 } else { &topo };
             let (results, _) = fabric::run_ranks(t, |h| {
-                let mut d = inputs[h.rank].clone();
+                let mut c = Communicator::from_handle(h);
+                let mut d = inputs[c.rank()].clone();
                 match which {
-                    0 => ring::allreduce(&h, &mut d, &Codec::Bf16),
-                    1 => twostep::allreduce(&h, &mut d, &Codec::Bf16),
-                    2 => hier::allreduce(&h, &mut d, &Codec::Bf16),
-                    _ => pipeline::allreduce_chunked(&h, &mut d, &Codec::Bf16, 4),
+                    0 => {
+                        c.allreduce(&mut d, &Codec::Bf16, AlgoPolicy::Fixed(Algo::Ring))
+                            .map(|_| ())
+                    }
+                    1 => {
+                        c.allreduce(&mut d, &Codec::Bf16, AlgoPolicy::Fixed(Algo::TwoStep))
+                            .map(|_| ())
+                    }
+                    2 => {
+                        c.allreduce(&mut d, &Codec::Bf16, AlgoPolicy::Fixed(Algo::Hier))
+                            .map(|_| ())
+                    }
+                    _ => c.allreduce_chunked(&mut d, &Codec::Bf16, 4),
                 }
+                .unwrap();
                 d
             });
             for r in &results {
@@ -118,8 +129,9 @@ fn quantized_collective_with_tiny_chunks() {
     }
     let inputs = &inputs;
     let (results, _) = fabric::run_ranks(&topo, |h| {
-        let mut d = inputs[h.rank].clone();
-        twostep::allreduce(&h, &mut d, &codec);
+        let mut c = Communicator::from_handle(h);
+        let mut d = inputs[c.rank()].clone();
+        c.allreduce(&mut d, &codec, AlgoPolicy::Fixed(Algo::TwoStep)).unwrap();
         d
     });
     for (a, b) in results[0].iter().zip(&expected) {

@@ -3,7 +3,7 @@
 //! must produce bit-identical results whether ranks are threads over mpsc
 //! channels (InProc) or endpoints of a real TCP mesh.
 
-use flashcomm::comm::{fabric, hier, twostep};
+use flashcomm::comm::{fabric, Algo, AlgoPolicy, Communicator};
 use flashcomm::quant::Codec;
 use flashcomm::topo::{presets, Topology};
 use flashcomm::transport::{frame, inproc, tcp, Transport};
@@ -65,6 +65,30 @@ fn bits(v: &[f32]) -> Vec<u32> {
     v.iter().map(|x| x.to_bits()).collect()
 }
 
+/// One rank's collective, generic over the backend; returns the algorithm
+/// the policy resolved to alongside the reduced payload.
+fn allreduce_rank_with<T: Transport>(
+    h: fabric::RankHandle<T>,
+    d: &[Vec<f32>],
+    codec: &Codec,
+    policy: AlgoPolicy,
+) -> (Algo, Vec<f32>) {
+    let mut comm = Communicator::from_handle(h);
+    let mut v = d[comm.rank()].clone();
+    let used = comm.allreduce(&mut v, codec, policy).unwrap();
+    (used, v)
+}
+
+/// Fixed-algorithm variant returning just the payload.
+fn allreduce_rank<T: Transport>(
+    h: fabric::RankHandle<T>,
+    d: &[Vec<f32>],
+    codec: &Codec,
+    algo: Algo,
+) -> Vec<f32> {
+    allreduce_rank_with(h, d, codec, AlgoPolicy::Fixed(algo)).1
+}
+
 #[test]
 fn tcp_and_inproc_hier_allreduce_bit_identical() {
     // The acceptance pair: bit-split w4 and spike-reserved w2.
@@ -74,17 +98,11 @@ fn tcp_and_inproc_hier_allreduce_bit_identical() {
     for spec in ["int4@32", "int2-sr@32"] {
         let codec = Codec::parse(spec).unwrap();
         let d = &data;
-        let (ip, ip_counters) = fabric::run_ranks(&topo, |h| {
-            let mut v = d[h.rank].clone();
-            hier::allreduce(&h, &mut v, &codec);
-            v
+        let (ip, ip_counters) =
+            fabric::run_ranks(&topo, |h| allreduce_rank(h, d, &codec, Algo::Hier));
+        let (tc, tc_counters) = fabric::run_ranks_with(tcp::local_mesh(n).unwrap(), &topo, |h| {
+            allreduce_rank(h, d, &codec, Algo::Hier)
         });
-        let (tc, tc_counters) =
-            fabric::run_ranks_with(tcp::local_mesh(n).unwrap(), &topo, |h| {
-                let mut v = d[h.rank].clone();
-                hier::allreduce(&h, &mut v, &codec);
-                v
-            });
         for r in 0..n {
             assert_eq!(bits(&ip[r]), bits(&tc[r]), "{spec}: rank {r} diverges across backends");
         }
@@ -100,18 +118,32 @@ fn tcp_and_inproc_twostep_allreduce_bit_identical() {
     let data = inputs(n, 2048);
     let codec = Codec::parse("int2-sr@32!").unwrap();
     let d = &data;
-    let (ip, _) = fabric::run_ranks(&topo, |h| {
-        let mut v = d[h.rank].clone();
-        twostep::allreduce(&h, &mut v, &codec);
-        v
-    });
+    let (ip, _) = fabric::run_ranks(&topo, |h| allreduce_rank(h, d, &codec, Algo::TwoStep));
     let (tc, _) = fabric::run_ranks_with(tcp::local_mesh(n).unwrap(), &topo, |h| {
-        let mut v = d[h.rank].clone();
-        twostep::allreduce(&h, &mut v, &codec);
-        v
+        allreduce_rank(h, d, &codec, Algo::TwoStep)
     });
     for r in 0..n {
         assert_eq!(bits(&ip[r]), bits(&tc[r]), "rank {r}");
+    }
+}
+
+#[test]
+fn tcp_and_inproc_agree_under_auto_policy() {
+    // Auto resolves from (topology, codec, size) only, so both backends
+    // select the same algorithm and stay bit-identical.
+    let n = 4;
+    let topo = Topology::new(presets::l40(), n);
+    let data = inputs(n, 2048);
+    let codec = Codec::parse("int4@32").unwrap();
+    let d = &data;
+    let (ip, _) =
+        fabric::run_ranks(&topo, |h| allreduce_rank_with(h, d, &codec, AlgoPolicy::Auto));
+    let (tc, _) = fabric::run_ranks_with(tcp::local_mesh(n).unwrap(), &topo, |h| {
+        allreduce_rank_with(h, d, &codec, AlgoPolicy::Auto)
+    });
+    for r in 0..n {
+        assert_eq!(ip[r].0, tc[r].0, "rank {r}: algorithms diverge");
+        assert_eq!(bits(&ip[r].1), bits(&tc[r].1), "rank {r}: payloads diverge");
     }
 }
 
@@ -124,15 +156,9 @@ fn inproc_mesh_usable_via_run_ranks_with() {
     let data = inputs(n, 513);
     let codec = Codec::parse("int8").unwrap();
     let d = &data;
-    let (a, _) = fabric::run_ranks(&topo, |h| {
-        let mut v = d[h.rank].clone();
-        twostep::allreduce(&h, &mut v, &codec);
-        v
-    });
+    let (a, _) = fabric::run_ranks(&topo, |h| allreduce_rank(h, d, &codec, Algo::TwoStep));
     let (b, _) = fabric::run_ranks_with(inproc::mesh(n), &topo, |h| {
-        let mut v = d[h.rank].clone();
-        twostep::allreduce(&h, &mut v, &codec);
-        v
+        allreduce_rank(h, d, &codec, Algo::TwoStep)
     });
     assert_eq!(a, b);
 }
@@ -143,9 +169,9 @@ fn transport_stats_visible_through_rank_handle() {
     let topo = Topology::new(presets::h800(), n);
     let (stats, counters) = fabric::run_ranks_with(tcp::local_mesh(n).unwrap(), &topo, |h| {
         if h.rank == 0 {
-            h.send(1, vec![7u8; 50]);
+            h.send(1, vec![7u8; 50]).unwrap();
         } else {
-            assert_eq!(h.recv(0), vec![7u8; 50]);
+            assert_eq!(h.recv(0).unwrap(), vec![7u8; 50]);
         }
         h.transport().stats()
     });
