@@ -1,57 +1,134 @@
-//! Codec hot-path throughput: encode / decode / decode-sum per scheme.
+//! Codec hot-path throughput: encode / decode / decode-sum per scheme,
+//! through the fused single-pass kernels.
 //!
-//! `cargo bench --bench bench_quant [-- <bytes>]`
+//! ```sh
+//! cargo bench --bench bench_quant [-- [--elems N] [--iters K] [--threads 1,8]]
+//! ```
 //!
 //! This is the paper's fused-kernel cost, measured on our hot path; the
 //! relative costs here justify the `sim::cost` pass counts, and the
-//! absolute GB/s is the §Perf deliverable (before/after in EXPERIMENTS.md).
+//! absolute GB/s is the §Perf deliverable. Each run emits
+//! `rust/BENCH_codec.json` (machine-readable, same spirit as
+//! `BENCH_transport.json`) so the codec's perf trajectory is recorded
+//! across PRs: one record per (codec, thread count) with enc/dec/dec+sum
+//! GB/s, the input size, and the wire footprint.
 
-use flashcomm::quant::{Codec, CodecBuffers};
+use flashcomm::cli::Args;
+use flashcomm::quant::{Codec, CodecBuffers, PAR_MIN_ELEMS};
 use flashcomm::util::timer::{bench, fmt_bytes};
 use flashcomm::util::Prng;
 
+const SPECS: &[&str] = &[
+    "bf16", "int8", "int6", "int5", "int4@32", "int3@32", "int2@32", "int2-sr@32",
+    "int2-sr@32!", "int4-had@32", "int3-log@32",
+];
+
 fn main() {
-    let n: usize = std::env::args()
-        .skip_while(|a| a != "--")
-        .nth(1)
+    // `cargo bench` injects a literal `--bench` token; drop it before
+    // parsing real flags. A bare positional is accepted as the element
+    // count for backward compatibility with the old invocation.
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench" && a != "--"))
+        .unwrap_or_default();
+    let n: usize = args
+        .flag("elems")
+        .or_else(|| args.flag("n"))
+        .or_else(|| {
+            // Legacy positional form; Args puts the first bare token in
+            // `command` since benches have no subcommands.
+            if args.command.is_empty() {
+                None
+            } else {
+                Some(args.command.as_str())
+            }
+        })
         .and_then(|s| s.parse().ok())
         .unwrap_or(1 << 22); // 4M f32 = 16 MiB
+    let iters: usize = args.flag("iters").and_then(|s| s.parse().ok()).unwrap_or(5);
+    let threads_list: Vec<usize> = match args.flag("threads") {
+        Some(csv) => csv.split(',').filter_map(|s| s.trim().parse().ok()).collect(),
+        None => {
+            let avail = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+            if avail > 1 {
+                vec![1, avail]
+            } else {
+                vec![1]
+            }
+        }
+    };
     let mut rng = Prng::new(1);
     let mut data = vec![0f32; n];
     rng.fill_activations(&mut data, 1.0);
     let in_bytes = 4 * n;
 
-    println!("codec throughput over {} of activations (single core)", fmt_bytes(in_bytes));
-    println!(
-        "{:<14} {:>11} {:>11} {:>11} {:>9}",
-        "codec", "enc GB/s", "dec GB/s", "dec+sum", "wire%"
-    );
-    for spec in [
-        "bf16", "int8", "int6", "int5", "int4@32", "int3@32", "int2@32", "int2-sr@32",
-        "int2-sr@32!", "int4-had@32", "int3-log@32",
-    ] {
-        let codec = Codec::parse(spec).unwrap();
-        let mut bufs = CodecBuffers::default();
-        let mut wire = Vec::with_capacity(codec.wire_len(n));
-        let enc = bench(1, 5, || {
-            wire.clear();
-            codec.encode_with(&data, &mut bufs, &mut wire);
-        });
-        let mut out = vec![0f32; n];
-        let dec = bench(1, 5, || {
-            Codec::decode_with(&wire, &mut bufs, &mut out).unwrap();
-        });
-        let mut acc = vec![0f32; n];
-        let ds = bench(1, 5, || {
-            Codec::decode_sum_with(&wire, &mut bufs, &mut acc).unwrap();
-        });
+    let mut records = Vec::new();
+    for &threads in &threads_list {
+        // Below the kernels' parallel threshold every thread count runs
+        // serially — record that, so the perf-trajectory JSON never shows
+        // fabricated thread scaling.
+        let parallel_engaged = threads > 1 && n >= PAR_MIN_ELEMS;
         println!(
-            "{:<14} {:>11.3} {:>11.3} {:>11.3} {:>8.1}%",
-            spec,
-            enc.gbps(in_bytes),
-            dec.gbps(in_bytes),
-            ds.gbps(in_bytes),
-            100.0 * wire.len() as f64 / (2 * n) as f64,
+            "codec throughput over {} of activations ({} codec thread{}{})",
+            fmt_bytes(in_bytes),
+            threads,
+            if threads == 1 { "" } else { "s" },
+            if threads > 1 && !parallel_engaged { ", below parallel threshold: serial" } else { "" }
         );
+        println!(
+            "{:<14} {:>11} {:>11} {:>11} {:>9}",
+            "codec", "enc GB/s", "dec GB/s", "dec+sum", "wire%"
+        );
+        for spec in SPECS {
+            let codec = Codec::parse(spec).unwrap();
+            let mut bufs = CodecBuffers::default();
+            let mut wire = Vec::with_capacity(codec.wire_len(n));
+            let enc = bench(1, iters, || {
+                wire.clear();
+                codec.encode_with_threads(&data, &mut bufs, &mut wire, threads);
+            });
+            let mut out = vec![0f32; n];
+            let dec = bench(1, iters, || {
+                Codec::decode_with_threads(&wire, &mut bufs, &mut out, threads).unwrap();
+            });
+            let mut acc = vec![0f32; n];
+            let ds = bench(1, iters, || {
+                Codec::decode_sum_with_threads(&wire, &mut bufs, &mut acc, threads).unwrap();
+            });
+            println!(
+                "{:<14} {:>11.3} {:>11.3} {:>11.3} {:>8.1}%",
+                spec,
+                enc.gbps(in_bytes),
+                dec.gbps(in_bytes),
+                ds.gbps(in_bytes),
+                100.0 * wire.len() as f64 / (2 * n) as f64,
+            );
+            records.push(format!(
+                concat!(
+                    "  {{\"codec\": \"{}\", \"threads\": {}, \"parallel_engaged\": {}, ",
+                    "\"elems\": {}, \"input_bytes\": {}, \"wire_bytes\": {}, ",
+                    "\"enc_gbps\": {:.3}, \"dec_gbps\": {:.3}, \"dec_sum_gbps\": {:.3}, ",
+                    "\"enc_ms\": {:.3}, \"dec_ms\": {:.3}, \"dec_sum_ms\": {:.3}}}"
+                ),
+                spec,
+                threads,
+                parallel_engaged,
+                n,
+                in_bytes,
+                wire.len(),
+                enc.gbps(in_bytes),
+                dec.gbps(in_bytes),
+                ds.gbps(in_bytes),
+                enc.secs() * 1e3,
+                dec.secs() * 1e3,
+                ds.secs() * 1e3,
+            ));
+        }
+        println!();
+    }
+
+    let json = format!("[\n{}\n]\n", records.join(",\n"));
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_codec.json");
+    match std::fs::write(path, json) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
     }
 }

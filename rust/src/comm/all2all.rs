@@ -27,7 +27,8 @@ pub(crate) fn all2all<T: Transport>(
     sends: &[Vec<f32>],
     codec: &Codec,
 ) -> Result<Vec<Vec<f32>>, CommError> {
-    let Communicator { handle: h, bufs, .. } = c;
+    let Communicator { handle: h, bufs, codec_threads, .. } = c;
+    let t = *codec_threads;
     if sends.len() != h.n {
         return Err(CommError::shape(format!(
             "{} payloads for a {}-rank all2all (one per destination)",
@@ -37,17 +38,17 @@ pub(crate) fn all2all<T: Transport>(
     }
     for (dst, payload) in sends.iter().enumerate() {
         if dst != h.rank {
-            h.send(dst, encode(codec, payload, bufs))?;
+            h.send(dst, encode(codec, payload, bufs, t))?;
         }
     }
     let mut out = Vec::with_capacity(h.n);
     for src in 0..h.n {
         let wire = if src == h.rank {
-            encode(codec, &sends[src], bufs)
+            encode(codec, &sends[src], bufs, t)
         } else {
             h.recv(src)?
         };
-        out.push(decode_validated(src, &wire, bufs)?);
+        out.push(decode_validated(src, &wire, bufs, t)?);
     }
     Ok(out)
 }
@@ -60,6 +61,7 @@ fn decode_validated(
     src: usize,
     wire: &[u8],
     bufs: &mut CodecBuffers,
+    threads: usize,
 ) -> Result<Vec<f32>, CommError> {
     let header = Header::parse(wire).map_err(|e| CommError::decode(src, e))?;
     let n = header.n as usize;
@@ -75,7 +77,8 @@ fn decode_validated(
         ));
     }
     let mut buf = vec![0f32; n];
-    Codec::decode_with(wire, bufs, &mut buf).map_err(|e| CommError::decode(src, e))?;
+    Codec::decode_with_threads(wire, bufs, &mut buf, threads)
+        .map_err(|e| CommError::decode(src, e))?;
     Ok(buf)
 }
 
@@ -232,7 +235,7 @@ mod tests {
         // n lives at header bytes 8..12 (little-endian).
         wire[8..12].copy_from_slice(&u32::MAX.to_le_bytes());
         let mut bufs = CodecBuffers::default();
-        let err = decode_validated(3, &wire, &mut bufs).unwrap_err();
+        let err = decode_validated(3, &wire, &mut bufs, 1).unwrap_err();
         match &err {
             CommError::Header { peer, detail } => {
                 assert_eq!(*peer, 3);
@@ -245,13 +248,13 @@ mod tests {
         let mut wire = codec.encode(&vec![1.0f32; 256]);
         wire[8..12].copy_from_slice(&8u32.to_le_bytes());
         assert!(matches!(
-            decode_validated(0, &wire, &mut bufs).unwrap_err(),
+            decode_validated(0, &wire, &mut bufs, 1).unwrap_err(),
             CommError::Header { .. }
         ));
 
         // An intact payload still decodes.
         let wire = codec.encode(&vec![1.0f32; 256]);
-        let out = decode_validated(0, &wire, &mut bufs).unwrap();
+        let out = decode_validated(0, &wire, &mut bufs, 1).unwrap();
         assert_eq!(out.len(), 256);
     }
 }

@@ -57,6 +57,10 @@ pub struct Communicator<T: Transport = InProcTransport> {
     /// (topology, codec, size), so repeated same-shape calls skip it and
     /// the hot path stays allocation-free after warmup.
     auto_cache: Option<(Codec, usize, Algo)>,
+    /// Worker threads the fused codec kernels may use per encode/decode
+    /// (chunk parallelism for large payloads). Defaults to 1; see
+    /// [`Communicator::set_codec_threads`].
+    pub(crate) codec_threads: usize,
 }
 
 impl<T: Transport> Communicator<T> {
@@ -89,7 +93,27 @@ impl<T: Transport> Communicator<T> {
             acc: Vec::new(),
             reduced: Vec::new(),
             auto_cache: None,
+            codec_threads: 1,
         }
+    }
+
+    /// Let the fused codec kernels chunk large payloads across up to
+    /// `threads` scoped worker threads (quantize+pack and unpack+reduce are
+    /// the CPU-bound part of every collective). Wire bytes are identical
+    /// for every thread count. Defaults to 1: in-process rank groups
+    /// ([`LocalGroup`]) already run one OS thread per rank, so extra codec
+    /// threads would oversubscribe the host — raise this only where a rank
+    /// owns the process (e.g. `flashcomm worker` with spare cores). Clamped
+    /// to `1..=`[`quant::MAX_CODEC_THREADS`](crate::quant::MAX_CODEC_THREADS),
+    /// the kernels' hard worker cap.
+    pub fn set_codec_threads(&mut self, threads: usize) {
+        self.codec_threads = threads.clamp(1, crate::quant::MAX_CODEC_THREADS);
+    }
+
+    /// Current codec worker-thread budget (see
+    /// [`set_codec_threads`](Communicator::set_codec_threads)).
+    pub fn codec_threads(&self) -> usize {
+        self.codec_threads
     }
 
     /// This rank's index in `0..n()`.

@@ -26,7 +26,8 @@ pub(crate) fn allreduce<T: Transport>(
     data: &mut [f32],
     codec: &Codec,
 ) -> Result<(), CommError> {
-    let Communicator { handle: h, bufs, acc, .. } = c;
+    let Communicator { handle: h, bufs, acc, codec_threads, .. } = c;
+    let t = *codec_threads;
     let topo = h.topo().clone();
     if topo.numa_groups != 2 {
         return Err(CommError::topology(
@@ -43,7 +44,7 @@ pub(crate) fn allreduce<T: Transport>(
         let peer = group.start + peer_j;
         if peer != h.rank {
             let r = chunk_range(data.len(), s, peer_j);
-            h.send(peer, encode(codec, &data[r], bufs))?;
+            h.send(peer, encode(codec, &data[r], bufs, t))?;
         }
     }
     let own = chunk_range(data.len(), s, j);
@@ -53,7 +54,8 @@ pub(crate) fn allreduce<T: Transport>(
         let peer = group.start + peer_j;
         if peer != h.rank {
             let wire = h.recv(peer)?;
-            Codec::decode_sum_with(&wire, bufs, acc).map_err(|e| CommError::decode(peer, e))?;
+            Codec::decode_sum_with_threads(&wire, bufs, acc, t)
+                .map_err(|e| CommError::decode(peer, e))?;
         }
     }
 
@@ -61,7 +63,7 @@ pub(crate) fn allreduce<T: Transport>(
     // the *decoded* images of both partials in group order, so the two
     // groups end bit-identical despite the lossy wire.
     let peer = topo.bridge_peer(h.rank);
-    let wire_mine = encode(codec, acc, bufs);
+    let wire_mine = encode(codec, acc, bufs, t);
     h.send(peer, wire_mine.clone())?;
     let wire_peer = h.recv(peer)?;
     // Blame decode failures on the payload's actual source: one of the two
@@ -72,24 +74,27 @@ pub(crate) fn allreduce<T: Transport>(
         (&wire_peer, peer, &wire_mine, h.rank)
     };
     acc.iter_mut().for_each(|x| *x = 0.0);
-    Codec::decode_sum_with(first, bufs, acc).map_err(|e| CommError::decode(f_src, e))?;
-    Codec::decode_sum_with(second, bufs, acc).map_err(|e| CommError::decode(s_src, e))?;
+    Codec::decode_sum_with_threads(first, bufs, acc, t)
+        .map_err(|e| CommError::decode(f_src, e))?;
+    Codec::decode_sum_with_threads(second, bufs, acc, t)
+        .map_err(|e| CommError::decode(s_src, e))?;
 
     // Stage 3 — partial all-gather within the NUMA group.
-    let wire = encode(codec, acc, bufs);
+    let wire = encode(codec, acc, bufs, t);
     for peer_j in 0..s {
         let p = group.start + peer_j;
         if p != h.rank {
             h.send(p, wire.clone())?;
         }
     }
-    Codec::decode_with(&wire, bufs, &mut data[own]).map_err(|e| CommError::decode(h.rank, e))?;
+    Codec::decode_with_threads(&wire, bufs, &mut data[own], t)
+        .map_err(|e| CommError::decode(h.rank, e))?;
     for peer_j in 0..s {
         let p = group.start + peer_j;
         if p != h.rank {
             let wire = h.recv(p)?;
             let r = chunk_range(data.len(), s, peer_j);
-            Codec::decode_with(&wire, bufs, &mut data[r])
+            Codec::decode_with_threads(&wire, bufs, &mut data[r], t)
                 .map_err(|e| CommError::decode(p, e))?;
         }
     }

@@ -183,9 +183,16 @@ pub fn chunk_range(len: usize, parts: usize, i: usize) -> std::ops::Range<usize>
 }
 
 /// Encode a slice with scratch reuse (helper shared by the collectives).
-pub(crate) fn encode(codec: &Codec, data: &[f32], bufs: &mut CodecBuffers) -> Vec<u8> {
+/// `threads` is the communicator's codec worker budget — the fused kernels
+/// chunk large payloads across that many scoped threads.
+pub(crate) fn encode(
+    codec: &Codec,
+    data: &[f32],
+    bufs: &mut CodecBuffers,
+    threads: usize,
+) -> Vec<u8> {
     let mut out = Vec::with_capacity(codec.wire_len(data.len()));
-    codec.encode_with(data, bufs, &mut out);
+    codec.encode_with_threads(data, bufs, &mut out, threads);
     out
 }
 

@@ -23,7 +23,8 @@ pub(crate) fn allreduce_chunked<T: Transport>(
     codec: &Codec,
     chunks: usize,
 ) -> Result<(), CommError> {
-    let Communicator { handle: h, bufs, reduced, .. } = c;
+    let Communicator { handle: h, bufs, reduced, codec_threads, .. } = c;
+    let t = *codec_threads;
     let topo = h.topo().clone();
     if topo.numa_groups != 2 {
         return Err(CommError::topology(
@@ -45,7 +46,7 @@ pub(crate) fn allreduce_chunked<T: Transport>(
             let peer = group.start + peer_j;
             if peer != h.rank {
                 let r = chunk_range(micro.len(), s, peer_j);
-                h.send(peer, encode(codec, &micro[r], bufs))?;
+                h.send(peer, encode(codec, &micro[r], bufs, t))?;
             }
         }
     }
@@ -68,14 +69,14 @@ pub(crate) fn allreduce_chunked<T: Transport>(
             let peer = group.start + peer_j;
             if peer != h.rank {
                 let wire = h.recv(peer)?;
-                Codec::decode_sum_with(&wire, bufs, acc)
+                Codec::decode_sum_with_threads(&wire, bufs, acc, t)
                     .map_err(|e| CommError::decode(peer, e))?;
             }
         }
         // Bridge exchange for this micro-chunk (symmetric QDQ in group
         // order — see hier.rs — so both NUMA groups stay bit-identical).
         let peer = topo.bridge_peer(h.rank);
-        let wire_mine = encode(codec, acc, bufs);
+        let wire_mine = encode(codec, acc, bufs, t);
         h.send(peer, wire_mine.clone())?;
         let wire_peer = h.recv(peer)?;
         // Decode failures name the payload's actual source (see hier.rs).
@@ -85,14 +86,15 @@ pub(crate) fn allreduce_chunked<T: Transport>(
             (&wire_peer, peer, &wire_mine, h.rank)
         };
         acc.iter_mut().for_each(|x| *x = 0.0);
-        Codec::decode_sum_with(first, bufs, acc).map_err(|e| CommError::decode(f_src, e))?;
-        Codec::decode_sum_with(second, bufs, acc)
+        Codec::decode_sum_with_threads(first, bufs, acc, t)
+            .map_err(|e| CommError::decode(f_src, e))?;
+        Codec::decode_sum_with_threads(second, bufs, acc, t)
             .map_err(|e| CommError::decode(s_src, e))?;
     }
 
     // Phase C: all-gather every micro-chunk's reduced sub-chunk.
     for (chunk, acc) in reduced.iter().take(k).enumerate() {
-        let wire = encode(codec, acc, bufs);
+        let wire = encode(codec, acc, bufs, t);
         for peer_j in 0..s {
             let p = group.start + peer_j;
             if p != h.rank {
@@ -102,7 +104,7 @@ pub(crate) fn allreduce_chunked<T: Transport>(
         let mr = chunk_range(data.len(), k, chunk);
         let own = chunk_range(mr.len(), s, j);
         let own_abs = mr.start + own.start..mr.start + own.end;
-        Codec::decode_with(&wire, bufs, &mut data[own_abs])
+        Codec::decode_with_threads(&wire, bufs, &mut data[own_abs], t)
             .map_err(|e| CommError::decode(h.rank, e))?;
     }
     for chunk in 0..k {
@@ -113,7 +115,7 @@ pub(crate) fn allreduce_chunked<T: Transport>(
                 let wire = h.recv(p)?;
                 let r = chunk_range(mr.len(), s, peer_j);
                 let abs = mr.start + r.start..mr.start + r.end;
-                Codec::decode_with(&wire, bufs, &mut data[abs])
+                Codec::decode_with_threads(&wire, bufs, &mut data[abs], t)
                     .map_err(|e| CommError::decode(p, e))?;
             }
         }

@@ -19,7 +19,8 @@ pub(crate) fn allreduce<T: Transport>(
     data: &mut [f32],
     codec: &Codec,
 ) -> Result<(), CommError> {
-    let Communicator { handle: h, bufs, scratch, .. } = c;
+    let Communicator { handle: h, bufs, scratch, codec_threads, .. } = c;
+    let t = *codec_threads;
     let n = h.n;
     if n == 1 {
         return Ok(());
@@ -33,12 +34,13 @@ pub(crate) fn allreduce<T: Transport>(
         let send_c = (h.rank + n - step) % n;
         let recv_c = (h.rank + n - step - 1) % n;
         let sr = chunk_range(data.len(), n, send_c);
-        h.send(next, encode(codec, &data[sr], bufs))?;
+        h.send(next, encode(codec, &data[sr], bufs, t))?;
         let wire = h.recv(prev)?;
         let rr = chunk_range(data.len(), n, recv_c);
         scratch.resize(rr.len(), 0.0);
         scratch.copy_from_slice(&data[rr.clone()]);
-        Codec::decode_sum_with(&wire, bufs, scratch).map_err(|e| CommError::decode(prev, e))?;
+        Codec::decode_sum_with_threads(&wire, bufs, scratch, t)
+            .map_err(|e| CommError::decode(prev, e))?;
         data[rr].copy_from_slice(scratch);
     }
 
@@ -47,20 +49,22 @@ pub(crate) fn allreduce<T: Transport>(
     let own = (h.rank + 1) % n;
     {
         let or = chunk_range(data.len(), n, own);
-        let wire = encode(codec, &data[or.clone()], bufs);
+        let wire = encode(codec, &data[or.clone()], bufs, t);
         scratch.resize(or.len(), 0.0);
-        Codec::decode_with(&wire, bufs, scratch).map_err(|e| CommError::decode(h.rank, e))?;
+        Codec::decode_with_threads(&wire, bufs, scratch, t)
+            .map_err(|e| CommError::decode(h.rank, e))?;
         data[or].copy_from_slice(scratch);
     }
     for step in 0..n - 1 {
         let send_c = (h.rank + 1 + n - step) % n;
         let recv_c = (h.rank + n - step) % n;
         let sr = chunk_range(data.len(), n, send_c);
-        h.send(next, encode(codec, &data[sr], bufs))?;
+        h.send(next, encode(codec, &data[sr], bufs, t))?;
         let wire = h.recv(prev)?;
         let rr = chunk_range(data.len(), n, recv_c);
         scratch.resize(rr.len(), 0.0);
-        Codec::decode_with(&wire, bufs, scratch).map_err(|e| CommError::decode(prev, e))?;
+        Codec::decode_with_threads(&wire, bufs, scratch, t)
+            .map_err(|e| CommError::decode(prev, e))?;
         data[rr].copy_from_slice(scratch);
     }
     Ok(())

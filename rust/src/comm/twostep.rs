@@ -32,7 +32,8 @@ pub(crate) fn reduce_scatter<T: Transport>(
     data: &mut [f32],
     codec: &Codec,
 ) -> Result<std::ops::Range<usize>, CommError> {
-    let Communicator { handle: h, bufs, acc, .. } = c;
+    let Communicator { handle: h, bufs, acc, codec_threads, .. } = c;
+    let t = *codec_threads;
     let n = h.n;
     let own = chunk_range(data.len(), n, h.rank);
     if n == 1 {
@@ -41,7 +42,7 @@ pub(crate) fn reduce_scatter<T: Transport>(
     for dst in 0..n {
         if dst != h.rank {
             let r = chunk_range(data.len(), n, dst);
-            h.send(dst, encode(codec, &data[r], bufs))?;
+            h.send(dst, encode(codec, &data[r], bufs, t))?;
         }
     }
     acc.clear();
@@ -49,7 +50,8 @@ pub(crate) fn reduce_scatter<T: Transport>(
     for src in 0..n {
         if src != h.rank {
             let wire = h.recv(src)?;
-            Codec::decode_sum_with(&wire, bufs, acc).map_err(|e| CommError::decode(src, e))?;
+            Codec::decode_sum_with_threads(&wire, bufs, acc, t)
+                .map_err(|e| CommError::decode(src, e))?;
         }
     }
     data[own.clone()].copy_from_slice(acc);
@@ -63,24 +65,26 @@ pub(crate) fn all_gather<T: Transport>(
     data: &mut [f32],
     codec: &Codec,
 ) -> Result<(), CommError> {
-    let Communicator { handle: h, bufs, .. } = c;
+    let Communicator { handle: h, bufs, codec_threads, .. } = c;
+    let t = *codec_threads;
     let n = h.n;
     if n == 1 {
         return Ok(());
     }
     let own = chunk_range(data.len(), n, h.rank);
-    let wire = encode(codec, &data[own.clone()], bufs);
+    let wire = encode(codec, &data[own.clone()], bufs, t);
     for dst in 0..n {
         if dst != h.rank {
             h.send(dst, wire.clone())?;
         }
     }
-    Codec::decode_with(&wire, bufs, &mut data[own]).map_err(|e| CommError::decode(h.rank, e))?;
+    Codec::decode_with_threads(&wire, bufs, &mut data[own], t)
+        .map_err(|e| CommError::decode(h.rank, e))?;
     for src in 0..n {
         if src != h.rank {
             let wire = h.recv(src)?;
             let r = chunk_range(data.len(), n, src);
-            Codec::decode_with(&wire, bufs, &mut data[r])
+            Codec::decode_with_threads(&wire, bufs, &mut data[r], t)
                 .map_err(|e| CommError::decode(src, e))?;
         }
     }
@@ -95,7 +99,8 @@ pub(crate) fn broadcast<T: Transport>(
     root: usize,
     codec: &Codec,
 ) -> Result<(), CommError> {
-    let Communicator { handle: h, bufs, .. } = c;
+    let Communicator { handle: h, bufs, codec_threads, .. } = c;
+    let t = *codec_threads;
     let n = h.n;
     if root >= n {
         return Err(CommError::shape(format!("broadcast root {root} out of range 0..{n}")));
@@ -104,16 +109,18 @@ pub(crate) fn broadcast<T: Transport>(
         return Ok(());
     }
     if h.rank == root {
-        let wire = encode(codec, data, bufs);
+        let wire = encode(codec, data, bufs, t);
         for dst in 0..n {
             if dst != root {
                 h.send(dst, wire.clone())?;
             }
         }
-        Codec::decode_with(&wire, bufs, data).map_err(|e| CommError::decode(root, e))?;
+        Codec::decode_with_threads(&wire, bufs, data, t)
+            .map_err(|e| CommError::decode(root, e))?;
     } else {
         let wire = h.recv(root)?;
-        Codec::decode_with(&wire, bufs, data).map_err(|e| CommError::decode(root, e))?;
+        Codec::decode_with_threads(&wire, bufs, data, t)
+            .map_err(|e| CommError::decode(root, e))?;
     }
     Ok(())
 }

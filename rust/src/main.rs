@@ -9,7 +9,7 @@
 //!                   [--algo twostep|hier|auto] [--batches N]
 //! flashcomm ttft    [--prompt N] [--batch N]
 //! flashcomm worker  [--world N] [--algo hier|auto] [--codecs int4@32,int2-sr@32]
-//!                   [--len N] [--root host:port] [--rank R]
+//!                   [--len N] [--root host:port] [--rank R] [--codec-threads T]
 //! flashcomm info
 //! ```
 //!
@@ -196,13 +196,17 @@ fn cmd_worker(args: &Args) -> Result<()> {
     let policy: AlgoPolicy = algo.parse()?;
     preset_topo(world, policy)?;
     let codecs = args.flag_or("codecs", "int4@32,int2-sr@32");
+    // Codec worker threads per rank: each rank owns its process here, so
+    // large payloads may fan the fused quantize/pack kernels out (the
+    // in-process reference always runs 1 to avoid oversubscription).
+    let codec_threads = args.flag_usize("codec-threads", 1)?;
     match args.flag("rank") {
         Some(r) => {
             let rank: usize = r.parse().with_context(|| format!("--rank {r}"))?;
             let root = args.require("root")?;
-            worker_rank(rank, world, len, &algo, &codecs, root)
+            worker_rank(rank, world, len, &algo, &codecs, root, codec_threads)
         }
-        None => worker_launch(world, len, &algo, &codecs, args.flag("root")),
+        None => worker_launch(world, len, &algo, &codecs, args.flag("root"), codec_threads),
     }
 }
 
@@ -212,6 +216,7 @@ fn worker_launch(
     algo: &str,
     codecs: &str,
     root: Option<&str>,
+    codec_threads: usize,
 ) -> Result<()> {
     let root = match root {
         Some(r) => r.to_string(),
@@ -240,6 +245,7 @@ fn worker_launch(
             .args(["--len", &len.to_string()])
             .args(["--algo", algo])
             .args(["--codecs", codecs])
+            .args(["--codec-threads", &codec_threads.to_string()])
             .spawn()
             .with_context(|| format!("spawning worker rank {rank}"))?;
         children.push((rank, child));
@@ -264,6 +270,7 @@ fn worker_rank(
     algo_str: &str,
     codecs: &str,
     root: &str,
+    codec_threads: usize,
 ) -> Result<()> {
     let policy: AlgoPolicy = algo_str.parse()?;
     let topo = preset_topo(world, policy)?;
@@ -271,6 +278,7 @@ fn worker_rank(
         .with_context(|| format!("rank {rank} bootstrapping the TCP mesh at {root}"))?;
     let mut comm =
         Communicator::new(tcp, topo.clone(), Arc::new(fabric::ByteCounters::default()))?;
+    comm.set_codec_threads(codec_threads);
 
     // Deterministic heavy-tailed inputs, identical in every process (and in
     // the in-process reference below).

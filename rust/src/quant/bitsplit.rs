@@ -47,17 +47,83 @@ pub fn packed_len(bits: u8, n: usize) -> usize {
     planes_for(bits).iter().map(|&w| plane_len(w, n)).sum()
 }
 
+/// Load up to `k` little-endian bytes starting at `off` (tail-safe: short
+/// or out-of-range reads zero-pad). The one u64 loader shared by
+/// `pack_plane`, `unpack_plane`, and the fused kernels.
 #[inline(always)]
-fn load8(codes: &[u8], i: usize) -> u64 {
-    // Load up to 8 codes starting at i as a little-endian u64 (tail-safe).
-    let rem = codes.len() - i;
-    if rem >= 8 {
-        u64::from_le_bytes(codes[i..i + 8].try_into().unwrap())
-    } else {
-        let mut b = [0u8; 8];
-        b[..rem].copy_from_slice(&codes[i..]);
-        u64::from_le_bytes(b)
+pub(crate) fn load_le(bytes: &[u8], off: usize, k: usize) -> u64 {
+    if k == 8 && bytes.len() >= off + 8 {
+        return u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap());
     }
+    if off >= bytes.len() {
+        return 0;
+    }
+    let avail = (bytes.len() - off).min(k);
+    let mut b = [0u8; 8];
+    b[..avail].copy_from_slice(&bytes[off..off + avail]);
+    u64::from_le_bytes(b)
+}
+
+// --- SWAR block primitives ----------------------------------------------
+//
+// One u64 holds 8 codes, one per byte (little-endian element order). The
+// `fold*` functions compress the plane bits of those 8 codes into the
+// plane's wire bytes; the `spread*` functions are their exact inverses.
+// They are shared by `pack_plane`/`unpack_plane` here and by the fused
+// single-pass kernels in [`super::fused`], which is what guarantees the
+// fused encoder stays bit-identical to this packer.
+
+/// Fold the low nibble of each of 8 code bytes into 4 wire bytes
+/// (returned at bit offsets 0, 16, 32, 48 of the result).
+#[inline(always)]
+pub(crate) fn fold4(v: u64) -> u64 {
+    let v = v & 0x0F0F_0F0F_0F0F_0F0F;
+    // Fold adjacent nibble pairs: byte k = nib(2k) | nib(2k+1)<<4.
+    let folded = (v | (v >> 4)) & 0x00FF_00FF_00FF_00FF;
+    folded | (folded >> 8)
+}
+
+/// Fold the low 2 bits of each of 8 code bytes into 2 wire bytes
+/// (returned at bit offsets 0 and 32).
+#[inline(always)]
+pub(crate) fn fold2(v: u64) -> u64 {
+    let v = v & 0x0303_0303_0303_0303;
+    let p1 = (v | (v >> 6)) & 0x000F_000F_000F_000F; // pairs per u16
+    p1 | (p1 >> 12) // byte per u32
+}
+
+/// Gather the lsb of each of 8 code bytes into one wire byte (bit i of the
+/// result is the lsb of byte i — the classic 0x0102…80 multiply).
+#[inline(always)]
+pub(crate) fn fold1(v: u64) -> u8 {
+    ((v & 0x0101_0101_0101_0101).wrapping_mul(0x0102_0408_1020_4080) >> 56) as u8
+}
+
+/// Spread 4 wire bytes (8 packed nibbles, passed as the low 32 bits) back
+/// to one nibble per byte. Inverse of [`fold4`].
+#[inline(always)]
+pub(crate) fn spread4(x: u64) -> u64 {
+    let y = (x | (x << 16)) & 0x0000_FFFF_0000_FFFF;
+    let y = (y | (y << 8)) & 0x00FF_00FF_00FF_00FF;
+    (y | (y << 4)) & 0x0F0F_0F0F_0F0F_0F0F
+}
+
+/// Spread 2 wire bytes (8 packed 2-bit fields, low 16 bits) back to one
+/// field per byte. Inverse of [`fold2`].
+#[inline(always)]
+pub(crate) fn spread2(x: u64) -> u64 {
+    let y = (x | (x << 24)) & 0x0000_00FF_0000_00FF;
+    let y = (y | (y << 12)) & 0x000F_000F_000F_000F;
+    (y | (y << 6)) & 0x0303_0303_0303_0303
+}
+
+/// Spread 1 wire byte (8 packed bits, low 8 bits) back to one bit per
+/// byte. Inverse of [`fold1`].
+#[inline(always)]
+pub(crate) fn spread1(x: u64) -> u64 {
+    let y = (x | (x << 28)) & 0x0000_000F_0000_000F;
+    let y = (y | (y << 14)) & 0x0003_0003_0003_0003;
+    (y | (y << 7)) & 0x0101_0101_0101_0101
 }
 
 /// Pack one plane: extract `w` bits at `shift` from each code.
@@ -68,10 +134,7 @@ fn pack_plane(codes: &[u8], w: u8, shift: u8, out: &mut Vec<u8>) {
             // 2 codes/byte: out = lo | hi<<4.
             let mut i = 0;
             while i + 8 <= n {
-                let v = (load8(codes, i) >> shift) & 0x0F0F_0F0F_0F0F_0F0F;
-                // Fold adjacent nibble pairs: byte k = nib(2k) | nib(2k+1)<<4.
-                let folded = (v | (v >> 4)) & 0x00FF_00FF_00FF_00FF;
-                let b = folded | (folded >> 8);
+                let b = fold4(load_le(codes, i, 8) >> shift);
                 out.push(b as u8);
                 out.push((b >> 16) as u8);
                 out.push((b >> 32) as u8);
@@ -89,9 +152,7 @@ fn pack_plane(codes: &[u8], w: u8, shift: u8, out: &mut Vec<u8>) {
             // 4 codes/byte.
             let mut i = 0;
             while i + 8 <= n {
-                let v = (load8(codes, i) >> shift) & 0x0303_0303_0303_0303;
-                let p1 = (v | (v >> 6)) & 0x000F_000F_000F_000F; // pairs per u16
-                let b = p1 | (p1 >> 12); // byte per u32
+                let b = fold2(load_le(codes, i, 8) >> shift);
                 out.push(b as u8);
                 out.push((b >> 32) as u8);
                 i += 8;
@@ -111,10 +172,7 @@ fn pack_plane(codes: &[u8], w: u8, shift: u8, out: &mut Vec<u8>) {
             // 8 codes/byte.
             let mut i = 0;
             while i < n {
-                let v = (load8(codes, i) >> shift) & 0x0101_0101_0101_0101;
-                // Gather the 8 lsbs into one byte (bit i of the result is
-                // the lsb of byte i — the classic 0x0102…80 multiply).
-                let byte = (v.wrapping_mul(0x0102_0408_1020_4080) >> 56) as u8;
+                let byte = fold1(load_le(codes, i, 8) >> shift);
                 let valid = (n - i).min(8);
                 out.push(byte & (0xFFu16 >> (8 - valid)) as u8);
                 i += 8;
@@ -124,32 +182,56 @@ fn pack_plane(codes: &[u8], w: u8, shift: u8, out: &mut Vec<u8>) {
     }
 }
 
+/// OR a u64 of 8 spread codes into 8 consecutive code slots.
+#[inline(always)]
+fn or_store8(codes: &mut [u8], i: usize, v: u64) {
+    let cur = u64::from_le_bytes(codes[i..i + 8].try_into().unwrap());
+    codes[i..i + 8].copy_from_slice(&(cur | v).to_le_bytes());
+}
+
 /// Unpack one plane, OR-ing `w` bits at `shift` into each code slot.
+///
+/// Mirrors `pack_plane`'s u64 fast paths: full 8-code blocks go through
+/// the branch-free `spread*` gathers, only the tail runs per-element.
 fn unpack_plane(bytes: &[u8], w: u8, shift: u8, codes: &mut [u8]) {
     let n = codes.len();
+    let mut i = 0;
     match w {
         4 => {
-            for (i, c) in codes.iter_mut().enumerate() {
-                let b = bytes[i / 2];
-                let nib = if i % 2 == 0 { b & 0xF } else { b >> 4 };
+            while i + 8 <= n {
+                let x = load_le(bytes, i / 2, 4);
+                or_store8(codes, i, spread4(x) << shift);
+                i += 8;
+            }
+            for (k, c) in codes.iter_mut().enumerate().skip(i) {
+                let b = bytes[k / 2];
+                let nib = if k % 2 == 0 { b & 0xF } else { b >> 4 };
                 *c |= nib << shift;
             }
         }
         2 => {
-            for (i, c) in codes.iter_mut().enumerate() {
-                let b = bytes[i / 4];
-                *c |= ((b >> (2 * (i % 4))) & 0x3) << shift;
+            while i + 8 <= n {
+                let x = load_le(bytes, i / 4, 2);
+                or_store8(codes, i, spread2(x) << shift);
+                i += 8;
+            }
+            for (k, c) in codes.iter_mut().enumerate().skip(i) {
+                let b = bytes[k / 4];
+                *c |= ((b >> (2 * (k % 4))) & 0x3) << shift;
             }
         }
         1 => {
-            for (i, c) in codes.iter_mut().enumerate() {
-                let b = bytes[i / 8];
-                *c |= ((b >> (i % 8)) & 0x1) << shift;
+            while i + 8 <= n {
+                or_store8(codes, i, spread1(bytes[i / 8] as u64) << shift);
+                i += 8;
+            }
+            for (k, c) in codes.iter_mut().enumerate().skip(i) {
+                let b = bytes[k / 8];
+                *c |= ((b >> (k % 8)) & 0x1) << shift;
             }
         }
         _ => unreachable!(),
     }
-    let _ = n;
 }
 
 /// Pack `codes` (each < 2^bits) into bit-split planes appended to `out`.
@@ -254,6 +336,30 @@ mod tests {
         let four_bit_region = plane_len(4, n);
         assert_eq!(pa[..four_bit_region], pb[..four_bit_region], "4-bit plane must not change");
         assert_ne!(pa[four_bit_region..], pb[four_bit_region..], "1-bit plane must change");
+    }
+
+    #[test]
+    fn spread_inverts_fold_through_the_wire_layout() {
+        // fold* return wire bytes at the offsets pack_plane extracts them
+        // from (0/16/32/48 for 4-bit, 0/32 for 2-bit); spread* consume the
+        // *contiguous* wire bytes a decoder loads. Compact through the wire
+        // layout, exactly as PlaneSink writes and PlaneSource reads.
+        let mut rng = Prng::new(78);
+        for _ in 0..2000 {
+            let v = (rng.next_u64()) & 0x0F0F_0F0F_0F0F_0F0F;
+            let f = fold4(v);
+            let wire = (f & 0xFF)
+                | ((f >> 16) & 0xFF) << 8
+                | ((f >> 32) & 0xFF) << 16
+                | ((f >> 48) & 0xFF) << 24;
+            assert_eq!(spread4(wire), v);
+            let v = v & 0x0303_0303_0303_0303;
+            let f = fold2(v);
+            let wire = (f & 0xFF) | ((f >> 32) & 0xFF) << 8;
+            assert_eq!(spread2(wire), v);
+            let v = v & 0x0101_0101_0101_0101;
+            assert_eq!(spread1(fold1(v) as u64), v);
+        }
     }
 
     #[test]

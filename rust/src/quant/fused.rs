@@ -1,0 +1,783 @@
+//! Fused single-pass codec kernels (paper §Kernel Fusion; Flash
+//! Communication V1's "fast packing" taken one step further).
+//!
+//! The unfused pipeline materializes a byte-per-value `codes` buffer
+//! between quantization and bit-split packing (and again between unpacking
+//! and dequantization) — 2x the memory traffic of the payload on each side.
+//! These kernels remove it:
+//!
+//! - **encode**: each group is quantized and its code bits are scattered
+//!   straight into the bit-split plane regions of the wire buffer. Plane
+//!   offsets are precomputable from [`packed_len`], so quantize+pack is one
+//!   pass over `data` with no intermediate buffer.
+//! - **decode / decode-sum**: a SWAR plane gather (the inverse of
+//!   `pack_plane`'s u64 folds) streams 8 codes at a time out of the planes,
+//!   feeding straight into per-group dequantize or dequantize-accumulate.
+//!   The reduce step of every collective runs scratch-free for every
+//!   scheme (RTN, Spike, Hadamard, LogFMT — Hadamard needs one group-sized
+//!   rotation buffer, owned by [`CodecBuffers`]).
+//!
+//! Payloads of at least [`PAR_MIN_ELEMS`] elements can additionally be
+//! chunked across scoped worker threads ([`std::thread::scope`]). Chunks
+//! are cut at `lcm(group_size, 8)` element boundaries so quantization
+//! groups and plane *bytes* never straddle workers: every worker owns a
+//! disjoint byte range of each plane and a disjoint slice of the per-group
+//! metadata, making the parallel wire bytes identical to the serial ones.
+//!
+//! Bit-identity with the scalar path is pinned by `tests/codec_fused.rs`
+//! (against [`super::reference`]) and by the golden wire hashes in
+//! `tests/robustness.rs`.
+
+use anyhow::Result;
+
+use super::bitsplit::{
+    fold1, fold2, fold4, load_le, packed_len, plane_len, planes_for, spread1, spread2, spread4,
+};
+use super::hadamard;
+use super::logfmt::{self, LogMeta};
+use super::rtn::{self, GroupMeta};
+use super::scheme::{Codec, CodecBuffers};
+use super::spike::{self, ScaleMode, SpikeMeta};
+use super::wire;
+
+/// Minimum payload (elements) before the chunk-parallel path engages; below
+/// this the spawn cost dwarfs the win. Re-exported as
+/// `quant::PAR_MIN_ELEMS` so callers (benches, thread-budget tuning) can
+/// tell whether a payload is parallel-eligible.
+pub const PAR_MIN_ELEMS: usize = 1 << 16;
+
+/// Hard cap on codec worker threads regardless of what a caller asks for.
+/// Re-exported as `quant::MAX_CODEC_THREADS`;
+/// `Communicator::set_codec_threads` clamps to it.
+pub const MAX_CODEC_THREADS: usize = 32;
+
+fn gcd(a: usize, b: usize) -> usize {
+    if b == 0 {
+        a
+    } else {
+        gcd(b, a % b)
+    }
+}
+
+/// Element alignment for parallel chunk cuts: a multiple of the group size
+/// (metas stay per-worker) and of 8 (plane bytes stay per-worker).
+pub(crate) fn chunk_align(group_size: usize) -> usize {
+    group_size / gcd(group_size, 8) * 8
+}
+
+/// Fewest elements a worker is worth spawning for: below this the scoped
+/// spawn+join overhead exceeds the kernel work it parallelizes.
+const MIN_ELEMS_PER_WORKER: usize = PAR_MIN_ELEMS / 8;
+
+/// Decide (worker count, elements per worker) for a payload. `per` is
+/// `chunk_align`-aligned; the last worker takes the remainder. The worker
+/// count is bounded by the thread budget AND by per-worker work, so a
+/// large `--codec-threads` on a barely-above-threshold payload does not
+/// drown the kernels in spawn overhead.
+fn plan(n: usize, group_size: usize, threads: usize) -> (usize, usize) {
+    if threads <= 1 || n < PAR_MIN_ELEMS {
+        return (1, n);
+    }
+    let align = chunk_align(group_size);
+    let max_workers = threads
+        .min(MAX_CODEC_THREADS)
+        .min(n / MIN_ELEMS_PER_WORKER)
+        .min(n.div_ceil(align))
+        .max(1);
+    let per = n.div_ceil(max_workers).div_ceil(align) * align;
+    (n.div_ceil(per), per)
+}
+
+// --- Streaming plane scatter (encode) ------------------------------------
+
+#[derive(Default)]
+struct PlaneOut<'a> {
+    w: u8,
+    shift: u8,
+    out: &'a mut [u8],
+    cur: usize,
+}
+
+/// Accepts one code per value and writes each 8-code block straight into
+/// the per-plane output slices, using the same SWAR folds as
+/// `bitsplit::pack_plane` — the wire bytes are identical by construction.
+pub(crate) struct PlaneSink<'a> {
+    planes: [PlaneOut<'a>; 3],
+    n_planes: usize,
+    buf: u64,
+    count: u32,
+}
+
+impl<'a> PlaneSink<'a> {
+    fn empty() -> Self {
+        PlaneSink { planes: Default::default(), n_planes: 0, buf: 0, count: 0 }
+    }
+
+    fn add_plane(&mut self, w: u8, shift: u8, out: &'a mut [u8]) {
+        self.planes[self.n_planes] = PlaneOut { w, shift, out, cur: 0 };
+        self.n_planes += 1;
+    }
+
+    /// Sink over the full packed `section` for `n` codes of width `bits`.
+    pub(crate) fn new(bits: u8, n: usize, section: &'a mut [u8]) -> Self {
+        debug_assert_eq!(section.len(), packed_len(bits, n));
+        let mut sink = PlaneSink::empty();
+        let mut rest = section;
+        let mut shift = 0u8;
+        for &w in planes_for(bits) {
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(plane_len(w, n));
+            sink.add_plane(w, shift, head);
+            rest = tail;
+            shift += w;
+        }
+        sink
+    }
+
+    #[inline(always)]
+    pub(crate) fn push(&mut self, code: u8) {
+        self.buf |= (code as u64) << (8 * self.count);
+        self.count += 1;
+        if self.count == 8 {
+            self.flush();
+        }
+    }
+
+    /// Scatter the pending block (up to 8 codes, zero-padded) into every
+    /// plane. Writes exactly the bytes the block's codes occupy, so the
+    /// tail block produces the same bytes as `pack_plane`'s scalar tail.
+    fn flush(&mut self) {
+        let v = self.buf;
+        let valid = self.count as usize;
+        for p in self.planes[..self.n_planes].iter_mut() {
+            let s = v >> p.shift;
+            match p.w {
+                4 => {
+                    let f = fold4(s);
+                    let bytes = [f as u8, (f >> 16) as u8, (f >> 32) as u8, (f >> 48) as u8];
+                    let k = valid.div_ceil(2);
+                    p.out[p.cur..p.cur + k].copy_from_slice(&bytes[..k]);
+                    p.cur += k;
+                }
+                2 => {
+                    let f = fold2(s);
+                    let bytes = [f as u8, (f >> 32) as u8];
+                    let k = valid.div_ceil(4);
+                    p.out[p.cur..p.cur + k].copy_from_slice(&bytes[..k]);
+                    p.cur += k;
+                }
+                _ => {
+                    // Zero-padded codes make `pack_plane`'s tail mask a
+                    // no-op: the bits beyond `valid` are already zero.
+                    p.out[p.cur] = fold1(s);
+                    p.cur += 1;
+                }
+            }
+        }
+        self.buf = 0;
+        self.count = 0;
+    }
+
+    /// Flush the trailing partial block; call exactly once after the last
+    /// `push`.
+    pub(crate) fn finish(mut self) {
+        if self.count > 0 {
+            self.flush();
+        }
+        for p in &self.planes[..self.n_planes] {
+            debug_assert_eq!(p.cur, p.out.len(), "plane {}b not fully written", p.w);
+        }
+    }
+}
+
+// --- Streaming plane gather (decode) -------------------------------------
+
+#[derive(Default)]
+struct PlaneIn<'a> {
+    w: u8,
+    shift: u8,
+    bytes: &'a [u8],
+    cur: usize,
+}
+
+/// Streams codes back out of the bit-split planes, 8 at a time, using the
+/// `spread*` inverses of the pack folds.
+pub(crate) struct PlaneSource<'a> {
+    planes: [PlaneIn<'a>; 3],
+    n_planes: usize,
+    buf: u64,
+    left: u32,
+}
+
+impl<'a> PlaneSource<'a> {
+    /// Source over the full packed `section` for `n` codes, positioned at
+    /// element `start` (must be a multiple of 8 so every plane cursor lands
+    /// on a byte boundary).
+    pub(crate) fn new_at(bits: u8, n: usize, section: &'a [u8], start: usize) -> Self {
+        debug_assert_eq!(section.len(), packed_len(bits, n));
+        debug_assert_eq!(start % 8, 0, "plane source must start byte-aligned");
+        let mut src = PlaneSource { planes: Default::default(), n_planes: 0, buf: 0, left: 0 };
+        let mut off = 0usize;
+        let mut shift = 0u8;
+        for &w in planes_for(bits) {
+            let len = plane_len(w, n);
+            src.planes[src.n_planes] = PlaneIn {
+                w,
+                shift,
+                bytes: &section[off..off + len],
+                cur: start * w as usize / 8,
+            };
+            src.n_planes += 1;
+            off += len;
+            shift += w;
+        }
+        src
+    }
+
+    #[inline(always)]
+    pub(crate) fn next(&mut self) -> u8 {
+        if self.left == 0 {
+            self.refill();
+        }
+        let c = self.buf as u8;
+        self.buf >>= 8;
+        self.left -= 1;
+        c
+    }
+
+    #[inline(always)]
+    fn refill(&mut self) {
+        let mut v = 0u64;
+        for p in self.planes[..self.n_planes].iter_mut() {
+            // One block consumes `w` plane bytes (8 codes × w bits / 8);
+            // `load_le` zero-pads past the end of the tail block.
+            let x = match p.w {
+                4 => spread4(load_le(p.bytes, p.cur, 4)),
+                2 => spread2(load_le(p.bytes, p.cur, 2)),
+                _ => spread1(load_le(p.bytes, p.cur, 1)),
+            };
+            v |= x << p.shift;
+            p.cur += p.w as usize;
+        }
+        self.buf = v;
+        self.left = 8;
+    }
+}
+
+// --- Fused encode ---------------------------------------------------------
+
+/// Wire-precision meta for one RTN group: one minmax pass, then the rounding
+/// the chosen metadata mode applies. This replaces the duplicated group loop
+/// the pre-fusion `quantize_rtn_mode` carried for the IntLog case.
+#[inline]
+fn rtn_group_meta(xs: &[f32], bits: u8, mode: ScaleMode) -> GroupMeta {
+    let (mn, mx) = rtn::minmax(xs);
+    let meta = rtn::meta_from_minmax(mn, mx, bits);
+    match mode {
+        ScaleMode::Bf16 => meta,
+        ScaleMode::IntLog => spike::meta_through_intlog(meta),
+    }
+}
+
+/// Quantize one group straight into the sink — the same expression, in the
+/// same order, as `rtn::quantize_group_with_meta`, so the codes (and hence
+/// the wire bytes) match the scalar path bit-for-bit.
+#[inline]
+fn quantize_group_into(xs: &[f32], bits: u8, meta: GroupMeta, sink: &mut PlaneSink) {
+    let inv = 1.0 / meta.scale;
+    let qm = rtn::qmax(bits) as f32;
+    for &x in xs {
+        sink.push(((x - meta.zero) * inv + 0.5).min(qm) as u8);
+    }
+}
+
+/// One worker's share of a fused encode: a contiguous, chunk-aligned run of
+/// groups with the matching slices of every output.
+struct EncJob<'a> {
+    data: &'a [f32],
+    metas: &'a mut [GroupMeta],
+    spikes: &'a mut [SpikeMeta],
+    logmetas: &'a mut [LogMeta],
+    scratch: &'a mut [f32],
+    sink: PlaneSink<'a>,
+}
+
+fn run_encode(codec: &Codec, job: EncJob<'_>) {
+    let EncJob { data, metas, spikes, logmetas, scratch, mut sink } = job;
+    match *codec {
+        Codec::Bf16 => unreachable!("bf16 bypasses the fused kernels"),
+        Codec::Rtn { bits, group_size, scale_mode } => {
+            let gs = group_size as usize;
+            for (xs, m) in data.chunks(gs).zip(metas.iter_mut()) {
+                let meta = rtn_group_meta(xs, bits, scale_mode);
+                quantize_group_into(xs, bits, meta, &mut sink);
+                *m = meta;
+            }
+        }
+        Codec::Spike { bits, group_size, scale_mode } => {
+            let gs = group_size as usize;
+            for ((xs, m), sp) in data.chunks(gs).zip(metas.iter_mut()).zip(spikes.iter_mut()) {
+                let (meta, spike_rec) = spike::analyze_group(xs, bits, scale_mode);
+                quantize_group_into(xs, bits, meta, &mut sink);
+                *m = meta;
+                *sp = spike_rec;
+            }
+        }
+        Codec::Hadamard { bits, group_size } => {
+            let gs = group_size as usize;
+            for (xs, m) in data.chunks(gs).zip(metas.iter_mut()) {
+                *m = if xs.len() == gs {
+                    let rot = &mut scratch[..gs];
+                    rot.copy_from_slice(xs);
+                    hadamard::fwht_normalized(rot);
+                    let meta = rtn_group_meta(rot, bits, ScaleMode::Bf16);
+                    quantize_group_into(rot, bits, meta, &mut sink);
+                    meta
+                } else {
+                    // Tail group is not a power of two: plain RTN.
+                    let meta = rtn_group_meta(xs, bits, ScaleMode::Bf16);
+                    quantize_group_into(xs, bits, meta, &mut sink);
+                    meta
+                };
+            }
+        }
+        Codec::LogFmt { bits, group_size } => {
+            let gs = group_size as usize;
+            for (xs, m) in data.chunks(gs).zip(logmetas.iter_mut()) {
+                let meta = logfmt::analyze_group(xs);
+                logfmt::quantize_group_with_meta(xs, bits, meta, |c| sink.push(c));
+                *m = meta;
+            }
+        }
+    }
+    sink.finish();
+}
+
+/// Fused encode of everything after the wire header: quantized planes
+/// (scattered in a single pass over `data`), then the metadata sections.
+/// `threads > 1` enables chunk parallelism above [`PAR_MIN_ELEMS`].
+pub(crate) fn encode_body(
+    codec: &Codec,
+    data: &[f32],
+    bufs: &mut CodecBuffers,
+    out: &mut Vec<u8>,
+    threads: usize,
+) {
+    let n = data.len();
+    let bits = codec.bits();
+    let gs = codec.group_size();
+    let g = rtn::num_groups(n, gs);
+    let qlen = packed_len(bits, n);
+    let qoff = out.len();
+    out.resize(qoff + qlen, 0);
+
+    // Pre-size the per-group metadata stores so workers can fill disjoint
+    // sub-slices; the serialization below reads them back in group order.
+    match codec {
+        Codec::Bf16 => unreachable!("bf16 bypasses the fused kernels"),
+        Codec::Rtn { .. } | Codec::Hadamard { .. } => {
+            bufs.metas.clear();
+            bufs.metas.resize(g, GroupMeta::IDENTITY);
+        }
+        Codec::Spike { .. } => {
+            bufs.metas.clear();
+            bufs.metas.resize(g, GroupMeta::IDENTITY);
+            bufs.spikes.clear();
+            bufs.spikes.resize(g, SpikeMeta::EMPTY);
+        }
+        Codec::LogFmt { .. } => {
+            bufs.logmetas.clear();
+            bufs.logmetas.resize(g, LogMeta { emin: 0.0, emax: 0.0 });
+        }
+    }
+    let (workers, per) = plan(n, gs, threads);
+    if matches!(codec, Codec::Hadamard { .. }) {
+        bufs.scratch.clear();
+        bufs.scratch.resize(workers * gs, 0.0);
+    }
+
+    {
+        let section = &mut out[qoff..];
+        if workers <= 1 {
+            run_encode(
+                codec,
+                EncJob {
+                    data,
+                    metas: &mut bufs.metas,
+                    spikes: &mut bufs.spikes,
+                    logmetas: &mut bufs.logmetas,
+                    scratch: &mut bufs.scratch,
+                    sink: PlaneSink::new(bits, n, section),
+                },
+            );
+        } else {
+            let jobs = split_enc_jobs(bits, gs, data, bufs, section, workers, per);
+            let codec = *codec;
+            std::thread::scope(|s| {
+                for job in jobs {
+                    s.spawn(move || run_encode(&codec, job));
+                }
+            });
+        }
+    }
+
+    // Metadata sections (small; serialized on the calling thread).
+    match *codec {
+        Codec::Bf16 => unreachable!(),
+        Codec::Rtn { scale_mode, .. } => wire::write_group_metas(&bufs.metas, scale_mode, out),
+        Codec::Spike { scale_mode, .. } => {
+            wire::write_group_metas(&bufs.metas, scale_mode, out);
+            wire::write_spikes(&bufs.spikes, scale_mode, out);
+        }
+        Codec::Hadamard { .. } => wire::write_group_metas(&bufs.metas, ScaleMode::Bf16, out),
+        Codec::LogFmt { .. } => wire::write_log_metas(&bufs.logmetas, out),
+    }
+}
+
+/// Detach the first `k.min(len)` elements of `*rest` with the full
+/// lifetime (the `mem::take` split idiom), advancing `*rest` past them.
+fn carve<'a, T>(rest: &mut &'a mut [T], k: usize) -> &'a mut [T] {
+    let tmp = std::mem::take(rest);
+    let k = k.min(tmp.len());
+    let (head, tail) = tmp.split_at_mut(k);
+    *rest = tail;
+    head
+}
+
+/// Carve the inputs and outputs of a parallel encode into per-worker jobs.
+/// Every boundary is a multiple of `chunk_align(gs)`, so group metadata and
+/// plane bytes split exactly.
+fn split_enc_jobs<'a>(
+    bits: u8,
+    gs: usize,
+    data: &'a [f32],
+    bufs: &'a mut CodecBuffers,
+    section: &'a mut [u8],
+    workers: usize,
+    per: usize,
+) -> Vec<EncJob<'a>> {
+    let n = data.len();
+    // Planes first, then per-worker byte ranges of each plane.
+    let mut plane_rest: Vec<(u8, u8, &'a mut [u8])> = Vec::with_capacity(3);
+    {
+        let mut rest = section;
+        let mut shift = 0u8;
+        for &w in planes_for(bits) {
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(plane_len(w, n));
+            plane_rest.push((w, shift, head));
+            rest = tail;
+            shift += w;
+        }
+    }
+    let mut data_rest = data;
+    let mut metas_rest = bufs.metas.as_mut_slice();
+    let mut spikes_rest = bufs.spikes.as_mut_slice();
+    let mut logs_rest = bufs.logmetas.as_mut_slice();
+    let mut scratch_rest = bufs.scratch.as_mut_slice();
+    let mut jobs = Vec::with_capacity(workers);
+    for wi in 0..workers {
+        let a = wi * per;
+        let take = per.min(n - a);
+        let (chunk, r) = data_rest.split_at(take);
+        data_rest = r;
+        let g_take = take.div_ceil(gs);
+        let metas = carve(&mut metas_rest, g_take);
+        let spikes = carve(&mut spikes_rest, g_take);
+        let logmetas = carve(&mut logs_rest, g_take);
+        let scratch = carve(&mut scratch_rest, gs);
+        let mut sink = PlaneSink::empty();
+        for p in plane_rest.iter_mut() {
+            // `a` is a multiple of 8, so this worker's plane bytes are a
+            // whole, disjoint range of exactly plane_len(w, take) bytes.
+            sink.add_plane(p.0, p.1, carve(&mut p.2, plane_len(p.0, take)));
+        }
+        jobs.push(EncJob { data: chunk, metas, spikes, logmetas, scratch, sink });
+    }
+    jobs
+}
+
+// --- Fused decode / decode-accumulate -------------------------------------
+
+/// One worker's share of a fused decode.
+struct DecJob<'a> {
+    out: &'a mut [f32],
+    src: PlaneSource<'a>,
+    metas: &'a [GroupMeta],
+    spikes: &'a [SpikeMeta],
+    logmetas: &'a [LogMeta],
+    scratch: &'a mut [f32],
+}
+
+fn run_decode(codec: &Codec, job: DecJob<'_>, sum: bool) {
+    let DecJob { out, mut src, metas, spikes, logmetas, scratch } = job;
+    match *codec {
+        Codec::Bf16 => unreachable!("bf16 bypasses the fused kernels"),
+        Codec::Rtn { group_size, .. } => {
+            let gs = group_size as usize;
+            if sum {
+                for (xs, &meta) in out.chunks_mut(gs).zip(metas) {
+                    for x in xs {
+                        *x += src.next() as f32 * meta.scale + meta.zero;
+                    }
+                }
+            } else {
+                for (xs, &meta) in out.chunks_mut(gs).zip(metas) {
+                    for x in xs {
+                        *x = src.next() as f32 * meta.scale + meta.zero;
+                    }
+                }
+            }
+        }
+        Codec::Spike { group_size, .. } => {
+            let gs = group_size as usize;
+            for ((xs, &meta), sp) in out.chunks_mut(gs).zip(metas).zip(spikes) {
+                if sum {
+                    // Accumulate the restored image directly: spike slots
+                    // contribute their exact values, the body its dequant.
+                    // Out-of-range indices (corrupt wire) match no slot —
+                    // same outcome as the bounds-checked restore below.
+                    let (mn, mx) = (sp.min_idx as usize, sp.max_idx as usize);
+                    for (i, x) in xs.iter_mut().enumerate() {
+                        let body = src.next() as f32 * meta.scale + meta.zero;
+                        let v = if i == mx {
+                            sp.max_val
+                        } else if i == mn {
+                            sp.min_val
+                        } else {
+                            body
+                        };
+                        *x += v;
+                    }
+                } else {
+                    for x in xs.iter_mut() {
+                        *x = src.next() as f32 * meta.scale + meta.zero;
+                    }
+                    // Index bounds are checked (not trusted): corrupted
+                    // payloads must not crash the receiving rank.
+                    if let Some(slot) = xs.get_mut(sp.min_idx as usize) {
+                        *slot = sp.min_val;
+                    }
+                    if let Some(slot) = xs.get_mut(sp.max_idx as usize) {
+                        *slot = sp.max_val;
+                    }
+                }
+            }
+        }
+        Codec::Hadamard { group_size, .. } => {
+            let gs = group_size as usize;
+            for (xs, &meta) in out.chunks_mut(gs).zip(metas) {
+                if sum {
+                    let rot = &mut scratch[..xs.len()];
+                    for v in rot.iter_mut() {
+                        *v = src.next() as f32 * meta.scale + meta.zero;
+                    }
+                    if rot.len() == gs {
+                        hadamard::fwht_normalized(rot);
+                    }
+                    for (a, v) in xs.iter_mut().zip(rot.iter()) {
+                        *a += *v;
+                    }
+                } else {
+                    for x in xs.iter_mut() {
+                        *x = src.next() as f32 * meta.scale + meta.zero;
+                    }
+                    if xs.len() == gs {
+                        hadamard::fwht_normalized(xs); // orthonormal inverse
+                    }
+                }
+            }
+        }
+        Codec::LogFmt { bits, group_size } => {
+            let gs = group_size as usize;
+            for (xs, &meta) in out.chunks_mut(gs).zip(logmetas) {
+                let dec = logfmt::GroupDecoder::new(meta, bits);
+                if sum {
+                    for x in xs {
+                        *x += dec.decode(src.next());
+                    }
+                } else {
+                    for x in xs {
+                        *x = dec.decode(src.next());
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Fused decode (`sum == false`) or decode-accumulate (`sum == true`) of a
+/// payload body (everything after the wire header). The caller has already
+/// validated the total length against `wire_len`, so every section slice
+/// below is in range; the metadata parsers still validate their own sizes.
+///
+/// All metadata is parsed *before* the first element is touched, so an
+/// error leaves `out` unmodified.
+pub(crate) fn decode_body(
+    codec: &Codec,
+    n: usize,
+    body: &[u8],
+    bufs: &mut CodecBuffers,
+    out: &mut [f32],
+    threads: usize,
+    sum: bool,
+) -> Result<()> {
+    let bits = codec.bits();
+    let gs = codec.group_size();
+    let g = rtn::num_groups(n, gs);
+    let qlen = packed_len(bits, n);
+    let section = &body[..qlen];
+    let meta_bytes = &body[qlen..];
+    match *codec {
+        Codec::Bf16 => unreachable!("bf16 bypasses the fused kernels"),
+        Codec::Rtn { scale_mode, .. } => {
+            wire::read_group_metas(meta_bytes, g, scale_mode, &mut bufs.metas)?;
+        }
+        Codec::Spike { scale_mode, .. } => {
+            let mode = if scale_mode == ScaleMode::IntLog { 1 } else { 0 };
+            let sz = g * wire::scale_zero_bytes_per_group(mode);
+            wire::read_group_metas(&meta_bytes[..sz], g, scale_mode, &mut bufs.metas)?;
+            wire::read_spikes(&meta_bytes[sz..], g, scale_mode, &mut bufs.spikes)?;
+        }
+        Codec::Hadamard { .. } => {
+            wire::read_group_metas(meta_bytes, g, ScaleMode::Bf16, &mut bufs.metas)?;
+        }
+        Codec::LogFmt { .. } => {
+            wire::read_log_metas(meta_bytes, g, &mut bufs.logmetas)?;
+        }
+    }
+    let (workers, per) = plan(n, gs, threads);
+    if sum && matches!(codec, Codec::Hadamard { .. }) {
+        bufs.scratch.clear();
+        bufs.scratch.resize(workers * gs, 0.0);
+    }
+    if workers <= 1 {
+        run_decode(
+            codec,
+            DecJob {
+                out,
+                src: PlaneSource::new_at(bits, n, section, 0),
+                metas: &bufs.metas,
+                spikes: &bufs.spikes,
+                logmetas: &bufs.logmetas,
+                scratch: &mut bufs.scratch,
+            },
+            sum,
+        );
+        return Ok(());
+    }
+    let metas = &bufs.metas;
+    let spikes = &bufs.spikes;
+    let logmetas = &bufs.logmetas;
+    let mut out_rest = out;
+    let mut scratch_rest = bufs.scratch.as_mut_slice();
+    let codec = *codec;
+    std::thread::scope(|s| {
+        for wi in 0..workers {
+            let a = wi * per;
+            let take = per.min(n - a);
+            let chunk = carve(&mut out_rest, take);
+            let g0 = a / gs;
+            let g_take = take.div_ceil(gs);
+            let scratch = carve(&mut scratch_rest, gs);
+            let job = DecJob {
+                out: chunk,
+                src: PlaneSource::new_at(bits, n, section, a),
+                metas: sub(metas, g0, g_take),
+                spikes: sub(spikes, g0, g_take),
+                logmetas: sub(logmetas, g0, g_take),
+                scratch,
+            };
+            s.spawn(move || run_decode(&codec, job, sum));
+        }
+    });
+    Ok(())
+}
+
+/// Clamped subslice: the store a codec does not use may hold stale lengths
+/// from an earlier call with a different scheme; its contents are never
+/// read, so an empty/short slice is fine.
+fn sub<T>(v: &[T], start: usize, len: usize) -> &[T] {
+    let a = start.min(v.len());
+    &v[a..(a + len).min(v.len())]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::bitsplit;
+    use super::*;
+    use crate::util::Prng;
+
+    #[test]
+    fn sink_matches_pack_for_all_widths_and_tails() {
+        let mut rng = Prng::new(90);
+        for bits in 1..=8u8 {
+            let mask = ((1u16 << bits) - 1) as u8;
+            for n in [1usize, 7, 8, 9, 15, 16, 17, 31, 32, 33, 63, 64, 65, 127] {
+                let codes: Vec<u8> = (0..n).map(|_| (rng.next_u32() as u8) & mask).collect();
+                let mut packed = Vec::new();
+                bitsplit::pack(&codes, bits, &mut packed);
+                let mut fused = vec![0u8; packed.len()];
+                let mut sink = PlaneSink::new(bits, n, &mut fused);
+                for &c in &codes {
+                    sink.push(c);
+                }
+                sink.finish();
+                assert_eq!(fused, packed, "bits={bits} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn source_matches_unpack_for_all_widths_and_tails() {
+        let mut rng = Prng::new(91);
+        for bits in 1..=8u8 {
+            let mask = ((1u16 << bits) - 1) as u8;
+            for n in [1usize, 7, 8, 9, 16, 17, 33, 64, 65, 128, 129] {
+                let codes: Vec<u8> = (0..n).map(|_| (rng.next_u32() as u8) & mask).collect();
+                let mut packed = Vec::new();
+                bitsplit::pack(&codes, bits, &mut packed);
+                let mut src = PlaneSource::new_at(bits, n, &packed, 0);
+                let streamed: Vec<u8> = (0..n).map(|_| src.next()).collect();
+                assert_eq!(streamed, codes, "bits={bits} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn source_offset_start_matches_suffix() {
+        let mut rng = Prng::new(92);
+        for bits in [2u8, 5, 7] {
+            let mask = ((1u16 << bits) - 1) as u8;
+            let n = 100;
+            let codes: Vec<u8> = (0..n).map(|_| (rng.next_u32() as u8) & mask).collect();
+            let mut packed = Vec::new();
+            bitsplit::pack(&codes, bits, &mut packed);
+            for start in [8usize, 16, 64, 96] {
+                let mut src = PlaneSource::new_at(bits, n, &packed, start);
+                let streamed: Vec<u8> = (start..n).map(|_| src.next()).collect();
+                assert_eq!(streamed, &codes[start..], "bits={bits} start={start}");
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_align_is_lcm_of_group_and_8() {
+        assert_eq!(chunk_align(32), 32);
+        assert_eq!(chunk_align(128), 128);
+        assert_eq!(chunk_align(12), 24);
+        assert_eq!(chunk_align(7), 56);
+        assert_eq!(chunk_align(1), 8);
+        assert_eq!(chunk_align(96), 96);
+    }
+
+    #[test]
+    fn plan_respects_threshold_and_alignment() {
+        let (w, _) = plan(1000, 32, 8);
+        assert_eq!(w, 1, "below PAR_MIN_ELEMS stays serial");
+        let (w, per) = plan(PAR_MIN_ELEMS, 32, 4);
+        assert!(w > 1 && w <= 4);
+        assert_eq!(per % chunk_align(32), 0);
+        assert!((w - 1) * per < PAR_MIN_ELEMS && w * per >= PAR_MIN_ELEMS);
+        let (w, _) = plan(1 << 20, 32, 1);
+        assert_eq!(w, 1, "threads=1 stays serial");
+    }
+}

@@ -30,10 +30,9 @@ fn mag_levels(bits: u8) -> u32 {
     (1u32 << (bits - 1)) - 1
 }
 
-/// Quantize one group. Codes are `sign << (bits-1) | mag` with mag in
-/// [0, 2^(bits-1) - 1].
-pub fn quantize_group(xs: &[f32], bits: u8, codes: &mut [u8]) -> LogMeta {
-    debug_assert_eq!(xs.len(), codes.len());
+/// The analysis half of [`quantize_group`]: scan one group's exponent
+/// range. Shared with the fused encoder (`quant::fused`).
+pub fn analyze_group(xs: &[f32]) -> LogMeta {
     let mut emin = f32::INFINITY;
     let mut emax = f32::NEG_INFINITY;
     for &x in xs {
@@ -46,47 +45,81 @@ pub fn quantize_group(xs: &[f32], bits: u8, codes: &mut [u8]) -> LogMeta {
     }
     if !emin.is_finite() {
         // All zeros.
-        for c in codes.iter_mut() {
-            *c = 0;
-        }
         return LogMeta { emin: 0.0, emax: 0.0 };
     }
-    let meta = LogMeta { emin: bf16_round(emin), emax: bf16_round(emax) };
+    LogMeta { emin: bf16_round(emin), emax: bf16_round(emax) }
+}
+
+/// Emit one code per element against a fixed (wire-precision) meta. Codes
+/// are `sign << (bits-1) | mag` with mag in [0, 2^(bits-1) - 1]; codes
+/// 1..=levels linearly span [emin, emax] in log space.
+pub fn quantize_group_with_meta(xs: &[f32], bits: u8, meta: LogMeta, mut emit: impl FnMut(u8)) {
     let levels = mag_levels(bits);
     let span = (meta.emax - meta.emin).max(1e-6);
-    // Codes 1..=levels linearly span [emin, emax] in log space.
     let inv = if levels > 1 { (levels - 1) as f32 / span } else { 0.0 };
     let sign_bit = 1u8 << (bits - 1);
-    for (c, &x) in codes.iter_mut().zip(xs) {
+    for &x in xs {
         let m = x.abs();
         if m <= MIN_MAG {
-            *c = 0;
+            emit(0);
             continue;
         }
         let q = ((m.log2() - meta.emin) * inv).round();
         let mag = 1 + (q.max(0.0) as u32).min(levels - 1) as u8;
-        *c = if x < 0.0 { mag | sign_bit } else { mag };
+        emit(if x < 0.0 { mag | sign_bit } else { mag });
     }
+}
+
+/// Quantize one group into `codes`.
+pub fn quantize_group(xs: &[f32], bits: u8, codes: &mut [u8]) -> LogMeta {
+    debug_assert_eq!(xs.len(), codes.len());
+    let meta = analyze_group(xs);
+    let mut slots = codes.iter_mut();
+    quantize_group_with_meta(xs, bits, meta, |c| *slots.next().unwrap() = c);
     meta
+}
+
+/// Per-group decode state with the span/step math hoisted out of the
+/// element loop. Both [`dequantize_group`] and the fused decoder use this,
+/// so their outputs are bit-identical by construction.
+pub(crate) struct GroupDecoder {
+    emin: f32,
+    step: f32,
+    sign_bit: u8,
+    mag_mask: u8,
+}
+
+impl GroupDecoder {
+    pub(crate) fn new(meta: LogMeta, bits: u8) -> GroupDecoder {
+        let levels = mag_levels(bits);
+        let span = (meta.emax - meta.emin).max(1e-6);
+        let step = if levels > 1 { span / (levels - 1) as f32 } else { 0.0 };
+        let sign_bit = 1u8 << (bits - 1);
+        GroupDecoder { emin: meta.emin, step, sign_bit, mag_mask: sign_bit - 1 }
+    }
+
+    #[inline(always)]
+    pub(crate) fn decode(&self, c: u8) -> f32 {
+        let mag = c & self.mag_mask;
+        if mag == 0 {
+            return 0.0;
+        }
+        let e = self.emin + (mag - 1) as f32 * self.step; // code 1 -> emin
+        let v = e.exp2();
+        if c & self.sign_bit != 0 {
+            -v
+        } else {
+            v
+        }
+    }
 }
 
 /// Dequantize one group.
 pub fn dequantize_group(codes: &[u8], meta: LogMeta, bits: u8, out: &mut [f32]) {
     debug_assert_eq!(codes.len(), out.len());
-    let levels = mag_levels(bits);
-    let span = (meta.emax - meta.emin).max(1e-6);
-    let step = if levels > 1 { span / (levels - 1) as f32 } else { 0.0 };
-    let sign_bit = 1u8 << (bits - 1);
-    let mag_mask = sign_bit - 1;
+    let dec = GroupDecoder::new(meta, bits);
     for (x, &c) in out.iter_mut().zip(codes) {
-        let mag = c & mag_mask;
-        if mag == 0 {
-            *x = 0.0;
-            continue;
-        }
-        let e = meta.emin + (mag - 1) as f32 * step; // code 1 -> emin
-        let v = e.exp2();
-        *x = if c & sign_bit != 0 { -v } else { v };
+        *x = dec.decode(c);
     }
 }
 

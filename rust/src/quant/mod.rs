@@ -2,15 +2,25 @@
 //! splitting (Fig. 3), spike reserving (Fig. 5), the Hadamard / LogFMT
 //! baselines it is compared against (Table 3), and the self-describing wire
 //! format that carries the payloads through the collectives.
+//!
+//! The hot path is the fused single-pass kernel layer (`fused`, reached
+//! through [`Codec`]): quantize→pack and unpack→dequantize(-accumulate)
+//! without materializing a byte-per-value codes buffer, with optional
+//! chunk parallelism for large payloads. [`reference`] keeps the scalar
+//! pre-fusion pipeline alive as the bit-identity oracle
+//! (`tests/codec_fused.rs`).
 
 pub mod bitsplit;
+pub(crate) mod fused;
 pub mod hadamard;
 pub mod logfmt;
+pub mod reference;
 pub mod rtn;
 pub mod scheme;
 pub mod spike;
 pub mod wire;
 
+pub use fused::{MAX_CODEC_THREADS, PAR_MIN_ELEMS};
 pub use rtn::GroupMeta;
 pub use scheme::{Codec, CodecBuffers};
 pub use spike::{ScaleMode, SpikeMeta};

@@ -1,0 +1,222 @@
+//! Scalar reference codec — the oracle the fused kernels are pinned
+//! against.
+//!
+//! This is the pre-fusion pipeline kept alive on purpose: quantize into a
+//! byte-per-value codes buffer, pack it with a naive per-element bit loop
+//! (no SWAR), unpack the same way, dequantize group by group. It shares
+//! the per-group *math* (`rtn`, `spike`, `hadamard`, `logfmt`) and the
+//! metadata serializers (`wire`) with the hot path, but none of the plane
+//! scatter/gather machinery — so `tests/codec_fused.rs` can require the
+//! fused wire bytes and decoded values to match this path bit-for-bit
+//! across every codec spec and awkward length.
+//!
+//! Not a hot path: everything here allocates freely and runs one element
+//! at a time.
+
+use anyhow::{ensure, Result};
+
+use super::bitsplit::{plane_len, planes_for};
+use super::hadamard;
+use super::logfmt;
+use super::rtn;
+use super::scheme::{codec_from_header, Codec};
+use super::spike::{self, ScaleMode};
+use super::wire::{self, Header, HEADER_LEN};
+use crate::util::bf16;
+
+/// Naive bit-split packer: one element, one plane at a time.
+fn pack_scalar(codes: &[u8], bits: u8, out: &mut Vec<u8>) {
+    let mut shift = 0u8;
+    for &w in planes_for(bits) {
+        let base = out.len();
+        out.resize(base + plane_len(w, codes.len()), 0);
+        for (i, &c) in codes.iter().enumerate() {
+            let bit = i * w as usize;
+            let field = (c >> shift) & ((1u16 << w) - 1) as u8;
+            out[base + bit / 8] |= field << (bit % 8);
+        }
+        shift += w;
+    }
+}
+
+/// Naive bit-split unpacker (inverse of [`pack_scalar`]).
+fn unpack_scalar(bytes: &[u8], bits: u8, n: usize) -> Vec<u8> {
+    let mut codes = vec![0u8; n];
+    let mut shift = 0u8;
+    let mut off = 0usize;
+    for &w in planes_for(bits) {
+        let plane = &bytes[off..off + plane_len(w, n)];
+        for (i, c) in codes.iter_mut().enumerate() {
+            let bit = i * w as usize;
+            let field = (plane[bit / 8] >> (bit % 8)) & ((1u16 << w) - 1) as u8;
+            *c |= field << shift;
+        }
+        off += plane_len(w, n);
+        shift += w;
+    }
+    codes
+}
+
+/// Reference encode: header, quantize-to-codes, scalar pack, metadata.
+pub fn encode(codec: &Codec, data: &[f32]) -> Vec<u8> {
+    codec.validate().expect("invalid codec");
+    let n = data.len();
+    let mut out = Vec::with_capacity(codec.wire_len(n));
+    codec.header(n).write(&mut out);
+    let mut codes = Vec::new();
+    let mut metas = Vec::new();
+    match *codec {
+        Codec::Bf16 => bf16::encode_slice(data, &mut out),
+        Codec::Rtn { bits, group_size, scale_mode } => {
+            let gs = group_size as usize;
+            codes.resize(n, 0);
+            for (xs, cs) in data.chunks(gs).zip(codes.chunks_mut(gs)) {
+                let (mn, mx) = rtn::minmax(xs);
+                let meta = match scale_mode {
+                    ScaleMode::Bf16 => rtn::meta_from_minmax(mn, mx, bits),
+                    ScaleMode::IntLog => {
+                        spike::meta_through_intlog(rtn::meta_from_minmax(mn, mx, bits))
+                    }
+                };
+                rtn::quantize_group_with_meta(xs, bits, meta, cs);
+                metas.push(meta);
+            }
+            pack_scalar(&codes, bits, &mut out);
+            wire::write_group_metas(&metas, scale_mode, &mut out);
+        }
+        Codec::Spike { bits, group_size, scale_mode } => {
+            let mut spikes = Vec::new();
+            spike::quantize(
+                data,
+                bits,
+                group_size as usize,
+                scale_mode,
+                &mut codes,
+                &mut metas,
+                &mut spikes,
+            );
+            pack_scalar(&codes, bits, &mut out);
+            wire::write_group_metas(&metas, scale_mode, &mut out);
+            wire::write_spikes(&spikes, scale_mode, &mut out);
+        }
+        Codec::Hadamard { bits, group_size } => {
+            hadamard::quantize(data, bits, group_size as usize, &mut codes, &mut metas);
+            pack_scalar(&codes, bits, &mut out);
+            wire::write_group_metas(&metas, ScaleMode::Bf16, &mut out);
+        }
+        Codec::LogFmt { bits, group_size } => {
+            let mut logmetas = Vec::new();
+            logfmt::quantize(data, bits, group_size as usize, &mut codes, &mut logmetas);
+            pack_scalar(&codes, bits, &mut out);
+            wire::write_log_metas(&logmetas, &mut out);
+        }
+    }
+    assert_eq!(out.len(), codec.wire_len(n), "reference wire_len mismatch");
+    out
+}
+
+/// Reference decode into a fresh Vec.
+pub fn decode(wire_bytes: &[u8]) -> Result<Vec<f32>> {
+    let h = Header::parse(wire_bytes)?;
+    let n = h.n as usize;
+    let codec = codec_from_header(&h)?;
+    ensure!(
+        wire_bytes.len() == codec.wire_len(n),
+        "payload length {} != expected {}",
+        wire_bytes.len(),
+        codec.wire_len(n)
+    );
+    let body = &wire_bytes[HEADER_LEN..];
+    let mut out = vec![0f32; n];
+    let mut metas = Vec::new();
+    match codec {
+        Codec::Bf16 => bf16::decode_slice(body, &mut out),
+        Codec::Rtn { bits, group_size, scale_mode } => {
+            let gs = group_size as usize;
+            let g = rtn::num_groups(n, gs);
+            let qlen = super::bitsplit::packed_len(bits, n);
+            let codes = unpack_scalar(&body[..qlen], bits, n);
+            wire::read_group_metas(&body[qlen..], g, scale_mode, &mut metas)?;
+            rtn::dequantize(&codes, &metas, gs, &mut out);
+        }
+        Codec::Spike { bits, group_size, scale_mode } => {
+            let gs = group_size as usize;
+            let g = rtn::num_groups(n, gs);
+            let qlen = super::bitsplit::packed_len(bits, n);
+            let codes = unpack_scalar(&body[..qlen], bits, n);
+            let mode = if scale_mode == ScaleMode::IntLog { 1 } else { 0 };
+            let sz = g * wire::scale_zero_bytes_per_group(mode);
+            wire::read_group_metas(&body[qlen..qlen + sz], g, scale_mode, &mut metas)?;
+            let mut spikes = Vec::new();
+            wire::read_spikes(&body[qlen + sz..], g, scale_mode, &mut spikes)?;
+            spike::dequantize(&codes, &metas, &spikes, gs, &mut out);
+        }
+        Codec::Hadamard { bits, group_size } => {
+            let gs = group_size as usize;
+            let g = rtn::num_groups(n, gs);
+            let qlen = super::bitsplit::packed_len(bits, n);
+            let codes = unpack_scalar(&body[..qlen], bits, n);
+            wire::read_group_metas(&body[qlen..], g, ScaleMode::Bf16, &mut metas)?;
+            hadamard::dequantize(&codes, &metas, gs, &mut out);
+        }
+        Codec::LogFmt { bits, group_size } => {
+            let gs = group_size as usize;
+            let g = rtn::num_groups(n, gs);
+            let qlen = super::bitsplit::packed_len(bits, n);
+            let codes = unpack_scalar(&body[..qlen], bits, n);
+            let mut logmetas = Vec::new();
+            wire::read_log_metas(&body[qlen..], g, &mut logmetas)?;
+            logfmt::dequantize(&codes, &logmetas, bits, gs, &mut out);
+        }
+    }
+    Ok(out)
+}
+
+/// Reference decode-accumulate: decode into scratch, then element-wise add
+/// (the shape of the pre-fusion fallback path — one add per element, so
+/// values are bit-identical to the fused dequantize-accumulate).
+pub fn decode_sum(wire_bytes: &[u8], acc: &mut [f32]) -> Result<()> {
+    let decoded = decode(wire_bytes)?;
+    ensure!(decoded.len() == acc.len(), "decode_sum length mismatch");
+    for (a, d) in acc.iter_mut().zip(&decoded) {
+        *a += *d;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    #[test]
+    fn scalar_pack_roundtrips() {
+        let mut rng = Prng::new(81);
+        for bits in 1..=8u8 {
+            let mask = ((1u16 << bits) - 1) as u8;
+            for n in [1usize, 7, 8, 9, 33, 100] {
+                let codes: Vec<u8> = (0..n).map(|_| (rng.next_u32() as u8) & mask).collect();
+                let mut packed = Vec::new();
+                pack_scalar(&codes, bits, &mut packed);
+                assert_eq!(packed.len(), super::super::bitsplit::packed_len(bits, n));
+                assert_eq!(unpack_scalar(&packed, bits, n), codes, "bits={bits} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn reference_roundtrips_all_schemes() {
+        let mut rng = Prng::new(82);
+        let mut data = vec![0f32; 200];
+        rng.fill_activations(&mut data, 1.0);
+        for spec in ["bf16", "int8", "int5", "int2-sr@32", "int2-sr@32!", "int4-had@32",
+            "int3-log@32"]
+        {
+            let c = Codec::parse(spec).unwrap();
+            let wire = encode(&c, &data);
+            assert_eq!(wire.len(), c.wire_len(200), "{spec}");
+            let out = decode(&wire).unwrap();
+            assert!(out.iter().all(|x| x.is_finite()), "{spec}");
+        }
+    }
+}

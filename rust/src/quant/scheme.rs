@@ -10,8 +10,8 @@
 use anyhow::{bail, ensure, Result};
 
 use super::bitsplit;
-use super::hadamard;
-use super::logfmt::{self, LogMeta};
+use super::fused;
+use super::logfmt::LogMeta;
 use super::rtn::{self, GroupMeta};
 use super::spike::{self, ScaleMode, SpikeMeta};
 use super::wire::{self, Header, SectionSizes, WireScheme, HEADER_LEN};
@@ -33,13 +33,23 @@ pub enum Codec {
 }
 
 /// Reusable scratch to keep the hot path allocation-free.
+///
+/// Ownership contract (see DESIGN.md §8): the fused kernels treat every
+/// field as *theirs between calls* — per-group metadata (`metas`,
+/// `spikes`, `logmetas`) is rebuilt by each encode/decode, `scratch` holds
+/// at most `workers × group_size` f32 for Hadamard rotation, and `wire` is
+/// the reusable QDQ wire image. No field ever grows with the payload
+/// beyond the group count, which is why the INT2_SR reduce step needs no
+/// payload-sized scratch at all.
 #[derive(Default)]
 pub struct CodecBuffers {
-    codes: Vec<u8>,
-    metas: Vec<GroupMeta>,
-    spikes: Vec<SpikeMeta>,
-    logmetas: Vec<LogMeta>,
-    scratch: Vec<f32>,
+    pub(crate) metas: Vec<GroupMeta>,
+    pub(crate) spikes: Vec<SpikeMeta>,
+    pub(crate) logmetas: Vec<LogMeta>,
+    pub(crate) scratch: Vec<f32>,
+    /// Reusable wire buffer for [`Codec::qdq`] (encode-then-decode without
+    /// a per-call `Vec` allocation).
+    pub(crate) wire: Vec<u8>,
 }
 
 impl CodecBuffers {
@@ -47,11 +57,11 @@ impl CodecBuffers {
     /// collective layer to assert the hot path reuses (rather than regrows)
     /// its scratch after warmup.
     pub fn capacity_bytes(&self) -> usize {
-        self.codes.capacity()
-            + self.metas.capacity() * std::mem::size_of::<GroupMeta>()
+        self.metas.capacity() * std::mem::size_of::<GroupMeta>()
             + self.spikes.capacity() * std::mem::size_of::<SpikeMeta>()
             + self.logmetas.capacity() * std::mem::size_of::<LogMeta>()
             + self.scratch.capacity() * 4
+            + self.wire.capacity()
     }
 }
 
@@ -81,13 +91,59 @@ impl Codec {
         let default_gs: u16 = if bits <= 4 { 32 } else { 128 };
         let group_size: u16 = if gs.is_empty() { default_gs } else { gs.parse()? };
         let scale_mode = if intlog { ScaleMode::IntLog } else { ScaleMode::Bf16 };
-        Ok(match kind {
+        let codec = match kind {
             "rtn" => Codec::Rtn { bits, group_size, scale_mode },
             "sr" => Codec::Spike { bits, group_size, scale_mode },
             "had" => Codec::Hadamard { bits, group_size },
             "log" => Codec::LogFmt { bits, group_size },
             other => bail!("unknown scheme '{other}' in '{s}'"),
-        })
+        };
+        codec.validate()?;
+        Ok(codec)
+    }
+
+    /// Structural constraints the wire header cannot express, checked both
+    /// at parse time and when reconstructing a codec from a received header
+    /// ([`codec_from_header`]), so hostile headers fail cleanly instead of
+    /// silently corrupting or panicking:
+    ///
+    /// - spike reserving needs `2 <= group_size <= 256`: indices travel as
+    ///   BF16 (exact only for integers up to 256) or u8 — larger groups
+    ///   would silently corrupt spike positions on the wire;
+    /// - Hadamard needs a power-of-two group for the FWHT butterfly;
+    /// - LogFMT needs `bits >= 2` (a sign bit plus at least one magnitude
+    ///   bit).
+    pub fn validate(&self) -> Result<()> {
+        match *self {
+            Codec::Bf16 => {}
+            Codec::Rtn { group_size, .. } => {
+                ensure!(group_size >= 1, "rtn needs group_size >= 1");
+            }
+            Codec::Spike { group_size, .. } => {
+                ensure!(
+                    group_size >= 2,
+                    "spike reserving needs groups of >= 2 (got {group_size})"
+                );
+                ensure!(
+                    group_size as usize <= spike::MAX_GROUP,
+                    "spike reserving caps group_size at {}: spike indices travel as bf16 \
+                     (exact only up to 256) or u8, so group_size {group_size} would silently \
+                     corrupt spike positions",
+                    spike::MAX_GROUP
+                );
+            }
+            Codec::Hadamard { group_size, .. } => {
+                ensure!(
+                    group_size.is_power_of_two(),
+                    "hadamard needs a power-of-two group_size (got {group_size})"
+                );
+            }
+            Codec::LogFmt { bits, group_size } => {
+                ensure!(bits >= 2, "logfmt needs a sign bit plus >= 1 magnitude bit");
+                ensure!(group_size >= 1, "logfmt needs group_size >= 1");
+            }
+        }
+        Ok(())
     }
 
     /// Paper-style display name (`INT2_SR`, `INT5`, `BF16`, …).
@@ -121,7 +177,7 @@ impl Codec {
         }
     }
 
-    fn header(&self, n: usize) -> Header {
+    pub(crate) fn header(&self, n: usize) -> Header {
         let mode = |m: ScaleMode| if m == ScaleMode::IntLog { 1u8 } else { 0 };
         let (scheme, bits, scale_mode, group_size) = match *self {
             Codec::Bf16 => (WireScheme::Bf16, 16, 0, 0),
@@ -192,46 +248,36 @@ impl Codec {
     }
 
     /// Encode `data` into `out` (appended), reusing `bufs` for scratch.
+    ///
+    /// §Perf: quantization and bit-split packing are fused — one pass over
+    /// `data` scatters code bits straight into the plane regions of `out`,
+    /// with no intermediate byte-per-value codes buffer (see
+    /// `quant::fused`). Panics on a structurally invalid codec (see
+    /// [`Codec::validate`]); parsed codecs are always valid.
     pub fn encode_with(&self, data: &[f32], bufs: &mut CodecBuffers, out: &mut Vec<u8>) {
+        self.encode_with_threads(data, bufs, out, 1);
+    }
+
+    /// [`encode_with`](Codec::encode_with), chunked over up to `threads`
+    /// scoped worker threads for large payloads. The wire bytes are
+    /// identical for every thread count (chunks are cut at
+    /// `lcm(group_size, 8)` element boundaries, so plane bytes and group
+    /// metadata never straddle workers).
+    pub fn encode_with_threads(
+        &self,
+        data: &[f32],
+        bufs: &mut CodecBuffers,
+        out: &mut Vec<u8>,
+        threads: usize,
+    ) {
+        self.validate()
+            .unwrap_or_else(|e| panic!("refusing to encode with invalid codec {self:?}: {e}"));
         let n = data.len();
         let start = out.len();
         self.header(n).write(out);
         match *self {
             Codec::Bf16 => bf16::encode_slice(data, out),
-            Codec::Rtn { bits, group_size, scale_mode } => {
-                quantize_rtn_mode(data, bits, group_size as usize, scale_mode, bufs);
-                bitsplit::pack(&bufs.codes, bits, out);
-                write_group_metas(&bufs.metas, scale_mode, out);
-            }
-            Codec::Spike { bits, group_size, scale_mode } => {
-                spike::quantize(
-                    data,
-                    bits,
-                    group_size as usize,
-                    scale_mode,
-                    &mut bufs.codes,
-                    &mut bufs.metas,
-                    &mut bufs.spikes,
-                );
-                bitsplit::pack(&bufs.codes, bits, out);
-                write_group_metas(&bufs.metas, scale_mode, out);
-                write_spikes(&bufs.spikes, scale_mode, out);
-            }
-            Codec::Hadamard { bits, group_size } => {
-                hadamard::quantize(data, bits, group_size as usize, &mut bufs.codes, &mut bufs.metas);
-                bitsplit::pack(&bufs.codes, bits, out);
-                write_group_metas(&bufs.metas, ScaleMode::Bf16, out);
-            }
-            Codec::LogFmt { bits, group_size } => {
-                logfmt::quantize(data, bits, group_size as usize, &mut bufs.codes, &mut bufs.logmetas);
-                bitsplit::pack(&bufs.codes, bits, out);
-                for m in &bufs.logmetas {
-                    out.extend_from_slice(&Bf16::from_f32(m.emin).0.to_le_bytes());
-                }
-                for m in &bufs.logmetas {
-                    out.extend_from_slice(&Bf16::from_f32(m.emax).0.to_le_bytes());
-                }
-            }
+            _ => fused::encode_body(self, data, bufs, out, threads),
         }
         debug_assert_eq!(out.len() - start, self.wire_len(n), "wire_len mismatch for {self:?}");
     }
@@ -245,7 +291,21 @@ impl Codec {
     }
 
     /// Decode a payload into `out` (length must equal the payload's `n`).
+    ///
+    /// §Perf: fused — a SWAR plane gather streams codes straight into the
+    /// per-group dequantizer; no codes buffer is materialized.
     pub fn decode_with(wire_bytes: &[u8], bufs: &mut CodecBuffers, out: &mut [f32]) -> Result<()> {
+        Self::decode_with_threads(wire_bytes, bufs, out, 1)
+    }
+
+    /// [`decode_with`](Codec::decode_with), chunked over up to `threads`
+    /// scoped worker threads for large payloads.
+    pub fn decode_with_threads(
+        wire_bytes: &[u8],
+        bufs: &mut CodecBuffers,
+        out: &mut [f32],
+        threads: usize,
+    ) -> Result<()> {
         let h = Header::parse(wire_bytes)?;
         let n = h.n as usize;
         ensure!(out.len() == n, "decode output length {} != payload n {}", out.len(), n);
@@ -258,52 +318,12 @@ impl Codec {
         );
         let body = &wire_bytes[HEADER_LEN..];
         match codec {
-            Codec::Bf16 => bf16::decode_slice(body, out),
-            Codec::Rtn { bits, group_size, scale_mode } => {
-                let gs = group_size as usize;
-                let g = rtn::num_groups(n, gs);
-                let qlen = bitsplit::packed_len(bits, n);
-                bitsplit::unpack(&body[..qlen], bits, n, &mut bufs.codes);
-                read_group_metas(&body[qlen..], g, scale_mode, &mut bufs.metas)?;
-                rtn::dequantize(&bufs.codes, &bufs.metas, gs, out);
+            Codec::Bf16 => {
+                bf16::decode_slice(body, out);
+                Ok(())
             }
-            Codec::Spike { bits, group_size, scale_mode } => {
-                let gs = group_size as usize;
-                let g = rtn::num_groups(n, gs);
-                let qlen = bitsplit::packed_len(bits, n);
-                bitsplit::unpack(&body[..qlen], bits, n, &mut bufs.codes);
-                let mode = if scale_mode == ScaleMode::IntLog { 1 } else { 0 };
-                let sz = g * wire::scale_zero_bytes_per_group(mode);
-                read_group_metas(&body[qlen..qlen + sz], g, scale_mode, &mut bufs.metas)?;
-                read_spikes(&body[qlen + sz..], g, scale_mode, &mut bufs.spikes)?;
-                spike::dequantize(&bufs.codes, &bufs.metas, &bufs.spikes, gs, out);
-            }
-            Codec::Hadamard { bits, group_size } => {
-                let gs = group_size as usize;
-                let g = rtn::num_groups(n, gs);
-                let qlen = bitsplit::packed_len(bits, n);
-                bitsplit::unpack(&body[..qlen], bits, n, &mut bufs.codes);
-                read_group_metas(&body[qlen..], g, ScaleMode::Bf16, &mut bufs.metas)?;
-                hadamard::dequantize(&bufs.codes, &bufs.metas, gs, out);
-            }
-            Codec::LogFmt { bits, group_size } => {
-                let gs = group_size as usize;
-                let g = rtn::num_groups(n, gs);
-                let qlen = bitsplit::packed_len(bits, n);
-                bitsplit::unpack(&body[..qlen], bits, n, &mut bufs.codes);
-                let meta = &body[qlen..];
-                ensure!(meta.len() == 4 * g, "logfmt meta length");
-                bufs.logmetas.clear();
-                for i in 0..g {
-                    let emin = Bf16(u16::from_le_bytes([meta[2 * i], meta[2 * i + 1]])).to_f32();
-                    let j = 2 * g + 2 * i;
-                    let emax = Bf16(u16::from_le_bytes([meta[j], meta[j + 1]])).to_f32();
-                    bufs.logmetas.push(LogMeta { emin, emax });
-                }
-                logfmt::dequantize(&bufs.codes, &bufs.logmetas, bits, gs, out);
-            }
+            _ => fused::decode_body(&codec, n, body, bufs, out, threads, false),
         }
-        Ok(())
     }
 
     /// Convenience decode.
@@ -314,57 +334,56 @@ impl Codec {
 
     /// Decode and accumulate into `acc` (the reduce step of a collective).
     ///
-    /// §Perf: the RTN path (what the collectives move) is fused — unpack
-    /// once, then dequantize-accumulate per group in a single pass, with
-    /// no scratch buffer or extra memory traffic. Other schemes fall back
-    /// to decode-then-add.
+    /// §Perf: fused for *every* scheme — plane gather feeding straight into
+    /// dequantize-accumulate per group, so the reduce step of a collective
+    /// is allocation- and scratch-free (Hadamard uses one group-sized
+    /// rotation buffer owned by `bufs`; nothing scales with the payload).
+    /// On error the accumulator is left untouched.
     pub fn decode_sum_with(
         wire_bytes: &[u8],
         bufs: &mut CodecBuffers,
         acc: &mut [f32],
     ) -> Result<()> {
+        Self::decode_sum_with_threads(wire_bytes, bufs, acc, 1)
+    }
+
+    /// [`decode_sum_with`](Codec::decode_sum_with), chunked over up to
+    /// `threads` scoped worker threads for large payloads.
+    pub fn decode_sum_with_threads(
+        wire_bytes: &[u8],
+        bufs: &mut CodecBuffers,
+        acc: &mut [f32],
+        threads: usize,
+    ) -> Result<()> {
         let h = Header::parse(wire_bytes)?;
         let n = h.n as usize;
         ensure!(acc.len() == n, "decode_sum output length {} != payload n {}", acc.len(), n);
-        if h.scheme == WireScheme::Rtn {
-            let codec = codec_from_header(&h)?;
-            ensure!(
-                wire_bytes.len() == codec.wire_len(n),
-                "payload length {} != expected {}",
-                wire_bytes.len(),
-                codec.wire_len(n)
-            );
-            let (bits, gs, scale_mode) = match codec {
-                Codec::Rtn { bits, group_size, scale_mode } => {
-                    (bits, group_size as usize, scale_mode)
+        let codec = codec_from_header(&h)?;
+        ensure!(
+            wire_bytes.len() == codec.wire_len(n),
+            "payload length {} != expected {}",
+            wire_bytes.len(),
+            codec.wire_len(n)
+        );
+        let body = &wire_bytes[HEADER_LEN..];
+        match codec {
+            Codec::Bf16 => {
+                // Accumulate straight out of the wire bytes — same values
+                // as decode-then-add, without the scratch image.
+                for (i, a) in acc.iter_mut().enumerate() {
+                    let raw = u16::from_le_bytes([body[2 * i], body[2 * i + 1]]);
+                    *a += Bf16(raw).to_f32();
                 }
-                _ => unreachable!(),
-            };
-            let body = &wire_bytes[HEADER_LEN..];
-            let g = rtn::num_groups(n, gs);
-            let qlen = bitsplit::packed_len(bits, n);
-            bitsplit::unpack(&body[..qlen], bits, n, &mut bufs.codes);
-            read_group_metas(&body[qlen..], g, scale_mode, &mut bufs.metas)?;
-            for ((cs, &meta), xs) in
-                bufs.codes.chunks(gs).zip(bufs.metas.iter()).zip(acc.chunks_mut(gs))
-            {
-                rtn::dequantize_group_acc(cs, meta, xs);
+                Ok(())
             }
-            return Ok(());
+            _ => fused::decode_body(&codec, n, body, bufs, acc, threads, true),
         }
-        bufs.scratch.clear();
-        bufs.scratch.resize(acc.len(), 0.0);
-        let mut scratch = std::mem::take(&mut bufs.scratch);
-        let r = Self::decode_with(wire_bytes, bufs, &mut scratch);
-        for (a, s) in acc.iter_mut().zip(&scratch) {
-            *a += *s;
-        }
-        bufs.scratch = scratch;
-        r
     }
 
     /// Quantize-dequantize in place: what the tensor "experiences" crossing
-    /// the wire. Used by accuracy experiments and the TP engine.
+    /// the wire. Used by accuracy experiments and the TP engine. Reuses the
+    /// wire buffer owned by `bufs`, so repeated same-shape calls are
+    /// allocation-free after the first.
     pub fn qdq(&self, data: &mut [f32], bufs: &mut CodecBuffers) {
         if matches!(self, Codec::Bf16) {
             for x in data.iter_mut() {
@@ -372,16 +391,23 @@ impl Codec {
             }
             return;
         }
-        let mut out = Vec::with_capacity(self.wire_len(data.len()));
-        self.encode_with(data, bufs, &mut out);
-        Self::decode_with(&out, bufs, data).expect("own payload must decode");
+        let mut wire = std::mem::take(&mut bufs.wire);
+        wire.clear();
+        wire.reserve(self.wire_len(data.len()));
+        self.encode_with(data, bufs, &mut wire);
+        let r = Self::decode_with(&wire, bufs, data);
+        bufs.wire = wire;
+        r.expect("own payload must decode");
     }
 }
 
-/// Reconstruct the codec described by a wire header.
+/// Reconstruct the codec described by a wire header. Applies
+/// [`Codec::validate`], so a header describing a structurally impossible
+/// codec (e.g. spike reserving with a group size its index encoding cannot
+/// represent) is a clean error, not silent corruption downstream.
 pub fn codec_from_header(h: &Header) -> Result<Codec> {
     let scale_mode = if h.scale_mode == 1 { ScaleMode::IntLog } else { ScaleMode::Bf16 };
-    Ok(match h.scheme {
+    let codec = match h.scheme {
         WireScheme::Bf16 => Codec::Bf16,
         WireScheme::Rtn => Codec::Rtn { bits: h.bits, group_size: h.group_size, scale_mode },
         WireScheme::SpikeReserve => {
@@ -389,135 +415,9 @@ pub fn codec_from_header(h: &Header) -> Result<Codec> {
         }
         WireScheme::Hadamard => Codec::Hadamard { bits: h.bits, group_size: h.group_size },
         WireScheme::LogFmt => Codec::LogFmt { bits: h.bits, group_size: h.group_size },
-    })
-}
-
-/// RTN with the metadata rounded to the requested wire mode.
-fn quantize_rtn_mode(
-    data: &[f32],
-    bits: u8,
-    gs: usize,
-    mode: ScaleMode,
-    bufs: &mut CodecBuffers,
-) {
-    match mode {
-        ScaleMode::Bf16 => rtn::quantize(data, bits, gs, &mut bufs.codes, &mut bufs.metas),
-        ScaleMode::IntLog => {
-            bufs.codes.clear();
-            bufs.codes.resize(data.len(), 0);
-            bufs.metas.clear();
-            for (xs, cs) in data.chunks(gs).zip(bufs.codes.chunks_mut(gs)) {
-                let mut mn = f32::INFINITY;
-                let mut mx = f32::NEG_INFINITY;
-                for &x in xs {
-                    mn = mn.min(x);
-                    mx = mx.max(x);
-                }
-                let meta =
-                    spike::meta_through_wire(rtn::meta_from_minmax(mn, mx, bits), mode);
-                rtn::quantize_group_with_meta(xs, bits, meta, cs);
-                bufs.metas.push(meta);
-            }
-        }
-    }
-}
-
-/// Serialize group metas: scales contiguous, then zeros (vectorized access).
-fn write_group_metas(metas: &[GroupMeta], mode: ScaleMode, out: &mut Vec<u8>) {
-    match mode {
-        ScaleMode::Bf16 => {
-            for m in metas {
-                out.extend_from_slice(&Bf16::from_f32(m.scale).0.to_le_bytes());
-            }
-            for m in metas {
-                out.extend_from_slice(&Bf16::from_f32(m.zero).0.to_le_bytes());
-            }
-        }
-        ScaleMode::IntLog => {
-            for m in metas {
-                out.push(spike::scale_to_int(m.scale) as u8);
-            }
-            for m in metas {
-                // zero-point: zero = -zp * scale (see spike.rs docs).
-                let zp = (-m.zero / m.scale).round().max(-128.0).min(127.0) as i8;
-                out.push(zp as u8);
-            }
-        }
-    }
-}
-
-fn read_group_metas(
-    bytes: &[u8],
-    g: usize,
-    mode: ScaleMode,
-    metas: &mut Vec<GroupMeta>,
-) -> Result<()> {
-    metas.clear();
-    match mode {
-        ScaleMode::Bf16 => {
-            ensure!(bytes.len() >= 4 * g, "scale/zero section too short");
-            for i in 0..g {
-                let scale = Bf16(u16::from_le_bytes([bytes[2 * i], bytes[2 * i + 1]])).to_f32();
-                let j = 2 * g + 2 * i;
-                let zero = Bf16(u16::from_le_bytes([bytes[j], bytes[j + 1]])).to_f32();
-                metas.push(GroupMeta { scale, zero });
-            }
-        }
-        ScaleMode::IntLog => {
-            ensure!(bytes.len() >= 2 * g, "int scale/zero section too short");
-            for i in 0..g {
-                let scale = spike::scale_from_int(bytes[i] as i8);
-                let zp = bytes[g + i] as i8;
-                metas.push(GroupMeta { scale, zero: -(zp as f32) * scale });
-            }
-        }
-    }
-    Ok(())
-}
-
-/// Serialize spikes: min values, max values, then the two index arrays.
-fn write_spikes(spikes: &[SpikeMeta], mode: ScaleMode, out: &mut Vec<u8>) {
-    for s in spikes {
-        out.extend_from_slice(&Bf16::from_f32(s.min_val).0.to_le_bytes());
-    }
-    for s in spikes {
-        out.extend_from_slice(&Bf16::from_f32(s.max_val).0.to_le_bytes());
-    }
-    match mode {
-        ScaleMode::Bf16 => {
-            for s in spikes {
-                out.extend_from_slice(&Bf16::from_f32(s.min_idx as f32).0.to_le_bytes());
-            }
-            for s in spikes {
-                out.extend_from_slice(&Bf16::from_f32(s.max_idx as f32).0.to_le_bytes());
-            }
-        }
-        ScaleMode::IntLog => {
-            for s in spikes {
-                out.push(s.min_idx as u8);
-            }
-            for s in spikes {
-                out.push(s.max_idx as u8);
-            }
-        }
-    }
-}
-
-fn read_spikes(bytes: &[u8], g: usize, mode: ScaleMode, spikes: &mut Vec<SpikeMeta>) -> Result<()> {
-    spikes.clear();
-    let need = g * wire::spike_bytes_per_group(if mode == ScaleMode::IntLog { 1 } else { 0 });
-    ensure!(bytes.len() >= need, "spike section too short: {} < {need}", bytes.len());
-    let rd16 = |o: usize| Bf16(u16::from_le_bytes([bytes[o], bytes[o + 1]])).to_f32();
-    for i in 0..g {
-        let min_val = rd16(2 * i);
-        let max_val = rd16(2 * g + 2 * i);
-        let (min_idx, max_idx) = match mode {
-            ScaleMode::Bf16 => (rd16(4 * g + 2 * i) as u16, rd16(6 * g + 2 * i) as u16),
-            ScaleMode::IntLog => (bytes[4 * g + i] as u16, bytes[5 * g + i] as u16),
-        };
-        spikes.push(SpikeMeta { min_val, max_val, min_idx, max_idx });
-    }
-    Ok(())
+    };
+    codec.validate()?;
+    Ok(codec)
 }
 
 #[cfg(test)]
@@ -650,6 +550,73 @@ mod tests {
         let s2sr = q("int2-sr@32", &mut bufs);
         assert!(s8 > s5 && s5 > s4 && s4 > s2, "{s8} {s5} {s4} {s2}");
         assert!(s2sr > s2 + 6.0, "SR {s2sr} vs RTN {s2}");
+    }
+
+    #[test]
+    fn invalid_codecs_rejected_at_parse_and_header() {
+        // Spike indices travel as bf16 (exact only up to 256) or u8:
+        // group_size > 256 would silently corrupt spike positions.
+        assert!(Codec::parse("int2-sr@300").is_err());
+        assert!(Codec::parse("int2-sr@257!").is_err());
+        assert!(Codec::parse("int2-sr@1").is_err());
+        assert!(Codec::parse("int2-sr@256").is_ok(), "256 is exactly representable");
+        assert!(Codec::parse("int4-had@24").is_err(), "FWHT needs a power-of-two group");
+        assert!(Codec::parse("int1-log").is_err(), "logfmt needs a sign + magnitude bit");
+        // A hostile header describing an impossible codec is a clean error.
+        let h = Header {
+            scheme: WireScheme::SpikeReserve,
+            bits: 2,
+            scale_mode: 0,
+            group_size: 300,
+            n: 600,
+        };
+        assert!(codec_from_header(&h).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "refusing to encode")]
+    fn encode_rejects_oversized_spike_groups() {
+        let c = Codec::Spike { bits: 2, group_size: 512, scale_mode: ScaleMode::Bf16 };
+        let mut bufs = CodecBuffers::default();
+        let mut out = Vec::new();
+        let data = vec![0f32; 512];
+        c.encode_with(&data, &mut bufs, &mut out);
+    }
+
+    #[test]
+    fn decode_sum_needs_no_payload_sized_scratch() {
+        // Acceptance pin: the INT2_SR reduce step is fused — its scratch is
+        // per-group metadata only, never a payload-sized codes/f32 buffer.
+        let n = 8192;
+        let c = Codec::parse("int2-sr@32").unwrap();
+        let mut rng = Prng::new(54);
+        let mut data = vec![0f32; n];
+        rng.fill_activations(&mut data, 1.0);
+        let wire = c.encode(&data);
+        let mut bufs = CodecBuffers::default();
+        let mut acc = vec![0f32; n];
+        Codec::decode_sum_with(&wire, &mut bufs, &mut acc).unwrap();
+        let cap = bufs.capacity_bytes();
+        assert!(cap > 0, "group metadata must be retained");
+        assert!(cap < n, "scratch {cap} B must stay far below the {n}-element payload");
+        Codec::decode_sum_with(&wire, &mut bufs, &mut acc).unwrap();
+        assert_eq!(bufs.capacity_bytes(), cap, "repeat calls must not grow scratch");
+    }
+
+    #[test]
+    fn qdq_reuses_wire_buffer() {
+        let c = Codec::parse("int4@32").unwrap();
+        let mut bufs = CodecBuffers::default();
+        let mut rng = Prng::new(55);
+        let mut data = vec![0f32; 1024];
+        rng.fill_activations(&mut data, 1.0);
+        c.qdq(&mut data, &mut bufs);
+        let warm = bufs.capacity_bytes();
+        assert!(warm >= c.wire_len(1024), "the QDQ wire image must be retained for reuse");
+        for _ in 0..3 {
+            c.qdq(&mut data, &mut bufs);
+            assert_eq!(bufs.capacity_bytes(), warm, "warm QDQ must be allocation-free");
+        }
     }
 
     #[test]

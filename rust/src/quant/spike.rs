@@ -41,6 +41,17 @@ pub struct SpikeMeta {
     pub max_idx: u16,
 }
 
+impl SpikeMeta {
+    /// Placeholder used to pre-size scratch before group analysis fills it.
+    pub const EMPTY: SpikeMeta = SpikeMeta { min_val: 0.0, max_val: 0.0, min_idx: 0, max_idx: 0 };
+}
+
+/// Largest group size spike reserving supports on the wire: spike indices
+/// travel as BF16 (exact only for integers up to 256) in [`ScaleMode::Bf16`]
+/// and as u8 in [`ScaleMode::IntLog`] — beyond 256 elements per group the
+/// positions would silently corrupt. Enforced by `Codec::validate`.
+pub const MAX_GROUP: usize = 256;
+
 /// Encode a scale via Eq. 1 and decode it back (lossy, factor ≤ 2^(1/θ)).
 #[inline]
 pub fn scale_to_int(scale: f32) -> i8 {
@@ -52,14 +63,15 @@ pub fn scale_to_int(scale: f32) -> i8 {
 #[inline]
 pub fn scale_from_int(code: i8) -> f32 {
     // §Perf: 256-entry LUT instead of a powf per group on the decode path.
-    static LUT: once_cell::sync::Lazy<[f32; 256]> = once_cell::sync::Lazy::new(|| {
+    static LUT: std::sync::OnceLock<[f32; 256]> = std::sync::OnceLock::new();
+    let lut = LUT.get_or_init(|| {
         let mut t = [0f32; 256];
         for (i, slot) in t.iter_mut().enumerate() {
             *slot = (2.0f32).powf((i as i64 - 128) as f32 / THETA);
         }
         t
     });
-    LUT[(code as i16 + 128) as usize]
+    lut[(code as i16 + 128) as usize]
 }
 
 /// Round a group meta to what the IntLog wire actually carries.
@@ -77,18 +89,10 @@ pub fn meta_through_wire(meta: GroupMeta, mode: ScaleMode) -> GroupMeta {
     }
 }
 
-/// Quantize one group with spike reserving.
-///
-/// `codes` receives one code per element (spike positions hold clamped
-/// filler — they are overwritten on decode). Returns the (wire-precision)
-/// group meta for the shrunken range plus the spike record.
-pub fn quantize_group(
-    xs: &[f32],
-    bits: u8,
-    mode: ScaleMode,
-    codes: &mut [u8],
-) -> (GroupMeta, SpikeMeta) {
-    debug_assert_eq!(xs.len(), codes.len());
+/// The analysis half of [`quantize_group`]: locate the spikes and compute
+/// the (wire-precision) shrunken-range meta for one group. Shared with the
+/// fused encoder (`quant::fused`) so both produce identical metadata.
+pub fn analyze_group(xs: &[f32], bits: u8, mode: ScaleMode) -> (GroupMeta, SpikeMeta) {
     debug_assert!(!xs.is_empty() && xs.len() <= u16::MAX as usize + 1);
 
     // Pass 1: locate the spikes (first occurrence of min and max).
@@ -125,6 +129,22 @@ pub fn quantize_group(
     }
 
     let meta = meta_through_wire(rtn::meta_from_minmax(min2, max2, bits), mode);
+    (meta, spikes)
+}
+
+/// Quantize one group with spike reserving.
+///
+/// `codes` receives one code per element (spike positions hold clamped
+/// filler — they are overwritten on decode). Returns the (wire-precision)
+/// group meta for the shrunken range plus the spike record.
+pub fn quantize_group(
+    xs: &[f32],
+    bits: u8,
+    mode: ScaleMode,
+    codes: &mut [u8],
+) -> (GroupMeta, SpikeMeta) {
+    debug_assert_eq!(xs.len(), codes.len());
+    let (meta, spikes) = analyze_group(xs, bits, mode);
     rtn::quantize_group_with_meta(xs, bits, meta, codes);
     (meta, spikes)
 }
@@ -155,6 +175,7 @@ pub fn quantize(
     spikes: &mut Vec<SpikeMeta>,
 ) {
     assert!(group_size > 1, "spike reserving needs groups of >= 2");
+    assert!(group_size <= MAX_GROUP, "spike reserving caps group_size at {MAX_GROUP}");
     codes.clear();
     codes.resize(data.len(), 0);
     metas.clear();

@@ -16,7 +16,12 @@
 //! receiving rank can decode without out-of-band agreement (and so tests can
 //! fuzz the decoder against corrupted headers).
 
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Result};
+
+use super::logfmt::LogMeta;
+use super::rtn::GroupMeta;
+use super::spike::{self, ScaleMode, SpikeMeta};
+use crate::util::bf16::Bf16;
 
 pub const MAGIC: u16 = 0xFC02;
 pub const VERSION: u8 = 1;
@@ -135,6 +140,137 @@ pub fn spike_bytes_per_group(scale_mode: u8) -> usize {
         0 => 8, // bf16 min,max + bf16 min_idx,max_idx
         _ => 6, // bf16 min,max + u8 min_idx,max_idx
     }
+}
+
+// --- Metadata section (de)serializers ------------------------------------
+//
+// Shared by the fused kernels ([`super::fused`]) and the scalar reference
+// codec ([`super::reference`]): the two paths differ only in how the
+// quantized planes are produced, never in the metadata byte layout.
+
+/// Serialize group metas: scales contiguous, then zeros (vectorized access).
+pub(crate) fn write_group_metas(metas: &[GroupMeta], mode: ScaleMode, out: &mut Vec<u8>) {
+    match mode {
+        ScaleMode::Bf16 => {
+            for m in metas {
+                out.extend_from_slice(&Bf16::from_f32(m.scale).0.to_le_bytes());
+            }
+            for m in metas {
+                out.extend_from_slice(&Bf16::from_f32(m.zero).0.to_le_bytes());
+            }
+        }
+        ScaleMode::IntLog => {
+            for m in metas {
+                out.push(spike::scale_to_int(m.scale) as u8);
+            }
+            for m in metas {
+                // zero-point: zero = -zp * scale (see spike.rs docs).
+                let zp = (-m.zero / m.scale).round().max(-128.0).min(127.0) as i8;
+                out.push(zp as u8);
+            }
+        }
+    }
+}
+
+pub(crate) fn read_group_metas(
+    bytes: &[u8],
+    g: usize,
+    mode: ScaleMode,
+    metas: &mut Vec<GroupMeta>,
+) -> Result<()> {
+    metas.clear();
+    match mode {
+        ScaleMode::Bf16 => {
+            ensure!(bytes.len() >= 4 * g, "scale/zero section too short");
+            for i in 0..g {
+                let scale = Bf16(u16::from_le_bytes([bytes[2 * i], bytes[2 * i + 1]])).to_f32();
+                let j = 2 * g + 2 * i;
+                let zero = Bf16(u16::from_le_bytes([bytes[j], bytes[j + 1]])).to_f32();
+                metas.push(GroupMeta { scale, zero });
+            }
+        }
+        ScaleMode::IntLog => {
+            ensure!(bytes.len() >= 2 * g, "int scale/zero section too short");
+            for i in 0..g {
+                let scale = spike::scale_from_int(bytes[i] as i8);
+                let zp = bytes[g + i] as i8;
+                metas.push(GroupMeta { scale, zero: -(zp as f32) * scale });
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Serialize spikes: min values, max values, then the two index arrays.
+pub(crate) fn write_spikes(spikes: &[SpikeMeta], mode: ScaleMode, out: &mut Vec<u8>) {
+    for s in spikes {
+        out.extend_from_slice(&Bf16::from_f32(s.min_val).0.to_le_bytes());
+    }
+    for s in spikes {
+        out.extend_from_slice(&Bf16::from_f32(s.max_val).0.to_le_bytes());
+    }
+    match mode {
+        ScaleMode::Bf16 => {
+            for s in spikes {
+                out.extend_from_slice(&Bf16::from_f32(s.min_idx as f32).0.to_le_bytes());
+            }
+            for s in spikes {
+                out.extend_from_slice(&Bf16::from_f32(s.max_idx as f32).0.to_le_bytes());
+            }
+        }
+        ScaleMode::IntLog => {
+            for s in spikes {
+                out.push(s.min_idx as u8);
+            }
+            for s in spikes {
+                out.push(s.max_idx as u8);
+            }
+        }
+    }
+}
+
+pub(crate) fn read_spikes(
+    bytes: &[u8],
+    g: usize,
+    mode: ScaleMode,
+    spikes: &mut Vec<SpikeMeta>,
+) -> Result<()> {
+    spikes.clear();
+    let need = g * spike_bytes_per_group(if mode == ScaleMode::IntLog { 1 } else { 0 });
+    ensure!(bytes.len() >= need, "spike section too short: {} < {need}", bytes.len());
+    let rd16 = |o: usize| Bf16(u16::from_le_bytes([bytes[o], bytes[o + 1]])).to_f32();
+    for i in 0..g {
+        let min_val = rd16(2 * i);
+        let max_val = rd16(2 * g + 2 * i);
+        let (min_idx, max_idx) = match mode {
+            ScaleMode::Bf16 => (rd16(4 * g + 2 * i) as u16, rd16(6 * g + 2 * i) as u16),
+            ScaleMode::IntLog => (bytes[4 * g + i] as u16, bytes[5 * g + i] as u16),
+        };
+        spikes.push(SpikeMeta { min_val, max_val, min_idx, max_idx });
+    }
+    Ok(())
+}
+
+/// Serialize LogFMT metas: all emin values (bf16), then all emax values.
+pub(crate) fn write_log_metas(metas: &[LogMeta], out: &mut Vec<u8>) {
+    for m in metas {
+        out.extend_from_slice(&Bf16::from_f32(m.emin).0.to_le_bytes());
+    }
+    for m in metas {
+        out.extend_from_slice(&Bf16::from_f32(m.emax).0.to_le_bytes());
+    }
+}
+
+pub(crate) fn read_log_metas(bytes: &[u8], g: usize, metas: &mut Vec<LogMeta>) -> Result<()> {
+    ensure!(bytes.len() == 4 * g, "logfmt meta length");
+    metas.clear();
+    for i in 0..g {
+        let emin = Bf16(u16::from_le_bytes([bytes[2 * i], bytes[2 * i + 1]])).to_f32();
+        let j = 2 * g + 2 * i;
+        let emax = Bf16(u16::from_le_bytes([bytes[j], bytes[j + 1]])).to_f32();
+        metas.push(LogMeta { emin, emax });
+    }
+    Ok(())
 }
 
 #[cfg(test)]

@@ -1,0 +1,222 @@
+//! Kernel-equivalence pins for the fused codec (tentpole safety net).
+//!
+//! The fused single-pass kernels (quantize→plane-scatter on encode, SWAR
+//! plane-gather→dequantize(-accumulate) on decode, optional chunk
+//! parallelism) must be indistinguishable from the retained scalar
+//! reference path (`flashcomm::quant::reference`):
+//!
+//! - **wire bytes** bit-identical for every codec spec,
+//! - **decoded f32** bit-identical (`to_bits`),
+//! - **decode-sum** bit-identical to reference decode + elementwise add,
+//! - all of the above for every thread count at lengths straddling
+//!   plane-word (8), group, and parallel-chunk boundaries.
+
+use flashcomm::quant::{reference, Codec, CodecBuffers};
+use flashcomm::util::Prng;
+
+/// Every scheme family × metadata mode × a few group shapes, including
+/// non-multiple-of-8 and boundary group sizes.
+const SPECS: &[&str] = &[
+    "bf16",
+    "int1@40",
+    "int2@32",
+    "int3@32",
+    "int4@32",
+    "int5",
+    "int5@128!",
+    "int6",
+    "int7@96",
+    "int8",
+    "int2-sr@32",
+    "int3-sr@32",
+    "int2-sr@32!",
+    "int2-sr@7",
+    "int2-sr@256",
+    "int4-had@32",
+    "int6-had@128",
+    "int3-log@32",
+    "int2-log@32",
+];
+
+/// Lengths straddling plane-word (8), group, and chunk boundaries for a
+/// given group size.
+fn interesting_lengths(gs: usize) -> Vec<usize> {
+    let mut ns = vec![1, 2, 7, 8, 9, 31, 32, 33, 255, 256, 257];
+    if gs > 1 {
+        ns.extend_from_slice(&[gs - 1, gs, gs + 1, 2 * gs + 3, 7 * gs + 5]);
+    }
+    ns.sort_unstable();
+    ns.dedup();
+    ns
+}
+
+fn bits_of(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn check_equivalence(spec: &str, n: usize, rng: &mut Prng, threads: &[usize]) {
+    let codec = Codec::parse(spec).unwrap();
+    let mut data = vec![0f32; n];
+    rng.fill_activations(&mut data, 1.0);
+    let mut bufs = CodecBuffers::default();
+
+    // Fused encode == scalar reference encode, byte for byte.
+    let mut wire = Vec::new();
+    codec.encode_with(&data, &mut bufs, &mut wire);
+    let ref_wire = reference::encode(&codec, &data);
+    assert_eq!(wire, ref_wire, "{spec} n={n}: fused wire bytes != reference");
+
+    // Fused decode == scalar reference decode, bit for bit.
+    let mut out = vec![0f32; n];
+    Codec::decode_with(&wire, &mut bufs, &mut out).unwrap();
+    let ref_out = reference::decode(&wire).unwrap();
+    assert_eq!(bits_of(&out), bits_of(&ref_out), "{spec} n={n}: fused decode != reference");
+
+    // Fused decode-sum == reference decode + add, bit for bit, from a
+    // non-trivial accumulator.
+    let mut base = vec![0f32; n];
+    rng.fill_normal(&mut base, 0.5, 2.0);
+    let mut acc = base.clone();
+    Codec::decode_sum_with(&wire, &mut bufs, &mut acc).unwrap();
+    let mut ref_acc = base.clone();
+    reference::decode_sum(&wire, &mut ref_acc).unwrap();
+    assert_eq!(bits_of(&acc), bits_of(&ref_acc), "{spec} n={n}: fused decode_sum != reference");
+
+    // Thread-count invariance: same wire bytes, same decodes, for every
+    // worker count (exercised for real above the parallel threshold, and
+    // as a no-op below it — both must hold).
+    for &t in threads {
+        let mut w2 = Vec::new();
+        codec.encode_with_threads(&data, &mut bufs, &mut w2, t);
+        assert_eq!(w2, wire, "{spec} n={n} threads={t}: parallel encode differs");
+        let mut o2 = vec![0f32; n];
+        Codec::decode_with_threads(&wire, &mut bufs, &mut o2, t).unwrap();
+        assert_eq!(bits_of(&o2), bits_of(&out), "{spec} n={n} threads={t}: parallel decode");
+        let mut a2 = base.clone();
+        Codec::decode_sum_with_threads(&wire, &mut bufs, &mut a2, t).unwrap();
+        assert_eq!(
+            bits_of(&a2),
+            bits_of(&acc),
+            "{spec} n={n} threads={t}: parallel decode_sum"
+        );
+    }
+}
+
+#[test]
+fn fused_kernels_match_scalar_reference_at_boundary_lengths() {
+    let mut rng = Prng::new(0xF05ED);
+    for spec in SPECS {
+        let codec = Codec::parse(spec).unwrap();
+        let gs = codec.group_size();
+        for n in interesting_lengths(gs.max(1)) {
+            check_equivalence(spec, n, &mut rng, &[2, 3]);
+        }
+    }
+}
+
+#[test]
+fn fused_kernels_match_reference_across_parallel_chunk_boundaries() {
+    // Above PAR_MIN_ELEMS (64Ki) the chunk-parallel path actually engages;
+    // lengths sit at ±1 around the threshold and around chunk multiples so
+    // worker seams land mid-plane-word if the alignment logic is wrong.
+    let mut rng = Prng::new(0xC0FFEE);
+    let base = 1 << 16;
+    for spec in ["int5@128!", "int2-sr@32", "int4-had@32", "int3-log@32", "int7@96"] {
+        for n in [base - 1, base, base + 1, base + 32 * 3 + 17] {
+            check_equivalence(spec, n, &mut rng, &[2, 4, 7]);
+        }
+    }
+}
+
+#[test]
+fn fused_kernels_random_property_sweep() {
+    // Random lengths × random specs, single- and dual-thread.
+    let mut rng = Prng::new(0xFACADE);
+    for _ in 0..60 {
+        let spec = SPECS[rng.below(SPECS.len())];
+        let n = 1 + rng.below(3000);
+        check_equivalence(spec, n, &mut rng, &[2]);
+    }
+}
+
+#[test]
+fn qdq_is_allocation_free_after_warmup() {
+    // Satellite pin: the TP engine's per-layer QDQ reuses the wire buffer
+    // owned by CodecBuffers — zero allocations after the first call.
+    let mut rng = Prng::new(7);
+    let mut data = vec![0f32; 4096];
+    rng.fill_activations(&mut data, 1.0);
+    for spec in ["int8", "int4@32", "int2-sr@32", "int2-sr@32!", "int4-had@32", "int3-log@32"] {
+        let codec = Codec::parse(spec).unwrap();
+        let mut bufs = CodecBuffers::default();
+        let mut d = data.clone();
+        codec.qdq(&mut d, &mut bufs);
+        let warm = bufs.capacity_bytes();
+        assert!(warm >= codec.wire_len(4096), "{spec}: wire image must be retained");
+        for _ in 0..4 {
+            let mut d = data.clone();
+            codec.qdq(&mut d, &mut bufs);
+            assert_eq!(bufs.capacity_bytes(), warm, "{spec}: warm QDQ must not allocate");
+        }
+    }
+}
+
+#[test]
+fn reduce_step_scratch_is_group_bounded_for_all_schemes() {
+    // Tentpole acceptance: decode_sum is fused for every scheme — scratch
+    // is per-group metadata (plus one group-sized rotation buffer for
+    // Hadamard), never a payload-sized buffer.
+    let n = 1 << 14;
+    let mut rng = Prng::new(8);
+    let mut data = vec![0f32; n];
+    rng.fill_activations(&mut data, 1.0);
+    for spec in ["int8", "int2-sr@32", "int2-sr@32!", "int4-had@32", "int3-log@32"] {
+        let codec = Codec::parse(spec).unwrap();
+        let wire = codec.encode(&data);
+        let mut bufs = CodecBuffers::default();
+        let mut acc = vec![0f32; n];
+        Codec::decode_sum_with(&wire, &mut bufs, &mut acc).unwrap();
+        let cap = bufs.capacity_bytes();
+        assert!(
+            cap < n,
+            "{spec}: reduce-step scratch ({cap} B) must stay far below the payload ({n} elems)"
+        );
+        Codec::decode_sum_with(&wire, &mut bufs, &mut acc).unwrap();
+        assert_eq!(bufs.capacity_bytes(), cap, "{spec}: repeat reduce must not grow scratch");
+    }
+}
+
+#[test]
+fn spike_group_size_cap_is_enforced_end_to_end() {
+    // Regression for the spike-index wire bug: with bf16 metadata the
+    // indices cannot represent values above 256 exactly (and IntLog carries
+    // them as u8), so group sizes above 256 must be rejected — at parse
+    // time and when arriving in a wire header.
+    assert!(Codec::parse("int2-sr@257").is_err());
+    assert!(Codec::parse("int2-sr@512").is_err());
+    assert!(Codec::parse("int2-sr@300!").is_err());
+    let ok = Codec::parse("int2-sr@256").unwrap();
+    let mut rng = Prng::new(9);
+    let mut data = vec![0f32; 600];
+    rng.fill_activations(&mut data, 1.0);
+    // gs=256 round-trips with exact spike restoration in both modes.
+    for spec in ["int2-sr@256", "int2-sr@256!"] {
+        let codec = Codec::parse(spec).unwrap();
+        let wire = codec.encode(&data);
+        let mut out = vec![0f32; 600];
+        Codec::decode(&wire, &mut out).unwrap();
+        for (xs, rec) in data.chunks(256).zip(out.chunks(256)) {
+            let mx = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let rmx = rec.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            assert!(
+                (rmx - mx).abs() <= mx.abs() / 128.0 + 1e-6,
+                "{spec}: group max {mx} lost ({rmx})"
+            );
+        }
+    }
+    // A forged header claiming spike gs=300 is a clean decode error.
+    let mut wire = ok.encode(&data);
+    wire[6..8].copy_from_slice(&300u16.to_le_bytes());
+    let mut out = vec![0f32; 600];
+    assert!(Codec::decode(&wire, &mut out).is_err());
+}
