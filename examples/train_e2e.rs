@@ -53,7 +53,7 @@ fn main() -> anyhow::Result<()> {
         log_every: 10,
         eval_every: 50,
         eval_batches: 8,
-        seed: 7,
+        ..Default::default()
     };
     let t0 = std::time::Instant::now();
     let recs = trainer.train(&mut sampler, &eval_batches, &opts)?;

@@ -143,8 +143,10 @@ fn scratch_reuse_probe() {
 }
 
 /// InProc vs TCP-loopback backend sweep under the same collective, wire
-/// codec, and inputs. Emits `BENCH_transport.json` next to Cargo.toml so
-/// the perf trajectory of the transport layer has a recorded baseline.
+/// codec, and inputs, plus a per-preset topology sweep (`--algo auto` on
+/// every node shape the generalized topology model opens). Emits
+/// `BENCH_transport.json` next to Cargo.toml so the perf trajectory of the
+/// transport layer has a recorded baseline.
 ///
 /// The TCP numbers include mesh bootstrap (rendezvous + full-mesh socket
 /// setup happens inside the timed closure, ~one-off per job in real use),
@@ -159,71 +161,93 @@ fn transport_sweep() {
         fmt_bytes(4 * elems)
     );
     println!(
-        "{:<8} {:<12} {:>10} {:>14} {:>14} {:>10}",
-        "backend", "codec", "ms", "payload GB/s", "wire bytes", "msgs"
+        "{:<8} {:<8} {:<12} {:>10} {:>14} {:>14} {:>10}",
+        "backend", "preset", "codec", "ms", "payload GB/s", "wire bytes", "msgs"
     );
     let inputs = rank_inputs(ranks, elems, 300);
     let inputs = &inputs;
     // One rank's work, generic over the backend (closures can't be).
-    fn per_rank<T: Transport>(h: fabric::RankHandle<T>, inputs: &[Vec<f32>], codec: &Codec) {
+    fn per_rank<T: Transport>(
+        h: fabric::RankHandle<T>,
+        inputs: &[Vec<f32>],
+        codec: &Codec,
+        policy: AlgoPolicy,
+    ) -> Algo {
         let mut c = Communicator::from_handle(h);
         let mut d = inputs[c.rank()].clone();
-        c.allreduce(&mut d, codec, AlgoPolicy::Fixed(Algo::TwoStep)).unwrap();
+        c.allreduce(&mut d, codec, policy).unwrap()
     }
     let mut records = Vec::new();
+    let mut sweep_case = |backend: &str, preset: &str, topo: &Topology, spec: &str, policy| {
+        let codec = Codec::parse(spec).unwrap();
+        let mut payload_bytes = 0u64;
+        let mut wire_bytes = 0u64;
+        let mut messages = 0u64;
+        let mut used = Algo::TwoStep;
+        let m = bench(1, 3, || {
+            let (algos, counters) = match backend {
+                "inproc" => fabric::run_ranks(topo, |h| per_rank(h, inputs, &codec, policy)),
+                _ => fabric::run_ranks_with(
+                    tcp::local_mesh(ranks).expect("tcp mesh bootstrap"),
+                    topo,
+                    |h| per_rank(h, inputs, &codec, policy),
+                ),
+            };
+            used = algos[0];
+            // Counters are read after every rank joined, so the
+            // snapshot is at rest; wire bytes = payload + one frame
+            // header per message (exact on both backends).
+            let snap = counters.snapshot();
+            payload_bytes = snap.total;
+            messages = snap.messages;
+            wire_bytes = snap.total + snap.messages * FRAME_HEADER_LEN as u64;
+        });
+        let gbps = (4 * elems * ranks) as f64 / m.secs() / 1e9;
+        println!(
+            "{:<8} {:<8} {:<12} {:>10.2} {:>14.3} {:>14} {:>10}  [{}]",
+            backend,
+            preset,
+            spec,
+            m.secs() * 1e3,
+            gbps,
+            wire_bytes,
+            messages,
+            used.token()
+        );
+        records.push(format!(
+            concat!(
+                "  {{\"backend\": \"{}\", \"preset\": \"{}\", \"groups\": {}, ",
+                "\"algo\": \"{}\", \"codec\": \"{}\", ",
+                "\"ranks\": {}, \"elems_per_rank\": {}, \"wall_ms\": {:.3}, ",
+                "\"payload_algbw_gbps\": {:.3}, \"payload_bytes\": {}, ",
+                "\"wire_bytes\": {}, \"messages\": {}, \"includes_bootstrap\": {}}}"
+            ),
+            backend,
+            preset,
+            topo.numa_groups,
+            used.token(),
+            spec,
+            ranks,
+            elems,
+            m.secs() * 1e3,
+            gbps,
+            payload_bytes,
+            wire_bytes,
+            messages,
+            backend == "tcp"
+        ));
+    };
     for backend in ["inproc", "tcp"] {
         for spec in ["bf16", "int4@32", "int2-sr@32"] {
-            let codec = Codec::parse(spec).unwrap();
-            let mut payload_bytes = 0u64;
-            let mut wire_bytes = 0u64;
-            let mut messages = 0u64;
-            let m = bench(1, 3, || {
-                let (_, counters) = match backend {
-                    "inproc" => {
-                        fabric::run_ranks(&topo, |h| per_rank(h, inputs, &codec))
-                    }
-                    _ => fabric::run_ranks_with(
-                        tcp::local_mesh(ranks).expect("tcp mesh bootstrap"),
-                        &topo,
-                        |h| per_rank(h, inputs, &codec),
-                    ),
-                };
-                // Counters are read after every rank joined, so the
-                // snapshot is at rest; wire bytes = payload + one frame
-                // header per message (exact on both backends).
-                let snap = counters.snapshot();
-                payload_bytes = snap.total;
-                messages = snap.messages;
-                wire_bytes = snap.total + snap.messages * FRAME_HEADER_LEN as u64;
-            });
-            let gbps = (4 * elems * ranks) as f64 / m.secs() / 1e9;
-            println!(
-                "{:<8} {:<12} {:>10.2} {:>14.3} {:>14} {:>10}",
-                backend,
-                spec,
-                m.secs() * 1e3,
-                gbps,
-                wire_bytes,
-                messages
-            );
-            records.push(format!(
-                concat!(
-                    "  {{\"backend\": \"{}\", \"algo\": \"twostep\", \"codec\": \"{}\", ",
-                    "\"ranks\": {}, \"elems_per_rank\": {}, \"wall_ms\": {:.3}, ",
-                    "\"payload_algbw_gbps\": {:.3}, \"payload_bytes\": {}, ",
-                    "\"wire_bytes\": {}, \"messages\": {}, \"includes_bootstrap\": {}}}"
-                ),
-                backend,
-                spec,
-                ranks,
-                elems,
-                m.secs() * 1e3,
-                gbps,
-                payload_bytes,
-                wire_bytes,
-                messages,
-                backend == "tcp"
-            ));
+            sweep_case(backend, "h800", &topo, spec, AlgoPolicy::Fixed(Algo::TwoStep));
+        }
+    }
+    // Per-preset rows: --algo auto across the node shapes the generalized
+    // topology model opens (flat, 2-group, 4-group, dual-node).
+    for preset in ["h800", "l40", "l40x4", "h800x2"] {
+        let ptopo = presets::topology_by_name(preset, ranks).unwrap();
+        for spec in ["bf16", "int4@32", "int2-sr@32"] {
+            sweep_case("inproc", preset, &ptopo, spec, AlgoPolicy::Auto);
         }
     }
     let json = format!("[\n{}\n]\n", records.join(",\n"));

@@ -83,7 +83,7 @@ fn main() {
             let mut wire = Vec::with_capacity(codec.wire_len(n));
             let enc = bench(1, iters, || {
                 wire.clear();
-                codec.encode_with_threads(&data, &mut bufs, &mut wire, threads);
+                codec.encode_with_threads(&data, &mut bufs, &mut wire, threads).unwrap();
             });
             let mut out = vec![0f32; n];
             let dec = bench(1, iters, || {

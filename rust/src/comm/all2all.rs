@@ -38,13 +38,13 @@ pub(crate) fn all2all<T: Transport>(
     }
     for (dst, payload) in sends.iter().enumerate() {
         if dst != h.rank {
-            h.send(dst, encode(codec, payload, bufs, t))?;
+            h.send(dst, encode(codec, payload, bufs, t)?)?;
         }
     }
     let mut out = Vec::with_capacity(h.n);
     for src in 0..h.n {
         let wire = if src == h.rank {
-            encode(codec, &sends[src], bufs, t)
+            encode(codec, &sends[src], bufs, t)?
         } else {
             h.recv(src)?
         };

@@ -243,28 +243,46 @@ impl<T: Transport> Communicator<T> {
 /// or may want — the hierarchical algorithms and the rank count supports
 /// two equal groups, the flat NVLink (H800) node otherwise.
 pub fn preset_topo(n: usize, policy: AlgoPolicy) -> Result<Topology, CommError> {
+    preset_topo_grouped(n, None, policy)
+}
+
+/// [`preset_topo`] with an explicit link-tier group count (the CLI's
+/// `--groups`): `Some(1)` forces the flat NVLink node, `Some(G >= 2)` a
+/// G-group NUMA (L40-bridge) box, `None` the policy-driven default. The
+/// returned topology is validated against a fixed policy's admissibility
+/// (`Algo::admissible` — the one source of truth), so e.g.
+/// `--groups 1 --algo hier` fails here, once, instead of in every rank.
+pub fn preset_topo_grouped(
+    n: usize,
+    groups: Option<usize>,
+    policy: AlgoPolicy,
+) -> Result<Topology, CommError> {
     if n < 2 {
         return Err(CommError::shape(format!("a rank group needs at least 2 ranks, got {n}")));
     }
-    let two_groups_ok = n % 2 == 0;
-    let numa = match policy {
-        AlgoPolicy::Fixed(a @ (Algo::Hier | Algo::HierPipelined)) => {
-            if !two_groups_ok {
-                return Err(CommError::topology(
-                    a,
-                    format!("needs an even rank count for 2 NUMA groups, got {n}"),
-                ));
+    let topo = match groups {
+        Some(g) if g >= 2 => Topology::try_with_groups(presets::l40(), n, g)?,
+        // g == 1 is the flat node; g == 0 propagates as TopologyError::
+        // ZeroGroups — never silently coerced to a shape the user didn't ask for.
+        Some(g) => Topology::try_with_groups(presets::h800(), n, g)?,
+        None => {
+            let two_groups_ok = n % 2 == 0;
+            let numa = match policy {
+                AlgoPolicy::Fixed(Algo::Hier | Algo::HierPipelined) => true,
+                AlgoPolicy::Auto => two_groups_ok,
+                AlgoPolicy::Fixed(_) => false,
+            };
+            if numa {
+                Topology::try_with_groups(presets::l40(), n, 2)?
+            } else {
+                Topology::try_with_groups(presets::h800(), n, 1)?
             }
-            true
         }
-        AlgoPolicy::Auto => two_groups_ok,
-        AlgoPolicy::Fixed(_) => false,
     };
-    Ok(if numa {
-        Topology::new(presets::l40(), n)
-    } else {
-        Topology::new(presets::h800(), n)
-    })
+    if let AlgoPolicy::Fixed(a) = policy {
+        a.admissible(&topo)?;
+    }
+    Ok(topo)
 }
 
 /// An in-process rank group: `n` communicators over a private mpsc mesh,
@@ -298,6 +316,16 @@ impl LocalGroup {
     /// Build a group of `n` ranks over the [`preset_topo`] for `policy`.
     pub fn for_policy(n: usize, policy: AlgoPolicy) -> Result<LocalGroup, CommError> {
         LocalGroup::new(&preset_topo(n, policy)?, policy)
+    }
+
+    /// [`LocalGroup::for_policy`] with an explicit link-tier group count
+    /// (the CLI's `--groups`; see [`preset_topo_grouped`]).
+    pub fn for_policy_grouped(
+        n: usize,
+        groups: Option<usize>,
+        policy: AlgoPolicy,
+    ) -> Result<LocalGroup, CommError> {
+        LocalGroup::new(&preset_topo_grouped(n, groups, policy)?, policy)
     }
 
     pub fn n(&self) -> usize {
@@ -518,6 +546,67 @@ mod tests {
         assert!(preset_topo(4, AlgoPolicy::Auto).unwrap().spec.is_numa());
         assert!(preset_topo(4, AlgoPolicy::Fixed(Algo::TwoStep)).unwrap().spec.name == "H800");
         assert!(preset_topo(6, AlgoPolicy::Fixed(Algo::HierPipelined)).unwrap().spec.is_numa());
+    }
+
+    #[test]
+    fn preset_topo_grouped_shapes() {
+        let g4 = preset_topo_grouped(8, Some(4), AlgoPolicy::Auto).unwrap();
+        assert_eq!((g4.numa_groups, g4.group_size()), (4, 2));
+        let flat = preset_topo_grouped(8, Some(1), AlgoPolicy::Auto).unwrap();
+        assert_eq!(flat.numa_groups, 1);
+        // Hostile shapes from the CLI are clean errors, never panics.
+        let e = preset_topo_grouped(6, Some(4), AlgoPolicy::Auto).unwrap_err();
+        assert!(matches!(e, CommError::Shape { .. }), "{e}");
+        assert!(e.to_string().contains("equal groups"), "{e}");
+        // --groups 0 is rejected, not coerced to a flat node.
+        let e = preset_topo_grouped(8, Some(0), AlgoPolicy::Auto).unwrap_err();
+        assert!(e.to_string().contains("at least 1 group"), "{e}");
+        // A fixed hierarchical policy on a flattened grouping fails once,
+        // up front, through the same admissibility source of truth.
+        let e = preset_topo_grouped(8, Some(1), AlgoPolicy::Fixed(Algo::Hier)).unwrap_err();
+        assert!(matches!(e, CommError::Topology { algo: Algo::Hier, .. }), "{e}");
+        // Odd worlds split into odd group counts are fine.
+        let g3 = preset_topo_grouped(9, Some(3), AlgoPolicy::Fixed(Algo::Hier)).unwrap();
+        assert_eq!(g3.group_size(), 3);
+    }
+
+    #[test]
+    fn auto_picks_hier_on_the_dual_nvlink_cluster() {
+        // The SDP4Bit-style scenario: two flat NVLink nodes joined by a
+        // slow inter-node link. Above the crossover the hierarchical
+        // family must win (the two-step pushes 4M across the slow link,
+        // the leader ring only M); far below it, launch latency favors the
+        // one-shot two-step.
+        let duo = presets::dual_nvlink_node(16).unwrap();
+        let c = codec("int4@32");
+        let large = AlgoPolicy::Auto.resolve(&duo, &c, 32 * MB);
+        assert!(
+            matches!(large, Algo::Hier | Algo::HierPipelined),
+            "duo large: {large:?}"
+        );
+        let small = AlgoPolicy::Auto.resolve(&duo, &c, 512);
+        assert_eq!(small, Algo::TwoStep, "duo small");
+    }
+
+    #[test]
+    fn grouped_local_group_runs_hier_end_to_end() {
+        let mut group =
+            LocalGroup::for_policy_grouped(8, Some(4), AlgoPolicy::Fixed(Algo::Hier)).unwrap();
+        assert_eq!(group.topo().numa_groups, 4);
+        let c = codec("int8");
+        let mut data = per_rank_data(8, 1024);
+        let mut exact = vec![0f32; 1024];
+        for v in &data {
+            for (e, x) in exact.iter_mut().zip(v) {
+                *e += *x;
+            }
+        }
+        assert_eq!(group.allreduce(&mut data, &c).unwrap(), Algo::Hier);
+        for r in &data {
+            assert_eq!(r, &data[0], "ranks must agree bitwise");
+        }
+        let s = sqnr_db(&exact, &data[0]);
+        assert!(s > 24.0, "G=4 group SQNR {s}");
     }
 
     #[test]

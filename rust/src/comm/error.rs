@@ -117,6 +117,16 @@ impl std::error::Error for CommError {
     }
 }
 
+/// Topology construction failures are caller-argument errors at the
+/// collective layer (a mistyped `--gpus`/`--groups` shape): the typed
+/// [`TopologyError`](crate::topo::TopologyError) detail is preserved in the
+/// message and the whole chain stays `anyhow`-compatible.
+impl From<crate::topo::TopologyError> for CommError {
+    fn from(e: crate::topo::TopologyError) -> CommError {
+        CommError::Shape { detail: e.to_string() }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,26 +1,81 @@
-//! Hierarchical two-step AllReduce for NUMA nodes (Figs. 6–7).
+//! Hierarchical two-step AllReduce over G link-tier groups (Figs. 6–7,
+//! generalized).
 //!
 //! Three stages, each quantized with the fused codec:
 //!
-//! 1. **Partial reduce-scatter inside each NUMA group** — rank `g·s + j`
-//!    collects and reduces chunk `j` from its group peers over PCIe.
-//! 2. **Cross-NUMA reduction** — each rank exchanges its partial chunk with
-//!    its bridge peer (`rank ± s`) and reduces, so both sides hold the full
-//!    sum of their chunk. Only M/s per rank crosses the bridge — the 3×
-//!    cross-NUMA saving of Table 5.
-//! 3. **Partial all-gather inside each NUMA group** — the reduced chunks
-//!    circulate over PCIe again.
+//! 1. **Partial reduce-scatter inside each group** — rank `g·s + j`
+//!    collects and reduces chunk `j` from its group peers over the fast
+//!    intra-group fabric.
+//! 2. **Cross-group reduction** — the G ranks holding chunk `j`'s partials
+//!    (the *column* `{g·s + j | g in 0..G}`, one leader per group) ring
+//!    all-gather their **encoded** partials: each member encodes once and
+//!    the G wire images circulate verbatim over the G−1 hops, so there is
+//!    no re-quantization along the ring. Every member then decodes all G
+//!    images *in group order* and sums — the same bits on every side.
+//!    Only M/s per rank crosses the inter-group link per hop — the 3×
+//!    cross-NUMA saving of Table 5 at G = 2.
+//! 3. **Partial all-gather inside each group** — the reduced chunks
+//!    circulate over the intra-group fabric again.
 //!
-//! Ranks in the two groups see identical results because the stage-2
-//! exchange is symmetric and stage-3 redistributes the same payloads.
-//! A topology without exactly two NUMA groups is a `CommError::Topology`,
-//! not a panic — `AlgoPolicy::Auto` never routes here on flat nodes.
+//! At `G = 2` the column ring degenerates *bit-identically* to the
+//! original symmetric bridge-pair exchange (next == prev == `bridge_peer`,
+//! one send each way, decode in group order) — pinned against the
+//! pre-refactor pairwise implementation, wire bytes included, in the tests
+//! below. All ranks of all groups end bit-identical because every column
+//! decodes the same images in the same order and re-encodes the identical
+//! sum for stage 3.
+//!
+//! Admissibility ([`Algo::admissible`]): `G >= 2` groups joined by an
+//! inter-group link. A flat topology is a `CommError::Topology`, not a
+//! panic — `AlgoPolicy::Auto` never routes here on flat nodes.
 
 use super::{chunk_range, communicator::Communicator, encode, error::CommError, Algo};
-use crate::quant::Codec;
+use crate::comm::fabric::RankHandle;
+use crate::quant::{Codec, CodecBuffers};
+use crate::topo::Topology;
 use crate::transport::Transport;
 
-/// In-place hierarchical AllReduce. Requires a 2-NUMA-group topology.
+/// Stage 2 — the cross-group column ring, shared by [`allreduce`] and the
+/// pipelined variant ([`super::pipeline`]): `acc` (this rank's reduced
+/// partial) is encoded exactly once; the G column members' wire images
+/// circulate verbatim over G−1 hops; then `acc` is rebuilt as the
+/// group-ordered decode-sum of all G images, so every column member lands
+/// on identical bits. One copy of the hop arithmetic and the
+/// bit-identity-critical decode order — the G=2 wire-hash golden test
+/// below pins it for both callers.
+pub(crate) fn cross_group_reduce<T: Transport>(
+    h: &RankHandle<T>,
+    bufs: &mut CodecBuffers,
+    acc: &mut Vec<f32>,
+    codec: &Codec,
+    threads: usize,
+    topo: &Topology,
+) -> Result<(), CommError> {
+    let gcount = topo.numa_groups;
+    let g = topo.group_of(h.rank);
+    let wire_mine = encode(codec, acc, bufs, threads)?;
+    let mut by_group: Vec<Vec<u8>> = vec![Vec::new(); gcount];
+    by_group[g] = wire_mine;
+    let next = topo.peer_in_group(h.rank, (g + 1) % gcount);
+    let prev = topo.peer_in_group(h.rank, (g + gcount - 1) % gcount);
+    for hop in 1..gcount {
+        let fwd = (g + gcount + 1 - hop) % gcount; // hop 1 forwards our own
+        let got = (g + gcount - hop) % gcount;
+        h.send(next, by_group[fwd].clone())?;
+        by_group[got] = h.recv(prev)?;
+    }
+    acc.iter_mut().for_each(|x| *x = 0.0);
+    for (src_g, wire) in by_group.iter().enumerate() {
+        // Blame decode failures on the payload's *origin* — group src_g's
+        // column member (one of the images is this rank's own encoding).
+        let src = topo.peer_in_group(h.rank, src_g);
+        Codec::decode_sum_with_threads(wire, bufs, acc, threads)
+            .map_err(|e| CommError::decode(src, e))?;
+    }
+    Ok(())
+}
+
+/// In-place hierarchical AllReduce. Requires `G >= 2` link-tier groups.
 pub(crate) fn allreduce<T: Transport>(
     c: &mut Communicator<T>,
     data: &mut [f32],
@@ -29,22 +84,17 @@ pub(crate) fn allreduce<T: Transport>(
     let Communicator { handle: h, bufs, acc, codec_threads, .. } = c;
     let t = *codec_threads;
     let topo = h.topo().clone();
-    if topo.numa_groups != 2 {
-        return Err(CommError::topology(
-            Algo::Hier,
-            format!("needs 2 NUMA groups, topology has {}", topo.numa_groups),
-        ));
-    }
+    Algo::Hier.admissible(&topo)?;
     let s = topo.group_size();
     let group = topo.group_members(h.rank);
     let j = h.rank - group.start; // index within the group
 
-    // Stage 1 — partial reduce-scatter within the NUMA group.
+    // Stage 1 — partial reduce-scatter within the group.
     for peer_j in 0..s {
         let peer = group.start + peer_j;
         if peer != h.rank {
             let r = chunk_range(data.len(), s, peer_j);
-            h.send(peer, encode(codec, &data[r], bufs, t))?;
+            h.send(peer, encode(codec, &data[r], bufs, t)?)?;
         }
     }
     let own = chunk_range(data.len(), s, j);
@@ -59,28 +109,14 @@ pub(crate) fn allreduce<T: Transport>(
         }
     }
 
-    // Stage 2 — cross-NUMA reduction with the bridge peer. Both sides sum
-    // the *decoded* images of both partials in group order, so the two
-    // groups end bit-identical despite the lossy wire.
-    let peer = topo.bridge_peer(h.rank);
-    let wire_mine = encode(codec, acc, bufs, t);
-    h.send(peer, wire_mine.clone())?;
-    let wire_peer = h.recv(peer)?;
-    // Blame decode failures on the payload's actual source: one of the two
-    // is this rank's own re-encoding, not the bridge peer's.
-    let (first, f_src, second, s_src) = if h.rank < peer {
-        (&wire_mine, h.rank, &wire_peer, peer)
-    } else {
-        (&wire_peer, peer, &wire_mine, h.rank)
-    };
-    acc.iter_mut().for_each(|x| *x = 0.0);
-    Codec::decode_sum_with_threads(first, bufs, acc, t)
-        .map_err(|e| CommError::decode(f_src, e))?;
-    Codec::decode_sum_with_threads(second, bufs, acc, t)
-        .map_err(|e| CommError::decode(s_src, e))?;
+    // Stage 2 — cross-group reduction over this rank's column: ring
+    // all-gather of the G encoded partials (forwarded verbatim — exactly
+    // one QDQ per partial no matter how many hops), then a group-ordered
+    // decode-sum so every column member lands on identical bits.
+    cross_group_reduce(h, bufs, acc, codec, t, &topo)?;
 
-    // Stage 3 — partial all-gather within the NUMA group.
-    let wire = encode(codec, acc, bufs, t);
+    // Stage 3 — partial all-gather within the group.
+    let wire = encode(codec, acc, bufs, t)?;
     for peer_j in 0..s {
         let p = group.start + peer_j;
         if p != h.rank {
@@ -104,11 +140,14 @@ pub(crate) fn allreduce<T: Transport>(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::comm::fabric::run_ranks;
+    use crate::comm::fabric::{run_ranks, run_ranks_with, RankHandle};
     use crate::comm::testutil::harness;
     use crate::quant::Codec;
     use crate::topo::{presets, Topology};
+    use crate::transport::{inproc, Transport, TransportStats};
     use crate::util::stats::sqnr_db;
+    use std::collections::BTreeMap;
+    use std::sync::{Arc, Mutex};
 
     #[test]
     fn matches_serial_sum() {
@@ -123,6 +162,45 @@ mod tests {
             let s = sqnr_db(&expected, &results[0]);
             assert!(s > min_db, "{spec}: SQNR {s} dB");
         }
+    }
+
+    #[test]
+    fn matches_serial_sum_on_generalized_groups() {
+        // The tentpole: the same collective on G = 4 PCIe groups and on a
+        // dual-NVLink-node cluster. All ranks bit-identical, quality within
+        // the codec's band.
+        for topo in [presets::four_group_pcie(8).unwrap(), presets::dual_nvlink_node(8).unwrap()]
+        {
+            for (spec, min_db) in [("bf16", 35.0), ("int8", 24.0), ("int2-sr@32!", 5.0)] {
+                let codec = Codec::parse(spec).unwrap();
+                let (results, expected) = harness(&topo, 3000, &codec, allreduce);
+                for r in &results {
+                    assert_eq!(
+                        r,
+                        &results[0],
+                        "{spec} on {}x{}: ranks diverge",
+                        topo.spec.name,
+                        topo.numa_groups
+                    );
+                }
+                let s = sqnr_db(&expected, &results[0]);
+                assert!(s > min_db, "{spec} G={}: SQNR {s} dB", topo.numa_groups);
+            }
+        }
+    }
+
+    #[test]
+    fn groups_of_one_degenerate_to_the_column_ring() {
+        // G == n (group size 1): stage 1 and 3 are empty, the whole
+        // collective is one ring all-gather of encoded full payloads.
+        let topo = Topology::with_groups(presets::l40(), 4, 4);
+        let codec = Codec::parse("int8").unwrap();
+        let (results, expected) = harness(&topo, 777, &codec, allreduce);
+        for r in &results {
+            assert_eq!(r, &results[0]);
+        }
+        let s = sqnr_db(&expected, &results[0]);
+        assert!(s > 24.0, "SQNR {s}");
     }
 
     #[test]
@@ -159,6 +237,28 @@ mod tests {
         // 4x less than two-step's measured 8M (4M per direction).
         let total = counters.total_bytes() as f64;
         assert!((total / (14.0 * m) - 1.0).abs() < 0.05, "total {total}");
+    }
+
+    #[test]
+    fn cross_group_volume_scales_with_g() {
+        // Measured cross-group bytes = N·(G−1)·chunk = G·(G−1)·M total
+        // (all ring hops, both directions counted by the fabric).
+        let len = 4096usize;
+        let measure = |topo: &Topology| {
+            let inputs: Vec<f32> = (0..len).map(|i| i as f32).collect();
+            let ir = &inputs;
+            let (_, counters) = run_ranks(topo, |h| {
+                let mut c = Communicator::from_handle(h);
+                let mut data = ir.clone();
+                allreduce(&mut c, &mut data, &Codec::Bf16).unwrap();
+            });
+            counters.cross_numa_bytes() as f64
+        };
+        let m = 2.0 * len as f64;
+        let g2 = measure(&Topology::new(presets::l40(), 8));
+        let g4 = measure(&presets::four_group_pcie(8).unwrap());
+        assert!((g2 / (2.0 * m) - 1.0).abs() < 0.05, "G=2 cross {g2}");
+        assert!((g4 / (12.0 * m) - 1.0).abs() < 0.05, "G=4 cross {g4} vs 12M");
     }
 
     #[test]
@@ -203,5 +303,170 @@ mod tests {
             allreduce(&mut c, &mut data, &Codec::Bf16).unwrap_err().to_string()
         });
         assert!(errs[0].contains("NUMA"), "{}", errs[0]);
+    }
+
+    // --- G = 2 bit-identity against the pre-refactor pairwise exchange ---
+
+    /// The pre-refactor stage-2: symmetric `bridge_peer` pair exchange,
+    /// kept verbatim (modulo the fallible encode helper) as the golden
+    /// reference the generalized column ring must match wire-for-wire.
+    fn allreduce_pairwise_reference<T: Transport>(
+        c: &mut Communicator<T>,
+        data: &mut [f32],
+        codec: &Codec,
+    ) -> Result<(), CommError> {
+        let Communicator { handle: h, bufs, acc, codec_threads, .. } = c;
+        let t = *codec_threads;
+        let topo = h.topo().clone();
+        assert_eq!(topo.numa_groups, 2, "the pairwise reference is the G=2 special case");
+        let s = topo.group_size();
+        let group = topo.group_members(h.rank);
+        let j = h.rank - group.start;
+
+        for peer_j in 0..s {
+            let peer = group.start + peer_j;
+            if peer != h.rank {
+                let r = chunk_range(data.len(), s, peer_j);
+                h.send(peer, encode(codec, &data[r], bufs, t)?)?;
+            }
+        }
+        let own = chunk_range(data.len(), s, j);
+        acc.clear();
+        acc.extend_from_slice(&data[own.clone()]);
+        for peer_j in 0..s {
+            let peer = group.start + peer_j;
+            if peer != h.rank {
+                let wire = h.recv(peer)?;
+                Codec::decode_sum_with_threads(&wire, bufs, acc, t)
+                    .map_err(|e| CommError::decode(peer, e))?;
+            }
+        }
+
+        let peer = topo.bridge_peer(h.rank);
+        let wire_mine = encode(codec, acc, bufs, t)?;
+        h.send(peer, wire_mine.clone())?;
+        let wire_peer = h.recv(peer)?;
+        let (first, f_src, second, s_src) = if h.rank < peer {
+            (&wire_mine, h.rank, &wire_peer, peer)
+        } else {
+            (&wire_peer, peer, &wire_mine, h.rank)
+        };
+        acc.iter_mut().for_each(|x| *x = 0.0);
+        Codec::decode_sum_with_threads(first, bufs, acc, t)
+            .map_err(|e| CommError::decode(f_src, e))?;
+        Codec::decode_sum_with_threads(second, bufs, acc, t)
+            .map_err(|e| CommError::decode(s_src, e))?;
+
+        let wire = encode(codec, acc, bufs, t)?;
+        for peer_j in 0..s {
+            let p = group.start + peer_j;
+            if p != h.rank {
+                h.send(p, wire.clone())?;
+            }
+        }
+        Codec::decode_with_threads(&wire, bufs, &mut data[own], t)
+            .map_err(|e| CommError::decode(h.rank, e))?;
+        for peer_j in 0..s {
+            let p = group.start + peer_j;
+            if p != h.rank {
+                let wire = h.recv(p)?;
+                let r = chunk_range(data.len(), s, peer_j);
+                Codec::decode_with_threads(&wire, bufs, &mut data[r], t)
+                    .map_err(|e| CommError::decode(p, e))?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Per-link FNV-1a hashes + message/byte counts of every payload a
+    /// collective puts on the wire, in send order.
+    type WireLog = Arc<Mutex<BTreeMap<(usize, usize), (u64, u64, u64)>>>;
+
+    struct HashingTransport<T: Transport> {
+        inner: T,
+        log: WireLog,
+    }
+
+    impl<T: Transport> Transport for HashingTransport<T> {
+        fn rank(&self) -> usize {
+            self.inner.rank()
+        }
+        fn n(&self) -> usize {
+            self.inner.n()
+        }
+        fn send(&self, dst: usize, payload: Vec<u8>) -> anyhow::Result<()> {
+            let mut log = self.log.lock().unwrap();
+            let entry = log.entry((self.inner.rank(), dst)).or_insert((0xcbf29ce484222325, 0, 0));
+            for &b in &payload {
+                entry.0 ^= b as u64;
+                entry.0 = entry.0.wrapping_mul(0x100000001b3);
+            }
+            entry.1 += 1;
+            entry.2 += payload.len() as u64;
+            drop(log);
+            self.inner.send(dst, payload)
+        }
+        fn recv(&self, src: usize) -> anyhow::Result<Vec<u8>> {
+            self.inner.recv(src)
+        }
+        fn stats(&self) -> TransportStats {
+            self.inner.stats()
+        }
+    }
+
+    fn hashed_mesh(n: usize) -> (Vec<HashingTransport<inproc::InProcTransport>>, WireLog) {
+        let log: WireLog = Arc::new(Mutex::new(BTreeMap::new()));
+        let endpoints = inproc::mesh(n)
+            .into_iter()
+            .map(|t| HashingTransport { inner: t, log: log.clone() })
+            .collect();
+        (endpoints, log)
+    }
+
+    #[test]
+    fn generalized_g2_is_wire_identical_to_pairwise_exchange() {
+        // The acceptance pin: at G = 2 the column ring must put the exact
+        // same bytes on the exact same links in the exact same order as the
+        // pre-refactor pairwise bridge exchange — golden per-link wire
+        // hashes, not just equal results.
+        let topo = Topology::new(presets::l40(), 8);
+        let inputs: Vec<Vec<f32>> = (0..8)
+            .map(|r| {
+                let mut rng = crate::util::Prng::new(1000 + r as u64);
+                let mut v = vec![0f32; 3000];
+                rng.fill_activations(&mut v, 1.0);
+                v
+            })
+            .collect();
+        for spec in ["bf16", "int4@32", "int2-sr@32!"] {
+            let codec = Codec::parse(spec).unwrap();
+            let ir = &inputs;
+            let run = |pairwise: bool| {
+                let (endpoints, log) = hashed_mesh(8);
+                let (results, _) = run_ranks_with(endpoints, &topo, |h: RankHandle<_>| {
+                    let mut c = Communicator::from_handle(h);
+                    let mut d = ir[c.rank()].clone();
+                    if pairwise {
+                        allreduce_pairwise_reference(&mut c, &mut d, &codec).unwrap();
+                    } else {
+                        allreduce(&mut c, &mut d, &codec).unwrap();
+                    }
+                    d
+                });
+                let log = Arc::try_unwrap(log).unwrap().into_inner().unwrap();
+                (results, log)
+            };
+            let (new_r, new_log) = run(false);
+            let (old_r, old_log) = run(true);
+            for r in 0..8 {
+                let a: Vec<u32> = new_r[r].iter().map(|x| x.to_bits()).collect();
+                let b: Vec<u32> = old_r[r].iter().map(|x| x.to_bits()).collect();
+                assert_eq!(a, b, "{spec}: rank {r} result diverges from pre-refactor path");
+            }
+            assert_eq!(
+                new_log, old_log,
+                "{spec}: per-link wire hashes diverge from the pre-refactor pair exchange"
+            );
+        }
     }
 }

@@ -42,7 +42,7 @@ pub(crate) mod twostep;
 
 use std::str::FromStr;
 
-pub use communicator::{preset_topo, Communicator, LocalGroup};
+pub use communicator::{preset_topo, preset_topo_grouped, Communicator, LocalGroup};
 pub use error::CommError;
 
 use crate::quant::{Codec, CodecBuffers};
@@ -82,6 +82,38 @@ impl Algo {
             Algo::HierPipelined => "hierpp",
         }
     }
+
+    /// Can this algorithm run on `topo`? **The** admissibility definition:
+    /// [`AlgoPolicy::Auto`] candidate selection, every collective's runtime
+    /// guard, and the early CLI validation all derive from this one method
+    /// — duplicated knowledge here is exactly how Auto used to be able to
+    /// select an algorithm whose collective then refused to run.
+    ///
+    /// Ring and two-step run on any topology. The hierarchical family
+    /// needs `G >= 2` link-tier groups joined by an inter-group link (2-
+    /// or 4-group PCIe boxes, multi-node NVLink clusters); whether a
+    /// *quantized* ring is ever worth running is a policy question (`Auto`
+    /// never picks one — error compounds over N−1 hops), not an
+    /// admissibility one: `Fixed(Ring)` with a codec remains the ablation.
+    pub fn admissible(&self, topo: &Topology) -> Result<(), CommError> {
+        match self {
+            Algo::Ring | Algo::TwoStep => Ok(()),
+            Algo::Hier | Algo::HierPipelined => {
+                if topo.numa_groups >= 2 && topo.inter_bw().is_some() {
+                    Ok(())
+                } else {
+                    Err(CommError::topology(
+                        *self,
+                        format!(
+                            "needs >= 2 NUMA/link-tier groups joined by an inter-group \
+                             link, topology has {} flat group(s)",
+                            topo.numa_groups
+                        ),
+                    ))
+                }
+            }
+        }
+    }
 }
 
 impl std::fmt::Display for Algo {
@@ -112,11 +144,11 @@ pub enum AlgoPolicy {
     /// Always run this algorithm (error if the topology cannot host it).
     Fixed(Algo),
     /// Consult the calibrated cost model per call: time every algorithm
-    /// admissible on the topology for this (codec, payload size) and take
-    /// the fastest. Deterministic — a pure function of (topology, codec,
-    /// size). A quantized ring is never admissible (its quantization error
-    /// compounds over N−1 hops; the paper runs the ring in BF16 only), and
-    /// the hierarchical algorithms require a 2-NUMA-group topology.
+    /// admissible on the topology ([`Algo::admissible`]) for this (codec,
+    /// payload size) and take the fastest. Deterministic — a pure function
+    /// of (topology, codec, size). A quantized ring is never a candidate
+    /// (its quantization error compounds over N−1 hops; the paper runs the
+    /// ring in BF16 only).
     Auto,
 }
 
@@ -132,9 +164,10 @@ impl AlgoPolicy {
                     candidates.push(Algo::Ring);
                 }
                 candidates.push(Algo::TwoStep);
-                if topo.spec.is_numa() && topo.numa_groups == 2 {
-                    candidates.push(Algo::Hier);
-                    candidates.push(Algo::HierPipelined);
+                for a in [Algo::Hier, Algo::HierPipelined] {
+                    if a.admissible(topo).is_ok() {
+                        candidates.push(a);
+                    }
                 }
                 let mut best = candidates[0];
                 let mut best_t = f64::INFINITY;
@@ -184,16 +217,20 @@ pub fn chunk_range(len: usize, parts: usize, i: usize) -> std::ops::Range<usize>
 
 /// Encode a slice with scratch reuse (helper shared by the collectives).
 /// `threads` is the communicator's codec worker budget — the fused kernels
-/// chunk large payloads across that many scoped threads.
+/// chunk large payloads across that many scoped threads. A payload the
+/// wire header cannot carry (`> u32::MAX` elements) is a clean
+/// [`CommError::Shape`], never a silently truncated on-wire count.
 pub(crate) fn encode(
     codec: &Codec,
     data: &[f32],
     bufs: &mut CodecBuffers,
     threads: usize,
-) -> Vec<u8> {
+) -> Result<Vec<u8>, CommError> {
     let mut out = Vec::with_capacity(codec.wire_len(data.len()));
-    codec.encode_with_threads(data, bufs, &mut out, threads);
-    out
+    codec
+        .encode_with_threads(data, bufs, &mut out, threads)
+        .map_err(|e| CommError::shape(e.to_string()))?;
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -276,6 +313,31 @@ mod tests {
         assert_eq!("NCCL".parse::<Algo>().unwrap(), Algo::Ring);
         assert_eq!("hier-pp".parse::<Algo>().unwrap(), Algo::HierPipelined);
         assert!("allgatherify".parse::<Algo>().is_err());
+    }
+
+    #[test]
+    fn admissibility_matrix() {
+        use crate::topo::{presets, Topology};
+        let flat = Topology::new(presets::h800(), 8);
+        let numa2 = Topology::new(presets::l40(), 8);
+        let numa4 = presets::four_group_pcie(8).unwrap();
+        let duo = presets::dual_nvlink_node(16).unwrap();
+        for a in [Algo::Ring, Algo::TwoStep] {
+            for t in [&flat, &numa2, &numa4, &duo] {
+                assert!(a.admissible(t).is_ok(), "{a} on {}x{}", t.spec.name, t.numa_groups);
+            }
+        }
+        for a in [Algo::Hier, Algo::HierPipelined] {
+            assert!(a.admissible(&flat).is_err(), "{a} needs groups");
+            for t in [&numa2, &numa4, &duo] {
+                assert!(a.admissible(t).is_ok(), "{a} on {}x{}", t.spec.name, t.numa_groups);
+            }
+            // A NUMA *device* flattened to one group is still inadmissible:
+            // admissibility is a property of the topology, not the spec.
+            let flat_l40 = Topology::with_groups(presets::l40(), 8, 1);
+            let err = a.admissible(&flat_l40).unwrap_err();
+            assert!(matches!(err, CommError::Topology { algo, .. } if algo == a), "{err}");
+        }
     }
 
     #[test]

@@ -1,20 +1,66 @@
-//! Pipelined hierarchical AllReduce (Fig. 8).
+//! Pipelined hierarchical AllReduce (Fig. 8), generalized over G groups.
 //!
 //! The payload is split into micro-chunks; each flows through the three
-//! hierarchical stages (intra RS → cross-NUMA reduce → intra AG) with the
-//! sends of later micro-chunks issued before earlier ones finish — the
-//! software-pipelining structure that lets PCIe and NUMA-bridge traffic
-//! overlap on real hardware. In this in-process fabric the overlap has no
-//! wall-clock meaning (timing lives in [`crate::sim`]); what this module
-//! establishes is *functional equivalence*: the chunked, reordered schedule
-//! produces exactly the same bytes and numerics as the serial execution.
+//! hierarchical stages (intra RS → cross-group column ring → intra AG)
+//! with the sends of later micro-chunks issued before earlier ones finish —
+//! the software-pipelining structure that lets the intra-group fabric and
+//! the inter-group link overlap on real hardware. In this in-process
+//! fabric the overlap has no wall-clock meaning (timing lives in
+//! [`crate::sim`]); what this module establishes is *functional
+//! equivalence*: the chunked, reordered schedule produces exactly the same
+//! bytes and numerics as the serial execution.
+//!
+//! ## Bounded in-flight window
+//!
+//! Intra-RS sends are issued at most [`SEND_WINDOW`] micro-chunks ahead of
+//! the chunk currently being reduced (and the all-gather phase sends one
+//! chunk at a time), so the transport's peak buffered wire bytes are
+//! bounded by a handful of micro-chunks instead of growing with the whole
+//! payload — the old schedule posted all k×(s−1) RS sends before the first
+//! recv, which on the TCP backend meant the receive queues briefly held
+//! most of the encoded payload. The window still keeps the next chunk's RS
+//! traffic in flight while the current chunk crosses the inter-group link
+//! (the Fig. 8 overlap), and the bound is pinned in a test via
+//! [`TransportStats::peak_buffered_bytes`](crate::transport::TransportStats).
 
 use super::{chunk_range, communicator::Communicator, encode, error::CommError, hier, Algo};
-use crate::quant::Codec;
+use crate::comm::fabric::RankHandle;
+use crate::quant::{Codec, CodecBuffers};
 use crate::transport::Transport;
 
 /// Default micro-chunk count (the sim's Fig. 8 sweep peaks around 8).
 pub const DEFAULT_CHUNKS: usize = 8;
+
+/// How many micro-chunks of intra-RS traffic may be in flight ahead of the
+/// chunk currently being reduced. `>= 2` keeps the pipeline overlap (chunk
+/// c's cross-group hop runs while chunk c+1's RS payloads travel); the
+/// in-flight memory bound scales linearly with it.
+pub const SEND_WINDOW: usize = 2;
+
+/// Issue the intra-group RS sends for one micro-chunk.
+fn send_rs_chunk<T: Transport>(
+    h: &RankHandle<T>,
+    bufs: &mut CodecBuffers,
+    codec: &Codec,
+    data: &[f32],
+    k: usize,
+    chunk: usize,
+    threads: usize,
+) -> Result<(), CommError> {
+    let topo = h.topo();
+    let s = topo.group_size();
+    let group = topo.group_members(h.rank);
+    let mr = chunk_range(data.len(), k, chunk);
+    let micro = &data[mr];
+    for peer_j in 0..s {
+        let peer = group.start + peer_j;
+        if peer != h.rank {
+            let r = chunk_range(micro.len(), s, peer_j);
+            h.send(peer, encode(codec, &micro[r], bufs, threads)?)?;
+        }
+    }
+    Ok(())
+}
 
 /// In-place pipelined hierarchical AllReduce with `chunks` micro-chunks.
 pub(crate) fn allreduce_chunked<T: Transport>(
@@ -26,35 +72,25 @@ pub(crate) fn allreduce_chunked<T: Transport>(
     let Communicator { handle: h, bufs, reduced, codec_threads, .. } = c;
     let t = *codec_threads;
     let topo = h.topo().clone();
-    if topo.numa_groups != 2 {
-        return Err(CommError::topology(
-            Algo::HierPipelined,
-            format!("needs 2 NUMA groups, topology has {}", topo.numa_groups),
-        ));
-    }
+    Algo::HierPipelined.admissible(&topo)?;
     let s = topo.group_size();
     let group = topo.group_members(h.rank);
     let j = h.rank - group.start;
     let k = chunks.max(1);
+    let win = SEND_WINDOW.max(1);
 
-    // Phase A: issue ALL intra-RS sends for every micro-chunk up front —
-    // this is what fills the PCIe bus while the bridge works (Fig. 8).
-    for chunk in 0..k {
-        let mr = chunk_range(data.len(), k, chunk);
-        let micro = &data[mr.clone()];
-        for peer_j in 0..s {
-            let peer = group.start + peer_j;
-            if peer != h.rank {
-                let r = chunk_range(micro.len(), s, peer_j);
-                h.send(peer, encode(codec, &micro[r], bufs, t))?;
-            }
-        }
+    // Phase A (windowed): prime the pipeline with the first `win` chunks'
+    // intra-RS sends — enough to keep the intra fabric busy while chunk 0
+    // crosses the inter-group link, without buffering the whole payload.
+    for chunk in 0..k.min(win) {
+        send_rs_chunk(h, bufs, codec, data, k, chunk, t)?;
     }
 
-    // Phase B: per micro-chunk: reduce own sub-chunk, run the bridge
-    // exchange, then all-gather — chunk c's bridge work happens while
-    // chunk c+1's RS payloads are already in flight. The per-chunk
-    // accumulators live in the communicator and are reused across calls.
+    // Phase B: per micro-chunk: reduce own sub-chunk, run the cross-group
+    // column ring, then top the send window back up — chunk c's cross hop
+    // happens while chunk c+1's RS payloads are already in flight. The
+    // per-chunk accumulators live in the communicator and are reused
+    // across calls.
     if reduced.len() < k {
         reduced.resize_with(k, Vec::new);
     }
@@ -73,28 +109,23 @@ pub(crate) fn allreduce_chunked<T: Transport>(
                     .map_err(|e| CommError::decode(peer, e))?;
             }
         }
-        // Bridge exchange for this micro-chunk (symmetric QDQ in group
-        // order — see hier.rs — so both NUMA groups stay bit-identical).
-        let peer = topo.bridge_peer(h.rank);
-        let wire_mine = encode(codec, acc, bufs, t);
-        h.send(peer, wire_mine.clone())?;
-        let wire_peer = h.recv(peer)?;
-        // Decode failures name the payload's actual source (see hier.rs).
-        let (first, f_src, second, s_src) = if h.rank < peer {
-            (&wire_mine, h.rank, &wire_peer, peer)
-        } else {
-            (&wire_peer, peer, &wire_mine, h.rank)
-        };
-        acc.iter_mut().for_each(|x| *x = 0.0);
-        Codec::decode_sum_with_threads(first, bufs, acc, t)
-            .map_err(|e| CommError::decode(f_src, e))?;
-        Codec::decode_sum_with_threads(second, bufs, acc, t)
-            .map_err(|e| CommError::decode(s_src, e))?;
+        // Cross-group column ring for this micro-chunk: the G encoded
+        // partials circulate verbatim and every member decode-sums them in
+        // group order (one shared implementation — see hier.rs), so all
+        // groups stay bit-identical.
+        hier::cross_group_reduce(h, bufs, acc, codec, t, &topo)?;
+        // Keep `win` chunks of RS traffic in flight ahead of the reducer.
+        if chunk + win < k {
+            send_rs_chunk(h, bufs, codec, data, k, chunk + win, t)?;
+        }
     }
 
-    // Phase C: all-gather every micro-chunk's reduced sub-chunk.
-    for (chunk, acc) in reduced.iter().take(k).enumerate() {
-        let wire = encode(codec, acc, bufs, t);
+    // Phase C: all-gather, one micro-chunk at a time (send chunk c, then
+    // collect chunk c) — per-link FIFO keeps senders and receivers in
+    // step, and at most ~one chunk per link is ever queued.
+    for chunk in 0..k {
+        let acc = &reduced[chunk];
+        let wire = encode(codec, acc, bufs, t)?;
         for peer_j in 0..s {
             let p = group.start + peer_j;
             if p != h.rank {
@@ -106,9 +137,6 @@ pub(crate) fn allreduce_chunked<T: Transport>(
         let own_abs = mr.start + own.start..mr.start + own.end;
         Codec::decode_with_threads(&wire, bufs, &mut data[own_abs], t)
             .map_err(|e| CommError::decode(h.rank, e))?;
-    }
-    for chunk in 0..k {
-        let mr = chunk_range(data.len(), k, chunk);
         for peer_j in 0..s {
             let p = group.start + peer_j;
             if p != h.rank {
@@ -161,15 +189,21 @@ mod tests {
 
     #[test]
     fn matches_serial_hier_bit_exactly() {
-        // Pipelining must not change the numerics at all.
-        let topo = Topology::new(presets::l40(), 8);
-        for spec in ["bf16", "int8", "int4@32", "int2-sr@32!"] {
-            let codec = Codec::parse(spec).unwrap();
-            let (pp, _) =
-                harness(&topo, 4096, &codec, |c, d, k| allreduce_chunked(c, d, k, 8));
-            let (serial, _) =
-                harness(&topo, 4096, &codec, |c, d, k| allreduce_serial_chunked(c, d, k, 8));
-            assert_eq!(pp[0], serial[0], "{spec}: pipelined != serial");
+        // Pipelining must not change the numerics at all — at G = 2 and on
+        // the generalized 4-group topology.
+        for topo in [Topology::new(presets::l40(), 8), presets::four_group_pcie(8).unwrap()] {
+            for spec in ["bf16", "int8", "int4@32", "int2-sr@32!"] {
+                let codec = Codec::parse(spec).unwrap();
+                let (pp, _) =
+                    harness(&topo, 4096, &codec, |c, d, k| allreduce_chunked(c, d, k, 8));
+                let (serial, _) =
+                    harness(&topo, 4096, &codec, |c, d, k| allreduce_serial_chunked(c, d, k, 8));
+                assert_eq!(
+                    pp[0], serial[0],
+                    "{spec} G={}: pipelined != serial",
+                    topo.numa_groups
+                );
+            }
         }
     }
 
@@ -208,5 +242,45 @@ mod tests {
         let v1 = measure(1) as f64;
         let v16 = measure(16) as f64;
         assert!(v16 / v1 < 1.30, "chunking overhead {}", v16 / v1);
+    }
+
+    #[test]
+    fn in_flight_bytes_bounded_by_the_send_window() {
+        // The memory-bound pin: with k micro-chunks, the mesh-wide peak of
+        // undelivered payload bytes must stay near (SEND_WINDOW + slack)
+        // chunks' worth of traffic — the pre-window schedule buffered all
+        // k×(s−1) RS wires (~40% of total traffic) before the first recv.
+        let topo = Topology::new(presets::l40(), 8);
+        let codec = Codec::parse("int4@32").unwrap();
+        let len = 65536usize;
+        let k = 32usize;
+        let inputs: Vec<f32> = (0..len).map(|i| (i as f32).sin()).collect();
+        let ir = &inputs;
+        let (stats, _) = crate::comm::fabric::run_ranks(&topo, |h| {
+            let mut comm = Communicator::from_handle(h);
+            let mut d = ir.clone();
+            allreduce_chunked(&mut comm, &mut d, &codec, k).unwrap();
+            comm.transport().stats()
+        });
+        // InProc counters are mesh-shared and monotone (totals and peak
+        // only ever grow), so the max over the per-rank snapshots — the
+        // last rank to finish sees everything — is the run's true value.
+        // (`buffered_bytes` itself is racy mid-run and not asserted.)
+        let peak = stats.iter().map(|s| s.peak_buffered_bytes).max().unwrap();
+        let total = stats.iter().map(|s| s.payload_bytes).max().unwrap();
+        assert!(peak > 0);
+        // Window bound with slack for rank skew (ranks may run up to a
+        // window apart): a few chunks' worth of the total, never a payload
+        // fraction like the old all-upfront schedule's ~40%.
+        let per_chunk = total / k as u64;
+        let bound = (3 * SEND_WINDOW as u64 + 4) * per_chunk;
+        assert!(
+            peak <= bound,
+            "peak in-flight {peak} exceeds the window bound {bound} ({total} total)"
+        );
+        assert!(
+            peak < total / 3,
+            "peak in-flight {peak} should be far below the full payload traffic {total}"
+        );
     }
 }

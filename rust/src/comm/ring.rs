@@ -34,7 +34,7 @@ pub(crate) fn allreduce<T: Transport>(
         let send_c = (h.rank + n - step) % n;
         let recv_c = (h.rank + n - step - 1) % n;
         let sr = chunk_range(data.len(), n, send_c);
-        h.send(next, encode(codec, &data[sr], bufs, t))?;
+        h.send(next, encode(codec, &data[sr], bufs, t)?)?;
         let wire = h.recv(prev)?;
         let rr = chunk_range(data.len(), n, recv_c);
         scratch.resize(rr.len(), 0.0);
@@ -49,7 +49,7 @@ pub(crate) fn allreduce<T: Transport>(
     let own = (h.rank + 1) % n;
     {
         let or = chunk_range(data.len(), n, own);
-        let wire = encode(codec, &data[or.clone()], bufs, t);
+        let wire = encode(codec, &data[or.clone()], bufs, t)?;
         scratch.resize(or.len(), 0.0);
         Codec::decode_with_threads(&wire, bufs, scratch, t)
             .map_err(|e| CommError::decode(h.rank, e))?;
@@ -59,7 +59,7 @@ pub(crate) fn allreduce<T: Transport>(
         let send_c = (h.rank + 1 + n - step) % n;
         let recv_c = (h.rank + n - step) % n;
         let sr = chunk_range(data.len(), n, send_c);
-        h.send(next, encode(codec, &data[sr], bufs, t))?;
+        h.send(next, encode(codec, &data[sr], bufs, t)?)?;
         let wire = h.recv(prev)?;
         let rr = chunk_range(data.len(), n, recv_c);
         scratch.resize(rr.len(), 0.0);

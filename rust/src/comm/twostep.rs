@@ -42,7 +42,7 @@ pub(crate) fn reduce_scatter<T: Transport>(
     for dst in 0..n {
         if dst != h.rank {
             let r = chunk_range(data.len(), n, dst);
-            h.send(dst, encode(codec, &data[r], bufs, t))?;
+            h.send(dst, encode(codec, &data[r], bufs, t)?)?;
         }
     }
     acc.clear();
@@ -72,7 +72,7 @@ pub(crate) fn all_gather<T: Transport>(
         return Ok(());
     }
     let own = chunk_range(data.len(), n, h.rank);
-    let wire = encode(codec, &data[own.clone()], bufs, t);
+    let wire = encode(codec, &data[own.clone()], bufs, t)?;
     for dst in 0..n {
         if dst != h.rank {
             h.send(dst, wire.clone())?;
@@ -109,7 +109,7 @@ pub(crate) fn broadcast<T: Transport>(
         return Ok(());
     }
     if h.rank == root {
-        let wire = encode(codec, data, bufs, t);
+        let wire = encode(codec, data, bufs, t)?;
         for dst in 0..n {
             if dst != root {
                 h.send(dst, wire.clone())?;

@@ -34,7 +34,16 @@ struct LayerShards {
 /// Build the TP rank group for a policy, or `None` for the wire-free
 /// single-shard case.
 pub(crate) fn tp_group(tp: usize, policy: AlgoPolicy) -> Result<Option<LocalGroup>> {
-    Ok(if tp >= 2 { Some(LocalGroup::for_policy(tp, policy)?) } else { None })
+    tp_group_grouped(tp, None, policy)
+}
+
+/// [`tp_group`] with an explicit link-tier group count (`--groups`).
+pub(crate) fn tp_group_grouped(
+    tp: usize,
+    groups: Option<usize>,
+    policy: AlgoPolicy,
+) -> Result<Option<LocalGroup>> {
+    Ok(if tp >= 2 { Some(LocalGroup::for_policy_grouped(tp, groups, policy)?) } else { None })
 }
 
 /// The TP engine: owns the runtime, the sharded weights, and the rank
@@ -44,6 +53,8 @@ pub struct TpEngine {
     pub cfg: ModelConfig,
     pub codec: Codec,
     policy: AlgoPolicy,
+    /// Link-tier group count the rank-group topology models (`--groups`).
+    groups: Option<usize>,
     group: Option<LocalGroup>,
     embed: xla::Literal,
     head: Vec<xla::Literal>, // lnf_g, lnf_b, embed (tied)
@@ -63,9 +74,22 @@ impl TpEngine {
         codec: Codec,
         policy: AlgoPolicy,
     ) -> Result<TpEngine> {
+        TpEngine::new_grouped(rt, cfg, weights, codec, policy, None)
+    }
+
+    /// [`TpEngine::new`] with an explicit link-tier group count for the
+    /// rank-group topology (the CLI's `--groups`).
+    pub fn new_grouped(
+        rt: Runtime,
+        cfg: ModelConfig,
+        weights: &Weights,
+        codec: Codec,
+        policy: AlgoPolicy,
+        groups: Option<usize>,
+    ) -> Result<TpEngine> {
         ensure!(cfg.n_heads % cfg.tp == 0, "heads {} % tp {}", cfg.n_heads, cfg.tp);
         let tp = cfg.tp;
-        let group = tp_group(tp, policy)?;
+        let group = tp_group_grouped(tp, groups, policy)?;
         let embed = weights.get("embed")?.to_literal()?;
         let head = vec![
             weights.get("lnf_g")?.to_literal()?,
@@ -108,6 +132,7 @@ impl TpEngine {
             cfg,
             codec,
             policy,
+            groups,
             group,
             embed,
             head,
@@ -225,7 +250,7 @@ impl TpEngine {
     pub fn set_codec(&mut self, codec: Codec, policy: AlgoPolicy) -> Result<()> {
         self.codec = codec;
         if policy != self.policy {
-            self.group = tp_group(self.cfg.tp, policy)?;
+            self.group = tp_group_grouped(self.cfg.tp, self.groups, policy)?;
             self.policy = policy;
         }
         Ok(())

@@ -28,6 +28,9 @@ pub struct TrainOptions {
     /// Gradient AllReduce algorithm: a fixed [`Algo`] or `Auto` against
     /// the cost model (`--algo auto` on the CLI).
     pub algo: AlgoPolicy,
+    /// Link-tier group count of the DP rank-group topology (`--groups`);
+    /// `None` lets the policy pick the preset shape.
+    pub groups: Option<usize>,
     pub seed: u64,
     pub log_every: usize,
     pub eval_every: usize,
@@ -41,6 +44,7 @@ impl Default for TrainOptions {
             dp: 4,
             codec: Codec::Bf16,
             algo: AlgoPolicy::Fixed(Algo::TwoStep),
+            groups: None,
             seed: 7,
             log_every: 10,
             eval_every: 0,
@@ -71,9 +75,9 @@ pub struct Trainer {
     m: Vec<xla::Literal>,
     v: Vec<xla::Literal>,
     step: usize,
-    /// Persistent DP rank group, keyed by the (dp, policy) it was built
-    /// for; rebuilt lazily when the options change between calls.
-    group: Option<((usize, AlgoPolicy), LocalGroup)>,
+    /// Persistent DP rank group, keyed by the (dp, groups, policy) it was
+    /// built for; rebuilt lazily when the options change between calls.
+    group: Option<((usize, Option<usize>, AlgoPolicy), LocalGroup)>,
 }
 
 impl Trainer {
@@ -126,9 +130,10 @@ impl Trainer {
         if opts.dp == 1 {
             return Ok((per_rank.swap_remove(0), 0));
         }
-        let key = (opts.dp, opts.algo);
+        let key = (opts.dp, opts.groups, opts.algo);
         if self.group.as_ref().map(|(k, _)| *k != key).unwrap_or(true) {
-            self.group = Some((key, LocalGroup::for_policy(opts.dp, opts.algo)?));
+            self.group =
+                Some((key, LocalGroup::for_policy_grouped(opts.dp, opts.groups, opts.algo)?));
         }
         let (_, group) = self.group.as_mut().unwrap();
         let before = group.counters().total_bytes();

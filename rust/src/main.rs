@@ -4,25 +4,30 @@
 //! flashcomm table <1..10|all> [--quick] [--steps N] [--batches N] [--size 64M]
 //! flashcomm figure <1|2|4|5|8|all> [--quick] [--codec spec] [--chunks K]
 //! flashcomm train   [--config tiny] [--steps N] [--dp N] [--codec spec]
-//!                   [--algo ring|twostep|hier|hierpp|auto] [--out ckpt.bin]
+//!                   [--algo ring|twostep|hier|hierpp|auto] [--groups G]
+//!                   [--out ckpt.bin]
 //! flashcomm eval    [--config tiny] [--ckpt path] [--codec spec]
-//!                   [--algo twostep|hier|auto] [--batches N]
+//!                   [--algo twostep|hier|auto] [--groups G] [--batches N]
 //! flashcomm ttft    [--prompt N] [--batch N]
-//! flashcomm worker  [--world N] [--algo hier|auto] [--codecs int4@32,int2-sr@32]
-//!                   [--len N] [--root host:port] [--rank R] [--codec-threads T]
+//! flashcomm worker  [--world N] [--algo hier|auto] [--groups G]
+//!                   [--codecs int4@32,int2-sr@32] [--len N]
+//!                   [--root host:port] [--rank R] [--codec-threads T]
 //! flashcomm info
 //! ```
 //!
 //! Codec spec grammar: `bf16 | int<bits>[-rtn|-sr|-had|-log][@<gs>][!]`
 //! (`!` = integer Eq.1 metadata), e.g. `int5`, `int2-sr@32`, `int2-sr@32!`.
 //! `--algo auto` lets the cost model pick the algorithm per payload size.
+//! `--groups G` shapes the rank-group topology: 1 = flat NVLink node,
+//! `G >= 2` = G equal link-tier groups joined by NUMA bridges (the
+//! generalized hierarchical family runs at any admissible G).
 
 use std::sync::Arc;
 
 use anyhow::{bail, ensure, Context, Result};
 
 use flashcomm::cli::Args;
-use flashcomm::comm::{fabric, preset_topo, AlgoPolicy, Communicator};
+use flashcomm::comm::{fabric, preset_topo_grouped, AlgoPolicy, Communicator};
 use flashcomm::coordinator::{TpEngine, TrainOptions, Trainer};
 use flashcomm::harness;
 use flashcomm::model::{Corpus, ModelConfig, Sampler, Weights};
@@ -66,6 +71,18 @@ fn run(args: &Args) -> Result<()> {
     }
 }
 
+/// Parse the optional `--groups G` flag (link-tier group count for the
+/// rank-group topology: 1 = flat NVLink node, G >= 2 = G-group NUMA box).
+fn groups_flag(args: &Args) -> Result<Option<usize>> {
+    match args.flag("groups") {
+        None => Ok(None),
+        Some(v) => {
+            let g: usize = v.parse().with_context(|| format!("--groups {v}"))?;
+            Ok(Some(g))
+        }
+    }
+}
+
 const HELP: &str = "\
 flashcomm — FlashCommunication V2 (bit splitting + spike reserving) reproduction
 
@@ -84,6 +101,8 @@ common flags: --quick (small sweep), --steps N, --batches N, --codec SPEC
 codec SPEC: bf16 | int<b>[-sr|-had|-log][@gs][!]   e.g. int2-sr@32!
 algo: --algo ring|twostep|hier|hierpp|auto — `auto` consults the cost
       model per payload (hier above the crossover size, two-step below)
+groups: --groups G — link-tier groups of the rank-group topology
+      (1 = flat NVLink, G >= 2 = G NUMA groups; hier runs at any G >= 2)
 ";
 
 fn cmd_train(args: &Args) -> Result<()> {
@@ -106,6 +125,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         dp: args.flag_usize("dp", 4)?,
         codec: Codec::parse(&args.flag_or("codec", "bf16"))?,
         algo: args.flag_or("algo", "twostep").parse()?,
+        groups: groups_flag(args)?,
         log_every: args.flag_usize("log-every", 10)?,
         eval_every: args.flag_usize("eval-every", 50)?,
         eval_batches: args.flag_usize("eval-batches", 8)?,
@@ -164,7 +184,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
         bail!("--style was replaced by --algo (try `--algo {style}`, or `--algo auto`)");
     }
     let policy: AlgoPolicy = args.flag_or("algo", "twostep").parse()?;
-    let mut engine = TpEngine::new(rt, cfg, &weights, codec, policy)?;
+    let mut engine = TpEngine::new_grouped(rt, cfg, &weights, codec, policy, groups_flag(args)?)?;
     let t0 = std::time::Instant::now();
     let ppl = engine.perplexity(&batches)?;
     println!(
@@ -190,11 +210,12 @@ fn cmd_worker(args: &Args) -> Result<()> {
     ensure!(world >= 2, "worker demo needs at least 2 ranks (got --world {world})");
     let len = args.flag_usize("len", 4096)?;
     let algo = args.flag_or("algo", "hier");
+    let groups = groups_flag(args)?;
     // Validate once here rather than erroring in every spawned process:
-    // the hierarchical algorithms need two equal NUMA groups, and the
-    // preset lookup enforces that per policy.
+    // the topology must construct (world divisible into --groups) and a
+    // fixed algorithm must be admissible on it (`Algo::admissible`).
     let policy: AlgoPolicy = algo.parse()?;
-    preset_topo(world, policy)?;
+    preset_topo_grouped(world, groups, policy)?;
     let codecs = args.flag_or("codecs", "int4@32,int2-sr@32");
     // Codec worker threads per rank: each rank owns its process here, so
     // large payloads may fan the fused quantize/pack kernels out (the
@@ -204,9 +225,11 @@ fn cmd_worker(args: &Args) -> Result<()> {
         Some(r) => {
             let rank: usize = r.parse().with_context(|| format!("--rank {r}"))?;
             let root = args.require("root")?;
-            worker_rank(rank, world, len, &algo, &codecs, root, codec_threads)
+            worker_rank(rank, world, len, &algo, groups, &codecs, root, codec_threads)
         }
-        None => worker_launch(world, len, &algo, &codecs, args.flag("root"), codec_threads),
+        None => {
+            worker_launch(world, len, &algo, groups, &codecs, args.flag("root"), codec_threads)
+        }
     }
 }
 
@@ -214,6 +237,7 @@ fn worker_launch(
     world: usize,
     len: usize,
     algo: &str,
+    groups: Option<usize>,
     codecs: &str,
     root: Option<&str>,
     codec_threads: usize,
@@ -231,23 +255,30 @@ fn worker_launch(
         }
     };
     let exe = std::env::current_exe().context("resolving the worker binary path")?;
+    let grouping = match groups {
+        Some(g) => format!(", {g} groups"),
+        None => String::new(),
+    };
     println!(
-        "spawning {world} worker processes: rendezvous {root}, algo {algo}, \
+        "spawning {world} worker processes: rendezvous {root}, algo {algo}{grouping}, \
          codecs {codecs}, {len} elems/rank"
     );
     let mut children = Vec::with_capacity(world);
     for rank in 0..world {
-        let child = std::process::Command::new(&exe)
-            .arg("worker")
+        let mut cmd = std::process::Command::new(&exe);
+        cmd.arg("worker")
             .args(["--rank", &rank.to_string()])
             .args(["--world", &world.to_string()])
             .args(["--root", &root])
             .args(["--len", &len.to_string()])
             .args(["--algo", algo])
             .args(["--codecs", codecs])
-            .args(["--codec-threads", &codec_threads.to_string()])
-            .spawn()
-            .with_context(|| format!("spawning worker rank {rank}"))?;
+            .args(["--codec-threads", &codec_threads.to_string()]);
+        if let Some(g) = groups {
+            cmd.args(["--groups", &g.to_string()]);
+        }
+        let child =
+            cmd.spawn().with_context(|| format!("spawning worker rank {rank}"))?;
         children.push((rank, child));
     }
     let mut failed = false;
@@ -263,17 +294,19 @@ fn worker_launch(
     Ok(())
 }
 
+#[allow(clippy::too_many_arguments)]
 fn worker_rank(
     rank: usize,
     world: usize,
     len: usize,
     algo_str: &str,
+    groups: Option<usize>,
     codecs: &str,
     root: &str,
     codec_threads: usize,
 ) -> Result<()> {
     let policy: AlgoPolicy = algo_str.parse()?;
-    let topo = preset_topo(world, policy)?;
+    let topo = preset_topo_grouped(world, groups, policy)?;
     let tcp = TcpTransport::bootstrap(rank, world, root)
         .with_context(|| format!("rank {rank} bootstrapping the TCP mesh at {root}"))?;
     let mut comm =

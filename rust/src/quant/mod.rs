@@ -22,6 +22,6 @@ pub mod wire;
 
 pub use fused::{MAX_CODEC_THREADS, PAR_MIN_ELEMS};
 pub use rtn::GroupMeta;
-pub use scheme::{Codec, CodecBuffers};
+pub use scheme::{Codec, CodecBuffers, MAX_WIRE_ELEMS};
 pub use spike::{ScaleMode, SpikeMeta};
 pub use wire::SectionSizes;

@@ -17,6 +17,13 @@ use super::spike::{self, ScaleMode, SpikeMeta};
 use super::wire::{self, Header, SectionSizes, WireScheme, HEADER_LEN};
 use crate::util::bf16::{self, Bf16};
 
+/// The largest payload (in f32 elements) one wire message can carry: the
+/// self-describing header stores the element count as a `u32`
+/// ([`wire::Header::n`]). Encoding anything longer is rejected up front
+/// ([`Codec::validate_len`]) — a silently truncated count would desync
+/// every decoder downstream.
+pub const MAX_WIRE_ELEMS: usize = u32::MAX as usize;
+
 /// A fully parameterized quantization scheme.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Codec {
@@ -146,6 +153,18 @@ impl Codec {
         Ok(())
     }
 
+    /// Whether a payload of `n` values fits the wire format: `Header.n` is
+    /// `u32`, so anything beyond [`MAX_WIRE_ELEMS`] must be rejected at
+    /// encode time (chunk it across messages instead).
+    pub fn validate_len(&self, n: usize) -> Result<()> {
+        ensure!(
+            n <= MAX_WIRE_ELEMS,
+            "payload of {n} elements exceeds the wire header's u32 element count \
+             (max {MAX_WIRE_ELEMS}); split it across messages"
+        );
+        Ok(())
+    }
+
     /// Paper-style display name (`INT2_SR`, `INT5`, `BF16`, …).
     pub fn name(&self) -> String {
         match *self {
@@ -252,10 +271,17 @@ impl Codec {
     /// §Perf: quantization and bit-split packing are fused — one pass over
     /// `data` scatters code bits straight into the plane regions of `out`,
     /// with no intermediate byte-per-value codes buffer (see
-    /// `quant::fused`). Panics on a structurally invalid codec (see
-    /// [`Codec::validate`]); parsed codecs are always valid.
-    pub fn encode_with(&self, data: &[f32], bufs: &mut CodecBuffers, out: &mut Vec<u8>) {
-        self.encode_with_threads(data, bufs, out, 1);
+    /// `quant::fused`). Errors when the payload exceeds [`MAX_WIRE_ELEMS`]
+    /// (the header's `u32` count would truncate — see
+    /// [`Codec::validate_len`]); panics on a structurally invalid codec
+    /// (see [`Codec::validate`]) — parsed codecs are always valid.
+    pub fn encode_with(
+        &self,
+        data: &[f32],
+        bufs: &mut CodecBuffers,
+        out: &mut Vec<u8>,
+    ) -> Result<()> {
+        self.encode_with_threads(data, bufs, out, 1)
     }
 
     /// [`encode_with`](Codec::encode_with), chunked over up to `threads`
@@ -269,10 +295,11 @@ impl Codec {
         bufs: &mut CodecBuffers,
         out: &mut Vec<u8>,
         threads: usize,
-    ) {
+    ) -> Result<()> {
         self.validate()
             .unwrap_or_else(|e| panic!("refusing to encode with invalid codec {self:?}: {e}"));
         let n = data.len();
+        self.validate_len(n)?;
         let start = out.len();
         self.header(n).write(out);
         match *self {
@@ -280,13 +307,16 @@ impl Codec {
             _ => fused::encode_body(self, data, bufs, out, threads),
         }
         debug_assert_eq!(out.len() - start, self.wire_len(n), "wire_len mismatch for {self:?}");
+        Ok(())
     }
 
-    /// Convenience: encode into a fresh Vec.
+    /// Convenience: encode into a fresh Vec. Panics on a payload beyond
+    /// [`MAX_WIRE_ELEMS`] — test/tool sugar; the collective layer uses the
+    /// fallible [`Codec::encode_with_threads`].
     pub fn encode(&self, data: &[f32]) -> Vec<u8> {
         let mut bufs = CodecBuffers::default();
         let mut out = Vec::with_capacity(self.wire_len(data.len()));
-        self.encode_with(data, &mut bufs, &mut out);
+        self.encode_with(data, &mut bufs, &mut out).expect("payload fits the wire header");
         out
     }
 
@@ -394,7 +424,7 @@ impl Codec {
         let mut wire = std::mem::take(&mut bufs.wire);
         wire.clear();
         wire.reserve(self.wire_len(data.len()));
-        self.encode_with(data, bufs, &mut wire);
+        self.encode_with(data, bufs, &mut wire).expect("payload fits the wire header");
         let r = Self::decode_with(&wire, bufs, data);
         bufs.wire = wire;
         r.expect("own payload must decode");
@@ -580,7 +610,38 @@ mod tests {
         let mut bufs = CodecBuffers::default();
         let mut out = Vec::new();
         let data = vec![0f32; 512];
-        c.encode_with(&data, &mut bufs, &mut out);
+        let _ = c.encode_with(&data, &mut bufs, &mut out);
+    }
+
+    #[test]
+    fn oversized_payloads_rejected_at_encode_time() {
+        // Header.n is u32: one element past MAX_WIRE_ELEMS must be a clean
+        // error (a truncated count would desync the decoder), checked
+        // without materializing a 16 GiB buffer.
+        for spec in ["bf16", "int8", "int4@32", "int2-sr@32!"] {
+            let c = Codec::parse(spec).unwrap();
+            assert!(c.validate_len(MAX_WIRE_ELEMS).is_ok(), "{spec}: boundary is legal");
+            let err = c.validate_len(MAX_WIRE_ELEMS + 1).unwrap_err();
+            assert!(err.to_string().contains("u32"), "{spec}: {err}");
+        }
+    }
+
+    #[test]
+    fn hostile_header_at_the_u32_boundary_is_a_clean_error() {
+        // A wire header *claiming* u32::MAX elements (the value a 2^32+k
+        // payload would silently truncate to is also reachable by
+        // corruption) must fail decode cleanly — length cross-check, no
+        // allocation of the claimed size, accumulator untouched.
+        let c = Codec::parse("int4@32").unwrap();
+        let data = vec![1.0f32; 64];
+        let mut wire = c.encode(&data);
+        wire[8..12].copy_from_slice(&u32::MAX.to_le_bytes()); // Header.n
+        let mut out = vec![0f32; 64];
+        assert!(Codec::decode(&wire, &mut out).is_err());
+        let mut bufs = CodecBuffers::default();
+        let mut acc = vec![1.0f32; 64];
+        assert!(Codec::decode_sum_with(&wire, &mut bufs, &mut acc).is_err());
+        assert!(acc.iter().all(|&x| x == 1.0), "accumulator must be untouched");
     }
 
     #[test]

@@ -19,14 +19,22 @@ pub fn all2all_time(topo: &Topology, codec: &Codec, m_bytes: f64) -> TimeBreakdo
     let spec = &topo.spec;
     let cost = codec_cost(codec);
     let outbound = (n - 1.0) / n * m_bytes * ratio;
-    let transfer = match spec.interconnect {
+    let intra = match spec.interconnect {
         Interconnect::NvLink { .. } => outbound / (spec.intra_bw() * spec.a2a_eff),
-        Interconnect::PcieNuma { .. } => {
-            // Half the destinations are across the bridge.
+        Interconnect::PcieNuma { .. } => outbound / spec.intra_bw(),
+    };
+    let transfer = match topo.inter_bw() {
+        // (N−s)/N of each GPU's traffic leaves its group, balanced over
+        // the inter-group links (the shared sim::volume link model). At
+        // G=2 this is the "half the destinations are across the bridge"
+        // accounting: N·(s/N)·M.
+        Some(bw) => {
             let s = topo.group_size() as f64;
-            let cross = n * (s / n) * m_bytes * ratio; // s/N of each GPU's M
-            (cross / spec.bridge_bw().unwrap()).max(outbound / spec.intra_bw())
+            let cross =
+                (n - s) * m_bytes * ratio / super::volume::inter_group_links(topo.numa_groups);
+            (cross / bw).max(intra)
         }
+        None => intra,
     };
     let enc = elems * cost.encode_passes;
     let dec = elems * (n - 1.0) / n * cost.decode_passes;

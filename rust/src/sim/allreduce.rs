@@ -43,6 +43,7 @@ pub fn allreduce_time(topo: &Topology, algo: Algo, codec: &Codec, m_bytes: f64) 
     let spec = &topo.spec;
     let cost = codec_cost(codec);
     let lat = spec.stage_latency_s;
+    let groups = topo.numa_groups;
 
     match algo {
         Algo::Ring => {
@@ -50,14 +51,20 @@ pub fn allreduce_time(topo: &Topology, algo: Algo, codec: &Codec, m_bytes: f64) 
             // paper only runs BF16 over NCCL; a quantized ring would QDQ at
             // every hop (kept here as the ablation `ring+codec`).
             let per_link = 2.0 * (n - 1.0) / n * m_bytes * ratio;
-            let transfer = match spec.interconnect {
-                Interconnect::PcieNuma { .. } => {
-                    // The bridge carries the paper's 7M/4 cross volume.
-                    let cross = super::volume::cross_numa_volume(algo, topo.n_gpus, 2, m_bytes)
-                        * ratio;
-                    (cross / spec.bridge_bw().unwrap()).max(per_link / spec.intra_bw())
-                }
+            let intra = match spec.interconnect {
+                Interconnect::PcieNuma { .. } => per_link / spec.intra_bw(),
                 Interconnect::NvLink { .. } => per_link / (spec.intra_bw() * spec.ring_eff),
+            };
+            // The slowest link bounds the ring: the inter-group link
+            // carries the boundary-crossing volume (the paper's 7M/4).
+            let transfer = match topo.inter_bw() {
+                Some(bw) => {
+                    let cross =
+                        super::volume::cross_numa_volume(algo, topo.n_gpus, groups, m_bytes)
+                            * ratio;
+                    (cross / bw).max(intra)
+                }
+                None => intra,
             };
             // QDQ at every hop: 2(N-1) rounds over M/N-element chunks.
             let hops = 2.0 * (n - 1.0);
@@ -73,17 +80,18 @@ pub fn allreduce_time(topo: &Topology, algo: Algo, codec: &Codec, m_bytes: f64) 
             TimeBreakdown { transfer_s: transfer, qdq_s: qdq, latency_s: hops * lat }
         }
         Algo::TwoStep => {
-            // One-shot RS (+reduce) then one-shot AG, fused QDQ.
-            let transfer = match spec.interconnect {
-                Interconnect::PcieNuma { .. } => {
-                    let cross = super::volume::cross_numa_volume(algo, topo.n_gpus, 2, m_bytes)
-                        * ratio;
-                    let intra = 2.0 * (n - 1.0) / n * m_bytes * ratio;
-                    (cross / spec.bridge_bw().unwrap()).max(intra / spec.intra_bw())
+            // One-shot RS (+reduce) then one-shot AG, fused QDQ. The
+            // busiest inter-group link carries its share of the all-to-all
+            // cross traffic when the topology has one.
+            let intra = 2.0 * (n - 1.0) / n * m_bytes * ratio / spec.intra_bw();
+            let transfer = match topo.inter_bw() {
+                Some(bw) => {
+                    let cross =
+                        super::volume::cross_numa_volume(algo, topo.n_gpus, groups, m_bytes)
+                            * ratio;
+                    (cross / bw).max(intra)
                 }
-                Interconnect::NvLink { .. } => {
-                    2.0 * (n - 1.0) / n * m_bytes * ratio / spec.intra_bw()
-                }
+                None => intra,
             };
             // Encode all own data + the reduced chunk; decode N-1 incoming
             // chunks with reduce, then N-1 gathered chunks plain.
@@ -95,10 +103,12 @@ pub fn allreduce_time(topo: &Topology, algo: Algo, codec: &Codec, m_bytes: f64) 
         }
         Algo::Hier => {
             let b = hier_stage_times(topo, codec, m_bytes);
+            // Two intra stages plus the (G−1)-hop leader ring.
+            let cross_hops = (groups.max(2) - 1) as f64;
             TimeBreakdown {
                 transfer_s: b.rs_intra + b.cross + b.ag_intra,
                 qdq_s: b.qdq_total,
-                latency_s: 3.0 * lat,
+                latency_s: (2.0 + cross_hops) * lat,
             }
         }
         Algo::HierPipelined => {
@@ -123,21 +133,31 @@ pub struct HierStages {
 
 pub fn hier_stage_times(topo: &Topology, codec: &Codec, m_bytes: f64) -> HierStages {
     let spec = &topo.spec;
-    assert!(spec.is_numa(), "hierarchical AllReduce targets NUMA (PCIe) nodes");
+    let groups = topo.numa_groups;
     let s = topo.group_size() as f64;
     let elems = m_bytes / 2.0;
     let ratio = codec.compression_ratio(elems as usize);
     let cost = codec_cost(codec);
-    // Intra-NUMA RS: every rank sends (s-1)/s of its payload over PCIe.
+    // Intra-group RS: every rank sends (s-1)/s of its payload over the
+    // fast fabric.
     let rs_intra = (s - 1.0) / s * m_bytes * ratio / spec.intra_bw();
-    // Cross-NUMA reduction: the bridge carries M (paper accounting).
-    let cross = super::volume::cross_numa_volume(Algo::Hier, topo.n_gpus, 2, m_bytes) * ratio
-        / spec.bridge_bw().unwrap();
-    // Intra-NUMA AG mirrors the RS volume.
+    // Cross-group leader ring: each adjacent link carries (G−1)·M (paper
+    // accounting: M at G=2). An inadmissible (flat) topology prices to
+    // +inf instead of panicking — Auto never asks, but nothing downstream
+    // may crash on hostile shapes.
+    let cross_vol = super::volume::cross_numa_volume(Algo::Hier, topo.n_gpus, groups, m_bytes);
+    let cross = match topo.inter_bw() {
+        Some(bw) => cross_vol * ratio / bw,
+        None => f64::INFINITY,
+    };
+    // Intra-group AG mirrors the RS volume.
     let ag_intra = rs_intra;
-    // QDQ: encode M + M/s + M/s; decode(+reduce) (s-1)/s·M + M/s; decode AG.
+    // QDQ: encode M + M/s + M/s; decode(+reduce) (s-1)/s·M plus the G−1
+    // ring images of M/s; decode AG. (G = 2 reproduces the calibrated
+    // two-group accounting exactly.)
     let enc = elems * (1.0 + 2.0 / s) * cost.encode_passes;
-    let dec_red = elems * ((s - 1.0) / s + 1.0 / s) * (cost.decode_passes + cost.reduce_passes);
+    let gm1 = (groups.max(2) - 1) as f64;
+    let dec_red = elems * ((s - 1.0) / s + gm1 / s) * (cost.decode_passes + cost.reduce_passes);
     let dec = elems * (s - 1.0) / s * cost.decode_passes;
     let qdq_total = pass_time(spec, 1.0, enc + dec_red + dec);
     HierStages { rs_intra, cross, ag_intra, qdq_total }
@@ -320,6 +340,30 @@ mod tests {
         let two_q = allreduce_time(&topo, Algo::TwoStep, &c("int8"), M);
         assert!(ring_q.qdq_s > two_q.qdq_s * 1.2, "{} vs {}", ring_q.qdq_s, two_q.qdq_s);
         assert!(ring_q.latency_s > two_q.latency_s * 4.0);
+    }
+
+    #[test]
+    fn generalized_group_pricing() {
+        // 4-group PCIe box: the leader ring carries 3M per link vs 1M at
+        // G=2, so the hier cross stage must cost ~3x more at equal bridge
+        // speed — but the two-step still loses (its per-link 1.5M pays
+        // against a fabric that hier's intra stages partly avoid too).
+        let g2 = Topology::new(presets::l40(), 8);
+        let g4 = presets::four_group_pcie(8).unwrap();
+        let c4 = c("int4@32");
+        let s2 = hier_stage_times(&g2, &c4, M);
+        let s4 = hier_stage_times(&g4, &c4, M);
+        assert!((s4.cross / s2.cross - 3.0).abs() < 1e-9, "{} vs {}", s4.cross, s2.cross);
+        // Dual NVLink nodes: the slow inter-node link dominates the
+        // two-step (4M across 25 GB/s) — hier's M across wins clearly.
+        let duo = presets::dual_nvlink_node(16).unwrap();
+        let two = allreduce_time(&duo, Algo::TwoStep, &c4, M).total();
+        let hier = allreduce_time(&duo, Algo::Hier, &c4, M).total();
+        assert!(hier < two / 2.0, "duo: hier {hier} must beat two-step {two} by >2x");
+        // Flat topologies price the hierarchical family to +inf (never
+        // selected, never a panic).
+        let flat = Topology::new(presets::h800(), 8);
+        assert!(hier_stage_times(&flat, &c4, M).cross.is_infinite());
     }
 
     #[test]

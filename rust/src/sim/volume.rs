@@ -1,15 +1,22 @@
-//! Closed-form communication-volume accounting (Table 5).
+//! Closed-form communication-volume accounting (Table 5, generalized).
 //!
-//! Volumes follow the paper's own accounting for an N-GPU node with two
-//! NUMA groups, M bytes of payload per GPU:
+//! Volumes follow the paper's own accounting for an N-GPU system in G
+//! link-tier groups, M bytes of payload per GPU. The paper's Table 5 is
+//! the `N = 8, G = 2` column:
 //!
-//! | Method                | total  | cross-NUMA |
-//! |-----------------------|--------|------------|
-//! | NCCL (ring)           | 14 M   | 7M/4       |
-//! | Two-step              | 14 M   | 4 M        |
-//! | Hierarchical two-step | 14 M   | M          |
+//! | Method                | total  | cross-group (busiest link) |
+//! |-----------------------|--------|----------------------------|
+//! | NCCL (ring)           | 14 M   | 7M/4                       |
+//! | Two-step              | 14 M   | 4 M                        |
+//! | Hierarchical two-step | 14 M   | M                          |
 //!
-//! (Table 5 numbers are for N = 8; the formulas below generalize.)
+//! The cross-group column generalizes per *inter-group link*, under a
+//! ring-of-groups physical model: `G = 2` has a single bridge; `G > 2` has
+//! one link per adjacent group pair (G links) with all-to-all traffic
+//! assumed balanced across them. The hierarchical entry is exact (the
+//! leader column ring really does put (G−1)·M/s per rank on its adjacent
+//! links); the ring/two-step entries are the busiest-link load the cost
+//! model charges.
 
 /// The algorithm enum lives with the collectives ([`crate::comm::Algo`]);
 /// this re-export keeps the timing model's historical `sim::volume::Algo`
@@ -24,27 +31,47 @@ pub fn total_volume(algo: Algo, n: usize, m: f64) -> f64 {
         Algo::Ring => 2.0 * (nf - 1.0) * m,
         // One-shot RS: each GPU sends (N-1)/N·M; AG the same => 2(N-1)M.
         Algo::TwoStep => 2.0 * (nf - 1.0) * m,
-        // Intra RS (s-1)/s·M·N + cross M + intra AG — same total 2(N-1)M
+        // Intra RS (s-1)/s·M·N + cross + intra AG — same total 2(N-1)M
         // under the paper's accounting.
         Algo::Hier | Algo::HierPipelined => 2.0 * (nf - 1.0) * m,
     }
 }
 
-/// Bytes crossing the NUMA bridge (the paper's Volume_CrossNUMA column),
-/// for `groups` NUMA groups (Table 5 uses 2 groups of N/2).
+/// Physical inter-group links of a G-group machine: one shared bridge at
+/// `G = 2`, a ring of one-per-adjacent-pair at `G > 2` (0 for flat
+/// machines). The one place this model lives — the all2all cost model
+/// ([`super::all2all`]) shares it.
+pub fn inter_group_links(groups: usize) -> f64 {
+    match groups {
+        0 | 1 => 0.0,
+        2 => 1.0,
+        g => g as f64,
+    }
+}
+
+/// Bytes crossing the busiest inter-group link (one direction — the
+/// paper's Volume_CrossNUMA column at `groups = 2`), for `groups >= 1`
+/// equal groups. Flat topologies (`groups <= 1`) cross nothing.
 pub fn cross_numa_volume(algo: Algo, n: usize, groups: usize, m: f64) -> f64 {
-    assert!(groups == 2, "the paper's node has two NUMA groups");
+    if groups <= 1 {
+        return 0.0;
+    }
     let nf = n as f64;
-    let s = nf / groups as f64; // ranks per group
+    let g = groups as f64;
+    let links = inter_group_links(groups);
     match algo {
-        // The ring crosses the boundary on 2(N-1)/N·M worth of traffic for
-        // one boundary edge pair — the paper counts 7M/4 at N=8.
+        // The rank ring crosses each group boundary once with
+        // 2(N-1)/N·M worth of traffic — per boundary edge, independent of
+        // G (the paper counts 7M/4 at N=8).
         Algo::Ring => 2.0 * (nf - 1.0) / nf * m,
         // Every (rank, peer) pair in different groups exchanges M/N in RS
-        // and again in AG: 2 · s · s · 2 · M/N = N·M/2 (= 4M at N=8).
-        Algo::TwoStep => nf * m / 2.0,
-        // Only the s bridge pairs move their M/s partial chunk (= M).
-        Algo::Hier | Algo::HierPipelined => s * (m / s),
+        // and again in AG: aggregate N·(1−1/G)·M per direction, balanced
+        // across the links (= 4M at N=8, G=2).
+        Algo::TwoStep => nf * (1.0 - 1.0 / g) * m / links,
+        // Each of the s leader columns rings (G−1) chunk wires of M/s past
+        // every adjacent link: s · (G−1) · M/s = (G−1)·M per link
+        // (= M at G=2 — only the s bridge pairs move their partial chunk).
+        Algo::Hier | Algo::HierPipelined => (g - 1.0) * m,
     }
 }
 
@@ -73,12 +100,29 @@ mod tests {
     }
 
     #[test]
+    fn generalized_groups() {
+        // G = 1: nothing crosses.
+        for algo in [Algo::Ring, Algo::TwoStep, Algo::Hier] {
+            assert_eq!(cross_numa_volume(algo, 8, 1, 1.0), 0.0);
+        }
+        // G = 4, N = 8: two-step aggregate 8·(3/4) = 6M over 4 links;
+        // hier column ring (G−1)M = 3M per link.
+        assert_eq!(cross_numa_volume(Algo::TwoStep, 8, 4, 1.0), 1.5);
+        assert_eq!(cross_numa_volume(Algo::Hier, 8, 4, 1.0), 3.0);
+        // Hier's per-link load still beats the ring's boundary load and
+        // stays below two-step's aggregate (6M) at G=4.
+        assert!(cross_numa_volume(Algo::Hier, 8, 4, 1.0) > cross_numa_volume(Algo::Ring, 8, 4, 1.0));
+    }
+
+    #[test]
     fn volumes_scale_linearly_in_m() {
         for algo in [Algo::Ring, Algo::TwoStep, Algo::Hier] {
-            assert_eq!(
-                cross_numa_volume(algo, 8, 2, 2.0),
-                2.0 * cross_numa_volume(algo, 8, 2, 1.0)
-            );
+            for g in [2usize, 4] {
+                assert_eq!(
+                    cross_numa_volume(algo, 8, g, 2.0),
+                    2.0 * cross_numa_volume(algo, 8, g, 1.0)
+                );
+            }
         }
     }
 }

@@ -7,10 +7,20 @@
 //! overhead, small-message inefficiency — the gap between 400 GB/s NVLink
 //! and the ~90 GB/s NCCL BF16 algorithmic bandwidth the paper measures).
 //!
-//! [`Topology`] describes one node: `n_gpus` devices, optionally split into
-//! NUMA groups bridged by a slower shared link (the L40 case, Figs. 6–7).
+//! [`Topology`] describes one multi-GPU system: `n_gpus` devices split into
+//! `numa_groups` equal link-tier groups. A flat NVLink node is one group;
+//! the paper's L40 box is two PCIe groups joined by a NUMA bridge
+//! (Figs. 6–7); a 4-group PCIe chassis or two NVLink nodes joined by a slow
+//! inter-node link are the same model at other `G` — the inter-group link
+//! is explicit ([`Topology::inter_bw`]), so the hierarchical collectives
+//! and the cost model generalize over `G` instead of hard-coding the pair
+//! exchange. Construction is fallible ([`Topology::try_new`]): hostile or
+//! mistyped shape arguments (CLI `--gpus`/`--groups`) produce a typed
+//! [`TopologyError`], never a panic.
 
 pub mod presets;
+
+use std::fmt;
 
 /// Physical interconnect of a node.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -83,20 +93,138 @@ impl GpuSpec {
     }
 }
 
-/// A single-node multi-GPU topology.
+/// Why a topology could not be constructed. Surfaced (via
+/// `CommError`/`anyhow`) for hostile or mistyped shape arguments — e.g.
+/// `flashcomm train --gpus 6` against a 4-group layout — instead of the
+/// panic the old `Topology::new` assert produced.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TopologyError {
+    /// Collectives need at least two ranks.
+    TooFewGpus { n_gpus: usize },
+    /// A topology has at least one group.
+    ZeroGroups,
+    /// Groups must be equal: `n_gpus` must divide evenly into `groups`.
+    Indivisible { n_gpus: usize, groups: usize },
+    /// A multi-group topology needs an inter-group link model; this device
+    /// spec defines none and no explicit bandwidth was supplied.
+    NoInterGroupLink { spec: &'static str, groups: usize },
+    /// No device or topology preset answers to this name.
+    UnknownPreset { name: String },
+}
+
+impl fmt::Display for TopologyError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TopologyError::TooFewGpus { n_gpus } => {
+                write!(f, "a topology needs at least 2 GPUs, got {n_gpus}")
+            }
+            TopologyError::ZeroGroups => write!(f, "a topology needs at least 1 group"),
+            TopologyError::Indivisible { n_gpus, groups } => write!(
+                f,
+                "{n_gpus} GPUs cannot be split into {groups} equal groups \
+                 ({n_gpus} % {groups} != 0)"
+            ),
+            TopologyError::NoInterGroupLink { spec, groups } => write!(
+                f,
+                "{spec} defines no inter-group link, so a {groups}-group topology needs \
+                 an explicit inter-group bandwidth (Topology::try_custom)"
+            ),
+            TopologyError::UnknownPreset { name } => {
+                write!(f, "unknown topology preset '{name}' (try l40|a100|h800|h20|l40x4|h800x2)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for TopologyError {}
+
+/// A multi-GPU topology: `n_gpus` devices in `numa_groups` equal groups.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Topology {
     pub spec: GpuSpec,
     pub n_gpus: usize,
-    /// Number of NUMA groups (1 for NVLink systems).
+    /// Number of link-tier groups (1 for flat NVLink systems, 2 for the
+    /// paper's L40 box, arbitrary `G >= 1` in general).
     pub numa_groups: usize,
+    /// Effective bandwidth (bytes/s) of the link joining adjacent groups;
+    /// `None` exactly when `numa_groups == 1`. Read via
+    /// [`Topology::inter_bw`].
+    inter_group_bw: Option<f64>,
 }
 
 impl Topology {
+    /// Default grouping for a device: 2 NUMA groups for PCIe/NUMA specs
+    /// (the paper's box), 1 flat group for NVLink specs.
+    pub fn try_new(spec: GpuSpec, n_gpus: usize) -> Result<Topology, TopologyError> {
+        let groups = if spec.is_numa() { 2 } else { 1 };
+        Topology::try_with_groups(spec, n_gpus, groups)
+    }
+
+    /// Explicit group count, with the inter-group link taken from the spec
+    /// (the NUMA bridge). An NVLink spec with `groups > 1` is a
+    /// [`TopologyError::NoInterGroupLink`] — use [`Topology::try_custom`]
+    /// with an explicit inter-node bandwidth for multi-node clusters.
+    pub fn try_with_groups(
+        spec: GpuSpec,
+        n_gpus: usize,
+        groups: usize,
+    ) -> Result<Topology, TopologyError> {
+        let inter = if groups > 1 {
+            match spec.bridge_bw() {
+                Some(bw) => Some(bw),
+                None => {
+                    return Err(TopologyError::NoInterGroupLink { spec: spec.name, groups })
+                }
+            }
+        } else {
+            None
+        };
+        Topology::try_custom(spec, n_gpus, groups, inter)
+    }
+
+    /// Fully explicit construction: group count plus the effective
+    /// bandwidth (bytes/s) of the inter-group link. This is how topologies
+    /// the spec alone cannot describe are built — e.g. two NVLink nodes
+    /// joined by a slow inter-node fabric
+    /// ([`presets::dual_nvlink_node`]).
+    pub fn try_custom(
+        spec: GpuSpec,
+        n_gpus: usize,
+        groups: usize,
+        inter_group_bw: Option<f64>,
+    ) -> Result<Topology, TopologyError> {
+        if groups == 0 {
+            return Err(TopologyError::ZeroGroups);
+        }
+        if n_gpus < 2 {
+            return Err(TopologyError::TooFewGpus { n_gpus });
+        }
+        if n_gpus % groups != 0 {
+            return Err(TopologyError::Indivisible { n_gpus, groups });
+        }
+        if groups > 1 && inter_group_bw.is_none() {
+            return Err(TopologyError::NoInterGroupLink { spec: spec.name, groups });
+        }
+        let inter_group_bw = if groups > 1 { inter_group_bw } else { None };
+        Ok(Topology { spec, n_gpus, numa_groups: groups, inter_group_bw })
+    }
+
+    /// Panicking convenience over [`Topology::try_new`] for tests and
+    /// hard-coded shapes. Anything driven by user input must use the
+    /// fallible constructors.
     pub fn new(spec: GpuSpec, n_gpus: usize) -> Self {
-        let numa_groups = if spec.is_numa() { 2 } else { 1 };
-        assert!(n_gpus >= 2 && n_gpus % numa_groups == 0, "n_gpus {n_gpus} not divisible");
-        Topology { spec, n_gpus, numa_groups }
+        Topology::try_new(spec, n_gpus).expect("invalid hard-coded topology")
+    }
+
+    /// Panicking convenience over [`Topology::try_with_groups`] for tests.
+    pub fn with_groups(spec: GpuSpec, n_gpus: usize, groups: usize) -> Self {
+        Topology::try_with_groups(spec, n_gpus, groups).expect("invalid hard-coded topology")
+    }
+
+    /// Effective bandwidth (bytes/s) of the link joining adjacent groups;
+    /// `None` exactly when the topology is flat (`numa_groups == 1`).
+    pub fn inter_bw(&self) -> Option<f64> {
+        self.inter_group_bw
     }
 
     /// Ranks per NUMA group.
@@ -109,10 +237,17 @@ impl Topology {
         rank / self.group_size()
     }
 
-    /// The rank in the other group paired with `rank` for cross-NUMA
-    /// point-to-point reduction (Fig. 7: GPU i <-> GPU i + group_size).
+    /// The rank in `group` that shares `rank`'s within-group index — its
+    /// peer on the cross-group *column* `{g·s + j | g in 0..G}` the
+    /// hierarchical cross-reduce rings over.
+    pub fn peer_in_group(&self, rank: usize, group: usize) -> usize {
+        debug_assert!(group < self.numa_groups);
+        group * self.group_size() + rank % self.group_size()
+    }
+
+    /// The column peer one group over (ring order). At `G = 2` this is the
+    /// symmetric cross-NUMA bridge pair of Fig. 7 (GPU i <-> GPU i + s).
     pub fn bridge_peer(&self, rank: usize) -> usize {
-        debug_assert_eq!(self.numa_groups, 2);
         (rank + self.group_size()) % self.n_gpus
     }
 
@@ -165,6 +300,23 @@ mod tests {
         assert_eq!(t.bridge_peer(1), 5);
         assert_eq!(t.bridge_peer(5), 1);
         assert_eq!(t.group_members(6), 4..8);
+        assert_eq!(t.inter_bw(), l40().bridge_bw());
+    }
+
+    #[test]
+    fn four_group_topology() {
+        let t = Topology::with_groups(l40(), 8, 4);
+        assert_eq!(t.numa_groups, 4);
+        assert_eq!(t.group_size(), 2);
+        assert_eq!(t.group_of(5), 2);
+        assert_eq!(t.group_members(5), 4..6);
+        // Column of rank 5 (within-group index 1): {1, 3, 5, 7}.
+        for (g, peer) in [(0usize, 1usize), (1, 3), (2, 5), (3, 7)] {
+            assert_eq!(t.peer_in_group(5, g), peer);
+        }
+        // bridge_peer is the next group's column peer.
+        assert_eq!(t.bridge_peer(5), 7);
+        assert_eq!(t.bridge_peer(7), 1);
     }
 
     #[test]
@@ -173,6 +325,47 @@ mod tests {
         assert_eq!(t.numa_groups, 1);
         assert_eq!(t.group_size(), 8);
         assert_eq!(t.group_of(7), 0);
+        assert_eq!(t.inter_bw(), None);
+    }
+
+    #[test]
+    fn hostile_shapes_are_typed_errors_not_panics() {
+        // The CLI-reachable failure: --gpus not divisible by the grouping.
+        assert_eq!(
+            Topology::try_with_groups(l40(), 6, 4).unwrap_err(),
+            TopologyError::Indivisible { n_gpus: 6, groups: 4 }
+        );
+        assert_eq!(
+            Topology::try_new(l40(), 5).unwrap_err(),
+            TopologyError::Indivisible { n_gpus: 5, groups: 2 }
+        );
+        assert_eq!(
+            Topology::try_new(h800(), 1).unwrap_err(),
+            TopologyError::TooFewGpus { n_gpus: 1 }
+        );
+        assert_eq!(
+            Topology::try_with_groups(h800(), 8, 0).unwrap_err(),
+            TopologyError::ZeroGroups
+        );
+        // NVLink spec has no bridge: multi-group needs an explicit link.
+        assert_eq!(
+            Topology::try_with_groups(h800(), 8, 2).unwrap_err(),
+            TopologyError::NoInterGroupLink { spec: "H800", groups: 2 }
+        );
+        assert!(Topology::try_custom(h800(), 8, 2, Some(25e9)).is_ok());
+        // Errors display a readable reason and convert into anyhow.
+        let e: anyhow::Error = Topology::try_with_groups(l40(), 6, 4).unwrap_err().into();
+        assert!(e.to_string().contains("equal groups"), "{e}");
+    }
+
+    #[test]
+    fn group_count_can_equal_gpu_count() {
+        // Degenerate groups of one: every rank is its own group; the
+        // cross-group column is the whole machine.
+        let t = Topology::with_groups(l40(), 4, 4);
+        assert_eq!(t.group_size(), 1);
+        assert_eq!(t.group_members(2), 2..3);
+        assert_eq!(t.peer_in_group(2, 0), 0);
     }
 
     #[test]

@@ -19,7 +19,7 @@
 //!         over the busiest link)
 //!   INT8 two-step columns → per-device QDQ pass rates.
 
-use super::{GpuSpec, Interconnect};
+use super::{GpuSpec, Interconnect, Topology, TopologyError};
 
 /// QDQ pass rate model: `rate = kappa × bf16_tflops × comm_sms / sms`,
 /// in element-passes per second. κ is fitted per device family (see above).
@@ -106,6 +106,42 @@ pub fn by_name(name: &str) -> Option<GpuSpec> {
     all().into_iter().find(|s| s.name.eq_ignore_ascii_case(name))
 }
 
+// --- Topology presets (scenario sweeps beyond the paper's two shapes) ----
+
+/// Effective bandwidth of a bonded inter-node fabric (GB/s) for the
+/// [`dual_nvlink_node`] cluster — roughly 2×HDR InfiniBand / 4×100 GbE
+/// after protocol derating, the regime SDP4Bit targets.
+pub const INTER_NODE_GBPS: f64 = 25.0;
+
+/// A 4-group PCIe chassis: L40-class devices in four NUMA groups joined by
+/// the same class of bridge as the paper's 2-group box. Opens the
+/// hierarchical family at `G = 4`.
+pub fn four_group_pcie(n_gpus: usize) -> Result<Topology, TopologyError> {
+    Topology::try_with_groups(l40(), n_gpus, 4)
+}
+
+/// Two NVLink-8 nodes joined by a slow inter-node link: intra-group NVLink
+/// at H800 effective bandwidth, cross-group at [`INTER_NODE_GBPS`]. The
+/// multi-node shape where the hierarchical two-step pays off on *flat*
+/// intra-node fabrics.
+pub fn dual_nvlink_node(n_gpus: usize) -> Result<Topology, TopologyError> {
+    Topology::try_custom(h800(), n_gpus, 2, Some(INTER_NODE_GBPS * 1e9))
+}
+
+/// Named topology presets for benches and the CLI: the paper's two shapes
+/// plus the generalized-G scenarios.
+pub fn topology_by_name(name: &str, n_gpus: usize) -> Result<Topology, TopologyError> {
+    match name.to_ascii_lowercase().as_str() {
+        "l40" => Topology::try_new(l40(), n_gpus),
+        "l40x4" | "pcie4" => four_group_pcie(n_gpus),
+        "h800x2" | "duo" => dual_nvlink_node(n_gpus),
+        other => match by_name(other) {
+            Some(spec) => Topology::try_new(spec, n_gpus),
+            None => Err(TopologyError::UnknownPreset { name: other.to_string() }),
+        },
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -128,5 +164,31 @@ mod tests {
         // H800 must out-rate A100 (the paper's explanation for its larger
         // speedup), both at 48 comm SMs.
         assert!(h800().qdq_pass_rate > a100().qdq_pass_rate);
+    }
+
+    #[test]
+    fn topology_presets_open_the_new_scenarios() {
+        let quad = four_group_pcie(8).unwrap();
+        assert_eq!((quad.numa_groups, quad.group_size()), (4, 2));
+        assert_eq!(quad.inter_bw(), l40().bridge_bw());
+
+        let duo = dual_nvlink_node(16).unwrap();
+        assert_eq!((duo.numa_groups, duo.group_size()), (2, 8));
+        assert_eq!(duo.inter_bw(), Some(INTER_NODE_GBPS * 1e9));
+        // The inter-node link is far slower than intra-node NVLink — the
+        // regime where the hierarchical family pays off on flat fabrics.
+        assert!(duo.inter_bw().unwrap() < duo.spec.intra_bw() / 4.0);
+
+        assert!(four_group_pcie(6).is_err(), "6 GPUs don't split into 4 groups");
+    }
+
+    #[test]
+    fn topology_lookup_by_name() {
+        assert_eq!(topology_by_name("h800", 8).unwrap().numa_groups, 1);
+        assert_eq!(topology_by_name("L40", 8).unwrap().numa_groups, 2);
+        assert_eq!(topology_by_name("l40x4", 8).unwrap().numa_groups, 4);
+        assert_eq!(topology_by_name("h800x2", 16).unwrap().group_size(), 8);
+        let e = topology_by_name("b200", 8).unwrap_err();
+        assert!(e.to_string().contains("unknown topology preset"), "{e}");
     }
 }

@@ -83,6 +83,9 @@ impl Transport for InProcTransport {
         ensure!(payload.len() as u64 <= frame::MAX_PAYLOAD as u64, "payload too large");
         let seq = self.send_seq[dst].fetch_add(1, Ordering::Relaxed);
         self.counters.record_send(payload.len());
+        // Mesh-shared counters: the buffered gauge nets sends against
+        // receives across every link, i.e. total in-flight payload bytes.
+        self.counters.record_buffered(payload.len());
         let hdr = frame::FrameHeader {
             src: self.rank as u16,
             dst: dst as u16,
@@ -99,6 +102,7 @@ impl Transport for InProcTransport {
         ensure!(src != self.rank, "self-recv is a local copy, not a transfer");
         let (hbuf, payload) =
             self.rx[src].recv().map_err(|_| anyhow!("rank {src} hung up"))?;
+        self.counters.record_drained(payload.len());
         let hdr = frame::FrameHeader::parse(&hbuf)?;
         hdr.check_payload(&payload)?;
         ensure!(

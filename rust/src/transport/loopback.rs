@@ -44,6 +44,7 @@ impl Transport for Loopback {
         ensure!(dst == 0, "loopback has a single rank; dst {dst} does not exist");
         let seq = self.send_seq.fetch_add(1, Ordering::Relaxed);
         self.counters.record_send(payload.len());
+        self.counters.record_buffered(payload.len());
         let framed = frame::encode(0, 0, seq, &payload);
         self.queue.lock().expect("loopback queue poisoned").push_back(framed);
         Ok(())
@@ -55,6 +56,7 @@ impl Transport for Loopback {
             bail!("loopback queue empty: nothing was sent");
         };
         let (hdr, payload) = frame::decode(framed)?;
+        self.counters.record_drained(payload.len());
         let expect = self.recv_seq.fetch_add(1, Ordering::Relaxed);
         ensure!(
             hdr.seq == expect,

@@ -73,6 +73,12 @@ pub struct TransportCounters {
     payload_bytes: AtomicU64,
     wire_bytes: AtomicU64,
     messages: AtomicU64,
+    /// Payload bytes the transport is currently holding (accepted by
+    /// `send`/the reader but not yet handed to `recv`).
+    buffered_bytes: AtomicU64,
+    /// High-water mark of `buffered_bytes` — the backend's peak memory
+    /// commitment for undelivered payloads.
+    peak_buffered_bytes: AtomicU64,
 }
 
 impl TransportCounters {
@@ -83,11 +89,26 @@ impl TransportCounters {
         self.messages.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// A payload entered the backend's buffering scope (queued for a
+    /// receiver). Updates the in-flight gauge and its high-water mark.
+    pub fn record_buffered(&self, payload_len: usize) {
+        let now = self.buffered_bytes.fetch_add(payload_len as u64, Ordering::Relaxed)
+            + payload_len as u64;
+        self.peak_buffered_bytes.fetch_max(now, Ordering::Relaxed);
+    }
+
+    /// A payload left the buffering scope (delivered through `recv`).
+    pub fn record_drained(&self, payload_len: usize) {
+        self.buffered_bytes.fetch_sub(payload_len as u64, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> TransportStats {
         TransportStats {
             payload_bytes: self.payload_bytes.load(Ordering::Relaxed),
             wire_bytes: self.wire_bytes.load(Ordering::Relaxed),
             messages: self.messages.load(Ordering::Relaxed),
+            buffered_bytes: self.buffered_bytes.load(Ordering::Relaxed),
+            peak_buffered_bytes: self.peak_buffered_bytes.load(Ordering::Relaxed),
         }
     }
 }
@@ -101,6 +122,14 @@ pub struct TransportStats {
     pub wire_bytes: u64,
     /// Point-to-point messages sent.
     pub messages: u64,
+    /// Payload bytes currently buffered awaiting `recv` (0 at rest). Scope
+    /// is mesh-wide for InProc (shared counters: sent-not-yet-received
+    /// across all links) and per-endpoint receive queue for TCP.
+    pub buffered_bytes: u64,
+    /// High-water mark of `buffered_bytes` over the endpoint's lifetime —
+    /// how the collectives' in-flight memory bounds (e.g. the pipelined
+    /// hierarchical send window) are pinned in tests.
+    pub peak_buffered_bytes: u64,
 }
 
 #[cfg(test)]
@@ -116,5 +145,21 @@ mod tests {
         assert_eq!(s.payload_bytes, 100);
         assert_eq!(s.wire_bytes, 100 + 2 * FRAME_HEADER_LEN as u64);
         assert_eq!(s.messages, 2);
+    }
+
+    #[test]
+    fn buffered_gauge_tracks_peak_and_drains_to_zero() {
+        let c = TransportCounters::default();
+        c.record_buffered(100);
+        c.record_buffered(50);
+        c.record_drained(100);
+        c.record_buffered(20);
+        let s = c.snapshot();
+        assert_eq!(s.buffered_bytes, 70);
+        assert_eq!(s.peak_buffered_bytes, 150, "peak is the high-water mark");
+        c.record_drained(50);
+        c.record_drained(20);
+        assert_eq!(c.snapshot().buffered_bytes, 0, "at rest everything drained");
+        assert_eq!(c.snapshot().peak_buffered_bytes, 150, "peak is sticky");
     }
 }

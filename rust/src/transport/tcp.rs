@@ -28,7 +28,7 @@ use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicU32, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
@@ -56,7 +56,9 @@ pub struct TcpTransport {
     /// Frame-verified payloads from each peer (None at the self index).
     inbox: Vec<Option<Inbox>>,
     send_seq: Vec<AtomicU32>,
-    counters: TransportCounters,
+    /// Shared with the per-peer reader threads, which account the
+    /// receive-queue occupancy (`buffered_bytes`) they create.
+    counters: Arc<TransportCounters>,
 }
 
 impl TcpTransport {
@@ -117,6 +119,7 @@ impl TcpTransport {
         }
 
         // 5. Split each socket: reader thread (validates frames) + writer.
+        let counters = Arc::new(TransportCounters::default());
         let mut writers: Vec<Option<Mutex<TcpStream>>> = (0..n).map(|_| None).collect();
         let mut inbox: Vec<Option<Inbox>> = (0..n).map(|_| None).collect();
         for (peer, slot) in sockets.into_iter().enumerate() {
@@ -124,9 +127,10 @@ impl TcpTransport {
             stream.set_nodelay(true).context("setting TCP_NODELAY")?;
             let read_half = stream.try_clone().context("cloning socket for reader")?;
             let (tx, rx) = channel();
+            let reader_counters = counters.clone();
             thread::Builder::new()
                 .name(format!("tcp-rx-{rank}<-{peer}"))
-                .spawn(move || reader_loop(read_half, peer, rank, tx))
+                .spawn(move || reader_loop(read_half, peer, rank, tx, reader_counters))
                 .context("spawning reader thread")?;
             writers[peer] = Some(Mutex::new(stream));
             inbox[peer] = Some(rx);
@@ -138,7 +142,7 @@ impl TcpTransport {
             writers,
             inbox,
             send_seq: (0..n).map(|_| AtomicU32::new(0)).collect(),
-            counters: TransportCounters::default(),
+            counters,
         })
     }
 }
@@ -186,7 +190,12 @@ impl Transport for TcpTransport {
         ensure!(src != self.rank, "self-recv is a local copy, not a transfer");
         let rx = self.inbox[src].as_ref().expect("mesh invariant: peer inbox exists");
         match rx.recv() {
-            Ok(result) => result,
+            Ok(result) => {
+                if let Ok(payload) = &result {
+                    self.counters.record_drained(payload.len());
+                }
+                result
+            }
             Err(_) => bail!("rank {src} disconnected"),
         }
     }
@@ -349,13 +358,22 @@ fn read_hello(mut stream: &TcpStream) -> Result<usize> {
 /// Per-peer reader: pull frames off the socket, validate, queue payloads.
 /// Exits on clean EOF (peer shut down), on a validation error (reported to
 /// the owning rank through the inbox), or when the owner dropped the inbox.
-fn reader_loop(stream: TcpStream, src: usize, dst: usize, out: Sender<Result<Vec<u8>>>) {
+/// Queued payloads are charged to the endpoint's `buffered_bytes` gauge
+/// until `recv` pops them.
+fn reader_loop(
+    stream: TcpStream,
+    src: usize,
+    dst: usize,
+    out: Sender<Result<Vec<u8>>>,
+    counters: Arc<TransportCounters>,
+) {
     let mut reader = BufReader::with_capacity(256 * 1024, stream);
     let mut expect_seq = 0u32;
     loop {
         match read_frame(&mut reader, src, dst, expect_seq) {
             Ok(Some(payload)) => {
                 expect_seq = expect_seq.wrapping_add(1);
+                counters.record_buffered(payload.len());
                 if out.send(Ok(payload)).is_err() {
                     return; // owner gone
                 }

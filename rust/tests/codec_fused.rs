@@ -62,7 +62,7 @@ fn check_equivalence(spec: &str, n: usize, rng: &mut Prng, threads: &[usize]) {
 
     // Fused encode == scalar reference encode, byte for byte.
     let mut wire = Vec::new();
-    codec.encode_with(&data, &mut bufs, &mut wire);
+    codec.encode_with(&data, &mut bufs, &mut wire).unwrap();
     let ref_wire = reference::encode(&codec, &data);
     assert_eq!(wire, ref_wire, "{spec} n={n}: fused wire bytes != reference");
 
@@ -87,7 +87,7 @@ fn check_equivalence(spec: &str, n: usize, rng: &mut Prng, threads: &[usize]) {
     // as a no-op below it — both must hold).
     for &t in threads {
         let mut w2 = Vec::new();
-        codec.encode_with_threads(&data, &mut bufs, &mut w2, t);
+        codec.encode_with_threads(&data, &mut bufs, &mut w2, t).unwrap();
         assert_eq!(w2, wire, "{spec} n={n} threads={t}: parallel encode differs");
         let mut o2 = vec![0f32; n];
         Codec::decode_with_threads(&wire, &mut bufs, &mut o2, t).unwrap();

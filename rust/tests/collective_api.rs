@@ -99,6 +99,68 @@ fn prop_every_algo_codec_bit_identical_and_bounded() {
 }
 
 #[test]
+fn degenerate_shapes_across_every_algo_and_topology() {
+    // len == 0 (nothing to reduce), len < n_ranks (empty chunks out of
+    // chunk_range), and a prime sliver — across every algorithm, codec,
+    // and the G ∈ {1, 2, 4} topologies. Every admissible combination must
+    // complete with bit-identical ranks and exact small sums; hierarchical
+    // algorithms on the flat G=1 node must fail with a clean Topology
+    // error, never a panic.
+    let flat = Topology::new(presets::h800(), 4); // G = 1
+    let numa2 = Topology::new(presets::l40(), 4); // G = 2, s = 2
+    let numa4 = Topology::with_groups(presets::l40(), 8, 4); // G = 4, s = 2
+    for topo in [&flat, &numa2, &numa4] {
+        let n = topo.n_gpus;
+        for len in [0usize, 1, 3] {
+            for algo in [Algo::Ring, Algo::TwoStep, Algo::Hier, Algo::HierPipelined] {
+                for spec in ["bf16", "int4@32", "int2-sr@32!"] {
+                    let codec = Codec::parse(spec).unwrap();
+                    let hier_family = matches!(algo, Algo::Hier | Algo::HierPipelined);
+                    let inputs: Vec<Vec<f32>> =
+                        (0..n).map(|r| vec![r as f32 + 1.0; len]).collect();
+                    let expected: f32 = (1..=n).map(|x| x as f32).sum();
+                    let inputs = &inputs;
+                    let (results, _) = fabric::run_ranks(topo, |h| {
+                        let mut c = Communicator::from_handle(h);
+                        let mut d = inputs[c.rank()].clone();
+                        let r = c.allreduce(&mut d, &codec, AlgoPolicy::Fixed(algo));
+                        (r.map(|_| ()).map_err(|e| e.to_string()), d)
+                    });
+                    let ctx = format!(
+                        "{algo:?}/{spec} len {len} on {}x{}",
+                        topo.spec.name, topo.numa_groups
+                    );
+                    if hier_family && topo.numa_groups < 2 {
+                        for (r, _) in &results {
+                            let e = r.as_ref().unwrap_err();
+                            assert!(e.contains("cannot run on this topology"), "{ctx}: {e}");
+                        }
+                        continue;
+                    }
+                    let bits0: Vec<u32> =
+                        results[0].1.iter().map(|x| x.to_bits()).collect();
+                    for (rank, (r, d)) in results.iter().enumerate() {
+                        assert!(r.is_ok(), "{ctx} rank {rank}: {r:?}");
+                        assert_eq!(d.len(), len, "{ctx} rank {rank}: length changed");
+                        let bits: Vec<u32> = d.iter().map(|x| x.to_bits()).collect();
+                        assert_eq!(bits, bits0, "{ctx} rank {rank}: ranks diverge");
+                        // Constant inputs stay exact through any codec that
+                        // can represent small integers; bf16 is always
+                        // exact here, quantized codecs stay within 10%.
+                        for &x in d.iter() {
+                            assert!(
+                                (x - expected).abs() <= 0.1 * expected + 1e-6,
+                                "{ctx} rank {rank}: {x} vs {expected}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
 fn auto_policy_end_to_end_is_deterministic_and_correct() {
     // Repeated Auto runs over the same (topology, codec, size) resolve to
     // the same algorithm and the same bits.
