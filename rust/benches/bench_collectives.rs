@@ -16,6 +16,7 @@
 
 use flashcomm::cli::Args;
 use flashcomm::comm::{fabric, Algo, AlgoPolicy, Communicator, LocalGroup};
+use flashcomm::plan;
 use flashcomm::quant::Codec;
 use flashcomm::sim;
 use flashcomm::topo::{presets, Topology};
@@ -36,6 +37,8 @@ fn main() {
     scratch_reuse_probe();
     println!();
     transport_sweep();
+    println!();
+    plan_sweep();
     println!();
     sim_tables();
 }
@@ -252,6 +255,77 @@ fn transport_sweep() {
     }
     let json = format!("[\n{}\n]\n", records.join(",\n"));
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_transport.json");
+    match std::fs::write(path, json) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
+
+/// The plan compiler's chosen plan per preset × payload size, with the
+/// cost model's prediction next to the measured in-process wall time.
+/// Emits `BENCH_plan.json` so the compiler's picks (and the gap between
+/// predicted link time and our functional-fabric wall time — different
+/// quantities, recorded side by side for trend tracking) have a baseline.
+fn plan_sweep() {
+    let ranks = 8usize;
+    println!("== compiled plans: preset x size (--plan auto picks) ==");
+    println!(
+        "{:<8} {:>10} {:<10} {:<32} {:>7} {:>7} {:>12} {:>12}",
+        "preset", "elems", "algo", "stage codecs", "chunks", "window", "pred ms", "meas ms"
+    );
+    let base = Codec::parse("int4@32").unwrap();
+    let mut records = Vec::new();
+    for preset in ["l40", "l40x4", "h800x2"] {
+        let topo = presets::topology_by_name(preset, ranks).unwrap();
+        for elems in [1usize << 16, 1 << 20] {
+            let plan = plan::compile(&topo, elems, &base);
+            let predicted_s = sim::plan_time(&topo, &plan, 2.0 * elems as f64).total();
+            let inputs = rank_inputs(ranks, elems, 17);
+            let inputs = &inputs;
+            let m = bench(1, 3, || {
+                let (_, _c) = fabric::run_ranks(&topo, |h| {
+                    let mut c = Communicator::from_handle(h);
+                    let mut d = inputs[c.rank()].clone();
+                    c.allreduce_plan(&mut d, &plan).unwrap();
+                });
+            });
+            println!(
+                "{:<8} {:>10} {:<10} {:<32} {:>7} {:>7} {:>12.4} {:>12.2}",
+                preset,
+                elems,
+                plan.algo.token(),
+                plan.stage_codecs.to_string(),
+                plan.chunks,
+                plan.send_window,
+                predicted_s * 1e3,
+                m.secs() * 1e3,
+            );
+            records.push(format!(
+                concat!(
+                    "  {{\"preset\": \"{}\", \"groups\": {}, \"ranks\": {}, ",
+                    "\"elems_per_rank\": {}, \"base_codec\": \"{}\", \"algo\": \"{}\", ",
+                    "\"intra_codec\": \"{}\", \"cross_codec\": \"{}\", \"chunks\": {}, ",
+                    "\"window\": {}, \"mixed\": {}, ",
+                    "\"predicted_link_ms\": {:.6}, \"measured_wall_ms\": {:.3}}}"
+                ),
+                preset,
+                topo.numa_groups,
+                ranks,
+                elems,
+                base.spec(),
+                plan.algo.token(),
+                plan.stage_codecs.intra_rs.spec(),
+                plan.stage_codecs.cross.spec(),
+                plan.chunks,
+                plan.send_window,
+                !plan.stage_codecs.is_uniform(),
+                predicted_s * 1e3,
+                m.secs() * 1e3,
+            ));
+        }
+    }
+    let json = format!("[\n{}\n]\n", records.join(",\n"));
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_plan.json");
     match std::fs::write(path, json) {
         Ok(()) => println!("wrote {path}"),
         Err(e) => eprintln!("could not write {path}: {e}"),

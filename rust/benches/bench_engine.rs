@@ -2,15 +2,27 @@
 //! per wire codec — the end-to-end hot path (PJRT compute + rust QDQ +
 //! collective). Requires `make artifacts`.
 //!
-//! `cargo bench --bench bench_engine [-- --algo twostep|hier|auto]`
+//! `cargo bench --bench bench_engine [-- --algo twostep|hier|auto]
+//!                                   [-- --plan auto|<spec>]`
 
 use flashcomm::cli::Args;
 use flashcomm::comm::AlgoPolicy;
 use flashcomm::coordinator::{TpEngine, TrainOptions, Trainer};
 use flashcomm::model::{Corpus, ModelConfig, Sampler, Weights};
+use flashcomm::plan::{CommPlan, PlanPolicy};
 use flashcomm::quant::Codec;
 use flashcomm::runtime::{default_artifacts_dir, Runtime};
 use flashcomm::util::timer::bench;
+
+/// `--plan auto|<spec>` resolved against a base codec (None = legacy
+/// `--algo` path).
+fn plan_policy(args: &Args, base: &Codec) -> Option<PlanPolicy> {
+    let spec = args.flag("plan")?;
+    if spec.eq_ignore_ascii_case("auto") {
+        return Some(PlanPolicy::auto());
+    }
+    Some(PlanPolicy::Fixed(CommPlan::parse(spec, base).expect("--plan spec")))
+}
 
 fn main() {
     let args = Args::parse(std::env::args().skip(1)).unwrap_or_default();
@@ -40,7 +52,16 @@ fn main() {
         TpEngine::new(rt, cfg.clone(), &weights, Codec::Bf16, policy).unwrap();
     for spec in ["bf16", "int8", "int5", "int2-sr@32"] {
         let codec = if spec == "bf16" { Codec::Bf16 } else { Codec::parse(spec).unwrap() };
-        engine.set_codec(codec, policy).unwrap();
+        match plan_policy(&args, &codec) {
+            // Plan mode: swap the wire codec in place and (re)build the
+            // rank group only when the resolved policy actually changes —
+            // set_codec would tear the planned group down first.
+            Some(pp) => {
+                engine.codec = codec;
+                engine.set_plan_policy(pp).unwrap();
+            }
+            None => engine.set_codec(codec, policy).unwrap(),
+        }
         engine.eval_nll(batch).unwrap(); // warm the executable cache
         let m = bench(1, 3, || {
             engine.eval_nll(batch).unwrap();
@@ -54,11 +75,13 @@ fn main() {
         let rt = Runtime::open(&dir).unwrap();
         let mut trainer = Trainer::new(rt, cfg.clone(), &weights).unwrap();
         let mut sampler = Sampler::new(train, 3);
+        let codec = Codec::parse(spec).unwrap();
         let opts = TrainOptions {
             steps: 1,
             dp: 2,
-            codec: Codec::parse(spec).unwrap(),
+            codec,
             algo: policy,
+            plan: plan_policy(&args, &codec),
             log_every: 0,
             ..Default::default()
         };

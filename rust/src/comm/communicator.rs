@@ -37,6 +37,7 @@ use crate::comm::{
     fabric::{ByteCounters, RankHandle},
     hier, pipeline, ring, twostep, Algo, AlgoPolicy,
 };
+use crate::plan::{self, CommPlan, PlanCache, PlanCacheStats, PlanKey, PlanPolicy};
 use crate::quant::{Codec, CodecBuffers};
 use crate::topo::{presets, Topology};
 use crate::transport::{inproc, InProcTransport, Transport};
@@ -61,6 +62,10 @@ pub struct Communicator<T: Transport = InProcTransport> {
     /// (chunk parallelism for large payloads). Defaults to 1; see
     /// [`Communicator::set_codec_threads`].
     pub(crate) codec_threads: usize,
+    /// Compiled-plan LRU for [`PlanPolicy::Auto`]: keyed by (topology
+    /// fingerprint, element count, base codec, pins), so repeated
+    /// same-shape calls replay the plan without re-running the search.
+    plans: PlanCache,
 }
 
 impl<T: Transport> Communicator<T> {
@@ -94,6 +99,7 @@ impl<T: Transport> Communicator<T> {
             reduced: Vec::new(),
             auto_cache: None,
             codec_threads: 1,
+            plans: PlanCache::default(),
         }
     }
 
@@ -150,6 +156,13 @@ impl<T: Transport> Communicator<T> {
     /// In-place AllReduce of `data` across all ranks: every rank ends with
     /// a bit-identical wire-precision image of the element-wise sum.
     /// Returns the algorithm the policy resolved to.
+    ///
+    /// This is the [`AlgoPolicy`] shim over the plan layer: the resolved
+    /// algorithm becomes a *uniform* [`CommPlan`] (one codec everywhere,
+    /// default chunk count and send window) executed by
+    /// [`allreduce_plan`](Communicator::allreduce_plan). Use
+    /// [`allreduce_planned`](Communicator::allreduce_planned) for
+    /// mixed-stage plans or cost-model-tuned knobs.
     pub fn allreduce(
         &mut self,
         data: &mut [f32],
@@ -165,13 +178,77 @@ impl<T: Transport> Communicator<T> {
                 a
             }
         };
-        match algo {
-            Algo::Ring => ring::allreduce(self, data, codec)?,
-            Algo::TwoStep => twostep::allreduce(self, data, codec)?,
-            Algo::Hier => hier::allreduce(self, data, codec)?,
-            Algo::HierPipelined => pipeline::allreduce(self, data, codec)?,
-        }
+        self.allreduce_plan(data, &CommPlan::uniform(algo, *codec))?;
         Ok(algo)
+    }
+
+    /// In-place AllReduce running exactly `plan` — the execution half of
+    /// the plan layer. Validates the plan against this communicator's
+    /// topology first, so an inadmissible or malformed plan is a typed
+    /// error before any byte moves. A plan `codec_threads` of 0 inherits
+    /// this communicator's [`codec_threads`](Communicator::codec_threads);
+    /// a nonzero value overrides it for this call only.
+    pub fn allreduce_plan(&mut self, data: &mut [f32], plan: &CommPlan) -> Result<(), CommError> {
+        plan.validate(self.topo())?;
+        self.with_plan_threads(plan, |c| match plan.algo {
+            Algo::Ring => ring::allreduce(c, data, &plan.stage_codecs.intra_rs),
+            Algo::TwoStep => twostep::allreduce(c, data, &plan.stage_codecs.intra_rs),
+            Algo::Hier => hier::allreduce_staged(c, data, &plan.stage_codecs),
+            Algo::HierPipelined => pipeline::allreduce_planned(
+                c,
+                data,
+                &plan.stage_codecs,
+                plan.chunks,
+                plan.send_window,
+            ),
+        })
+    }
+
+    /// In-place AllReduce under a [`PlanPolicy`]: `Fixed` runs its plan
+    /// verbatim, `Auto` compiles one for (this topology, `data.len()`,
+    /// `codec`) through the plan cache — so a warmed-up hot path replays
+    /// the compiled plan with zero search work (observable via
+    /// [`plan_cache_stats`](Communicator::plan_cache_stats)). Returns the
+    /// plan that ran. Deterministic: every rank of a job resolves the
+    /// same plan without coordination.
+    pub fn allreduce_planned(
+        &mut self,
+        data: &mut [f32],
+        codec: &Codec,
+        policy: &PlanPolicy,
+    ) -> Result<CommPlan, CommError> {
+        let plan = self.resolve_plan(codec, data.len(), policy)?;
+        self.allreduce_plan(data, &plan)?;
+        Ok(plan)
+    }
+
+    /// The plan `policy` runs for `elems` f32 values of `codec` on this
+    /// communicator's topology (the resolution half of
+    /// [`allreduce_planned`](Communicator::allreduce_planned), split out
+    /// for harnesses that want to inspect or log the pick).
+    pub fn resolve_plan(
+        &mut self,
+        codec: &Codec,
+        elems: usize,
+        policy: &PlanPolicy,
+    ) -> Result<CommPlan, CommError> {
+        match policy {
+            PlanPolicy::Fixed(p) => Ok(*p),
+            PlanPolicy::Auto(pins) => {
+                pins.validate().map_err(|e| CommError::shape(format!("{e:#}")))?;
+                let key = PlanKey::new(self.handle.topo(), elems, codec, *pins);
+                let topo = self.handle.topo().clone();
+                Ok(self
+                    .plans
+                    .get_or_insert_with(key, || plan::compile_pinned(&topo, elems, codec, *pins)))
+            }
+        }
+    }
+
+    /// Hit/miss/eviction counters of this communicator's compiled-plan
+    /// cache (hits mean the hot path skipped the plan search entirely).
+    pub fn plan_cache_stats(&self) -> PlanCacheStats {
+        self.plans.stats()
     }
 
     /// Pipelined hierarchical AllReduce with an explicit micro-chunk count
@@ -225,6 +302,74 @@ impl<T: Transport> Communicator<T> {
         codec: &Codec,
     ) -> Result<Vec<Vec<f32>>, CommError> {
         all2all::all2all(self, sends, codec)
+    }
+
+    /// [`reduce_scatter`](Communicator::reduce_scatter) under a plan: the
+    /// plan supplies the (uniform) codec and the thread budget. All five
+    /// collectives accept plans; the one-stage ones require
+    /// [`CommPlan::uniform_codec`].
+    pub fn reduce_scatter_planned(
+        &mut self,
+        data: &mut [f32],
+        plan: &CommPlan,
+    ) -> Result<std::ops::Range<usize>, CommError> {
+        let codec = self.plan_codec(plan)?;
+        self.with_plan_threads(plan, |c| twostep::reduce_scatter(c, data, &codec))
+    }
+
+    /// [`all_gather`](Communicator::all_gather) under a plan.
+    pub fn all_gather_planned(
+        &mut self,
+        data: &mut [f32],
+        plan: &CommPlan,
+    ) -> Result<(), CommError> {
+        let codec = self.plan_codec(plan)?;
+        self.with_plan_threads(plan, |c| twostep::all_gather(c, data, &codec))
+    }
+
+    /// [`broadcast`](Communicator::broadcast) under a plan.
+    pub fn broadcast_planned(
+        &mut self,
+        data: &mut [f32],
+        root: usize,
+        plan: &CommPlan,
+    ) -> Result<(), CommError> {
+        let codec = self.plan_codec(plan)?;
+        self.with_plan_threads(plan, |c| twostep::broadcast(c, data, root, &codec))
+    }
+
+    /// [`all2all`](Communicator::all2all) under a plan.
+    pub fn all2all_planned(
+        &mut self,
+        sends: &[Vec<f32>],
+        plan: &CommPlan,
+    ) -> Result<Vec<Vec<f32>>, CommError> {
+        let codec = self.plan_codec(plan)?;
+        self.with_plan_threads(plan, |c| all2all::all2all(c, sends, &codec))
+    }
+
+    /// The uniform codec a one-stage collective runs for `plan`, as a
+    /// typed [`CommError::Shape`] on mixed-stage plans.
+    fn plan_codec(&self, plan: &CommPlan) -> Result<Codec, CommError> {
+        plan.stage_codecs
+            .validate()
+            .and_then(|()| plan.uniform_codec())
+            .map_err(|e| CommError::shape(format!("{e:#}")))
+    }
+
+    /// Run `f` with the plan's thread override applied (0 = inherit).
+    fn with_plan_threads<R>(
+        &mut self,
+        plan: &CommPlan,
+        f: impl FnOnce(&mut Communicator<T>) -> Result<R, CommError>,
+    ) -> Result<R, CommError> {
+        let inherited = self.codec_threads;
+        if plan.codec_threads != 0 {
+            self.set_codec_threads(plan.codec_threads);
+        }
+        let result = f(self);
+        self.codec_threads = inherited;
+        result
     }
 
     /// Bytes of owned scratch currently held (codec buffers + f32 staging).
@@ -285,6 +430,41 @@ pub fn preset_topo_grouped(
     Ok(topo)
 }
 
+/// [`preset_topo_grouped`] with an optional effective inter-group
+/// bandwidth override in GB/s (the CLI's `--inter-gbps`). With an
+/// override, the preset models a *multi-node NVLink cluster*: `G >= 2`
+/// flat NVLink (H800-class) groups joined by a link of the given
+/// effective bandwidth — the generalized
+/// [`presets::dual_nvlink_node`] shape at any admissible `G`, and the
+/// regime where the plan compiler's tier-asymmetry gate admits
+/// mixed-stage plans. Without one it is exactly [`preset_topo_grouped`].
+pub fn preset_topo_custom(
+    n: usize,
+    groups: Option<usize>,
+    inter_gbps: Option<f64>,
+    policy: AlgoPolicy,
+) -> Result<Topology, CommError> {
+    let Some(gbps) = inter_gbps else {
+        return preset_topo_grouped(n, groups, policy);
+    };
+    if !(gbps > 0.0 && gbps.is_finite()) {
+        return Err(CommError::shape(format!(
+            "--inter-gbps must be a positive bandwidth, got {gbps}"
+        )));
+    }
+    let g = groups.unwrap_or(2);
+    if g < 2 {
+        return Err(CommError::shape(format!(
+            "an inter-group link needs >= 2 groups (--inter-gbps with --groups {g})"
+        )));
+    }
+    let topo = Topology::try_custom(presets::h800(), n, g, Some(gbps * 1e9))?;
+    if let AlgoPolicy::Fixed(a) = policy {
+        a.admissible(&topo)?;
+    }
+    Ok(topo)
+}
+
 /// An in-process rank group: `n` communicators over a private mpsc mesh,
 /// one OS thread per rank per collective call. This is how single-process
 /// engines (TP inference, the DP trainer, EP boundaries) run their partial
@@ -300,6 +480,9 @@ pub fn preset_topo_grouped(
 pub struct LocalGroup {
     comms: Vec<Communicator<InProcTransport>>,
     policy: AlgoPolicy,
+    /// When set, allreduce calls run through the plan layer with this
+    /// policy instead of the (shim) `AlgoPolicy` — the CLI's `--plan`.
+    plan: Option<PlanPolicy>,
 }
 
 impl LocalGroup {
@@ -310,7 +493,30 @@ impl LocalGroup {
             .into_iter()
             .map(|t| Communicator::new(t, topo.clone(), counters.clone()))
             .collect::<Result<Vec<_>, CommError>>()?;
-        Ok(LocalGroup { comms, policy })
+        Ok(LocalGroup { comms, policy, plan: None })
+    }
+
+    /// Build a group over an explicit topology, running a [`PlanPolicy`]:
+    /// a `Fixed` plan is validated against `topo` once, up front; `Auto`
+    /// compiles per payload shape through each rank's plan cache (every
+    /// rank resolves the same plan — the compiler is deterministic).
+    pub fn new_planned(topo: &Topology, policy: PlanPolicy) -> Result<LocalGroup, CommError> {
+        if let PlanPolicy::Fixed(p) = &policy {
+            p.validate(topo)?;
+        }
+        let mut group = LocalGroup::new(topo, policy.algo_hint())?;
+        group.plan = Some(policy);
+        Ok(group)
+    }
+
+    /// [`LocalGroup::new_planned`] over the preset topology for the
+    /// policy's algorithm hint (see [`preset_topo_grouped`]).
+    pub fn for_plan_grouped(
+        n: usize,
+        groups: Option<usize>,
+        policy: PlanPolicy,
+    ) -> Result<LocalGroup, CommError> {
+        LocalGroup::new_planned(&preset_topo_grouped(n, groups, policy.algo_hint())?, policy)
     }
 
     /// Build a group of `n` ranks over the [`preset_topo`] for `policy`.
@@ -341,6 +547,25 @@ impl LocalGroup {
         self.policy
     }
 
+    /// The plan policy this group runs, when built through the plan layer
+    /// ([`LocalGroup::new_planned`] / [`LocalGroup::for_plan_grouped`]).
+    pub fn plan_policy(&self) -> Option<&PlanPolicy> {
+        self.plan.as_ref()
+    }
+
+    /// Aggregate compiled-plan cache counters across the group's ranks
+    /// (all zeros unless the group runs a [`PlanPolicy`]).
+    pub fn plan_cache_stats(&self) -> PlanCacheStats {
+        self.comms.iter().map(|c| c.plan_cache_stats()).fold(
+            PlanCacheStats::default(),
+            |a, b| PlanCacheStats {
+                hits: a.hits + b.hits,
+                misses: a.misses + b.misses,
+                evictions: a.evictions + b.evictions,
+            },
+        )
+    }
+
     /// The group-shared byte counters (payload volume accounting).
     pub fn counters(&self) -> &ByteCounters {
         self.comms[0].counters()
@@ -366,12 +591,18 @@ impl LocalGroup {
             return Err(CommError::shape("per-rank payload lengths differ".to_string()));
         }
         let policy = self.policy;
+        let plan = self.plan;
         let results: Vec<Result<Algo, CommError>> = std::thread::scope(|scope| {
             let joins: Vec<_> = self
                 .comms
                 .iter_mut()
                 .zip(per_rank.iter_mut())
-                .map(|(c, d)| scope.spawn(move || c.allreduce(d, codec, policy)))
+                .map(|(c, d)| {
+                    scope.spawn(move || match plan {
+                        Some(pp) => c.allreduce_planned(d, codec, &pp).map(|p| p.algo),
+                        None => c.allreduce(d, codec, policy),
+                    })
+                })
                 .collect();
             joins.into_iter().map(|j| j.join().expect("rank panicked")).collect()
         });
@@ -536,6 +767,125 @@ mod tests {
         let mut data = per_rank_data(4, 64);
         let err = group.allreduce(&mut data, &Codec::Bf16).unwrap_err();
         assert!(matches!(err, CommError::Topology { algo: Algo::Hier, .. }), "{err}");
+    }
+
+    #[test]
+    fn algo_policy_shim_is_bit_identical_to_explicit_uniform_plans() {
+        // The AlgoPolicy arms are now sugar over uniform CommPlans; both
+        // entry points must produce the same bits.
+        let topo = Topology::new(presets::l40(), 8);
+        let c = codec("int2-sr@32!");
+        let data = per_rank_data(8, 1536);
+        for algo in [Algo::Ring, Algo::TwoStep, Algo::Hier, Algo::HierPipelined] {
+            let dref = &data;
+            let (shim, _) = run_ranks(&topo, |h| {
+                let mut comm = Communicator::from_handle(h);
+                let mut d = dref[comm.rank()].clone();
+                comm.allreduce(&mut d, &c, AlgoPolicy::Fixed(algo)).unwrap();
+                d
+            });
+            let (planned, _) = run_ranks(&topo, |h| {
+                let mut comm = Communicator::from_handle(h);
+                let mut d = dref[comm.rank()].clone();
+                comm.allreduce_plan(&mut d, &crate::plan::CommPlan::uniform(algo, c)).unwrap();
+                d
+            });
+            for r in 0..8 {
+                let a: Vec<u32> = shim[r].iter().map(|x| x.to_bits()).collect();
+                let b: Vec<u32> = planned[r].iter().map(|x| x.to_bits()).collect();
+                assert_eq!(a, b, "{algo}: shim diverges from the uniform plan at rank {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn one_stage_collectives_take_uniform_plans_only() {
+        let topo = Topology::new(presets::h800(), 4);
+        let c4 = codec("int4@32");
+        let uniform = crate::plan::CommPlan::uniform(Algo::TwoStep, c4);
+        let mixed = crate::plan::CommPlan {
+            stage_codecs: crate::plan::StageCodecs::with_cross(c4, codec("int2-sr@32!")),
+            ..crate::plan::CommPlan::uniform(Algo::Hier, c4)
+        };
+        let data = per_rank_data(4, 1000);
+        let dref = &data;
+        let (results, _) = run_ranks(&topo, |h| {
+            let mut comm = Communicator::from_handle(h);
+            let mut d = dref[comm.rank()].clone();
+            // Mixed plans are a clean Shape error on every one-stage
+            // collective — nothing silently drops the cross codec.
+            let e = comm.reduce_scatter_planned(&mut d, &mixed).unwrap_err();
+            assert!(matches!(e, CommError::Shape { .. }), "{e}");
+            assert!(e.to_string().contains("uniform"), "{e}");
+            let e = comm.all_gather_planned(&mut d, &mixed).unwrap_err();
+            assert!(matches!(e, CommError::Shape { .. }), "{e}");
+            let e = comm.broadcast_planned(&mut d, 0, &mixed).unwrap_err();
+            assert!(matches!(e, CommError::Shape { .. }), "{e}");
+            let sends = vec![vec![1.0f32; 8]; 4];
+            let e = comm.all2all_planned(&sends, &mixed).unwrap_err();
+            assert!(matches!(e, CommError::Shape { .. }), "{e}");
+            // The uniform plan composes to the two-step, like the raw API.
+            let own = comm.reduce_scatter_planned(&mut d, &uniform).unwrap();
+            assert_eq!(own, crate::comm::chunk_range(1000, 4, comm.rank()));
+            comm.all_gather_planned(&mut d, &uniform).unwrap();
+            d
+        });
+        let (direct, _) = run_ranks(&topo, |h| {
+            let mut comm = Communicator::from_handle(h);
+            let mut d = dref[comm.rank()].clone();
+            comm.allreduce(&mut d, &c4, AlgoPolicy::Fixed(Algo::TwoStep)).unwrap();
+            d
+        });
+        for r in 0..4 {
+            let a: Vec<u32> = results[r].iter().map(|x| x.to_bits()).collect();
+            let b: Vec<u32> = direct[r].iter().map(|x| x.to_bits()).collect();
+            assert_eq!(a, b, "rank {r}");
+        }
+    }
+
+    #[test]
+    fn planned_group_runs_fixed_mixed_plans_end_to_end() {
+        let topo = Topology::new(presets::l40(), 8);
+        let c4 = codec("int4@32");
+        let plan = crate::plan::CommPlan {
+            stage_codecs: crate::plan::StageCodecs::with_cross(c4, codec("int2-sr@32!")),
+            ..crate::plan::CommPlan::uniform(Algo::Hier, c4)
+        };
+        let mut group =
+            LocalGroup::new_planned(&topo, crate::plan::PlanPolicy::Fixed(plan)).unwrap();
+        let mut data = per_rank_data(8, 2048);
+        let mut exact = vec![0f32; 2048];
+        for v in &data {
+            for (e, x) in exact.iter_mut().zip(v) {
+                *e += *x;
+            }
+        }
+        assert_eq!(group.allreduce(&mut data, &c4).unwrap(), Algo::Hier);
+        for r in &data {
+            assert_eq!(r, &data[0], "ranks must agree bitwise under a mixed plan");
+        }
+        let s = sqnr_db(&exact, &data[0]);
+        assert!(s > 5.0, "mixed-plan SQNR {s}");
+        // An inadmissible fixed plan fails at construction, not per call.
+        let flat = Topology::new(presets::h800(), 4);
+        let e = LocalGroup::new_planned(&flat, crate::plan::PlanPolicy::Fixed(plan)).unwrap_err();
+        assert!(matches!(e, CommError::Topology { algo: Algo::Hier, .. }), "{e}");
+    }
+
+    #[test]
+    fn inter_gbps_preset_models_multinode_clusters() {
+        let duo = preset_topo_custom(8, Some(4), Some(25.0), AlgoPolicy::Auto).unwrap();
+        assert_eq!((duo.numa_groups, duo.group_size()), (4, 2));
+        assert_eq!(duo.inter_bw(), Some(25e9));
+        assert_eq!(duo.spec.name, "H800");
+        // No override delegates to the plain grouped preset.
+        let plain = preset_topo_custom(8, Some(2), None, AlgoPolicy::Auto).unwrap();
+        assert_eq!(plain.spec.name, "L40");
+        // Hostile values are clean shape errors.
+        for (g, gbps) in [(Some(1), Some(25.0)), (Some(2), Some(0.0)), (Some(2), Some(-3.0))] {
+            let e = preset_topo_custom(8, g, gbps, AlgoPolicy::Auto).unwrap_err();
+            assert!(matches!(e, CommError::Shape { .. }), "{e}");
+        }
     }
 
     #[test]

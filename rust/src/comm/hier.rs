@@ -31,6 +31,7 @@
 
 use super::{chunk_range, communicator::Communicator, encode, error::CommError, Algo};
 use crate::comm::fabric::RankHandle;
+use crate::plan::StageCodecs;
 use crate::quant::{Codec, CodecBuffers};
 use crate::topo::Topology;
 use crate::transport::Transport;
@@ -75,11 +76,17 @@ pub(crate) fn cross_group_reduce<T: Transport>(
     Ok(())
 }
 
-/// In-place hierarchical AllReduce. Requires `G >= 2` link-tier groups.
-pub(crate) fn allreduce<T: Transport>(
+/// In-place hierarchical AllReduce with one codec per stage — the plan
+/// execution path. Each stage re-encodes its freshly reduced f32
+/// accumulator (the pre-existing QDQ boundaries), so a more aggressive
+/// cross codec requantizes exactly where a uniform run would have
+/// re-encoded anyway: the QDQ count stays 3 regardless of the mix, and
+/// every rank stays bit-identical because all ranks run the same plan.
+/// Requires `G >= 2` link-tier groups.
+pub(crate) fn allreduce_staged<T: Transport>(
     c: &mut Communicator<T>,
     data: &mut [f32],
-    codec: &Codec,
+    stages: &StageCodecs,
 ) -> Result<(), CommError> {
     let Communicator { handle: h, bufs, acc, codec_threads, .. } = c;
     let t = *codec_threads;
@@ -94,7 +101,7 @@ pub(crate) fn allreduce<T: Transport>(
         let peer = group.start + peer_j;
         if peer != h.rank {
             let r = chunk_range(data.len(), s, peer_j);
-            h.send(peer, encode(codec, &data[r], bufs, t)?)?;
+            h.send(peer, encode(&stages.intra_rs, &data[r], bufs, t)?)?;
         }
     }
     let own = chunk_range(data.len(), s, j);
@@ -112,11 +119,13 @@ pub(crate) fn allreduce<T: Transport>(
     // Stage 2 — cross-group reduction over this rank's column: ring
     // all-gather of the G encoded partials (forwarded verbatim — exactly
     // one QDQ per partial no matter how many hops), then a group-ordered
-    // decode-sum so every column member lands on identical bits.
-    cross_group_reduce(h, bufs, acc, codec, t, &topo)?;
+    // decode-sum so every column member lands on identical bits. This is
+    // the slow-tier stage: its codec may be more aggressive than the
+    // intra stages'.
+    cross_group_reduce(h, bufs, acc, &stages.cross, t, &topo)?;
 
     // Stage 3 — partial all-gather within the group.
-    let wire = encode(codec, acc, bufs, t)?;
+    let wire = encode(&stages.intra_ag, acc, bufs, t)?;
     for peer_j in 0..s {
         let p = group.start + peer_j;
         if p != h.rank {
@@ -135,6 +144,17 @@ pub(crate) fn allreduce<T: Transport>(
         }
     }
     Ok(())
+}
+
+/// In-place hierarchical AllReduce with one codec everywhere — the
+/// uniform special case of [`allreduce_staged`] (what the `AlgoPolicy`
+/// shim and the pre-plan tests run).
+pub(crate) fn allreduce<T: Transport>(
+    c: &mut Communicator<T>,
+    data: &mut [f32],
+    codec: &Codec,
+) -> Result<(), CommError> {
+    allreduce_staged(c, data, &StageCodecs::uniform(*codec))
 }
 
 #[cfg(test)]
@@ -201,6 +221,49 @@ mod tests {
         }
         let s = sqnr_db(&expected, &results[0]);
         assert!(s > 24.0, "SQNR {s}");
+    }
+
+    #[test]
+    fn mixed_stage_codecs_stay_bit_identical_and_cut_cross_bytes() {
+        // The plan path: int4 intra stages, int2-sr cross ring. All ranks
+        // must still agree bitwise (same plan everywhere ⇒ same images in
+        // the same order), quality stays in the aggressive codec's band,
+        // and the *measured* cross-group bytes shrink by the wire-ratio
+        // quotient while intra traffic is untouched.
+        let topo = Topology::new(presets::l40(), 8);
+        let intra = Codec::parse("int4@32").unwrap();
+        let cross = Codec::parse("int2-sr@32!").unwrap();
+        let mixed = StageCodecs::with_cross(intra, cross);
+        let (results, expected) =
+            harness(&topo, 3000, &intra, |c, d, _| allreduce_staged(c, d, &mixed));
+        for r in &results {
+            assert_eq!(r, &results[0], "mixed-stage ranks diverge");
+        }
+        let s = sqnr_db(&expected, &results[0]);
+        assert!(s > 5.0, "mixed-stage SQNR {s} dB");
+
+        let len = 4096usize;
+        let measure = |stages: StageCodecs| {
+            let inputs: Vec<f32> = (0..len).map(|i| (i as f32).sin()).collect();
+            let ir = &inputs;
+            let (_, counters) = run_ranks(&topo, |h| {
+                let mut c = Communicator::from_handle(h);
+                let mut d = ir.clone();
+                allreduce_staged(&mut c, &mut d, &stages).unwrap();
+            });
+            counters.snapshot()
+        };
+        let uni = measure(StageCodecs::uniform(intra));
+        let mix = measure(mixed);
+        let intra_uni = uni.total - uni.cross_numa;
+        let intra_mix = mix.total - mix.cross_numa;
+        assert_eq!(intra_uni, intra_mix, "intra stages keep the base codec's bytes");
+        let want = cross.asymptotic_wire_ratio() / intra.asymptotic_wire_ratio();
+        let got = mix.cross_numa as f64 / uni.cross_numa as f64;
+        assert!(
+            (got - want).abs() < 0.05,
+            "cross bytes ratio {got} vs wire-ratio quotient {want}"
+        );
     }
 
     #[test]

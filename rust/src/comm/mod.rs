@@ -42,8 +42,11 @@ pub(crate) mod twostep;
 
 use std::str::FromStr;
 
-pub use communicator::{preset_topo, preset_topo_grouped, Communicator, LocalGroup};
+pub use communicator::{
+    preset_topo, preset_topo_custom, preset_topo_grouped, Communicator, LocalGroup,
+};
 pub use error::CommError;
+pub use pipeline::{DEFAULT_CHUNKS, SEND_WINDOW};
 
 use crate::quant::{Codec, CodecBuffers};
 use crate::topo::Topology;
@@ -139,6 +142,14 @@ impl FromStr for Algo {
 }
 
 /// How a [`Communicator`] picks the AllReduce algorithm for a call.
+///
+/// This is now a thin shim over the plan layer ([`crate::plan`]): both
+/// arms build a *uniform* [`crate::plan::CommPlan`] (one codec for every
+/// stage, the default chunk count and send window) and run it through the
+/// same plan execution path as [`crate::plan::PlanPolicy`]. Use
+/// `PlanPolicy` (CLI `--plan`) to mix stage codecs or tune the pipelined
+/// knobs; `AlgoPolicy` remains the stable "pick an algorithm, keep my
+/// codec everywhere" surface.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum AlgoPolicy {
     /// Always run this algorithm (error if the topology cannot host it).

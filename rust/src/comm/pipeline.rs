@@ -12,9 +12,11 @@
 //!
 //! ## Bounded in-flight window
 //!
-//! Intra-RS sends are issued at most [`SEND_WINDOW`] micro-chunks ahead of
-//! the chunk currently being reduced (and the all-gather phase sends one
-//! chunk at a time), so the transport's peak buffered wire bytes are
+//! Intra-RS sends are issued at most a window of micro-chunks ahead of
+//! the chunk currently being reduced ([`SEND_WINDOW`] by default; a
+//! [`CommPlan`](crate::plan::CommPlan) or `--window` chooses per call —
+//! the all-gather phase always ships one chunk at a time), so the
+//! transport's peak buffered wire bytes are
 //! bounded by a handful of micro-chunks instead of growing with the whole
 //! payload — the old schedule posted all k×(s−1) RS sends before the first
 //! recv, which on the TCP backend meant the receive queues briefly held
@@ -25,16 +27,21 @@
 
 use super::{chunk_range, communicator::Communicator, encode, error::CommError, hier, Algo};
 use crate::comm::fabric::RankHandle;
+use crate::plan::StageCodecs;
 use crate::quant::{Codec, CodecBuffers};
 use crate::transport::Transport;
 
 /// Default micro-chunk count (the sim's Fig. 8 sweep peaks around 8).
+/// A [`CommPlan`](crate::plan::CommPlan) overrides this per call — the
+/// compiler's search replaces the constant; this remains the
+/// `AlgoPolicy`-shim default.
 pub const DEFAULT_CHUNKS: usize = 8;
 
-/// How many micro-chunks of intra-RS traffic may be in flight ahead of the
-/// chunk currently being reduced. `>= 2` keeps the pipeline overlap (chunk
-/// c's cross-group hop runs while chunk c+1's RS payloads travel); the
-/// in-flight memory bound scales linearly with it.
+/// Default in-flight window: how many micro-chunks of intra-RS traffic may
+/// be issued ahead of the chunk currently being reduced. `>= 2` keeps the
+/// pipeline overlap (chunk c's cross-group hop runs while chunk c+1's RS
+/// payloads travel); the in-flight memory bound scales linearly with it.
+/// Like [`DEFAULT_CHUNKS`], a plan overrides this per call (`--window`).
 pub const SEND_WINDOW: usize = 2;
 
 /// Issue the intra-group RS sends for one micro-chunk.
@@ -62,12 +69,16 @@ fn send_rs_chunk<T: Transport>(
     Ok(())
 }
 
-/// In-place pipelined hierarchical AllReduce with `chunks` micro-chunks.
-pub(crate) fn allreduce_chunked<T: Transport>(
+/// In-place pipelined hierarchical AllReduce with `chunks` micro-chunks,
+/// `window` chunks of in-flight intra-RS traffic, and one codec per stage
+/// — the plan execution path (see [`hier::allreduce_staged`] for the
+/// per-stage QDQ contract).
+pub(crate) fn allreduce_planned<T: Transport>(
     c: &mut Communicator<T>,
     data: &mut [f32],
-    codec: &Codec,
+    stages: &StageCodecs,
     chunks: usize,
+    window: usize,
 ) -> Result<(), CommError> {
     let Communicator { handle: h, bufs, reduced, codec_threads, .. } = c;
     let t = *codec_threads;
@@ -77,13 +88,13 @@ pub(crate) fn allreduce_chunked<T: Transport>(
     let group = topo.group_members(h.rank);
     let j = h.rank - group.start;
     let k = chunks.max(1);
-    let win = SEND_WINDOW.max(1);
+    let win = window.max(1);
 
     // Phase A (windowed): prime the pipeline with the first `win` chunks'
     // intra-RS sends — enough to keep the intra fabric busy while chunk 0
     // crosses the inter-group link, without buffering the whole payload.
     for chunk in 0..k.min(win) {
-        send_rs_chunk(h, bufs, codec, data, k, chunk, t)?;
+        send_rs_chunk(h, bufs, &stages.intra_rs, data, k, chunk, t)?;
     }
 
     // Phase B: per micro-chunk: reduce own sub-chunk, run the cross-group
@@ -112,11 +123,12 @@ pub(crate) fn allreduce_chunked<T: Transport>(
         // Cross-group column ring for this micro-chunk: the G encoded
         // partials circulate verbatim and every member decode-sums them in
         // group order (one shared implementation — see hier.rs), so all
-        // groups stay bit-identical.
-        hier::cross_group_reduce(h, bufs, acc, codec, t, &topo)?;
+        // groups stay bit-identical. The slow-tier stage: its codec may
+        // be more aggressive than the intra stages'.
+        hier::cross_group_reduce(h, bufs, acc, &stages.cross, t, &topo)?;
         // Keep `win` chunks of RS traffic in flight ahead of the reducer.
         if chunk + win < k {
-            send_rs_chunk(h, bufs, codec, data, k, chunk + win, t)?;
+            send_rs_chunk(h, bufs, &stages.intra_rs, data, k, chunk + win, t)?;
         }
     }
 
@@ -125,7 +137,7 @@ pub(crate) fn allreduce_chunked<T: Transport>(
     // step, and at most ~one chunk per link is ever queued.
     for chunk in 0..k {
         let acc = &reduced[chunk];
-        let wire = encode(codec, acc, bufs, t)?;
+        let wire = encode(&stages.intra_ag, acc, bufs, t)?;
         for peer_j in 0..s {
             let p = group.start + peer_j;
             if p != h.rank {
@@ -149,6 +161,19 @@ pub(crate) fn allreduce_chunked<T: Transport>(
         }
     }
     Ok(())
+}
+
+/// In-place pipelined hierarchical AllReduce with one codec everywhere
+/// and the default window — the uniform special case of
+/// [`allreduce_planned`] (the `AlgoPolicy` shim and the explicit
+/// [`Communicator::allreduce_chunked`] knob).
+pub(crate) fn allreduce_chunked<T: Transport>(
+    c: &mut Communicator<T>,
+    data: &mut [f32],
+    codec: &Codec,
+    chunks: usize,
+) -> Result<(), CommError> {
+    allreduce_planned(c, data, &StageCodecs::uniform(*codec), chunks, SEND_WINDOW)
 }
 
 /// Pipelined hierarchical AllReduce with the default micro-chunk count.
@@ -282,5 +307,73 @@ mod tests {
             peak < total / 3,
             "peak in-flight {peak} should be far below the full payload traffic {total}"
         );
+    }
+
+    #[test]
+    fn peak_buffered_bytes_scale_with_the_chosen_window() {
+        // The --window knob is real: a larger plan window must buffer
+        // proportionally more in-flight traffic (and every window stays
+        // within its own bound), while the numerics are identical.
+        let topo = Topology::new(presets::l40(), 8);
+        let codec = Codec::parse("int4@32").unwrap();
+        let stages = StageCodecs::uniform(codec);
+        let len = 65536usize;
+        let k = 32usize;
+        let inputs: Vec<f32> = (0..len).map(|i| (i as f32).sin()).collect();
+        let ir = &inputs;
+        let run = |win: usize| {
+            let (out, _) = crate::comm::fabric::run_ranks(&topo, |h| {
+                let mut comm = Communicator::from_handle(h);
+                let mut d = ir.clone();
+                allreduce_planned(&mut comm, &mut d, &stages, k, win).unwrap();
+                (comm.transport().stats(), d)
+            });
+            let peak = out.iter().map(|(s, _)| s.peak_buffered_bytes).max().unwrap();
+            let total = out.iter().map(|(s, _)| s.payload_bytes).max().unwrap();
+            let bits: Vec<u32> = out[0].1.iter().map(|x| x.to_bits()).collect();
+            (peak, total, bits)
+        };
+        let (p2, total, r2) = run(2);
+        let (p8, _, r8) = run(8);
+        assert_eq!(r2, r8, "the window must never change the numerics");
+        let per_chunk = total / k as u64;
+        assert!(
+            p8 > p2 + per_chunk / 2,
+            "window 8 peak {p8} should sit clearly above window 2 peak {p2} \
+             (per-chunk traffic {per_chunk})"
+        );
+        assert!(p8 <= (3 * 8 + 4) * per_chunk, "window 8 peak {p8} outside its own bound");
+    }
+
+    #[test]
+    fn mixed_stage_pipeline_matches_serial_staged_hier_bit_exactly() {
+        // Pipelining must be numerics-neutral for mixed-stage plans too:
+        // chunked+windowed execution == serial per-chunk staged hier.
+        for topo in [Topology::new(presets::l40(), 8), presets::four_group_pcie(8).unwrap()] {
+            let stages = StageCodecs::with_cross(
+                Codec::parse("int4@32").unwrap(),
+                Codec::parse("int2-sr@32!").unwrap(),
+            );
+            for win in [1usize, 2, 5] {
+                let (pp, _) = harness(&topo, 4096, &Codec::Bf16, |c, d, _| {
+                    allreduce_planned(c, d, &stages, 8, win)
+                });
+                let (serial, _) = harness(&topo, 4096, &Codec::Bf16, |c, d, _| {
+                    let k = 8;
+                    for chunk in 0..k {
+                        let mr = chunk_range(d.len(), k, chunk);
+                        let mut micro = d[mr.clone()].to_vec();
+                        hier::allreduce_staged(c, &mut micro, &stages)?;
+                        d[mr].copy_from_slice(&micro);
+                    }
+                    Ok(())
+                });
+                assert_eq!(
+                    pp[0], serial[0],
+                    "win={win} G={}: mixed pipelined != serial staged",
+                    topo.numa_groups
+                );
+            }
+        }
     }
 }

@@ -20,6 +20,7 @@ use anyhow::{ensure, Result};
 
 use crate::comm::{AlgoPolicy, LocalGroup};
 use crate::model::{shard_param, Batch, ModelConfig, Weights};
+use crate::plan::PlanPolicy;
 use crate::quant::Codec;
 use crate::runtime::{tokens_literal, Runtime, Tensor};
 
@@ -44,6 +45,17 @@ pub(crate) fn tp_group_grouped(
     policy: AlgoPolicy,
 ) -> Result<Option<LocalGroup>> {
     Ok(if tp >= 2 { Some(LocalGroup::for_policy_grouped(tp, groups, policy)?) } else { None })
+}
+
+/// [`tp_group_grouped`] driving the plan layer (the CLI's `--plan`): the
+/// group's boundary AllReduces resolve through the given [`PlanPolicy`]
+/// instead of the `AlgoPolicy` shim.
+pub(crate) fn tp_group_planned(
+    tp: usize,
+    groups: Option<usize>,
+    policy: PlanPolicy,
+) -> Result<Option<LocalGroup>> {
+    Ok(if tp >= 2 { Some(LocalGroup::for_plan_grouped(tp, groups, policy)?) } else { None })
 }
 
 /// The TP engine: owns the runtime, the sharded weights, and the rank
@@ -74,11 +86,14 @@ impl TpEngine {
         codec: Codec,
         policy: AlgoPolicy,
     ) -> Result<TpEngine> {
-        TpEngine::new_grouped(rt, cfg, weights, codec, policy, None)
+        TpEngine::new_grouped(rt, cfg, weights, codec, policy, None, None)
     }
 
     /// [`TpEngine::new`] with an explicit link-tier group count for the
-    /// rank-group topology (the CLI's `--groups`).
+    /// rank-group topology (the CLI's `--groups`) and an optional
+    /// [`PlanPolicy`] (the CLI's `--plan`) — passing the plan here builds
+    /// the rank group once instead of constructing an `AlgoPolicy` group
+    /// that [`TpEngine::set_plan_policy`] would immediately discard.
     pub fn new_grouped(
         rt: Runtime,
         cfg: ModelConfig,
@@ -86,10 +101,14 @@ impl TpEngine {
         codec: Codec,
         policy: AlgoPolicy,
         groups: Option<usize>,
+        plan: Option<PlanPolicy>,
     ) -> Result<TpEngine> {
         ensure!(cfg.n_heads % cfg.tp == 0, "heads {} % tp {}", cfg.n_heads, cfg.tp);
         let tp = cfg.tp;
-        let group = tp_group_grouped(tp, groups, policy)?;
+        let (group, policy) = match plan {
+            Some(p) => (tp_group_planned(tp, groups, p)?, p.algo_hint()),
+            None => (tp_group_grouped(tp, groups, policy)?, policy),
+        };
         let embed = weights.get("embed")?.to_literal()?;
         let head = vec![
             weights.get("lnf_g")?.to_literal()?,
@@ -246,19 +265,39 @@ impl TpEngine {
     /// Swap the codec / algorithm policy (for sweep harnesses) without
     /// resharding weights. Rebuilds the rank group only when the policy's
     /// preset topology changes; on a failed rebuild the engine keeps its
-    /// previous (consistent) policy + group.
+    /// previous (consistent) policy + group. Clears any plan policy set
+    /// via [`TpEngine::set_plan_policy`] (the two surfaces are exclusive).
     pub fn set_codec(&mut self, codec: Codec, policy: AlgoPolicy) -> Result<()> {
         self.codec = codec;
-        if policy != self.policy {
+        if policy != self.policy || self.plan_policy().is_some() {
             self.group = tp_group_grouped(self.cfg.tp, self.groups, policy)?;
             self.policy = policy;
         }
         Ok(())
     }
 
+    /// Route the boundary AllReduces through the plan layer (the CLI's
+    /// `--plan`): rebuilds the rank group for `plan`, keeping the current
+    /// codec as the base budget `Auto` compiles against. On a failed
+    /// rebuild (e.g. an inadmissible fixed plan for the preset topology)
+    /// the engine keeps its previous consistent group.
+    pub fn set_plan_policy(&mut self, plan: PlanPolicy) -> Result<()> {
+        if self.plan_policy() == Some(&plan) {
+            return Ok(()); // already driving exactly this policy
+        }
+        self.group = tp_group_planned(self.cfg.tp, self.groups, plan)?;
+        self.policy = plan.algo_hint();
+        Ok(())
+    }
+
     /// The active algorithm policy.
     pub fn policy(&self) -> AlgoPolicy {
         self.policy
+    }
+
+    /// The active plan policy, when the engine drives the plan layer.
+    pub fn plan_policy(&self) -> Option<&PlanPolicy> {
+        self.group.as_ref().and_then(LocalGroup::plan_policy)
     }
 
     /// The head-piece weight literals (lnf_g, lnf_b, tied embedding) — used
@@ -396,5 +435,28 @@ mod tests {
     fn single_shard_group_is_none() {
         assert!(tp_group(1, AlgoPolicy::Auto).unwrap().is_none());
         assert!(tp_group(2, AlgoPolicy::Auto).unwrap().is_some());
+        assert!(tp_group_planned(1, None, PlanPolicy::auto()).unwrap().is_none());
+    }
+
+    #[test]
+    fn planned_tp_group_runs_mixed_boundary_allreduce() {
+        use crate::plan::{CommPlan, StageCodecs};
+        let c4 = Codec::parse("int4@32").unwrap();
+        let plan = CommPlan {
+            stage_codecs: StageCodecs::with_cross(c4, Codec::parse("int2-sr@32!").unwrap()),
+            ..CommPlan::uniform(Algo::Hier, c4)
+        };
+        let mut group =
+            tp_group_planned(4, None, PlanPolicy::Fixed(plan)).unwrap().unwrap();
+        assert_eq!(group.plan_policy(), Some(&PlanPolicy::Fixed(plan)));
+        let parts = partials(4, 256);
+        let exact: Vec<f32> = (0..256).map(|i| parts.iter().map(|p| p[i]).sum::<f32>()).collect();
+        let mut mine = parts.clone();
+        group.allreduce(&mut mine, &c4).unwrap();
+        for r in &mine {
+            assert_eq!(r, &mine[0], "TP shards must agree bitwise under a mixed plan");
+        }
+        let s = sqnr_db(&exact, &mine[0]);
+        assert!(s > 5.0, "mixed TP boundary SQNR {s} dB");
     }
 }

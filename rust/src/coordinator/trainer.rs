@@ -16,6 +16,7 @@ use anyhow::{Context, Result};
 
 use crate::comm::{Algo, AlgoPolicy, LocalGroup};
 use crate::model::{Batch, ModelConfig, Sampler, Weights};
+use crate::plan::PlanPolicy;
 use crate::quant::Codec;
 use crate::runtime::{tokens_literal, Runtime, Tensor};
 
@@ -28,6 +29,10 @@ pub struct TrainOptions {
     /// Gradient AllReduce algorithm: a fixed [`Algo`] or `Auto` against
     /// the cost model (`--algo auto` on the CLI).
     pub algo: AlgoPolicy,
+    /// When set (`--plan` on the CLI), the gradient AllReduce runs
+    /// through the plan layer with this policy — per-stage codecs and
+    /// tuned chunking — and `algo` only shapes the preset topology.
+    pub plan: Option<PlanPolicy>,
     /// Link-tier group count of the DP rank-group topology (`--groups`);
     /// `None` lets the policy pick the preset shape.
     pub groups: Option<usize>,
@@ -44,6 +49,7 @@ impl Default for TrainOptions {
             dp: 4,
             codec: Codec::Bf16,
             algo: AlgoPolicy::Fixed(Algo::TwoStep),
+            plan: None,
             groups: None,
             seed: 7,
             log_every: 10,
@@ -75,10 +81,14 @@ pub struct Trainer {
     m: Vec<xla::Literal>,
     v: Vec<xla::Literal>,
     step: usize,
-    /// Persistent DP rank group, keyed by the (dp, groups, policy) it was
-    /// built for; rebuilt lazily when the options change between calls.
-    group: Option<((usize, Option<usize>, AlgoPolicy), LocalGroup)>,
+    /// Persistent DP rank group, keyed by the (dp, groups, policy, plan)
+    /// it was built for; rebuilt lazily when the options change between
+    /// calls.
+    group: Option<(GroupKey, LocalGroup)>,
 }
+
+/// What the persistent DP rank group was built for.
+type GroupKey = (usize, Option<usize>, AlgoPolicy, Option<PlanPolicy>);
 
 impl Trainer {
     pub fn new(rt: Runtime, cfg: ModelConfig, init: &Weights) -> Result<Trainer> {
@@ -130,10 +140,13 @@ impl Trainer {
         if opts.dp == 1 {
             return Ok((per_rank.swap_remove(0), 0));
         }
-        let key = (opts.dp, opts.groups, opts.algo);
+        let key = (opts.dp, opts.groups, opts.algo, opts.plan);
         if self.group.as_ref().map(|(k, _)| *k != key).unwrap_or(true) {
-            self.group =
-                Some((key, LocalGroup::for_policy_grouped(opts.dp, opts.groups, opts.algo)?));
+            let group = match opts.plan {
+                Some(plan) => LocalGroup::for_plan_grouped(opts.dp, opts.groups, plan)?,
+                None => LocalGroup::for_policy_grouped(opts.dp, opts.groups, opts.algo)?,
+            };
+            self.group = Some((key, group));
         }
         let (_, group) = self.group.as_mut().unwrap();
         let before = group.counters().total_bytes();

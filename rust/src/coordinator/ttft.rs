@@ -12,6 +12,7 @@
 //! (the paper's 2.28x on L40, ~1.2-1.3x on A100/H800, ~1x on H20).
 
 use crate::comm::{Algo, AlgoPolicy};
+use crate::plan::{self, CommPlan};
 use crate::quant::Codec;
 use crate::sim;
 use crate::topo::Topology;
@@ -66,6 +67,32 @@ pub fn algo_for(topo: &Topology, wl: &PrefillWorkload, codec: &Codec) -> Algo {
     AlgoPolicy::Auto.resolve(topo, codec, elems)
 }
 
+/// The *full* communication plan the plan compiler would run for a
+/// workload: algorithm plus per-stage codecs plus tuned chunking. The
+/// BF16 baseline stays NCCL's ring (the paper's comparison point, and a
+/// lossless budget the compiler never quantizes); quantized codecs go
+/// through [`plan::compile`] at the prefill AllReduce payload size — on a
+/// tier-asymmetric cluster this is where the cross-group stage picks up a
+/// more aggressive codec than the intra stages.
+pub fn plan_for(topo: &Topology, wl: &PrefillWorkload, codec: &Codec) -> CommPlan {
+    if matches!(codec, Codec::Bf16) {
+        return CommPlan::uniform(Algo::Ring, *codec);
+    }
+    let elems = wl.batch * wl.prompt_len * wl.d_model;
+    plan::compile(topo, elems, codec)
+}
+
+/// [`ttft_s`] under an explicit [`CommPlan`] (per-stage pricing via
+/// [`sim::plan_time`]).
+pub fn ttft_s_planned(topo: &Topology, wl: &PrefillWorkload, plan: &CommPlan) -> f64 {
+    let tokens = (wl.batch * wl.prompt_len) as f64;
+    let flops = 2.0 * wl.n_params * tokens / topo.n_gpus as f64;
+    let compute = flops / (topo.spec.tensor_bf16_tflops * 1e12 * PREFILL_MFU);
+    let m_bytes = tokens * wl.d_model as f64 * 2.0;
+    let per_ar = sim::plan_time(topo, plan, m_bytes).total();
+    compute + 2.0 * wl.n_layers as f64 * per_ar
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -100,6 +127,31 @@ mod tests {
         // Paper: "we don't find any benefit using low-bit on H20".
         let s = speedup(presets::h20(), "int4@32");
         assert!(s < 1.15, "H20 speedup {s} should be ~none");
+    }
+
+    #[test]
+    fn plan_for_mixes_stages_on_asymmetric_clusters_only() {
+        let wl = PrefillWorkload::default();
+        let c = Codec::parse("int4@32").unwrap();
+        // The balanced L40 box: full plan, uniform codecs.
+        let l40 = Topology::new(presets::l40(), 8);
+        let p = plan_for(&l40, &wl, &c);
+        assert!(p.stage_codecs.is_uniform(), "{p}");
+        assert!(ttft_s_planned(&l40, &wl, &p) > 0.0);
+        // Two NVLink nodes over a slow link: the cross stage goes
+        // aggressive and planned TTFT beats the uniform plan's.
+        let duo = presets::dual_nvlink_node(16).unwrap();
+        let p = plan_for(&duo, &wl, &c);
+        assert!(!p.stage_codecs.is_uniform(), "{p}");
+        let uniform = crate::plan::CommPlan::uniform(p.algo, c);
+        assert!(
+            ttft_s_planned(&duo, &wl, &p) < ttft_s_planned(&duo, &wl, &uniform),
+            "the compiled plan must not lose to its uniform counterpart"
+        );
+        // BF16 stays the ring baseline, lossless.
+        let pb = plan_for(&duo, &wl, &Codec::Bf16);
+        assert_eq!(pb.algo, Algo::Ring);
+        assert!(pb.stage_codecs.is_uniform());
     }
 
     #[test]

@@ -15,9 +15,14 @@
 //!   [`comm::CommError`]), per-call algorithm selection via
 //!   [`comm::AlgoPolicy`] (`Auto` consults the cost model), persistent
 //!   scratch, generic over the transport.
+//! - [`plan`] — the communication plan compiler: a typed
+//!   [`plan::CommPlan`] (algorithm, per-link-tier stage codecs, chunk
+//!   count, send window, thread budget) searched over admissible
+//!   candidates, priced by the sim, and cached in an LRU keyed by
+//!   topology fingerprint so the hot path compiles once.
 //! - [`topo`] / [`sim`] — device topology presets (Table 6) and the link
 //!   simulator producing algorithmic-bandwidth estimates (Tables 5, 9, 10)
-//!   that also powers `AlgoPolicy::Auto`.
+//!   that also powers `AlgoPolicy::Auto` and the plan compiler.
 //! - [`runtime`] — PJRT CPU client wrapper loading AOT HLO artifacts.
 //! - [`model`] — weights/tokenizer/corpus/checkpoint handling.
 //! - [`coordinator`] — TP inference engine, DP trainer, EP dispatcher, TTFT
@@ -31,6 +36,7 @@ pub mod comm;
 pub mod coordinator;
 pub mod harness;
 pub mod model;
+pub mod plan;
 pub mod quant;
 pub mod runtime;
 pub mod sim;

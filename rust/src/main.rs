@@ -5,13 +5,17 @@
 //! flashcomm figure <1|2|4|5|8|all> [--quick] [--codec spec] [--chunks K]
 //! flashcomm train   [--config tiny] [--steps N] [--dp N] [--codec spec]
 //!                   [--algo ring|twostep|hier|hierpp|auto] [--groups G]
+//!                   [--plan auto|spec] [--chunks K] [--window W]
 //!                   [--out ckpt.bin]
 //! flashcomm eval    [--config tiny] [--ckpt path] [--codec spec]
 //!                   [--algo twostep|hier|auto] [--groups G] [--batches N]
+//!                   [--plan auto|spec] [--chunks K] [--window W]
 //! flashcomm ttft    [--prompt N] [--batch N]
 //! flashcomm worker  [--world N] [--algo hier|auto] [--groups G]
 //!                   [--codecs int4@32,int2-sr@32] [--len N]
 //!                   [--root host:port] [--rank R] [--codec-threads T]
+//!                   [--plan auto|spec] [--chunks K] [--window W]
+//!                   [--bind ip] [--inter-gbps F]
 //! flashcomm info
 //! ```
 //!
@@ -21,19 +25,27 @@
 //! `--groups G` shapes the rank-group topology: 1 = flat NVLink node,
 //! `G >= 2` = G equal link-tier groups joined by NUMA bridges (the
 //! generalized hierarchical family runs at any admissible G).
+//! `--plan auto` compiles a full communication plan per payload —
+//! algorithm, per-stage codecs (a tier-asymmetric cluster gets a more
+//! aggressive cross-group codec), micro-chunk count — while
+//! `--plan <algo>[:intra=c][:cross=c][:ag=c][:chunks=K][:window=W][:threads=T]`
+//! pins one. `--chunks`/`--window` pin those knobs in either mode.
+//! `--inter-gbps F` models G NVLink nodes joined by an F GB/s link;
+//! `--bind ip` lets worker data sockets leave loopback (DESIGN.md §4).
 
 use std::sync::Arc;
 
 use anyhow::{bail, ensure, Context, Result};
 
 use flashcomm::cli::Args;
-use flashcomm::comm::{fabric, preset_topo_grouped, AlgoPolicy, Communicator};
+use flashcomm::comm::{fabric, preset_topo_custom, AlgoPolicy, Communicator};
 use flashcomm::coordinator::{TpEngine, TrainOptions, Trainer};
 use flashcomm::harness;
 use flashcomm::model::{Corpus, ModelConfig, Sampler, Weights};
+use flashcomm::plan::{CommPlan, PlanPins, PlanPolicy};
 use flashcomm::quant::Codec;
 use flashcomm::runtime::{default_artifacts_dir, Runtime};
-use flashcomm::transport::{frame, TcpTransport, Transport};
+use flashcomm::transport::{frame, tcp, TcpTransport, Transport};
 use flashcomm::util::Prng;
 
 fn main() {
@@ -83,6 +95,64 @@ fn groups_flag(args: &Args) -> Result<Option<usize>> {
     }
 }
 
+/// Parse the optional `--inter-gbps F` flag (effective inter-group link
+/// bandwidth override: models multi-node NVLink clusters; see
+/// [`preset_topo_custom`]).
+fn inter_gbps_flag(args: &Args) -> Result<Option<f64>> {
+    match args.flag("inter-gbps") {
+        None => Ok(None),
+        Some(v) => {
+            let gbps: f64 = v.parse().with_context(|| format!("--inter-gbps {v}"))?;
+            Ok(Some(gbps))
+        }
+    }
+}
+
+/// Parse the `--chunks N` / `--window N` plan-knob pins (clean error on
+/// `--chunks 0` / `--window 0`).
+fn pins_flags(args: &Args) -> Result<PlanPins> {
+    let parse = |name: &str| -> Result<Option<usize>> {
+        match args.flag(name) {
+            None => Ok(None),
+            Some(v) => Ok(Some(v.parse().with_context(|| format!("--{name} {v}"))?)),
+        }
+    };
+    let pins = PlanPins { chunks: parse("chunks")?, window: parse("window")? };
+    pins.validate()?;
+    Ok(pins)
+}
+
+/// Resolve the plan policy for one base codec from `--plan` (auto or a
+/// spec) plus the `--chunks`/`--window` pins. With no `--plan`, pins
+/// alone still enter the plan layer: a fixed `--algo` becomes a pinned
+/// uniform plan, `--algo auto` a pinned `Auto` search. Returns `None`
+/// only when nothing plan-related was requested (the legacy `AlgoPolicy`
+/// path).
+fn plan_policy_for(
+    plan: Option<&str>,
+    pins: PlanPins,
+    algo: AlgoPolicy,
+    base: &Codec,
+) -> Result<Option<PlanPolicy>> {
+    match plan {
+        Some(spec) if spec.eq_ignore_ascii_case("auto") => Ok(Some(PlanPolicy::Auto(pins))),
+        Some(spec) => {
+            let plan = pins.apply(CommPlan::parse(spec, base)?);
+            plan.validate_shape().with_context(|| format!("--plan {spec}"))?;
+            Ok(Some(PlanPolicy::Fixed(plan)))
+        }
+        None if pins.is_empty() => Ok(None),
+        None => Ok(Some(match algo {
+            AlgoPolicy::Auto => PlanPolicy::Auto(pins),
+            AlgoPolicy::Fixed(a) => {
+                let plan = pins.apply(CommPlan::uniform(a, *base));
+                plan.validate_shape().context("--chunks/--window")?;
+                PlanPolicy::Fixed(plan)
+            }
+        })),
+    }
+}
+
 const HELP: &str = "\
 flashcomm — FlashCommunication V2 (bit splitting + spike reserving) reproduction
 
@@ -103,6 +173,14 @@ algo: --algo ring|twostep|hier|hierpp|auto — `auto` consults the cost
       model per payload (hier above the crossover size, two-step below)
 groups: --groups G — link-tier groups of the rank-group topology
       (1 = flat NVLink, G >= 2 = G NUMA groups; hier runs at any G >= 2)
+plan: --plan auto — compile a full communication plan per payload
+      (algorithm + per-stage codecs + tuned chunking, cached by shape);
+      --plan <algo>[:intra=c][:cross=c][:ag=c][:chunks=K][:window=W][:threads=T]
+      runs a fixed plan, e.g. `hier:cross=int2-sr@32!` under --codec
+      int4@32. --chunks K / --window W pin those knobs (error if 0).
+worker: --bind IP — bind data listeners beyond loopback (multi-node);
+      --inter-gbps F — model G NVLink nodes joined by an F GB/s link
+      (the tier-asymmetric shape where auto plans mix stage codecs)
 ";
 
 fn cmd_train(args: &Args) -> Result<()> {
@@ -120,24 +198,31 @@ fn cmd_train(args: &Args) -> Result<()> {
     let (train, eval) = corpus.split();
     let mut sampler = Sampler::new(train, args.flag_usize("seed", 7)? as u64);
     let eval_batches = Sampler::eval_batches(eval, cfg.eval_batch, cfg.seq_len);
+    let codec = Codec::parse(&args.flag_or("codec", "bf16"))?;
+    let algo: AlgoPolicy = args.flag_or("algo", "twostep").parse()?;
+    let plan = plan_policy_for(args.flag("plan"), pins_flags(args)?, algo, &codec)?;
     let opts = TrainOptions {
         steps: args.flag_usize("steps", 200)?,
         dp: args.flag_usize("dp", 4)?,
-        codec: Codec::parse(&args.flag_or("codec", "bf16"))?,
-        algo: args.flag_or("algo", "twostep").parse()?,
+        codec,
+        algo,
+        plan,
         groups: groups_flag(args)?,
         log_every: args.flag_usize("log-every", 10)?,
         eval_every: args.flag_usize("eval-every", 50)?,
         eval_batches: args.flag_usize("eval-batches", 8)?,
         seed: args.flag_usize("seed", 7)? as u64,
     };
+    let policy_label = match &opts.plan {
+        Some(p) => format!("plan {p}"),
+        None => format!("algo {algo}"),
+    };
     println!(
-        "training {config} ({} params) for {} steps, dp={}, grads over {} [{}]",
+        "training {config} ({} params) for {} steps, dp={}, grads over {} [{policy_label}]",
         cfg.n_params,
         opts.steps,
         opts.dp,
         opts.codec.name(),
-        args.flag_or("algo", "twostep"),
     );
     let mut trainer = Trainer::new(rt, cfg, &init)?;
     let t0 = std::time::Instant::now();
@@ -184,11 +269,17 @@ fn cmd_eval(args: &Args) -> Result<()> {
         bail!("--style was replaced by --algo (try `--algo {style}`, or `--algo auto`)");
     }
     let policy: AlgoPolicy = args.flag_or("algo", "twostep").parse()?;
-    let mut engine = TpEngine::new_grouped(rt, cfg, &weights, codec, policy, groups_flag(args)?)?;
+    let plan = plan_policy_for(args.flag("plan"), pins_flags(args)?, policy, &codec)?;
+    let mut engine =
+        TpEngine::new_grouped(rt, cfg, &weights, codec, policy, groups_flag(args)?, plan)?;
+    let policy_label = match &plan {
+        Some(p) => format!("--plan {p}"),
+        None => format!("--algo {policy}"),
+    };
     let t0 = std::time::Instant::now();
     let ppl = engine.perplexity(&batches)?;
     println!(
-        "{config} perplexity under {} (--algo {policy}): {:.4}   [{} batches, {:.2}s]",
+        "{config} perplexity under {} ({policy_label}): {:.4}   [{} batches, {:.2}s]",
         codec.name(),
         ppl,
         batches.len(),
@@ -206,42 +297,88 @@ fn cmd_eval(args: &Args) -> Result<()> {
 /// verifies the result is bit-identical to the in-process backend on the
 /// same inputs.
 fn cmd_worker(args: &Args) -> Result<()> {
-    let world = args.flag_usize("world", 4)?;
-    ensure!(world >= 2, "worker demo needs at least 2 ranks (got --world {world})");
-    let len = args.flag_usize("len", 4096)?;
-    let algo = args.flag_or("algo", "hier");
-    let groups = groups_flag(args)?;
-    // Validate once here rather than erroring in every spawned process:
-    // the topology must construct (world divisible into --groups) and a
-    // fixed algorithm must be admissible on it (`Algo::admissible`).
-    let policy: AlgoPolicy = algo.parse()?;
-    preset_topo_grouped(world, groups, policy)?;
-    let codecs = args.flag_or("codecs", "int4@32,int2-sr@32");
-    // Codec worker threads per rank: each rank owns its process here, so
-    // large payloads may fan the fused quantize/pack kernels out (the
-    // in-process reference always runs 1 to avoid oversubscription).
-    let codec_threads = args.flag_usize("codec-threads", 1)?;
+    let opts = WorkerOpts::parse(args)?;
     match args.flag("rank") {
         Some(r) => {
             let rank: usize = r.parse().with_context(|| format!("--rank {r}"))?;
             let root = args.require("root")?;
-            worker_rank(rank, world, len, &algo, groups, &codecs, root, codec_threads)
+            worker_rank(rank, &opts, root)
         }
-        None => {
-            worker_launch(world, len, &algo, groups, &codecs, args.flag("root"), codec_threads)
-        }
+        None => worker_launch(&opts, args.flag("root")),
     }
 }
 
-fn worker_launch(
+/// Everything a worker job is parameterized by (identical in the launcher
+/// and every spawned rank).
+struct WorkerOpts {
     world: usize,
     len: usize,
-    algo: &str,
+    algo: String,
     groups: Option<usize>,
-    codecs: &str,
-    root: Option<&str>,
+    inter_gbps: Option<f64>,
+    codecs: String,
     codec_threads: usize,
-) -> Result<()> {
+    /// Data-listener bind address (`--bind`; loopback by default — set a
+    /// routable interface IP to let the data plane leave the host).
+    bind: std::net::IpAddr,
+    /// Raw `--plan` value (`auto` or a spec, resolved per base codec).
+    plan: Option<String>,
+    pins: PlanPins,
+}
+
+impl WorkerOpts {
+    fn parse(args: &Args) -> Result<WorkerOpts> {
+        let world = args.flag_usize("world", 4)?;
+        ensure!(world >= 2, "worker demo needs at least 2 ranks (got --world {world})");
+        let opts = WorkerOpts {
+            world,
+            len: args.flag_usize("len", 4096)?,
+            algo: args.flag_or("algo", "hier"),
+            groups: groups_flag(args)?,
+            inter_gbps: inter_gbps_flag(args)?,
+            codecs: args.flag_or("codecs", "int4@32,int2-sr@32"),
+            // Codec worker threads per rank: each rank owns its process
+            // here, so large payloads may fan the fused quantize/pack
+            // kernels out (the in-process reference always runs 1 to
+            // avoid oversubscription).
+            codec_threads: args.flag_usize("codec-threads", 1)?,
+            bind: match args.flag("bind") {
+                None => tcp::DEFAULT_BIND,
+                Some(v) => v.parse().with_context(|| format!("--bind {v}"))?,
+            },
+            plan: args.flag("plan").map(str::to_string),
+            pins: pins_flags(args)?,
+        };
+        // Validate once here rather than erroring in every spawned
+        // process: the topology must construct (world divisible into
+        // --groups, --inter-gbps sane), a fixed algorithm must be
+        // admissible on it (`Algo::admissible`), and the plan policy —
+        // including a fixed plan's own algorithm — must resolve and be
+        // admissible against every requested codec.
+        let policy: AlgoPolicy = opts.algo.parse()?;
+        let topo = opts.topology(policy)?;
+        for spec in opts.codec_list() {
+            let base = Codec::parse(spec)?;
+            if let Some(PlanPolicy::Fixed(plan)) =
+                plan_policy_for(opts.plan.as_deref(), opts.pins, policy, &base)?
+            {
+                plan.validate(&topo)
+                    .with_context(|| format!("--plan for codec {spec} on this topology"))?;
+            }
+        }
+        Ok(opts)
+    }
+
+    fn codec_list(&self) -> impl Iterator<Item = &str> {
+        self.codecs.split(',').map(str::trim).filter(|s| !s.is_empty())
+    }
+
+    fn topology(&self, policy: AlgoPolicy) -> Result<flashcomm::topo::Topology> {
+        Ok(preset_topo_custom(self.world, self.groups, self.inter_gbps, policy)?)
+    }
+}
+
+fn worker_launch(opts: &WorkerOpts, root: Option<&str>) -> Result<()> {
     let root = match root {
         Some(r) => r.to_string(),
         None => {
@@ -255,27 +392,45 @@ fn worker_launch(
         }
     };
     let exe = std::env::current_exe().context("resolving the worker binary path")?;
-    let grouping = match groups {
+    let grouping = match opts.groups {
         Some(g) => format!(", {g} groups"),
         None => String::new(),
     };
+    let policy_label = match &opts.plan {
+        Some(p) => format!("plan {p}"),
+        None => format!("algo {}", opts.algo),
+    };
     println!(
-        "spawning {world} worker processes: rendezvous {root}, algo {algo}{grouping}, \
-         codecs {codecs}, {len} elems/rank"
+        "spawning {} worker processes: rendezvous {root}, {policy_label}{grouping}, \
+         codecs {}, {} elems/rank",
+        opts.world, opts.codecs, opts.len
     );
-    let mut children = Vec::with_capacity(world);
-    for rank in 0..world {
+    let mut children = Vec::with_capacity(opts.world);
+    for rank in 0..opts.world {
         let mut cmd = std::process::Command::new(&exe);
         cmd.arg("worker")
             .args(["--rank", &rank.to_string()])
-            .args(["--world", &world.to_string()])
+            .args(["--world", &opts.world.to_string()])
             .args(["--root", &root])
-            .args(["--len", &len.to_string()])
-            .args(["--algo", algo])
-            .args(["--codecs", codecs])
-            .args(["--codec-threads", &codec_threads.to_string()]);
-        if let Some(g) = groups {
+            .args(["--len", &opts.len.to_string()])
+            .args(["--algo", &opts.algo])
+            .args(["--codecs", &opts.codecs])
+            .args(["--codec-threads", &opts.codec_threads.to_string()])
+            .args(["--bind", &opts.bind.to_string()]);
+        if let Some(g) = opts.groups {
             cmd.args(["--groups", &g.to_string()]);
+        }
+        if let Some(gbps) = opts.inter_gbps {
+            cmd.args(["--inter-gbps", &gbps.to_string()]);
+        }
+        if let Some(p) = &opts.plan {
+            cmd.args(["--plan", p]);
+        }
+        if let Some(c) = opts.pins.chunks {
+            cmd.args(["--chunks", &c.to_string()]);
+        }
+        if let Some(w) = opts.pins.window {
+            cmd.args(["--window", &w.to_string()]);
         }
         let child =
             cmd.spawn().with_context(|| format!("spawning worker rank {rank}"))?;
@@ -290,28 +445,20 @@ fn worker_launch(
         }
     }
     ensure!(!failed, "one or more worker ranks failed");
-    println!("all {world} worker processes agree with the InProc backend bit-for-bit");
+    println!("all {} worker processes agree with the InProc backend bit-for-bit", opts.world);
     Ok(())
 }
 
-#[allow(clippy::too_many_arguments)]
-fn worker_rank(
-    rank: usize,
-    world: usize,
-    len: usize,
-    algo_str: &str,
-    groups: Option<usize>,
-    codecs: &str,
-    root: &str,
-    codec_threads: usize,
-) -> Result<()> {
-    let policy: AlgoPolicy = algo_str.parse()?;
-    let topo = preset_topo_grouped(world, groups, policy)?;
-    let tcp = TcpTransport::bootstrap(rank, world, root)
+fn worker_rank(rank: usize, opts: &WorkerOpts, root: &str) -> Result<()> {
+    let policy: AlgoPolicy = opts.algo.parse()?;
+    let topo = opts.topology(policy)?;
+    let world = opts.world;
+    let len = opts.len;
+    let tcp = TcpTransport::bootstrap_bound(rank, world, root, opts.bind)
         .with_context(|| format!("rank {rank} bootstrapping the TCP mesh at {root}"))?;
     let mut comm =
         Communicator::new(tcp, topo.clone(), Arc::new(fabric::ByteCounters::default()))?;
-    comm.set_codec_threads(codec_threads);
+    comm.set_codec_threads(opts.codec_threads);
 
     // Deterministic heavy-tailed inputs, identical in every process (and in
     // the in-process reference below).
@@ -324,23 +471,45 @@ fn worker_rank(
         })
         .collect();
 
-    for spec in codecs.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+    for spec in opts.codec_list() {
         let codec = Codec::parse(spec)?;
+        let plan_policy = plan_policy_for(opts.plan.as_deref(), opts.pins, policy, &codec)?;
 
         // The real thing: this process is one rank of the TCP mesh.
         let mut mine = inputs[rank].clone();
-        let used = comm.allreduce(&mut mine, &codec, policy)?;
+        let (used_label, used_algo, used_plan) = match &plan_policy {
+            Some(pp) => {
+                let plan = comm.allreduce_planned(&mut mine, &codec, pp)?;
+                (plan.to_string(), plan.algo, Some(plan))
+            }
+            None => {
+                let algo = comm.allreduce(&mut mine, &codec, policy)?;
+                (algo.to_string(), algo, None)
+            }
+        };
 
         // Reference: the same collective over the in-process backend. The
-        // policy resolves per (topology, codec, size), so both backends
-        // pick the same algorithm without coordination.
+        // policy (algorithm or full plan) resolves per (topology, codec,
+        // size) deterministically, so both backends pick the same schedule
+        // without coordination.
         let inputs_ref = &inputs;
+        let pp_ref = &plan_policy;
         let (reference, _) = fabric::run_ranks(&topo, |rh| {
             let mut c = Communicator::from_handle(rh);
             let mut d = inputs_ref[c.rank()].clone();
-            let ref_used =
-                c.allreduce(&mut d, &codec, policy).expect("in-process reference failed");
-            assert_eq!(ref_used, used, "backends resolved different algorithms");
+            match pp_ref {
+                Some(pp) => {
+                    let ref_plan = c
+                        .allreduce_planned(&mut d, &codec, pp)
+                        .expect("in-process reference failed");
+                    assert_eq!(Some(ref_plan), used_plan, "backends resolved different plans");
+                }
+                None => {
+                    let ref_used =
+                        c.allreduce(&mut d, &codec, policy).expect("in-process reference failed");
+                    assert_eq!(ref_used, used_algo, "backends resolved different algorithms");
+                }
+            }
             d
         });
         let expect = &reference[rank];
@@ -352,7 +521,7 @@ fn worker_rank(
             );
         }
         println!(
-            "[rank {rank}] {spec} {used} AllReduce (--algo {algo_str}) over TCP == InProc \
+            "[rank {rank}] {spec} [{used_label}] AllReduce over TCP == InProc \
              bit-for-bit ({len} elems)"
         );
     }

@@ -1,0 +1,238 @@
+//! The plan cache: compile once, replay allocation-free.
+//!
+//! [`compiler::compile`](super::compiler::compile) prices dozens of
+//! candidates (the pipelined ones build event-scheduler DAGs), which is
+//! far too much work to repeat on every AllReduce of a training step. The
+//! cache keys a compiled [`CommPlan`] by [`PlanKey`] — the topology
+//! *fingerprint* (a hash of every field the pricing reads), the payload
+//! element count, the base codec, and any pinned knobs — so the hot path
+//! compiles each distinct shape once and then replays it from a
+//! move-to-front LRU list with zero allocation (entries are `Copy`; the
+//! backing `Vec` never grows past its construction capacity).
+//!
+//! Hit/miss counters are public: tests pin "zero recompiles after
+//! warmup" by asserting the miss counter stays flat across repeated
+//! same-shape calls.
+
+use super::{CommPlan, PlanPins};
+use crate::quant::Codec;
+use crate::topo::Topology;
+
+/// What a compiled plan is keyed by. Two calls with equal keys are
+/// guaranteed the same plan (the compiler is a pure function of exactly
+/// these inputs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    /// [`Topology::fingerprint`] — covers every topology/spec field the
+    /// cost model reads, so equal fingerprints price identically.
+    pub topo_fingerprint: u64,
+    /// Payload length in f32 elements.
+    pub elems: usize,
+    /// The base codec (the caller's dtype budget the search refines).
+    pub base: Codec,
+    /// Pinned knobs constraining the search (`--chunks` / `--window`).
+    pub pins: PlanPins,
+}
+
+impl PlanKey {
+    pub fn new(topo: &Topology, elems: usize, base: &Codec, pins: PlanPins) -> PlanKey {
+        PlanKey { topo_fingerprint: topo.fingerprint(), elems, base: *base, pins }
+    }
+}
+
+/// Point-in-time cache counters (monotone over a cache's lifetime).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PlanCacheStats {
+    /// Lookups answered from the cache (no compile).
+    pub hits: u64,
+    /// Lookups that missed (each one cost a compile).
+    pub misses: u64,
+    /// Entries evicted to make room (capacity pressure indicator).
+    pub evictions: u64,
+}
+
+/// A fixed-capacity, move-to-front LRU of compiled plans.
+#[derive(Debug)]
+pub struct PlanCache {
+    /// Most-recently-used first. Linear scan: capacities are tiny (a
+    /// handful of live (topology, size, codec) shapes per job) and the
+    /// entries are `Copy`, so a scan beats a heap-allocating map.
+    entries: Vec<(PlanKey, CommPlan)>,
+    cap: usize,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+/// Default capacity for a communicator-owned cache: comfortably above the
+/// distinct (payload size × codec) shapes a training/serving loop cycles
+/// through, small enough that the linear scan is free.
+pub const DEFAULT_CAPACITY: usize = 16;
+
+impl Default for PlanCache {
+    fn default() -> Self {
+        PlanCache::new(DEFAULT_CAPACITY)
+    }
+}
+
+impl PlanCache {
+    /// A cache holding at most `cap >= 1` plans.
+    pub fn new(cap: usize) -> PlanCache {
+        let cap = cap.max(1);
+        PlanCache { entries: Vec::with_capacity(cap), cap, hits: 0, misses: 0, evictions: 0 }
+    }
+
+    /// Look `key` up, counting a hit (and refreshing its LRU position) or
+    /// a miss.
+    pub fn get(&mut self, key: &PlanKey) -> Option<CommPlan> {
+        match self.entries.iter().position(|(k, _)| k == key) {
+            Some(i) => {
+                self.hits += 1;
+                // Move-to-front without allocating.
+                self.entries[..=i].rotate_right(1);
+                Some(self.entries[0].1)
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert a freshly compiled plan at the front, evicting the
+    /// least-recently-used entry if at capacity. Inserting an existing key
+    /// refreshes its plan and position.
+    pub fn insert(&mut self, key: PlanKey, plan: CommPlan) {
+        if let Some(i) = self.entries.iter().position(|(k, _)| *k == key) {
+            self.entries[..=i].rotate_right(1);
+            self.entries[0] = (key, plan);
+            return;
+        }
+        if self.entries.len() == self.cap {
+            self.entries.pop();
+            self.evictions += 1;
+        }
+        // Insert at the back then rotate to the front: no reallocation
+        // once the Vec has reached capacity.
+        self.entries.push((key, plan));
+        self.entries.rotate_right(1);
+    }
+
+    /// The compiled plan for `key`, compiling via `compile` on a miss.
+    pub fn get_or_insert_with(
+        &mut self,
+        key: PlanKey,
+        compile: impl FnOnce() -> CommPlan,
+    ) -> CommPlan {
+        match self.get(&key) {
+            Some(p) => p,
+            None => {
+                let p = compile();
+                self.insert(key, p);
+                p
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn stats(&self) -> PlanCacheStats {
+        PlanCacheStats { hits: self.hits, misses: self.misses, evictions: self.evictions }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::Algo;
+    use crate::topo::presets;
+
+    fn key(elems: usize) -> PlanKey {
+        let topo = Topology::new(presets::l40(), 8);
+        PlanKey::new(&topo, elems, &Codec::parse("int4@32").unwrap(), PlanPins::default())
+    }
+
+    fn plan(algo: Algo) -> CommPlan {
+        CommPlan::uniform(algo, Codec::parse("int4@32").unwrap())
+    }
+
+    #[test]
+    fn hit_after_insert_miss_before() {
+        let mut c = PlanCache::new(4);
+        assert_eq!(c.get(&key(100)), None);
+        c.insert(key(100), plan(Algo::Hier));
+        assert_eq!(c.get(&key(100)), Some(plan(Algo::Hier)));
+        assert_eq!(c.get(&key(200)), None);
+        assert_eq!(c.stats(), PlanCacheStats { hits: 1, misses: 2, evictions: 0 });
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let mut c = PlanCache::new(2);
+        c.insert(key(1), plan(Algo::Hier));
+        c.insert(key(2), plan(Algo::TwoStep));
+        // Touch key(1) so key(2) is now the LRU victim.
+        assert!(c.get(&key(1)).is_some());
+        c.insert(key(3), plan(Algo::Ring));
+        assert_eq!(c.len(), 2);
+        assert!(c.get(&key(1)).is_some(), "recently used survives");
+        assert!(c.get(&key(2)).is_none(), "LRU victim evicted");
+        assert_eq!(c.stats().evictions, 1);
+    }
+
+    #[test]
+    fn reinserting_a_key_refreshes_not_duplicates() {
+        let mut c = PlanCache::new(4);
+        c.insert(key(1), plan(Algo::Hier));
+        c.insert(key(1), plan(Algo::TwoStep));
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.get(&key(1)), Some(plan(Algo::TwoStep)));
+    }
+
+    #[test]
+    fn capacity_never_grows_after_warmup() {
+        let mut c = PlanCache::new(3);
+        for i in 0..10 {
+            c.get_or_insert_with(key(i), || plan(Algo::Hier));
+        }
+        let cap = c.entries.capacity();
+        for i in 0..10 {
+            c.get_or_insert_with(key(i), || plan(Algo::TwoStep));
+        }
+        assert_eq!(c.entries.capacity(), cap, "hot path must not reallocate");
+        assert!(c.len() <= 3);
+    }
+
+    #[test]
+    fn distinct_pins_are_distinct_keys() {
+        let topo = Topology::new(presets::l40(), 8);
+        let base = Codec::parse("int4@32").unwrap();
+        let free = PlanKey::new(&topo, 100, &base, PlanPins::default());
+        let pinned =
+            PlanKey::new(&topo, 100, &base, PlanPins { chunks: Some(4), window: None });
+        assert_ne!(free, pinned);
+        let mut c = PlanCache::new(4);
+        c.insert(free, plan(Algo::Hier));
+        assert!(c.get(&pinned).is_none(), "pinned search must not reuse the free plan");
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_topologies() {
+        let base = Codec::parse("int8").unwrap();
+        let a = PlanKey::new(&Topology::new(presets::l40(), 8), 64, &base, PlanPins::default());
+        let b = PlanKey::new(&Topology::new(presets::h800(), 8), 64, &base, PlanPins::default());
+        let c4 = PlanKey::new(&presets::four_group_pcie(8).unwrap(), 64, &base, PlanPins::default());
+        assert_ne!(a, b);
+        assert_ne!(a, c4);
+        // Identical topologies fingerprint identically (cache hits across
+        // clones — the whole point of the key).
+        let a2 = PlanKey::new(&Topology::new(presets::l40(), 8), 64, &base, PlanPins::default());
+        assert_eq!(a, a2);
+    }
+}

@@ -1,0 +1,500 @@
+//! The communication plan compiler.
+//!
+//! FlashCommunication V2's wins come from software–hardware co-design:
+//! chunk granularity and quantization aggressiveness are tuned *per link
+//! tier* — the slow cross-group ring can afford a more aggressive codec
+//! than the fast intra-group stages (SDP4Bit mixes quantization across
+//! communication phases the same way), and the micro-chunk count that
+//! hides the inter-group hop is a cost-model question, not a constant.
+//!
+//! This module turns that tuning into a typed artifact:
+//!
+//! - [`CommPlan`] — everything the execution layer needs for one
+//!   AllReduce: the algorithm, a [`Codec`] per hierarchical stage
+//!   ([`StageCodecs`]: intra reduce-scatter / cross-group column ring /
+//!   intra all-gather), the micro-chunk count, the pipelined send window,
+//!   and the codec worker-thread budget.
+//! - [`compiler`] — searches the admissible plan space for a
+//!   `(Topology, element count, base codec)` triple and prices every
+//!   candidate with the calibrated simulator
+//!   ([`crate::sim::plan_time`]), deterministically: same inputs, same
+//!   plan, on every rank, with no coordination.
+//! - [`cache`] — an LRU [`PlanCache`](cache::PlanCache) keyed by
+//!   `(topology fingerprint, element count, base codec, pins)` so the hot
+//!   path compiles a plan once and then replays it allocation-free
+//!   (hit/miss counters are public — tests pin "zero recompiles after
+//!   warmup").
+//!
+//! [`PlanPolicy`] is how callers choose: `Fixed(CommPlan)` runs exactly
+//! one plan, `Auto` compiles per (topology, size, codec). The older
+//! [`crate::comm::AlgoPolicy`] survives as a thin shim — its
+//! `Fixed`/`Auto` arms now build *uniform* plans (one codec for every
+//! stage, default knobs) and run them through the same plan execution
+//! path, so there is exactly one collective driver in the system.
+//!
+//! ## Plan spec grammar (CLI `--plan`)
+//!
+//! ```text
+//! auto
+//! <algo>[:intra=<c>][:cross=<c>][:ag=<c>][:chunks=<K>][:window=<W>][:threads=<T>]
+//! ```
+//!
+//! `<algo>` is an [`Algo`] token (`ring|twostep|hier|hierpp`); codecs use
+//! the [`Codec::parse`] grammar. Unset stage codecs default to the call's
+//! base codec (`--codec`); `cross` and `ag` default to `intra`.
+//! `chunks`/`window` default to the pipelined constants
+//! ([`crate::comm::DEFAULT_CHUNKS`] / [`crate::comm::SEND_WINDOW`]) for
+//! `hierpp` and to 1 otherwise (and are *rejected* on algorithms that
+//! would ignore them); `threads` defaults to 0 = inherit the
+//! communicator's
+//! [`codec_threads`](crate::comm::Communicator::set_codec_threads).
+
+pub mod cache;
+pub mod compiler;
+
+use std::fmt;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::comm::{Algo, CommError, DEFAULT_CHUNKS, SEND_WINDOW};
+use crate::quant::Codec;
+use crate::topo::Topology;
+
+pub use cache::{PlanCache, PlanCacheStats, PlanKey};
+pub use compiler::{compile, compile_pinned, cross_codec_ladder, TIER_ASYMMETRY};
+
+/// The codec each stage of the hierarchical family runs. The stage
+/// boundaries are the *existing* QDQ boundaries (each stage re-encodes its
+/// freshly reduced f32 accumulator), so mixing codecs across stages keeps
+/// the 3-pass QDQ count — requantization costs nothing extra structurally.
+/// One-stage algorithms (ring, two-step) must be uniform.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct StageCodecs {
+    /// Stage 1: intra-group reduce-scatter over the fast fabric.
+    pub intra_rs: Codec,
+    /// Stage 2: the cross-group column ring over the (possibly much
+    /// slower) inter-group link — the stage that can afford aggression.
+    pub cross: Codec,
+    /// Stage 3: intra-group all-gather over the fast fabric.
+    pub intra_ag: Codec,
+}
+
+impl StageCodecs {
+    /// One codec for every stage (what every pre-plan collective ran).
+    pub fn uniform(codec: Codec) -> StageCodecs {
+        StageCodecs { intra_rs: codec, cross: codec, intra_ag: codec }
+    }
+
+    /// Base codec on the fast intra stages, `cross` on the slow ring.
+    pub fn with_cross(intra: Codec, cross: Codec) -> StageCodecs {
+        StageCodecs { intra_rs: intra, cross, intra_ag: intra }
+    }
+
+    pub fn is_uniform(&self) -> bool {
+        self.intra_rs == self.cross && self.cross == self.intra_ag
+    }
+
+    /// Structural validation of every stage codec ([`Codec::validate`]).
+    pub fn validate(&self) -> Result<()> {
+        for (stage, c) in [
+            ("intra-rs", &self.intra_rs),
+            ("cross", &self.cross),
+            ("intra-ag", &self.intra_ag),
+        ] {
+            c.validate().with_context(|| format!("{stage} stage codec {}", c.spec()))?;
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Display for StageCodecs {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.is_uniform() {
+            write!(f, "{}", self.intra_rs.spec())
+        } else {
+            write!(
+                f,
+                "{}/{}/{}",
+                self.intra_rs.spec(),
+                self.cross.spec(),
+                self.intra_ag.spec()
+            )
+        }
+    }
+}
+
+/// A compiled communication plan: one AllReduce, fully specified.
+///
+/// Construction: [`CommPlan::uniform`] (the [`crate::comm::AlgoPolicy`]
+/// shim shape), [`CommPlan::parse`] (the CLI `--plan` grammar), or
+/// [`compiler::compile`] (the cost-model search). [`CommPlan::validate`]
+/// is the admission check every execution entry point runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct CommPlan {
+    /// The AllReduce algorithm family.
+    pub algo: Algo,
+    /// Per-stage wire codecs (uniform for one-stage algorithms).
+    pub stage_codecs: StageCodecs,
+    /// Micro-chunk count ([`Algo::HierPipelined`] only; 1 otherwise).
+    pub chunks: usize,
+    /// In-flight intra-RS window in micro-chunks (pipelined only).
+    pub send_window: usize,
+    /// Codec worker threads; 0 = inherit the communicator's setting.
+    pub codec_threads: usize,
+}
+
+impl CommPlan {
+    /// The plan the [`crate::comm::AlgoPolicy`] shim runs: one codec
+    /// everywhere, the pre-plan constants for the knobs.
+    pub fn uniform(algo: Algo, codec: Codec) -> CommPlan {
+        let (chunks, send_window) = match algo {
+            Algo::HierPipelined => (DEFAULT_CHUNKS, SEND_WINDOW),
+            _ => (1, 1),
+        };
+        CommPlan {
+            algo,
+            stage_codecs: StageCodecs::uniform(codec),
+            chunks,
+            send_window,
+            codec_threads: 0,
+        }
+    }
+
+    /// Parse the `--plan` spec grammar (module docs) against the call's
+    /// base codec (unset stage codecs default to it).
+    pub fn parse(spec: &str, base: &Codec) -> Result<CommPlan> {
+        let mut parts = spec.split(':');
+        let algo: Algo = parts
+            .next()
+            .unwrap_or_default()
+            .parse()
+            .with_context(|| format!("plan spec '{spec}'"))?;
+        let mut intra: Option<Codec> = None;
+        let mut cross: Option<Codec> = None;
+        let mut ag: Option<Codec> = None;
+        let mut chunks: Option<usize> = None;
+        let mut window: Option<usize> = None;
+        let mut threads: Option<usize> = None;
+        for part in parts {
+            let Some((key, value)) = part.split_once('=') else {
+                bail!("plan spec '{spec}': expected key=value, got '{part}'");
+            };
+            match key {
+                "intra" => intra = Some(Codec::parse(value)?),
+                "cross" => cross = Some(Codec::parse(value)?),
+                "ag" => ag = Some(Codec::parse(value)?),
+                "chunks" => {
+                    chunks = Some(value.parse().with_context(|| format!("chunks={value}"))?)
+                }
+                "window" => {
+                    window = Some(value.parse().with_context(|| format!("window={value}"))?)
+                }
+                "threads" => {
+                    threads = Some(value.parse().with_context(|| format!("threads={value}"))?)
+                }
+                other => bail!(
+                    "plan spec '{spec}': unknown key '{other}' \
+                     (expected intra|cross|ag|chunks|window|threads)"
+                ),
+            }
+        }
+        let intra = intra.unwrap_or(*base);
+        let defaults = CommPlan::uniform(algo, intra);
+        let plan = CommPlan {
+            algo,
+            stage_codecs: StageCodecs {
+                intra_rs: intra,
+                cross: cross.unwrap_or(intra),
+                intra_ag: ag.unwrap_or(intra),
+            },
+            chunks: chunks.unwrap_or(defaults.chunks),
+            send_window: window.unwrap_or(defaults.send_window),
+            codec_threads: threads.unwrap_or(0),
+        };
+        plan.validate_shape().with_context(|| format!("plan spec '{spec}'"))?;
+        Ok(plan)
+    }
+
+    /// Topology-independent structural checks: stage codecs valid, knobs
+    /// sane (`chunks >= 1`, `window >= 1`), one-stage algorithms uniform,
+    /// and chunking knobs only on the algorithm that reads them — a knob
+    /// the execution layer would silently ignore is an error, not a no-op.
+    pub fn validate_shape(&self) -> Result<()> {
+        self.stage_codecs.validate()?;
+        ensure!(self.chunks >= 1, "a plan needs chunks >= 1 (chunks == 0 chunks nothing)");
+        ensure!(self.send_window >= 1, "a plan needs window >= 1 (a zero window never sends)");
+        if matches!(self.algo, Algo::Ring | Algo::TwoStep) {
+            ensure!(
+                self.stage_codecs.is_uniform(),
+                "{} has no cross-group stage: per-stage codecs {} would silently not apply \
+                 (use hier/hierpp for mixed-stage plans)",
+                self.algo,
+                self.stage_codecs
+            );
+        }
+        if !matches!(self.algo, Algo::HierPipelined) {
+            ensure!(
+                self.chunks == 1 && self.send_window == 1,
+                "chunks/window are pipelined knobs: {} runs unchunked, so chunks={} \
+                 window={} would be silently ignored (use hierpp)",
+                self.algo,
+                self.chunks,
+                self.send_window
+            );
+        }
+        Ok(())
+    }
+
+    /// Full admission check: structural shape plus [`Algo::admissible`]
+    /// on `topo`. Every plan execution entry point runs this.
+    pub fn validate(&self, topo: &Topology) -> Result<(), CommError> {
+        self.validate_shape().map_err(|e| CommError::Shape { detail: format!("{e:#}") })?;
+        self.algo.admissible(topo)
+    }
+
+    /// The single codec of a uniform plan — what the one-stage
+    /// collectives (reduce-scatter / all-gather / broadcast / all2all)
+    /// run. Mixed-stage plans are an error there: those collectives have
+    /// no cross-group stage, so a distinct `cross` codec would silently
+    /// not apply.
+    pub fn uniform_codec(&self) -> Result<Codec> {
+        ensure!(
+            self.stage_codecs.is_uniform(),
+            "a one-stage collective takes a uniform plan; per-stage codecs {} only apply \
+             to the hierarchical AllReduce",
+            self.stage_codecs
+        );
+        Ok(self.stage_codecs.intra_rs)
+    }
+
+    /// Is the cross-stage codec at least as aggressive (no more wire
+    /// bytes per value, asymptotically) as the intra stages? True for
+    /// every compiler-produced plan; fixed plans may do anything valid.
+    pub fn cross_no_less_aggressive(&self) -> bool {
+        self.stage_codecs.cross.asymptotic_wire_ratio()
+            <= self.stage_codecs.intra_rs.asymptotic_wire_ratio() + 1e-12
+    }
+}
+
+impl fmt::Display for CommPlan {
+    /// Canonical, re-parseable spec (given the same base codec).
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:intra={}:cross={}",
+            self.algo.token(),
+            self.stage_codecs.intra_rs.spec(),
+            self.stage_codecs.cross.spec()
+        )?;
+        if self.stage_codecs.intra_ag != self.stage_codecs.intra_rs {
+            write!(f, ":ag={}", self.stage_codecs.intra_ag.spec())?;
+        }
+        if matches!(self.algo, Algo::HierPipelined) {
+            write!(f, ":chunks={}:window={}", self.chunks, self.send_window)?;
+        }
+        if self.codec_threads != 0 {
+            write!(f, ":threads={}", self.codec_threads)?;
+        }
+        Ok(())
+    }
+}
+
+/// Pinned plan knobs (the CLI's `--chunks` / `--window`): constrain the
+/// `Auto` search instead of being overwritten by it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct PlanPins {
+    /// Pin the micro-chunk count (`Some(0)` is rejected at parse time).
+    pub chunks: Option<usize>,
+    /// Pin the pipelined send window (`Some(0)` rejected at parse time).
+    pub window: Option<usize>,
+}
+
+impl PlanPins {
+    pub fn is_empty(&self) -> bool {
+        self.chunks.is_none() && self.window.is_none()
+    }
+
+    /// Validate pinned values (`--chunks 0` / `--window 0` are errors,
+    /// never silently coerced).
+    pub fn validate(&self) -> Result<()> {
+        if let Some(c) = self.chunks {
+            ensure!(c >= 1, "--chunks must be >= 1 (got {c})");
+        }
+        if let Some(w) = self.window {
+            ensure!(w >= 1, "--window must be >= 1 (got {w})");
+        }
+        Ok(())
+    }
+
+    /// Apply the pins to an already-built plan (the `Fixed` path — the
+    /// `Auto` path feeds them into the search via
+    /// [`compiler::compile_pinned`] instead).
+    pub fn apply(&self, mut plan: CommPlan) -> CommPlan {
+        if let Some(c) = self.chunks {
+            plan.chunks = c;
+        }
+        if let Some(w) = self.window {
+            plan.send_window = w;
+        }
+        plan
+    }
+}
+
+/// How a communicator picks the plan for an AllReduce call. Subsumes
+/// [`crate::comm::AlgoPolicy`] (now a thin shim building uniform plans):
+/// `Fixed` runs exactly one [`CommPlan`], `Auto` compiles per (topology,
+/// payload size, base codec) through the plan cache.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PlanPolicy {
+    /// Always run this plan (error if the topology cannot host it).
+    Fixed(CommPlan),
+    /// Compile per call: search the admissible plan space (algorithm ×
+    /// cross-stage codec ladder × chunk count), priced by the calibrated
+    /// cost model, honoring any pinned knobs. Deterministic — a pure
+    /// function of (topology, element count, base codec, pins) — and
+    /// cached, so every rank of a job lands on the same plan without
+    /// coordination and the hot path compiles once.
+    Auto(PlanPins),
+}
+
+impl PlanPolicy {
+    /// `Auto` with no pinned knobs (what `--plan auto` parses to).
+    pub fn auto() -> PlanPolicy {
+        PlanPolicy::Auto(PlanPins::default())
+    }
+
+    /// The [`AlgoPolicy`](crate::comm::AlgoPolicy)-shaped hint used to
+    /// pick a rank-group preset topology for this policy (see
+    /// [`preset_topo_grouped`](crate::comm::preset_topo_grouped)).
+    pub fn algo_hint(&self) -> crate::comm::AlgoPolicy {
+        match self {
+            PlanPolicy::Fixed(p) => crate::comm::AlgoPolicy::Fixed(p.algo),
+            PlanPolicy::Auto(_) => crate::comm::AlgoPolicy::Auto,
+        }
+    }
+}
+
+impl fmt::Display for PlanPolicy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PlanPolicy::Fixed(p) => write!(f, "{p}"),
+            PlanPolicy::Auto(_) => f.write_str("auto"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topo::presets;
+
+    fn c(s: &str) -> Codec {
+        Codec::parse(s).unwrap()
+    }
+
+    #[test]
+    fn uniform_plan_matches_preplan_constants() {
+        let p = CommPlan::uniform(Algo::HierPipelined, c("int4@32"));
+        assert_eq!((p.chunks, p.send_window), (DEFAULT_CHUNKS, SEND_WINDOW));
+        assert!(p.stage_codecs.is_uniform());
+        assert_eq!(p.codec_threads, 0, "uniform plans inherit the communicator's threads");
+        let p = CommPlan::uniform(Algo::TwoStep, c("int8"));
+        assert_eq!((p.chunks, p.send_window), (1, 1));
+    }
+
+    #[test]
+    fn spec_grammar_roundtrips() {
+        let base = c("int4@32");
+        let p = CommPlan::parse("hier:cross=int2-sr@32!", &base).unwrap();
+        assert_eq!(p.algo, Algo::Hier);
+        assert_eq!(p.stage_codecs.intra_rs, base);
+        assert_eq!(p.stage_codecs.cross, c("int2-sr@32!"));
+        assert_eq!(p.stage_codecs.intra_ag, base);
+        assert!(!p.stage_codecs.is_uniform());
+
+        let p = CommPlan::parse("hierpp:intra=int8:cross=int4@32:chunks=4:window=3", &base)
+            .unwrap();
+        assert_eq!(p.stage_codecs.intra_rs, c("int8"));
+        assert_eq!(p.stage_codecs.intra_ag, c("int8"), "ag defaults to intra");
+        assert_eq!((p.chunks, p.send_window), (4, 3));
+        // Display is canonical and re-parses to the same plan.
+        let again = CommPlan::parse(&p.to_string(), &base).unwrap();
+        assert_eq!(again, p);
+
+        // An explicit ag codec parses, executes as its own stage, and
+        // survives the Display roundtrip.
+        let p = CommPlan::parse("hier:cross=int2-sr@32!:ag=int8", &base).unwrap();
+        assert_eq!(p.stage_codecs.intra_rs, base);
+        assert_eq!(p.stage_codecs.intra_ag, c("int8"));
+        assert_eq!(CommPlan::parse(&p.to_string(), &base).unwrap(), p);
+
+        // Bare algorithm = the uniform shim plan.
+        assert_eq!(CommPlan::parse("twostep", &base).unwrap(), CommPlan::uniform(Algo::TwoStep, base));
+    }
+
+    #[test]
+    fn hostile_specs_rejected() {
+        let base = c("int8");
+        assert!(CommPlan::parse("warp", &base).is_err(), "unknown algo");
+        assert!(CommPlan::parse("hier:speed=11", &base).is_err(), "unknown key");
+        assert!(CommPlan::parse("hierpp:chunks=0", &base).is_err(), "zero chunks");
+        assert!(CommPlan::parse("hierpp:window=0", &base).is_err(), "zero window");
+        assert!(CommPlan::parse("hier:cross", &base).is_err(), "missing value");
+        assert!(CommPlan::parse("hier:cross=int2-sr@300", &base).is_err(), "invalid codec");
+        // One-stage algorithms cannot carry a different cross codec.
+        let e = CommPlan::parse("twostep:cross=int4@32", &base).unwrap_err();
+        assert!(format!("{e:#}").contains("no cross-group stage"), "{e:#}");
+        // Chunking knobs on an algorithm that ignores them are errors,
+        // never silent no-ops.
+        for spec in ["hier:chunks=8", "hier:window=4", "twostep:chunks=2", "ring:window=3"] {
+            let e = CommPlan::parse(spec, &c("bf16")).unwrap_err();
+            assert!(format!("{e:#}").contains("pipelined knobs"), "{spec}: {e:#}");
+        }
+    }
+
+    #[test]
+    fn validate_checks_topology_admissibility() {
+        let flat = Topology::new(presets::h800(), 8);
+        let numa = Topology::new(presets::l40(), 8);
+        let plan = CommPlan::uniform(Algo::Hier, c("int8"));
+        assert!(plan.validate(&numa).is_ok());
+        let e = plan.validate(&flat).unwrap_err();
+        assert!(matches!(e, CommError::Topology { algo: Algo::Hier, .. }), "{e}");
+        // A structurally bad plan fails before topology checks.
+        let bad = CommPlan { chunks: 0, ..CommPlan::uniform(Algo::Hier, c("int8")) };
+        assert!(matches!(bad.validate(&numa).unwrap_err(), CommError::Shape { .. }));
+    }
+
+    #[test]
+    fn pins_validate_and_apply() {
+        assert!(PlanPins { chunks: Some(0), window: None }.validate().is_err());
+        assert!(PlanPins { chunks: None, window: Some(0) }.validate().is_err());
+        let pins = PlanPins { chunks: Some(5), window: Some(4) };
+        pins.validate().unwrap();
+        let p = pins.apply(CommPlan::uniform(Algo::HierPipelined, c("int8")));
+        assert_eq!((p.chunks, p.send_window), (5, 4));
+        assert!(PlanPins::default().is_empty());
+    }
+
+    #[test]
+    fn aggressiveness_ordering() {
+        let mixed = CommPlan {
+            stage_codecs: StageCodecs::with_cross(c("int4@32"), c("int2-sr@32!")),
+            ..CommPlan::uniform(Algo::Hier, c("int4@32"))
+        };
+        assert!(mixed.cross_no_less_aggressive());
+        let inverted = CommPlan {
+            stage_codecs: StageCodecs::with_cross(c("int2-sr@32!"), c("int8")),
+            ..CommPlan::uniform(Algo::Hier, c("int2-sr@32!"))
+        };
+        assert!(!inverted.cross_no_less_aggressive());
+        assert!(CommPlan::uniform(Algo::Hier, c("int8")).cross_no_less_aggressive());
+    }
+
+    #[test]
+    fn display_names_stage_codecs() {
+        let mixed = StageCodecs::with_cross(c("int4@32"), c("int2-sr@32!"));
+        assert_eq!(mixed.to_string(), "int4@32/int2-sr@32!/int4@32");
+        assert_eq!(StageCodecs::uniform(c("bf16")).to_string(), "bf16");
+    }
+}

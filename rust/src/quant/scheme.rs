@@ -165,6 +165,34 @@ impl Codec {
         Ok(())
     }
 
+    /// The parseable spec token for this codec — the inverse of
+    /// [`Codec::parse`]: `Codec::parse(&c.spec()).unwrap() == c`. Used by
+    /// the plan layer to display and round-trip per-stage codecs.
+    pub fn spec(&self) -> String {
+        let bang = |m: ScaleMode| if m == ScaleMode::IntLog { "!" } else { "" };
+        match *self {
+            Codec::Bf16 => "bf16".into(),
+            Codec::Rtn { bits, group_size, scale_mode } => {
+                format!("int{bits}@{group_size}{}", bang(scale_mode))
+            }
+            Codec::Spike { bits, group_size, scale_mode } => {
+                format!("int{bits}-sr@{group_size}{}", bang(scale_mode))
+            }
+            Codec::Hadamard { bits, group_size } => format!("int{bits}-had@{group_size}"),
+            Codec::LogFmt { bits, group_size } => format!("int{bits}-log@{group_size}"),
+        }
+    }
+
+    /// Wire bytes per value relative to BF16 in the large-payload limit
+    /// (the per-message header amortized away). This is the
+    /// "aggressiveness" total order the plan compiler uses: codec A is at
+    /// least as aggressive as B iff `A.asymptotic_wire_ratio() <=
+    /// B.asymptotic_wire_ratio()`.
+    pub fn asymptotic_wire_ratio(&self) -> f64 {
+        const N: usize = 1 << 20;
+        (self.wire_len(N) - HEADER_LEN) as f64 / (2.0 * N as f64)
+    }
+
     /// Paper-style display name (`INT2_SR`, `INT5`, `BF16`, …).
     pub fn name(&self) -> String {
         match *self {
@@ -476,6 +504,32 @@ mod tests {
         assert_eq!(Codec::parse("int2-sr@32").unwrap().name(), "INT2_SR");
         assert!(Codec::parse("int9").is_err());
         assert!(Codec::parse("float7").is_err());
+    }
+
+    #[test]
+    fn spec_roundtrips_through_parse() {
+        for spec in ALL {
+            let c = Codec::parse(spec).unwrap();
+            assert_eq!(Codec::parse(&c.spec()).unwrap(), c, "{spec} -> {}", c.spec());
+        }
+        assert_eq!(Codec::Bf16.spec(), "bf16");
+        assert_eq!(Codec::parse("int2-sr@32!").unwrap().spec(), "int2-sr@32!");
+    }
+
+    #[test]
+    fn asymptotic_ratio_orders_aggressiveness() {
+        let mut prev = f64::INFINITY;
+        for spec in ["bf16", "int8", "int5", "int4", "int3", "int2"] {
+            let r = Codec::parse(spec).unwrap().asymptotic_wire_ratio();
+            assert!(r < prev, "{spec} {r} !< {prev}");
+            prev = r;
+        }
+        assert!((Codec::Bf16.asymptotic_wire_ratio() - 1.0).abs() < 1e-9);
+        // The compiler's canonical mixed pair: int2-sr@32! at least as
+        // aggressive as int4@32.
+        let sr = Codec::parse("int2-sr@32!").unwrap().asymptotic_wire_ratio();
+        let i4 = Codec::parse("int4@32").unwrap().asymptotic_wire_ratio();
+        assert!(sr < i4, "{sr} vs {i4}");
     }
 
     #[test]

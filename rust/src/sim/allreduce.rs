@@ -13,6 +13,7 @@
 use super::cost::{codec_cost, pass_time};
 use super::events::{schedule, serial_makespan, Task};
 use super::volume::Algo;
+use crate::plan::{CommPlan, StageCodecs};
 use crate::quant::Codec;
 use crate::topo::{Interconnect, Topology};
 
@@ -122,6 +123,35 @@ pub fn allreduce_time(topo: &Topology, algo: Algo, codec: &Codec, m_bytes: f64) 
     }
 }
 
+/// Time a full [`CommPlan`]: the pricing primitive of the plan compiler.
+///
+/// One-stage algorithms price through [`allreduce_time`] with the plan's
+/// (uniform) codec; the hierarchical family prices each stage with *its*
+/// codec ([`hier_stage_times_staged`]) — the pipelined variant builds the
+/// micro-chunk DAG with the plan's own chunk count instead of the
+/// size-adaptive default. A uniform plan with the default knobs prices
+/// identically to `allreduce_time` for ring/twostep/hier (hierpp differs
+/// only in the chunk count, which the plan makes explicit).
+pub fn plan_time(topo: &Topology, plan: &CommPlan, m_bytes: f64) -> TimeBreakdown {
+    match plan.algo {
+        Algo::Ring | Algo::TwoStep => {
+            allreduce_time(topo, plan.algo, &plan.stage_codecs.intra_rs, m_bytes)
+        }
+        Algo::Hier => {
+            let b = hier_stage_times_staged(topo, &plan.stage_codecs, m_bytes);
+            let cross_hops = (topo.numa_groups.max(2) - 1) as f64;
+            TimeBreakdown {
+                transfer_s: b.rs_intra + b.cross + b.ag_intra,
+                qdq_s: b.qdq_total,
+                latency_s: (2.0 + cross_hops) * topo.spec.stage_latency_s,
+            }
+        }
+        Algo::HierPipelined => {
+            hier_pipelined_time_staged(topo, &plan.stage_codecs, m_bytes, plan.chunks.max(1))
+        }
+    }
+}
+
 /// Per-stage transfer times of the hierarchical algorithm (Figs. 6–7).
 #[derive(Debug, Clone, Copy)]
 pub struct HierStages {
@@ -132,33 +162,56 @@ pub struct HierStages {
 }
 
 pub fn hier_stage_times(topo: &Topology, codec: &Codec, m_bytes: f64) -> HierStages {
+    hier_stage_times_staged(topo, &StageCodecs::uniform(*codec), m_bytes)
+}
+
+/// [`hier_stage_times`] generalized to a codec per stage (the plan
+/// compiler's pricing primitive): each stage's transfer volume is
+/// compressed by *its* codec's wire ratio, and the QDQ pass accounting is
+/// attributed per stage — stage 1 encodes/decode-sums with `intra_rs`,
+/// the column ring encodes its M/s partial and decode-sums the G−1
+/// remote images with `cross`, stage 3 encodes/decodes with `intra_ag`.
+/// With a uniform `StageCodecs` this reproduces the calibrated uniform
+/// accounting term for term.
+pub fn hier_stage_times_staged(
+    topo: &Topology,
+    stages: &StageCodecs,
+    m_bytes: f64,
+) -> HierStages {
     let spec = &topo.spec;
     let groups = topo.numa_groups;
     let s = topo.group_size() as f64;
     let elems = m_bytes / 2.0;
-    let ratio = codec.compression_ratio(elems as usize);
-    let cost = codec_cost(codec);
+    let ratio_rs = stages.intra_rs.compression_ratio(elems as usize);
+    let ratio_x = stages.cross.compression_ratio(elems as usize);
+    let ratio_ag = stages.intra_ag.compression_ratio(elems as usize);
+    let cost_rs = codec_cost(&stages.intra_rs);
+    let cost_x = codec_cost(&stages.cross);
+    let cost_ag = codec_cost(&stages.intra_ag);
     // Intra-group RS: every rank sends (s-1)/s of its payload over the
     // fast fabric.
-    let rs_intra = (s - 1.0) / s * m_bytes * ratio / spec.intra_bw();
+    let rs_intra = (s - 1.0) / s * m_bytes * ratio_rs / spec.intra_bw();
     // Cross-group leader ring: each adjacent link carries (G−1)·M (paper
     // accounting: M at G=2). An inadmissible (flat) topology prices to
     // +inf instead of panicking — Auto never asks, but nothing downstream
     // may crash on hostile shapes.
     let cross_vol = super::volume::cross_numa_volume(Algo::Hier, topo.n_gpus, groups, m_bytes);
     let cross = match topo.inter_bw() {
-        Some(bw) => cross_vol * ratio / bw,
+        Some(bw) => cross_vol * ratio_x / bw,
         None => f64::INFINITY,
     };
-    // Intra-group AG mirrors the RS volume.
-    let ag_intra = rs_intra;
-    // QDQ: encode M + M/s + M/s; decode(+reduce) (s-1)/s·M plus the G−1
-    // ring images of M/s; decode AG. (G = 2 reproduces the calibrated
-    // two-group accounting exactly.)
-    let enc = elems * (1.0 + 2.0 / s) * cost.encode_passes;
+    // Intra-group AG mirrors the RS volume at its own codec's ratio.
+    let ag_intra = (s - 1.0) / s * m_bytes * ratio_ag / spec.intra_bw();
+    // QDQ, attributed per stage (uniform codecs sum to the calibrated
+    // "encode M + M/s + M/s; decode(+reduce) (s-1)/s·M + (G−1)·M/s;
+    // decode AG" accounting):
     let gm1 = (groups.max(2) - 1) as f64;
-    let dec_red = elems * ((s - 1.0) / s + gm1 / s) * (cost.decode_passes + cost.reduce_passes);
-    let dec = elems * (s - 1.0) / s * cost.decode_passes;
+    let enc = elems * cost_rs.encode_passes
+        + elems / s * cost_x.encode_passes
+        + elems / s * cost_ag.encode_passes;
+    let dec_red = elems * (s - 1.0) / s * (cost_rs.decode_passes + cost_rs.reduce_passes)
+        + elems * gm1 / s * (cost_x.decode_passes + cost_x.reduce_passes);
+    let dec = elems * (s - 1.0) / s * cost_ag.decode_passes;
     let qdq_total = pass_time(spec, 1.0, enc + dec_red + dec);
     HierStages { rs_intra, cross, ag_intra, qdq_total }
 }
@@ -168,7 +221,17 @@ pub fn hier_stage_times(topo: &Topology, codec: &Codec, m_bytes: f64) -> HierSta
 /// Resources: 0 = PCIe bus, 1 = NUMA bridge, 2 = comm SMs (QDQ). Each
 /// chunk flows RS→X→AG with QDQ overlapped on the compute resource.
 pub fn hier_pipeline_tasks(topo: &Topology, codec: &Codec, m_bytes: f64, chunks: usize) -> Vec<Task> {
-    let st = hier_stage_times(topo, codec, m_bytes);
+    hier_pipeline_tasks_staged(topo, &StageCodecs::uniform(*codec), m_bytes, chunks)
+}
+
+/// [`hier_pipeline_tasks`] over per-stage codecs (plan pricing).
+pub fn hier_pipeline_tasks_staged(
+    topo: &Topology,
+    stages: &StageCodecs,
+    m_bytes: f64,
+    chunks: usize,
+) -> Vec<Task> {
+    let st = hier_stage_times_staged(topo, stages, m_bytes);
     let k = chunks.max(1) as f64;
     let lat = topo.spec.stage_latency_s; // per-chunk kernel-launch overhead
     let qdq_share = st.qdq_total / (3.0 * k); // spread over stages & chunks
@@ -210,9 +273,18 @@ pub fn hier_pipeline_tasks(topo: &Topology, codec: &Codec, m_bytes: f64, chunks:
 }
 
 fn hier_pipelined_time(topo: &Topology, codec: &Codec, m_bytes: f64, chunks: usize) -> TimeBreakdown {
-    let tasks = hier_pipeline_tasks(topo, codec, m_bytes, chunks);
+    hier_pipelined_time_staged(topo, &StageCodecs::uniform(*codec), m_bytes, chunks)
+}
+
+fn hier_pipelined_time_staged(
+    topo: &Topology,
+    stages: &StageCodecs,
+    m_bytes: f64,
+    chunks: usize,
+) -> TimeBreakdown {
+    let tasks = hier_pipeline_tasks_staged(topo, stages, m_bytes, chunks);
     let sched = schedule(&tasks, 3);
-    let st = hier_stage_times(topo, codec, m_bytes);
+    let st = hier_stage_times_staged(topo, stages, m_bytes);
     // Attribute the overlapped makespan: report transfer as the makespan
     // minus the (unoverlappable) QDQ remainder so the breakdown still sums.
     let lat = (2 + chunks) as f64 * topo.spec.stage_latency_s * 0.5;
@@ -364,6 +436,99 @@ mod tests {
         // selected, never a panic).
         let flat = Topology::new(presets::h800(), 8);
         assert!(hier_stage_times(&flat, &c4, M).cross.is_infinite());
+    }
+
+    #[test]
+    fn staged_pricing_uniform_matches_legacy_accounting() {
+        // The staged decomposition must reproduce the pre-plan calibrated
+        // uniform formulas (same terms, regrouped — agreement to
+        // rounding). The legacy closed form is kept inline here as the
+        // golden reference.
+        for topo in [
+            Topology::new(presets::l40(), 8),
+            presets::four_group_pcie(8).unwrap(),
+            presets::dual_nvlink_node(16).unwrap(),
+        ] {
+            for spec in ["bf16", "int8", "int4@32", "int2-sr@32!"] {
+                let codec = c(spec);
+                let st = hier_stage_times(&topo, &codec, M);
+
+                let sp = &topo.spec;
+                let s = topo.group_size() as f64;
+                let elems = M / 2.0;
+                let ratio = codec.compression_ratio(elems as usize);
+                let cost = crate::sim::cost::codec_cost(&codec);
+                let rs = (s - 1.0) / s * M * ratio / sp.intra_bw();
+                let cross_vol = crate::sim::volume::cross_numa_volume(
+                    Algo::Hier,
+                    topo.n_gpus,
+                    topo.numa_groups,
+                    M,
+                );
+                let cross = cross_vol * ratio / topo.inter_bw().unwrap();
+                let enc = elems * (1.0 + 2.0 / s) * cost.encode_passes;
+                let gm1 = (topo.numa_groups.max(2) - 1) as f64;
+                let dec_red = elems * ((s - 1.0) / s + gm1 / s)
+                    * (cost.decode_passes + cost.reduce_passes);
+                let dec = elems * (s - 1.0) / s * cost.decode_passes;
+                let qdq = crate::sim::cost::pass_time(sp, 1.0, enc + dec_red + dec);
+
+                assert_eq!(st.rs_intra, rs, "{spec}");
+                assert_eq!(st.cross, cross, "{spec}");
+                assert_eq!(st.ag_intra, rs, "{spec}");
+                let rel = (st.qdq_total - qdq).abs() / qdq;
+                assert!(rel < 1e-12, "{spec}: qdq {} vs legacy {qdq}", st.qdq_total);
+            }
+        }
+    }
+
+    #[test]
+    fn aggressive_cross_codec_cuts_the_slow_link_time() {
+        // On the dual-NVLink cluster the 25 GB/s inter-node ring dominates;
+        // an int2-sr cross stage under an int4 budget must shrink `cross`
+        // in proportion to the wire ratios while leaving the intra stages
+        // untouched — and win end-to-end despite its extra QDQ passes.
+        let duo = presets::dual_nvlink_node(8).unwrap();
+        let base = c("int4@32");
+        let uni = crate::plan::StageCodecs::uniform(base);
+        let mixed = crate::plan::StageCodecs::with_cross(base, c("int2-sr@32!"));
+        let tu = hier_stage_times_staged(&duo, &uni, M);
+        let tm = hier_stage_times_staged(&duo, &mixed, M);
+        assert_eq!(tu.rs_intra, tm.rs_intra);
+        assert_eq!(tu.ag_intra, tm.ag_intra);
+        assert!(tm.cross < tu.cross, "{} vs {}", tm.cross, tu.cross);
+        assert!(tm.qdq_total > tu.qdq_total, "SR costs more QDQ passes");
+        let plan_u = crate::plan::CommPlan {
+            algo: Algo::Hier,
+            stage_codecs: uni,
+            chunks: 1,
+            send_window: 1,
+            codec_threads: 0,
+        };
+        let plan_m = crate::plan::CommPlan { stage_codecs: mixed, ..plan_u };
+        assert!(
+            plan_time(&duo, &plan_m, M).total() < plan_time(&duo, &plan_u, M).total(),
+            "mixed must price faster on the asymmetric cluster"
+        );
+    }
+
+    #[test]
+    fn plan_time_matches_allreduce_time_for_uniform_defaults() {
+        let l40 = Topology::new(presets::l40(), 8);
+        let duo = presets::dual_nvlink_node(8).unwrap();
+        for topo in [&l40, &duo] {
+            for (algo, spec) in [
+                (Algo::Ring, "bf16"),
+                (Algo::TwoStep, "int8"),
+                (Algo::Hier, "int4@32"),
+            ] {
+                let codec = c(spec);
+                let plan = crate::plan::CommPlan::uniform(algo, codec);
+                let a = plan_time(topo, &plan, M).total();
+                let b = allreduce_time(topo, algo, &codec, M).total();
+                assert!((a - b).abs() <= b * 1e-12, "{algo:?} {spec}: {a} vs {b}");
+            }
+        }
     }
 
     #[test]

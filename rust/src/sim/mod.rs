@@ -13,7 +13,7 @@ pub mod cost;
 pub mod events;
 pub mod volume;
 
-pub use allreduce::{algbw_gbps, allreduce_time, TimeBreakdown};
+pub use allreduce::{algbw_gbps, allreduce_time, plan_time, TimeBreakdown};
 /// Re-export of [`crate::comm::Algo`] — the enum's home is the collective
 /// layer; the simulator prices its algorithms.
 pub use volume::Algo;

@@ -257,6 +257,34 @@ impl Topology {
         let s = self.group_size();
         g * s..(g + 1) * s
     }
+
+    /// FNV-1a fingerprint of every field the cost model prices: the spec's
+    /// name and calibration constants (bandwidths, latency, QDQ pass rate,
+    /// protocol efficiencies) plus the shape (`n_gpus`, `numa_groups`,
+    /// inter-group bandwidth). Equal fingerprints price identically, which
+    /// is what lets the plan cache key on this `u64` instead of cloning
+    /// the whole topology.
+    pub fn fingerprint(&self) -> u64 {
+        const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+        const FNV_PRIME: u64 = 0x100000001b3;
+        let mut h = FNV_OFFSET;
+        let mut eat = |bytes: &[u8]| {
+            for &b in bytes {
+                h ^= b as u64;
+                h = h.wrapping_mul(FNV_PRIME);
+            }
+        };
+        eat(self.spec.name.as_bytes());
+        eat(&(self.n_gpus as u64).to_le_bytes());
+        eat(&(self.numa_groups as u64).to_le_bytes());
+        eat(&self.inter_group_bw.unwrap_or(-1.0).to_bits().to_le_bytes());
+        eat(&self.spec.intra_bw().to_bits().to_le_bytes());
+        eat(&self.spec.stage_latency_s.to_bits().to_le_bytes());
+        eat(&self.spec.qdq_pass_rate.to_bits().to_le_bytes());
+        eat(&self.spec.ring_eff.to_bits().to_le_bytes());
+        eat(&self.spec.a2a_eff.to_bits().to_le_bytes());
+        h
+    }
 }
 
 #[cfg(test)]
@@ -366,6 +394,24 @@ mod tests {
         assert_eq!(t.group_size(), 1);
         assert_eq!(t.group_members(2), 2..3);
         assert_eq!(t.peer_in_group(2, 0), 0);
+    }
+
+    #[test]
+    fn fingerprint_separates_priced_shapes() {
+        let l40 = Topology::new(l40(), 8);
+        assert_eq!(l40.fingerprint(), Topology::new(super::presets::l40(), 8).fingerprint());
+        assert_eq!(l40.fingerprint(), l40.clone().fingerprint());
+        let mut seen = std::collections::HashSet::new();
+        for t in [
+            l40.clone(),
+            Topology::new(h800(), 8),
+            Topology::new(h800(), 16),
+            Topology::with_groups(super::presets::l40(), 8, 4),
+            Topology::try_custom(h800(), 8, 2, Some(25e9)).unwrap(),
+            Topology::try_custom(h800(), 8, 2, Some(50e9)).unwrap(),
+        ] {
+            assert!(seen.insert(t.fingerprint()), "collision for {}x{}", t.spec.name, t.numa_groups);
+        }
     }
 
     #[test]

@@ -25,7 +25,7 @@
 //! the data plane is exclusively framed binary. See `DESIGN.md` §4.
 
 use std::io::{BufRead, BufReader, Read, Write};
-use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::net::{IpAddr, Ipv4Addr, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicU32, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
@@ -43,6 +43,9 @@ const BOOTSTRAP_TIMEOUT: Duration = Duration::from_secs(20);
 /// Data-plane hello: magic + the connecting rank, sent once per connection.
 const HELLO_MAGIC: u32 = u32::from_le_bytes(*b"FCHL");
 const HELLO_LEN: usize = 6;
+
+/// Default data-listener bind address: loopback (single-node jobs).
+pub const DEFAULT_BIND: IpAddr = IpAddr::V4(Ipv4Addr::LOCALHOST);
 
 /// A peer link's stream of frame-verified payloads (or the first error).
 type Inbox = Receiver<Result<Vec<u8>>>;
@@ -63,9 +66,22 @@ pub struct TcpTransport {
 
 impl TcpTransport {
     /// Rendezvous + full-mesh bootstrap. `root` is the rank-0 rendezvous
-    /// address (e.g. `127.0.0.1:29555`), identical across all ranks.
+    /// address (e.g. `127.0.0.1:29555`), identical across all ranks. Data
+    /// listeners bind loopback; see [`TcpTransport::bootstrap_bound`] for
+    /// the multi-node bind address.
     pub fn bootstrap(rank: usize, n: usize, root: &str) -> Result<TcpTransport> {
-        TcpTransport::bootstrap_with(rank, n, root, None)
+        TcpTransport::bootstrap_bound_with(rank, n, root, None, DEFAULT_BIND)
+    }
+
+    /// [`TcpTransport::bootstrap`] with an explicit *data-listener* bind
+    /// address (the CLI's `--bind`, DESIGN.md §4's extension point): the
+    /// per-rank data sockets bind `(bind, ephemeral)` and advertise that
+    /// address through the rendezvous, so peers on other hosts can dial
+    /// in when `bind` is a routable interface IP. The default stays
+    /// loopback. An unspecified address (`0.0.0.0` / `::`) is rejected —
+    /// it would be advertised verbatim and peers cannot dial it.
+    pub fn bootstrap_bound(rank: usize, n: usize, root: &str, bind: IpAddr) -> Result<TcpTransport> {
+        TcpTransport::bootstrap_bound_with(rank, n, root, None, bind)
     }
 
     /// Like [`TcpTransport::bootstrap`], but rank 0 may supply an
@@ -77,15 +93,33 @@ impl TcpTransport {
         root: &str,
         root_listener: Option<TcpListener>,
     ) -> Result<TcpTransport> {
+        TcpTransport::bootstrap_bound_with(rank, n, root, root_listener, DEFAULT_BIND)
+    }
+
+    /// Full-control bootstrap: rendezvous listener override + data bind
+    /// address (see [`TcpTransport::bootstrap_bound`]).
+    pub fn bootstrap_bound_with(
+        rank: usize,
+        n: usize,
+        root: &str,
+        root_listener: Option<TcpListener>,
+        bind: IpAddr,
+    ) -> Result<TcpTransport> {
         ensure!(n >= 1, "world size must be at least 1");
         ensure!(rank < n, "rank {rank} out of range for world size {n}");
         ensure!(n <= u16::MAX as usize, "rank ids must fit the frame header");
+        ensure!(
+            !bind.is_unspecified(),
+            "--bind {bind} is unspecified: peers would be told to dial {bind}, which no \
+             host routes — bind a concrete interface IP instead"
+        );
 
-        // 1. Data listener for the full-mesh phase. Single-node scope:
-        // loopback only (multi-node needs an interface/addr flag; DESIGN.md
-        // §4 lists it as the designed extension point).
+        // 1. Data listener for the full-mesh phase, on the requested
+        // interface (loopback unless the job spans hosts). The advertised
+        // address is exactly what was bound, so whatever `bind` names must
+        // be reachable by every peer.
         let data_listener =
-            TcpListener::bind(("127.0.0.1", 0)).context("binding data listener")?;
+            TcpListener::bind((bind, 0)).with_context(|| format!("binding data listener on {bind}"))?;
         let my_addr = data_listener.local_addr().context("data listener addr")?;
 
         // 2+3. Rendezvous: learn every rank's data address.
@@ -448,6 +482,57 @@ pub fn local_mesh(n: usize) -> Result<Vec<TcpTransport>> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn bound_bootstrap_advertises_the_bound_interface() {
+        // --bind with an explicit loopback IP: the mesh forms and works
+        // exactly like the default (the only loopback interface a test box
+        // is guaranteed to have), and the advertised data addresses carry
+        // the bound IP.
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let root = listener.local_addr().unwrap().to_string();
+        let mut root_listener = Some(listener);
+        let bind: IpAddr = "127.0.0.1".parse().unwrap();
+        let n = 3;
+        let mut endpoints: Vec<TcpTransport> = {
+            let results: Vec<Result<TcpTransport>> = thread::scope(|scope| {
+                let joins: Vec<_> = (0..n)
+                    .map(|rank| {
+                        let root = root.clone();
+                        let l = if rank == 0 { root_listener.take() } else { None };
+                        scope.spawn(move || {
+                            TcpTransport::bootstrap_bound_with(rank, n, &root, l, bind)
+                        })
+                    })
+                    .collect();
+                joins.into_iter().map(|j| j.join().unwrap()).collect()
+            });
+            results.into_iter().collect::<Result<Vec<_>>>().unwrap()
+        };
+        thread::scope(|scope| {
+            for t in endpoints.drain(..) {
+                scope.spawn(move || {
+                    for d in 0..t.n() {
+                        if d != t.rank() {
+                            t.send(d, vec![t.rank() as u8; 2]).unwrap();
+                        }
+                    }
+                    for s in 0..t.n() {
+                        if s != t.rank() {
+                            assert_eq!(t.recv(s).unwrap(), vec![s as u8; 2]);
+                        }
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn unspecified_bind_rejected_up_front() {
+        let e = TcpTransport::bootstrap_bound(0, 2, "127.0.0.1:1", "0.0.0.0".parse().unwrap())
+            .unwrap_err();
+        assert!(e.to_string().contains("unspecified"), "{e}");
+    }
 
     #[test]
     fn local_mesh_pairwise_exchange() {

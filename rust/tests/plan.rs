@@ -1,0 +1,311 @@
+//! Plan-layer property tests (no artifacts needed): mixed-stage
+//! [`CommPlan`]s driven through the public `Communicator` front door must
+//! leave all ranks bit-identical on every backend and at every admissible
+//! G; the plan compiler must be deterministic and honor the acceptance
+//! crossover (aggressive cross-group codec on the tier-asymmetric
+//! dual-NVLink cluster, uniform on the balanced L40 box); and the plan
+//! cache must recompile nothing after warmup.
+
+use flashcomm::comm::{fabric, Algo, Communicator, LocalGroup};
+use flashcomm::plan::{compile, CommPlan, PlanCacheStats, PlanPolicy, StageCodecs};
+use flashcomm::quant::Codec;
+use flashcomm::topo::{presets, Topology};
+use flashcomm::transport::tcp;
+use flashcomm::util::Prng;
+
+fn codec(s: &str) -> Codec {
+    Codec::parse(s).unwrap()
+}
+
+fn rank_inputs(n: usize, len: usize) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|r| {
+            let mut rng = Prng::new(4200 + r as u64);
+            let mut v = vec![0f32; len];
+            rng.fill_activations(&mut v, 1.0);
+            v
+        })
+        .collect()
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Run `plan` over an in-process mesh; returns per-rank results.
+fn run_inproc(topo: &Topology, inputs: &[Vec<f32>], plan: &CommPlan) -> Vec<Vec<f32>> {
+    let (results, _) = fabric::run_ranks(topo, |h| {
+        let mut c = Communicator::from_handle(h);
+        let mut d = inputs[c.rank()].clone();
+        c.allreduce_plan(&mut d, plan).unwrap();
+        d
+    });
+    results
+}
+
+/// Run `plan` over a real TCP loopback mesh; returns per-rank results.
+fn run_tcp(topo: &Topology, inputs: &[Vec<f32>], plan: &CommPlan) -> Vec<Vec<f32>> {
+    let endpoints = tcp::local_mesh(topo.n_gpus).expect("tcp mesh bootstrap");
+    let (results, _) = fabric::run_ranks_with(endpoints, topo, |h| {
+        let mut c = Communicator::from_handle(h);
+        let mut d = inputs[c.rank()].clone();
+        c.allreduce_plan(&mut d, plan).unwrap();
+        d
+    });
+    results
+}
+
+/// The admissible mixed-stage plan space the property test sweeps: both
+/// hierarchical algorithms × distinct (intra, cross) pairs × chunk/window
+/// variations. Every entry has differing stage codecs.
+fn mixed_plans() -> Vec<CommPlan> {
+    let pairs = [
+        ("int8", "int4@32"),
+        ("int4@32", "int2-sr@32!"),
+        ("int8", "int2-sr@32"),
+        ("bf16", "int8"),
+    ];
+    let mut plans = Vec::new();
+    for (intra, cross) in pairs {
+        let stages = StageCodecs::with_cross(codec(intra), codec(cross));
+        assert!(!stages.is_uniform());
+        plans.push(CommPlan {
+            algo: Algo::Hier,
+            stage_codecs: stages,
+            chunks: 1,
+            send_window: 1,
+            codec_threads: 0,
+        });
+        for (chunks, window) in [(3, 1), (8, 2), (5, 4)] {
+            plans.push(CommPlan {
+                algo: Algo::HierPipelined,
+                stage_codecs: stages,
+                chunks,
+                send_window: window,
+                codec_threads: 0,
+            });
+        }
+    }
+    plans
+}
+
+#[test]
+fn prop_mixed_stage_plans_bit_identical_across_ranks_at_g2_and_g4() {
+    // Every admissible mixed-stage plan × G ∈ {2, 4} over InProc: all
+    // ranks of all groups must agree bitwise, and the result must carry
+    // signal (correlate with the exact sum).
+    for topo in [Topology::with_groups(presets::l40(), 8, 2), presets::four_group_pcie(8).unwrap()]
+    {
+        let inputs = rank_inputs(8, 1536);
+        let mut exact = vec![0f32; 1536];
+        for v in &inputs {
+            for (e, x) in exact.iter_mut().zip(v) {
+                *e += *x;
+            }
+        }
+        for plan in mixed_plans() {
+            plan.validate(&topo).unwrap();
+            let results = run_inproc(&topo, &inputs, &plan);
+            for r in &results {
+                assert_eq!(
+                    bits(r),
+                    bits(&results[0]),
+                    "{plan} on G={}: ranks diverge",
+                    topo.numa_groups
+                );
+            }
+            let s = flashcomm::util::stats::sqnr_db(&exact, &results[0]);
+            assert!(s > 4.0, "{plan} G={}: SQNR {s} dB", topo.numa_groups);
+        }
+    }
+}
+
+#[test]
+fn prop_mixed_stage_plans_bit_identical_across_backends() {
+    // TCP must deliver exactly the bits InProc computes for mixed-stage
+    // plans, at G = 2 and G = 4 (a slice of the plan space — TCP meshes
+    // are expensive to bootstrap).
+    for topo in [Topology::with_groups(presets::l40(), 8, 2), presets::four_group_pcie(8).unwrap()]
+    {
+        let inputs = rank_inputs(8, 768);
+        for plan in [
+            CommPlan {
+                algo: Algo::Hier,
+                stage_codecs: StageCodecs::with_cross(codec("int4@32"), codec("int2-sr@32!")),
+                chunks: 1,
+                send_window: 1,
+                codec_threads: 0,
+            },
+            CommPlan {
+                algo: Algo::HierPipelined,
+                stage_codecs: StageCodecs::with_cross(codec("int8"), codec("int4@32")),
+                chunks: 4,
+                send_window: 3,
+                codec_threads: 0,
+            },
+        ] {
+            let inproc = run_inproc(&topo, &inputs, &plan);
+            let over_tcp = run_tcp(&topo, &inputs, &plan);
+            for r in 0..8 {
+                assert_eq!(
+                    bits(&inproc[r]),
+                    bits(&over_tcp[r]),
+                    "{plan} G={}: TCP diverges from InProc at rank {r}",
+                    topo.numa_groups
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn compiler_is_deterministic_across_repeats_and_clones() {
+    let topos = [
+        Topology::new(presets::l40(), 8),
+        presets::dual_nvlink_node(8).unwrap(),
+        Topology::new(presets::h800(), 8),
+    ];
+    for topo in &topos {
+        for spec in ["bf16", "int8", "int4@32"] {
+            for elems in [512usize, 262_144, 8 << 20] {
+                let first = compile(topo, elems, &codec(spec));
+                for _ in 0..5 {
+                    assert_eq!(compile(topo, elems, &codec(spec)), first, "{spec}@{elems}");
+                    assert_eq!(compile(&topo.clone(), elems, &codec(spec)), first);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn pinned_crossover_duo_mixes_l40_stays_uniform() {
+    // The acceptance crossover, end to end through Auto: the
+    // dual-NVLink-node cluster compiles an aggressive cross-group codec
+    // for >= 1 MB payloads; the balanced L40 box compiles uniform plans
+    // at every size.
+    let duo = presets::dual_nvlink_node(8).unwrap();
+    let base = codec("int4@32");
+    let mb_elems = 512 * 1024; // 1 MB of BF16 payload
+    for elems in [mb_elems, 8 * mb_elems] {
+        let plan = compile(&duo, elems, &base);
+        assert!(matches!(plan.algo, Algo::Hier | Algo::HierPipelined), "{plan}");
+        assert!(plan.cross_no_less_aggressive(), "{plan}");
+        assert!(
+            plan.stage_codecs.cross.asymptotic_wire_ratio()
+                < plan.stage_codecs.intra_rs.asymptotic_wire_ratio(),
+            "duo @ {elems} elems must mix: {plan}"
+        );
+    }
+    let l40 = Topology::new(presets::l40(), 8);
+    for elems in [8192usize, mb_elems, 8 * mb_elems] {
+        let plan = compile(&l40, elems, &base);
+        assert!(plan.stage_codecs.is_uniform(), "l40 @ {elems} elems must stay uniform: {plan}");
+    }
+}
+
+#[test]
+fn auto_plans_are_bit_identical_across_backends_on_the_duo() {
+    // Acceptance pin: PlanPolicy::Auto on the dual-NVLink cluster — the
+    // mixed-plan regime — resolves the same plan and the same bits over
+    // InProc and TCP.
+    let duo = presets::dual_nvlink_node(8).unwrap();
+    let base = codec("int4@32");
+    let len = 600_000; // >= 1 MB of BF16 payload: the mixed regime
+    let inputs = rank_inputs(8, len);
+    let policy = PlanPolicy::auto();
+    let expected_plan = compile(&duo, len, &base);
+    assert!(!expected_plan.stage_codecs.is_uniform(), "{expected_plan}");
+
+    let ir = &inputs;
+    let run = |endpoints: Option<Vec<tcp::TcpTransport>>| match endpoints {
+        Some(eps) => {
+            fabric::run_ranks_with(eps, &duo, |h| {
+                let mut c = Communicator::from_handle(h);
+                let mut d = ir[c.rank()].clone();
+                let plan = c.allreduce_planned(&mut d, &base, &policy).unwrap();
+                (plan, d)
+            })
+            .0
+        }
+        None => {
+            fabric::run_ranks(&duo, |h| {
+                let mut c = Communicator::from_handle(h);
+                let mut d = ir[c.rank()].clone();
+                let plan = c.allreduce_planned(&mut d, &base, &policy).unwrap();
+                (plan, d)
+            })
+            .0
+        }
+    };
+    let inproc = run(None);
+    let over_tcp = run(Some(tcp::local_mesh(8).unwrap()));
+    for r in 0..8 {
+        assert_eq!(inproc[r].0, expected_plan, "rank {r} resolved a different plan");
+        assert_eq!(over_tcp[r].0, expected_plan, "TCP rank {r} resolved a different plan");
+        assert_eq!(
+            bits(&inproc[r].1),
+            bits(&over_tcp[r].1),
+            "rank {r}: TCP diverges from InProc under Auto"
+        );
+    }
+}
+
+#[test]
+fn warm_plan_cache_recompiles_nothing() {
+    // Acceptance pin: repeated (topo, n, codec) calls hit the cache —
+    // exactly one miss per rank per distinct shape, zero recompiles after
+    // warmup, observable through the public hit/miss counters.
+    let mut group = LocalGroup::new_planned(
+        &presets::dual_nvlink_node(8).unwrap(),
+        PlanPolicy::auto(),
+    )
+    .unwrap();
+    let base = codec("int4@32");
+    let n = 8;
+    let mut data = rank_inputs(n, 4096);
+    group.allreduce(&mut data, &base).unwrap();
+    let warm = group.plan_cache_stats();
+    assert_eq!(
+        warm,
+        PlanCacheStats { hits: 0, misses: n as u64, evictions: 0 },
+        "warmup: one compile per rank"
+    );
+    for round in 1..=4 {
+        let mut data = rank_inputs(n, 4096);
+        group.allreduce(&mut data, &base).unwrap();
+        let s = group.plan_cache_stats();
+        assert_eq!(s.misses, n as u64, "round {round}: a warm cache must not recompile");
+        assert_eq!(s.hits, (round * n) as u64, "round {round}");
+    }
+    // A new shape compiles once more per rank, then is warm too.
+    let mut data = rank_inputs(n, 8192);
+    group.allreduce(&mut data, &base).unwrap();
+    assert_eq!(group.plan_cache_stats().misses, 2 * n as u64);
+    let mut data = rank_inputs(n, 8192);
+    group.allreduce(&mut data, &base).unwrap();
+    assert_eq!(group.plan_cache_stats().misses, 2 * n as u64);
+}
+
+#[test]
+fn fixed_mixed_plan_equals_auto_when_auto_compiles_it() {
+    // Sanity on the two policy arms: running Auto's compiled plan as a
+    // Fixed plan produces identical bits (resolution and execution are
+    // cleanly separated).
+    let duo = presets::dual_nvlink_node(8).unwrap();
+    let base = codec("int4@32");
+    let len = 600_000;
+    let inputs = rank_inputs(8, len);
+    let compiled = compile(&duo, len, &base);
+    let via_fixed = run_inproc(&duo, &inputs, &compiled);
+    let ir = &inputs;
+    let (via_auto, _) = fabric::run_ranks(&duo, |h| {
+        let mut c = Communicator::from_handle(h);
+        let mut d = ir[c.rank()].clone();
+        c.allreduce_planned(&mut d, &base, &PlanPolicy::auto()).unwrap();
+        d
+    });
+    for r in 0..8 {
+        assert_eq!(bits(&via_fixed[r]), bits(&via_auto[r]), "rank {r}");
+    }
+}
