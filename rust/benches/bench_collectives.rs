@@ -4,6 +4,7 @@
 //!
 //! ```sh
 //! cargo bench --bench bench_collectives [-- --algo auto|ring|twostep|hier|hierpp]
+//! cargo bench --bench bench_collectives -- --telemetry   # recorder overhead only
 //! ```
 //!
 //! With `--algo`, the fabric section sweeps that one policy across codecs
@@ -19,13 +20,19 @@ use flashcomm::comm::{fabric, Algo, AlgoPolicy, Communicator, LocalGroup};
 use flashcomm::plan;
 use flashcomm::quant::Codec;
 use flashcomm::sim;
+use flashcomm::telemetry::{Op, DEFAULT_CAPACITY};
 use flashcomm::topo::{presets, Topology};
 use flashcomm::transport::{tcp, Transport, FRAME_HEADER_LEN};
-use flashcomm::util::timer::{bench, fmt_bytes};
+use flashcomm::util::timer::{bench, fmt_bytes, fmt_nanos};
 use flashcomm::util::Prng;
 
 fn main() {
     let args = Args::parse(std::env::args().skip(1)).unwrap_or_default();
+    if args.flag("telemetry").is_some() {
+        // The quick CI smoke: only the flight-recorder overhead section.
+        telemetry_overhead();
+        return;
+    }
     let policy: Option<AlgoPolicy> =
         args.flag("algo").map(|s| s.parse().expect("--algo ring|twostep|hier|hierpp|auto"));
     let n: usize = 1 << 20; // 1M f32 = 4 MiB per rank
@@ -39,6 +46,8 @@ fn main() {
     transport_sweep();
     println!();
     plan_sweep();
+    println!();
+    telemetry_overhead();
     println!();
     sim_tables();
 }
@@ -326,6 +335,77 @@ fn plan_sweep() {
     }
     let json = format!("[\n{}\n]\n", records.join(",\n"));
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_plan.json");
+    match std::fs::write(path, json) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
+
+/// Flight-recorder overhead: the same hierarchical AllReduce with the
+/// recorder off vs on (default-capacity ring), plus the hottest recorded
+/// span series from the metrics registry. Emits `BENCH_telemetry.json`
+/// so the observability tax has a recorded baseline; `-- --telemetry`
+/// runs only this section (the CI smoke).
+fn telemetry_overhead() {
+    let ranks = 8usize;
+    let elems = 1usize << 18;
+    let topo = Topology::new(presets::l40(), ranks);
+    let codec = Codec::parse("int4@32").unwrap();
+    println!(
+        "== flight-recorder overhead: hier AllReduce, {ranks} ranks x {} ==",
+        fmt_bytes(4 * elems)
+    );
+    let inputs = rank_inputs(ranks, elems, 23);
+    let mut records = Vec::new();
+    let mut wall = |recording: bool| -> f64 {
+        let mut group = LocalGroup::new(&topo, AlgoPolicy::Fixed(Algo::Hier)).unwrap();
+        if recording {
+            group.enable_recording(DEFAULT_CAPACITY);
+        }
+        let m = bench(1, 5, || {
+            let mut data = inputs.clone();
+            group.allreduce(&mut data, &codec).unwrap();
+        });
+        let events = group.ranks()[0].recorder().map_or(0, |r| r.total_recorded());
+        println!(
+            "  recorder {:<3} {:>8.2} ms   {} events/rank",
+            if recording { "on" } else { "off" },
+            m.secs() * 1e3,
+            events
+        );
+        if recording {
+            for (k, s) in &group.metrics_snapshot().series {
+                if matches!(k.op, Op::Encode | Op::DecodeSum | Op::Send) {
+                    println!(
+                        "    {:<10} {:<6} {:>8} spans  mean {}",
+                        k.op.name(),
+                        k.stage.name(),
+                        s.spans,
+                        fmt_nanos(s.hist.mean_nanos())
+                    );
+                }
+            }
+        }
+        records.push(format!(
+            concat!(
+                "  {{\"case\": \"recorder_{}\", \"algo\": \"hier\", \"ranks\": {}, ",
+                "\"elems_per_rank\": {}, \"codec\": \"{}\", \"wall_ms\": {:.3}, ",
+                "\"events_per_rank\": {}}}"
+            ),
+            if recording { "on" } else { "off" },
+            ranks,
+            elems,
+            codec.spec(),
+            m.secs() * 1e3,
+            events
+        ));
+        m.secs() * 1e3
+    };
+    let off_ms = wall(false);
+    let on_ms = wall(true);
+    println!("  recording overhead: {:+.1}% wall", (on_ms - off_ms) / off_ms * 100.0);
+    let json = format!("[\n{}\n]\n", records.join(",\n"));
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_telemetry.json");
     match std::fs::write(path, json) {
         Ok(()) => println!("wrote {path}"),
         Err(e) => eprintln!("could not write {path}: {e}"),

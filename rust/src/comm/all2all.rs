@@ -15,6 +15,8 @@ use super::{communicator::Communicator, encode, error::CommError};
 use crate::quant::scheme::codec_from_header;
 use crate::quant::wire::Header;
 use crate::quant::{Codec, CodecBuffers};
+use crate::record;
+use crate::telemetry::{codec_tag, Op, Stage};
 use crate::transport::Transport;
 
 /// Exchange `sends[d]` with every rank `d`, quantizing with `codec`.
@@ -36,19 +38,34 @@ pub(crate) fn all2all<T: Transport>(
             h.n
         )));
     }
+    if let Some(rec) = h.recorder() {
+        rec.set_stage(Stage::Single, codec_tag(codec));
+    }
     for (dst, payload) in sends.iter().enumerate() {
         if dst != h.rank {
-            h.send(dst, encode(codec, payload, bufs, t)?)?;
+            record!(h.recorder(), start Op::Encode, payload.len() as u64);
+            let wire = encode(codec, payload, bufs, t)?;
+            record!(h.recorder(), end Op::Encode, wire.len() as u64);
+            h.send(dst, wire)?;
         }
     }
     let mut out = Vec::with_capacity(h.n);
     for src in 0..h.n {
         let wire = if src == h.rank {
-            encode(codec, &sends[src], bufs, t)?
+            record!(h.recorder(), start Op::Encode, sends[src].len() as u64);
+            let wire = encode(codec, &sends[src], bufs, t)?;
+            record!(h.recorder(), end Op::Encode, wire.len() as u64);
+            wire
         } else {
             h.recv(src)?
         };
-        out.push(decode_validated(src, &wire, bufs, t)?);
+        if h.recorder().is_some() {
+            let elems = Header::parse(&wire).map(|hd| u64::from(hd.n)).unwrap_or(0);
+            record!(h.recorder(), start Op::Decode, elems);
+        }
+        let decoded = decode_validated(src, &wire, bufs, t)?;
+        record!(h.recorder(), end Op::Decode, wire.len() as u64);
+        out.push(decoded);
     }
     Ok(out)
 }

@@ -39,6 +39,9 @@ use crate::comm::{
 };
 use crate::plan::{self, CommPlan, PlanCache, PlanCacheStats, PlanKey, PlanPolicy};
 use crate::quant::{Codec, CodecBuffers};
+use crate::record;
+use crate::sim::MeasuredProfile;
+use crate::telemetry::{self, MetricsRegistry, MetricsSnapshot, Op, Recorder};
 use crate::topo::{presets, Topology};
 use crate::transport::{inproc, InProcTransport, Transport};
 
@@ -66,6 +69,15 @@ pub struct Communicator<T: Transport = InProcTransport> {
     /// fingerprint, element count, base codec, pins), so repeated
     /// same-shape calls replay the plan without re-running the search.
     plans: PlanCache,
+    /// The plan of the most recent [`allreduce_plan`] call and its stable
+    /// fingerprint, memoized so the fingerprint (which formats the plan)
+    /// is recomputed only when the plan changes.
+    ///
+    /// [`allreduce_plan`]: Communicator::allreduce_plan
+    last_plan: Option<(CommPlan, u64)>,
+    /// Live measurements applied to plan resolution (see
+    /// [`Communicator::set_profile`]); `None` prices the static topology.
+    profile: Option<MeasuredProfile>,
 }
 
 impl<T: Transport> Communicator<T> {
@@ -100,7 +112,37 @@ impl<T: Transport> Communicator<T> {
             auto_cache: None,
             codec_threads: 1,
             plans: PlanCache::default(),
+            last_plan: None,
+            profile: None,
         }
+    }
+
+    /// Turn the flight recorder on: a fresh per-rank ring holding the
+    /// newest `capacity` events (≈ 48 bytes each; see
+    /// [`crate::telemetry::DEFAULT_CAPACITY`]). The fabric layer starts
+    /// recording `Send`/`Recv` spans, the collectives their codec spans,
+    /// and [`allreduce_plan`](Communicator::allreduce_plan) the enclosing
+    /// `Collective` span. Wire bytes and results are unchanged — recording
+    /// observes, it never participates (pinned by tests).
+    pub fn enable_recording(&mut self, capacity: usize) {
+        self.handle.set_recorder(Some(Arc::new(Recorder::new(self.handle.rank, capacity))));
+    }
+
+    /// Turn the flight recorder off and drop its ring.
+    pub fn disable_recording(&mut self) {
+        self.handle.set_recorder(None);
+    }
+
+    /// The flight recorder, when enabled ([`Communicator::enable_recording`]).
+    pub fn recorder(&self) -> Option<&Recorder> {
+        self.handle.recorder()
+    }
+
+    /// This rank's recorded trace as one JSON object (`None` while
+    /// recording is disabled). Schema: DESIGN.md §11 /
+    /// [`crate::telemetry::trace_json`].
+    pub fn trace_json(&self) -> Option<String> {
+        self.handle.recorder().map(telemetry::trace_json)
     }
 
     /// Let the fused codec kernels chunk large payloads across up to
@@ -173,7 +215,7 @@ impl<T: Transport> Communicator<T> {
             (AlgoPolicy::Fixed(a), _) => a,
             (AlgoPolicy::Auto, Some((c, len, a))) if c == *codec && len == data.len() => a,
             (AlgoPolicy::Auto, _) => {
-                let a = policy.resolve(self.topo(), codec, data.len());
+                let a = policy.resolve(&self.effective_topo(), codec, data.len());
                 self.auto_cache = Some((*codec, data.len(), a));
                 a
             }
@@ -190,7 +232,12 @@ impl<T: Transport> Communicator<T> {
     /// a nonzero value overrides it for this call only.
     pub fn allreduce_plan(&mut self, data: &mut [f32], plan: &CommPlan) -> Result<(), CommError> {
         plan.validate(self.topo())?;
-        self.with_plan_threads(plan, |c| match plan.algo {
+        let fp = self.note_plan(plan);
+        if let Some(rec) = self.handle.recorder() {
+            rec.set_plan(fp, telemetry::algo_tag(plan.algo));
+        }
+        record!(self.handle.recorder(), start Op::Collective, data.len() as u64);
+        let result = self.with_plan_threads(plan, |c| match plan.algo {
             Algo::Ring => ring::allreduce(c, data, &plan.stage_codecs.intra_rs),
             Algo::TwoStep => twostep::allreduce(c, data, &plan.stage_codecs.intra_rs),
             Algo::Hier => hier::allreduce_staged(c, data, &plan.stage_codecs),
@@ -201,7 +248,35 @@ impl<T: Transport> Communicator<T> {
                 plan.chunks,
                 plan.send_window,
             ),
-        })
+        });
+        if let Some(rec) = self.handle.recorder() {
+            // Close on a clean frame so the End pairs with the Start
+            // regardless of the stage context the algorithm left behind.
+            rec.set_plan(fp, telemetry::algo_tag(plan.algo));
+            rec.record(crate::telemetry::Kind::End, Op::Collective, 0);
+        }
+        result
+    }
+
+    /// Memoize the plan about to run and return its stable fingerprint
+    /// (recomputed only when the plan changes — fingerprinting formats
+    /// the plan, which the hot path should not repeat per call).
+    fn note_plan(&mut self, plan: &CommPlan) -> u64 {
+        match &self.last_plan {
+            Some((p, fp)) if p == plan => *fp,
+            _ => {
+                let fp = plan.fingerprint();
+                self.last_plan = Some((*plan, fp));
+                fp
+            }
+        }
+    }
+
+    /// The resolved plan and stable fingerprint of the most recent
+    /// [`allreduce_plan`](Communicator::allreduce_plan) call (every
+    /// allreduce entry point funnels through it).
+    pub fn last_plan(&self) -> Option<&(CommPlan, u64)> {
+        self.last_plan.as_ref()
     }
 
     /// In-place AllReduce under a [`PlanPolicy`]: `Fixed` runs its plan
@@ -225,7 +300,11 @@ impl<T: Transport> Communicator<T> {
     /// The plan `policy` runs for `elems` f32 values of `codec` on this
     /// communicator's topology (the resolution half of
     /// [`allreduce_planned`](Communicator::allreduce_planned), split out
-    /// for harnesses that want to inspect or log the pick).
+    /// for harnesses that want to inspect or log the pick). `Auto` prices
+    /// candidates against the [effective](Communicator::effective_topo)
+    /// topology — the static calibration corrected by any installed
+    /// [`MeasuredProfile`] — and the recalibrated fingerprint keys the
+    /// plan cache, so profiled and unprofiled resolutions never collide.
     pub fn resolve_plan(
         &mut self,
         codec: &Codec,
@@ -236,13 +315,76 @@ impl<T: Transport> Communicator<T> {
             PlanPolicy::Fixed(p) => Ok(*p),
             PlanPolicy::Auto(pins) => {
                 pins.validate().map_err(|e| CommError::shape(format!("{e:#}")))?;
-                let key = PlanKey::new(self.handle.topo(), elems, codec, *pins);
-                let topo = self.handle.topo().clone();
+                let topo = self.effective_topo();
+                let key = PlanKey::new(&topo, elems, codec, *pins);
                 Ok(self
                     .plans
                     .get_or_insert_with(key, || plan::compile_pinned(&topo, elems, codec, *pins)))
             }
         }
+    }
+
+    /// Install live measurements for plan resolution: every sane term of
+    /// `profile` overrides the static calibration's priced rate (see
+    /// [`MeasuredProfile::apply`]). An empty profile clears back to the
+    /// static topology. Invalidates the memoized `Auto` algorithm pick;
+    /// compiled plans stay cached under their (distinct) recalibrated
+    /// topology fingerprint.
+    pub fn set_profile(&mut self, profile: MeasuredProfile) {
+        self.profile = (!profile.is_empty()).then_some(profile);
+        self.auto_cache = None;
+    }
+
+    /// The installed measurement profile, if any.
+    pub fn profile(&self) -> Option<&MeasuredProfile> {
+        self.profile.as_ref()
+    }
+
+    /// Distill a [`MeasuredProfile`] from this rank's recorded trace
+    /// ([`crate::telemetry::distill_profile`]) and install it for
+    /// subsequent plan resolution. Returns the profile when anything was
+    /// measurable; `None` (installing nothing) when recording is off or
+    /// the trace has no completed spans.
+    pub fn recalibrate_from_recorder(&mut self) -> Option<MeasuredProfile> {
+        let events = self.handle.recorder()?.events();
+        let profile = telemetry::distill_profile(&events);
+        if profile.is_empty() {
+            return None;
+        }
+        self.set_profile(profile);
+        Some(profile)
+    }
+
+    /// The topology plan resolution prices against: the static topology,
+    /// recalibrated by the installed profile when one is set.
+    pub fn effective_topo(&self) -> Topology {
+        match &self.profile {
+            Some(p) => p.apply(self.handle.topo()),
+            None => self.handle.topo().clone(),
+        }
+    }
+
+    /// Everything this rank measures, absorbed into one
+    /// [`MetricsRegistry`]: recorded span series, the fabric byte
+    /// counters, transport counters, plan-cache counters, and the last
+    /// resolved plan.
+    pub fn metrics_registry(&self) -> MetricsRegistry {
+        let mut reg = MetricsRegistry::new();
+        if let Some(rec) = self.handle.recorder() {
+            reg.absorb_events(&rec.events());
+        }
+        reg.absorb_fabric(self.counters().snapshot());
+        reg.absorb_transport(self.transport().stats());
+        reg.absorb_plan_cache(self.plans.stats());
+        if let Some((plan, fp)) = &self.last_plan {
+            reg.set_last_plan(plan.to_string(), *fp);
+        }
+        reg
+    }
+
+    /// [`metrics_registry`](Communicator::metrics_registry), materialized.
+    pub fn metrics_snapshot(&self) -> MetricsSnapshot {
+        self.metrics_registry().snapshot()
     }
 
     /// Hit/miss/eviction counters of this communicator's compiled-plan
@@ -571,6 +713,65 @@ impl LocalGroup {
         self.comms[0].counters()
     }
 
+    /// Turn the flight recorder on for every rank
+    /// ([`Communicator::enable_recording`]).
+    pub fn enable_recording(&mut self, capacity: usize) {
+        for c in &mut self.comms {
+            c.enable_recording(capacity);
+        }
+    }
+
+    /// Per-rank communicators, rank order (read-only observability view).
+    pub fn ranks(&self) -> &[Communicator<InProcTransport>] {
+        &self.comms
+    }
+
+    /// Per-rank trace JSON, in rank order (empty while recording is off).
+    pub fn trace_jsons(&self) -> Vec<String> {
+        self.comms.iter().filter_map(Communicator::trace_json).collect()
+    }
+
+    /// Group-wide metrics: every rank's recorded spans, plan-cache
+    /// counters, transport counters, and last resolved plan folded into
+    /// one registry, plus the (group-shared) fabric counters absorbed
+    /// once.
+    pub fn metrics_snapshot(&self) -> MetricsSnapshot {
+        let mut reg = MetricsRegistry::new();
+        for c in &self.comms {
+            if let Some(rec) = c.recorder() {
+                reg.absorb_events(&rec.events());
+            }
+            reg.absorb_transport(c.transport().stats());
+            reg.absorb_plan_cache(c.plan_cache_stats());
+            if let Some((plan, fp)) = c.last_plan() {
+                reg.set_last_plan(plan.to_string(), *fp);
+            }
+        }
+        reg.absorb_fabric(self.counters().snapshot());
+        reg.snapshot()
+    }
+
+    /// Distill one [`MeasuredProfile`] from every rank's trace and
+    /// install it on every rank, so subsequent `--plan auto` resolution
+    /// prices the measured rates. `None` (and no change) when nothing
+    /// measurable was recorded.
+    pub fn recalibrate_from_recorders(&mut self) -> Option<MeasuredProfile> {
+        let mut events = Vec::new();
+        for c in &self.comms {
+            if let Some(rec) = c.recorder() {
+                events.extend(rec.events());
+            }
+        }
+        let profile = telemetry::distill_profile(&events);
+        if profile.is_empty() {
+            return None;
+        }
+        for c in &mut self.comms {
+            c.set_profile(profile);
+        }
+        Some(profile)
+    }
+
     /// AllReduce `per_rank[r]` as rank `r`'s contribution, in place: after
     /// the call every entry holds the same wire-precision sum. One scoped
     /// OS thread per rank; scratch stays warm across calls.
@@ -758,6 +959,72 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn recording_surfaces_metrics_traces_and_plan_fingerprints() {
+        let mut group =
+            LocalGroup::for_plan_grouped(4, Some(2), crate::plan::PlanPolicy::auto()).unwrap();
+        group.enable_recording(4096);
+        let c = codec("int4@32");
+        for _ in 0..2 {
+            let mut data = per_rank_data(4, 8192);
+            group.allreduce(&mut data, &c).unwrap();
+        }
+        // Every rank resolved and ran the identical plan: fingerprints
+        // agree (the distributed-consistency check `flashcomm worker`
+        // runs over TCP, exercised here in-process).
+        let fps: Vec<u64> =
+            group.ranks().iter().map(|r| r.last_plan().expect("plan ran").1).collect();
+        assert!(fps.iter().all(|f| *f == fps[0]), "{fps:?}");
+        // Traces: one JSON per rank, each carrying the collective span.
+        let traces = group.trace_jsons();
+        assert_eq!(traces.len(), 4);
+        for t in &traces {
+            assert!(t.contains("\"events\":[{"), "rank trace must be non-empty: {t}");
+            assert!(t.contains("\"op\":\"collective\""), "{t}");
+        }
+        // The aggregated snapshot carries every source.
+        let snap = group.metrics_snapshot();
+        let collective = snap
+            .series
+            .iter()
+            .find(|(k, _)| k.op == crate::telemetry::Op::Collective)
+            .expect("collective series");
+        assert_eq!(collective.1.spans, 8, "2 calls x 4 ranks");
+        assert_eq!(snap.unpaired, 0, "nothing wrapped at this capacity");
+        assert!(snap.fabric.unwrap().total > 0);
+        assert_eq!(snap.plan_cache.unwrap().misses, 4, "one compile per rank");
+        assert_eq!(snap.plan_cache.unwrap().hits, 4, "the second call replays");
+        assert!(snap.last_plan.is_some());
+        // Live recalibration distills a usable profile and keeps the
+        // group functional (profiled plans are re-keyed, not clobbered).
+        let profile = group.recalibrate_from_recorders().expect("measurable spans");
+        assert!(profile.intra_bw.is_some(), "{profile:?}");
+        for r in group.ranks() {
+            assert_eq!(r.profile(), Some(&profile));
+        }
+        let mut data = per_rank_data(4, 8192);
+        group.allreduce(&mut data, &c).unwrap();
+        for r in &data {
+            assert_eq!(r, &data[0], "ranks must still agree after recalibration");
+        }
+    }
+
+    #[test]
+    fn recording_is_off_by_default_and_metrics_still_export() {
+        let mut group = LocalGroup::for_policy(4, AlgoPolicy::Auto).unwrap();
+        let mut data = per_rank_data(4, 512);
+        group.allreduce(&mut data, &Codec::Bf16).unwrap();
+        for c in group.ranks() {
+            assert!(c.recorder().is_none(), "recording must be opt-in");
+            assert!(c.trace_json().is_none());
+        }
+        let snap = group.metrics_snapshot();
+        assert!(snap.series.is_empty(), "no recorder, no span series");
+        assert!(snap.fabric.unwrap().total > 0, "fabric counters still flow");
+        let json = snap.to_json();
+        assert!(json.contains("\"fabric\""), "{json}");
     }
 
     #[test]

@@ -14,12 +14,20 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::comm::error::CommError;
+use crate::telemetry::{Op, Recorder};
 use crate::topo::Topology;
 use crate::transport::{inproc, InProcTransport, Transport};
 
 /// Byte counters, split by link class (Table 5 columns). Counts *payload*
 /// bytes (the collective's semantic volume); per-frame transport overhead
 /// is visible through [`Transport::stats`] instead.
+///
+/// Counters are *monotone*: they only ever climb. There is deliberately no
+/// reset — a reset racing a concurrent `send` could tear the totals (bytes
+/// wiped but their message counted, or vice versa). Readers that want
+/// per-window accounting take a [`ByteCounters::snapshot`] as their epoch
+/// baseline and diff later snapshots against it with
+/// [`CountersSnapshot::since`].
 #[derive(Debug, Default)]
 pub struct ByteCounters {
     /// All bytes that crossed any link.
@@ -65,18 +73,21 @@ impl ByteCounters {
         }
     }
 
-    /// Reset all counters to zero.
-    ///
-    /// This is three independent relaxed stores, **not** an atomic
-    /// snapshot-and-clear: a `send` racing with `reset` can land between
-    /// the stores and leave the counters mutually inconsistent (e.g.
-    /// `messages` incremented but its bytes wiped). Only call while no
-    /// collective is in flight — between [`run_ranks`] invocations — and
-    /// read totals via [`ByteCounters::snapshot`] after ranks have joined.
-    pub fn reset(&self) {
-        self.total.store(0, Ordering::Relaxed);
-        self.cross_numa.store(0, Ordering::Relaxed);
-        self.messages.store(0, Ordering::Relaxed);
+}
+
+impl CountersSnapshot {
+    /// The traffic between `epoch` and `self` — the epoch/delta scheme
+    /// that replaces the old racy `reset()`: instead of zeroing shared
+    /// atomics (which could interleave with a concurrent `send` and leave
+    /// readers with torn totals), each reader keeps its own immutable
+    /// baseline and subtracts. `wrapping_sub` keeps even a stale baseline
+    /// from panicking in debug builds.
+    pub fn since(&self, epoch: &CountersSnapshot) -> CountersSnapshot {
+        CountersSnapshot {
+            total: self.total.wrapping_sub(epoch.total),
+            cross_numa: self.cross_numa.wrapping_sub(epoch.cross_numa),
+            messages: self.messages.wrapping_sub(epoch.messages),
+        }
     }
 }
 
@@ -90,6 +101,10 @@ pub struct RankHandle<T: Transport = InProcTransport> {
     topo: Topology,
     transport: T,
     counters: Arc<ByteCounters>,
+    /// Optional flight recorder ([`crate::telemetry`]). `None` (the
+    /// default) keeps the hot path at a single untaken branch per
+    /// send/recv.
+    recorder: Option<Arc<Recorder>>,
 }
 
 impl<T: Transport> RankHandle<T> {
@@ -105,7 +120,28 @@ impl<T: Transport> RankHandle<T> {
             topo.n_gpus,
             transport.n()
         );
-        RankHandle { rank: transport.rank(), n: transport.n(), topo, transport, counters }
+        RankHandle {
+            rank: transport.rank(),
+            n: transport.n(),
+            topo,
+            transport,
+            counters,
+            recorder: None,
+        }
+    }
+
+    /// Install (or remove) a flight recorder. Every subsequent
+    /// [`RankHandle::send`]/[`RankHandle::recv`] records a `Send`/`Recv`
+    /// span — this one hook instruments every transport backend uniformly,
+    /// since all collective traffic funnels through the handle.
+    pub fn set_recorder(&mut self, recorder: Option<Arc<Recorder>>) {
+        self.recorder = recorder;
+    }
+
+    /// The installed flight recorder, if any — the `record!` gate the
+    /// collectives use for their encode/decode spans and stage context.
+    pub fn recorder(&self) -> Option<&Recorder> {
+        self.recorder.as_deref()
     }
 
     /// Send a payload to `dst` (non-blocking with respect to the peer's
@@ -118,7 +154,11 @@ impl<T: Transport> RankHandle<T> {
         if self.topo.numa_groups > 1 && self.topo.group_of(self.rank) != self.topo.group_of(dst) {
             self.counters.cross_numa.fetch_add(bytes.len() as u64, Ordering::Relaxed);
         }
-        self.transport.send(dst, bytes).map_err(|e| CommError::send(dst, e))
+        let len = bytes.len() as u64;
+        crate::record!(self.recorder(), start Op::Send, len);
+        let sent = self.transport.send(dst, bytes).map_err(|e| CommError::send(dst, e));
+        crate::record!(self.recorder(), end Op::Send, len);
+        sent
     }
 
     /// Block until a payload from `src` arrives. A transport fault
@@ -127,7 +167,12 @@ impl<T: Transport> RankHandle<T> {
     /// link, but the caller decides how loudly to fail.
     pub fn recv(&self, src: usize) -> Result<Vec<u8>, CommError> {
         assert_ne!(src, self.rank);
-        self.transport.recv(src).map_err(|e| CommError::recv(src, e))
+        crate::record!(self.recorder(), start Op::Recv);
+        let got = self.transport.recv(src).map_err(|e| CommError::recv(src, e));
+        if let Ok(bytes) = &got {
+            crate::record!(self.recorder(), end Op::Recv, bytes.len() as u64);
+        }
+        got
     }
 
     /// The node topology this fabric models.
@@ -256,7 +301,7 @@ mod tests {
     }
 
     #[test]
-    fn snapshot_and_reset_between_runs() {
+    fn snapshot_deltas_replace_reset_between_runs() {
         let topo = Topology::new(presets::h800(), 2);
         let (_, counters) = run_ranks(&topo, |h| {
             if h.rank == 0 {
@@ -265,11 +310,46 @@ mod tests {
                 let _ = h.recv(0).unwrap();
             }
         });
-        // At rest, snapshot is coherent and reset clears everything.
-        let snap = counters.snapshot();
-        assert_eq!(snap, CountersSnapshot { total: 64, cross_numa: 0, messages: 1 });
-        counters.reset();
-        assert_eq!(counters.snapshot(), CountersSnapshot::default());
+        // At rest, the snapshot is coherent; it becomes this reader's
+        // epoch baseline. Counters stay monotone — a second measurement
+        // window subtracts the baseline instead of resetting shared state
+        // (the old `reset()` could tear totals under concurrent senders).
+        let epoch = counters.snapshot();
+        assert_eq!(epoch, CountersSnapshot { total: 64, cross_numa: 0, messages: 1 });
+        counters.total.fetch_add(100, Ordering::Relaxed);
+        counters.messages.fetch_add(2, Ordering::Relaxed);
+        let delta = counters.snapshot().since(&epoch);
+        assert_eq!(delta, CountersSnapshot { total: 100, cross_numa: 0, messages: 2 });
+        // A reader with a fresh (zero) epoch sees lifetime totals.
+        assert_eq!(counters.snapshot().since(&CountersSnapshot::default()).total, 164);
+    }
+
+    #[test]
+    fn handles_record_send_and_recv_spans_when_enabled() {
+        use crate::telemetry::{Kind, Recorder};
+        let topo = Topology::new(presets::h800(), 2);
+        let (recorders, _) = run_ranks(&topo, |mut h| {
+            let rec = Arc::new(Recorder::new(h.rank, 64));
+            h.set_recorder(Some(rec.clone()));
+            if h.rank == 0 {
+                h.send(1, vec![0u8; 48]).unwrap();
+            } else {
+                let _ = h.recv(0).unwrap();
+            }
+            rec
+        });
+        let sends = recorders[0].events();
+        assert_eq!(sends.len(), 2);
+        assert_eq!((sends[0].kind, sends[0].op), (Kind::Start, Op::Send));
+        assert_eq!((sends[1].kind, sends[1].op), (Kind::End, Op::Send));
+        assert_eq!(sends[1].bytes, 48);
+        assert_eq!(sends[1].rank, 0);
+        let recvs = recorders[1].events();
+        assert_eq!(recvs.len(), 2);
+        assert_eq!((recvs[0].kind, recvs[0].op), (Kind::Start, Op::Recv));
+        assert_eq!(recvs[0].bytes, 0, "recv start cannot know the payload yet");
+        assert_eq!((recvs[1].kind, recvs[1].op), (Kind::End, Op::Recv));
+        assert_eq!(recvs[1].bytes, 48);
     }
 
     #[test]

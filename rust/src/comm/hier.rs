@@ -33,6 +33,8 @@ use super::{chunk_range, communicator::Communicator, encode, error::CommError, A
 use crate::comm::fabric::RankHandle;
 use crate::plan::StageCodecs;
 use crate::quant::{Codec, CodecBuffers};
+use crate::record;
+use crate::telemetry::{codec_tag, Op, Stage};
 use crate::topo::Topology;
 use crate::transport::Transport;
 
@@ -54,7 +56,12 @@ pub(crate) fn cross_group_reduce<T: Transport>(
 ) -> Result<(), CommError> {
     let gcount = topo.numa_groups;
     let g = topo.group_of(h.rank);
+    if let Some(rec) = h.recorder() {
+        rec.set_stage(Stage::CrossGroup, codec_tag(codec));
+    }
+    record!(h.recorder(), start Op::Encode, acc.len() as u64);
     let wire_mine = encode(codec, acc, bufs, threads)?;
+    record!(h.recorder(), end Op::Encode, wire_mine.len() as u64);
     let mut by_group: Vec<Vec<u8>> = vec![Vec::new(); gcount];
     by_group[g] = wire_mine;
     let next = topo.peer_in_group(h.rank, (g + 1) % gcount);
@@ -70,8 +77,10 @@ pub(crate) fn cross_group_reduce<T: Transport>(
         // Blame decode failures on the payload's *origin* — group src_g's
         // column member (one of the images is this rank's own encoding).
         let src = topo.peer_in_group(h.rank, src_g);
+        record!(h.recorder(), start Op::DecodeSum, acc.len() as u64);
         Codec::decode_sum_with_threads(wire, bufs, acc, threads)
             .map_err(|e| CommError::decode(src, e))?;
+        record!(h.recorder(), end Op::DecodeSum, wire.len() as u64);
     }
     Ok(())
 }
@@ -97,11 +106,17 @@ pub(crate) fn allreduce_staged<T: Transport>(
     let j = h.rank - group.start; // index within the group
 
     // Stage 1 — partial reduce-scatter within the group.
+    if let Some(rec) = h.recorder() {
+        rec.set_stage(Stage::ReduceScatter, codec_tag(&stages.intra_rs));
+    }
     for peer_j in 0..s {
         let peer = group.start + peer_j;
         if peer != h.rank {
             let r = chunk_range(data.len(), s, peer_j);
-            h.send(peer, encode(&stages.intra_rs, &data[r], bufs, t)?)?;
+            record!(h.recorder(), start Op::Encode, r.len() as u64);
+            let wire = encode(&stages.intra_rs, &data[r], bufs, t)?;
+            record!(h.recorder(), end Op::Encode, wire.len() as u64);
+            h.send(peer, wire)?;
         }
     }
     let own = chunk_range(data.len(), s, j);
@@ -111,8 +126,10 @@ pub(crate) fn allreduce_staged<T: Transport>(
         let peer = group.start + peer_j;
         if peer != h.rank {
             let wire = h.recv(peer)?;
+            record!(h.recorder(), start Op::DecodeSum, acc.len() as u64);
             Codec::decode_sum_with_threads(&wire, bufs, acc, t)
                 .map_err(|e| CommError::decode(peer, e))?;
+            record!(h.recorder(), end Op::DecodeSum, wire.len() as u64);
         }
     }
 
@@ -125,22 +142,31 @@ pub(crate) fn allreduce_staged<T: Transport>(
     cross_group_reduce(h, bufs, acc, &stages.cross, t, &topo)?;
 
     // Stage 3 — partial all-gather within the group.
+    if let Some(rec) = h.recorder() {
+        rec.set_stage(Stage::AllGather, codec_tag(&stages.intra_ag));
+    }
+    record!(h.recorder(), start Op::Encode, acc.len() as u64);
     let wire = encode(&stages.intra_ag, acc, bufs, t)?;
+    record!(h.recorder(), end Op::Encode, wire.len() as u64);
     for peer_j in 0..s {
         let p = group.start + peer_j;
         if p != h.rank {
             h.send(p, wire.clone())?;
         }
     }
+    record!(h.recorder(), start Op::Decode, own.len() as u64);
     Codec::decode_with_threads(&wire, bufs, &mut data[own], t)
         .map_err(|e| CommError::decode(h.rank, e))?;
+    record!(h.recorder(), end Op::Decode, wire.len() as u64);
     for peer_j in 0..s {
         let p = group.start + peer_j;
         if p != h.rank {
             let wire = h.recv(p)?;
             let r = chunk_range(data.len(), s, peer_j);
+            record!(h.recorder(), start Op::Decode, r.len() as u64);
             Codec::decode_with_threads(&wire, bufs, &mut data[r], t)
                 .map_err(|e| CommError::decode(p, e))?;
+            record!(h.recorder(), end Op::Decode, wire.len() as u64);
         }
     }
     Ok(())
@@ -484,6 +510,47 @@ mod tests {
             .map(|t| HashingTransport { inner: t, log: log.clone() })
             .collect();
         (endpoints, log)
+    }
+
+    #[test]
+    fn recording_leaves_wire_bytes_bit_identical() {
+        // Telemetry must be a pure observer: with the flight recorder
+        // enabled, every link carries the exact same bytes in the exact
+        // same order (golden per-link wire hashes) and every rank lands on
+        // the exact same bits as the unrecorded run.
+        let topo = Topology::new(presets::l40(), 8);
+        let inputs: Vec<Vec<f32>> = (0..8)
+            .map(|r| {
+                let mut rng = crate::util::Prng::new(4200 + r as u64);
+                let mut v = vec![0f32; 3000];
+                rng.fill_activations(&mut v, 1.0);
+                v
+            })
+            .collect();
+        let codec = Codec::parse("int4@32").unwrap();
+        let ir = &inputs;
+        let run = |record: bool| {
+            let (endpoints, log) = hashed_mesh(8);
+            let (results, _) = run_ranks_with(endpoints, &topo, |h: RankHandle<_>| {
+                let mut c = Communicator::from_handle(h);
+                if record {
+                    c.enable_recording(256);
+                }
+                let mut d = ir[c.rank()].clone();
+                allreduce(&mut c, &mut d, &codec).unwrap();
+                d
+            });
+            let log = Arc::try_unwrap(log).unwrap().into_inner().unwrap();
+            (results, log)
+        };
+        let (off_r, off_log) = run(false);
+        let (on_r, on_log) = run(true);
+        assert_eq!(on_log, off_log, "recording must not change a single wire byte");
+        for r in 0..8 {
+            let a: Vec<u32> = on_r[r].iter().map(|x| x.to_bits()).collect();
+            let b: Vec<u32> = off_r[r].iter().map(|x| x.to_bits()).collect();
+            assert_eq!(a, b, "rank {r} numerics diverge under recording");
+        }
     }
 
     #[test]

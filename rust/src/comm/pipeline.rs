@@ -29,6 +29,8 @@ use super::{chunk_range, communicator::Communicator, encode, error::CommError, h
 use crate::comm::fabric::RankHandle;
 use crate::plan::StageCodecs;
 use crate::quant::{Codec, CodecBuffers};
+use crate::record;
+use crate::telemetry::{codec_tag, Op, Stage};
 use crate::transport::Transport;
 
 /// Default micro-chunk count (the sim's Fig. 8 sweep peaks around 8).
@@ -59,11 +61,18 @@ fn send_rs_chunk<T: Transport>(
     let group = topo.group_members(h.rank);
     let mr = chunk_range(data.len(), k, chunk);
     let micro = &data[mr];
+    if let Some(rec) = h.recorder() {
+        rec.set_stage(Stage::ReduceScatter, codec_tag(codec));
+        rec.set_chunk(chunk as u32);
+    }
     for peer_j in 0..s {
         let peer = group.start + peer_j;
         if peer != h.rank {
             let r = chunk_range(micro.len(), s, peer_j);
-            h.send(peer, encode(codec, &micro[r], bufs, threads)?)?;
+            record!(h.recorder(), start Op::Encode, r.len() as u64);
+            let wire = encode(codec, &micro[r], bufs, threads)?;
+            record!(h.recorder(), end Op::Encode, wire.len() as u64);
+            h.send(peer, wire)?;
         }
     }
     Ok(())
@@ -112,12 +121,18 @@ pub(crate) fn allreduce_planned<T: Transport>(
         let acc = &mut reduced[chunk];
         acc.clear();
         acc.extend_from_slice(&micro[own]);
+        if let Some(rec) = h.recorder() {
+            rec.set_stage(Stage::ReduceScatter, codec_tag(&stages.intra_rs));
+            rec.set_chunk(chunk as u32);
+        }
         for peer_j in 0..s {
             let peer = group.start + peer_j;
             if peer != h.rank {
                 let wire = h.recv(peer)?;
+                record!(h.recorder(), start Op::DecodeSum, acc.len() as u64);
                 Codec::decode_sum_with_threads(&wire, bufs, acc, t)
                     .map_err(|e| CommError::decode(peer, e))?;
+                record!(h.recorder(), end Op::DecodeSum, wire.len() as u64);
             }
         }
         // Cross-group column ring for this micro-chunk: the G encoded
@@ -137,7 +152,13 @@ pub(crate) fn allreduce_planned<T: Transport>(
     // step, and at most ~one chunk per link is ever queued.
     for chunk in 0..k {
         let acc = &reduced[chunk];
+        if let Some(rec) = h.recorder() {
+            rec.set_stage(Stage::AllGather, codec_tag(&stages.intra_ag));
+            rec.set_chunk(chunk as u32);
+        }
+        record!(h.recorder(), start Op::Encode, acc.len() as u64);
         let wire = encode(&stages.intra_ag, acc, bufs, t)?;
+        record!(h.recorder(), end Op::Encode, wire.len() as u64);
         for peer_j in 0..s {
             let p = group.start + peer_j;
             if p != h.rank {
@@ -147,16 +168,20 @@ pub(crate) fn allreduce_planned<T: Transport>(
         let mr = chunk_range(data.len(), k, chunk);
         let own = chunk_range(mr.len(), s, j);
         let own_abs = mr.start + own.start..mr.start + own.end;
+        record!(h.recorder(), start Op::Decode, own_abs.len() as u64);
         Codec::decode_with_threads(&wire, bufs, &mut data[own_abs], t)
             .map_err(|e| CommError::decode(h.rank, e))?;
+        record!(h.recorder(), end Op::Decode, wire.len() as u64);
         for peer_j in 0..s {
             let p = group.start + peer_j;
             if p != h.rank {
                 let wire = h.recv(p)?;
                 let r = chunk_range(mr.len(), s, peer_j);
                 let abs = mr.start + r.start..mr.start + r.end;
+                record!(h.recorder(), start Op::Decode, abs.len() as u64);
                 Codec::decode_with_threads(&wire, bufs, &mut data[abs], t)
                     .map_err(|e| CommError::decode(p, e))?;
+                record!(h.recorder(), end Op::Decode, wire.len() as u64);
             }
         }
     }

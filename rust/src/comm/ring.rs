@@ -9,6 +9,8 @@
 
 use super::{chunk_range, communicator::Communicator, encode, error::CommError};
 use crate::quant::Codec;
+use crate::record;
+use crate::telemetry::{codec_tag, Op, Stage};
 use crate::transport::Transport;
 
 /// In-place ring AllReduce of `data` across all ranks.
@@ -27,6 +29,9 @@ pub(crate) fn allreduce<T: Transport>(
     }
     let next = (h.rank + 1) % n;
     let prev = (h.rank + n - 1) % n;
+    if let Some(rec) = h.recorder() {
+        rec.set_stage(Stage::Single, codec_tag(codec));
+    }
 
     // Reduce-scatter: after N-1 hops, rank owns the full sum of chunk
     // (rank + 1) % n.
@@ -34,13 +39,18 @@ pub(crate) fn allreduce<T: Transport>(
         let send_c = (h.rank + n - step) % n;
         let recv_c = (h.rank + n - step - 1) % n;
         let sr = chunk_range(data.len(), n, send_c);
-        h.send(next, encode(codec, &data[sr], bufs, t)?)?;
+        record!(h.recorder(), start Op::Encode, sr.len() as u64);
+        let wire_out = encode(codec, &data[sr], bufs, t)?;
+        record!(h.recorder(), end Op::Encode, wire_out.len() as u64);
+        h.send(next, wire_out)?;
         let wire = h.recv(prev)?;
         let rr = chunk_range(data.len(), n, recv_c);
         scratch.resize(rr.len(), 0.0);
         scratch.copy_from_slice(&data[rr.clone()]);
+        record!(h.recorder(), start Op::DecodeSum, scratch.len() as u64);
         Codec::decode_sum_with_threads(&wire, bufs, scratch, t)
             .map_err(|e| CommError::decode(prev, e))?;
+        record!(h.recorder(), end Op::DecodeSum, wire.len() as u64);
         data[rr].copy_from_slice(scratch);
     }
 
@@ -49,22 +59,31 @@ pub(crate) fn allreduce<T: Transport>(
     let own = (h.rank + 1) % n;
     {
         let or = chunk_range(data.len(), n, own);
+        record!(h.recorder(), start Op::Encode, or.len() as u64);
         let wire = encode(codec, &data[or.clone()], bufs, t)?;
+        record!(h.recorder(), end Op::Encode, wire.len() as u64);
         scratch.resize(or.len(), 0.0);
+        record!(h.recorder(), start Op::Decode, scratch.len() as u64);
         Codec::decode_with_threads(&wire, bufs, scratch, t)
             .map_err(|e| CommError::decode(h.rank, e))?;
+        record!(h.recorder(), end Op::Decode, wire.len() as u64);
         data[or].copy_from_slice(scratch);
     }
     for step in 0..n - 1 {
         let send_c = (h.rank + 1 + n - step) % n;
         let recv_c = (h.rank + n - step) % n;
         let sr = chunk_range(data.len(), n, send_c);
-        h.send(next, encode(codec, &data[sr], bufs, t)?)?;
+        record!(h.recorder(), start Op::Encode, sr.len() as u64);
+        let wire_out = encode(codec, &data[sr], bufs, t)?;
+        record!(h.recorder(), end Op::Encode, wire_out.len() as u64);
+        h.send(next, wire_out)?;
         let wire = h.recv(prev)?;
         let rr = chunk_range(data.len(), n, recv_c);
         scratch.resize(rr.len(), 0.0);
+        record!(h.recorder(), start Op::Decode, scratch.len() as u64);
         Codec::decode_with_threads(&wire, bufs, scratch, t)
             .map_err(|e| CommError::decode(prev, e))?;
+        record!(h.recorder(), end Op::Decode, wire.len() as u64);
         data[rr].copy_from_slice(scratch);
     }
     Ok(())

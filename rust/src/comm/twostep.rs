@@ -11,6 +11,8 @@
 
 use super::{chunk_range, communicator::Communicator, encode, error::CommError};
 use crate::quant::Codec;
+use crate::record;
+use crate::telemetry::{codec_tag, Op, Stage};
 use crate::transport::Transport;
 
 /// In-place two-step AllReduce of `data` across all ranks.
@@ -39,10 +41,16 @@ pub(crate) fn reduce_scatter<T: Transport>(
     if n == 1 {
         return Ok(own);
     }
+    if let Some(rec) = h.recorder() {
+        rec.set_stage(Stage::ReduceScatter, codec_tag(codec));
+    }
     for dst in 0..n {
         if dst != h.rank {
             let r = chunk_range(data.len(), n, dst);
-            h.send(dst, encode(codec, &data[r], bufs, t)?)?;
+            record!(h.recorder(), start Op::Encode, r.len() as u64);
+            let wire = encode(codec, &data[r], bufs, t)?;
+            record!(h.recorder(), end Op::Encode, wire.len() as u64);
+            h.send(dst, wire)?;
         }
     }
     acc.clear();
@@ -50,8 +58,10 @@ pub(crate) fn reduce_scatter<T: Transport>(
     for src in 0..n {
         if src != h.rank {
             let wire = h.recv(src)?;
+            record!(h.recorder(), start Op::DecodeSum, acc.len() as u64);
             Codec::decode_sum_with_threads(&wire, bufs, acc, t)
                 .map_err(|e| CommError::decode(src, e))?;
+            record!(h.recorder(), end Op::DecodeSum, wire.len() as u64);
         }
     }
     data[own.clone()].copy_from_slice(acc);
@@ -71,21 +81,30 @@ pub(crate) fn all_gather<T: Transport>(
     if n == 1 {
         return Ok(());
     }
+    if let Some(rec) = h.recorder() {
+        rec.set_stage(Stage::AllGather, codec_tag(codec));
+    }
     let own = chunk_range(data.len(), n, h.rank);
+    record!(h.recorder(), start Op::Encode, own.len() as u64);
     let wire = encode(codec, &data[own.clone()], bufs, t)?;
+    record!(h.recorder(), end Op::Encode, wire.len() as u64);
     for dst in 0..n {
         if dst != h.rank {
             h.send(dst, wire.clone())?;
         }
     }
+    record!(h.recorder(), start Op::Decode, own.len() as u64);
     Codec::decode_with_threads(&wire, bufs, &mut data[own], t)
         .map_err(|e| CommError::decode(h.rank, e))?;
+    record!(h.recorder(), end Op::Decode, wire.len() as u64);
     for src in 0..n {
         if src != h.rank {
             let wire = h.recv(src)?;
             let r = chunk_range(data.len(), n, src);
+            record!(h.recorder(), start Op::Decode, r.len() as u64);
             Codec::decode_with_threads(&wire, bufs, &mut data[r], t)
                 .map_err(|e| CommError::decode(src, e))?;
+            record!(h.recorder(), end Op::Decode, wire.len() as u64);
         }
     }
     Ok(())
@@ -108,19 +127,28 @@ pub(crate) fn broadcast<T: Transport>(
     if n == 1 {
         return Ok(());
     }
+    if let Some(rec) = h.recorder() {
+        rec.set_stage(Stage::Single, codec_tag(codec));
+    }
     if h.rank == root {
+        record!(h.recorder(), start Op::Encode, data.len() as u64);
         let wire = encode(codec, data, bufs, t)?;
+        record!(h.recorder(), end Op::Encode, wire.len() as u64);
         for dst in 0..n {
             if dst != root {
                 h.send(dst, wire.clone())?;
             }
         }
+        record!(h.recorder(), start Op::Decode, data.len() as u64);
         Codec::decode_with_threads(&wire, bufs, data, t)
             .map_err(|e| CommError::decode(root, e))?;
+        record!(h.recorder(), end Op::Decode, wire.len() as u64);
     } else {
         let wire = h.recv(root)?;
+        record!(h.recorder(), start Op::Decode, data.len() as u64);
         Codec::decode_with_threads(&wire, bufs, data, t)
             .map_err(|e| CommError::decode(root, e))?;
+        record!(h.recorder(), end Op::Decode, wire.len() as u64);
     }
     Ok(())
 }

@@ -23,6 +23,8 @@ use crate::model::{shard_param, Batch, ModelConfig, Weights};
 use crate::plan::PlanPolicy;
 use crate::quant::Codec;
 use crate::runtime::{tokens_literal, Runtime, Tensor};
+use crate::sim::MeasuredProfile;
+use crate::telemetry::MetricsSnapshot;
 
 /// Per-layer, per-shard weight literals, prepared once.
 struct LayerShards {
@@ -298,6 +300,37 @@ impl TpEngine {
     /// The active plan policy, when the engine drives the plan layer.
     pub fn plan_policy(&self) -> Option<&PlanPolicy> {
         self.group.as_ref().and_then(LocalGroup::plan_policy)
+    }
+
+    /// Turn the flight recorder on for every TP shard
+    /// ([`LocalGroup::enable_recording`]). No-op with `tp = 1`: nothing
+    /// crosses a wire, so there is nothing to record. Note that
+    /// [`TpEngine::set_codec`] / [`TpEngine::set_plan_policy`] may rebuild
+    /// the rank group, dropping the recorders — re-enable after swapping.
+    pub fn enable_recording(&mut self, capacity: usize) {
+        if let Some(group) = &mut self.group {
+            group.enable_recording(capacity);
+        }
+    }
+
+    /// Per-shard flight-recorder trace JSON, rank order (empty while
+    /// recording is off or with `tp = 1`). Schema: DESIGN.md §11.
+    pub fn trace_jsons(&self) -> Vec<String> {
+        self.group.as_ref().map(LocalGroup::trace_jsons).unwrap_or_default()
+    }
+
+    /// Distill a [`MeasuredProfile`] from the shards' recorded traces and
+    /// install it on every shard, so subsequent `--plan auto` resolution
+    /// prices the measured rates
+    /// ([`LocalGroup::recalibrate_from_recorders`]).
+    pub fn recalibrate_from_recorders(&mut self) -> Option<MeasuredProfile> {
+        self.group.as_mut()?.recalibrate_from_recorders()
+    }
+
+    /// Group-wide metrics snapshot over the boundary AllReduces
+    /// ([`LocalGroup::metrics_snapshot`]); `None` with `tp = 1`.
+    pub fn metrics_snapshot(&self) -> Option<MetricsSnapshot> {
+        self.group.as_ref().map(LocalGroup::metrics_snapshot)
     }
 
     /// The head-piece weight literals (lnf_g, lnf_b, tied embedding) — used

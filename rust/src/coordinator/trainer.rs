@@ -40,6 +40,10 @@ pub struct TrainOptions {
     pub log_every: usize,
     pub eval_every: usize,
     pub eval_batches: usize,
+    /// When set (`--trace-out` on the CLI), the DP rank group flight-records
+    /// every gradient AllReduce and [`Trainer::train`] writes one trace JSON
+    /// per rank to `{trace_out}.rank{r}` after the last step.
+    pub trace_out: Option<String>,
 }
 
 impl Default for TrainOptions {
@@ -55,6 +59,7 @@ impl Default for TrainOptions {
             log_every: 10,
             eval_every: 0,
             eval_batches: 8,
+            trace_out: None,
         }
     }
 }
@@ -142,10 +147,13 @@ impl Trainer {
         }
         let key = (opts.dp, opts.groups, opts.algo, opts.plan);
         if self.group.as_ref().map(|(k, _)| *k != key).unwrap_or(true) {
-            let group = match opts.plan {
+            let mut group = match opts.plan {
                 Some(plan) => LocalGroup::for_plan_grouped(opts.dp, opts.groups, plan)?,
                 None => LocalGroup::for_policy_grouped(opts.dp, opts.groups, opts.algo)?,
             };
+            if opts.trace_out.is_some() {
+                group.enable_recording(crate::telemetry::DEFAULT_CAPACITY);
+            }
             self.group = Some((key, group));
         }
         let (_, group) = self.group.as_mut().unwrap();
@@ -245,7 +253,32 @@ impl Trainer {
             }
             records.push(rec);
         }
+        if let Some(path) = &opts.trace_out {
+            self.dump_traces(path)?;
+        }
         Ok(records)
+    }
+
+    /// Write one flight-recorder trace JSON per DP rank (`{path}.rank{r}`)
+    /// and log the bandwidth profile distilled from the recorded spans —
+    /// the live measurements `--plan auto` resolution recalibrates the
+    /// static topology with (DESIGN.md §11).
+    pub fn dump_traces(&mut self, path: &str) -> Result<()> {
+        let Some((_, group)) = self.group.as_mut() else {
+            println!("recalibration: no measurable spans (dp=1 runs no collective)");
+            return Ok(());
+        };
+        match group.recalibrate_from_recorders() {
+            Some(p) => println!("recalibration: {}", p.summary()),
+            None => println!("recalibration: no measurable spans"),
+        }
+        let traces = group.trace_jsons();
+        for (r, json) in traces.iter().enumerate() {
+            let file = format!("{path}.rank{r}");
+            std::fs::write(&file, json).with_context(|| format!("writing trace {file}"))?;
+        }
+        println!("wrote {} gradient-collective traces to {path}.rank*", traces.len());
+        Ok(())
     }
 
     /// Export the current parameters as a weight bundle (checkpointing).

@@ -23,6 +23,10 @@
 //! - [`topo`] / [`sim`] — device topology presets (Table 6) and the link
 //!   simulator producing algorithmic-bandwidth estimates (Tables 5, 9, 10)
 //!   that also powers `AlgoPolicy::Auto` and the plan compiler.
+//! - [`telemetry`] — the flight recorder (lock-free per-rank event ring),
+//!   the metrics registry (one snapshot/export path for spans, byte
+//!   counters, and plan-cache statistics), and the trace→profile
+//!   distillation behind profile-guided plan recalibration.
 //! - [`runtime`] — PJRT CPU client wrapper loading AOT HLO artifacts.
 //! - [`model`] — weights/tokenizer/corpus/checkpoint handling.
 //! - [`coordinator`] — TP inference engine, DP trainer, EP dispatcher, TTFT
@@ -40,6 +44,7 @@ pub mod plan;
 pub mod quant;
 pub mod runtime;
 pub mod sim;
+pub mod telemetry;
 pub mod topo;
 pub mod transport;
 pub mod util;

@@ -6,16 +6,20 @@
 //! flashcomm train   [--config tiny] [--steps N] [--dp N] [--codec spec]
 //!                   [--algo ring|twostep|hier|hierpp|auto] [--groups G]
 //!                   [--plan auto|spec] [--chunks K] [--window W]
-//!                   [--out ckpt.bin]
+//!                   [--out ckpt.bin] [--trace-out path]
 //! flashcomm eval    [--config tiny] [--ckpt path] [--codec spec]
 //!                   [--algo twostep|hier|auto] [--groups G] [--batches N]
 //!                   [--plan auto|spec] [--chunks K] [--window W]
+//!                   [--trace-out path]
 //! flashcomm ttft    [--prompt N] [--batch N]
 //! flashcomm worker  [--world N] [--algo hier|auto] [--groups G]
 //!                   [--codecs int4@32,int2-sr@32] [--len N]
 //!                   [--root host:port] [--rank R] [--codec-threads T]
 //!                   [--plan auto|spec] [--chunks K] [--window W]
-//!                   [--bind ip] [--inter-gbps F]
+//!                   [--bind ip] [--inter-gbps F] [--trace-out path]
+//! flashcomm metrics [--ranks N] [--groups G] [--codec spec] [--len N]
+//!                   [--iters K] [--plan auto|spec] [--out path]
+//!                   [--trace-out path]
 //! flashcomm info
 //! ```
 //!
@@ -32,19 +36,23 @@
 //! pins one. `--chunks`/`--window` pin those knobs in either mode.
 //! `--inter-gbps F` models G NVLink nodes joined by an F GB/s link;
 //! `--bind ip` lets worker data sockets leave loopback (DESIGN.md §4).
+//! `--trace-out p` turns on the flight recorder and writes one JSON trace
+//! per rank to `p.rankR` (schema: DESIGN.md §11); `metrics` runs a small
+//! recorded in-process demo and prints the aggregated metrics snapshot.
 
 use std::sync::Arc;
 
 use anyhow::{bail, ensure, Context, Result};
 
 use flashcomm::cli::Args;
-use flashcomm::comm::{fabric, preset_topo_custom, AlgoPolicy, Communicator};
+use flashcomm::comm::{fabric, preset_topo_custom, AlgoPolicy, Communicator, LocalGroup};
 use flashcomm::coordinator::{TpEngine, TrainOptions, Trainer};
 use flashcomm::harness;
 use flashcomm::model::{Corpus, ModelConfig, Sampler, Weights};
 use flashcomm::plan::{CommPlan, PlanPins, PlanPolicy};
 use flashcomm::quant::Codec;
 use flashcomm::runtime::{default_artifacts_dir, Runtime};
+use flashcomm::telemetry::DEFAULT_CAPACITY;
 use flashcomm::transport::{frame, tcp, TcpTransport, Transport};
 use flashcomm::util::Prng;
 
@@ -74,6 +82,7 @@ fn run(args: &Args) -> Result<()> {
             harness::run_figure(&a)
         }
         "worker" => cmd_worker(args),
+        "metrics" => cmd_metrics(args),
         "info" => cmd_info(),
         "" | "help" | "--help" => {
             print!("{HELP}");
@@ -165,6 +174,8 @@ commands:
   worker              multi-process quantized AllReduce over the TCP fabric
                       (spawns one OS process per rank; verifies bit-identical
                       results vs the in-process backend)
+  metrics             recorded in-process AllReduce demo; prints the
+                      aggregated metrics snapshot as JSON on stdout
   info                artifacts / manifest / device presets
 
 common flags: --quick (small sweep), --steps N, --batches N, --codec SPEC
@@ -181,6 +192,9 @@ plan: --plan auto — compile a full communication plan per payload
 worker: --bind IP — bind data listeners beyond loopback (multi-node);
       --inter-gbps F — model G NVLink nodes joined by an F GB/s link
       (the tier-asymmetric shape where auto plans mix stage codecs)
+trace: --trace-out P — flight-record every collective and write one JSON
+      trace per rank to P.rankR (train / eval / worker / metrics;
+      schema + recalibration formula in DESIGN.md §11)
 ";
 
 fn cmd_train(args: &Args) -> Result<()> {
@@ -212,6 +226,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         eval_every: args.flag_usize("eval-every", 50)?,
         eval_batches: args.flag_usize("eval-batches", 8)?,
         seed: args.flag_usize("seed", 7)? as u64,
+        trace_out: args.flag("trace-out").map(str::to_string),
     };
     let policy_label = match &opts.plan {
         Some(p) => format!("plan {p}"),
@@ -272,6 +287,10 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let plan = plan_policy_for(args.flag("plan"), pins_flags(args)?, policy, &codec)?;
     let mut engine =
         TpEngine::new_grouped(rt, cfg, &weights, codec, policy, groups_flag(args)?, plan)?;
+    let trace_out = args.flag("trace-out").map(str::to_string);
+    if trace_out.is_some() {
+        engine.enable_recording(DEFAULT_CAPACITY);
+    }
     let policy_label = match &plan {
         Some(p) => format!("--plan {p}"),
         None => format!("--algo {policy}"),
@@ -285,6 +304,25 @@ fn cmd_eval(args: &Args) -> Result<()> {
         batches.len(),
         t0.elapsed().as_secs_f64()
     );
+    if let Some(path) = &trace_out {
+        match engine.recalibrate_from_recorders() {
+            Some(p) => println!("recalibration: {}", p.summary()),
+            None => println!("recalibration: no measurable spans"),
+        }
+        write_traces(path, &engine.trace_jsons())?;
+    }
+    Ok(())
+}
+
+/// Write one flight-recorder trace JSON per rank to `{path}.rank{r}`
+/// (status lines go to stderr so `metrics` output stays pipeable).
+fn write_traces(path: &str, traces: &[String]) -> Result<()> {
+    ensure!(!traces.is_empty(), "--trace-out: no rank recorded a trace");
+    for (r, json) in traces.iter().enumerate() {
+        let file = format!("{path}.rank{r}");
+        std::fs::write(&file, json).with_context(|| format!("writing trace {file}"))?;
+    }
+    eprintln!("wrote {} flight-recorder traces to {path}.rank*", traces.len());
     Ok(())
 }
 
@@ -324,6 +362,9 @@ struct WorkerOpts {
     /// Raw `--plan` value (`auto` or a spec, resolved per base codec).
     plan: Option<String>,
     pins: PlanPins,
+    /// When set, every rank flight-records its collectives and writes the
+    /// trace JSON to `{trace_out}.rank{R}` before exiting.
+    trace_out: Option<String>,
 }
 
 impl WorkerOpts {
@@ -348,6 +389,7 @@ impl WorkerOpts {
             },
             plan: args.flag("plan").map(str::to_string),
             pins: pins_flags(args)?,
+            trace_out: args.flag("trace-out").map(str::to_string),
         };
         // Validate once here rather than erroring in every spawned
         // process: the topology must construct (world divisible into
@@ -426,6 +468,9 @@ fn worker_launch(opts: &WorkerOpts, root: Option<&str>) -> Result<()> {
         if let Some(p) = &opts.plan {
             cmd.args(["--plan", p]);
         }
+        if let Some(t) = &opts.trace_out {
+            cmd.args(["--trace-out", t]);
+        }
         if let Some(c) = opts.pins.chunks {
             cmd.args(["--chunks", &c.to_string()]);
         }
@@ -459,6 +504,9 @@ fn worker_rank(rank: usize, opts: &WorkerOpts, root: &str) -> Result<()> {
     let mut comm =
         Communicator::new(tcp, topo.clone(), Arc::new(fabric::ByteCounters::default()))?;
     comm.set_codec_threads(opts.codec_threads);
+    if opts.trace_out.is_some() {
+        comm.enable_recording(DEFAULT_CAPACITY);
+    }
 
     // Deterministic heavy-tailed inputs, identical in every process (and in
     // the in-process reference below).
@@ -526,6 +574,40 @@ fn worker_rank(rank: usize, opts: &WorkerOpts, root: &str) -> Result<()> {
         );
     }
 
+    // Every rank must have resolved the *same* plan for the last
+    // collective (the compiler is deterministic, so this holds without
+    // coordination): allgather the 8-byte plan fingerprint over the mesh
+    // and require unanimity.
+    {
+        let fp = comm.last_plan().map(|(_, f)| *f).unwrap_or(0);
+        let h = comm.handle();
+        for peer in (0..world).filter(|&p| p != rank) {
+            h.send(peer, fp.to_le_bytes().to_vec())?;
+        }
+        for peer in (0..world).filter(|&p| p != rank) {
+            let bytes = h.recv(peer)?;
+            ensure!(bytes.len() == 8, "fingerprint allgather: bad frame from rank {peer}");
+            let theirs = u64::from_le_bytes(bytes.try_into().expect("length checked"));
+            ensure!(
+                theirs == fp,
+                "[rank {rank}] resolved-plan fingerprint diverges from rank {peer}: \
+                 {fp:#018x} vs {theirs:#018x}"
+            );
+        }
+        println!("[rank {rank}] resolved-plan fingerprint {fp:#018x} matches all {world} ranks");
+    }
+
+    match comm.recalibrate_from_recorder() {
+        Some(p) => println!("[rank {rank}] recalibration: {}", p.summary()),
+        None => println!("[rank {rank}] recalibration: no measurable spans"),
+    }
+    if let Some(path) = &opts.trace_out {
+        let json = comm.trace_json().expect("recording was enabled");
+        let file = format!("{path}.rank{rank}");
+        std::fs::write(&file, &json).with_context(|| format!("writing trace {file}"))?;
+        println!("[rank {rank}] wrote trace {file}");
+    }
+
     let stats = comm.transport().stats();
     println!(
         "[rank {rank}] sent {} messages, {} payload B, {} wire B ({} B framing)",
@@ -546,6 +628,54 @@ fn worker_rank(rank: usize, opts: &WorkerOpts, root: &str) -> Result<()> {
             Err(e) => println!("[rank 0] corrupted frame correctly rejected: {e}"),
             Ok(_) => bail!("corrupted frame was not rejected"),
         }
+    }
+    Ok(())
+}
+
+/// `metrics` — run a small flight-recorded in-process AllReduce demo and
+/// print the aggregated metrics snapshot as JSON on stdout (schema:
+/// DESIGN.md §11). Human-oriented status lines go to stderr so the JSON
+/// stays pipeable. Defaults to `--plan auto`, so the snapshot also
+/// exercises the plan cache (first iteration misses, the rest hit) and
+/// reports the last resolved plan.
+fn cmd_metrics(args: &Args) -> Result<()> {
+    let ranks = args.flag_usize("ranks", 8)?;
+    ensure!(ranks >= 2, "metrics demo needs at least 2 ranks (got --ranks {ranks})");
+    let len = args.flag_usize("len", 1 << 16)?;
+    let iters = args.flag_usize("iters", 4)?;
+    ensure!(iters >= 1, "metrics demo needs at least 1 iteration (got --iters {iters})");
+    let codec = Codec::parse(&args.flag_or("codec", "int4@32"))?;
+    let policy: AlgoPolicy = args.flag_or("algo", "auto").parse()?;
+    let plan_spec = args.flag_or("plan", "auto");
+    let plan = plan_policy_for(Some(plan_spec.as_str()), pins_flags(args)?, policy, &codec)?
+        .expect("an explicit --plan always resolves to a policy");
+    let mut group = LocalGroup::for_plan_grouped(ranks, groups_flag(args)?, plan)?;
+    group.enable_recording(DEFAULT_CAPACITY);
+    let mut data: Vec<Vec<f32>> = (0..ranks)
+        .map(|r| {
+            let mut rng = Prng::new(4000 + r as u64);
+            let mut v = vec![0f32; len];
+            rng.fill_activations(&mut v, 1.0);
+            v
+        })
+        .collect();
+    for _ in 0..iters {
+        group.allreduce(&mut data, &codec)?;
+    }
+    match group.recalibrate_from_recorders() {
+        Some(p) => eprintln!("recalibration: {}", p.summary()),
+        None => eprintln!("recalibration: no measurable spans"),
+    }
+    if let Some(path) = args.flag("trace-out") {
+        write_traces(path, &group.trace_jsons())?;
+    }
+    let json = group.metrics_snapshot().to_json();
+    match args.flag("out") {
+        Some(path) => {
+            std::fs::write(path, &json).with_context(|| format!("writing {path}"))?;
+            eprintln!("metrics snapshot written to {path}");
+        }
+        None => println!("{json}"),
     }
     Ok(())
 }

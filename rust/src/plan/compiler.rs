@@ -165,6 +165,26 @@ pub fn compile_pinned(topo: &Topology, elems: usize, base: &Codec, pins: PlanPin
     best.expect("the two-step candidate is always admissible").0
 }
 
+/// [`compile_pinned`] against live measurements: every sane term of
+/// `profile` (effective intra/inter bandwidth, QDQ pass rate — typically
+/// distilled from flight-recorder traces by
+/// [`crate::telemetry::distill_profile`]) overrides the static
+/// calibration's priced rate via [`Topology::recalibrated`], so a
+/// mis-calibrated static topology gets corrected by what the ranks
+/// actually measured. An empty profile makes this exactly
+/// [`compile_pinned`]. Determinism is preserved: the profile is an input
+/// like any other, so identical (topology, profile) pairs compile the
+/// same plan on every rank.
+pub fn compile_profiled(
+    topo: &Topology,
+    elems: usize,
+    base: &Codec,
+    pins: PlanPins,
+    profile: &sim::MeasuredProfile,
+) -> CommPlan {
+    compile_pinned(&profile.apply(topo), elems, base, pins)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -292,6 +312,48 @@ mod tests {
             }
             assert_eq!(compile_pinned(&duo, elems, &c("int4@32"), pins), plan, "deterministic");
         }
+    }
+
+    #[test]
+    fn measured_profile_recalibrates_a_miscalibrated_topology() {
+        // Acceptance pin for profile-guided recalibration. The static
+        // topology deliberately lies: it claims a 200 GB/s inter-group
+        // link under H800 NVLink groups, so the tiers look balanced and
+        // the static search never admits a mixed-stage candidate. The
+        // measured truth is a 10 GB/s link. The profiled compile must
+        // (a) pick a different plan, and (b) price strictly faster than
+        // the static pick under the *true* rates.
+        let static_topo = Topology::try_custom(presets::h800(), 8, 2, Some(200e9)).unwrap();
+        let truth = sim::MeasuredProfile {
+            inter_bw: Some(10e9),
+            ..sim::MeasuredProfile::default()
+        };
+        let base = c("int4@32");
+        let elems = 32 * MB;
+        let static_plan = compile(&static_topo, elems, &base);
+        assert!(
+            static_plan.stage_codecs.is_uniform(),
+            "balanced-looking tiers must stay uniform: {static_plan}"
+        );
+        let profiled_plan =
+            compile_profiled(&static_topo, elems, &base, PlanPins::default(), &truth);
+        assert_ne!(static_plan, profiled_plan, "live measurements must change the pick");
+        let true_topo = truth.apply(&static_topo);
+        assert!(tiers_asymmetric(&true_topo), "the measured link is genuinely slow");
+        let m = 2.0 * elems as f64;
+        let t_static = sim::plan_time(&true_topo, &static_plan, m).total();
+        let t_profiled = sim::plan_time(&true_topo, &profiled_plan, m).total();
+        assert!(
+            t_profiled < t_static,
+            "profiled plan {profiled_plan} ({t_profiled}s) must beat the static pick \
+             {static_plan} ({t_static}s) under the true rates"
+        );
+        // An empty profile changes nothing.
+        let empty = sim::MeasuredProfile::default();
+        assert_eq!(
+            compile_profiled(&static_topo, elems, &base, PlanPins::default(), &empty),
+            static_plan
+        );
     }
 
     #[test]

@@ -61,7 +61,9 @@ use crate::quant::Codec;
 use crate::topo::Topology;
 
 pub use cache::{PlanCache, PlanCacheStats, PlanKey};
-pub use compiler::{compile, compile_pinned, cross_codec_ladder, TIER_ASYMMETRY};
+pub use compiler::{
+    compile, compile_pinned, compile_profiled, cross_codec_ladder, TIER_ASYMMETRY,
+};
 
 /// The codec each stage of the hierarchical family runs. The stage
 /// boundaries are the *existing* QDQ boundaries (each stage re-encodes its
@@ -265,6 +267,22 @@ impl CommPlan {
             self.stage_codecs
         );
         Ok(self.stage_codecs.intra_rs)
+    }
+
+    /// Stable 64-bit fingerprint of the plan: FNV-1a over the canonical
+    /// spec string ([`fmt::Display`]), so it is identical across ranks,
+    /// OS processes, and platforms. Worker ranks exchange fingerprints to
+    /// assert every rank resolved the same plan; recorded telemetry
+    /// events carry it so traces are attributable to the plan that ran.
+    /// (Deliberately not `DefaultHasher` — that is randomly seeded per
+    /// process.)
+    pub fn fingerprint(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in self.to_string().bytes() {
+            h ^= u64::from(b);
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h
     }
 
     /// Is the cross-stage codec at least as aggressive (no more wire
@@ -474,6 +492,31 @@ mod tests {
         let p = pins.apply(CommPlan::uniform(Algo::HierPipelined, c("int8")));
         assert_eq!((p.chunks, p.send_window), (5, 4));
         assert!(PlanPins::default().is_empty());
+    }
+
+    #[test]
+    fn fingerprints_are_stable_and_distinguish_plans() {
+        let base = CommPlan::uniform(Algo::Hier, c("int4@32"));
+        // Pure function of the plan: repeated calls and value copies agree.
+        assert_eq!(base.fingerprint(), base.fingerprint());
+        assert_eq!(base.fingerprint(), { base }.fingerprint());
+        // Every field that changes the canonical spec changes the print.
+        let pp = CommPlan::uniform(Algo::HierPipelined, c("int4@32"));
+        let variants = [
+            CommPlan::uniform(Algo::TwoStep, c("int4@32")),
+            CommPlan::uniform(Algo::Hier, c("int8")),
+            CommPlan {
+                stage_codecs: StageCodecs::with_cross(c("int4@32"), c("int2-sr@32!")),
+                ..base
+            },
+            CommPlan { codec_threads: 4, ..base },
+            CommPlan { chunks: 8, send_window: 2, ..pp },
+            CommPlan { chunks: 4, send_window: 2, ..pp },
+        ];
+        let mut fps: Vec<u64> = variants.iter().map(CommPlan::fingerprint).collect();
+        fps.push(base.fingerprint());
+        let uniq: std::collections::HashSet<u64> = fps.iter().copied().collect();
+        assert_eq!(uniq.len(), fps.len(), "fingerprint collision: {fps:?}");
     }
 
     #[test]

@@ -11,9 +11,11 @@ pub mod all2all;
 pub mod allreduce;
 pub mod cost;
 pub mod events;
+pub mod profile;
 pub mod volume;
 
 pub use allreduce::{algbw_gbps, allreduce_time, plan_time, TimeBreakdown};
+pub use profile::MeasuredProfile;
 /// Re-export of [`crate::comm::Algo`] — the enum's home is the collective
 /// layer; the simulator prices its algorithms.
 pub use volume::Algo;

@@ -1,0 +1,120 @@
+//! Measured link/compute profiles for profile-guided plan recalibration.
+//!
+//! The cost model prices plan candidates from static calibration constants
+//! ([`crate::topo::GpuSpec`]). On a real deployment those constants can be
+//! wrong — a mis-seated bridge, a congested inter-node fabric, a QDQ
+//! kernel running slower than calibrated — and the compiler would keep
+//! picking the plan the *datasheet* likes. A [`MeasuredProfile`] carries
+//! effective rates distilled from flight-recorder traces
+//! ([`crate::telemetry::distill_profile`]); applying it to a topology
+//! overrides exactly the terms the simulator prices
+//! ([`crate::topo::Topology::recalibrated`]), so
+//! `plan::compile_profiled` re-ranks candidates against what the fabric
+//! actually delivers. See DESIGN.md §11 for the distillation formula.
+
+use crate::topo::Topology;
+
+/// Effective rates measured from a live run. Every field is optional: a
+/// profile only overrides what it measured, and non-finite or non-positive
+/// measurements are ignored ([`MeasuredProfile::apply`] sanitizes), so a
+/// degenerate trace can never poison the plan compiler.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct MeasuredProfile {
+    /// Effective intra-group link bandwidth, bytes/s.
+    pub intra_bw: Option<f64>,
+    /// Effective inter-group link bandwidth, bytes/s.
+    pub inter_bw: Option<f64>,
+    /// Effective QDQ throughput, element-passes/s (the unit of
+    /// [`crate::topo::GpuSpec::qdq_pass_rate`]).
+    pub qdq_pass_rate: Option<f64>,
+}
+
+fn sane(v: Option<f64>) -> Option<f64> {
+    v.filter(|x| x.is_finite() && *x > 0.0)
+}
+
+impl MeasuredProfile {
+    /// True when no field would override anything.
+    pub fn is_empty(&self) -> bool {
+        sane(self.intra_bw).is_none()
+            && sane(self.inter_bw).is_none()
+            && sane(self.qdq_pass_rate).is_none()
+    }
+
+    /// The recalibrated topology: `topo` with every measured (and sane)
+    /// rate substituted for its static counterpart. The result has a
+    /// different [`Topology::fingerprint`] whenever anything changed, so
+    /// plan-cache entries keyed on the static topology are never reused
+    /// for profiled compilations.
+    pub fn apply(&self, topo: &Topology) -> Topology {
+        topo.recalibrated(sane(self.intra_bw), sane(self.inter_bw), sane(self.qdq_pass_rate))
+    }
+
+    /// Human-readable one-liner for log output.
+    pub fn summary(&self) -> String {
+        let gb = |v: Option<f64>| match sane(v) {
+            Some(x) => format!("{:.2} GB/s", x / 1e9),
+            None => "-".into(),
+        };
+        let passes = match sane(self.qdq_pass_rate) {
+            Some(x) => format!("{:.2} Gpass/s", x / 1e9),
+            None => "-".into(),
+        };
+        format!("intra={} inter={} qdq={}", gb(self.intra_bw), gb(self.inter_bw), passes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topo::presets::{h800, l40};
+
+    #[test]
+    fn empty_profile_is_identity() {
+        let topo = Topology::new(l40(), 8);
+        let p = MeasuredProfile::default();
+        assert!(p.is_empty());
+        assert_eq!(p.apply(&topo), topo);
+        assert_eq!(p.apply(&topo).fingerprint(), topo.fingerprint());
+    }
+
+    #[test]
+    fn overrides_change_only_the_measured_terms() {
+        let topo = Topology::new(l40(), 8);
+        let p = MeasuredProfile { inter_bw: Some(5e9), ..Default::default() };
+        let t = p.apply(&topo);
+        assert_eq!(t.inter_bw(), Some(5e9));
+        assert_eq!(t.spec.intra_bw(), topo.spec.intra_bw());
+        assert_eq!(t.spec.qdq_pass_rate, topo.spec.qdq_pass_rate);
+        assert_ne!(t.fingerprint(), topo.fingerprint(), "recalibration re-keys the plan cache");
+    }
+
+    #[test]
+    fn insane_measurements_are_ignored() {
+        let topo = Topology::new(h800(), 8);
+        for bad in [f64::NAN, f64::INFINITY, 0.0, -3.0] {
+            let p = MeasuredProfile {
+                intra_bw: Some(bad),
+                inter_bw: Some(bad),
+                qdq_pass_rate: Some(bad),
+            };
+            assert!(p.is_empty());
+            assert_eq!(p.apply(&topo), topo);
+        }
+    }
+
+    #[test]
+    fn flat_topologies_never_grow_an_inter_link() {
+        let topo = Topology::new(h800(), 8);
+        let p = MeasuredProfile { inter_bw: Some(9e9), ..Default::default() };
+        assert_eq!(p.apply(&topo).inter_bw(), None);
+    }
+
+    #[test]
+    fn summary_reads_like_a_log_line() {
+        let p = MeasuredProfile { intra_bw: Some(24e9), ..Default::default() };
+        let s = p.summary();
+        assert!(s.contains("intra=24.00 GB/s"), "{s}");
+        assert!(s.contains("inter=-"), "{s}");
+    }
+}

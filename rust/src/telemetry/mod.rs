@@ -1,0 +1,298 @@
+//! Flight-recorder telemetry: per-stage tracing, a metrics registry, and
+//! the trace→profile distillation that feeds plan recalibration.
+//!
+//! Three pieces (DESIGN.md §11):
+//!
+//! - [`Recorder`] — a lock-free, fixed-capacity per-rank ring buffer of
+//!   typed [`Event`]s, written via the zero-alloc [`record!`] macro. The
+//!   fabric layer records `Send`/`Recv` spans automatically; the
+//!   collectives add `Encode`/`Decode`/`DecodeSum` spans plus stage and
+//!   chunk context; the communicator wraps each call in a `Collective`
+//!   span carrying the resolved plan fingerprint. Disabled (the default)
+//!   it is one untaken `Option` branch on the hot path.
+//! - [`MetricsRegistry`] — the offline aggregation/export path: recorder
+//!   spans folded into per-(algo, stage, op, codec) counters and log₂
+//!   latency histograms, alongside the fabric byte counters, transport
+//!   counters, and plan-cache statistics that used to be separate
+//!   test-only surfaces.
+//! - [`distill_profile`] — turns recorded per-stage wall times into a
+//!   [`MeasuredProfile`] (effective intra/inter bandwidth, QDQ pass rate)
+//!   that `plan::compile_profiled` prices candidates against, closing the
+//!   measure→tune loop the paper's co-design section calls for.
+
+pub mod recorder;
+pub mod registry;
+
+pub use recorder::{AlgoTag, Event, Kind, Op, Recorder, Stage, DEFAULT_CAPACITY};
+pub use registry::{
+    Histogram, MetricsRegistry, MetricsSnapshot, Series, SeriesKey, HIST_BUCKETS,
+};
+
+use crate::quant::Codec;
+use crate::sim::MeasuredProfile;
+
+/// Record one event through an `Option<&Recorder>` — the hot-path entry
+/// point. With the recorder disabled (`None`) this is a single untaken
+/// branch; enabled it is [`Recorder::record`]: atomic stores into a
+/// pre-allocated slot, never an allocation.
+///
+/// ```ignore
+/// record!(rec, start Op::Encode, data.len() as u64);
+/// let wire = encode(...)?;
+/// record!(rec, end Op::Encode, wire.len() as u64);
+/// ```
+#[macro_export]
+macro_rules! record {
+    ($rec:expr, start $op:expr) => {
+        if let Some(__r) = $rec {
+            __r.record($crate::telemetry::Kind::Start, $op, 0);
+        }
+    };
+    ($rec:expr, start $op:expr, $bytes:expr) => {
+        if let Some(__r) = $rec {
+            __r.record($crate::telemetry::Kind::Start, $op, $bytes);
+        }
+    };
+    ($rec:expr, end $op:expr, $bytes:expr) => {
+        if let Some(__r) = $rec {
+            __r.record($crate::telemetry::Kind::End, $op, $bytes);
+        }
+    };
+}
+
+/// Pack a codec's identity into the 16-bit tag events carry:
+/// scheme in bits 15..13, integer-metadata mode in bit 11, quantization
+/// bits in the low byte. Group size is deliberately dropped — the
+/// registry keys series by *scheme family*, and the full codec identity
+/// is recoverable from the plan fingerprint when needed. Tag 0 is
+/// reserved for "no codec context".
+pub fn codec_tag(codec: &Codec) -> u16 {
+    use crate::quant::ScaleMode;
+    let (scheme, bits, mode): (u16, u8, u16) = match *codec {
+        Codec::Bf16 => (0, 16, 0),
+        Codec::Rtn { bits, scale_mode, .. } => (1, bits, (scale_mode == ScaleMode::IntLog) as u16),
+        Codec::Spike { bits, scale_mode, .. } => {
+            (2, bits, (scale_mode == ScaleMode::IntLog) as u16)
+        }
+        Codec::Hadamard { bits, .. } => (3, bits, 0),
+        Codec::LogFmt { bits, .. } => (4, bits, 0),
+    };
+    (scheme + 1) << 12 | mode << 11 | bits as u16
+}
+
+/// Paper-style display name for a [`codec_tag`] (`"INT2_SR"`, `"BF16"`,
+/// `"none"` for tag 0), mirroring `Codec::name`.
+pub fn codec_tag_name(tag: u16) -> String {
+    if tag == 0 {
+        return "none".into();
+    }
+    let bits = tag & 0xff;
+    match tag >> 12 {
+        1 => "BF16".into(),
+        2 => format!("INT{bits}"),
+        3 => format!("INT{bits}_SR"),
+        4 => format!("INT{bits}_HAD"),
+        5 => format!("INT{bits}_LOG"),
+        _ => format!("tag{tag:#06x}"),
+    }
+}
+
+/// The [`AlgoTag`] recorded events carry for a comm-layer algorithm.
+pub fn algo_tag(algo: crate::comm::Algo) -> AlgoTag {
+    match algo {
+        crate::comm::Algo::Ring => AlgoTag::Ring,
+        crate::comm::Algo::TwoStep => AlgoTag::TwoStep,
+        crate::comm::Algo::Hier => AlgoTag::Hier,
+        crate::comm::Algo::HierPipelined => AlgoTag::HierPipelined,
+    }
+}
+
+/// One rank's recorded trace as a JSON object (DESIGN.md §11):
+/// `{"rank": R, "capacity": C, "recorded": N, "events": [...]}` —
+/// `recorded` is the total ever recorded, so `recorded > len(events)`
+/// tells a consumer the ring wrapped and the trace holds the newest tail.
+pub fn trace_json(rec: &Recorder) -> String {
+    let events = rec.events();
+    let mut out = String::with_capacity(96 + events.len() * 192);
+    out.push_str(&format!(
+        "{{\"rank\":{},\"capacity\":{},\"recorded\":{},\"events\":[",
+        rec.rank(),
+        rec.capacity(),
+        rec.total_recorded()
+    ));
+    for (i, e) in events.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&e.to_json());
+    }
+    out.push_str("]}");
+    out
+}
+
+/// Distill a [`MeasuredProfile`] from recorded events (typically the
+/// concatenation of every rank's [`Recorder::events`]).
+///
+/// The mapping onto `sim` cost-model terms (DESIGN.md §11):
+///
+/// - **link bandwidth** — each completed `Send` span moved its End-event
+///   bytes in its wall time, so the effective rate per tier is
+///   `Σ bytes / Σ seconds` over the tier's sends: `cross`-stage sends
+///   measure the inter-group link, every other stage measures the
+///   intra-group link. `Recv` spans are excluded — their wall time is
+///   dominated by waiting for the peer, not by the wire.
+/// - **QDQ pass rate** — each codec span (`Encode`/`Decode`/`DecodeSum`)
+///   is one pass over its Start-event element count, so the effective
+///   rate is `Σ elements / Σ seconds`, directly comparable to
+///   `GpuSpec::qdq_pass_rate`.
+///
+/// Tiers or terms with no completed spans (or zero measured time) stay
+/// `None` and leave the static calibration untouched.
+pub fn distill_profile(events: &[Event]) -> MeasuredProfile {
+    // Open Send/codec spans per (rank, algo, stage, op, codec): t_start
+    // and the Start-event byte word.
+    let mut open: std::collections::HashMap<(u16, u8, u8, u8, u16), Vec<(u64, u64)>> =
+        std::collections::HashMap::new();
+    // (bytes or elements, nanos) accumulators.
+    let (mut intra, mut inter, mut qdq) = ((0u64, 0u64), (0u64, 0u64), (0u64, 0u64));
+    for e in events {
+        if !matches!(e.op, Op::Send | Op::Encode | Op::Decode | Op::DecodeSum) {
+            continue;
+        }
+        let key = (e.rank, e.algo as u8, e.stage as u8, e.op as u8, e.codec_tag);
+        match e.kind {
+            Kind::Start => open.entry(key).or_default().push((e.t_nanos, e.bytes)),
+            Kind::End => {
+                let Some((t0, start_bytes)) = open.get_mut(&key).and_then(|v| v.pop()) else {
+                    continue;
+                };
+                let nanos = e.t_nanos.saturating_sub(t0);
+                match e.op {
+                    Op::Send => {
+                        let cross = e.stage == Stage::CrossGroup;
+                        let acc = if cross { &mut inter } else { &mut intra };
+                        acc.0 += e.bytes;
+                        acc.1 += nanos;
+                    }
+                    _ => {
+                        qdq.0 += start_bytes;
+                        qdq.1 += nanos;
+                    }
+                }
+            }
+        }
+    }
+    let rate = |(units, nanos): (u64, u64)| {
+        (units > 0 && nanos > 0).then(|| units as f64 / (nanos as f64 * 1e-9))
+    };
+    MeasuredProfile {
+        intra_bw: rate(intra),
+        inter_bw: rate(inter),
+        qdq_pass_rate: rate(qdq),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codec_tags_are_distinct_and_named() {
+        let cases = [
+            (Codec::Bf16, "BF16"),
+            (Codec::parse("int4@32").unwrap(), "INT4"),
+            (Codec::parse("int2-sr@32").unwrap(), "INT2_SR"),
+            (Codec::parse("int2-sr@32!").unwrap(), "INT2_SR"),
+            (Codec::parse("int4-had@32").unwrap(), "INT4_HAD"),
+            (Codec::parse("int3-log@32").unwrap(), "INT3_LOG"),
+        ];
+        let mut seen = std::collections::HashSet::new();
+        for (codec, name) in cases {
+            let tag = codec_tag(&codec);
+            assert_ne!(tag, 0, "tag 0 is reserved for 'no codec'");
+            assert!(seen.insert(tag), "collision for {codec:?}");
+            assert_eq!(codec_tag_name(tag), name);
+        }
+        assert_eq!(codec_tag_name(0), "none");
+    }
+
+    fn send_span(stage: Stage, t0: u64, t1: u64, bytes: u64) -> [Event; 2] {
+        let base = Event {
+            seq: 0,
+            t_nanos: t0,
+            kind: Kind::Start,
+            op: Op::Send,
+            stage,
+            algo: AlgoTag::Hier,
+            rank: 0,
+            codec_tag: 1,
+            plan_fp: 0,
+            bytes,
+            chunk: 0,
+        };
+        [base, Event { t_nanos: t1, kind: Kind::End, ..base }]
+    }
+
+    #[test]
+    fn distills_per_tier_bandwidth_and_pass_rate() {
+        let mut events = Vec::new();
+        // Intra: 1000 bytes over 500 ns = 2 GB/s.
+        events.extend(send_span(Stage::ReduceScatter, 0, 250, 500));
+        events.extend(send_span(Stage::AllGather, 300, 550, 500));
+        // Inter: 400 bytes over 800 ns = 0.5 GB/s.
+        events.extend(send_span(Stage::CrossGroup, 600, 1400, 400));
+        // QDQ: 2048 elements over 1024 ns = 2 Gpass/s.
+        let enc = Event {
+            seq: 0,
+            t_nanos: 2000,
+            kind: Kind::Start,
+            op: Op::Encode,
+            stage: Stage::ReduceScatter,
+            algo: AlgoTag::Hier,
+            rank: 0,
+            codec_tag: 1,
+            plan_fp: 0,
+            bytes: 2048,
+            chunk: 0,
+        };
+        events.push(enc);
+        events.push(Event { t_nanos: 3024, kind: Kind::End, bytes: 512, ..enc });
+        let p = distill_profile(&events);
+        assert!((p.intra_bw.unwrap() - 2e9).abs() < 1e3, "{p:?}");
+        assert!((p.inter_bw.unwrap() - 0.5e9).abs() < 1e3, "{p:?}");
+        assert!((p.qdq_pass_rate.unwrap() - 2e9).abs() < 1e3, "{p:?}");
+    }
+
+    #[test]
+    fn trace_json_wraps_the_event_rows() {
+        let rec = Recorder::new(5, 8);
+        rec.record(Kind::Start, Op::Send, 10);
+        rec.record(Kind::End, Op::Send, 10);
+        let json = trace_json(&rec);
+        assert!(json.starts_with("{\"rank\":5,\"capacity\":8,\"recorded\":2,\"events\":["));
+        assert!(json.ends_with("]}"));
+        assert_eq!(json.matches("\"seq\":").count(), 2);
+        let empty = trace_json(&Recorder::new(0, 4));
+        assert_eq!(empty, "{\"rank\":0,\"capacity\":4,\"recorded\":0,\"events\":[]}");
+    }
+
+    #[test]
+    fn algo_tags_mirror_comm_algos() {
+        use crate::comm::Algo;
+        for (a, t) in [
+            (Algo::Ring, AlgoTag::Ring),
+            (Algo::TwoStep, AlgoTag::TwoStep),
+            (Algo::Hier, AlgoTag::Hier),
+            (Algo::HierPipelined, AlgoTag::HierPipelined),
+        ] {
+            assert_eq!(algo_tag(a), t);
+        }
+    }
+
+    #[test]
+    fn unpaired_or_empty_traces_distill_to_nothing() {
+        assert!(distill_profile(&[]).is_empty());
+        let [start, _] = send_span(Stage::CrossGroup, 0, 100, 64);
+        assert!(distill_profile(&[start]).is_empty(), "orphan Start contributes nothing");
+    }
+}

@@ -1,0 +1,487 @@
+//! The flight recorder: a lock-free, fixed-capacity ring buffer of typed
+//! events, one per rank.
+//!
+//! Design (in the spirit of embedded flight recorders like hubris's
+//! `ringbuf`): recording must be cheap enough to leave on in production,
+//! so [`Recorder::record`] is a handful of relaxed atomic stores into a
+//! pre-allocated slot — no locks, no allocation, no formatting. The ring
+//! holds the *newest* [`Recorder::capacity`] events; older events are
+//! overwritten in place. Each slot is a fixed set of `u64` words
+//! (see [`Event`]), so the whole recorder is a flat
+//! `capacity × 48 bytes` block — the default 4096-slot ring costs 192 KiB
+//! per rank, bounded for the process lifetime.
+//!
+//! Concurrency contract: `record` may be called from the rank's collective
+//! thread while *other* threads hold clones of the `Arc<Recorder>`; the
+//! per-slot sequence word is published with `Release` ordering so a reader
+//! that observes it sees the rest of the slot. [`Recorder::events`] is
+//! only guaranteed torn-free when called *at rest* (no collective in
+//! flight), which is how every caller in this crate uses it — the
+//! possibility of a mid-flight reader observing a half-overwritten slot is
+//! accepted and such slots are skipped, never mis-decoded into a panic.
+//!
+//! The ambient-context words (`stage`, `chunk`, `codec`, `algo`, plan
+//! fingerprint) are single-writer: only the rank's own collective thread
+//! calls the `set_*` methods, so they are plain load/store, no RMW.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::time::Instant;
+
+/// Default ring capacity: 4096 events ≈ 192 KiB per rank.
+pub const DEFAULT_CAPACITY: usize = 4096;
+
+/// Whether an event opens or closes a span.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Kind {
+    /// Span opened. For codec ops, `bytes` carries the element count
+    /// (the cost model's "passes × elements" unit); for sends, the
+    /// payload length.
+    Start = 0,
+    /// Span closed. `bytes` carries the bytes put on (or taken off) the
+    /// wire, 0 where no payload is involved.
+    End = 1,
+}
+
+impl Kind {
+    pub fn name(self) -> &'static str {
+        match self {
+            Kind::Start => "start",
+            Kind::End => "end",
+        }
+    }
+
+    pub fn from_u8(v: u8) -> Option<Kind> {
+        match v {
+            0 => Some(Kind::Start),
+            1 => Some(Kind::End),
+            _ => None,
+        }
+    }
+}
+
+/// What the span timed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Op {
+    /// Quantize + pack one payload into wire bytes.
+    Encode = 0,
+    /// Hand one payload to the transport (recorded by the fabric layer).
+    Send = 1,
+    /// Block until one payload arrives (recorded by the fabric layer).
+    Recv = 2,
+    /// Unpack + dequantize + accumulate into the partial sum.
+    DecodeSum = 3,
+    /// Unpack + dequantize (no accumulate).
+    Decode = 4,
+    /// One whole collective call, wrapped by the communicator front door.
+    Collective = 5,
+}
+
+impl Op {
+    pub fn name(self) -> &'static str {
+        match self {
+            Op::Encode => "encode",
+            Op::Send => "send",
+            Op::Recv => "recv",
+            Op::DecodeSum => "decode_sum",
+            Op::Decode => "decode",
+            Op::Collective => "collective",
+        }
+    }
+
+    pub fn from_u8(v: u8) -> Option<Op> {
+        match v {
+            0 => Some(Op::Encode),
+            1 => Some(Op::Send),
+            2 => Some(Op::Recv),
+            3 => Some(Op::DecodeSum),
+            4 => Some(Op::Decode),
+            5 => Some(Op::Collective),
+            _ => None,
+        }
+    }
+}
+
+/// Which phase of the collective the event belongs to. Flat algorithms
+/// (ring, all2all, broadcast) run entirely in [`Stage::Single`]; the
+/// two-step and hierarchical algorithms tag their reduce-scatter /
+/// cross-group / all-gather phases so per-link-tier bandwidth can be
+/// distilled from the trace ([`crate::telemetry::distill_profile`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Stage {
+    /// No stage structure (ring / all2all / broadcast / whole-collective).
+    Single = 0,
+    /// Reduce-scatter phase (intra-group for the hierarchical algorithms).
+    ReduceScatter = 1,
+    /// Cross-group column-ring reduce — the inter-tier link.
+    CrossGroup = 2,
+    /// All-gather phase (intra-group for the hierarchical algorithms).
+    AllGather = 3,
+}
+
+impl Stage {
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Single => "single",
+            Stage::ReduceScatter => "rs",
+            Stage::CrossGroup => "cross",
+            Stage::AllGather => "ag",
+        }
+    }
+
+    pub fn from_u8(v: u8) -> Option<Stage> {
+        match v {
+            0 => Some(Stage::Single),
+            1 => Some(Stage::ReduceScatter),
+            2 => Some(Stage::CrossGroup),
+            3 => Some(Stage::AllGather),
+            _ => None,
+        }
+    }
+}
+
+/// Which collective algorithm the events were recorded under. Mirrors
+/// `comm::Algo` (plus `None` for traffic outside a planned collective)
+/// without depending on it, so the telemetry layer stays reusable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum AlgoTag {
+    None = 0,
+    Ring = 1,
+    TwoStep = 2,
+    Hier = 3,
+    HierPipelined = 4,
+}
+
+impl AlgoTag {
+    pub fn name(self) -> &'static str {
+        match self {
+            AlgoTag::None => "none",
+            AlgoTag::Ring => "ring",
+            AlgoTag::TwoStep => "twostep",
+            AlgoTag::Hier => "hier",
+            AlgoTag::HierPipelined => "hier_pipelined",
+        }
+    }
+
+    pub fn from_u8(v: u8) -> Option<AlgoTag> {
+        match v {
+            0 => Some(AlgoTag::None),
+            1 => Some(AlgoTag::Ring),
+            2 => Some(AlgoTag::TwoStep),
+            3 => Some(AlgoTag::Hier),
+            4 => Some(AlgoTag::HierPipelined),
+            _ => None,
+        }
+    }
+}
+
+/// One decoded recorder event. The in-ring representation is six `u64`
+/// words per slot; this is the materialized view [`Recorder::events`]
+/// returns.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Event {
+    /// Monotone per-recorder sequence number (0-based, never reused).
+    pub seq: u64,
+    /// Nanoseconds since the recorder was created (or last cleared).
+    pub t_nanos: u64,
+    pub kind: Kind,
+    pub op: Op,
+    pub stage: Stage,
+    pub algo: AlgoTag,
+    /// Recording rank.
+    pub rank: u16,
+    /// Packed codec identity — see [`crate::telemetry::codec_tag`].
+    pub codec_tag: u16,
+    /// Fingerprint of the `CommPlan` in effect (0 outside a planned call).
+    pub plan_fp: u64,
+    /// Start: element count for codec ops / payload length for sends.
+    /// End: bytes on the wire (0 where no payload is involved).
+    pub bytes: u64,
+    /// Pipeline chunk index (0 for unchunked collectives).
+    pub chunk: u32,
+}
+
+impl Event {
+    /// One JSON object for the trace export. Hand-rolled (no serde in the
+    /// dependency set); `plan_fp` travels as a hex string so 64-bit values
+    /// survive JSON consumers that parse numbers as doubles.
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"seq\":{},\"t_nanos\":{},\"kind\":\"{}\",\"op\":\"{}\",\"stage\":\"{}\",\
+             \"algo\":\"{}\",\"rank\":{},\"codec\":\"{}\",\"plan_fp\":\"{:#018x}\",\
+             \"bytes\":{},\"chunk\":{}}}",
+            self.seq,
+            self.t_nanos,
+            self.kind.name(),
+            self.op.name(),
+            self.stage.name(),
+            self.algo.name(),
+            self.rank,
+            super::codec_tag_name(self.codec_tag),
+            self.plan_fp,
+            self.bytes,
+            self.chunk
+        )
+    }
+}
+
+/// One ring slot: six atomic words. `seq1` stores `seq + 1` and is written
+/// last with `Release`; 0 means the slot was never written.
+#[derive(Default)]
+struct Slot {
+    seq1: AtomicU64,
+    t_nanos: AtomicU64,
+    /// kind | op<<8 | stage<<16 | algo<<24 | rank<<32 | codec_tag<<48.
+    meta: AtomicU64,
+    plan_fp: AtomicU64,
+    bytes: AtomicU64,
+    chunk: AtomicU64,
+}
+
+/// Per-rank flight recorder. See the module docs for the concurrency
+/// contract.
+pub struct Recorder {
+    rank: u16,
+    epoch: Instant,
+    head: AtomicUsize,
+    /// Ambient context: stage | algo<<8 | codec_tag<<16 | chunk<<32.
+    ctx: AtomicU64,
+    plan_fp: AtomicU64,
+    slots: Box<[Slot]>,
+}
+
+impl Recorder {
+    /// A recorder for `rank` holding the newest `capacity` events
+    /// (clamped to at least 1).
+    pub fn new(rank: usize, capacity: usize) -> Recorder {
+        let capacity = capacity.max(1);
+        Recorder {
+            rank: rank as u16,
+            epoch: Instant::now(),
+            head: AtomicUsize::new(0),
+            ctx: AtomicU64::new(0),
+            plan_fp: AtomicU64::new(0),
+            slots: (0..capacity).map(|_| Slot::default()).collect(),
+        }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank as usize
+    }
+
+    /// Ring capacity in events.
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Total events ever recorded (≥ the number still in the ring).
+    pub fn total_recorded(&self) -> u64 {
+        self.head.load(Ordering::Relaxed) as u64
+    }
+
+    /// Set the stage + codec ambient context (single-writer: the rank's
+    /// collective thread). The chunk and algo context are preserved.
+    pub fn set_stage(&self, stage: Stage, codec_tag: u16) {
+        let prev = self.ctx.load(Ordering::Relaxed);
+        let next = (prev & !0xffff_00ffu64)
+            | stage as u64
+            | (codec_tag as u64) << 16;
+        self.ctx.store(next, Ordering::Relaxed);
+    }
+
+    /// Set the pipeline chunk ambient context (single-writer).
+    pub fn set_chunk(&self, chunk: u32) {
+        let prev = self.ctx.load(Ordering::Relaxed);
+        self.ctx.store((prev & 0xffff_ffff) | (chunk as u64) << 32, Ordering::Relaxed);
+    }
+
+    /// Set the plan fingerprint + algorithm ambient context
+    /// (single-writer). Stage and chunk context are reset to
+    /// `Single`/0 — a new collective starts from a clean frame.
+    pub fn set_plan(&self, plan_fp: u64, algo: AlgoTag) {
+        self.plan_fp.store(plan_fp, Ordering::Relaxed);
+        self.ctx.store((algo as u64) << 8, Ordering::Relaxed);
+    }
+
+    /// Record one event. Lock-free, allocation-free: one `fetch_add` to
+    /// claim a slot plus six stores. Callers gate on an
+    /// `Option<&Recorder>` (see the `record!` macro), so the disabled
+    /// path is a single untaken branch.
+    pub fn record(&self, kind: Kind, op: Op, bytes: u64) {
+        let seq = self.head.fetch_add(1, Ordering::Relaxed) as u64;
+        let slot = &self.slots[(seq as usize) % self.slots.len()];
+        let ctx = self.ctx.load(Ordering::Relaxed);
+        let meta = kind as u64
+            | (op as u64) << 8
+            | (ctx & 0xff) << 16                // stage
+            | ((ctx >> 8) & 0xff) << 24         // algo
+            | (self.rank as u64) << 32
+            | ((ctx >> 16) & 0xffff) << 48; // codec_tag
+        slot.t_nanos.store(self.epoch.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        slot.meta.store(meta, Ordering::Relaxed);
+        slot.plan_fp.store(self.plan_fp.load(Ordering::Relaxed), Ordering::Relaxed);
+        slot.bytes.store(bytes, Ordering::Relaxed);
+        slot.chunk.store(ctx >> 32, Ordering::Relaxed);
+        slot.seq1.store(seq + 1, Ordering::Release);
+    }
+
+    /// Materialize the ring's current contents, oldest surviving event
+    /// first. Torn-free only at rest (see module docs); slots that decode
+    /// to an unknown kind/op/stage (possible only under a mid-flight torn
+    /// read) are skipped.
+    pub fn events(&self) -> Vec<Event> {
+        let mut out: Vec<Event> = Vec::with_capacity(self.slots.len());
+        for slot in self.slots.iter() {
+            let seq1 = slot.seq1.load(Ordering::Acquire);
+            if seq1 == 0 {
+                continue;
+            }
+            let meta = slot.meta.load(Ordering::Relaxed);
+            let (kind, op, stage, algo) = match (
+                Kind::from_u8(meta as u8),
+                Op::from_u8((meta >> 8) as u8),
+                Stage::from_u8((meta >> 16) as u8),
+                AlgoTag::from_u8((meta >> 24) as u8),
+            ) {
+                (Some(k), Some(o), Some(s), Some(a)) => (k, o, s, a),
+                _ => continue,
+            };
+            out.push(Event {
+                seq: seq1 - 1,
+                t_nanos: slot.t_nanos.load(Ordering::Relaxed),
+                kind,
+                op,
+                stage,
+                algo,
+                rank: (meta >> 32) as u16,
+                codec_tag: (meta >> 48) as u16,
+                plan_fp: slot.plan_fp.load(Ordering::Relaxed),
+                bytes: slot.bytes.load(Ordering::Relaxed),
+                chunk: slot.chunk.load(Ordering::Relaxed) as u32,
+            });
+        }
+        out.sort_by_key(|e| e.seq);
+        out
+    }
+
+    /// Drop every recorded event and restart the clock and sequence
+    /// numbers. Only meaningful at rest.
+    pub fn clear(&self) {
+        for slot in self.slots.iter() {
+            slot.seq1.store(0, Ordering::Relaxed);
+        }
+        self.head.store(0, Ordering::Relaxed);
+        self.ctx.store(0, Ordering::Relaxed);
+        self.plan_fp.store(0, Ordering::Relaxed);
+    }
+}
+
+impl std::fmt::Debug for Recorder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Recorder")
+            .field("rank", &self.rank)
+            .field("capacity", &self.slots.len())
+            .field("total_recorded", &self.total_recorded())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_come_back_in_order_with_context() {
+        let r = Recorder::new(3, 16);
+        r.set_plan(0xdead_beef, AlgoTag::Hier);
+        r.set_stage(Stage::ReduceScatter, 0x1004);
+        r.set_chunk(2);
+        r.record(Kind::Start, Op::Encode, 128);
+        r.record(Kind::End, Op::Encode, 99);
+        let ev = r.events();
+        assert_eq!(ev.len(), 2);
+        assert_eq!(ev[0].seq, 0);
+        assert_eq!(ev[0].kind, Kind::Start);
+        assert_eq!(ev[0].op, Op::Encode);
+        assert_eq!(ev[0].stage, Stage::ReduceScatter);
+        assert_eq!(ev[0].algo, AlgoTag::Hier);
+        assert_eq!(ev[0].rank, 3);
+        assert_eq!(ev[0].codec_tag, 0x1004);
+        assert_eq!(ev[0].plan_fp, 0xdead_beef);
+        assert_eq!(ev[0].bytes, 128);
+        assert_eq!(ev[0].chunk, 2);
+        assert_eq!(ev[1].kind, Kind::End);
+        assert!(ev[0].t_nanos <= ev[1].t_nanos);
+        assert_eq!(r.total_recorded(), 2);
+    }
+
+    #[test]
+    fn wraparound_keeps_the_newest_events() {
+        let r = Recorder::new(0, 8);
+        for i in 0..20u64 {
+            r.record(Kind::Start, Op::Send, i);
+        }
+        let ev = r.events();
+        assert_eq!(ev.len(), 8, "ring holds exactly its capacity");
+        let seqs: Vec<u64> = ev.iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, (12..20).collect::<Vec<u64>>(), "newest 8 survive");
+        assert_eq!(ev[0].bytes, 12);
+        assert_eq!(ev[7].bytes, 19);
+        assert_eq!(r.total_recorded(), 20);
+    }
+
+    #[test]
+    fn set_plan_resets_stage_and_chunk_context() {
+        let r = Recorder::new(1, 4);
+        r.set_stage(Stage::AllGather, 7);
+        r.set_chunk(5);
+        r.set_plan(1, AlgoTag::Ring);
+        r.record(Kind::Start, Op::Collective, 0);
+        let e = r.events()[0];
+        assert_eq!(e.stage, Stage::Single);
+        assert_eq!(e.chunk, 0);
+        assert_eq!(e.codec_tag, 0);
+        assert_eq!(e.algo, AlgoTag::Ring);
+        assert_eq!(e.plan_fp, 1);
+    }
+
+    #[test]
+    fn clear_restarts_the_ring() {
+        let r = Recorder::new(0, 4);
+        r.record(Kind::Start, Op::Send, 1);
+        r.record(Kind::End, Op::Send, 1);
+        r.clear();
+        assert!(r.events().is_empty());
+        assert_eq!(r.total_recorded(), 0);
+        r.record(Kind::Start, Op::Recv, 2);
+        assert_eq!(r.events()[0].seq, 0, "sequence numbers restart");
+    }
+
+    #[test]
+    fn capacity_is_clamped_to_at_least_one() {
+        let r = Recorder::new(0, 0);
+        assert_eq!(r.capacity(), 1);
+        r.record(Kind::Start, Op::Send, 1);
+        r.record(Kind::End, Op::Send, 2);
+        assert_eq!(r.events().len(), 1);
+        assert_eq!(r.events()[0].bytes, 2, "newest event wins");
+    }
+
+    #[test]
+    fn json_row_has_the_schema_fields() {
+        let r = Recorder::new(2, 4);
+        r.set_plan(0x10, AlgoTag::TwoStep);
+        r.record(Kind::End, Op::Recv, 64);
+        let row = r.events()[0].to_json();
+        for field in
+            ["\"seq\":", "\"t_nanos\":", "\"kind\":\"end\"", "\"op\":\"recv\"",
+             "\"stage\":\"single\"", "\"algo\":\"twostep\"", "\"rank\":2",
+             "\"plan_fp\":\"0x0000000000000010\"", "\"bytes\":64", "\"chunk\":0"]
+        {
+            assert!(row.contains(field), "{row} missing {field}");
+        }
+    }
+}

@@ -1,0 +1,392 @@
+//! The metrics registry: one aggregation + export path for everything the
+//! system measures.
+//!
+//! The registry is *offline*: nothing on the hot path touches it. Raw
+//! measurements stay where they are cheap — recorder events
+//! ([`super::Recorder`]), fabric byte counters
+//! ([`crate::comm::fabric::ByteCounters`]), transport counters
+//! ([`crate::transport::TransportStats`]), plan-cache hit/miss counters
+//! ([`crate::plan::PlanCacheStats`]) — and are absorbed into a registry
+//! only when a snapshot is wanted (CLI `flashcomm metrics`, `--trace-out`,
+//! tests). Span events are paired Start→End per
+//! (rank, algo, stage, op, codec) and folded into counters plus
+//! log₂-bucketed latency histograms keyed per (algo, stage, op, codec).
+
+use std::collections::{BTreeMap, HashMap};
+
+use super::recorder::{AlgoTag, Event, Kind, Op, Stage};
+use crate::comm::fabric::CountersSnapshot;
+use crate::plan::PlanCacheStats;
+use crate::transport::TransportStats;
+
+/// Number of log₂ latency buckets: bucket `i` holds spans with
+/// `2^i <= nanos < 2^(i+1)` (bucket 0 also holds 0–1 ns; bucket 31 holds
+/// everything ≥ 2³¹ ns ≈ 2.1 s).
+pub const HIST_BUCKETS: usize = 32;
+
+/// A log₂-bucketed latency histogram over span durations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Histogram {
+    pub buckets: [u64; HIST_BUCKETS],
+    pub count: u64,
+    pub total_nanos: u64,
+    pub max_nanos: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram { buckets: [0; HIST_BUCKETS], count: 0, total_nanos: 0, max_nanos: 0 }
+    }
+}
+
+impl Histogram {
+    /// Bucket index for a duration: `floor(log2(nanos))` clamped to the
+    /// bucket range (0 ns lands in bucket 0).
+    pub fn bucket_of(nanos: u64) -> usize {
+        if nanos == 0 {
+            0
+        } else {
+            ((63 - nanos.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+        }
+    }
+
+    pub fn observe(&mut self, nanos: u64) {
+        self.buckets[Self::bucket_of(nanos)] += 1;
+        self.count += 1;
+        self.total_nanos += nanos;
+        self.max_nanos = self.max_nanos.max(nanos);
+    }
+
+    /// Mean span duration in nanoseconds (0 when empty).
+    pub fn mean_nanos(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.total_nanos / self.count
+        }
+    }
+}
+
+/// One aggregated series: every span sharing (algo, stage, op, codec).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Series {
+    /// Completed Start→End pairs folded in.
+    pub spans: u64,
+    /// Sum of the End events' byte payloads (wire bytes for codec/send
+    /// ops).
+    pub bytes: u64,
+    pub hist: Histogram,
+}
+
+/// A fully resolved series key, decoded for display/export.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct SeriesKey {
+    pub algo: AlgoTag,
+    pub stage: Stage,
+    pub op: Op,
+    pub codec_tag: u16,
+}
+
+/// The offline aggregator. Build one, absorb whatever sources exist, then
+/// [`MetricsRegistry::snapshot`].
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    series: BTreeMap<(u8, u8, u8, u16), Series>,
+    /// Events that could not be paired (End with no Start, Start with no
+    /// End) — nonzero when the ring wrapped mid-span.
+    unpaired: u64,
+    fabric: Option<CountersSnapshot>,
+    transport: Option<TransportStats>,
+    plan_cache: Option<PlanCacheStats>,
+    last_plan: Option<(String, u64)>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// Fold one rank's recorded events in. Events must be in recording
+    /// order (as [`super::Recorder::events`] returns them); spans are
+    /// paired per (rank, algo, stage, op, codec) so interleaved chunks and
+    /// the enclosing `Collective` span pair correctly.
+    pub fn absorb_events(&mut self, events: &[Event]) {
+        // Open-span stack per pairing key: (rank, algo, stage, op, codec).
+        let mut open: HashMap<(u16, u8, u8, u8, u16), Vec<u64>> = HashMap::new();
+        for e in events {
+            let key = (e.rank, e.algo as u8, e.stage as u8, e.op as u8, e.codec_tag);
+            match e.kind {
+                Kind::Start => open.entry(key).or_default().push(e.t_nanos),
+                Kind::End => match open.get_mut(&key).and_then(|v| v.pop()) {
+                    Some(t0) => {
+                        let s = self
+                            .series
+                            .entry((e.algo as u8, e.stage as u8, e.op as u8, e.codec_tag))
+                            .or_default();
+                        s.spans += 1;
+                        s.bytes += e.bytes;
+                        s.hist.observe(e.t_nanos.saturating_sub(t0));
+                    }
+                    None => self.unpaired += 1,
+                },
+            }
+        }
+        self.unpaired += open.values().map(|v| v.len() as u64).sum::<u64>();
+    }
+
+    /// Attach (or accumulate) a fabric byte-counter snapshot.
+    pub fn absorb_fabric(&mut self, s: CountersSnapshot) {
+        self.fabric = Some(match self.fabric {
+            Some(prev) => CountersSnapshot {
+                total: prev.total + s.total,
+                cross_numa: prev.cross_numa + s.cross_numa,
+                messages: prev.messages + s.messages,
+            },
+            None => s,
+        });
+    }
+
+    /// Attach (or accumulate) a transport counter snapshot.
+    pub fn absorb_transport(&mut self, s: TransportStats) {
+        self.transport = Some(match self.transport {
+            Some(prev) => TransportStats {
+                payload_bytes: prev.payload_bytes + s.payload_bytes,
+                wire_bytes: prev.wire_bytes + s.wire_bytes,
+                messages: prev.messages + s.messages,
+                buffered_bytes: prev.buffered_bytes + s.buffered_bytes,
+                peak_buffered_bytes: prev.peak_buffered_bytes.max(s.peak_buffered_bytes),
+            },
+            None => s,
+        });
+    }
+
+    /// Attach (or accumulate) plan-cache hit/miss/eviction counters.
+    pub fn absorb_plan_cache(&mut self, s: PlanCacheStats) {
+        self.plan_cache = Some(match self.plan_cache {
+            Some(prev) => PlanCacheStats {
+                hits: prev.hits + s.hits,
+                misses: prev.misses + s.misses,
+                evictions: prev.evictions + s.evictions,
+            },
+            None => s,
+        });
+    }
+
+    /// Record the resolved plan of the most recent collective (display
+    /// form + fingerprint).
+    pub fn set_last_plan(&mut self, display: String, fingerprint: u64) {
+        self.last_plan = Some((display, fingerprint));
+    }
+
+    /// Materialize everything absorbed so far.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            series: self
+                .series
+                .iter()
+                .filter_map(|(&(algo, stage, op, codec_tag), &s)| {
+                    Some((
+                        SeriesKey {
+                            algo: AlgoTag::from_u8(algo)?,
+                            stage: Stage::from_u8(stage)?,
+                            op: Op::from_u8(op)?,
+                            codec_tag,
+                        },
+                        s,
+                    ))
+                })
+                .collect(),
+            unpaired: self.unpaired,
+            fabric: self.fabric,
+            transport: self.transport,
+            plan_cache: self.plan_cache,
+            last_plan: self.last_plan.clone(),
+        }
+    }
+}
+
+/// A point-in-time export of the registry: what `flashcomm metrics`
+/// prints and tests assert on.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsSnapshot {
+    pub series: Vec<(SeriesKey, Series)>,
+    pub unpaired: u64,
+    pub fabric: Option<CountersSnapshot>,
+    pub transport: Option<TransportStats>,
+    pub plan_cache: Option<PlanCacheStats>,
+    /// Display form + fingerprint of the last resolved `CommPlan`.
+    pub last_plan: Option<(String, u64)>,
+}
+
+impl MetricsSnapshot {
+    /// Hand-rolled JSON export (no serde in the dependency set).
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\"series\":[");
+        for (i, (k, s)) in self.series.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let nonzero: Vec<String> = s
+                .hist
+                .buckets
+                .iter()
+                .enumerate()
+                .filter(|(_, &c)| c > 0)
+                .map(|(b, &c)| format!("[{b},{c}]"))
+                .collect();
+            out.push_str(&format!(
+                "{{\"algo\":\"{}\",\"stage\":\"{}\",\"op\":\"{}\",\"codec\":\"{}\",\
+                 \"spans\":{},\"bytes\":{},\"mean_nanos\":{},\"max_nanos\":{},\
+                 \"hist_log2\":[{}]}}",
+                k.algo.name(),
+                k.stage.name(),
+                k.op.name(),
+                super::codec_tag_name(k.codec_tag),
+                s.spans,
+                s.bytes,
+                s.hist.mean_nanos(),
+                s.hist.max_nanos,
+                nonzero.join(",")
+            ));
+        }
+        out.push_str(&format!("],\"unpaired\":{}", self.unpaired));
+        if let Some(f) = self.fabric {
+            out.push_str(&format!(
+                ",\"fabric\":{{\"total_bytes\":{},\"cross_numa_bytes\":{},\"messages\":{}}}",
+                f.total, f.cross_numa, f.messages
+            ));
+        }
+        if let Some(t) = self.transport {
+            out.push_str(&format!(
+                ",\"transport\":{{\"payload_bytes\":{},\"wire_bytes\":{},\"messages\":{},\
+                 \"buffered_bytes\":{},\"peak_buffered_bytes\":{}}}",
+                t.payload_bytes, t.wire_bytes, t.messages, t.buffered_bytes, t.peak_buffered_bytes
+            ));
+        }
+        if let Some(p) = self.plan_cache {
+            out.push_str(&format!(
+                ",\"plan_cache\":{{\"hits\":{},\"misses\":{},\"evictions\":{}}}",
+                p.hits, p.misses, p.evictions
+            ));
+        }
+        if let Some((plan, fp)) = &self.last_plan {
+            out.push_str(&format!(",\"last_plan\":{{\"plan\":\"{plan}\",\"fp\":\"{fp:#018x}\"}}"));
+        }
+        out.push('}');
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(
+        seq: u64,
+        t: u64,
+        kind: Kind,
+        op: Op,
+        stage: Stage,
+        bytes: u64,
+    ) -> Event {
+        Event {
+            seq,
+            t_nanos: t,
+            kind,
+            op,
+            stage,
+            algo: AlgoTag::Hier,
+            rank: 0,
+            codec_tag: 0x1004,
+            plan_fp: 7,
+            bytes,
+            chunk: 0,
+        }
+    }
+
+    #[test]
+    fn bucket_edges() {
+        assert_eq!(Histogram::bucket_of(0), 0);
+        assert_eq!(Histogram::bucket_of(1), 0);
+        assert_eq!(Histogram::bucket_of(2), 1);
+        assert_eq!(Histogram::bucket_of(3), 1);
+        assert_eq!(Histogram::bucket_of(1024), 10);
+        assert_eq!(Histogram::bucket_of(u64::MAX), HIST_BUCKETS - 1);
+    }
+
+    #[test]
+    fn spans_pair_and_aggregate() {
+        let mut reg = MetricsRegistry::new();
+        reg.absorb_events(&[
+            ev(0, 100, Kind::Start, Op::Encode, Stage::ReduceScatter, 64),
+            ev(1, 300, Kind::End, Op::Encode, Stage::ReduceScatter, 40),
+            ev(2, 400, Kind::Start, Op::Encode, Stage::ReduceScatter, 64),
+            ev(3, 500, Kind::End, Op::Encode, Stage::ReduceScatter, 40),
+        ]);
+        let snap = reg.snapshot();
+        assert_eq!(snap.series.len(), 1);
+        let (k, s) = snap.series[0];
+        assert_eq!(k.op, Op::Encode);
+        assert_eq!(k.stage, Stage::ReduceScatter);
+        assert_eq!(s.spans, 2);
+        assert_eq!(s.bytes, 80, "bytes come from End events");
+        assert_eq!(s.hist.count, 2);
+        assert_eq!(s.hist.total_nanos, 300);
+        assert_eq!(s.hist.max_nanos, 200);
+        assert_eq!(snap.unpaired, 0);
+    }
+
+    #[test]
+    fn wraparound_orphans_are_counted_not_mispaired() {
+        let mut reg = MetricsRegistry::new();
+        reg.absorb_events(&[
+            // End whose Start was overwritten by ring wraparound…
+            ev(10, 900, Kind::End, Op::Send, Stage::CrossGroup, 8),
+            // …and a Start whose End never came.
+            ev(11, 950, Kind::Start, Op::Recv, Stage::CrossGroup, 0),
+        ]);
+        let snap = reg.snapshot();
+        assert!(snap.series.is_empty());
+        assert_eq!(snap.unpaired, 2);
+    }
+
+    #[test]
+    fn collective_span_pairs_around_nested_ops() {
+        let mut reg = MetricsRegistry::new();
+        reg.absorb_events(&[
+            ev(0, 0, Kind::Start, Op::Collective, Stage::Single, 0),
+            ev(1, 10, Kind::Start, Op::Send, Stage::ReduceScatter, 8),
+            ev(2, 20, Kind::End, Op::Send, Stage::ReduceScatter, 8),
+            ev(3, 50, Kind::End, Op::Collective, Stage::Single, 0),
+        ]);
+        let snap = reg.snapshot();
+        assert_eq!(snap.series.len(), 2);
+        assert_eq!(snap.unpaired, 0);
+    }
+
+    #[test]
+    fn json_export_carries_every_absorbed_source() {
+        let mut reg = MetricsRegistry::new();
+        reg.absorb_events(&[
+            ev(0, 0, Kind::Start, Op::Send, Stage::Single, 4),
+            ev(1, 5, Kind::End, Op::Send, Stage::Single, 4),
+        ]);
+        reg.absorb_fabric(CountersSnapshot { total: 100, cross_numa: 40, messages: 3 });
+        reg.absorb_fabric(CountersSnapshot { total: 1, cross_numa: 1, messages: 1 });
+        reg.absorb_plan_cache(PlanCacheStats { hits: 5, misses: 2, evictions: 0 });
+        reg.set_last_plan("hierpp".into(), 0xab);
+        let json = reg.snapshot().to_json();
+        for field in [
+            "\"series\":[",
+            "\"op\":\"send\"",
+            "\"spans\":1",
+            "\"total_bytes\":101",
+            "\"messages\":4",
+            "\"hits\":5",
+            "\"last_plan\"",
+            "\"fp\":\"0x00000000000000ab\"",
+        ] {
+            assert!(json.contains(field), "{json} missing {field}");
+        }
+    }
+}

@@ -258,6 +258,42 @@ impl Topology {
         g * s..(g + 1) * s
     }
 
+    /// This topology with measured effective rates substituted for the
+    /// static calibration: `intra_bw`/`inter_bw` in bytes/s,
+    /// `qdq_pass_rate` in element-passes/s; `None` leaves a term
+    /// untouched. This is the back door
+    /// [`crate::sim::MeasuredProfile::apply`] uses for profile-guided plan
+    /// recalibration — the shape (ranks, groups) is preserved, only the
+    /// priced rates move, and [`Topology::fingerprint`] changes with them
+    /// so plan-cache entries for the static topology are never reused.
+    /// An `inter_bw` override on a flat (single-group) topology is
+    /// ignored: there is no inter-group link to recalibrate.
+    pub fn recalibrated(
+        &self,
+        intra_bw: Option<f64>,
+        inter_bw: Option<f64>,
+        qdq_pass_rate: Option<f64>,
+    ) -> Topology {
+        let mut spec = self.spec.clone();
+        if let Some(bw) = intra_bw {
+            spec.interconnect = match spec.interconnect {
+                Interconnect::PcieNuma { bridge_gbps, .. } => {
+                    Interconnect::PcieNuma { pcie_gbps: bw / 1e9, bridge_gbps }
+                }
+                Interconnect::NvLink { .. } => Interconnect::NvLink { gbps: bw / 1e9 },
+            };
+        }
+        if let Some(rate) = qdq_pass_rate {
+            spec.qdq_pass_rate = rate;
+        }
+        let inter_group_bw = if self.numa_groups > 1 {
+            inter_bw.or(self.inter_group_bw)
+        } else {
+            None
+        };
+        Topology { spec, n_gpus: self.n_gpus, numa_groups: self.numa_groups, inter_group_bw }
+    }
+
     /// FNV-1a fingerprint of every field the cost model prices: the spec's
     /// name and calibration constants (bandwidths, latency, QDQ pass rate,
     /// protocol efficiencies) plus the shape (`n_gpus`, `numa_groups`,
@@ -412,6 +448,24 @@ mod tests {
         ] {
             assert!(seen.insert(t.fingerprint()), "collision for {}x{}", t.spec.name, t.numa_groups);
         }
+    }
+
+    #[test]
+    fn recalibration_moves_only_the_priced_rates() {
+        let t = Topology::new(l40(), 8);
+        let r = t.recalibrated(Some(30e9), Some(4e9), Some(1e12));
+        assert_eq!(r.n_gpus, t.n_gpus);
+        assert_eq!(r.numa_groups, t.numa_groups);
+        assert_eq!(r.spec.intra_bw(), 30e9);
+        assert_eq!(r.inter_bw(), Some(4e9));
+        assert_eq!(r.spec.qdq_pass_rate, 1e12);
+        assert_eq!(r.spec.ring_eff, t.spec.ring_eff, "unmeasured terms keep calibration");
+        assert_ne!(r.fingerprint(), t.fingerprint());
+        // None leaves each term untouched; a flat topology has no inter
+        // link to override.
+        assert_eq!(t.recalibrated(None, None, None), t);
+        let flat = Topology::new(h800(), 8);
+        assert_eq!(flat.recalibrated(None, Some(9e9), None).inter_bw(), None);
     }
 
     #[test]

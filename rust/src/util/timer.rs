@@ -58,6 +58,12 @@ pub fn fmt_duration(d: Duration) -> String {
     }
 }
 
+/// [`fmt_duration`] for an integer nanosecond count (the flight
+/// recorder's native unit: histogram means and span timestamps).
+pub fn fmt_nanos(nanos: u64) -> String {
+    fmt_duration(Duration::from_nanos(nanos))
+}
+
 /// Auto-scale a byte count for display.
 pub fn fmt_bytes(b: usize) -> String {
     const KB: f64 = 1024.0;
@@ -103,5 +109,7 @@ mod tests {
         assert_eq!(fmt_bytes(2048), "2.00 KiB");
         assert!(fmt_duration(Duration::from_micros(12)).contains("us"));
         assert!(fmt_duration(Duration::from_millis(12)).contains("ms"));
+        assert_eq!(fmt_nanos(12_000), "12.000 us");
+        assert_eq!(fmt_nanos(3_500_000), "3.500 ms");
     }
 }

@@ -1,0 +1,96 @@
+//! Integration pins for the flight-recorder telemetry layer, through the
+//! public [`LocalGroup`] API only: exact closed-form event counts for the
+//! hierarchical family, ring wraparound keeping the newest events, and
+//! recording being a pure observer (bit-identical results on and off).
+
+use flashcomm::comm::{Algo, AlgoPolicy, LocalGroup};
+use flashcomm::quant::Codec;
+use flashcomm::telemetry::Op;
+use flashcomm::topo::{presets, Topology};
+use flashcomm::util::Prng;
+
+fn inputs(n: usize, len: usize, seed: u64) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|r| {
+            let mut rng = Prng::new(seed + r as u64);
+            let mut v = vec![0f32; len];
+            rng.fill_activations(&mut v, 1.0);
+            v
+        })
+        .collect()
+}
+
+/// Per-rank events for one hierarchical AllReduce on `g` groups of `s`
+/// ranks with `c` micro-chunks. Each chunk records `7(s-1) + 3g + 1`
+/// spans — reduce-scatter: `(s-1)` encode + `(s-1)` send + `(s-1)` recv
+/// + `(s-1)` decode-sum; cross-group: 1 encode + `(g-1)` send + `(g-1)`
+/// recv + `g` decode-sum; all-gather: 1 encode + `(s-1)` send + `(s-1)`
+/// recv + `s` decode — at 2 events (Start, End) per span, plus the
+/// enclosing Collective span.
+fn hier_events_per_rank(s: usize, g: usize, c: usize) -> u64 {
+    (2 * c * (7 * (s - 1) + 3 * g + 1) + 2) as u64
+}
+
+#[test]
+fn hier_event_counts_match_the_closed_form_exactly() {
+    // presets::l40() is a NUMA spec: 8 ranks split into 2 groups of 4.
+    let topo = Topology::new(presets::l40(), 8);
+    let codec = Codec::parse("int4@32").unwrap();
+    // Staged hier is the C = 1 case; hierpp defaults to 8 micro-chunks.
+    for (algo, chunks) in [(Algo::Hier, 1usize), (Algo::HierPipelined, 8)] {
+        let mut group = LocalGroup::new(&topo, AlgoPolicy::Fixed(algo)).unwrap();
+        group.enable_recording(4096);
+        let mut data = inputs(8, 8192, 42);
+        group.allreduce(&mut data, &codec).unwrap();
+        let want = hier_events_per_rank(4, 2, chunks);
+        for c in group.ranks() {
+            let rec = c.recorder().unwrap();
+            assert_eq!(rec.total_recorded(), want, "{algo:?} rank {}", c.rank());
+            assert_eq!(rec.events().len() as u64, want, "{algo:?}: ring must hold them all");
+        }
+    }
+}
+
+#[test]
+fn ring_wraparound_keeps_the_newest_events_over_the_public_api() {
+    let topo = Topology::new(presets::l40(), 8);
+    let mut group = LocalGroup::new(&topo, AlgoPolicy::Fixed(Algo::Hier)).unwrap();
+    // One staged-hier call records 58 events per rank — far over capacity.
+    group.enable_recording(16);
+    let mut data = inputs(8, 4096, 7);
+    group.allreduce(&mut data, &Codec::parse("int8").unwrap()).unwrap();
+    let want_total = hier_events_per_rank(4, 2, 1);
+    for c in group.ranks() {
+        let rec = c.recorder().unwrap();
+        assert_eq!(rec.total_recorded(), want_total, "wrapping must not lose the count");
+        let ev = rec.events();
+        assert_eq!(ev.len(), 16, "ring holds exactly its capacity");
+        let seqs: Vec<u64> = ev.iter().map(|e| e.seq).collect();
+        let want: Vec<u64> = (want_total - 16..want_total).collect();
+        assert_eq!(seqs, want, "newest events survive, oldest are overwritten");
+        let last = ev.last().unwrap();
+        assert_eq!(last.op, Op::Collective, "the closing Collective End is the newest event");
+    }
+}
+
+#[test]
+fn recording_never_changes_the_numerics() {
+    let topo = Topology::new(presets::l40(), 8);
+    let codec = Codec::parse("int2-sr@32!").unwrap();
+    for algo in [Algo::Ring, Algo::TwoStep, Algo::Hier, Algo::HierPipelined] {
+        let run = |record: bool| -> Vec<Vec<u32>> {
+            let mut group = LocalGroup::new(&topo, AlgoPolicy::Fixed(algo)).unwrap();
+            if record {
+                // Deliberately tiny: wrapping mid-collective must also be
+                // invisible to the data path.
+                group.enable_recording(64);
+            }
+            let mut data = inputs(8, 3000, 99);
+            group.allreduce(&mut data, &codec).unwrap();
+            data.into_iter()
+                .map(|rank| rank.into_iter().map(f32::to_bits).collect())
+                .collect()
+        };
+        assert_eq!(run(true), run(false), "{algo:?}: recording must be a pure observer");
+    }
+}
