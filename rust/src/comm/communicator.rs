@@ -375,11 +375,34 @@ impl<T: Transport> Communicator<T> {
         }
         reg.absorb_fabric(self.counters().snapshot());
         reg.absorb_transport(self.transport().stats());
+        if let Some(session) = self.transport().session_stats() {
+            reg.absorb_session(session);
+        }
         reg.absorb_plan_cache(self.plans.stats());
         if let Some((plan, fp)) = &self.last_plan {
             reg.set_last_plan(plan.to_string(), *fp);
         }
         reg
+    }
+
+    /// Continue over the surviving membership after the session fabric
+    /// declared `lost` ranks dead: the transport is rewrapped in a
+    /// [`crate::session::DegradedMesh`] (dense renumbering over the
+    /// survivors, per-link seq spaces intact) and the topology replaced by
+    /// [`crate::session::survivor_topology`] — whose changed fingerprint
+    /// guarantees the
+    /// plan compiler never replays a full-membership plan against the
+    /// shrunk mesh. Scratch, plan cache, and the flight recorder start
+    /// fresh (shapes, fingerprints, and the rank id all change); the
+    /// job-shared byte counters carry across the loss.
+    pub fn into_degraded(
+        self,
+        lost: &[usize],
+    ) -> Result<Communicator<crate::session::DegradedMesh<T>>, CommError> {
+        let (transport, topo, counters) = self.handle.into_parts();
+        let survivors = crate::session::survivor_topology(&topo, lost)?;
+        let mesh = crate::session::DegradedMesh::new(transport, lost)?;
+        Communicator::new(mesh, survivors, counters)
     }
 
     /// [`metrics_registry`](Communicator::metrics_registry), materialized.

@@ -15,6 +15,8 @@
 //! |              |                      | delivered frame (e.g. inflated `n`)    |
 //! | [`Topology`] | algorithm selection  | hierarchical algo on a non-NUMA node   |
 //! | [`Shape`]    | caller arguments     | wrong payload count / rank out of range|
+//! | [`PeerLost`] | session fabric       | peer crashed / heartbeat deadline hit  |
+//! | [`Rendezvous`]| session bootstrap   | dead root, handshake timeout, bad greeting|
 //!
 //! [`Send`]: CommError::Send
 //! [`Recv`]: CommError::Recv
@@ -22,6 +24,8 @@
 //! [`Header`]: CommError::Header
 //! [`Topology`]: CommError::Topology
 //! [`Shape`]: CommError::Shape
+//! [`PeerLost`]: CommError::PeerLost
+//! [`Rendezvous`]: CommError::Rendezvous
 
 use std::fmt;
 
@@ -44,6 +48,16 @@ pub enum CommError {
     Topology { algo: Algo, detail: String },
     /// Caller-side argument error (payload count, rank range, length).
     Shape { detail: String },
+    /// The session fabric declared `rank` dead under `epoch` — its
+    /// heartbeat deadline expired, its socket closed abruptly, or a fault
+    /// injector killed it. Survivors receive this within the configured
+    /// timeout instead of blocking forever; recovery options are a
+    /// degraded-membership re-plan or a rejoin under `epoch + 1` (see
+    /// [`crate::session`]).
+    PeerLost { rank: usize, epoch: u16 },
+    /// The rendezvous handshake with `--root` failed or timed out (dead
+    /// root, refused connection, malformed greeting, epoch conflict).
+    Rendezvous { detail: String },
 }
 
 impl CommError {
@@ -71,6 +85,14 @@ impl CommError {
         CommError::Shape { detail: detail.into() }
     }
 
+    pub(crate) fn peer_lost(rank: usize, epoch: u16) -> CommError {
+        CommError::PeerLost { rank, epoch }
+    }
+
+    pub(crate) fn rendezvous(detail: impl Into<String>) -> CommError {
+        CommError::Rendezvous { detail: detail.into() }
+    }
+
     /// The peer rank the failure is attributed to, if any.
     pub fn peer(&self) -> Option<usize> {
         match self {
@@ -78,7 +100,10 @@ impl CommError {
             | CommError::Recv { peer, .. }
             | CommError::Decode { peer, .. }
             | CommError::Header { peer, .. } => Some(*peer),
-            CommError::Topology { .. } | CommError::Shape { .. } => None,
+            CommError::PeerLost { rank, .. } => Some(*rank),
+            CommError::Topology { .. } | CommError::Shape { .. } | CommError::Rendezvous { .. } => {
+                None
+            }
         }
     }
 }
@@ -102,6 +127,10 @@ impl fmt::Display for CommError {
                 write!(f, "{} cannot run on this topology: {detail}", algo.name())
             }
             CommError::Shape { detail } => write!(f, "invalid collective arguments: {detail}"),
+            CommError::PeerLost { rank, epoch } => {
+                write!(f, "PeerLost: rank {rank} lost from the session (epoch {epoch})")
+            }
+            CommError::Rendezvous { detail } => write!(f, "rendezvous failed: {detail}"),
         }
     }
 }
@@ -141,6 +170,18 @@ mod tests {
         let t = CommError::topology(Algo::Hier, "1 NUMA group".into());
         assert!(t.to_string().contains("Hierarchical"), "{t}");
         assert_eq!(t.peer(), None);
+    }
+
+    #[test]
+    fn peer_lost_and_rendezvous_display() {
+        let e = CommError::peer_lost(5, 2);
+        let s = e.to_string();
+        assert!(s.contains("PeerLost") && s.contains("rank 5") && s.contains("epoch 2"), "{s}");
+        assert_eq!(e.peer(), Some(5));
+
+        let r = CommError::rendezvous("root 127.0.0.1:9999 unreachable");
+        assert!(r.to_string().contains("rendezvous failed"), "{r}");
+        assert_eq!(r.peer(), None);
     }
 
     #[test]

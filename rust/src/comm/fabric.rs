@@ -14,6 +14,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::comm::error::CommError;
+use crate::session::find_peer_lost;
 use crate::telemetry::{Op, Recorder};
 use crate::topo::Topology;
 use crate::transport::{inproc, InProcTransport, Transport};
@@ -146,7 +147,8 @@ impl<T: Transport> RankHandle<T> {
 
     /// Send a payload to `dst` (non-blocking with respect to the peer's
     /// progress; see [`Transport`]). A transport fault surfaces as
-    /// [`CommError::Send`] — no panic.
+    /// [`CommError::Send`] — no panic — except a session-declared peer
+    /// death, which surfaces as the typed [`CommError::PeerLost`].
     pub fn send(&self, dst: usize, bytes: Vec<u8>) -> Result<(), CommError> {
         assert_ne!(dst, self.rank, "self-send is a local copy, not a transfer");
         self.counters.total.fetch_add(bytes.len() as u64, Ordering::Relaxed);
@@ -156,7 +158,7 @@ impl<T: Transport> RankHandle<T> {
         }
         let len = bytes.len() as u64;
         crate::record!(self.recorder(), start Op::Send, len);
-        let sent = self.transport.send(dst, bytes).map_err(|e| CommError::send(dst, e));
+        let sent = self.transport.send(dst, bytes).map_err(|e| self.classify(dst, e, true));
         crate::record!(self.recorder(), end Op::Send, len);
         sent
     }
@@ -164,15 +166,35 @@ impl<T: Transport> RankHandle<T> {
     /// Block until a payload from `src` arrives. A transport fault
     /// (corruption, version mismatch, sequence desync, disconnect) surfaces
     /// as [`CommError::Recv`] — a collective cannot continue past a broken
-    /// link, but the caller decides how loudly to fail.
+    /// link, but the caller decides how loudly to fail. A peer the session
+    /// fabric declared dead surfaces as the typed [`CommError::PeerLost`]
+    /// instead, so survivors can re-plan over the remaining membership.
     pub fn recv(&self, src: usize) -> Result<Vec<u8>, CommError> {
         assert_ne!(src, self.rank);
         crate::record!(self.recorder(), start Op::Recv);
-        let got = self.transport.recv(src).map_err(|e| CommError::recv(src, e));
+        let got = self.transport.recv(src).map_err(|e| self.classify(src, e, false));
         if let Ok(bytes) = &got {
             crate::record!(self.recorder(), end Op::Recv, bytes.len() as u64);
         }
         got
+    }
+
+    /// Map a transport error to the typed comm error: a [`PeerLost`]
+    /// anywhere in the chain (planted by the session fabric or the fault
+    /// injector) wins over the generic send/recv classification, and is
+    /// recorded as an [`Op::PeerLost`] telemetry event.
+    fn classify(&self, peer: usize, e: anyhow::Error, sending: bool) -> CommError {
+        if let Some(lost) = find_peer_lost(&e) {
+            // A loss is an instant, not a span: one Start event, bytes
+            // field carrying the lost rank.
+            crate::record!(self.recorder(), start Op::PeerLost, lost.rank as u64);
+            return CommError::peer_lost(lost.rank, lost.epoch);
+        }
+        if sending {
+            CommError::send(peer, e)
+        } else {
+            CommError::recv(peer, e)
+        }
     }
 
     /// The node topology this fabric models.
@@ -188,6 +210,15 @@ impl<T: Transport> RankHandle<T> {
     /// The underlying transport endpoint (e.g. for [`Transport::stats`]).
     pub fn transport(&self) -> &T {
         &self.transport
+    }
+
+    /// Decompose the handle into its transport, topology, and counters —
+    /// the membership-change path: after a peer loss, the transport is
+    /// rewrapped in a [`crate::session::DegradedMesh`] and a new handle is
+    /// built over the survivor topology (counters carry across, so the
+    /// Table 5 volume accounting spans the loss).
+    pub fn into_parts(self) -> (T, Topology, Arc<ByteCounters>) {
+        (self.transport, self.topo, self.counters)
     }
 }
 
@@ -350,6 +381,39 @@ mod tests {
         assert_eq!(recvs[0].bytes, 0, "recv start cannot know the payload yet");
         assert_eq!((recvs[1].kind, recvs[1].op), (Kind::End, Op::Recv));
         assert_eq!(recvs[1].bytes, 48);
+    }
+
+    #[test]
+    fn peer_loss_is_typed_and_recorded() {
+        use crate::session::{fault, Fault};
+        use crate::telemetry::Recorder;
+        use std::time::Duration;
+        let topo = Topology::new(presets::h800(), 2);
+        // Rank 1 dies at its first send; rank 0's recv must come back as
+        // the typed CommError::PeerLost plus one telemetry point event.
+        let endpoints = fault::wrap_mesh(
+            inproc::mesh(2),
+            vec![Fault::None, Fault::KillAtSend { nth: 0 }],
+            Duration::from_secs(5),
+        );
+        let (results, _) = run_ranks_with(endpoints, &topo, |mut h| {
+            let rec = Arc::new(Recorder::new(h.rank, 16));
+            h.set_recorder(Some(rec.clone()));
+            if h.rank == 1 {
+                let e = h.send(0, vec![1]).unwrap_err();
+                (format!("{e}"), rec)
+            } else {
+                let e = h.recv(1).unwrap_err();
+                (format!("{e}"), rec)
+            }
+        });
+        for (msg, rec) in &results {
+            assert!(msg.contains("PeerLost"), "{msg}");
+            assert!(msg.contains("rank 1"), "{msg}");
+            let events = rec.events();
+            let loss = events.iter().find(|e| e.op == Op::PeerLost).expect("PeerLost event");
+            assert_eq!(loss.bytes, 1, "bytes field carries the lost rank");
+        }
     }
 
     #[test]

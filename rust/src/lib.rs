@@ -9,6 +9,13 @@
 //! - [`transport`] — pluggable point-to-point fabric with a versioned,
 //!   CRC-guarded frame protocol: in-process mpsc mesh, multi-process TCP
 //!   (rendezvous bootstrap), single-rank loopback.
+//! - [`session`] — the session fabric over the transports: per-peer
+//!   heartbeats and receive deadlines (`Healthy → Suspect → Lost`), a
+//!   frame-carried session epoch so restarted ranks rejoin without
+//!   poisoning seq spaces, degraded-mode membership
+//!   ([`session::DegradedMesh`] + [`session::survivor_topology`]) for
+//!   re-planning over the survivors, and a deterministic
+//!   [`session::FaultInjector`] for failure testing.
 //! - [`comm`] — the collective layer behind one front door,
 //!   [`comm::Communicator`]: fallible `allreduce` / `reduce_scatter` /
 //!   `all_gather` / `broadcast` / `all2all` methods (typed
@@ -43,6 +50,7 @@ pub mod model;
 pub mod plan;
 pub mod quant;
 pub mod runtime;
+pub mod session;
 pub mod sim;
 pub mod telemetry;
 pub mod topo;

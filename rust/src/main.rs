@@ -13,10 +13,12 @@
 //!                   [--trace-out path]
 //! flashcomm ttft    [--prompt N] [--batch N]
 //! flashcomm worker  [--world N] [--algo hier|auto] [--groups G]
-//!                   [--codecs int4@32,int2-sr@32] [--len N]
+//!                   [--codecs int4@32,int2-sr@32] [--len N] [--iters K]
 //!                   [--root host:port] [--rank R] [--codec-threads T]
 //!                   [--plan auto|spec] [--chunks K] [--window W]
 //!                   [--bind ip] [--inter-gbps F] [--trace-out path]
+//!                   [--heartbeat-ms H] [--comm-timeout-ms T]
+//!                   [--kill-rank R [--kill-after-ms M]] [--rejoin-rank R]
 //! flashcomm metrics [--ranks N] [--groups G] [--codec spec] [--len N]
 //!                   [--iters K] [--plan auto|spec] [--out path]
 //!                   [--trace-out path]
@@ -39,21 +41,28 @@
 //! `--trace-out p` turns on the flight recorder and writes one JSON trace
 //! per rank to `p.rankR` (schema: DESIGN.md §11); `metrics` runs a small
 //! recorded in-process demo and prints the aggregated metrics snapshot.
+//! `--heartbeat-ms H` / `--comm-timeout-ms T` configure the session fabric
+//! (DESIGN.md §12): heartbeats every `H` ms, a silent peer is declared
+//! Lost at `T` ms and every survivor gets a typed `PeerLost` instead of
+//! hanging. The launcher's `--kill-rank` / `--rejoin-rank` modes turn the
+//! worker demo into end-to-end failure drills over real processes.
 
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, ensure, Context, Result};
 
 use flashcomm::cli::Args;
-use flashcomm::comm::{fabric, preset_topo_custom, AlgoPolicy, Communicator, LocalGroup};
+use flashcomm::comm::{fabric, preset_topo_custom, AlgoPolicy, CommError, Communicator, LocalGroup};
 use flashcomm::coordinator::{TpEngine, TrainOptions, Trainer};
 use flashcomm::harness;
 use flashcomm::model::{Corpus, ModelConfig, Sampler, Weights};
 use flashcomm::plan::{CommPlan, PlanPins, PlanPolicy};
 use flashcomm::quant::Codec;
 use flashcomm::runtime::{default_artifacts_dir, Runtime};
+use flashcomm::session::{self, SessionConfig};
 use flashcomm::telemetry::DEFAULT_CAPACITY;
-use flashcomm::transport::{frame, tcp, TcpTransport, Transport};
+use flashcomm::transport::{frame, tcp, Transport};
 use flashcomm::util::Prng;
 
 fn main() {
@@ -115,6 +124,19 @@ fn inter_gbps_flag(args: &Args) -> Result<Option<f64>> {
             Ok(Some(gbps))
         }
     }
+}
+
+/// Parse the session-fabric pair `--heartbeat-ms` / `--comm-timeout-ms`
+/// (defaults 250 / 1000; both 0 disables liveness tracking). The pair is
+/// validated by [`SessionConfig::from_millis`] — a lone zero or a timeout
+/// under twice the heartbeat is a typed argument error. Every
+/// fabric-driving command parses this; only the TCP fabric has sockets to
+/// attach the deadlines to (DESIGN.md §12), so for the in-process
+/// backends a valid pair is inert.
+fn session_flags(args: &Args) -> Result<SessionConfig> {
+    let hb = args.flag_usize("heartbeat-ms", 250)? as u64;
+    let to = args.flag_usize("comm-timeout-ms", 1000)? as u64;
+    Ok(SessionConfig::from_millis(hb, to)?)
 }
 
 /// Parse the `--chunks N` / `--window N` plan-knob pins (clean error on
@@ -191,7 +213,18 @@ plan: --plan auto — compile a full communication plan per payload
       int4@32. --chunks K / --window W pin those knobs (error if 0).
 worker: --bind IP — bind data listeners beyond loopback (multi-node);
       --inter-gbps F — model G NVLink nodes joined by an F GB/s link
-      (the tier-asymmetric shape where auto plans mix stage codecs)
+      (the tier-asymmetric shape where auto plans mix stage codecs);
+      --iters K — repeat each codec's AllReduce K times
+session: --heartbeat-ms H / --comm-timeout-ms T — liveness fabric for the
+      TCP backend (DESIGN.md §12): heartbeats every H ms, a silent peer is
+      Suspect at T/2 and Lost at T, surfacing a typed PeerLost on every
+      survivor instead of a hang. Defaults 250/1000; both 0 disables the
+      fabric (rejected when --bind leaves loopback).
+faults: --kill-rank R [--kill-after-ms M] — launcher-only drill: SIGKILL
+      rank R mid-run and require every survivor to exit with PeerLost
+      within 2x the timeout; --rejoin-rank R — epoch drill: R drops after
+      one collective, survivors see PeerLost, everyone re-rendezvouses at
+      epoch 1 and the post-rejoin AllReduce must match InProc bit-for-bit
 trace: --trace-out P — flight-record every collective and write one JSON
       trace per rank to P.rankR (train / eval / worker / metrics;
       schema + recalibration formula in DESIGN.md §11)
@@ -213,6 +246,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let mut sampler = Sampler::new(train, args.flag_usize("seed", 7)? as u64);
     let eval_batches = Sampler::eval_batches(eval, cfg.eval_batch, cfg.seq_len);
     let codec = Codec::parse(&args.flag_or("codec", "bf16"))?;
+    session_flags(args)?; // validate the liveness pair (inert in-process)
     let algo: AlgoPolicy = args.flag_or("algo", "twostep").parse()?;
     let plan = plan_policy_for(args.flag("plan"), pins_flags(args)?, algo, &codec)?;
     let opts = TrainOptions {
@@ -280,6 +314,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let batches: Vec<_> =
         Sampler::eval_batches(eval, cfg.eval_batch, cfg.seq_len).into_iter().take(n).collect();
     let codec = Codec::parse(&args.flag_or("codec", "bf16"))?;
+    session_flags(args)?; // validate the liveness pair (inert in-process)
     if let Some(style) = args.flag("style") {
         bail!("--style was replaced by --algo (try `--algo {style}`, or `--algo auto`)");
     }
@@ -340,9 +375,12 @@ fn cmd_worker(args: &Args) -> Result<()> {
         Some(r) => {
             let rank: usize = r.parse().with_context(|| format!("--rank {r}"))?;
             let root = args.require("root")?;
-            worker_rank(rank, &opts, root)
+            match opts.rejoin_rank {
+                Some(rejoining) => worker_rank_rejoin(rank, &opts, root, rejoining),
+                None => worker_rank(rank, &opts, root),
+            }
         }
-        None => worker_launch(&opts, args.flag("root")),
+        None => worker_launch(&opts, args),
     }
 }
 
@@ -365,6 +403,17 @@ struct WorkerOpts {
     /// When set, every rank flight-records its collectives and writes the
     /// trace JSON to `{trace_out}.rank{R}` before exiting.
     trace_out: Option<String>,
+    /// Session-fabric pair (`--heartbeat-ms` / `--comm-timeout-ms`; both 0
+    /// disables liveness, which is rejected once `--bind` leaves loopback
+    /// — a multi-host run with no deadline hangs forever when a host dies).
+    heartbeat_ms: u64,
+    comm_timeout_ms: u64,
+    /// AllReduce repetitions per codec (`--iters`; keeps the fabric busy
+    /// long enough for the `--kill-rank` drill to land mid-collective).
+    iters: usize,
+    /// `--rejoin-rank R`: run the epoch-rejoin drill instead of the plain
+    /// bit-identity demo (see [`worker_rank_rejoin`]).
+    rejoin_rank: Option<usize>,
 }
 
 impl WorkerOpts {
@@ -390,7 +439,31 @@ impl WorkerOpts {
             plan: args.flag("plan").map(str::to_string),
             pins: pins_flags(args)?,
             trace_out: args.flag("trace-out").map(str::to_string),
+            heartbeat_ms: args.flag_usize("heartbeat-ms", 250)? as u64,
+            comm_timeout_ms: args.flag_usize("comm-timeout-ms", 1000)? as u64,
+            iters: args.flag_usize("iters", 1)?,
+            rejoin_rank: match args.flag("rejoin-rank") {
+                None => None,
+                Some(v) => Some(v.parse().with_context(|| format!("--rejoin-rank {v}"))?),
+            },
         };
+        ensure!(opts.iters >= 1, "--iters must be at least 1");
+        let session = opts.session()?; // validates the heartbeat/timeout pair
+        ensure!(
+            session.enabled() || opts.bind.is_loopback(),
+            "--heartbeat-ms 0 / --comm-timeout-ms 0 disables peer-loss detection, which is \
+             only sane on loopback: a multi-host run (--bind {}) would hang forever when a \
+             host dies",
+            opts.bind
+        );
+        if let Some(r) = opts.rejoin_rank {
+            ensure!(r < opts.world, "--rejoin-rank {r} out of range for --world {}", opts.world);
+            ensure!(
+                session.enabled(),
+                "--rejoin-rank needs the session fabric (non-zero --heartbeat-ms and \
+                 --comm-timeout-ms): without deadlines the survivors never see the loss"
+            );
+        }
         // Validate once here rather than erroring in every spawned
         // process: the topology must construct (world divisible into
         // --groups, --inter-gbps sane), a fixed algorithm must be
@@ -415,13 +488,46 @@ impl WorkerOpts {
         self.codecs.split(',').map(str::trim).filter(|s| !s.is_empty())
     }
 
+    /// The session config the flag pair denotes (validated at parse time,
+    /// so later calls cannot fail in practice).
+    fn session(&self) -> Result<SessionConfig> {
+        Ok(SessionConfig::from_millis(self.heartbeat_ms, self.comm_timeout_ms)?)
+    }
+
     fn topology(&self, policy: AlgoPolicy) -> Result<flashcomm::topo::Topology> {
         Ok(preset_topo_custom(self.world, self.groups, self.inter_gbps, policy)?)
     }
 }
 
-fn worker_launch(opts: &WorkerOpts, root: Option<&str>) -> Result<()> {
-    let root = match root {
+fn worker_launch(opts: &WorkerOpts, args: &Args) -> Result<()> {
+    // `--kill-rank R [--kill-after-ms M]`: launcher-only failure drill.
+    // SIGKILL rank R after M ms and require every survivor to exit
+    // non-zero with a typed PeerLost within twice the session deadline —
+    // the liveness guarantee of DESIGN.md §12, enforced over real
+    // processes and real sockets.
+    let kill = match args.flag("kill-rank") {
+        None => None,
+        Some(v) => {
+            let victim: usize = v.parse().with_context(|| format!("--kill-rank {v}"))?;
+            ensure!(
+                victim < opts.world,
+                "--kill-rank {victim} out of range for --world {}",
+                opts.world
+            );
+            ensure!(
+                opts.rejoin_rank.is_none(),
+                "--kill-rank and --rejoin-rank are mutually exclusive drills"
+            );
+            ensure!(
+                opts.session()?.enabled(),
+                "--kill-rank needs the session fabric (non-zero --heartbeat-ms and \
+                 --comm-timeout-ms): without deadlines the survivors would hang, not fail"
+            );
+            let after = Duration::from_millis(args.flag_usize("kill-after-ms", 500)? as u64);
+            Some((victim, after))
+        }
+    };
+    let root = match args.flag("root") {
         Some(r) => r.to_string(),
         None => {
             // Reserve an ephemeral rendezvous port; rank 0 rebinds it after
@@ -458,7 +564,13 @@ fn worker_launch(opts: &WorkerOpts, root: Option<&str>) -> Result<()> {
             .args(["--algo", &opts.algo])
             .args(["--codecs", &opts.codecs])
             .args(["--codec-threads", &opts.codec_threads.to_string()])
-            .args(["--bind", &opts.bind.to_string()]);
+            .args(["--bind", &opts.bind.to_string()])
+            .args(["--heartbeat-ms", &opts.heartbeat_ms.to_string()])
+            .args(["--comm-timeout-ms", &opts.comm_timeout_ms.to_string()])
+            .args(["--iters", &opts.iters.to_string()]);
+        if let Some(r) = opts.rejoin_rank {
+            cmd.args(["--rejoin-rank", &r.to_string()]);
+        }
         if let Some(g) = opts.groups {
             cmd.args(["--groups", &g.to_string()]);
         }
@@ -477,9 +589,16 @@ fn worker_launch(opts: &WorkerOpts, root: Option<&str>) -> Result<()> {
         if let Some(w) = opts.pins.window {
             cmd.args(["--window", &w.to_string()]);
         }
-        let child =
-            cmd.spawn().with_context(|| format!("spawning worker rank {rank}"))?;
+        if kill.is_some() {
+            // Survivor stderr is asserted on below ("PeerLost" must appear).
+            cmd.stderr(std::process::Stdio::piped());
+        }
+        let child = cmd.spawn().with_context(|| format!("spawning worker rank {rank}"))?;
         children.push((rank, child));
+    }
+    if let Some((victim, after)) = kill {
+        let deadline = Duration::from_millis(opts.comm_timeout_ms);
+        return reap_kill_smoke(children, victim, after, deadline);
     }
     let mut failed = false;
     for (rank, mut child) in children {
@@ -490,7 +609,100 @@ fn worker_launch(opts: &WorkerOpts, root: Option<&str>) -> Result<()> {
         }
     }
     ensure!(!failed, "one or more worker ranks failed");
-    println!("all {} worker processes agree with the InProc backend bit-for-bit", opts.world);
+    match opts.rejoin_rank {
+        Some(r) => println!(
+            "all {} ranks rejoined at epoch 1 after rank {r} restarted; the post-rejoin \
+             AllReduce matches the InProc backend bit-for-bit",
+            opts.world
+        ),
+        None => println!(
+            "all {} worker processes agree with the InProc backend bit-for-bit",
+            opts.world
+        ),
+    }
+    Ok(())
+}
+
+/// The `--kill-rank` drill's reaper half: SIGKILL `victim` after `after`,
+/// then require every survivor to exit non-zero with a typed `PeerLost` on
+/// stderr within `2 * comm_timeout` of the kill. A survivor still running
+/// past that budget means the liveness deadline did not fire — the drill
+/// kills the stragglers (no leaked processes) and fails loudly.
+fn reap_kill_smoke(
+    mut children: Vec<(usize, std::process::Child)>,
+    victim: usize,
+    after: Duration,
+    comm_timeout: Duration,
+) -> Result<()> {
+    std::thread::sleep(after);
+    children[victim].1.kill().with_context(|| format!("SIGKILLing rank {victim}"))?;
+    let budget = 2 * comm_timeout;
+    println!(
+        "launcher: killed rank {victim} after {after:?}; every survivor must exit with a \
+         typed PeerLost within {budget:?}"
+    );
+    // Drain each child's piped stderr on its own thread: a full pipe would
+    // deadlock the child against the wait loop below.
+    let mut drains = Vec::with_capacity(children.len());
+    for (rank, child) in &mut children {
+        let mut pipe = child.stderr.take().expect("stderr is piped in kill mode");
+        drains.push((
+            *rank,
+            std::thread::spawn(move || {
+                use std::io::Read as _;
+                let mut s = String::new();
+                let _ = pipe.read_to_string(&mut s);
+                s
+            }),
+        ));
+    }
+    let deadline = Instant::now() + budget;
+    let mut statuses: Vec<Option<std::process::ExitStatus>> = vec![None; children.len()];
+    loop {
+        for (rank, child) in &mut children {
+            if statuses[*rank].is_none() {
+                statuses[*rank] = child.try_wait().with_context(|| format!("polling rank {rank}"))?;
+            }
+        }
+        if statuses.iter().all(Option::is_some) {
+            break;
+        }
+        if Instant::now() >= deadline {
+            for (rank, child) in &mut children {
+                if statuses[*rank].is_none() {
+                    eprintln!("rank {rank} is still running past the PeerLost deadline");
+                    let _ = child.kill();
+                }
+            }
+            bail!(
+                "kill drill failed: survivors still running {budget:?} after rank {victim} \
+                 was killed (the session deadline did not fire)"
+            );
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    for (rank, drain) in drains {
+        let stderr = drain.join().unwrap_or_default();
+        if rank == victim {
+            continue;
+        }
+        let status = statuses[rank].expect("every status was collected above");
+        ensure!(
+            !status.success(),
+            "survivor rank {rank} exited cleanly — it should have failed with PeerLost \
+             (was the run long enough to still be in flight at kill time? raise --iters)"
+        );
+        ensure!(
+            stderr.contains("PeerLost"),
+            "survivor rank {rank} failed without a typed PeerLost:\n{stderr}"
+        );
+        // Surface the survivors' typed failure lines in the drill log.
+        eprint!("{stderr}");
+    }
+    println!(
+        "kill drill passed: all {} survivors exited with a typed PeerLost within {budget:?}",
+        children.len() - 1
+    );
     Ok(())
 }
 
@@ -499,10 +711,13 @@ fn worker_rank(rank: usize, opts: &WorkerOpts, root: &str) -> Result<()> {
     let topo = opts.topology(policy)?;
     let world = opts.world;
     let len = opts.len;
-    let tcp = TcpTransport::bootstrap_bound(rank, world, root, opts.bind)
-        .with_context(|| format!("rank {rank} bootstrapping the TCP mesh at {root}"))?;
-    let mut comm =
-        Communicator::new(tcp, topo.clone(), Arc::new(fabric::ByteCounters::default()))?;
+    // Session-aware bootstrap: a dead or silent root fails within the
+    // rendezvous timeout as a typed CommError::Rendezvous, and (unless the
+    // pair was zeroed out) the mesh runs under heartbeats + receive
+    // deadlines, so a peer death surfaces as PeerLost instead of a hang.
+    let tcp = session::establish(rank, world, root, None, opts.bind, &opts.session()?)
+        .with_context(|| format!("rank {rank} joining the TCP session at {root}"))?;
+    let mut comm = Communicator::new(tcp, topo.clone(), Arc::new(fabric::ByteCounters::default()))?;
     comm.set_codec_threads(opts.codec_threads);
     if opts.trace_out.is_some() {
         comm.enable_recording(DEFAULT_CAPACITY);
@@ -519,58 +734,69 @@ fn worker_rank(rank: usize, opts: &WorkerOpts, root: &str) -> Result<()> {
         })
         .collect();
 
-    for spec in opts.codec_list() {
-        let codec = Codec::parse(spec)?;
-        let plan_policy = plan_policy_for(opts.plan.as_deref(), opts.pins, policy, &codec)?;
+    for iter in 0..opts.iters {
+        for spec in opts.codec_list() {
+            let codec = Codec::parse(spec)?;
+            let plan_policy = plan_policy_for(opts.plan.as_deref(), opts.pins, policy, &codec)?;
 
-        // The real thing: this process is one rank of the TCP mesh.
-        let mut mine = inputs[rank].clone();
-        let (used_label, used_algo, used_plan) = match &plan_policy {
-            Some(pp) => {
-                let plan = comm.allreduce_planned(&mut mine, &codec, pp)?;
-                (plan.to_string(), plan.algo, Some(plan))
-            }
-            None => {
-                let algo = comm.allreduce(&mut mine, &codec, policy)?;
-                (algo.to_string(), algo, None)
-            }
-        };
-
-        // Reference: the same collective over the in-process backend. The
-        // policy (algorithm or full plan) resolves per (topology, codec,
-        // size) deterministically, so both backends pick the same schedule
-        // without coordination.
-        let inputs_ref = &inputs;
-        let pp_ref = &plan_policy;
-        let (reference, _) = fabric::run_ranks(&topo, |rh| {
-            let mut c = Communicator::from_handle(rh);
-            let mut d = inputs_ref[c.rank()].clone();
-            match pp_ref {
+            // The real thing: this process is one rank of the TCP mesh.
+            let mut mine = inputs[rank].clone();
+            let (used_label, used_algo, used_plan) = match &plan_policy {
                 Some(pp) => {
-                    let ref_plan = c
-                        .allreduce_planned(&mut d, &codec, pp)
-                        .expect("in-process reference failed");
-                    assert_eq!(Some(ref_plan), used_plan, "backends resolved different plans");
+                    let plan = comm.allreduce_planned(&mut mine, &codec, pp)?;
+                    (plan.to_string(), plan.algo, Some(plan))
                 }
                 None => {
-                    let ref_used =
-                        c.allreduce(&mut d, &codec, policy).expect("in-process reference failed");
-                    assert_eq!(ref_used, used_algo, "backends resolved different algorithms");
+                    let algo = comm.allreduce(&mut mine, &codec, policy)?;
+                    (algo.to_string(), algo, None)
                 }
+            };
+
+            // Reference: the same collective over the in-process backend.
+            // The policy (algorithm or full plan) resolves per (topology,
+            // codec, size) deterministically, so both backends pick the
+            // same schedule without coordination.
+            let inputs_ref = &inputs;
+            let pp_ref = &plan_policy;
+            let (reference, _) = fabric::run_ranks(&topo, |rh| {
+                let mut c = Communicator::from_handle(rh);
+                let mut d = inputs_ref[c.rank()].clone();
+                match pp_ref {
+                    Some(pp) => {
+                        let ref_plan = c
+                            .allreduce_planned(&mut d, &codec, pp)
+                            .expect("in-process reference failed");
+                        assert_eq!(Some(ref_plan), used_plan, "backends resolved different plans");
+                    }
+                    None => {
+                        let ref_used = c
+                            .allreduce(&mut d, &codec, policy)
+                            .expect("in-process reference failed");
+                        assert_eq!(ref_used, used_algo, "backends resolved different algorithms");
+                    }
+                }
+                d
+            });
+            let expect = &reference[rank];
+            ensure!(mine.len() == expect.len(), "{spec}: length mismatch");
+            for (i, (a, b)) in mine.iter().zip(expect).enumerate() {
+                ensure!(
+                    a.to_bits() == b.to_bits(),
+                    "[rank {rank}] {spec}: TCP diverges from InProc at element {i}: {a} vs {b}"
+                );
             }
-            d
-        });
-        let expect = &reference[rank];
-        ensure!(mine.len() == expect.len(), "{spec}: length mismatch");
-        for (i, (a, b)) in mine.iter().zip(expect).enumerate() {
-            ensure!(
-                a.to_bits() == b.to_bits(),
-                "[rank {rank}] {spec}: TCP diverges from InProc at element {i}: {a} vs {b}"
-            );
+            if iter == 0 {
+                println!(
+                    "[rank {rank}] {spec} [{used_label}] AllReduce over TCP == InProc \
+                     bit-for-bit ({len} elems)"
+                );
+            }
         }
+    }
+    if opts.iters > 1 {
         println!(
-            "[rank {rank}] {spec} [{used_label}] AllReduce over TCP == InProc \
-             bit-for-bit ({len} elems)"
+            "[rank {rank}] {} AllReduce iterations per codec, all bit-identical to InProc",
+            opts.iters
         );
     }
 
@@ -616,12 +842,19 @@ fn worker_rank(rank: usize, opts: &WorkerOpts, root: &str) -> Result<()> {
         stats.wire_bytes,
         stats.wire_bytes - stats.payload_bytes
     );
+    if let Some(s) = comm.transport().session_stats() {
+        println!(
+            "[rank {rank}] session epoch {}: {} heartbeats sent, {} received, {} suspects, \
+             {} losses",
+            s.epoch, s.heartbeats_sent, s.heartbeats_received, s.suspects, s.losses
+        );
+    }
 
     if rank == 0 {
         // Demonstrate the frame guard: a corrupted payload must be rejected
         // with a CRC error, never decoded.
         let payload = Codec::parse("int4@32")?.encode(&inputs[0]);
-        let mut framed = frame::encode(0, 1, 0, &payload);
+        let mut framed = frame::encode(0, 1, 0, 0, &payload);
         let last = framed.len() - 1;
         framed[last] ^= 0x01;
         match frame::decode(framed) {
@@ -629,6 +862,128 @@ fn worker_rank(rank: usize, opts: &WorkerOpts, root: &str) -> Result<()> {
             Ok(_) => bail!("corrupted frame was not rejected"),
         }
     }
+    Ok(())
+}
+
+/// `worker --rejoin-rank R` — the epoch-rejoin drill, one process per rank
+/// (state machine and epoch layout: DESIGN.md §12):
+///
+/// 1. everyone establishes the session at epoch 0 and one AllReduce
+///    completes bit-identically to the InProc backend;
+/// 2. rank `R` "dies" — it drops its endpoint, so the survivors see its
+///    sockets close and their next collective surfaces a typed
+///    [`CommError::PeerLost`] instead of hanging;
+/// 3. everyone — including the restarted `R` — re-rendezvouses through
+///    [`session::rejoin`], which bumps the epoch to 1 so any straggler
+///    frame from the epoch-0 incarnation is rejected before it can poison
+///    the new per-link sequence spaces;
+/// 4. a post-rejoin AllReduce over fresh inputs must again be
+///    bit-identical to InProc, and the session counters must show exactly
+///    one epoch bump.
+fn worker_rank_rejoin(rank: usize, opts: &WorkerOpts, root: &str, rejoining: usize) -> Result<()> {
+    let policy: AlgoPolicy = opts.algo.parse()?;
+    let topo = opts.topology(policy)?;
+    let world = opts.world;
+    let len = opts.len;
+    let config = opts.session()?;
+    let spec = opts.codec_list().next().context("--codecs must name at least one codec")?;
+    let codec = Codec::parse(spec)?;
+
+    // Deterministic inputs, salted per phase so epoch-1 traffic is
+    // distinguishable from anything epoch 0 ever carried.
+    let inputs = |salt: u64| -> Vec<Vec<f32>> {
+        (0..world)
+            .map(|r| {
+                let mut rng = Prng::new(salt + r as u64);
+                let mut v = vec![0f32; len];
+                rng.fill_activations(&mut v, 1.0);
+                v
+            })
+            .collect()
+    };
+    let reference = |data: &[Vec<f32>]| -> Vec<f32> {
+        let (all, _) = fabric::run_ranks(&topo, |rh| {
+            let mut c = Communicator::from_handle(rh);
+            let mut d = data[c.rank()].clone();
+            c.allreduce(&mut d, &codec, policy).expect("in-process reference failed");
+            d
+        });
+        all[rank].clone()
+    };
+    let check = |mine: &[f32], expect: &[f32], label: &str| -> Result<()> {
+        ensure!(mine.len() == expect.len(), "{label}: length mismatch");
+        for (i, (a, b)) in mine.iter().zip(expect).enumerate() {
+            ensure!(
+                a.to_bits() == b.to_bits(),
+                "[rank {rank}] {label}: TCP diverges from InProc at element {i}: {a} vs {b}"
+            );
+        }
+        Ok(())
+    };
+
+    // Phase 1 — epoch 0: healthy mesh, one bit-identical collective.
+    let t0 = session::establish(rank, world, root, None, opts.bind, &config)
+        .with_context(|| format!("rank {rank} joining the epoch-0 session at {root}"))?;
+    ensure!(t0.epoch() == 0, "a fresh session must start at epoch 0 (got {})", t0.epoch());
+    let mut comm = Communicator::new(t0, topo.clone(), Arc::new(fabric::ByteCounters::default()))?;
+    let in0 = inputs(1000);
+    let mut mine = in0[rank].clone();
+    comm.allreduce(&mut mine, &codec, policy)?;
+    check(&mine, &reference(&in0), "epoch 0")?;
+    println!("[rank {rank}] epoch 0: {spec} AllReduce == InProc bit-for-bit");
+
+    // Phase 2 — the loss. The rejoining rank drops its endpoint (its
+    // sockets close, which is exactly what a crash looks like to the
+    // survivors); every survivor's next collective must fail typed.
+    if rank == rejoining {
+        drop(comm);
+        println!("[rank {rank}] simulating a restart: epoch-0 endpoint dropped");
+    } else {
+        let mut doomed = in0[rank].clone();
+        let err = match comm.allreduce(&mut doomed, &codec, policy) {
+            Err(e) => e,
+            Ok(_) => bail!(
+                "[rank {rank}] the collective after rank {rejoining} died must fail, \
+                 but it completed"
+            ),
+        };
+        ensure!(
+            matches!(err, CommError::PeerLost { .. }),
+            "[rank {rank}] expected a typed PeerLost after rank {rejoining} dropped, \
+             got: {err}"
+        );
+        println!("[rank {rank}] survivor saw the typed loss: {err}");
+        drop(comm);
+    }
+
+    // Phase 3 — rejoin under epoch 1. Rank 0 rebinds the rendezvous
+    // address (the epoch-0 listener closed after bootstrap) and everyone
+    // else retries connects within the rendezvous timeout, so the ranks
+    // may arrive here in any order.
+    let t1 = session::rejoin(rank, world, root, None, opts.bind, &config)
+        .with_context(|| format!("rank {rank} rejoining the session at {root}"))?;
+    ensure!(t1.epoch() == 1, "rejoin must bump the epoch to 1 (got {})", t1.epoch());
+    if rank != rejoining {
+        if let Some(s) = t1.session_shared() {
+            s.mark_rejoined(rejoining);
+        }
+    }
+
+    // Phase 4 — epoch 1: fresh inputs, bit-identical again, counters sane.
+    let mut comm = Communicator::new(t1, topo.clone(), Arc::new(fabric::ByteCounters::default()))?;
+    let in1 = inputs(2000);
+    let mut mine = in1[rank].clone();
+    comm.allreduce(&mut mine, &codec, policy)?;
+    check(&mine, &reference(&in1), "epoch 1 (post-rejoin)")?;
+    let stats = comm.transport().session_stats().context("the session fabric is enabled")?;
+    ensure!(
+        stats.epoch == 1 && stats.epoch_bumps == 1,
+        "[rank {rank}] rejoin accounting is off: {stats:?}"
+    );
+    println!(
+        "[rank {rank}] epoch 1: rejoined and {spec} AllReduce == InProc bit-for-bit \
+         ({len} elems)"
+    );
     Ok(())
 }
 

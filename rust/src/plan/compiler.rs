@@ -165,6 +165,29 @@ pub fn compile_pinned(topo: &Topology, elems: usize, base: &Codec, pins: PlanPin
     best.expect("the two-step candidate is always admissible").0
 }
 
+/// Compile over the *surviving* membership after `lost` ranks died: the
+/// degraded-mode re-plan. Builds the
+/// [`survivor_topology`](crate::session::survivor_topology) (grouped when
+/// losses were group-uniform, flat otherwise) and compiles the fastest
+/// admissible plan for it — so the plan running over a
+/// [`DegradedMesh`](crate::session::DegradedMesh) never references a dead
+/// rank and never reuses full-membership admissibility (e.g. a hier plan
+/// degrades to one-shot when the survivors flatten). Returns the plan
+/// together with the survivor topology, whose changed fingerprint keys
+/// the plan cache away from the pre-loss entries. Deterministic like
+/// [`compile`]: every survivor re-plans identically without coordination,
+/// given the same (sorted) loss set.
+pub fn compile_degraded(
+    topo: &Topology,
+    lost: &[usize],
+    elems: usize,
+    base: &Codec,
+) -> Result<(CommPlan, Topology), crate::comm::CommError> {
+    let survivors = crate::session::survivor_topology(topo, lost)?;
+    let plan = compile(&survivors, elems, base);
+    Ok((plan, survivors))
+}
+
 /// [`compile_pinned`] against live measurements: every sane term of
 /// `profile` (effective intra/inter bandwidth, QDQ pass rate — typically
 /// distilled from flight-recorder traces by

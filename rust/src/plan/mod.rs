@@ -62,7 +62,8 @@ use crate::topo::Topology;
 
 pub use cache::{PlanCache, PlanCacheStats, PlanKey};
 pub use compiler::{
-    compile, compile_pinned, compile_profiled, cross_codec_ladder, TIER_ASYMMETRY,
+    compile, compile_degraded, compile_pinned, compile_profiled, cross_codec_ladder,
+    TIER_ASYMMETRY,
 };
 
 /// The codec each stage of the hierarchical family runs. The stage

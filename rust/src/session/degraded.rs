@@ -1,0 +1,169 @@
+//! Degraded-mode membership: dense rank remapping over the survivors.
+//!
+//! After the session fabric declares ranks lost, the surviving membership
+//! continues as a smaller, densely-numbered mesh: [`DegradedMesh`] wraps
+//! the original endpoint and translates between the *degraded* rank space
+//! `0..survivors` the collectives see and the original rank space the
+//! wire still speaks. Per-link frame sequence spaces are untouched —
+//! every surviving (src, dst) pair keeps its socket/channel and its seq
+//! counter, so no reset handshake is needed; only the dead links are cut
+//! out of the schedule. The shrunk [`Topology`] from
+//! [`survivor_topology`](super::survivor_topology) has a different
+//! fingerprint, so [`crate::plan::compile`]'s cached plans for the full
+//! membership are never replayed against the degraded mesh.
+
+use anyhow::{ensure, Result};
+
+use super::SessionStats;
+use crate::comm::CommError;
+use crate::transport::{Transport, TransportStats};
+
+/// A transport endpoint renumbered over the surviving membership.
+pub struct DegradedMesh<T: Transport> {
+    inner: T,
+    /// Degraded rank → original rank (ascending, so original group blocks
+    /// survive the remap when losses are group-uniform).
+    old_of_new: Vec<usize>,
+    /// This endpoint's degraded rank.
+    rank: usize,
+}
+
+impl<T: Transport> DegradedMesh<T> {
+    /// Shrink `inner` to the survivors of `lost`. Errors if this endpoint
+    /// is itself listed lost, a lost rank is out of range, or fewer than
+    /// two ranks survive.
+    pub fn new(inner: T, lost: &[usize]) -> Result<DegradedMesh<T>, CommError> {
+        let n = inner.n();
+        let mut dead = vec![false; n];
+        for &r in lost {
+            if r >= n {
+                return Err(CommError::shape(format!(
+                    "lost rank {r} out of range for a {n}-rank mesh"
+                )));
+            }
+            dead[r] = true;
+        }
+        if dead[inner.rank()] {
+            return Err(CommError::shape(format!(
+                "rank {} cannot degrade a mesh it was lost from",
+                inner.rank()
+            )));
+        }
+        let old_of_new: Vec<usize> = (0..n).filter(|&r| !dead[r]).collect();
+        if old_of_new.len() < 2 {
+            return Err(CommError::shape(format!(
+                "{} survivor(s): no degraded mesh is possible",
+                old_of_new.len()
+            )));
+        }
+        let rank = old_of_new
+            .iter()
+            .position(|&r| r == inner.rank())
+            .expect("self is a survivor by the check above");
+        Ok(DegradedMesh { inner, old_of_new, rank })
+    }
+
+    /// The original rank behind a degraded rank.
+    pub fn original_rank(&self, new: usize) -> usize {
+        self.old_of_new[new]
+    }
+
+    /// The wrapped full-membership endpoint.
+    pub fn inner(&self) -> &T {
+        &self.inner
+    }
+
+    fn map(&self, new: usize, role: &str) -> Result<usize> {
+        ensure!(
+            new < self.old_of_new.len(),
+            "{role} rank {new} out of range for the {}-survivor mesh",
+            self.old_of_new.len()
+        );
+        Ok(self.old_of_new[new])
+    }
+}
+
+impl<T: Transport> Transport for DegradedMesh<T> {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn n(&self) -> usize {
+        self.old_of_new.len()
+    }
+
+    fn send(&self, dst: usize, payload: Vec<u8>) -> Result<()> {
+        self.inner.send(self.map(dst, "dst")?, payload)
+    }
+
+    fn recv(&self, src: usize) -> Result<Vec<u8>> {
+        self.inner.recv(self.map(src, "src")?)
+    }
+
+    fn try_recv(&self, src: usize) -> Result<Option<Vec<u8>>> {
+        self.inner.try_recv(self.map(src, "src")?)
+    }
+
+    fn stats(&self) -> TransportStats {
+        self.inner.stats()
+    }
+
+    fn session_stats(&self) -> Option<SessionStats> {
+        self.inner.session_stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::inproc;
+
+    #[test]
+    fn remap_is_dense_and_ascending() {
+        // 4 ranks, rank 2 lost: survivors 0,1,3 become 0,1,2.
+        let mut endpoints = inproc::mesh(4);
+        let t3 = DegradedMesh::new(endpoints.pop().unwrap(), &[2]).unwrap();
+        endpoints.pop(); // drop the dead rank's endpoint
+        let t1 = DegradedMesh::new(endpoints.pop().unwrap(), &[2]).unwrap();
+        let t0 = DegradedMesh::new(endpoints.pop().unwrap(), &[2]).unwrap();
+        assert_eq!((t0.rank(), t1.rank(), t3.rank()), (0, 1, 2));
+        assert_eq!(t3.n(), 3);
+        assert_eq!(t3.original_rank(2), 3);
+        // Degraded rank 2 is original rank 3; the link works both ways.
+        t0.send(2, vec![42]).unwrap();
+        assert_eq!(t3.recv(0).unwrap(), vec![42]);
+        t3.send(0, vec![7]).unwrap();
+        assert_eq!(t0.recv(2).unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn seq_spaces_survive_the_remap() {
+        // Traffic before the loss, then degraded traffic on the same
+        // links: per-link sequence numbers continue without a reset.
+        let mut endpoints = inproc::mesh(3);
+        let t2 = endpoints.pop().unwrap();
+        let t1 = endpoints.pop().unwrap();
+        let t0 = endpoints.pop().unwrap();
+        t0.send(2, vec![1]).unwrap();
+        assert_eq!(t2.recv(0).unwrap(), vec![1]);
+        drop(t1); // rank 1 "dies"
+        let d0 = DegradedMesh::new(t0, &[1]).unwrap();
+        let d2 = DegradedMesh::new(t2, &[1]).unwrap();
+        d0.send(1, vec![2]).unwrap(); // degraded rank 1 == original rank 2
+        assert_eq!(d2.recv(0).unwrap(), vec![2], "seq continues past the pre-loss frame");
+    }
+
+    #[test]
+    fn hostile_inputs_are_typed_errors() {
+        let mut endpoints = inproc::mesh(3);
+        let t0 = endpoints.remove(0);
+        assert!(matches!(
+            DegradedMesh::new(t0, &[7]).unwrap_err(),
+            CommError::Shape { .. }
+        ));
+        let t0 = endpoints.remove(0); // rank 1 endpoint
+        assert!(DegradedMesh::new(t0, &[1]).is_err(), "self-lost is rejected");
+        let t2 = endpoints.remove(0);
+        assert!(DegradedMesh::new(t2, &[0, 1]).is_err(), "one survivor is rejected");
+    }
+}

@@ -1,0 +1,309 @@
+//! Deterministic fault injection over any transport.
+//!
+//! [`FaultInjector`] wraps a [`Transport`] endpoint and fires one scripted
+//! [`Fault`] at a fixed point in the endpoint's send stream, so every
+//! failure path the session layer promises — a rank dying mid-collective,
+//! a frame delayed, a frame dropped — is reproducible in-process without a
+//! socket or a signal in play. The injectors of one mesh share a
+//! [`FaultMesh`]: when one endpoint "dies", every other endpoint's blocked
+//! `recv` notices within its poll interval and surfaces the same typed
+//! [`PeerLost`] a real heartbeat deadline would (the shared dead-flags
+//! stand in for the heartbeat channel, which needs a real wire to exist).
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use super::{PeerLost, PeerState, SessionCounters, SessionStats};
+use crate::transport::{Transport, TransportStats};
+
+/// What to inject, scripted against this endpoint's 0-based send counter
+/// (all destinations share one counter, so a collective's send schedule
+/// addresses any hop deterministically).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fault {
+    /// Healthy endpoint (the control run).
+    None,
+    /// Silently drop the `nth` send: the payload never reaches the peer,
+    /// whose `recv` starves into its deadline error.
+    Drop { nth: usize },
+    /// Delay the `nth` send by `by` before delivering it (reordering
+    /// across *links*; per-link order is still preserved).
+    Delay { nth: usize, by: Duration },
+    /// Kill this endpoint at its `nth` send: the send fails with
+    /// [`PeerLost`] naming this rank, and every other endpoint of the
+    /// mesh sees the death on its next `recv` poll.
+    KillAtSend { nth: usize },
+}
+
+/// Shared death registry of one fault-injected mesh.
+#[derive(Debug)]
+pub struct FaultMesh {
+    dead: Vec<AtomicBool>,
+    /// Losses the owner has re-planned around ([`FaultInjector::acknowledge_loss`]):
+    /// no longer surfaced as fresh [`PeerLost`] errors by the cascade check.
+    acked: Vec<AtomicBool>,
+    epoch: u16,
+    counters: SessionCounters,
+}
+
+impl FaultMesh {
+    fn new(n: usize, epoch: u16) -> FaultMesh {
+        FaultMesh {
+            dead: (0..n).map(|_| AtomicBool::new(false)).collect(),
+            acked: (0..n).map(|_| AtomicBool::new(false)).collect(),
+            epoch,
+            counters: SessionCounters::default(),
+        }
+    }
+
+    fn is_dead(&self, rank: usize) -> bool {
+        self.dead[rank].load(Ordering::Relaxed)
+    }
+
+    fn mark_dead(&self, rank: usize) {
+        if !self.dead[rank].swap(true, Ordering::Relaxed) {
+            self.counters.losses.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// The lowest-numbered unacknowledged dead rank, if any.
+    fn fresh_loss(&self) -> Option<usize> {
+        (0..self.dead.len())
+            .find(|&r| self.is_dead(r) && !self.acked[r].load(Ordering::Relaxed))
+    }
+}
+
+/// A [`Transport`] wrapper executing one scripted [`Fault`]. Build a mesh
+/// of them with [`wrap_mesh`].
+pub struct FaultInjector<T: Transport> {
+    inner: T,
+    mesh: Arc<FaultMesh>,
+    fault: Fault,
+    sends: AtomicUsize,
+    /// Wall-clock guard on `recv`: a starved receive (e.g. after a
+    /// dropped frame) errors out instead of spinning forever. Plays the
+    /// role the TCP deadline plays on a real wire.
+    deadline: Duration,
+}
+
+/// Wrap a pre-connected mesh (endpoint `i` is rank `i`) with one fault
+/// script per rank. `deadline` bounds how long a `recv` may starve before
+/// it errors (the in-process stand-in for the session receive deadline).
+pub fn wrap_mesh<T: Transport>(
+    endpoints: Vec<T>,
+    faults: Vec<Fault>,
+    deadline: Duration,
+) -> Vec<FaultInjector<T>> {
+    assert_eq!(endpoints.len(), faults.len(), "one fault script per rank");
+    let mesh = Arc::new(FaultMesh::new(endpoints.len(), 0));
+    endpoints
+        .into_iter()
+        .zip(faults)
+        .map(|(inner, fault)| FaultInjector {
+            inner,
+            mesh: mesh.clone(),
+            fault,
+            sends: AtomicUsize::new(0),
+            deadline,
+        })
+        .collect()
+}
+
+impl<T: Transport> FaultInjector<T> {
+    /// Liveness view of the whole mesh, the in-process analogue of the
+    /// TCP session states: dead ranks read Lost, everyone else Healthy.
+    pub fn health(&self) -> Vec<PeerState> {
+        (0..self.inner.n())
+            .map(|r| if self.mesh.is_dead(r) { PeerState::Lost } else { PeerState::Healthy })
+            .collect()
+    }
+
+    /// Stop surfacing `rank`'s death as a fresh [`PeerLost`]: the owner
+    /// has re-planned over the survivors (see
+    /// [`DegradedMesh`](super::degraded::DegradedMesh)) and polls must no
+    /// longer abort on the already-handled loss.
+    pub fn acknowledge_loss(&self, rank: usize) {
+        self.mesh.acked[rank].store(true, Ordering::Relaxed);
+    }
+
+    /// The wrapped endpoint.
+    pub fn inner(&self) -> &T {
+        &self.inner
+    }
+
+    fn peer_lost(&self, rank: usize) -> anyhow::Error {
+        anyhow::Error::new(PeerLost { rank, epoch: self.mesh.epoch })
+    }
+}
+
+impl<T: Transport> Transport for FaultInjector<T> {
+    fn rank(&self) -> usize {
+        self.inner.rank()
+    }
+
+    fn n(&self) -> usize {
+        self.inner.n()
+    }
+
+    fn send(&self, dst: usize, payload: Vec<u8>) -> Result<()> {
+        if self.mesh.is_dead(self.rank()) {
+            return Err(self.peer_lost(self.rank()));
+        }
+        let nth = self.sends.fetch_add(1, Ordering::Relaxed);
+        match self.fault {
+            Fault::KillAtSend { nth: k } if nth == k => {
+                self.mesh.mark_dead(self.rank());
+                return Err(self.peer_lost(self.rank()));
+            }
+            Fault::Drop { nth: k } if nth == k => return Ok(()),
+            Fault::Delay { nth: k, by } if nth == k => std::thread::sleep(by),
+            _ => {}
+        }
+        if self.mesh.is_dead(dst) && !self.mesh.acked[dst].load(Ordering::Relaxed) {
+            // Sending into a corpse fails fast, like a TCP RST would.
+            return Err(self.peer_lost(dst));
+        }
+        self.inner.send(dst, payload)
+    }
+
+    fn recv(&self, src: usize) -> Result<Vec<u8>> {
+        let start = Instant::now();
+        loop {
+            if self.mesh.is_dead(self.rank()) {
+                return Err(self.peer_lost(self.rank()));
+            }
+            // Deliver anything already in flight first — data that made it
+            // out before a death still counts (TCP flushes before FIN).
+            if let Some(payload) = self.inner.try_recv(src)? {
+                return Ok(payload);
+            }
+            if self.mesh.is_dead(src) && !self.mesh.acked[src].load(Ordering::Relaxed) {
+                return Err(self.peer_lost(src));
+            }
+            // Cascade: blocked on a healthy peer that itself aborted on
+            // the real loss. Name the actually-dead rank, the way a
+            // heartbeat deadline would.
+            if let Some(dead) = self.mesh.fresh_loss() {
+                return Err(self.peer_lost(dead));
+            }
+            if start.elapsed() > self.deadline {
+                bail!(
+                    "recv from rank {src} starved past the {:?} deadline (dropped frame?)",
+                    self.deadline
+                );
+            }
+            std::thread::sleep(Duration::from_micros(100));
+        }
+    }
+
+    fn try_recv(&self, src: usize) -> Result<Option<Vec<u8>>> {
+        if self.mesh.is_dead(self.rank()) {
+            return Err(self.peer_lost(self.rank()));
+        }
+        if let Some(payload) = self.inner.try_recv(src)? {
+            return Ok(Some(payload));
+        }
+        if self.mesh.is_dead(src) && !self.mesh.acked[src].load(Ordering::Relaxed) {
+            return Err(self.peer_lost(src));
+        }
+        Ok(None)
+    }
+
+    fn stats(&self) -> TransportStats {
+        self.inner.stats()
+    }
+
+    fn session_stats(&self) -> Option<SessionStats> {
+        Some(SessionStats {
+            epoch: self.mesh.epoch,
+            heartbeats_sent: 0,
+            heartbeats_received: 0,
+            suspects: 0,
+            losses: self.mesh.counters.losses.load(Ordering::Relaxed),
+            epoch_bumps: self.mesh.counters.epoch_bumps.load(Ordering::Relaxed),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::session::find_peer_lost;
+    use crate::transport::inproc;
+
+    fn mesh2(f0: Fault, f1: Fault) -> Vec<FaultInjector<inproc::InProcTransport>> {
+        wrap_mesh(inproc::mesh(2), vec![f0, f1], Duration::from_millis(200))
+    }
+
+    #[test]
+    fn no_fault_is_transparent() {
+        let m = mesh2(Fault::None, Fault::None);
+        m[0].send(1, vec![1, 2, 3]).unwrap();
+        assert_eq!(m[1].recv(0).unwrap(), vec![1, 2, 3]);
+        assert_eq!(m[0].health(), vec![PeerState::Healthy; 2]);
+    }
+
+    #[test]
+    fn kill_at_send_surfaces_peer_lost_on_both_sides() {
+        let m = mesh2(Fault::KillAtSend { nth: 1 }, Fault::None);
+        m[0].send(1, vec![0]).unwrap(); // send 0 still healthy
+        assert_eq!(m[1].recv(0).unwrap(), vec![0], "pre-death data is delivered");
+        let e = m[0].send(1, vec![1]).unwrap_err();
+        assert_eq!(find_peer_lost(&e).unwrap().rank, 0, "the dying rank names itself");
+        let e = m[1].recv(0).unwrap_err();
+        assert_eq!(find_peer_lost(&e).unwrap().rank, 0, "the survivor names the dead rank");
+        assert_eq!(m[1].health(), vec![PeerState::Lost, PeerState::Healthy]);
+        assert_eq!(m[1].session_stats().unwrap().losses, 1);
+    }
+
+    #[test]
+    fn cascade_names_the_truly_dead_rank() {
+        // Rank 2 dies; rank 1 is blocked on rank 0, which is healthy but
+        // will never send (it aborted on the real loss). The poll loop
+        // must still name rank 2, not starve.
+        let m = wrap_mesh(
+            inproc::mesh(3),
+            vec![Fault::None, Fault::None, Fault::KillAtSend { nth: 0 }],
+            Duration::from_secs(5),
+        );
+        assert!(m[2].send(0, vec![9]).is_err());
+        let e = m[1].recv(0).unwrap_err();
+        assert_eq!(find_peer_lost(&e).unwrap().rank, 2);
+    }
+
+    #[test]
+    fn dropped_frame_starves_into_the_deadline() {
+        let m = mesh2(Fault::Drop { nth: 0 }, Fault::None);
+        m[0].send(1, vec![7]).unwrap(); // silently dropped
+        let e = m[1].recv(0).unwrap_err();
+        assert!(e.to_string().contains("starved"), "{e}");
+        assert!(find_peer_lost(&e).is_none(), "a drop is not a death");
+    }
+
+    #[test]
+    fn delayed_frame_is_late_but_intact() {
+        let m = mesh2(Fault::Delay { nth: 0, by: Duration::from_millis(20) }, Fault::None);
+        let t0 = Instant::now();
+        m[0].send(1, vec![5; 4]).unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(20));
+        assert_eq!(m[1].recv(0).unwrap(), vec![5; 4]);
+    }
+
+    #[test]
+    fn acknowledged_loss_stops_aborting_polls() {
+        let m = wrap_mesh(
+            inproc::mesh(3),
+            vec![Fault::None, Fault::None, Fault::KillAtSend { nth: 0 }],
+            Duration::from_millis(200),
+        );
+        assert!(m[2].send(0, vec![0]).is_err());
+        assert!(m[1].recv(0).is_err(), "unacked loss aborts");
+        m[0].acknowledge_loss(2);
+        m[1].acknowledge_loss(2);
+        m[0].send(1, vec![3]).unwrap();
+        assert_eq!(m[1].recv(0).unwrap(), vec![3], "survivor links work after the ack");
+    }
+}

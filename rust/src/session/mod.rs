@@ -1,0 +1,472 @@
+//! Session fabric: liveness, membership, and epochs over the transports.
+//!
+//! The transports ([`crate::transport`]) guarantee that bytes which *do*
+//! arrive are intact; this layer guarantees that bytes which *don't* arrive
+//! fail loudly. It owns three concerns the frame layer cannot see:
+//!
+//! 1. **Liveness** — per-peer heartbeats and receive deadlines on the TCP
+//!    reader threads. A rank that stops sending (crash, SIGKILL, network
+//!    partition) is moved through the per-peer state machine
+//!    `Healthy → Suspect → Lost` and every survivor's pending `recv`
+//!    surfaces [`CommError::PeerLost`] within the configured deadline
+//!    instead of blocking forever.
+//! 2. **Epochs** — a session generation number carried in every frame
+//!    header (bytes 10..12; see [`crate::transport::frame`]). A restarted
+//!    rank re-rendezvouses against the root under `epoch + 1`
+//!    ([`rejoin`]), so frames from its previous incarnation are rejected
+//!    by the epoch check instead of silently poisoning the per-link
+//!    sequence spaces (state `Rejoined`).
+//! 3. **Degraded membership** — [`degraded::DegradedMesh`] densely remaps
+//!    the surviving ranks so the plan compiler ([`crate::plan`]) can
+//!    re-plan the collective over the shrunk [`Topology`] returned by
+//!    [`survivor_topology`] (the topology fingerprint changes with the
+//!    membership, so cached plans are never reused across a loss).
+//!
+//! Failure paths are deterministically testable in-process through
+//! [`fault::FaultInjector`], a transport wrapper that drops, delays, or
+//! kills an endpoint at its N-th send without any real socket in play.
+//! See `DESIGN.md` §12 for the state machine and the per-backend
+//! failure/rejoin matrix.
+
+pub mod degraded;
+pub mod fault;
+
+use std::fmt;
+use std::net::{IpAddr, TcpListener};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
+use std::time::Duration;
+
+use crate::comm::CommError;
+use crate::topo::Topology;
+use crate::transport::TcpTransport;
+
+pub use degraded::DegradedMesh;
+pub use fault::{Fault, FaultInjector};
+
+/// Default rendezvous handshake deadline (dead-root detection; satellite of
+/// the session work — a dead `--root` must fail `bootstrap`, not hang it).
+pub const DEFAULT_RENDEZVOUS_TIMEOUT: Duration = Duration::from_secs(20);
+
+/// Per-peer liveness state. Transitions (see `DESIGN.md` §12):
+/// `Healthy → Suspect` when nothing arrived for half the deadline,
+/// `Suspect → Healthy` when traffic resumes, `Suspect|Healthy → Lost` when
+/// the deadline expires or the socket dies (sticky), and `Rejoined` for a
+/// rank readmitted under a bumped epoch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum PeerState {
+    Healthy = 0,
+    Suspect = 1,
+    Lost = 2,
+    Rejoined = 3,
+}
+
+impl PeerState {
+    pub fn name(self) -> &'static str {
+        match self {
+            PeerState::Healthy => "healthy",
+            PeerState::Suspect => "suspect",
+            PeerState::Lost => "lost",
+            PeerState::Rejoined => "rejoined",
+        }
+    }
+
+    fn from_u8(v: u8) -> PeerState {
+        match v {
+            1 => PeerState::Suspect,
+            2 => PeerState::Lost,
+            3 => PeerState::Rejoined,
+            _ => PeerState::Healthy,
+        }
+    }
+}
+
+/// Liveness/epoch knobs for a session-enabled bootstrap.
+#[derive(Debug, Clone)]
+pub struct SessionConfig {
+    /// Heartbeat send period per peer; `None` disables the session layer
+    /// (bare transport semantics: a dead peer blocks `recv` until its
+    /// socket closes).
+    pub heartbeat: Option<Duration>,
+    /// Receive deadline per peer: nothing (data or heartbeat) for this
+    /// long ⇒ the peer is declared [`PeerState::Lost`]. Suspect at half.
+    pub deadline: Option<Duration>,
+    /// Session epoch this endpoint speaks (0 for a fresh job; bumped by
+    /// [`rejoin`]). The root is the epoch authority during rendezvous.
+    pub epoch: u16,
+    /// Deadline for the rendezvous handshake itself (dead-root detection).
+    pub rendezvous_timeout: Duration,
+}
+
+impl SessionConfig {
+    /// No liveness tracking: bare transport semantics, epoch 0. This is
+    /// what the plain `bootstrap` entry points use.
+    pub fn disabled() -> SessionConfig {
+        SessionConfig {
+            heartbeat: None,
+            deadline: None,
+            epoch: 0,
+            rendezvous_timeout: DEFAULT_RENDEZVOUS_TIMEOUT,
+        }
+    }
+
+    /// Build from the CLI's `--heartbeat-ms` / `--comm-timeout-ms` pair.
+    /// Both 0 disables the session layer; a lone zero or a deadline under
+    /// 2× the heartbeat is a typed argument error (one missed heartbeat
+    /// must never look like a death).
+    pub fn from_millis(heartbeat_ms: u64, timeout_ms: u64) -> Result<SessionConfig, CommError> {
+        match (heartbeat_ms, timeout_ms) {
+            (0, 0) => Ok(SessionConfig::disabled()),
+            (0, _) | (_, 0) => Err(CommError::shape(
+                "--heartbeat-ms and --comm-timeout-ms must both be set, or both 0 to disable \
+                 the session layer",
+            )),
+            (hb, to) if to < 2 * hb => Err(CommError::shape(format!(
+                "--comm-timeout-ms {to} must be at least twice --heartbeat-ms {hb}: a single \
+                 delayed heartbeat must not be declared a death"
+            ))),
+            (hb, to) => Ok(SessionConfig {
+                heartbeat: Some(Duration::from_millis(hb)),
+                deadline: Some(Duration::from_millis(to)),
+                epoch: 0,
+                rendezvous_timeout: DEFAULT_RENDEZVOUS_TIMEOUT,
+            }),
+        }
+    }
+
+    /// Whether liveness tracking (heartbeats + deadlines) is on.
+    pub fn enabled(&self) -> bool {
+        self.heartbeat.is_some()
+    }
+
+    /// This config under a different epoch.
+    pub fn with_epoch(mut self, epoch: u16) -> SessionConfig {
+        self.epoch = epoch;
+        self
+    }
+
+    /// This config with a different rendezvous handshake deadline.
+    pub fn with_rendezvous_timeout(mut self, timeout: Duration) -> SessionConfig {
+        self.rendezvous_timeout = timeout;
+        self
+    }
+}
+
+/// Monotone session counters, shared between the heartbeat thread, the
+/// reader threads, and the owning endpoint. Individually relaxed-atomic.
+#[derive(Debug, Default)]
+pub struct SessionCounters {
+    pub heartbeats_sent: AtomicU64,
+    pub heartbeats_received: AtomicU64,
+    /// `Healthy → Suspect` transitions (a peer can be suspected, recover,
+    /// and be suspected again — each transition counts).
+    pub suspects: AtomicU64,
+    /// `→ Lost` transitions (at most one per peer per session).
+    pub losses: AtomicU64,
+    /// Epoch bumps this endpoint performed (one per [`rejoin`]).
+    pub epoch_bumps: AtomicU64,
+}
+
+/// A point-in-time copy of [`SessionCounters`] plus the session epoch —
+/// what [`crate::transport::Transport::session_stats`] returns and the
+/// metrics JSON exports.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SessionStats {
+    pub epoch: u16,
+    pub heartbeats_sent: u64,
+    pub heartbeats_received: u64,
+    pub suspects: u64,
+    pub losses: u64,
+    pub epoch_bumps: u64,
+}
+
+/// Shared session state for one endpoint: the epoch, one liveness state
+/// per peer, and the counters. Reader threads, the heartbeat thread, and
+/// the owning rank all hold an `Arc` of this.
+#[derive(Debug)]
+pub struct SessionShared {
+    /// The epoch every frame of this session carries and expects.
+    pub epoch: u16,
+    states: Vec<AtomicU8>,
+    pub counters: SessionCounters,
+    /// Set by the endpoint's `Drop` so the heartbeat thread exits.
+    pub(crate) shutdown: AtomicBool,
+}
+
+impl SessionShared {
+    pub fn new(n: usize, epoch: u16) -> SessionShared {
+        SessionShared {
+            epoch,
+            states: (0..n).map(|_| AtomicU8::new(PeerState::Healthy as u8)).collect(),
+            counters: SessionCounters::default(),
+            shutdown: AtomicBool::new(false),
+        }
+    }
+
+    /// Liveness state of one peer.
+    pub fn state(&self, rank: usize) -> PeerState {
+        PeerState::from_u8(self.states[rank].load(Ordering::Relaxed))
+    }
+
+    /// Liveness state of every rank (self index reads Healthy).
+    pub fn states(&self) -> Vec<PeerState> {
+        (0..self.states.len()).map(|r| self.state(r)).collect()
+    }
+
+    pub fn is_lost(&self, rank: usize) -> bool {
+        self.state(rank) == PeerState::Lost
+    }
+
+    /// The lowest-numbered lost rank, if any.
+    pub fn any_lost(&self) -> Option<usize> {
+        (0..self.states.len()).find(|&r| self.is_lost(r))
+    }
+
+    /// `Healthy → Suspect`. Returns true on the transition (counted once).
+    pub fn mark_suspect(&self, rank: usize) -> bool {
+        let flipped = self.states[rank]
+            .compare_exchange(
+                PeerState::Healthy as u8,
+                PeerState::Suspect as u8,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            )
+            .is_ok();
+        if flipped {
+            self.counters.suspects.fetch_add(1, Ordering::Relaxed);
+        }
+        flipped
+    }
+
+    /// Traffic arrived from `rank`: a Suspect peer recovers to Healthy.
+    /// Lost stays Lost — late frames from a declared-dead peer don't
+    /// resurrect it inside the same epoch (that is what [`rejoin`] is for).
+    pub fn mark_alive(&self, rank: usize) {
+        let _ = self.states[rank].compare_exchange(
+            PeerState::Suspect as u8,
+            PeerState::Healthy as u8,
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+        );
+    }
+
+    /// `* → Lost` (sticky). Returns true the first time (counted once).
+    pub fn mark_lost(&self, rank: usize) -> bool {
+        let prev = self.states[rank].swap(PeerState::Lost as u8, Ordering::Relaxed);
+        let flipped = prev != PeerState::Lost as u8;
+        if flipped {
+            self.counters.losses.fetch_add(1, Ordering::Relaxed);
+        }
+        flipped
+    }
+
+    /// Annotate `rank` as readmitted under this (bumped) epoch.
+    pub fn mark_rejoined(&self, rank: usize) {
+        self.states[rank].store(PeerState::Rejoined as u8, Ordering::Relaxed);
+    }
+
+    /// Counters + epoch, materialized.
+    pub fn stats(&self) -> SessionStats {
+        SessionStats {
+            epoch: self.epoch,
+            heartbeats_sent: self.counters.heartbeats_sent.load(Ordering::Relaxed),
+            heartbeats_received: self.counters.heartbeats_received.load(Ordering::Relaxed),
+            suspects: self.counters.suspects.load(Ordering::Relaxed),
+            losses: self.counters.losses.load(Ordering::Relaxed),
+            epoch_bumps: self.counters.epoch_bumps.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// The typed peer-loss fault, carried through `anyhow` error chains from
+/// the transport layer up to [`crate::comm::fabric::RankHandle`], which
+/// downcasts it into [`CommError::PeerLost`]. Keeping it a concrete type
+/// (not a string) is what lets every layer in between stay
+/// `anyhow`-oblivious while the top still matches on it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PeerLost {
+    pub rank: usize,
+    pub epoch: u16,
+}
+
+impl fmt::Display for PeerLost {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "PeerLost: rank {} declared lost by the session fabric (epoch {})",
+            self.rank, self.epoch
+        )
+    }
+}
+
+impl std::error::Error for PeerLost {}
+
+/// Find a typed [`PeerLost`] anywhere in an `anyhow` chain.
+pub fn find_peer_lost(e: &anyhow::Error) -> Option<PeerLost> {
+    e.chain().find_map(|c| c.downcast_ref::<PeerLost>()).copied()
+}
+
+/// The topology of the surviving membership after `lost` ranks died: the
+/// degraded-mode re-plan input. Survivors keep the original group
+/// structure when every group loses the same number of ranks (the dense
+/// remap of [`degraded::DegradedMesh`] then preserves group blocks);
+/// otherwise the survivors collapse to one flat group — a conservative
+/// model that keeps every algorithm admissible. Fewer than 2 survivors is
+/// a typed error: there is no collective to degrade to.
+pub fn survivor_topology(topo: &Topology, lost: &[usize]) -> Result<Topology, CommError> {
+    let mut dead = vec![false; topo.n_gpus];
+    for &r in lost {
+        if r >= topo.n_gpus {
+            return Err(CommError::shape(format!(
+                "lost rank {r} out of range for a {}-rank topology",
+                topo.n_gpus
+            )));
+        }
+        if dead[r] {
+            return Err(CommError::shape(format!("rank {r} listed lost twice")));
+        }
+        dead[r] = true;
+    }
+    let survivors = topo.n_gpus - lost.len();
+    if survivors < 2 {
+        return Err(CommError::shape(format!(
+            "{survivors} survivor(s) of {} ranks: no degraded collective is possible",
+            topo.n_gpus
+        )));
+    }
+    let per_group: Vec<usize> = (0..topo.numa_groups)
+        .map(|g| {
+            let s = topo.group_size();
+            (g * s..(g + 1) * s).filter(|&r| !dead[r]).count()
+        })
+        .collect();
+    let uniform = per_group.iter().all(|&c| c == per_group[0]) && per_group[0] > 0;
+    let t = if uniform && topo.numa_groups > 1 {
+        Topology::try_custom(topo.spec.clone(), survivors, topo.numa_groups, topo.inter_bw())?
+    } else {
+        Topology::try_custom(topo.spec.clone(), survivors, 1, None)?
+    };
+    Ok(t)
+}
+
+/// Session-aware TCP bootstrap: [`TcpTransport::bootstrap_session`] with
+/// every failure mapped to the typed [`CommError::Rendezvous`] — a dead
+/// root, a refused connection, or a handshake that exceeded
+/// [`SessionConfig::rendezvous_timeout`] all surface here instead of
+/// hanging bootstrap forever.
+pub fn establish(
+    rank: usize,
+    n: usize,
+    root: &str,
+    root_listener: Option<TcpListener>,
+    bind: IpAddr,
+    config: &SessionConfig,
+) -> Result<TcpTransport, CommError> {
+    TcpTransport::bootstrap_session(rank, n, root, root_listener, bind, config)
+        .map_err(|e| CommError::rendezvous(format!("{e:#}")))
+}
+
+/// Re-rendezvous under `config.epoch + 1`: the whole surviving membership
+/// (plus the restarted rank) bootstraps a fresh mesh whose frames carry
+/// the bumped epoch, so anything a previous incarnation still emits is
+/// rejected by the epoch check. Counts one epoch bump on the new session.
+pub fn rejoin(
+    rank: usize,
+    n: usize,
+    root: &str,
+    root_listener: Option<TcpListener>,
+    bind: IpAddr,
+    config: &SessionConfig,
+) -> Result<TcpTransport, CommError> {
+    let bumped = config.clone().with_epoch(config.epoch.wrapping_add(1));
+    let t = establish(rank, n, root, root_listener, bind, &bumped)?;
+    if let Some(s) = t.session_shared() {
+        s.counters.epoch_bumps.fetch_add(1, Ordering::Relaxed);
+    }
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topo::presets;
+
+    #[test]
+    fn config_from_millis_validates_the_pair() {
+        assert!(!SessionConfig::from_millis(0, 0).unwrap().enabled());
+        let c = SessionConfig::from_millis(250, 1000).unwrap();
+        assert!(c.enabled());
+        assert_eq!(c.heartbeat, Some(Duration::from_millis(250)));
+        assert_eq!(c.deadline, Some(Duration::from_millis(1000)));
+        assert_eq!(c.epoch, 0);
+        for (hb, to) in [(250, 0), (0, 1000), (250, 499)] {
+            let e = SessionConfig::from_millis(hb, to).unwrap_err();
+            assert!(matches!(e, CommError::Shape { .. }), "{hb}/{to}: {e}");
+        }
+    }
+
+    #[test]
+    fn state_machine_transitions_and_counters() {
+        let s = SessionShared::new(4, 3);
+        assert_eq!(s.states(), vec![PeerState::Healthy; 4]);
+        assert!(s.mark_suspect(1));
+        assert!(!s.mark_suspect(1), "suspect is counted once per transition");
+        s.mark_alive(1);
+        assert_eq!(s.state(1), PeerState::Healthy);
+        assert!(s.mark_suspect(1), "recovered peers can be suspected again");
+        assert!(s.mark_lost(1));
+        assert!(!s.mark_lost(1), "lost is sticky and counted once");
+        s.mark_alive(1);
+        assert_eq!(s.state(1), PeerState::Lost, "late traffic does not resurrect a lost peer");
+        assert_eq!(s.any_lost(), Some(1));
+        s.mark_rejoined(2);
+        assert_eq!(s.state(2), PeerState::Rejoined);
+        let st = s.stats();
+        assert_eq!((st.epoch, st.suspects, st.losses), (3, 2, 1));
+    }
+
+    #[test]
+    fn peer_lost_travels_through_anyhow() {
+        let e = anyhow::Error::new(PeerLost { rank: 5, epoch: 2 }).context("recv failed");
+        assert_eq!(find_peer_lost(&e), Some(PeerLost { rank: 5, epoch: 2 }));
+        assert!(find_peer_lost(&anyhow::anyhow!("plain")).is_none());
+    }
+
+    #[test]
+    fn survivor_topology_keeps_uniform_groups() {
+        // 8 ranks in 2 groups; one loss per group keeps the grouping.
+        let t = Topology::try_with_groups(presets::l40(), 8, 2).unwrap();
+        let s = survivor_topology(&t, &[1, 6]).unwrap();
+        assert_eq!((s.n_gpus, s.numa_groups), (6, 2));
+        assert_eq!(s.inter_bw(), t.inter_bw());
+        assert_ne!(s.fingerprint(), t.fingerprint(), "cached plans must not be reused");
+    }
+
+    #[test]
+    fn survivor_topology_flattens_uneven_losses() {
+        let t = Topology::try_with_groups(presets::l40(), 8, 2).unwrap();
+        let s = survivor_topology(&t, &[3]).unwrap();
+        assert_eq!((s.n_gpus, s.numa_groups), (7, 1));
+        assert_eq!(s.inter_bw(), None);
+    }
+
+    #[test]
+    fn establish_against_a_dead_root_is_a_typed_rendezvous_error() {
+        // Nothing listens on the discard port: bootstrap must fail as a
+        // typed CommError::Rendezvous within the handshake timeout.
+        let config = SessionConfig::disabled().with_rendezvous_timeout(Duration::from_millis(200));
+        let e = establish(1, 2, "127.0.0.1:9", None, crate::transport::tcp::DEFAULT_BIND, &config)
+            .unwrap_err();
+        assert!(matches!(e, CommError::Rendezvous { .. }), "{e}");
+        assert!(e.to_string().contains("dead root"), "{e}");
+    }
+
+    #[test]
+    fn survivor_topology_rejects_hostile_inputs() {
+        let t = Topology::try_with_groups(presets::l40(), 4, 2).unwrap();
+        for lost in [vec![9], vec![1, 1], vec![0, 1, 2]] {
+            let e = survivor_topology(&t, &lost).unwrap_err();
+            assert!(matches!(e, CommError::Shape { .. }), "{lost:?}: {e}");
+        }
+    }
+}

@@ -76,6 +76,14 @@ pub enum Op {
     Decode = 4,
     /// One whole collective call, wrapped by the communicator front door.
     Collective = 5,
+    /// A peer was declared lost by the session fabric (point event; the
+    /// `bytes` field carries the lost rank).
+    PeerLost = 6,
+    /// The session epoch was bumped for a rejoin (point event).
+    EpochBump = 7,
+    /// A previously lost rank re-rendezvoused under the bumped epoch
+    /// (point event; `bytes` carries the rejoined rank).
+    Rejoin = 8,
 }
 
 impl Op {
@@ -87,6 +95,9 @@ impl Op {
             Op::DecodeSum => "decode_sum",
             Op::Decode => "decode",
             Op::Collective => "collective",
+            Op::PeerLost => "peer_lost",
+            Op::EpochBump => "epoch_bump",
+            Op::Rejoin => "rejoin",
         }
     }
 
@@ -98,6 +109,9 @@ impl Op {
             3 => Some(Op::DecodeSum),
             4 => Some(Op::Decode),
             5 => Some(Op::Collective),
+            6 => Some(Op::PeerLost),
+            7 => Some(Op::EpochBump),
+            8 => Some(Op::Rejoin),
             _ => None,
         }
     }

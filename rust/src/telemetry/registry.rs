@@ -17,6 +17,7 @@ use std::collections::{BTreeMap, HashMap};
 use super::recorder::{AlgoTag, Event, Kind, Op, Stage};
 use crate::comm::fabric::CountersSnapshot;
 use crate::plan::PlanCacheStats;
+use crate::session::SessionStats;
 use crate::transport::TransportStats;
 
 /// Number of log₂ latency buckets: bucket `i` holds spans with
@@ -97,6 +98,7 @@ pub struct MetricsRegistry {
     unpaired: u64,
     fabric: Option<CountersSnapshot>,
     transport: Option<TransportStats>,
+    session: Option<SessionStats>,
     plan_cache: Option<PlanCacheStats>,
     last_plan: Option<(String, u64)>,
 }
@@ -160,6 +162,23 @@ impl MetricsRegistry {
         });
     }
 
+    /// Attach (or accumulate) session-fabric counters. Epochs across
+    /// endpoints of one job agree by construction (the rendezvous rejects
+    /// conflicts), so accumulation keeps the max.
+    pub fn absorb_session(&mut self, s: SessionStats) {
+        self.session = Some(match self.session {
+            Some(prev) => SessionStats {
+                epoch: prev.epoch.max(s.epoch),
+                heartbeats_sent: prev.heartbeats_sent + s.heartbeats_sent,
+                heartbeats_received: prev.heartbeats_received + s.heartbeats_received,
+                suspects: prev.suspects + s.suspects,
+                losses: prev.losses + s.losses,
+                epoch_bumps: prev.epoch_bumps + s.epoch_bumps,
+            },
+            None => s,
+        });
+    }
+
     /// Attach (or accumulate) plan-cache hit/miss/eviction counters.
     pub fn absorb_plan_cache(&mut self, s: PlanCacheStats) {
         self.plan_cache = Some(match self.plan_cache {
@@ -199,6 +218,7 @@ impl MetricsRegistry {
             unpaired: self.unpaired,
             fabric: self.fabric,
             transport: self.transport,
+            session: self.session,
             plan_cache: self.plan_cache,
             last_plan: self.last_plan.clone(),
         }
@@ -213,6 +233,9 @@ pub struct MetricsSnapshot {
     pub unpaired: u64,
     pub fabric: Option<CountersSnapshot>,
     pub transport: Option<TransportStats>,
+    /// Session-fabric counters, when a live session ran (TCP with
+    /// heartbeats, or a fault-injected mesh).
+    pub session: Option<SessionStats>,
     pub plan_cache: Option<PlanCacheStats>,
     /// Display form + fingerprint of the last resolved `CommPlan`.
     pub last_plan: Option<(String, u64)>,
@@ -261,6 +284,18 @@ impl MetricsSnapshot {
                 ",\"transport\":{{\"payload_bytes\":{},\"wire_bytes\":{},\"messages\":{},\
                  \"buffered_bytes\":{},\"peak_buffered_bytes\":{}}}",
                 t.payload_bytes, t.wire_bytes, t.messages, t.buffered_bytes, t.peak_buffered_bytes
+            ));
+        }
+        if let Some(s) = self.session {
+            out.push_str(&format!(
+                ",\"session\":{{\"epoch\":{},\"heartbeats_sent\":{},\"heartbeats_received\":{},\
+                 \"suspects\":{},\"losses\":{},\"epoch_bumps\":{}}}",
+                s.epoch,
+                s.heartbeats_sent,
+                s.heartbeats_received,
+                s.suspects,
+                s.losses,
+                s.epoch_bumps
             ));
         }
         if let Some(p) = self.plan_cache {
@@ -362,6 +397,44 @@ mod tests {
         let snap = reg.snapshot();
         assert_eq!(snap.series.len(), 2);
         assert_eq!(snap.unpaired, 0);
+    }
+
+    #[test]
+    fn session_counters_accumulate_and_export() {
+        let mut reg = MetricsRegistry::new();
+        assert!(reg.snapshot().session.is_none(), "no session absorbed, no block");
+        reg.absorb_session(SessionStats {
+            epoch: 1,
+            heartbeats_sent: 10,
+            heartbeats_received: 9,
+            suspects: 1,
+            losses: 1,
+            epoch_bumps: 1,
+        });
+        reg.absorb_session(SessionStats {
+            epoch: 1,
+            heartbeats_sent: 5,
+            heartbeats_received: 6,
+            suspects: 0,
+            losses: 0,
+            epoch_bumps: 0,
+        });
+        let snap = reg.snapshot();
+        let s = snap.session.unwrap();
+        assert_eq!((s.epoch, s.heartbeats_sent, s.heartbeats_received), (1, 15, 15));
+        assert_eq!((s.suspects, s.losses, s.epoch_bumps), (1, 1, 1));
+        let json = snap.to_json();
+        for field in [
+            "\"session\":{",
+            "\"epoch\":1",
+            "\"heartbeats_sent\":15",
+            "\"heartbeats_received\":15",
+            "\"suspects\":1",
+            "\"losses\":1",
+            "\"epoch_bumps\":1",
+        ] {
+            assert!(json.contains(field), "{json} missing {field}");
+        }
     }
 
     #[test]

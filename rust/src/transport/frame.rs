@@ -5,7 +5,7 @@
 //! ```text
 //! ┌───────────────────── header, 28 B ─────────────────────┐
 //! │ magic u32 | ver u8 | flags u8 | src u16 | dst u16      │
-//! │ rsv u16   | seq u32 | len u32 | crc32(payload) u32     │
+//! │ epoch u16 | seq u32 | len u32 | crc32(payload) u32     │
 //! │ crc32(header bytes 0..24) u32                          │
 //! ├───────────────────── payload ──────────────────────────┤
 //! │ len bytes (a `quant::wire` payload for the collectives)│
@@ -28,8 +28,15 @@ use anyhow::{ensure, Result};
 /// Frame magic ("FCT2" on the wire, little-endian).
 pub const FRAME_MAGIC: u32 = u32::from_le_bytes(*b"FCT2");
 /// Transport protocol version. Bump on any layout change; peers reject
-/// mismatches during [`parse`](FrameHeader::parse).
-pub const FRAME_VERSION: u8 = 1;
+/// mismatches during [`parse`](FrameHeader::parse). Version 2 repurposed
+/// the reserved bytes 10..12 as the session **epoch** (see
+/// [`crate::session`]): a restarted rank rejoins under a bumped epoch, so a
+/// frame from a pre-restart incarnation is rejected instead of silently
+/// poisoning the per-link sequence space.
+pub const FRAME_VERSION: u8 = 2;
+/// Header `flags` bit marking a session heartbeat frame (zero-length
+/// payload, liveness only — never delivered to `recv`, never counted).
+pub const FLAG_HEARTBEAT: u8 = 0x01;
 /// Fixed header length in bytes (24 B of fields + 4 B header CRC).
 pub const FRAME_HEADER_LEN: usize = 28;
 /// Upper bound on a single frame's payload (sanity check before the
@@ -39,10 +46,17 @@ pub const MAX_PAYLOAD: u32 = 1 << 30;
 /// Parsed frame header.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct FrameHeader {
+    /// Frame flags ([`FLAG_HEARTBEAT`]; remaining bits reserved, must be 0).
+    pub flags: u8,
     /// Sending rank.
     pub src: u16,
     /// Destination rank.
     pub dst: u16,
+    /// Session epoch the sender believes is current (0 until the first
+    /// rejoin bumps it; see [`crate::session`]). Receivers reject frames
+    /// whose epoch differs from their own — stale incarnations and
+    /// too-new peers both fail loudly.
+    pub epoch: u16,
     /// Per-(src→dst)-link sequence number, starting at 0.
     pub seq: u32,
     /// Payload length in bytes.
@@ -84,10 +98,10 @@ impl FrameHeader {
         let mut hdr = [0u8; FRAME_HEADER_LEN];
         hdr[0..4].copy_from_slice(&FRAME_MAGIC.to_le_bytes());
         hdr[4] = FRAME_VERSION;
-        hdr[5] = 0; // flags (reserved)
+        hdr[5] = self.flags;
         hdr[6..8].copy_from_slice(&self.src.to_le_bytes());
         hdr[8..10].copy_from_slice(&self.dst.to_le_bytes());
-        // bytes 10..12 reserved / alignment
+        hdr[10..12].copy_from_slice(&self.epoch.to_le_bytes());
         hdr[12..16].copy_from_slice(&self.seq.to_le_bytes());
         hdr[16..20].copy_from_slice(&self.len.to_le_bytes());
         hdr[20..24].copy_from_slice(&self.crc.to_le_bytes());
@@ -125,9 +139,16 @@ impl FrameHeader {
             "frame header CRC mismatch: computed {got:#010x}, header says {hcrc:#010x} \
              (corrupt header rejected)"
         );
+        ensure!(
+            buf[5] & !FLAG_HEARTBEAT == 0,
+            "frame carries unknown flag bits {:#04x} (this build understands {FLAG_HEARTBEAT:#04x})",
+            buf[5]
+        );
         let hdr = FrameHeader {
+            flags: buf[5],
             src: u16::from_le_bytes([buf[6], buf[7]]),
             dst: u16::from_le_bytes([buf[8], buf[9]]),
+            epoch: u16::from_le_bytes([buf[10], buf[11]]),
             seq: u32::from_le_bytes([buf[12], buf[13], buf[14], buf[15]]),
             len: u32::from_le_bytes([buf[16], buf[17], buf[18], buf[19]]),
             crc: u32::from_le_bytes([buf[20], buf[21], buf[22], buf[23]]),
@@ -157,13 +178,28 @@ impl FrameHeader {
 }
 
 /// Encode one complete frame (header + payload) into a single buffer.
-pub fn encode(src: u16, dst: u16, seq: u32, payload: &[u8]) -> Vec<u8> {
+pub fn encode(src: u16, dst: u16, epoch: u16, seq: u32, payload: &[u8]) -> Vec<u8> {
     assert!(payload.len() as u64 <= MAX_PAYLOAD as u64, "payload {} too large", payload.len());
-    let hdr = FrameHeader { src, dst, seq, len: payload.len() as u32, crc: crc32(payload) };
+    let hdr = FrameHeader {
+        flags: 0,
+        src,
+        dst,
+        epoch,
+        seq,
+        len: payload.len() as u32,
+        crc: crc32(payload),
+    };
     let mut out = Vec::with_capacity(FRAME_HEADER_LEN + payload.len());
     hdr.write(&mut out);
     out.extend_from_slice(payload);
     out
+}
+
+/// Encode a zero-payload heartbeat frame ([`FLAG_HEARTBEAT`] set). The seq
+/// rides its own counter on the sender and is never checked by receivers —
+/// heartbeats carry liveness and the current epoch, nothing else.
+pub fn encode_heartbeat(src: u16, dst: u16, epoch: u16, seq: u32) -> [u8; FRAME_HEADER_LEN] {
+    FrameHeader { flags: FLAG_HEARTBEAT, src, dst, epoch, seq, len: 0, crc: crc32(b"") }.to_bytes()
 }
 
 /// Decode a complete frame buffer: validate the header, the exact length,
@@ -183,7 +219,7 @@ mod tests {
     use super::*;
 
     fn sample() -> Vec<u8> {
-        encode(3, 5, 42, b"flashcomm payload bytes")
+        encode(3, 5, 7, 42, b"flashcomm payload bytes")
     }
 
     #[test]
@@ -201,15 +237,43 @@ mod tests {
         assert_eq!(payload, b"flashcomm payload bytes");
         assert_eq!(
             hdr,
-            FrameHeader { src: 3, dst: 5, seq: 42, len: 23, crc: crc32(b"flashcomm payload bytes") }
+            FrameHeader {
+                flags: 0,
+                src: 3,
+                dst: 5,
+                epoch: 7,
+                seq: 42,
+                len: 23,
+                crc: crc32(b"flashcomm payload bytes"),
+            }
         );
     }
 
     #[test]
     fn empty_payload_roundtrip() {
-        let (hdr, payload) = decode(encode(0, 1, 0, b"")).unwrap();
+        let (hdr, payload) = decode(encode(0, 1, 0, 0, b"")).unwrap();
         assert_eq!(hdr.len, 0);
+        assert_eq!(hdr.epoch, 0);
         assert!(payload.is_empty());
+    }
+
+    #[test]
+    fn heartbeat_roundtrip() {
+        let hb = encode_heartbeat(2, 6, 9, 1234);
+        let hdr = FrameHeader::parse(&hb).unwrap();
+        assert_eq!(hdr.flags, FLAG_HEARTBEAT);
+        assert_eq!((hdr.src, hdr.dst, hdr.epoch, hdr.seq, hdr.len), (2, 6, 9, 1234, 0));
+        hdr.check_payload(b"").unwrap();
+    }
+
+    #[test]
+    fn unknown_flag_bits_rejected() {
+        let mut bad = sample();
+        bad[5] = 0x02; // reserved bit
+        let hcrc = crc32(&bad[..24]);
+        bad[24..28].copy_from_slice(&hcrc.to_le_bytes());
+        let err = decode(bad).unwrap_err();
+        assert!(err.to_string().contains("unknown flag"), "{err}");
     }
 
     #[test]
@@ -240,10 +304,10 @@ mod tests {
 
     #[test]
     fn header_field_corruption_is_caught_by_header_crc() {
-        // src, dst, seq, len, payload-crc: a single flipped bit in any of
-        // them must error immediately — in particular a corrupted `len`
-        // must never make a reader wait for bytes that don't exist.
-        for i in [6usize, 8, 12, 16, 19, 20] {
+        // src, dst, epoch, seq, len, payload-crc: a single flipped bit in
+        // any of them must error immediately — in particular a corrupted
+        // `len` must never make a reader wait for bytes that don't exist.
+        for i in [6usize, 8, 10, 11, 12, 16, 19, 20] {
             let mut bad = sample();
             bad[i] ^= 0x04;
             let err = decode(bad).unwrap_err();

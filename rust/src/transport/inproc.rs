@@ -87,8 +87,10 @@ impl Transport for InProcTransport {
         // receives across every link, i.e. total in-flight payload bytes.
         self.counters.record_buffered(payload.len());
         let hdr = frame::FrameHeader {
+            flags: 0,
             src: self.rank as u16,
             dst: dst as u16,
+            epoch: 0,
             seq,
             len: payload.len() as u32,
             crc: frame::crc32(&payload),
@@ -102,9 +104,41 @@ impl Transport for InProcTransport {
         ensure!(src != self.rank, "self-recv is a local copy, not a transfer");
         let (hbuf, payload) =
             self.rx[src].recv().map_err(|_| anyhow!("rank {src} hung up"))?;
+        self.verify(src, &hbuf, &payload)?;
+        Ok(payload)
+    }
+
+    fn try_recv(&self, src: usize) -> Result<Option<Vec<u8>>> {
+        ensure!(src < self.n, "src rank {src} out of range (n = {})", self.n);
+        ensure!(src != self.rank, "self-recv is a local copy, not a transfer");
+        let (hbuf, payload) = match self.rx[src].try_recv() {
+            Ok(framed) => framed,
+            Err(std::sync::mpsc::TryRecvError::Empty) => return Ok(None),
+            Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                return Err(anyhow!("rank {src} hung up"))
+            }
+        };
+        self.verify(src, &hbuf, &payload)?;
+        Ok(Some(payload))
+    }
+
+    fn stats(&self) -> TransportStats {
+        self.counters.snapshot()
+    }
+}
+
+impl InProcTransport {
+    /// Shared frame verification for `recv`/`try_recv`: parse, CRC, route,
+    /// and strict per-link sequence. Counts the payload as drained.
+    fn verify(
+        &self,
+        src: usize,
+        hbuf: &[u8; frame::FRAME_HEADER_LEN],
+        payload: &[u8],
+    ) -> Result<()> {
         self.counters.record_drained(payload.len());
-        let hdr = frame::FrameHeader::parse(&hbuf)?;
-        hdr.check_payload(&payload)?;
+        let hdr = frame::FrameHeader::parse(hbuf)?;
+        hdr.check_payload(payload)?;
         ensure!(
             hdr.src as usize == src && hdr.dst as usize == self.rank,
             "misrouted frame: {}→{} delivered on the {src}→{} link",
@@ -118,11 +152,7 @@ impl Transport for InProcTransport {
             "sequence desync from rank {src}: got {}, expected {expect}",
             hdr.seq
         );
-        Ok(payload)
-    }
-
-    fn stats(&self) -> TransportStats {
-        self.counters.snapshot()
+        Ok(())
     }
 }
 
@@ -183,6 +213,20 @@ mod tests {
         assert!(t0.send(2, vec![1]).is_err());
         assert!(t0.recv(0).is_err());
         assert!(t0.recv(9).is_err());
+    }
+
+    #[test]
+    fn try_recv_is_nonblocking_and_ordered() {
+        let mut e = mesh(2);
+        let t1 = e.pop().unwrap();
+        let t0 = e.pop().unwrap();
+        assert!(t1.try_recv(0).unwrap().is_none(), "idle link yields None");
+        t0.send(1, vec![7]).unwrap();
+        t0.send(1, vec![8]).unwrap();
+        assert_eq!(t1.try_recv(0).unwrap(), Some(vec![7]));
+        assert_eq!(t1.recv(0).unwrap(), vec![8], "try_recv and recv share the seq space");
+        drop(t0);
+        assert!(t1.try_recv(0).is_err(), "hung-up link errors instead of None");
     }
 
     #[test]

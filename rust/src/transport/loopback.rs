@@ -45,7 +45,7 @@ impl Transport for Loopback {
         let seq = self.send_seq.fetch_add(1, Ordering::Relaxed);
         self.counters.record_send(payload.len());
         self.counters.record_buffered(payload.len());
-        let framed = frame::encode(0, 0, seq, &payload);
+        let framed = frame::encode(0, 0, 0, seq, &payload);
         self.queue.lock().expect("loopback queue poisoned").push_back(framed);
         Ok(())
     }
@@ -64,6 +64,14 @@ impl Transport for Loopback {
             hdr.seq
         );
         Ok(payload)
+    }
+
+    fn try_recv(&self, src: usize) -> Result<Option<Vec<u8>>> {
+        ensure!(src == 0, "loopback has a single rank; src {src} does not exist");
+        if self.queue.lock().expect("loopback queue poisoned").is_empty() {
+            return Ok(None);
+        }
+        self.recv(src).map(Some)
     }
 
     fn stats(&self) -> TransportStats {

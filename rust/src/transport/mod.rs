@@ -59,10 +59,25 @@ pub trait Transport: Send {
     /// frame verification.
     fn recv(&self, src: usize) -> Result<Vec<u8>>;
 
+    /// Non-blocking [`recv`](Transport::recv): `Ok(Some(payload))` if a
+    /// verified payload from `src` was already pending, `Ok(None)` if the
+    /// link is healthy but idle, `Err` on the same conditions `recv` errors
+    /// on. The session layer's fault injector polls through this so a
+    /// survivor blocked on a dead peer can notice the loss instead of
+    /// parking forever on a queue that will never fill.
+    fn try_recv(&self, src: usize) -> Result<Option<Vec<u8>>>;
+
     /// Counters for traffic sent through this endpoint's scope: the whole
     /// mesh for [`InProcTransport`] (shared process-wide), this endpoint
     /// for [`TcpTransport`] (each process only sees its own sends).
     fn stats(&self) -> TransportStats;
+
+    /// Session-fabric counters (heartbeats, suspects, losses, epoch bumps)
+    /// for backends with a live session ([`TcpTransport`] bootstrapped via
+    /// [`crate::session::establish`]); `None` where no session runs.
+    fn session_stats(&self) -> Option<crate::session::SessionStats> {
+        None
+    }
 }
 
 /// Send-side counters each backend embeds. Individually relaxed-atomic;

@@ -23,11 +23,21 @@
 //!
 //! The rendezvous control plane is line-oriented text (bootstrap only);
 //! the data plane is exclusively framed binary. See `DESIGN.md` §4.
+//!
+//! With a [`SessionConfig`] ([`TcpTransport::bootstrap_session`], usually
+//! reached through [`crate::session::establish`]) the endpoint also runs
+//! the session fabric: a heartbeat thread pings every peer each period,
+//! the reader threads enforce a receive deadline (`Healthy → Suspect` at
+//! half, `→ Lost` at the deadline or on an abrupt socket close), every
+//! frame carries and must match the session epoch, and the rendezvous
+//! handshake itself is bounded by
+//! [`SessionConfig::rendezvous_timeout`] so a dead root fails bootstrap
+//! instead of hanging it. See `DESIGN.md` §12.
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{IpAddr, Ipv4Addr, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicU32, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
@@ -35,9 +45,11 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use super::{frame, Transport, TransportCounters, TransportStats};
+use crate::session::{PeerLost, SessionConfig, SessionShared, SessionStats};
 
 /// How long bootstrap keeps retrying connects / polling accepts while the
-/// other worker processes come up.
+/// other worker processes come up (the data-plane mesh phase; the
+/// rendezvous phase uses [`SessionConfig::rendezvous_timeout`]).
 const BOOTSTRAP_TIMEOUT: Duration = Duration::from_secs(20);
 
 /// Data-plane hello: magic + the connecting rank, sent once per connection.
@@ -55,13 +67,20 @@ pub struct TcpTransport {
     rank: usize,
     n: usize,
     /// Write half of the socket to each peer (None at the self index).
-    writers: Vec<Option<Mutex<TcpStream>>>,
+    /// Behind an `Arc` so the heartbeat thread can ping every peer while
+    /// the owning rank writes data frames (writes interleave at frame
+    /// granularity under each per-peer mutex).
+    writers: Arc<Vec<Option<Mutex<TcpStream>>>>,
     /// Frame-verified payloads from each peer (None at the self index).
     inbox: Vec<Option<Inbox>>,
     send_seq: Vec<AtomicU32>,
     /// Shared with the per-peer reader threads, which account the
     /// receive-queue occupancy (`buffered_bytes`) they create.
     counters: Arc<TransportCounters>,
+    /// Session liveness state; `None` when bootstrapped without a session.
+    session: Option<Arc<SessionShared>>,
+    /// The epoch every frame carries and expects (0 without a session).
+    epoch: u16,
 }
 
 impl TcpTransport {
@@ -97,13 +116,31 @@ impl TcpTransport {
     }
 
     /// Full-control bootstrap: rendezvous listener override + data bind
-    /// address (see [`TcpTransport::bootstrap_bound`]).
+    /// address (see [`TcpTransport::bootstrap_bound`]), without a session.
     pub fn bootstrap_bound_with(
         rank: usize,
         n: usize,
         root: &str,
         root_listener: Option<TcpListener>,
         bind: IpAddr,
+    ) -> Result<TcpTransport> {
+        let config = SessionConfig::disabled();
+        TcpTransport::bootstrap_session(rank, n, root, root_listener, bind, &config)
+    }
+
+    /// Session-aware bootstrap: everything
+    /// [`TcpTransport::bootstrap_bound_with`] does, plus the session
+    /// fabric of `config` — epoch-stamped frames, per-peer heartbeats and
+    /// receive deadlines when enabled, and a bounded rendezvous handshake.
+    /// Prefer [`crate::session::establish`], which maps failures to the
+    /// typed [`CommError::Rendezvous`](crate::comm::CommError::Rendezvous).
+    pub fn bootstrap_session(
+        rank: usize,
+        n: usize,
+        root: &str,
+        root_listener: Option<TcpListener>,
+        bind: IpAddr,
+        config: &SessionConfig,
     ) -> Result<TcpTransport> {
         ensure!(n >= 1, "world size must be at least 1");
         ensure!(rank < n, "rank {rank} out of range for world size {n}");
@@ -122,16 +159,22 @@ impl TcpTransport {
             TcpListener::bind((bind, 0)).with_context(|| format!("binding data listener on {bind}"))?;
         let my_addr = data_listener.local_addr().context("data listener addr")?;
 
-        // 2+3. Rendezvous: learn every rank's data address.
+        // 2+3. Rendezvous: learn every rank's data address and agree on
+        // the session epoch (rank 0 is the authority; a rank announcing a
+        // different epoch — a stale incarnation, or a survivor that missed
+        // the bump — is rejected loudly). Bounded by the rendezvous
+        // timeout so a dead root fails bootstrap instead of hanging it.
+        let rdv = config.rendezvous_timeout;
+        let epoch = config.epoch;
         let addrs = if rank == 0 {
             let listener = match root_listener {
                 Some(l) => l,
                 None => TcpListener::bind(root)
                     .with_context(|| format!("rank 0 binding rendezvous address {root}"))?,
             };
-            rendezvous_root(&listener, n, my_addr)?
+            rendezvous_root(&listener, n, my_addr, epoch, rdv)?
         } else {
-            rendezvous_client(rank, n, root, my_addr)?
+            rendezvous_client(rank, n, root, my_addr, epoch, rdv)?
         };
 
         // 4. Full mesh: connect down, accept up.
@@ -153,6 +196,13 @@ impl TcpTransport {
         }
 
         // 5. Split each socket: reader thread (validates frames) + writer.
+        // With a session, readers poll with a short read timeout so they
+        // can tick the receive deadline between frames instead of parking
+        // in `read` forever.
+        let session = config.enabled().then(|| Arc::new(SessionShared::new(n, epoch)));
+        let deadline = config.deadline;
+        let tick = deadline
+            .map(|d| (d / 10).clamp(Duration::from_millis(5), Duration::from_millis(100)));
         let counters = Arc::new(TransportCounters::default());
         let mut writers: Vec<Option<Mutex<TcpStream>>> = (0..n).map(|_| None).collect();
         let mut inbox: Vec<Option<Inbox>> = (0..n).map(|_| None).collect();
@@ -160,14 +210,38 @@ impl TcpTransport {
             let Some(stream) = slot else { continue };
             stream.set_nodelay(true).context("setting TCP_NODELAY")?;
             let read_half = stream.try_clone().context("cloning socket for reader")?;
+            read_half.set_read_timeout(tick).context("setting reader deadline tick")?;
             let (tx, rx) = channel();
             let reader_counters = counters.clone();
+            let reader_session = session.clone();
             thread::Builder::new()
                 .name(format!("tcp-rx-{rank}<-{peer}"))
-                .spawn(move || reader_loop(read_half, peer, rank, tx, reader_counters))
+                .spawn(move || {
+                    reader_loop(
+                        read_half,
+                        peer,
+                        rank,
+                        tx,
+                        reader_counters,
+                        epoch,
+                        reader_session,
+                        deadline,
+                    )
+                })
                 .context("spawning reader thread")?;
             writers[peer] = Some(Mutex::new(stream));
             inbox[peer] = Some(rx);
+        }
+        let writers = Arc::new(writers);
+
+        // 6. Heartbeat thread: one liveness ping per peer per period.
+        if let (Some(s), Some(period)) = (&session, config.heartbeat) {
+            let hb_writers = writers.clone();
+            let hb_session = s.clone();
+            thread::Builder::new()
+                .name(format!("tcp-hb-{rank}"))
+                .spawn(move || heartbeat_loop(hb_writers, rank, hb_session, period))
+                .context("spawning heartbeat thread")?;
         }
 
         Ok(TcpTransport {
@@ -177,7 +251,20 @@ impl TcpTransport {
             inbox,
             send_seq: (0..n).map(|_| AtomicU32::new(0)).collect(),
             counters,
+            session,
+            epoch,
         })
+    }
+
+    /// The session epoch this endpoint speaks (0 without a session).
+    pub fn epoch(&self) -> u16 {
+        self.epoch
+    }
+
+    /// The shared session state, when bootstrapped with one (per-peer
+    /// liveness states, counters).
+    pub fn session_shared(&self) -> Option<&Arc<SessionShared>> {
+        self.session.as_ref()
     }
 }
 
@@ -188,6 +275,9 @@ impl Drop for TcpTransport {
     /// still flushes written data (FIN follows it), so a peer mid-`recv`
     /// receives everything already sent.
     fn drop(&mut self) {
+        if let Some(s) = &self.session {
+            s.shutdown.store(true, Ordering::Relaxed);
+        }
         for writer in self.writers.iter().flatten() {
             if let Ok(stream) = writer.lock() {
                 let _ = stream.shutdown(std::net::Shutdown::Both);
@@ -208,15 +298,31 @@ impl Transport for TcpTransport {
     fn send(&self, dst: usize, payload: Vec<u8>) -> Result<()> {
         ensure!(dst < self.n, "dst rank {dst} out of range (n = {})", self.n);
         ensure!(dst != self.rank, "self-send is a local copy, not a transfer");
+        if let Some(s) = &self.session {
+            if s.is_lost(dst) {
+                return Err(anyhow::Error::new(PeerLost { rank: dst, epoch: self.epoch }));
+            }
+        }
         let seq = self.send_seq[dst].fetch_add(1, Ordering::Relaxed);
         self.counters.record_send(payload.len());
-        let framed = frame::encode(self.rank as u16, dst as u16, seq, &payload);
+        let framed = frame::encode(self.rank as u16, dst as u16, self.epoch, seq, &payload);
         let writer = self.writers[dst].as_ref().expect("mesh invariant: peer socket exists");
         let mut stream = writer.lock().map_err(|_| anyhow!("writer to rank {dst} poisoned"))?;
-        stream
-            .write_all(&framed)
-            .with_context(|| format!("sending {} wire bytes to rank {dst}", framed.len()))?;
-        Ok(())
+        match stream.write_all(&framed) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                // A write error means the socket is gone. Under a session
+                // that is a peer loss, typed so survivors can react.
+                if let Some(s) = &self.session {
+                    s.mark_lost(dst);
+                    return Err(anyhow::Error::new(PeerLost { rank: dst, epoch: self.epoch })
+                        .context(format!("writing {} wire bytes: {e}", framed.len())));
+                }
+                Err(anyhow!(e)).with_context(|| {
+                    format!("sending {} wire bytes to rank {dst}", framed.len())
+                })
+            }
+        }
     }
 
     fn recv(&self, src: usize) -> Result<Vec<u8>> {
@@ -230,28 +336,73 @@ impl Transport for TcpTransport {
                 }
                 result
             }
-            Err(_) => bail!("rank {src} disconnected"),
+            // The reader exited and its queue is drained. Under a session
+            // the loss is already recorded — keep surfacing it typed (the
+            // first PeerLost was consumed by an earlier recv).
+            Err(_) => match &self.session {
+                Some(s) if s.is_lost(src) => {
+                    Err(anyhow::Error::new(PeerLost { rank: src, epoch: self.epoch }))
+                }
+                _ => bail!("rank {src} disconnected"),
+            },
+        }
+    }
+
+    fn try_recv(&self, src: usize) -> Result<Option<Vec<u8>>> {
+        ensure!(src < self.n, "src rank {src} out of range (n = {})", self.n);
+        ensure!(src != self.rank, "self-recv is a local copy, not a transfer");
+        let rx = self.inbox[src].as_ref().expect("mesh invariant: peer inbox exists");
+        match rx.try_recv() {
+            Ok(result) => {
+                if let Ok(payload) = &result {
+                    self.counters.record_drained(payload.len());
+                }
+                result.map(Some)
+            }
+            Err(TryRecvError::Empty) => Ok(None),
+            Err(TryRecvError::Disconnected) => match &self.session {
+                Some(s) if s.is_lost(src) => {
+                    Err(anyhow::Error::new(PeerLost { rank: src, epoch: self.epoch }))
+                }
+                _ => bail!("rank {src} disconnected"),
+            },
         }
     }
 
     fn stats(&self) -> TransportStats {
         self.counters.snapshot()
     }
+
+    fn session_stats(&self) -> Option<SessionStats> {
+        self.session.as_ref().map(|s| s.stats())
+    }
 }
 
-/// Root side of the rendezvous: collect `hello` lines from ranks `1..n`,
-/// then broadcast the full rank→address map.
-fn rendezvous_root(listener: &TcpListener, n: usize, my_addr: SocketAddr) -> Result<Vec<SocketAddr>> {
+/// Root side of the rendezvous: collect `hello <rank> <addr> <epoch>`
+/// lines from ranks `1..n`, reject epoch conflicts (the root is the epoch
+/// authority — a stale incarnation dialing a bumped session fails here),
+/// then broadcast the full rank→address map. Every accept and read is
+/// bounded by `timeout`.
+fn rendezvous_root(
+    listener: &TcpListener,
+    n: usize,
+    my_addr: SocketAddr,
+    epoch: u16,
+    timeout: Duration,
+) -> Result<Vec<SocketAddr>> {
     let mut addrs: Vec<Option<SocketAddr>> = vec![None; n];
     addrs[0] = Some(my_addr);
-    let deadline = Instant::now() + BOOTSTRAP_TIMEOUT;
+    let deadline = Instant::now() + timeout;
     let mut clients: Vec<(usize, TcpStream)> = Vec::with_capacity(n.saturating_sub(1));
     while clients.len() + 1 < n {
         let (stream, _) = accept_deadline(listener, deadline)
             .context("rendezvous root waiting for workers")?;
+        stream.set_read_timeout(Some(timeout)).context("setting rendezvous read deadline")?;
         let mut reader = BufReader::new(stream.try_clone().context("cloning rendezvous socket")?);
         let mut line = String::new();
-        reader.read_line(&mut line).context("reading hello line")?;
+        reader
+            .read_line(&mut line)
+            .context("reading hello line (worker went silent mid-handshake?)")?;
         let mut parts = line.split_whitespace();
         ensure!(parts.next() == Some("hello"), "malformed rendezvous hello: {line:?}");
         let peer: usize = parts
@@ -264,13 +415,23 @@ fn rendezvous_root(listener: &TcpListener, n: usize, my_addr: SocketAddr) -> Res
             .ok_or_else(|| anyhow!("hello missing address: {line:?}"))?
             .parse()
             .with_context(|| format!("hello address in {line:?}"))?;
+        let peer_epoch: u16 = parts
+            .next()
+            .ok_or_else(|| anyhow!("hello missing epoch: {line:?}"))?
+            .parse()
+            .with_context(|| format!("hello epoch in {line:?}"))?;
         ensure!(peer >= 1 && peer < n, "hello from out-of-range rank {peer} (n = {n})");
+        ensure!(
+            peer_epoch == epoch,
+            "epoch conflict: rank {peer} speaks epoch {peer_epoch}, this session is epoch {epoch} \
+             (stale incarnation, or a rank that missed the rejoin bump)"
+        );
         ensure!(addrs[peer].is_none(), "two workers claim rank {peer}");
         addrs[peer] = Some(addr);
         clients.push((peer, stream));
     }
     let map: Vec<SocketAddr> = addrs.into_iter().map(|a| a.expect("all ranks seen")).collect();
-    let mut reply = format!("peers {n}\n");
+    let mut reply = format!("peers {n} {epoch}\n");
     for (r, a) in map.iter().enumerate() {
         reply.push_str(&format!("{r} {a}\n"));
     }
@@ -282,13 +443,16 @@ fn rendezvous_root(listener: &TcpListener, n: usize, my_addr: SocketAddr) -> Res
     Ok(map)
 }
 
-/// Worker side of the rendezvous: announce our data address, receive the
-/// full rank→address map.
+/// Worker side of the rendezvous: announce our data address and epoch,
+/// receive the full rank→address map. Connect retries and every read are
+/// bounded by `timeout`, so a dead root is a typed failure, not a hang.
 fn rendezvous_client(
     rank: usize,
     n: usize,
     root: &str,
     my_addr: SocketAddr,
+    epoch: u16,
+    timeout: Duration,
 ) -> Result<Vec<SocketAddr>> {
     // to_socket_addrs (not str::parse) so hostname roots like
     // `localhost:29555` work — TcpListener::bind on the root side accepts
@@ -298,15 +462,18 @@ fn rendezvous_client(
         .with_context(|| format!("resolving rendezvous address {root:?}"))?
         .next()
         .ok_or_else(|| anyhow!("rendezvous address {root:?} resolved to no addresses"))?;
-    let stream = connect_retry(root_addr)
-        .with_context(|| format!("rank {rank} reaching rendezvous root {root}"))?;
+    let stream = connect_retry_within(root_addr, timeout)
+        .with_context(|| format!("rank {rank} reaching rendezvous root {root} (dead root?)"))?;
+    stream.set_read_timeout(Some(timeout)).context("setting rendezvous read deadline")?;
     let mut writer = stream.try_clone().context("cloning rendezvous socket")?;
     writer
-        .write_all(format!("hello {rank} {my_addr}\n").as_bytes())
+        .write_all(format!("hello {rank} {my_addr} {epoch}\n").as_bytes())
         .context("sending hello")?;
     let mut reader = BufReader::new(stream);
     let mut line = String::new();
-    reader.read_line(&mut line).context("reading peer-map header")?;
+    reader
+        .read_line(&mut line)
+        .with_context(|| format!("reading peer-map header (root silent for {timeout:?}?)"))?;
     let mut parts = line.split_whitespace();
     ensure!(parts.next() == Some("peers"), "malformed peer map header: {line:?}");
     let got_n: usize = parts
@@ -315,6 +482,15 @@ fn rendezvous_client(
         .parse()
         .with_context(|| format!("peer count in {line:?}"))?;
     ensure!(got_n == n, "root says world size {got_n}, this worker was launched with {n}");
+    let got_epoch: u16 = parts
+        .next()
+        .ok_or_else(|| anyhow!("peer map header missing epoch: {line:?}"))?
+        .parse()
+        .with_context(|| format!("peer map epoch in {line:?}"))?;
+    ensure!(
+        got_epoch == epoch,
+        "epoch conflict: root runs epoch {got_epoch}, this rank speaks epoch {epoch}"
+    );
     let mut addrs: Vec<Option<SocketAddr>> = vec![None; n];
     for _ in 0..n {
         let mut entry = String::new();
@@ -339,7 +515,13 @@ fn rendezvous_client(
 
 /// Connect with retry until [`BOOTSTRAP_TIMEOUT`] (peers race to bind).
 fn connect_retry(addr: SocketAddr) -> Result<TcpStream> {
-    let deadline = Instant::now() + BOOTSTRAP_TIMEOUT;
+    connect_retry_within(addr, BOOTSTRAP_TIMEOUT)
+}
+
+/// Connect with retry under an explicit deadline (the rendezvous phase
+/// uses the session's handshake timeout here).
+fn connect_retry_within(addr: SocketAddr, timeout: Duration) -> Result<TcpStream> {
+    let deadline = Instant::now() + timeout;
     loop {
         match TcpStream::connect(addr) {
             Ok(s) => return Ok(s),
@@ -389,73 +571,234 @@ fn read_hello(mut stream: &TcpStream) -> Result<usize> {
     Ok(u16::from_le_bytes([hello[4], hello[5]]) as usize)
 }
 
+/// One observation of the link by [`read_frame`].
+enum ReadEvent {
+    /// A verified data payload.
+    Payload(Vec<u8>),
+    /// A verified heartbeat frame (liveness only; never queued).
+    Heartbeat,
+    /// Nothing arrived within the read-timeout tick (session mode only).
+    Idle,
+    /// Clean EOF at a frame boundary.
+    Eof,
+}
+
 /// Per-peer reader: pull frames off the socket, validate, queue payloads.
-/// Exits on clean EOF (peer shut down), on a validation error (reported to
-/// the owning rank through the inbox), or when the owner dropped the inbox.
-/// Queued payloads are charged to the endpoint's `buffered_bytes` gauge
-/// until `recv` pops them.
+/// Exits on EOF, on a validation error (reported to the owning rank
+/// through the inbox), or when the owner dropped the inbox. Queued
+/// payloads are charged to the endpoint's `buffered_bytes` gauge until
+/// `recv` pops them.
+///
+/// With a session, this thread is also the liveness monitor for `src`:
+/// the socket carries a read-timeout tick, and each idle tick checks the
+/// receive deadline — `Suspect` at half, `Lost` at the full deadline (or
+/// immediately on EOF / a reset socket, the SIGKILL signature), surfaced
+/// to the owner as a typed [`PeerLost`] through the inbox.
+#[allow(clippy::too_many_arguments)]
 fn reader_loop(
     stream: TcpStream,
     src: usize,
     dst: usize,
     out: Sender<Result<Vec<u8>>>,
     counters: Arc<TransportCounters>,
+    epoch: u16,
+    session: Option<Arc<SessionShared>>,
+    deadline: Option<Duration>,
 ) {
     let mut reader = BufReader::with_capacity(256 * 1024, stream);
     let mut expect_seq = 0u32;
+    let mut last_seen = Instant::now();
+    let lost = |session: &Option<Arc<SessionShared>>, out: &Sender<Result<Vec<u8>>>| {
+        if let Some(s) = session {
+            if s.mark_lost(src) {
+                let _ = out.send(Err(anyhow::Error::new(PeerLost { rank: src, epoch })));
+            }
+        }
+    };
     loop {
-        match read_frame(&mut reader, src, dst, expect_seq) {
-            Ok(Some(payload)) => {
+        match read_frame(&mut reader, src, dst, expect_seq, epoch, deadline) {
+            Ok(ReadEvent::Payload(payload)) => {
+                last_seen = Instant::now();
+                if let Some(s) = &session {
+                    s.mark_alive(src);
+                }
                 expect_seq = expect_seq.wrapping_add(1);
                 counters.record_buffered(payload.len());
                 if out.send(Ok(payload)).is_err() {
                     return; // owner gone
                 }
             }
-            Ok(None) => return, // clean EOF at a frame boundary
+            Ok(ReadEvent::Heartbeat) => {
+                last_seen = Instant::now();
+                if let Some(s) = &session {
+                    s.mark_alive(src);
+                    s.counters.heartbeats_received.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            Ok(ReadEvent::Idle) => {
+                if let (Some(s), Some(d)) = (&session, deadline) {
+                    let quiet = last_seen.elapsed();
+                    if quiet >= d {
+                        lost(&session, &out);
+                        return;
+                    }
+                    if quiet >= d / 2 {
+                        s.mark_suspect(src);
+                    }
+                }
+            }
+            Ok(ReadEvent::Eof) => {
+                // Under a session, a closed socket *is* a death: SIGKILL
+                // sends FIN/RST immediately, long before any deadline.
+                lost(&session, &out);
+                return;
+            }
             Err(e) => {
-                let _ = out.send(Err(e));
+                if session.is_some() && is_disconnect(&e) {
+                    lost(&session, &out);
+                } else {
+                    let _ = out.send(Err(e));
+                }
                 return;
             }
         }
     }
 }
 
-/// Read and fully validate one frame. `Ok(None)` on clean EOF at a frame
-/// boundary; EOF mid-frame is an error (a truncated frame never decodes).
+/// Whether an error chain bottoms out in a connection-level io failure
+/// (reset, aborted, broken pipe, EOF mid-frame) — a death under a session,
+/// as opposed to a validation failure (CRC, version, epoch, seq).
+fn is_disconnect(e: &anyhow::Error) -> bool {
+    e.chain().any(|c| {
+        c.downcast_ref::<std::io::Error>().is_some_and(|io| {
+            matches!(
+                io.kind(),
+                std::io::ErrorKind::ConnectionReset
+                    | std::io::ErrorKind::ConnectionAborted
+                    | std::io::ErrorKind::BrokenPipe
+                    | std::io::ErrorKind::UnexpectedEof
+            )
+        })
+    })
+}
+
+/// Read and fully validate one frame-or-heartbeat. `Eof` on clean EOF at a
+/// frame boundary; EOF mid-frame is an error (a truncated frame never
+/// decodes). `Idle` when the socket's read timeout expired at a frame
+/// boundary (session mode); a timeout *mid-frame* keeps reading until
+/// `stall` elapses — a slow peer is fine, a half-written frame from a dead
+/// one is not.
 fn read_frame<R: Read>(
     reader: &mut R,
     src: usize,
     dst: usize,
     expect_seq: u32,
-) -> Result<Option<Vec<u8>>> {
+    epoch: u16,
+    stall: Option<Duration>,
+) -> Result<ReadEvent> {
     let mut hdr_buf = [0u8; frame::FRAME_HEADER_LEN];
-    // First byte separately: EOF here is a clean shutdown, not corruption.
+    // First byte separately: EOF here is a clean shutdown, not corruption,
+    // and a read-timeout here is an idle link, not a stalled frame.
     loop {
         match reader.read(&mut hdr_buf[..1]) {
-            Ok(0) => return Ok(None),
+            Ok(0) => return Ok(ReadEvent::Eof),
             Ok(_) => break,
             Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) if is_timeout(&e) => return Ok(ReadEvent::Idle),
             Err(e) => return Err(anyhow!(e)).context("reading frame header"),
         }
     }
-    reader.read_exact(&mut hdr_buf[1..]).context("reading frame header (truncated frame)")?;
+    read_full(reader, &mut hdr_buf[1..], stall).context("reading frame header (truncated frame)")?;
     let hdr = frame::FrameHeader::parse(&hdr_buf)?;
+    if hdr.epoch != epoch {
+        let age = if hdr.epoch < epoch { "stale" } else { "future" };
+        bail!(
+            "{age} epoch from rank {src}: frame carries epoch {}, session is epoch {epoch} \
+             (frame rejected before it could poison the seq space)",
+            hdr.epoch
+        );
+    }
     ensure!(
         hdr.src as usize == src && hdr.dst as usize == dst,
         "misrouted frame: {}→{} arrived on the {src}→{dst} socket",
         hdr.src,
         hdr.dst
     );
+    if hdr.flags & frame::FLAG_HEARTBEAT != 0 {
+        ensure!(hdr.len == 0, "heartbeat from rank {src} carries a payload ({} bytes)", hdr.len);
+        // Heartbeats ride their own seq counter — deliberately unchecked,
+        // so liveness pings never desync the data seq space.
+        return Ok(ReadEvent::Heartbeat);
+    }
     ensure!(
         hdr.seq == expect_seq,
         "sequence desync from rank {src}: got {}, expected {expect_seq}",
         hdr.seq
     );
     let mut payload = vec![0u8; hdr.len as usize];
-    reader.read_exact(&mut payload).context("reading frame payload (truncated frame)")?;
+    read_full(reader, &mut payload, stall).context("reading frame payload (truncated frame)")?;
     hdr.check_payload(&payload)?;
-    Ok(Some(payload))
+    Ok(ReadEvent::Payload(payload))
+}
+
+/// `read_exact` that tolerates read-timeout ticks up to `stall` total —
+/// the socket may carry a short read timeout (the session's deadline
+/// tick), and a frame mid-flight must not be abandoned on the first tick.
+fn read_full<R: Read>(reader: &mut R, buf: &mut [u8], stall: Option<Duration>) -> Result<()> {
+    let start = Instant::now();
+    let mut filled = 0;
+    while filled < buf.len() {
+        match reader.read(&mut buf[filled..]) {
+            Ok(0) => bail!(std::io::Error::from(std::io::ErrorKind::UnexpectedEof)),
+            Ok(k) => filled += k,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) if is_timeout(&e) => {
+                if let Some(d) = stall {
+                    if start.elapsed() >= d {
+                        bail!("peer stalled mid-frame for {d:?} ({filled}/{} bytes)", buf.len());
+                    }
+                }
+            }
+            Err(e) => return Err(anyhow!(e)),
+        }
+    }
+    Ok(())
+}
+
+/// A socket read-timeout expiry (reported as WouldBlock on Unix, TimedOut
+/// on Windows).
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut)
+}
+
+/// The session heartbeat thread: one liveness ping per peer per `period`,
+/// interleaving with data frames under the per-peer writer mutex. Exits
+/// when the owning endpoint drops (shutdown flag). Write failures are left
+/// to the reader threads to diagnose — the socket is shared, and the
+/// reader owns the loss verdict.
+fn heartbeat_loop(
+    writers: Arc<Vec<Option<Mutex<TcpStream>>>>,
+    rank: usize,
+    session: Arc<SessionShared>,
+    period: Duration,
+) {
+    let mut seq = 0u32;
+    while !session.shutdown.load(Ordering::Relaxed) {
+        for (peer, writer) in writers.iter().enumerate() {
+            let Some(writer) = writer else { continue };
+            if session.is_lost(peer) {
+                continue;
+            }
+            let hb = frame::encode_heartbeat(rank as u16, peer as u16, session.epoch, seq);
+            if let Ok(mut stream) = writer.lock() {
+                if stream.write_all(&hb).is_ok() {
+                    session.counters.heartbeats_sent.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        seq = seq.wrapping_add(1);
+        thread::sleep(period);
+    }
 }
 
 /// Bootstrap a complete `n`-rank TCP mesh inside this process (one thread
@@ -463,6 +806,14 @@ fn read_frame<R: Read>(
 /// endpoints in rank order — the TCP analogue of [`super::inproc::mesh`],
 /// used by tests and the backend-sweep bench.
 pub fn local_mesh(n: usize) -> Result<Vec<TcpTransport>> {
+    local_mesh_with(n, &SessionConfig::disabled())
+}
+
+/// [`local_mesh`] with a session fabric: every rank bootstraps under
+/// `config` (shared epoch, heartbeats, receive deadlines). The in-process
+/// harness for session behavior that needs a real wire — heartbeat flow,
+/// EOF-as-death, epoch agreement.
+pub fn local_mesh_with(n: usize, config: &SessionConfig) -> Result<Vec<TcpTransport>> {
     let listener = TcpListener::bind(("127.0.0.1", 0)).context("binding rendezvous listener")?;
     let root = listener.local_addr().context("rendezvous addr")?.to_string();
     let mut root_listener = Some(listener);
@@ -471,7 +822,9 @@ pub fn local_mesh(n: usize) -> Result<Vec<TcpTransport>> {
             .map(|rank| {
                 let root = root.clone();
                 let l = if rank == 0 { root_listener.take() } else { None };
-                scope.spawn(move || TcpTransport::bootstrap_with(rank, n, &root, l))
+                scope.spawn(move || {
+                    TcpTransport::bootstrap_session(rank, n, &root, l, DEFAULT_BIND, config)
+                })
             })
             .collect();
         joins.into_iter().map(|j| j.join().expect("bootstrap thread panicked")).collect()
@@ -612,14 +965,14 @@ mod tests {
         let addr = listener.local_addr().unwrap();
         let sender = thread::spawn(move || {
             let mut s = TcpStream::connect(addr).unwrap();
-            let mut framed = frame::encode(1, 0, 0, b"quantized chunk bytes");
+            let mut framed = frame::encode(1, 0, 0, 0, b"quantized chunk bytes");
             let last = framed.len() - 1;
             framed[last] ^= 0x80; // corrupt one payload bit in flight
             s.write_all(&framed).unwrap();
         });
         let (stream, _) = listener.accept().unwrap();
         let mut reader = BufReader::new(stream);
-        let err = read_frame(&mut reader, 1, 0, 0).unwrap_err();
+        let err = read_frame(&mut reader, 1, 0, 0, 0, None).unwrap_err();
         assert!(err.to_string().contains("CRC"), "{err}");
         sender.join().unwrap();
     }
@@ -630,12 +983,12 @@ mod tests {
         let addr = listener.local_addr().unwrap();
         let sender = thread::spawn(move || {
             let mut s = TcpStream::connect(addr).unwrap();
-            let mut framed = frame::encode(1, 0, 0, b"payload");
+            let mut framed = frame::encode(1, 0, 0, 0, b"payload");
             framed[4] = frame::FRAME_VERSION + 7;
             s.write_all(&framed).unwrap();
         });
         let (stream, _) = listener.accept().unwrap();
-        let err = read_frame(&mut BufReader::new(stream), 1, 0, 0).unwrap_err();
+        let err = read_frame(&mut BufReader::new(stream), 1, 0, 0, 0, None).unwrap_err();
         assert!(err.to_string().contains("version"), "{err}");
         sender.join().unwrap();
     }
@@ -646,12 +999,121 @@ mod tests {
         let addr = listener.local_addr().unwrap();
         let sender = thread::spawn(move || {
             let mut s = TcpStream::connect(addr).unwrap();
-            s.write_all(&frame::encode(1, 0, 5, b"skipped ahead")).unwrap();
+            s.write_all(&frame::encode(1, 0, 0, 5, b"skipped ahead")).unwrap();
         });
         let (stream, _) = listener.accept().unwrap();
-        let err = read_frame(&mut BufReader::new(stream), 1, 0, 0).unwrap_err();
+        let err = read_frame(&mut BufReader::new(stream), 1, 0, 0, 0, None).unwrap_err();
         assert!(err.to_string().contains("sequence"), "{err}");
         sender.join().unwrap();
+    }
+
+    #[test]
+    fn stale_and_future_epoch_frames_rejected_loudly() {
+        // A frame from a previous incarnation (stale) and one from a
+        // bumped session this rank missed (future) must both be rejected
+        // before route/seq checks could be poisoned.
+        for (frame_epoch, session_epoch, age) in [(2u16, 5u16, "stale"), (9, 5, "future")] {
+            let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+            let addr = listener.local_addr().unwrap();
+            let sender = thread::spawn(move || {
+                let mut s = TcpStream::connect(addr).unwrap();
+                s.write_all(&frame::encode(1, 0, frame_epoch, 0, b"ghost")).unwrap();
+            });
+            let (stream, _) = listener.accept().unwrap();
+            let err =
+                read_frame(&mut BufReader::new(stream), 1, 0, 0, session_epoch, None).unwrap_err();
+            let msg = err.to_string();
+            assert!(msg.contains(&format!("{age} epoch")), "{msg}");
+            assert!(msg.contains(&format!("epoch {frame_epoch}")), "{msg}");
+            sender.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn dead_root_rendezvous_times_out_instead_of_hanging() {
+        // Nobody listens on the root address: bootstrap must fail within
+        // the rendezvous timeout, not retry forever.
+        let config = SessionConfig::disabled()
+            .with_rendezvous_timeout(Duration::from_millis(300));
+        let t0 = Instant::now();
+        let err = TcpTransport::bootstrap_session(
+            1, 2, "127.0.0.1:9", None, DEFAULT_BIND, &config, // port 9: discard, never bound
+        )
+        .unwrap_err();
+        assert!(t0.elapsed() < Duration::from_secs(10), "gave up promptly");
+        assert!(format!("{err:#}").contains("dead root"), "{err:#}");
+    }
+
+    #[test]
+    fn silent_root_read_times_out_instead_of_hanging() {
+        // The root accepts but never replies (wedged process): the worker's
+        // peer-map read must hit its deadline, not block forever.
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let root = listener.local_addr().unwrap().to_string();
+        let hold = thread::spawn(move || listener.accept().map(|(s, _)| s));
+        let config = SessionConfig::disabled()
+            .with_rendezvous_timeout(Duration::from_millis(300));
+        let err =
+            TcpTransport::bootstrap_session(1, 2, &root, None, DEFAULT_BIND, &config).unwrap_err();
+        assert!(format!("{err:#}").contains("root silent"), "{err:#}");
+        drop(hold.join().unwrap());
+    }
+
+    #[test]
+    fn heartbeats_flow_and_peers_stay_healthy_while_idle() {
+        use crate::session::PeerState;
+        let config = SessionConfig::from_millis(20, 400).unwrap();
+        let mut endpoints = local_mesh_with(2, &config).unwrap();
+        let t1 = endpoints.pop().unwrap();
+        let t0 = endpoints.pop().unwrap();
+        // No data traffic at all: liveness must come from heartbeats.
+        thread::sleep(Duration::from_millis(150));
+        for t in [&t0, &t1] {
+            let stats = t.session_stats().unwrap();
+            assert!(stats.heartbeats_sent > 0, "{stats:?}");
+            assert!(stats.heartbeats_received > 0, "{stats:?}");
+            assert_eq!(stats.losses, 0, "{stats:?}");
+            let peer = 1 - t.rank();
+            assert_eq!(t.session_shared().unwrap().state(peer), PeerState::Healthy);
+        }
+        // Data still flows interleaved with the heartbeats.
+        t0.send(1, vec![42]).unwrap();
+        assert_eq!(t1.recv(0).unwrap(), vec![42]);
+    }
+
+    #[test]
+    fn killed_peer_surfaces_typed_peer_lost_within_the_deadline() {
+        use crate::session::find_peer_lost;
+        let config = SessionConfig::from_millis(20, 400).unwrap();
+        let mut endpoints = local_mesh_with(2, &config).unwrap();
+        let t1 = endpoints.pop().unwrap();
+        let t0 = endpoints.pop().unwrap();
+        drop(t0); // socket shutdown = the FIN/RST a SIGKILLed process emits
+        let t_start = Instant::now();
+        let err = t1.recv(0).unwrap_err();
+        let lost = find_peer_lost(&err).expect("typed PeerLost, not a string error");
+        assert_eq!(lost.rank, 0);
+        assert!(t_start.elapsed() < Duration::from_secs(5), "no hang");
+        assert_eq!(t1.session_stats().unwrap().losses, 1);
+        // The loss is sticky: later recvs keep reporting it typed.
+        let again = t1.recv(0).unwrap_err();
+        assert_eq!(find_peer_lost(&again).unwrap().rank, 0);
+        // And sends to the corpse fail typed instead of buffering.
+        let send_err = t0_send_probe(&t1);
+        assert_eq!(find_peer_lost(&send_err).unwrap().rank, 0);
+    }
+
+    /// Send toward the dead rank 0 until the loss gate trips (the first
+    /// write may succeed into the kernel buffer before the reader marks
+    /// the loss).
+    fn t0_send_probe(t1: &TcpTransport) -> anyhow::Error {
+        for _ in 0..50 {
+            if let Err(e) = t1.send(0, vec![0]) {
+                return e;
+            }
+            thread::sleep(Duration::from_millis(10));
+        }
+        panic!("send to a lost peer never failed");
     }
 
     #[test]

@@ -1,0 +1,208 @@
+//! Session-fabric integration tests: deterministic peer-loss injection
+//! through the whole collective stack, and degraded-membership re-planning
+//! after a loss. Everything here runs in-process through
+//! [`flashcomm::session::fault::FaultInjector`] — no sockets, no signals —
+//! so the kill matrix is exact and repeatable (the real-wire equivalents
+//! live in the CI worker drills: `--kill-rank` and `--rejoin-rank`).
+
+use std::time::Duration;
+
+use flashcomm::comm::{fabric, Algo, AlgoPolicy, CommError, Communicator};
+use flashcomm::plan;
+use flashcomm::quant::Codec;
+use flashcomm::session::fault::{wrap_mesh, Fault};
+use flashcomm::session::{survivor_topology, PeerState};
+use flashcomm::topo::{presets, Topology};
+use flashcomm::transport::inproc;
+use flashcomm::util::Prng;
+
+fn inputs(n: usize, len: usize, salt: u64) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|r| {
+            let mut rng = Prng::new(salt + r as u64);
+            let mut v = vec![0f32; len];
+            rng.fill_activations(&mut v, 1.0);
+            v
+        })
+        .collect()
+}
+
+fn hier() -> AlgoPolicy {
+    AlgoPolicy::Fixed(Algo::Hier)
+}
+
+/// The no-fault control run: a mesh of `Fault::None` injectors must be
+/// fully transparent — bit-identical to the plain in-process mesh on the
+/// same inputs (the wrapper may not perturb ordering or payloads).
+#[test]
+fn no_fault_control_run_is_bit_identical_to_the_plain_mesh() {
+    let topo = Topology::try_with_groups(presets::l40(), 4, 2).unwrap();
+    let codec = Codec::parse("int4@32").unwrap();
+    let ins = inputs(4, 1024, 300);
+    let ins = &ins;
+    let (plain, _) = fabric::run_ranks(&topo, |h| {
+        let mut c = Communicator::from_handle(h);
+        let mut d = ins[c.rank()].clone();
+        c.allreduce(&mut d, &codec, hier()).unwrap();
+        d
+    });
+    let wrapped = wrap_mesh(inproc::mesh(4), vec![Fault::None; 4], Duration::from_secs(5));
+    let (injected, _) = fabric::run_ranks_with(wrapped, &topo, |h| {
+        let mut c = Communicator::from_handle(h);
+        let mut d = ins[c.rank()].clone();
+        c.allreduce(&mut d, &codec, hier()).unwrap();
+        d
+    });
+    for (rank, (a, b)) in plain.iter().zip(&injected).enumerate() {
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "rank {rank} diverges at element {i}");
+        }
+    }
+}
+
+/// The kill matrix: kill each rank at each stage of the hierarchical
+/// schedule (the per-endpoint send counter addresses the stages: send 0 is
+/// the intra reduce-scatter, send 1 the cross exchange, send 2 the intra
+/// allgather on a 4-rank / 2-group box). Whatever the timing, every rank —
+/// victim included — must surface a typed [`CommError::PeerLost`] naming
+/// the victim: a late kill can let a distant rank finish the in-flight
+/// collective (real fabrics allow that too), so each rank chases it with a
+/// second collective, which can never complete without the dead rank.
+#[test]
+fn kill_matrix_every_rank_x_every_stage_surfaces_typed_peer_lost() {
+    let topo = Topology::try_with_groups(presets::l40(), 4, 2).unwrap();
+    let codec = Codec::parse("int4@32").unwrap();
+    let ins = inputs(4, 2048, 800);
+    let ins = &ins;
+    for victim in 0..4usize {
+        for nth in [0usize, 1, 2] {
+            let faults: Vec<Fault> = (0..4)
+                .map(|r| if r == victim { Fault::KillAtSend { nth } } else { Fault::None })
+                .collect();
+            let endpoints = wrap_mesh(inproc::mesh(4), faults, Duration::from_secs(30));
+            let (results, _) = fabric::run_ranks_with(endpoints, &topo, |h| {
+                let rank = h.rank;
+                let mut c = Communicator::from_handle(h);
+                let mut d = ins[rank].clone();
+                let res = c.allreduce(&mut d, &codec, hier()).and_then(|_| {
+                    let mut d2 = ins[rank].clone();
+                    c.allreduce(&mut d2, &codec, hier()).map(|_| ())
+                });
+                let health = c.transport().health();
+                (rank, res, health)
+            });
+            for (rank, res, health) in results {
+                let err = match res {
+                    Err(e) => e,
+                    Ok(()) => panic!(
+                        "rank {rank} completed both collectives although rank {victim} \
+                         died at send {nth}"
+                    ),
+                };
+                match err {
+                    CommError::PeerLost { rank: lost, epoch } => {
+                        assert_eq!(
+                            (lost, epoch),
+                            (victim, 0),
+                            "rank {rank} (victim {victim}, send {nth}) blamed the wrong peer"
+                        );
+                    }
+                    other => panic!(
+                        "rank {rank} (victim {victim}, send {nth}): expected a typed \
+                         PeerLost, got: {other}"
+                    ),
+                }
+                assert_eq!(
+                    health[victim],
+                    PeerState::Lost,
+                    "rank {rank}: the mesh health view must show rank {victim} as lost"
+                );
+            }
+        }
+    }
+}
+
+/// Degraded-membership continuation, end to end: 6 ranks in 2 groups run
+/// one full collective, ranks 1 and 4 "die" (one per group — the uniform
+/// loss keeps the group structure), and the survivors continue through
+/// [`Communicator::into_degraded`]. The degraded AllReduce must be
+/// bit-identical to a fresh 4-rank mesh over the same survivor inputs —
+/// the dense renumbering and the re-planned schedule are invisible to the
+/// data path.
+#[test]
+fn degraded_replan_after_losses_matches_a_fresh_survivor_mesh() {
+    let orig = Topology::try_with_groups(presets::l40(), 6, 2).unwrap();
+    let lost = [1usize, 4];
+    let survivors = survivor_topology(&orig, &lost).unwrap();
+    assert_eq!((survivors.n_gpus, survivors.numa_groups), (4, 2));
+    assert_ne!(survivors.fingerprint(), orig.fingerprint());
+
+    let codec = Codec::parse("int4@32").unwrap();
+    let ins = inputs(6, 1536, 40);
+    let ins = &ins;
+    let lost = &lost[..];
+    let survivors_fp = survivors.fingerprint();
+    let (results, _) = fabric::run_ranks(&orig, |h| {
+        let rank = h.rank;
+        let mut c = Communicator::from_handle(h);
+        let mut d = ins[rank].clone();
+        c.allreduce(&mut d, &codec, hier()).unwrap();
+        if lost.contains(&rank) {
+            // This rank "dies" after the first collective: its endpoint
+            // drops here and it never joins the degraded membership.
+            return None;
+        }
+        let mut c = c.into_degraded(lost).unwrap();
+        assert_eq!(
+            c.topo().fingerprint(),
+            survivors_fp,
+            "into_degraded must re-plan over the survivor topology"
+        );
+        let mut d2 = ins[rank].clone();
+        c.allreduce(&mut d2, &codec, hier()).unwrap();
+        Some(d2)
+    });
+
+    // Reference: a fresh mesh of exactly the survivors, fed the same
+    // inputs in degraded (dense) rank order.
+    let dense: Vec<Vec<f32>> = [0usize, 2, 3, 5].iter().map(|&r| ins[r].clone()).collect();
+    let dense = &dense;
+    let (fresh, _) = fabric::run_ranks(&survivors, |h| {
+        let mut c = Communicator::from_handle(h);
+        let mut d = dense[c.rank()].clone();
+        c.allreduce(&mut d, &codec, hier()).unwrap();
+        d
+    });
+    let degraded: Vec<Vec<f32>> = results.into_iter().flatten().collect();
+    assert_eq!(degraded.len(), 4, "exactly the survivors return degraded results");
+    for (i, (a, b)) in degraded.iter().zip(&fresh).enumerate() {
+        assert_eq!(a.len(), b.len());
+        for (j, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "survivor {i}: degraded mesh diverges from the fresh mesh at element {j}"
+            );
+        }
+    }
+}
+
+/// [`plan::compile_degraded`] is exactly [`plan::compile`] over the
+/// survivor topology — the degraded re-plan path cannot drift from the
+/// healthy compiler.
+#[test]
+fn compile_degraded_plans_over_the_survivor_topology() {
+    let orig = Topology::try_with_groups(presets::l40(), 8, 2).unwrap();
+    let base = Codec::parse("int4@32").unwrap();
+    let (plan, survivors) = plan::compile_degraded(&orig, &[3, 7], 65536, &base).unwrap();
+    assert_eq!((survivors.n_gpus, survivors.numa_groups), (6, 2));
+    let direct = plan::compile(&survivors, 65536, &base);
+    assert_eq!(plan, direct, "degraded compile == compile over the survivor topology");
+    plan.validate(&survivors).unwrap();
+    // Hostile losses stay typed errors at this layer too.
+    assert!(matches!(
+        plan::compile_degraded(&orig, &[42], 65536, &base).unwrap_err(),
+        CommError::Shape { .. }
+    ));
+}
