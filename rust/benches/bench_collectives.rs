@@ -5,24 +5,30 @@
 //! ```sh
 //! cargo bench --bench bench_collectives [-- --algo auto|ring|twostep|hier|hierpp]
 //! cargo bench --bench bench_collectives -- --telemetry   # recorder overhead only
+//! cargo bench --bench bench_collectives -- --transport udp \
+//!     [--wire-fault-pct 5 [--wire-fault-seed S]]          # one backend only
 //! ```
 //!
 //! With `--algo`, the fabric section sweeps that one policy across codecs
 //! (pass `auto` to watch the cost model's per-size choice); the scratch
 //! line demonstrates the warm Communicator hot path is allocation-free.
+//! `--transport` restricts the backend sweep to one backend; the
+//! wire-fault knobs add a seeded-chaos UDP row and are rejected loudly on
+//! any other selection (shared semantics with `flashcomm worker`).
 //!
 //! The fabric numbers measure OUR hot path (the wall time is dominated by
 //! the codec since the "links" are memcpy); the simulated numbers are the
 //! paper-comparable bandwidths (see DESIGN.md §2).
 
-use flashcomm::cli::Args;
-use flashcomm::comm::{fabric, Algo, AlgoPolicy, Communicator, LocalGroup};
+use flashcomm::cli::{self, Args, TransportSel, WireFaultSpec};
+use flashcomm::comm::{fabric, preset_topo_custom, Algo, AlgoPolicy, Communicator, LocalGroup};
 use flashcomm::plan;
 use flashcomm::quant::Codec;
+use flashcomm::session::SessionConfig;
 use flashcomm::sim;
 use flashcomm::telemetry::{Op, DEFAULT_CAPACITY};
 use flashcomm::topo::{presets, Topology};
-use flashcomm::transport::{tcp, Transport, FRAME_HEADER_LEN};
+use flashcomm::transport::{tcp, udp, Transport, FRAME_HEADER_LEN};
 use flashcomm::util::timer::{bench, fmt_bytes, fmt_nanos};
 use flashcomm::util::Prng;
 
@@ -33,6 +39,14 @@ fn main() {
         telemetry_overhead();
         return;
     }
+    // Shared `--transport` semantics (same parser as the CLI commands):
+    // restrict the backend sweep to one backend; the UDP chaos knobs are
+    // rejected loudly on any other selection, never silently ignored.
+    let only: Option<TransportSel> = args
+        .flag("transport")
+        .map(|v| TransportSel::parse(v).expect("--transport inproc|tcp|udp"));
+    let fault = cli::wire_fault_flags(&args, only.unwrap_or(TransportSel::InProc))
+        .expect("wire-fault knobs are UDP-only (pass --transport udp)");
     let policy: Option<AlgoPolicy> =
         args.flag("algo").map(|s| s.parse().expect("--algo ring|twostep|hier|hierpp|auto"));
     let n: usize = 1 << 20; // 1M f32 = 4 MiB per rank
@@ -43,7 +57,7 @@ fn main() {
     println!();
     scratch_reuse_probe();
     println!();
-    transport_sweep();
+    transport_sweep(only, fault);
     println!();
     plan_sweep();
     println!();
@@ -154,16 +168,18 @@ fn scratch_reuse_probe() {
     );
 }
 
-/// InProc vs TCP-loopback backend sweep under the same collective, wire
-/// codec, and inputs, plus a per-preset topology sweep (`--algo auto` on
-/// every node shape the generalized topology model opens). Emits
-/// `BENCH_transport.json` next to Cargo.toml so the perf trajectory of the
-/// transport layer has a recorded baseline.
+/// InProc vs TCP vs UDP loopback backend sweep under the same collective,
+/// wire codec, and inputs; the ISSUE-8 UDP-vs-TCP rows on the
+/// tier-asymmetric `--inter-gbps 25` dual-node shape; an optional
+/// seeded-chaos UDP row; plus a per-preset topology sweep (`--algo auto`
+/// on every node shape the generalized topology model opens). Emits
+/// `BENCH_transport.json` next to Cargo.toml so the perf trajectory of
+/// the transport layer has a recorded baseline.
 ///
-/// The TCP numbers include mesh bootstrap (rendezvous + full-mesh socket
-/// setup happens inside the timed closure, ~one-off per job in real use),
-/// recorded as `includes_bootstrap` in the JSON.
-fn transport_sweep() {
+/// The socket-backend numbers include mesh bootstrap (rendezvous +
+/// full-mesh setup happens inside the timed closure, ~one-off per job in
+/// real use), recorded as `includes_bootstrap` in the JSON.
+fn transport_sweep(only: Option<TransportSel>, fault: Option<WireFaultSpec>) {
     let ranks = 8usize;
     let elems = 1 << 18; // 1 MiB of f32 per rank keeps the TCP runs quick
     let topo = Topology::new(presets::h800(), ranks);
@@ -199,16 +215,34 @@ fn transport_sweep() {
         let m = bench(1, 3, || {
             let (algos, counters) = match backend {
                 "inproc" => fabric::run_ranks(topo, |h| per_rank(h, inputs, &codec, policy)),
-                _ => fabric::run_ranks_with(
+                "tcp" => fabric::run_ranks_with(
                     tcp::local_mesh(ranks).expect("tcp mesh bootstrap"),
                     topo,
                     |h| per_rank(h, inputs, &codec, policy),
                 ),
+                "udp" => fabric::run_ranks_with(
+                    udp::local_mesh(ranks).expect("udp mesh bootstrap"),
+                    topo,
+                    |h| per_rank(h, inputs, &codec, policy),
+                ),
+                "udp+chaos" => {
+                    let f = fault.expect("chaos rows only run when the knobs are set");
+                    fabric::run_ranks_with(
+                        udp::local_mesh_faulty(ranks, &SessionConfig::disabled(), f.seed, f.rate)
+                            .expect("chaos udp mesh bootstrap"),
+                        topo,
+                        |h| per_rank(h, inputs, &codec, policy),
+                    )
+                }
+                other => unreachable!("unknown backend {other}"),
             };
             used = algos[0];
             // Counters are read after every rank joined, so the
             // snapshot is at rest; wire bytes = payload + one frame
-            // header per message (exact on both backends).
+            // header per message (exact on inproc/tcp; udp additionally
+            // spends a 16 B sub-header per <= 1200 B datagram plus
+            // recovery traffic, tracked per-endpoint by TransportStats
+            // rather than these shared payload counters).
             let snap = counters.snapshot();
             payload_bytes = snap.total;
             messages = snap.messages;
@@ -246,20 +280,46 @@ fn transport_sweep() {
             payload_bytes,
             wire_bytes,
             messages,
-            backend == "tcp"
+            backend != "inproc"
         ));
     };
-    for backend in ["inproc", "tcp"] {
+    let wants = |backend: &str| only.is_none() || only.map(|o| o.name()) == Some(backend);
+    for backend in ["inproc", "tcp", "udp"] {
+        if !wants(backend) {
+            continue;
+        }
         for spec in ["bf16", "int4@32", "int2-sr@32"] {
             sweep_case(backend, "h800", &topo, spec, AlgoPolicy::Fixed(Algo::TwoStep));
         }
     }
+    // UDP vs TCP on the tier-asymmetric dual-node shape (2 groups joined
+    // by a 25 GB/s link — the `--inter-gbps 25` worker preset): the
+    // cross-group hop is the bottleneck a datagram pacer actually shapes,
+    // so these rows are the recorded baseline for the UDP-vs-TCP gap.
+    let inter25 = preset_topo_custom(ranks, Some(2), Some(25.0), AlgoPolicy::Fixed(Algo::Hier))
+        .expect("2-group topology at 25 GB/s");
+    for backend in ["tcp", "udp"] {
+        if !wants(backend) {
+            continue;
+        }
+        for spec in ["int4@32", "int2-sr@32"] {
+            sweep_case(backend, "h800x2@25", &inter25, spec, AlgoPolicy::Fixed(Algo::Hier));
+        }
+    }
+    // The chaos row: same collective over a seeded lossy wire, so the
+    // recovery tax (NACK rounds, retransmits, redundancy) shows up as
+    // wall time next to the clean UDP row.
+    if fault.is_some() && wants("udp") {
+        sweep_case("udp+chaos", "h800", &topo, "int4@32", AlgoPolicy::Fixed(Algo::TwoStep));
+    }
     // Per-preset rows: --algo auto across the node shapes the generalized
     // topology model opens (flat, 2-group, 4-group, dual-node).
-    for preset in ["h800", "l40", "l40x4", "h800x2"] {
-        let ptopo = presets::topology_by_name(preset, ranks).unwrap();
-        for spec in ["bf16", "int4@32", "int2-sr@32"] {
-            sweep_case("inproc", preset, &ptopo, spec, AlgoPolicy::Auto);
+    if wants("inproc") {
+        for preset in ["h800", "l40", "l40x4", "h800x2"] {
+            let ptopo = presets::topology_by_name(preset, ranks).unwrap();
+            for spec in ["bf16", "int4@32", "int2-sr@32"] {
+                sweep_case("inproc", preset, &ptopo, spec, AlgoPolicy::Auto);
+            }
         }
     }
     let json = format!("[\n{}\n]\n", records.join(",\n"));

@@ -4,8 +4,13 @@
 //!
 //! `cargo bench --bench bench_engine [-- --algo twostep|hier|auto]
 //!                                   [-- --plan auto|<spec>]`
+//!
+//! Accepts the shared `--transport` flag for symmetry with
+//! `bench_collectives`, but only `inproc` is valid here — the engine
+//! fabric is in-process; socket backends and wire-fault knobs are
+//! rejected loudly instead of being silently ignored.
 
-use flashcomm::cli::Args;
+use flashcomm::cli::{self, Args, TransportSel};
 use flashcomm::comm::AlgoPolicy;
 use flashcomm::coordinator::{TpEngine, TrainOptions, Trainer};
 use flashcomm::model::{Corpus, ModelConfig, Sampler, Weights};
@@ -26,6 +31,12 @@ fn plan_policy(args: &Args, base: &Codec) -> Option<PlanPolicy> {
 
 fn main() {
     let args = Args::parse(std::env::args().skip(1)).unwrap_or_default();
+    // Shared `--transport` semantics: the engine benches drive the
+    // in-process fabric only, so any socket backend (or a UDP wire-fault
+    // knob) is a loud error rather than a silently ignored flag.
+    let transport = cli::transport_flag(&args, &[TransportSel::InProc])
+        .expect("bench_engine runs in-process only");
+    cli::wire_fault_flags(&args, transport).expect("wire-fault knobs are UDP-only");
     let policy: AlgoPolicy = args
         .flag_or("algo", "twostep")
         .parse()

@@ -6,7 +6,7 @@
 
 use std::collections::HashMap;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 /// Parsed command line.
 #[derive(Debug, Clone, Default)]
@@ -70,6 +70,102 @@ impl Args {
     }
 }
 
+/// Transport backend selection (`--transport inproc|tcp|udp`), shared by
+/// every fabric-driving command and bench so the flag is spelled — and
+/// rejected — identically everywhere. Commands declare which backends
+/// they support via [`transport_flag`]; a valid-but-unsupported backend
+/// is a loud typed error, never a silent fallback.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransportSel {
+    /// In-process channel mesh (the bit-exact reference backend).
+    InProc,
+    /// TCP stream mesh with per-link framing (DESIGN.md §4).
+    Tcp,
+    /// Loss-tolerant UDP datagram mesh with NACK recovery (DESIGN.md §13).
+    Udp,
+}
+
+impl TransportSel {
+    pub fn parse(s: &str) -> Result<TransportSel> {
+        match s.to_ascii_lowercase().as_str() {
+            "inproc" => Ok(TransportSel::InProc),
+            "tcp" => Ok(TransportSel::Tcp),
+            "udp" => Ok(TransportSel::Udp),
+            other => bail!("--transport {other}: expected inproc, tcp, or udp"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TransportSel::InProc => "inproc",
+            TransportSel::Tcp => "tcp",
+            TransportSel::Udp => "udp",
+        }
+    }
+}
+
+impl std::fmt::Display for TransportSel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Resolve `--transport` against the backends this command supports
+/// (`allowed[0]` is the default when the flag is absent).
+pub fn transport_flag(args: &Args, allowed: &[TransportSel]) -> Result<TransportSel> {
+    let sel = match args.flag("transport") {
+        None => allowed[0],
+        Some(v) => TransportSel::parse(v)?,
+    };
+    ensure!(
+        allowed.contains(&sel),
+        "--transport {sel} is not supported here (supported: {})",
+        allowed.iter().map(|t| t.name()).collect::<Vec<_>>().join(", ")
+    );
+    Ok(sel)
+}
+
+/// A seeded wire-fault program parsed from the chaos knobs
+/// (`--wire-fault-pct P [--wire-fault-seed S]`): every datagram is
+/// dropped / duplicated / corrupted / reordered with probability
+/// `rate = P / 100` each, deterministically from `seed` (per-rank salts
+/// are applied by the caller). The knobs only mean something on the UDP
+/// datagram backend, so any other selection rejects them loudly — a
+/// "chaos run" that silently injected nothing would be a false green.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WireFaultSpec {
+    pub seed: u64,
+    pub rate: f64,
+}
+
+/// Parse the wire-fault knob pair for the selected transport. `None`
+/// when neither knob was given; a typed error when they are given on a
+/// non-UDP backend or malformed.
+pub fn wire_fault_flags(args: &Args, sel: TransportSel) -> Result<Option<WireFaultSpec>> {
+    let pct = args.flag("wire-fault-pct");
+    let seed = args.flag("wire-fault-seed");
+    if pct.is_none() && seed.is_none() {
+        return Ok(None);
+    }
+    ensure!(
+        sel == TransportSel::Udp,
+        "--wire-fault-pct / --wire-fault-seed inject datagram loss and only apply to \
+         --transport udp (got --transport {sel}); refusing to run a chaos drill that \
+         injects nothing"
+    );
+    let pct = pct.context("--wire-fault-seed without --wire-fault-pct injects nothing")?;
+    let rate: f64 = pct.parse::<f64>().with_context(|| format!("--wire-fault-pct {pct}"))? / 100.0;
+    ensure!(
+        rate > 0.0 && rate < 1.0,
+        "--wire-fault-pct {pct}: expected a percentage in (0, 100)"
+    );
+    let seed: u64 = match seed {
+        None => 0x5EED_FA11,
+        Some(v) => v.parse().with_context(|| format!("--wire-fault-seed {v}"))?,
+    };
+    Ok(Some(WireFaultSpec { seed, rate }))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -103,5 +199,56 @@ mod tests {
         assert_eq!(a.flag_or("config", "tiny"), "tiny");
         assert_eq!(a.flag_usize("steps", 7).unwrap(), 7);
         assert!(a.require("codec").is_err());
+    }
+
+    #[test]
+    fn transport_flag_defaults_parses_and_rejects() {
+        let all = [TransportSel::InProc, TransportSel::Tcp, TransportSel::Udp];
+        // Absent flag -> the command's default (first allowed entry).
+        let sel = transport_flag(&parse("worker"), &[TransportSel::Tcp]).unwrap();
+        assert_eq!(sel, TransportSel::Tcp);
+        // Explicit selections parse case-insensitively.
+        let sel = transport_flag(&parse("worker --transport UDP"), &all).unwrap();
+        assert_eq!(sel, TransportSel::Udp);
+        let sel = transport_flag(&parse("bench --transport inproc"), &all).unwrap();
+        assert_eq!(sel, TransportSel::InProc);
+        // Unknown backend: parse error naming the token.
+        let err = transport_flag(&parse("worker --transport carrier-pigeon"), &all).unwrap_err();
+        assert!(err.to_string().contains("carrier-pigeon"), "{err}");
+        // Valid backend a command does not support: loud, lists what is.
+        let err =
+            transport_flag(&parse("train --transport udp"), &[TransportSel::InProc]).unwrap_err();
+        assert!(err.to_string().contains("not supported"), "{err}");
+        assert!(err.to_string().contains("inproc"), "{err}");
+    }
+
+    #[test]
+    fn wire_fault_knobs_are_udp_only_and_never_a_silent_noop() {
+        // Absent knobs: no fault program on any backend.
+        assert_eq!(wire_fault_flags(&parse("worker"), TransportSel::Tcp).unwrap(), None);
+        // Present on UDP: parsed, percentage scaled to a rate.
+        let args = parse("worker --wire-fault-pct 5 --wire-fault-seed 42");
+        let f = wire_fault_flags(&args, TransportSel::Udp).unwrap().unwrap();
+        assert_eq!(f.seed, 42);
+        assert!((f.rate - 0.05).abs() < 1e-12);
+        // Seed defaults when only the rate is pinned.
+        let f = wire_fault_flags(&parse("worker --wire-fault-pct 1"), TransportSel::Udp)
+            .unwrap()
+            .unwrap();
+        assert!((f.rate - 0.01).abs() < 1e-12);
+        // Present on a non-UDP backend: loud typed error, not a no-op.
+        for sel in [TransportSel::InProc, TransportSel::Tcp] {
+            let err = wire_fault_flags(&parse("worker --wire-fault-pct 5"), sel).unwrap_err();
+            assert!(err.to_string().contains("only apply to --transport udp"), "{err}");
+        }
+        // A lone seed injects nothing — also rejected.
+        let err =
+            wire_fault_flags(&parse("worker --wire-fault-seed 9"), TransportSel::Udp).unwrap_err();
+        assert!(err.to_string().contains("injects nothing"), "{err}");
+        // Rate bounds: 0 and 100 are refused (WireFault asserts rate < 1).
+        for bad in ["0", "100", "-3"] {
+            let args = parse(&format!("worker --wire-fault-pct {bad}"));
+            assert!(wire_fault_flags(&args, TransportSel::Udp).is_err(), "pct {bad} accepted");
+        }
     }
 }

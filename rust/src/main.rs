@@ -17,6 +17,8 @@
 //!                   [--root host:port] [--rank R] [--codec-threads T]
 //!                   [--plan auto|spec] [--chunks K] [--window W]
 //!                   [--bind ip] [--inter-gbps F] [--trace-out path]
+//!                   [--transport tcp|udp]
+//!                   [--wire-fault-pct P [--wire-fault-seed S]]
 //!                   [--heartbeat-ms H] [--comm-timeout-ms T]
 //!                   [--kill-rank R [--kill-after-ms M]] [--rejoin-rank R]
 //! flashcomm metrics [--ranks N] [--groups G] [--codec spec] [--len N]
@@ -46,13 +48,19 @@
 //! Lost at `T` ms and every survivor gets a typed `PeerLost` instead of
 //! hanging. The launcher's `--kill-rank` / `--rejoin-rank` modes turn the
 //! worker demo into end-to-end failure drills over real processes.
+//! `--transport udp` swaps the worker data plane for the loss-tolerant
+//! datagram backend (NACK reassembly + retransmit, DESIGN.md §13);
+//! `--wire-fault-pct P [--wire-fault-seed S]` runs it over a seeded chaos
+//! wire that drops/duplicates/corrupts/reorders `P`% of datagrams each —
+//! the results must *still* be bit-identical to InProc. The chaos knobs
+//! are UDP-only and rejected loudly on any other backend.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, ensure, Context, Result};
 
-use flashcomm::cli::Args;
+use flashcomm::cli::{self, Args, TransportSel};
 use flashcomm::comm::{fabric, preset_topo_custom, AlgoPolicy, CommError, Communicator, LocalGroup};
 use flashcomm::coordinator::{TpEngine, TrainOptions, Trainer};
 use flashcomm::harness;
@@ -62,7 +70,7 @@ use flashcomm::quant::Codec;
 use flashcomm::runtime::{default_artifacts_dir, Runtime};
 use flashcomm::session::{self, SessionConfig};
 use flashcomm::telemetry::DEFAULT_CAPACITY;
-use flashcomm::transport::{frame, tcp, Transport};
+use flashcomm::transport::{frame, tcp, Transport, WireFault};
 use flashcomm::util::Prng;
 
 fn main() {
@@ -215,6 +223,13 @@ worker: --bind IP — bind data listeners beyond loopback (multi-node);
       --inter-gbps F — model G NVLink nodes joined by an F GB/s link
       (the tier-asymmetric shape where auto plans mix stage codecs);
       --iters K — repeat each codec's AllReduce K times
+transport: --transport tcp|udp — the worker data plane (default tcp).
+      udp shreds each frame into <= 1200 B datagrams and recovers loss
+      with receiver NACKs + sender retransmit (DESIGN.md §13);
+      --wire-fault-pct P [--wire-fault-seed S] (udp only) runs it over a
+      seeded chaos wire — P% of datagrams dropped, duplicated, corrupted,
+      and reordered each — and still requires bit-identity vs InProc.
+      train/eval are in-process only and reject any other --transport.
 session: --heartbeat-ms H / --comm-timeout-ms T — liveness fabric for the
       TCP backend (DESIGN.md §12): heartbeats every H ms, a silent peer is
       Suspect at T/2 and Lost at T, surfacing a typed PeerLost on every
@@ -222,7 +237,8 @@ session: --heartbeat-ms H / --comm-timeout-ms T — liveness fabric for the
       fabric (rejected when --bind leaves loopback).
 faults: --kill-rank R [--kill-after-ms M] — launcher-only drill: SIGKILL
       rank R mid-run and require every survivor to exit with PeerLost
-      within 2x the timeout; --rejoin-rank R — epoch drill: R drops after
+      within 2x the timeout (runs on either transport, including a lossy
+      udp wire); --rejoin-rank R — epoch drill (tcp only): R drops after
       one collective, survivors see PeerLost, everyone re-rendezvouses at
       epoch 1 and the post-rejoin AllReduce must match InProc bit-for-bit
 trace: --trace-out P — flight-record every collective and write one JSON
@@ -247,6 +263,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     let eval_batches = Sampler::eval_batches(eval, cfg.eval_batch, cfg.seq_len);
     let codec = Codec::parse(&args.flag_or("codec", "bf16"))?;
     session_flags(args)?; // validate the liveness pair (inert in-process)
+    // train drives the in-process fabric only: any other `--transport`
+    // (or a wire-fault knob) is a loud error, never a silent no-op.
+    cli::wire_fault_flags(args, cli::transport_flag(args, &[TransportSel::InProc])?)?;
     let algo: AlgoPolicy = args.flag_or("algo", "twostep").parse()?;
     let plan = plan_policy_for(args.flag("plan"), pins_flags(args)?, algo, &codec)?;
     let opts = TrainOptions {
@@ -315,6 +334,8 @@ fn cmd_eval(args: &Args) -> Result<()> {
         Sampler::eval_batches(eval, cfg.eval_batch, cfg.seq_len).into_iter().take(n).collect();
     let codec = Codec::parse(&args.flag_or("codec", "bf16"))?;
     session_flags(args)?; // validate the liveness pair (inert in-process)
+    // eval, like train, runs in-process only (see cmd_train).
+    cli::wire_fault_flags(args, cli::transport_flag(args, &[TransportSel::InProc])?)?;
     if let Some(style) = args.flag("style") {
         bail!("--style was replaced by --algo (try `--algo {style}`, or `--algo auto`)");
     }
@@ -361,14 +382,15 @@ fn write_traces(path: &str, traces: &[String]) -> Result<()> {
     Ok(())
 }
 
-/// `worker` — the multi-process TCP fabric demo.
+/// `worker` — the multi-process socket fabric demo (`--transport tcp|udp`).
 ///
 /// Without `--rank` this is the *launcher*: it reserves a rendezvous port,
 /// spawns one OS process per rank (re-invoking this binary with `--rank R`),
 /// and fails if any rank fails. With `--rank` it is one rank: it bootstraps
-/// the TCP mesh, runs the quantized AllReduce for each requested codec, and
-/// verifies the result is bit-identical to the in-process backend on the
-/// same inputs.
+/// the selected mesh (both backends rendezvous over TCP), runs the quantized
+/// AllReduce for each requested codec, and verifies the result is
+/// bit-identical to the in-process backend on the same inputs — on UDP,
+/// optionally through a seeded chaos wire (`--wire-fault-pct`).
 fn cmd_worker(args: &Args) -> Result<()> {
     let opts = WorkerOpts::parse(args)?;
     match args.flag("rank") {
@@ -394,6 +416,15 @@ struct WorkerOpts {
     inter_gbps: Option<f64>,
     codecs: String,
     codec_threads: usize,
+    /// Data-plane backend (`--transport tcp|udp`; default tcp — the
+    /// in-process backend has no sockets, so the multi-process demo
+    /// rejects it at parse).
+    transport: TransportSel,
+    /// Seeded wire-fault program for the UDP data plane
+    /// (`--wire-fault-pct P [--wire-fault-seed S]`, UDP-only — see
+    /// [`cli::wire_fault_flags`]). Each rank salts the seed with its own
+    /// id so the per-endpoint chaos programs are independent.
+    wire_fault: Option<cli::WireFaultSpec>,
     /// Data-listener bind address (`--bind`; loopback by default — set a
     /// routable interface IP to let the data plane leave the host).
     bind: std::net::IpAddr,
@@ -420,8 +451,11 @@ impl WorkerOpts {
     fn parse(args: &Args) -> Result<WorkerOpts> {
         let world = args.flag_usize("world", 4)?;
         ensure!(world >= 2, "worker demo needs at least 2 ranks (got --world {world})");
+        let transport = cli::transport_flag(args, &[TransportSel::Tcp, TransportSel::Udp])?;
         let opts = WorkerOpts {
             world,
+            transport,
+            wire_fault: cli::wire_fault_flags(args, transport)?,
             len: args.flag_usize("len", 4096)?,
             algo: args.flag_or("algo", "hier"),
             groups: groups_flag(args)?,
@@ -462,6 +496,11 @@ impl WorkerOpts {
                 session.enabled(),
                 "--rejoin-rank needs the session fabric (non-zero --heartbeat-ms and \
                  --comm-timeout-ms): without deadlines the survivors never see the loss"
+            );
+            ensure!(
+                opts.transport == TransportSel::Tcp,
+                "--rejoin-rank is a TCP-only drill: the UDP backend has no epoch-rejoin \
+                 path yet (the --kill-rank drill does run over UDP)"
             );
         }
         // Validate once here rather than erroring in every spawned
@@ -548,10 +587,14 @@ fn worker_launch(opts: &WorkerOpts, args: &Args) -> Result<()> {
         Some(p) => format!("plan {p}"),
         None => format!("algo {}", opts.algo),
     };
+    let chaos = match opts.wire_fault {
+        Some(f) => format!(", wire chaos {:.1}% (seed {})", f.rate * 100.0, f.seed),
+        None => String::new(),
+    };
     println!(
-        "spawning {} worker processes: rendezvous {root}, {policy_label}{grouping}, \
-         codecs {}, {} elems/rank",
-        opts.world, opts.codecs, opts.len
+        "spawning {} worker processes over {}: rendezvous {root}, {policy_label}{grouping}, \
+         codecs {}, {} elems/rank{chaos}",
+        opts.world, opts.transport, opts.codecs, opts.len
     );
     let mut children = Vec::with_capacity(opts.world);
     for rank in 0..opts.world {
@@ -564,12 +607,20 @@ fn worker_launch(opts: &WorkerOpts, args: &Args) -> Result<()> {
             .args(["--algo", &opts.algo])
             .args(["--codecs", &opts.codecs])
             .args(["--codec-threads", &opts.codec_threads.to_string()])
+            .args(["--transport", opts.transport.name()])
             .args(["--bind", &opts.bind.to_string()])
             .args(["--heartbeat-ms", &opts.heartbeat_ms.to_string()])
             .args(["--comm-timeout-ms", &opts.comm_timeout_ms.to_string()])
             .args(["--iters", &opts.iters.to_string()]);
         if let Some(r) = opts.rejoin_rank {
             cmd.args(["--rejoin-rank", &r.to_string()]);
+        }
+        if let Some(f) = opts.wire_fault {
+            // Every rank receives the same flag string, so the fault
+            // programs stay deterministic across the job even if the
+            // pct <-> rate scaling is not bit-exact.
+            cmd.args(["--wire-fault-pct", &format!("{}", f.rate * 100.0)])
+                .args(["--wire-fault-seed", &f.seed.to_string()]);
         }
         if let Some(g) = opts.groups {
             cmd.args(["--groups", &g.to_string()]);
@@ -709,15 +760,57 @@ fn reap_kill_smoke(
 fn worker_rank(rank: usize, opts: &WorkerOpts, root: &str) -> Result<()> {
     let policy: AlgoPolicy = opts.algo.parse()?;
     let topo = opts.topology(policy)?;
-    let world = opts.world;
-    let len = opts.len;
     // Session-aware bootstrap: a dead or silent root fails within the
     // rendezvous timeout as a typed CommError::Rendezvous, and (unless the
     // pair was zeroed out) the mesh runs under heartbeats + receive
     // deadlines, so a peer death surfaces as PeerLost instead of a hang.
-    let tcp = session::establish(rank, world, root, None, opts.bind, &opts.session()?)
-        .with_context(|| format!("rank {rank} joining the TCP session at {root}"))?;
-    let mut comm = Communicator::new(tcp, topo.clone(), Arc::new(fabric::ByteCounters::default()))?;
+    // Both backends share the TCP rendezvous control plane; only the data
+    // plane differs (framed streams vs NACK-recovered datagrams).
+    match opts.transport {
+        TransportSel::Udp => {
+            // Per-rank seed salt: each endpoint draws an independent
+            // deterministic fault program (the `udp::local_mesh_faulty`
+            // convention).
+            let fault = opts
+                .wire_fault
+                .map(|f| WireFault::chaos(f.seed.wrapping_add(rank as u64), f.rate));
+            let udp = session::establish_udp(
+                rank,
+                opts.world,
+                root,
+                None,
+                opts.bind,
+                &opts.session()?,
+                fault,
+            )
+            .with_context(|| format!("rank {rank} joining the UDP session at {root}"))?;
+            worker_rank_run(udp, rank, opts, policy, topo, "UDP")
+        }
+        TransportSel::Tcp => {
+            let tcp = session::establish(rank, opts.world, root, None, opts.bind, &opts.session()?)
+                .with_context(|| format!("rank {rank} joining the TCP session at {root}"))?;
+            worker_rank_run(tcp, rank, opts, policy, topo, "TCP")
+        }
+        TransportSel::InProc => unreachable!("WorkerOpts::parse rejects --transport inproc"),
+    }
+}
+
+/// One rank's demo body, generic over the connected data plane: run the
+/// quantized AllReduce for every requested codec, verify each result is
+/// bit-identical to the in-process reference, allgather the resolved-plan
+/// fingerprint, and dump transport/session stats plus optional traces.
+fn worker_rank_run<T: Transport>(
+    transport: T,
+    rank: usize,
+    opts: &WorkerOpts,
+    policy: AlgoPolicy,
+    topo: flashcomm::topo::Topology,
+    backend: &str,
+) -> Result<()> {
+    let world = opts.world;
+    let len = opts.len;
+    let mut comm =
+        Communicator::new(transport, topo.clone(), Arc::new(fabric::ByteCounters::default()))?;
     comm.set_codec_threads(opts.codec_threads);
     if opts.trace_out.is_some() {
         comm.enable_recording(DEFAULT_CAPACITY);
@@ -739,7 +832,7 @@ fn worker_rank(rank: usize, opts: &WorkerOpts, root: &str) -> Result<()> {
             let codec = Codec::parse(spec)?;
             let plan_policy = plan_policy_for(opts.plan.as_deref(), opts.pins, policy, &codec)?;
 
-            // The real thing: this process is one rank of the TCP mesh.
+            // The real thing: this process is one rank of the socket mesh.
             let mut mine = inputs[rank].clone();
             let (used_label, used_algo, used_plan) = match &plan_policy {
                 Some(pp) => {
@@ -782,12 +875,13 @@ fn worker_rank(rank: usize, opts: &WorkerOpts, root: &str) -> Result<()> {
             for (i, (a, b)) in mine.iter().zip(expect).enumerate() {
                 ensure!(
                     a.to_bits() == b.to_bits(),
-                    "[rank {rank}] {spec}: TCP diverges from InProc at element {i}: {a} vs {b}"
+                    "[rank {rank}] {spec}: {backend} diverges from InProc at element {i}: \
+                     {a} vs {b}"
                 );
             }
             if iter == 0 {
                 println!(
-                    "[rank {rank}] {spec} [{used_label}] AllReduce over TCP == InProc \
+                    "[rank {rank}] {spec} [{used_label}] AllReduce over {backend} == InProc \
                      bit-for-bit ({len} elems)"
                 );
             }
@@ -842,6 +936,24 @@ fn worker_rank(rank: usize, opts: &WorkerOpts, root: &str) -> Result<()> {
         stats.wire_bytes,
         stats.wire_bytes - stats.payload_bytes
     );
+    // The UDP robustness block, printed whenever recovery machinery fired
+    // (always zero on TCP, and on UDP over a clean loopback wire the only
+    // nonzero term is the forward-redundancy tail).
+    let recovered = stats.nacks_sent + stats.retransmitted_chunks + stats.duplicate_drops;
+    if recovered + stats.corrupt_drops + stats.redundancy_bytes > 0 {
+        println!(
+            "[rank {rank}] recovery: {} NACKs sent / {} received, {} chunks retransmitted, \
+             {} dup + {} corrupt + {} stale drops, {} redundancy B, {} paced stalls",
+            stats.nacks_sent,
+            stats.nacks_received,
+            stats.retransmitted_chunks,
+            stats.duplicate_drops,
+            stats.corrupt_drops,
+            stats.stale_epoch_drops,
+            stats.redundancy_bytes,
+            stats.paced_stalls
+        );
+    }
     if let Some(s) = comm.transport().session_stats() {
         println!(
             "[rank {rank}] session epoch {}: {} heartbeats sent, {} received, {} suspects, \

@@ -25,6 +25,17 @@
 //!   (hit/miss counters are public — tests pin "zero recompiles after
 //!   warmup").
 //!
+//! The transport backend is a pricing dimension the compiler does *not*
+//! model yet: plans are priced against link bandwidths alone, while the
+//! UDP datagram backend (DESIGN.md §13) adds per-datagram sub-header
+//! overhead (16 B / 1200 B chunk), forward tail redundancy, and a paced
+//! send rate that adapts to measured delivery — all visible in
+//! `TransportStats` and `BENCH_transport.json` (UDP-vs-TCP rows on the
+//! tier-asymmetric 25 GB/s shape) but priced as if the wire were free of
+//! them. Folding a per-backend overhead term into [`crate::sim::plan_time`]
+//! is the designed extension point once those recorded baselines show the
+//! gap matters for plan choice.
+//!
 //! [`PlanPolicy`] is how callers choose: `Fixed(CommPlan)` runs exactly
 //! one plan, `Auto` compiles per (topology, size, codec). The older
 //! [`crate::comm::AlgoPolicy`] survives as a thin shim — its

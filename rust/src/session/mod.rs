@@ -4,9 +4,10 @@
 //! arrive are intact; this layer guarantees that bytes which *don't* arrive
 //! fail loudly. It owns three concerns the frame layer cannot see:
 //!
-//! 1. **Liveness** — per-peer heartbeats and receive deadlines on the TCP
-//!    reader threads. A rank that stops sending (crash, SIGKILL, network
-//!    partition) is moved through the per-peer state machine
+//! 1. **Liveness** — per-peer heartbeats and receive deadlines, enforced
+//!    by the TCP reader threads and the UDP engine thread alike. A rank
+//!    that stops sending (crash, SIGKILL, network partition) is moved
+//!    through the per-peer state machine
 //!    `Healthy → Suspect → Lost` and every survivor's pending `recv`
 //!    surfaces [`CommError::PeerLost`] within the configured deadline
 //!    instead of blocking forever.
@@ -364,6 +365,33 @@ pub fn establish(
 ) -> Result<TcpTransport, CommError> {
     TcpTransport::bootstrap_session(rank, n, root, root_listener, bind, config)
         .map_err(|e| CommError::rendezvous(format!("{e:#}")))
+}
+
+/// Session-aware UDP bootstrap: [`UdpTransport::bootstrap_session`] under
+/// the same typed-error contract as [`establish`]. The rendezvous control
+/// plane is still the bounded TCP handshake (rank 0 is the root); only
+/// the data plane is datagrams. `fault` attaches a deterministic
+/// [`crate::transport::WireFault`] program to this endpoint's outgoing
+/// packets — chaos drills only, `None` in production.
+pub fn establish_udp(
+    rank: usize,
+    n: usize,
+    root: &str,
+    root_listener: Option<TcpListener>,
+    bind: IpAddr,
+    config: &SessionConfig,
+    fault: Option<crate::transport::WireFault>,
+) -> Result<crate::transport::UdpTransport, CommError> {
+    crate::transport::UdpTransport::bootstrap_session(
+        rank,
+        n,
+        root,
+        root_listener,
+        bind,
+        config,
+        fault,
+    )
+    .map_err(|e| CommError::rendezvous(format!("{e:#}")))
 }
 
 /// Re-rendezvous under `config.epoch + 1`: the whole surviving membership

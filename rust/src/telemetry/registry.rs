@@ -157,6 +157,15 @@ impl MetricsRegistry {
                 messages: prev.messages + s.messages,
                 buffered_bytes: prev.buffered_bytes + s.buffered_bytes,
                 peak_buffered_bytes: prev.peak_buffered_bytes.max(s.peak_buffered_bytes),
+                nacks_sent: prev.nacks_sent + s.nacks_sent,
+                nacks_received: prev.nacks_received + s.nacks_received,
+                retransmitted_chunks: prev.retransmitted_chunks + s.retransmitted_chunks,
+                duplicate_drops: prev.duplicate_drops + s.duplicate_drops,
+                reorder_events: prev.reorder_events + s.reorder_events,
+                corrupt_drops: prev.corrupt_drops + s.corrupt_drops,
+                stale_epoch_drops: prev.stale_epoch_drops + s.stale_epoch_drops,
+                redundancy_bytes: prev.redundancy_bytes + s.redundancy_bytes,
+                paced_stalls: prev.paced_stalls + s.paced_stalls,
             },
             None => s,
         });
@@ -282,8 +291,24 @@ impl MetricsSnapshot {
         if let Some(t) = self.transport {
             out.push_str(&format!(
                 ",\"transport\":{{\"payload_bytes\":{},\"wire_bytes\":{},\"messages\":{},\
-                 \"buffered_bytes\":{},\"peak_buffered_bytes\":{}}}",
-                t.payload_bytes, t.wire_bytes, t.messages, t.buffered_bytes, t.peak_buffered_bytes
+                 \"buffered_bytes\":{},\"peak_buffered_bytes\":{},\"nacks_sent\":{},\
+                 \"nacks_received\":{},\"retransmitted_chunks\":{},\"duplicate_drops\":{},\
+                 \"reorder_events\":{},\"corrupt_drops\":{},\"stale_epoch_drops\":{},\
+                 \"redundancy_bytes\":{},\"paced_stalls\":{}}}",
+                t.payload_bytes,
+                t.wire_bytes,
+                t.messages,
+                t.buffered_bytes,
+                t.peak_buffered_bytes,
+                t.nacks_sent,
+                t.nacks_received,
+                t.retransmitted_chunks,
+                t.duplicate_drops,
+                t.reorder_events,
+                t.corrupt_drops,
+                t.stale_epoch_drops,
+                t.redundancy_bytes,
+                t.paced_stalls
             ));
         }
         if let Some(s) = self.session {
@@ -458,6 +483,49 @@ mod tests {
             "\"hits\":5",
             "\"last_plan\"",
             "\"fp\":\"0x00000000000000ab\"",
+        ] {
+            assert!(json.contains(field), "{json} missing {field}");
+        }
+    }
+
+    #[test]
+    fn transport_block_accumulates_and_exports_robustness_counters() {
+        let mut reg = MetricsRegistry::new();
+        let mut a = TransportStats {
+            payload_bytes: 1000,
+            wire_bytes: 1100,
+            messages: 2,
+            nacks_sent: 3,
+            nacks_received: 1,
+            retransmitted_chunks: 4,
+            duplicate_drops: 5,
+            reorder_events: 6,
+            corrupt_drops: 7,
+            stale_epoch_drops: 8,
+            redundancy_bytes: 90,
+            paced_stalls: 2,
+            ..TransportStats::default()
+        };
+        reg.absorb_transport(a);
+        a.peak_buffered_bytes = 512;
+        reg.absorb_transport(a);
+        let t = reg.snapshot().transport.unwrap();
+        assert_eq!(t.payload_bytes, 2000, "sums across absorbs");
+        assert_eq!(t.nacks_sent, 6);
+        assert_eq!(t.retransmitted_chunks, 8);
+        assert_eq!(t.peak_buffered_bytes, 512, "peak is a max, not a sum");
+        let json = reg.snapshot().to_json();
+        for field in [
+            "\"transport\":{",
+            "\"nacks_sent\":6",
+            "\"nacks_received\":2",
+            "\"retransmitted_chunks\":8",
+            "\"duplicate_drops\":10",
+            "\"reorder_events\":12",
+            "\"corrupt_drops\":14",
+            "\"stale_epoch_drops\":16",
+            "\"redundancy_bytes\":180",
+            "\"paced_stalls\":4",
         ] {
             assert!(json.contains(field), "{json} missing {field}");
         }

@@ -37,6 +37,21 @@ pub const FRAME_VERSION: u8 = 2;
 /// Header `flags` bit marking a session heartbeat frame (zero-length
 /// payload, liveness only — never delivered to `recv`, never counted).
 pub const FLAG_HEARTBEAT: u8 = 0x01;
+/// Header `flags` bit marking a UDP datagram that carries one chunk of a
+/// shredded frame: the payload starts with a segment sub-header (see
+/// `transport::udp`), and `seq`/`len`/`crc` guard the *datagram*, not the
+/// logical frame it belongs to.
+pub const FLAG_SEGMENT: u8 = 0x02;
+/// Header `flags` bit marking a UDP NACK control datagram (receiver →
+/// sender: "re-send these chunks of this frame").
+pub const FLAG_NACK: u8 = 0x04;
+/// Header `flags` bit marking a UDP ACK control datagram (receiver →
+/// sender: "this frame is fully delivered — retire it and take an RTT
+/// sample").
+pub const FLAG_ACK: u8 = 0x08;
+/// All flag bits this build understands; [`FrameHeader::parse`] rejects
+/// anything outside this mask so a future layout change fails loudly.
+pub const FLAG_MASK: u8 = FLAG_HEARTBEAT | FLAG_SEGMENT | FLAG_NACK | FLAG_ACK;
 /// Fixed header length in bytes (24 B of fields + 4 B header CRC).
 pub const FRAME_HEADER_LEN: usize = 28;
 /// Upper bound on a single frame's payload (sanity check before the
@@ -46,7 +61,8 @@ pub const MAX_PAYLOAD: u32 = 1 << 30;
 /// Parsed frame header.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct FrameHeader {
-    /// Frame flags ([`FLAG_HEARTBEAT`]; remaining bits reserved, must be 0).
+    /// Frame flags ([`FLAG_HEARTBEAT`], [`FLAG_SEGMENT`], [`FLAG_NACK`],
+    /// [`FLAG_ACK`]; remaining bits reserved, must be 0).
     pub flags: u8,
     /// Sending rank.
     pub src: u16,
@@ -140,8 +156,8 @@ impl FrameHeader {
              (corrupt header rejected)"
         );
         ensure!(
-            buf[5] & !FLAG_HEARTBEAT == 0,
-            "frame carries unknown flag bits {:#04x} (this build understands {FLAG_HEARTBEAT:#04x})",
+            buf[5] & !FLAG_MASK == 0,
+            "frame carries unknown flag bits {:#04x} (this build understands {FLAG_MASK:#04x})",
             buf[5]
         );
         let hdr = FrameHeader {
@@ -269,7 +285,7 @@ mod tests {
     #[test]
     fn unknown_flag_bits_rejected() {
         let mut bad = sample();
-        bad[5] = 0x02; // reserved bit
+        bad[5] = 0x10; // reserved bit (0x01..0x08 are assigned; see FLAG_MASK)
         let hcrc = crc32(&bad[..24]);
         bad[24..28].copy_from_slice(&hcrc.to_le_bytes());
         let err = decode(bad).unwrap_err();

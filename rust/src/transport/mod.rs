@@ -10,6 +10,7 @@
 //! |----------------------------|-----------------------|-----------------------------------|
 //! | [`inproc::InProcTransport`]| threads, mpsc mesh    | tests, benches, single-node runs  |
 //! | [`tcp::TcpTransport`]      | OS processes, sockets | `flashcomm worker`, multi-process |
+//! | [`udp::UdpTransport`]      | OS processes, datagrams | lossy links, NACK + pacing      |
 //! | [`loopback::Loopback`]     | one rank, self-queue  | frame-path unit tests             |
 //!
 //! Backends deliver *bit-identical* payloads for the same collective and
@@ -21,6 +22,7 @@ pub mod frame;
 pub mod inproc;
 pub mod loopback;
 pub mod tcp;
+pub mod udp;
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -30,6 +32,7 @@ pub use frame::{FrameHeader, FRAME_HEADER_LEN, FRAME_VERSION};
 pub use inproc::InProcTransport;
 pub use loopback::Loopback;
 pub use tcp::TcpTransport;
+pub use udp::{UdpTransport, WireFault};
 
 /// A connected point-to-point endpoint: rank `rank()` of a `n()`-rank mesh.
 ///
@@ -94,6 +97,28 @@ pub struct TransportCounters {
     /// High-water mark of `buffered_bytes` — the backend's peak memory
     /// commitment for undelivered payloads.
     peak_buffered_bytes: AtomicU64,
+    // Datagram robustness counters (UDP backend; zero elsewhere).
+    /// NACK control datagrams sent (receiver side asking for chunks).
+    nacks_sent: AtomicU64,
+    /// NACK control datagrams received (sender side asked for chunks).
+    nacks_received: AtomicU64,
+    /// Chunks re-sent from the retransmit window (NACK- or probe-driven).
+    retransmitted_chunks: AtomicU64,
+    /// Datagrams dropped as duplicates of already-delivered data.
+    duplicate_drops: AtomicU64,
+    /// Datagrams that arrived out of per-link datagram order (delivered
+    /// anyway — reassembly handles it — but counted as a wire diagnostic).
+    reorder_events: AtomicU64,
+    /// Datagrams dropped for CRC/parse failures (line noise or injected
+    /// corruption — the data is recovered via NACK, never trusted).
+    corrupt_drops: AtomicU64,
+    /// Datagrams dropped for carrying a non-current session epoch.
+    stale_epoch_drops: AtomicU64,
+    /// Bytes sent as forward redundancy (frame-tail duplicates that let a
+    /// receiver survive single-packet loss without a NACK round-trip).
+    redundancy_bytes: AtomicU64,
+    /// Times the pacer made a sender sleep before putting bytes on the wire.
+    paced_stalls: AtomicU64,
 }
 
 impl TransportCounters {
@@ -117,6 +142,68 @@ impl TransportCounters {
         self.buffered_bytes.fetch_sub(payload_len as u64, Ordering::Relaxed);
     }
 
+    /// Record one logical message sent as datagrams: `payload_len` is the
+    /// application payload, `wire_len` the actual bytes put on the wire for
+    /// its first transmission (chunk sub-headers and per-datagram frame
+    /// headers included). Retransmissions and control traffic account
+    /// their wire bytes via [`record_extra_wire`](Self::record_extra_wire).
+    pub fn record_datagram_send(&self, payload_len: usize, wire_len: usize) {
+        self.payload_bytes.fetch_add(payload_len as u64, Ordering::Relaxed);
+        self.wire_bytes.fetch_add(wire_len as u64, Ordering::Relaxed);
+        self.messages.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Wire bytes beyond first-transmission data: retransmits, forward
+    /// redundancy, NACK/ACK control datagrams, heartbeats.
+    pub fn record_extra_wire(&self, wire_len: usize) {
+        self.wire_bytes.fetch_add(wire_len as u64, Ordering::Relaxed);
+    }
+
+    /// A NACK control datagram left this endpoint.
+    pub fn record_nack_sent(&self) {
+        self.nacks_sent.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A NACK control datagram arrived at this endpoint.
+    pub fn record_nack_received(&self) {
+        self.nacks_received.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// `n` chunks were re-sent from the retransmit window.
+    pub fn record_retransmitted_chunks(&self, n: u64) {
+        self.retransmitted_chunks.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// A datagram duplicating already-delivered data was dropped.
+    pub fn record_duplicate_drop(&self) {
+        self.duplicate_drops.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A datagram arrived out of per-link order.
+    pub fn record_reorder_event(&self) {
+        self.reorder_events.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A datagram failed parse/CRC validation and was dropped.
+    pub fn record_corrupt_drop(&self) {
+        self.corrupt_drops.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A datagram from a non-current session epoch was dropped.
+    pub fn record_stale_epoch_drop(&self) {
+        self.stale_epoch_drops.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// `n` bytes of forward redundancy were sent.
+    pub fn record_redundancy_bytes(&self, n: u64) {
+        self.redundancy_bytes.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// The pacer stalled a send to respect the modeled bandwidth.
+    pub fn record_paced_stall(&self) {
+        self.paced_stalls.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> TransportStats {
         TransportStats {
             payload_bytes: self.payload_bytes.load(Ordering::Relaxed),
@@ -124,6 +211,15 @@ impl TransportCounters {
             messages: self.messages.load(Ordering::Relaxed),
             buffered_bytes: self.buffered_bytes.load(Ordering::Relaxed),
             peak_buffered_bytes: self.peak_buffered_bytes.load(Ordering::Relaxed),
+            nacks_sent: self.nacks_sent.load(Ordering::Relaxed),
+            nacks_received: self.nacks_received.load(Ordering::Relaxed),
+            retransmitted_chunks: self.retransmitted_chunks.load(Ordering::Relaxed),
+            duplicate_drops: self.duplicate_drops.load(Ordering::Relaxed),
+            reorder_events: self.reorder_events.load(Ordering::Relaxed),
+            corrupt_drops: self.corrupt_drops.load(Ordering::Relaxed),
+            stale_epoch_drops: self.stale_epoch_drops.load(Ordering::Relaxed),
+            redundancy_bytes: self.redundancy_bytes.load(Ordering::Relaxed),
+            paced_stalls: self.paced_stalls.load(Ordering::Relaxed),
         }
     }
 }
@@ -145,6 +241,24 @@ pub struct TransportStats {
     /// how the collectives' in-flight memory bounds (e.g. the pipelined
     /// hierarchical send window) are pinned in tests.
     pub peak_buffered_bytes: u64,
+    /// NACK control datagrams sent (UDP; zero on other backends).
+    pub nacks_sent: u64,
+    /// NACK control datagrams received.
+    pub nacks_received: u64,
+    /// Chunks re-sent from the retransmit window.
+    pub retransmitted_chunks: u64,
+    /// Duplicate datagrams dropped.
+    pub duplicate_drops: u64,
+    /// Out-of-order datagram arrivals observed.
+    pub reorder_events: u64,
+    /// Datagrams dropped for parse/CRC failures.
+    pub corrupt_drops: u64,
+    /// Datagrams dropped for carrying a stale or future session epoch.
+    pub stale_epoch_drops: u64,
+    /// Forward-redundancy bytes sent (frame-tail duplicates).
+    pub redundancy_bytes: u64,
+    /// Sends the pacer stalled to respect the modeled bandwidth.
+    pub paced_stalls: u64,
 }
 
 #[cfg(test)]
@@ -176,5 +290,31 @@ mod tests {
         c.record_drained(20);
         assert_eq!(c.snapshot().buffered_bytes, 0, "at rest everything drained");
         assert_eq!(c.snapshot().peak_buffered_bytes, 150, "peak is sticky");
+    }
+
+    #[test]
+    fn robustness_counters_accumulate_independently() {
+        let c = TransportCounters::default();
+        c.record_datagram_send(1000, 1100);
+        c.record_extra_wire(64);
+        c.record_nack_sent();
+        c.record_nack_sent();
+        c.record_nack_received();
+        c.record_retransmitted_chunks(3);
+        c.record_duplicate_drop();
+        c.record_reorder_event();
+        c.record_corrupt_drop();
+        c.record_stale_epoch_drop();
+        c.record_redundancy_bytes(1200);
+        c.record_paced_stall();
+        let s = c.snapshot();
+        assert_eq!((s.payload_bytes, s.wire_bytes, s.messages), (1000, 1164, 1));
+        assert_eq!((s.nacks_sent, s.nacks_received), (2, 1));
+        assert_eq!(s.retransmitted_chunks, 3);
+        assert_eq!(
+            (s.duplicate_drops, s.reorder_events, s.corrupt_drops, s.stale_epoch_drops),
+            (1, 1, 1, 1)
+        );
+        assert_eq!((s.redundancy_bytes, s.paced_stalls), (1200, 1));
     }
 }

@@ -46,6 +46,7 @@ use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use super::{frame, Transport, TransportCounters, TransportStats};
 use crate::session::{PeerLost, SessionConfig, SessionShared, SessionStats};
+use crate::util::Backoff;
 
 /// How long bootstrap keeps retrying connects / polling accepts while the
 /// other worker processes come up (the data-plane mesh phase; the
@@ -382,8 +383,9 @@ impl Transport for TcpTransport {
 /// lines from ranks `1..n`, reject epoch conflicts (the root is the epoch
 /// authority — a stale incarnation dialing a bumped session fails here),
 /// then broadcast the full rank→address map. Every accept and read is
-/// bounded by `timeout`.
-fn rendezvous_root(
+/// bounded by `timeout`. `pub(crate)` so the UDP backend can run the same
+/// control plane with its datagram-socket address as `my_addr`.
+pub(crate) fn rendezvous_root(
     listener: &TcpListener,
     n: usize,
     my_addr: SocketAddr,
@@ -446,7 +448,7 @@ fn rendezvous_root(
 /// Worker side of the rendezvous: announce our data address and epoch,
 /// receive the full rank→address map. Connect retries and every read are
 /// bounded by `timeout`, so a dead root is a typed failure, not a hang.
-fn rendezvous_client(
+pub(crate) fn rendezvous_client(
     rank: usize,
     n: usize,
     root: &str,
@@ -519,16 +521,22 @@ fn connect_retry(addr: SocketAddr) -> Result<TcpStream> {
 }
 
 /// Connect with retry under an explicit deadline (the rendezvous phase
-/// uses the session's handshake timeout here).
+/// uses the session's handshake timeout here). Retries follow the shared
+/// [`Backoff`] schedule — jittered-exponential from 5 ms up to 200 ms, so
+/// a whole world of workers hammering one slow root decorrelates instead
+/// of dialing in lockstep every 20 ms. The jitter seed is the target port:
+/// deterministic for tests, distinct per destination.
 fn connect_retry_within(addr: SocketAddr, timeout: Duration) -> Result<TcpStream> {
     let deadline = Instant::now() + timeout;
+    let mut backoff =
+        Backoff::new(Duration::from_millis(5), Duration::from_millis(200), addr.port() as u64);
     loop {
         match TcpStream::connect(addr) {
             Ok(s) => return Ok(s),
             Err(e) if Instant::now() >= deadline => {
                 return Err(anyhow!(e)).context(format!("connecting to {addr} timed out"));
             }
-            Err(_) => thread::sleep(Duration::from_millis(20)),
+            Err(_) => thread::sleep(backoff.next_delay()),
         }
     }
 }

@@ -1,0 +1,1488 @@
+//! Loss-tolerant UDP datagram transport: NACK reassembly, retransmit with
+//! backoff, BBR-lite pacing, and deterministic wire-fault injection.
+//!
+//! TCP's per-stream congestion control and head-of-line blocking fight the
+//! micro-chunk pipelining the plan compiler schedules; this backend trades
+//! them for explicit loss recovery in the SFP spirit: each CRC32 v2 frame
+//! is shredded into MTU-sized datagrams, the receiver reassembles them in
+//! any order, and recovery is *receiver-driven* — only the missing chunks
+//! are requested, on a jittered-exponential [`Backoff`] timer.
+//!
+//! Datagram layout (everything little-endian; see `DESIGN.md` §13):
+//!
+//! ```text
+//! ┌──────────── frame v2 header, 28 B (see super::frame) ────────────┐
+//! │ magic | ver | flags(FLAG_SEGMENT) | src | dst | epoch            │
+//! │ seq = per-link datagram counter | len | crc32(payload) | hcrc    │
+//! ├──────────────────── segment sub-header, 16 B ────────────────────┤
+//! │ frame_seq u32 | chunk_index u16 | chunk_count u16                │
+//! │ frame_len u32 | frame_crc u32                                    │
+//! ├──────────────────────── chunk bytes ─────────────────────────────┤
+//! │ ≤ 1200 B slice of the logical frame payload                      │
+//! └──────────────────────────────────────────────────────────────────┘
+//! ```
+//!
+//! Every datagram is individually CRC-guarded, so a corrupted packet is
+//! dropped at parse (and recovered via NACK) instead of poisoning the
+//! frame. Control traffic rides the same header with its own flag bits:
+//! `FLAG_NACK` (payload: `frame_seq u32 | n u16 | n × chunk_index u16`,
+//! `n == 0` meaning "resend everything"), `FLAG_ACK` (payload:
+//! `frame_seq u32`, retires the sender's window entry and yields the RTT /
+//! delivered-bytes sample the pacer feeds on), and `FLAG_HEARTBEAT`.
+//!
+//! Loss recovery, end to end:
+//!
+//! - the **receiver** NACKs the missing chunks of every incomplete frame
+//!   on a per-frame jittered-exponential backoff, bounded rounds;
+//! - the **sender** keeps a bounded per-peer retransmit window and probes
+//!   unacknowledged frames past an RTO derived from the smoothed RTT
+//!   (re-sending chunk 0 — enough to let the receiver learn the frame
+//!   exists and drive precise recovery even when *every* datagram of the
+//!   first transmission was lost);
+//! - the frame tail is sent twice up front (**forward redundancy**), so
+//!   the common single-packet tail loss heals without a NACK round-trip;
+//! - a **BBR-lite pacer** throttles the send rate to `gain × btlbw`, where
+//!   `btlbw` is the windowed-max delivered-bytes/RTT over ACK samples;
+//! - persistent silence is converted into the typed
+//!   [`PeerLost`] by the session receive deadline (datagrams from a
+//!   non-current epoch are dropped at parse), so there are no infinite
+//!   NACK loops — a lost peer's reassembly and window state is cleared.
+//!
+//! The seeded [`WireFault`] injector is the datagram analogue of the
+//! session layer's `FaultInjector`: it drops, duplicates, corrupts, and
+//! reorders *outgoing* packets under a deterministic [`Prng`] program, so
+//! the chaos harness in `tests/transport.rs` can prove bit-identical
+//! collectives under 5% injected loss.
+
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::net::{IpAddr, SocketAddr, TcpListener, UdpSocket};
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use super::{frame, tcp, Transport, TransportCounters, TransportStats};
+use crate::session::{PeerLost, SessionConfig, SessionShared, SessionStats};
+use crate::util::{Backoff, Prng};
+
+/// Chunk payload per datagram — conservative "MTU minus headers" so one
+/// datagram never fragments on a standard 1500 B path.
+pub const CHUNK_BYTES: usize = 1200;
+/// Segment sub-header length (frame_seq, chunk_index, chunk_count,
+/// frame_len, frame_crc).
+pub const SEG_HEADER_LEN: usize = 16;
+/// Receive buffer: comfortably above header + sub-header + chunk.
+const RECV_BUF: usize = 2048;
+/// Engine socket read-timeout tick: bounds NACK/probe/deadline latency.
+const ENGINE_TICK: Duration = Duration::from_millis(2);
+/// Timer-scan period inside the engine (heartbeats, NACKs, probes).
+const SCAN_PERIOD: Duration = Duration::from_millis(1);
+/// Bounded retransmit window: unacknowledged frames per peer. `send`
+/// blocks (briefly — ACKs come from the peer's engine, not its `recv`
+/// calls) when full, and fails after [`WINDOW_FULL_TIMEOUT`].
+const MAX_WINDOW_FRAMES: usize = 256;
+const WINDOW_FULL_TIMEOUT: Duration = Duration::from_secs(10);
+/// Receiver gives up on an incomplete frame after this many NACK rounds
+/// (each round jitter-backed-off up to [`NACK_CAP`]) and surfaces an
+/// error — no infinite NACK loop even without a session deadline.
+const MAX_NACK_ROUNDS: u32 = 40;
+/// Sender stops probing an unacknowledged frame after this many rounds.
+const MAX_PROBE_ROUNDS: u32 = 24;
+/// Missing-chunk ids per NACK datagram (the rest go next round).
+const MAX_NACK_IDS: usize = 512;
+/// NACK backoff schedule: base and cap of the jittered exponential.
+const NACK_BASE: Duration = Duration::from_millis(2);
+const NACK_CAP: Duration = Duration::from_millis(128);
+/// Probe backoff cap (base is the live RTO).
+const PROBE_CAP: Duration = Duration::from_millis(500);
+/// How long the fault injector may hold a reordered datagram before the
+/// engine flushes it (bounds reorder-in-the-tail latency).
+const HOLDBACK_MAX_AGE: Duration = Duration::from_millis(3);
+/// Pacer: initial rate, floor/ceiling, BBR-lite gain, bw-window decay.
+const PACE_INIT: f64 = 256.0 * (1 << 20) as f64;
+const PACE_FLOOR: f64 = 64.0 * (1 << 20) as f64;
+const PACE_CEIL: f64 = 32.0 * (1 << 30) as f64;
+const PACE_GAIN: f64 = 1.25;
+const PACE_DECAY: f64 = 0.98;
+/// Stalls shorter than this are absorbed into the token-bucket debt
+/// instead of a sleep syscall.
+const PACE_MIN_SLEEP: Duration = Duration::from_micros(100);
+
+/// A peer link's stream of reassembled, validated frame payloads.
+type Inbox = Receiver<Result<Vec<u8>>>;
+/// The engine's sending half of a peer inbox (None for self / hung up).
+type InboxTx = Option<Sender<Result<Vec<u8>>>>;
+/// Per-peer bounded retransmit windows, shared between `send` (admission,
+/// new entries) and the engine (NACK re-sends, probes, ACK retirement).
+type Windows = Arc<Vec<Mutex<VecDeque<WindowEntry>>>>;
+/// A datagram the fault injector is holding back to reorder.
+type Holdback = Option<(SocketAddr, Vec<u8>, Instant)>;
+
+/// The 16-byte segment sub-header every data datagram carries after the
+/// frame header: which logical frame this chunk belongs to, where it
+/// lands, and the whole-frame length/CRC the reassembled payload must
+/// match.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct SegHeader {
+    frame_seq: u32,
+    chunk_index: u16,
+    chunk_count: u16,
+    frame_len: u32,
+    frame_crc: u32,
+}
+
+impl SegHeader {
+    fn write(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.frame_seq.to_le_bytes());
+        out.extend_from_slice(&self.chunk_index.to_le_bytes());
+        out.extend_from_slice(&self.chunk_count.to_le_bytes());
+        out.extend_from_slice(&self.frame_len.to_le_bytes());
+        out.extend_from_slice(&self.frame_crc.to_le_bytes());
+    }
+
+    fn parse(buf: &[u8]) -> Result<SegHeader> {
+        ensure!(buf.len() >= SEG_HEADER_LEN, "segment sub-header truncated: {} bytes", buf.len());
+        let h = SegHeader {
+            frame_seq: u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]),
+            chunk_index: u16::from_le_bytes([buf[4], buf[5]]),
+            chunk_count: u16::from_le_bytes([buf[6], buf[7]]),
+            frame_len: u32::from_le_bytes([buf[8], buf[9], buf[10], buf[11]]),
+            frame_crc: u32::from_le_bytes([buf[12], buf[13], buf[14], buf[15]]),
+        };
+        ensure!(h.chunk_count > 0, "segment declares zero chunks");
+        ensure!(
+            (h.chunk_index as usize) < h.chunk_count as usize,
+            "chunk index {} out of range for {} chunks",
+            h.chunk_index,
+            h.chunk_count
+        );
+        Ok(h)
+    }
+}
+
+/// Chunk count for a payload of `len` bytes (an empty payload still
+/// travels as one empty chunk).
+fn chunk_count(len: usize) -> usize {
+    len.div_ceil(CHUNK_BYTES).max(1)
+}
+
+/// The exact chunk length reassembly expects at `idx` of `count` chunks
+/// of a `frame_len`-byte frame.
+fn expected_chunk_len(frame_len: usize, count: usize, idx: usize) -> usize {
+    if idx + 1 < count {
+        CHUNK_BYTES
+    } else {
+        frame_len - CHUNK_BYTES * (count - 1)
+    }
+}
+
+/// NACK payload: `frame_seq | n | n × chunk_index` (`n == 0` = all).
+fn encode_nack_payload(frame_seq: u32, missing: &[u16]) -> Vec<u8> {
+    assert!(missing.len() <= u16::MAX as usize);
+    let mut out = Vec::with_capacity(6 + 2 * missing.len());
+    out.extend_from_slice(&frame_seq.to_le_bytes());
+    out.extend_from_slice(&(missing.len() as u16).to_le_bytes());
+    for &m in missing {
+        out.extend_from_slice(&m.to_le_bytes());
+    }
+    out
+}
+
+fn parse_nack_payload(buf: &[u8]) -> Result<(u32, Vec<u16>)> {
+    ensure!(buf.len() >= 6, "NACK payload truncated: {} bytes", buf.len());
+    let frame_seq = u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]);
+    let n = u16::from_le_bytes([buf[4], buf[5]]) as usize;
+    ensure!(buf.len() == 6 + 2 * n, "NACK declares {n} ids in {} bytes", buf.len());
+    let ids = (0..n).map(|i| u16::from_le_bytes([buf[6 + 2 * i], buf[7 + 2 * i]])).collect();
+    Ok((frame_seq, ids))
+}
+
+/// One control datagram: frame header (`flags`, datagram-CRC-guarded) +
+/// payload.
+fn control_datagram(flags: u8, src: u16, dst: u16, epoch: u16, payload: &[u8]) -> Vec<u8> {
+    let hdr = frame::FrameHeader {
+        flags,
+        src,
+        dst,
+        epoch,
+        seq: 0, // control traffic rides outside the data datagram counter
+        len: payload.len() as u32,
+        crc: frame::crc32(payload),
+    };
+    let mut out = Vec::with_capacity(frame::FRAME_HEADER_LEN + payload.len());
+    hdr.write(&mut out);
+    out.extend_from_slice(payload);
+    out
+}
+
+/// What the seeded wire decided to do with one outgoing datagram.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct FaultDecision {
+    drop: bool,
+    dup: bool,
+    /// Byte offset to flip, when corrupting.
+    corrupt: Option<usize>,
+    reorder: bool,
+}
+
+/// Deterministic seeded packet-level fault injector — the datagram
+/// analogue of [`crate::session::FaultInjector`], applied to every
+/// *outgoing* datagram of the endpoint it is attached to. Under one seed
+/// the drop/duplicate/corrupt/reorder program is a pure function of the
+/// send sequence, so chaos runs replay exactly.
+#[derive(Debug)]
+pub struct WireFault {
+    drop_rate: f64,
+    dup_rate: f64,
+    corrupt_rate: f64,
+    reorder_rate: f64,
+    rng: Mutex<Prng>,
+    /// At most one datagram held back for reordering; released after the
+    /// next send, or flushed by the engine after [`HOLDBACK_MAX_AGE`].
+    holdback: Mutex<Holdback>,
+}
+
+impl WireFault {
+    /// Independent per-datagram fault rates, each in `[0, 1)`.
+    pub fn new(seed: u64, drop: f64, dup: f64, corrupt: f64, reorder: f64) -> WireFault {
+        for (name, r) in [("drop", drop), ("dup", dup), ("corrupt", corrupt), ("reorder", reorder)]
+        {
+            assert!((0.0..1.0).contains(&r), "{name} rate {r} outside [0, 1)");
+        }
+        WireFault {
+            drop_rate: drop,
+            dup_rate: dup,
+            corrupt_rate: corrupt,
+            reorder_rate: reorder,
+            rng: Mutex::new(Prng::new(seed)),
+            holdback: Mutex::new(None),
+        }
+    }
+
+    /// The acceptance-criteria chaos program: `pct` rate for each of
+    /// drop, duplicate, corrupt, and reorder.
+    pub fn chaos(seed: u64, pct: f64) -> WireFault {
+        WireFault::new(seed, pct, pct, pct, pct)
+    }
+
+    /// Draw this datagram's fate from the seeded program.
+    fn decide(&self, len: usize) -> FaultDecision {
+        let mut rng = self.rng.lock().expect("wire-fault rng poisoned");
+        FaultDecision {
+            drop: rng.next_f64() < self.drop_rate,
+            dup: rng.next_f64() < self.dup_rate,
+            corrupt: (rng.next_f64() < self.corrupt_rate).then(|| rng.below(len.max(1))),
+            reorder: rng.next_f64() < self.reorder_rate,
+        }
+    }
+
+    /// Put `bytes` on the wire through the fault program.
+    fn transmit(&self, socket: &UdpSocket, addr: SocketAddr, bytes: &[u8]) -> std::io::Result<()> {
+        let d = self.decide(bytes.len());
+        if d.drop {
+            return Ok(()); // the wire ate it; NACK/probe recovery takes over
+        }
+        let corrupted;
+        let wire: &[u8] = match d.corrupt {
+            Some(i) => {
+                let mut owned = bytes.to_vec();
+                owned[i.min(owned.len().saturating_sub(1))] ^= 0x20;
+                corrupted = owned;
+                &corrupted
+            }
+            None => bytes,
+        };
+        if d.reorder {
+            // Hold this one back; anything already held goes out now, so
+            // at most one datagram is ever in the holdback slot.
+            let prev =
+                self.holdback.lock().expect("holdback poisoned").replace((
+                    addr,
+                    wire.to_vec(),
+                    Instant::now(),
+                ));
+            if let Some((a, b, _)) = prev {
+                socket.send_to(&b, a)?;
+            }
+            return Ok(());
+        }
+        socket.send_to(wire, addr)?;
+        if d.dup {
+            socket.send_to(wire, addr)?;
+        }
+        // The held-back datagram ships *after* this one: that is the swap.
+        let held = self.holdback.lock().expect("holdback poisoned").take();
+        if let Some((a, b, _)) = held {
+            socket.send_to(&b, a)?;
+        }
+        Ok(())
+    }
+
+    /// Flush a held-back datagram older than `max_age` (called from the
+    /// engine tick so a reorder on the last datagram of a burst cannot
+    /// stall recovery).
+    fn flush_stale(&self, socket: &UdpSocket, max_age: Duration) {
+        let held = {
+            let mut slot = self.holdback.lock().expect("holdback poisoned");
+            match &*slot {
+                Some((_, _, at)) if at.elapsed() >= max_age => slot.take(),
+                _ => None,
+            }
+        };
+        if let Some((a, b, _)) = held {
+            let _ = socket.send_to(&b, a);
+        }
+    }
+}
+
+/// One unacknowledged frame in the sender's retransmit window.
+struct WindowEntry {
+    frame_seq: u32,
+    /// The fully built datagrams of the first transmission, kept verbatim
+    /// so NACK-requested chunks are re-sent bit-identically.
+    datagrams: Arc<Vec<Vec<u8>>>,
+    wire_bytes: usize,
+    sent_at: Instant,
+    next_probe: Instant,
+    backoff: Backoff,
+    rounds: u32,
+}
+
+/// BBR-lite: pace at `gain × btlbw` where `btlbw` is a decaying max of
+/// delivered-bytes/RTT samples from ACKs; the RTO for sender probes is
+/// `4 × srtt`, clamped. (RTT samples from probed frames are inflated by
+/// the retransmit — acceptable for a pacer, noted in `DESIGN.md` §13.)
+struct Pacer {
+    rate: f64,
+    btlbw: f64,
+    srtt_s: f64,
+    next_free: Instant,
+}
+
+impl Pacer {
+    fn new() -> Pacer {
+        Pacer {
+            rate: PACE_INIT,
+            btlbw: PACE_INIT / PACE_GAIN,
+            srtt_s: 0.002,
+            next_free: Instant::now(),
+        }
+    }
+
+    /// Reserve a pacing slot for `bytes`; returns (delay before the slot,
+    /// current probe RTO).
+    fn reserve(&mut self, bytes: usize) -> (Duration, Duration) {
+        let now = Instant::now();
+        let start = self.next_free.max(now);
+        self.next_free = start + Duration::from_secs_f64(bytes as f64 / self.rate);
+        (start.saturating_duration_since(now), self.rto())
+    }
+
+    fn on_ack(&mut self, bytes: usize, rtt: Duration) {
+        let rtt_s = rtt.as_secs_f64().max(1e-6);
+        self.srtt_s = 0.875 * self.srtt_s + 0.125 * rtt_s;
+        let sample = bytes as f64 / rtt_s;
+        self.btlbw = (self.btlbw * PACE_DECAY).max(sample);
+        self.rate = (PACE_GAIN * self.btlbw).clamp(PACE_FLOOR, PACE_CEIL);
+    }
+
+    fn rto(&self) -> Duration {
+        Duration::from_secs_f64((4.0 * self.srtt_s).clamp(0.008, 0.25))
+    }
+}
+
+/// One logical frame mid-reassembly on the receiver.
+struct Reassembly {
+    chunk_count: u16,
+    frame_len: u32,
+    frame_crc: u32,
+    chunks: Vec<Option<Vec<u8>>>,
+    received: usize,
+    next_nack: Instant,
+    backoff: Backoff,
+    rounds: u32,
+}
+
+/// One rank's endpoint of a multi-process UDP mesh. See the module docs
+/// for the protocol; see [`UdpTransport::bootstrap_session`] to build one.
+pub struct UdpTransport {
+    rank: usize,
+    n: usize,
+    epoch: u16,
+    socket: Arc<UdpSocket>,
+    /// Peer data addresses from the rendezvous (None at the self index).
+    addrs: Vec<Option<SocketAddr>>,
+    inbox: Vec<Option<Inbox>>,
+    /// Per-dst logical frame counter (drives delivery order).
+    frame_seq: Vec<AtomicU32>,
+    /// Per-dst datagram counter (reorder diagnostics only).
+    dgram_seq: Vec<AtomicU32>,
+    windows: Windows,
+    pacer: Arc<Mutex<Pacer>>,
+    counters: Arc<TransportCounters>,
+    session: Option<Arc<SessionShared>>,
+    fault: Option<Arc<WireFault>>,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl UdpTransport {
+    /// Rendezvous + engine bootstrap, optionally under a session fabric
+    /// and a wire-fault program. The rendezvous control plane is the same
+    /// bounded TCP handshake the TCP backend runs (rank 0 is the root and
+    /// epoch authority) — only the advertised per-rank address is this
+    /// endpoint's UDP socket. Prefer [`crate::session::establish_udp`],
+    /// which maps failures to the typed `CommError::Rendezvous`.
+    pub fn bootstrap_session(
+        rank: usize,
+        n: usize,
+        root: &str,
+        root_listener: Option<TcpListener>,
+        bind: IpAddr,
+        config: &SessionConfig,
+        fault: Option<WireFault>,
+    ) -> Result<UdpTransport> {
+        ensure!(n >= 1, "world size must be at least 1");
+        ensure!(rank < n, "rank {rank} out of range for world size {n}");
+        ensure!(n <= u16::MAX as usize, "rank ids must fit the frame header");
+        ensure!(
+            !bind.is_unspecified(),
+            "--bind {bind} is unspecified: peers would be told to dial {bind}, which no \
+             host routes — bind a concrete interface IP instead"
+        );
+        let socket =
+            UdpSocket::bind((bind, 0)).with_context(|| format!("binding UDP socket on {bind}"))?;
+        let my_addr = socket.local_addr().context("UDP socket addr")?;
+
+        // Same rendezvous control plane as TCP, advertising the UDP addr.
+        // The socket is bound before the handshake completes, so datagrams
+        // from fast peers land in the kernel buffer until the engine runs.
+        let rdv = config.rendezvous_timeout;
+        let epoch = config.epoch;
+        let all_addrs = if rank == 0 {
+            let listener = match root_listener {
+                Some(l) => l,
+                None => TcpListener::bind(root)
+                    .with_context(|| format!("rank 0 binding rendezvous address {root}"))?,
+            };
+            tcp::rendezvous_root(&listener, n, my_addr, epoch, rdv)?
+        } else {
+            tcp::rendezvous_client(rank, n, root, my_addr, epoch, rdv)?
+        };
+
+        socket.set_read_timeout(Some(ENGINE_TICK)).context("setting engine tick")?;
+        let socket = Arc::new(socket);
+        let session = config.enabled().then(|| Arc::new(SessionShared::new(n, epoch)));
+        let counters = Arc::new(TransportCounters::default());
+        let windows: Windows = Arc::new((0..n).map(|_| Mutex::new(VecDeque::new())).collect());
+        let pacer = Arc::new(Mutex::new(Pacer::new()));
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let fault = fault.map(Arc::new);
+        let addrs: Vec<Option<SocketAddr>> =
+            all_addrs.iter().enumerate().map(|(i, a)| (i != rank).then_some(*a)).collect();
+
+        let mut inbox: Vec<Option<Inbox>> = (0..n).map(|_| None).collect();
+        let mut inbox_tx: Vec<InboxTx> = (0..n).map(|_| None).collect();
+        for peer in 0..n {
+            if peer == rank {
+                continue;
+            }
+            let (tx, rx) = channel();
+            inbox_tx[peer] = Some(tx);
+            inbox[peer] = Some(rx);
+        }
+
+        let engine = Engine {
+            rank,
+            n,
+            epoch,
+            socket: socket.clone(),
+            addrs: addrs.clone(),
+            inbox_tx,
+            windows: windows.clone(),
+            pacer: pacer.clone(),
+            counters: counters.clone(),
+            session: session.clone(),
+            deadline: config.deadline,
+            heartbeat: config.heartbeat,
+            fault: fault.clone(),
+            shutdown: shutdown.clone(),
+            reasm: (0..n).map(|_| HashMap::new()).collect(),
+            complete: (0..n).map(|_| BTreeMap::new()).collect(),
+            next_deliver: vec![0; n],
+            highest_seq: vec![None; n],
+            last_seen: vec![Instant::now(); n],
+            hb_seq: 0,
+            last_hb: Instant::now(),
+            last_scan: Instant::now(),
+        };
+        thread::Builder::new()
+            .name(format!("udp-rx-{rank}"))
+            .spawn(move || engine.run())
+            .context("spawning UDP engine thread")?;
+
+        Ok(UdpTransport {
+            rank,
+            n,
+            epoch,
+            socket,
+            addrs,
+            inbox,
+            frame_seq: (0..n).map(|_| AtomicU32::new(0)).collect(),
+            dgram_seq: (0..n).map(|_| AtomicU32::new(0)).collect(),
+            windows,
+            pacer,
+            counters,
+            session,
+            fault,
+            shutdown,
+        })
+    }
+
+    /// The session epoch this endpoint speaks (0 without a session).
+    pub fn epoch(&self) -> u16 {
+        self.epoch
+    }
+
+    /// The shared session state, when bootstrapped with one.
+    pub fn session_shared(&self) -> Option<&Arc<SessionShared>> {
+        self.session.as_ref()
+    }
+
+    /// One datagram through the fault program (if any) to `dst`.
+    fn wire_send(&self, dst: usize, bytes: &[u8]) -> Result<()> {
+        let addr = self.addrs[dst].expect("mesh invariant: peer address exists");
+        let res = match &self.fault {
+            Some(f) => f.transmit(&self.socket, addr, bytes),
+            None => self.socket.send_to(bytes, addr).map(|_| ()),
+        };
+        if let Err(e) = res {
+            // A send error (ICMP-refused port: the peer's socket is gone)
+            // is a death under a session, typed so survivors can react.
+            if let Some(s) = &self.session {
+                s.mark_lost(dst);
+                return Err(anyhow::Error::new(PeerLost { rank: dst, epoch: self.epoch })
+                    .context(format!("sending {} datagram bytes: {e}", bytes.len())));
+            }
+            return Err(anyhow!(e))
+                .with_context(|| format!("sending {} datagram bytes to rank {dst}", bytes.len()));
+        }
+        Ok(())
+    }
+}
+
+impl Drop for UdpTransport {
+    /// Stop the engine (it notices within one tick); in-flight state is
+    /// abandoned — peers recover via their own deadlines.
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        if let Some(s) = &self.session {
+            s.shutdown.store(true, Ordering::Relaxed);
+        }
+    }
+}
+
+impl Transport for UdpTransport {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn send(&self, dst: usize, payload: Vec<u8>) -> Result<()> {
+        ensure!(dst < self.n, "dst rank {dst} out of range (n = {})", self.n);
+        ensure!(dst != self.rank, "self-send is a local copy, not a transfer");
+        ensure!(
+            payload.len() <= CHUNK_BYTES * u16::MAX as usize,
+            "payload of {} bytes exceeds the UDP segmentation bound ({} chunks × {CHUNK_BYTES} B)",
+            payload.len(),
+            u16::MAX
+        );
+        if let Some(s) = &self.session {
+            if s.is_lost(dst) {
+                return Err(anyhow::Error::new(PeerLost { rank: dst, epoch: self.epoch }));
+            }
+        }
+        let frame_seq = self.frame_seq[dst].fetch_add(1, Ordering::Relaxed);
+        let count = chunk_count(payload.len());
+        let frame_len = payload.len() as u32;
+        let frame_crc = frame::crc32(&payload);
+        let mut datagrams = Vec::with_capacity(count);
+        for idx in 0..count {
+            let lo = idx * CHUNK_BYTES;
+            let hi = ((idx + 1) * CHUNK_BYTES).min(payload.len());
+            let chunk = &payload[lo..hi];
+            let mut body = Vec::with_capacity(SEG_HEADER_LEN + chunk.len());
+            SegHeader {
+                frame_seq,
+                chunk_index: idx as u16,
+                chunk_count: count as u16,
+                frame_len,
+                frame_crc,
+            }
+            .write(&mut body);
+            body.extend_from_slice(chunk);
+            let hdr = frame::FrameHeader {
+                flags: frame::FLAG_SEGMENT,
+                src: self.rank as u16,
+                dst: dst as u16,
+                epoch: self.epoch,
+                seq: self.dgram_seq[dst].fetch_add(1, Ordering::Relaxed),
+                len: body.len() as u32,
+                crc: frame::crc32(&body),
+            };
+            let mut dg = Vec::with_capacity(frame::FRAME_HEADER_LEN + body.len());
+            hdr.write(&mut dg);
+            dg.extend_from_slice(&body);
+            datagrams.push(dg);
+        }
+        let datagrams = Arc::new(datagrams);
+        let wire: usize = datagrams.iter().map(Vec::len).sum();
+
+        // Pace, then claim a window slot (bounded: the peer's engine ACKs
+        // independently of its recv calls, so waiting here cannot deadlock
+        // a live mesh — and a dead peer trips the session gate).
+        let (delay, rto) = self.pacer.lock().expect("pacer poisoned").reserve(wire);
+        if delay >= PACE_MIN_SLEEP {
+            self.counters.record_paced_stall();
+            thread::sleep(delay);
+        }
+        let admission_deadline = Instant::now() + WINDOW_FULL_TIMEOUT;
+        loop {
+            {
+                let mut w = self.windows[dst].lock().expect("window poisoned");
+                if w.len() < MAX_WINDOW_FRAMES {
+                    let now = Instant::now();
+                    let mut backoff = Backoff::new(rto, PROBE_CAP, u64::from(frame_seq) + 1);
+                    let first_probe = now + backoff.next_delay() * 2;
+                    w.push_back(WindowEntry {
+                        frame_seq,
+                        datagrams: datagrams.clone(),
+                        wire_bytes: wire,
+                        sent_at: now,
+                        next_probe: first_probe,
+                        backoff,
+                        rounds: 0,
+                    });
+                    break;
+                }
+            }
+            if let Some(s) = &self.session {
+                if s.is_lost(dst) {
+                    return Err(anyhow::Error::new(PeerLost { rank: dst, epoch: self.epoch }));
+                }
+            }
+            if Instant::now() >= admission_deadline {
+                bail!(
+                    "retransmit window to rank {dst} full ({MAX_WINDOW_FRAMES} frames) for \
+                     {WINDOW_FULL_TIMEOUT:?}: peer not acknowledging"
+                );
+            }
+            thread::sleep(Duration::from_micros(200));
+        }
+        for dg in datagrams.iter() {
+            self.wire_send(dst, dg)?;
+        }
+        // Forward redundancy: the tail ships twice up front, so the common
+        // single-packet tail loss heals without a NACK round-trip.
+        let tail = datagrams.last().expect("at least one chunk");
+        self.wire_send(dst, tail)?;
+        self.counters.record_redundancy_bytes(tail.len() as u64);
+        self.counters.record_extra_wire(tail.len());
+        self.counters.record_datagram_send(payload.len(), wire);
+        Ok(())
+    }
+
+    fn recv(&self, src: usize) -> Result<Vec<u8>> {
+        ensure!(src < self.n, "src rank {src} out of range (n = {})", self.n);
+        ensure!(src != self.rank, "self-recv is a local copy, not a transfer");
+        let rx = self.inbox[src].as_ref().expect("mesh invariant: peer inbox exists");
+        match rx.recv() {
+            Ok(result) => {
+                if let Ok(payload) = &result {
+                    self.counters.record_drained(payload.len());
+                }
+                result
+            }
+            Err(_) => match &self.session {
+                Some(s) if s.is_lost(src) => {
+                    Err(anyhow::Error::new(PeerLost { rank: src, epoch: self.epoch }))
+                }
+                _ => bail!("rank {src} disconnected"),
+            },
+        }
+    }
+
+    fn try_recv(&self, src: usize) -> Result<Option<Vec<u8>>> {
+        ensure!(src < self.n, "src rank {src} out of range (n = {})", self.n);
+        ensure!(src != self.rank, "self-recv is a local copy, not a transfer");
+        let rx = self.inbox[src].as_ref().expect("mesh invariant: peer inbox exists");
+        match rx.try_recv() {
+            Ok(result) => {
+                if let Ok(payload) = &result {
+                    self.counters.record_drained(payload.len());
+                }
+                result.map(Some)
+            }
+            Err(TryRecvError::Empty) => Ok(None),
+            Err(TryRecvError::Disconnected) => match &self.session {
+                Some(s) if s.is_lost(src) => {
+                    Err(anyhow::Error::new(PeerLost { rank: src, epoch: self.epoch }))
+                }
+                _ => bail!("rank {src} disconnected"),
+            },
+        }
+    }
+
+    fn stats(&self) -> TransportStats {
+        self.counters.snapshot()
+    }
+
+    fn session_stats(&self) -> Option<SessionStats> {
+        self.session.as_ref().map(|s| s.stats())
+    }
+}
+
+/// The per-endpoint engine thread: drains the socket (reassembly, NACK and
+/// ACK handling), and on every scan tick sends heartbeats, NACKs missing
+/// chunks, probes unacknowledged window entries, and enforces the session
+/// receive deadline. One thread per endpoint — not per peer — because a
+/// datagram socket is one demultiplexing point.
+struct Engine {
+    rank: usize,
+    n: usize,
+    epoch: u16,
+    socket: Arc<UdpSocket>,
+    addrs: Vec<Option<SocketAddr>>,
+    inbox_tx: Vec<InboxTx>,
+    windows: Windows,
+    pacer: Arc<Mutex<Pacer>>,
+    counters: Arc<TransportCounters>,
+    session: Option<Arc<SessionShared>>,
+    deadline: Option<Duration>,
+    heartbeat: Option<Duration>,
+    fault: Option<Arc<WireFault>>,
+    shutdown: Arc<AtomicBool>,
+    /// Per-src in-flight reassemblies, keyed by frame_seq.
+    reasm: Vec<HashMap<u32, Reassembly>>,
+    /// Per-src completed frames awaiting in-order delivery.
+    complete: Vec<BTreeMap<u32, Vec<u8>>>,
+    /// Per-src next frame_seq to deliver.
+    next_deliver: Vec<u32>,
+    /// Per-src highest data-datagram seq seen (reorder diagnostics).
+    highest_seq: Vec<Option<u32>>,
+    last_seen: Vec<Instant>,
+    hb_seq: u32,
+    last_hb: Instant,
+    last_scan: Instant,
+}
+
+impl Engine {
+    fn run(mut self) {
+        let mut buf = vec![0u8; RECV_BUF];
+        loop {
+            if self.shutdown.load(Ordering::Relaxed) {
+                return;
+            }
+            match self.socket.recv_from(&mut buf) {
+                Ok((len, _)) => self.handle(&buf[..len]),
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) => {}
+                // Transient (ICMP port-unreachable surfacing on a later
+                // call): peer death is the deadline's verdict, not ours.
+                Err(_) => {}
+            }
+            self.tick();
+        }
+    }
+
+    /// Fire-and-forget engine send (retransmits, control): errors are
+    /// deliberately swallowed — the receive deadline owns the loss verdict.
+    fn engine_send(&self, peer: usize, bytes: &[u8]) {
+        let Some(addr) = self.addrs[peer] else { return };
+        let _ = match &self.fault {
+            Some(f) => f.transmit(&self.socket, addr, bytes),
+            None => self.socket.send_to(bytes, addr).map(|_| ()),
+        };
+    }
+
+    fn handle(&mut self, buf: &[u8]) {
+        let Ok(hdr) = frame::FrameHeader::parse(buf) else {
+            self.counters.record_corrupt_drop();
+            return;
+        };
+        let body = &buf[frame::FRAME_HEADER_LEN..];
+        if hdr.check_payload(body).is_err() {
+            self.counters.record_corrupt_drop();
+            return;
+        }
+        if hdr.epoch != self.epoch {
+            self.counters.record_stale_epoch_drop();
+            return;
+        }
+        let src = hdr.src as usize;
+        if src >= self.n || src == self.rank || hdr.dst as usize != self.rank {
+            self.counters.record_corrupt_drop();
+            return;
+        }
+        if let Some(s) = &self.session {
+            if s.is_lost(src) {
+                return; // lost is sticky inside an epoch; ignore stragglers
+            }
+            s.mark_alive(src);
+        }
+        self.last_seen[src] = Instant::now();
+        match hdr.flags {
+            frame::FLAG_HEARTBEAT => {
+                if let Some(s) = &self.session {
+                    s.counters.heartbeats_received.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            frame::FLAG_SEGMENT => self.on_segment(src, hdr.seq, body),
+            frame::FLAG_NACK => self.on_nack(src, body),
+            frame::FLAG_ACK => self.on_ack(src, body),
+            _ => self.counters.record_corrupt_drop(),
+        }
+    }
+
+    /// One data chunk: dedup, reassemble, ACK + deliver on completion.
+    fn on_segment(&mut self, src: usize, dgram_seq: u32, body: &[u8]) {
+        let Ok(sub) = SegHeader::parse(body) else {
+            self.counters.record_corrupt_drop();
+            return;
+        };
+        let chunk = &body[SEG_HEADER_LEN..];
+        match self.highest_seq[src] {
+            Some(h) if dgram_seq < h => self.counters.record_reorder_event(),
+            Some(h) if dgram_seq > h => self.highest_seq[src] = Some(dgram_seq),
+            None => self.highest_seq[src] = Some(dgram_seq),
+            _ => {}
+        }
+        // Already delivered (or complete and queued): duplicate. Re-ACK so
+        // a sender whose ACK was lost still retires the window entry.
+        if sub.frame_seq < self.next_deliver[src] || self.complete[src].contains_key(&sub.frame_seq)
+        {
+            self.counters.record_duplicate_drop();
+            self.send_ack(src, sub.frame_seq);
+            return;
+        }
+        let count = sub.chunk_count as usize;
+        let entry = self.reasm[src].entry(sub.frame_seq).or_insert_with(|| {
+            let now = Instant::now();
+            let mut backoff =
+                Backoff::new(NACK_BASE, NACK_CAP, ((src as u64) << 32) | u64::from(sub.frame_seq));
+            // First NACK waits ~2 backoff steps: the rest of the burst is
+            // probably still in flight.
+            let first = now + backoff.next_delay() + NACK_BASE;
+            Reassembly {
+                chunk_count: sub.chunk_count,
+                frame_len: sub.frame_len,
+                frame_crc: sub.frame_crc,
+                chunks: (0..count).map(|_| None).collect(),
+                received: 0,
+                next_nack: first,
+                backoff,
+                rounds: 0,
+            }
+        });
+        // Sub-headers of one frame must agree with each other; a mismatch
+        // is a corrupt datagram that slipped past its CRC (or a sender
+        // bug) — drop it, recovery re-sends the real chunk.
+        let want = expected_chunk_len(sub.frame_len as usize, count, sub.chunk_index as usize);
+        if entry.chunk_count != sub.chunk_count
+            || entry.frame_len != sub.frame_len
+            || entry.frame_crc != sub.frame_crc
+            || chunk.len() != want
+        {
+            self.counters.record_corrupt_drop();
+            return;
+        }
+        let slot = &mut entry.chunks[sub.chunk_index as usize];
+        if slot.is_some() {
+            self.counters.record_duplicate_drop();
+            return;
+        }
+        *slot = Some(chunk.to_vec());
+        entry.received += 1;
+        if entry.received < count {
+            return;
+        }
+        // Complete: validate the reassembled frame against the sub-header's
+        // whole-frame length/CRC, then ACK and deliver in frame_seq order.
+        let entry = self.reasm[src].remove(&sub.frame_seq).expect("entry just touched");
+        let mut payload = Vec::with_capacity(entry.frame_len as usize);
+        for c in entry.chunks.iter() {
+            payload.extend_from_slice(c.as_ref().expect("all chunks received"));
+        }
+        if payload.len() != entry.frame_len as usize || frame::crc32(&payload) != entry.frame_crc {
+            // Sender probes will re-ship it; rebuild from scratch.
+            self.counters.record_corrupt_drop();
+            return;
+        }
+        self.send_ack(src, sub.frame_seq);
+        self.complete[src].insert(sub.frame_seq, payload);
+        while let Some(ready) = self.complete[src].remove(&self.next_deliver[src]) {
+            self.next_deliver[src] = self.next_deliver[src].wrapping_add(1);
+            self.counters.record_buffered(ready.len());
+            if let Some(tx) = &self.inbox_tx[src] {
+                let _ = tx.send(Ok(ready));
+            }
+        }
+    }
+
+    /// The peer asks for chunks of a frame we sent it.
+    fn on_nack(&mut self, src: usize, body: &[u8]) {
+        self.counters.record_nack_received();
+        let Ok((frame_seq, ids)) = parse_nack_payload(body) else {
+            self.counters.record_corrupt_drop();
+            return;
+        };
+        let to_send: Vec<Vec<u8>> = {
+            let mut w = self.windows[src].lock().expect("window poisoned");
+            let Some(entry) = w.iter_mut().find(|e| e.frame_seq == frame_seq) else {
+                return; // already ACKed or given up on — stale NACK
+            };
+            entry.next_probe = Instant::now() + entry.backoff.next_delay();
+            if ids.is_empty() {
+                entry.datagrams.iter().cloned().collect()
+            } else {
+                ids.iter()
+                    .filter_map(|&i| entry.datagrams.get(i as usize).cloned())
+                    .collect()
+            }
+        };
+        let bytes: usize = to_send.iter().map(Vec::len).sum();
+        self.counters.record_retransmitted_chunks(to_send.len() as u64);
+        self.counters.record_extra_wire(bytes);
+        for dg in &to_send {
+            self.engine_send(src, dg);
+        }
+    }
+
+    /// The peer fully received a frame: retire it, feed the pacer.
+    fn on_ack(&mut self, src: usize, body: &[u8]) {
+        if body.len() != 4 {
+            self.counters.record_corrupt_drop();
+            return;
+        }
+        let frame_seq = u32::from_le_bytes([body[0], body[1], body[2], body[3]]);
+        let retired = {
+            let mut w = self.windows[src].lock().expect("window poisoned");
+            w.iter()
+                .position(|e| e.frame_seq == frame_seq)
+                .map(|i| w.remove(i).expect("position just found"))
+        };
+        if let Some(entry) = retired {
+            let rtt = entry.sent_at.elapsed();
+            self.pacer.lock().expect("pacer poisoned").on_ack(entry.wire_bytes, rtt);
+        }
+    }
+
+    fn send_ack(&self, src: usize, frame_seq: u32) {
+        let dg = control_datagram(
+            frame::FLAG_ACK,
+            self.rank as u16,
+            src as u16,
+            self.epoch,
+            &frame_seq.to_le_bytes(),
+        );
+        self.counters.record_extra_wire(dg.len());
+        self.engine_send(src, &dg);
+    }
+
+    /// Periodic work: heartbeats, deadline enforcement, NACK rounds,
+    /// window probes, fault-holdback flush. Rate-limited to [`SCAN_PERIOD`].
+    fn tick(&mut self) {
+        let now = Instant::now();
+        if now.saturating_duration_since(self.last_scan) < SCAN_PERIOD {
+            return;
+        }
+        self.last_scan = now;
+        self.heartbeats(now);
+        self.deadline_scan(now);
+        self.nack_scan(now);
+        self.probe_scan(now);
+        if let Some(f) = &self.fault {
+            f.flush_stale(&self.socket, HOLDBACK_MAX_AGE);
+        }
+    }
+
+    fn heartbeats(&mut self, now: Instant) {
+        let (Some(session), Some(period)) = (&self.session, self.heartbeat) else { return };
+        if now.saturating_duration_since(self.last_hb) < period {
+            return;
+        }
+        self.last_hb = now;
+        let hb_seq = self.hb_seq;
+        self.hb_seq = self.hb_seq.wrapping_add(1);
+        for peer in 0..self.n {
+            if peer == self.rank || session.is_lost(peer) {
+                continue;
+            }
+            let hb = frame::encode_heartbeat(self.rank as u16, peer as u16, self.epoch, hb_seq);
+            self.counters.record_extra_wire(hb.len());
+            self.engine_send(peer, &hb);
+            session.counters.heartbeats_sent.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Enforce the session receive deadline: `Suspect` at half, `Lost` at
+    /// the deadline — surfaced typed through the inbox, with all pending
+    /// recovery state for that peer torn down (no busy NACK loop against
+    /// a corpse).
+    fn deadline_scan(&mut self, now: Instant) {
+        let (Some(session), Some(d)) = (&self.session, self.deadline) else { return };
+        for peer in 0..self.n {
+            if peer == self.rank || session.is_lost(peer) {
+                continue;
+            }
+            let quiet = now.saturating_duration_since(self.last_seen[peer]);
+            if quiet >= d {
+                if session.mark_lost(peer) {
+                    if let Some(tx) = &self.inbox_tx[peer] {
+                        let lost = PeerLost { rank: peer, epoch: self.epoch };
+                        let _ = tx.send(Err(anyhow::Error::new(lost)));
+                    }
+                    // Hang up the inbox: after the queued error drains,
+                    // further recvs see a disconnect and re-derive the
+                    // typed loss from the session instead of blocking.
+                    self.inbox_tx[peer] = None;
+                }
+                self.reasm[peer].clear();
+                self.complete[peer].clear();
+                self.windows[peer].lock().expect("window poisoned").clear();
+            } else if quiet >= d / 2 {
+                session.mark_suspect(peer);
+            }
+        }
+    }
+
+    /// Receiver-driven recovery: one NACK round per due incomplete frame,
+    /// listing only the missing chunk indices. Bounded rounds convert a
+    /// frame that never completes into an inbox error instead of an
+    /// infinite loop.
+    fn nack_scan(&mut self, now: Instant) {
+        let mut outbox: Vec<(usize, Vec<u8>)> = Vec::new();
+        for src in 0..self.n {
+            if src == self.rank {
+                continue;
+            }
+            if self.session.as_ref().is_some_and(|s| s.is_lost(src)) {
+                continue;
+            }
+            let mut dead: Vec<u32> = Vec::new();
+            for (&fseq, r) in self.reasm[src].iter_mut() {
+                if now < r.next_nack {
+                    continue;
+                }
+                if r.rounds >= MAX_NACK_ROUNDS {
+                    dead.push(fseq);
+                    continue;
+                }
+                let missing: Vec<u16> = r
+                    .chunks
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, c)| c.is_none())
+                    .map(|(i, _)| i as u16)
+                    .take(MAX_NACK_IDS)
+                    .collect();
+                let payload = encode_nack_payload(fseq, &missing);
+                outbox.push((
+                    src,
+                    control_datagram(
+                        frame::FLAG_NACK,
+                        self.rank as u16,
+                        src as u16,
+                        self.epoch,
+                        &payload,
+                    ),
+                ));
+                r.rounds += 1;
+                r.next_nack = now + r.backoff.next_delay();
+            }
+            for fseq in dead {
+                self.reasm[src].remove(&fseq);
+                if let Some(tx) = &self.inbox_tx[src] {
+                    let _ = tx.send(Err(anyhow!(
+                        "frame {fseq} from rank {src} unrecoverable after {MAX_NACK_ROUNDS} \
+                         NACK rounds"
+                    )));
+                }
+            }
+        }
+        for (src, dg) in outbox {
+            self.counters.record_nack_sent();
+            self.counters.record_extra_wire(dg.len());
+            self.engine_send(src, &dg);
+        }
+    }
+
+    /// Sender-side probe: re-send chunk 0 of frames unacknowledged past
+    /// their RTO — enough for the receiver to learn the frame exists (and
+    /// NACK precisely) even when the entire first transmission was lost.
+    fn probe_scan(&mut self, now: Instant) {
+        let mut outbox: Vec<(usize, Vec<u8>)> = Vec::new();
+        for dst in 0..self.n {
+            if dst == self.rank {
+                continue;
+            }
+            let mut w = self.windows[dst].lock().expect("window poisoned");
+            w.retain_mut(|e| {
+                if now < e.next_probe {
+                    return true;
+                }
+                if e.rounds >= MAX_PROBE_ROUNDS {
+                    return false; // give up; the receiver/deadline owns the rest
+                }
+                e.rounds += 1;
+                e.next_probe = now + e.backoff.next_delay();
+                outbox.push((dst, e.datagrams[0].clone()));
+                true
+            });
+        }
+        for (dst, dg) in outbox {
+            self.counters.record_retransmitted_chunks(1);
+            self.counters.record_extra_wire(dg.len());
+            self.engine_send(dst, &dg);
+        }
+    }
+}
+
+/// Bootstrap a complete `n`-rank UDP mesh inside this process (one thread
+/// per rank) over an ephemeral loopback rendezvous. The UDP analogue of
+/// [`super::tcp::local_mesh`].
+pub fn local_mesh(n: usize) -> Result<Vec<UdpTransport>> {
+    local_mesh_inner(n, &SessionConfig::disabled(), |_| None)
+}
+
+/// [`local_mesh`] with a session fabric (heartbeats, deadlines, epochs).
+pub fn local_mesh_with(n: usize, config: &SessionConfig) -> Result<Vec<UdpTransport>> {
+    local_mesh_inner(n, config, |_| None)
+}
+
+/// [`local_mesh_with`] under a seeded chaos program: every endpoint's
+/// outgoing datagrams run through [`WireFault::chaos`]`(seed + rank, pct)`.
+pub fn local_mesh_faulty(
+    n: usize,
+    config: &SessionConfig,
+    seed: u64,
+    pct: f64,
+) -> Result<Vec<UdpTransport>> {
+    local_mesh_inner(n, config, |rank| Some(WireFault::chaos(seed.wrapping_add(rank as u64), pct)))
+}
+
+fn local_mesh_inner(
+    n: usize,
+    config: &SessionConfig,
+    fault: impl Fn(usize) -> Option<WireFault>,
+) -> Result<Vec<UdpTransport>> {
+    let listener = TcpListener::bind(("127.0.0.1", 0)).context("binding rendezvous listener")?;
+    let root = listener.local_addr().context("rendezvous addr")?.to_string();
+    let mut root_listener = Some(listener);
+    let mut faults: Vec<Option<WireFault>> = (0..n).map(&fault).collect();
+    let results: Vec<Result<UdpTransport>> = thread::scope(|scope| {
+        let joins: Vec<_> = (0..n)
+            .map(|rank| {
+                let root = root.clone();
+                let l = if rank == 0 { root_listener.take() } else { None };
+                let f = faults[rank].take();
+                scope.spawn(move || {
+                    UdpTransport::bootstrap_session(rank, n, &root, l, tcp::DEFAULT_BIND, config, f)
+                })
+            })
+            .collect();
+        joins.into_iter().map(|j| j.join().expect("bootstrap thread panicked")).collect()
+    });
+    results.into_iter().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::session::find_peer_lost;
+
+    #[test]
+    fn seg_header_roundtrip_and_bounds() {
+        let h = SegHeader {
+            frame_seq: 7,
+            chunk_index: 3,
+            chunk_count: 9,
+            frame_len: 10_000,
+            frame_crc: 0xDEAD_BEEF,
+        };
+        let mut buf = Vec::new();
+        h.write(&mut buf);
+        assert_eq!(buf.len(), SEG_HEADER_LEN);
+        assert_eq!(SegHeader::parse(&buf).unwrap(), h);
+        assert!(SegHeader::parse(&buf[..SEG_HEADER_LEN - 1]).is_err(), "truncated");
+        let mut oob = buf.clone();
+        oob[4..6].copy_from_slice(&9u16.to_le_bytes()); // index == count
+        assert!(SegHeader::parse(&oob).is_err(), "chunk index out of range");
+        let mut zero = buf;
+        zero[6..8].copy_from_slice(&0u16.to_le_bytes());
+        assert!(SegHeader::parse(&zero).is_err(), "zero chunks");
+    }
+
+    #[test]
+    fn nack_payload_roundtrip() {
+        let (fseq, ids) = parse_nack_payload(&encode_nack_payload(42, &[0, 5, 17])).unwrap();
+        assert_eq!((fseq, ids), (42, vec![0, 5, 17]));
+        let (fseq, ids) = parse_nack_payload(&encode_nack_payload(7, &[])).unwrap();
+        assert_eq!((fseq, ids), (7, vec![]), "empty list = resend everything");
+        assert!(parse_nack_payload(&[1, 2, 3]).is_err(), "truncated");
+        let mut lying = encode_nack_payload(1, &[2, 3]);
+        lying.truncate(8); // claims 2 ids, carries 1
+        assert!(parse_nack_payload(&lying).is_err());
+    }
+
+    #[test]
+    fn chunk_math_covers_the_edges() {
+        assert_eq!(chunk_count(0), 1, "empty payload is one empty chunk");
+        assert_eq!(chunk_count(1), 1);
+        assert_eq!(chunk_count(CHUNK_BYTES), 1);
+        assert_eq!(chunk_count(CHUNK_BYTES + 1), 2);
+        assert_eq!(expected_chunk_len(0, 1, 0), 0);
+        assert_eq!(expected_chunk_len(CHUNK_BYTES + 1, 2, 0), CHUNK_BYTES);
+        assert_eq!(expected_chunk_len(CHUNK_BYTES + 1, 2, 1), 1);
+        assert_eq!(expected_chunk_len(3 * CHUNK_BYTES, 3, 2), CHUNK_BYTES);
+    }
+
+    #[test]
+    fn wire_fault_program_is_deterministic_under_a_seed() {
+        let a = WireFault::chaos(99, 0.05);
+        let b = WireFault::chaos(99, 0.05);
+        let da: Vec<FaultDecision> = (0..500).map(|_| a.decide(1244)).collect();
+        let db: Vec<FaultDecision> = (0..500).map(|_| b.decide(1244)).collect();
+        assert_eq!(da, db, "same seed, same program");
+        let c = WireFault::chaos(100, 0.05);
+        let dc: Vec<FaultDecision> = (0..500).map(|_| c.decide(1244)).collect();
+        assert_ne!(da, dc, "different seed, different program");
+        // ~5% per fault over 500 draws: expect some of each, far from all.
+        let drops = da.iter().filter(|d| d.drop).count();
+        assert!(drops > 0 && drops < 100, "drop count {drops} looks wrong for 5%");
+        let clean = WireFault::chaos(7, 0.0);
+        assert!((0..100).all(|_| clean.decide(100) == FaultDecision {
+            drop: false,
+            dup: false,
+            corrupt: None,
+            reorder: false
+        }));
+    }
+
+    #[test]
+    fn local_mesh_pairwise_exchange() {
+        let mut endpoints = local_mesh(4).unwrap();
+        let results: Vec<Vec<u8>> = thread::scope(|scope| {
+            let joins: Vec<_> = endpoints
+                .drain(..)
+                .map(|t| {
+                    scope.spawn(move || {
+                        for d in 0..t.n() {
+                            if d != t.rank() {
+                                t.send(d, vec![t.rank() as u8; 3]).unwrap();
+                            }
+                        }
+                        (0..t.n())
+                            .filter(|&s| s != t.rank())
+                            .map(|s| t.recv(s).unwrap()[0])
+                            .collect::<Vec<u8>>()
+                    })
+                })
+                .collect();
+            joins.into_iter().map(|j| j.join().unwrap()).collect()
+        });
+        assert_eq!(results[0], vec![1, 2, 3]);
+        assert_eq!(results[3], vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn multi_chunk_frames_reassemble_in_order() {
+        // Payloads spanning several chunks, sent back to back: delivery
+        // must be whole-frame, in-order, bit-identical.
+        let mut endpoints = local_mesh(2).unwrap();
+        let t1 = endpoints.pop().unwrap();
+        let t0 = endpoints.pop().unwrap();
+        let payloads: Vec<Vec<u8>> = (0..20u8)
+            .map(|i| (0..3 * CHUNK_BYTES + i as usize).map(|j| (j as u8).wrapping_add(i)).collect())
+            .collect();
+        let sender = {
+            let ps = payloads.clone();
+            thread::spawn(move || {
+                for p in ps {
+                    t0.send(1, p).unwrap();
+                }
+                t0
+            })
+        };
+        for p in &payloads {
+            assert_eq!(&t1.recv(0).unwrap(), p);
+        }
+        let t0 = sender.join().unwrap();
+        assert_eq!(t0.stats().messages, 20);
+        assert!(t0.stats().redundancy_bytes > 0, "tail redundancy always ships");
+    }
+
+    #[test]
+    fn empty_payload_roundtrips() {
+        let mut endpoints = local_mesh(2).unwrap();
+        let t1 = endpoints.pop().unwrap();
+        let t0 = endpoints.pop().unwrap();
+        let j = thread::spawn(move || {
+            t0.send(1, Vec::new()).unwrap();
+            t0
+        });
+        assert!(t1.recv(0).unwrap().is_empty());
+        j.join().unwrap();
+    }
+
+    #[test]
+    fn chaos_wire_delivers_bit_identical_in_order() {
+        // 5% drop + dup + corrupt + reorder on every outgoing datagram of
+        // both endpoints: every frame still arrives exactly once, intact,
+        // in order — and the robustness counters show the machinery fired.
+        let mut endpoints =
+            local_mesh_faulty(2, &SessionConfig::disabled(), 0xC0FFEE, 0.05).unwrap();
+        let t1 = endpoints.pop().unwrap();
+        let t0 = endpoints.pop().unwrap();
+        let payloads: Vec<Vec<u8>> = (0..60u32)
+            .map(|i| {
+                let mut rng = Prng::new(1000 + i as u64);
+                (0..2500 + (i as usize % 3) * CHUNK_BYTES)
+                    .map(|_| rng.next_u64() as u8)
+                    .collect()
+            })
+            .collect();
+        let sender = {
+            let ps = payloads.clone();
+            thread::spawn(move || {
+                for p in ps {
+                    t0.send(1, p).unwrap();
+                }
+                t0
+            })
+        };
+        for p in &payloads {
+            assert_eq!(&t1.recv(0).unwrap(), p, "bit-identical in-order delivery under chaos");
+        }
+        let t0 = sender.join().unwrap();
+        let tx = t0.stats();
+        let rx = t1.stats();
+        assert!(
+            tx.retransmitted_chunks > 0,
+            "5% loss over {} chunks must trigger retransmits: {tx:?}",
+            60 * 4
+        );
+        assert!(rx.corrupt_drops > 0, "injected corruption must be dropped at parse: {rx:?}");
+        assert!(rx.duplicate_drops > 0, "dups and redundancy must be deduped: {rx:?}");
+        assert!(rx.nacks_sent > 0 || tx.nacks_received > 0, "receiver-driven NACKs: {rx:?}");
+    }
+
+    #[test]
+    fn silent_peer_surfaces_typed_peer_lost_within_twice_the_deadline() {
+        let config = SessionConfig::from_millis(20, 250).unwrap();
+        let mut endpoints = local_mesh_with(2, &config).unwrap();
+        let t1 = endpoints.pop().unwrap();
+        let t0 = endpoints.pop().unwrap();
+        drop(t0); // engine stops: true datagram silence, no FIN to lean on
+        let t_start = Instant::now();
+        let err = t1.recv(0).unwrap_err();
+        let lost = find_peer_lost(&err).expect("typed PeerLost, not a string error");
+        assert_eq!(lost.rank, 0);
+        assert!(
+            t_start.elapsed() < 2 * Duration::from_millis(250),
+            "PeerLost within 2x the comm deadline, got {:?}",
+            t_start.elapsed()
+        );
+        assert_eq!(t1.session_stats().unwrap().losses, 1);
+        // Sticky and fast afterwards: no busy NACK loop against a corpse.
+        let again_start = Instant::now();
+        let again = t1.recv(0).unwrap_err();
+        assert_eq!(find_peer_lost(&again).unwrap().rank, 0);
+        assert!(again_start.elapsed() < Duration::from_millis(100), "loss is cached");
+        let send_err = t1.send(0, vec![1]).unwrap_err();
+        assert_eq!(find_peer_lost(&send_err).unwrap().rank, 0);
+    }
+
+    #[test]
+    fn heartbeats_keep_an_idle_mesh_healthy() {
+        use crate::session::PeerState;
+        let config = SessionConfig::from_millis(20, 400).unwrap();
+        let mut endpoints = local_mesh_with(2, &config).unwrap();
+        let t1 = endpoints.pop().unwrap();
+        let t0 = endpoints.pop().unwrap();
+        thread::sleep(Duration::from_millis(150));
+        for t in [&t0, &t1] {
+            let stats = t.session_stats().unwrap();
+            assert!(stats.heartbeats_sent > 0, "{stats:?}");
+            assert!(stats.heartbeats_received > 0, "{stats:?}");
+            assert_eq!(stats.losses, 0, "{stats:?}");
+            let peer = 1 - t.rank();
+            assert_eq!(t.session_shared().unwrap().state(peer), PeerState::Healthy);
+        }
+        let j = thread::spawn(move || {
+            t0.send(1, vec![42]).unwrap();
+            t0
+        });
+        assert_eq!(t1.recv(0).unwrap(), vec![42]);
+        j.join().unwrap();
+    }
+
+    #[test]
+    fn stale_epoch_datagrams_dropped_at_parse() {
+        // A datagram stamped with a different epoch must be counted and
+        // ignored, not delivered and not an error.
+        let mut endpoints = local_mesh(2).unwrap();
+        let t1 = endpoints.pop().unwrap();
+        let t0 = endpoints.pop().unwrap();
+        // Forge a segment datagram from rank 0 under epoch 7 (session is 0).
+        let mut body = Vec::new();
+        SegHeader {
+            frame_seq: 0,
+            chunk_index: 0,
+            chunk_count: 1,
+            frame_len: 3,
+            frame_crc: frame::crc32(b"abc"),
+        }
+        .write(&mut body);
+        body.extend_from_slice(b"abc");
+        let hdr = frame::FrameHeader {
+            flags: frame::FLAG_SEGMENT,
+            src: 0,
+            dst: 1,
+            epoch: 7,
+            seq: 0,
+            len: body.len() as u32,
+            crc: frame::crc32(&body),
+        };
+        let mut dg = hdr.to_bytes().to_vec();
+        dg.extend_from_slice(&body);
+        t0.socket.send_to(&dg, t0.addrs[1].unwrap()).unwrap();
+        // Give the engine a moment, then check: nothing delivered, drop counted.
+        thread::sleep(Duration::from_millis(50));
+        assert!(t1.try_recv(0).unwrap().is_none());
+        assert_eq!(t1.stats().stale_epoch_drops, 1);
+        // The link still works for the real epoch.
+        let j = thread::spawn(move || {
+            t0.send(1, vec![9]).unwrap();
+            t0
+        });
+        assert_eq!(t1.recv(0).unwrap(), vec![9]);
+        j.join().unwrap();
+    }
+
+    #[test]
+    fn oversized_payload_rejected_up_front() {
+        let mut endpoints = local_mesh(2).unwrap();
+        let t0 = endpoints.remove(0);
+        let e = t0.send(1, vec![0; CHUNK_BYTES * (u16::MAX as usize) + 1]).unwrap_err();
+        assert!(e.to_string().contains("segmentation bound"), "{e}");
+    }
+}

@@ -1,0 +1,133 @@
+//! Capped jittered-exponential backoff, deterministic under a seed.
+//!
+//! One retry policy shared by every layer that polls a peer that may not
+//! be ready yet: TCP's rendezvous/mesh `connect_retry`, and the UDP
+//! transport's NACK and probe-retransmit timers. The schedule is classic
+//! equal-jitter exponential backoff: attempt `k` waits
+//!
+//! ```text
+//! delay(k) = min(cap, base * 2^k) * (0.5 + 0.5 * u)      u ~ U[0, 1)
+//! ```
+//!
+//! so consecutive retries from many ranks decorrelate (no thundering herd
+//! against the rendezvous root, no synchronized NACK storms after a burst
+//! loss) while the expected wait still doubles until it hits `cap`. The
+//! jitter stream comes from [`Prng`], so a seeded `Backoff` replays the
+//! exact same delay sequence — tests and the wire-fault harness stay
+//! deterministic.
+
+use std::time::Duration;
+
+use super::Prng;
+
+/// A jittered-exponential retry schedule. Construct once per retried
+/// operation; call [`next_delay`](Backoff::next_delay) before each retry
+/// and [`reset`](Backoff::reset) after a success.
+#[derive(Debug)]
+pub struct Backoff {
+    base: Duration,
+    cap: Duration,
+    attempt: u32,
+    rng: Prng,
+}
+
+impl Backoff {
+    /// `base` is the un-jittered first delay, `cap` bounds the exponential
+    /// growth, `seed` fixes the jitter stream.
+    pub fn new(base: Duration, cap: Duration, seed: u64) -> Self {
+        assert!(base > Duration::ZERO, "backoff base must be positive");
+        assert!(cap >= base, "backoff cap must be >= base");
+        Self { base, cap, attempt: 0, rng: Prng::new(seed) }
+    }
+
+    /// The delay to sleep before the next retry. Advances the attempt
+    /// counter: successive calls grow `base, 2*base, 4*base, ...` (each
+    /// equal-jittered into `[d/2, d)`) until the un-jittered value hits
+    /// `cap`.
+    pub fn next_delay(&mut self) -> Duration {
+        // Saturating shift: past attempt 63 the doubling has long been
+        // clamped by `cap` anyway.
+        let factor = 1u64.checked_shl(self.attempt.min(63)).unwrap_or(u64::MAX);
+        let raw = self.base.saturating_mul(factor.min(u32::MAX as u64) as u32).min(self.cap);
+        self.attempt = self.attempt.saturating_add(1);
+        let jitter = 0.5 + 0.5 * self.rng.next_f64();
+        Duration::from_secs_f64(raw.as_secs_f64() * jitter)
+    }
+
+    /// How many delays have been handed out since construction/reset.
+    pub fn attempts(&self) -> u32 {
+        self.attempt
+    }
+
+    /// Start the schedule over (after a success). The jitter stream keeps
+    /// advancing — only the exponential clock rewinds.
+    pub fn reset(&mut self) {
+        self.attempt = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ms(v: u64) -> Duration {
+        Duration::from_millis(v)
+    }
+
+    #[test]
+    fn delays_grow_exponentially_within_jitter_bounds() {
+        let mut b = Backoff::new(ms(10), ms(10_000), 42);
+        for k in 0..6u32 {
+            let expect = ms(10 * (1 << k));
+            let d = b.next_delay();
+            assert!(d >= expect / 2, "attempt {k}: {d:?} below half of {expect:?}");
+            assert!(d < expect, "attempt {k}: {d:?} not below un-jittered {expect:?}");
+        }
+        assert_eq!(b.attempts(), 6);
+    }
+
+    #[test]
+    fn cap_bounds_growth() {
+        let mut b = Backoff::new(ms(10), ms(50), 7);
+        for _ in 0..20 {
+            assert!(b.next_delay() < ms(50), "jittered delay must stay under cap");
+        }
+        // Deep into the schedule the un-jittered delay is pinned at cap,
+        // so the jittered value stays in [cap/2, cap).
+        let d = b.next_delay();
+        assert!(d >= ms(25));
+    }
+
+    #[test]
+    fn seeded_schedules_replay_exactly() {
+        let mut a = Backoff::new(ms(5), ms(1000), 99);
+        let mut b = Backoff::new(ms(5), ms(1000), 99);
+        for _ in 0..10 {
+            assert_eq!(a.next_delay(), b.next_delay());
+        }
+        let mut c = Backoff::new(ms(5), ms(1000), 100);
+        let differs = (0..10).any(|_| a.next_delay() != c.next_delay());
+        assert!(differs, "different seeds should jitter differently");
+    }
+
+    #[test]
+    fn reset_rewinds_the_exponential_clock() {
+        let mut b = Backoff::new(ms(10), ms(10_000), 3);
+        for _ in 0..5 {
+            b.next_delay();
+        }
+        b.reset();
+        assert_eq!(b.attempts(), 0);
+        let d = b.next_delay();
+        assert!(d >= ms(5) && d < ms(10), "post-reset delay is back at base: {d:?}");
+    }
+
+    #[test]
+    fn huge_attempt_counts_do_not_overflow() {
+        let mut b = Backoff::new(ms(1), Duration::from_secs(2), 1);
+        for _ in 0..200 {
+            let d = b.next_delay();
+            assert!(d <= Duration::from_secs(2));
+        }
+    }
+}

@@ -2,11 +2,13 @@
 //! a minimal property-testing harness. Everything here is dependency-free
 //! (the offline vendor set only carries the `xla` closure).
 
+pub mod backoff;
 pub mod bf16;
 pub mod prng;
 pub mod proptest;
 pub mod stats;
 pub mod timer;
 
+pub use backoff::Backoff;
 pub use bf16::Bf16;
 pub use prng::Prng;

@@ -5,15 +5,15 @@
 //! so the kill matrix is exact and repeatable (the real-wire equivalents
 //! live in the CI worker drills: `--kill-rank` and `--rejoin-rank`).
 
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use flashcomm::comm::{fabric, Algo, AlgoPolicy, CommError, Communicator};
 use flashcomm::plan;
 use flashcomm::quant::Codec;
 use flashcomm::session::fault::{wrap_mesh, Fault};
-use flashcomm::session::{survivor_topology, PeerState};
+use flashcomm::session::{find_peer_lost, survivor_topology, PeerState, SessionConfig};
 use flashcomm::topo::{presets, Topology};
-use flashcomm::transport::inproc;
+use flashcomm::transport::{inproc, udp, Transport};
 use flashcomm::util::Prng;
 
 fn inputs(n: usize, len: usize, salt: u64) -> Vec<Vec<f32>> {
@@ -121,6 +121,101 @@ fn kill_matrix_every_rank_x_every_stage_surfaces_typed_peer_lost() {
             }
         }
     }
+}
+
+/// The PR 7 kill matrix over real UDP datagram endpoints: the injector is
+/// transport-generic, so killing each rank at each stage of the
+/// hierarchical schedule must surface the same typed
+/// [`CommError::PeerLost`] it does over InProc — the datagram recovery
+/// machinery (NACKs, probes, redundancy) may never convert a death into a
+/// hang or a wrong-peer blame.
+#[test]
+fn udp_kill_matrix_every_rank_x_every_stage_surfaces_typed_peer_lost() {
+    let topo = Topology::try_with_groups(presets::l40(), 4, 2).unwrap();
+    let codec = Codec::parse("int4@32").unwrap();
+    let ins = inputs(4, 2048, 800);
+    let ins = &ins;
+    for victim in 0..4usize {
+        for nth in [0usize, 1, 2] {
+            let faults: Vec<Fault> = (0..4)
+                .map(|r| if r == victim { Fault::KillAtSend { nth } } else { Fault::None })
+                .collect();
+            let endpoints =
+                wrap_mesh(udp::local_mesh(4).unwrap(), faults, Duration::from_secs(30));
+            let (results, _) = fabric::run_ranks_with(endpoints, &topo, |h| {
+                let rank = h.rank;
+                let mut c = Communicator::from_handle(h);
+                let mut d = ins[rank].clone();
+                let res = c.allreduce(&mut d, &codec, hier()).and_then(|_| {
+                    let mut d2 = ins[rank].clone();
+                    c.allreduce(&mut d2, &codec, hier()).map(|_| ())
+                });
+                let health = c.transport().health();
+                (rank, res, health)
+            });
+            for (rank, res, health) in results {
+                let err = res.expect_err(&format!(
+                    "rank {rank} completed both collectives although rank {victim} died \
+                     at send {nth} (udp)"
+                ));
+                match err {
+                    CommError::PeerLost { rank: lost, epoch } => {
+                        assert_eq!(
+                            (lost, epoch),
+                            (victim, 0),
+                            "rank {rank} (victim {victim}, send {nth}, udp) blamed the \
+                             wrong peer"
+                        );
+                    }
+                    other => panic!(
+                        "rank {rank} (victim {victim}, send {nth}, udp): expected a typed \
+                         PeerLost, got: {other}"
+                    ),
+                }
+                assert_eq!(health[victim], PeerState::Lost, "rank {rank} (udp)");
+            }
+        }
+    }
+}
+
+/// The real-silence half of the matrix, on real sockets: a peer that
+/// simply stops emitting datagrams (endpoint dropped — no FIN, no RST,
+/// nothing for the survivor to react to except absence) must surface a
+/// typed [`PeerLost`] within twice the session deadline on every
+/// survivor, stay sticky, and must not leave the engine busy-NACKing a
+/// corpse.
+#[test]
+fn udp_silent_peer_past_deadline_yields_typed_peer_lost_on_every_survivor() {
+    let deadline = Duration::from_millis(250);
+    let config = SessionConfig::from_millis(25, 250).unwrap();
+    let mut endpoints = udp::local_mesh_with(3, &config).unwrap();
+    let t2 = endpoints.pop().unwrap();
+    let t1 = endpoints.pop().unwrap();
+    let t0 = endpoints.pop().unwrap();
+    // Rank 2 goes silent: its engine (heartbeats included) stops cold.
+    drop(t2);
+    for (survivor, t) in [(0usize, &t0), (1usize, &t1)] {
+        let start = Instant::now();
+        let err = t.recv(2).unwrap_err();
+        let lost = find_peer_lost(&err)
+            .unwrap_or_else(|| panic!("survivor {survivor}: expected typed PeerLost, got {err}"));
+        assert_eq!((lost.rank, lost.epoch), (2, 0), "survivor {survivor}");
+        assert!(
+            start.elapsed() < 2 * deadline,
+            "survivor {survivor}: loss took {:?}, deadline is {deadline:?}",
+            start.elapsed()
+        );
+        assert_eq!(t.session_stats().unwrap().losses, 1, "survivor {survivor}");
+    }
+    // The surviving link still works, and the loss verdict is sticky.
+    t0.send(1, vec![11, 22]).unwrap();
+    assert_eq!(t1.recv(0).unwrap(), vec![11, 22]);
+    assert!(find_peer_lost(&t0.send(2, vec![1]).unwrap_err()).is_some(), "sticky on send");
+    // No busy NACK loop against the corpse: recovery state for rank 2 was
+    // torn down at the loss, so the NACK counter stays flat afterwards.
+    let nacks_then = t0.stats().nacks_sent;
+    std::thread::sleep(Duration::from_millis(120));
+    assert_eq!(t0.stats().nacks_sent, nacks_then, "NACKs must stop once the peer is lost");
 }
 
 /// Degraded-membership continuation, end to end: 6 ranks in 2 groups run

@@ -1,12 +1,15 @@
 //! Transport-subsystem integration tests: the framed wire protocol through
 //! its public API, and backend equivalence — the same quantized collective
 //! must produce bit-identical results whether ranks are threads over mpsc
-//! channels (InProc) or endpoints of a real TCP mesh.
+//! channels (InProc), endpoints of a real TCP mesh, or endpoints of a UDP
+//! datagram mesh (including one running under an injected 5% wire-fault
+//! program: drop + duplicate + corrupt + reorder).
 
 use flashcomm::comm::{fabric, Algo, AlgoPolicy, Communicator};
 use flashcomm::quant::Codec;
+use flashcomm::session::SessionConfig;
 use flashcomm::topo::{presets, Topology};
-use flashcomm::transport::{frame, inproc, tcp, Transport};
+use flashcomm::transport::{frame, inproc, tcp, udp, Transport};
 use flashcomm::util::Prng;
 
 // ---------------------------------------------------------------- frame --
@@ -14,16 +17,16 @@ use flashcomm::util::Prng;
 #[test]
 fn frame_roundtrip() {
     let payload: Vec<u8> = (0..=255).collect();
-    let framed = frame::encode(2, 7, 99, &payload);
+    let framed = frame::encode(2, 7, 3, 99, &payload);
     assert_eq!(framed.len(), frame::FRAME_HEADER_LEN + payload.len());
     let (hdr, got) = frame::decode(framed).unwrap();
-    assert_eq!((hdr.src, hdr.dst, hdr.seq, hdr.len), (2, 7, 99, 256));
+    assert_eq!((hdr.src, hdr.dst, hdr.epoch, hdr.seq, hdr.len), (2, 7, 3, 99, 256));
     assert_eq!(got, payload);
 }
 
 #[test]
 fn frame_truncation_rejected() {
-    let framed = frame::encode(0, 1, 0, b"some quantized bytes");
+    let framed = frame::encode(0, 1, 0, 0, b"some quantized bytes");
     for cut in 0..framed.len() {
         assert!(frame::decode(framed[..cut].to_vec()).is_err(), "cut {cut}");
     }
@@ -31,7 +34,7 @@ fn frame_truncation_rejected() {
 
 #[test]
 fn frame_bad_crc_rejected() {
-    let mut framed = frame::encode(0, 1, 0, b"some quantized bytes");
+    let mut framed = frame::encode(0, 1, 0, 0, b"some quantized bytes");
     let last = framed.len() - 1;
     framed[last] ^= 0x10;
     let err = frame::decode(framed).unwrap_err();
@@ -40,7 +43,7 @@ fn frame_bad_crc_rejected() {
 
 #[test]
 fn frame_version_mismatch_rejected() {
-    let mut framed = frame::encode(0, 1, 0, b"some quantized bytes");
+    let mut framed = frame::encode(0, 1, 0, 0, b"some quantized bytes");
     framed[4] = frame::FRAME_VERSION + 1;
     let err = frame::decode(framed).unwrap_err();
     assert!(err.to_string().contains("version"), "{err}");
@@ -181,4 +184,108 @@ fn transport_stats_visible_through_rank_handle() {
     assert_eq!(stats[0].wire_bytes, 50 + frame::FRAME_HEADER_LEN as u64);
     assert_eq!(stats[1].messages, 0);
     assert_eq!(counters.total_bytes(), 50);
+}
+
+// ------------------------------------------------------------ udp matrix --
+
+#[test]
+fn udp_and_inproc_bit_identical_across_every_algo_and_codec() {
+    // A clean (fault-free) UDP mesh: every algorithm × the acceptance
+    // codecs must match InProc bit-for-bit, with identical payload-level
+    // traffic (segmentation/redundancy live below the payload counters).
+    let n = 4;
+    let flat = Topology::new(presets::h800(), n);
+    let grouped = Topology::new(presets::l40(), n);
+    let data = inputs(n, 3000);
+    for algo in [Algo::Ring, Algo::TwoStep, Algo::Hier, Algo::HierPipelined] {
+        let topo = match algo {
+            Algo::Hier | Algo::HierPipelined => &grouped,
+            _ => &flat,
+        };
+        for spec in ["bf16", "int4@32", "int2-sr@32!"] {
+            let codec = Codec::parse(spec).unwrap();
+            let d = &data;
+            let (ip, ip_counters) =
+                fabric::run_ranks(topo, |h| allreduce_rank(h, d, &codec, algo));
+            let (ud, ud_counters) =
+                fabric::run_ranks_with(udp::local_mesh(n).unwrap(), topo, |h| {
+                    allreduce_rank(h, d, &codec, algo)
+                });
+            for r in 0..n {
+                assert_eq!(
+                    bits(&ip[r]),
+                    bits(&ud[r]),
+                    "{algo:?}/{spec}: rank {r} diverges across backends"
+                );
+            }
+            assert_eq!(
+                ip_counters.snapshot(),
+                ud_counters.snapshot(),
+                "{algo:?}/{spec}: payload traffic differs"
+            );
+        }
+    }
+}
+
+#[test]
+fn udp_under_5pct_chaos_bit_identical_to_inproc() {
+    // The acceptance drill: 5% drop + duplicate + corrupt + reorder on
+    // every endpoint's outgoing datagrams. NACK reassembly, the probe
+    // retransmit path, and tail redundancy must deliver every frame
+    // exactly once and intact — the collective stays bit-identical to
+    // InProc for every algorithm × codec.
+    let n = 4;
+    let flat = Topology::new(presets::h800(), n);
+    let grouped = Topology::new(presets::l40(), n);
+    let data = inputs(n, 3000);
+    for algo in [Algo::Ring, Algo::TwoStep, Algo::Hier, Algo::HierPipelined] {
+        let topo = match algo {
+            Algo::Hier | Algo::HierPipelined => &grouped,
+            _ => &flat,
+        };
+        for (i, spec) in ["bf16", "int4@32", "int2-sr@32!"].iter().enumerate() {
+            let codec = Codec::parse(spec).unwrap();
+            let d = &data;
+            let seed = 0xFC_0205 + i as u64; // deterministic per-cell chaos
+            let (ip, _) = fabric::run_ranks(topo, |h| allreduce_rank(h, d, &codec, algo));
+            let mesh =
+                udp::local_mesh_faulty(n, &SessionConfig::disabled(), seed, 0.05).unwrap();
+            let (ud, _) =
+                fabric::run_ranks_with(mesh, topo, |h| allreduce_rank(h, d, &codec, algo));
+            for r in 0..n {
+                assert_eq!(
+                    bits(&ip[r]),
+                    bits(&ud[r]),
+                    "{algo:?}/{spec}: rank {r} diverges under 5% wire chaos"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn udp_chaos_run_reports_recovery_in_transport_stats() {
+    // The robustness counters must show the machinery actually fired
+    // during a chaos collective: retransmits or NACKs on some endpoint,
+    // redundancy bytes everywhere, and the payload accounting intact.
+    let n = 4;
+    let topo = Topology::new(presets::h800(), n);
+    let data = inputs(n, 4096);
+    let codec = Codec::parse("int4@32").unwrap();
+    let d = &data;
+    let mesh = udp::local_mesh_faulty(n, &SessionConfig::disabled(), 77, 0.05).unwrap();
+    let (stats, _) = fabric::run_ranks_with(mesh, &topo, |h| {
+        allreduce_rank(h, d, &codec, Algo::TwoStep);
+        h.transport().stats()
+    });
+    let total_retx: u64 = stats.iter().map(|s| s.retransmitted_chunks).sum();
+    let total_nacks: u64 = stats.iter().map(|s| s.nacks_sent).sum();
+    assert!(
+        total_retx + total_nacks > 0,
+        "5% chaos must exercise the recovery path: {stats:?}"
+    );
+    for (r, s) in stats.iter().enumerate() {
+        assert!(s.redundancy_bytes > 0, "rank {r}: tail redundancy always ships: {s:?}");
+        assert!(s.payload_bytes > 0 && s.messages > 0, "rank {r}: {s:?}");
+    }
 }
