@@ -1,0 +1,66 @@
+//! Standalone flashlint driver.
+//!
+//! ```text
+//! flashlint [--root DIR] [--json]
+//! ```
+//!
+//! Lints the crate rooted at `--root` (default `.`, must contain `src/`)
+//! with the five repo-native rules (DESIGN.md §14). Exits 0 when clean,
+//! 1 on findings, 2 on usage/IO errors. `--json` swaps the human listing
+//! for the machine-readable report CI uploads as an artifact.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use flashcomm::lint;
+
+const USAGE: &str = "\
+flashlint — repo-native static analysis (wire, panic, lock, unsafe, obs)
+
+usage: flashlint [--root DIR] [--json]
+  --root DIR   crate root holding src/ (default .)
+  --json       machine-readable report on stdout
+";
+
+fn main() -> ExitCode {
+    let mut root = PathBuf::from(".");
+    let mut json = false;
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--root" => match args.next() {
+                Some(v) => root = PathBuf::from(v),
+                None => {
+                    eprintln!("flashlint: --root needs a value");
+                    return ExitCode::from(2);
+                }
+            },
+            "--json" => json = true,
+            "--help" | "-h" => {
+                print!("{USAGE}");
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("flashlint: unknown argument '{other}'");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    let report = match lint::run(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("flashlint: {e:#}");
+            return ExitCode::from(2);
+        }
+    };
+    if json {
+        print!("{}", report.to_json());
+    } else {
+        print!("{}", report.render_text());
+    }
+    if report.findings.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

@@ -828,12 +828,14 @@ impl LocalGroup {
                     })
                 })
                 .collect();
+            // lint: allow(panic, "a panicked rank thread is a programming error; propagate it")
             joins.into_iter().map(|j| j.join().expect("rank panicked")).collect()
         });
         let mut algo = None;
         for r in results {
             algo = Some(r?);
         }
+        // lint: allow(panic, "Topology starts at 2 GPUs, so the loop above ran at least twice")
         Ok(algo.expect("group has at least 2 ranks"))
     }
 

@@ -259,6 +259,7 @@ where
             let f = &f;
             joins.push(scope.spawn(move || f(h)));
         }
+        // lint: allow(panic, "harness: a panicked rank must fail the whole run loudly")
         joins.into_iter().map(|j| j.join().expect("rank panicked")).collect::<Vec<R>>()
     });
     (results, counters)

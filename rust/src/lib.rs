@@ -34,6 +34,10 @@
 //!   the metrics registry (one snapshot/export path for spans, byte
 //!   counters, and plan-cache statistics), and the trace→profile
 //!   distillation behind profile-guided plan recalibration.
+//! - [`lint`] — flashlint, the repo-native static-analysis pass: five
+//!   rules (wire-constant drift, panic paths, lock discipline, unsafe
+//!   audit, observability completeness) over comment/string-aware lexed
+//!   source; `flashcomm lint` gates CI (DESIGN.md §14).
 //! - [`runtime`] — PJRT CPU client wrapper loading AOT HLO artifacts.
 //! - [`model`] — weights/tokenizer/corpus/checkpoint handling.
 //! - [`coordinator`] — TP inference engine, DP trainer, EP dispatcher, TTFT
@@ -46,6 +50,7 @@ pub mod cli;
 pub mod comm;
 pub mod coordinator;
 pub mod harness;
+pub mod lint;
 pub mod model;
 pub mod plan;
 pub mod quant;

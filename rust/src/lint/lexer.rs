@@ -1,0 +1,361 @@
+//! Comment/string-aware source lexing for the flashlint rules.
+//!
+//! Rules never look at raw source. Each line is pre-chewed into three
+//! views — `code` (comments stripped, string contents kept), `blanked`
+//! (comments stripped, string/char contents blanked to spaces), and
+//! `comment` (the comment text alone) — so a forbidden token inside a
+//! doc comment or a log message can never fire a rule, and an allow
+//! directive inside a string can never suppress one. A brace tracker
+//! marks `#[cfg(test)]` / `mod tests` regions so test code is exempt
+//! from the production-only rules.
+
+/// One source line, pre-chewed for the rules.
+pub struct LexLine {
+    /// The line as written (diagnostics only).
+    pub raw: String,
+    /// Comments stripped (replaced by a space); string contents kept.
+    pub code: String,
+    /// Comments stripped; string/char-literal contents blanked to spaces
+    /// (the delimiting quotes survive, so columns stay aligned with
+    /// `code` for the simple scans the rules do).
+    pub blanked: String,
+    /// Concatenated comment text on the line, without `//` / `/* */`.
+    pub comment: String,
+    /// True when the line sits inside a `#[cfg(test)]` or `mod tests`
+    /// block (the opening line itself is not marked; everything after
+    /// its `{` is).
+    pub in_test: bool,
+}
+
+#[derive(Clone, Copy)]
+enum State {
+    Normal,
+    /// `//` comment; dies at end of line.
+    Line,
+    /// `/* */` comment at a nesting depth.
+    Block(u32),
+    /// `"…"` string literal (escapes honored).
+    Str,
+    /// `r#"…"#` raw string with N hashes.
+    RawStr(u8),
+    /// `'…'` char literal.
+    CharLit,
+}
+
+/// Lex a whole source file into per-line views.
+pub fn lex(src: &str) -> Vec<LexLine> {
+    let mut out = Vec::new();
+    let mut state = State::Normal;
+    for raw in src.lines() {
+        if matches!(state, State::Line) {
+            state = State::Normal;
+        }
+        let chars: Vec<char> = raw.chars().collect();
+        let mut code = String::new();
+        let mut blanked = String::new();
+        let mut comment = String::new();
+        let mut i = 0;
+        while i < chars.len() {
+            let c = chars[i];
+            let raw_start = if c == 'r' { raw_str_hashes(&chars, i) } else { None };
+            match state {
+                State::Normal => {
+                    if c == '/' && chars.get(i + 1) == Some(&'/') {
+                        state = State::Line;
+                        code.push(' ');
+                        blanked.push(' ');
+                        i += 2;
+                    } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                        state = State::Block(1);
+                        code.push(' ');
+                        blanked.push(' ');
+                        i += 2;
+                    } else if c == '"' {
+                        state = State::Str;
+                        code.push('"');
+                        blanked.push('"');
+                        i += 1;
+                    } else if let Some(hashes) = raw_start {
+                        code.push('r');
+                        blanked.push('r');
+                        for _ in 0..hashes {
+                            code.push('#');
+                            blanked.push('#');
+                        }
+                        code.push('"');
+                        blanked.push('"');
+                        state = State::RawStr(hashes);
+                        i += 2 + hashes as usize;
+                    } else if c == '\'' && is_char_literal(&chars, i) {
+                        state = State::CharLit;
+                        code.push('\'');
+                        blanked.push('\'');
+                        i += 1;
+                    } else {
+                        code.push(c);
+                        blanked.push(c);
+                        i += 1;
+                    }
+                }
+                State::Line => {
+                    comment.push(c);
+                    i += 1;
+                }
+                State::Block(depth) => {
+                    if c == '*' && chars.get(i + 1) == Some(&'/') {
+                        state = if depth <= 1 { State::Normal } else { State::Block(depth - 1) };
+                        i += 2;
+                    } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                        state = State::Block(depth + 1);
+                        i += 2;
+                    } else {
+                        comment.push(c);
+                        i += 1;
+                    }
+                }
+                State::Str => {
+                    if c == '\\' {
+                        code.push(c);
+                        blanked.push(' ');
+                        if let Some(&e) = chars.get(i + 1) {
+                            code.push(e);
+                            blanked.push(' ');
+                            i += 2;
+                        } else {
+                            i += 1;
+                        }
+                    } else if c == '"' {
+                        code.push('"');
+                        blanked.push('"');
+                        state = State::Normal;
+                        i += 1;
+                    } else {
+                        code.push(c);
+                        blanked.push(' ');
+                        i += 1;
+                    }
+                }
+                State::RawStr(hashes) => {
+                    if c == '"' && raw_str_closes(&chars, i, hashes) {
+                        code.push('"');
+                        blanked.push('"');
+                        for _ in 0..hashes {
+                            code.push('#');
+                            blanked.push('#');
+                        }
+                        state = State::Normal;
+                        i += 1 + hashes as usize;
+                    } else {
+                        code.push(c);
+                        blanked.push(' ');
+                        i += 1;
+                    }
+                }
+                State::CharLit => {
+                    if c == '\\' {
+                        code.push(c);
+                        blanked.push(' ');
+                        if let Some(&e) = chars.get(i + 1) {
+                            code.push(e);
+                            blanked.push(' ');
+                            i += 2;
+                        } else {
+                            i += 1;
+                        }
+                    } else if c == '\'' {
+                        code.push('\'');
+                        blanked.push('\'');
+                        state = State::Normal;
+                        i += 1;
+                    } else {
+                        code.push(c);
+                        blanked.push(' ');
+                        i += 1;
+                    }
+                }
+            }
+        }
+        out.push(LexLine { raw: raw.to_string(), code, blanked, comment, in_test: false });
+    }
+    mark_test_regions(&mut out);
+    out
+}
+
+/// `r` at `i` starts a raw string (`r"…"` / `r#"…"#`)? Returns the hash
+/// count. The preceding char must not be an identifier char (so `for r`
+/// or `hdr"` never false-trigger) — except `b`, for `br"…"` byte strings.
+fn raw_str_hashes(chars: &[char], i: usize) -> Option<u8> {
+    if i > 0 {
+        let p = chars[i - 1];
+        if (p.is_ascii_alphanumeric() || p == '_') && p != 'b' {
+            return None;
+        }
+    }
+    let mut hashes = 0u8;
+    let mut j = i + 1;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    (chars.get(j) == Some(&'"')).then_some(hashes)
+}
+
+/// A closing `"` of a raw string must be followed by exactly its hashes.
+fn raw_str_closes(chars: &[char], i: usize, hashes: u8) -> bool {
+    (1..=hashes as usize).all(|k| chars.get(i + k) == Some(&'#'))
+}
+
+/// `'` at `i`: char literal or lifetime? After a quote, `\` or a
+/// char-then-quote means a literal; anything else (`'a>`, `'static`) is
+/// a lifetime and stays plain code.
+fn is_char_literal(chars: &[char], i: usize) -> bool {
+    match chars.get(i + 1) {
+        Some('\\') => true,
+        Some(_) => chars.get(i + 2) == Some(&'\''),
+        None => false,
+    }
+}
+
+/// Mark lines inside `#[cfg(test)]` / `mod tests` blocks. A pending
+/// marker attaches to the next `{` (recording its depth); a `;` first
+/// means the attribute named a non-block item and the marker dies.
+fn mark_test_regions(lines: &mut [LexLine]) {
+    let mut depth: i64 = 0;
+    let mut pending = false;
+    let mut stack: Vec<i64> = Vec::new();
+    for line in lines.iter_mut() {
+        line.in_test = !stack.is_empty();
+        if line.code.contains("#[cfg(test)]") || has_mod_tests(&line.code) {
+            pending = true;
+        }
+        for c in line.code.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    if pending {
+                        stack.push(depth);
+                        pending = false;
+                    }
+                }
+                '}' => {
+                    if stack.last() == Some(&depth) {
+                        stack.pop();
+                    }
+                    depth -= 1;
+                }
+                ';' => pending = false,
+                _ => {}
+            }
+        }
+    }
+}
+
+/// `mod tests` as whole tokens (not e.g. `mod tests_util`).
+fn has_mod_tests(code: &str) -> bool {
+    let pat = "mod tests";
+    let mut from = 0;
+    while let Some(p) = code[from..].find(pat) {
+        let at = from + p;
+        let before_ok = at == 0 || !is_ident_char(code.as_bytes()[at - 1] as char);
+        let after = at + pat.len();
+        let after_ok = after >= code.len() || !is_ident_char(code.as_bytes()[after] as char);
+        if before_ok && after_ok {
+            return true;
+        }
+        from = at + pat.len();
+    }
+    false
+}
+
+/// Identifier-ish char (for token-boundary checks).
+pub fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Does `haystack` contain `word` as a whole token?
+pub fn has_word(haystack: &str, word: &str) -> bool {
+    find_word(haystack, word).is_some()
+}
+
+/// Byte offset of the first whole-token occurrence of `word`.
+pub fn find_word(haystack: &str, word: &str) -> Option<usize> {
+    let bytes = haystack.as_bytes();
+    let mut from = 0;
+    while let Some(p) = haystack[from..].find(word) {
+        let at = from + p;
+        let before_ok = at == 0 || !is_ident_char(bytes[at - 1] as char);
+        let end = at + word.len();
+        let after_ok = end >= bytes.len() || !is_ident_char(bytes[end] as char);
+        if before_ok && after_ok {
+            return Some(at);
+        }
+        from = at + word.len();
+    }
+    None
+}
+
+/// A two-sided literal slice range found in a line: `[<lo>..<hi>]`.
+pub struct LiteralRange {
+    pub lo: u64,
+    pub hi: u64,
+    /// Is the `[` preceded by an identifier char or `)` — i.e. is this
+    /// an indexing expression rather than an array/range literal?
+    pub indexed: bool,
+}
+
+/// Scan `blanked` text for `[<digits>..<digits>]` occurrences.
+pub fn literal_ranges(blanked: &str) -> Vec<LiteralRange> {
+    let chars: Vec<char> = blanked.chars().collect();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < chars.len() {
+        if chars[i] == '[' {
+            if let Some((lo, hi, end)) = parse_range(&chars, i + 1) {
+                let indexed = i > 0 && (is_ident_char(chars[i - 1]) || chars[i - 1] == ')');
+                out.push(LiteralRange { lo, hi, indexed });
+                i = end;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+fn parse_range(chars: &[char], i: usize) -> Option<(u64, u64, usize)> {
+    let (lo, j) = parse_num(chars, i)?;
+    if chars.get(j) != Some(&'.') || chars.get(j + 1) != Some(&'.') {
+        return None;
+    }
+    let (hi, k) = parse_num(chars, j + 2)?;
+    if chars.get(k) != Some(&']') {
+        return None;
+    }
+    Some((lo, hi, k + 1))
+}
+
+fn parse_num(chars: &[char], start: usize) -> Option<(u64, usize)> {
+    let mut i = start;
+    while i < chars.len() && chars[i].is_ascii_digit() {
+        i += 1;
+    }
+    if i == start {
+        return None;
+    }
+    chars[start..i].iter().collect::<String>().parse().ok().map(|v| (v, i))
+}
+
+/// Does the line contain a literal index expression `ident[<digits>]`?
+pub fn has_literal_index(blanked: &str) -> bool {
+    let chars: Vec<char> = blanked.chars().collect();
+    for i in 1..chars.len() {
+        if chars[i] == '[' && is_ident_char(chars[i - 1]) {
+            if let Some((_, j)) = parse_num(&chars, i + 1) {
+                if chars.get(j) == Some(&']') {
+                    return true;
+                }
+            }
+        }
+    }
+    false
+}

@@ -1,0 +1,242 @@
+//! R3 — lock discipline.
+//!
+//! A blocking call (socket I/O, channel recv, thread join, sleep) while a
+//! mutex/rwlock guard is live stalls every other thread contending for
+//! that lock — the exact failure mode behind a heartbeat ticker queueing
+//! behind a slow peer's writer. This rule tracks guard *bindings* (`let g
+//! = x.lock()…;` where the rest of the statement is only benign adapters,
+//! so the guard outlives the statement) through brace depth and
+//! `drop(g)`, and flags any blocking call made while one is live.
+//!
+//! The analysis is deliberately conservative in the *miss* direction:
+//! method-chained temporaries (`x.lock().unwrap().push(..)`) die at the
+//! end of their statement and are not tracked; a guard bound inside a
+//! single-line block body is not tracked; mpsc `send` never blocks and is
+//! not in the blocking set. Deliberate holds carry
+//! `// lint: allow(lock, "<why>")`.
+
+use super::lexer::{is_ident_char, LexLine};
+use super::{Finding, Rule};
+
+/// Blocking calls that must not run under a live guard. Dotted patterns
+/// anchor on `.`; bare ones just need a non-identifier char before them
+/// (so `thread::sleep(` counts but `reconnect(` does not).
+const DOTTED: [&str; 8] = [
+    ".write_all(",
+    ".read_exact(",
+    ".read_line(",
+    ".recv_timeout(",
+    ".recv(",
+    ".join()",
+    ".accept(",
+    ".wait(",
+];
+const BARE: [&str; 3] = ["send_to(", "connect(", "sleep("];
+
+const LOCK_CALLS: [&str; 4] = [".lock()", ".try_lock()", ".read()", ".write()"];
+
+fn in_scope(path: &str) -> bool {
+    ["transport/", "session/", "comm/"].iter().any(|p| path.starts_with(p))
+}
+
+struct Guard {
+    name: String,
+    /// The guard is live while brace depth >= this.
+    depth: i64,
+    /// Line (1-based) where it was bound, for the diagnostic.
+    bound_at: usize,
+}
+
+pub fn check(path: &str, lines: &[LexLine], out: &mut Vec<Finding>) {
+    if !in_scope(path) {
+        return;
+    }
+    let mut depth: i64 = 0;
+    let mut guards: Vec<Guard> = Vec::new();
+    let mut stmt: Vec<usize> = Vec::new();
+    for (i, line) in lines.iter().enumerate() {
+        stmt.push(i);
+        let t = line.blanked.trim_end();
+        if !(t.ends_with(';') || t.ends_with('{') || t.ends_with('}')) {
+            continue;
+        }
+        process_stmt(path, lines, &stmt, &mut depth, &mut guards, out);
+        stmt.clear();
+    }
+    if !stmt.is_empty() {
+        process_stmt(path, lines, &stmt, &mut depth, &mut guards, out);
+    }
+}
+
+fn process_stmt(
+    path: &str,
+    lines: &[LexLine],
+    stmt: &[usize],
+    depth: &mut i64,
+    guards: &mut Vec<Guard>,
+    out: &mut Vec<Finding>,
+) {
+    let in_test = stmt.first().map(|&i| lines[i].in_test).unwrap_or(false);
+    let joined: String =
+        stmt.iter().map(|&i| lines[i].blanked.as_str()).collect::<Vec<_>>().join(" ");
+
+    // 1) Blocking calls while a guard is live (line-accurate).
+    if !in_test && !guards.is_empty() {
+        for &i in stmt {
+            if let Some(tok) = blocking_token(&lines[i].blanked) {
+                let held: Vec<&str> = guards.iter().map(|g| g.name.as_str()).collect();
+                let msg = format!(
+                    "blocking `{}` while lock guard `{}` (bound line {}) is live; \
+                     drop or scope the guard first",
+                    tok.trim_end_matches('('),
+                    held.join("`, `"),
+                    guards.iter().map(|g| g.bound_at.to_string()).collect::<Vec<_>>().join(", "),
+                );
+                out.push(Finding::new(Rule::Lock, path, i + 1, msg));
+            }
+        }
+    }
+
+    // 2) An explicit drop(g) retires the guard mid-scope.
+    guards.retain(|g| !joined.contains(&format!("drop({})", g.name)));
+
+    // 3) Does this statement bind a new guard?
+    let new_guard = if in_test { None } else { guard_binding(&joined) };
+
+    // 4) Brace depth; guards die when their scope closes.
+    for c in joined.chars() {
+        match c {
+            '{' => *depth += 1,
+            '}' => {
+                *depth -= 1;
+                guards.retain(|g| g.depth <= *depth);
+            }
+            _ => {}
+        }
+    }
+    if let Some(name) = new_guard {
+        let bound_at = stmt.first().map(|&i| i + 1).unwrap_or(0);
+        guards.push(Guard { name, depth: *depth, bound_at });
+    }
+}
+
+/// First blocking token on the line.
+fn blocking_token(blanked: &str) -> Option<&'static str> {
+    for pat in DOTTED {
+        if blanked.contains(pat) {
+            return Some(pat);
+        }
+    }
+    let bytes = blanked.as_bytes();
+    for pat in BARE {
+        let mut from = 0;
+        while let Some(p) = blanked[from..].find(pat) {
+            let at = from + p;
+            if at == 0 || !is_ident_char(bytes[at - 1] as char) {
+                return Some(pat);
+            }
+            from = at + pat.len();
+        }
+    }
+    None
+}
+
+/// `let <binding> = <expr>.lock()<benign suffix>` — a guard that outlives
+/// its statement. Returns the bound name.
+fn guard_binding(joined: &str) -> Option<String> {
+    let let_pos = find_let(joined)?;
+    for pat in LOCK_CALLS {
+        let mut from = let_pos;
+        while let Some(p) = joined[from..].find(pat) {
+            let at = from + p;
+            if benign_suffix(&joined[at + pat.len()..]) {
+                return extract_name(&joined[let_pos + 4..]);
+            }
+            from = at + pat.len();
+        }
+    }
+    None
+}
+
+/// Byte offset of the first `let ` token.
+fn find_let(s: &str) -> Option<usize> {
+    let bytes = s.as_bytes();
+    let mut from = 0;
+    while let Some(p) = s[from..].find("let ") {
+        let at = from + p;
+        if at == 0 || !is_ident_char(bytes[at - 1] as char) {
+            return Some(at);
+        }
+        from = at + 4;
+    }
+    None
+}
+
+/// After the lock call, only error-adapters and statement/block plumbing
+/// may follow — anything else (`.pop_front()`, `.push(..)`) means the
+/// guard is a method-chain temporary that dies with the statement.
+fn benign_suffix(mut s: &str) -> bool {
+    loop {
+        s = s.trim_start();
+        if s.is_empty() {
+            return true;
+        }
+        if let Some(r) = s.strip_prefix(".unwrap()") {
+            s = r;
+        } else if let Some(r) = strip_call(s, ".expect(") {
+            s = r;
+        } else if let Some(r) = strip_call(s, ".unwrap_or_else(") {
+            s = r;
+        } else if let Some(r) = strip_call(s, ".map_err(") {
+            s = r;
+        } else if let Some(r) = s.strip_prefix('?') {
+            s = r;
+        } else if let Some(r) = s.strip_prefix(';') {
+            s = r;
+        } else if let Some(r) = s.strip_prefix('{') {
+            s = r;
+        } else if let Some(r) = s.strip_prefix("else") {
+            s = r;
+        } else {
+            return false;
+        }
+    }
+}
+
+/// Strip `pat` (which ends in `(`) plus its balanced argument list.
+fn strip_call<'a>(s: &'a str, pat: &str) -> Option<&'a str> {
+    let rest = s.strip_prefix(pat)?;
+    let mut depth = 1;
+    for (i, c) in rest.char_indices() {
+        match c {
+            '(' => depth += 1,
+            ')' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(&rest[i + 1..]);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// The bound name after `let `, seeing through `mut` and the common
+/// destructuring wrappers (`Ok(..)`, `Some(..)`).
+fn extract_name(s: &str) -> Option<String> {
+    let mut t = s.trim_start();
+    loop {
+        if let Some(r) = t.strip_prefix("mut ") {
+            t = r.trim_start();
+        } else if let Some(r) = t.strip_prefix("Ok(") {
+            t = r.trim_start();
+        } else if let Some(r) = t.strip_prefix("Some(") {
+            t = r.trim_start();
+        } else {
+            break;
+        }
+    }
+    let name: String = t.chars().take_while(|&c| is_ident_char(c)).collect();
+    (!name.is_empty() && name != "_").then_some(name)
+}

@@ -1,0 +1,262 @@
+//! flashlint — repo-native static analysis for the invariants the type
+//! system can't see.
+//!
+//! Five rules, each over comment/string-aware lexed source (never raw
+//! text), each skipping `#[cfg(test)]` / `mod tests` code:
+//!
+//! | rule     | invariant |
+//! |----------|-----------|
+//! | `wire`   | frame magic/flags/offsets spelled only in `transport/frame.rs` |
+//! | `panic`  | no panic paths in transport/session/comm/quant/plan |
+//! | `lock`   | no blocking call while a lock guard is live |
+//! | `unsafe` | every `unsafe` block carries a `SAFETY:` comment |
+//! | `obs`    | every transport/session counter reaches the telemetry export |
+//!
+//! A justified exception is written at the site, on the offending line or
+//! the comment-only line directly above it:
+//!
+//! ```text
+//! // lint: allow(<rule>, "<why>")
+//! ```
+//!
+//! The reason string is mandatory — a directive without one is malformed
+//! and suppresses nothing. Run as `flashcomm lint` or the standalone
+//! `flashlint` binary; both exit non-zero on findings. DESIGN.md §14 has
+//! the rule catalogue and the how-to-add-a-rule recipe.
+
+pub mod lexer;
+mod lock;
+mod obs;
+mod panic;
+mod unsafety;
+mod wire;
+
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{ensure, Context, Result};
+
+use lexer::LexLine;
+
+/// The rule a finding belongs to.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Rule {
+    Wire,
+    Panic,
+    Lock,
+    Unsafe,
+    Obs,
+}
+
+impl Rule {
+    pub const ALL: [Rule; 5] = [Rule::Wire, Rule::Panic, Rule::Lock, Rule::Unsafe, Rule::Obs];
+
+    /// The key used in allow directives and the JSON report.
+    pub fn key(self) -> &'static str {
+        match self {
+            Rule::Wire => "wire",
+            Rule::Panic => "panic",
+            Rule::Lock => "lock",
+            Rule::Unsafe => "unsafe",
+            Rule::Obs => "obs",
+        }
+    }
+}
+
+impl fmt::Display for Rule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.key())
+    }
+}
+
+/// One lint violation at a source line.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub rule: Rule,
+    /// Path relative to `src/`, unix separators.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub message: String,
+}
+
+impl Finding {
+    fn new(rule: Rule, file: &str, line: usize, message: impl Into<String>) -> Finding {
+        Finding { rule, file: file.to_string(), line, message: message.into() }
+    }
+}
+
+/// A full run's results.
+pub struct Report {
+    pub findings: Vec<Finding>,
+    /// Number of source files scanned.
+    pub files: usize,
+}
+
+impl Report {
+    pub fn count(&self, rule: Rule) -> usize {
+        self.findings.iter().filter(|f| f.rule == rule).count()
+    }
+
+    /// Human-readable listing, one finding per line, then a summary.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            out.push_str(&format!("src/{}:{}: [{}] {}\n", f.file, f.line, f.rule, f.message));
+        }
+        if self.findings.is_empty() {
+            out.push_str(&format!(
+                "flashlint: clean ({} rules over {} files)\n",
+                Rule::ALL.len(),
+                self.files
+            ));
+        } else {
+            out.push_str(&format!("flashlint: {} finding(s)\n", self.findings.len()));
+        }
+        out
+    }
+
+    /// Machine-readable report (the CI artifact).
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("{\n  \"findings\": [");
+        for (i, f) in self.findings.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!(
+                "\n    {{\"rule\": \"{}\", \"file\": \"{}\", \"line\": {}, \"message\": \"{}\"}}",
+                f.rule,
+                json_escape(&f.file),
+                f.line,
+                json_escape(&f.message)
+            ));
+        }
+        if !self.findings.is_empty() {
+            s.push_str("\n  ");
+        }
+        s.push_str("],\n  \"counts\": {");
+        for (i, r) in Rule::ALL.iter().enumerate() {
+            if i > 0 {
+                s.push_str(", ");
+            }
+            s.push_str(&format!("\"{}\": {}", r, self.count(*r)));
+        }
+        s.push_str("},\n");
+        let total = self.findings.len();
+        s.push_str(&format!("  \"files\": {},\n  \"total\": {}\n}}\n", self.files, total));
+        s
+    }
+}
+
+/// Lint the crate rooted at `root` (the directory holding `src/`).
+pub fn run(root: &Path) -> Result<Report> {
+    let src = root.join("src");
+    ensure!(src.is_dir(), "no src/ directory under {}", root.display());
+    let mut paths = Vec::new();
+    collect_rs(&src, &src, &mut paths)?;
+    paths.sort();
+    let mut sources = Vec::with_capacity(paths.len());
+    for rel in paths {
+        let text = fs::read_to_string(src.join(&rel))
+            .with_context(|| format!("reading src/{rel}"))?;
+        sources.push((rel, text));
+    }
+    let files = sources.len();
+    Ok(Report { findings: check_sources(&sources), files })
+}
+
+/// Lint an in-memory source set — the fixture entry point for tests.
+/// Paths follow the same `src/`-relative convention (`transport/udp.rs`).
+pub fn run_on_sources(files: &[(&str, &str)]) -> Vec<Finding> {
+    let owned: Vec<(String, String)> =
+        files.iter().map(|(p, s)| (p.to_string(), s.to_string())).collect();
+    check_sources(&owned)
+}
+
+fn collect_rs(base: &Path, dir: &Path, out: &mut Vec<String>) -> Result<()> {
+    for entry in fs::read_dir(dir).with_context(|| format!("reading {}", dir.display()))? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs(base, &path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(relative_unix(base, &path));
+        }
+    }
+    Ok(())
+}
+
+fn relative_unix(base: &Path, path: &Path) -> String {
+    let rel: PathBuf = path.strip_prefix(base).unwrap_or(path).to_path_buf();
+    rel.components()
+        .map(|c| c.as_os_str().to_string_lossy().into_owned())
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+fn check_sources(files: &[(String, String)]) -> Vec<Finding> {
+    let lexed: Vec<(String, Vec<LexLine>)> =
+        files.iter().map(|(p, s)| (p.clone(), lexer::lex(s))).collect();
+    let mut findings = Vec::new();
+    for (path, lines) in &lexed {
+        wire::check(path, lines, &mut findings);
+        panic::check(path, lines, &mut findings);
+        lock::check(path, lines, &mut findings);
+        unsafety::check(path, lines, &mut findings);
+    }
+    obs::check(&lexed, &mut findings);
+    findings.retain(|f| !is_allowed(f, &lexed));
+    findings.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    findings
+}
+
+/// A finding is suppressed by a well-formed allow directive for its rule
+/// on the same line or on the comment-only line directly above.
+fn is_allowed(f: &Finding, lexed: &[(String, Vec<LexLine>)]) -> bool {
+    let Some((_, lines)) = lexed.iter().find(|(p, _)| *p == f.file) else {
+        return false;
+    };
+    let Some(idx) = f.line.checked_sub(1) else {
+        return false;
+    };
+    let key = f.rule.key();
+    let here = lines.get(idx).map(|l| parse_allow(&l.comment) == Some(key)).unwrap_or(false);
+    if here {
+        return true;
+    }
+    idx.checked_sub(1)
+        .and_then(|p| lines.get(p))
+        .map(|prev| prev.code.trim().is_empty() && parse_allow(&prev.comment) == Some(key))
+        .unwrap_or(false)
+}
+
+/// Parse `lint: allow(<rule>, "<why>")` out of comment text. Returns the
+/// rule key, or `None` for anything malformed — an unknown rule or a
+/// missing quoted reason suppresses nothing.
+pub fn parse_allow(comment: &str) -> Option<&'static str> {
+    let start = comment.find("lint: allow(")?;
+    let rest = &comment[start + "lint: allow(".len()..];
+    let rule_end = rest.find(|c: char| !lexer::is_ident_char(c))?;
+    let rule = Rule::ALL.iter().find(|r| r.key() == &rest[..rule_end])?.key();
+    let rest = rest[rule_end..].trim_start();
+    let rest = rest.strip_prefix(',')?.trim_start();
+    let rest = rest.strip_prefix('"')?;
+    let close = rest.find('"')?;
+    rest[close + 1..].trim_start().strip_prefix(')')?;
+    Some(rule)
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}

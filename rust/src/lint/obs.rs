@@ -1,0 +1,67 @@
+//! R5 — observability completeness.
+//!
+//! Every counter the transports and the session fabric maintain must
+//! reach the telemetry registry's JSON export: a counter that exists but
+//! never leaves the process is a debugging session waiting to be lost.
+//! The rule extracts the public field names of `TransportStats`
+//! (`transport/mod.rs`) and `SessionStats` (`session/mod.rs`) and
+//! requires each to appear, quoted, in `telemetry/registry.rs` — the one
+//! snapshot/export path. Skipped entirely when the registry source is
+//! not part of the scanned set (fixture runs).
+
+use super::lexer::LexLine;
+use super::{Finding, Rule};
+
+const REGISTRY: &str = "telemetry/registry.rs";
+const STRUCTS: [(&str, &str); 2] =
+    [("transport/mod.rs", "TransportStats"), ("session/mod.rs", "SessionStats")];
+
+pub fn check(files: &[(String, Vec<LexLine>)], out: &mut Vec<Finding>) {
+    let Some((_, reg_lines)) = files.iter().find(|(p, _)| p == REGISTRY) else {
+        return;
+    };
+    let reg_text: String =
+        reg_lines.iter().map(|l| l.code.as_str()).collect::<Vec<_>>().join("\n");
+    for (file, name) in STRUCTS {
+        let Some((_, lines)) = files.iter().find(|(p, _)| p == file) else {
+            continue;
+        };
+        for (field, line_no) in struct_fields(lines, name) {
+            // The registry spells keys either as a plain string literal
+            // (`"messages"`) or escaped inside a JSON format string
+            // (`\"messages\"`); accept both.
+            let plain = format!("\"{field}\"");
+            let escaped = format!("\\\"{field}\\\"");
+            if !reg_text.contains(&plain) && !reg_text.contains(&escaped) {
+                let msg = format!(
+                    "counter `{field}` of {name} is missing from the telemetry registry export"
+                );
+                out.push(Finding::new(Rule::Obs, file, line_no, msg));
+            }
+        }
+    }
+}
+
+/// Public field names (with their 1-based lines) of `struct <name>`.
+fn struct_fields(lines: &[LexLine], name: &str) -> Vec<(String, usize)> {
+    let header = format!("struct {name}");
+    let mut out = Vec::new();
+    let Some(start) = lines.iter().position(|l| !l.in_test && l.code.contains(&header)) else {
+        return out;
+    };
+    for (j, line) in lines.iter().enumerate().skip(start + 1) {
+        let t = line.code.trim();
+        if t == "}" {
+            break;
+        }
+        if let Some(rest) = t.strip_prefix("pub ") {
+            if let Some(colon) = rest.find(':') {
+                let field = rest[..colon].trim().to_string();
+                if !field.is_empty() && field.chars().all(crate::lint::lexer::is_ident_char) {
+                    out.push((field, j + 1));
+                }
+            }
+        }
+    }
+    out
+}

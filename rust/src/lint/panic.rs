@@ -1,0 +1,88 @@
+//! R2 — panic-path discipline.
+//!
+//! Production code in the transport/session/comm/quant/plan layers must
+//! not be able to take down a rank over a recoverable condition: a
+//! poisoned lock, a short buffer, or a malformed peer frame should
+//! surface as a typed error, not a panic that the other ranks observe as
+//! a silent peer death. This rule flags, in non-test code:
+//!
+//! - `.unwrap()` / `.expect(` and the panicking macros (`panic!`,
+//!   `unreachable!`, `todo!`, `unimplemented!` — asserts are exempt:
+//!   they state invariants, not error handling);
+//! - literal two-sided slice ranges used as indexes (`buf[4..6]` — the
+//!   classic short-buffer panic; single-element indexes are too common
+//!   and too often loop-bounded to flag);
+//! - `from_le_bytes`/`from_be_bytes` built from literal indexes
+//!   (`[wire[0], wire[1]]`), the unchecked-parse pattern.
+//!
+//! Genuinely unreachable sites carry `// lint: allow(panic, "<why>")`.
+
+use super::lexer::{has_literal_index, is_ident_char, literal_ranges, LexLine};
+use super::{Finding, Rule};
+
+const PANIC_MACROS: [&str; 4] = ["panic", "unreachable", "todo", "unimplemented"];
+
+fn in_scope(path: &str) -> bool {
+    ["transport/", "session/", "comm/", "quant/", "plan/"]
+        .iter()
+        .any(|p| path.starts_with(p))
+}
+
+pub fn check(path: &str, lines: &[LexLine], out: &mut Vec<Finding>) {
+    if !in_scope(path) {
+        return;
+    }
+    for (i, line) in lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        let n = i + 1;
+        let b = &line.blanked;
+        if b.contains(".unwrap()") {
+            out.push(Finding::new(Rule::Panic, path, n, "`.unwrap()` on a production path"));
+        }
+        if b.contains(".expect(") {
+            out.push(Finding::new(Rule::Panic, path, n, "`.expect(..)` on a production path"));
+        }
+        for m in PANIC_MACROS {
+            if has_macro(b, m) {
+                let msg = format!("`{m}!` on a production path");
+                out.push(Finding::new(Rule::Panic, path, n, msg));
+            }
+        }
+        for r in literal_ranges(b) {
+            if r.indexed {
+                let msg = format!(
+                    "literal slice range [{}..{}] can panic on a short buffer; check the length",
+                    r.lo, r.hi
+                );
+                out.push(Finding::new(Rule::Panic, path, n, msg));
+            }
+        }
+        let bytes_ctor = b.contains("from_le_bytes([") || b.contains("from_be_bytes([");
+        if bytes_ctor && has_literal_index(b) {
+            out.push(Finding::new(
+                Rule::Panic,
+                path,
+                n,
+                "from_*_bytes over literal indexes can panic on a short buffer",
+            ));
+        }
+    }
+}
+
+/// `m!` invoked as a macro: the name must start at a token boundary
+/// (`debug_panic!` would not count as `panic!`).
+fn has_macro(b: &str, m: &str) -> bool {
+    let pat = format!("{m}!");
+    let bytes = b.as_bytes();
+    let mut from = 0;
+    while let Some(p) = b[from..].find(&pat) {
+        let at = from + p;
+        if at == 0 || !is_ident_char(bytes[at - 1] as char) {
+            return true;
+        }
+        from = at + pat.len();
+    }
+    false
+}

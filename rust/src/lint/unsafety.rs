@@ -1,0 +1,49 @@
+//! R4 — unsafe audit trail.
+//!
+//! Every `unsafe` block in the tree must carry a `SAFETY:` comment — on
+//! the same line or in the contiguous comment block immediately above —
+//! stating why the invariants hold. The rule applies to the whole crate
+//! (non-test code); there is no path scoping, because an unaudited cast
+//! in `model/` corrupts checkpoints just as surely as one in `quant/`
+//! corrupts the wire.
+
+use super::lexer::{has_word, LexLine};
+use super::{Finding, Rule};
+
+/// Spelled as data so this module never contains the keyword as a code
+/// token (the lexer blanks string contents, so flashlint's own sources
+/// pass flashlint).
+const UNSAFE_WORD: &str = "unsafe";
+const SAFETY_TAG: &str = "SAFETY:";
+
+pub fn check(path: &str, lines: &[LexLine], out: &mut Vec<Finding>) {
+    for (i, line) in lines.iter().enumerate() {
+        if line.in_test || !has_word(&line.blanked, UNSAFE_WORD) {
+            continue;
+        }
+        if line.comment.contains(SAFETY_TAG) || preceded_by_safety(lines, i) {
+            continue;
+        }
+        let msg = format!("`{UNSAFE_WORD}` without a `{SAFETY_TAG}` comment justifying it");
+        out.push(Finding::new(Rule::Unsafe, path, i + 1, msg));
+    }
+}
+
+/// Walk the contiguous run of comment-only lines directly above `i`.
+fn preceded_by_safety(lines: &[LexLine], i: usize) -> bool {
+    let mut j = i;
+    while j > 0 {
+        j -= 1;
+        let prev = &lines[j];
+        if !prev.code.trim().is_empty() {
+            return false; // a code line ends the comment block
+        }
+        if prev.comment.contains(SAFETY_TAG) {
+            return true;
+        }
+        if prev.comment.trim().is_empty() {
+            return false; // blank line ends the comment block
+        }
+    }
+    false
+}

@@ -1,0 +1,95 @@
+//! R1 — wire-constant drift.
+//!
+//! The frame protocol's magic, flag bits, and header byte layout are
+//! defined once, in `transport/frame.rs` (`flags`, `offsets`). Any
+//! respelling of those literals elsewhere in the transport/session/comm
+//! layers is drift waiting to happen: the golden wire tests pin the
+//! bytes, but only if every writer actually goes through the named
+//! constants. This rule flags, in non-test code outside `frame.rs`:
+//!
+//! - the magic string `FCT2` (checked against `code`, since the real
+//!   offense is a string literal);
+//! - a flag-bit hex literal (`0x01`/`0x02`/`0x04`/`0x08`) on a line that
+//!   also talks about flags;
+//! - a two-sided literal byte range matching a known frame/sub-header
+//!   field (`[0..4]`, `[12..16]`, …).
+
+use super::lexer::{literal_ranges, LexLine};
+use super::{Finding, Rule};
+
+/// Header/sub-header byte ranges that may only be spelled in
+/// `transport/frame.rs::offsets`.
+const PINNED_RANGES: [(u64, u64); 10] =
+    [(0, 4), (4, 6), (6, 8), (8, 10), (10, 12), (8, 12), (12, 16), (16, 20), (20, 24), (24, 28)];
+
+const FLAG_LITERALS: [&str; 4] = ["0x01", "0x02", "0x04", "0x08"];
+
+fn in_scope(path: &str) -> bool {
+    if path == "transport/frame.rs" {
+        return false;
+    }
+    path.starts_with("transport/") || path.starts_with("session/") || path.starts_with("comm/")
+}
+
+pub fn check(path: &str, lines: &[LexLine], out: &mut Vec<Finding>) {
+    if !in_scope(path) {
+        return;
+    }
+    for (i, line) in lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        let n = i + 1;
+        if line.code.contains("FCT2") {
+            out.push(Finding::new(
+                Rule::Wire,
+                path,
+                n,
+                "frame magic respelled; use transport::frame::FRAME_MAGIC",
+            ));
+        }
+        if has_flag_literal(&line.blanked) {
+            out.push(Finding::new(
+                Rule::Wire,
+                path,
+                n,
+                "frame flag bit spelled as a hex literal; use transport::frame::flags",
+            ));
+        }
+        for r in literal_ranges(&line.blanked) {
+            if PINNED_RANGES.contains(&(r.lo, r.hi)) {
+                let msg = format!(
+                    "literal frame byte range [{}..{}]; use transport::frame::offsets",
+                    r.lo, r.hi
+                );
+                out.push(Finding::new(Rule::Wire, path, n, msg));
+            }
+        }
+    }
+}
+
+/// A flag-bit hex literal on a line that mentions flags. The literal must
+/// end at a token boundary (`0x010` is not `0x01`; type suffixes like
+/// `0x02u8` still count).
+fn has_flag_literal(blanked: &str) -> bool {
+    if !blanked.to_ascii_lowercase().contains("flag") {
+        return false;
+    }
+    let bytes = blanked.as_bytes();
+    for lit in FLAG_LITERALS {
+        let mut from = 0;
+        while let Some(p) = blanked[from..].find(lit) {
+            let at = from + p;
+            let end = at + lit.len();
+            let after_ok = match bytes.get(end) {
+                Some(&b) => !(b as char).is_ascii_hexdigit() && b != b'_',
+                None => true,
+            };
+            if after_ok {
+                return true;
+            }
+            from = end;
+        }
+    }
+    false
+}

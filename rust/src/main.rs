@@ -100,6 +100,7 @@ fn run(args: &Args) -> Result<()> {
         }
         "worker" => cmd_worker(args),
         "metrics" => cmd_metrics(args),
+        "lint" => cmd_lint(args),
         "info" => cmd_info(),
         "" | "help" | "--help" => {
             print!("{HELP}");
@@ -206,6 +207,9 @@ commands:
                       results vs the in-process backend)
   metrics             recorded in-process AllReduce demo; prints the
                       aggregated metrics snapshot as JSON on stdout
+  lint                flashlint static analysis over this repo's sources
+                      (wire/panic/lock/unsafe/obs rules, DESIGN.md §14);
+                      [--root DIR] [--json]; exits non-zero on findings
   info                artifacts / manifest / device presets
 
 common flags: --quick (small sweep), --steps N, --batches N, --codec SPEC
@@ -245,6 +249,36 @@ trace: --trace-out P — flight-record every collective and write one JSON
       trace per rank to P.rankR (train / eval / worker / metrics;
       schema + recalibration formula in DESIGN.md §11)
 ";
+
+/// `flashcomm lint [--root DIR] [--json]` — run flashlint over the crate
+/// at `--root` (default: the current directory, falling back to `rust/`
+/// when invoked from the repo root). Exits non-zero on findings so CI
+/// can gate on it directly.
+fn cmd_lint(args: &Args) -> Result<()> {
+    let root = match args.flag("root") {
+        Some(r) => std::path::PathBuf::from(r),
+        None => {
+            let cwd = std::path::PathBuf::from(".");
+            if cwd.join("src").is_dir() {
+                cwd
+            } else {
+                std::path::PathBuf::from("rust")
+            }
+        }
+    };
+    let report = flashcomm::lint::run(&root)?;
+    if args.flag_bool("json") {
+        print!("{}", report.to_json());
+    } else {
+        print!("{}", report.render_text());
+    }
+    ensure!(
+        report.findings.is_empty(),
+        "flashlint: {} finding(s); see the listing above (or run with --json)",
+        report.findings.len()
+    );
+    Ok(())
+}
 
 fn cmd_train(args: &Args) -> Result<()> {
     let config = args.flag_or("config", "tiny");

@@ -101,6 +101,9 @@ impl Weights {
             for &d in &t.shape {
                 f.write_all(&(d as u32).to_le_bytes())?;
             }
+            // SAFETY: reinterpreting a live &[f32] as bytes — the pointer is
+            // valid for len * 4 bytes, u8 has no alignment requirement, and
+            // every f32 bit pattern is a valid byte sequence.
             let bytes: &[u8] = unsafe {
                 std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4)
             };

@@ -27,6 +27,7 @@ pub fn planes_for(bits: u8) -> &'static [u8] {
         6 => &[4, 2],
         7 => &[4, 2, 1],
         8 => &[4, 4],
+        // lint: allow(panic, "Codec::validate rejects bits outside 1..=8 before any kernel runs")
         _ => panic!("unsupported bit width {bits}"),
     }
 }
@@ -38,6 +39,7 @@ pub fn plane_len(w: u8, n: usize) -> usize {
         4 => n.div_ceil(2),
         2 => n.div_ceil(4),
         1 => n.div_ceil(8),
+        // lint: allow(panic, "planes_for only ever yields widths 4, 2, and 1")
         _ => unreachable!("plane width {w}"),
     }
 }
@@ -53,6 +55,7 @@ pub fn packed_len(bits: u8, n: usize) -> usize {
 #[inline(always)]
 pub(crate) fn load_le(bytes: &[u8], off: usize, k: usize) -> u64 {
     if k == 8 && bytes.len() >= off + 8 {
+        // lint: allow(panic, "the length check above guarantees an 8-byte slice")
         return u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap());
     }
     if off >= bytes.len() {
@@ -178,6 +181,7 @@ fn pack_plane(codes: &[u8], w: u8, shift: u8, out: &mut Vec<u8>) {
                 i += 8;
             }
         }
+        // lint: allow(panic, "planes_for only ever yields widths 4, 2, and 1")
         _ => unreachable!(),
     }
 }
@@ -185,6 +189,7 @@ fn pack_plane(codes: &[u8], w: u8, shift: u8, out: &mut Vec<u8>) {
 /// OR a u64 of 8 spread codes into 8 consecutive code slots.
 #[inline(always)]
 fn or_store8(codes: &mut [u8], i: usize, v: u64) {
+    // lint: allow(panic, "callers only pass i with i + 8 <= codes.len(); see the unpack loops")
     let cur = u64::from_le_bytes(codes[i..i + 8].try_into().unwrap());
     codes[i..i + 8].copy_from_slice(&(cur | v).to_le_bytes());
 }
@@ -230,6 +235,7 @@ fn unpack_plane(bytes: &[u8], w: u8, shift: u8, codes: &mut [u8]) {
                 *c |= ((b >> (k % 8)) & 0x1) << shift;
             }
         }
+        // lint: allow(panic, "planes_for only ever yields widths 4, 2, and 1")
         _ => unreachable!(),
     }
 }

@@ -304,6 +304,7 @@ struct EncJob<'a> {
 fn run_encode(codec: &Codec, job: EncJob<'_>) {
     let EncJob { data, metas, spikes, logmetas, scratch, mut sink } = job;
     match *codec {
+        // lint: allow(panic, "encode_with/decode_with route Bf16 away before dispatching here")
         Codec::Bf16 => unreachable!("bf16 bypasses the fused kernels"),
         Codec::Rtn { bits, group_size, scale_mode } => {
             let gs = group_size as usize;
@@ -373,6 +374,7 @@ pub(crate) fn encode_body(
     // Pre-size the per-group metadata stores so workers can fill disjoint
     // sub-slices; the serialization below reads them back in group order.
     match codec {
+        // lint: allow(panic, "encode_with/decode_with route Bf16 away before dispatching here")
         Codec::Bf16 => unreachable!("bf16 bypasses the fused kernels"),
         Codec::Rtn { .. } | Codec::Hadamard { .. } => {
             bufs.metas.clear();
@@ -422,6 +424,7 @@ pub(crate) fn encode_body(
 
     // Metadata sections (small; serialized on the calling thread).
     match *codec {
+        // lint: allow(panic, "encode_with/decode_with route Bf16 away before dispatching here")
         Codec::Bf16 => unreachable!(),
         Codec::Rtn { scale_mode, .. } => wire::write_group_metas(&bufs.metas, scale_mode, out),
         Codec::Spike { scale_mode, .. } => {
@@ -510,6 +513,7 @@ struct DecJob<'a> {
 fn run_decode(codec: &Codec, job: DecJob<'_>, sum: bool) {
     let DecJob { out, mut src, metas, spikes, logmetas, scratch } = job;
     match *codec {
+        // lint: allow(panic, "encode_with/decode_with route Bf16 away before dispatching here")
         Codec::Bf16 => unreachable!("bf16 bypasses the fused kernels"),
         Codec::Rtn { group_size, .. } => {
             let gs = group_size as usize;
@@ -627,6 +631,7 @@ pub(crate) fn decode_body(
     let section = &body[..qlen];
     let meta_bytes = &body[qlen..];
     match *codec {
+        // lint: allow(panic, "encode_with/decode_with route Bf16 away before dispatching here")
         Codec::Bf16 => unreachable!("bf16 bypasses the fused kernels"),
         Codec::Rtn { scale_mode, .. } => {
             wire::read_group_metas(meta_bytes, g, scale_mode, &mut bufs.metas)?;

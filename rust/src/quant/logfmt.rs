@@ -75,6 +75,7 @@ pub fn quantize_group(xs: &[f32], bits: u8, codes: &mut [u8]) -> LogMeta {
     debug_assert_eq!(xs.len(), codes.len());
     let meta = analyze_group(xs);
     let mut slots = codes.iter_mut();
+    // lint: allow(panic, "the emitter yields exactly xs.len() codes, matching the slots iterator")
     quantize_group_with_meta(xs, bits, meta, |c| *slots.next().unwrap() = c);
     meta
 }

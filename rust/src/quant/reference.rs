@@ -59,6 +59,7 @@ fn unpack_scalar(bytes: &[u8], bits: u8, n: usize) -> Vec<u8> {
 
 /// Reference encode: header, quantize-to-codes, scalar pack, metadata.
 pub fn encode(codec: &Codec, data: &[f32]) -> Vec<u8> {
+    // lint: allow(panic, "reference path mirrors Codec::encode: invalid codecs die loudly")
     codec.validate().expect("invalid codec");
     let n = data.len();
     let mut out = Vec::with_capacity(codec.wire_len(n));

@@ -325,6 +325,7 @@ impl Codec {
         threads: usize,
     ) -> Result<()> {
         self.validate()
+            // lint: allow(panic, "encoding with an invalid codec would corrupt the wire; die loudly")
             .unwrap_or_else(|e| panic!("refusing to encode with invalid codec {self:?}: {e}"));
         let n = data.len();
         self.validate_len(n)?;
@@ -344,6 +345,7 @@ impl Codec {
     pub fn encode(&self, data: &[f32]) -> Vec<u8> {
         let mut bufs = CodecBuffers::default();
         let mut out = Vec::with_capacity(self.wire_len(data.len()));
+        // lint: allow(panic, "validate_len passed in encode_with; the header always fits")
         self.encode_with(data, &mut bufs, &mut out).expect("payload fits the wire header");
         out
     }
@@ -452,9 +454,11 @@ impl Codec {
         let mut wire = std::mem::take(&mut bufs.wire);
         wire.clear();
         wire.reserve(self.wire_len(data.len()));
+        // lint: allow(panic, "validate_len passed in encode_with; the header always fits")
         self.encode_with(data, bufs, &mut wire).expect("payload fits the wire header");
         let r = Self::decode_with(&wire, bufs, data);
         bufs.wire = wire;
+        // lint: allow(panic, "a payload we just encoded must decode; anything else is a codec bug")
         r.expect("own payload must decode");
     }
 }

@@ -79,6 +79,7 @@ impl Header {
         if wire.len() < HEADER_LEN {
             bail!("wire too short for header: {} bytes", wire.len());
         }
+        // lint: allow(panic, "length checked against HEADER_LEN above")
         let magic = u16::from_le_bytes([wire[0], wire[1]]);
         if magic != MAGIC {
             bail!("bad magic {magic:#x}");
@@ -90,7 +91,9 @@ impl Header {
             scheme: WireScheme::from_u8(wire[3])?,
             bits: wire[4],
             scale_mode: wire[5],
+            // lint: allow(panic, "length checked against HEADER_LEN above")
             group_size: u16::from_le_bytes([wire[6], wire[7]]),
+            // lint: allow(panic, "length checked against HEADER_LEN above")
             n: u32::from_le_bytes([wire[8], wire[9], wire[10], wire[11]]),
         };
         if h.scheme != WireScheme::Bf16 {

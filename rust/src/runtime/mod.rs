@@ -46,6 +46,9 @@ impl Tensor {
 
     /// Lower to an XLA literal (f32).
     pub fn to_literal(&self) -> Result<xla::Literal> {
+        // SAFETY: reinterpreting a live &[f32] as bytes — the pointer is
+        // valid for len * 4 bytes, u8 has no alignment requirement, and
+        // every f32 bit pattern is a valid byte sequence.
         let bytes: &[u8] = unsafe {
             std::slice::from_raw_parts(self.data.as_ptr() as *const u8, self.data.len() * 4)
         };
@@ -68,8 +71,11 @@ impl Tensor {
 /// Build an S32 literal from token ids (model inputs).
 pub fn tokens_literal(tokens: &[i32], shape: &[usize]) -> Result<xla::Literal> {
     assert_eq!(tokens.len(), shape.iter().product::<usize>());
-    let bytes: &[u8] =
-        unsafe { std::slice::from_raw_parts(tokens.as_ptr() as *const u8, tokens.len() * 4) };
+    // SAFETY: reinterpreting a live &[i32] as bytes — the pointer is valid
+    // for len * 4 bytes and u8 has no alignment requirement.
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(tokens.as_ptr() as *const u8, tokens.len() * 4)
+    };
     Ok(xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, shape, bytes)?)
 }
 

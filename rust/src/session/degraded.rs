@@ -56,10 +56,8 @@ impl<T: Transport> DegradedMesh<T> {
                 old_of_new.len()
             )));
         }
-        let rank = old_of_new
-            .iter()
-            .position(|&r| r == inner.rank())
-            .expect("self is a survivor by the check above");
+        // lint: allow(panic, "self is a survivor: the dead[rank] check above guarantees it")
+        let rank = old_of_new.iter().position(|&r| r == inner.rank()).expect("survivor");
         Ok(DegradedMesh { inner, old_of_new, rank })
     }
 

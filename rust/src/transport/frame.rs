@@ -22,6 +22,15 @@
 //! quant wire header ([`crate::quant::wire`]), one layer down: that header
 //! describes *what* the bytes mean, this one guards *that they arrived
 //! intact*.
+//!
+//! This module is the **single source of truth** for every wire constant:
+//! flag bits live in [`flags`], byte offsets in [`offsets`], and the
+//! `flashcomm lint` R1 rule (wire-constant drift) rejects literal
+//! duplicates of any of them elsewhere in the tree. A drifted `0x02` or a
+//! restated `10..12` is exactly the kind of silent reassembly corruption
+//! the linter exists to make impossible.
+
+use std::ops::Range;
 
 use anyhow::{ensure, Result};
 
@@ -34,35 +43,131 @@ pub const FRAME_MAGIC: u32 = u32::from_le_bytes(*b"FCT2");
 /// frame from a pre-restart incarnation is rejected instead of silently
 /// poisoning the per-link sequence space.
 pub const FRAME_VERSION: u8 = 2;
-/// Header `flags` bit marking a session heartbeat frame (zero-length
-/// payload, liveness only — never delivered to `recv`, never counted).
-pub const FLAG_HEARTBEAT: u8 = 0x01;
-/// Header `flags` bit marking a UDP datagram that carries one chunk of a
-/// shredded frame: the payload starts with a segment sub-header (see
-/// `transport::udp`), and `seq`/`len`/`crc` guard the *datagram*, not the
-/// logical frame it belongs to.
-pub const FLAG_SEGMENT: u8 = 0x02;
-/// Header `flags` bit marking a UDP NACK control datagram (receiver →
-/// sender: "re-send these chunks of this frame").
-pub const FLAG_NACK: u8 = 0x04;
-/// Header `flags` bit marking a UDP ACK control datagram (receiver →
-/// sender: "this frame is fully delivered — retire it and take an RTT
-/// sample").
-pub const FLAG_ACK: u8 = 0x08;
-/// All flag bits this build understands; [`FrameHeader::parse`] rejects
-/// anything outside this mask so a future layout change fails loudly.
-pub const FLAG_MASK: u8 = FLAG_HEARTBEAT | FLAG_SEGMENT | FLAG_NACK | FLAG_ACK;
+
+/// Header `flags` bits. These four values are the only place in the tree
+/// where the bit assignments may be spelled as literals; everything else
+/// (including the reserved-bit check in [`FrameHeader::parse`]) goes
+/// through the named constants.
+pub mod flags {
+    /// Session heartbeat frame (zero-length payload, liveness only —
+    /// never delivered to `recv`, never counted).
+    pub const HEARTBEAT: u8 = 0x01;
+    /// UDP datagram carrying one chunk of a shredded frame: the payload
+    /// starts with a segment sub-header (layout in
+    /// [`super::offsets`]), and `seq`/`len`/`crc` guard the *datagram*,
+    /// not the logical frame it belongs to.
+    pub const SEGMENT: u8 = 0x02;
+    /// UDP NACK control datagram (receiver → sender: "re-send these
+    /// chunks of this frame").
+    pub const NACK: u8 = 0x04;
+    /// UDP ACK control datagram (receiver → sender: "this frame is fully
+    /// delivered — retire it and take an RTT sample").
+    pub const ACK: u8 = 0x08;
+    /// All flag bits this build understands;
+    /// [`FrameHeader::parse`](super::FrameHeader::parse) rejects anything
+    /// outside this mask so a future layout change fails loudly.
+    pub const MASK: u8 = HEARTBEAT | SEGMENT | NACK | ACK;
+}
+
+/// Compat alias for [`flags::HEARTBEAT`].
+pub const FLAG_HEARTBEAT: u8 = flags::HEARTBEAT;
+/// Compat alias for [`flags::SEGMENT`].
+pub const FLAG_SEGMENT: u8 = flags::SEGMENT;
+/// Compat alias for [`flags::NACK`].
+pub const FLAG_NACK: u8 = flags::NACK;
+/// Compat alias for [`flags::ACK`].
+pub const FLAG_ACK: u8 = flags::ACK;
+/// Compat alias for [`flags::MASK`].
+pub const FLAG_MASK: u8 = flags::MASK;
+
+/// Byte layout of the frame header and the UDP control payloads. Each
+/// constant is a half-open byte range (or a single byte index) into the
+/// buffer it describes; [`read_u16`]/[`read_u32`] take them directly.
+/// The header ranges must tile `0..FRAME_HEADER_LEN`; the golden tests
+/// pin every one of them against the wire bytes.
+pub mod offsets {
+    use std::ops::Range;
+
+    /// `magic: u32` — [`FRAME_MAGIC`](super::FRAME_MAGIC).
+    pub const MAGIC: Range<usize> = 0..4;
+    /// `ver: u8` — [`FRAME_VERSION`](super::FRAME_VERSION).
+    pub const VERSION: usize = 4;
+    /// `flags: u8` — bits from [`flags`](super::flags).
+    pub const FLAGS: usize = 5;
+    /// `src: u16` — sending rank.
+    pub const SRC: Range<usize> = 6..8;
+    /// `dst: u16` — destination rank.
+    pub const DST: Range<usize> = 8..10;
+    /// `epoch: u16` — session epoch (v2 repurposed the reserved bytes).
+    pub const EPOCH: Range<usize> = 10..12;
+    /// `seq: u32` — per-link sequence number.
+    pub const SEQ: Range<usize> = 12..16;
+    /// `len: u32` — payload length.
+    pub const LEN: Range<usize> = 16..20;
+    /// `crc32(payload): u32`.
+    pub const PAYLOAD_CRC: Range<usize> = 20..24;
+    /// `crc32(header bytes 0..24): u32`.
+    pub const HEADER_CRC: Range<usize> = 24..28;
+    /// The header prefix covered by [`HEADER_CRC`] (everything before it).
+    pub const HEADER_CRC_COVERED: Range<usize> = 0..24;
+
+    /// Segment sub-header (first [`SEG_HEADER_LEN`](super::SEG_HEADER_LEN)
+    /// bytes of a [`flags::SEGMENT`](super::flags::SEGMENT) datagram's
+    /// payload): `frame_seq: u32`.
+    pub const SEG_FRAME_SEQ: Range<usize> = 0..4;
+    /// Segment sub-header: `chunk_index: u16`.
+    pub const SEG_CHUNK_INDEX: Range<usize> = 4..6;
+    /// Segment sub-header: `chunk_count: u16`.
+    pub const SEG_CHUNK_COUNT: Range<usize> = 6..8;
+    /// Segment sub-header: `frame_len: u32` (whole logical frame).
+    pub const SEG_FRAME_LEN: Range<usize> = 8..12;
+    /// Segment sub-header: `frame_crc: u32` (whole logical frame).
+    pub const SEG_FRAME_CRC: Range<usize> = 12..16;
+
+    /// NACK payload: `frame_seq: u32` being complained about.
+    pub const NACK_FRAME_SEQ: Range<usize> = 0..4;
+    /// NACK payload: `n: u16` missing-chunk indices follow, `u16` each.
+    pub const NACK_COUNT: Range<usize> = 4..6;
+    /// ACK payload: `frame_seq: u32` being retired.
+    pub const ACK_FRAME_SEQ: Range<usize> = 0..4;
+}
+
 /// Fixed header length in bytes (24 B of fields + 4 B header CRC).
 pub const FRAME_HEADER_LEN: usize = 28;
+/// Segment sub-header length in bytes (see the `SEG_*` ranges in
+/// [`offsets`]): `frame_seq u32 | chunk_index u16 | chunk_count u16 |
+/// frame_len u32 | frame_crc u32`, prefixed to every chunk of a shredded
+/// UDP frame.
+pub const SEG_HEADER_LEN: usize = 16;
+/// NACK payload fixed prefix length (`frame_seq u32 | n u16`).
+pub const NACK_PREFIX_LEN: usize = 6;
 /// Upper bound on a single frame's payload (sanity check before the
 /// receiver trusts `len` enough to allocate).
 pub const MAX_PAYLOAD: u32 = 1 << 30;
 
+/// Read a little-endian `u16` field out of `buf`. `field` is one of the
+/// 2-byte ranges in [`offsets`]; the caller must have bounds-checked
+/// `buf` against the enclosing layout (every parse path here `ensure!`s
+/// the full length before touching a field).
+pub fn read_u16(buf: &[u8], field: Range<usize>) -> u16 {
+    let mut b = [0u8; 2];
+    b.copy_from_slice(&buf[field]);
+    u16::from_le_bytes(b)
+}
+
+/// Read a little-endian `u32` field out of `buf` (see [`read_u16`]).
+pub fn read_u32(buf: &[u8], field: Range<usize>) -> u32 {
+    let mut b = [0u8; 4];
+    b.copy_from_slice(&buf[field]);
+    u32::from_le_bytes(b)
+}
+
 /// Parsed frame header.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct FrameHeader {
-    /// Frame flags ([`FLAG_HEARTBEAT`], [`FLAG_SEGMENT`], [`FLAG_NACK`],
-    /// [`FLAG_ACK`]; remaining bits reserved, must be 0).
+    /// Frame flags ([`flags::HEARTBEAT`], [`flags::SEGMENT`],
+    /// [`flags::NACK`], [`flags::ACK`]; remaining bits reserved, must
+    /// be 0).
     pub flags: u8,
     /// Sending rank.
     pub src: u16,
@@ -112,17 +217,17 @@ impl FrameHeader {
     /// Serialize to the fixed wire layout (including the header CRC).
     pub fn to_bytes(&self) -> [u8; FRAME_HEADER_LEN] {
         let mut hdr = [0u8; FRAME_HEADER_LEN];
-        hdr[0..4].copy_from_slice(&FRAME_MAGIC.to_le_bytes());
-        hdr[4] = FRAME_VERSION;
-        hdr[5] = self.flags;
-        hdr[6..8].copy_from_slice(&self.src.to_le_bytes());
-        hdr[8..10].copy_from_slice(&self.dst.to_le_bytes());
-        hdr[10..12].copy_from_slice(&self.epoch.to_le_bytes());
-        hdr[12..16].copy_from_slice(&self.seq.to_le_bytes());
-        hdr[16..20].copy_from_slice(&self.len.to_le_bytes());
-        hdr[20..24].copy_from_slice(&self.crc.to_le_bytes());
-        let hcrc = crc32(&hdr[..24]);
-        hdr[24..28].copy_from_slice(&hcrc.to_le_bytes());
+        hdr[offsets::MAGIC].copy_from_slice(&FRAME_MAGIC.to_le_bytes());
+        hdr[offsets::VERSION] = FRAME_VERSION;
+        hdr[offsets::FLAGS] = self.flags;
+        hdr[offsets::SRC].copy_from_slice(&self.src.to_le_bytes());
+        hdr[offsets::DST].copy_from_slice(&self.dst.to_le_bytes());
+        hdr[offsets::EPOCH].copy_from_slice(&self.epoch.to_le_bytes());
+        hdr[offsets::SEQ].copy_from_slice(&self.seq.to_le_bytes());
+        hdr[offsets::LEN].copy_from_slice(&self.len.to_le_bytes());
+        hdr[offsets::PAYLOAD_CRC].copy_from_slice(&self.crc.to_le_bytes());
+        let hcrc = crc32(&hdr[offsets::HEADER_CRC_COVERED]);
+        hdr[offsets::HEADER_CRC].copy_from_slice(&hcrc.to_le_bytes());
         hdr
     }
 
@@ -141,33 +246,34 @@ impl FrameHeader {
             "frame truncated: {} bytes < {FRAME_HEADER_LEN}-byte header",
             buf.len()
         );
-        let magic = u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]);
+        let magic = read_u32(buf, offsets::MAGIC);
         ensure!(magic == FRAME_MAGIC, "bad frame magic {magic:#010x} (expected {FRAME_MAGIC:#010x})");
         ensure!(
-            buf[4] == FRAME_VERSION,
+            buf[offsets::VERSION] == FRAME_VERSION,
             "frame protocol version {} unsupported (this build speaks {FRAME_VERSION})",
-            buf[4]
+            buf[offsets::VERSION]
         );
-        let hcrc = u32::from_le_bytes([buf[24], buf[25], buf[26], buf[27]]);
-        let got = crc32(&buf[..24]);
+        let hcrc = read_u32(buf, offsets::HEADER_CRC);
+        let got = crc32(&buf[offsets::HEADER_CRC_COVERED]);
         ensure!(
             got == hcrc,
             "frame header CRC mismatch: computed {got:#010x}, header says {hcrc:#010x} \
              (corrupt header rejected)"
         );
         ensure!(
-            buf[5] & !FLAG_MASK == 0,
-            "frame carries unknown flag bits {:#04x} (this build understands {FLAG_MASK:#04x})",
-            buf[5]
+            buf[offsets::FLAGS] & !flags::MASK == 0,
+            "frame carries unknown flag bits {:#04x} (this build understands {:#04x})",
+            buf[offsets::FLAGS],
+            flags::MASK
         );
         let hdr = FrameHeader {
-            flags: buf[5],
-            src: u16::from_le_bytes([buf[6], buf[7]]),
-            dst: u16::from_le_bytes([buf[8], buf[9]]),
-            epoch: u16::from_le_bytes([buf[10], buf[11]]),
-            seq: u32::from_le_bytes([buf[12], buf[13], buf[14], buf[15]]),
-            len: u32::from_le_bytes([buf[16], buf[17], buf[18], buf[19]]),
-            crc: u32::from_le_bytes([buf[20], buf[21], buf[22], buf[23]]),
+            flags: buf[offsets::FLAGS],
+            src: read_u16(buf, offsets::SRC),
+            dst: read_u16(buf, offsets::DST),
+            epoch: read_u16(buf, offsets::EPOCH),
+            seq: read_u32(buf, offsets::SEQ),
+            len: read_u32(buf, offsets::LEN),
+            crc: read_u32(buf, offsets::PAYLOAD_CRC),
         };
         ensure!(hdr.len <= MAX_PAYLOAD, "frame payload length {} exceeds {MAX_PAYLOAD}", hdr.len);
         Ok(hdr)
@@ -211,11 +317,13 @@ pub fn encode(src: u16, dst: u16, epoch: u16, seq: u32, payload: &[u8]) -> Vec<u
     out
 }
 
-/// Encode a zero-payload heartbeat frame ([`FLAG_HEARTBEAT`] set). The seq
-/// rides its own counter on the sender and is never checked by receivers —
-/// heartbeats carry liveness and the current epoch, nothing else.
+/// Encode a zero-payload heartbeat frame ([`flags::HEARTBEAT`] set). The
+/// seq rides its own counter on the sender and is never checked by
+/// receivers — heartbeats carry liveness and the current epoch, nothing
+/// else.
 pub fn encode_heartbeat(src: u16, dst: u16, epoch: u16, seq: u32) -> [u8; FRAME_HEADER_LEN] {
-    FrameHeader { flags: FLAG_HEARTBEAT, src, dst, epoch, seq, len: 0, crc: crc32(b"") }.to_bytes()
+    FrameHeader { flags: flags::HEARTBEAT, src, dst, epoch, seq, len: 0, crc: crc32(b"") }
+        .to_bytes()
 }
 
 /// Decode a complete frame buffer: validate the header, the exact length,
@@ -243,6 +351,67 @@ mod tests {
         // The canonical IEEE CRC32 check value.
         assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
         assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn wire_constants_pinned() {
+        // The named constants ARE the protocol: pin every flag bit and
+        // byte offset against the literal wire values so a refactor of
+        // the `flags`/`offsets` modules can never silently shift the
+        // layout. (Outside this file those literals are lint findings.)
+        assert_eq!(flags::HEARTBEAT, 0x01);
+        assert_eq!(flags::SEGMENT, 0x02);
+        assert_eq!(flags::NACK, 0x04);
+        assert_eq!(flags::ACK, 0x08);
+        assert_eq!(flags::MASK, 0x0F);
+        assert_eq!(FLAG_HEARTBEAT, flags::HEARTBEAT);
+        assert_eq!(FLAG_MASK, flags::MASK);
+        assert_eq!(
+            [
+                offsets::MAGIC,
+                offsets::SRC,
+                offsets::DST,
+                offsets::EPOCH,
+                offsets::SEQ,
+                offsets::LEN,
+                offsets::PAYLOAD_CRC,
+                offsets::HEADER_CRC,
+            ],
+            [0..4, 6..8, 8..10, 10..12, 12..16, 16..20, 20..24, 24..28]
+        );
+        assert_eq!((offsets::VERSION, offsets::FLAGS), (4, 5));
+        assert_eq!(offsets::HEADER_CRC_COVERED, 0..24);
+        assert_eq!(
+            [
+                offsets::SEG_FRAME_SEQ,
+                offsets::SEG_CHUNK_INDEX,
+                offsets::SEG_CHUNK_COUNT,
+                offsets::SEG_FRAME_LEN,
+                offsets::SEG_FRAME_CRC,
+            ],
+            [0..4, 4..6, 6..8, 8..12, 12..16]
+        );
+        assert_eq!(offsets::SEG_FRAME_CRC.end, SEG_HEADER_LEN);
+        assert_eq!((offsets::NACK_FRAME_SEQ, offsets::NACK_COUNT), (0..4, 4..6));
+        assert_eq!(offsets::NACK_COUNT.end, NACK_PREFIX_LEN);
+        assert_eq!(offsets::ACK_FRAME_SEQ, 0..4);
+        // Header field readout through the named offsets matches the
+        // hand-assembled layout byte for byte.
+        let hdr =
+            FrameHeader { flags: 0, src: 3, dst: 5, epoch: 7, seq: 42, len: 9, crc: 0xDEAD_BEEF };
+        let bytes = hdr.to_bytes();
+        assert_eq!(&bytes[0..4], b"FCT2");
+        assert_eq!(bytes[4], FRAME_VERSION);
+        assert_eq!(bytes[5], 0);
+        assert_eq!(u16::from_le_bytes([bytes[6], bytes[7]]), 3);
+        assert_eq!(u16::from_le_bytes([bytes[8], bytes[9]]), 5);
+        assert_eq!(u16::from_le_bytes([bytes[10], bytes[11]]), 7);
+        assert_eq!(u32::from_le_bytes([bytes[12], bytes[13], bytes[14], bytes[15]]), 42);
+        assert_eq!(u32::from_le_bytes([bytes[16], bytes[17], bytes[18], bytes[19]]), 9);
+        assert_eq!(
+            u32::from_le_bytes([bytes[20], bytes[21], bytes[22], bytes[23]]),
+            0xDEAD_BEEF
+        );
     }
 
     #[test]
@@ -277,7 +446,7 @@ mod tests {
     fn heartbeat_roundtrip() {
         let hb = encode_heartbeat(2, 6, 9, 1234);
         let hdr = FrameHeader::parse(&hb).unwrap();
-        assert_eq!(hdr.flags, FLAG_HEARTBEAT);
+        assert_eq!(hdr.flags, flags::HEARTBEAT);
         assert_eq!((hdr.src, hdr.dst, hdr.epoch, hdr.seq, hdr.len), (2, 6, 9, 1234, 0));
         hdr.check_payload(b"").unwrap();
     }
@@ -285,7 +454,7 @@ mod tests {
     #[test]
     fn unknown_flag_bits_rejected() {
         let mut bad = sample();
-        bad[5] = 0x10; // reserved bit (0x01..0x08 are assigned; see FLAG_MASK)
+        bad[5] = 0x10; // reserved bit (0x01..0x08 are assigned; see flags::MASK)
         let hcrc = crc32(&bad[..24]);
         bad[24..28].copy_from_slice(&hcrc.to_le_bytes());
         let err = decode(bad).unwrap_err();

@@ -55,10 +55,12 @@ pub fn mesh(n: usize) -> Vec<InProcTransport> {
         .map(|(rank, rxs)| InProcTransport {
             rank,
             n,
+            // lint: allow(panic, "mesh construction: the channel matrix is complete by the loop above")
             tx: (0..n).map(|d| senders[rank][d].take().unwrap()).collect(),
             rx: rxs
                 .into_iter()
                 .enumerate()
+                // lint: allow(panic, "mesh construction: the channel matrix is complete by the loop above")
                 .map(|(s, r)| r.unwrap_or_else(|| panic!("missing channel {s}->{rank}")))
                 .collect(),
             send_seq: (0..n).map(|_| AtomicU32::new(0)).collect(),

@@ -46,13 +46,15 @@ impl Transport for Loopback {
         self.counters.record_send(payload.len());
         self.counters.record_buffered(payload.len());
         let framed = frame::encode(0, 0, 0, seq, &payload);
-        self.queue.lock().expect("loopback queue poisoned").push_back(framed);
+        // Poisoned-lock recovery: queue mutations are panic-free, so the
+        // data is valid even if another holder panicked.
+        self.queue.lock().unwrap_or_else(|p| p.into_inner()).push_back(framed);
         Ok(())
     }
 
     fn recv(&self, src: usize) -> Result<Vec<u8>> {
         ensure!(src == 0, "loopback has a single rank; src {src} does not exist");
-        let Some(framed) = self.queue.lock().expect("loopback queue poisoned").pop_front() else {
+        let Some(framed) = self.queue.lock().unwrap_or_else(|p| p.into_inner()).pop_front() else {
             bail!("loopback queue empty: nothing was sent");
         };
         let (hdr, payload) = frame::decode(framed)?;
@@ -68,7 +70,7 @@ impl Transport for Loopback {
 
     fn try_recv(&self, src: usize) -> Result<Option<Vec<u8>>> {
         ensure!(src == 0, "loopback has a single rank; src {src} does not exist");
-        if self.queue.lock().expect("loopback queue poisoned").is_empty() {
+        if self.queue.lock().unwrap_or_else(|p| p.into_inner()).is_empty() {
             return Ok(None);
         }
         self.recv(src).map(Some)

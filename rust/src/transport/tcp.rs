@@ -56,6 +56,10 @@ const BOOTSTRAP_TIMEOUT: Duration = Duration::from_secs(20);
 /// Data-plane hello: magic + the connecting rank, sent once per connection.
 const HELLO_MAGIC: u32 = u32::from_le_bytes(*b"FCHL");
 const HELLO_LEN: usize = 6;
+/// Hello layout (bootstrap-only, not part of the frame protocol — the
+/// frame header's own layout lives in [`frame::offsets`]).
+const HELLO_MAGIC_RANGE: std::ops::Range<usize> = 0..4;
+const HELLO_RANK_RANGE: std::ops::Range<usize> = 4..6;
 
 /// Default data-listener bind address: loopback (single-node jobs).
 pub const DEFAULT_BIND: IpAddr = IpAddr::V4(Ipv4Addr::LOCALHOST);
@@ -307,8 +311,10 @@ impl Transport for TcpTransport {
         let seq = self.send_seq[dst].fetch_add(1, Ordering::Relaxed);
         self.counters.record_send(payload.len());
         let framed = frame::encode(self.rank as u16, dst as u16, self.epoch, seq, &payload);
+        // lint: allow(panic, "mesh invariant: every non-self rank has a connected writer")
         let writer = self.writers[dst].as_ref().expect("mesh invariant: peer socket exists");
         let mut stream = writer.lock().map_err(|_| anyhow!("writer to rank {dst} poisoned"))?;
+        // lint: allow(lock, "the per-peer writer mutex serializes whole frames on one socket")
         match stream.write_all(&framed) {
             Ok(()) => Ok(()),
             Err(e) => {
@@ -329,6 +335,7 @@ impl Transport for TcpTransport {
     fn recv(&self, src: usize) -> Result<Vec<u8>> {
         ensure!(src < self.n, "src rank {src} out of range (n = {})", self.n);
         ensure!(src != self.rank, "self-recv is a local copy, not a transfer");
+        // lint: allow(panic, "mesh invariant: every non-self rank has an inbox")
         let rx = self.inbox[src].as_ref().expect("mesh invariant: peer inbox exists");
         match rx.recv() {
             Ok(result) => {
@@ -352,6 +359,7 @@ impl Transport for TcpTransport {
     fn try_recv(&self, src: usize) -> Result<Option<Vec<u8>>> {
         ensure!(src < self.n, "src rank {src} out of range (n = {})", self.n);
         ensure!(src != self.rank, "self-recv is a local copy, not a transfer");
+        // lint: allow(panic, "mesh invariant: every non-self rank has an inbox")
         let rx = self.inbox[src].as_ref().expect("mesh invariant: peer inbox exists");
         match rx.try_recv() {
             Ok(result) => {
@@ -432,7 +440,11 @@ pub(crate) fn rendezvous_root(
         addrs[peer] = Some(addr);
         clients.push((peer, stream));
     }
-    let map: Vec<SocketAddr> = addrs.into_iter().map(|a| a.expect("all ranks seen")).collect();
+    let map: Vec<SocketAddr> = addrs
+        .into_iter()
+        .enumerate()
+        .map(|(r, a)| a.ok_or_else(|| anyhow!("rendezvous ended with no hello from rank {r}")))
+        .collect::<Result<_>>()?;
     let mut reply = format!("peers {n} {epoch}\n");
     for (r, a) in map.iter().enumerate() {
         reply.push_str(&format!("{r} {a}\n"));
@@ -512,7 +524,11 @@ pub(crate) fn rendezvous_client(
         addrs[r] = Some(a);
     }
     ensure!(addrs[rank] == Some(my_addr), "root recorded a different address for rank {rank}");
-    Ok(addrs.into_iter().map(|a| a.expect("map complete")).collect())
+    addrs
+        .into_iter()
+        .enumerate()
+        .map(|(r, a)| a.ok_or_else(|| anyhow!("root's peer map has no entry for rank {r}")))
+        .collect()
 }
 
 /// Connect with retry until [`BOOTSTRAP_TIMEOUT`] (peers race to bind).
@@ -565,8 +581,8 @@ fn accept_deadline(listener: &TcpListener, deadline: Instant) -> Result<(TcpStre
 
 fn write_hello(mut stream: &TcpStream, rank: usize) -> Result<()> {
     let mut hello = [0u8; HELLO_LEN];
-    hello[..4].copy_from_slice(&HELLO_MAGIC.to_le_bytes());
-    hello[4..].copy_from_slice(&(rank as u16).to_le_bytes());
+    hello[HELLO_MAGIC_RANGE].copy_from_slice(&HELLO_MAGIC.to_le_bytes());
+    hello[HELLO_RANK_RANGE].copy_from_slice(&(rank as u16).to_le_bytes());
     stream.write_all(&hello).context("sending data-plane hello")?;
     Ok(())
 }
@@ -574,9 +590,9 @@ fn write_hello(mut stream: &TcpStream, rank: usize) -> Result<()> {
 fn read_hello(mut stream: &TcpStream) -> Result<usize> {
     let mut hello = [0u8; HELLO_LEN];
     stream.read_exact(&mut hello).context("reading data-plane hello")?;
-    let magic = u32::from_le_bytes([hello[0], hello[1], hello[2], hello[3]]);
+    let magic = frame::read_u32(&hello, HELLO_MAGIC_RANGE);
     ensure!(magic == HELLO_MAGIC, "bad data-plane hello magic {magic:#010x}");
-    Ok(u16::from_le_bytes([hello[4], hello[5]]) as usize)
+    Ok(frame::read_u16(&hello, HELLO_RANK_RANGE) as usize)
 }
 
 /// One observation of the link by [`read_frame`].
@@ -780,10 +796,13 @@ fn is_timeout(e: &std::io::Error) -> bool {
 }
 
 /// The session heartbeat thread: one liveness ping per peer per `period`,
-/// interleaving with data frames under the per-peer writer mutex. Exits
-/// when the owning endpoint drops (shutdown flag). Write failures are left
-/// to the reader threads to diagnose — the socket is shared, and the
-/// reader owns the loss verdict.
+/// interleaving with data frames under the per-peer writer mutex. A link
+/// whose writer is busy is *skipped* for the round (`try_lock`), never
+/// waited on: a long data write on one link must not stall liveness
+/// pings to every other peer — and a mid-flight frame is itself proof
+/// the link is alive. Exits when the owning endpoint drops (shutdown
+/// flag). Write failures are left to the reader threads to diagnose —
+/// the socket is shared, and the reader owns the loss verdict.
 fn heartbeat_loop(
     writers: Arc<Vec<Option<Mutex<TcpStream>>>>,
     rank: usize,
@@ -798,7 +817,8 @@ fn heartbeat_loop(
                 continue;
             }
             let hb = frame::encode_heartbeat(rank as u16, peer as u16, session.epoch, seq);
-            if let Ok(mut stream) = writer.lock() {
+            if let Ok(mut stream) = writer.try_lock() {
+                // lint: allow(lock, "one heartbeat write; try_lock cannot stall the ticker")
                 if stream.write_all(&hb).is_ok() {
                     session.counters.heartbeats_sent.fetch_add(1, Ordering::Relaxed);
                 }
@@ -835,7 +855,10 @@ pub fn local_mesh_with(n: usize, config: &SessionConfig) -> Result<Vec<TcpTransp
                 })
             })
             .collect();
-        joins.into_iter().map(|j| j.join().expect("bootstrap thread panicked")).collect()
+        joins
+            .into_iter()
+            .map(|j| j.join().unwrap_or_else(|_| Err(anyhow!("bootstrap thread panicked"))))
+            .collect()
     });
     results.into_iter().collect()
 }
@@ -1087,6 +1110,31 @@ mod tests {
         // Data still flows interleaved with the heartbeats.
         t0.send(1, vec![42]).unwrap();
         assert_eq!(t1.recv(0).unwrap(), vec![42]);
+    }
+
+    #[test]
+    fn busy_writer_does_not_stall_heartbeats_to_other_peers() {
+        use crate::session::PeerState;
+        // Regression for the R3 (lock-discipline) finding: the heartbeat
+        // ticker used to take `writer.lock()` and could queue behind a
+        // long data write on ONE link, starving liveness pings to every
+        // OTHER peer. With `try_lock` the busy link is skipped for the
+        // round. Hold rank 0's writer-to-rank-1 mutex well past the
+        // session deadline and require that rank 2 still sees rank 0 as
+        // healthy (its heartbeats kept flowing on the unheld link).
+        let config = SessionConfig::from_millis(5, 150).unwrap();
+        let mut endpoints = local_mesh_with(3, &config).unwrap();
+        let t2 = endpoints.pop().unwrap();
+        let _t1 = endpoints.pop().unwrap();
+        let t0 = endpoints.pop().unwrap();
+        let held = t0.writers[1].as_ref().unwrap().lock().unwrap();
+        thread::sleep(Duration::from_millis(400)); // well past the deadline
+        assert_eq!(
+            t2.session_shared().unwrap().state(0),
+            PeerState::Healthy,
+            "rank 0's heartbeats to rank 2 stalled behind the held rank-1 writer"
+        );
+        drop(held);
     }
 
     #[test]

@@ -71,9 +71,10 @@ use crate::util::{Backoff, Prng};
 /// Chunk payload per datagram — conservative "MTU minus headers" so one
 /// datagram never fragments on a standard 1500 B path.
 pub const CHUNK_BYTES: usize = 1200;
-/// Segment sub-header length (frame_seq, chunk_index, chunk_count,
-/// frame_len, frame_crc).
-pub const SEG_HEADER_LEN: usize = 16;
+/// Segment sub-header length — the layout (and this length) live in
+/// [`frame`] with the rest of the wire constants; re-exported here for
+/// the reassembly code and its tests.
+pub use super::frame::SEG_HEADER_LEN;
 /// Receive buffer: comfortably above header + sub-header + chunk.
 const RECV_BUF: usize = 2048;
 /// Engine socket read-timeout tick: bounds NACK/probe/deadline latency.
@@ -146,11 +147,11 @@ impl SegHeader {
     fn parse(buf: &[u8]) -> Result<SegHeader> {
         ensure!(buf.len() >= SEG_HEADER_LEN, "segment sub-header truncated: {} bytes", buf.len());
         let h = SegHeader {
-            frame_seq: u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]),
-            chunk_index: u16::from_le_bytes([buf[4], buf[5]]),
-            chunk_count: u16::from_le_bytes([buf[6], buf[7]]),
-            frame_len: u32::from_le_bytes([buf[8], buf[9], buf[10], buf[11]]),
-            frame_crc: u32::from_le_bytes([buf[12], buf[13], buf[14], buf[15]]),
+            frame_seq: frame::read_u32(buf, frame::offsets::SEG_FRAME_SEQ),
+            chunk_index: frame::read_u16(buf, frame::offsets::SEG_CHUNK_INDEX),
+            chunk_count: frame::read_u16(buf, frame::offsets::SEG_CHUNK_COUNT),
+            frame_len: frame::read_u32(buf, frame::offsets::SEG_FRAME_LEN),
+            frame_crc: frame::read_u32(buf, frame::offsets::SEG_FRAME_CRC),
         };
         ensure!(h.chunk_count > 0, "segment declares zero chunks");
         ensure!(
@@ -182,7 +183,7 @@ fn expected_chunk_len(frame_len: usize, count: usize, idx: usize) -> usize {
 /// NACK payload: `frame_seq | n | n × chunk_index` (`n == 0` = all).
 fn encode_nack_payload(frame_seq: u32, missing: &[u16]) -> Vec<u8> {
     assert!(missing.len() <= u16::MAX as usize);
-    let mut out = Vec::with_capacity(6 + 2 * missing.len());
+    let mut out = Vec::with_capacity(frame::NACK_PREFIX_LEN + 2 * missing.len());
     out.extend_from_slice(&frame_seq.to_le_bytes());
     out.extend_from_slice(&(missing.len() as u16).to_le_bytes());
     for &m in missing {
@@ -192,11 +193,12 @@ fn encode_nack_payload(frame_seq: u32, missing: &[u16]) -> Vec<u8> {
 }
 
 fn parse_nack_payload(buf: &[u8]) -> Result<(u32, Vec<u16>)> {
-    ensure!(buf.len() >= 6, "NACK payload truncated: {} bytes", buf.len());
-    let frame_seq = u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]);
-    let n = u16::from_le_bytes([buf[4], buf[5]]) as usize;
-    ensure!(buf.len() == 6 + 2 * n, "NACK declares {n} ids in {} bytes", buf.len());
-    let ids = (0..n).map(|i| u16::from_le_bytes([buf[6 + 2 * i], buf[7 + 2 * i]])).collect();
+    let prefix = frame::NACK_PREFIX_LEN;
+    ensure!(buf.len() >= prefix, "NACK payload truncated: {} bytes", buf.len());
+    let frame_seq = frame::read_u32(buf, frame::offsets::NACK_FRAME_SEQ);
+    let n = frame::read_u16(buf, frame::offsets::NACK_COUNT) as usize;
+    ensure!(buf.len() == prefix + 2 * n, "NACK declares {n} ids in {} bytes", buf.len());
+    let ids = (0..n).map(|i| frame::read_u16(buf, prefix + 2 * i..prefix + 2 * i + 2)).collect();
     Ok((frame_seq, ids))
 }
 
@@ -270,7 +272,10 @@ impl WireFault {
 
     /// Draw this datagram's fate from the seeded program.
     fn decide(&self, len: usize) -> FaultDecision {
-        let mut rng = self.rng.lock().expect("wire-fault rng poisoned");
+        // Poisoned-lock recovery: a panicked holder cannot leave the PRNG
+        // or holdback slot torn (their mutations are panic-free), so the
+        // fault program keeps running instead of cascading the panic.
+        let mut rng = self.rng.lock().unwrap_or_else(|p| p.into_inner());
         FaultDecision {
             drop: rng.next_f64() < self.drop_rate,
             dup: rng.next_f64() < self.dup_rate,
@@ -298,12 +303,10 @@ impl WireFault {
         if d.reorder {
             // Hold this one back; anything already held goes out now, so
             // at most one datagram is ever in the holdback slot.
-            let prev =
-                self.holdback.lock().expect("holdback poisoned").replace((
-                    addr,
-                    wire.to_vec(),
-                    Instant::now(),
-                ));
+            let prev = {
+                let mut slot = self.holdback.lock().unwrap_or_else(|p| p.into_inner());
+                slot.replace((addr, wire.to_vec(), Instant::now()))
+            };
             if let Some((a, b, _)) = prev {
                 socket.send_to(&b, a)?;
             }
@@ -314,7 +317,7 @@ impl WireFault {
             socket.send_to(wire, addr)?;
         }
         // The held-back datagram ships *after* this one: that is the swap.
-        let held = self.holdback.lock().expect("holdback poisoned").take();
+        let held = self.holdback.lock().unwrap_or_else(|p| p.into_inner()).take();
         if let Some((a, b, _)) = held {
             socket.send_to(&b, a)?;
         }
@@ -326,7 +329,7 @@ impl WireFault {
     /// stall recovery).
     fn flush_stale(&self, socket: &UdpSocket, max_age: Duration) {
         let held = {
-            let mut slot = self.holdback.lock().expect("holdback poisoned");
+            let mut slot = self.holdback.lock().unwrap_or_else(|p| p.into_inner());
             match &*slot {
                 Some((_, _, at)) if at.elapsed() >= max_age => slot.take(),
                 _ => None,
@@ -553,7 +556,9 @@ impl UdpTransport {
 
     /// One datagram through the fault program (if any) to `dst`.
     fn wire_send(&self, dst: usize, bytes: &[u8]) -> Result<()> {
-        let addr = self.addrs[dst].expect("mesh invariant: peer address exists");
+        let Some(addr) = self.addrs[dst] else {
+            bail!("mesh invariant violated: no peer address for rank {dst}");
+        };
         let res = match &self.fault {
             Some(f) => f.transmit(&self.socket, addr, bytes),
             None => self.socket.send_to(bytes, addr).map(|_| ()),
@@ -646,7 +651,13 @@ impl Transport for UdpTransport {
         // Pace, then claim a window slot (bounded: the peer's engine ACKs
         // independently of its recv calls, so waiting here cannot deadlock
         // a live mesh — and a dead peer trips the session gate).
-        let (delay, rto) = self.pacer.lock().expect("pacer poisoned").reserve(wire);
+        let (delay, rto) = {
+            // Poisoned-lock recovery (see WireFault::decide): pacer and
+            // window mutations are panic-free, so a peer thread's panic
+            // never cascades into this send path.
+            let mut pacer = self.pacer.lock().unwrap_or_else(|p| p.into_inner());
+            pacer.reserve(wire)
+        };
         if delay >= PACE_MIN_SLEEP {
             self.counters.record_paced_stall();
             thread::sleep(delay);
@@ -654,7 +665,7 @@ impl Transport for UdpTransport {
         let admission_deadline = Instant::now() + WINDOW_FULL_TIMEOUT;
         loop {
             {
-                let mut w = self.windows[dst].lock().expect("window poisoned");
+                let mut w = self.windows[dst].lock().unwrap_or_else(|p| p.into_inner());
                 if w.len() < MAX_WINDOW_FRAMES {
                     let now = Instant::now();
                     let mut backoff = Backoff::new(rto, PROBE_CAP, u64::from(frame_seq) + 1);
@@ -689,6 +700,7 @@ impl Transport for UdpTransport {
         }
         // Forward redundancy: the tail ships twice up front, so the common
         // single-packet tail loss heals without a NACK round-trip.
+        // lint: allow(panic, "chunk_count() >= 1: an empty payload still ships one chunk")
         let tail = datagrams.last().expect("at least one chunk");
         self.wire_send(dst, tail)?;
         self.counters.record_redundancy_bytes(tail.len() as u64);
@@ -700,6 +712,7 @@ impl Transport for UdpTransport {
     fn recv(&self, src: usize) -> Result<Vec<u8>> {
         ensure!(src < self.n, "src rank {src} out of range (n = {})", self.n);
         ensure!(src != self.rank, "self-recv is a local copy, not a transfer");
+        // lint: allow(panic, "mesh invariant: every non-self rank has an inbox")
         let rx = self.inbox[src].as_ref().expect("mesh invariant: peer inbox exists");
         match rx.recv() {
             Ok(result) => {
@@ -720,6 +733,7 @@ impl Transport for UdpTransport {
     fn try_recv(&self, src: usize) -> Result<Option<Vec<u8>>> {
         ensure!(src < self.n, "src rank {src} out of range (n = {})", self.n);
         ensure!(src != self.rank, "self-recv is a local copy, not a transfer");
+        // lint: allow(panic, "mesh invariant: every non-self rank has an inbox")
         let rx = self.inbox[src].as_ref().expect("mesh invariant: peer inbox exists");
         match rx.try_recv() {
             Ok(result) => {
@@ -916,10 +930,15 @@ impl Engine {
         }
         // Complete: validate the reassembled frame against the sub-header's
         // whole-frame length/CRC, then ACK and deliver in frame_seq order.
-        let entry = self.reasm[src].remove(&sub.frame_seq).expect("entry just touched");
+        let Some(entry) = self.reasm[src].remove(&sub.frame_seq) else {
+            return; // unreachable: the entry was touched just above
+        };
         let mut payload = Vec::with_capacity(entry.frame_len as usize);
-        for c in entry.chunks.iter() {
-            payload.extend_from_slice(c.as_ref().expect("all chunks received"));
+        // `received == count` ⇒ every slot is Some; if that invariant ever
+        // broke, flatten() would skip the hole and the length/CRC check
+        // below rejects the short payload instead of panicking the engine.
+        for c in entry.chunks.iter().flatten() {
+            payload.extend_from_slice(c);
         }
         if payload.len() != entry.frame_len as usize || frame::crc32(&payload) != entry.frame_crc {
             // Sender probes will re-ship it; rebuild from scratch.
@@ -945,7 +964,7 @@ impl Engine {
             return;
         };
         let to_send: Vec<Vec<u8>> = {
-            let mut w = self.windows[src].lock().expect("window poisoned");
+            let mut w = self.windows[src].lock().unwrap_or_else(|p| p.into_inner());
             let Some(entry) = w.iter_mut().find(|e| e.frame_seq == frame_seq) else {
                 return; // already ACKed or given up on — stale NACK
             };
@@ -968,20 +987,18 @@ impl Engine {
 
     /// The peer fully received a frame: retire it, feed the pacer.
     fn on_ack(&mut self, src: usize, body: &[u8]) {
-        if body.len() != 4 {
+        if body.len() != frame::offsets::ACK_FRAME_SEQ.end {
             self.counters.record_corrupt_drop();
             return;
         }
-        let frame_seq = u32::from_le_bytes([body[0], body[1], body[2], body[3]]);
+        let frame_seq = frame::read_u32(body, frame::offsets::ACK_FRAME_SEQ);
         let retired = {
-            let mut w = self.windows[src].lock().expect("window poisoned");
-            w.iter()
-                .position(|e| e.frame_seq == frame_seq)
-                .map(|i| w.remove(i).expect("position just found"))
+            let mut w = self.windows[src].lock().unwrap_or_else(|p| p.into_inner());
+            w.iter().position(|e| e.frame_seq == frame_seq).and_then(|i| w.remove(i))
         };
         if let Some(entry) = retired {
             let rtt = entry.sent_at.elapsed();
-            self.pacer.lock().expect("pacer poisoned").on_ack(entry.wire_bytes, rtt);
+            self.pacer.lock().unwrap_or_else(|p| p.into_inner()).on_ack(entry.wire_bytes, rtt);
         }
     }
 
@@ -1057,7 +1074,7 @@ impl Engine {
                 }
                 self.reasm[peer].clear();
                 self.complete[peer].clear();
-                self.windows[peer].lock().expect("window poisoned").clear();
+                self.windows[peer].lock().unwrap_or_else(|p| p.into_inner()).clear();
             } else if quiet >= d / 2 {
                 session.mark_suspect(peer);
             }
@@ -1134,7 +1151,7 @@ impl Engine {
             if dst == self.rank {
                 continue;
             }
-            let mut w = self.windows[dst].lock().expect("window poisoned");
+            let mut w = self.windows[dst].lock().unwrap_or_else(|p| p.into_inner());
             w.retain_mut(|e| {
                 if now < e.next_probe {
                     return true;
@@ -1199,7 +1216,10 @@ fn local_mesh_inner(
                 })
             })
             .collect();
-        joins.into_iter().map(|j| j.join().expect("bootstrap thread panicked")).collect()
+        joins
+            .into_iter()
+            .map(|j| j.join().unwrap_or_else(|_| Err(anyhow!("bootstrap thread panicked"))))
+            .collect()
     });
     results.into_iter().collect()
 }

@@ -1,0 +1,381 @@
+//! flashlint rule tests: true positives and negatives per rule over
+//! inline fixtures, the allow-directive grammar, `#[cfg(test)]` scoping,
+//! and the zero-findings gate over the real tree.
+//!
+//! Fixture paths follow the scanner's `src/`-relative convention, so
+//! scoping (`transport/` vs `model/`, `frame.rs` exemption) is exercised
+//! exactly as in a real run.
+
+use flashcomm::lint::{run, run_on_sources, Finding, Rule};
+
+fn count(findings: &[Finding], rule: Rule) -> usize {
+    findings.iter().filter(|f| f.rule == rule).count()
+}
+
+// ---------------------------------------------------------------- R1 wire
+
+#[test]
+fn wire_rule_flags_drifted_constants() {
+    let src = "\
+pub fn encode(buf: &mut [u8], wire_flags: u8) -> bool {
+    let magic = b\"FCT2\";
+    let hdr = &buf[0..4];
+    let is_heartbeat = wire_flags & 0x01 != 0;
+    magic[0] == hdr[0] && is_heartbeat
+}
+";
+    let findings = run_on_sources(&[("transport/udp.rs", src)]);
+    assert_eq!(count(&findings, Rule::Wire), 3, "{findings:?}");
+}
+
+#[test]
+fn wire_rule_flags_segment_subheader_ranges() {
+    let src = "\
+pub fn parse(buf: &[u8]) {
+    let seq = &buf[12..16];
+    let crc = &buf[20..24];
+    let _ = (seq, crc);
+}
+";
+    let findings = run_on_sources(&[("session/rejoin.rs", src)]);
+    assert_eq!(count(&findings, Rule::Wire), 2, "{findings:?}");
+}
+
+#[test]
+fn wire_rule_exempts_frame_rs_comments_and_unrelated_hex() {
+    let frame = ("transport/frame.rs", "pub const HEARTBEAT: u8 = 0x01; // the flag bits\n");
+    let no_flag_word = ("transport/udp.rs", "const RETRY_MASK: u8 = 0x04;\n");
+    let comment_only = ("comm/ring.rs", "// the magic FCT2 and range [0..4] live in frame.rs\n");
+    let unpinned_range = ("comm/ring.rs", "pub fn f(b: &[u8]) -> &[u8] {\n    &b[1..3]\n}\n");
+    let findings = run_on_sources(&[frame, no_flag_word, comment_only, unpinned_range]);
+    assert_eq!(count(&findings, Rule::Wire), 0, "{findings:?}");
+}
+
+#[test]
+fn wire_rule_skips_test_code() {
+    let src = "\
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn golden() {
+        let buf = [0u8; 28];
+        assert_eq!(&buf[0..4], b\"FCT2\");
+    }
+}
+";
+    let findings = run_on_sources(&[("transport/udp.rs", src)]);
+    assert_eq!(count(&findings, Rule::Wire), 0, "{findings:?}");
+}
+
+// --------------------------------------------------------------- R2 panic
+
+#[test]
+fn panic_rule_flags_unwraps_and_macros() {
+    let src = "\
+pub fn f(x: Option<u8>) -> u8 {
+    let v = x.unwrap();
+    if v > 9 {
+        panic!(\"out of range\");
+    }
+    v
+}
+";
+    let findings = run_on_sources(&[("quant/codec.rs", src)]);
+    assert_eq!(count(&findings, Rule::Panic), 2, "{findings:?}");
+}
+
+#[test]
+fn panic_rule_flags_literal_slice_ranges_and_byte_ctors() {
+    let src = "\
+pub fn g(b: &[u8]) -> u16 {
+    let _ = &b[4..6];
+    u16::from_le_bytes([b[0], b[1]])
+}
+";
+    let findings = run_on_sources(&[("plan/compiler.rs", src)]);
+    assert_eq!(count(&findings, Rule::Panic), 2, "{findings:?}");
+}
+
+#[test]
+fn panic_rule_ignores_out_of_scope_and_benign_tokens() {
+    let out_of_scope = ("model/weights.rs", "pub fn f(x: Option<u8>) -> u8 {\n    x.unwrap()\n}\n");
+    let adapters =
+        ("quant/codec.rs", "pub fn f(x: Option<u8>) -> u8 {\n    x.unwrap_or_else(|| 0)\n}\n");
+    let array_literal = ("quant/codec.rs", "pub fn z() -> [u8; 4] {\n    [0u8; 4]\n}\n");
+    let doc_comment = ("plan/sim.rs", "/// Panics: calls .unwrap() when empty.\npub fn d() {}\n");
+    let findings = run_on_sources(&[out_of_scope, adapters, array_literal, doc_comment]);
+    assert_eq!(count(&findings, Rule::Panic), 0, "{findings:?}");
+}
+
+#[test]
+fn panic_rule_skips_test_code_but_not_production_code_in_the_same_file() {
+    let src = "\
+pub fn f(x: Option<u8>) -> u8 {
+    x.unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        assert_eq!(super::f(Some(1)), Some(1).unwrap());
+    }
+}
+";
+    let findings = run_on_sources(&[("quant/codec.rs", src)]);
+    assert_eq!(count(&findings, Rule::Panic), 1, "{findings:?}");
+    assert_eq!(findings[0].line, 2);
+}
+
+// ---------------------------------------------------------------- R3 lock
+
+#[test]
+fn lock_rule_flags_blocking_calls_under_a_live_guard() {
+    let src = "\
+impl X {
+    fn io_under_guard(&self) {
+        let mut w = self.window.lock().unwrap();
+        w.clear();
+        let _ = self.stream.write_all(b\"frame\");
+    }
+    fn sleep_under_guard(&self) {
+        let g = self.state.lock().unwrap();
+        std::thread::sleep(self.period);
+        drop(g);
+    }
+}
+";
+    let findings = run_on_sources(&[("transport/x.rs", src)]);
+    assert_eq!(count(&findings, Rule::Lock), 2, "{findings:?}");
+    let lock_lines: Vec<usize> =
+        findings.iter().filter(|f| f.rule == Rule::Lock).map(|f| f.line).collect();
+    assert_eq!(lock_lines, vec![5, 9]);
+}
+
+#[test]
+fn lock_rule_respects_scopes_drops_and_temporaries() {
+    let src = "\
+impl X {
+    fn scoped(&self) {
+        {
+            let mut w = self.window.lock().unwrap();
+            w.clear();
+        }
+        let _ = self.stream.write_all(b\"frame\");
+    }
+    fn dropped(&self) {
+        let g = self.state.lock().unwrap();
+        drop(g);
+        let _ = self.sock.send_to(b\"x\", self.addr);
+    }
+    fn temporary(&self) {
+        self.queue.lock().unwrap().push(1);
+        let _ = self.stream.write_all(b\"frame\");
+    }
+    fn mpsc_send_is_fine(&self) {
+        let g = self.state.lock().unwrap();
+        let _ = self.tx.send(1);
+        drop(g);
+    }
+}
+";
+    let findings = run_on_sources(&[("session/s.rs", src)]);
+    assert_eq!(count(&findings, Rule::Lock), 0, "{findings:?}");
+}
+
+// -------------------------------------------------------------- R4 unsafe
+
+#[test]
+fn unsafe_rule_requires_a_safety_comment() {
+    let bare = ("model/a.rs", "pub fn f(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n");
+    let wrong_comment_src = "\
+pub fn g(p: *const u8) -> u8 {
+    // reads a byte
+    unsafe { *p }
+}
+";
+    let findings = run_on_sources(&[bare, ("runtime/b.rs", wrong_comment_src)]);
+    assert_eq!(count(&findings, Rule::Unsafe), 2, "{findings:?}");
+}
+
+#[test]
+fn unsafe_rule_accepts_safety_comments_tests_and_strings() {
+    let above_src = "\
+pub fn f(p: *const u8) -> u8 {
+    // SAFETY: p is valid
+    unsafe { *p }
+}
+";
+    let same_line_src = "\
+pub fn g(p: *const u8) -> u8 {
+    unsafe { *p } // SAFETY: p is valid
+}
+";
+    let in_test_src = "\
+#[cfg(test)]
+mod tests {
+    fn t(p: *const u8) -> u8 {
+        unsafe { *p }
+    }
+}
+";
+    let in_string = ("model/d.rs", "pub fn h() -> &'static str {\n    \"unsafe\"\n}\n");
+    let findings = run_on_sources(&[
+        ("model/a.rs", above_src),
+        ("model/b.rs", same_line_src),
+        ("model/c.rs", in_test_src),
+        in_string,
+    ]);
+    assert_eq!(count(&findings, Rule::Unsafe), 0, "{findings:?}");
+}
+
+// ----------------------------------------------------------------- R5 obs
+
+#[test]
+fn obs_rule_flags_counters_missing_from_the_export() {
+    let transport = (
+        "transport/mod.rs",
+        "pub struct TransportStats {\n    pub messages: u64,\n    pub orphans: u64,\n}\n",
+    );
+    let session =
+        ("session/mod.rs", "pub struct SessionStats {\n    pub heartbeats_sent: u64,\n}\n");
+    let registry =
+        ("telemetry/registry.rs", "pub const KEYS: &[&str] = &[\"messages\"];\n");
+    let findings = run_on_sources(&[transport, session, registry]);
+    assert_eq!(count(&findings, Rule::Obs), 2, "{findings:?}");
+}
+
+#[test]
+fn obs_rule_accepts_exported_counters_in_either_quote_form() {
+    let transport = (
+        "transport/mod.rs",
+        "pub struct TransportStats {\n    pub messages: u64,\n    pub wire_bytes: u64,\n}\n",
+    );
+    let registry_src = "\
+pub fn export() -> String {
+    let head = \"messages\";
+    format!(\"{{\\\"wire_bytes\\\":0}}\", head.len())
+}
+";
+    let findings = run_on_sources(&[transport, ("telemetry/registry.rs", registry_src)]);
+    assert_eq!(count(&findings, Rule::Obs), 0, "{findings:?}");
+}
+
+#[test]
+fn obs_rule_is_skipped_without_a_registry_source() {
+    let transport = (
+        "transport/mod.rs",
+        "pub struct TransportStats {\n    pub messages: u64,\n}\n",
+    );
+    let findings = run_on_sources(&[transport]);
+    assert_eq!(count(&findings, Rule::Obs), 0, "{findings:?}");
+}
+
+// -------------------------------------------------------- allow directives
+
+#[test]
+fn allow_on_the_same_line_suppresses() {
+    let src = "\
+pub fn f(x: Option<u8>) -> u8 {
+    x.unwrap() // lint: allow(panic, \"checked by the caller\")
+}
+";
+    let findings = run_on_sources(&[("quant/codec.rs", src)]);
+    assert_eq!(count(&findings, Rule::Panic), 0, "{findings:?}");
+}
+
+#[test]
+fn allow_on_the_preceding_comment_line_suppresses() {
+    let src = "\
+pub fn f(x: Option<u8>) -> u8 {
+    // lint: allow(panic, \"checked by the caller\")
+    x.unwrap()
+}
+";
+    let findings = run_on_sources(&[("quant/codec.rs", src)]);
+    assert_eq!(count(&findings, Rule::Panic), 0, "{findings:?}");
+}
+
+#[test]
+fn malformed_or_mismatched_allows_suppress_nothing() {
+    let no_reason = "pub fn f(x: Option<u8>) -> u8 {\n    x.unwrap() // lint: allow(panic)\n}\n";
+    let wrong_rule =
+        "pub fn f(x: Option<u8>) -> u8 {\n    x.unwrap() // lint: allow(lock, \"nope\")\n}\n";
+    let unknown_rule =
+        "pub fn f(x: Option<u8>) -> u8 {\n    x.unwrap() // lint: allow(bogus, \"nope\")\n}\n";
+    let too_far = "\
+pub fn f(x: Option<u8>) -> u8 {
+    // lint: allow(panic, \"not adjacent\")
+    let y = x;
+    y.unwrap()
+}
+";
+    for (i, src) in [no_reason, wrong_rule, unknown_rule, too_far].into_iter().enumerate() {
+        let findings = run_on_sources(&[("quant/codec.rs", src)]);
+        assert_eq!(count(&findings, Rule::Panic), 1, "fixture {i}: {findings:?}");
+    }
+}
+
+#[test]
+fn allow_in_a_string_literal_does_not_suppress() {
+    let src = "\
+pub fn f(x: Option<u8>) -> u8 {
+    let _msg = \"lint: allow(panic, \\\"in a string\\\")\";
+    x.unwrap()
+}
+";
+    let findings = run_on_sources(&[("quant/codec.rs", src)]);
+    assert_eq!(count(&findings, Rule::Panic), 1, "{findings:?}");
+}
+
+// ---------------------------------------------------------- corpus + tree
+
+/// One mixed fixture corpus with a known per-rule census — the shape the
+/// CI gate sees when something regresses.
+#[test]
+fn fixture_corpus_has_the_expected_per_rule_counts() {
+    let udp_src = "\
+pub fn f(buf: &[u8], wire_flags: u8) -> bool {
+    let m = &buf[0..4];
+    m[0] == 1 && wire_flags & 0x02 != 0
+}
+";
+    let session_src = "\
+impl X {
+    fn h(&self) {
+        let g = self.state.lock().unwrap();
+        let _ = self.stream.write_all(b\"x\");
+        drop(g);
+    }
+}
+";
+    let corpus: &[(&str, &str)] = &[
+        ("transport/udp.rs", udp_src),
+        ("quant/codec.rs", "pub fn g(x: Option<u8>) -> u8 {\n    x.unwrap()\n}\n"),
+        ("session/s.rs", session_src),
+        ("model/m.rs", "pub fn u(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n"),
+        (
+            "transport/mod.rs",
+            "pub struct TransportStats {\n    pub messages: u64,\n    pub orphans: u64,\n}\n",
+        ),
+        ("telemetry/registry.rs", "pub const KEYS: &[&str] = &[\"messages\"];\n"),
+    ];
+    let findings = run_on_sources(corpus);
+    assert_eq!(count(&findings, Rule::Wire), 2, "{findings:?}"); // range + flag hex
+    // udp range is also a panic-index; session lock().unwrap() is a panic.
+    assert_eq!(count(&findings, Rule::Panic), 3, "{findings:?}");
+    assert_eq!(count(&findings, Rule::Lock), 1, "{findings:?}");
+    assert_eq!(count(&findings, Rule::Unsafe), 1, "{findings:?}");
+    assert_eq!(count(&findings, Rule::Obs), 1, "{findings:?}");
+    assert_eq!(findings.len(), 8, "{findings:?}");
+}
+
+/// The real tree must be clean — this is the same gate CI runs via
+/// `flashcomm lint`.
+#[test]
+fn the_real_tree_has_zero_findings() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let report = run(root).expect("lint run over the real tree");
+    assert!(report.files > 30, "suspiciously few files scanned: {}", report.files);
+    assert!(report.findings.is_empty(), "\n{}", report.render_text());
+}
