@@ -26,7 +26,7 @@ use flashcomm::plan;
 use flashcomm::quant::Codec;
 use flashcomm::session::SessionConfig;
 use flashcomm::sim;
-use flashcomm::telemetry::{Op, DEFAULT_CAPACITY};
+use flashcomm::telemetry::{self, Op, DEFAULT_CAPACITY};
 use flashcomm::topo::{presets, Topology};
 use flashcomm::transport::{tcp, udp, Transport, FRAME_HEADER_LEN};
 use flashcomm::util::timer::{bench, fmt_bytes, fmt_nanos};
@@ -403,9 +403,11 @@ fn plan_sweep() {
 
 /// Flight-recorder overhead: the same hierarchical AllReduce with the
 /// recorder off vs on (default-capacity ring), plus the hottest recorded
-/// span series from the metrics registry. Emits `BENCH_telemetry.json`
-/// so the observability tax has a recorded baseline; `-- --telemetry`
-/// runs only this section (the CI smoke).
+/// span series from the metrics registry, plus the fabric-trace post-pass
+/// (clock-aligned merge + critical-path analysis, DESIGN.md §15) so the
+/// launcher's per-run merge cost has a baseline too. Emits
+/// `BENCH_telemetry.json` so the observability tax has a recorded
+/// baseline; `-- --telemetry` runs only this section (the CI smoke).
 fn telemetry_overhead() {
     let ranks = 8usize;
     let elems = 1usize << 18;
@@ -464,6 +466,42 @@ fn telemetry_overhead() {
     let off_ms = wall(false);
     let on_ms = wall(true);
     println!("  recording overhead: {:+.1}% wall", (on_ms - off_ms) / off_ms * 100.0);
+
+    // The fabric-trace post-pass: what the worker launcher pays per run to
+    // merge every rank's trace into one timeline and walk the critical
+    // path (DESIGN.md §15). In-process ranks share one clock origin, so
+    // the merged trace is clean by construction — any straggler here
+    // would be a real scheduling artifact worth seeing in the output.
+    let mut group = LocalGroup::new(&topo, AlgoPolicy::Fixed(Algo::Hier)).unwrap();
+    group.enable_recording(DEFAULT_CAPACITY);
+    let mut data = inputs.clone();
+    group.allreduce(&mut data, &codec).unwrap();
+    let traces = group.rank_traces();
+    let merged = telemetry::merge_traces(&traces).unwrap();
+    let m = bench(1, 5, || {
+        let again = telemetry::merge_traces(&traces).unwrap();
+        let report = telemetry::analyze(&traces);
+        assert!(again.spans == merged.spans && report.total_wall_nanos > 0);
+    });
+    println!(
+        "  trace merge + analyze: {:>8.2} ms   {} spans, {} flow arrows, {}",
+        m.secs() * 1e3,
+        merged.spans,
+        merged.flows,
+        fmt_bytes(merged.json.len())
+    );
+    records.push(format!(
+        concat!(
+            "  {{\"case\": \"trace_merge_analyze\", \"ranks\": {}, \"spans\": {}, ",
+            "\"flows\": {}, \"merged_json_bytes\": {}, \"wall_ms\": {:.3}}}"
+        ),
+        ranks,
+        merged.spans,
+        merged.flows,
+        merged.json.len(),
+        m.secs() * 1e3
+    ));
+
     let json = format!("[\n{}\n]\n", records.join(",\n"));
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_telemetry.json");
     match std::fs::write(path, json) {

@@ -166,6 +166,21 @@ pub fn wire_fault_flags(args: &Args, sel: TransportSel) -> Result<Option<WireFau
     Ok(Some(WireFaultSpec { seed, rate }))
 }
 
+/// Resolve `--trace-capacity` (events per rank in the telemetry ring;
+/// defaults to [`crate::telemetry::Recorder`]'s built-in capacity). Zero
+/// is rejected loudly: a zero-slot ring records nothing and every span
+/// the run emits would silently count as dropped.
+pub fn trace_capacity_flag(args: &Args) -> Result<usize> {
+    let cap = args.flag_usize("trace-capacity", crate::telemetry::DEFAULT_CAPACITY)?;
+    ensure!(
+        cap > 0,
+        "--trace-capacity 0: a zero-slot trace ring drops every event; omit the flag \
+         for the default ({})",
+        crate::telemetry::DEFAULT_CAPACITY
+    );
+    Ok(cap)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -220,6 +235,17 @@ mod tests {
             transport_flag(&parse("train --transport udp"), &[TransportSel::InProc]).unwrap_err();
         assert!(err.to_string().contains("not supported"), "{err}");
         assert!(err.to_string().contains("inproc"), "{err}");
+    }
+
+    #[test]
+    fn trace_capacity_defaults_parses_and_rejects_zero() {
+        let cap = trace_capacity_flag(&parse("worker")).unwrap();
+        assert_eq!(cap, crate::telemetry::DEFAULT_CAPACITY);
+        let cap = trace_capacity_flag(&parse("worker --trace-capacity 128")).unwrap();
+        assert_eq!(cap, 128);
+        let err = trace_capacity_flag(&parse("worker --trace-capacity 0")).unwrap_err();
+        assert!(err.to_string().contains("zero-slot"), "{err}");
+        assert!(trace_capacity_flag(&parse("worker --trace-capacity lots")).is_err());
     }
 
     #[test]

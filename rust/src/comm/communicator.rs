@@ -118,7 +118,7 @@ impl<T: Transport> Communicator<T> {
     }
 
     /// Turn the flight recorder on: a fresh per-rank ring holding the
-    /// newest `capacity` events (≈ 48 bytes each; see
+    /// newest `capacity` events (56 bytes each; see
     /// [`crate::telemetry::DEFAULT_CAPACITY`]). The fabric layer starts
     /// recording `Send`/`Recv` spans, the collectives their codec spans,
     /// and [`allreduce_plan`](Communicator::allreduce_plan) the enclosing
@@ -126,6 +126,20 @@ impl<T: Transport> Communicator<T> {
     /// observes, it never participates (pinned by tests).
     pub fn enable_recording(&mut self, capacity: usize) {
         self.handle.set_recorder(Some(Arc::new(Recorder::new(self.handle.rank, capacity))));
+    }
+
+    /// [`enable_recording`](Communicator::enable_recording) with an
+    /// explicit clock origin. Ranks sharing one process pass the same
+    /// `Instant` ([`LocalGroup::enable_recording`] does), so their
+    /// recorder timelines share a timebase and merge with zero clock
+    /// offset by construction; multi-process ranks use
+    /// [`crate::session::sync_clocks`] instead.
+    pub fn enable_recording_from(&mut self, capacity: usize, origin: std::time::Instant) {
+        self.handle.set_recorder(Some(Arc::new(Recorder::with_origin(
+            self.handle.rank,
+            capacity,
+            origin,
+        ))));
     }
 
     /// Turn the flight recorder off and drop its ring.
@@ -143,6 +157,13 @@ impl<T: Transport> Communicator<T> {
     /// [`crate::telemetry::trace_json`].
     pub fn trace_json(&self) -> Option<String> {
         self.handle.recorder().map(telemetry::trace_json)
+    }
+
+    /// This rank's recorded trace as a typed [`telemetry::RankTrace`]
+    /// (`None` while recording is disabled) — the input unit of the
+    /// fabric trace merge and critical-path analysis (DESIGN.md §15).
+    pub fn rank_trace(&self) -> Option<telemetry::RankTrace> {
+        self.handle.recorder().map(telemetry::RankTrace::from_recorder)
     }
 
     /// Let the fused codec kernels chunk large payloads across up to
@@ -372,6 +393,7 @@ impl<T: Transport> Communicator<T> {
         let mut reg = MetricsRegistry::new();
         if let Some(rec) = self.handle.recorder() {
             reg.absorb_events(&rec.events());
+            reg.absorb_recorder(rec);
         }
         reg.absorb_fabric(self.counters().snapshot());
         reg.absorb_transport(self.transport().stats());
@@ -736,11 +758,15 @@ impl LocalGroup {
         self.comms[0].counters()
     }
 
-    /// Turn the flight recorder on for every rank
-    /// ([`Communicator::enable_recording`]).
+    /// Turn the flight recorder on for every rank, all sharing **one**
+    /// clock origin ([`Communicator::enable_recording_from`]): in-process
+    /// ranks live in one address space, so their merged fabric trace
+    /// needs no probe exchange — the clock offsets are zero by
+    /// construction.
     pub fn enable_recording(&mut self, capacity: usize) {
+        let origin = std::time::Instant::now();
         for c in &mut self.comms {
-            c.enable_recording(capacity);
+            c.enable_recording_from(capacity, origin);
         }
     }
 
@@ -754,6 +780,20 @@ impl LocalGroup {
         self.comms.iter().filter_map(Communicator::trace_json).collect()
     }
 
+    /// Per-rank typed traces, in rank order (empty while recording is
+    /// off) — ready for [`telemetry::merge_traces`] /
+    /// [`telemetry::analyze`].
+    pub fn rank_traces(&self) -> Vec<telemetry::RankTrace> {
+        self.comms.iter().filter_map(Communicator::rank_trace).collect()
+    }
+
+    /// Critical-path and straggler analysis over the group's merged
+    /// timeline ([`telemetry::analyze`]; empty report while recording is
+    /// off).
+    pub fn fabric_report(&self) -> telemetry::FabricReport {
+        telemetry::analyze(&self.rank_traces())
+    }
+
     /// Group-wide metrics: every rank's recorded spans, plan-cache
     /// counters, transport counters, and last resolved plan folded into
     /// one registry, plus the (group-shared) fabric counters absorbed
@@ -763,6 +803,7 @@ impl LocalGroup {
         for c in &self.comms {
             if let Some(rec) = c.recorder() {
                 reg.absorb_events(&rec.events());
+                reg.absorb_recorder(rec);
             }
             reg.absorb_transport(c.transport().stats());
             reg.absorb_plan_cache(c.plan_cache_stats());
@@ -771,21 +812,19 @@ impl LocalGroup {
             }
         }
         reg.absorb_fabric(self.counters().snapshot());
+        reg.absorb_stragglers(&self.fabric_report().stragglers);
         reg.snapshot()
     }
 
-    /// Distill one [`MeasuredProfile`] from every rank's trace and
-    /// install it on every rank, so subsequent `--plan auto` resolution
-    /// prices the measured rates. `None` (and no change) when nothing
-    /// measurable was recorded.
+    /// Distill one [`MeasuredProfile`] from the group's merged fabric
+    /// timeline ([`telemetry::distill_fabric_profile`]: the median of
+    /// per-span rates across every rank, robust to a straggler that a
+    /// pooled per-rank distillation would average into the bandwidth
+    /// estimate) and install it on every rank, so subsequent
+    /// `--plan auto` resolution prices the fabric critical path. `None`
+    /// (and no change) when nothing measurable was recorded.
     pub fn recalibrate_from_recorders(&mut self) -> Option<MeasuredProfile> {
-        let mut events = Vec::new();
-        for c in &self.comms {
-            if let Some(rec) = c.recorder() {
-                events.extend(rec.events());
-            }
-        }
-        let profile = telemetry::distill_profile(&events);
+        let profile = telemetry::distill_fabric_profile(&self.rank_traces());
         if profile.is_empty() {
             return None;
         }

@@ -15,7 +15,7 @@ use std::sync::Arc;
 
 use crate::comm::error::CommError;
 use crate::session::find_peer_lost;
-use crate::telemetry::{Op, Recorder};
+use crate::telemetry::{Kind, Op, Recorder};
 use crate::topo::Topology;
 use crate::transport::{inproc, InProcTransport, Transport};
 
@@ -106,6 +106,15 @@ pub struct RankHandle<T: Transport = InProcTransport> {
     /// default) keeps the hot path at a single untaken branch per
     /// send/recv.
     recorder: Option<Arc<Recorder>>,
+    /// Per-destination ordinal of *recorded* sends. Because recording is
+    /// enabled before any collective traffic (and the transports are
+    /// per-link FIFO), ordinal `q` on this side's link to `dst` names the
+    /// same message as ordinal `q` of `dst`'s receives from us — the
+    /// identity the fabric trace merge uses to draw send→recv flow
+    /// arrows (DESIGN.md §15). Untouched when no recorder is installed.
+    send_seq: Vec<AtomicU64>,
+    /// Per-source ordinal of recorded receives (see `send_seq`).
+    recv_seq: Vec<AtomicU64>,
 }
 
 impl<T: Transport> RankHandle<T> {
@@ -121,13 +130,16 @@ impl<T: Transport> RankHandle<T> {
             topo.n_gpus,
             transport.n()
         );
+        let n = transport.n();
         RankHandle {
             rank: transport.rank(),
-            n: transport.n(),
+            n,
             topo,
             transport,
             counters,
             recorder: None,
+            send_seq: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            recv_seq: (0..n).map(|_| AtomicU64::new(0)).collect(),
         }
     }
 
@@ -157,9 +169,18 @@ impl<T: Transport> RankHandle<T> {
             self.counters.cross_numa.fetch_add(bytes.len() as u64, Ordering::Relaxed);
         }
         let len = bytes.len() as u64;
-        crate::record!(self.recorder(), start Op::Send, len);
+        // Link-stamped Send span: same two events as before (the pinned
+        // per-rank counts must not move), now carrying (dst, ordinal) so
+        // the trace merge can pair this send with the peer's recv.
+        let link = self.recorder().map(|rec| {
+            let q = self.send_seq[dst].fetch_add(1, Ordering::Relaxed);
+            rec.record_link(Kind::Start, Op::Send, len, dst as u16, q);
+            q
+        });
         let sent = self.transport.send(dst, bytes).map_err(|e| self.classify(dst, e, true));
-        crate::record!(self.recorder(), end Op::Send, len);
+        if let (Some(rec), Some(q)) = (self.recorder(), link) {
+            rec.record_link(Kind::End, Op::Send, len, dst as u16, q);
+        }
         sent
     }
 
@@ -171,10 +192,16 @@ impl<T: Transport> RankHandle<T> {
     /// instead, so survivors can re-plan over the remaining membership.
     pub fn recv(&self, src: usize) -> Result<Vec<u8>, CommError> {
         assert_ne!(src, self.rank);
-        crate::record!(self.recorder(), start Op::Recv);
+        let link = self.recorder().map(|rec| {
+            let q = self.recv_seq[src].fetch_add(1, Ordering::Relaxed);
+            rec.record_link(Kind::Start, Op::Recv, 0, src as u16, q);
+            q
+        });
         let got = self.transport.recv(src).map_err(|e| self.classify(src, e, false));
         if let Ok(bytes) = &got {
-            crate::record!(self.recorder(), end Op::Recv, bytes.len() as u64);
+            if let (Some(rec), Some(q)) = (self.recorder(), link) {
+                rec.record_link(Kind::End, Op::Recv, bytes.len() as u64, src as u16, q);
+            }
         }
         got
     }
@@ -382,6 +409,14 @@ mod tests {
         assert_eq!(recvs[0].bytes, 0, "recv start cannot know the payload yet");
         assert_eq!((recvs[1].kind, recvs[1].op), (Kind::End, Op::Recv));
         assert_eq!(recvs[1].bytes, 48);
+        // Link identity: send (0→1, ordinal 0) pairs with recv (from 0,
+        // ordinal 0) — the flow-arrow key of the fabric trace merge.
+        for e in &sends {
+            assert_eq!(e.link, Some((1, 0)), "{e:?}");
+        }
+        for e in &recvs {
+            assert_eq!(e.link, Some((0, 0)), "{e:?}");
+        }
     }
 
     #[test]

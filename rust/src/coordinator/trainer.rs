@@ -44,6 +44,9 @@ pub struct TrainOptions {
     /// every gradient AllReduce and [`Trainer::train`] writes one trace JSON
     /// per rank to `{trace_out}.rank{r}` after the last step.
     pub trace_out: Option<String>,
+    /// Recorder ring size per rank (`--trace-capacity` on the CLI; the
+    /// CLI layer rejects 0 before it gets here).
+    pub trace_capacity: usize,
 }
 
 impl Default for TrainOptions {
@@ -60,6 +63,7 @@ impl Default for TrainOptions {
             eval_every: 0,
             eval_batches: 8,
             trace_out: None,
+            trace_capacity: crate::telemetry::DEFAULT_CAPACITY,
         }
     }
 }
@@ -152,7 +156,7 @@ impl Trainer {
                 None => LocalGroup::for_policy_grouped(opts.dp, opts.groups, opts.algo)?,
             };
             if opts.trace_out.is_some() {
-                group.enable_recording(crate::telemetry::DEFAULT_CAPACITY);
+                group.enable_recording(opts.trace_capacity);
             }
             self.group = Some((key, group));
         }

@@ -4,17 +4,23 @@
 //! reach the telemetry registry's JSON export: a counter that exists but
 //! never leaves the process is a debugging session waiting to be lost.
 //! The rule extracts the public field names of `TransportStats`
-//! (`transport/mod.rs`) and `SessionStats` (`session/mod.rs`) and
-//! requires each to appear, quoted, in `telemetry/registry.rs` — the one
-//! snapshot/export path. Skipped entirely when the registry source is
-//! not part of the scanned set (fixture runs).
+//! (`transport/mod.rs`), `SessionStats` (`session/mod.rs`),
+//! `ClockSyncStats` (`telemetry/trace.rs`), and `StragglerReport`
+//! (`telemetry/analyze.rs`) and requires each to appear, quoted, in
+//! `telemetry/registry.rs` — the one snapshot/export path. Skipped
+//! entirely when the registry source is not part of the scanned set
+//! (fixture runs).
 
 use super::lexer::LexLine;
 use super::{Finding, Rule};
 
 const REGISTRY: &str = "telemetry/registry.rs";
-const STRUCTS: [(&str, &str); 2] =
-    [("transport/mod.rs", "TransportStats"), ("session/mod.rs", "SessionStats")];
+const STRUCTS: [(&str, &str); 4] = [
+    ("transport/mod.rs", "TransportStats"),
+    ("session/mod.rs", "SessionStats"),
+    ("telemetry/trace.rs", "ClockSyncStats"),
+    ("telemetry/analyze.rs", "StragglerReport"),
+];
 
 pub fn check(files: &[(String, Vec<LexLine>)], out: &mut Vec<Finding>) {
     let Some((_, reg_lines)) = files.iter().find(|(p, _)| p == REGISTRY) else {

@@ -23,7 +23,8 @@
 //!                   [--kill-rank R [--kill-after-ms M]] [--rejoin-rank R]
 //! flashcomm metrics [--ranks N] [--groups G] [--codec spec] [--len N]
 //!                   [--iters K] [--plan auto|spec] [--out path]
-//!                   [--trace-out path]
+//!                   [--trace-out path] [--serve addr [--serve-max N]]
+//! flashcomm trace merge <file...> [--out path]
 //! flashcomm info
 //! ```
 //!
@@ -41,8 +42,16 @@
 //! `--inter-gbps F` models G NVLink nodes joined by an F GB/s link;
 //! `--bind ip` lets worker data sockets leave loopback (DESIGN.md §4).
 //! `--trace-out p` turns on the flight recorder and writes one JSON trace
-//! per rank to `p.rankR` (schema: DESIGN.md §11); `metrics` runs a small
-//! recorded in-process demo and prints the aggregated metrics snapshot.
+//! per rank to `p.rankR` (schema: DESIGN.md §11); `--trace-capacity N`
+//! sizes the per-rank event ring (0 is rejected). The worker launcher
+//! additionally clock-aligns and merges the per-rank traces into one
+//! Chrome-trace `p.merged.json` with send→recv flow arrows, prints the
+//! fabric critical-path / straggler report, and recalibrates the cost
+//! model from the *fabric* view (DESIGN.md §15); `trace merge` does the
+//! same merge offline from saved trace files. `metrics` runs a small
+//! recorded in-process demo and prints the aggregated metrics snapshot;
+//! `--serve addr` then serves it as a Prometheus text-exposition scrape
+//! endpoint for `--serve-max` requests.
 //! `--heartbeat-ms H` / `--comm-timeout-ms T` configure the session fabric
 //! (DESIGN.md §12): heartbeats every `H` ms, a silent peer is declared
 //! Lost at `T` ms and every survivor gets a typed `PeerLost` instead of
@@ -69,7 +78,7 @@ use flashcomm::plan::{CommPlan, PlanPins, PlanPolicy};
 use flashcomm::quant::Codec;
 use flashcomm::runtime::{default_artifacts_dir, Runtime};
 use flashcomm::session::{self, SessionConfig};
-use flashcomm::telemetry::DEFAULT_CAPACITY;
+use flashcomm::telemetry::{self, MetricsSnapshot};
 use flashcomm::transport::{frame, tcp, Transport, WireFault};
 use flashcomm::util::Prng;
 
@@ -100,6 +109,7 @@ fn run(args: &Args) -> Result<()> {
         }
         "worker" => cmd_worker(args),
         "metrics" => cmd_metrics(args),
+        "trace" => cmd_trace(args),
         "lint" => cmd_lint(args),
         "info" => cmd_info(),
         "" | "help" | "--help" => {
@@ -206,7 +216,12 @@ commands:
                       (spawns one OS process per rank; verifies bit-identical
                       results vs the in-process backend)
   metrics             recorded in-process AllReduce demo; prints the
-                      aggregated metrics snapshot as JSON on stdout
+                      aggregated metrics snapshot as JSON on stdout;
+                      --serve ADDR serves it as a Prometheus text scrape
+                      endpoint for --serve-max requests (default 1)
+  trace merge <f...>  clock-align per-rank trace files into one Chrome-trace
+                      JSON (--out path, else stdout) and print the fabric
+                      critical-path / straggler report on stderr
   lint                flashlint static analysis over this repo's sources
                       (wire/panic/lock/unsafe/obs rules, DESIGN.md §14);
                       [--root DIR] [--json]; exits non-zero on findings
@@ -247,8 +262,125 @@ faults: --kill-rank R [--kill-after-ms M] — launcher-only drill: SIGKILL
       epoch 1 and the post-rejoin AllReduce must match InProc bit-for-bit
 trace: --trace-out P — flight-record every collective and write one JSON
       trace per rank to P.rankR (train / eval / worker / metrics;
-      schema + recalibration formula in DESIGN.md §11)
+      schema + recalibration formula in DESIGN.md §11);
+      --trace-capacity N — events per rank in the recorder ring (default
+      4096; 0 rejected). The worker launcher also clock-syncs the ranks
+      (NTP-style probes over the data plane), merges the traces into
+      P.merged.json with send->recv flow arrows, prints the straggler
+      report, and recalibrates from the fabric critical path
+      (DESIGN.md §15)
 ";
+
+/// `flashcomm trace merge <file...> [--out path]` — clock-align saved
+/// per-rank trace files into one fabric-wide Chrome-trace JSON
+/// (`chrome://tracing` / Perfetto), plus the critical-path / straggler
+/// report on stderr. The merged JSON goes to `--out` or stdout, so the
+/// report never pollutes a piped merge.
+fn cmd_trace(args: &Args) -> Result<()> {
+    let sub = args.pos(0).context("usage: flashcomm trace merge <file...> [--out path]")?;
+    ensure!(
+        sub == "merge",
+        "unknown trace subcommand '{sub}' (try `flashcomm trace merge <file...>`)"
+    );
+    let files = &args.positional[1..];
+    ensure!(
+        !files.is_empty(),
+        "trace merge: pass the per-rank trace files (e.g. `flashcomm trace merge t.json.rank*`)"
+    );
+    let mut traces = Vec::with_capacity(files.len());
+    for f in files {
+        let text = std::fs::read_to_string(f).with_context(|| format!("reading {f}"))?;
+        traces.push(telemetry::parse_trace(&text).with_context(|| format!("parsing {f}"))?);
+    }
+    let merged = telemetry::merge_traces(&traces)?;
+    for w in &merged.warnings {
+        eprintln!("warning: {w}");
+    }
+    let report = telemetry::analyze(&traces);
+    for line in report.summary_lines() {
+        eprintln!("{line}");
+    }
+    if report.is_clean() {
+        eprintln!("straggler report: clean");
+    }
+    match args.flag("out") {
+        Some(path) => {
+            std::fs::write(path, &merged.json).with_context(|| format!("writing {path}"))?;
+            eprintln!(
+                "merged fabric trace written to {path} ({} ranks, {} spans, {} flow arrows)",
+                merged.ranks, merged.spans, merged.flows
+            );
+        }
+        None => println!("{}", merged.json),
+    }
+    Ok(())
+}
+
+/// The worker launcher's post-run merge: read back every rank's trace
+/// file, clock-align and merge them to `{path}.merged.json`, and print
+/// the fabric critical-path / straggler report plus the fabric-wide
+/// recalibration (the straggler-robust per-tier medians of DESIGN.md
+/// §15, vs each rank's pooled local estimate).
+fn merge_worker_traces(path: &str, world: usize) -> Result<()> {
+    let mut traces = Vec::with_capacity(world);
+    for r in 0..world {
+        let file = format!("{path}.rank{r}");
+        let text =
+            std::fs::read_to_string(&file).with_context(|| format!("reading trace {file}"))?;
+        traces.push(telemetry::parse_trace(&text).with_context(|| format!("parsing trace {file}"))?);
+    }
+    let merged = telemetry::merge_traces(&traces)?;
+    for w in &merged.warnings {
+        eprintln!("warning: {w}");
+    }
+    let out = format!("{path}.merged.json");
+    std::fs::write(&out, &merged.json).with_context(|| format!("writing {out}"))?;
+    println!(
+        "merged fabric trace written to {out} ({} ranks, {} spans, {} flow arrows)",
+        merged.ranks, merged.spans, merged.flows
+    );
+    let report = telemetry::analyze(&traces);
+    for line in report.summary_lines() {
+        println!("{line}");
+    }
+    if report.is_clean() {
+        println!("straggler report: clean");
+    }
+    let fabric = telemetry::distill_fabric_profile(&traces);
+    if !fabric.is_empty() {
+        println!("fabric recalibration: {}", fabric.summary());
+    }
+    Ok(())
+}
+
+/// `metrics --serve ADDR [--serve-max N]` — the zero-dependency scrape
+/// endpoint: serve the snapshot's Prometheus text exposition over bare
+/// `std::net::TcpListener` HTTP for `max_requests` connections, then
+/// return. Any request gets the one snapshot (the demo has already run;
+/// there is nothing fresher to compute).
+fn serve_metrics(addr: &str, snap: &MetricsSnapshot, max_requests: usize) -> Result<()> {
+    use std::io::{Read as _, Write as _};
+    let listener = std::net::TcpListener::bind(addr)
+        .with_context(|| format!("binding the metrics endpoint at {addr}"))?;
+    let local = listener.local_addr()?;
+    let body = snap.to_prometheus();
+    eprintln!("serving Prometheus metrics on http://{local}/metrics ({max_requests} scrape(s))");
+    for _ in 0..max_requests {
+        let (mut stream, _) = listener.accept().context("accepting a scrape connection")?;
+        // Best-effort request drain: a scraper sends one small GET; the
+        // response is the same snapshot whatever the path or method.
+        let mut buf = [0u8; 1024];
+        let _ = stream.read(&mut buf);
+        let resp = format!(
+            "HTTP/1.1 200 OK\r\nContent-Type: text/plain; version=0.0.4; charset=utf-8\r\n\
+             Content-Length: {}\r\nConnection: close\r\n\r\n{}",
+            body.len(),
+            body
+        );
+        stream.write_all(resp.as_bytes()).context("writing the scrape response")?;
+    }
+    Ok(())
+}
 
 /// `flashcomm lint [--root DIR] [--json]` — run flashlint over the crate
 /// at `--root` (default: the current directory, falling back to `rust/`
@@ -314,6 +446,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         eval_batches: args.flag_usize("eval-batches", 8)?,
         seed: args.flag_usize("seed", 7)? as u64,
         trace_out: args.flag("trace-out").map(str::to_string),
+        trace_capacity: cli::trace_capacity_flag(args)?,
     };
     let policy_label = match &opts.plan {
         Some(p) => format!("plan {p}"),
@@ -379,7 +512,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
         TpEngine::new_grouped(rt, cfg, &weights, codec, policy, groups_flag(args)?, plan)?;
     let trace_out = args.flag("trace-out").map(str::to_string);
     if trace_out.is_some() {
-        engine.enable_recording(DEFAULT_CAPACITY);
+        engine.enable_recording(cli::trace_capacity_flag(args)?);
     }
     let policy_label = match &plan {
         Some(p) => format!("--plan {p}"),
@@ -466,8 +599,11 @@ struct WorkerOpts {
     plan: Option<String>,
     pins: PlanPins,
     /// When set, every rank flight-records its collectives and writes the
-    /// trace JSON to `{trace_out}.rank{R}` before exiting.
+    /// trace JSON to `{trace_out}.rank{R}` before exiting; the launcher
+    /// then merges them into `{trace_out}.merged.json`.
     trace_out: Option<String>,
+    /// Recorder ring size per rank (`--trace-capacity`; 0 rejected).
+    trace_capacity: usize,
     /// Session-fabric pair (`--heartbeat-ms` / `--comm-timeout-ms`; both 0
     /// disables liveness, which is rejected once `--bind` leaves loopback
     /// — a multi-host run with no deadline hangs forever when a host dies).
@@ -507,6 +643,7 @@ impl WorkerOpts {
             plan: args.flag("plan").map(str::to_string),
             pins: pins_flags(args)?,
             trace_out: args.flag("trace-out").map(str::to_string),
+            trace_capacity: cli::trace_capacity_flag(args)?,
             heartbeat_ms: args.flag_usize("heartbeat-ms", 250)? as u64,
             comm_timeout_ms: args.flag_usize("comm-timeout-ms", 1000)? as u64,
             iters: args.flag_usize("iters", 1)?,
@@ -667,6 +804,7 @@ fn worker_launch(opts: &WorkerOpts, args: &Args) -> Result<()> {
         }
         if let Some(t) = &opts.trace_out {
             cmd.args(["--trace-out", t]);
+            cmd.args(["--trace-capacity", &opts.trace_capacity.to_string()]);
         }
         if let Some(c) = opts.pins.chunks {
             cmd.args(["--chunks", &c.to_string()]);
@@ -694,6 +832,9 @@ fn worker_launch(opts: &WorkerOpts, args: &Args) -> Result<()> {
         }
     }
     ensure!(!failed, "one or more worker ranks failed");
+    if let (Some(path), None) = (&opts.trace_out, opts.rejoin_rank) {
+        merge_worker_traces(path, opts.world)?;
+    }
     match opts.rejoin_rank {
         Some(r) => println!(
             "all {} ranks rejoined at epoch 1 after rank {r} restarted; the post-rejoin \
@@ -843,11 +984,28 @@ fn worker_rank_run<T: Transport>(
 ) -> Result<()> {
     let world = opts.world;
     let len = opts.len;
+    // One origin for the recorder clock *and* the sync probes, so the
+    // offsets installed below translate this rank's timestamps straight
+    // onto rank 0's timeline at merge time (DESIGN.md §15).
+    let origin = Instant::now();
+    let now = move || origin.elapsed().as_nanos() as u64;
+    let recording = opts.trace_out.is_some();
+    // Piggyback the clock sync on session establish, on the raw data
+    // plane: probes record no telemetry events, so the closed-form
+    // per-rank event counts stay exact.
+    let clock = if recording {
+        Some(session::sync_clocks(&transport, 0, 8, &now).context("clock sync at establish")?)
+    } else {
+        None
+    };
     let mut comm =
         Communicator::new(transport, topo.clone(), Arc::new(fabric::ByteCounters::default()))?;
     comm.set_codec_threads(opts.codec_threads);
-    if opts.trace_out.is_some() {
-        comm.enable_recording(DEFAULT_CAPACITY);
+    if recording {
+        comm.enable_recording_from(opts.trace_capacity, origin);
+        if let (Some(rec), Some(c)) = (comm.recorder(), &clock) {
+            rec.set_clock(c.offset_nanos, c.rtt_nanos, c.probes);
+        }
     }
 
     // Deterministic heavy-tailed inputs, identical in every process (and in
@@ -918,6 +1076,18 @@ fn worker_rank_run<T: Transport>(
                     "[rank {rank}] {spec} [{used_label}] AllReduce over {backend} == InProc \
                      bit-for-bit ({len} elems)"
                 );
+            }
+        }
+        // Refresh the clock estimate between iterations: every rank has
+        // fully drained its collectives at this point (program order +
+        // per-link FIFO keep the probe frames from interleaving with
+        // data), drift shrinks, and a fresher minimum-RTT sample only
+        // tightens the NTP bound.
+        if recording {
+            let c = session::sync_clocks(comm.transport(), 0, 8, &now)
+                .with_context(|| format!("clock refresh after iteration {iter}"))?;
+            if let Some(rec) = comm.recorder() {
+                rec.set_clock(c.offset_nanos, c.rtt_nanos, c.probes);
             }
         }
     }
@@ -1151,7 +1321,7 @@ fn cmd_metrics(args: &Args) -> Result<()> {
     let plan = plan_policy_for(Some(plan_spec.as_str()), pins_flags(args)?, policy, &codec)?
         .expect("an explicit --plan always resolves to a policy");
     let mut group = LocalGroup::for_plan_grouped(ranks, groups_flag(args)?, plan)?;
-    group.enable_recording(DEFAULT_CAPACITY);
+    group.enable_recording(cli::trace_capacity_flag(args)?);
     let mut data: Vec<Vec<f32>> = (0..ranks)
         .map(|r| {
             let mut rng = Prng::new(4000 + r as u64);
@@ -1170,13 +1340,19 @@ fn cmd_metrics(args: &Args) -> Result<()> {
     if let Some(path) = args.flag("trace-out") {
         write_traces(path, &group.trace_jsons())?;
     }
-    let json = group.metrics_snapshot().to_json();
+    let snap = group.metrics_snapshot();
+    let json = snap.to_json();
     match args.flag("out") {
         Some(path) => {
             std::fs::write(path, &json).with_context(|| format!("writing {path}"))?;
             eprintln!("metrics snapshot written to {path}");
         }
         None => println!("{json}"),
+    }
+    if let Some(addr) = args.flag("serve") {
+        let max = args.flag_usize("serve-max", 1)?;
+        ensure!(max >= 1, "--serve-max must be at least 1 (got {max})");
+        serve_metrics(addr, &snap, max)?;
     }
     Ok(())
 }

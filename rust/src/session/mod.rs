@@ -38,8 +38,9 @@ use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
 use std::time::Duration;
 
 use crate::comm::CommError;
+use crate::telemetry::{ClockSync, ClockSyncStats, ProbeSample, MAX_PROBES};
 use crate::topo::Topology;
-use crate::transport::TcpTransport;
+use crate::transport::{frame, TcpTransport, Transport};
 
 pub use degraded::DegradedMesh;
 pub use fault::{Fault, FaultInjector};
@@ -394,6 +395,93 @@ pub fn establish_udp(
     .map_err(|e| CommError::rendezvous(format!("{e:#}")))
 }
 
+/// NTP-style clock synchronization against rank 0 (DESIGN.md §15): the
+/// collective that makes per-rank flight-recorder timelines comparable
+/// for the fabric trace merge ([`crate::telemetry::merge_traces`]).
+///
+/// Rank 0 is the reference: it services ranks `1..n` in ascending order,
+/// echoing each [`flags::PROBE`](crate::transport::frame::flags::PROBE)
+/// request back with its receive (`t2`) and reply (`t3`) timestamps
+/// filled in. Every other rank fires `probes` round-trips (clamped to
+/// `1..=`[`MAX_PROBES`]) and estimates its offset from the minimum-RTT
+/// sample via [`ClockSync`]. Probe frames travel *nested* as payloads of
+/// ordinary [`Transport::send`]s, so the exchange works identically over
+/// TCP, UDP, and InProc, and per-link FIFO keeps requests paired with
+/// replies even when a rank reaches its turn early (its requests just
+/// queue at rank 0).
+///
+/// `now` supplies nanoseconds on this rank's recorder clock (pass
+/// `|| recorder.now_nanos()`); the exchange itself records **no**
+/// telemetry events, so the closed-form per-rank event counts pinned in
+/// `tests/telemetry.rs` are unaffected. Runs at session establish /
+/// rejoin and again each `--iters` refresh — the estimate is cheap
+/// (`probes` round-trips per non-reference rank, rank 0 linear in `n`).
+pub fn sync_clocks<T: Transport + ?Sized>(
+    transport: &T,
+    epoch: u16,
+    probes: usize,
+    now: &dyn Fn() -> u64,
+) -> anyhow::Result<ClockSyncStats> {
+    use anyhow::{bail, ensure, Context};
+
+    let (rank, n) = (transport.rank(), transport.n());
+    let probes = probes.clamp(1, MAX_PROBES);
+    if rank == 0 {
+        for peer in 1..n {
+            for _ in 0..probes {
+                let req = transport
+                    .recv(peer)
+                    .with_context(|| format!("clock probe from rank {peer}"))?;
+                let t2 = now();
+                let hdr = frame::FrameHeader::parse(&req)?;
+                ensure!(
+                    hdr.flags == frame::flags::PROBE,
+                    "expected a clock probe from rank {peer}, got flags {:#04x}",
+                    hdr.flags
+                );
+                hdr.check_payload(&req[frame::FRAME_HEADER_LEN..])?;
+                let (t1, _, _) = frame::decode_probe(&req[frame::FRAME_HEADER_LEN..])?;
+                let t3 = now();
+                transport
+                    .send(
+                        peer,
+                        frame::encode_probe(0, peer as u16, epoch, hdr.seq, t1, t2, t3),
+                    )
+                    .with_context(|| format!("clock probe reply to rank {peer}"))?;
+            }
+        }
+        return Ok(ClockSyncStats::reference(0));
+    }
+
+    let mut sync = ClockSync::new();
+    for k in 0..probes {
+        let t1 = now();
+        transport
+            .send(0, frame::encode_probe(rank as u16, 0, epoch, k as u32, t1, 0, 0))
+            .context("clock probe request")?;
+        let reply = transport.recv(0).context("clock probe reply")?;
+        let t4 = now();
+        let hdr = frame::FrameHeader::parse(&reply)?;
+        ensure!(
+            hdr.flags == frame::flags::PROBE,
+            "expected a clock probe reply, got flags {:#04x}",
+            hdr.flags
+        );
+        hdr.check_payload(&reply[frame::FRAME_HEADER_LEN..])?;
+        let (t1_echo, t2, t3) = frame::decode_probe(&reply[frame::FRAME_HEADER_LEN..])?;
+        ensure!(
+            t1_echo == t1 && hdr.seq == k as u32,
+            "clock probe reply mismatched: echoed t1 {t1_echo} (sent {t1}), seq {} (sent {k})",
+            hdr.seq
+        );
+        sync.add(ProbeSample { t1, t2, t3, t4 });
+    }
+    match sync.stats(rank as u16) {
+        Some(stats) => Ok(stats),
+        None => bail!("no clock probe completed against rank 0"),
+    }
+}
+
 /// Re-rendezvous under `config.epoch + 1`: the whole surviving membership
 /// (plus the restarted rank) bootstraps a fresh mesh whose frames carry
 /// the bumped epoch, so anything a previous incarnation still emits is
@@ -487,6 +575,39 @@ mod tests {
             .unwrap_err();
         assert!(matches!(e, CommError::Rendezvous { .. }), "{e}");
         assert!(e.to_string().contains("dead root"), "{e}");
+    }
+
+    #[test]
+    fn sync_clocks_estimates_within_the_rtt_bound() {
+        // 3-rank InProc mesh: every clock is literally the same Instant
+        // epoch here (the closure fakes skew), so the true offsets are
+        // known exactly and the NTP bound is checkable.
+        let mut mesh = crate::transport::inproc::mesh(3);
+        let (t2, t1, t0) = (mesh.pop().unwrap(), mesh.pop().unwrap(), mesh.pop().unwrap());
+        let base = std::time::Instant::now();
+        let clock = move |skew: i64| {
+            let t = base.elapsed().as_nanos() as i64 + skew;
+            t.max(0) as u64
+        };
+        let h1 = std::thread::spawn(move || {
+            // Rank 1's clock runs 2 ms ahead of rank 0's.
+            sync_clocks(&t1, 0, 8, &move || clock(2_000_000)).unwrap()
+        });
+        let h2 = std::thread::spawn(move || {
+            // Rank 2's clock runs 5 ms behind.
+            sync_clocks(&t2, 0, 8, &move || clock(-5_000_000)).unwrap()
+        });
+        let s0 = sync_clocks(&t0, 0, 8, &move || clock(0)).unwrap();
+        assert_eq!(s0, ClockSyncStats::reference(0));
+        let (s1, s2) = (h1.join().unwrap(), h2.join().unwrap());
+        assert_eq!((s1.rank, s2.rank), (1, 2));
+        assert_eq!((s1.probes, s2.probes), (8, 8));
+        // offset maps local → reference: rank 1 ahead ⇒ negative offset,
+        // rank 2 behind ⇒ positive, each within rtt/2 of the truth.
+        let bound1 = (s1.rtt_nanos / 2) as i64;
+        let bound2 = (s2.rtt_nanos / 2) as i64;
+        assert!((s1.offset_nanos + 2_000_000).abs() <= bound1, "{s1:?}");
+        assert!((s2.offset_nanos - 5_000_000).abs() <= bound2, "{s2:?}");
     }
 
     #[test]

@@ -1,0 +1,423 @@
+//! Critical-path and straggler analysis over clock-aligned fabric traces
+//! (DESIGN.md §15).
+//!
+//! A single rank's flight recorder cannot tell a slow wire from a slow
+//! peer: both look like a long `Recv` span. Once traces are merged onto
+//! one clock ([`super::trace`]), the send→recv edges disambiguate —
+//! for each matched edge, the time a receiver spent blocked *before the
+//! sender's data could possibly have arrived* is wait caused by the
+//! sender, and we charge it to the sender's account:
+//!
+//! ```text
+//! charged_wait = max(0, min(send_end, recv_end) − recv_start)
+//! ```
+//!
+//! on aligned clocks. Summing charges per (sender rank, stage) and
+//! comparing each rank against the per-stage median across ranks names
+//! stragglers: a rank is reported when its charged wait exceeds twice
+//! the median *and* clears an absolute floor
+//! ([`STRAGGLER_FLOOR_NANOS`]) — the floor keeps scheduler jitter on a
+//! clean run out of the report, which CI asserts stays empty.
+//!
+//! [`distill_fabric_profile`] is the fabric-wide counterpart of
+//! [`super::distill_profile`]: instead of pooling `Σ bytes / Σ seconds`
+//! (where one stalled sender drags the whole tier's effective rate
+//! toward zero), it takes the **median of per-span rates** across every
+//! rank. Recalibration fed by the median prices the fabric the
+//! non-straggling majority actually delivers — the straggler shows up
+//! in the [`FabricReport`], not as a corrupted bandwidth estimate.
+
+use super::recorder::{Op, Stage};
+use super::trace::{paired_spans, RankTrace, Span};
+use crate::sim::MeasuredProfile;
+
+/// Charged wait below this absolute excess is never reported as a
+/// straggler (10 ms) — keeps scheduler jitter out of clean-run reports.
+pub const STRAGGLER_FLOOR_NANOS: u64 = 10_000_000;
+
+/// A rank whose sends made the rest of the fabric wait. Exported through
+/// the metrics registry (flashlint R5 keeps every field in the export
+/// honest).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StragglerReport {
+    /// The slow rank (the *sender* the wait was charged to).
+    pub rank: u16,
+    /// The collective stage whose edges carried the excess wait.
+    pub stage: Stage,
+    /// Charged wait beyond the per-stage median across ranks, ms.
+    pub excess_ms: f64,
+    /// The per-stage median charged wait across ranks, ms.
+    pub median_ms: f64,
+}
+
+impl StragglerReport {
+    /// Human-readable one-liner for log output.
+    pub fn line(&self) -> String {
+        format!(
+            "straggler: rank {} stage {} excess {:.3} ms (median {:.3} ms)",
+            self.rank,
+            self.stage.name(),
+            self.excess_ms,
+            self.median_ms
+        )
+    }
+}
+
+/// Where one rank's wall time went, on the fabric clock.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RankAttribution {
+    pub rank: u16,
+    /// QDQ compute: `Encode` + `Decode` + `DecodeSum` span time.
+    pub compute_nanos: u64,
+    /// Intra-group `Send` span time (rs/ag/single stages).
+    pub intra_send_nanos: u64,
+    /// Cross-group `Send` span time.
+    pub cross_send_nanos: u64,
+    /// Peer wait this rank *caused* (charged over send→recv edges).
+    pub charged_wait_nanos: u64,
+}
+
+/// The fabric-wide critical-path breakdown.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FabricReport {
+    /// Earliest span start to latest span end across all ranks, aligned.
+    pub total_wall_nanos: u64,
+    /// Per-rank attribution, sorted by rank.
+    pub per_rank: Vec<RankAttribution>,
+    /// Ranks whose charged wait cleared the threshold, worst first.
+    pub stragglers: Vec<StragglerReport>,
+}
+
+impl FabricReport {
+    pub fn is_clean(&self) -> bool {
+        self.stragglers.is_empty()
+    }
+
+    /// Log-friendly breakdown, one line per rank plus one per straggler.
+    pub fn summary_lines(&self) -> Vec<String> {
+        let ms = |n: u64| n as f64 / 1e6;
+        let mut lines = vec![format!("fabric wall time: {:.3} ms", ms(self.total_wall_nanos))];
+        for a in &self.per_rank {
+            lines.push(format!(
+                "rank {}: compute {:.3} ms, intra send {:.3} ms, cross send {:.3} ms, \
+                 charged wait {:.3} ms",
+                a.rank,
+                ms(a.compute_nanos),
+                ms(a.intra_send_nanos),
+                ms(a.cross_send_nanos),
+                ms(a.charged_wait_nanos)
+            ));
+        }
+        lines.extend(self.stragglers.iter().map(StragglerReport::line));
+        lines
+    }
+}
+
+/// Walk the aligned spans of every rank, attribute wall time, and name
+/// stragglers. Infallible: empty input yields an empty report.
+pub fn analyze(traces: &[RankTrace]) -> FabricReport {
+    let mut spans: Vec<Span> = Vec::new();
+    for t in traces {
+        spans.extend(paired_spans(t).0);
+    }
+    if spans.is_empty() {
+        return FabricReport::default();
+    }
+
+    let mut ranks: Vec<u16> = traces.iter().map(|t| t.rank).collect();
+    ranks.sort_unstable();
+    ranks.dedup();
+    let slot = |rank: u16| ranks.binary_search(&rank).ok();
+
+    let mut per_rank: Vec<RankAttribution> = ranks
+        .iter()
+        .map(|&rank| RankAttribution { rank, ..Default::default() })
+        .collect();
+    for s in &spans {
+        let Some(i) = slot(s.rank) else { continue };
+        match s.op {
+            Op::Encode | Op::Decode | Op::DecodeSum => per_rank[i].compute_nanos += s.dur_nanos,
+            Op::Send if s.stage == Stage::CrossGroup => {
+                per_rank[i].cross_send_nanos += s.dur_nanos
+            }
+            Op::Send => per_rank[i].intra_send_nanos += s.dur_nanos,
+            _ => {}
+        }
+    }
+
+    // Send→recv edges, keyed like the merge: (src, dst, link ordinal).
+    let mut sends: std::collections::BTreeMap<(u16, u16, u64), &Span> =
+        std::collections::BTreeMap::new();
+    for s in &spans {
+        if s.op == Op::Send {
+            if let Some((dst, q)) = s.link {
+                sends.insert((s.rank, dst, q), s);
+            }
+        }
+    }
+    // wait[stage][rank slot] = charged wait, nanos.
+    let mut wait = vec![vec![0u64; ranks.len()]; 4];
+    for r in &spans {
+        if r.op != Op::Recv {
+            continue;
+        }
+        let Some((src, q)) = r.link else { continue };
+        let Some(send) = sends.get(&(src, r.rank, q)) else { continue };
+        let Some(i) = slot(send.rank) else { continue };
+        let charged = (send.end_nanos().min(r.end_nanos()) - r.start_nanos).max(0) as u64;
+        wait[send.stage as usize][i] += charged;
+        per_rank[i].charged_wait_nanos += charged;
+    }
+
+    let mut stragglers = Vec::new();
+    for (stage_idx, waits) in wait.iter().enumerate() {
+        let mut sorted = waits.clone();
+        sorted.sort_unstable();
+        let n = sorted.len();
+        let median = (sorted[(n - 1) / 2] + sorted[n / 2]) / 2;
+        for (i, &w) in waits.iter().enumerate() {
+            let excess = w.saturating_sub(median);
+            if w > 2 * median && excess > STRAGGLER_FLOOR_NANOS {
+                let Some(stage) = Stage::from_u8(stage_idx as u8) else { continue };
+                stragglers.push(StragglerReport {
+                    rank: ranks[i],
+                    stage,
+                    excess_ms: excess as f64 / 1e6,
+                    median_ms: median as f64 / 1e6,
+                });
+            }
+        }
+    }
+    stragglers.sort_by(|a, b| b.excess_ms.total_cmp(&a.excess_ms));
+
+    let start = spans.iter().map(|s| s.start_nanos).min().unwrap_or(0);
+    let end = spans.iter().map(Span::end_nanos).max().unwrap_or(0);
+    FabricReport { total_wall_nanos: (end - start).max(0) as u64, per_rank, stragglers }
+}
+
+/// Fabric-wide profile distillation: the **median of per-span rates**
+/// across every rank, per tier. Robust to stragglers where the pooled
+/// [`super::distill_profile`] is not — one sender stalled for 80 ms
+/// drags a pooled `Σ bytes / Σ seconds` toward zero but barely moves
+/// the median, so recalibration keeps pricing the fabric the healthy
+/// majority delivers (pinned in `tests/trace.rs`).
+pub fn distill_fabric_profile(traces: &[RankTrace]) -> MeasuredProfile {
+    let (mut intra, mut inter, mut qdq) = (Vec::new(), Vec::new(), Vec::new());
+    for t in traces {
+        for s in paired_spans(t).0 {
+            let rate = |units: u64| {
+                (units > 0 && s.dur_nanos > 0)
+                    .then(|| units as f64 / (s.dur_nanos as f64 * 1e-9))
+            };
+            match s.op {
+                Op::Send => {
+                    let tier =
+                        if s.stage == Stage::CrossGroup { &mut inter } else { &mut intra };
+                    tier.extend(rate(s.end_bytes));
+                }
+                Op::Encode | Op::Decode | Op::DecodeSum => qdq.extend(rate(s.start_bytes)),
+                _ => {}
+            }
+        }
+    }
+    MeasuredProfile {
+        intra_bw: median(&mut intra),
+        inter_bw: median(&mut inter),
+        qdq_pass_rate: median(&mut qdq),
+    }
+}
+
+fn median(rates: &mut [f64]) -> Option<f64> {
+    if rates.is_empty() {
+        return None;
+    }
+    rates.sort_by(f64::total_cmp);
+    let n = rates.len();
+    Some((rates[(n - 1) / 2] + rates[n / 2]) / 2.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::distill_profile;
+    use crate::telemetry::recorder::{AlgoTag, Event, Kind};
+    use crate::telemetry::trace::TraceEvent;
+
+    fn ev(
+        rank: u16,
+        seq: u64,
+        t_nanos: u64,
+        kind: Kind,
+        op: Op,
+        stage: Stage,
+        bytes: u64,
+        link: Option<(u16, u64)>,
+    ) -> TraceEvent {
+        TraceEvent {
+            seq,
+            t_nanos,
+            kind,
+            op,
+            stage,
+            algo: AlgoTag::Hier,
+            rank,
+            codec: "INT4".to_string(),
+            plan_fp: 0xabc,
+            bytes,
+            chunk: 0,
+            link,
+        }
+    }
+
+    fn trace(rank: u16, offset: i64, events: Vec<TraceEvent>) -> RankTrace {
+        RankTrace {
+            rank,
+            capacity: 4096,
+            recorded: events.len() as u64,
+            dropped_events: 0,
+            clock_offset_nanos: offset,
+            clock_rtt_nanos: 0,
+            clock_probes: 0,
+            events,
+        }
+    }
+
+    const MS: u64 = 1_000_000;
+
+    /// 4-rank ring at the rs stage: rank 3's send takes 100 ms, everyone
+    /// else's 1 ms; each rank receives from its predecessor.
+    fn ring_with_straggler() -> Vec<RankTrace> {
+        let n = 4u16;
+        let slow = 3u16;
+        (0..n)
+            .map(|r| {
+                let dst = (r + 1) % n;
+                let src = (r + n - 1) % n;
+                let send_ms = if r == slow { 100 } else { 1 };
+                let wait_ms = if src == slow { 100 } else { 1 };
+                trace(
+                    r,
+                    0,
+                    vec![
+                        ev(r, 0, 0, Kind::Start, Op::Send, Stage::ReduceScatter, 4096,
+                            Some((dst, 0))),
+                        ev(r, 1, send_ms * MS, Kind::End, Op::Send, Stage::ReduceScatter,
+                            4096, Some((dst, 0))),
+                        ev(r, 2, 0, Kind::Start, Op::Recv, Stage::ReduceScatter, 0,
+                            Some((src, 0))),
+                        ev(r, 3, (wait_ms + 1) * MS, Kind::End, Op::Recv,
+                            Stage::ReduceScatter, 4096, Some((src, 0))),
+                    ],
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn the_delayed_sender_is_named_with_the_right_stage() {
+        let report = analyze(&ring_with_straggler());
+        assert_eq!(report.stragglers.len(), 1, "{:?}", report.stragglers);
+        let s = report.stragglers[0];
+        assert_eq!((s.rank, s.stage), (3, Stage::ReduceScatter));
+        assert!(s.excess_ms > 90.0, "{s:?}");
+        assert!(s.median_ms < 2.0, "{s:?}");
+        assert!(s.line().contains("rank 3 stage rs"), "{}", s.line());
+        // The wait was charged to the slow *sender*, not its receiver.
+        let slow = &report.per_rank[3];
+        assert!(slow.charged_wait_nanos >= 99 * MS, "{slow:?}");
+        assert!(report.per_rank[1].charged_wait_nanos <= 2 * MS);
+        assert!(report.total_wall_nanos >= 100 * MS);
+    }
+
+    #[test]
+    fn a_clean_fabric_reports_no_stragglers() {
+        let mut traces = ring_with_straggler();
+        // Make rank 3 as fast as everyone else.
+        for e in &mut traces[3].events {
+            if e.op == Op::Send && e.kind == Kind::End {
+                e.t_nanos = MS;
+            }
+        }
+        for e in &mut traces[0].events {
+            if e.op == Op::Recv && e.kind == Kind::End {
+                e.t_nanos = 2 * MS;
+            }
+        }
+        let report = analyze(&traces);
+        assert!(report.is_clean(), "{:?}", report.stragglers);
+        // Sub-floor skew (the 2 ms recv tail) never triggers a report.
+        assert!(report.summary_lines()[0].starts_with("fabric wall time:"));
+    }
+
+    #[test]
+    fn clock_offsets_shift_spans_before_edges_are_walked() {
+        // Rank 1's clock runs 5 ms behind; with the offset applied its
+        // 1 ms recv wait stays tiny instead of reading as negative/huge.
+        let mut traces = ring_with_straggler();
+        for e in &mut traces[1].events {
+            e.t_nanos += 5 * MS;
+        }
+        traces[1].clock_offset_nanos = -(5 * MS as i64);
+        let shifted = analyze(&traces);
+        let baseline = analyze(&ring_with_straggler());
+        assert_eq!(
+            shifted.per_rank[0].charged_wait_nanos,
+            baseline.per_rank[0].charged_wait_nanos,
+            "aligned clocks make the charge offset-invariant"
+        );
+    }
+
+    #[test]
+    fn fabric_median_shrugs_off_the_straggler_the_pooled_distill_eats() {
+        let traces = ring_with_straggler();
+        let fabric = distill_fabric_profile(&traces);
+        // Pooled baseline over the same events (local view: every span
+        // of every rank thrown into one Σbytes/Σseconds pool).
+        let events: Vec<Event> = traces
+            .iter()
+            .flat_map(|t| {
+                t.events.iter().map(|e| Event {
+                    seq: e.seq,
+                    t_nanos: e.t_nanos,
+                    kind: e.kind,
+                    op: e.op,
+                    stage: e.stage,
+                    algo: e.algo,
+                    rank: e.rank,
+                    codec_tag: 1,
+                    plan_fp: e.plan_fp,
+                    bytes: e.bytes,
+                    chunk: e.chunk,
+                    link: e.link,
+                })
+            })
+            .collect();
+        let pooled = distill_profile(&events);
+        let (f, p) = (fabric.intra_bw.unwrap(), pooled.intra_bw.unwrap());
+        // Median rate = the healthy 4096 B / 1 ms; pooled is dragged
+        // toward the straggler's 100 ms span.
+        assert!(
+            f > 10.0 * p,
+            "fabric median {f:.0} B/s should dwarf pooled {p:.0} B/s"
+        );
+    }
+
+    #[test]
+    fn empty_and_linkless_traces_are_harmless() {
+        assert_eq!(analyze(&[]), FabricReport::default());
+        let t = trace(
+            0,
+            0,
+            vec![
+                ev(0, 0, 0, Kind::Start, Op::Encode, Stage::Single, 256, None),
+                ev(0, 1, 1000, Kind::End, Op::Encode, Stage::Single, 64, None),
+            ],
+        );
+        let report = analyze(&[t.clone()]);
+        assert!(report.is_clean());
+        assert_eq!(report.per_rank[0].compute_nanos, 1000);
+        let profile = distill_fabric_profile(&[t]);
+        assert!(profile.intra_bw.is_none());
+        assert!(profile.qdq_pass_rate.is_some());
+    }
+}

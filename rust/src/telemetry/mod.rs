@@ -19,13 +19,28 @@
 //!   [`MeasuredProfile`] (effective intra/inter bandwidth, QDQ pass rate)
 //!   that `plan::compile_profiled` prices candidates against, closing the
 //!   measure→tune loop the paper's co-design section calls for.
+//!
+//! The fabric-wide layer on top (DESIGN.md §15): [`trace`] aligns
+//! per-rank timelines via NTP-style clock sync and merges them into one
+//! Chrome-trace-event JSON; [`analyze`] walks the matched send→recv edges
+//! of the merged view to attribute wall time per rank, name stragglers
+//! ([`StragglerReport`]), and distill a straggler-robust fabric profile.
 
+pub mod analyze;
 pub mod recorder;
 pub mod registry;
+pub mod trace;
 
+pub use analyze::{
+    analyze, distill_fabric_profile, FabricReport, RankAttribution, StragglerReport,
+};
 pub use recorder::{AlgoTag, Event, Kind, Op, Recorder, Stage, DEFAULT_CAPACITY};
 pub use registry::{
     Histogram, MetricsRegistry, MetricsSnapshot, Series, SeriesKey, HIST_BUCKETS,
+};
+pub use trace::{
+    merge_traces, parse_trace, ClockSync, ClockSyncStats, MergedTrace, ProbeSample,
+    RankTrace, TraceEvent, MAX_PROBES,
 };
 
 use crate::quant::Codec;
@@ -107,18 +122,28 @@ pub fn algo_tag(algo: crate::comm::Algo) -> AlgoTag {
     }
 }
 
-/// One rank's recorded trace as a JSON object (DESIGN.md §11):
-/// `{"rank": R, "capacity": C, "recorded": N, "events": [...]}` —
-/// `recorded` is the total ever recorded, so `recorded > len(events)`
-/// tells a consumer the ring wrapped and the trace holds the newest tail.
+/// One rank's recorded trace as a JSON object (DESIGN.md §11/§15):
+/// `{"rank": R, "capacity": C, "recorded": N, "dropped_events": D,
+/// "clock_offset_nanos": O, "clock_rtt_nanos": T, "clock_probes": P,
+/// "events": [...]}` — `recorded` is the total ever recorded and
+/// `dropped_events` what wraparound lost, so a consumer sees a wrapped
+/// trace (the newest tail) for what it is. The clock fields carry the
+/// session clock-sync estimate the merge pass aligns timelines with
+/// (all zero when never synced — e.g. in-process shared-origin groups).
 pub fn trace_json(rec: &Recorder) -> String {
     let events = rec.events();
-    let mut out = String::with_capacity(96 + events.len() * 192);
+    let (offset, rtt, probes) = rec.clock();
+    let mut out = String::with_capacity(160 + events.len() * 192);
     out.push_str(&format!(
-        "{{\"rank\":{},\"capacity\":{},\"recorded\":{},\"events\":[",
+        "{{\"rank\":{},\"capacity\":{},\"recorded\":{},\"dropped_events\":{},\
+         \"clock_offset_nanos\":{},\"clock_rtt_nanos\":{},\"clock_probes\":{},\"events\":[",
         rec.rank(),
         rec.capacity(),
-        rec.total_recorded()
+        rec.total_recorded(),
+        rec.dropped_events(),
+        offset,
+        rtt,
+        probes
     ));
     for (i, e) in events.iter().enumerate() {
         if i > 0 {
@@ -229,6 +254,7 @@ mod tests {
             plan_fp: 0,
             bytes,
             chunk: 0,
+            link: None,
         };
         [base, Event { t_nanos: t1, kind: Kind::End, ..base }]
     }
@@ -254,6 +280,7 @@ mod tests {
             plan_fp: 0,
             bytes: 2048,
             chunk: 0,
+            link: None,
         };
         events.push(enc);
         events.push(Event { t_nanos: 3024, kind: Kind::End, bytes: 512, ..enc });
@@ -269,11 +296,23 @@ mod tests {
         rec.record(Kind::Start, Op::Send, 10);
         rec.record(Kind::End, Op::Send, 10);
         let json = trace_json(&rec);
-        assert!(json.starts_with("{\"rank\":5,\"capacity\":8,\"recorded\":2,\"events\":["));
+        assert!(json.starts_with(
+            "{\"rank\":5,\"capacity\":8,\"recorded\":2,\"dropped_events\":0,\
+             \"clock_offset_nanos\":0,\"clock_rtt_nanos\":0,\"clock_probes\":0,\"events\":["
+        ));
         assert!(json.ends_with("]}"));
         assert_eq!(json.matches("\"seq\":").count(), 2);
         let empty = trace_json(&Recorder::new(0, 4));
-        assert_eq!(empty, "{\"rank\":0,\"capacity\":4,\"recorded\":0,\"events\":[]}");
+        assert_eq!(
+            empty,
+            "{\"rank\":0,\"capacity\":4,\"recorded\":0,\"dropped_events\":0,\
+             \"clock_offset_nanos\":0,\"clock_rtt_nanos\":0,\"clock_probes\":0,\"events\":[]}"
+        );
+        let synced = Recorder::new(1, 4);
+        synced.set_clock(-42, 900, 8);
+        assert!(trace_json(&synced).contains(
+            "\"clock_offset_nanos\":-42,\"clock_rtt_nanos\":900,\"clock_probes\":8"
+        ));
     }
 
     #[test]

@@ -8,8 +8,11 @@
 //! holds the *newest* [`Recorder::capacity`] events; older events are
 //! overwritten in place. Each slot is a fixed set of `u64` words
 //! (see [`Event`]), so the whole recorder is a flat
-//! `capacity × 48 bytes` block — the default 4096-slot ring costs 192 KiB
-//! per rank, bounded for the process lifetime.
+//! `capacity × 56 bytes` block — the default 4096-slot ring costs 224 KiB
+//! per rank, bounded for the process lifetime. Overwritten (dropped)
+//! events are counted, not hidden: [`Recorder::dropped_events`] feeds the
+//! trace header and the metrics snapshot so a wrapped trace is visibly
+//! lossy.
 //!
 //! Concurrency contract: `record` may be called from the rank's collective
 //! thread while *other* threads hold clones of the `Arc<Recorder>`; the
@@ -24,7 +27,7 @@
 //! fingerprint) are single-writer: only the rank's own collective thread
 //! calls the `set_*` methods, so they are plain load/store, no RMW.
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicI64, AtomicU64, AtomicUsize, Ordering};
 use std::time::Instant;
 
 /// Default ring capacity: 4096 events ≈ 192 KiB per rank.
@@ -55,6 +58,15 @@ impl Kind {
         match v {
             0 => Some(Kind::Start),
             1 => Some(Kind::End),
+            _ => None,
+        }
+    }
+
+    /// Inverse of [`Kind::name`], for the trace JSON parser.
+    pub fn from_name(v: &str) -> Option<Kind> {
+        match v {
+            "start" => Some(Kind::Start),
+            "end" => Some(Kind::End),
             _ => None,
         }
     }
@@ -115,6 +127,22 @@ impl Op {
             _ => None,
         }
     }
+
+    /// Inverse of [`Op::name`], for the trace JSON parser.
+    pub fn from_name(v: &str) -> Option<Op> {
+        match v {
+            "encode" => Some(Op::Encode),
+            "send" => Some(Op::Send),
+            "recv" => Some(Op::Recv),
+            "decode_sum" => Some(Op::DecodeSum),
+            "decode" => Some(Op::Decode),
+            "collective" => Some(Op::Collective),
+            "peer_lost" => Some(Op::PeerLost),
+            "epoch_bump" => Some(Op::EpochBump),
+            "rejoin" => Some(Op::Rejoin),
+            _ => None,
+        }
+    }
 }
 
 /// Which phase of the collective the event belongs to. Flat algorithms
@@ -154,6 +182,17 @@ impl Stage {
             _ => None,
         }
     }
+
+    /// Inverse of [`Stage::name`], for the trace JSON parser.
+    pub fn from_name(v: &str) -> Option<Stage> {
+        match v {
+            "single" => Some(Stage::Single),
+            "rs" => Some(Stage::ReduceScatter),
+            "cross" => Some(Stage::CrossGroup),
+            "ag" => Some(Stage::AllGather),
+            _ => None,
+        }
+    }
 }
 
 /// Which collective algorithm the events were recorded under. Mirrors
@@ -190,9 +229,21 @@ impl AlgoTag {
             _ => None,
         }
     }
+
+    /// Inverse of [`AlgoTag::name`], for the trace JSON parser.
+    pub fn from_name(v: &str) -> Option<AlgoTag> {
+        match v {
+            "none" => Some(AlgoTag::None),
+            "ring" => Some(AlgoTag::Ring),
+            "twostep" => Some(AlgoTag::TwoStep),
+            "hier" => Some(AlgoTag::Hier),
+            "hier_pipelined" => Some(AlgoTag::HierPipelined),
+            _ => None,
+        }
+    }
 }
 
-/// One decoded recorder event. The in-ring representation is six `u64`
+/// One decoded recorder event. The in-ring representation is seven `u64`
 /// words per slot; this is the materialized view [`Recorder::events`]
 /// returns.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -216,6 +267,13 @@ pub struct Event {
     pub bytes: u64,
     /// Pipeline chunk index (0 for unchunked collectives).
     pub chunk: u32,
+    /// Link identity for fabric `Send`/`Recv` events: `(peer rank,
+    /// per-direction message ordinal)`. The ordinal mirrors the per-link
+    /// FIFO frame order every transport guarantees, so a send's
+    /// `(self → peer, n)` matches the peer's recv `(self → peer, n)` —
+    /// the edge the trace merge draws flow arrows along. `None` for
+    /// every event recorded outside the fabric send/recv path.
+    pub link: Option<(u16, u64)>,
 }
 
 impl Event {
@@ -223,10 +281,14 @@ impl Event {
     /// dependency set); `plan_fp` travels as a hex string so 64-bit values
     /// survive JSON consumers that parse numbers as doubles.
     pub fn to_json(&self) -> String {
+        let link = match self.link {
+            Some((peer, seq)) => format!(",\"peer\":{peer},\"link_seq\":{seq}"),
+            None => String::new(),
+        };
         format!(
             "{{\"seq\":{},\"t_nanos\":{},\"kind\":\"{}\",\"op\":\"{}\",\"stage\":\"{}\",\
              \"algo\":\"{}\",\"rank\":{},\"codec\":\"{}\",\"plan_fp\":\"{:#018x}\",\
-             \"bytes\":{},\"chunk\":{}}}",
+             \"bytes\":{},\"chunk\":{}{}}}",
             self.seq,
             self.t_nanos,
             self.kind.name(),
@@ -237,13 +299,14 @@ impl Event {
             super::codec_tag_name(self.codec_tag),
             self.plan_fp,
             self.bytes,
-            self.chunk
+            self.chunk,
+            link
         )
     }
 }
 
-/// One ring slot: six atomic words. `seq1` stores `seq + 1` and is written
-/// last with `Release`; 0 means the slot was never written.
+/// One ring slot: seven atomic words. `seq1` stores `seq + 1` and is
+/// written last with `Release`; 0 means the slot was never written.
 #[derive(Default)]
 struct Slot {
     seq1: AtomicU64,
@@ -253,7 +316,13 @@ struct Slot {
     plan_fp: AtomicU64,
     bytes: AtomicU64,
     chunk: AtomicU64,
+    /// `LINK_VALID | peer | ordinal<<16`, or 0 for non-fabric events.
+    link: AtomicU64,
 }
+
+/// High bit of the slot `link` word: distinguishes "link `(peer 0, seq 0)`"
+/// from "no link identity recorded".
+const LINK_VALID: u64 = 1 << 63;
 
 /// Per-rank flight recorder. See the module docs for the concurrency
 /// contract.
@@ -264,20 +333,42 @@ pub struct Recorder {
     /// Ambient context: stage | algo<<8 | codec_tag<<16 | chunk<<32.
     ctx: AtomicU64,
     plan_fp: AtomicU64,
+    /// Estimated offset of this recorder's clock to the fabric reference
+    /// clock (rank 0's recorder), in nanos: `t_ref ≈ t_local + offset`.
+    /// Installed by the session clock sync; 0 until then (and forever on
+    /// rank 0, the reference).
+    clock_offset_nanos: AtomicI64,
+    /// Min round-trip of the probes behind the offset estimate — the
+    /// alignment error bound is `rtt / 2`.
+    clock_rtt_nanos: AtomicU64,
+    /// Probe exchanges behind the estimate (0 = never synced).
+    clock_probes: AtomicU64,
     slots: Box<[Slot]>,
 }
 
 impl Recorder {
     /// A recorder for `rank` holding the newest `capacity` events
-    /// (clamped to at least 1).
+    /// (clamped to at least 1). The timebase starts now; ranks that share
+    /// a process should prefer [`Recorder::with_origin`] so their
+    /// timelines need no clock sync at all.
     pub fn new(rank: usize, capacity: usize) -> Recorder {
+        Recorder::with_origin(rank, capacity, Instant::now())
+    }
+
+    /// A recorder whose `t_nanos` timebase starts at `origin`. In-process
+    /// rank groups pass one shared origin to every rank, making their
+    /// timelines directly comparable (offset 0 by construction).
+    pub fn with_origin(rank: usize, capacity: usize, origin: Instant) -> Recorder {
         let capacity = capacity.max(1);
         Recorder {
             rank: rank as u16,
-            epoch: Instant::now(),
+            epoch: origin,
             head: AtomicUsize::new(0),
             ctx: AtomicU64::new(0),
             plan_fp: AtomicU64::new(0),
+            clock_offset_nanos: AtomicI64::new(0),
+            clock_rtt_nanos: AtomicU64::new(0),
+            clock_probes: AtomicU64::new(0),
             slots: (0..capacity).map(|_| Slot::default()).collect(),
         }
     }
@@ -294,6 +385,39 @@ impl Recorder {
     /// Total events ever recorded (≥ the number still in the ring).
     pub fn total_recorded(&self) -> u64 {
         self.head.load(Ordering::Relaxed) as u64
+    }
+
+    /// Events lost to newest-wins wraparound: everything recorded beyond
+    /// what the ring can hold. 0 means the trace is complete.
+    pub fn dropped_events(&self) -> u64 {
+        self.total_recorded().saturating_sub(self.slots.len() as u64)
+    }
+
+    /// Nanoseconds on this recorder's clock right now — the timestamp a
+    /// `record` call at this instant would carry. The clock-sync probes
+    /// read it on both sides of the exchange so the estimated offsets
+    /// relate *recorder* timelines, not arbitrary process clocks.
+    pub fn now_nanos(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// Install the clock-sync result (single-writer, like the `set_*`
+    /// context methods): offset to the reference clock, min probe RTT
+    /// (error bound `rtt / 2`), and how many probes backed the estimate.
+    pub fn set_clock(&self, offset_nanos: i64, rtt_nanos: u64, probes: u64) {
+        self.clock_offset_nanos.store(offset_nanos, Ordering::Relaxed);
+        self.clock_rtt_nanos.store(rtt_nanos, Ordering::Relaxed);
+        self.clock_probes.store(probes, Ordering::Relaxed);
+    }
+
+    /// The installed clock-sync state: `(offset_nanos, rtt_nanos, probes)`.
+    /// All zero until [`Recorder::set_clock`] runs.
+    pub fn clock(&self) -> (i64, u64, u64) {
+        (
+            self.clock_offset_nanos.load(Ordering::Relaxed),
+            self.clock_rtt_nanos.load(Ordering::Relaxed),
+            self.clock_probes.load(Ordering::Relaxed),
+        )
     }
 
     /// Set the stage + codec ambient context (single-writer: the rank's
@@ -321,10 +445,25 @@ impl Recorder {
     }
 
     /// Record one event. Lock-free, allocation-free: one `fetch_add` to
-    /// claim a slot plus six stores. Callers gate on an
+    /// claim a slot plus seven stores. Callers gate on an
     /// `Option<&Recorder>` (see the `record!` macro), so the disabled
     /// path is a single untaken branch.
     pub fn record(&self, kind: Kind, op: Op, bytes: u64) {
+        self.record_raw(kind, op, bytes, 0);
+    }
+
+    /// [`Recorder::record`] with a link identity attached: `peer` is the
+    /// other end of the transfer, `link_seq` the per-direction message
+    /// ordinal the fabric maintains. Only the fabric send/recv path calls
+    /// this — the merge pass matches a send's `(dst, n)` against the
+    /// peer's recv `(src, n)` to draw flow arrows and charge waits.
+    pub fn record_link(&self, kind: Kind, op: Op, bytes: u64, peer: u16, link_seq: u64) {
+        // 47 bits of ordinal; the valid bit must survive any count.
+        let ordinal = link_seq & ((1 << 47) - 1);
+        self.record_raw(kind, op, bytes, LINK_VALID | peer as u64 | (ordinal << 16));
+    }
+
+    fn record_raw(&self, kind: Kind, op: Op, bytes: u64, link: u64) {
         let seq = self.head.fetch_add(1, Ordering::Relaxed) as u64;
         let slot = &self.slots[(seq as usize) % self.slots.len()];
         let ctx = self.ctx.load(Ordering::Relaxed);
@@ -339,6 +478,7 @@ impl Recorder {
         slot.plan_fp.store(self.plan_fp.load(Ordering::Relaxed), Ordering::Relaxed);
         slot.bytes.store(bytes, Ordering::Relaxed);
         slot.chunk.store(ctx >> 32, Ordering::Relaxed);
+        slot.link.store(link, Ordering::Relaxed);
         slot.seq1.store(seq + 1, Ordering::Release);
     }
 
@@ -363,6 +503,12 @@ impl Recorder {
                 (Some(k), Some(o), Some(s), Some(a)) => (k, o, s, a),
                 _ => continue,
             };
+            let link_word = slot.link.load(Ordering::Relaxed);
+            let link = if link_word & LINK_VALID != 0 {
+                Some((link_word as u16, (link_word >> 16) & ((1 << 47) - 1)))
+            } else {
+                None
+            };
             out.push(Event {
                 seq: seq1 - 1,
                 t_nanos: slot.t_nanos.load(Ordering::Relaxed),
@@ -375,6 +521,7 @@ impl Recorder {
                 plan_fp: slot.plan_fp.load(Ordering::Relaxed),
                 bytes: slot.bytes.load(Ordering::Relaxed),
                 chunk: slot.chunk.load(Ordering::Relaxed) as u32,
+                link,
             });
         }
         out.sort_by_key(|e| e.seq);
@@ -482,6 +629,58 @@ mod tests {
         r.record(Kind::End, Op::Send, 2);
         assert_eq!(r.events().len(), 1);
         assert_eq!(r.events()[0].bytes, 2, "newest event wins");
+    }
+
+    #[test]
+    fn link_identity_survives_the_ring_and_plain_events_have_none() {
+        let r = Recorder::new(1, 8);
+        r.record_link(Kind::Start, Op::Send, 64, 3, 0);
+        r.record_link(Kind::End, Op::Send, 64, 3, 0);
+        r.record(Kind::Start, Op::Encode, 10);
+        let ev = r.events();
+        assert_eq!(ev[0].link, Some((3, 0)), "ordinal 0 is a valid link");
+        assert_eq!(ev[1].link, Some((3, 0)));
+        assert_eq!(ev[2].link, None, "non-fabric events carry no link");
+        let row = ev[0].to_json();
+        assert!(row.contains("\"peer\":3"), "{row}");
+        assert!(row.contains("\"link_seq\":0"), "{row}");
+        assert!(!ev[2].to_json().contains("peer"), "no link keys on plain events");
+    }
+
+    #[test]
+    fn link_slots_are_reset_on_reuse() {
+        // A wrapped slot that once held a link must not leak it into the
+        // plain event that overwrites it.
+        let r = Recorder::new(0, 1);
+        r.record_link(Kind::Start, Op::Send, 1, 2, 9);
+        r.record(Kind::Start, Op::Encode, 1);
+        assert_eq!(r.events()[0].link, None);
+    }
+
+    #[test]
+    fn dropped_events_counts_wraparound_losses() {
+        let r = Recorder::new(0, 8);
+        for i in 0..6u64 {
+            r.record(Kind::Start, Op::Send, i);
+        }
+        assert_eq!(r.dropped_events(), 0, "under capacity nothing dropped");
+        for i in 0..14u64 {
+            r.record(Kind::Start, Op::Send, i);
+        }
+        assert_eq!(r.total_recorded(), 20);
+        assert_eq!(r.dropped_events(), 12, "everything beyond capacity is lost");
+    }
+
+    #[test]
+    fn shared_origin_recorders_share_a_timebase_and_clock_state_installs() {
+        let origin = Instant::now();
+        let a = Recorder::with_origin(0, 4, origin);
+        let b = Recorder::with_origin(1, 4, origin);
+        let (t_a, t_b) = (a.now_nanos(), b.now_nanos());
+        assert!(t_b >= t_a, "same origin: later reads are later nanos");
+        assert_eq!(a.clock(), (0, 0, 0), "unsynced clock state is all zero");
+        b.set_clock(-1500, 3000, 8);
+        assert_eq!(b.clock(), (-1500, 3000, 8));
     }
 
     #[test]

@@ -14,7 +14,9 @@
 
 use std::collections::{BTreeMap, HashMap};
 
-use super::recorder::{AlgoTag, Event, Kind, Op, Stage};
+use super::analyze::StragglerReport;
+use super::recorder::{AlgoTag, Event, Kind, Op, Recorder, Stage};
+use super::trace::ClockSyncStats;
 use crate::comm::fabric::CountersSnapshot;
 use crate::plan::PlanCacheStats;
 use crate::session::SessionStats;
@@ -96,6 +98,13 @@ pub struct MetricsRegistry {
     /// Events that could not be paired (End with no Start, Start with no
     /// End) — nonzero when the ring wrapped mid-span.
     unpaired: u64,
+    /// Events lost to ring wraparound across absorbed recorders
+    /// (newest-wins overwrite; see [`Recorder::dropped_events`]).
+    dropped_events: u64,
+    /// Per-rank clock-sync estimates (one entry per synced recorder).
+    clock: Vec<ClockSyncStats>,
+    /// Fabric critical-path straggler findings ([`super::analyze`]).
+    stragglers: Vec<StragglerReport>,
     fabric: Option<CountersSnapshot>,
     transport: Option<TransportStats>,
     session: Option<SessionStats>,
@@ -134,6 +143,30 @@ impl MetricsRegistry {
             }
         }
         self.unpaired += open.values().map(|v| v.len() as u64).sum::<u64>();
+    }
+
+    /// Fold one rank's recorder health in: ring-wraparound losses
+    /// ([`Recorder::dropped_events`]) and, when the rank ran
+    /// [`crate::session::sync_clocks`], its clock estimate. Call next to
+    /// [`absorb_events`](MetricsRegistry::absorb_events) — the event fold
+    /// deliberately cannot see what the ring already overwrote.
+    pub fn absorb_recorder(&mut self, rec: &Recorder) {
+        self.dropped_events += rec.dropped_events();
+        let (offset_nanos, rtt_nanos, probes) = rec.clock();
+        if probes > 0 {
+            self.clock.push(ClockSyncStats {
+                rank: rec.rank() as u16,
+                offset_nanos,
+                rtt_nanos,
+                probes,
+            });
+        }
+    }
+
+    /// Attach straggler findings from the fabric critical-path analysis
+    /// ([`super::analyze`]).
+    pub fn absorb_stragglers(&mut self, stragglers: &[StragglerReport]) {
+        self.stragglers.extend_from_slice(stragglers);
     }
 
     /// Attach (or accumulate) a fabric byte-counter snapshot.
@@ -225,6 +258,9 @@ impl MetricsRegistry {
                 })
                 .collect(),
             unpaired: self.unpaired,
+            dropped_events: self.dropped_events,
+            clock: self.clock.clone(),
+            stragglers: self.stragglers.clone(),
             fabric: self.fabric,
             transport: self.transport,
             session: self.session,
@@ -240,6 +276,12 @@ impl MetricsRegistry {
 pub struct MetricsSnapshot {
     pub series: Vec<(SeriesKey, Series)>,
     pub unpaired: u64,
+    /// Events lost to ring wraparound across absorbed recorders.
+    pub dropped_events: u64,
+    /// Per-rank clock-sync estimates (empty when no rank probed).
+    pub clock: Vec<ClockSyncStats>,
+    /// Fabric straggler findings (empty on a clean run).
+    pub stragglers: Vec<StragglerReport>,
     pub fabric: Option<CountersSnapshot>,
     pub transport: Option<TransportStats>,
     /// Session-fabric counters, when a live session ran (TCP with
@@ -281,7 +323,34 @@ impl MetricsSnapshot {
                 nonzero.join(",")
             ));
         }
-        out.push_str(&format!("],\"unpaired\":{}", self.unpaired));
+        out.push_str(&format!(
+            "],\"unpaired\":{},\"dropped_events\":{}",
+            self.unpaired, self.dropped_events
+        ));
+        out.push_str(",\"clock\":[");
+        for (i, c) in self.clock.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "{{\"rank\":{},\"offset_nanos\":{},\"rtt_nanos\":{},\"probes\":{}}}",
+                c.rank, c.offset_nanos, c.rtt_nanos, c.probes
+            ));
+        }
+        out.push_str("],\"stragglers\":[");
+        for (i, s) in self.stragglers.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "{{\"rank\":{},\"stage\":\"{}\",\"excess_ms\":{:.3},\"median_ms\":{:.3}}}",
+                s.rank,
+                s.stage.name(),
+                s.excess_ms,
+                s.median_ms
+            ));
+        }
+        out.push(']');
         if let Some(f) = self.fabric {
             out.push_str(&format!(
                 ",\"fabric\":{{\"total_bytes\":{},\"cross_numa_bytes\":{},\"messages\":{}}}",
@@ -335,6 +404,121 @@ impl MetricsSnapshot {
         out.push('}');
         out
     }
+
+    /// Prometheus text-exposition export for `flashcomm metrics --serve`.
+    /// Zero-dependency: the format is plain text, one sample per line,
+    /// `# HELP` / `# TYPE` headers per family
+    /// (<https://prometheus.io/docs/instrumenting/exposition_formats/>).
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        out.push_str("# HELP flashcomm_spans_total Completed telemetry spans per series.\n");
+        out.push_str("# TYPE flashcomm_spans_total counter\n");
+        for (k, s) in &self.series {
+            out.push_str(&format!(
+                "flashcomm_spans_total{{algo=\"{}\",stage=\"{}\",op=\"{}\",codec=\"{}\"}} {}\n",
+                k.algo.name(),
+                k.stage.name(),
+                k.op.name(),
+                super::codec_tag_name(k.codec_tag),
+                s.spans
+            ));
+        }
+        out.push_str("# HELP flashcomm_span_bytes_total Bytes carried by completed spans.\n");
+        out.push_str("# TYPE flashcomm_span_bytes_total counter\n");
+        for (k, s) in &self.series {
+            out.push_str(&format!(
+                "flashcomm_span_bytes_total{{algo=\"{}\",stage=\"{}\",op=\"{}\",codec=\"{}\"}} {}\n",
+                k.algo.name(),
+                k.stage.name(),
+                k.op.name(),
+                super::codec_tag_name(k.codec_tag),
+                s.bytes
+            ));
+        }
+        out.push_str("# HELP flashcomm_span_mean_nanos Mean span duration per series.\n");
+        out.push_str("# TYPE flashcomm_span_mean_nanos gauge\n");
+        for (k, s) in &self.series {
+            out.push_str(&format!(
+                "flashcomm_span_mean_nanos{{algo=\"{}\",stage=\"{}\",op=\"{}\",codec=\"{}\"}} {}\n",
+                k.algo.name(),
+                k.stage.name(),
+                k.op.name(),
+                super::codec_tag_name(k.codec_tag),
+                s.hist.mean_nanos()
+            ));
+        }
+        out.push_str("# HELP flashcomm_unpaired_events_total Events with no matching Start/End.\n");
+        out.push_str("# TYPE flashcomm_unpaired_events_total counter\n");
+        out.push_str(&format!("flashcomm_unpaired_events_total {}\n", self.unpaired));
+        out.push_str("# HELP flashcomm_dropped_events_total Events lost to recorder ring wraparound.\n");
+        out.push_str("# TYPE flashcomm_dropped_events_total counter\n");
+        out.push_str(&format!("flashcomm_dropped_events_total {}\n", self.dropped_events));
+        if !self.clock.is_empty() {
+            out.push_str("# HELP flashcomm_clock_offset_nanos Estimated clock offset vs rank 0.\n");
+            out.push_str("# TYPE flashcomm_clock_offset_nanos gauge\n");
+            for c in &self.clock {
+                out.push_str(&format!(
+                    "flashcomm_clock_offset_nanos{{rank=\"{}\"}} {}\n",
+                    c.rank, c.offset_nanos
+                ));
+            }
+            out.push_str("# HELP flashcomm_clock_rtt_nanos Probe round-trip of the winning sample.\n");
+            out.push_str("# TYPE flashcomm_clock_rtt_nanos gauge\n");
+            for c in &self.clock {
+                out.push_str(&format!(
+                    "flashcomm_clock_rtt_nanos{{rank=\"{}\"}} {}\n",
+                    c.rank, c.rtt_nanos
+                ));
+            }
+        }
+        if !self.stragglers.is_empty() {
+            out.push_str("# HELP flashcomm_straggler_excess_ms Wait charged beyond the fabric median.\n");
+            out.push_str("# TYPE flashcomm_straggler_excess_ms gauge\n");
+            for s in &self.stragglers {
+                out.push_str(&format!(
+                    "flashcomm_straggler_excess_ms{{rank=\"{}\",stage=\"{}\"}} {:.3}\n",
+                    s.rank,
+                    s.stage.name(),
+                    s.excess_ms
+                ));
+            }
+        }
+        if let Some(f) = self.fabric {
+            out.push_str("# HELP flashcomm_fabric_bytes_total Payload bytes moved through the fabric.\n");
+            out.push_str("# TYPE flashcomm_fabric_bytes_total counter\n");
+            out.push_str(&format!("flashcomm_fabric_bytes_total {}\n", f.total));
+            out.push_str(&format!("flashcomm_fabric_cross_numa_bytes_total {}\n", f.cross_numa));
+            out.push_str(&format!("flashcomm_fabric_messages_total {}\n", f.messages));
+        }
+        if let Some(t) = self.transport {
+            out.push_str("# HELP flashcomm_transport_wire_bytes_total Bytes on the wire incl. framing.\n");
+            out.push_str("# TYPE flashcomm_transport_wire_bytes_total counter\n");
+            out.push_str(&format!("flashcomm_transport_payload_bytes_total {}\n", t.payload_bytes));
+            out.push_str(&format!("flashcomm_transport_wire_bytes_total {}\n", t.wire_bytes));
+            out.push_str(&format!("flashcomm_transport_messages_total {}\n", t.messages));
+            out.push_str(&format!("flashcomm_transport_nacks_sent_total {}\n", t.nacks_sent));
+            out.push_str(&format!(
+                "flashcomm_transport_retransmitted_chunks_total {}\n",
+                t.retransmitted_chunks
+            ));
+            out.push_str(&format!("flashcomm_transport_corrupt_drops_total {}\n", t.corrupt_drops));
+        }
+        if let Some(s) = self.session {
+            out.push_str("# HELP flashcomm_session_epoch Current session epoch.\n");
+            out.push_str("# TYPE flashcomm_session_epoch gauge\n");
+            out.push_str(&format!("flashcomm_session_epoch {}\n", s.epoch));
+            out.push_str(&format!("flashcomm_session_losses_total {}\n", s.losses));
+            out.push_str(&format!("flashcomm_session_epoch_bumps_total {}\n", s.epoch_bumps));
+        }
+        if let Some(p) = self.plan_cache {
+            out.push_str("# HELP flashcomm_plan_cache_hits_total Plan cache hits.\n");
+            out.push_str("# TYPE flashcomm_plan_cache_hits_total counter\n");
+            out.push_str(&format!("flashcomm_plan_cache_hits_total {}\n", p.hits));
+            out.push_str(&format!("flashcomm_plan_cache_misses_total {}\n", p.misses));
+            out.push_str(&format!("flashcomm_plan_cache_evictions_total {}\n", p.evictions));
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -361,6 +545,7 @@ mod tests {
             plan_fp: 7,
             bytes,
             chunk: 0,
+            link: None,
         }
     }
 
@@ -486,6 +671,83 @@ mod tests {
         ] {
             assert!(json.contains(field), "{json} missing {field}");
         }
+    }
+
+    #[test]
+    fn recorder_health_and_stragglers_flow_into_both_exports() {
+        let mut reg = MetricsRegistry::new();
+        let rec = Recorder::new(3, 4);
+        for _ in 0..6 {
+            rec.record(Kind::Start, Op::Send, 8);
+        }
+        rec.set_clock(-2500, 900, 4);
+        reg.absorb_recorder(&rec);
+        reg.absorb_stragglers(&[StragglerReport {
+            rank: 3,
+            stage: Stage::ReduceScatter,
+            excess_ms: 80.125,
+            median_ms: 1.0,
+        }]);
+        let snap = reg.snapshot();
+        assert_eq!(snap.dropped_events, 2, "6 recorded into a 4-slot ring");
+        assert_eq!(snap.clock.len(), 1);
+        assert_eq!(snap.clock[0].rank, 3);
+        assert_eq!(snap.stragglers.len(), 1);
+        let json = snap.to_json();
+        for field in [
+            "\"dropped_events\":2",
+            "\"clock\":[{\"rank\":3,\"offset_nanos\":-2500,\"rtt_nanos\":900,\"probes\":4}]",
+            "\"stragglers\":[{\"rank\":3,\"stage\":\"rs\",\"excess_ms\":80.125,\"median_ms\":1.000}]",
+        ] {
+            assert!(json.contains(field), "{json} missing {field}");
+        }
+        let prom = snap.to_prometheus();
+        for line in [
+            "flashcomm_dropped_events_total 2",
+            "flashcomm_clock_offset_nanos{rank=\"3\"} -2500",
+            "flashcomm_clock_rtt_nanos{rank=\"3\"} 900",
+            "flashcomm_straggler_excess_ms{rank=\"3\",stage=\"rs\"} 80.125",
+        ] {
+            assert!(prom.contains(line), "{prom} missing {line}");
+        }
+    }
+
+    #[test]
+    fn an_unsynced_recorder_contributes_no_clock_row() {
+        let mut reg = MetricsRegistry::new();
+        let rec = Recorder::new(0, 8);
+        rec.record(Kind::Start, Op::Send, 8);
+        rec.record(Kind::End, Op::Send, 8);
+        reg.absorb_recorder(&rec);
+        let snap = reg.snapshot();
+        assert_eq!(snap.dropped_events, 0);
+        assert!(snap.clock.is_empty(), "probes == 0 means no estimate");
+        assert!(snap.to_json().contains("\"clock\":[]"));
+    }
+
+    #[test]
+    fn prometheus_export_covers_series_and_counter_blocks() {
+        let mut reg = MetricsRegistry::new();
+        reg.absorb_events(&[
+            ev(0, 0, Kind::Start, Op::Send, Stage::Single, 4),
+            ev(1, 5, Kind::End, Op::Send, Stage::Single, 4),
+        ]);
+        reg.absorb_fabric(CountersSnapshot { total: 100, cross_numa: 40, messages: 3 });
+        reg.absorb_plan_cache(PlanCacheStats { hits: 5, misses: 2, evictions: 0 });
+        let prom = reg.snapshot().to_prometheus();
+        for line in [
+            "# TYPE flashcomm_spans_total counter",
+            "op=\"send\"",
+            "flashcomm_unpaired_events_total 0",
+            "flashcomm_fabric_bytes_total 100",
+            "flashcomm_plan_cache_misses_total 2",
+        ] {
+            assert!(prom.contains(line), "{prom} missing {line}");
+        }
+        assert!(
+            !prom.contains("flashcomm_session_epoch "),
+            "no session absorbed, no session family"
+        );
     }
 
     #[test]

@@ -1,0 +1,960 @@
+//! Fabric-wide tracing: clock sync, trace parsing, and the merge into
+//! one Perfetto-viewable Chrome-trace-event JSON (DESIGN.md §15).
+//!
+//! Per-rank [`Recorder`] timelines each start at an arbitrary process
+//! instant, so they are not directly comparable. Three pieces fix that:
+//!
+//! - [`ClockSync`] — NTP-style offset estimation from a handful of probe
+//!   round-trips (`session::sync_clocks` runs the exchange over the live
+//!   transport; this module owns the math). For probe timestamps
+//!   `t1` (request sent, requester clock), `t2` (request received,
+//!   reference clock), `t3` (reply sent, reference clock), `t4` (reply
+//!   received, requester clock):
+//!   `offset = ((t2 − t1) + (t3 − t4)) / 2`, `rtt = (t4 − t1) − (t3 − t2)`,
+//!   and the estimate from the minimum-RTT probe is wrong by at most
+//!   `rtt / 2`. Fixed-capacity sample store — the probe path allocates
+//!   nothing (pinned in `tests/telemetry_alloc.rs`).
+//! - [`RankTrace`] / [`parse_trace`] — one rank's trace, either straight
+//!   off a live recorder or parsed back from the `--trace-out` JSON via
+//!   the hand-rolled parser (no serde in the dependency set).
+//! - [`merge_traces`] — pairs each rank's events into spans, aligns them
+//!   with the clock offsets, matches send→recv edges via the per-link
+//!   message ordinals the fabric stamps ([`Event::link`]), and emits one
+//!   deterministic Chrome-trace JSON: one track per rank, spans named
+//!   `algo/stage/codec`, flow arrows per matched edge (named after the
+//!   stage), instant markers for session point events. Byte-identical
+//!   output for identical inputs — pinned in `tests/trace.rs`.
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::codec_tag_name;
+use super::recorder::{AlgoTag, Event, Kind, Op, Recorder, Stage};
+
+/// Most probe round-trips one [`ClockSync`] keeps (more add nothing: the
+/// estimate uses the minimum-RTT sample).
+pub const MAX_PROBES: usize = 16;
+
+/// One NTP-style probe round-trip. `t1`/`t4` are on the requester's
+/// recorder clock, `t2`/`t3` on the reference (rank 0) recorder clock.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ProbeSample {
+    pub t1: u64,
+    pub t2: u64,
+    pub t3: u64,
+    pub t4: u64,
+}
+
+impl ProbeSample {
+    /// Estimated offset of the requester clock to the reference clock
+    /// (`t_ref ≈ t_local + offset`): `((t2 − t1) + (t3 − t4)) / 2`.
+    pub fn offset_nanos(self) -> i64 {
+        let a = self.t2 as i128 - self.t1 as i128;
+        let b = self.t3 as i128 - self.t4 as i128;
+        ((a + b) / 2) as i64
+    }
+
+    /// Round-trip time net of the reference's service time:
+    /// `(t4 − t1) − (t3 − t2)`. The offset error bound is `rtt / 2`.
+    pub fn rtt_nanos(self) -> u64 {
+        let rtt = (self.t4 as i128 - self.t1 as i128) - (self.t3 as i128 - self.t2 as i128);
+        rtt.max(0) as u64
+    }
+}
+
+/// Fixed-capacity NTP-style offset estimator — see the module docs for
+/// the formulas. Allocation-free by construction.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ClockSync {
+    samples: [ProbeSample; MAX_PROBES],
+    len: usize,
+}
+
+impl ClockSync {
+    pub fn new() -> ClockSync {
+        ClockSync::default()
+    }
+
+    /// Record one probe round-trip. Returns `false` (sample ignored) once
+    /// [`MAX_PROBES`] are held.
+    pub fn add(&mut self, sample: ProbeSample) -> bool {
+        if self.len == MAX_PROBES {
+            return false;
+        }
+        self.samples[self.len] = sample;
+        self.len += 1;
+        true
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// `(offset_nanos, rtt_nanos)` from the minimum-RTT sample — the
+    /// probe least disturbed by queueing, hence the tightest error bound.
+    /// `None` until at least one sample is held.
+    pub fn estimate(&self) -> Option<(i64, u64)> {
+        let best = self.samples[..self.len].iter().min_by_key(|s| s.rtt_nanos())?;
+        Some((best.offset_nanos(), best.rtt_nanos()))
+    }
+
+    /// The estimate as exportable stats for `rank`.
+    pub fn stats(&self, rank: u16) -> Option<ClockSyncStats> {
+        let (offset_nanos, rtt_nanos) = self.estimate()?;
+        Some(ClockSyncStats { rank, offset_nanos, rtt_nanos, probes: self.len as u64 })
+    }
+}
+
+/// One rank's clock-sync result, exported through the metrics registry
+/// (flashlint R5 keeps every field in the export honest).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ClockSyncStats {
+    /// The synced rank (rank 0, the reference, reports offset 0).
+    pub rank: u16,
+    /// Offset to the reference clock: `t_ref ≈ t_local + offset`.
+    pub offset_nanos: i64,
+    /// Minimum probe RTT behind the estimate (error bound `rtt / 2`).
+    pub rtt_nanos: u64,
+    /// Probe round-trips the estimate was picked from.
+    pub probes: u64,
+}
+
+impl ClockSyncStats {
+    /// The reference rank's trivial self-estimate.
+    pub fn reference(rank: u16) -> ClockSyncStats {
+        ClockSyncStats { rank, offset_nanos: 0, rtt_nanos: 0, probes: 0 }
+    }
+}
+
+/// One event of a [`RankTrace`]: the schema of the trace JSON, with the
+/// codec as its display name (the packed tag does not travel through the
+/// JSON) and enums decoded.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    pub seq: u64,
+    pub t_nanos: u64,
+    pub kind: Kind,
+    pub op: Op,
+    pub stage: Stage,
+    pub algo: AlgoTag,
+    pub rank: u16,
+    pub codec: String,
+    pub plan_fp: u64,
+    pub bytes: u64,
+    pub chunk: u32,
+    /// `(peer, per-direction ordinal)` for fabric send/recv events.
+    pub link: Option<(u16, u64)>,
+}
+
+impl TraceEvent {
+    pub fn from_event(e: &Event) -> TraceEvent {
+        TraceEvent {
+            seq: e.seq,
+            t_nanos: e.t_nanos,
+            kind: e.kind,
+            op: e.op,
+            stage: e.stage,
+            algo: e.algo,
+            rank: e.rank,
+            codec: codec_tag_name(e.codec_tag),
+            plan_fp: e.plan_fp,
+            bytes: e.bytes,
+            chunk: e.chunk,
+            link: e.link,
+        }
+    }
+}
+
+/// One rank's trace: the header fields of the trace JSON plus the decoded
+/// events, in sequence order. Built either live ([`RankTrace::from_recorder`])
+/// or from a `--trace-out` file ([`parse_trace`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RankTrace {
+    pub rank: u16,
+    pub capacity: u64,
+    pub recorded: u64,
+    pub dropped_events: u64,
+    pub clock_offset_nanos: i64,
+    pub clock_rtt_nanos: u64,
+    pub clock_probes: u64,
+    pub events: Vec<TraceEvent>,
+}
+
+impl RankTrace {
+    pub fn from_recorder(rec: &Recorder) -> RankTrace {
+        let (clock_offset_nanos, clock_rtt_nanos, clock_probes) = rec.clock();
+        RankTrace {
+            rank: rec.rank() as u16,
+            capacity: rec.capacity() as u64,
+            recorded: rec.total_recorded(),
+            dropped_events: rec.dropped_events(),
+            clock_offset_nanos,
+            clock_rtt_nanos,
+            clock_probes,
+            events: rec.events().iter().map(TraceEvent::from_event).collect(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Trace JSON parsing (hand-rolled: the dependency set has no serde, and
+// the input is this crate's own `trace_json` output).
+
+#[derive(Debug, Clone, PartialEq)]
+enum Json {
+    Null,
+    Bool(bool),
+    Int(i64),
+    Float(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    fn get<'a>(&'a self, key: &str) -> Option<&'a Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    fn as_i64(&self) -> Option<i64> {
+        match self {
+            Json::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Int(v) if *v >= 0 => Some(*v as u64),
+            _ => None,
+        }
+    }
+
+    fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+struct JsonParser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> JsonParser<'a> {
+    fn new(text: &'a str) -> JsonParser<'a> {
+        JsonParser { bytes: text.as_bytes(), pos: 0 }
+    }
+
+    fn error(&self, what: &str) -> anyhow::Error {
+        anyhow!("trace JSON: {what} at byte {}", self.pos)
+    }
+
+    fn skip_ws(&mut self) {
+        while let Some(b) = self.bytes.get(self.pos) {
+            if matches!(b, b' ' | b'\t' | b'\n' | b'\r') {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn eat(&mut self, b: u8) -> Result<()> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(self.error(&format!("expected '{}'", b as char)))
+        }
+    }
+
+    fn eat_lit(&mut self, lit: &str, value: Json) -> Result<Json> {
+        if self.bytes[self.pos..].starts_with(lit.as_bytes()) {
+            self.pos += lit.len();
+            Ok(value)
+        } else {
+            Err(self.error(&format!("expected '{lit}'")))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        self.skip_ws();
+        match self.peek().ok_or_else(|| self.error("unexpected end of input"))? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' => self.eat_lit("true", Json::Bool(true)),
+            b'f' => self.eat_lit("false", Json::Bool(false)),
+            b'n' => self.eat_lit("null", Json::Null),
+            b'-' | b'0'..=b'9' => self.number(),
+            c => Err(self.error(&format!("unexpected character '{}'", c as char))),
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.eat(b'{')?;
+        let mut fields = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.eat(b':')?;
+            let value = self.value()?;
+            fields.push((key, value));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                _ => return Err(self.error("expected ',' or '}'")),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.eat(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => return Err(self.error("expected ',' or ']'")),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        loop {
+            let b = self.peek().ok_or_else(|| self.error("unterminated string"))?;
+            self.pos += 1;
+            match b {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let esc = self.peek().ok_or_else(|| self.error("unterminated escape"))?;
+                    self.pos += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'u' => {
+                            let end = self.pos + 4;
+                            let hex = self
+                                .bytes
+                                .get(self.pos..end)
+                                .ok_or_else(|| self.error("truncated \\u escape"))?;
+                            let hex = std::str::from_utf8(hex)
+                                .map_err(|_| self.error("non-UTF8 \\u escape"))?;
+                            let code = u32::from_str_radix(hex, 16)
+                                .map_err(|_| self.error("bad \\u escape"))?;
+                            out.push(
+                                char::from_u32(code)
+                                    .ok_or_else(|| self.error("bad \\u code point"))?,
+                            );
+                            self.pos = end;
+                        }
+                        _ => return Err(self.error("unknown escape")),
+                    }
+                }
+                _ => {
+                    // Multi-byte UTF-8: copy the whole code point.
+                    let start = self.pos - 1;
+                    let width = utf8_width(b);
+                    let end = start + width;
+                    let chunk = self
+                        .bytes
+                        .get(start..end)
+                        .ok_or_else(|| self.error("truncated UTF-8"))?;
+                    let s =
+                        std::str::from_utf8(chunk).map_err(|_| self.error("invalid UTF-8"))?;
+                    out.push_str(s);
+                    self.pos = end;
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        let mut float = false;
+        while let Some(b) = self.peek() {
+            match b {
+                b'0'..=b'9' => self.pos += 1,
+                b'.' | b'e' | b'E' | b'+' | b'-' => {
+                    float = true;
+                    self.pos += 1;
+                }
+                _ => break,
+            }
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos])
+            .map_err(|_| self.error("non-UTF8 number"))?;
+        if float {
+            text.parse::<f64>().map(Json::Float).map_err(|_| self.error("bad number"))
+        } else {
+            text.parse::<i64>().map(Json::Int).map_err(|_| self.error("bad integer"))
+        }
+    }
+}
+
+fn utf8_width(first: u8) -> usize {
+    match first {
+        0x00..=0x7f => 1,
+        0xc0..=0xdf => 2,
+        0xe0..=0xef => 3,
+        _ => 4,
+    }
+}
+
+fn req_u64(obj: &Json, key: &str) -> Result<u64> {
+    obj.get(key)
+        .and_then(Json::as_u64)
+        .ok_or_else(|| anyhow!("trace JSON: missing or non-integer \"{key}\""))
+}
+
+fn opt_u64(obj: &Json, key: &str) -> u64 {
+    obj.get(key).and_then(Json::as_u64).unwrap_or(0)
+}
+
+fn req_name<'a>(obj: &'a Json, key: &str) -> Result<&'a str> {
+    obj.get(key)
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("trace JSON: missing or non-string \"{key}\""))
+}
+
+/// Parse one per-rank trace file (the output of
+/// [`trace_json`](super::trace_json)) back into a [`RankTrace`]. Header
+/// fields older traces lack (`dropped_events`, the clock block) default
+/// to 0, so pre-clock-sync traces still merge.
+pub fn parse_trace(text: &str) -> Result<RankTrace> {
+    let mut parser = JsonParser::new(text);
+    let root = parser.value()?;
+    parser.skip_ws();
+    if parser.pos != parser.bytes.len() {
+        bail!("trace JSON: trailing garbage at byte {}", parser.pos);
+    }
+    let rank = req_u64(&root, "rank")? as u16;
+    let events_json = match root.get("events") {
+        Some(Json::Arr(items)) => items,
+        _ => bail!("trace JSON: missing \"events\" array"),
+    };
+    let mut events = Vec::with_capacity(events_json.len());
+    for (i, e) in events_json.iter().enumerate() {
+        let event = parse_event(e).with_context(|| format!("event {i} of rank {rank}"))?;
+        events.push(event);
+    }
+    Ok(RankTrace {
+        rank,
+        capacity: req_u64(&root, "capacity")?,
+        recorded: req_u64(&root, "recorded")?,
+        dropped_events: opt_u64(&root, "dropped_events"),
+        clock_offset_nanos: root
+            .get("clock_offset_nanos")
+            .and_then(Json::as_i64)
+            .unwrap_or(0),
+        clock_rtt_nanos: opt_u64(&root, "clock_rtt_nanos"),
+        clock_probes: opt_u64(&root, "clock_probes"),
+        events,
+    })
+}
+
+fn parse_event(e: &Json) -> Result<TraceEvent> {
+    let kind = Kind::from_name(req_name(e, "kind")?)
+        .ok_or_else(|| anyhow!("unknown event kind"))?;
+    let op = Op::from_name(req_name(e, "op")?).ok_or_else(|| anyhow!("unknown event op"))?;
+    let stage =
+        Stage::from_name(req_name(e, "stage")?).ok_or_else(|| anyhow!("unknown event stage"))?;
+    let algo =
+        AlgoTag::from_name(req_name(e, "algo")?).ok_or_else(|| anyhow!("unknown event algo"))?;
+    let fp_text = req_name(e, "plan_fp")?;
+    let plan_fp = u64::from_str_radix(fp_text.trim_start_matches("0x"), 16)
+        .map_err(|_| anyhow!("bad plan_fp {fp_text:?}"))?;
+    let link = match (e.get("peer"), e.get("link_seq")) {
+        (Some(p), Some(q)) => Some((
+            p.as_u64().ok_or_else(|| anyhow!("bad peer"))? as u16,
+            q.as_u64().ok_or_else(|| anyhow!("bad link_seq"))?,
+        )),
+        (None, None) => None,
+        _ => bail!("peer and link_seq must appear together"),
+    };
+    Ok(TraceEvent {
+        seq: req_u64(e, "seq")?,
+        t_nanos: req_u64(e, "t_nanos")?,
+        kind,
+        op,
+        stage,
+        algo,
+        rank: req_u64(e, "rank")? as u16,
+        codec: req_name(e, "codec")?.to_string(),
+        plan_fp,
+        bytes: req_u64(e, "bytes")?,
+        chunk: req_u64(e, "chunk")? as u32,
+        link,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Span pairing and the Chrome-trace merge.
+
+/// One paired span of a rank's trace, on the fabric-aligned clock
+/// (`start_nanos` includes the rank's clock offset, so spans of different
+/// ranks are directly comparable).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Span {
+    pub rank: u16,
+    pub op: Op,
+    pub stage: Stage,
+    pub algo: AlgoTag,
+    pub codec: String,
+    /// Aligned start time (local `t_nanos` + the rank's clock offset —
+    /// may be negative for a rank whose clock runs ahead of rank 0's).
+    pub start_nanos: i128,
+    pub dur_nanos: u64,
+    /// The Start event's byte word (element count for codec spans,
+    /// payload length for sends).
+    pub start_bytes: u64,
+    /// The End event's byte word (bytes on the wire).
+    pub end_bytes: u64,
+    pub chunk: u32,
+    /// The Start event's recorder sequence number (trace-order tiebreak).
+    pub seq: u64,
+    pub plan_fp: u64,
+    pub link: Option<(u16, u64)>,
+}
+
+impl Span {
+    pub fn end_nanos(&self) -> i128 {
+        self.start_nanos + self.dur_nanos as i128
+    }
+}
+
+/// Point events (peer loss, epoch bumps, rejoins) surfaced as instants.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Instant {
+    pub rank: u16,
+    pub op: Op,
+    pub t_nanos: i128,
+    pub bytes: u64,
+    pub seq: u64,
+}
+
+/// Pair one rank's events into aligned spans, innermost-first per
+/// `(algo, stage, op, codec)` like the metrics registry. Returns
+/// `(spans, instants, unpaired_event_count)`; unpaired events (a Start
+/// whose End was overwritten, or vice versa) are counted, never invented.
+pub fn paired_spans(trace: &RankTrace) -> (Vec<Span>, Vec<Instant>, usize) {
+    let offset = trace.clock_offset_nanos as i128;
+    let mut open: std::collections::BTreeMap<(u8, u8, u8, &str), Vec<&TraceEvent>> =
+        std::collections::BTreeMap::new();
+    let mut spans = Vec::new();
+    let mut instants = Vec::new();
+    let mut unpaired = 0usize;
+    for e in &trace.events {
+        if matches!(e.op, Op::PeerLost | Op::EpochBump | Op::Rejoin) {
+            instants.push(Instant {
+                rank: e.rank,
+                op: e.op,
+                t_nanos: e.t_nanos as i128 + offset,
+                bytes: e.bytes,
+                seq: e.seq,
+            });
+            continue;
+        }
+        let key = (e.algo as u8, e.stage as u8, e.op as u8, e.codec.as_str());
+        match e.kind {
+            Kind::Start => open.entry(key).or_default().push(e),
+            Kind::End => {
+                let Some(start) = open.get_mut(&key).and_then(|v| v.pop()) else {
+                    unpaired += 1;
+                    continue;
+                };
+                spans.push(Span {
+                    rank: start.rank,
+                    op: start.op,
+                    stage: start.stage,
+                    algo: start.algo,
+                    codec: start.codec.clone(),
+                    start_nanos: start.t_nanos as i128 + offset,
+                    dur_nanos: e.t_nanos.saturating_sub(start.t_nanos),
+                    start_bytes: start.bytes,
+                    end_bytes: e.bytes,
+                    chunk: start.chunk,
+                    seq: start.seq,
+                    plan_fp: start.plan_fp,
+                    link: start.link,
+                });
+            }
+        }
+    }
+    unpaired += open.values().map(Vec::len).sum::<usize>();
+    spans.sort_by_key(|s| (s.start_nanos, s.seq));
+    (spans, instants, unpaired)
+}
+
+/// The merged fabric trace: Chrome-trace-event JSON plus merge
+/// diagnostics. `json` is deterministic — identical inputs merge to
+/// byte-identical output.
+#[derive(Debug, Clone)]
+pub struct MergedTrace {
+    /// Chrome-trace-event JSON (open in Perfetto / `chrome://tracing`).
+    pub json: String,
+    /// Gap and mismatch warnings (wraparound losses, unmatched edges).
+    pub warnings: Vec<String>,
+    pub ranks: usize,
+    pub spans: usize,
+    /// Matched send→recv flow arrows.
+    pub flows: usize,
+}
+
+/// Microseconds with fixed 3-decimal nanosecond precision — Chrome trace
+/// `ts`/`dur` are in µs; fixed formatting keeps the merge deterministic.
+fn fmt_us(nanos: i128) -> String {
+    let (sign, n) = if nanos < 0 { ("-", -nanos) } else { ("", nanos) };
+    format!("{sign}{}.{:03}", n / 1000, n % 1000)
+}
+
+/// Merge per-rank traces into one fabric-wide Chrome-trace JSON. Input
+/// order does not matter (tracks sort by rank); ranks must be unique.
+/// See the module docs for the event mapping; warnings flag wrapped
+/// (lossy) inputs and send/recv edges whose other side is missing.
+pub fn merge_traces(traces: &[RankTrace]) -> Result<MergedTrace> {
+    if traces.is_empty() {
+        bail!("nothing to merge: no rank traces given");
+    }
+    let mut order: Vec<&RankTrace> = traces.iter().collect();
+    order.sort_by_key(|t| t.rank);
+    for pair in order.windows(2) {
+        if pair[0].rank == pair[1].rank {
+            bail!("duplicate trace for rank {}", pair[0].rank);
+        }
+    }
+
+    let mut warnings = Vec::new();
+    let mut all_spans: Vec<Span> = Vec::new();
+    let mut all_instants: Vec<Instant> = Vec::new();
+    for t in &order {
+        if t.dropped_events > 0 {
+            warnings.push(format!(
+                "rank {}: ring wrapped, {} events dropped — trace has gaps \
+                 (raise --trace-capacity)",
+                t.rank, t.dropped_events
+            ));
+        }
+        let (spans, instants, unpaired) = paired_spans(t);
+        if unpaired > 0 {
+            warnings.push(format!(
+                "rank {}: {unpaired} events had no span partner (wrapped mid-span?)",
+                t.rank
+            ));
+        }
+        all_spans.extend(spans);
+        all_instants.extend(instants);
+    }
+
+    // Send→recv edges: a send's (src → dst, ordinal) matches the dst's
+    // recv (src → dst, ordinal) — the per-link FIFO contract makes the
+    // ordinals line up.
+    let mut sends: std::collections::BTreeMap<(u16, u16, u64), usize> =
+        std::collections::BTreeMap::new();
+    let mut recvs: std::collections::BTreeMap<(u16, u16, u64), usize> =
+        std::collections::BTreeMap::new();
+    for (i, s) in all_spans.iter().enumerate() {
+        if let Some((peer, ordinal)) = s.link {
+            match s.op {
+                Op::Send => {
+                    sends.insert((s.rank, peer, ordinal), i);
+                }
+                Op::Recv => {
+                    recvs.insert((peer, s.rank, ordinal), i);
+                }
+                _ => {}
+            }
+        }
+    }
+    let mut flows: Vec<(usize, usize)> = Vec::new();
+    let mut unmatched = 0usize;
+    for (key, send_idx) in &sends {
+        match recvs.get(key) {
+            Some(recv_idx) => flows.push((*send_idx, *recv_idx)),
+            None => unmatched += 1,
+        }
+    }
+    unmatched += recvs.keys().filter(|k| !sends.contains_key(*k)).count();
+    if unmatched > 0 {
+        warnings.push(format!(
+            "{unmatched} send/recv edges missing their other side (wrapped or lost peer)"
+        ));
+    }
+
+    // Normalize to the earliest aligned instant so `ts` starts near 0.
+    let t0 = all_spans
+        .iter()
+        .map(|s| s.start_nanos)
+        .chain(all_instants.iter().map(|i| i.t_nanos))
+        .min()
+        .unwrap_or(0);
+
+    let mut events: Vec<String> = Vec::new();
+    events.push(
+        "{\"ph\":\"M\",\"pid\":1,\"tid\":0,\"name\":\"process_name\",\
+         \"args\":{\"name\":\"flashcomm fabric\"}}"
+            .to_string(),
+    );
+    for t in &order {
+        events.push(format!(
+            "{{\"ph\":\"M\",\"pid\":1,\"tid\":{},\"name\":\"thread_name\",\
+             \"args\":{{\"name\":\"rank {}\"}}}}",
+            t.rank, t.rank
+        ));
+    }
+    for s in &all_spans {
+        events.push(format!(
+            "{{\"ph\":\"X\",\"pid\":1,\"tid\":{},\"ts\":{},\"dur\":{},\
+             \"name\":\"{}/{}/{}\",\"cat\":\"{}\",\"args\":{{\"op\":\"{}\",\"bytes\":{},\
+             \"chunk\":{},\"seq\":{},\"plan_fp\":\"{:#018x}\"}}}}",
+            s.rank,
+            fmt_us(s.start_nanos - t0),
+            fmt_us(s.dur_nanos as i128),
+            s.algo.name(),
+            s.stage.name(),
+            s.codec,
+            s.op.name(),
+            s.op.name(),
+            s.end_bytes,
+            s.chunk,
+            s.seq,
+            s.plan_fp
+        ));
+    }
+    all_instants.sort_by_key(|i| (i.t_nanos, i.rank, i.seq));
+    for i in &all_instants {
+        events.push(format!(
+            "{{\"ph\":\"i\",\"pid\":1,\"tid\":{},\"ts\":{},\"s\":\"g\",\"name\":\"{}\",\
+             \"args\":{{\"bytes\":{}}}}}",
+            i.rank,
+            fmt_us(i.t_nanos - t0),
+            i.op.name(),
+            i.bytes
+        ));
+    }
+    flows.sort_by_key(|&(s, r)| {
+        (all_spans[s].start_nanos, all_spans[s].rank, all_spans[s].seq, r)
+    });
+    for (id, &(send_idx, recv_idx)) in flows.iter().enumerate() {
+        let (send, recv) = (&all_spans[send_idx], &all_spans[recv_idx]);
+        events.push(format!(
+            "{{\"ph\":\"s\",\"pid\":1,\"tid\":{},\"ts\":{},\"id\":{},\"name\":\"{}\",\
+             \"cat\":\"flow\"}}",
+            send.rank,
+            fmt_us(send.start_nanos - t0),
+            id + 1,
+            send.stage.name()
+        ));
+        events.push(format!(
+            "{{\"ph\":\"f\",\"pid\":1,\"tid\":{},\"ts\":{},\"id\":{},\"name\":\"{}\",\
+             \"cat\":\"flow\",\"bp\":\"e\"}}",
+            recv.rank,
+            fmt_us(recv.end_nanos() - t0),
+            id + 1,
+            recv.stage.name()
+        ));
+    }
+
+    let mut json = String::with_capacity(128 + events.iter().map(String::len).sum::<usize>());
+    json.push_str(&format!(
+        "{{\"displayTimeUnit\":\"ms\",\"otherData\":{{\"ranks\":{},\"spans\":{},\
+         \"flows\":{}}},\"traceEvents\":[",
+        order.len(),
+        all_spans.len(),
+        flows.len()
+    ));
+    for (i, e) in events.iter().enumerate() {
+        if i > 0 {
+            json.push(',');
+        }
+        json.push('\n');
+        json.push_str(e);
+    }
+    json.push_str("\n]}\n");
+
+    Ok(MergedTrace {
+        json,
+        warnings,
+        ranks: order.len(),
+        spans: all_spans.len(),
+        flows: flows.len(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::trace_json;
+
+    #[test]
+    fn offset_math_matches_the_ntp_formulas() {
+        // Requester clock runs 1000 ns behind the reference; one-way
+        // delays 300 ns out, 500 ns back; service time 100 ns.
+        let s = ProbeSample { t1: 0, t2: 1300, t3: 1400, t4: 900 };
+        assert_eq!(s.rtt_nanos(), 800, "(t4-t1) - (t3-t2)");
+        let offset = s.offset_nanos();
+        assert_eq!(offset, 900, "((t2-t1)+(t3-t4))/2 under asymmetric delay");
+        // The bound holds: |est - true| = |900 - 1000| = 100 <= rtt/2.
+        assert!((offset - 1000).unsigned_abs() <= s.rtt_nanos() / 2);
+    }
+
+    #[test]
+    fn estimate_picks_the_min_rtt_probe_and_caps_samples() {
+        let mut cs = ClockSync::new();
+        assert!(cs.estimate().is_none());
+        // Symmetric probe (100 ns each way, 100 ns service), requester
+        // 500 ns behind the reference: offset exactly 500, rtt 200.
+        cs.add(ProbeSample { t1: 0, t2: 600, t3: 700, t4: 300 });
+        // Noisy probe: huge rtt, skewed offset — must lose.
+        cs.add(ProbeSample { t1: 1000, t2: 9000, t3: 9100, t4: 11_000 });
+        let (offset, rtt) = cs.estimate().unwrap();
+        assert_eq!((offset, rtt), (500, 200));
+        let stats = cs.stats(3).unwrap();
+        assert_eq!(stats, ClockSyncStats { rank: 3, offset_nanos: 500, rtt_nanos: 200, probes: 2 });
+        for _ in 0..MAX_PROBES {
+            cs.add(ProbeSample::default());
+        }
+        assert_eq!(cs.len(), MAX_PROBES, "sample store is capped");
+        assert!(!cs.add(ProbeSample::default()));
+    }
+
+    fn recorded_trace() -> RankTrace {
+        let rec = Recorder::new(2, 64);
+        rec.set_plan(0xabc, AlgoTag::Hier);
+        rec.set_stage(Stage::ReduceScatter, 0x2004);
+        rec.record_link(Kind::Start, Op::Send, 100, 3, 0);
+        rec.record_link(Kind::End, Op::Send, 100, 3, 0);
+        rec.record(Kind::Start, Op::Encode, 256);
+        rec.record(Kind::End, Op::Encode, 64);
+        rec.set_clock(-250, 1000, 8);
+        RankTrace::from_recorder(&rec)
+    }
+
+    #[test]
+    fn trace_json_round_trips_through_the_parser() {
+        let rec = Recorder::new(2, 64);
+        rec.set_plan(0xabc, AlgoTag::Hier);
+        rec.set_stage(Stage::ReduceScatter, 0x2004);
+        rec.record_link(Kind::Start, Op::Send, 100, 3, 7);
+        rec.record_link(Kind::End, Op::Send, 100, 3, 7);
+        rec.set_clock(-250, 1000, 8);
+        let direct = RankTrace::from_recorder(&rec);
+        let parsed = parse_trace(&trace_json(&rec)).unwrap();
+        assert_eq!(parsed, direct, "parse(serialize(x)) == x");
+        assert_eq!(parsed.clock_offset_nanos, -250);
+        assert_eq!(parsed.events[0].link, Some((3, 7)));
+    }
+
+    #[test]
+    fn parser_rejects_garbage_loudly() {
+        assert!(parse_trace("").is_err());
+        assert!(parse_trace("{\"rank\":0}").is_err(), "missing events");
+        assert!(parse_trace("[1,2,3]").is_err(), "not a trace object");
+        let ok = "{\"rank\":0,\"capacity\":4,\"recorded\":0,\"events\":[]}";
+        assert!(parse_trace(ok).is_ok(), "legacy headers without clock fields parse");
+        assert!(parse_trace(&format!("{ok}x")).is_err(), "trailing garbage");
+    }
+
+    #[test]
+    fn spans_pair_with_aligned_starts_and_link_identity() {
+        let t = recorded_trace();
+        let (spans, instants, unpaired) = paired_spans(&t);
+        assert_eq!((spans.len(), instants.len(), unpaired), (2, 0, 0));
+        let send = spans.iter().find(|s| s.op == Op::Send).unwrap();
+        assert_eq!(send.link, Some((3, 0)));
+        assert_eq!(send.stage, Stage::ReduceScatter);
+        // Aligned: local t_nanos plus the -250 offset.
+        let raw = t.events.iter().find(|e| e.op == Op::Send).unwrap().t_nanos;
+        assert_eq!(send.start_nanos, raw as i128 - 250);
+    }
+
+    #[test]
+    fn merge_draws_flow_arrows_and_is_deterministic() {
+        // Two ranks, one matched edge: rank 0 sends (0→1, ordinal 0),
+        // rank 1 receives it.
+        let a = Recorder::new(0, 16);
+        a.record_link(Kind::Start, Op::Send, 64, 1, 0);
+        a.record_link(Kind::End, Op::Send, 64, 1, 0);
+        let b = Recorder::new(1, 16);
+        b.record_link(Kind::Start, Op::Recv, 0, 0, 0);
+        b.record_link(Kind::End, Op::Recv, 64, 0, 0);
+        let traces = [RankTrace::from_recorder(&a), RankTrace::from_recorder(&b)];
+        let merged = merge_traces(&traces).unwrap();
+        assert_eq!((merged.ranks, merged.spans, merged.flows), (2, 2, 1));
+        assert!(merged.warnings.is_empty(), "{:?}", merged.warnings);
+        assert!(merged.json.contains("\"ph\":\"s\""), "flow start");
+        assert!(merged.json.contains("\"ph\":\"f\""), "flow finish");
+        assert!(merged.json.contains("\"name\":\"rank 1\""));
+        let again = merge_traces(&traces).unwrap();
+        assert_eq!(merged.json, again.json, "same inputs, byte-identical output");
+    }
+
+    #[test]
+    fn merge_warns_on_gaps_and_rejects_duplicate_ranks() {
+        let tiny = Recorder::new(0, 1);
+        for _ in 0..3 {
+            tiny.record(Kind::Start, Op::Send, 1);
+        }
+        let t = RankTrace::from_recorder(&tiny);
+        let merged = merge_traces(&[t.clone()]).unwrap();
+        assert!(
+            merged.warnings.iter().any(|w| w.contains("2 events dropped")),
+            "{:?}",
+            merged.warnings
+        );
+        assert!(merge_traces(&[t.clone(), t]).is_err(), "duplicate rank must fail");
+        assert!(merge_traces(&[]).is_err(), "empty input must fail");
+    }
+
+    #[test]
+    fn microsecond_formatting_is_exact() {
+        assert_eq!(fmt_us(0), "0.000");
+        assert_eq!(fmt_us(1), "0.001");
+        assert_eq!(fmt_us(1_234_567), "1234.567");
+        assert_eq!(fmt_us(-1_500), "-1.500");
+    }
+}

@@ -44,7 +44,7 @@ pub const FRAME_MAGIC: u32 = u32::from_le_bytes(*b"FCT2");
 /// poisoning the per-link sequence space.
 pub const FRAME_VERSION: u8 = 2;
 
-/// Header `flags` bits. These four values are the only place in the tree
+/// Header `flags` bits. These five values are the only place in the tree
 /// where the bit assignments may be spelled as literals; everything else
 /// (including the reserved-bit check in [`FrameHeader::parse`]) goes
 /// through the named constants.
@@ -63,10 +63,20 @@ pub mod flags {
     /// UDP ACK control datagram (receiver → sender: "this frame is fully
     /// delivered — retire it and take an RTT sample").
     pub const ACK: u8 = 0x08;
+    /// Clock-sync probe frame (DESIGN.md §15): a 24-byte payload of
+    /// three `u64` nanosecond timestamps (layout in
+    /// [`super::offsets`]). A request carries `t1` (requester's send
+    /// time); the reference rank echoes it back with `t2`/`t3` (its
+    /// recv/reply times) filled in. Probe frames travel *nested* as the
+    /// payload of an ordinary transport send (`session::sync_clocks`),
+    /// so every backend — including InProc, which has no wire frames —
+    /// carries them unchanged; the flag bit marks the inner frame so a
+    /// mis-routed probe fails parse instead of decoding as data.
+    pub const PROBE: u8 = 0x10;
     /// All flag bits this build understands;
     /// [`FrameHeader::parse`](super::FrameHeader::parse) rejects anything
     /// outside this mask so a future layout change fails loudly.
-    pub const MASK: u8 = HEARTBEAT | SEGMENT | NACK | ACK;
+    pub const MASK: u8 = HEARTBEAT | SEGMENT | NACK | ACK | PROBE;
 }
 
 /// Compat alias for [`flags::HEARTBEAT`].
@@ -77,6 +87,8 @@ pub const FLAG_SEGMENT: u8 = flags::SEGMENT;
 pub const FLAG_NACK: u8 = flags::NACK;
 /// Compat alias for [`flags::ACK`].
 pub const FLAG_ACK: u8 = flags::ACK;
+/// Compat alias for [`flags::PROBE`].
+pub const FLAG_PROBE: u8 = flags::PROBE;
 /// Compat alias for [`flags::MASK`].
 pub const FLAG_MASK: u8 = flags::MASK;
 
@@ -130,6 +142,16 @@ pub mod offsets {
     pub const NACK_COUNT: Range<usize> = 4..6;
     /// ACK payload: `frame_seq: u32` being retired.
     pub const ACK_FRAME_SEQ: Range<usize> = 0..4;
+
+    /// Probe payload: `t1: u64` — the requester's send time, nanos on
+    /// its recorder clock (echoed back verbatim by the reference).
+    pub const PROBE_T1: Range<usize> = 0..8;
+    /// Probe payload: `t2: u64` — the reference's receive time, nanos
+    /// on its recorder clock (0 in a request).
+    pub const PROBE_T2: Range<usize> = 8..16;
+    /// Probe payload: `t3: u64` — the reference's reply time, nanos on
+    /// its recorder clock (0 in a request).
+    pub const PROBE_T3: Range<usize> = 16..24;
 }
 
 /// Fixed header length in bytes (24 B of fields + 4 B header CRC).
@@ -141,6 +163,9 @@ pub const FRAME_HEADER_LEN: usize = 28;
 pub const SEG_HEADER_LEN: usize = 16;
 /// NACK payload fixed prefix length (`frame_seq u32 | n u16`).
 pub const NACK_PREFIX_LEN: usize = 6;
+/// Clock-probe payload length (`t1 u64 | t2 u64 | t3 u64`; see the
+/// `PROBE_*` ranges in [`offsets`]).
+pub const PROBE_PAYLOAD_LEN: usize = 24;
 /// Upper bound on a single frame's payload (sanity check before the
 /// receiver trusts `len` enough to allocate).
 pub const MAX_PAYLOAD: u32 = 1 << 30;
@@ -160,6 +185,13 @@ pub fn read_u32(buf: &[u8], field: Range<usize>) -> u32 {
     let mut b = [0u8; 4];
     b.copy_from_slice(&buf[field]);
     u32::from_le_bytes(b)
+}
+
+/// Read a little-endian `u64` field out of `buf` (see [`read_u16`]).
+pub fn read_u64(buf: &[u8], field: Range<usize>) -> u64 {
+    let mut b = [0u8; 8];
+    b.copy_from_slice(&buf[field]);
+    u64::from_le_bytes(b)
 }
 
 /// Parsed frame header.
@@ -326,6 +358,54 @@ pub fn encode_heartbeat(src: u16, dst: u16, epoch: u16, seq: u32) -> [u8; FRAME_
         .to_bytes()
 }
 
+/// Encode a clock-sync probe frame ([`flags::PROBE`] set): three `u64`
+/// recorder-clock timestamps (DESIGN.md §15). A requester sets only
+/// `t1`; the reference echoes `t1` back with `t2`/`t3` filled in. The
+/// result travels as the payload of an ordinary transport send, and
+/// `seq` counts probes per peer (independent of any link sequence).
+pub fn encode_probe(
+    src: u16,
+    dst: u16,
+    epoch: u16,
+    seq: u32,
+    t1: u64,
+    t2: u64,
+    t3: u64,
+) -> Vec<u8> {
+    let mut payload = [0u8; PROBE_PAYLOAD_LEN];
+    payload[offsets::PROBE_T1].copy_from_slice(&t1.to_le_bytes());
+    payload[offsets::PROBE_T2].copy_from_slice(&t2.to_le_bytes());
+    payload[offsets::PROBE_T3].copy_from_slice(&t3.to_le_bytes());
+    let hdr = FrameHeader {
+        flags: flags::PROBE,
+        src,
+        dst,
+        epoch,
+        seq,
+        len: PROBE_PAYLOAD_LEN as u32,
+        crc: crc32(&payload),
+    };
+    let mut out = Vec::with_capacity(FRAME_HEADER_LEN + PROBE_PAYLOAD_LEN);
+    hdr.write(&mut out);
+    out.extend_from_slice(&payload);
+    out
+}
+
+/// Decode a probe frame's timestamps `(t1, t2, t3)` from its bare
+/// payload (after the usual header/CRC validation of [`decode`]).
+pub fn decode_probe(payload: &[u8]) -> Result<(u64, u64, u64)> {
+    ensure!(
+        payload.len() == PROBE_PAYLOAD_LEN,
+        "probe payload is {} bytes, expected {PROBE_PAYLOAD_LEN}",
+        payload.len()
+    );
+    Ok((
+        read_u64(payload, offsets::PROBE_T1),
+        read_u64(payload, offsets::PROBE_T2),
+        read_u64(payload, offsets::PROBE_T3),
+    ))
+}
+
 /// Decode a complete frame buffer: validate the header, the exact length,
 /// and the payload CRC. On success the buffer is shrunk in place to the
 /// bare payload (the header is removed with a memmove of the payload —
@@ -363,8 +443,10 @@ mod tests {
         assert_eq!(flags::SEGMENT, 0x02);
         assert_eq!(flags::NACK, 0x04);
         assert_eq!(flags::ACK, 0x08);
-        assert_eq!(flags::MASK, 0x0F);
+        assert_eq!(flags::PROBE, 0x10);
+        assert_eq!(flags::MASK, 0x1F);
         assert_eq!(FLAG_HEARTBEAT, flags::HEARTBEAT);
+        assert_eq!(FLAG_PROBE, flags::PROBE);
         assert_eq!(FLAG_MASK, flags::MASK);
         assert_eq!(
             [
@@ -395,6 +477,11 @@ mod tests {
         assert_eq!((offsets::NACK_FRAME_SEQ, offsets::NACK_COUNT), (0..4, 4..6));
         assert_eq!(offsets::NACK_COUNT.end, NACK_PREFIX_LEN);
         assert_eq!(offsets::ACK_FRAME_SEQ, 0..4);
+        assert_eq!(
+            [offsets::PROBE_T1, offsets::PROBE_T2, offsets::PROBE_T3],
+            [0..8, 8..16, 16..24]
+        );
+        assert_eq!(offsets::PROBE_T3.end, PROBE_PAYLOAD_LEN);
         // Header field readout through the named offsets matches the
         // hand-assembled layout byte for byte.
         let hdr =
@@ -454,11 +541,27 @@ mod tests {
     #[test]
     fn unknown_flag_bits_rejected() {
         let mut bad = sample();
-        bad[5] = 0x10; // reserved bit (0x01..0x08 are assigned; see flags::MASK)
+        bad[5] = 0x20; // reserved bit (0x01..0x10 are assigned; see flags::MASK)
         let hcrc = crc32(&bad[..24]);
         bad[24..28].copy_from_slice(&hcrc.to_le_bytes());
         let err = decode(bad).unwrap_err();
         assert!(err.to_string().contains("unknown flag"), "{err}");
+    }
+
+    #[test]
+    fn probe_roundtrip_carries_three_timestamps() {
+        let framed = encode_probe(1, 0, 3, 9, 111, 0, 0);
+        let (hdr, payload) = decode(framed).unwrap();
+        assert_eq!(hdr.flags, flags::PROBE);
+        assert_eq!((hdr.src, hdr.dst, hdr.epoch, hdr.seq), (1, 0, 3, 9));
+        assert_eq!(decode_probe(&payload).unwrap(), (111, 0, 0));
+        // The reference's reply echoes t1 and fills in t2/t3.
+        let reply = encode_probe(0, 1, 3, 9, 111, 222, 333);
+        let (_, payload) = decode(reply).unwrap();
+        assert_eq!(decode_probe(&payload).unwrap(), (111, 222, 333));
+        // A truncated or oversized probe payload fails loudly.
+        assert!(decode_probe(&payload[..16]).is_err());
+        assert!(decode_probe(&[0u8; 32]).is_err());
     }
 
     #[test]

@@ -262,6 +262,19 @@ pub fn export() -> String {
 }
 
 #[test]
+fn obs_rule_covers_the_clock_and_straggler_structs() {
+    let trace = (
+        "telemetry/trace.rs",
+        "pub struct ClockSyncStats {\n    pub rank: u16,\n    pub offset_nanos: i64,\n}\n",
+    );
+    let analyze =
+        ("telemetry/analyze.rs", "pub struct StragglerReport {\n    pub excess_ms: f64,\n}\n");
+    let registry = ("telemetry/registry.rs", "pub const KEYS: &[&str] = &[\"rank\"];\n");
+    let findings = run_on_sources(&[trace, analyze, registry]);
+    assert_eq!(count(&findings, Rule::Obs), 2, "offset_nanos and excess_ms unexported: {findings:?}");
+}
+
+#[test]
 fn obs_rule_is_skipped_without_a_registry_source() {
     let transport = (
         "transport/mod.rs",

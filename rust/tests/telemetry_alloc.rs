@@ -6,7 +6,7 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use flashcomm::record;
-use flashcomm::telemetry::{AlgoTag, Op, Recorder, Stage};
+use flashcomm::telemetry::{AlgoTag, ClockSync, Op, ProbeSample, Recorder, Stage, MAX_PROBES};
 
 struct CountingAlloc;
 
@@ -53,4 +53,42 @@ fn recording_hot_path_never_allocates() {
     }
     assert_eq!(ALLOCS.load(Ordering::Relaxed), before, "enabled recorder allocated");
     assert_eq!(recorder.total_recorded(), 20_000);
+
+    // The link-stamped variant (per-link send/recv ordinals) shares the
+    // same pre-allocated slots — the extra word is just one more store.
+    let before = ALLOCS.load(Ordering::Relaxed);
+    for i in 0..10_000u64 {
+        recorder.record_link(flashcomm::telemetry::Kind::Start, Op::Send, i, 1, i);
+        recorder.record_link(flashcomm::telemetry::Kind::End, Op::Send, i, 1, i);
+    }
+    assert_eq!(ALLOCS.load(Ordering::Relaxed), before, "record_link allocated");
+
+    // One test binary, one #[test]: a sibling test on another thread
+    // would pollute the process-global counter, so the clock pin runs
+    // here rather than in its own function.
+    clock_probe_path_never_allocates();
+}
+
+fn clock_probe_path_never_allocates() {
+    // Everything a `sync_clocks` exchange touches on the estimating side
+    // — timestamping, accumulating probe samples into the fixed array,
+    // the min-RTT estimate, installing the result — must stay off the
+    // allocator: the probes run inside session establish and between
+    // collective iterations, where a hidden allocation would skew the
+    // very RTTs being measured.
+    let recorder = Recorder::new(1, 64);
+    let before = ALLOCS.load(Ordering::Relaxed);
+    let mut sync = ClockSync::new();
+    for k in 0..(2 * MAX_PROBES as u64) {
+        let t1 = recorder.now_nanos();
+        let sample =
+            ProbeSample { t1, t2: t1 + 40 + k, t3: t1 + 45 + k, t4: recorder.now_nanos() + 90 };
+        sync.add(sample);
+    }
+    let (offset, rtt) = sync.estimate().expect("samples were added");
+    recorder.set_clock(offset, rtt, sync.len() as u64);
+    let stats = sync.stats(1).expect("non-empty sync");
+    assert_eq!(ALLOCS.load(Ordering::Relaxed), before, "clock probe path allocated");
+    assert_eq!(stats.rank, 1);
+    assert_eq!(recorder.clock(), (offset, rtt, MAX_PROBES as u64));
 }

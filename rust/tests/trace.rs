@@ -1,0 +1,187 @@
+//! Fabric-trace integration tests: clock-aligned merge determinism, the
+//! NTP-style offset bound over a real (in-process) transport, and the
+//! acceptance fixture — a deliberately delayed rank must be named in the
+//! straggler report with the right stage, the merged Chrome trace must
+//! render the delay as a span at least as long as the injected sleep,
+//! and the fabric-median recalibration must beat the pooled per-rank
+//! estimate that the straggler poisons (DESIGN.md §15).
+
+use std::time::{Duration, Instant};
+
+use flashcomm::comm::{fabric, Algo, AlgoPolicy, Communicator};
+use flashcomm::quant::Codec;
+use flashcomm::session;
+use flashcomm::session::fault::{wrap_mesh, Fault};
+use flashcomm::telemetry::{self, RankTrace, Stage};
+use flashcomm::topo::{presets, Topology};
+use flashcomm::transport::inproc;
+use flashcomm::util::Prng;
+
+fn inputs(n: usize, len: usize, salt: u64) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|r| {
+            let mut rng = Prng::new(salt + r as u64);
+            let mut v = vec![0f32; len];
+            rng.fill_activations(&mut v, 1.0);
+            v
+        })
+        .collect()
+}
+
+fn hier() -> AlgoPolicy {
+    AlgoPolicy::Fixed(Algo::Hier)
+}
+
+/// Run one recorded hier AllReduce on a 4-rank / 2-group box with the
+/// given per-rank faults; returns each rank's (trace, trace JSON, raw
+/// events). All four recorders share one clock origin, so the traces are
+/// aligned by construction (offset 0 — exactly what `sync_clocks`
+/// establishes for real processes).
+fn recorded_run(faults: Vec<Fault>) -> Vec<(RankTrace, String, Vec<telemetry::Event>)> {
+    let topo = Topology::try_with_groups(presets::l40(), 4, 2).unwrap();
+    let codec = Codec::parse("int4@32").unwrap();
+    let ins = inputs(4, 1024, 77);
+    let ins = &ins;
+    let origin = Instant::now();
+    let endpoints = wrap_mesh(inproc::mesh(4), faults, Duration::from_secs(30));
+    let (out, _) = fabric::run_ranks_with(endpoints, &topo, move |h| {
+        let mut c = Communicator::from_handle(h);
+        c.enable_recording_from(4096, origin);
+        let mut d = ins[c.rank()].clone();
+        c.allreduce(&mut d, &codec, hier()).unwrap();
+        let trace = c.rank_trace().unwrap();
+        let json = c.trace_json().unwrap();
+        let events = c.recorder().unwrap().events();
+        (trace, json, events)
+    });
+    out
+}
+
+/// Largest `"dur"` value (microseconds) in a merged Chrome-trace JSON.
+fn max_dur_us(merged_json: &str) -> f64 {
+    let mut max = 0f64;
+    let mut rest = merged_json;
+    while let Some(i) = rest.find("\"dur\":") {
+        rest = &rest[i + 6..];
+        let end = rest.find(|c: char| c != '-' && c != '.' && !c.is_ascii_digit()).unwrap();
+        let v: f64 = rest[..end].parse().unwrap();
+        max = max.max(v);
+    }
+    max
+}
+
+#[test]
+fn a_clean_run_reports_no_stragglers_and_merges_with_flow_arrows() {
+    let out = recorded_run(vec![Fault::None; 4]);
+    let traces: Vec<RankTrace> = out.iter().map(|(t, _, _)| t.clone()).collect();
+    let report = telemetry::analyze(&traces);
+    assert!(
+        report.is_clean(),
+        "no fault was injected, yet: {:?}",
+        report.stragglers
+    );
+    let merged = telemetry::merge_traces(&traces).unwrap();
+    assert!(merged.warnings.is_empty(), "{:?}", merged.warnings);
+    assert_eq!(merged.ranks, 4);
+    assert!(merged.flows > 0, "a hier collective must draw send->recv flow arrows");
+}
+
+#[test]
+fn the_merge_is_byte_deterministic_through_the_file_round_trip() {
+    let out = recorded_run(vec![Fault::None; 4]);
+    let direct: Vec<RankTrace> = out.iter().map(|(t, _, _)| t.clone()).collect();
+    // Round-trip each rank through the on-disk representation (what
+    // `flashcomm trace merge` consumes) and require the merged JSON to be
+    // byte-identical to merging the in-memory traces — twice, for the
+    // determinism of the merge itself.
+    let reparsed: Vec<RankTrace> =
+        out.iter().map(|(_, json, _)| telemetry::parse_trace(json).unwrap()).collect();
+    let a = telemetry::merge_traces(&direct).unwrap();
+    let b = telemetry::merge_traces(&reparsed).unwrap();
+    let c = telemetry::merge_traces(&reparsed).unwrap();
+    assert_eq!(a.json, b.json, "file round-trip changed the merged trace");
+    assert_eq!(b.json, c.json, "merging the same traces twice diverged");
+}
+
+/// The acceptance fixture: rank 3 sleeps 80 ms inside its first send (the
+/// intra reduce-scatter on a 4-rank / 2-group hier schedule), so the
+/// fabric critical path must (1) name rank 3 at stage `rs` with roughly
+/// the injected excess, (2) render a >= 80 ms span in the merged Chrome
+/// trace, and (3) recalibrate from per-tier medians that shrug the
+/// straggler off while the pooled per-rank estimate eats it.
+#[test]
+fn a_delayed_rank_is_named_with_its_stage_and_the_gap_is_visible() {
+    const DELAY: Duration = Duration::from_millis(80);
+    let faults = vec![
+        Fault::None,
+        Fault::None,
+        Fault::None,
+        Fault::Delay { nth: 0, by: DELAY },
+    ];
+    let out = recorded_run(faults);
+    let traces: Vec<RankTrace> = out.iter().map(|(t, _, _)| t.clone()).collect();
+
+    let report = telemetry::analyze(&traces);
+    assert!(!report.is_clean(), "an 80 ms stall must clear the straggler floor");
+    let top = &report.stragglers[0];
+    assert_eq!(top.rank, 3, "the delayed sender is the straggler: {report:?}");
+    assert_eq!(top.stage, Stage::ReduceScatter, "send 0 is the intra reduce-scatter");
+    assert!(
+        top.excess_ms >= 60.0,
+        "excess {} ms does not reflect the 80 ms sleep",
+        top.excess_ms
+    );
+
+    let merged = telemetry::merge_traces(&traces).unwrap();
+    let longest = max_dur_us(&merged.json);
+    assert!(
+        longest >= 80_000.0,
+        "the merged trace must render the 80 ms stall as a span (longest: {longest} us)"
+    );
+
+    // Fabric recalibration: the per-tier medians ignore the one poisoned
+    // span; the pooled estimate (what a single rank's recorder distills)
+    // divides the same bytes by 80 ms of sleep.
+    let all_events: Vec<telemetry::Event> =
+        out.iter().flat_map(|(_, _, ev)| ev.iter().copied()).collect();
+    let pooled = telemetry::distill_profile(&all_events);
+    let fabric = telemetry::distill_fabric_profile(&traces);
+    let (f, p) = (fabric.intra_bw.unwrap(), pooled.intra_bw.unwrap());
+    assert!(
+        f > 2.0 * p,
+        "fabric medians ({f:.3e} B/s) must beat the straggler-poisoned pooled \
+         estimate ({p:.3e} B/s)"
+    );
+}
+
+#[test]
+fn sync_clocks_holds_the_ntp_bound_over_a_two_rank_mesh() {
+    // Both ranks share one Instant epoch; rank 1's closure fakes a clock
+    // running 3 ms ahead. The offset maps local onto the reference clock
+    // (`t_ref ≈ t_local + offset`), so a clock running ahead must come
+    // back with offset ≈ −SKEW, within half the winning probe's RTT
+    // (DESIGN.md §15 offset formula).
+    const SKEW: i64 = 3_000_000;
+    let mut mesh = inproc::mesh(2);
+    let t1 = mesh.pop().unwrap();
+    let t0 = mesh.pop().unwrap();
+    let base = Instant::now();
+    let h = std::thread::spawn(move || {
+        let now = move || (base.elapsed().as_nanos() as i64 + SKEW) as u64;
+        session::sync_clocks(&t1, 0, 8, &now).unwrap()
+    });
+    let now0 = move || base.elapsed().as_nanos() as u64;
+    let s0 = session::sync_clocks(&t0, 0, 8, &now0).unwrap();
+    let s1 = h.join().unwrap();
+    assert_eq!((s0.rank, s0.offset_nanos, s0.rtt_nanos), (0, 0, 0), "rank 0 is the reference");
+    assert_eq!(s1.rank, 1);
+    assert!(s1.probes >= 1 && s1.rtt_nanos > 0);
+    let err = (s1.offset_nanos + SKEW).abs() as u64;
+    assert!(
+        err <= s1.rtt_nanos / 2 + 1,
+        "offset {} vs true {}: error {err} exceeds rtt/2 = {}",
+        s1.offset_nanos,
+        -SKEW,
+        s1.rtt_nanos / 2
+    );
+}
